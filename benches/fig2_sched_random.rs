@@ -1,0 +1,23 @@
+//! Fig 2 — speedup of the random scheduler inside the Dask server, with
+//! Dask/work-stealing as the baseline, on 1-node (24w) and 7-node (168w)
+//! clusters over the full benchmark suite.
+//!
+//! Paper shape: random lands mostly between 0.5× and 1.4×, geomean 0.88×
+//! at 24 workers and 0.95× at 168 — closer to ws on the larger cluster.
+
+use rsds::bench::paper::{print_speedups, reps_from_env, speedups, Combo};
+use rsds::graphgen::paper_suite;
+
+fn main() {
+    let suite = paper_suite();
+    let reps = reps_from_env(3);
+    for nodes in [1usize, 7] {
+        let series = speedups(&suite, Combo::DASK_WS, Combo::DASK_RANDOM, nodes, reps, false);
+        print_speedups(
+            &format!("Fig 2: dask/random vs dask/ws, {nodes} node(s) = {} workers", nodes * 24),
+            &series,
+        );
+        let paper = if nodes == 1 { 0.88 } else { 0.95 };
+        println!("  paper geomean at this size: {paper}×");
+    }
+}

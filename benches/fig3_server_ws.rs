@@ -1,0 +1,20 @@
+//! Fig 3 — speedup of RSDS/ws over Dask/ws on the full suite at 1 and 7
+//! nodes. Paper shape: RSDS wins nearly everywhere; advantage grows with
+//! cluster size (Table II geomeans 1.28× → 1.66×).
+
+use rsds::bench::paper::{print_speedups, reps_from_env, speedups, Combo};
+use rsds::graphgen::paper_suite;
+
+fn main() {
+    let suite = paper_suite();
+    let reps = reps_from_env(3);
+    for nodes in [1usize, 7] {
+        let series = speedups(&suite, Combo::DASK_WS, Combo::RSDS_WS, nodes, reps, false);
+        print_speedups(
+            &format!("Fig 3: rsds/ws vs dask/ws, {nodes} node(s) = {} workers", nodes * 24),
+            &series,
+        );
+        let paper = if nodes == 1 { 1.28 } else { 1.66 };
+        println!("  paper geomean at this size: {paper}×");
+    }
+}

@@ -1,0 +1,81 @@
+//! Fig 5 — strong scaling of Dask and RSDS (both with their work-stealing
+//! schedulers) on merge-100K, the groupby table workload, and merge_slow
+//! at 0.01 / 0.1 / 1 s task durations, over 1–63 nodes (24–1512 workers).
+//!
+//! Paper shapes: RSDS scales merge-100K to ~15 nodes then flattens; Dask
+//! is ~2× slower at 1 node and degrades with every added node (4× at 63);
+//! Dask stops scaling groupby at 7 nodes, RSDS at ~23; with 1 s tasks both
+//! scale to 63 nodes with RSDS 1.03×→1.6× ahead.
+//!
+//! Writes the series to results/fig5_scaling.csv.
+
+use rsds::bench::paper::reps_from_env;
+use rsds::graphgen;
+use rsds::metrics::{write_csv, Measurement};
+use rsds::overhead::RuntimeProfile;
+use rsds::sim::{simulate, SimConfig};
+use rsds::util::stats::fmt_us;
+
+fn main() {
+    let reps = reps_from_env(2); // the paper used 2 reps for scaling
+    let quick = std::env::var_os("RSDS_BENCH_QUICK").is_some();
+    let nodes: &[usize] = if quick { &[1, 7, 31] } else { &[1, 3, 7, 15, 23, 31, 47, 63] };
+
+    let graphs = vec![
+        graphgen::merge(100_000),
+        graphgen::parse("groupby-2880-16s-16h").unwrap(),
+        graphgen::merge_slow(20_000, 10_000),
+        graphgen::merge_slow(20_000, 100_000),
+        graphgen::merge_slow(20_000, 1_000_000),
+    ];
+
+    let mut rows: Vec<Measurement> = Vec::new();
+    for graph in &graphs {
+        println!("\n== Fig 5: {} ==", graph.name);
+        println!("{:>6} {:>8} {:>14} {:>14} {:>9}", "nodes", "workers", "rsds/ws", "dask/ws", "ratio");
+        for &n in nodes {
+            let mut means = [0.0f64; 2];
+            for (i, (profile, sched, server)) in [
+                (RuntimeProfile::rust(), "ws", "rsds"),
+                (RuntimeProfile::python(), "dask-ws", "dask"),
+            ]
+            .into_iter()
+            .enumerate()
+            {
+                let mut total = 0.0;
+                for rep in 0..reps {
+                    let cfg = SimConfig {
+                        seed: 2020 + rep as u64,
+                        ..SimConfig::nodes(n, profile.clone(), sched)
+                    };
+                    total += simulate(graph, &cfg).makespan_us;
+                }
+                let mean = total / reps as f64;
+                means[i] = mean;
+                rows.push(Measurement {
+                    benchmark: graph.name.clone(),
+                    server: server.into(),
+                    scheduler: "ws".into(),
+                    n_workers: n * 24,
+                    n_nodes: n,
+                    makespan_us: mean,
+                    reps,
+                    aot_us: mean / graph.len() as f64,
+                });
+            }
+            println!(
+                "{:>6} {:>8} {:>14} {:>14} {:>8.2}×",
+                n,
+                n * 24,
+                fmt_us(means[0]),
+                fmt_us(means[1]),
+                means[1] / means[0]
+            );
+        }
+    }
+    if let Err(e) = write_csv("results/fig5_scaling.csv", &rows) {
+        eprintln!("csv write failed: {e}");
+    } else {
+        println!("\nwrote results/fig5_scaling.csv ({} rows)", rows.len());
+    }
+}

@@ -1,0 +1,32 @@
+//! Fig 6 — speedup of RSDS/ws over Dask/ws when the **zero worker** (§IV-D)
+//! replaces real workers, isolating pure server overhead. Uses the
+//! zero-worker-safe subset of the suite (§VI-D excludes graphs whose tasks
+//! depend on concrete output values).
+//!
+//! Paper shape: RSDS is 1.1–6× faster — a larger gap than with real
+//! workers, since the server is the only bottleneck left.
+
+use rsds::bench::paper::{print_speedups, reps_from_env, speedups, Combo};
+use rsds::graphgen::suite_subset_zero_worker;
+
+fn main() {
+    let suite = suite_subset_zero_worker();
+    let reps = reps_from_env(3);
+    for nodes in [1usize, 7] {
+        let series = speedups(&suite, Combo::DASK_WS, Combo::RSDS_WS, nodes, reps, true);
+        print_speedups(
+            &format!(
+                "Fig 6: rsds/ws vs dask/ws under ZERO WORKER, {nodes} node(s) = {} workers",
+                nodes * 24
+            ),
+            &series,
+        );
+        let (lo, hi) = (1.1, 6.0);
+        let in_band = series.rows.iter().filter(|(_, s)| (lo..=hi).contains(s)).count();
+        println!(
+            "  paper band: {lo}–{hi}×; {}/{} benchmarks inside",
+            in_band,
+            series.rows.len()
+        );
+    }
+}

@@ -1,0 +1,31 @@
+//! Fig 7 — average runtime overhead per task (AOT = makespan / #tasks)
+//! under the zero worker, per benchmark and cluster size, for all four
+//! server/scheduler combinations.
+//!
+//! Paper shape: "the overhead is less than 1 ms for most of our
+//! benchmarks" on Dask; RSDS sits well below on every configuration.
+
+use rsds::bench::paper::{measure, reps_from_env, Combo};
+use rsds::graphgen::suite_subset_zero_worker;
+
+fn main() {
+    let reps = reps_from_env(3);
+    let combos = [Combo::DASK_WS, Combo::DASK_RANDOM, Combo::RSDS_WS, Combo::RSDS_RANDOM];
+    for nodes in [1usize, 7] {
+        println!("\n== Fig 7: AOT (µs/task) under zero worker, {} workers ==", nodes * 24);
+        print!("{:<28}", "benchmark");
+        for c in &combos {
+            print!(" {:>14}", c.label());
+        }
+        println!();
+        for entry in suite_subset_zero_worker() {
+            print!("{:<28}", entry.name);
+            for combo in &combos {
+                let m = measure(&entry, *combo, nodes, reps, true);
+                print!(" {:>14.1}", m.aot_us);
+            }
+            println!();
+        }
+    }
+    println!("\npaper: Dask < 1000 µs/task for most benchmarks; RSDS far below Dask everywhere");
+}

@@ -1,0 +1,62 @@
+//! Fig 8 — AOT on the merge benchmark under the zero worker:
+//! (top) scaling the task count at fixed cluster, (bottom) scaling the
+//! worker count at fixed task count.
+//!
+//! Paper shapes: AOT grows with task count regardless of scheduler
+//! (runtime bookkeeping), while with added workers the work-stealing AOT
+//! grows and the random AOT stays nearly constant; RSDS stays well under
+//! Dask everywhere, its ws overhead flat to ~100 workers then rising.
+
+use rsds::bench::paper::{reps_from_env, Combo};
+use rsds::graphgen::merge;
+use rsds::sim::{simulate, SimConfig};
+
+fn aot(n_tasks: u32, workers: usize, combo: Combo, reps: usize) -> f64 {
+    let graph = merge(n_tasks);
+    let mut total = 0.0;
+    for rep in 0..reps {
+        let cfg = SimConfig {
+            n_workers: workers,
+            zero_worker: true,
+            seed: 2020 + rep as u64,
+            ..SimConfig::nodes(1, combo.profile(), combo.sched_impl())
+        };
+        total += simulate(&graph, &cfg).makespan_us;
+    }
+    total / reps as f64 / (n_tasks as f64 + 1.0)
+}
+
+fn main() {
+    let reps = reps_from_env(3);
+    let combos = [Combo::DASK_WS, Combo::DASK_RANDOM, Combo::RSDS_WS, Combo::RSDS_RANDOM];
+
+    println!("== Fig 8 (top): AOT (µs/task) vs task count, 24 workers ==");
+    print!("{:>9}", "tasks");
+    for c in &combos {
+        print!(" {:>14}", c.label());
+    }
+    println!();
+    for n in [10_000u32, 25_000, 50_000, 100_000] {
+        print!("{n:>9}");
+        for c in &combos {
+            print!(" {:>14.1}", aot(n, 24, *c, reps));
+        }
+        println!();
+    }
+
+    println!("\n== Fig 8 (bottom): AOT (µs/task) vs worker count, merge-25K ==");
+    print!("{:>9}", "workers");
+    for c in &combos {
+        print!(" {:>14}", c.label());
+    }
+    println!();
+    for w in [24usize, 48, 96, 168, 360, 744] {
+        print!("{w:>9}");
+        for c in &combos {
+            print!(" {:>14.1}", aot(25_000, w, *c, reps));
+        }
+        println!();
+    }
+    println!("\npaper: AOT rises with task count for all; with workers only for ws;");
+    println!("rsds/ws flat to ~100 workers, then rising; random ~flat throughout");
+}

@@ -1,0 +1,150 @@
+//! Hot-path microbenchmarks (the §Perf baseline/after numbers in
+//! EXPERIMENTS.md): msgpack codec throughput, reactor task-transition rate,
+//! scheduler decision latency, and simulator event rate.
+//!
+//! Targets (DESIGN.md §9): reactor ≥100K transitions/s (≤10 µs/task),
+//! codec ≥1 GB/s decode on task messages, ws decision ≤5 µs/task at 1512
+//! workers, sim ≥1M events/s.
+
+use rsds::bench::{bench, row, throughput, BenchConfig};
+use rsds::graphgen::merge;
+use rsds::msgpack::{decode, encode};
+use rsds::overhead::RuntimeProfile;
+use rsds::protocol::{decode_msg, encode_msg, Msg, TaskFinishedInfo};
+use rsds::scheduler::{self, Action, WorkerId, WorkerInfo};
+use rsds::server::{Dest, Origin, Reactor};
+use rsds::sim::{simulate, SimConfig};
+use rsds::taskgraph::TaskId;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+
+    // --- msgpack codec on a compute-task-shaped message ---
+    let msg = Msg::ComputeTask {
+        task: TaskId(12345),
+        key: "task-12345".into(),
+        payload: rsds::taskgraph::Payload::BusyWait,
+        duration_us: 6,
+        output_size: 28,
+        inputs: vec![],
+        priority: 12345,
+    };
+    let bytes = encode_msg(&msg);
+    let n = 10_000;
+    let r = bench("protocol: encode 10k compute-task msgs", cfg, || {
+        for _ in 0..n {
+            std::hint::black_box(encode_msg(std::hint::black_box(&msg)));
+        }
+    });
+    println!("{}   ({:.0} msgs/s)", row(&r), throughput(n, r.mean_us()));
+    let r = bench("protocol: decode 10k compute-task msgs", cfg, || {
+        for _ in 0..n {
+            std::hint::black_box(decode_msg(std::hint::black_box(&bytes)).unwrap());
+        }
+    });
+    println!(
+        "{}   ({:.0} msgs/s, {:.2} MB/s)",
+        row(&r),
+        throughput(n, r.mean_us()),
+        (n as f64 * bytes.len() as f64) / r.mean_us()
+    );
+
+    // --- raw msgpack on a 1 MiB binary payload (data-plane shape) ---
+    let big = rsds::msgpack::Value::map(vec![
+        ("op", rsds::msgpack::Value::str("data-reply")),
+        ("task", rsds::msgpack::Value::Int(1)),
+        ("data", rsds::msgpack::Value::Bin(vec![0xAB; 1 << 20])),
+    ]);
+    let big_bytes = encode(&big);
+    let r = bench("msgpack: decode 1 MiB binary message", cfg, || {
+        std::hint::black_box(decode(std::hint::black_box(&big_bytes)).unwrap());
+    });
+    println!("{}   ({:.2} GB/s)", row(&r), big_bytes.len() as f64 / r.mean_us() / 1e3);
+
+    // --- reactor: drive merge-10K to completion with inline finishes ---
+    let r = bench("reactor: merge-10K full graph turnaround", cfg, || {
+        let mut reactor = Reactor::new(
+            scheduler::by_name("ws", 1).unwrap(),
+            RuntimeProfile::rust(),
+            false,
+        );
+        let mut out = Vec::new();
+        reactor.on_message(
+            Origin::Unregistered { conn: 0 },
+            Msg::RegisterClient { name: "b".into() },
+            &mut out,
+        );
+        for i in 0..24u32 {
+            reactor.on_message(
+                Origin::Unregistered { conn: 1 + i as u64 },
+                Msg::RegisterWorker {
+                    name: format!("w{i}"),
+                    ncores: 1,
+                    node: 0,
+                    data_addr: String::new(),
+                },
+                &mut out,
+            );
+        }
+        out.clear();
+        reactor.on_message(Origin::Client(0), Msg::SubmitGraph { graph: merge(10_000) }, &mut out);
+        // Answer every compute/steal message until done.
+        let mut inbox: Vec<(Dest, Msg)> = std::mem::take(&mut out);
+        while let Some((dest, msg)) = inbox.pop() {
+            let Dest::Worker(w) = dest else { continue };
+            match msg {
+                Msg::ComputeTask { task, output_size, .. } => reactor.on_message(
+                    Origin::Worker(w),
+                    Msg::TaskFinished(TaskFinishedInfo {
+                        task,
+                        nbytes: output_size,
+                        duration_us: 6,
+                    }),
+                    &mut out,
+                ),
+                Msg::StealRequest { task } => reactor.on_message(
+                    Origin::Worker(w),
+                    Msg::StealResponse { task, ok: false },
+                    &mut out,
+                ),
+                _ => {}
+            }
+            inbox.append(&mut out);
+        }
+        assert_eq!(reactor.reports().len(), 1);
+    });
+    println!("{}   ({:.0} tasks/s)", row(&r), throughput(10_001, r.mean_us()));
+
+    // --- scheduler decision latency at paper-scale clusters ---
+    for workers in [24usize, 1512] {
+        for sched_name in ["ws", "dask-ws", "random"] {
+            let graph = merge(10_000);
+            let ready: Vec<TaskId> = graph.roots();
+            let r = bench(
+                &format!("scheduler {sched_name}: 10k decisions @ {workers} workers"),
+                cfg,
+                || {
+                    let mut s = scheduler::by_name(sched_name, 1).unwrap();
+                    for i in 0..workers as u32 {
+                        s.add_worker(WorkerInfo { id: WorkerId(i), ncores: 1, node: i / 24 });
+                    }
+                    s.graph_submitted(&graph);
+                    let mut out: Vec<Action> = Vec::new();
+                    s.tasks_ready(&ready, &mut out);
+                    std::hint::black_box(out.len());
+                },
+            );
+            println!("{}   ({:.2} µs/decision)", row(&r), r.mean_us() / 10_000.0);
+        }
+    }
+
+    // --- simulator event rate ---
+    let graph = merge(50_000);
+    let r = bench("sim: merge-50K @ 168 workers (rsds/ws)", cfg, || {
+        let c = SimConfig::nodes(7, RuntimeProfile::rust(), "ws");
+        std::hint::black_box(simulate(&graph, &c).makespan_us);
+    });
+    // ~6 events per task (arrive, wake, done, status, sched, assign).
+    let events = 50_001.0 * 6.0;
+    println!("{}   (~{:.2} M events/s)", row(&r), events / r.mean_us());
+}

@@ -1,0 +1,46 @@
+//! Table I — task graph properties of the benchmark suite: print the
+//! generated statistics next to the paper's published row and flag
+//! deviations beyond tolerance. Also times graph generation (the client-
+//! side cost of building each benchmark).
+
+use rsds::bench::{bench, row, BenchConfig};
+use rsds::graphgen::paper_suite;
+use rsds::taskgraph::GraphStats;
+
+fn main() {
+    println!("TABLE I — task graph properties (generated vs paper)\n");
+    println!(
+        "{:<28} {:>8} {:>8} {:>10} {:>10} {:>4}   paper [#T #I S AD LP]",
+        "benchmark", "#T", "#I", "S[KiB]", "AD[ms]", "LP"
+    );
+    let mut mismatches = Vec::new();
+    for entry in paper_suite() {
+        let stats = GraphStats::of(&entry.graph());
+        println!(
+            "{}   [{} {} {} {} {}]",
+            stats.row(entry.name),
+            entry.paper.n_tasks,
+            entry.paper.n_deps,
+            entry.paper.avg_output_kib,
+            entry.paper.avg_duration_ms,
+            entry.paper.longest_path
+        );
+        mismatches.extend(entry.verify());
+    }
+    if mismatches.is_empty() {
+        println!("\nall entries within tolerance of the paper's Table I");
+    } else {
+        println!("\nDEVIATIONS:");
+        for m in &mismatches {
+            println!("  {m}");
+        }
+    }
+
+    println!("\ngraph generation cost:");
+    let cfg = BenchConfig::from_env();
+    for name in ["merge-100K", "bag-large", "numpy-fine", "groupby-xl"] {
+        let entry = paper_suite().into_iter().find(|e| e.name == name).unwrap();
+        let r = bench(name, cfg, || entry.graph());
+        println!("  {}", row(&r));
+    }
+}

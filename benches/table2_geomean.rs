@@ -1,0 +1,39 @@
+//! Table II — geometric mean of speedup for experiments A (scheduler) and
+//! B (server), baseline Dask/ws, at 1 node (24 workers) and 7 nodes (168).
+//!
+//! Paper:
+//!   dask/random  24w 0.88×   168w 0.95×
+//!   rsds/random  24w 1.04×   168w 1.41×
+//!   rsds/ws      24w 1.28×   168w 1.66×
+
+use rsds::bench::paper::{reps_from_env, speedups, Combo};
+use rsds::graphgen::paper_suite;
+
+fn main() {
+    let suite = paper_suite();
+    let reps = reps_from_env(3);
+    println!("TABLE II — geomean speedups, baseline dask/ws\n");
+    println!(
+        "{:<8} {:<10} {:>6} {:>8} {:>10} {:>8}",
+        "server", "scheduler", "nodes", "workers", "speedup", "paper"
+    );
+    let combos: [(Combo, [f64; 2]); 3] = [
+        (Combo::DASK_RANDOM, [0.88, 0.95]),
+        (Combo::RSDS_RANDOM, [1.04, 1.41]),
+        (Combo::RSDS_WS, [1.28, 1.66]),
+    ];
+    for (combo, paper) in combos {
+        for (i, nodes) in [1usize, 7].into_iter().enumerate() {
+            let s = speedups(&suite, Combo::DASK_WS, combo, nodes, reps, false);
+            println!(
+                "{:<8} {:<10} {:>6} {:>8} {:>9.2}× {:>7.2}×",
+                combo.server,
+                combo.scheduler,
+                nodes,
+                nodes * 24,
+                s.geomean,
+                paper[i]
+            );
+        }
+    }
+}

@@ -1,0 +1,57 @@
+//! Quickstart: start an in-process RSDS cluster (server + 4 workers),
+//! run a tree reduction, print the result.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use rsds::client::Client;
+use rsds::graphgen;
+use rsds::overhead::RuntimeProfile;
+use rsds::server::{serve, ServerConfig};
+use rsds::worker::{run_worker, WorkerConfig};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Server with the RSDS work-stealing scheduler.
+    let srv = serve(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        scheduler: "ws".into(),
+        seed: 2020,
+        profile: RuntimeProfile::rust(),
+        emulate: false,
+    })?;
+    println!("server on {}", srv.addr);
+
+    // 2. Four single-core workers (the paper's per-core worker setting).
+    let addr = srv.addr.to_string();
+    let workers: Vec<_> = (0..4)
+        .map(|i| {
+            run_worker(WorkerConfig {
+                server_addr: addr.clone(),
+                name: format!("w{i}"),
+                ncores: 1,
+                node: 0,
+            })
+        })
+        .collect::<Result<_, _>>()?;
+    println!("{} workers registered", workers.len());
+
+    // 3. Submit a binary tree reduction of 2^10 numbers (1023 tasks).
+    let graph = graphgen::tree(10);
+    let mut client = Client::connect(&addr, "quickstart")?;
+    let result = client.run_graph(&graph)?;
+
+    println!(
+        "{}: {} tasks in {:.1} ms  ({:.1} µs/task)",
+        result.graph_name,
+        result.n_tasks,
+        result.makespan_us as f64 / 1e3,
+        result.makespan_us as f64 / result.n_tasks as f64
+    );
+
+    for w in &workers {
+        w.shutdown();
+    }
+    srv.shutdown();
+    Ok(())
+}

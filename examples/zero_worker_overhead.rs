@@ -1,0 +1,63 @@
+//! Zero-worker overhead isolation on the REAL server (paper §VI-D): run
+//! merge graphs against real TCP zero workers (§IV-D) and report the
+//! average overhead per task (AOT) for the RSDS server and for the
+//! Dask-emulation server, per scheduler.
+//!
+//! ```sh
+//! cargo run --release --example zero_worker_overhead
+//! ```
+
+use rsds::client::Client;
+use rsds::graphgen;
+use rsds::overhead::RuntimeProfile;
+use rsds::server::{serve, ServerConfig};
+use rsds::worker::zero::run_zero_worker;
+use rsds::worker::WorkerConfig;
+
+fn aot(scheduler: &str, emulate: bool, n_workers: u32, n_tasks: u32) -> anyhow::Result<f64> {
+    let srv = serve(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        scheduler: scheduler.into(),
+        seed: 7,
+        profile: if emulate { RuntimeProfile::python() } else { RuntimeProfile::rust() },
+        emulate,
+    })?;
+    let addr = srv.addr.to_string();
+    let zws: Vec<_> = (0..n_workers)
+        .map(|i| {
+            run_zero_worker(WorkerConfig {
+                server_addr: addr.clone(),
+                name: format!("z{i}"),
+                ncores: 1,
+                node: i / 4,
+            })
+        })
+        .collect::<Result<_, _>>()?;
+    let mut client = Client::connect(&addr, "aot")?;
+    let res = client.run_graph(&graphgen::merge(n_tasks))?;
+    for z in &zws {
+        z.shutdown();
+    }
+    srv.shutdown();
+    Ok(res.makespan_us as f64 / res.n_tasks as f64)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n_tasks = 5_000;
+    println!("AOT (µs/task) for merge-{n_tasks} with real zero workers (§VI-D):\n");
+    println!("{:>22} {:>10} {:>12}", "server/scheduler", "workers", "AOT µs/task");
+    for workers in [4u32, 8, 16] {
+        for (label, sched, emulate) in [
+            ("rsds/ws", "ws", false),
+            ("rsds/random", "random", false),
+            ("dask-emu/ws", "dask-ws", true),
+            ("dask-emu/random", "random", true),
+        ] {
+            let v = aot(sched, emulate, workers, n_tasks)?;
+            println!("{label:>22} {workers:>10} {v:>12.1}");
+        }
+    }
+    println!("\n(paper Fig 7/8: Dask ≈ 0.2–1 ms/task, RSDS well under 0.1 ms;");
+    println!(" random's AOT stays flat as workers grow, work-stealing's rises.)");
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time Python: JAX/Pallas kernels AOT-lowered to HLO text artifacts.
+
+Never imported at runtime — the Rust workers execute the compiled
+artifacts through PJRT (rust/src/runtime/). See DESIGN.md §1/§7.
+"""

@@ -1,0 +1,50 @@
+"""AOT export: lower every L2 function to HLO **text** artifacts.
+
+HLO text, not ``lowered.compile()`` or serialized protos: jax ≥ 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: ``python -m compile.aot --out ../artifacts``
+"""
+
+import argparse
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import ARTIFACTS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_all(out_dir: pathlib.Path) -> dict[str, int]:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    sizes = {}
+    for name, (fn, example_args) in ARTIFACTS.items():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        sizes[name] = len(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    return sizes
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = parser.parse_args()
+    export_all(pathlib.Path(args.out))
+
+
+if __name__ == "__main__":
+    main()

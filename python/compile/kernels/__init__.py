@@ -1,0 +1,6 @@
+"""L1 Pallas kernels and their pure-jnp reference oracles."""
+
+from .partition_reduce import partition_reduce
+from .feature_hash import feature_hash
+
+__all__ = ["partition_reduce", "feature_hash"]

@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: feature hashing (the vectorizer benchmark's hot loop).
+
+Wordbatch's hashing vectorizer maps each token id to a bucket and counts
+bucket hits. TPU adaptation (DESIGN.md §Hardware-Adaptation): Pallas-TPU
+has no scatter-add, so the histogram is reformulated as a **one-hot
+matmul** — each tile of token ids becomes a (tile, buckets) one-hot f32
+matrix whose column-sum accumulates the counts. On a real TPU that matmul
+feeds the MXU systolic array; the bucket axis (1024 = 8×128) is padded to
+lane width.
+
+Hash: multiply-shift (Dietzfelbinger) on int32, masked to the bucket count
+(buckets must be a power of two).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: multiply-shift constant (odd 32-bit): 0x9E3779B9 as signed int32.
+#: Plain Python int — a module-level jnp constant would be captured by the
+#: Pallas kernel closure, which pallas_call rejects.
+HASH_MULT = -1640531527
+
+
+def _hash_kernel(tokens_ref, counts_ref, *, buckets: int):
+    step = pl.program_id(0)
+    toks = tokens_ref[...]  # (1, tile) int32
+    # Multiply-shift hash, masked to [0, buckets).
+    h = (toks * jnp.int32(HASH_MULT)) >> 16
+    h = jnp.bitwise_and(h, buckets - 1)
+    # One-hot matmul accumulation (MXU-friendly scatter-add substitute).
+    onehot = (h[0, :, None] == jnp.arange(buckets, dtype=jnp.int32)[None, :]).astype(
+        jnp.float32
+    )
+    tile_counts = jnp.sum(onehot, axis=0)[None, :]  # (1, buckets)
+
+    @pl.when(step == 0)
+    def _init():
+        counts_ref[...] = tile_counts
+
+    @pl.when(step != 0)
+    def _acc():
+        counts_ref[...] = counts_ref[...] + tile_counts
+
+
+@functools.partial(jax.jit, static_argnames=("buckets", "tile"))
+def feature_hash(tokens: jax.Array, buckets: int = 1024, tile: int = 512):
+    """Hash int32 token ids into `buckets` counts (f32 vector)."""
+    (n,) = tokens.shape
+    if n % tile != 0:
+        raise ValueError(f"n {n} not divisible by tile {tile}")
+    if buckets & (buckets - 1) != 0:
+        raise ValueError("buckets must be a power of two")
+    counts = pl.pallas_call(
+        functools.partial(_hash_kernel, buckets=buckets),
+        grid=(n // tile,),
+        in_specs=[pl.BlockSpec((1, tile), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, buckets), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, buckets), jnp.float32),
+        interpret=True,
+    )(tokens[None, :])
+    return counts[0]

@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: tiled sum+mean reduction over a 2-D f32 partition.
+
+The compute hot-spot of the xarray benchmark (grid aggregations, paper §V):
+each task reduces one chunk of the air-temperature grid. The kernel tiles
+the row axis so each grid step works on an (block_rows, cols) VMEM-resident
+tile and accumulates partial sums into a scratch-free running output —
+the BlockSpec expresses the HBM→VMEM schedule.
+
+TPU sizing notes (DESIGN.md §Hardware-Adaptation): tiles are (8k, 128)
+f32 — lane dimension 128, sublane multiple of 8 — so a (256, 128) partition
+at block_rows=64 holds 64×128×4 B = 32 KiB in VMEM, far under the ~16 MiB
+budget; the reduction is VPU-bound (no MXU use).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO, which is exactly what the
+Rust runtime loads.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _reduce_kernel(x_ref, sum_ref):
+    """Accumulate the tile's sum into a (1, 1) output."""
+    step = pl.program_id(0)
+    tile_sum = jnp.sum(x_ref[...])
+
+    @pl.when(step == 0)
+    def _init():
+        sum_ref[0, 0] = tile_sum
+
+    @pl.when(step != 0)
+    def _acc():
+        sum_ref[0, 0] = sum_ref[0, 0] + tile_sum
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def partition_reduce(x: jax.Array, block_rows: int = 64):
+    """Sum and mean of a 2-D f32 partition via a row-tiled Pallas kernel.
+
+    Returns a length-2 f32 vector ``[sum, mean]``.
+    """
+    rows, cols = x.shape
+    if rows % block_rows != 0:
+        raise ValueError(f"rows {rows} not divisible by block_rows {block_rows}")
+    grid = (rows // block_rows,)
+    total = pl.pallas_call(
+        _reduce_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=True,
+    )(x)
+    s = total[0, 0]
+    return jnp.stack([s, s / (rows * cols)])

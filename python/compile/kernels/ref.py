@@ -1,0 +1,29 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the pytest suite checks the kernels against
+(paper-style build-time validation; the Rust side then trusts the
+artifacts). Keep them boring: direct jnp expressions, no tiling."""
+
+import jax.numpy as jnp
+
+#: must match kernels.feature_hash.HASH_MULT
+HASH_MULT = -1640531527
+
+
+def partition_reduce_ref(x):
+    """[sum, mean] of a 2-D array."""
+    s = jnp.sum(x, dtype=jnp.float32)
+    return jnp.stack([s, s / x.size])
+
+
+def feature_hash_ref(tokens, buckets: int = 1024):
+    """Bucket-count histogram of multiply-shift-hashed token ids."""
+    h = (tokens * jnp.int32(HASH_MULT)) >> 16
+    h = jnp.bitwise_and(h, buckets - 1)
+    return jnp.zeros(buckets, jnp.float32).at[h].add(1.0)
+
+
+def numpy_step_ref(x):
+    """[partial_sum] of (x + x.T) for one square chunk — the numpy
+    benchmark's per-chunk op (dask.array's `(a + a.T).sum()` lowering)."""
+    return jnp.sum(x + x.T, dtype=jnp.float32)[None]

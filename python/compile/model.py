@@ -1,0 +1,58 @@
+"""L2: the JAX compute graphs executed by worker tasks, calling the L1
+Pallas kernels. Lowered once by aot.py; each function below becomes one
+HLO-text artifact with a fixed input shape (PJRT AOT is shape-specialized;
+the shapes match rust/src/runtime/mod.rs constants).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import feature_hash, partition_reduce
+
+# Fixed artifact shapes — keep in sync with rust/src/runtime/mod.rs.
+REDUCE_ROWS, REDUCE_COLS = 256, 128
+TRANSPOSE_N = 128
+HASH_TOKENS, HASH_BUCKETS = 4096, 1024
+
+
+def xarray_agg(x):
+    """xarray benchmark per-chunk op: anomaly transform + tiled reduction.
+
+    The elementwise part fuses into the Pallas reduction's input in XLA;
+    returns [sum, mean] of the anomaly-adjusted chunk.
+    """
+    anomaly = x - 0.5  # synthetic climatology offset
+    return (partition_reduce(anomaly),)
+
+
+def numpy_step(x):
+    """numpy benchmark per-chunk op: (x + x.T) partial sum.
+
+    The transpose+add runs as plain XLA (layout change — no kernel win);
+    the reduction reuses the Pallas kernel on the symmetric sum.
+    """
+    sym = x + x.T
+    out = partition_reduce(sym, block_rows=32)
+    return (out[:1],)  # [partial_sum]
+
+
+def vectorize(tokens):
+    """vectorizer benchmark per-partition op: hashed feature counts."""
+    return (feature_hash(tokens, HASH_BUCKETS),)
+
+
+#: artifact name -> (function, example args)
+ARTIFACTS = {
+    "partition_reduce": (
+        xarray_agg,
+        (jax.ShapeDtypeStruct((REDUCE_ROWS, REDUCE_COLS), jnp.float32),),
+    ),
+    "numpy_step": (
+        numpy_step,
+        (jax.ShapeDtypeStruct((TRANSPOSE_N, TRANSPOSE_N), jnp.float32),),
+    ),
+    "feature_hash": (
+        vectorize,
+        (jax.ShapeDtypeStruct((HASH_TOKENS,), jnp.int32),),
+    ),
+}

@@ -1,0 +1,131 @@
+"""Kernel-vs-oracle correctness: the core build-time signal.
+
+Hypothesis sweeps shapes/dtypes/values of both Pallas kernels against the
+pure-jnp references in ref.py; the Rust side then trusts the artifacts.
+"""
+
+import sys
+import pathlib
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import feature_hash, partition_reduce
+from compile.kernels.ref import feature_hash_ref, numpy_step_ref, partition_reduce_ref
+
+
+# ---------- partition_reduce ----------
+
+@pytest.mark.parametrize("rows,cols,block", [(64, 128, 64), (256, 128, 64), (512, 64, 8)])
+def test_reduce_matches_ref_basic(rows, cols, block):
+    x = jnp.arange(rows * cols, dtype=jnp.float32).reshape(rows, cols) / 1000.0
+    got = partition_reduce(x, block_rows=block)
+    want = partition_reduce_ref(x)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    row_blocks=st.integers(1, 6),
+    block=st.sampled_from([8, 16, 64]),
+    cols=st.sampled_from([128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(0.01, 100.0),
+)
+def test_reduce_matches_ref_hypothesis(row_blocks, block, cols, seed, scale):
+    rows = row_blocks * block
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.uniform(key, (rows, cols), jnp.float32, -scale, scale)
+    got = partition_reduce(x, block_rows=block)
+    want = partition_reduce_ref(x)
+    # Tiled accumulation reorders additions; tolerance covers that.
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-3 * scale)
+
+
+def test_reduce_special_values():
+    x = jnp.zeros((64, 128), jnp.float32)
+    np.testing.assert_allclose(partition_reduce(x), [0.0, 0.0])
+    x = jnp.full((64, 128), -2.5, jnp.float32)
+    got = partition_reduce(x)
+    np.testing.assert_allclose(got, [-2.5 * 64 * 128, -2.5], rtol=1e-6)
+
+
+def test_reduce_rejects_bad_tiling():
+    x = jnp.zeros((100, 128), jnp.float32)
+    with pytest.raises(ValueError, match="not divisible"):
+        partition_reduce(x, block_rows=64)
+
+
+# ---------- feature_hash ----------
+
+@pytest.mark.parametrize("n,buckets,tile", [(512, 1024, 512), (4096, 1024, 512), (1024, 256, 256)])
+def test_hash_matches_ref_basic(n, buckets, tile):
+    tokens = (jnp.arange(n, dtype=jnp.int32) * 7919) % 50_000
+    got = feature_hash(tokens, buckets, tile)
+    want = feature_hash_ref(tokens, buckets)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles=st.integers(1, 8),
+    tile=st.sampled_from([128, 512]),
+    buckets=st.sampled_from([128, 1024]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hash_matches_ref_hypothesis(tiles, tile, buckets, seed):
+    n = tiles * tile
+    key = jax.random.PRNGKey(seed)
+    tokens = jax.random.randint(key, (n,), 0, 50_000, jnp.int32)
+    got = feature_hash(tokens, buckets, tile)
+    want = feature_hash_ref(tokens, buckets)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_hash_counts_conserved():
+    tokens = jax.random.randint(jax.random.PRNGKey(0), (4096,), 0, 50_000, jnp.int32)
+    counts = feature_hash(tokens, 1024)
+    assert float(jnp.sum(counts)) == 4096.0
+    assert float(jnp.min(counts)) >= 0.0
+
+
+def test_hash_rejects_bad_params():
+    tokens = jnp.zeros(1000, jnp.int32)
+    with pytest.raises(ValueError, match="not divisible"):
+        feature_hash(tokens, 1024, 512)
+    with pytest.raises(ValueError, match="power of two"):
+        feature_hash(jnp.zeros(512, jnp.int32), 1000, 512)
+
+
+# ---------- L2 model functions ----------
+
+def test_model_numpy_step_matches_ref():
+    from compile.model import numpy_step
+
+    x = jax.random.uniform(jax.random.PRNGKey(3), (128, 128), jnp.float32)
+    (got,) = numpy_step(x)
+    want = numpy_step_ref(x)
+    np.testing.assert_allclose(got, want, rtol=2e-4)
+
+
+def test_model_xarray_agg_is_anomaly_reduce():
+    from compile.model import xarray_agg
+
+    x = jax.random.uniform(jax.random.PRNGKey(4), (256, 128), jnp.float32)
+    (got,) = xarray_agg(x)
+    want = partition_reduce_ref(x - 0.5)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-3)
+
+
+def test_model_vectorize_shapes():
+    from compile.model import vectorize, HASH_TOKENS, HASH_BUCKETS
+
+    tokens = jnp.zeros(HASH_TOKENS, jnp.int32)
+    (counts,) = vectorize(tokens)
+    assert counts.shape == (HASH_BUCKETS,)
+    assert float(jnp.sum(counts)) == HASH_TOKENS

@@ -1,0 +1,104 @@
+//! Benchmark harness (criterion replacement for this offline environment):
+//! warmup + timed repetitions with summary statistics, used by the
+//! `benches/` binaries that regenerate the paper's tables and figures.
+
+pub mod paper;
+
+use crate::util::stats::{fmt_us, Summary};
+use crate::util::timing::time_us;
+
+/// Configuration for a measurement loop.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_iters: 1, iters: 5 }
+    }
+}
+
+impl BenchConfig {
+    /// The paper runs 5 repetitions (2 for scaling); honor a quick mode for
+    /// CI via `RSDS_BENCH_QUICK=1`.
+    pub fn from_env() -> BenchConfig {
+        if std::env::var_os("RSDS_BENCH_QUICK").is_some() {
+            BenchConfig { warmup_iters: 0, iters: 2 }
+        } else {
+            BenchConfig::default()
+        }
+    }
+}
+
+/// One named measurement result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.summary.mean
+    }
+}
+
+/// Measure a closure `cfg.iters` times after warmup.
+pub fn bench<T>(name: &str, cfg: BenchConfig, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(cfg.iters);
+    for _ in 0..cfg.iters.max(1) {
+        let (_out, us) = time_us(|| std::hint::black_box(f()));
+        samples.push(us);
+    }
+    BenchResult {
+        name: name.to_string(),
+        summary: Summary::of(&samples).expect("non-empty samples"),
+    }
+}
+
+/// Render a result row like `name  mean ± stddev  (min … max)`.
+pub fn row(r: &BenchResult) -> String {
+    format!(
+        "{:<44} {:>12} ± {:<10} ({} … {})",
+        r.name,
+        fmt_us(r.summary.mean),
+        fmt_us(r.summary.stddev),
+        fmt_us(r.summary.min),
+        fmt_us(r.summary.max)
+    )
+}
+
+/// Throughput helper: ops/sec from a mean µs per op batch.
+pub fn throughput(ops: u64, mean_us: f64) -> f64 {
+    ops as f64 / (mean_us / 1e6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_work() {
+        let cfg = BenchConfig { warmup_iters: 0, iters: 3 };
+        let r = bench("spin", cfg, || crate::util::timing::busy_wait_us(300));
+        assert_eq!(r.summary.n, 3);
+        assert!(r.summary.mean >= 300.0, "mean {}", r.summary.mean);
+    }
+
+    #[test]
+    fn throughput_math() {
+        assert!((throughput(1000, 1_000_000.0) - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quick_mode_env() {
+        // Not set in tests: default config.
+        let cfg = BenchConfig::from_env();
+        assert!(cfg.iters >= 2);
+    }
+}

@@ -1,0 +1,156 @@
+//! Shared machinery for the figure-regenerating benches: run suite entries
+//! through the simulator under a (server profile, scheduler) combination
+//! and aggregate the paper's comparison metrics.
+
+use crate::graphgen::SuiteEntry;
+use crate::metrics::Measurement;
+use crate::overhead::RuntimeProfile;
+use crate::sim::{simulate, SimConfig};
+use crate::util::stats::geomean;
+
+/// A server/scheduler combination as the paper names them.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Combo {
+    /// `rsds` or `dask`.
+    pub server: &'static str,
+    /// `ws` | `random` (scheduler algorithm; the dask server runs its own
+    /// ws implementation).
+    pub scheduler: &'static str,
+}
+
+impl Combo {
+    pub const DASK_WS: Combo = Combo { server: "dask", scheduler: "ws" };
+    pub const DASK_RANDOM: Combo = Combo { server: "dask", scheduler: "random" };
+    pub const RSDS_WS: Combo = Combo { server: "rsds", scheduler: "ws" };
+    pub const RSDS_RANDOM: Combo = Combo { server: "rsds", scheduler: "random" };
+
+    pub fn profile(&self) -> RuntimeProfile {
+        match self.server {
+            "dask" => RuntimeProfile::python(),
+            _ => RuntimeProfile::rust(),
+        }
+    }
+
+    /// Scheduler implementation name: the dask server uses the emulated
+    /// Dask work-stealing, rsds its own simplified one (§IV-C).
+    pub fn sched_impl(&self) -> &'static str {
+        match (self.server, self.scheduler) {
+            ("dask", "ws") => "dask-ws",
+            (_, "ws") => "ws",
+            _ => "random",
+        }
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}/{}", self.server, self.scheduler)
+    }
+}
+
+/// Run one suite entry under a combo, averaging `reps` seeds (the paper
+/// averages 5 runs; 2 for scaling).
+pub fn measure(
+    entry: &SuiteEntry,
+    combo: Combo,
+    nodes: usize,
+    reps: usize,
+    zero_worker: bool,
+) -> Measurement {
+    let graph = entry.graph();
+    let mut makespans = Vec::with_capacity(reps);
+    for rep in 0..reps.max(1) {
+        let cfg = SimConfig {
+            zero_worker,
+            seed: 2020 + rep as u64,
+            ..SimConfig::nodes(nodes, combo.profile(), combo.sched_impl())
+        };
+        makespans.push(simulate(&graph, &cfg).makespan_us);
+    }
+    let mean = makespans.iter().sum::<f64>() / makespans.len() as f64;
+    Measurement {
+        benchmark: entry.name.to_string(),
+        server: combo.server.to_string(),
+        scheduler: combo.scheduler.to_string(),
+        n_workers: nodes * 24,
+        n_nodes: nodes,
+        makespan_us: mean,
+        reps: makespans.len(),
+        aot_us: mean / graph.len() as f64,
+    }
+}
+
+/// Per-benchmark speedups of `test` vs `baseline` over a suite, plus the
+/// geometric mean (the paper's Figs 2–4 + Table II shape).
+pub struct SpeedupSeries {
+    pub rows: Vec<(String, f64)>,
+    pub geomean: f64,
+}
+
+pub fn speedups(
+    entries: &[SuiteEntry],
+    baseline: Combo,
+    test: Combo,
+    nodes: usize,
+    reps: usize,
+    zero_worker: bool,
+) -> SpeedupSeries {
+    let mut rows = Vec::with_capacity(entries.len());
+    for e in entries {
+        let b = measure(e, baseline, nodes, reps, zero_worker);
+        let t = measure(e, test, nodes, reps, zero_worker);
+        rows.push((e.name.to_string(), b.makespan_us / t.makespan_us));
+    }
+    let g = geomean(&rows.iter().map(|(_, s)| *s).collect::<Vec<_>>());
+    SpeedupSeries { rows, geomean: g }
+}
+
+/// Print a Fig 2/3/4-style speedup block.
+pub fn print_speedups(title: &str, series: &SpeedupSeries) {
+    println!("\n== {title} ==");
+    for (name, s) in &series.rows {
+        println!("  {name:<28} {s:>7.2}×");
+    }
+    println!("  {:<28} {:>7.2}×  (geometric mean)", "ALL", series.geomean);
+}
+
+/// Reps from the environment (quick mode = 1).
+pub fn reps_from_env(default: usize) -> usize {
+    if std::env::var_os("RSDS_BENCH_QUICK").is_some() {
+        1
+    } else {
+        default
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graphgen::paper_suite;
+
+    #[test]
+    fn combo_wiring() {
+        assert_eq!(Combo::DASK_WS.sched_impl(), "dask-ws");
+        assert_eq!(Combo::RSDS_WS.sched_impl(), "ws");
+        assert_eq!(Combo::DASK_RANDOM.sched_impl(), "random");
+        assert_eq!(Combo::DASK_WS.profile().name, "dask");
+        assert_eq!(Combo::RSDS_RANDOM.profile().name, "rsds");
+    }
+
+    #[test]
+    fn measure_produces_sane_numbers() {
+        let suite = paper_suite();
+        let merge10k = suite.iter().find(|e| e.name == "merge-10K").unwrap();
+        let m = measure(merge10k, Combo::RSDS_WS, 1, 2, false);
+        assert_eq!(m.n_workers, 24);
+        assert!(m.makespan_us > 0.0);
+        assert_eq!(m.reps, 2);
+        assert!((m.aot_us - m.makespan_us / 10_001.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rsds_beats_dask_on_merge_speedup_series() {
+        let suite: Vec<_> =
+            paper_suite().into_iter().filter(|e| e.name.starts_with("merge-1")).collect();
+        let s = speedups(&suite, Combo::DASK_WS, Combo::RSDS_WS, 1, 1, false);
+        assert!(s.geomean > 1.0, "rsds/ws geomean {:.2}", s.geomean);
+    }
+}

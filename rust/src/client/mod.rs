@@ -1,0 +1,64 @@
+//! Client: submits task graphs to the server and waits for results
+//! (paper §III-B: "connects to a DASK cluster, submits task graphs to the
+//! server and gathers the results").
+
+use crate::protocol::{decode_msg, encode_msg, read_frame, write_frame, Msg};
+use crate::taskgraph::TaskGraph;
+use anyhow::{anyhow, bail, Context, Result};
+use std::net::TcpStream;
+
+/// Result of one graph execution as observed by the client — the paper's
+/// *makespan* is "the duration between the initial task graph submission to
+/// the server and the processing of the final output task" (§VI).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunResult {
+    pub graph_name: String,
+    pub n_tasks: u64,
+    /// Server-measured makespan.
+    pub makespan_us: u64,
+    /// Client-observed wall time submit → done (includes client RTT).
+    pub wall_us: u64,
+}
+
+/// A connected client.
+pub struct Client {
+    stream: TcpStream,
+    pub id: u32,
+}
+
+impl Client {
+    /// Connect and register.
+    pub fn connect(addr: &str, name: &str) -> Result<Client> {
+        let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream.set_nodelay(true).ok();
+        write_frame(&mut stream, &encode_msg(&Msg::RegisterClient { name: name.into() }))?;
+        let reply = decode_msg(&read_frame(&mut stream)?)?;
+        let Msg::Welcome { id } = reply else {
+            bail!("expected welcome, got {:?}", reply.op());
+        };
+        Ok(Client { stream, id })
+    }
+
+    /// Submit a graph and block until it completes or fails.
+    pub fn run_graph(&mut self, graph: &TaskGraph) -> Result<RunResult> {
+        let name = graph.name.clone();
+        let t0 = std::time::Instant::now();
+        write_frame(&mut self.stream, &encode_msg(&Msg::SubmitGraph { graph: graph.clone() }))?;
+        loop {
+            let msg = decode_msg(&read_frame(&mut self.stream)?)?;
+            match msg {
+                Msg::GraphDone { makespan_us, n_tasks } => {
+                    return Ok(RunResult {
+                        graph_name: name,
+                        n_tasks,
+                        makespan_us,
+                        wall_us: t0.elapsed().as_micros() as u64,
+                    });
+                }
+                Msg::GraphFailed { reason } => return Err(anyhow!("graph failed: {reason}")),
+                Msg::Heartbeat => continue,
+                other => bail!("unexpected message {:?}", other.op()),
+            }
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! `bag-n-p` — dask.bag workload: cartesian product of a dataset with
+//! itself, filtering, and fold aggregation (§V).
+//!
+//! Structure (matches Table I's #T ≈ 2p² + 2p and #I ≈ 4p²):
+//! p `load` roots → p² `product` tasks (one per ordered partition pair,
+//! 2 deps off-diagonal) → p² `filter` tasks (1 dep) → per-row fold (fan 32
+//! tree) → final fold. Costs scale with records-per-partition r = n/p:
+//! a product touches r² pairs.
+
+use crate::taskgraph::{GraphBuilder, Payload, TaskGraph, TaskId};
+
+const FOLD_FAN: usize = 32;
+
+/// `n` records split into `p` partitions.
+pub fn bag(n: u64, p: u32) -> TaskGraph {
+    assert!(p > 0 && n > 0);
+    let p = p as usize;
+    let r = (n as f64 / p as f64).max(1.0); // records per partition
+    let product_us = (r * r * 0.55).max(1.0) as u64; // ~0.55 µs per record pair
+    let filter_us = (product_us / 50).max(1);
+    let load_us = (r * 2.0).max(1.0) as u64;
+    let part_bytes = (r * 64.0) as u64; // ~64 B/record
+    let product_bytes = ((r * r * 0.15) as u64).max(16); // surviving pairs
+    let folded_bytes = (product_bytes / 10).max(16);
+
+    let mut b = GraphBuilder::new();
+    let loads: Vec<TaskId> = (0..p)
+        .map(|i| b.add(format!("load-{i}"), vec![], load_us, part_bytes, Payload::BusyWait))
+        .collect();
+    let mut row_folds: Vec<TaskId> = Vec::with_capacity(p);
+    for i in 0..p {
+        let filters: Vec<TaskId> = (0..p)
+            .map(|j| {
+                let prod = b.add(
+                    format!("prod-{i}-{j}"),
+                    if i == j { vec![loads[i]] } else { vec![loads[i], loads[j]] },
+                    product_us,
+                    product_bytes,
+                    Payload::BusyWait,
+                );
+                b.add(format!("filt-{i}-{j}"), vec![prod], filter_us, product_bytes, Payload::BusyWait)
+            })
+            .collect();
+        row_folds.push(fold_tree(&mut b, filters, &format!("fold-{i}"), filter_us, folded_bytes));
+    }
+    fold_tree(&mut b, row_folds, "final", filter_us, folded_bytes);
+    b.build(format!("bag-{n}-{p}")).expect("bag graph valid by construction")
+}
+
+/// Fan-in fold; returns the root of the tree.
+fn fold_tree(
+    b: &mut GraphBuilder,
+    mut level: Vec<TaskId>,
+    prefix: &str,
+    dur_us: u64,
+    out_bytes: u64,
+) -> TaskId {
+    let mut depth = 0;
+    while level.len() > 1 {
+        depth += 1;
+        level = level
+            .chunks(FOLD_FAN)
+            .enumerate()
+            .map(|(k, c)| {
+                b.add(format!("{prefix}-{depth}-{k}"), c.to_vec(), dur_us, out_bytes, Payload::MergeInputs)
+            })
+            .collect();
+    }
+    level[0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::taskgraph::GraphStats;
+
+    #[test]
+    fn table1_small_row() {
+        // Table I: 236 tasks, 415 deps, AD 1233 ms, S 292 KiB, LP 6.
+        let s = GraphStats::of(&bag(21_000, 10));
+        assert!((210..=260).contains(&s.n_tasks), "tasks {}", s.n_tasks);
+        assert!((380..=460).contains(&s.n_deps), "deps {}", s.n_deps);
+        assert!((2..=7).contains(&s.longest_path), "lp {}", s.longest_path);
+        assert!((600.0..=2_500.0).contains(&s.avg_duration_ms), "ad {}", s.avg_duration_ms);
+        assert!((150.0..=600.0).contains(&s.avg_output_kib), "s {}", s.avg_output_kib);
+    }
+
+    #[test]
+    fn table1_large_row() {
+        // Table I: 86116 tasks, 165715 deps, AD 3.6 ms, S 0.8 KiB, LP 9.
+        let s = GraphStats::of(&bag(23_600, 207));
+        assert!((80_000..=92_000).contains(&s.n_tasks), "tasks {}", s.n_tasks);
+        assert!((150_000..=185_000).contains(&s.n_deps), "deps {}", s.n_deps);
+        assert!((1.0..=9.0).contains(&s.avg_duration_ms), "ad {}", s.avg_duration_ms);
+        assert!((0.2..=2.0).contains(&s.avg_output_kib), "s {}", s.avg_output_kib);
+    }
+
+    #[test]
+    fn quadratic_in_partitions() {
+        let s10 = GraphStats::of(&bag(10_000, 10));
+        let s20 = GraphStats::of(&bag(10_000, 20));
+        let ratio = s20.n_tasks as f64 / s10.n_tasks as f64;
+        assert!((3.0..=5.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn single_sink_and_roots() {
+        let g = bag(1_000, 8);
+        assert_eq!(g.sinks().len(), 1);
+        assert_eq!(g.roots().len(), 8);
+    }
+}

@@ -1,0 +1,162 @@
+//! `groupby-d-f-p` / `join-d-f-p` — dask.dataframe workloads over a time-
+//! indexed table: `d` days of records `f` time-units apart, partitioned into
+//! `p`-hour windows (§V).
+//!
+//! `groupby` lowers the way dask lowers `df.groupby(...).agg(...)`:
+//! per-partition read → per-partition chunk-aggregation → fan-in tree of
+//! combines → final agg. `join` lowers a sorted self-join: per-partition
+//! read → per-output-partition merge consuming the aligned partition and its
+//! successor (interval overlap) → result collection tree.
+
+use crate::taskgraph::{GraphBuilder, Payload, TaskGraph, TaskId};
+
+const COMBINE_FAN: usize = 8;
+
+/// Number of partitions for d days with p-hour windows.
+fn npartitions(days: u32, part_hours: f64) -> usize {
+    ((days as f64 * 24.0 / part_hours).ceil() as usize).max(1)
+}
+
+/// Records per partition: one record every `freq_us` simulated time-units.
+fn records_per_partition(part_hours: f64, freq_us: u64) -> f64 {
+    // f is the record spacing in (simulated) seconds when given as `1s`.
+    let records_per_hour = 3600.0 / (freq_us as f64 / 1e6);
+    records_per_hour * part_hours
+}
+
+pub fn groupby(days: u32, freq_us: u64, part_hours: f64) -> TaskGraph {
+    let np = npartitions(days, part_hours);
+    let rpp = records_per_partition(part_hours, freq_us);
+    // Calibrated to Table I's groupby rows: rpp = 3600 ⇒ AD ≈ 11.8 ms,
+    // S ≈ 1 MiB (wide table rows, ~600 B materialized per record).
+    let read_us = (rpp * 1.4).max(1.0) as u64;
+    let chunk_us = (rpp * 5.6).max(1.0) as u64; // hash-agg pass
+    let part_bytes = (rpp * 600.0) as u64;
+    let agg_bytes = (part_bytes / 16).max(64);
+
+    let mut b = GraphBuilder::new();
+    let mut chunks: Vec<TaskId> = Vec::with_capacity(np);
+    for i in 0..np {
+        let read = b.add(format!("read-{i}"), vec![], read_us, part_bytes, Payload::BusyWait);
+        chunks.push(b.add(
+            format!("chunk-{i}"),
+            vec![read],
+            chunk_us,
+            agg_bytes,
+            Payload::BusyWait,
+        ));
+    }
+    let mut level = chunks;
+    let mut depth = 0;
+    while level.len() > 1 {
+        depth += 1;
+        level = level
+            .chunks(COMBINE_FAN)
+            .enumerate()
+            .map(|(k, c)| {
+                b.add(
+                    format!("combine-{depth}-{k}"),
+                    c.to_vec(),
+                    (chunk_us / 4).max(1),
+                    agg_bytes,
+                    Payload::MergeInputs,
+                )
+            })
+            .collect();
+    }
+    b.add("agg", vec![level[0]], (chunk_us / 4).max(1), agg_bytes, Payload::MergeInputs);
+    b.build(format!("groupby-{days}-{freq_us}us-{part_hours}h"))
+        .expect("groupby graph valid by construction")
+}
+
+pub fn join(days: u32, freq_us: u64, part_hours: f64) -> TaskGraph {
+    let np = npartitions(days, part_hours);
+    let rpp = records_per_partition(part_hours, freq_us);
+    // Calibrated to Table I's join rows: rpp = 3600 ⇒ AD ≈ 8 ms, S ≈ 0.5 MiB.
+    let read_us = (rpp * 1.4).max(1.0) as u64;
+    let join_us = (rpp * 3.5).max(1.0) as u64; // sorted merge-join pass
+    let part_bytes = (rpp * 300.0) as u64;
+    let joined_bytes = (rpp * 60.0) as u64;
+
+    let mut b = GraphBuilder::new();
+    let reads: Vec<TaskId> = (0..np)
+        .map(|i| b.add(format!("read-{i}"), vec![], read_us, part_bytes, Payload::BusyWait))
+        .collect();
+    // Sorted self-join: output partition i overlaps input partitions i and i+1.
+    let joins: Vec<TaskId> = (0..np)
+        .map(|i| {
+            let mut inputs = vec![reads[i]];
+            if i + 1 < np {
+                inputs.push(reads[i + 1]);
+            }
+            b.add(format!("join-{i}"), inputs, join_us, joined_bytes, Payload::BusyWait)
+        })
+        .collect();
+    // collect results
+    let mut level = joins;
+    let mut depth = 0;
+    while level.len() > 1 {
+        depth += 1;
+        level = level
+            .chunks(COMBINE_FAN)
+            .enumerate()
+            .map(|(k, c)| {
+                b.add(format!("collect-{depth}-{k}"), c.to_vec(), 2, 128, Payload::MergeInputs)
+            })
+            .collect();
+    }
+    b.build(format!("join-{days}-{freq_us}us-{part_hours}h"))
+        .expect("join graph valid by construction")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::taskgraph::GraphStats;
+
+    #[test]
+    fn partition_arithmetic() {
+        assert_eq!(npartitions(90, 1.0), 2160);
+        assert_eq!(npartitions(2880, 16.0), 4320);
+        let rpp = records_per_partition(1.0, 1_000_000); // 1 s spacing, 1 h window
+        assert!((rpp - 3600.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn groupby_fig5_matches_prose() {
+        // Fig 5's groupby graph: §VI-C says "average computation time is
+        // still only around 10ms while the average task output is 1 MiB".
+        // With 16 s record spacing and 16 h windows: rpp = 3600, np = 4320.
+        let s = GraphStats::of(&groupby(2880, 16_000_000, 16.0));
+        assert!((9_000..=10_000).contains(&s.n_tasks), "tasks {}", s.n_tasks);
+        assert!((5.0..=20.0).contains(&s.avg_duration_ms), "AD {}", s.avg_duration_ms);
+        assert!((500.0..=2_000.0).contains(&s.avg_output_kib), "S {}", s.avg_output_kib);
+    }
+
+    #[test]
+    fn groupby_table1_shape() {
+        // Table I groupby rows have deps/tasks ≈ 1.38 and LP ≈ 9.
+        let s = GraphStats::of(&groupby(90, 1_000_000, 1.0));
+        let ratio = s.n_deps as f64 / s.n_tasks as f64;
+        assert!((0.9..=1.6).contains(&ratio), "deps/tasks {ratio}");
+        assert!((4..=12).contains(&s.longest_path), "lp {}", s.longest_path);
+    }
+
+    #[test]
+    fn join_shape() {
+        let s = GraphStats::of(&join(90, 1_000_000, 1.0));
+        let ratio = s.n_deps as f64 / s.n_tasks as f64;
+        // Table I join rows: ratio ≈ 1.38
+        assert!((1.1..=1.6).contains(&ratio), "deps/tasks {ratio}");
+        let g = join(90, 1_000_000, 1.0);
+        assert_eq!(g.sinks().len(), 1);
+    }
+
+    #[test]
+    fn coarser_partitions_fewer_tasks() {
+        let fine = GraphStats::of(&groupby(90, 1_000_000, 1.0));
+        let coarse = GraphStats::of(&groupby(90, 1_000_000, 8.0));
+        assert!(coarse.n_tasks < fine.n_tasks / 4);
+        assert!(coarse.avg_duration_ms > fine.avg_duration_ms * 4.0);
+    }
+}

@@ -1,0 +1,71 @@
+//! `merge-n` / `merge_slow-n-t` — the paper's scheduler/server stress test:
+//! n independent trivial tasks merged by a single final task (§V).
+//!
+//! Table I: merge-n has #T = n+1, #I = n, S ≈ 0.027 KiB, AD ≈ 0.006 ms,
+//! LP = 1. merge_slow-n-t is identical in shape with t-second tasks.
+
+use crate::taskgraph::{GraphBuilder, Payload, TaskGraph};
+
+/// Duration of one trivial merge task (Table I: AD = 0.006 ms).
+pub const MERGE_TASK_US: u64 = 6;
+/// Output size of one merge task (Table I: S = 0.027 KiB ≈ 28 B).
+pub const MERGE_OUTPUT_BYTES: u64 = 28;
+
+/// `merge-n`: n trivial independent tasks + one merging sink.
+pub fn merge(n: u32) -> TaskGraph {
+    merge_impl(format!("merge-{n}"), n, MERGE_TASK_US, MERGE_OUTPUT_BYTES)
+}
+
+/// `merge_slow-n-t`: same shape, each task takes `task_us` µs
+/// (Table I: S = 0.023 KiB).
+pub fn merge_slow(n: u32, task_us: u64) -> TaskGraph {
+    merge_impl(format!("merge_slow-{n}-{task_us}us"), n, task_us, 24)
+}
+
+fn merge_impl(name: String, n: u32, task_us: u64, out_bytes: u64) -> TaskGraph {
+    assert!(n > 0, "merge needs at least one task");
+    let mut b = GraphBuilder::new();
+    let leaves: Vec<_> = (0..n)
+        .map(|i| b.add(format!("task-{i}"), vec![], task_us, out_bytes, Payload::BusyWait))
+        .collect();
+    // The merging task itself is trivial: it only touches n tiny outputs.
+    b.add("merge", leaves, task_us, out_bytes, Payload::MergeInputs);
+    b.build(name).expect("merge graph is valid by construction")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::taskgraph::{longest_path, GraphStats};
+
+    #[test]
+    fn matches_table1_shape() {
+        // Table I rows: merge-{10K,15K,20K,25K,30K,50K,100K}
+        for n in [10_000u32, 25_000, 100_000] {
+            let g = merge(n);
+            let s = GraphStats::of(&g);
+            assert_eq!(s.n_tasks, n as usize + 1);
+            assert_eq!(s.n_deps, n as usize);
+            assert_eq!(s.longest_path, 1);
+            assert!((s.avg_duration_ms - 0.006).abs() < 1e-9);
+            assert!((s.avg_output_kib - 0.027).abs() < 0.005);
+        }
+    }
+
+    #[test]
+    fn merge_slow_duration() {
+        let g = merge_slow(5_000, 100_000); // 100 ms tasks — Table I row AD=100
+        let s = GraphStats::of(&g);
+        assert_eq!(s.n_tasks, 5_001);
+        assert_eq!(s.n_deps, 5_000);
+        assert!((s.avg_duration_ms - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_sink_consumes_all() {
+        let g = merge(10);
+        assert_eq!(g.sinks().len(), 1);
+        assert_eq!(g.roots().len(), 10);
+        assert_eq!(longest_path(&g), 1);
+    }
+}

@@ -1,0 +1,177 @@
+//! Generators for the paper's benchmark task graphs (§V, Table I).
+//!
+//! Each generator reproduces the *structure* (task count, dependency shape,
+//! longest path) and the *cost statistics* (average task duration AD,
+//! average output size S) of the corresponding Dask program. The server and
+//! schedulers only ever observe graph structure + costs, so matching Table I
+//! is what makes the reproduction faithful — see DESIGN.md §1.
+//!
+//! Families:
+//! - [`merge`]/[`merge_slow`] — n independent tasks merged at the end
+//! - [`tree`] — binary tree reduction of 2^n numbers
+//! - [`xarray`] — chunked 3-D grid aggregation (mean/sum of air temps)
+//! - [`bag`] — cartesian product + filter + fold
+//! - [`numpy`] — distributed transpose + add + reduce
+//! - [`groupby`]/[`join`] — partitioned table groupby / self-join
+//! - [`vectorizer`]/[`wordbag`] — text feature hashing / full text pipeline
+//!
+//! [`parse`] turns a spec string (`"merge-25000"`, `"groupby-90-1s-1h"`)
+//! into a graph; [`suite`] returns the paper's full benchmark set.
+
+mod bag;
+mod groupby;
+mod merge;
+mod numpy;
+mod suite;
+mod tree;
+mod text;
+mod xarray;
+
+pub use bag::bag;
+pub use groupby::{groupby, join};
+pub use merge::{merge, merge_slow};
+pub use numpy::numpy;
+pub use suite::{paper_suite, suite_subset_zero_worker, SuiteEntry};
+pub use text::{vectorizer, wordbag};
+pub use tree::tree;
+pub use xarray::xarray;
+
+use crate::taskgraph::TaskGraph;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ParseError {
+    #[error("unknown benchmark family in {0:?}")]
+    UnknownFamily(String),
+    #[error("bad parameters in {spec:?}: {reason}")]
+    BadParams { spec: String, reason: String },
+}
+
+fn param<T: std::str::FromStr>(spec: &str, part: Option<&str>, what: &str) -> Result<T, ParseError> {
+    part.ok_or_else(|| ParseError::BadParams { spec: spec.into(), reason: format!("missing {what}") })?
+        .parse()
+        .map_err(|_| ParseError::BadParams { spec: spec.into(), reason: format!("invalid {what}") })
+}
+
+/// Parse a duration-ish suffix: `10`, `10ms`, `1s`, `100us` → µs.
+fn parse_dur_us(spec: &str, s: &str) -> Result<u64, ParseError> {
+    let (num, mult) = if let Some(x) = s.strip_suffix("ms") {
+        (x, 1_000)
+    } else if let Some(x) = s.strip_suffix("us") {
+        (x, 1)
+    } else if let Some(x) = s.strip_suffix('s') {
+        (x, 1_000_000)
+    } else {
+        (s, 1_000) // bare number = milliseconds (paper's merge_slow-n-t uses seconds-scale t; suite spells units)
+    };
+    let v: f64 = num.parse().map_err(|_| ParseError::BadParams {
+        spec: spec.into(),
+        reason: format!("invalid duration {s:?}"),
+    })?;
+    Ok((v * mult as f64) as u64)
+}
+
+/// Build a benchmark graph from a spec string.
+///
+/// Grammar (case-insensitive family name, `-`-separated params):
+/// `merge-N` | `merge_slow-N-T` | `tree-N` | `xarray-N` | `bag-N-P` |
+/// `numpy-N-P` | `groupby-D-F-P` | `join-D-F-P` | `vectorizer-N-P` |
+/// `wordbag-N-P`. `T`/`F`/`P`(time) accept `us`/`ms`/`s` suffixes.
+pub fn parse(spec: &str) -> Result<TaskGraph, ParseError> {
+    let mut it = spec.split('-');
+    let family = it
+        .next()
+        .ok_or_else(|| ParseError::UnknownFamily(spec.into()))?
+        .to_ascii_lowercase();
+    let p1 = it.next();
+    let p2 = it.next();
+    let p3 = it.next();
+    match family.as_str() {
+        "merge" => Ok(merge(param(spec, p1, "n")?)),
+        "merge_slow" | "mergeslow" => {
+            let n = param(spec, p1, "n")?;
+            let t = parse_dur_us(spec, p1.and(p2).ok_or_else(|| ParseError::BadParams {
+                spec: spec.into(),
+                reason: "missing t".into(),
+            })?)?;
+            Ok(merge_slow(n, t))
+        }
+        "tree" => Ok(tree(param(spec, p1, "n")?)),
+        "xarray" => Ok(xarray(param(spec, p1, "n")?)),
+        "bag" => Ok(bag(param(spec, p1, "n")?, param(spec, p2, "p")?)),
+        "numpy" => Ok(numpy(param(spec, p1, "n")?, param(spec, p2, "p")?)),
+        "groupby" => {
+            let d: u32 = param(spec, p1, "days")?;
+            let f = parse_dur_us(spec, p2.ok_or_else(|| missing(spec, "f"))?)?;
+            let p = parse_time_h(spec, p3.ok_or_else(|| missing(spec, "p"))?)?;
+            Ok(groupby(d, f, p))
+        }
+        "join" => {
+            let d: u32 = param(spec, p1, "days")?;
+            let f = parse_dur_us(spec, p2.ok_or_else(|| missing(spec, "f"))?)?;
+            let p = parse_time_h(spec, p3.ok_or_else(|| missing(spec, "p"))?)?;
+            Ok(join(d, f, p))
+        }
+        "vectorizer" => Ok(vectorizer(param(spec, p1, "n")?, param(spec, p2, "p")?)),
+        "wordbag" => Ok(wordbag(param(spec, p1, "n")?, param(spec, p2, "p")?)),
+        _ => Err(ParseError::UnknownFamily(spec.into())),
+    }
+}
+
+fn missing(spec: &str, what: &str) -> ParseError {
+    ParseError::BadParams { spec: spec.into(), reason: format!("missing {what}") }
+}
+
+/// Parse a partition window like `16h` / `1h` / `30m` → hours (f64).
+fn parse_time_h(spec: &str, s: &str) -> Result<f64, ParseError> {
+    let (num, mult) = if let Some(x) = s.strip_suffix('h') {
+        (x, 1.0)
+    } else if let Some(x) = s.strip_suffix('m') {
+        (x, 1.0 / 60.0)
+    } else {
+        (s, 1.0)
+    };
+    let v: f64 = num.parse().map_err(|_| ParseError::BadParams {
+        spec: spec.into(),
+        reason: format!("invalid window {s:?}"),
+    })?;
+    Ok(v * mult)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_families() {
+        for spec in [
+            "merge-100",
+            "merge_slow-50-10ms",
+            "tree-6",
+            "xarray-25",
+            "bag-1000-10",
+            "numpy-1000-4",
+            "groupby-30-1s-8h",
+            "join-30-1s-8h",
+            "vectorizer-300-50",
+            "wordbag-250-50",
+        ] {
+            let g = parse(spec).unwrap_or_else(|e| panic!("{spec}: {e}"));
+            assert!(!g.is_empty(), "{spec} produced empty graph");
+        }
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(matches!(parse("bogus-1"), Err(ParseError::UnknownFamily(_))));
+        assert!(matches!(parse("merge-xyz"), Err(ParseError::BadParams { .. })));
+        assert!(matches!(parse("merge_slow-10"), Err(ParseError::BadParams { .. })));
+    }
+
+    #[test]
+    fn duration_suffixes() {
+        assert_eq!(parse_dur_us("x", "10ms").unwrap(), 10_000);
+        assert_eq!(parse_dur_us("x", "1s").unwrap(), 1_000_000);
+        assert_eq!(parse_dur_us("x", "250us").unwrap(), 250);
+        assert_eq!(parse_dur_us("x", "5").unwrap(), 5_000);
+    }
+}

@@ -1,0 +1,103 @@
+//! `numpy-n-p` — dask.array workload: transpose and aggregate a distributed
+//! (n, n) array split into a p×p grid of (n/p, n/p) chunks (§V).
+//!
+//! Structure mirrors dask.array's lowering of `(x + x.T).sum()`:
+//! per-chunk create tasks, per-chunk transpose+add tasks (consuming the
+//! mirrored chunk), fused per-chunk partial sums, and a fan-in reduction.
+
+use crate::taskgraph::{GraphBuilder, Payload, TaskGraph, TaskId};
+
+const REDUCE_FAN: usize = 8;
+
+pub fn numpy(n: u32, p: u32) -> TaskGraph {
+    assert!(p > 0 && n >= p);
+    let pp = p as usize;
+    let chunk = (n / p).max(1) as u64; // chunk edge
+    let chunk_bytes = chunk * chunk * 8; // f64 elements
+    // ~15 ns/element for transpose+add+partial-sum (calibrated to Table I's
+    // AD column: numpy-mid chunk 421² ⇒ 2.7 ms ≈ paper's 2.6 ms), ≥1 µs.
+    let op_us = ((chunk * chunk) as f64 * 0.015).max(1.0) as u64;
+
+    let mut b = GraphBuilder::new();
+    // create chunk (i, j)
+    let mut creates = vec![vec![TaskId(0); pp]; pp];
+    for i in 0..pp {
+        for j in 0..pp {
+            creates[i][j] = b.add(
+                format!("create-{i}-{j}"),
+                vec![],
+                (op_us / 2).max(1),
+                chunk_bytes,
+                Payload::BusyWait,
+            );
+        }
+    }
+    // transpose+add+partial-sum of chunk (i, j) needs create(i,j) and create(j,i)
+    let mut partials: Vec<TaskId> = Vec::with_capacity(pp * pp);
+    for i in 0..pp {
+        for j in 0..pp {
+            let inputs = if i == j {
+                vec![creates[i][j]]
+            } else {
+                vec![creates[i][j].min(creates[j][i]), creates[i][j].max(creates[j][i])]
+            };
+            partials.push(b.add(
+                format!("tsum-{i}-{j}"),
+                inputs,
+                op_us,
+                64, // a partial scalar sum
+                Payload::HloTranspose { n: chunk.min(256) as u32, seed: (i * pp + j) as u64 },
+            ));
+        }
+    }
+    // fan-in reduction of p² partials
+    let mut level = partials;
+    let mut depth = 0;
+    while level.len() > 1 {
+        depth += 1;
+        level = level
+            .chunks(REDUCE_FAN)
+            .enumerate()
+            .map(|(k, c)| {
+                b.add(format!("red-{depth}-{k}"), c.to_vec(), 2, 64, Payload::MergeInputs)
+            })
+            .collect();
+    }
+    b.build(format!("numpy-{n}-{p}")).expect("numpy graph valid by construction")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::taskgraph::GraphStats;
+
+    #[test]
+    fn table1_small_row_shape() {
+        // Table I (numpy small row): 209 tasks, 228 deps, LP 7, S huge (70 MiB).
+        let s = GraphStats::of(&numpy(40_000, 10));
+        assert!((180..=260).contains(&s.n_tasks), "tasks {}", s.n_tasks);
+        assert!((190..=320).contains(&s.n_deps), "deps {}", s.n_deps);
+        assert!((2..=9).contains(&s.longest_path), "lp {}", s.longest_path);
+        // create tasks dominate size: chunk = 4000² × 8 B = 128 MB ⇒ avg tens of MiB
+        assert!(s.avg_output_kib > 20_000.0, "S {}", s.avg_output_kib);
+    }
+
+    #[test]
+    fn partials_depend_on_mirror_chunks() {
+        let g = numpy(100, 4);
+        // each off-diagonal tsum has 2 inputs, diagonal has 1
+        let tsums: Vec<_> = g.tasks().iter().filter(|t| t.key.starts_with("tsum-")).collect();
+        assert_eq!(tsums.len(), 16);
+        let two = tsums.iter().filter(|t| t.inputs.len() == 2).count();
+        let one = tsums.iter().filter(|t| t.inputs.len() == 1).count();
+        assert_eq!(two, 12);
+        assert_eq!(one, 4);
+    }
+
+    #[test]
+    fn single_sink() {
+        let g = numpy(1000, 7);
+        assert_eq!(g.sinks().len(), 1);
+        assert!(g.needs_runtime());
+    }
+}

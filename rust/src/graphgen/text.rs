@@ -1,0 +1,123 @@
+//! `vectorizer-n-p` / `wordbag-n-p` — Wordbatch-style text processing over a
+//! reviews dataset (§V).
+//!
+//! `vectorizer` computes hashed features per partition: the paper's Table I
+//! row shows **zero dependencies** (p+1 independent future tasks whose
+//! results the client gathers directly), LP = 0, very heavy tasks (~1.5 s,
+//! ~10 MiB outputs). `wordbag` is the full pipeline: per-partition read →
+//! three processing stages (normalize / spell-correct / count+extract) →
+//! per-partition aggregate; LP = 2.
+
+use crate::taskgraph::{GraphBuilder, Payload, TaskGraph};
+
+/// `n` reviews in `p` partitions; `p + 1` independent tasks.
+pub fn vectorizer(n: u64, p: u32) -> TaskGraph {
+    assert!(p > 0);
+    let docs_per_part = (n as f64 / p as f64).max(1.0);
+    // ~1.5 ms per review (hash + tokenize); Table I: AD ≈ 1.5 s at 1000
+    // reviews/partition, output ≈ 10 MiB dense hashed feature block.
+    let task_us = (docs_per_part * 1_500.0) as u64;
+    let out_bytes = (docs_per_part * 10_240.0) as u64;
+
+    let mut b = GraphBuilder::new();
+    for i in 0..p {
+        b.add(
+            format!("vectorize-{i}"),
+            vec![],
+            task_us,
+            out_bytes,
+            Payload::HloHash {
+                n_tokens: (docs_per_part as u32 * 64).max(64),
+                buckets: 1 << 10,
+                seed: i as u64,
+            },
+        );
+    }
+    // The paper's row has p+1 tasks with no dependencies (the +1 is the
+    // client-side barrier future, also dependency-free on the server).
+    b.add("barrier", vec![], 1_000, 64, Payload::NoOp);
+    b.build(format!("vectorizer-{n}-{p}")).expect("vectorizer graph valid by construction")
+}
+
+/// Full text pipeline; `#T = 5p`, `#I = 4p`, LP = 2 (Table I: 250/200/2 at
+/// p = 50). The three processing stages fan out from the read; feature
+/// extraction consumes the word counts.
+pub fn wordbag(n: u64, p: u32) -> TaskGraph {
+    assert!(p > 0);
+    let docs_per_part = (n as f64 / p as f64).max(1.0);
+    let read_us = (docs_per_part * 200.0) as u64;
+    let stage_us = (docs_per_part * 400.0) as u64;
+    // ~14.5 KB of intermediate text data per review (Table I: S ≈ 5 MiB avg).
+    let part_bytes = (docs_per_part * 14_500.0) as u64;
+
+    let mut b = GraphBuilder::new();
+    for i in 0..p {
+        let read = b.add(format!("read-{i}"), vec![], read_us, part_bytes, Payload::BusyWait);
+        let count = ["normalize", "spell", "count"]
+            .iter()
+            .map(|s| {
+                b.add(
+                    format!("{s}-{i}"),
+                    vec![read],
+                    stage_us,
+                    part_bytes,
+                    Payload::WordBag { n_docs: docs_per_part as u32, seed: i as u64 },
+                )
+            })
+            .last()
+            .expect("three stages");
+        b.add(
+            format!("features-{i}"),
+            vec![count],
+            stage_us / 2,
+            part_bytes / 8,
+            Payload::MergeInputs,
+        );
+    }
+    b.build(format!("wordbag-{n}-{p}")).expect("wordbag graph valid by construction")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::taskgraph::GraphStats;
+
+    #[test]
+    fn vectorizer_matches_table1() {
+        // Table I: 301 tasks, 0 deps, LP 0, AD 1504 ms, S ≈ 10 MiB.
+        let s = GraphStats::of(&vectorizer(300_000, 300));
+        assert_eq!(s.n_tasks, 301);
+        assert_eq!(s.n_deps, 0);
+        assert_eq!(s.longest_path, 0);
+        assert!((1_000.0..=2_000.0).contains(&s.avg_duration_ms), "ad {}", s.avg_duration_ms);
+        assert!((7_000.0..=13_000.0).contains(&s.avg_output_kib), "s {}", s.avg_output_kib);
+    }
+
+    #[test]
+    fn wordbag_matches_table1() {
+        // Table I: 250 tasks, 200 deps, LP 2 (wordbag-..-50).
+        let s = GraphStats::of(&wordbag(250, 50));
+        assert_eq!(s.n_tasks, 250);
+        assert_eq!(s.n_deps, 200);
+        assert_eq!(s.longest_path, 2);
+    }
+
+    #[test]
+    fn vectorizer_tasks_heavy_and_independent() {
+        let g = vectorizer(300_000, 300);
+        assert_eq!(g.roots().len(), 301);
+        assert!(g.needs_runtime());
+        // Table I: AD ≈ 1.5 s per task.
+        let t = g.task(crate::taskgraph::TaskId(0));
+        assert!((1_000_000..=2_500_000).contains(&t.duration_us), "dur {}", t.duration_us);
+    }
+
+    #[test]
+    fn wordbag_per_partition_sinks() {
+        let g = wordbag(250, 50);
+        // Per partition: normalize + spell results are consumed client-side
+        // (sinks), plus the features task — 3 sinks per partition.
+        assert_eq!(g.sinks().len(), 150);
+        assert_eq!(g.roots().len(), 50);
+    }
+}

@@ -1,0 +1,76 @@
+//! `tree-n` — binary tree reduction of 2^n numbers (§V).
+//!
+//! Leaf tasks each combine two numbers (2^(n-1) leaves), interior tasks
+//! combine two child results, so #T = 2^n − 1, #I = 2^n − 2, LP = n − 1.
+//! Table I (tree-15): #T = 32767, #I = 32766, LP = 14, AD ≈ 0.007 ms.
+
+use crate::taskgraph::{GraphBuilder, Payload, TaskGraph, TaskId};
+
+pub const TREE_TASK_US: u64 = 7;
+pub const TREE_OUTPUT_BYTES: u64 = 28;
+
+/// Binary tree reduction of 2^n numbers; `n ≥ 1`.
+pub fn tree(n: u32) -> TaskGraph {
+    assert!((1..=26).contains(&n), "tree-n supports 1..=26, got {n}");
+    let mut b = GraphBuilder::new();
+    // Level 0: 2^(n-1) leaf tasks, each reducing two raw numbers.
+    let mut level: Vec<TaskId> = (0..(1u64 << (n - 1)))
+        .map(|i| b.add(format!("leaf-{i}"), vec![], TREE_TASK_US, TREE_OUTPUT_BYTES, Payload::BusyWait))
+        .collect();
+    let mut depth = 1;
+    while level.len() > 1 {
+        level = level
+            .chunks(2)
+            .enumerate()
+            .map(|(i, pair)| {
+                b.add(
+                    format!("reduce-{depth}-{i}"),
+                    pair.to_vec(),
+                    TREE_TASK_US,
+                    TREE_OUTPUT_BYTES,
+                    Payload::MergeInputs,
+                )
+            })
+            .collect();
+        depth += 1;
+    }
+    b.build(format!("tree-{n}")).expect("tree graph is valid by construction")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::taskgraph::GraphStats;
+
+    #[test]
+    fn matches_table1_tree15() {
+        let g = tree(15);
+        let s = GraphStats::of(&g);
+        assert_eq!(s.n_tasks, 32_767);
+        assert_eq!(s.n_deps, 32_766);
+        assert_eq!(s.longest_path, 14);
+        assert!((s.avg_duration_ms - 0.007).abs() < 1e-9);
+    }
+
+    #[test]
+    fn small_trees() {
+        // n=1: a single leaf reducing two numbers.
+        let g = tree(1);
+        assert_eq!(g.len(), 1);
+        assert_eq!(g.n_deps(), 0);
+
+        let g = tree(3);
+        assert_eq!(g.len(), 7);
+        assert_eq!(g.n_deps(), 6);
+        assert_eq!(g.sinks().len(), 1);
+        assert_eq!(g.roots().len(), 4);
+    }
+
+    #[test]
+    fn every_interior_has_two_inputs() {
+        let g = tree(6);
+        for t in g.tasks() {
+            assert!(t.inputs.len() == 0 || t.inputs.len() == 2);
+        }
+    }
+}

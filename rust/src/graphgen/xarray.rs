@@ -1,0 +1,131 @@
+//! `xarray-n` — aggregations (mean, sum) over a chunked 3-D grid of air
+//! temperatures (§V; the NCEP reanalysis dataset of the Dask examples).
+//!
+//! Structure mirrors the xarray/dask-array lowering: one `open` task per
+//! chunk, an elementwise op per chunk, a fan-in tree reducing the time axis
+//! per spatial chunk-column, a per-column finalize, and a final combine.
+//! `n` is the chunk edge length: smaller n ⇒ more, smaller chunks — exactly
+//! the partition-granularity knob the paper sweeps (xarray-25 ≈ 552 tasks,
+//! xarray-5 ≈ 9k tasks).
+
+use crate::taskgraph::{GraphBuilder, Payload, TaskGraph, TaskId};
+
+/// Fan-in of the reduction tree (dask's `split_every` default-ish).
+const SPLIT_EVERY: usize = 4;
+
+pub fn xarray(n: u32) -> TaskGraph {
+    assert!(n > 0);
+    // Air-temperature grid: 2920 time steps, ~50 spatial tiles at n=1.
+    let nt = (2920 / n).max(1) as usize; // time chunks
+    let ns = (30 / n) as usize + 1; // spatial chunk columns (n=25 ⇒ 2, n=5 ⇒ 7)
+    // Chunk compute cost and size scale with chunk area (~n²).
+    let op_us = (48 * n as u64 * n as u64) / 10; // n=25: 3.0 ms; n=5: 120 µs
+    let chunk_bytes = 90 * n as u64 * n as u64; // n=25: ~55 KiB; n=5: ~2.2 KiB
+    let combine_us = (op_us / 4).max(1);
+
+    let mut b = GraphBuilder::new();
+    let mut col_results: Vec<TaskId> = Vec::with_capacity(ns);
+    for s in 0..ns {
+        // Per-column climatology (the mean each anomaly subtracts); having
+        // every anomaly consume it reproduces the dense dependency pattern
+        // of the xarray lowering (Table I: #I/#T ≈ 1.56).
+        let clim = b.add(
+            format!("clim-{s}"),
+            vec![],
+            (op_us / 3).max(1),
+            chunk_bytes / 4,
+            Payload::BusyWait,
+        );
+        // open + elementwise op per time chunk of this column
+        let ops: Vec<TaskId> = (0..nt)
+            .map(|t| {
+                let open = b.add(
+                    format!("open-{s}-{t}"),
+                    vec![],
+                    (op_us / 3).max(1),
+                    chunk_bytes,
+                    Payload::BusyWait,
+                );
+                b.add(
+                    format!("anom-{s}-{t}"),
+                    vec![clim, open],
+                    op_us,
+                    chunk_bytes,
+                    Payload::HloReduce {
+                        rows: (8 * n).max(8),
+                        cols: 128,
+                        seed: (s * nt + t) as u64,
+                    },
+                )
+            })
+            .collect();
+        // tree-reduce the time axis
+        let mut level = ops;
+        let mut depth = 0;
+        while level.len() > 1 {
+            depth += 1;
+            level = level
+                .chunks(SPLIT_EVERY)
+                .enumerate()
+                .map(|(i, chunk)| {
+                    b.add(
+                        format!("comb-{s}-{depth}-{i}"),
+                        chunk.to_vec(),
+                        combine_us,
+                        chunk_bytes / 2,
+                        Payload::MergeInputs,
+                    )
+                })
+                .collect();
+        }
+        let mean = b.add(
+            format!("mean-{s}"),
+            vec![level[0]],
+            combine_us,
+            chunk_bytes / 2,
+            Payload::MergeInputs,
+        );
+        col_results.push(mean);
+    }
+    // combine spatial columns (mean + sum aggregations)
+    let sum = b.add("sum", col_results.clone(), combine_us, 1024, Payload::MergeInputs);
+    col_results.push(sum);
+    b.add("agg", col_results, combine_us, 256, Payload::MergeInputs);
+    b.build(format!("xarray-{n}")).expect("xarray graph valid by construction")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::taskgraph::GraphStats;
+
+    #[test]
+    fn xarray25_near_table1() {
+        // Table I: 552 tasks, 862 deps, S 55.7 KiB, AD 3.1 ms, LP 10.
+        let s = GraphStats::of(&xarray(25));
+        assert!((400..=750).contains(&s.n_tasks), "tasks {}", s.n_tasks);
+        assert!((600..=1200).contains(&s.n_deps), "deps {}", s.n_deps);
+        assert!((6..=13).contains(&s.longest_path), "lp {}", s.longest_path);
+        assert!((1.5..=4.5).contains(&s.avg_duration_ms), "ad {}", s.avg_duration_ms);
+        assert!((25.0..=80.0).contains(&s.avg_output_kib), "s {}", s.avg_output_kib);
+    }
+
+    #[test]
+    fn xarray5_finer_partitions_grow_graph() {
+        let s5 = GraphStats::of(&xarray(5));
+        let s25 = GraphStats::of(&xarray(25));
+        // Table I: 9258 vs 552 tasks (~17×); accept 10–30×.
+        let ratio = s5.n_tasks as f64 / s25.n_tasks as f64;
+        assert!((10.0..=30.0).contains(&ratio), "ratio {ratio}");
+        // Finer partitions ⇒ smaller & faster tasks.
+        assert!(s5.avg_duration_ms < s25.avg_duration_ms / 4.0);
+        assert!(s5.avg_output_kib < s25.avg_output_kib / 4.0);
+    }
+
+    #[test]
+    fn single_sink() {
+        let g = xarray(25);
+        assert_eq!(g.sinks().len(), 1);
+        assert!(g.needs_runtime(), "xarray uses the Pallas reduce kernel");
+    }
+}

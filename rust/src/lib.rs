@@ -1,0 +1,38 @@
+//! # rsds — reproduction of "Runtime vs Scheduler: Analyzing Dask's Overheads"
+//!
+//! A Dask-like distributed task framework built around a Rust central server
+//! (the paper's RSDS), with:
+//!
+//! - a MessagePack wire protocol ([`msgpack`], [`protocol`]) mirroring the
+//!   Dask protocol the paper adapts in §IV-B,
+//! - a reactor/scheduler-separated central server ([`server`], §IV-A),
+//! - pluggable schedulers ([`scheduler`]): random, RSDS work-stealing and an
+//!   emulation of Dask's work-stealing heuristic,
+//! - real workers executing real payloads — including AOT-compiled JAX/Pallas
+//!   kernels via PJRT ([`worker`], [`runtime`]) — and the paper's *zero
+//!   worker* (§IV-D),
+//! - calibrated runtime-overhead profiles modelling the CPython (Dask) server
+//!   vs the Rust server ([`overhead`]),
+//! - a discrete-event simulator ([`sim`]) that scales the experiments to the
+//!   paper's 1512-worker clusters,
+//! - generators for every benchmark task graph of §V / Table I ([`graphgen`]),
+//! - and a benchmark harness ([`bench`]) regenerating every table and figure.
+//!
+//! See `DESIGN.md` for the system inventory and per-experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod bench;
+pub mod client;
+pub mod graphgen;
+pub mod metrics;
+pub mod msgpack;
+pub mod overhead;
+pub mod protocol;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod sim;
+pub mod taskgraph;
+pub mod testing;
+pub mod util;
+pub mod worker;

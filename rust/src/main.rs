@@ -1,0 +1,214 @@
+//! `rsds` — command-line launcher for the RSDS reproduction.
+//!
+//! Subcommands:
+//! - `server`   — run the central server (RSDS, or the Dask-emulation baseline)
+//! - `worker`   — run a real worker against a server
+//! - `zero-worker` — run the paper's idealized worker (§IV-D)
+//! - `submit`   — submit a benchmark graph as a client and print the result
+//! - `sim`      — run a benchmark in the discrete-event simulator
+//! - `suite`    — print Table I for the generated benchmark suite
+
+use anyhow::{anyhow, bail, Result};
+use rsds::graphgen;
+use rsds::metrics::Measurement;
+use rsds::overhead::RuntimeProfile;
+use rsds::server::{serve, ServerConfig};
+use rsds::sim::{simulate, SimConfig};
+use rsds::taskgraph::GraphStats;
+use rsds::util::cli::Args;
+use rsds::worker::{run_worker, zero::run_zero_worker, WorkerConfig};
+
+const USAGE: &str = "\
+rsds — reproduction of 'Runtime vs Scheduler: Analyzing Dask's Overheads'
+
+USAGE:
+  rsds server  [--addr 127.0.0.1:8786] [--scheduler ws|random|dask-ws]
+               [--profile rsds|dask] [--emulate-python] [--seed N]
+  rsds worker  --server ADDR [--ncores 1] [--node 0] [--name w0] [--count N]
+  rsds zero-worker --server ADDR [--count N]
+  rsds submit  --server ADDR --graph SPEC  (e.g. merge-10000, xarray-25)
+  rsds sim     --graph SPEC [--workers 24] [--scheduler ws] [--profile rsds]
+               [--zero-worker] [--seed N] [--timeout-s 300]
+  rsds suite   (prints generated-vs-paper Table I)
+";
+
+fn main() {
+    env_logger_lite();
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal env_logger substitute: honour RSDS_LOG=debug|info|warn.
+fn env_logger_lite() {
+    struct L;
+    impl log::Log for L {
+        fn enabled(&self, m: &log::Metadata) -> bool {
+            m.level() <= log::max_level()
+        }
+        fn log(&self, r: &log::Record) {
+            if self.enabled(r.metadata()) {
+                eprintln!("[{}] {}", r.level(), r.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    static LOGGER: L = L;
+    let level = match std::env::var("RSDS_LOG").as_deref() {
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("info") => log::LevelFilter::Info,
+        _ => log::LevelFilter::Warn,
+    };
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(level);
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env(&[
+        "addr", "scheduler", "profile", "seed", "server", "ncores", "node", "name", "count",
+        "graph", "workers", "timeout-s", "workers-per-node",
+    ])?;
+    match args.subcommand() {
+        Some("server") => cmd_server(&args),
+        Some("worker") => cmd_worker(&args, false),
+        Some("zero-worker") => cmd_worker(&args, true),
+        Some("submit") => cmd_submit(&args),
+        Some("sim") => cmd_sim(&args),
+        Some("suite") => cmd_suite(),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn profile_arg(args: &Args) -> Result<RuntimeProfile> {
+    let name = args.get("profile").unwrap_or("rsds");
+    RuntimeProfile::by_name(name).ok_or_else(|| anyhow!("unknown profile {name:?}"))
+}
+
+fn cmd_server(args: &Args) -> Result<()> {
+    let config = ServerConfig {
+        addr: args.get("addr").unwrap_or("127.0.0.1:8786").to_string(),
+        scheduler: args.get("scheduler").unwrap_or("ws").to_string(),
+        seed: args.get_parsed_or("seed", 2020u64)?,
+        profile: profile_arg(args)?,
+        emulate: args.flag("emulate-python"),
+    };
+    let emulate = config.emulate;
+    let scheduler = config.scheduler.clone();
+    let handle = serve(config)?;
+    println!(
+        "rsds server listening on {} (scheduler={scheduler}, emulate-python={emulate})",
+        handle.addr
+    );
+    // Run until killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_worker(args: &Args, zero: bool) -> Result<()> {
+    let server = args.require("server")?.to_string();
+    let count: u32 = args.get_parsed_or("count", 1u32)?;
+    let base = args.get("name").unwrap_or(if zero { "zero" } else { "worker" });
+    let mut handles = Vec::new();
+    for i in 0..count {
+        let cfg = WorkerConfig {
+            server_addr: server.clone(),
+            name: format!("{base}-{i}"),
+            ncores: args.get_parsed_or("ncores", 1u32)?,
+            node: args.get_parsed_or("node", 0u32)?,
+        };
+        if zero {
+            let h = run_zero_worker(cfg)?;
+            println!("zero worker {} registered", h.id);
+        } else {
+            let h = run_worker(cfg)?;
+            println!("worker {} registered (data {})", h.id, h.data_addr);
+            handles.push(h);
+        }
+    }
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_submit(args: &Args) -> Result<()> {
+    let server = args.require("server")?;
+    let spec = args.require("graph")?;
+    let graph = graphgen::parse(spec)?;
+    let stats = GraphStats::of(&graph);
+    println!("submitting {} ({} tasks, {} deps)", graph.name, stats.n_tasks, stats.n_deps);
+    let mut client = rsds::client::Client::connect(server, "rsds-cli")?;
+    let result = client.run_graph(&graph)?;
+    println!(
+        "done: makespan {:.3} s  ({:.1} µs/task, client wall {:.3} s)",
+        result.makespan_us as f64 / 1e6,
+        result.makespan_us as f64 / result.n_tasks as f64,
+        result.wall_us as f64 / 1e6,
+    );
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let spec = args.require("graph")?;
+    let graph = graphgen::parse(spec)?;
+    let profile = profile_arg(args)?;
+    let scheduler = args.get("scheduler").unwrap_or("ws").to_string();
+    let cfg = SimConfig {
+        n_workers: args.get_parsed_or("workers", 24usize)?,
+        workers_per_node: args.get_parsed_or("workers-per-node", 24usize)?,
+        profile,
+        scheduler,
+        seed: args.get_parsed_or("seed", 2020u64)?,
+        zero_worker: args.flag("zero-worker"),
+        timeout_us: args.get_parsed_or("timeout-s", 300f64)? * 1e6,
+        ..SimConfig::default()
+    };
+    if cfg.n_workers == 0 {
+        bail!("--workers must be positive");
+    }
+    let r = simulate(&graph, &cfg);
+    let m = Measurement {
+        benchmark: graph.name.clone(),
+        server: cfg.profile.name.to_string(),
+        scheduler: cfg.scheduler.clone(),
+        n_workers: cfg.n_workers,
+        n_nodes: cfg.n_workers.div_ceil(cfg.workers_per_node),
+        makespan_us: r.makespan_us,
+        reps: 1,
+        aot_us: r.aot_us,
+    };
+    rsds::metrics::print_series(&format!("sim {}", graph.name), &[m]);
+    println!(
+        "msgs={} steals={}/{} transferred={} timed_out={}",
+        r.msgs,
+        r.steals_failed,
+        r.steals_attempted,
+        rsds::util::stats::fmt_bytes(r.bytes_transferred),
+        r.timed_out
+    );
+    Ok(())
+}
+
+fn cmd_suite() -> Result<()> {
+    println!(
+        "{:<28} {:>8} {:>8} {:>10} {:>10} {:>4}   (paper: #T #I S AD LP)",
+        "benchmark", "#T", "#I", "S[KiB]", "AD[ms]", "LP"
+    );
+    for entry in graphgen::paper_suite() {
+        let stats = GraphStats::of(&entry.graph());
+        println!(
+            "{}   [{} {} {} {} {}]",
+            stats.row(entry.name),
+            entry.paper.n_tasks,
+            entry.paper.n_deps,
+            entry.paper.avg_output_kib,
+            entry.paper.avg_duration_ms,
+            entry.paper.longest_path
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,146 @@
+//! Experiment metrics: makespan records, speedup tables, AOT series and
+//! CSV export for the figure-regenerating benches.
+
+use crate::util::stats::{fmt_us, geomean};
+use std::io::Write;
+
+/// One measured benchmark configuration (a point in the paper's figures).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Measurement {
+    /// Benchmark name (e.g. `merge-100K`).
+    pub benchmark: String,
+    /// Server implementation: `rsds` | `dask`.
+    pub server: String,
+    /// Scheduler: `ws` | `random` | `dask-ws`.
+    pub scheduler: String,
+    pub n_workers: usize,
+    pub n_nodes: usize,
+    /// Averaged makespan, µs.
+    pub makespan_us: f64,
+    /// Number of repetitions averaged.
+    pub reps: usize,
+    /// Average overhead per task (makespan / #tasks), µs — §VI-D's AOT.
+    pub aot_us: f64,
+}
+
+impl Measurement {
+    pub fn csv_header() -> &'static str {
+        "benchmark,server,scheduler,n_workers,n_nodes,makespan_us,reps,aot_us"
+    }
+
+    pub fn to_csv(&self) -> String {
+        format!(
+            "{},{},{},{},{},{:.1},{},{:.3}",
+            self.benchmark,
+            self.server,
+            self.scheduler,
+            self.n_workers,
+            self.n_nodes,
+            self.makespan_us,
+            self.reps,
+            self.aot_us
+        )
+    }
+}
+
+/// Write measurements as CSV (one figure's data series).
+pub fn write_csv(path: &str, rows: &[Measurement]) -> std::io::Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", Measurement::csv_header())?;
+    for r in rows {
+        writeln!(f, "{}", r.to_csv())?;
+    }
+    Ok(())
+}
+
+/// Speedup of `test` over `baseline` on the same benchmark/cluster
+/// (baseline/test — >1 means `test` is faster), as in Figs 2–4 and 6.
+pub fn speedup(baseline: &Measurement, test: &Measurement) -> f64 {
+    assert_eq!(baseline.benchmark, test.benchmark, "speedup across different benchmarks");
+    assert_eq!(baseline.n_workers, test.n_workers);
+    baseline.makespan_us / test.makespan_us
+}
+
+/// Geometric-mean speedup over a set of benchmarks (the paper's Table II).
+pub fn geomean_speedup(pairs: &[(Measurement, Measurement)]) -> f64 {
+    let speedups: Vec<f64> = pairs.iter().map(|(b, t)| speedup(b, t)).collect();
+    geomean(&speedups)
+}
+
+/// Pretty-print a figure-style series block.
+pub fn print_series(title: &str, rows: &[Measurement]) {
+    println!("== {title} ==");
+    println!(
+        "{:<28} {:>8} {:>10} {:>14} {:>10}",
+        "benchmark", "workers", "sched", "makespan", "AOT/task"
+    );
+    for r in rows {
+        println!(
+            "{:<28} {:>8} {:>10} {:>14} {:>10}",
+            r.benchmark,
+            r.n_workers,
+            r.scheduler,
+            fmt_us(r.makespan_us),
+            fmt_us(r.aot_us)
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(bench: &str, server: &str, sched: &str, workers: usize, makespan: f64) -> Measurement {
+        Measurement {
+            benchmark: bench.into(),
+            server: server.into(),
+            scheduler: sched.into(),
+            n_workers: workers,
+            n_nodes: workers / 24,
+            makespan_us: makespan,
+            reps: 5,
+            aot_us: makespan / 100.0,
+        }
+    }
+
+    #[test]
+    fn speedup_direction() {
+        let dask = m("merge-10K", "dask", "ws", 24, 2_000_000.0);
+        let rsds = m("merge-10K", "rsds", "ws", 24, 1_000_000.0);
+        assert!((speedup(&dask, &rsds) - 2.0).abs() < 1e-12);
+        assert!((speedup(&rsds, &dask) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_speedup_table2_style() {
+        let pairs = vec![
+            (m("a", "dask", "ws", 24, 4.0), m("a", "rsds", "ws", 24, 2.0)), // 2×
+            (m("b", "dask", "ws", 24, 1.0), m("b", "rsds", "ws", 24, 2.0)), // 0.5×
+        ];
+        assert!((geomean_speedup(&pairs) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn speedup_rejects_mismatched_benchmarks() {
+        let a = m("a", "dask", "ws", 24, 1.0);
+        let b = m("b", "rsds", "ws", 24, 1.0);
+        speedup(&a, &b);
+    }
+
+    #[test]
+    fn csv_roundtrip_format() {
+        let row = m("merge-10K", "rsds", "random", 168, 123_456.7);
+        let csv = row.to_csv();
+        assert!(csv.starts_with("merge-10K,rsds,random,168,7,123456.7,5,"));
+        let tmp = std::env::temp_dir().join("rsds_metrics_test.csv");
+        write_csv(tmp.to_str().unwrap(), &[row]).unwrap();
+        let content = std::fs::read_to_string(&tmp).unwrap();
+        assert!(content.starts_with(Measurement::csv_header()));
+        assert_eq!(content.lines().count(), 2);
+        std::fs::remove_file(tmp).ok();
+    }
+}

@@ -1,0 +1,230 @@
+//! MessagePack decoder over a flat byte slice with strict bounds checking.
+//!
+//! Defensive by construction: declared lengths are validated against the
+//! remaining input *before* allocation, so a malicious 4 GiB length prefix
+//! on a 40-byte frame is rejected instead of causing an OOM — this is the
+//! failure-injection surface tested in `protocol`.
+
+use super::Value;
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum DecodeError {
+    #[error("unexpected end of input at offset {0}")]
+    Eof(usize),
+    #[error("declared length {len} exceeds remaining input {remaining} at offset {offset}")]
+    LengthOverrun { offset: usize, len: usize, remaining: usize },
+    #[error("invalid utf-8 in str at offset {0}")]
+    Utf8(usize),
+    #[error("map key at offset {0} is not a string")]
+    NonStringKey(usize),
+    #[error("reserved/unsupported format byte 0x{0:02x} at offset {1}")]
+    BadFormat(u8, usize),
+    #[error("trailing garbage: {0} bytes after value")]
+    Trailing(usize),
+    #[error("nesting depth exceeds {0}")]
+    TooDeep(usize),
+}
+
+const MAX_DEPTH: usize = 64;
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn u8(&mut self) -> Result<u8, DecodeError> {
+        let b = *self.buf.get(self.pos).ok_or(DecodeError::Eof(self.pos))?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], DecodeError> {
+        let remaining = self.buf.len() - self.pos;
+        if n > remaining {
+            return Err(DecodeError::LengthOverrun { offset: self.pos, len: n, remaining });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn be_u16(&mut self) -> Result<u16, DecodeError> {
+        Ok(u16::from_be_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn be_u32(&mut self) -> Result<u32, DecodeError> {
+        Ok(u32::from_be_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn be_u64(&mut self) -> Result<u64, DecodeError> {
+        Ok(u64::from_be_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self, len: usize) -> Result<String, DecodeError> {
+        let off = self.pos;
+        let bytes = self.take(len)?;
+        std::str::from_utf8(bytes)
+            .map(str::to_string)
+            .map_err(|_| DecodeError::Utf8(off))
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Value, DecodeError> {
+        if depth > MAX_DEPTH {
+            return Err(DecodeError::TooDeep(MAX_DEPTH));
+        }
+        let off = self.pos;
+        let b = self.u8()?;
+        Ok(match b {
+            0x00..=0x7f => Value::Int(b as i64),
+            0xe0..=0xff => Value::Int(b as i8 as i64),
+            0x80..=0x8f => self.map_body((b & 0x0f) as usize, depth)?,
+            0x90..=0x9f => self.array_body((b & 0x0f) as usize, depth)?,
+            0xa0..=0xbf => Value::Str(self.str((b & 0x1f) as usize)?),
+            0xc0 => Value::Nil,
+            0xc1 => return Err(DecodeError::BadFormat(b, off)),
+            0xc2 => Value::Bool(false),
+            0xc3 => Value::Bool(true),
+            0xc4 => {
+                let n = self.u8()? as usize;
+                Value::Bin(self.take(n)?.to_vec())
+            }
+            0xc5 => {
+                let n = self.be_u16()? as usize;
+                Value::Bin(self.take(n)?.to_vec())
+            }
+            0xc6 => {
+                let n = self.be_u32()? as usize;
+                Value::Bin(self.take(n)?.to_vec())
+            }
+            0xc7 => {
+                let n = self.u8()? as usize;
+                let tag = self.u8()? as i8;
+                Value::Ext(tag, self.take(n)?.to_vec())
+            }
+            0xc8 => {
+                let n = self.be_u16()? as usize;
+                let tag = self.u8()? as i8;
+                Value::Ext(tag, self.take(n)?.to_vec())
+            }
+            0xc9 => {
+                let n = self.be_u32()? as usize;
+                let tag = self.u8()? as i8;
+                Value::Ext(tag, self.take(n)?.to_vec())
+            }
+            0xca => Value::F32(f32::from_be_bytes(self.take(4)?.try_into().unwrap())),
+            0xcb => Value::F64(f64::from_be_bytes(self.take(8)?.try_into().unwrap())),
+            0xcc => Value::Int(self.u8()? as i64),
+            0xcd => Value::Int(self.be_u16()? as i64),
+            0xce => Value::Int(self.be_u32()? as i64),
+            0xcf => {
+                let u = self.be_u64()?;
+                if u <= i64::MAX as u64 {
+                    Value::Int(u as i64)
+                } else {
+                    Value::UInt(u)
+                }
+            }
+            0xd0 => Value::Int(self.u8()? as i8 as i64),
+            0xd1 => Value::Int(self.be_u16()? as i16 as i64),
+            0xd2 => Value::Int(self.be_u32()? as i32 as i64),
+            0xd3 => Value::Int(self.be_u64()? as i64),
+            0xd4 => {
+                let tag = self.u8()? as i8;
+                Value::Ext(tag, self.take(1)?.to_vec())
+            }
+            0xd5 => {
+                let tag = self.u8()? as i8;
+                Value::Ext(tag, self.take(2)?.to_vec())
+            }
+            0xd6 => {
+                let tag = self.u8()? as i8;
+                Value::Ext(tag, self.take(4)?.to_vec())
+            }
+            0xd7 => {
+                let tag = self.u8()? as i8;
+                Value::Ext(tag, self.take(8)?.to_vec())
+            }
+            0xd8 => {
+                let tag = self.u8()? as i8;
+                Value::Ext(tag, self.take(16)?.to_vec())
+            }
+            0xd9 => {
+                let n = self.u8()? as usize;
+                Value::Str(self.str(n)?)
+            }
+            0xda => {
+                let n = self.be_u16()? as usize;
+                Value::Str(self.str(n)?)
+            }
+            0xdb => {
+                let n = self.be_u32()? as usize;
+                Value::Str(self.str(n)?)
+            }
+            0xdc => {
+                let n = self.be_u16()? as usize;
+                self.array_body(n, depth)?
+            }
+            0xdd => {
+                let n = self.be_u32()? as usize;
+                self.array_body(n, depth)?
+            }
+            0xde => {
+                let n = self.be_u16()? as usize;
+                self.map_body(n, depth)?
+            }
+            0xdf => {
+                let n = self.be_u32()? as usize;
+                self.map_body(n, depth)?
+            }
+        })
+    }
+
+    fn array_body(&mut self, n: usize, depth: usize) -> Result<Value, DecodeError> {
+        // Each element is ≥1 byte; reject impossible counts before allocating.
+        let remaining = self.buf.len() - self.pos;
+        if n > remaining {
+            return Err(DecodeError::LengthOverrun { offset: self.pos, len: n, remaining });
+        }
+        let mut v = Vec::with_capacity(n.min(4096));
+        for _ in 0..n {
+            v.push(self.value(depth + 1)?);
+        }
+        Ok(Value::Array(v))
+    }
+
+    fn map_body(&mut self, n: usize, depth: usize) -> Result<Value, DecodeError> {
+        // Each entry is ≥2 bytes.
+        let remaining = self.buf.len() - self.pos;
+        if n > remaining / 2 {
+            return Err(DecodeError::LengthOverrun { offset: self.pos, len: n, remaining });
+        }
+        let mut m = BTreeMap::new();
+        for _ in 0..n {
+            let key_off = self.pos;
+            let k = match self.value(depth + 1)? {
+                Value::Str(s) => s,
+                _ => return Err(DecodeError::NonStringKey(key_off)),
+            };
+            let v = self.value(depth + 1)?;
+            m.insert(k, v);
+        }
+        Ok(Value::Map(m))
+    }
+}
+
+/// Decode exactly one value; trailing bytes are an error.
+pub fn decode(buf: &[u8]) -> Result<Value, DecodeError> {
+    let (v, consumed) = decode_prefix(buf)?;
+    if consumed != buf.len() {
+        return Err(DecodeError::Trailing(buf.len() - consumed));
+    }
+    Ok(v)
+}
+
+/// Decode one value from the front of `buf`, returning it and the number of
+/// bytes consumed (for streaming multiple concatenated values).
+pub fn decode_prefix(buf: &[u8]) -> Result<(Value, usize), DecodeError> {
+    let mut r = Reader { buf, pos: 0 };
+    let v = r.value(0)?;
+    Ok((v, r.pos))
+}

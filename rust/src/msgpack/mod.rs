@@ -1,0 +1,25 @@
+//! MessagePack serialization — the Dask wire format (paper §IV-B).
+//!
+//! Dask's protocol is MessagePack-encoded message dictionaries; the paper's
+//! RSDS speaks the same format from Rust ("DASK uses a custom
+//! language-agnostic communication protocol serialized by MessagePack").
+//! This module is a complete, dependency-free implementation of the
+//! MessagePack spec (format family: nil, bool, int/uint, f32/f64, str, bin,
+//! array, map — ext is parsed and preserved), built around an owned
+//! [`Value`] tree.
+//!
+//! The codec is on the server's hot path (every task assignment and every
+//! status update crosses it), so the decoder is written against a flat byte
+//! slice with explicit bounds checks and no intermediate allocation beyond
+//! the output tree, and the encoder writes into a caller-owned `Vec<u8>`.
+
+mod decode;
+mod encode;
+mod value;
+
+pub use decode::{decode, decode_prefix, DecodeError};
+pub use encode::{encode, encode_into};
+pub use value::Value;
+
+#[cfg(test)]
+mod tests;

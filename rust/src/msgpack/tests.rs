@@ -1,0 +1,260 @@
+//! Codec tests: spec-vector checks, roundtrips across all format boundaries,
+//! canonical re-encoding, and randomized fuzz (decode never panics; valid
+//! trees roundtrip).
+
+use super::*;
+use crate::util::Rng;
+use std::collections::BTreeMap;
+
+fn rt(v: Value) {
+    let bytes = encode(&v);
+    let back = decode(&bytes).unwrap_or_else(|e| panic!("decode failed for {v}: {e}"));
+    assert_eq!(back, v, "roundtrip mismatch");
+    // Canonical: re-encode is byte-identical.
+    assert_eq!(encode(&back), bytes, "re-encode not canonical for {v}");
+}
+
+#[test]
+fn spec_vectors() {
+    // Hand-checked against the MessagePack spec.
+    assert_eq!(encode(&Value::Nil), [0xc0]);
+    assert_eq!(encode(&Value::Bool(true)), [0xc3]);
+    assert_eq!(encode(&Value::Int(7)), [0x07]);
+    assert_eq!(encode(&Value::Int(-1)), [0xff]);
+    assert_eq!(encode(&Value::Int(-32)), [0xe0]);
+    assert_eq!(encode(&Value::Int(-33)), [0xd0, 0xdf]);
+    assert_eq!(encode(&Value::Int(128)), [0xcc, 0x80]);
+    assert_eq!(encode(&Value::Int(65536)), [0xce, 0, 1, 0, 0]);
+    assert_eq!(encode(&Value::str("abc")), [0xa3, b'a', b'b', b'c']);
+    assert_eq!(
+        encode(&Value::Array(vec![Value::Int(1), Value::Int(2)])),
+        [0x92, 0x01, 0x02]
+    );
+    let m = Value::map(vec![("a", Value::Int(1))]);
+    assert_eq!(encode(&m), [0x81, 0xa1, b'a', 0x01]);
+    assert_eq!(encode(&Value::F64(1.0)), [0xcb, 0x3f, 0xf0, 0, 0, 0, 0, 0, 0]);
+}
+
+#[test]
+fn int_boundaries_roundtrip() {
+    for i in [
+        0i64,
+        1,
+        127,
+        128,
+        255,
+        256,
+        65535,
+        65536,
+        u32::MAX as i64,
+        u32::MAX as i64 + 1,
+        i64::MAX,
+        -1,
+        -32,
+        -33,
+        -128,
+        -129,
+        -32768,
+        -32769,
+        i32::MIN as i64,
+        i32::MIN as i64 - 1,
+        i64::MIN,
+    ] {
+        rt(Value::Int(i));
+    }
+    rt(Value::UInt(u64::MAX));
+    rt(Value::UInt(i64::MAX as u64 + 1));
+}
+
+#[test]
+fn uint_normalization() {
+    // u64 ≤ i64::MAX decodes to Int (canonical form).
+    let bytes = encode(&Value::UInt(42));
+    assert_eq!(decode(&bytes).unwrap(), Value::Int(42));
+}
+
+#[test]
+fn str_length_boundaries() {
+    for n in [0usize, 1, 31, 32, 255, 256, 65535, 65536] {
+        rt(Value::Str("x".repeat(n)));
+    }
+}
+
+#[test]
+fn bin_length_boundaries() {
+    for n in [0usize, 1, 255, 256, 65535, 65536] {
+        rt(Value::Bin(vec![0xAB; n]));
+    }
+}
+
+#[test]
+fn array_and_map_length_boundaries() {
+    for n in [0usize, 1, 15, 16, 65535, 65536] {
+        rt(Value::Array(vec![Value::Int(0); n]));
+    }
+    for n in [0usize, 1, 15, 16, 70000] {
+        let m: BTreeMap<String, Value> =
+            (0..n).map(|i| (format!("k{i}"), Value::Int(i as i64))).collect();
+        rt(Value::Map(m));
+    }
+}
+
+#[test]
+fn ext_roundtrip() {
+    for n in [1usize, 2, 4, 8, 16, 3, 17, 255, 256, 65536] {
+        rt(Value::Ext(-1, vec![0x5A; n]));
+    }
+    rt(Value::Ext(127, vec![]));
+}
+
+#[test]
+fn floats_roundtrip() {
+    rt(Value::F32(1.5));
+    rt(Value::F64(std::f64::consts::PI));
+    rt(Value::F64(f64::INFINITY));
+    rt(Value::F64(-0.0));
+    // NaN: compare bit patterns since NaN != NaN.
+    let bytes = encode(&Value::F64(f64::NAN));
+    match decode(&bytes).unwrap() {
+        Value::F64(f) => assert!(f.is_nan()),
+        v => panic!("expected F64 NaN, got {v}"),
+    }
+}
+
+#[test]
+fn nested_message_like_dask() {
+    // Shape of a Dask-like "compute-task" message.
+    let msg = Value::map(vec![
+        ("op", Value::str("compute-task")),
+        ("key", Value::str("merge-0-1234")),
+        ("duration", Value::F64(0.006)),
+        ("nbytes", Value::Int(27_648)),
+        (
+            "who_has",
+            Value::map(vec![(
+                "dep-0",
+                Value::Array(vec![Value::str("tcp://10.0.0.1:9000")]),
+            )]),
+        ),
+        ("payload", Value::Bin(vec![1, 2, 3, 4])),
+        ("priority", Value::Array(vec![Value::Int(0), Value::Int(-3)])),
+    ]);
+    rt(msg);
+}
+
+#[test]
+fn decode_errors() {
+    // Truncated input.
+    assert!(matches!(decode(&[0xcc]), Err(DecodeError::Eof(_)) | Err(DecodeError::LengthOverrun { .. })));
+    // str16 declaring 1000 bytes with 2 present.
+    assert!(matches!(
+        decode(&[0xda, 0x03, 0xe8, b'a', b'b']),
+        Err(DecodeError::LengthOverrun { .. })
+    ));
+    // bin32 declaring 4 GiB.
+    assert!(matches!(
+        decode(&[0xc6, 0xff, 0xff, 0xff, 0xff, 0x00]),
+        Err(DecodeError::LengthOverrun { .. })
+    ));
+    // array32 declaring 1M elements on a short buffer.
+    assert!(matches!(
+        decode(&[0xdd, 0x00, 0x0f, 0x42, 0x40]),
+        Err(DecodeError::LengthOverrun { .. })
+    ));
+    // reserved byte.
+    assert!(matches!(decode(&[0xc1]), Err(DecodeError::BadFormat(0xc1, 0))));
+    // trailing garbage.
+    assert!(matches!(decode(&[0x01, 0x02]), Err(DecodeError::Trailing(1))));
+    // non-string map key.
+    assert!(matches!(
+        decode(&[0x81, 0x01, 0x02]),
+        Err(DecodeError::NonStringKey(1))
+    ));
+    // invalid utf-8 str.
+    assert!(matches!(decode(&[0xa1, 0xff]), Err(DecodeError::Utf8(1))));
+}
+
+#[test]
+fn deep_nesting_bounded() {
+    // 100 nested arrays exceeds MAX_DEPTH=64 and must error, not overflow.
+    let mut bytes = vec![0x91u8; 100];
+    bytes.push(0xc0);
+    assert!(matches!(decode(&bytes), Err(DecodeError::TooDeep(_))));
+}
+
+#[test]
+fn decode_prefix_streams() {
+    let mut buf = encode(&Value::Int(1));
+    buf.extend(encode(&Value::str("two")));
+    let (v1, n1) = decode_prefix(&buf).unwrap();
+    assert_eq!(v1, Value::Int(1));
+    let (v2, n2) = decode_prefix(&buf[n1..]).unwrap();
+    assert_eq!(v2, Value::str("two"));
+    assert_eq!(n1 + n2, buf.len());
+}
+
+fn random_value(rng: &mut Rng, depth: usize) -> Value {
+    let max_kind = if depth >= 3 { 7 } else { 10 };
+    match rng.gen_range(max_kind) {
+        0 => Value::Nil,
+        1 => Value::Bool(rng.chance(0.5)),
+        2 => Value::Int(rng.next_u64() as i64),
+        3 => Value::UInt(rng.next_u64() | (1 << 63)),
+        4 => Value::F64(rng.range_f64(-1e12, 1e12)),
+        5 => {
+            let n = rng.range_usize(0, 40);
+            Value::Str((0..n).map(|_| (b'a' + rng.gen_range(26) as u8) as char).collect())
+        }
+        6 => {
+            let n = rng.range_usize(0, 300);
+            Value::Bin((0..n).map(|_| rng.next_u64() as u8).collect())
+        }
+        7 => Value::F32(rng.range_f64(-1e6, 1e6) as f32),
+        8 => {
+            let n = rng.range_usize(0, 8);
+            Value::Array((0..n).map(|_| random_value(rng, depth + 1)).collect())
+        }
+        _ => {
+            let n = rng.range_usize(0, 8);
+            Value::Map(
+                (0..n)
+                    .map(|i| (format!("key{i}"), random_value(rng, depth + 1)))
+                    .collect(),
+            )
+        }
+    }
+}
+
+#[test]
+fn fuzz_roundtrip_random_trees() {
+    let mut rng = Rng::new(2020);
+    for _ in 0..500 {
+        rt(random_value(&mut rng, 0));
+    }
+}
+
+#[test]
+fn fuzz_decode_random_bytes_never_panics() {
+    let mut rng = Rng::new(4040);
+    for _ in 0..2000 {
+        let n = rng.range_usize(0, 64);
+        let bytes: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+        let _ = decode(&bytes); // must not panic; error is fine
+    }
+}
+
+#[test]
+fn fuzz_truncation_of_valid_messages_errors_cleanly() {
+    let mut rng = Rng::new(6060);
+    for _ in 0..200 {
+        let v = random_value(&mut rng, 0);
+        let bytes = encode(&v);
+        if bytes.len() < 2 {
+            continue;
+        }
+        let cut = rng.range_usize(1, bytes.len());
+        // Truncated prefix must either decode to a smaller valid value
+        // (when the tree's first element fits) or produce an error — never panic.
+        let _ = decode(&bytes[..cut]);
+    }
+}

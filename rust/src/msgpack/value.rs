@@ -1,0 +1,219 @@
+//! Owned MessagePack value tree with convenience accessors used by the
+//! protocol layer.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// An owned MessagePack value.
+///
+/// Map keys are restricted to strings (a `BTreeMap<String, Value>`): every
+/// message in the Dask protocol is a string-keyed dictionary, and ordered
+/// keys make encoding deterministic (byte-identical re-encodes, which the
+/// tests rely on).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Nil,
+    Bool(bool),
+    /// Signed integer. Encoded as the smallest signed/unsigned format that
+    /// fits; decodes of unsigned values ≤ i64::MAX normalize here.
+    Int(i64),
+    /// Unsigned integer that does not fit in `Int` (> i64::MAX).
+    UInt(u64),
+    F32(f32),
+    F64(f64),
+    Str(String),
+    Bin(Vec<u8>),
+    Array(Vec<Value>),
+    Map(BTreeMap<String, Value>),
+    /// MessagePack ext type: (type tag, payload). Parsed and re-encoded
+    /// verbatim; the Dask protocol uses ext for e.g. timestamps.
+    Ext(i8, Vec<u8>),
+}
+
+impl Value {
+    pub fn str(s: impl Into<String>) -> Value {
+        Value::Str(s.into())
+    }
+
+    pub fn map(entries: Vec<(&str, Value)>) -> Value {
+        Value::Map(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            Value::UInt(u) if *u <= i64::MAX as u64 => Some(*u as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as u64),
+            Value::UInt(u) => Some(*u),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::F32(f) => Some(*f as f64),
+            Value::F64(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            Value::UInt(u) => Some(*u as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_bin(&self) -> Option<&[u8]> {
+        match self {
+            Value::Bin(b) => Some(b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_map(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Map(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Map field lookup: `v.get("op")`.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.as_map().and_then(|m| m.get(key))
+    }
+
+    /// Approximate encoded size in bytes (upper bound within a few bytes per
+    /// element); used for backpressure accounting without encoding.
+    pub fn size_hint(&self) -> usize {
+        match self {
+            Value::Nil | Value::Bool(_) => 1,
+            Value::Int(_) | Value::UInt(_) => 9,
+            Value::F32(_) => 5,
+            Value::F64(_) => 9,
+            Value::Str(s) => 5 + s.len(),
+            Value::Bin(b) => 5 + b.len(),
+            Value::Ext(_, b) => 6 + b.len(),
+            Value::Array(a) => 5 + a.iter().map(Value::size_hint).sum::<usize>(),
+            Value::Map(m) => {
+                5 + m
+                    .iter()
+                    .map(|(k, v)| 5 + k.len() + v.size_hint())
+                    .sum::<usize>()
+            }
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Nil => write!(f, "nil"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::UInt(u) => write!(f, "{u}"),
+            Value::F32(x) => write!(f, "{x}"),
+            Value::F64(x) => write!(f, "{x}"),
+            Value::Str(s) => write!(f, "{s:?}"),
+            Value::Bin(b) => write!(f, "<bin {} bytes>", b.len()),
+            Value::Ext(t, b) => write!(f, "<ext {t} {} bytes>", b.len()),
+            Value::Array(a) => {
+                write!(f, "[")?;
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+            Value::Map(m) => {
+                write!(f, "{{")?;
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{k:?}: {v}")?;
+                }
+                write!(f, "}}")
+            }
+        }
+    }
+}
+
+impl From<bool> for Value {
+    fn from(b: bool) -> Self {
+        Value::Bool(b)
+    }
+}
+impl From<i64> for Value {
+    fn from(i: i64) -> Self {
+        Value::Int(i)
+    }
+}
+impl From<u64> for Value {
+    fn from(u: u64) -> Self {
+        if u <= i64::MAX as u64 {
+            Value::Int(u as i64)
+        } else {
+            Value::UInt(u)
+        }
+    }
+}
+impl From<u32> for Value {
+    fn from(u: u32) -> Self {
+        Value::Int(u as i64)
+    }
+}
+impl From<usize> for Value {
+    fn from(u: usize) -> Self {
+        Value::from(u as u64)
+    }
+}
+impl From<f64> for Value {
+    fn from(f: f64) -> Self {
+        Value::F64(f)
+    }
+}
+impl From<&str> for Value {
+    fn from(s: &str) -> Self {
+        Value::Str(s.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(s: String) -> Self {
+        Value::Str(s)
+    }
+}
+impl From<Vec<u8>> for Value {
+    fn from(b: Vec<u8>) -> Self {
+        Value::Bin(b)
+    }
+}
+impl From<Vec<Value>> for Value {
+    fn from(a: Vec<Value>) -> Self {
+        Value::Array(a)
+    }
+}

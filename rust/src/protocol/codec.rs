@@ -1,0 +1,419 @@
+//! Msg ⇄ msgpack conversion, including the task-graph encoding carried by
+//! `submit-graph`. Static message structure throughout (§IV-B).
+
+use super::messages::{Msg, TaskFinishedInfo, TaskInputLoc};
+use crate::msgpack::{decode, encode, DecodeError, Value};
+use crate::taskgraph::{GraphError, Payload, TaskGraph, TaskId, TaskSpec};
+
+#[derive(Debug, thiserror::Error)]
+pub enum CodecError {
+    #[error("msgpack: {0}")]
+    Msgpack(#[from] DecodeError),
+    #[error("message missing field {0:?}")]
+    Missing(&'static str),
+    #[error("field {0:?} has wrong type")]
+    WrongType(&'static str),
+    #[error("unknown op {0:?}")]
+    UnknownOp(String),
+    #[error("unknown payload kind {0:?}")]
+    UnknownPayload(String),
+    #[error("invalid graph: {0}")]
+    Graph(#[from] GraphError),
+}
+
+// ---------- helpers ----------
+
+fn get<'a>(v: &'a Value, k: &'static str) -> Result<&'a Value, CodecError> {
+    v.get(k).ok_or(CodecError::Missing(k))
+}
+
+fn get_str(v: &Value, k: &'static str) -> Result<String, CodecError> {
+    get(v, k)?.as_str().map(str::to_string).ok_or(CodecError::WrongType(k))
+}
+
+fn get_u64(v: &Value, k: &'static str) -> Result<u64, CodecError> {
+    get(v, k)?.as_u64().ok_or(CodecError::WrongType(k))
+}
+
+fn get_i64(v: &Value, k: &'static str) -> Result<i64, CodecError> {
+    get(v, k)?.as_i64().ok_or(CodecError::WrongType(k))
+}
+
+fn get_bool(v: &Value, k: &'static str) -> Result<bool, CodecError> {
+    get(v, k)?.as_bool().ok_or(CodecError::WrongType(k))
+}
+
+fn get_bin(v: &Value, k: &'static str) -> Result<Vec<u8>, CodecError> {
+    get(v, k)?.as_bin().map(<[u8]>::to_vec).ok_or(CodecError::WrongType(k))
+}
+
+fn get_task(v: &Value, k: &'static str) -> Result<TaskId, CodecError> {
+    Ok(TaskId(get_u64(v, k)? as u32))
+}
+
+// ---------- payload ----------
+
+fn payload_to_value(p: &Payload) -> Value {
+    match p {
+        Payload::NoOp => Value::map(vec![("kind", Value::str("noop"))]),
+        Payload::BusyWait => Value::map(vec![("kind", Value::str("busywait"))]),
+        Payload::MergeInputs => Value::map(vec![("kind", Value::str("merge"))]),
+        Payload::HloReduce { rows, cols, seed } => Value::map(vec![
+            ("kind", Value::str("hlo-reduce")),
+            ("rows", Value::from(*rows)),
+            ("cols", Value::from(*cols)),
+            ("seed", Value::from(*seed)),
+        ]),
+        Payload::HloTranspose { n, seed } => Value::map(vec![
+            ("kind", Value::str("hlo-transpose")),
+            ("n", Value::from(*n)),
+            ("seed", Value::from(*seed)),
+        ]),
+        Payload::HloHash { n_tokens, buckets, seed } => Value::map(vec![
+            ("kind", Value::str("hlo-hash")),
+            ("n_tokens", Value::from(*n_tokens)),
+            ("buckets", Value::from(*buckets)),
+            ("seed", Value::from(*seed)),
+        ]),
+        Payload::WordBag { n_docs, seed } => Value::map(vec![
+            ("kind", Value::str("wordbag")),
+            ("n_docs", Value::from(*n_docs)),
+            ("seed", Value::from(*seed)),
+        ]),
+    }
+}
+
+fn payload_from_value(v: &Value) -> Result<Payload, CodecError> {
+    let kind = get_str(v, "kind")?;
+    Ok(match kind.as_str() {
+        "noop" => Payload::NoOp,
+        "busywait" => Payload::BusyWait,
+        "merge" => Payload::MergeInputs,
+        "hlo-reduce" => Payload::HloReduce {
+            rows: get_u64(v, "rows")? as u32,
+            cols: get_u64(v, "cols")? as u32,
+            seed: get_u64(v, "seed")?,
+        },
+        "hlo-transpose" => {
+            Payload::HloTranspose { n: get_u64(v, "n")? as u32, seed: get_u64(v, "seed")? }
+        }
+        "hlo-hash" => Payload::HloHash {
+            n_tokens: get_u64(v, "n_tokens")? as u32,
+            buckets: get_u64(v, "buckets")? as u32,
+            seed: get_u64(v, "seed")?,
+        },
+        "wordbag" => {
+            Payload::WordBag { n_docs: get_u64(v, "n_docs")? as u32, seed: get_u64(v, "seed")? }
+        }
+        other => return Err(CodecError::UnknownPayload(other.to_string())),
+    })
+}
+
+// ---------- graph ----------
+
+/// Encode a task graph as a msgpack value (used in `submit-graph`).
+pub fn graph_to_value(g: &TaskGraph) -> Value {
+    let tasks: Vec<Value> = g
+        .tasks()
+        .iter()
+        .map(|t| {
+            Value::map(vec![
+                ("key", Value::str(&t.key)),
+                (
+                    "inputs",
+                    Value::Array(t.inputs.iter().map(|i| Value::from(i.0)).collect()),
+                ),
+                ("duration_us", Value::from(t.duration_us)),
+                ("output_size", Value::from(t.output_size)),
+                ("payload", payload_to_value(&t.payload)),
+            ])
+        })
+        .collect();
+    Value::map(vec![("name", Value::str(&g.name)), ("tasks", Value::Array(tasks))])
+}
+
+/// Decode a task graph (validates DAG invariants on arrival — a malicious
+/// client cannot install a cyclic graph).
+pub fn graph_from_value(v: &Value) -> Result<TaskGraph, CodecError> {
+    let name = get_str(v, "name")?;
+    let tasks_v = get(v, "tasks")?.as_array().ok_or(CodecError::WrongType("tasks"))?;
+    let mut tasks = Vec::with_capacity(tasks_v.len());
+    for (i, tv) in tasks_v.iter().enumerate() {
+        let inputs_v = get(tv, "inputs")?.as_array().ok_or(CodecError::WrongType("inputs"))?;
+        let inputs = inputs_v
+            .iter()
+            .map(|x| x.as_u64().map(|u| TaskId(u as u32)).ok_or(CodecError::WrongType("inputs")))
+            .collect::<Result<Vec<_>, _>>()?;
+        tasks.push(TaskSpec {
+            id: TaskId(i as u32),
+            key: get_str(tv, "key")?,
+            inputs,
+            duration_us: get_u64(tv, "duration_us")?,
+            output_size: get_u64(tv, "output_size")?,
+            payload: payload_from_value(get(tv, "payload")?)?,
+        });
+    }
+    Ok(TaskGraph::new(name, tasks)?)
+}
+
+// ---------- messages ----------
+
+/// Encode a message to framed-ready bytes.
+pub fn encode_msg(msg: &Msg) -> Vec<u8> {
+    let mut fields: Vec<(&str, Value)> = vec![("op", Value::str(msg.op()))];
+    match msg {
+        Msg::RegisterClient { name } => fields.push(("name", Value::str(name))),
+        Msg::RegisterWorker { name, ncores, node, data_addr } => {
+            fields.push(("name", Value::str(name)));
+            fields.push(("ncores", Value::from(*ncores)));
+            fields.push(("node", Value::from(*node)));
+            fields.push(("data_addr", Value::str(data_addr)));
+        }
+        Msg::Welcome { id } => fields.push(("id", Value::from(*id))),
+        Msg::SubmitGraph { graph } => fields.push(("graph", graph_to_value(graph))),
+        Msg::GraphDone { makespan_us, n_tasks } => {
+            fields.push(("makespan_us", Value::from(*makespan_us)));
+            fields.push(("n_tasks", Value::from(*n_tasks)));
+        }
+        Msg::GraphFailed { reason } => fields.push(("reason", Value::str(reason))),
+        Msg::ComputeTask { task, key, payload, duration_us, output_size, inputs, priority } => {
+            fields.push(("task", Value::from(task.0)));
+            fields.push(("key", Value::str(key)));
+            fields.push(("payload", payload_to_value(payload)));
+            fields.push(("duration_us", Value::from(*duration_us)));
+            fields.push(("output_size", Value::from(*output_size)));
+            fields.push((
+                "inputs",
+                Value::Array(
+                    inputs
+                        .iter()
+                        .map(|l| {
+                            Value::map(vec![
+                                ("task", Value::from(l.task.0)),
+                                ("addr", Value::str(&l.addr)),
+                                ("nbytes", Value::from(l.nbytes)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+            fields.push(("priority", Value::Int(*priority)));
+        }
+        Msg::TaskFinished(info) => {
+            fields.push(("task", Value::from(info.task.0)));
+            fields.push(("nbytes", Value::from(info.nbytes)));
+            fields.push(("duration_us", Value::from(info.duration_us)));
+        }
+        Msg::TaskErred { task, error } => {
+            fields.push(("task", Value::from(task.0)));
+            fields.push(("error", Value::str(error)));
+        }
+        Msg::StealRequest { task } => fields.push(("task", Value::from(task.0))),
+        Msg::StealResponse { task, ok } => {
+            fields.push(("task", Value::from(task.0)));
+            fields.push(("ok", Value::Bool(*ok)));
+        }
+        Msg::FetchData { task } | Msg::FetchFromServer { task } => {
+            fields.push(("task", Value::from(task.0)))
+        }
+        Msg::DataReply { task, data } | Msg::DataToServer { task, data } => {
+            fields.push(("task", Value::from(task.0)));
+            fields.push(("data", Value::Bin(data.clone())));
+        }
+        Msg::Shutdown | Msg::Heartbeat => {}
+    }
+    encode(&Value::map(fields))
+}
+
+/// Decode one message from bytes.
+pub fn decode_msg(bytes: &[u8]) -> Result<Msg, CodecError> {
+    let v = decode(bytes)?;
+    let op = get_str(&v, "op")?;
+    Ok(match op.as_str() {
+        "register-client" => Msg::RegisterClient { name: get_str(&v, "name")? },
+        "register-worker" => Msg::RegisterWorker {
+            name: get_str(&v, "name")?,
+            ncores: get_u64(&v, "ncores")? as u32,
+            node: get_u64(&v, "node")? as u32,
+            data_addr: get_str(&v, "data_addr")?,
+        },
+        "welcome" => Msg::Welcome { id: get_u64(&v, "id")? as u32 },
+        "submit-graph" => Msg::SubmitGraph { graph: graph_from_value(get(&v, "graph")?)? },
+        "graph-done" => Msg::GraphDone {
+            makespan_us: get_u64(&v, "makespan_us")?,
+            n_tasks: get_u64(&v, "n_tasks")?,
+        },
+        "graph-failed" => Msg::GraphFailed { reason: get_str(&v, "reason")? },
+        "compute-task" => {
+            let inputs_v =
+                get(&v, "inputs")?.as_array().ok_or(CodecError::WrongType("inputs"))?;
+            let inputs = inputs_v
+                .iter()
+                .map(|l| {
+                    Ok(TaskInputLoc {
+                        task: get_task(l, "task")?,
+                        addr: get_str(l, "addr")?,
+                        nbytes: get_u64(l, "nbytes")?,
+                    })
+                })
+                .collect::<Result<Vec<_>, CodecError>>()?;
+            Msg::ComputeTask {
+                task: get_task(&v, "task")?,
+                key: get_str(&v, "key")?,
+                payload: payload_from_value(get(&v, "payload")?)?,
+                duration_us: get_u64(&v, "duration_us")?,
+                output_size: get_u64(&v, "output_size")?,
+                inputs,
+                priority: get_i64(&v, "priority")?,
+            }
+        }
+        "task-finished" => Msg::TaskFinished(TaskFinishedInfo {
+            task: get_task(&v, "task")?,
+            nbytes: get_u64(&v, "nbytes")?,
+            duration_us: get_u64(&v, "duration_us")?,
+        }),
+        "task-erred" => {
+            Msg::TaskErred { task: get_task(&v, "task")?, error: get_str(&v, "error")? }
+        }
+        "steal-request" => Msg::StealRequest { task: get_task(&v, "task")? },
+        "steal-response" => {
+            Msg::StealResponse { task: get_task(&v, "task")?, ok: get_bool(&v, "ok")? }
+        }
+        "fetch-data" => Msg::FetchData { task: get_task(&v, "task")? },
+        "data-reply" => {
+            Msg::DataReply { task: get_task(&v, "task")?, data: get_bin(&v, "data")? }
+        }
+        "fetch-from-server" => Msg::FetchFromServer { task: get_task(&v, "task")? },
+        "data-to-server" => {
+            Msg::DataToServer { task: get_task(&v, "task")?, data: get_bin(&v, "data")? }
+        }
+        "shutdown" => Msg::Shutdown,
+        "heartbeat" => Msg::Heartbeat,
+        other => return Err(CodecError::UnknownOp(other.to_string())),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graphgen;
+
+    fn rt(m: Msg) {
+        let bytes = encode_msg(&m);
+        let back = decode_msg(&bytes).unwrap_or_else(|e| panic!("{m:?}: {e}"));
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn all_messages_roundtrip() {
+        rt(Msg::RegisterClient { name: "client-1".into() });
+        rt(Msg::RegisterWorker {
+            name: "w3".into(),
+            ncores: 1,
+            node: 2,
+            data_addr: "127.0.0.1:9123".into(),
+        });
+        rt(Msg::Welcome { id: 17 });
+        rt(Msg::GraphDone { makespan_us: 123_456, n_tasks: 10_001 });
+        rt(Msg::GraphFailed { reason: "worker died".into() });
+        rt(Msg::ComputeTask {
+            task: TaskId(42),
+            key: "merge-42".into(),
+            payload: Payload::HloReduce { rows: 64, cols: 128, seed: 7 },
+            duration_us: 1000,
+            output_size: 2048,
+            inputs: vec![
+                TaskInputLoc { task: TaskId(1), addr: "10.0.0.1:9000".into(), nbytes: 500 },
+                TaskInputLoc { task: TaskId(2), addr: String::new(), nbytes: 10 },
+            ],
+            priority: -5,
+        });
+        rt(Msg::TaskFinished(TaskFinishedInfo { task: TaskId(9), nbytes: 27, duration_us: 6 }));
+        rt(Msg::TaskErred { task: TaskId(3), error: "oom".into() });
+        rt(Msg::StealRequest { task: TaskId(5) });
+        rt(Msg::StealResponse { task: TaskId(5), ok: false });
+        rt(Msg::FetchData { task: TaskId(8) });
+        rt(Msg::DataReply { task: TaskId(8), data: vec![1, 2, 3] });
+        rt(Msg::FetchFromServer { task: TaskId(8) });
+        rt(Msg::DataToServer { task: TaskId(8), data: vec![9; 100] });
+        rt(Msg::Shutdown);
+        rt(Msg::Heartbeat);
+    }
+
+    #[test]
+    fn all_payload_kinds_roundtrip() {
+        for p in [
+            Payload::NoOp,
+            Payload::BusyWait,
+            Payload::MergeInputs,
+            Payload::HloReduce { rows: 8, cols: 128, seed: 1 },
+            Payload::HloTranspose { n: 32, seed: 2 },
+            Payload::HloHash { n_tokens: 100, buckets: 1024, seed: 3 },
+            Payload::WordBag { n_docs: 50, seed: 4 },
+        ] {
+            let back = payload_from_value(&payload_to_value(&p)).unwrap();
+            assert_eq!(back, p);
+        }
+    }
+
+    #[test]
+    fn graph_roundtrips_exactly() {
+        for g in [graphgen::merge(50), graphgen::tree(5), graphgen::xarray(25)] {
+            let v = graph_to_value(&g);
+            let back = graph_from_value(&v).unwrap();
+            assert_eq!(back.name, g.name);
+            assert_eq!(back.len(), g.len());
+            assert_eq!(back.n_deps(), g.n_deps());
+            for (a, b) in back.tasks().iter().zip(g.tasks()) {
+                assert_eq!(a.key, b.key);
+                assert_eq!(a.inputs, b.inputs);
+                assert_eq!(a.duration_us, b.duration_us);
+                assert_eq!(a.output_size, b.output_size);
+                assert_eq!(a.payload, b.payload);
+            }
+            rt(Msg::SubmitGraph { graph: g });
+        }
+    }
+
+    #[test]
+    fn malicious_graph_rejected() {
+        // Build a value whose task 0 depends on task 1 (forward ref/cycle).
+        let g = graphgen::merge(2);
+        let mut v = graph_to_value(&g);
+        if let Value::Map(m) = &mut v {
+            if let Some(Value::Array(tasks)) = m.get_mut("tasks") {
+                if let Value::Map(t0) = &mut tasks[0] {
+                    t0.insert("inputs".into(), Value::Array(vec![Value::from(1u32)]));
+                }
+            }
+        }
+        assert!(matches!(graph_from_value(&v), Err(CodecError::Graph(_))));
+    }
+
+    #[test]
+    fn decode_errors_are_typed() {
+        assert!(matches!(decode_msg(&[0xff, 0xfe]), Err(CodecError::Msgpack(_))));
+        let v = Value::map(vec![("op", Value::str("no-such-op"))]);
+        assert!(matches!(decode_msg(&encode(&v)), Err(CodecError::UnknownOp(_))));
+        let v = Value::map(vec![("op", Value::str("welcome"))]);
+        assert!(matches!(decode_msg(&encode(&v)), Err(CodecError::Missing("id"))));
+        let v = Value::map(vec![("op", Value::str("welcome")), ("id", Value::str("x"))]);
+        assert!(matches!(decode_msg(&encode(&v)), Err(CodecError::WrongType("id"))));
+    }
+
+    #[test]
+    fn compute_task_message_size_is_small() {
+        // The per-task message must stay in the hundreds of bytes — it is
+        // multiplied by 100k tasks in merge-100K.
+        let bytes = encode_msg(&Msg::ComputeTask {
+            task: TaskId(99_999),
+            key: "task-99999".into(),
+            payload: Payload::BusyWait,
+            duration_us: 6,
+            output_size: 28,
+            inputs: vec![],
+            priority: 99_999,
+        });
+        assert!(bytes.len() < 256, "compute-task message is {} bytes", bytes.len());
+    }
+}

@@ -1,0 +1,105 @@
+//! Length-prefixed framing over blocking byte streams.
+//!
+//! `[u64 le length][length bytes of msgpack]`. The length is validated
+//! against [`MAX_FRAME_LEN`] before any allocation — a malicious or corrupt
+//! peer cannot make the server allocate unbounded memory (exercised by the
+//! failure-injection tests).
+
+use std::io::{Read, Write};
+
+/// Upper bound on a single frame (1 GiB) — larger than any legitimate
+/// message (numpy partitions cap out around 128 MiB).
+pub const MAX_FRAME_LEN: u64 = 1 << 30;
+
+#[derive(Debug, thiserror::Error)]
+pub enum FrameError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("frame of {0} bytes exceeds limit {MAX_FRAME_LEN}")]
+    TooLarge(u64),
+    #[error("peer closed the connection")]
+    Closed,
+}
+
+/// Write one frame (length prefix + body).
+pub fn write_frame(w: &mut impl Write, body: &[u8]) -> Result<(), FrameError> {
+    let len = body.len() as u64;
+    if len > MAX_FRAME_LEN {
+        return Err(FrameError::TooLarge(len));
+    }
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(body)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame. Returns `FrameError::Closed` on clean EOF at a frame
+/// boundary.
+pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>, FrameError> {
+    let mut len_buf = [0u8; 8];
+    // Distinguish clean close (0 bytes) from mid-prefix truncation.
+    let mut got = 0;
+    while got < 8 {
+        let n = r.read(&mut len_buf[got..])?;
+        if n == 0 {
+            if got == 0 {
+                return Err(FrameError::Closed);
+            }
+            return Err(FrameError::Io(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "truncated frame length",
+            )));
+        }
+        got += n;
+    }
+    let len = u64::from_le_bytes(len_buf);
+    if len > MAX_FRAME_LEN {
+        return Err(FrameError::TooLarge(len));
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)?;
+    Ok(body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn roundtrip_frames() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        write_frame(&mut buf, &vec![0xAB; 100_000]).unwrap();
+        let mut r = Cursor::new(buf);
+        assert_eq!(read_frame(&mut r).unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap(), b"");
+        assert_eq!(read_frame(&mut r).unwrap(), vec![0xAB; 100_000]);
+        assert!(matches!(read_frame(&mut r), Err(FrameError::Closed)));
+    }
+
+    #[test]
+    fn oversized_length_rejected_without_allocation() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME_LEN + 1).to_le_bytes());
+        buf.extend_from_slice(b"xx");
+        let mut r = Cursor::new(buf);
+        assert!(matches!(read_frame(&mut r), Err(FrameError::TooLarge(_))));
+    }
+
+    #[test]
+    fn truncated_prefix_is_io_error() {
+        let mut r = Cursor::new(vec![1u8, 2, 3]); // 3 of 8 prefix bytes
+        assert!(matches!(read_frame(&mut r), Err(FrameError::Io(_))));
+    }
+
+    #[test]
+    fn truncated_body_is_io_error() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&10u64.to_le_bytes());
+        buf.extend_from_slice(b"only5");
+        let mut r = Cursor::new(buf);
+        assert!(matches!(read_frame(&mut r), Err(FrameError::Io(_))));
+    }
+}

@@ -1,0 +1,112 @@
+//! The typed message set — the Dask-like operations RSDS needs (§IV: "it
+//! supports a minimum set of DASK message types which are necessary to run
+//! the most common DASK workflows").
+
+use crate::taskgraph::{TaskGraph, TaskId};
+
+/// Where to fetch a task input from: the producing worker's data-serving
+/// address (Dask's `who_has`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskInputLoc {
+    pub task: TaskId,
+    /// Peer address `host:port`; empty when the input is local.
+    pub addr: String,
+    pub nbytes: u64,
+}
+
+/// Completion report (worker → server).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskFinishedInfo {
+    pub task: TaskId,
+    pub nbytes: u64,
+    /// Pure execution time measured by the worker, µs.
+    pub duration_us: u64,
+}
+
+/// All protocol messages. One msgpack map on the wire, discriminated by
+/// `"op"`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    // ---- registration ----
+    /// client → server
+    RegisterClient { name: String },
+    /// worker → server; `data_addr` is where peers fetch outputs from,
+    /// `node` groups workers sharing a machine.
+    RegisterWorker { name: String, ncores: u32, node: u32, data_addr: String },
+    /// server → peer: registration accepted, your id is `id`.
+    Welcome { id: u32 },
+
+    // ---- graph lifecycle ----
+    /// client → server: run this graph.
+    SubmitGraph { graph: TaskGraph },
+    /// server → client: all sink tasks finished.
+    GraphDone { makespan_us: u64, n_tasks: u64 },
+    /// server → client: execution failed.
+    GraphFailed { reason: String },
+
+    // ---- task execution ----
+    /// server → worker: execute a task. Inputs carry `who_has` addresses.
+    ComputeTask {
+        task: TaskId,
+        key: String,
+        /// Serialized payload spec (what to run).
+        payload: crate::taskgraph::Payload,
+        duration_us: u64,
+        output_size: u64,
+        inputs: Vec<TaskInputLoc>,
+        priority: i64,
+    },
+    /// worker → server: task done, output stored locally.
+    TaskFinished(TaskFinishedInfo),
+    /// worker → server: task raised.
+    TaskErred { task: TaskId, error: String },
+
+    // ---- stealing (§IV-C retraction protocol) ----
+    /// server → worker: try to give task back (not started yet?).
+    StealRequest { task: TaskId },
+    /// worker → server: `ok` iff the task was still queued and is now
+    /// retracted; false if it already runs / finished.
+    StealResponse { task: TaskId, ok: bool },
+
+    // ---- data plane ----
+    /// worker → worker: send me this task's output.
+    FetchData { task: TaskId },
+    /// worker → worker: the requested bytes.
+    DataReply { task: TaskId, data: Vec<u8> },
+    /// server → worker (zero-worker experiments): a client asks for data.
+    FetchFromServer { task: TaskId },
+    /// worker → server: requested data (zero worker replies with a small
+    /// mocked constant object, §IV-D).
+    DataToServer { task: TaskId, data: Vec<u8> },
+
+    // ---- lifecycle ----
+    /// server → all: shut down cleanly.
+    Shutdown,
+    /// liveness probe (either direction).
+    Heartbeat,
+}
+
+impl Msg {
+    /// Wire discriminant.
+    pub fn op(&self) -> &'static str {
+        match self {
+            Msg::RegisterClient { .. } => "register-client",
+            Msg::RegisterWorker { .. } => "register-worker",
+            Msg::Welcome { .. } => "welcome",
+            Msg::SubmitGraph { .. } => "submit-graph",
+            Msg::GraphDone { .. } => "graph-done",
+            Msg::GraphFailed { .. } => "graph-failed",
+            Msg::ComputeTask { .. } => "compute-task",
+            Msg::TaskFinished(..) => "task-finished",
+            Msg::TaskErred { .. } => "task-erred",
+            Msg::StealRequest { .. } => "steal-request",
+            Msg::StealResponse { .. } => "steal-response",
+            Msg::FetchData { .. } => "fetch-data",
+            Msg::DataReply { .. } => "data-reply",
+            Msg::FetchFromServer { .. } => "fetch-from-server",
+            Msg::DataToServer { .. } => "data-to-server",
+            Msg::Shutdown => "shutdown",
+            Msg::Heartbeat => "heartbeat",
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! Wire protocol: framed MessagePack messages between client, server and
+//! workers (paper §III-B/§IV-B).
+//!
+//! Dask's protocol is MessagePack message dictionaries over TCP; the paper's
+//! §IV-B modification keeps message structure static so a statically-typed
+//! server can decode it — this implementation follows that simplified-
+//! encoding design: every message is one msgpack map with a fixed `"op"`
+//! discriminant and statically-known fields (no dynamic fragmenting).
+//!
+//! Framing is an 8-byte little-endian length prefix followed by the msgpack
+//! body ([`frame`]). [`Msg`] is the typed message set; [`codec`] converts
+//! between [`Msg`] and bytes and carries the task-graph encoding used by
+//! `SubmitGraph`.
+
+mod codec;
+mod frame;
+mod messages;
+
+pub use codec::{decode_msg, encode_msg, graph_from_value, graph_to_value, CodecError};
+pub use frame::{read_frame, write_frame, FrameError, MAX_FRAME_LEN};
+pub use messages::{Msg, TaskFinishedInfo, TaskInputLoc};

@@ -1,0 +1,161 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from the worker hot path.
+//!
+//! This is the only place the `xla` crate is touched. Python never runs at
+//! request time: `make artifacts` lowers the L2 JAX functions (which call
+//! the L1 Pallas kernels) to HLO *text* once, and this module compiles and
+//! caches one executable per artifact on first use.
+//!
+//! Interchange is HLO text, not serialized protos: jax ≥ 0.5 emits 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §7).
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, OnceLock};
+
+/// Fixed artifact shapes (must match python/compile/aot.py).
+pub const REDUCE_ROWS: usize = 256;
+pub const REDUCE_COLS: usize = 128;
+pub const TRANSPOSE_N: usize = 128;
+pub const HASH_TOKENS: usize = 4096;
+pub const HASH_BUCKETS: usize = 1024;
+
+/// A compiled-artifact cache around one PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+// The xla crate's handles are thread-affine in places; all access goes
+// through the global mutex below.
+unsafe impl Send for Runtime {}
+
+static GLOBAL: OnceLock<Mutex<Runtime>> = OnceLock::new();
+
+impl Runtime {
+    pub fn new(artifact_dir: impl Into<PathBuf>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client, dir: artifact_dir.into(), cache: HashMap::new() })
+    }
+
+    /// Artifact directory: `$RSDS_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("RSDS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Global shared runtime (one PJRT client per process; workers share).
+    pub fn global() -> Result<&'static Mutex<Runtime>> {
+        if GLOBAL.get().is_none() {
+            let rt = Runtime::new(Self::default_dir())?;
+            let _ = GLOBAL.set(Mutex::new(rt));
+        }
+        Ok(GLOBAL.get().expect("set above"))
+    }
+
+    /// Whether the artifacts needed by HLO payloads exist on disk.
+    pub fn artifacts_present(dir: &Path) -> bool {
+        ["partition_reduce", "numpy_step", "feature_hash"]
+            .iter()
+            .all(|n| dir.join(format!("{n}.hlo.txt")).exists())
+    }
+
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .map_err(|e| anyhow!("load {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(self.cache.get(name).expect("inserted above"))
+    }
+
+    fn run_f32(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True.
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("result of {name} not f32: {e:?}"))
+    }
+
+    /// Execute the `partition_reduce` kernel (Pallas tiled sum+mean) on a
+    /// deterministic pseudo-random (REDUCE_ROWS × REDUCE_COLS) partition.
+    /// Returns `[sum, mean]`.
+    pub fn partition_reduce(&mut self, seed: u64) -> Result<Vec<f32>> {
+        let data = synth_f32(REDUCE_ROWS * REDUCE_COLS, seed);
+        let x = xla::Literal::vec1(&data)
+            .reshape(&[REDUCE_ROWS as i64, REDUCE_COLS as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        self.run_f32("partition_reduce", &[x])
+    }
+
+    /// Execute the `numpy_step` artifact: transpose+add+partial-sum of an
+    /// (N × N) chunk. Returns `[partial_sum]`.
+    pub fn numpy_step(&mut self, seed: u64) -> Result<Vec<f32>> {
+        let data = synth_f32(TRANSPOSE_N * TRANSPOSE_N, seed);
+        let x = xla::Literal::vec1(&data)
+            .reshape(&[TRANSPOSE_N as i64, TRANSPOSE_N as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        self.run_f32("numpy_step", &[x])
+    }
+
+    /// Execute the `feature_hash` kernel (Pallas multiply-shift hashing) on
+    /// HASH_TOKENS synthetic token ids. Returns HASH_BUCKETS f32 counts.
+    pub fn feature_hash(&mut self, seed: u64) -> Result<Vec<f32>> {
+        let tokens = synth_tokens(HASH_TOKENS, seed);
+        let x = xla::Literal::vec1(&tokens);
+        self.run_f32("feature_hash", &[x])
+    }
+}
+
+/// Deterministic f32 data in [0, 1): same generator as python's synth
+/// (SplitMix64 over the index), so numerics are reproducible end-to-end.
+pub fn synth_f32(n: usize, seed: u64) -> Vec<f32> {
+    let mut state = seed;
+    (0..n)
+        .map(|_| {
+            let x = crate::util::rng::splitmix64(&mut state);
+            ((x >> 40) as f32) / ((1u64 << 24) as f32)
+        })
+        .collect()
+}
+
+/// Deterministic token ids in [0, 50k) as i32.
+pub fn synth_tokens(n: usize, seed: u64) -> Vec<i32> {
+    let mut state = seed;
+    (0..n)
+        .map(|_| (crate::util::rng::splitmix64(&mut state) % 50_000) as i32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_deterministic() {
+        assert_eq!(synth_f32(16, 7), synth_f32(16, 7));
+        assert_ne!(synth_f32(16, 7), synth_f32(16, 8));
+        assert!(synth_f32(1000, 1).iter().all(|&x| (0.0..1.0).contains(&x)));
+        let toks = synth_tokens(1000, 3);
+        assert!(toks.iter().all(|&t| (0..50_000).contains(&t)));
+    }
+
+    // Kernel-execution tests live in tests/runtime_hlo.rs (they need the
+    // artifacts built by `make artifacts`).
+}

@@ -1,0 +1,305 @@
+//! Shared cluster bookkeeping for the work-stealing schedulers: per-worker
+//! queues, data placement (who has which task output), and in-flight
+//! transfers. Both [`super::WsScheduler`] and [`super::DaskWsScheduler`]
+//! build on this model; the random scheduler deliberately keeps none of it
+//! (§IV-C: "does not maintain any task graph state").
+
+use super::{WorkerId, WorkerInfo};
+use crate::taskgraph::{TaskGraph, TaskId};
+use std::collections::{HashMap, HashSet};
+
+/// Per-worker mutable scheduling state.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerState {
+    pub info: Option<WorkerInfo>,
+    /// Tasks assigned but not yet reported finished.
+    pub queued: HashSet<TaskId>,
+    /// Sum of expected durations of queued tasks (µs) — Dask-style occupancy.
+    pub occupancy_us: u64,
+    /// Task outputs present on this worker.
+    pub has_data: HashSet<TaskId>,
+    /// Task outputs that *will* be present (in transit / produced by a task
+    /// assigned here) — §IV-C counts these when scoring transfers.
+    pub incoming: HashSet<TaskId>,
+}
+
+/// Cluster + graph model maintained inside a scheduler.
+#[derive(Debug, Default)]
+pub struct ClusterModel {
+    pub workers: Vec<WorkerState>,
+    /// Where each finished task's output lives (possibly several workers).
+    pub placement: HashMap<TaskId, Vec<WorkerId>>,
+    /// The current graph (the scheduler's own copy, per §IV-A).
+    pub graph: Option<TaskGraph>,
+    round_robin: usize,
+}
+
+impl ClusterModel {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_worker(&mut self, info: WorkerInfo) {
+        let idx = info.id.idx();
+        if self.workers.len() <= idx {
+            self.workers.resize_with(idx + 1, WorkerState::default);
+        }
+        self.workers[idx].info = Some(info);
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.iter().filter(|w| w.info.is_some()).count()
+    }
+
+    pub fn worker_ids(&self) -> impl Iterator<Item = WorkerId> + '_ {
+        self.workers
+            .iter()
+            .filter_map(|w| w.info.map(|i| i.id))
+    }
+
+    pub fn set_graph(&mut self, graph: &TaskGraph) {
+        self.graph = Some(graph.clone());
+        self.placement.clear();
+        for w in &mut self.workers {
+            w.queued.clear();
+            w.occupancy_us = 0;
+            w.has_data.clear();
+            w.incoming.clear();
+        }
+    }
+
+    pub fn graph(&self) -> &TaskGraph {
+        self.graph.as_ref().expect("graph_submitted must precede scheduling events")
+    }
+
+    /// Record an assignment in the model.
+    pub fn assign(&mut self, task: TaskId, worker: WorkerId) {
+        let dur = self.graph().task(task).duration_us;
+        let w = &mut self.workers[worker.idx()];
+        w.queued.insert(task);
+        w.occupancy_us += dur;
+        w.incoming.insert(task);
+    }
+
+    /// Record a finished task and its output placement.
+    ///
+    /// Steal races make the queue position uncertain: a task optimistically
+    /// moved to a steal target can finish on its *original* worker. The
+    /// finished task is therefore purged from every queue, so the model can
+    /// never propose stealing a completed task.
+    pub fn finish(&mut self, task: TaskId, worker: WorkerId) {
+        let dur = self.graph().task(task).duration_us;
+        let w = &mut self.workers[worker.idx()];
+        if w.queued.remove(&task) {
+            w.occupancy_us = w.occupancy_us.saturating_sub(dur);
+        } else {
+            // Rare steal-race path: find and purge wherever it sits.
+            for ws in &mut self.workers {
+                if ws.queued.remove(&task) {
+                    ws.occupancy_us = ws.occupancy_us.saturating_sub(dur);
+                    ws.incoming.remove(&task);
+                    break;
+                }
+            }
+        }
+        let w = &mut self.workers[worker.idx()];
+        w.incoming.remove(&task);
+        w.has_data.insert(task);
+        self.placement.entry(task).or_default().push(worker);
+    }
+
+    /// Move a queued task between workers (steal bookkeeping). Returns
+    /// `false` (and does nothing) if the task is no longer queued at `from`
+    /// — e.g. it finished while the retraction was in flight.
+    pub fn move_task(&mut self, task: TaskId, from: WorkerId, to: WorkerId) -> bool {
+        let dur = self.graph().task(task).duration_us;
+        let f = &mut self.workers[from.idx()];
+        if !f.queued.remove(&task) {
+            return false;
+        }
+        f.occupancy_us = f.occupancy_us.saturating_sub(dur);
+        f.incoming.remove(&task);
+        let t = &mut self.workers[to.idx()];
+        t.queued.insert(task);
+        t.occupancy_us += dur;
+        t.incoming.insert(task);
+        true
+    }
+
+    /// Bytes of `task`'s inputs that would have to be fetched if it ran on
+    /// `worker`; same-node data is discounted 10× (§IV-C). Counts data that
+    /// is present *or incoming* on the worker as free.
+    pub fn transfer_cost(&self, task: TaskId, worker: WorkerId) -> u64 {
+        let graph = self.graph();
+        let spec = graph.task(task);
+        let w = &self.workers[worker.idx()];
+        let node = w.info.map(|i| i.node);
+        let mut cost = 0u64;
+        for &input in &spec.inputs {
+            if w.has_data.contains(&input) || w.incoming.contains(&input) {
+                continue;
+            }
+            let size = graph.task(input).output_size.max(1);
+            // Same-node copy is ~10× cheaper than a network transfer.
+            let same_node = self
+                .placement
+                .get(&input)
+                .map(|holders| {
+                    holders.iter().any(|h| {
+                        self.workers[h.idx()].info.map(|i| Some(i.node) == node).unwrap_or(false)
+                    })
+                })
+                .unwrap_or(false);
+            cost += if same_node { size / 10 } else { size };
+        }
+        cost
+    }
+
+    /// Workers holding (or about to hold) any input of `task` — the §IV-C
+    /// candidate set that keeps RSDS's decision cheap.
+    pub fn candidate_workers(&self, task: TaskId) -> Vec<WorkerId> {
+        let graph = self.graph();
+        let mut out: Vec<WorkerId> = Vec::new();
+        for &input in &graph.task(task).inputs {
+            if let Some(holders) = self.placement.get(&input) {
+                for &h in holders {
+                    if !out.contains(&h) {
+                        out.push(h);
+                    }
+                }
+            }
+            // Workers with the input incoming (producer assigned there).
+            for (idx, w) in self.workers.iter().enumerate() {
+                if w.info.is_some() && w.incoming.contains(&input) {
+                    let id = WorkerId(idx as u32);
+                    if !out.contains(&id) {
+                        out.push(id);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Next worker in round-robin order (for input-less tasks).
+    pub fn next_round_robin(&mut self) -> Option<WorkerId> {
+        let ids: Vec<WorkerId> = self.worker_ids().collect();
+        if ids.is_empty() {
+            return None;
+        }
+        let id = ids[self.round_robin % ids.len()];
+        self.round_robin += 1;
+        Some(id)
+    }
+
+    /// (most-loaded worker by queue length, least-loaded) — used by balance
+    /// passes. Returns `None` with fewer than 2 workers.
+    pub fn load_extremes(&self) -> Option<(WorkerId, WorkerId)> {
+        let mut max_w = None;
+        let mut min_w = None;
+        for (idx, w) in self.workers.iter().enumerate() {
+            if w.info.is_none() {
+                continue;
+            }
+            let id = WorkerId(idx as u32);
+            let q = w.queued.len();
+            if max_w.map(|(_, mq)| q > mq).unwrap_or(true) {
+                max_w = Some((id, q));
+            }
+            if min_w.map(|(_, mq)| q < mq).unwrap_or(true) {
+                min_w = Some((id, q));
+            }
+        }
+        match (max_w, min_w) {
+            (Some((a, _)), Some((b, _))) if a != b => Some((a, b)),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::taskgraph::{GraphBuilder, Payload};
+
+    fn graph() -> TaskGraph {
+        let mut b = GraphBuilder::new();
+        let a = b.add("a", vec![], 100, 1000, Payload::NoOp);
+        let c = b.add("c", vec![], 100, 500, Payload::NoOp);
+        b.add("d", vec![a, c], 100, 10, Payload::MergeInputs);
+        b.build("g").unwrap()
+    }
+
+    fn model(nodes: &[u32]) -> ClusterModel {
+        let mut m = ClusterModel::new();
+        for (i, &node) in nodes.iter().enumerate() {
+            m.add_worker(WorkerInfo { id: WorkerId(i as u32), ncores: 1, node });
+        }
+        m.set_graph(&graph());
+        m
+    }
+
+    #[test]
+    fn transfer_cost_counts_missing_inputs() {
+        let mut m = model(&[0, 1]);
+        m.finish(TaskId(0), WorkerId(0)); // a on w0
+        m.finish(TaskId(1), WorkerId(1)); // c on w1
+        // d on w0: must fetch c (500) from another node
+        assert_eq!(m.transfer_cost(TaskId(2), WorkerId(0)), 500);
+        // d on w1: must fetch a (1000)
+        assert_eq!(m.transfer_cost(TaskId(2), WorkerId(1)), 1000);
+    }
+
+    #[test]
+    fn same_node_discount() {
+        let mut m = model(&[0, 0]); // both workers on node 0
+        m.finish(TaskId(0), WorkerId(0));
+        m.finish(TaskId(1), WorkerId(1));
+        // d on w0: c is on the same node ⇒ 500/10
+        assert_eq!(m.transfer_cost(TaskId(2), WorkerId(0)), 50);
+    }
+
+    #[test]
+    fn incoming_counts_as_present() {
+        let mut m = model(&[0, 1]);
+        m.assign(TaskId(0), WorkerId(1)); // a will be produced on w1
+        m.finish(TaskId(1), WorkerId(1));
+        assert_eq!(m.transfer_cost(TaskId(2), WorkerId(1)), 0);
+        let cands = m.candidate_workers(TaskId(2));
+        assert_eq!(cands, vec![WorkerId(1)]);
+    }
+
+    #[test]
+    fn occupancy_tracks_assign_finish_move() {
+        let mut m = model(&[0, 1]);
+        m.assign(TaskId(0), WorkerId(0));
+        m.assign(TaskId(1), WorkerId(0));
+        assert_eq!(m.workers[0].occupancy_us, 200);
+        m.move_task(TaskId(1), WorkerId(0), WorkerId(1));
+        assert_eq!(m.workers[0].occupancy_us, 100);
+        assert_eq!(m.workers[1].occupancy_us, 100);
+        m.finish(TaskId(0), WorkerId(0));
+        assert_eq!(m.workers[0].occupancy_us, 0);
+        assert!(m.workers[0].has_data.contains(&TaskId(0)));
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut m = model(&[0, 1]);
+        let a = m.next_round_robin().unwrap();
+        let b = m.next_round_robin().unwrap();
+        let c = m.next_round_robin().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn load_extremes() {
+        let mut m = model(&[0, 1]);
+        m.assign(TaskId(0), WorkerId(0));
+        m.assign(TaskId(1), WorkerId(0));
+        let (hi, lo) = m.load_extremes().unwrap();
+        assert_eq!(hi, WorkerId(0));
+        assert_eq!(lo, WorkerId(1));
+    }
+}

@@ -1,0 +1,401 @@
+//! Emulation of Dask's work-stealing scheduler (§III-D).
+//!
+//! "When a task becomes ready ... it is immediately assigned to a worker
+//! according to a heuristic that tries to minimize an estimated start time
+//! of the task. The estimate is based on potential data transfers and the
+//! current occupancy of workers. When an imbalance occurs ... the scheduler
+//! tries to steal tasks from overloaded nodes."
+//!
+//! Faithful to the *algorithmic shape* that matters for the paper's
+//! analysis: the placement scan touches **every worker** (cost grows with
+//! cluster size — §VI-A), uses occupancy from *duration estimates learned
+//! per task-key prefix* (like Dask's `TaskPrefix` averages) and a network
+//! bandwidth estimate for transfer times, and performs periodic steal
+//! balancing between saturated and idle workers.
+
+use super::{Action, Assignment, ClusterModel, SchedCost, Scheduler, WorkerId, WorkerInfo};
+use crate::overhead::SchedKind;
+use crate::taskgraph::{TaskGraph, TaskId};
+use std::collections::{HashMap, HashSet};
+
+/// Dask's default bandwidth estimate (100 MB/s) in bytes/µs.
+const BANDWIDTH_BYTES_PER_US: f64 = 100.0;
+/// Latency estimate per remote fetch, µs.
+const FETCH_LATENCY_US: f64 = 100.0;
+/// Default duration estimate before any observation (Dask: 0.5 s).
+const DEFAULT_DURATION_US: f64 = 500_000.0;
+
+/// Running mean of observed durations per task-key prefix (Dask's
+/// `TaskPrefix.duration_average`).
+#[derive(Debug, Default)]
+struct DurationEstimator {
+    by_prefix: HashMap<String, (f64, u64)>,
+}
+
+impl DurationEstimator {
+    fn prefix(key: &str) -> &str {
+        key.split('-').next().unwrap_or(key)
+    }
+
+    fn observe(&mut self, key: &str, duration_us: u64) {
+        let e = self.by_prefix.entry(Self::prefix(key).to_string()).or_insert((0.0, 0));
+        e.1 += 1;
+        // Exponential moving average, like Dask's.
+        let alpha = if e.1 == 1 { 1.0 } else { 0.5 };
+        e.0 = e.0 * (1.0 - alpha) + duration_us as f64 * alpha;
+    }
+
+    fn estimate(&self, key: &str) -> f64 {
+        self.by_prefix
+            .get(Self::prefix(key))
+            .map(|(avg, _)| *avg)
+            .unwrap_or(DEFAULT_DURATION_US)
+    }
+}
+
+pub struct DaskWsScheduler {
+    model: ClusterModel,
+    durations: DurationEstimator,
+    /// Occupancy in *estimated* µs (distinct from the model's exact one —
+    /// Dask only has estimates).
+    est_occupancy_us: Vec<f64>,
+    in_flight_steals: HashSet<TaskId>,
+    cost: SchedCost,
+}
+
+impl DaskWsScheduler {
+    pub fn new() -> Self {
+        DaskWsScheduler {
+            model: ClusterModel::new(),
+            durations: DurationEstimator::default(),
+            est_occupancy_us: Vec::new(),
+            in_flight_steals: HashSet::new(),
+            cost: SchedCost::default(),
+        }
+    }
+
+    fn ensure_occ(&mut self, idx: usize) {
+        if self.est_occupancy_us.len() <= idx {
+            self.est_occupancy_us.resize(idx + 1, 0.0);
+        }
+    }
+
+    /// Earliest-estimated-start-time placement: scans ALL workers.
+    fn place(&mut self, task: TaskId) -> WorkerId {
+        let ids: Vec<WorkerId> = self.model.worker_ids().collect();
+        assert!(!ids.is_empty(), "no workers registered");
+        self.cost.decisions += 1;
+        self.cost.workers_scanned += ids.len() as u64;
+        let mut best = ids[0];
+        let mut best_est = f64::INFINITY;
+        for &w in &ids {
+            let transfer_bytes = self.model.transfer_cost(task, w) as f64;
+            let n_missing = if transfer_bytes > 0.0 { 1.0 } else { 0.0 };
+            let transfer_us =
+                transfer_bytes / BANDWIDTH_BYTES_PER_US + n_missing * FETCH_LATENCY_US;
+            let est = self.est_occupancy_us[w.idx()] + transfer_us;
+            if est < best_est {
+                best_est = est;
+                best = w;
+            }
+        }
+        best
+    }
+
+    /// Steal balancing: move queued tasks from workers whose estimated
+    /// occupancy far exceeds the average to idle ones.
+    fn balance(&mut self, out: &mut Vec<Action>) {
+        self.cost.steal_cycles += 1;
+        let ids: Vec<WorkerId> = self.model.worker_ids().collect();
+        // Occupancy scan over the whole cluster (like Dask's stealing pass).
+        self.cost.workers_scanned += ids.len() as u64;
+        if ids.len() < 2 {
+            return;
+        }
+        let avg: f64 =
+            ids.iter().map(|w| self.est_occupancy_us[w.idx()]).sum::<f64>() / ids.len() as f64;
+        loop {
+            let idle = ids
+                .iter()
+                .copied()
+                .filter(|w| self.model.workers[w.idx()].queued.is_empty())
+                .min_by(|a, b| {
+                    self.est_occupancy_us[a.idx()].total_cmp(&self.est_occupancy_us[b.idx()])
+                });
+            let Some(idle) = idle else { return };
+            let sat = ids
+                .iter()
+                .copied()
+                .filter(|w| {
+                    self.model.workers[w.idx()].queued.len() >= 2
+                        && self.est_occupancy_us[w.idx()] > avg.max(1.0)
+                })
+                .max_by(|a, b| {
+                    self.est_occupancy_us[a.idx()].total_cmp(&self.est_occupancy_us[b.idx()])
+                });
+            let Some(sat) = sat else { return };
+            let victim = self.model.workers[sat.idx()]
+                .queued
+                .iter()
+                .filter(|t| !self.in_flight_steals.contains(t))
+                .max_by_key(|t| t.0)
+                .copied();
+            let Some(task) = victim else { return };
+            let dur = self.durations.estimate(&self.model.graph().task(task).key);
+            if !self.model.move_task(task, sat, idle) {
+                return; // raced with a finish
+            }
+            self.in_flight_steals.insert(task);
+            self.ensure_occ(sat.idx().max(idle.idx()));
+            self.est_occupancy_us[sat.idx()] = (self.est_occupancy_us[sat.idx()] - dur).max(0.0);
+            self.est_occupancy_us[idle.idx()] += dur;
+            out.push(Action::Steal { task, from: sat, to: idle });
+        }
+    }
+}
+
+impl Default for DaskWsScheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for DaskWsScheduler {
+    fn name(&self) -> &'static str {
+        "dask-ws"
+    }
+
+    fn kind(&self) -> SchedKind {
+        SchedKind::WorkStealing
+    }
+
+    fn add_worker(&mut self, info: WorkerInfo) {
+        self.model.add_worker(info);
+        self.ensure_occ(info.id.idx());
+    }
+
+    fn graph_submitted(&mut self, graph: &TaskGraph) {
+        self.model.set_graph(graph);
+        self.in_flight_steals.clear();
+        for occ in &mut self.est_occupancy_us {
+            *occ = 0.0;
+        }
+    }
+
+    fn tasks_ready(&mut self, tasks: &[TaskId], out: &mut Vec<Action>) {
+        for &t in tasks {
+            let w = self.place(t);
+            let dur = self.durations.estimate(&self.model.graph().task(t).key);
+            self.model.assign(t, w);
+            self.ensure_occ(w.idx());
+            self.est_occupancy_us[w.idx()] += dur;
+            out.push(Action::Assign(Assignment { task: t, worker: w, priority: t.0 as i64 }));
+        }
+        self.balance(out);
+    }
+
+    fn task_finished(
+        &mut self,
+        task: TaskId,
+        worker: WorkerId,
+        _nbytes: u64,
+        duration_us: u64,
+        out: &mut Vec<Action>,
+    ) {
+        let key = self.model.graph().task(task).key.clone();
+        let est = self.durations.estimate(&key);
+        self.durations.observe(&key, duration_us);
+        self.model.finish(task, worker);
+        self.ensure_occ(worker.idx());
+        self.est_occupancy_us[worker.idx()] =
+            (self.est_occupancy_us[worker.idx()] - est).max(0.0);
+        self.balance(out);
+    }
+
+    fn steal_result(
+        &mut self,
+        task: TaskId,
+        from: WorkerId,
+        to: WorkerId,
+        success: bool,
+        out: &mut Vec<Action>,
+    ) {
+        self.in_flight_steals.remove(&task);
+        if !success {
+            let dur = self.durations.estimate(&self.model.graph().task(task).key);
+            // No-op if the task finished while the retraction was in flight.
+            if self.model.move_task(task, to, from) {
+                self.est_occupancy_us[to.idx()] = (self.est_occupancy_us[to.idx()] - dur).max(0.0);
+                self.est_occupancy_us[from.idx()] += dur;
+            }
+            self.balance(out);
+        }
+    }
+
+    fn take_cost(&mut self) -> SchedCost {
+        std::mem::take(&mut self.cost)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graphgen::merge;
+    use crate::taskgraph::{GraphBuilder, Payload};
+
+    fn sched(n: u32) -> DaskWsScheduler {
+        let mut s = DaskWsScheduler::new();
+        for i in 0..n {
+            // One worker per node: remote transfers are at full price, which
+            // is the regime where EST placement piles consumers onto the
+            // data holder and stealing has to kick in.
+            s.add_worker(WorkerInfo { id: WorkerId(i), ncores: 1, node: i });
+        }
+        s
+    }
+
+    fn assignments(out: &[Action]) -> Vec<Assignment> {
+        out.iter()
+            .filter_map(|a| match a {
+                Action::Assign(a) => Some(*a),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn scan_cost_proportional_to_cluster_size() {
+        for n in [4u32, 64] {
+            let mut s = sched(n);
+            let g = merge(10);
+            s.graph_submitted(&g);
+            let mut out = Vec::new();
+            s.tasks_ready(&g.roots(), &mut out);
+            let c = s.take_cost();
+            assert_eq!(c.decisions, 10);
+            // 10 placement scans over all workers, plus ≥1 balance scan.
+            assert!(c.workers_scanned >= 10 * n as u64, "dask scans all workers");
+            assert!(c.workers_scanned <= (10 + c.steal_cycles) * n as u64);
+        }
+    }
+
+    #[test]
+    fn occupancy_spreads_independent_tasks() {
+        // With equal (default) duration estimates, EST placement must
+        // spread independent tasks across workers instead of piling up.
+        let mut s = sched(4);
+        let g = merge(16);
+        s.graph_submitted(&g);
+        let mut out = Vec::new();
+        s.tasks_ready(&g.roots(), &mut out);
+        let mut counts = [0usize; 4];
+        for a in assignments(&out) {
+            counts[a.worker.idx()] += 1;
+        }
+        for c in counts {
+            assert_eq!(c, 4, "EST heuristic balances equal tasks: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn duration_estimates_learn_from_observations() {
+        let mut d = DurationEstimator::default();
+        assert_eq!(d.estimate("task-5"), DEFAULT_DURATION_US);
+        d.observe("task-1", 1000);
+        assert!((d.estimate("task-9") - 1000.0).abs() < 1e-9, "prefix sharing");
+        d.observe("task-2", 3000);
+        let e = d.estimate("task-0");
+        assert!(e > 1000.0 && e < 3000.0, "EMA between observations: {e}");
+    }
+
+    #[test]
+    fn transfer_estimate_influences_placement() {
+        // Big output on w0; consumer should go to w0 despite equal occupancy.
+        let mut b = GraphBuilder::new();
+        let a = b.add("a", vec![], 10, 50_000_000, Payload::NoOp);
+        let c = b.add("c", vec![a], 10, 1, Payload::MergeInputs);
+        let g = b.build("g").unwrap();
+        let mut s = sched(4);
+        s.graph_submitted(&g);
+        let mut out = Vec::new();
+        s.tasks_ready(&[a], &mut out);
+        let w = assignments(&out)[0].worker;
+        out.clear();
+        s.task_finished(a, w, 50_000_000, 10, &mut out);
+        out.clear();
+        s.tasks_ready(&[c], &mut out);
+        assert_eq!(assignments(&out)[0].worker, w);
+    }
+
+    #[test]
+    fn steals_to_idle_workers() {
+        // All tasks depend on data at w0, so EST places them all on w0
+        // (transfer dominates); balance must then steal for idle workers.
+        let mut b = GraphBuilder::new();
+        // Output so large that the transfer estimate dwarfs any occupancy:
+        // EST pins every consumer to the data holder, forcing steals.
+        let root = b.add("root", vec![], 10, 10_000_000_000, Payload::NoOp);
+        let mids: Vec<TaskId> = (0..8)
+            .map(|i| b.add(format!("m-{i}"), vec![root], 1_000_000, 10, Payload::BusyWait))
+            .collect();
+        let g = b.build("g").unwrap();
+        let mut s = sched(4);
+        s.graph_submitted(&g);
+        let mut out = Vec::new();
+        s.tasks_ready(&[root], &mut out);
+        let w = assignments(&out)[0].worker;
+        out.clear();
+        s.task_finished(root, w, 100_000_000, 10, &mut out);
+        out.clear();
+        s.tasks_ready(&mids, &mut out);
+        let steals = out.iter().filter(|a| matches!(a, Action::Steal { .. })).count();
+        assert!(steals > 0, "expected steals towards idle workers");
+    }
+
+    #[test]
+    fn failed_steal_keeps_task_exactly_once_and_rebalances() {
+        let mut s = sched(2);
+        let mut b = GraphBuilder::new();
+        let r = b.add("r", vec![], 10, 10_000_000_000, Payload::NoOp);
+        let t1 = b.add("x-1", vec![r], 1000, 1, Payload::BusyWait);
+        let t2 = b.add("x-2", vec![r], 1000, 1, Payload::BusyWait);
+        let g = b.build("g").unwrap();
+        s.graph_submitted(&g);
+        let mut out = Vec::new();
+        s.tasks_ready(&[r], &mut out);
+        let w = assignments(&out)[0].worker;
+        out.clear();
+        s.task_finished(r, w, 10_000_000_000, 10, &mut out);
+        out.clear();
+        s.tasks_ready(&[t1, t2], &mut out);
+        let steal = out.iter().find_map(|a| match a {
+            Action::Steal { task, from, to } => Some((*task, *from, *to)),
+            _ => None,
+        });
+        let (task, from, to) = steal.expect("EST pins both tasks to the holder ⇒ steal");
+        let mut out2 = Vec::new();
+        s.steal_result(task, from, to, false, &mut out2);
+        // §IV-C: a failed retraction puts the task back and "initiates
+        // balancing again if necessary" — the task must live in exactly one
+        // queue afterwards (possibly with a fresh steal in flight).
+        let queued_at: Vec<_> = s
+            .model
+            .workers
+            .iter()
+            .enumerate()
+            .filter(|(_, ws)| ws.queued.contains(&task))
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(queued_at.len(), 1, "task must be queued exactly once: {queued_at:?}");
+        // Any follow-up action must again be a steal, already optimistically
+        // moved to its destination queue in the model.
+        for a in &out2 {
+            match a {
+                Action::Steal { task, to, .. } => {
+                    assert!(s.model.workers[to.idx()].queued.contains(task))
+                }
+                Action::Assign(_) => panic!("failed steal must not re-assign"),
+            }
+        }
+    }
+}

@@ -1,0 +1,206 @@
+//! Scheduler interface and implementations.
+//!
+//! The paper's RSDS separates the server into a *reactor* and an isolated
+//! *scheduler* that "receives a task graph and outputs assignments of tasks
+//! to workers" without touching connections or protocol state (§IV-A).
+//! This module is that boundary: [`Scheduler`] is driven by events and
+//! emits [`Action`]s; the same implementations run unchanged under the real
+//! TCP server ([`crate::server`]) and the discrete-event simulator
+//! ([`crate::sim`]) — which is what makes the paper's scheduler-vs-runtime
+//! comparison controlled.
+//!
+//! Implementations:
+//! - [`RandomScheduler`] — uniform random assignment (§III-E),
+//! - [`WsScheduler`] — RSDS's simplified work-stealing (§IV-C): minimal
+//!   transfer cost, deliberately ignores load, fixes imbalance by stealing,
+//! - [`DaskWsScheduler`] — an emulation of Dask's work-stealing heuristic
+//!   (§III-D): earliest-estimated-start-time over *all* workers using
+//!   occupancy and duration/bandwidth estimates, plus stealing.
+
+mod cluster;
+mod dask_ws;
+mod random;
+mod ws;
+
+pub use cluster::ClusterModel;
+pub use dask_ws::DaskWsScheduler;
+pub use random::RandomScheduler;
+pub use ws::WsScheduler;
+
+use crate::overhead::SchedKind;
+use crate::taskgraph::{TaskGraph, TaskId};
+
+/// Worker identifier assigned by the server at registration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct WorkerId(pub u32);
+
+impl WorkerId {
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl std::fmt::Display for WorkerId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "w{}", self.0)
+    }
+}
+
+/// Static facts about a worker, provided at registration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkerInfo {
+    pub id: WorkerId,
+    /// Cores == max concurrently running tasks (paper runs 1-core workers).
+    pub ncores: u32,
+    /// Physical node index: transfers within a node are cheap (§IV-C:
+    /// "transfer cost is smaller for data transfers between workers
+    /// residing on the same node").
+    pub node: u32,
+}
+
+/// A scheduling decision: run `task` on `worker`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Assignment {
+    pub task: TaskId,
+    pub worker: WorkerId,
+    /// Lower value = execute earlier (graph order, like Dask's priorities).
+    pub priority: i64,
+}
+
+/// What the scheduler asks the reactor to do.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Action {
+    /// Send the task to the worker.
+    Assign(Assignment),
+    /// Try to retract `task` from `from` and move it to `to`. The reactor
+    /// performs the retraction protocol and reports back via
+    /// [`Scheduler::steal_result`] (§IV-C).
+    Steal { task: TaskId, from: WorkerId, to: WorkerId },
+}
+
+/// Work performed by the scheduler since the last [`Scheduler::take_cost`],
+/// in algorithm-level units. The execution backend converts these to CPU
+/// time with a [`crate::overhead::RuntimeProfile`] — this is how the same
+/// scheduling *algorithm* can be priced as a Python or a Rust
+/// *implementation*.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SchedCost {
+    /// Number of per-task placement decisions taken.
+    pub decisions: u64,
+    /// Total workers examined across those decisions.
+    pub workers_scanned: u64,
+    /// Balance/steal scan cycles performed.
+    pub steal_cycles: u64,
+}
+
+impl SchedCost {
+    pub fn add(&mut self, other: SchedCost) {
+        self.decisions += other.decisions;
+        self.workers_scanned += other.workers_scanned;
+        self.steal_cycles += other.steal_cycles;
+    }
+
+    /// Convert to µs of scheduler CPU under `profile`.
+    pub fn to_us(&self, profile: &crate::overhead::RuntimeProfile, kind: SchedKind) -> f64 {
+        let per_decision = match kind {
+            SchedKind::Random => profile.random_decision_us * self.decisions as f64,
+            SchedKind::WorkStealing => {
+                profile.ws_decision_base_us * self.decisions as f64
+                    + profile.ws_decision_per_worker_us * self.workers_scanned as f64
+            }
+        };
+        per_decision + profile.steal_cycle_us * self.steal_cycles as f64
+    }
+}
+
+/// The scheduler ↔ reactor interface (paper Fig 1).
+pub trait Scheduler: Send {
+    fn name(&self) -> &'static str;
+
+    /// Which cost family the profile charges for this scheduler.
+    fn kind(&self) -> SchedKind;
+
+    /// A worker joined the cluster (all workers join before the graph in
+    /// the paper's fixed-cluster experiments, but late joins are allowed).
+    fn add_worker(&mut self, info: WorkerInfo);
+
+    /// A new task graph arrived. The scheduler builds its own copy of the
+    /// state it needs (the paper notes reactor and scheduler each keep
+    /// their own task graph).
+    fn graph_submitted(&mut self, graph: &TaskGraph);
+
+    /// Tasks whose dependencies are all finished; the scheduler must
+    /// eventually assign each exactly once.
+    fn tasks_ready(&mut self, tasks: &[TaskId], out: &mut Vec<Action>);
+
+    /// A task finished on a worker producing `nbytes`; `duration_us` is the
+    /// measured execution time (Dask's heuristic feeds its estimates with
+    /// it; RSDS's deliberately does not use it).
+    fn task_finished(
+        &mut self,
+        task: TaskId,
+        worker: WorkerId,
+        nbytes: u64,
+        duration_us: u64,
+        out: &mut Vec<Action>,
+    );
+
+    /// Outcome of a previously emitted steal: on success the task now runs
+    /// on `to`; on failure it stayed on `from` (already running/finished).
+    fn steal_result(
+        &mut self,
+        task: TaskId,
+        from: WorkerId,
+        to: WorkerId,
+        success: bool,
+        out: &mut Vec<Action>,
+    );
+
+    /// Drain accumulated algorithmic cost counters.
+    fn take_cost(&mut self) -> SchedCost;
+}
+
+/// Construct a scheduler by CLI name.
+pub fn by_name(name: &str, seed: u64) -> Option<Box<dyn Scheduler>> {
+    match name {
+        "random" => Some(Box::new(RandomScheduler::new(seed))),
+        "ws" => Some(Box::new(WsScheduler::new())),
+        "ws-nobalance" => Some(Box::new(WsScheduler::without_balancing())),
+        "dask-ws" | "dask_ws" => Some(Box::new(DaskWsScheduler::new())),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::overhead::RuntimeProfile;
+
+    #[test]
+    fn cost_conversion() {
+        let c = SchedCost { decisions: 10, workers_scanned: 240, steal_cycles: 2 };
+        let p = RuntimeProfile::rust();
+        let ws_us = c.to_us(&p, SchedKind::WorkStealing);
+        let want_ws = 10.0 * p.ws_decision_base_us
+            + 240.0 * p.ws_decision_per_worker_us
+            + 2.0 * p.steal_cycle_us;
+        assert!((ws_us - want_ws).abs() < 1e-9);
+        let rand_us = c.to_us(&p, SchedKind::Random);
+        let want_rand = 10.0 * p.random_decision_us + 2.0 * p.steal_cycle_us;
+        assert!((rand_us - want_rand).abs() < 1e-9);
+    }
+
+    #[test]
+    fn by_name_constructs_all() {
+        for (n, kind) in [
+            ("random", SchedKind::Random),
+            ("ws", SchedKind::WorkStealing),
+            ("dask-ws", SchedKind::WorkStealing),
+        ] {
+            let s = by_name(n, 1).unwrap();
+            assert_eq!(s.kind(), kind);
+        }
+        assert!(by_name("fifo", 1).is_none());
+    }
+}

@@ -1,0 +1,155 @@
+//! The random scheduler (§III-E): "eagerly assigns each task to a random
+//! worker using a uniform random distribution", maintains no task-graph
+//! state, never steals. Mirrors both the Dask-side and RSDS-side random
+//! scheduler of the paper; its per-task cost is constant in the worker
+//! count — which is exactly why it ages well on large clusters (§VI-A).
+
+use super::{Action, Assignment, SchedCost, Scheduler, WorkerId, WorkerInfo};
+use crate::overhead::SchedKind;
+use crate::taskgraph::{TaskGraph, TaskId};
+use crate::util::Rng;
+
+pub struct RandomScheduler {
+    rng: Rng,
+    workers: Vec<WorkerId>,
+    cost: SchedCost,
+}
+
+impl RandomScheduler {
+    pub fn new(seed: u64) -> Self {
+        RandomScheduler { rng: Rng::new(seed), workers: Vec::new(), cost: SchedCost::default() }
+    }
+}
+
+impl Scheduler for RandomScheduler {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn kind(&self) -> SchedKind {
+        SchedKind::Random
+    }
+
+    fn add_worker(&mut self, info: WorkerInfo) {
+        self.workers.push(info.id);
+    }
+
+    fn graph_submitted(&mut self, _graph: &TaskGraph) {
+        // Deliberately stateless (§IV-C: "does not maintain any task graph
+        // state").
+    }
+
+    fn tasks_ready(&mut self, tasks: &[TaskId], out: &mut Vec<Action>) {
+        assert!(!self.workers.is_empty(), "no workers registered");
+        for &t in tasks {
+            let w = *self.rng.choose(&self.workers);
+            self.cost.decisions += 1;
+            out.push(Action::Assign(Assignment { task: t, worker: w, priority: t.0 as i64 }));
+        }
+    }
+
+    fn task_finished(
+        &mut self,
+        _task: TaskId,
+        _worker: WorkerId,
+        _nbytes: u64,
+        _duration_us: u64,
+        _out: &mut Vec<Action>,
+    ) {
+    }
+
+    fn steal_result(
+        &mut self,
+        _task: TaskId,
+        _from: WorkerId,
+        _to: WorkerId,
+        _success: bool,
+        _out: &mut Vec<Action>,
+    ) {
+        unreachable!("random scheduler never emits steals");
+    }
+
+    fn take_cost(&mut self) -> SchedCost {
+        std::mem::take(&mut self.cost)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graphgen::merge;
+
+    fn workers(s: &mut RandomScheduler, n: u32) {
+        for i in 0..n {
+            s.add_worker(WorkerInfo { id: WorkerId(i), ncores: 1, node: i / 24 });
+        }
+    }
+
+    #[test]
+    fn assigns_every_task_exactly_once() {
+        let mut s = RandomScheduler::new(42);
+        workers(&mut s, 8);
+        let g = merge(500);
+        s.graph_submitted(&g);
+        let ready: Vec<TaskId> = g.roots();
+        let mut out = Vec::new();
+        s.tasks_ready(&ready, &mut out);
+        assert_eq!(out.len(), 500);
+        let mut seen = std::collections::HashSet::new();
+        for a in &out {
+            match a {
+                Action::Assign(a) => assert!(seen.insert(a.task)),
+                _ => panic!("random never steals"),
+            }
+        }
+    }
+
+    #[test]
+    fn roughly_uniform() {
+        let mut s = RandomScheduler::new(7);
+        workers(&mut s, 4);
+        let g = merge(4000);
+        s.graph_submitted(&g);
+        let mut out = Vec::new();
+        s.tasks_ready(&g.roots(), &mut out);
+        let mut counts = [0usize; 4];
+        for a in &out {
+            if let Action::Assign(a) = a {
+                counts[a.worker.idx()] += 1;
+            }
+        }
+        for c in counts {
+            assert!((800..=1200).contains(&c), "bucket {c}");
+        }
+    }
+
+    #[test]
+    fn cost_is_one_decision_per_task_no_scans() {
+        let mut s = RandomScheduler::new(1);
+        workers(&mut s, 100);
+        let g = merge(50);
+        s.graph_submitted(&g);
+        let mut out = Vec::new();
+        s.tasks_ready(&g.roots(), &mut out);
+        let c = s.take_cost();
+        assert_eq!(c.decisions, 50);
+        assert_eq!(c.workers_scanned, 0);
+        assert_eq!(c.steal_cycles, 0);
+        assert_eq!(s.take_cost(), SchedCost::default());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = |seed| {
+            let mut s = RandomScheduler::new(seed);
+            workers(&mut s, 8);
+            let g = merge(100);
+            s.graph_submitted(&g);
+            let mut out = Vec::new();
+            s.tasks_ready(&g.roots(), &mut out);
+            out
+        };
+        assert_eq!(run(5), run(5));
+        assert_ne!(run(5), run(6));
+    }
+}

@@ -1,0 +1,22 @@
+//! The RSDS central server (paper §IV).
+//!
+//! Split exactly as the paper's Figure 1: a [`Reactor`] that owns
+//! connections, bookkeeping and protocol translation, and an isolated
+//! [`crate::scheduler::Scheduler`] that only maps ready tasks to workers.
+//! The reactor is a *pure state machine* (`on_message` in, `(Dest, Msg)`
+//! out) so the integration tests and the simulator can drive it without
+//! sockets; [`net::TcpServer`] wires it to real TCP for the distributed
+//! runtime.
+//!
+//! Overhead emulation: constructed with the `python` profile and
+//! `emulate = true`, the reactor busy-waits the calibrated CPython costs on
+//! its own hot path — turning this binary into the paper's Dask-server
+//! baseline on real sockets (DESIGN.md §5).
+
+mod net;
+mod reactor;
+mod state;
+
+pub use net::{serve, ServerConfig, ServerHandle};
+pub use reactor::{Dest, Origin, Reactor, ReactorReport};
+pub use state::{GraphRun, TaskState};

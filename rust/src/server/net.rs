@@ -1,0 +1,247 @@
+//! TCP transport for the reactor: listener, per-connection reader threads,
+//! per-connection writer threads, and the single reactor thread they feed.
+//!
+//! Threading model (the offline-environment stand-in for the paper's tokio
+//! event loop): readers decode frames into [`Msg`] and push them over one
+//! mpsc channel; the reactor thread — the only place touching scheduler and
+//! bookkeeping state — processes them in arrival order and hands outbound
+//! messages to per-connection writer queues so a slow peer can never block
+//! the reactor.
+
+use super::reactor::{Dest, Origin, Reactor, ReactorReport};
+use crate::overhead::RuntimeProfile;
+use crate::protocol::{decode_msg, encode_msg, read_frame, write_frame, FrameError, Msg};
+use crate::scheduler::{self, WorkerId};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Listen address; use port 0 for ephemeral.
+    pub addr: String,
+    /// Scheduler name: `random` | `ws` | `dask-ws`.
+    pub scheduler: String,
+    /// Seed for the random scheduler.
+    pub seed: u64,
+    /// Runtime profile to charge on the hot path.
+    pub profile: RuntimeProfile,
+    /// Busy-wait the profile costs (Dask-emulation baseline).
+    pub emulate: bool,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            scheduler: "ws".into(),
+            seed: 2020,
+            profile: RuntimeProfile::rust(),
+            emulate: false,
+        }
+    }
+}
+
+enum NetEvent {
+    Inbound { conn: u64, msg: Msg },
+    Disconnected { conn: u64 },
+    Stop,
+}
+
+/// Running server: address, per-graph reports, shutdown control.
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    reports: Arc<Mutex<Vec<ReactorReport>>>,
+    stop: Arc<AtomicBool>,
+    event_tx: Sender<NetEvent>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Reports of all graphs completed so far.
+    pub fn reports(&self) -> Vec<ReactorReport> {
+        self.reports.lock().unwrap().clone()
+    }
+
+    /// Stop the server and join its threads.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = self.event_tx.send(NetEvent::Stop);
+        // Unblock the accept loop.
+        let _ = TcpStream::connect(self.addr);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Start the server; returns once the listener is bound.
+pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
+    let scheduler = scheduler::by_name(&config.scheduler, config.seed)
+        .ok_or_else(|| anyhow!("unknown scheduler {:?}", config.scheduler))?;
+    let reactor = Reactor::new(scheduler, config.profile.clone(), config.emulate);
+
+    let listener = TcpListener::bind(&config.addr)
+        .with_context(|| format!("bind {}", config.addr))?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let reports = Arc::new(Mutex::new(Vec::new()));
+    let (event_tx, event_rx) = channel::<NetEvent>();
+
+    // Writer registry: conn id -> outbound byte queue.
+    let writers: Arc<Mutex<HashMap<u64, Sender<Vec<u8>>>>> = Arc::new(Mutex::new(HashMap::new()));
+
+    let mut threads = Vec::new();
+
+    // Accept loop.
+    {
+        let stop = stop.clone();
+        let event_tx = event_tx.clone();
+        let writers = writers.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut next_conn: u64 = 0;
+            for stream in listener.incoming() {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                let conn = next_conn;
+                next_conn += 1;
+                stream.set_nodelay(true).ok();
+                // Writer thread.
+                let (wtx, wrx) = channel::<Vec<u8>>();
+                writers.lock().unwrap().insert(conn, wtx);
+                let mut wstream = stream.try_clone().expect("clone stream");
+                std::thread::spawn(move || {
+                    for bytes in wrx {
+                        if write_frame(&mut wstream, &bytes).is_err() {
+                            break;
+                        }
+                    }
+                    let _ = wstream.shutdown(std::net::Shutdown::Both);
+                });
+                // Reader thread.
+                let event_tx = event_tx.clone();
+                let mut rstream = stream;
+                std::thread::spawn(move || {
+                    loop {
+                        match read_frame(&mut rstream) {
+                            Ok(bytes) => match decode_msg(&bytes) {
+                                Ok(msg) => {
+                                    if event_tx.send(NetEvent::Inbound { conn, msg }).is_err() {
+                                        break;
+                                    }
+                                }
+                                Err(e) => {
+                                    log::warn!("conn {conn}: bad message: {e}; closing");
+                                    break;
+                                }
+                            },
+                            Err(FrameError::Closed) => break,
+                            Err(e) => {
+                                log::warn!("conn {conn}: frame error: {e}");
+                                break;
+                            }
+                        }
+                    }
+                    let _ = event_tx.send(NetEvent::Disconnected { conn });
+                });
+            }
+        }));
+    }
+
+    // Reactor thread.
+    {
+        let reports = reports.clone();
+        let writers = writers.clone();
+        threads.push(std::thread::spawn(move || {
+            reactor_loop(reactor, event_rx, writers, reports);
+        }));
+    }
+
+    Ok(ServerHandle { addr, reports, stop, event_tx, threads })
+}
+
+fn reactor_loop(
+    mut reactor: Reactor,
+    event_rx: Receiver<NetEvent>,
+    writers: Arc<Mutex<HashMap<u64, Sender<Vec<u8>>>>>,
+    reports: Arc<Mutex<Vec<ReactorReport>>>,
+) {
+    // conn <-> identity maps, maintained from registration replies.
+    let mut origin_of: HashMap<u64, Origin> = HashMap::new();
+    let mut conn_of: HashMap<Dest, u64> = HashMap::new();
+    let mut out: Vec<(Dest, Msg)> = Vec::new();
+    let mut reported = 0usize;
+
+    for event in event_rx {
+        match event {
+            NetEvent::Stop => break,
+            NetEvent::Disconnected { conn } => {
+                writers.lock().unwrap().remove(&conn);
+                if let Some(origin) = origin_of.remove(&conn) {
+                    if let Origin::Worker(w) = origin {
+                        conn_of.remove(&Dest::Worker(w));
+                    }
+                    if let Origin::Client(c) = origin {
+                        conn_of.remove(&Dest::Client(c));
+                    }
+                    reactor.on_disconnect(origin, &mut out);
+                }
+            }
+            NetEvent::Inbound { conn, msg } => {
+                let origin = origin_of
+                    .get(&conn)
+                    .copied()
+                    .unwrap_or(Origin::Unregistered { conn });
+                let registering_client = matches!(
+                    (&origin, &msg),
+                    (Origin::Unregistered { .. }, Msg::RegisterClient { .. })
+                );
+                let registering_worker = matches!(
+                    (&origin, &msg),
+                    (Origin::Unregistered { .. }, Msg::RegisterWorker { .. })
+                );
+                reactor.on_message(origin, msg, &mut out);
+                // Bind freshly assigned ids to this connection: the Welcome
+                // the reactor just emitted names the id.
+                if registering_client || registering_worker {
+                    if let Some((dest, Msg::Welcome { id })) =
+                        out.iter().rev().find(|(_, m)| matches!(m, Msg::Welcome { .. }))
+                    {
+                        let origin = if registering_client {
+                            Origin::Client(*id)
+                        } else {
+                            Origin::Worker(WorkerId(*id))
+                        };
+                        origin_of.insert(conn, origin);
+                        conn_of.insert(*dest, conn);
+                    }
+                }
+            }
+        }
+        // Flush outbound.
+        for (dest, msg) in out.drain(..) {
+            let Some(&conn) = conn_of.get(&dest) else {
+                log::warn!("no connection for {dest:?}; dropping {op}", op = msg.op());
+                continue;
+            };
+            let bytes = encode_msg(&msg);
+            if let Some(tx) = writers.lock().unwrap().get(&conn) {
+                let _ = tx.send(bytes);
+            }
+        }
+        // Publish new reports.
+        let all = reactor.reports();
+        if all.len() > reported {
+            let mut shared = reports.lock().unwrap();
+            shared.extend_from_slice(&all[reported..]);
+            reported = all.len();
+        }
+    }
+}

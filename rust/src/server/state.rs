@@ -1,0 +1,177 @@
+//! Server-side bookkeeping: the task state machine and per-graph run state.
+
+use crate::scheduler::WorkerId;
+use crate::taskgraph::{TaskGraph, TaskId};
+
+/// Server-side lifecycle of a task (reactor's view).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TaskState {
+    /// Unfinished dependencies remain.
+    Waiting,
+    /// Handed to the scheduler, no assignment yet sent.
+    Ready,
+    /// Compute message sent to this worker.
+    Assigned(WorkerId),
+    /// Retraction in flight: assigned to `from`, destined for `to`.
+    Stealing { from: WorkerId, to: WorkerId },
+    /// Finished on this worker (first finisher; replicas tracked in
+    /// `who_has`).
+    Finished(WorkerId),
+    /// Worker reported an error.
+    Erred,
+}
+
+/// Execution state of one submitted graph.
+#[derive(Debug)]
+pub struct GraphRun {
+    pub graph: TaskGraph,
+    pub client: u32,
+    pub states: Vec<TaskState>,
+    /// Remaining unfinished dependency count per task.
+    pub unfinished_deps: Vec<u32>,
+    /// Tasks not yet finished.
+    pub remaining: usize,
+    /// Wall-clock µs timestamp (from the reactor's stopwatch) at submit.
+    pub submitted_at_us: u64,
+    /// Workers holding each task's output (first = producer).
+    pub who_has: Vec<Vec<WorkerId>>,
+}
+
+impl GraphRun {
+    pub fn new(graph: TaskGraph, client: u32, now_us: u64) -> GraphRun {
+        let n = graph.len();
+        let unfinished_deps: Vec<u32> = graph.tasks().iter().map(|t| t.inputs.len() as u32).collect();
+        let states = unfinished_deps
+            .iter()
+            .map(|&d| if d == 0 { TaskState::Ready } else { TaskState::Waiting })
+            .collect();
+        GraphRun {
+            graph,
+            client,
+            states,
+            unfinished_deps,
+            remaining: n,
+            submitted_at_us: now_us,
+            who_has: vec![Vec::new(); n],
+        }
+    }
+
+    /// Initially ready tasks (the graph roots).
+    pub fn ready_roots(&self) -> Vec<TaskId> {
+        self.graph.roots()
+    }
+
+    /// Mark `task` finished on `worker`; returns consumers that became
+    /// ready. Idempotent against duplicate finish reports (a steal race can
+    /// produce one) — the second report is ignored.
+    pub fn finish(&mut self, task: TaskId, worker: WorkerId) -> Vec<TaskId> {
+        if matches!(self.states[task.idx()], TaskState::Finished(_)) {
+            self.who_has[task.idx()].push(worker);
+            return Vec::new();
+        }
+        self.states[task.idx()] = TaskState::Finished(worker);
+        self.who_has[task.idx()].push(worker);
+        self.remaining -= 1;
+        let mut newly_ready = Vec::new();
+        for &c in self.graph.consumers(task) {
+            let d = &mut self.unfinished_deps[c.idx()];
+            debug_assert!(*d > 0);
+            *d -= 1;
+            if *d == 0 {
+                debug_assert_eq!(self.states[c.idx()], TaskState::Waiting);
+                self.states[c.idx()] = TaskState::Ready;
+                newly_ready.push(c);
+            }
+        }
+        newly_ready
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.remaining == 0
+    }
+
+    /// Worker currently responsible for a task, if any.
+    pub fn assigned_worker(&self, task: TaskId) -> Option<WorkerId> {
+        match self.states[task.idx()] {
+            TaskState::Assigned(w) => Some(w),
+            TaskState::Stealing { from, .. } => Some(from),
+            _ => None,
+        }
+    }
+
+    /// All tasks currently assigned to `worker` (used on disconnect).
+    pub fn tasks_on(&self, worker: WorkerId) -> Vec<TaskId> {
+        self.states
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| match s {
+                TaskState::Assigned(w) if *w == worker => Some(TaskId(i as u32)),
+                TaskState::Stealing { from, .. } if *from == worker => Some(TaskId(i as u32)),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graphgen::{merge, tree};
+
+    #[test]
+    fn roots_ready_on_creation() {
+        let run = GraphRun::new(merge(10), 0, 0);
+        assert_eq!(run.remaining, 11);
+        assert_eq!(run.ready_roots().len(), 10);
+        assert_eq!(run.states[10], TaskState::Waiting, "sink waits for deps");
+    }
+
+    #[test]
+    fn finish_cascades_readiness() {
+        let mut run = GraphRun::new(merge(3), 0, 0);
+        let w = WorkerId(0);
+        assert!(run.finish(TaskId(0), w).is_empty());
+        assert!(run.finish(TaskId(1), w).is_empty());
+        let ready = run.finish(TaskId(2), w);
+        assert_eq!(ready, vec![TaskId(3)], "sink ready after all leaves");
+        assert!(!run.is_done());
+        assert!(run.finish(TaskId(3), w).is_empty());
+        assert!(run.is_done());
+    }
+
+    #[test]
+    fn duplicate_finish_is_idempotent() {
+        let mut run = GraphRun::new(merge(2), 0, 0);
+        run.finish(TaskId(0), WorkerId(0));
+        let before = run.remaining;
+        let ready = run.finish(TaskId(0), WorkerId(1));
+        assert!(ready.is_empty());
+        assert_eq!(run.remaining, before);
+        assert_eq!(run.who_has[0], vec![WorkerId(0), WorkerId(1)]);
+    }
+
+    #[test]
+    fn tree_readiness_layers() {
+        let g = tree(3); // 7 tasks: 4 leaves, 2 mid, 1 root
+        let mut run = GraphRun::new(g, 0, 0);
+        let w = WorkerId(0);
+        let mut ready: Vec<TaskId> = run.ready_roots();
+        let mut finished = 0;
+        while let Some(t) = ready.pop() {
+            ready.extend(run.finish(t, w));
+            finished += 1;
+        }
+        assert_eq!(finished, 7);
+        assert!(run.is_done());
+    }
+
+    #[test]
+    fn tasks_on_worker_tracks_assignment_and_stealing() {
+        let mut run = GraphRun::new(merge(4), 0, 0);
+        run.states[0] = TaskState::Assigned(WorkerId(1));
+        run.states[1] = TaskState::Stealing { from: WorkerId(1), to: WorkerId(2) };
+        run.states[2] = TaskState::Assigned(WorkerId(2));
+        let on1 = run.tasks_on(WorkerId(1));
+        assert_eq!(on1, vec![TaskId(0), TaskId(1)]);
+    }
+}

@@ -1,0 +1,496 @@
+//! The discrete-event engine.
+
+use super::network::{NetworkModel, NicState};
+use crate::overhead::RuntimeProfile;
+use crate::scheduler::{self, Action, SchedCost, Scheduler, WorkerId, WorkerInfo};
+use crate::taskgraph::{TaskGraph, TaskId};
+use std::cmp::Reverse;
+use std::collections::{BTreeSet, BinaryHeap, HashMap, HashSet};
+
+/// Simulation configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub n_workers: usize,
+    /// Workers per physical node (paper: 24).
+    pub workers_per_node: usize,
+    pub profile: RuntimeProfile,
+    /// Scheduler name (`random` | `ws` | `dask-ws`).
+    pub scheduler: String,
+    pub seed: u64,
+    pub network: NetworkModel,
+    /// Use the paper's zero worker (§IV-D) instead of the worker model.
+    pub zero_worker: bool,
+    /// Abort the run after this much virtual time (paper: 300 s).
+    pub timeout_us: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            n_workers: 24,
+            workers_per_node: 24,
+            profile: RuntimeProfile::rust(),
+            scheduler: "ws".into(),
+            seed: 2020,
+            network: NetworkModel::default(),
+            zero_worker: false,
+            timeout_us: 300e6,
+        }
+    }
+}
+
+impl SimConfig {
+    /// Paper-style constructor: `nodes` × 24 workers.
+    pub fn nodes(nodes: usize, profile: RuntimeProfile, scheduler: &str) -> SimConfig {
+        SimConfig {
+            n_workers: nodes * 24,
+            workers_per_node: 24,
+            profile,
+            scheduler: scheduler.into(),
+            ..SimConfig::default()
+        }
+    }
+}
+
+/// Simulation outcome.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub makespan_us: f64,
+    /// Makespan / #tasks — the paper's AOT (§VI-D).
+    pub aot_us: f64,
+    pub n_tasks: u64,
+    pub msgs: u64,
+    pub steals_attempted: u64,
+    pub steals_failed: u64,
+    pub bytes_transferred: u64,
+    pub sched_cost: SchedCost,
+    pub timed_out: bool,
+}
+
+/// Time-ordered event key: (time, seq) with deterministic tie-breaking.
+#[derive(Debug, PartialEq)]
+struct Key(f64, u64);
+impl Eq for Key {}
+impl PartialOrd for Key {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Key {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0).then(self.1.cmp(&other.1))
+    }
+}
+
+#[derive(Debug)]
+enum Event {
+    /// Assignment (or steal reassignment) reaches a worker.
+    TaskArrive { worker: WorkerId, task: TaskId, priority: i64 },
+    /// Worker core may start its next task.
+    WorkerWake { worker: WorkerId },
+    /// A task finished executing on a worker (local event).
+    TaskDone { worker: WorkerId, task: TaskId },
+    /// Steal request reaches a worker.
+    StealArrive { worker: WorkerId, task: TaskId },
+    /// Status/steal-response arrives at the server.
+    ServerRecv { msg: ServerMsg },
+}
+
+#[derive(Debug)]
+enum ServerMsg {
+    Finished { worker: WorkerId, task: TaskId, duration_us: u64 },
+    StealResponse { worker: WorkerId, task: TaskId, ok: bool },
+}
+
+struct SimWorker {
+    node: usize,
+    /// Queued (not started) tasks, ordered by (priority, id).
+    pending: BTreeSet<(i64, TaskId)>,
+    pending_set: HashSet<TaskId>,
+    core_free_at: f64,
+    core_busy: bool,
+    /// Outputs present on this worker.
+    has: HashSet<TaskId>,
+}
+
+struct Engine<'g> {
+    graph: &'g TaskGraph,
+    cfg: SimConfig,
+    scheduler: Box<dyn Scheduler>,
+    events: BinaryHeap<Reverse<(Key, usize)>>,
+    payloads: Vec<Event>,
+    seq: u64,
+    now: f64,
+    workers: Vec<SimWorker>,
+    nics: Vec<NicState>,
+    /// Server (reactor) resource.
+    reactor_free_at: f64,
+    /// Scheduler resource (only used when !profile.gil).
+    sched_free_at: f64,
+    /// Producer of each finished task.
+    produced_by: HashMap<TaskId, WorkerId>,
+    unfinished_deps: Vec<u32>,
+    finished: Vec<bool>,
+    remaining: usize,
+    /// Steal targets in flight: task -> (from, to).
+    steals: HashMap<TaskId, (WorkerId, WorkerId)>,
+    // metrics
+    msgs: u64,
+    steals_attempted: u64,
+    steals_failed: u64,
+    bytes_transferred: u64,
+    total_cost: SchedCost,
+    last_finish_us: f64,
+    actions: Vec<Action>,
+}
+
+impl<'g> Engine<'g> {
+    fn new(graph: &'g TaskGraph, cfg: SimConfig) -> Engine<'g> {
+        let mut scheduler =
+            scheduler::by_name(&cfg.scheduler, cfg.seed).expect("unknown scheduler");
+        let workers: Vec<SimWorker> = (0..cfg.n_workers)
+            .map(|i| SimWorker {
+                node: i / cfg.workers_per_node,
+                pending: BTreeSet::new(),
+                pending_set: HashSet::new(),
+                core_free_at: 0.0,
+                core_busy: false,
+                has: HashSet::new(),
+            })
+            .collect();
+        let n_nodes = cfg.n_workers.div_ceil(cfg.workers_per_node).max(1);
+        for (i, w) in workers.iter().enumerate() {
+            scheduler.add_worker(WorkerInfo {
+                id: WorkerId(i as u32),
+                ncores: 1,
+                node: w.node as u32,
+            });
+        }
+        scheduler.graph_submitted(graph);
+        Engine {
+            graph,
+            cfg,
+            scheduler,
+            events: BinaryHeap::new(),
+            payloads: Vec::new(),
+            seq: 0,
+            now: 0.0,
+            workers,
+            nics: vec![NicState::default(); n_nodes],
+            reactor_free_at: 0.0,
+            sched_free_at: 0.0,
+            produced_by: HashMap::new(),
+            unfinished_deps: graph.tasks().iter().map(|t| t.inputs.len() as u32).collect(),
+            finished: vec![false; graph.len()],
+            remaining: graph.len(),
+            steals: HashMap::new(),
+            msgs: 0,
+            steals_attempted: 0,
+            steals_failed: 0,
+            bytes_transferred: 0,
+            total_cost: SchedCost::default(),
+            last_finish_us: 0.0,
+            actions: Vec::new(),
+        }
+    }
+
+    fn push(&mut self, at: f64, ev: Event) {
+        let idx = self.payloads.len();
+        self.payloads.push(ev);
+        self.events.push(Reverse((Key(at, self.seq), idx)));
+        self.seq += 1;
+    }
+
+    /// Charge reactor CPU; returns completion time of the work.
+    fn reactor_work(&mut self, arrival: f64, us: f64) -> f64 {
+        let start = self.reactor_free_at.max(arrival);
+        self.reactor_free_at = start + us;
+        self.reactor_free_at
+    }
+
+    /// Charge scheduler CPU starting no earlier than `ready`; under GIL the
+    /// scheduler shares the reactor resource (§IV-A).
+    fn sched_work(&mut self, ready: f64) -> f64 {
+        let cost = self.scheduler.take_cost();
+        self.total_cost.add(cost);
+        let us = cost.to_us(&self.cfg.profile, self.scheduler.kind());
+        if self.cfg.profile.gil {
+            self.reactor_work(ready, us)
+        } else {
+            let start = self.sched_free_at.max(ready);
+            self.sched_free_at = start + us;
+            self.sched_free_at
+        }
+    }
+
+    /// Emit the scheduler's pending actions; `ready` = when scheduling done.
+    fn dispatch_actions(&mut self, ready: f64) {
+        let actions = std::mem::take(&mut self.actions);
+        let mut t = ready;
+        for action in actions {
+            match action {
+                Action::Assign(a) => {
+                    // Encode + send one assignment message.
+                    t = self.reactor_work(t, self.cfg.profile.msg_cost_us(192)
+                        + self.cfg.profile.task_transition_us);
+                    self.msgs += 1;
+                    self.push(
+                        t + self.cfg.network.control_msg_us(),
+                        Event::TaskArrive { worker: a.worker, task: a.task, priority: a.priority },
+                    );
+                }
+                Action::Steal { task, from, to } => {
+                    if self.finished[task.idx()] || self.steals.contains_key(&task) {
+                        // Stale; report failure so the model re-syncs.
+                        self.scheduler.steal_result(task, from, to, false, &mut self.actions);
+                        continue;
+                    }
+                    self.steals.insert(task, (from, to));
+                    self.steals_attempted += 1;
+                    t = self.reactor_work(t, self.cfg.profile.msg_cost_us(64));
+                    self.msgs += 1;
+                    self.push(
+                        t + self.cfg.network.control_msg_us(),
+                        Event::StealArrive { worker: from, task },
+                    );
+                }
+            }
+        }
+        if !self.actions.is_empty() {
+            let done = self.sched_work(t);
+            self.dispatch_actions(done);
+        }
+    }
+
+    /// Start the next pending task on a worker if its core is free.
+    fn maybe_start(&mut self, wid: WorkerId) {
+        let now = self.now;
+        let w = &mut self.workers[wid.idx()];
+        if w.core_busy || w.pending.is_empty() {
+            return;
+        }
+        let &(prio, task) = w.pending.iter().next().expect("nonempty");
+        w.pending.remove(&(prio, task));
+        w.pending_set.remove(&task);
+        w.core_busy = true;
+        let fetch_start = w.core_free_at.max(now);
+
+        // Fetch missing inputs (parallel fetches; NIC serialization on the
+        // sender side; same-node fast path). `graph` is an independent
+        // shared borrow, so no clone of the input list is needed (this
+        // clone was the sim hot path's top allocation — EXPERIMENTS.md §Perf).
+        let my_node = w.node;
+        let mut fetch_done = fetch_start;
+        let graph = self.graph;
+        let spec = graph.task(task);
+        for &input in &spec.inputs {
+            let has = self.workers[wid.idx()].has.contains(&input);
+            if has {
+                continue;
+            }
+            let holder = *self.produced_by.get(&input).expect("input must be finished");
+            let bytes = self.graph.task(input).output_size;
+            self.bytes_transferred += bytes;
+            let holder_node = self.workers[holder.idx()].node;
+            let arrive = if holder_node == my_node {
+                fetch_start + self.cfg.network.same_node_us(bytes)
+            } else {
+                let wire_done =
+                    self.nics[holder_node].transmit(fetch_start, bytes, self.cfg.network.net_bw);
+                wire_done + self.cfg.network.latency_us
+            };
+            self.workers[wid.idx()].has.insert(input);
+            fetch_done = fetch_done.max(arrive);
+        }
+
+        let exec_done = fetch_done
+            + self.cfg.profile.worker_task_overhead_us
+            + spec.duration_us as f64;
+        self.workers[wid.idx()].core_free_at = exec_done;
+        self.push(exec_done, Event::TaskDone { worker: wid, task });
+    }
+
+    fn handle(&mut self, ev: Event) {
+        match ev {
+            Event::TaskArrive { worker, task, priority } => {
+                if self.cfg.zero_worker {
+                    // §IV-D: instantly finished, no data plane.
+                    self.push(
+                        self.now + self.cfg.network.control_msg_us(),
+                        Event::ServerRecv {
+                            msg: ServerMsg::Finished { worker, task, duration_us: 0 },
+                        },
+                    );
+                    return;
+                }
+                let w = &mut self.workers[worker.idx()];
+                w.pending.insert((priority, task));
+                w.pending_set.insert(task);
+                self.maybe_start(worker);
+            }
+            Event::WorkerWake { worker } => {
+                self.maybe_start(worker);
+            }
+            Event::TaskDone { worker, task } => {
+                let w = &mut self.workers[worker.idx()];
+                w.core_busy = false;
+                w.has.insert(task);
+                self.push(self.now, Event::WorkerWake { worker });
+                let spec_dur = self.graph.task(task).duration_us;
+                self.push(
+                    self.now + self.cfg.network.control_msg_us(),
+                    Event::ServerRecv {
+                        msg: ServerMsg::Finished { worker, task, duration_us: spec_dur },
+                    },
+                );
+            }
+            Event::StealArrive { worker, task } => {
+                // Retraction succeeds iff the task has not started (§IV-C).
+                let w = &mut self.workers[worker.idx()];
+                let ok = if w.pending_set.remove(&task) {
+                    let prio = self
+                        .graph
+                        .task(task)
+                        .id
+                        .0 as i64;
+                    // Find exact entry (priority == id in our schedulers).
+                    w.pending.remove(&(prio, task));
+                    true
+                } else {
+                    false
+                };
+                self.push(
+                    self.now + self.cfg.network.control_msg_us(),
+                    Event::ServerRecv { msg: ServerMsg::StealResponse { worker, task, ok } },
+                );
+            }
+            Event::ServerRecv { msg } => {
+                self.msgs += 1;
+                let arrived = self.now;
+                match msg {
+                    ServerMsg::Finished { worker, task, duration_us } => {
+                        if self.finished[task.idx()] {
+                            return;
+                        }
+                        self.finished[task.idx()] = true;
+                        self.remaining -= 1;
+                        self.produced_by.insert(task, worker);
+                        self.steals.remove(&task);
+                        let decode_done = self.reactor_work(
+                            arrived,
+                            self.cfg.profile.msg_cost_us(128) + self.cfg.profile.task_transition_us,
+                        );
+                        self.last_finish_us = decode_done;
+                        // Readiness bookkeeping.
+                        let mut newly_ready = Vec::new();
+                        for &c in self.graph.consumers(task) {
+                            let d = &mut self.unfinished_deps[c.idx()];
+                            *d -= 1;
+                            if *d == 0 {
+                                newly_ready.push(c);
+                            }
+                        }
+                        self.scheduler.task_finished(
+                            task,
+                            worker,
+                            self.graph.task(task).output_size,
+                            duration_us,
+                            &mut self.actions,
+                        );
+                        if !newly_ready.is_empty() {
+                            let t = self.reactor_work(
+                                decode_done,
+                                self.cfg.profile.task_transition_us * newly_ready.len() as f64,
+                            );
+                            self.scheduler.tasks_ready(&newly_ready, &mut self.actions);
+                            let done = self.sched_work(t);
+                            self.dispatch_actions(done);
+                        } else {
+                            let done = self.sched_work(decode_done);
+                            self.dispatch_actions(done);
+                        }
+                    }
+                    ServerMsg::StealResponse { worker, task, ok } => {
+                        let decode_done =
+                            self.reactor_work(arrived, self.cfg.profile.msg_cost_us(64));
+                        let Some((from, to)) = self.steals.remove(&task) else {
+                            return; // finished first; already handled
+                        };
+                        debug_assert_eq!(from, worker);
+                        if ok {
+                            self.scheduler.steal_result(task, from, to, true, &mut self.actions);
+                            let done = self.sched_work(decode_done);
+                            // Reassign to the steal target.
+                            let t = self.reactor_work(
+                                done,
+                                self.cfg.profile.msg_cost_us(192)
+                                    + self.cfg.profile.task_transition_us,
+                            );
+                            self.msgs += 1;
+                            self.push(
+                                t + self.cfg.network.control_msg_us(),
+                                Event::TaskArrive { worker: to, task, priority: task.0 as i64 },
+                            );
+                            self.dispatch_actions(t);
+                        } else {
+                            self.steals_failed += 1;
+                            self.scheduler.steal_result(task, from, to, false, &mut self.actions);
+                            let done = self.sched_work(decode_done);
+                            self.dispatch_actions(done);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn run(mut self) -> SimResult {
+        // Submission: the server ingests the graph and schedules the roots.
+        let ingest = self.cfg.profile.task_transition_us * 0.2 * self.graph.len() as f64;
+        let t = self.reactor_work(0.0, ingest);
+        let roots = self.graph.roots();
+        self.scheduler.tasks_ready(&roots, &mut self.actions);
+        let done = self.sched_work(t);
+        self.dispatch_actions(done);
+
+        let mut timed_out = false;
+        while let Some(Reverse((Key(at, _), idx))) = self.events.pop() {
+            self.now = at;
+            if self.remaining == 0 {
+                break;
+            }
+            if at > self.cfg.timeout_us {
+                timed_out = true;
+                break;
+            }
+            // Take the event out without shifting the arena.
+            let ev = std::mem::replace(
+                &mut self.payloads[idx],
+                Event::WorkerWake { worker: WorkerId(0) },
+            );
+            self.handle(ev);
+        }
+        assert!(
+            timed_out || self.remaining == 0,
+            "simulation drained events with {} tasks unfinished",
+            self.remaining
+        );
+        let makespan = if timed_out { self.cfg.timeout_us } else { self.last_finish_us };
+        SimResult {
+            makespan_us: makespan,
+            aot_us: makespan / self.graph.len() as f64,
+            n_tasks: self.graph.len() as u64,
+            msgs: self.msgs,
+            steals_attempted: self.steals_attempted,
+            steals_failed: self.steals_failed,
+            bytes_transferred: self.bytes_transferred,
+            sched_cost: self.total_cost,
+            timed_out,
+        }
+    }
+}
+
+/// Run one simulation.
+pub fn simulate(graph: &TaskGraph, cfg: &SimConfig) -> SimResult {
+    Engine::new(graph, cfg.clone()).run()
+}

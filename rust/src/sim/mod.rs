@@ -1,0 +1,31 @@
+//! Discrete-event simulator: the paper's experiments at the paper's scale.
+//!
+//! The real runtime (server + TCP + workers) validates the full code path
+//! on this machine; the simulator replays the *same schedulers* and the
+//! *same task graphs* against a virtual cluster of up to 63 nodes × 24
+//! workers with a calibrated cost model, regenerating the figures the paper
+//! measured on the Salomon supercomputer (DESIGN.md §5).
+//!
+//! Model:
+//! - the **server** processes one message at a time (queueing!): each
+//!   inbound status and outbound assignment charges the
+//!   [`RuntimeProfile`]'s per-message and per-transition costs; the
+//!   scheduler's algorithmic work is priced via
+//!   [`crate::scheduler::SchedCost`] and runs either on the reactor (GIL —
+//!   CPython Dask) or on its own thread (RSDS, §IV-A);
+//! - **workers** have one core each (the paper's setting): pop highest
+//!   priority task, fetch missing inputs from peer workers over the
+//!   network, burn the task duration plus per-task worker overhead;
+//! - the **network** has per-transfer latency, bandwidth, per-node NIC
+//!   serialization, and a same-node fast path;
+//! - the **zero worker** mode answers every assignment instantly with no
+//!   data plane (§IV-D).
+
+mod engine;
+mod network;
+
+pub use engine::{simulate, SimConfig, SimResult};
+pub use network::NetworkModel;
+
+#[cfg(test)]
+mod tests;

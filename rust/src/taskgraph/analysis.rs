@@ -1,0 +1,170 @@
+//! Graph analysis: the statistics the paper reports per benchmark in
+//! Table I (#T, #I, S, AD, LP) plus critical-path work, used by the
+//! Table I bench and by the experiment harness to sanity-check generators.
+
+use super::TaskGraph;
+#[cfg(test)]
+use super::TaskId;
+
+/// Table I row for a graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphStats {
+    /// #T — number of tasks.
+    pub n_tasks: usize,
+    /// #I — number of dependency arcs.
+    pub n_deps: usize,
+    /// S — average task output size, KiB.
+    pub avg_output_kib: f64,
+    /// AD — average task duration, ms.
+    pub avg_duration_ms: f64,
+    /// LP — longest oriented path, counted in *arcs* (a single task = 0).
+    pub longest_path: usize,
+    /// Critical path length in µs (duration-weighted longest path); lower
+    /// bound on any makespan.
+    pub critical_path_us: u64,
+}
+
+impl GraphStats {
+    pub fn of(g: &TaskGraph) -> GraphStats {
+        let n = g.len();
+        let total_out: u64 = g.tasks().iter().map(|t| t.output_size).sum();
+        let total_dur: u64 = g.total_work_us();
+        GraphStats {
+            n_tasks: n,
+            n_deps: g.n_deps(),
+            avg_output_kib: total_out as f64 / n as f64 / 1024.0,
+            avg_duration_ms: total_dur as f64 / n as f64 / 1000.0,
+            longest_path: longest_path(g),
+            critical_path_us: critical_path_us(g),
+        }
+    }
+
+    /// Render like a Table I row.
+    pub fn row(&self, name: &str) -> String {
+        format!(
+            "{:<28} {:>8} {:>8} {:>10.3} {:>10.3} {:>4}",
+            name, self.n_tasks, self.n_deps, self.avg_output_kib, self.avg_duration_ms, self.longest_path
+        )
+    }
+}
+
+/// Longest oriented path in arcs. Single pass in topological (id) order.
+pub fn longest_path(g: &TaskGraph) -> usize {
+    let mut depth = vec![0usize; g.len()];
+    let mut best = 0;
+    for id in g.topo_order() {
+        let t = g.task(id);
+        let d = t
+            .inputs
+            .iter()
+            .map(|i| depth[i.idx()] + 1)
+            .max()
+            .unwrap_or(0);
+        depth[id.idx()] = d;
+        best = best.max(d);
+    }
+    best
+}
+
+/// Duration-weighted critical path (µs), the classic makespan lower bound.
+pub fn critical_path_us(g: &TaskGraph) -> u64 {
+    let mut finish = vec![0u64; g.len()];
+    let mut best = 0;
+    for id in g.topo_order() {
+        let t = g.task(id);
+        let start = t.inputs.iter().map(|i| finish[i.idx()]).max().unwrap_or(0);
+        finish[id.idx()] = start + t.duration_us;
+        best = best.max(finish[id.idx()]);
+    }
+    best
+}
+
+/// Width estimate: maximum number of tasks whose depth equals each level —
+/// a cheap proxy for available parallelism used in reports.
+pub fn max_width(g: &TaskGraph) -> usize {
+    let mut depth = vec![0usize; g.len()];
+    for id in g.topo_order() {
+        let t = g.task(id);
+        depth[id.idx()] = t.inputs.iter().map(|i| depth[i.idx()] + 1).max().unwrap_or(0);
+    }
+    let max_d = depth.iter().copied().max().unwrap_or(0);
+    let mut counts = vec![0usize; max_d + 1];
+    for d in depth {
+        counts[d] += 1;
+    }
+    counts.into_iter().max().unwrap_or(0)
+}
+
+/// Sum of all output sizes along dependency arcs — total bytes that would
+/// move if every dependency crossed the network (upper bound on traffic).
+pub fn total_transfer_bytes(g: &TaskGraph) -> u64 {
+    let mut total = 0u64;
+    for id in g.topo_order() {
+        let n_consumers = g.consumers(id).len() as u64;
+        total += g.task(id).output_size * n_consumers;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::taskgraph::{GraphBuilder, Payload};
+
+    fn chain(n: usize) -> TaskGraph {
+        let mut b = GraphBuilder::new();
+        let mut prev: Option<TaskId> = None;
+        for i in 0..n {
+            let inputs = prev.map(|p| vec![p]).unwrap_or_default();
+            prev = Some(b.add(format!("c{i}"), inputs, 1000, 2048, Payload::BusyWait));
+        }
+        b.build("chain").unwrap()
+    }
+
+    #[test]
+    fn chain_stats() {
+        let g = chain(5);
+        let s = GraphStats::of(&g);
+        assert_eq!(s.n_tasks, 5);
+        assert_eq!(s.n_deps, 4);
+        assert_eq!(s.longest_path, 4);
+        assert_eq!(s.critical_path_us, 5_000);
+        assert!((s.avg_output_kib - 2.0).abs() < 1e-9);
+        assert!((s.avg_duration_ms - 1.0).abs() < 1e-9);
+        assert_eq!(max_width(&g), 1);
+    }
+
+    #[test]
+    fn single_task_lp_zero() {
+        let g = chain(1);
+        assert_eq!(longest_path(&g), 0);
+        assert_eq!(critical_path_us(&g), 1000);
+    }
+
+    #[test]
+    fn fan_out_in() {
+        // root -> 10 mids -> sink : LP = 2, width = 10
+        let mut b = GraphBuilder::new();
+        let r = b.add("r", vec![], 10, 1, Payload::NoOp);
+        let mids: Vec<TaskId> =
+            (0..10).map(|i| b.add(format!("m{i}"), vec![r], 100, 1, Payload::BusyWait)).collect();
+        b.add("s", mids, 10, 1, Payload::MergeInputs);
+        let g = b.build("fan").unwrap();
+        assert_eq!(longest_path(&g), 2);
+        assert_eq!(max_width(&g), 10);
+        assert_eq!(critical_path_us(&g), 120);
+        // transfer upper bound: root output consumed 10× + 10 mids consumed 1×
+        assert_eq!(total_transfer_bytes(&g), 10 + 10);
+    }
+
+    #[test]
+    fn critical_path_picks_heavier_branch() {
+        let mut b = GraphBuilder::new();
+        let r = b.add("r", vec![], 0, 1, Payload::NoOp);
+        let fast = b.add("fast", vec![r], 10, 1, Payload::BusyWait);
+        let slow = b.add("slow", vec![r], 10_000, 1, Payload::BusyWait);
+        b.add("join", vec![fast, slow], 5, 1, Payload::MergeInputs);
+        let g = b.build("branch").unwrap();
+        assert_eq!(critical_path_us(&g), 10_005);
+    }
+}

@@ -1,0 +1,305 @@
+//! DAG structure, validation and traversal.
+
+use super::Payload;
+use std::collections::HashMap;
+
+/// Dense task identifier, unique within one graph (index into `tasks`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskId(pub u32);
+
+impl TaskId {
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl std::fmt::Display for TaskId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "t{}", self.0)
+    }
+}
+
+/// One task: a function with inputs, an expected duration (what the paper's
+/// Table I reports as AD) and an output size (Table I's S).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskSpec {
+    pub id: TaskId,
+    /// Dask-style string key, e.g. `"merge-ab12-17"`. Used on the wire.
+    pub key: String,
+    /// Dependencies: tasks whose outputs this task consumes.
+    pub inputs: Vec<TaskId>,
+    /// Expected pure compute duration in µs (excludes all overheads).
+    pub duration_us: u64,
+    /// Output size in bytes placed in the producing worker's data store.
+    pub output_size: u64,
+    pub payload: Payload,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum GraphError {
+    #[error("task {0} has id mismatching its position {1}")]
+    IdMismatch(TaskId, usize),
+    #[error("task {task} depends on unknown task {dep}")]
+    UnknownDep { task: TaskId, dep: TaskId },
+    #[error("task {task} depends on itself")]
+    SelfDep { task: TaskId },
+    #[error("task {task} lists dependency {dep} twice")]
+    DupDep { task: TaskId, dep: TaskId },
+    #[error("graph contains a cycle through task {0}")]
+    Cycle(TaskId),
+    #[error("duplicate task key {0:?}")]
+    DupKey(String),
+    #[error("graph is empty")]
+    Empty,
+}
+
+/// An immutable task graph.
+///
+/// Construction enforces a *topological id order*: every dependency id is
+/// smaller than the depending task's id. All generators naturally produce
+/// graphs in this order, it makes cycle-freedom a local check, and the
+/// schedulers/simulator exploit it (a plain id-order scan is a topological
+/// order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskGraph {
+    pub name: String,
+    tasks: Vec<TaskSpec>,
+    /// consumers[i] = tasks that consume task i's output (reverse arcs).
+    consumers: Vec<Vec<TaskId>>,
+    n_deps: usize,
+}
+
+impl TaskGraph {
+    /// Build and validate a graph from specs.
+    pub fn new(name: impl Into<String>, tasks: Vec<TaskSpec>) -> Result<TaskGraph, GraphError> {
+        if tasks.is_empty() {
+            return Err(GraphError::Empty);
+        }
+        let n = tasks.len();
+        let mut consumers: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+        let mut n_deps = 0usize;
+        let mut keys: HashMap<&str, TaskId> = HashMap::with_capacity(n);
+        for (pos, t) in tasks.iter().enumerate() {
+            if t.id.idx() != pos {
+                return Err(GraphError::IdMismatch(t.id, pos));
+            }
+            if keys.insert(&t.key, t.id).is_some() {
+                return Err(GraphError::DupKey(t.key.clone()));
+            }
+            let mut seen = Vec::with_capacity(t.inputs.len());
+            for &d in &t.inputs {
+                if d == t.id {
+                    return Err(GraphError::SelfDep { task: t.id });
+                }
+                if d.idx() >= n {
+                    return Err(GraphError::UnknownDep { task: t.id, dep: d });
+                }
+                if d.idx() > pos {
+                    // Forward reference ⇒ not in topological id order; since
+                    // we require that order, report it as a cycle-class error.
+                    return Err(GraphError::Cycle(t.id));
+                }
+                if seen.contains(&d) {
+                    return Err(GraphError::DupDep { task: t.id, dep: d });
+                }
+                seen.push(d);
+                consumers[d.idx()].push(t.id);
+                n_deps += 1;
+            }
+        }
+        Ok(TaskGraph { name: name.into(), tasks, consumers, n_deps })
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Total number of dependency arcs (Table I's #I).
+    pub fn n_deps(&self) -> usize {
+        self.n_deps
+    }
+
+    #[inline]
+    pub fn task(&self, id: TaskId) -> &TaskSpec {
+        &self.tasks[id.idx()]
+    }
+
+    pub fn tasks(&self) -> &[TaskSpec] {
+        &self.tasks
+    }
+
+    /// Tasks consuming `id`'s output.
+    #[inline]
+    pub fn consumers(&self, id: TaskId) -> &[TaskId] {
+        &self.consumers[id.idx()]
+    }
+
+    /// Ids in topological order (== id order by the construction invariant).
+    pub fn topo_order(&self) -> impl Iterator<Item = TaskId> + '_ {
+        (0..self.tasks.len() as u32).map(TaskId)
+    }
+
+    /// Tasks with no dependencies (initially ready).
+    pub fn roots(&self) -> Vec<TaskId> {
+        self.tasks
+            .iter()
+            .filter(|t| t.inputs.is_empty())
+            .map(|t| t.id)
+            .collect()
+    }
+
+    /// Tasks whose output nobody consumes (the graph's results, gathered by
+    /// the client).
+    pub fn sinks(&self) -> Vec<TaskId> {
+        (0..self.tasks.len())
+            .filter(|&i| self.consumers[i].is_empty())
+            .map(|i| TaskId(i as u32))
+            .collect()
+    }
+
+    /// Total pure compute time across all tasks, µs (lower bound on
+    /// 1-worker makespan).
+    pub fn total_work_us(&self) -> u64 {
+        self.tasks.iter().map(|t| t.duration_us).sum()
+    }
+
+    /// Whether any payload needs the PJRT runtime.
+    pub fn needs_runtime(&self) -> bool {
+        self.tasks.iter().any(|t| t.payload.needs_runtime())
+    }
+}
+
+/// Convenience builder used by generators and tests.
+#[derive(Debug, Default)]
+pub struct GraphBuilder {
+    tasks: Vec<TaskSpec>,
+}
+
+impl GraphBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a task; its id is its position. Panics on forward deps at
+    /// build time (callers construct in topo order by design).
+    pub fn add(
+        &mut self,
+        key: impl Into<String>,
+        inputs: Vec<TaskId>,
+        duration_us: u64,
+        output_size: u64,
+        payload: Payload,
+    ) -> TaskId {
+        let id = TaskId(self.tasks.len() as u32);
+        self.tasks.push(TaskSpec {
+            id,
+            key: key.into(),
+            inputs,
+            duration_us,
+            output_size,
+            payload,
+        });
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    pub fn build(self, name: impl Into<String>) -> Result<TaskGraph, GraphError> {
+        TaskGraph::new(name, self.tasks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(id: u32, inputs: Vec<u32>) -> TaskSpec {
+        TaskSpec {
+            id: TaskId(id),
+            key: format!("t-{id}"),
+            inputs: inputs.into_iter().map(TaskId).collect(),
+            duration_us: 10,
+            output_size: 100,
+            payload: Payload::NoOp,
+        }
+    }
+
+    #[test]
+    fn diamond_graph_valid() {
+        let g = TaskGraph::new(
+            "diamond",
+            vec![t(0, vec![]), t(1, vec![0]), t(2, vec![0]), t(3, vec![1, 2])],
+        )
+        .unwrap();
+        assert_eq!(g.len(), 4);
+        assert_eq!(g.n_deps(), 4);
+        assert_eq!(g.roots(), vec![TaskId(0)]);
+        assert_eq!(g.sinks(), vec![TaskId(3)]);
+        assert_eq!(g.consumers(TaskId(0)), &[TaskId(1), TaskId(2)]);
+        assert_eq!(g.total_work_us(), 40);
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert_eq!(TaskGraph::new("e", vec![]).unwrap_err(), GraphError::Empty);
+    }
+
+    #[test]
+    fn rejects_forward_dep_as_cycle() {
+        let e = TaskGraph::new("c", vec![t(0, vec![1]), t(1, vec![])]).unwrap_err();
+        assert_eq!(e, GraphError::Cycle(TaskId(0)));
+    }
+
+    #[test]
+    fn rejects_self_dep() {
+        let e = TaskGraph::new("s", vec![t(0, vec![0])]).unwrap_err();
+        assert_eq!(e, GraphError::SelfDep { task: TaskId(0) });
+    }
+
+    #[test]
+    fn rejects_unknown_dep() {
+        let e = TaskGraph::new("u", vec![t(0, vec![]), t(1, vec![7])]).unwrap_err();
+        assert_eq!(e, GraphError::UnknownDep { task: TaskId(1), dep: TaskId(7) });
+    }
+
+    #[test]
+    fn rejects_dup_dep_and_dup_key() {
+        let e = TaskGraph::new("d", vec![t(0, vec![]), t(1, vec![0, 0])]).unwrap_err();
+        assert_eq!(e, GraphError::DupDep { task: TaskId(1), dep: TaskId(0) });
+
+        let mut a = t(0, vec![]);
+        let mut b = t(1, vec![]);
+        a.key = "same".into();
+        b.key = "same".into();
+        let e = TaskGraph::new("k", vec![a, b]).unwrap_err();
+        assert_eq!(e, GraphError::DupKey("same".into()));
+    }
+
+    #[test]
+    fn rejects_id_position_mismatch() {
+        let e = TaskGraph::new("m", vec![t(5, vec![])]).unwrap_err();
+        assert_eq!(e, GraphError::IdMismatch(TaskId(5), 0));
+    }
+
+    #[test]
+    fn builder_roundtrip() {
+        let mut b = GraphBuilder::new();
+        let a = b.add("a", vec![], 5, 10, Payload::NoOp);
+        let c = b.add("c", vec![a], 5, 10, Payload::MergeInputs);
+        let g = b.build("g").unwrap();
+        assert_eq!(g.len(), 2);
+        assert_eq!(g.task(c).inputs, vec![a]);
+    }
+}

@@ -1,0 +1,15 @@
+//! Task graph representation — the core program model (paper §III-A).
+//!
+//! A task graph is a DAG whose vertices are tasks (functions operating on
+//! input data, producing output data) and whose arcs are dependencies/data
+//! transfers. The server, the schedulers, the workers and the simulator all
+//! operate on this representation; the [`crate::graphgen`] module builds the
+//! paper's benchmark graphs (§V, Table I) on top of it.
+
+mod analysis;
+mod graph;
+mod payload;
+
+pub use analysis::{critical_path_us, longest_path, max_width, total_transfer_bytes, GraphStats};
+pub use graph::{GraphBuilder, GraphError, TaskGraph, TaskId, TaskSpec};
+pub use payload::Payload;

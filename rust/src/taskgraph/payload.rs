@@ -1,0 +1,77 @@
+//! Task payloads — what a worker actually *executes* for a task.
+//!
+//! In Dask a task carries a pickled Python function; here a task carries one
+//! of a closed set of payload kinds. The compute-bound benchmark families
+//! (merge, merge_slow, tree, bag, groupby, join) burn CPU for their measured
+//! duration; the array families (xarray, numpy) execute AOT-compiled
+//! JAX/Pallas kernels through PJRT; the text families (vectorizer, wordbag)
+//! run a Rust text-processing pipeline. The simulator only reads
+//! `duration_us` / `output_size` and never executes payloads.
+
+/// Executable payload of a task.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    /// Produce `output_size` bytes instantly (graph-structure benchmarks,
+    /// zero-cost merge nodes).
+    NoOp,
+    /// Burn CPU for the task's `duration_us` (compute-bound tasks; §VI says
+    /// the benchmarks are compute-bound, so busy-wait rather than sleep).
+    BusyWait,
+    /// Run the `partition_reduce` Pallas kernel (artifact
+    /// `partition_reduce.hlo.txt`) on a synthetic `(rows, cols)` f32
+    /// partition seeded with `seed` — xarray/numpy-style aggregation step.
+    HloReduce { rows: u32, cols: u32, seed: u64 },
+    /// Run the `numpy_step` artifact: tiled transpose+add+reduce on an
+    /// `(n, n)` partition — the numpy benchmark's per-partition op.
+    HloTranspose { n: u32, seed: u64 },
+    /// Run the `feature_hash` Pallas kernel on `n_tokens` synthetic token
+    /// ids hashed into `buckets` counts — the vectorizer benchmark.
+    HloHash { n_tokens: u32, buckets: u32, seed: u64 },
+    /// Rust text pipeline: normalize, correct, count, extract features over
+    /// `n_docs` synthetic documents — the wordbag benchmark.
+    WordBag { n_docs: u32, seed: u64 },
+    /// Concatenate/merge the inputs (aggregation/merge nodes).
+    MergeInputs,
+}
+
+impl Payload {
+    /// Whether executing this payload requires the PJRT runtime (and hence
+    /// built artifacts).
+    pub fn needs_runtime(&self) -> bool {
+        matches!(
+            self,
+            Payload::HloReduce { .. } | Payload::HloTranspose { .. } | Payload::HloHash { .. }
+        )
+    }
+
+    /// Artifact file stem this payload executes, if any.
+    pub fn artifact(&self) -> Option<&'static str> {
+        match self {
+            Payload::HloReduce { .. } => Some("partition_reduce"),
+            Payload::HloTranspose { .. } => Some("numpy_step"),
+            Payload::HloHash { .. } => Some("feature_hash"),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runtime_requirements() {
+        assert!(!Payload::NoOp.needs_runtime());
+        assert!(!Payload::BusyWait.needs_runtime());
+        assert!(!Payload::WordBag { n_docs: 1, seed: 0 }.needs_runtime());
+        assert!(Payload::HloReduce { rows: 8, cols: 128, seed: 0 }.needs_runtime());
+        assert!(Payload::HloHash { n_tokens: 64, buckets: 128, seed: 0 }.needs_runtime());
+    }
+
+    #[test]
+    fn artifacts_named() {
+        assert_eq!(Payload::HloReduce { rows: 1, cols: 1, seed: 0 }.artifact(), Some("partition_reduce"));
+        assert_eq!(Payload::HloTranspose { n: 4, seed: 0 }.artifact(), Some("numpy_step"));
+        assert_eq!(Payload::MergeInputs.artifact(), None);
+    }
+}

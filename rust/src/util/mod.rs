@@ -1,0 +1,13 @@
+//! Small self-contained utilities: PRNG, statistics, timing, CLI parsing.
+//!
+//! The build environment is offline, so the usual crates (`rand`,
+//! `criterion`'s stats, `clap`) are reimplemented here at the scale this
+//! project needs. Each submodule is fully unit-tested.
+
+pub mod cli;
+pub mod rng;
+pub mod stats;
+pub mod timing;
+
+pub use rng::Rng;
+pub use stats::Summary;

@@ -1,0 +1,85 @@
+//! Wall-clock timing helpers and a calibrated busy-wait.
+//!
+//! The busy-wait is how the real runtime emulates (a) task compute time for
+//! the `merge`/`merge_slow` benchmarks (the paper's tasks burn CPU — they are
+//! compute-bound, §VI) and (b) the CPython per-event overhead when the server
+//! runs with the `python` runtime profile (`--emulate-python`). `sleep()`
+//! would under-represent CPU contention, which is the very thing the paper
+//! measures.
+
+use std::time::{Duration, Instant};
+
+/// Busy-spin for the given number of microseconds, consuming CPU.
+/// Granularity is bounded by `Instant::now()` resolution (tens of ns).
+#[inline]
+pub fn busy_wait_us(us: u64) {
+    if us == 0 {
+        return;
+    }
+    let deadline = Instant::now() + Duration::from_micros(us);
+    while Instant::now() < deadline {
+        std::hint::spin_loop();
+    }
+}
+
+/// Time a closure, returning (result, elapsed µs).
+pub fn time_us<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64() * 1e6)
+}
+
+/// A monotonically increasing stopwatch anchored at construction.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    /// Elapsed microseconds since start.
+    pub fn elapsed_us(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn busy_wait_takes_at_least_requested() {
+        let (_, us) = time_us(|| busy_wait_us(500));
+        assert!(us >= 500.0, "waited only {us}µs");
+        // Upper bound is loose: CI machines stall, but 50x is a bug.
+        assert!(us < 25_000.0, "waited {us}µs for 500µs request");
+    }
+
+    #[test]
+    fn busy_wait_zero_fast() {
+        let (_, us) = time_us(|| busy_wait_us(0));
+        assert!(us < 1_000.0);
+    }
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed_us();
+        busy_wait_us(100);
+        let b = sw.elapsed_us();
+        assert!(b >= a + 100);
+    }
+}

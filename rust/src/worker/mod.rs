@@ -1,0 +1,348 @@
+//! Workers: the processes that execute tasks (paper §III-B), plus the
+//! paper's *zero worker* (§IV-D) in [`zero`].
+//!
+//! A real worker:
+//! - registers with the server (cores, node, data address),
+//! - runs `ncores` executor threads pulling from a priority queue
+//!   ("workers process their tasks in parallel, but they never execute more
+//!   than one task per available core at once" — the paper's setting is
+//!   one core per worker),
+//! - fetches missing inputs directly from peer workers (worker↔worker data
+//!   plane; the server is not on the data path),
+//! - honours steal retraction: a queued task can be given back, a running
+//!   one cannot (§IV-C).
+
+pub mod payload;
+pub mod zero;
+
+use crate::protocol::{decode_msg, encode_msg, read_frame, write_frame, FrameError, Msg, TaskFinishedInfo, TaskInputLoc};
+use crate::taskgraph::{Payload, TaskId};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Worker configuration.
+#[derive(Debug, Clone)]
+pub struct WorkerConfig {
+    pub server_addr: String,
+    pub name: String,
+    pub ncores: u32,
+    pub node: u32,
+}
+
+#[derive(Debug)]
+struct QueuedTask {
+    priority: i64,
+    task: TaskId,
+    key: String,
+    payload: Payload,
+    duration_us: u64,
+    output_size: u64,
+    inputs: Vec<TaskInputLoc>,
+}
+
+// Min-heap by priority (lower value runs first, like Dask priorities).
+impl PartialEq for QueuedTask {
+    fn eq(&self, other: &Self) -> bool {
+        self.priority == other.priority && self.task == other.task
+    }
+}
+impl Eq for QueuedTask {}
+impl PartialOrd for QueuedTask {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for QueuedTask {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reverse for BinaryHeap (max-heap) -> min-heap behavior.
+        other.priority.cmp(&self.priority).then(other.task.0.cmp(&self.task.0))
+    }
+}
+
+struct Shared {
+    queue: Mutex<BinaryHeap<QueuedTask>>,
+    /// Tasks in `queue` (for O(1) steal checks).
+    pending: Mutex<HashSet<TaskId>>,
+    cv: Condvar,
+    store: Mutex<HashMap<TaskId, Arc<Vec<u8>>>>,
+    stop: AtomicBool,
+    server_tx: Mutex<TcpStream>,
+}
+
+impl Shared {
+    fn send(&self, msg: &Msg) -> Result<()> {
+        let bytes = encode_msg(msg);
+        let mut s = self.server_tx.lock().expect("server stream poisoned");
+        write_frame(&mut *s, &bytes)?;
+        Ok(())
+    }
+}
+
+/// Handle to a running worker (threads are detached; `shutdown` stops them).
+pub struct WorkerHandle {
+    pub id: u32,
+    pub data_addr: String,
+    shared: Arc<Shared>,
+}
+
+impl WorkerHandle {
+    pub fn shutdown(&self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        let s = self.shared.server_tx.lock().unwrap();
+        let _ = s.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+/// Start a real worker; returns after registration completes.
+pub fn run_worker(cfg: WorkerConfig) -> Result<WorkerHandle> {
+    // Data plane listener (peer fetches).
+    let data_listener = TcpListener::bind("127.0.0.1:0").context("bind data listener")?;
+    let data_addr = data_listener.local_addr()?.to_string();
+
+    let mut stream =
+        TcpStream::connect(&cfg.server_addr).with_context(|| format!("connect {}", cfg.server_addr))?;
+    stream.set_nodelay(true).ok();
+    write_frame(
+        &mut stream,
+        &encode_msg(&Msg::RegisterWorker {
+            name: cfg.name.clone(),
+            ncores: cfg.ncores,
+            node: cfg.node,
+            data_addr: data_addr.clone(),
+        }),
+    )?;
+    let reply = decode_msg(&read_frame(&mut stream)?)?;
+    let Msg::Welcome { id } = reply else {
+        bail!("expected welcome, got {:?}", reply.op());
+    };
+
+    let shared = Arc::new(Shared {
+        queue: Mutex::new(BinaryHeap::new()),
+        pending: Mutex::new(HashSet::new()),
+        cv: Condvar::new(),
+        store: Mutex::new(HashMap::new()),
+        stop: AtomicBool::new(false),
+        server_tx: Mutex::new(stream.try_clone().context("clone server stream")?),
+    });
+
+    // Data server: serve peer fetch requests.
+    {
+        let shared = shared.clone();
+        std::thread::spawn(move || {
+            for conn in data_listener.incoming() {
+                if shared.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(conn) = conn else { continue };
+                let shared = shared.clone();
+                std::thread::spawn(move || serve_data_conn(conn, &shared));
+            }
+        });
+    }
+
+    // Executor threads.
+    for core in 0..cfg.ncores.max(1) {
+        let shared = shared.clone();
+        std::thread::Builder::new()
+            .name(format!("{}-exec{}", cfg.name, core))
+            .spawn(move || executor_loop(&shared))
+            .expect("spawn executor");
+    }
+
+    // Server reader.
+    {
+        let shared = shared.clone();
+        std::thread::spawn(move || {
+            let mut stream = stream;
+            loop {
+                if shared.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let msg = match read_frame(&mut stream) {
+                    Ok(bytes) => match decode_msg(&bytes) {
+                        Ok(m) => m,
+                        Err(e) => {
+                            log::warn!("worker: bad message from server: {e}");
+                            break;
+                        }
+                    },
+                    Err(FrameError::Closed) => break,
+                    Err(e) => {
+                        log::warn!("worker: server stream error: {e}");
+                        break;
+                    }
+                };
+                match msg {
+                    Msg::ComputeTask { task, key, payload, duration_us, output_size, inputs, priority } => {
+                        shared.pending.lock().unwrap().insert(task);
+                        shared.queue.lock().unwrap().push(QueuedTask {
+                            priority,
+                            task,
+                            key,
+                            payload,
+                            duration_us,
+                            output_size,
+                            inputs,
+                        });
+                        shared.cv.notify_one();
+                    }
+                    Msg::StealRequest { task } => {
+                        // Retract iff still queued (not started) — §IV-C.
+                        let retracted = {
+                            let mut pending = shared.pending.lock().unwrap();
+                            if pending.remove(&task) {
+                                let mut q = shared.queue.lock().unwrap();
+                                let drained: Vec<QueuedTask> = q.drain().collect();
+                                let mut found = false;
+                                for qt in drained {
+                                    if qt.task == task {
+                                        found = true;
+                                    } else {
+                                        q.push(qt);
+                                    }
+                                }
+                                found
+                            } else {
+                                false
+                            }
+                        };
+                        let _ = shared.send(&Msg::StealResponse { task, ok: retracted });
+                    }
+                    Msg::FetchFromServer { task } => {
+                        let data = shared
+                            .store
+                            .lock()
+                            .unwrap()
+                            .get(&task)
+                            .map(|d| d.as_ref().clone())
+                            .unwrap_or_default();
+                        let _ = shared.send(&Msg::DataToServer { task, data });
+                    }
+                    Msg::Shutdown => {
+                        shared.stop.store(true, Ordering::SeqCst);
+                        shared.cv.notify_all();
+                        break;
+                    }
+                    Msg::Heartbeat | Msg::Welcome { .. } => {}
+                    other => log::warn!("worker: unexpected {:?}", other.op()),
+                }
+            }
+            shared.stop.store(true, Ordering::SeqCst);
+            shared.cv.notify_all();
+        });
+    }
+
+    Ok(WorkerHandle { id, data_addr, shared })
+}
+
+fn executor_loop(shared: &Shared) {
+    loop {
+        let next = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if shared.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Some(t) = q.pop() {
+                    break t;
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+        };
+        // Running now — no longer stealable.
+        shared.pending.lock().unwrap().remove(&next.task);
+        match run_task(shared, &next) {
+            Ok(info) => {
+                let _ = shared.send(&Msg::TaskFinished(info));
+            }
+            Err(e) => {
+                let _ = shared.send(&Msg::TaskErred { task: next.task, error: e.to_string() });
+            }
+        }
+    }
+}
+
+fn run_task(shared: &Shared, t: &QueuedTask) -> Result<TaskFinishedInfo> {
+    // Gather inputs: local store or remote peer.
+    let mut inputs: Vec<Arc<Vec<u8>>> = Vec::with_capacity(t.inputs.len());
+    for loc in &t.inputs {
+        let local = shared.store.lock().unwrap().get(&loc.task).cloned();
+        let data = match local {
+            Some(d) => d,
+            None if !loc.addr.is_empty() => {
+                let data = fetch_remote(&loc.addr, loc.task)
+                    .with_context(|| format!("fetch {} from {}", loc.task, loc.addr))?;
+                let arc = Arc::new(data);
+                shared.store.lock().unwrap().insert(loc.task, arc.clone());
+                arc
+            }
+            None => {
+                // Local producer raced with us (steal); short bounded wait.
+                let mut got = None;
+                for _ in 0..500 {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    if let Some(d) = shared.store.lock().unwrap().get(&loc.task).cloned() {
+                        got = Some(d);
+                        break;
+                    }
+                }
+                got.ok_or_else(|| anyhow!("input {} for {} never arrived", loc.task, t.key))?
+            }
+        };
+        inputs.push(data);
+    }
+    let t0 = std::time::Instant::now();
+    let output = payload::execute(&t.payload, t.duration_us, t.output_size, &inputs)?;
+    let duration_us = t0.elapsed().as_micros() as u64;
+    let nbytes = output.len() as u64;
+    shared.store.lock().unwrap().insert(t.task, Arc::new(output));
+    Ok(TaskFinishedInfo { task: t.task, nbytes, duration_us })
+}
+
+fn fetch_remote(addr: &str, task: TaskId) -> Result<Vec<u8>> {
+    let mut s = TcpStream::connect(addr)?;
+    s.set_nodelay(true).ok();
+    write_frame(&mut s, &encode_msg(&Msg::FetchData { task }))?;
+    let reply = decode_msg(&read_frame(&mut s)?)?;
+    match reply {
+        Msg::DataReply { task: t, data } if t == task => Ok(data),
+        other => bail!("unexpected data reply {:?}", other.op()),
+    }
+}
+
+fn serve_data_conn(mut conn: TcpStream, shared: &Shared) {
+    conn.set_nodelay(true).ok();
+    loop {
+        let msg = match read_frame(&mut conn) {
+            Ok(bytes) => match decode_msg(&bytes) {
+                Ok(m) => m,
+                Err(_) => break,
+            },
+            Err(_) => break,
+        };
+        match msg {
+            Msg::FetchData { task } => {
+                // The producer finished before the server advertised the
+                // location, but the local insert may trail by a hair.
+                let mut data = None;
+                for _ in 0..500 {
+                    if let Some(d) = shared.store.lock().unwrap().get(&task).cloned() {
+                        data = Some(d);
+                        break;
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+                let Some(data) = data else { break };
+                let reply = Msg::DataReply { task, data: data.as_ref().clone() };
+                if write_frame(&mut conn, &encode_msg(&reply)).is_err() {
+                    break;
+                }
+            }
+            _ => break,
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! The zero worker (paper §IV-D): "a minimal implementation of the DASK
+//! worker ... Its purpose is to simulate a worker with infinite
+//! computational speed, infinitely fast worker-to-worker transfers and zero
+//! additional overhead."
+//!
+//! - Compute requests are answered with an immediate `task-finished`.
+//! - A set of data objects that *would* live here is remembered; inputs not
+//!   in the set are treated as instantly downloaded (no w2w traffic at all).
+//! - Data fetches from the server are answered with a small mocked constant
+//!   object.
+//! - Steal requests always fail: "since the tasks are computed immediately,
+//!   any potential attempts to steal a task from a worker will fail" (§VI-D).
+
+use super::WorkerConfig;
+use crate::protocol::{decode_msg, encode_msg, read_frame, write_frame, FrameError, Msg, TaskFinishedInfo};
+use crate::taskgraph::TaskId;
+use anyhow::{bail, Context, Result};
+use std::collections::HashSet;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Mocked constant object returned for data fetches (§IV-D).
+pub const MOCK_DATA: &[u8] = b"zero-worker-mock";
+
+/// Handle to a running zero worker.
+pub struct ZeroWorkerHandle {
+    pub id: u32,
+    stop: Arc<AtomicBool>,
+    stream: Arc<Mutex<TcpStream>>,
+}
+
+impl ZeroWorkerHandle {
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let s = self.stream.lock().unwrap();
+        let _ = s.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+/// Start a zero worker; returns after registration.
+pub fn run_zero_worker(cfg: WorkerConfig) -> Result<ZeroWorkerHandle> {
+    let mut stream = TcpStream::connect(&cfg.server_addr)
+        .with_context(|| format!("connect {}", cfg.server_addr))?;
+    stream.set_nodelay(true).ok();
+    write_frame(
+        &mut stream,
+        &encode_msg(&Msg::RegisterWorker {
+            name: cfg.name.clone(),
+            ncores: cfg.ncores,
+            node: cfg.node,
+            // Zero workers never serve peer fetches (no w2w communication).
+            data_addr: String::new(),
+        }),
+    )?;
+    let reply = decode_msg(&read_frame(&mut stream)?)?;
+    let Msg::Welcome { id } = reply else {
+        bail!("expected welcome, got {:?}", reply.op());
+    };
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let wstream = Arc::new(Mutex::new(stream.try_clone().context("clone")?));
+    {
+        let stop = stop.clone();
+        let wstream = wstream.clone();
+        std::thread::spawn(move || {
+            // Data objects that would be placed on this worker.
+            let mut would_have: HashSet<TaskId> = HashSet::new();
+            let send = |msg: &Msg| -> Result<()> {
+                let mut s = wstream.lock().unwrap();
+                write_frame(&mut *s, &encode_msg(msg))?;
+                Ok(())
+            };
+            loop {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let msg = match read_frame(&mut stream) {
+                    Ok(bytes) => match decode_msg(&bytes) {
+                        Ok(m) => m,
+                        Err(_) => break,
+                    },
+                    Err(FrameError::Closed) => break,
+                    Err(_) => break,
+                };
+                match msg {
+                    Msg::ComputeTask { task, inputs, output_size, .. } => {
+                        // Infinitely fast download of any missing input.
+                        for loc in &inputs {
+                            would_have.insert(loc.task);
+                        }
+                        would_have.insert(task);
+                        // Immediate completion, zero duration.
+                        if send(&Msg::TaskFinished(TaskFinishedInfo {
+                            task,
+                            nbytes: output_size,
+                            duration_us: 0,
+                        }))
+                        .is_err()
+                        {
+                            break;
+                        }
+                    }
+                    Msg::StealRequest { task } => {
+                        // Already "finished" — retraction always fails.
+                        if send(&Msg::StealResponse { task, ok: false }).is_err() {
+                            break;
+                        }
+                    }
+                    Msg::FetchFromServer { task } => {
+                        let _present = would_have.contains(&task);
+                        if send(&Msg::DataToServer { task, data: MOCK_DATA.to_vec() }).is_err() {
+                            break;
+                        }
+                    }
+                    Msg::Shutdown => break,
+                    Msg::Heartbeat | Msg::Welcome { .. } => {}
+                    other => log::warn!("zero worker: unexpected {:?}", other.op()),
+                }
+            }
+        });
+    }
+    Ok(ZeroWorkerHandle { id, stop, stream: wstream })
+}

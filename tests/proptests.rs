@@ -1,0 +1,244 @@
+//! Property-based tests over random task graphs and random event
+//! interleavings: scheduler invariants (every task assigned exactly once,
+//! dependencies respected, nothing lost across steal races), simulator
+//! conservation, and codec totality.
+
+use rsds::graphgen;
+use rsds::overhead::RuntimeProfile;
+use rsds::scheduler::{self, Action, WorkerId, WorkerInfo};
+use rsds::sim::{simulate, SimConfig};
+use rsds::taskgraph::{GraphBuilder, Payload, TaskGraph, TaskId};
+use rsds::testing::{check, PropConfig};
+use rsds::util::Rng;
+use std::collections::{HashMap, HashSet};
+
+/// Random DAG: layered, with random fan-in, durations and sizes.
+fn random_graph(rng: &mut Rng) -> TaskGraph {
+    let n_layers = rng.range_usize(1, 6);
+    let mut b = GraphBuilder::new();
+    let mut prev_layer: Vec<TaskId> = Vec::new();
+    let mut k = 0;
+    for layer in 0..n_layers {
+        let width = rng.range_usize(1, 12);
+        let mut this_layer = Vec::with_capacity(width);
+        for _ in 0..width {
+            let mut inputs = Vec::new();
+            if !prev_layer.is_empty() {
+                let fan = rng.range_usize(0, prev_layer.len().min(4) + 1);
+                let mut pool = prev_layer.clone();
+                rng.shuffle(&mut pool);
+                inputs.extend(pool.into_iter().take(fan));
+            }
+            let dur = rng.gen_range(5_000) + 1;
+            let size = rng.gen_range(100_000) + 1;
+            this_layer.push(b.add(format!("t{layer}-{k}"), inputs, dur, size, Payload::BusyWait));
+            k += 1;
+        }
+        prev_layer = this_layer;
+    }
+    b.build("random").unwrap()
+}
+
+/// Drive a scheduler through a full random-graph execution with a random
+/// (but dependency-correct) completion order and random steal outcomes.
+/// Returns Err on any invariant violation.
+fn drive_scheduler(sched_name: &str, rng: &mut Rng) -> Result<(), String> {
+    let graph = random_graph(rng);
+    let n_workers = rng.range_usize(1, 9) as u32;
+    let mut s = scheduler::by_name(sched_name, rng.next_u64()).unwrap();
+    for i in 0..n_workers {
+        s.add_worker(WorkerInfo { id: WorkerId(i), ncores: 1, node: i / 4 });
+    }
+    s.graph_submitted(&graph);
+
+    let mut assigned: HashMap<TaskId, WorkerId> = HashMap::new();
+    let mut finished: HashSet<TaskId> = HashSet::new();
+    let mut unfinished_deps: Vec<usize> =
+        graph.tasks().iter().map(|t| t.inputs.len()).collect();
+    let mut actions = Vec::new();
+    s.tasks_ready(&graph.roots(), &mut actions);
+
+    let mut pending_steals: Vec<(TaskId, WorkerId, WorkerId)> = Vec::new();
+    let mut guard = 0;
+    loop {
+        guard += 1;
+        if guard > 200_000 {
+            return Err("scheduler failed to converge".into());
+        }
+        // Apply actions.
+        for a in std::mem::take(&mut actions) {
+            match a {
+                Action::Assign(a) => {
+                    if finished.contains(&a.task) {
+                        return Err(format!("{} assigned after finishing", a.task));
+                    }
+                    if unfinished_deps[a.task.idx()] != 0 {
+                        return Err(format!("{} assigned before deps done", a.task));
+                    }
+                    if assigned.insert(a.task, a.worker).is_some() {
+                        return Err(format!("{} assigned twice", a.task));
+                    }
+                }
+                Action::Steal { task, from, to } => {
+                    if finished.contains(&task) {
+                        // permitted: scheduler may lag; reactor rejects it
+                        s.steal_result(task, from, to, false, &mut actions);
+                        continue;
+                    }
+                    match assigned.get(&task) {
+                        Some(&w) if w == from => pending_steals.push((task, from, to)),
+                        other => {
+                            return Err(format!(
+                                "steal of {task} from {from} but assigned to {other:?}"
+                            ))
+                        }
+                    }
+                }
+            }
+        }
+        if !actions.is_empty() {
+            continue;
+        }
+        // Random event: resolve a steal or finish an assigned-ready task.
+        let runnable: Vec<TaskId> = assigned
+            .keys()
+            .copied()
+            .filter(|t| {
+                !finished.contains(t) && !pending_steals.iter().any(|(pt, _, _)| pt == t)
+            })
+            .collect();
+        let must_resolve = runnable.is_empty() && !pending_steals.is_empty();
+        if must_resolve || (!pending_steals.is_empty() && rng.chance(0.4)) {
+            let idx = rng.range_usize(0, pending_steals.len());
+            let (task, from, to) = pending_steals.swap_remove(idx);
+            let ok = rng.chance(0.6) && !finished.contains(&task);
+            if ok {
+                assigned.insert(task, to);
+            }
+            s.steal_result(task, from, to, ok, &mut actions);
+            continue;
+        }
+        if runnable.is_empty() {
+            break;
+        }
+        let task = *rng.choose(&runnable);
+        let worker = assigned[&task];
+        finished.insert(task);
+        let mut newly_ready = Vec::new();
+        for &c in graph.consumers(task) {
+            unfinished_deps[c.idx()] -= 1;
+            if unfinished_deps[c.idx()] == 0 {
+                newly_ready.push(c);
+            }
+        }
+        s.task_finished(task, worker, graph.task(task).output_size, graph.task(task).duration_us, &mut actions);
+        if !newly_ready.is_empty() {
+            let mut buf = Vec::new();
+            s.tasks_ready(&newly_ready, &mut buf);
+            actions.extend(buf);
+        }
+    }
+    if finished.len() != graph.len() {
+        return Err(format!(
+            "only {}/{} tasks finished (assigned {})",
+            finished.len(),
+            graph.len(),
+            assigned.len()
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_random_scheduler_invariants() {
+    check("random scheduler", PropConfig { cases: 40, seed: 101 }, |rng| {
+        drive_scheduler("random", rng)
+    });
+}
+
+#[test]
+fn prop_ws_scheduler_invariants() {
+    check("ws scheduler", PropConfig { cases: 40, seed: 202 }, |rng| {
+        drive_scheduler("ws", rng)
+    });
+}
+
+#[test]
+fn prop_dask_ws_scheduler_invariants() {
+    check("dask-ws scheduler", PropConfig { cases: 40, seed: 303 }, |rng| {
+        drive_scheduler("dask-ws", rng)
+    });
+}
+
+#[test]
+fn prop_sim_conserves_tasks_and_respects_critical_path() {
+    check("sim conservation", PropConfig { cases: 25, seed: 404 }, |rng| {
+        let graph = random_graph(rng);
+        let sched = *rng.choose(&["random", "ws", "dask-ws"]);
+        let profile = if rng.chance(0.5) { RuntimeProfile::rust() } else { RuntimeProfile::python() };
+        let cfg = SimConfig {
+            n_workers: rng.range_usize(1, 50),
+            seed: rng.next_u64(),
+            ..SimConfig { profile, scheduler: sched.into(), ..SimConfig::default() }
+        };
+        let r = simulate(&graph, &cfg);
+        if r.timed_out {
+            return Err("random small graph timed out".into());
+        }
+        if r.n_tasks != graph.len() as u64 {
+            return Err(format!("{} of {} tasks", r.n_tasks, graph.len()));
+        }
+        let cp = rsds::taskgraph::critical_path_us(&graph) as f64;
+        if r.makespan_us < cp {
+            return Err(format!("makespan {} beats critical path {cp}", r.makespan_us));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_graph_codec_roundtrips_random_graphs() {
+    check("graph codec", PropConfig { cases: 40, seed: 505 }, |rng| {
+        let g = random_graph(rng);
+        let v = rsds::protocol::graph_to_value(&g);
+        let back = rsds::protocol::graph_from_value(&v).map_err(|e| e.to_string())?;
+        if back.len() != g.len() || back.n_deps() != g.n_deps() {
+            return Err("structure mismatch after roundtrip".into());
+        }
+        for (a, b) in back.tasks().iter().zip(g.tasks()) {
+            if a.inputs != b.inputs || a.duration_us != b.duration_us {
+                return Err(format!("task {} mismatch", a.id));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_generated_benchmarks_are_valid_dags() {
+    // Every family, many parameter combinations: builder invariants hold
+    // (no cycles — enforced by TaskGraph::new), sinks/roots sane.
+    check("graphgen validity", PropConfig { cases: 30, seed: 606 }, |rng| {
+        let spec = match rng.gen_range(8) {
+            0 => format!("merge-{}", rng.gen_range(5_000) + 1),
+            1 => format!("merge_slow-{}-{}ms", rng.gen_range(2_000) + 1, rng.gen_range(100) + 1),
+            2 => format!("tree-{}", rng.gen_range(12) + 1),
+            3 => format!("xarray-{}", rng.gen_range(40) + 2),
+            4 => format!("bag-{}-{}", rng.gen_range(20_000) + 100, rng.gen_range(40) + 1),
+            5 => format!("numpy-{}-{}", 1_000 + rng.gen_range(9_000), rng.gen_range(20) + 1),
+            6 => format!("groupby-{}-1s-{}h", rng.gen_range(90) + 1, rng.gen_range(12) + 1),
+            _ => format!("wordbag-{}-{}", rng.gen_range(5_000) + 100, rng.gen_range(60) + 1),
+        };
+        let g = graphgen::parse(&spec).map_err(|e| format!("{spec}: {e}"))?;
+        if g.roots().is_empty() {
+            return Err(format!("{spec}: no roots"));
+        }
+        if g.sinks().is_empty() {
+            return Err(format!("{spec}: no sinks"));
+        }
+        if g.total_work_us() == 0 {
+            return Err(format!("{spec}: zero total work"));
+        }
+        Ok(())
+    });
+}
