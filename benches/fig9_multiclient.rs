@@ -1,0 +1,56 @@
+//! Fig 9 (extension) — per-client AOT degradation under concurrent
+//! multi-graph load.
+//!
+//! The paper benchmarks one graph at a time; this measures what happens
+//! when 1, 4 and 16 clients submit interleaved graphs to one shared
+//! server: the reactor serializes message handling, so per-run AOT
+//! (run makespan / run tasks) grows with client count — much faster for
+//! the emulated CPython server than for the Rust one.
+
+use rsds::graphgen::{concurrent, CONCURRENT_MIX_DEFAULT};
+use rsds::overhead::RuntimeProfile;
+use rsds::sim::{simulate_concurrent, SimConfig};
+
+fn main() {
+    let combos: [(&str, RuntimeProfile, &str); 4] = [
+        ("dask/ws", RuntimeProfile::python(), "dask-ws"),
+        ("dask/random", RuntimeProfile::python(), "random"),
+        ("rsds/ws", RuntimeProfile::rust(), "ws"),
+        ("rsds/random", RuntimeProfile::rust(), "random"),
+    ];
+    for nodes in [1usize, 7] {
+        println!(
+            "\n== Fig 9: per-client AOT (µs/task) vs concurrent clients, {} workers ==",
+            nodes * 24
+        );
+        print!("{:<14}", "clients");
+        for (label, _, _) in &combos {
+            print!(" {:>14}", label);
+        }
+        println!("   (mix: {})", CONCURRENT_MIX_DEFAULT.join(", "));
+        let mut baselines = [0.0f64; 4];
+        for n_clients in [1usize, 4, 16] {
+            let graphs = concurrent(n_clients, CONCURRENT_MIX_DEFAULT);
+            print!("{:<14}", n_clients);
+            for (i, (label, profile, sched)) in combos.iter().enumerate() {
+                let cfg = SimConfig::nodes(nodes, profile.clone(), sched);
+                let r = simulate_concurrent(&graphs, &cfg);
+                assert!(!r.timed_out, "{label} timed out at {n_clients} clients");
+                assert_eq!(r.in_flight_steals_at_end, 0, "{label}: leaked steals");
+                let mean_aot: f64 =
+                    r.runs.iter().map(|x| x.aot_us).sum::<f64>() / r.runs.len() as f64;
+                if n_clients == 1 {
+                    baselines[i] = mean_aot;
+                    print!(" {:>14.1}", mean_aot);
+                } else {
+                    print!(" {:>8.1} ({:.1}×)", mean_aot, mean_aot / baselines[i]);
+                }
+            }
+            println!();
+        }
+    }
+    println!(
+        "\nper-run AOT = run makespan / run tasks, averaged over clients; \
+         ×: degradation vs a single client on the same server"
+    );
+}

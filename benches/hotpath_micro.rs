@@ -10,9 +10,9 @@ use rsds::bench::{bench, row, throughput, BenchConfig};
 use rsds::graphgen::merge;
 use rsds::msgpack::{decode, encode};
 use rsds::overhead::RuntimeProfile;
-use rsds::protocol::{decode_msg, encode_msg, Msg, TaskFinishedInfo};
+use rsds::protocol::{decode_msg, encode_msg, Msg, RunId, TaskFinishedInfo};
 use rsds::scheduler::{self, Action, WorkerId, WorkerInfo};
-use rsds::server::{Dest, Origin, Reactor};
+use rsds::server::{Dest, Origin, Reactor, SchedulerPool};
 use rsds::sim::{simulate, SimConfig};
 use rsds::taskgraph::TaskId;
 
@@ -21,6 +21,7 @@ fn main() {
 
     // --- msgpack codec on a compute-task-shaped message ---
     let msg = Msg::ComputeTask {
+        run: RunId(7),
         task: TaskId(12345),
         key: "task-12345".into(),
         payload: rsds::taskgraph::Payload::BusyWait,
@@ -64,7 +65,7 @@ fn main() {
     // --- reactor: drive merge-10K to completion with inline finishes ---
     let r = bench("reactor: merge-10K full graph turnaround", cfg, || {
         let mut reactor = Reactor::new(
-            scheduler::by_name("ws", 1).unwrap(),
+            SchedulerPool::new("ws", 1).unwrap(),
             RuntimeProfile::rust(),
             false,
         );
@@ -93,18 +94,19 @@ fn main() {
         while let Some((dest, msg)) = inbox.pop() {
             let Dest::Worker(w) = dest else { continue };
             match msg {
-                Msg::ComputeTask { task, output_size, .. } => reactor.on_message(
+                Msg::ComputeTask { run, task, output_size, .. } => reactor.on_message(
                     Origin::Worker(w),
                     Msg::TaskFinished(TaskFinishedInfo {
+                        run,
                         task,
                         nbytes: output_size,
                         duration_us: 6,
                     }),
                     &mut out,
                 ),
-                Msg::StealRequest { task } => reactor.on_message(
+                Msg::StealRequest { run, task } => reactor.on_message(
                     Origin::Worker(w),
-                    Msg::StealResponse { task, ok: false },
+                    Msg::StealResponse { run, task, ok: false },
                     &mut out,
                 ),
                 _ => {}

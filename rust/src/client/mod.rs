@@ -1,17 +1,27 @@
 //! Client: submits task graphs to the server and waits for results
 //! (paper §III-B: "connects to a DASK cluster, submits task graphs to the
 //! server and gathers the results").
+//!
+//! The server is multi-graph: every submission is acknowledged with a
+//! server-assigned [`RunId`] (`graph-submitted`), and all later messages
+//! about that graph carry it. A client may therefore *pipeline* — submit
+//! several graphs back-to-back with [`Client::submit`] and collect each
+//! result with [`Client::wait`] in any order. [`Client::run_graph`] keeps
+//! the old one-shot submit-and-block behavior.
 
-use crate::protocol::{decode_msg, encode_msg, read_frame, write_frame, Msg};
+use crate::protocol::{decode_msg, encode_msg, read_frame, write_frame, Msg, RunId};
 use crate::taskgraph::TaskGraph;
 use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
 use std::net::TcpStream;
+use std::time::Instant;
 
 /// Result of one graph execution as observed by the client — the paper's
 /// *makespan* is "the duration between the initial task graph submission to
 /// the server and the processing of the final output task" (§VI).
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunResult {
+    pub run: RunId,
     pub graph_name: String,
     pub n_tasks: u64,
     /// Server-measured makespan.
@@ -20,10 +30,19 @@ pub struct RunResult {
     pub wall_us: u64,
 }
 
+struct PendingRun {
+    graph_name: String,
+    submitted_at: Instant,
+}
+
 /// A connected client.
 pub struct Client {
     stream: TcpStream,
     pub id: u32,
+    /// Submitted but not yet completed runs.
+    in_flight: HashMap<RunId, PendingRun>,
+    /// Completed (or failed) runs not yet claimed by `wait`.
+    completed: HashMap<RunId, Result<RunResult>>,
 }
 
 impl Client {
@@ -36,29 +55,92 @@ impl Client {
         let Msg::Welcome { id } = reply else {
             bail!("expected welcome, got {:?}", reply.op());
         };
-        Ok(Client { stream, id })
+        Ok(Client {
+            stream,
+            id,
+            in_flight: HashMap::new(),
+            completed: HashMap::new(),
+        })
+    }
+
+    /// Submit a graph without waiting for its completion; returns the
+    /// server-assigned run id once the submission is acknowledged. Several
+    /// submissions may be in flight at once.
+    pub fn submit(&mut self, graph: &TaskGraph) -> Result<RunId> {
+        let name = graph.name.clone();
+        let submitted_at = Instant::now();
+        write_frame(&mut self.stream, &encode_msg(&Msg::SubmitGraph { graph: graph.clone() }))?;
+        // Read until the ack for *this* submission arrives. Completions of
+        // earlier pipelined runs may interleave; buffer them for `wait`.
+        loop {
+            let msg = decode_msg(&read_frame(&mut self.stream)?)?;
+            match msg {
+                Msg::GraphSubmitted { run, .. } => {
+                    self.in_flight
+                        .insert(run, PendingRun { graph_name: name, submitted_at });
+                    return Ok(run);
+                }
+                other => self.handle_completion(other)?,
+            }
+        }
+    }
+
+    /// Block until `run` (a value returned by [`Client::submit`]) finishes;
+    /// returns its result or the server-reported failure.
+    pub fn wait(&mut self, run: RunId) -> Result<RunResult> {
+        loop {
+            if let Some(res) = self.completed.remove(&run) {
+                return res;
+            }
+            if !self.in_flight.contains_key(&run) {
+                bail!("run {run} was never submitted on this client");
+            }
+            let msg = decode_msg(&read_frame(&mut self.stream)?)?;
+            self.handle_completion(msg)?;
+        }
+    }
+
+    /// Number of submitted-but-unfinished runs.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.len()
     }
 
     /// Submit a graph and block until it completes or fails.
     pub fn run_graph(&mut self, graph: &TaskGraph) -> Result<RunResult> {
-        let name = graph.name.clone();
-        let t0 = std::time::Instant::now();
-        write_frame(&mut self.stream, &encode_msg(&Msg::SubmitGraph { graph: graph.clone() }))?;
-        loop {
-            let msg = decode_msg(&read_frame(&mut self.stream)?)?;
-            match msg {
-                Msg::GraphDone { makespan_us, n_tasks } => {
-                    return Ok(RunResult {
-                        graph_name: name,
+        let run = self.submit(graph)?;
+        self.wait(run)
+    }
+
+    /// File a graph-done / graph-failed under its run; ignore heartbeats.
+    fn handle_completion(&mut self, msg: Msg) -> Result<()> {
+        match msg {
+            Msg::GraphDone { run, makespan_us, n_tasks } => {
+                let Some(pending) = self.in_flight.remove(&run) else {
+                    bail!("graph-done for unknown run {run}");
+                };
+                self.completed.insert(
+                    run,
+                    Ok(RunResult {
+                        run,
+                        graph_name: pending.graph_name,
                         n_tasks,
                         makespan_us,
-                        wall_us: t0.elapsed().as_micros() as u64,
-                    });
-                }
-                Msg::GraphFailed { reason } => return Err(anyhow!("graph failed: {reason}")),
-                Msg::Heartbeat => continue,
-                other => bail!("unexpected message {:?}", other.op()),
+                        wall_us: pending.submitted_at.elapsed().as_micros() as u64,
+                    }),
+                );
             }
+            Msg::GraphFailed { run, reason } => {
+                // Symmetric with GraphDone: a failure for a run this client
+                // never submitted is a protocol violation, not something to
+                // file away unclaimably.
+                if self.in_flight.remove(&run).is_none() {
+                    bail!("graph-failed for unknown run {run}: {reason}");
+                }
+                self.completed.insert(run, Err(anyhow!("graph failed: {reason}")));
+            }
+            Msg::Heartbeat => {}
+            other => bail!("unexpected message {:?}", other.op()),
         }
+        Ok(())
     }
 }

@@ -31,7 +31,7 @@ pub use bag::bag;
 pub use groupby::{groupby, join};
 pub use merge::{merge, merge_slow};
 pub use numpy::numpy;
-pub use suite::{paper_suite, suite_subset_zero_worker, SuiteEntry};
+pub use suite::{concurrent, paper_suite, suite_subset_zero_worker, SuiteEntry, CONCURRENT_MIX_DEFAULT};
 pub use text::{vectorizer, wordbag};
 pub use tree::tree;
 pub use xarray::xarray;

@@ -122,6 +122,29 @@ pub fn suite_subset_zero_worker() -> Vec<SuiteEntry> {
     paper_suite().into_iter().filter(|e| e.zero_worker_ok).collect()
 }
 
+/// Default workload mix for multi-client scenarios: a latency-sensitive
+/// fine-grained graph, a reduction with real data dependencies, and a
+/// moderate array pipeline.
+pub const CONCURRENT_MIX_DEFAULT: &[&str] = &["merge-2000", "tree-9", "xarray-5"];
+
+/// Concurrent-workload scenario: `n_clients` graphs drawn round-robin from
+/// `mix` (specs accepted by [`crate::graphgen::parse`]), renamed so per-run
+/// results are attributable to a client. All graphs use dense `TaskId`s
+/// starting at 0 — exactly the aliasing hazard the multi-graph server must
+/// tolerate.
+pub fn concurrent(n_clients: usize, mix: &[&str]) -> Vec<TaskGraph> {
+    assert!(n_clients > 0, "need at least one client");
+    assert!(!mix.is_empty(), "need at least one spec in the mix");
+    (0..n_clients)
+        .map(|i| {
+            let spec = mix[i % mix.len()];
+            let mut g = parse(spec).expect("concurrent mix specs must be valid");
+            g.name = format!("c{i}:{}", g.name);
+            g
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -159,6 +182,28 @@ mod tests {
         // §VI-D excludes value-dependent graphs: bag/join/text.
         assert!(!sub.iter().any(|e| e.name.starts_with("bag")));
         assert!(!sub.iter().any(|e| e.name.starts_with("vectorizer")));
+    }
+
+    #[test]
+    fn concurrent_cycles_mix_and_renames() {
+        let graphs = concurrent(5, &["merge-10", "tree-3"]);
+        assert_eq!(graphs.len(), 5);
+        assert_eq!(graphs[0].name, "c0:merge-10");
+        assert_eq!(graphs[1].name, "c1:tree-3");
+        assert_eq!(graphs[2].name, "c2:merge-10");
+        assert_eq!(graphs[0].len(), graphs[2].len());
+        // Dense TaskIds recycle across clients — the aliasing hazard.
+        assert_eq!(
+            graphs[0].tasks().first().map(|t| t.id),
+            graphs[2].tasks().first().map(|t| t.id)
+        );
+    }
+
+    #[test]
+    fn default_concurrent_mix_parses() {
+        for g in concurrent(CONCURRENT_MIX_DEFAULT.len(), CONCURRENT_MIX_DEFAULT) {
+            assert!(!g.is_empty());
+        }
     }
 
     #[test]

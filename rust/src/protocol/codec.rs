@@ -1,7 +1,7 @@
 //! Msg ⇄ msgpack conversion, including the task-graph encoding carried by
 //! `submit-graph`. Static message structure throughout (§IV-B).
 
-use super::messages::{Msg, TaskFinishedInfo, TaskInputLoc};
+use super::messages::{Msg, RunId, TaskFinishedInfo, TaskInputLoc};
 use crate::msgpack::{decode, encode, DecodeError, Value};
 use crate::taskgraph::{GraphError, Payload, TaskGraph, TaskId, TaskSpec};
 
@@ -49,6 +49,10 @@ fn get_bin(v: &Value, k: &'static str) -> Result<Vec<u8>, CodecError> {
 
 fn get_task(v: &Value, k: &'static str) -> Result<TaskId, CodecError> {
     Ok(TaskId(get_u64(v, k)? as u32))
+}
+
+fn get_run(v: &Value) -> Result<RunId, CodecError> {
+    Ok(RunId(get_u64(v, "run")? as u32))
 }
 
 // ---------- payload ----------
@@ -171,12 +175,22 @@ pub fn encode_msg(msg: &Msg) -> Vec<u8> {
         }
         Msg::Welcome { id } => fields.push(("id", Value::from(*id))),
         Msg::SubmitGraph { graph } => fields.push(("graph", graph_to_value(graph))),
-        Msg::GraphDone { makespan_us, n_tasks } => {
+        Msg::GraphSubmitted { run, n_tasks } => {
+            fields.push(("run", Value::from(run.0)));
+            fields.push(("n_tasks", Value::from(*n_tasks)));
+        }
+        Msg::GraphDone { run, makespan_us, n_tasks } => {
+            fields.push(("run", Value::from(run.0)));
             fields.push(("makespan_us", Value::from(*makespan_us)));
             fields.push(("n_tasks", Value::from(*n_tasks)));
         }
-        Msg::GraphFailed { reason } => fields.push(("reason", Value::str(reason))),
-        Msg::ComputeTask { task, key, payload, duration_us, output_size, inputs, priority } => {
+        Msg::GraphFailed { run, reason } => {
+            fields.push(("run", Value::from(run.0)));
+            fields.push(("reason", Value::str(reason)));
+        }
+        Msg::ReleaseRun { run } => fields.push(("run", Value::from(run.0))),
+        Msg::ComputeTask { run, task, key, payload, duration_us, output_size, inputs, priority } => {
+            fields.push(("run", Value::from(run.0)));
             fields.push(("task", Value::from(task.0)));
             fields.push(("key", Value::str(key)));
             fields.push(("payload", payload_to_value(payload)));
@@ -200,23 +214,31 @@ pub fn encode_msg(msg: &Msg) -> Vec<u8> {
             fields.push(("priority", Value::Int(*priority)));
         }
         Msg::TaskFinished(info) => {
+            fields.push(("run", Value::from(info.run.0)));
             fields.push(("task", Value::from(info.task.0)));
             fields.push(("nbytes", Value::from(info.nbytes)));
             fields.push(("duration_us", Value::from(info.duration_us)));
         }
-        Msg::TaskErred { task, error } => {
+        Msg::TaskErred { run, task, error } => {
+            fields.push(("run", Value::from(run.0)));
             fields.push(("task", Value::from(task.0)));
             fields.push(("error", Value::str(error)));
         }
-        Msg::StealRequest { task } => fields.push(("task", Value::from(task.0))),
-        Msg::StealResponse { task, ok } => {
+        Msg::StealRequest { run, task } => {
+            fields.push(("run", Value::from(run.0)));
+            fields.push(("task", Value::from(task.0)));
+        }
+        Msg::StealResponse { run, task, ok } => {
+            fields.push(("run", Value::from(run.0)));
             fields.push(("task", Value::from(task.0)));
             fields.push(("ok", Value::Bool(*ok)));
         }
-        Msg::FetchData { task } | Msg::FetchFromServer { task } => {
-            fields.push(("task", Value::from(task.0)))
+        Msg::FetchData { run, task } | Msg::FetchFromServer { run, task } => {
+            fields.push(("run", Value::from(run.0)));
+            fields.push(("task", Value::from(task.0)));
         }
-        Msg::DataReply { task, data } | Msg::DataToServer { task, data } => {
+        Msg::DataReply { run, task, data } | Msg::DataToServer { run, task, data } => {
+            fields.push(("run", Value::from(run.0)));
             fields.push(("task", Value::from(task.0)));
             fields.push(("data", Value::Bin(data.clone())));
         }
@@ -239,11 +261,18 @@ pub fn decode_msg(bytes: &[u8]) -> Result<Msg, CodecError> {
         },
         "welcome" => Msg::Welcome { id: get_u64(&v, "id")? as u32 },
         "submit-graph" => Msg::SubmitGraph { graph: graph_from_value(get(&v, "graph")?)? },
+        "graph-submitted" => {
+            Msg::GraphSubmitted { run: get_run(&v)?, n_tasks: get_u64(&v, "n_tasks")? }
+        }
         "graph-done" => Msg::GraphDone {
+            run: get_run(&v)?,
             makespan_us: get_u64(&v, "makespan_us")?,
             n_tasks: get_u64(&v, "n_tasks")?,
         },
-        "graph-failed" => Msg::GraphFailed { reason: get_str(&v, "reason")? },
+        "graph-failed" => {
+            Msg::GraphFailed { run: get_run(&v)?, reason: get_str(&v, "reason")? }
+        }
+        "release-run" => Msg::ReleaseRun { run: get_run(&v)? },
         "compute-task" => {
             let inputs_v =
                 get(&v, "inputs")?.as_array().ok_or(CodecError::WrongType("inputs"))?;
@@ -258,6 +287,7 @@ pub fn decode_msg(bytes: &[u8]) -> Result<Msg, CodecError> {
                 })
                 .collect::<Result<Vec<_>, CodecError>>()?;
             Msg::ComputeTask {
+                run: get_run(&v)?,
                 task: get_task(&v, "task")?,
                 key: get_str(&v, "key")?,
                 payload: payload_from_value(get(&v, "payload")?)?,
@@ -268,25 +298,36 @@ pub fn decode_msg(bytes: &[u8]) -> Result<Msg, CodecError> {
             }
         }
         "task-finished" => Msg::TaskFinished(TaskFinishedInfo {
+            run: get_run(&v)?,
             task: get_task(&v, "task")?,
             nbytes: get_u64(&v, "nbytes")?,
             duration_us: get_u64(&v, "duration_us")?,
         }),
-        "task-erred" => {
-            Msg::TaskErred { task: get_task(&v, "task")?, error: get_str(&v, "error")? }
+        "task-erred" => Msg::TaskErred {
+            run: get_run(&v)?,
+            task: get_task(&v, "task")?,
+            error: get_str(&v, "error")?,
+        },
+        "steal-request" => Msg::StealRequest { run: get_run(&v)?, task: get_task(&v, "task")? },
+        "steal-response" => Msg::StealResponse {
+            run: get_run(&v)?,
+            task: get_task(&v, "task")?,
+            ok: get_bool(&v, "ok")?,
+        },
+        "fetch-data" => Msg::FetchData { run: get_run(&v)?, task: get_task(&v, "task")? },
+        "data-reply" => Msg::DataReply {
+            run: get_run(&v)?,
+            task: get_task(&v, "task")?,
+            data: get_bin(&v, "data")?,
+        },
+        "fetch-from-server" => {
+            Msg::FetchFromServer { run: get_run(&v)?, task: get_task(&v, "task")? }
         }
-        "steal-request" => Msg::StealRequest { task: get_task(&v, "task")? },
-        "steal-response" => {
-            Msg::StealResponse { task: get_task(&v, "task")?, ok: get_bool(&v, "ok")? }
-        }
-        "fetch-data" => Msg::FetchData { task: get_task(&v, "task")? },
-        "data-reply" => {
-            Msg::DataReply { task: get_task(&v, "task")?, data: get_bin(&v, "data")? }
-        }
-        "fetch-from-server" => Msg::FetchFromServer { task: get_task(&v, "task")? },
-        "data-to-server" => {
-            Msg::DataToServer { task: get_task(&v, "task")?, data: get_bin(&v, "data")? }
-        }
+        "data-to-server" => Msg::DataToServer {
+            run: get_run(&v)?,
+            task: get_task(&v, "task")?,
+            data: get_bin(&v, "data")?,
+        },
         "shutdown" => Msg::Shutdown,
         "heartbeat" => Msg::Heartbeat,
         other => return Err(CodecError::UnknownOp(other.to_string())),
@@ -314,9 +355,12 @@ mod tests {
             data_addr: "127.0.0.1:9123".into(),
         });
         rt(Msg::Welcome { id: 17 });
-        rt(Msg::GraphDone { makespan_us: 123_456, n_tasks: 10_001 });
-        rt(Msg::GraphFailed { reason: "worker died".into() });
+        rt(Msg::GraphSubmitted { run: RunId(3), n_tasks: 10_001 });
+        rt(Msg::GraphDone { run: RunId(3), makespan_us: 123_456, n_tasks: 10_001 });
+        rt(Msg::GraphFailed { run: RunId(7), reason: "worker died".into() });
+        rt(Msg::ReleaseRun { run: RunId(7) });
         rt(Msg::ComputeTask {
+            run: RunId(2),
             task: TaskId(42),
             key: "merge-42".into(),
             payload: Payload::HloReduce { rows: 64, cols: 128, seed: 7 },
@@ -328,16 +372,41 @@ mod tests {
             ],
             priority: -5,
         });
-        rt(Msg::TaskFinished(TaskFinishedInfo { task: TaskId(9), nbytes: 27, duration_us: 6 }));
-        rt(Msg::TaskErred { task: TaskId(3), error: "oom".into() });
-        rt(Msg::StealRequest { task: TaskId(5) });
-        rt(Msg::StealResponse { task: TaskId(5), ok: false });
-        rt(Msg::FetchData { task: TaskId(8) });
-        rt(Msg::DataReply { task: TaskId(8), data: vec![1, 2, 3] });
-        rt(Msg::FetchFromServer { task: TaskId(8) });
-        rt(Msg::DataToServer { task: TaskId(8), data: vec![9; 100] });
+        rt(Msg::TaskFinished(TaskFinishedInfo {
+            run: RunId(2),
+            task: TaskId(9),
+            nbytes: 27,
+            duration_us: 6,
+        }));
+        rt(Msg::TaskErred { run: RunId(0), task: TaskId(3), error: "oom".into() });
+        rt(Msg::StealRequest { run: RunId(1), task: TaskId(5) });
+        rt(Msg::StealResponse { run: RunId(1), task: TaskId(5), ok: false });
+        rt(Msg::FetchData { run: RunId(4), task: TaskId(8) });
+        rt(Msg::DataReply { run: RunId(4), task: TaskId(8), data: vec![1, 2, 3] });
+        rt(Msg::FetchFromServer { run: RunId(4), task: TaskId(8) });
+        rt(Msg::DataToServer { run: RunId(4), task: TaskId(8), data: vec![9; 100] });
         rt(Msg::Shutdown);
         rt(Msg::Heartbeat);
+    }
+
+    #[test]
+    fn run_ids_distinguish_identical_task_ids() {
+        // Same TaskId under two runs must decode to distinct messages —
+        // the wire-level half of the multi-graph aliasing guarantee.
+        let a = Msg::StealRequest { run: RunId(0), task: TaskId(5) };
+        let b = Msg::StealRequest { run: RunId(1), task: TaskId(5) };
+        assert_ne!(a, b);
+        assert_ne!(encode_msg(&a), encode_msg(&b));
+        assert_eq!(decode_msg(&encode_msg(&a)).unwrap(), a);
+        assert_eq!(decode_msg(&encode_msg(&b)).unwrap(), b);
+    }
+
+    #[test]
+    fn task_messages_without_run_are_rejected() {
+        // A pre-RunId peer (or corrupted frame) must surface a typed error,
+        // not silently alias run 0.
+        let v = Value::map(vec![("op", Value::str("steal-request")), ("task", Value::from(5u32))]);
+        assert!(matches!(decode_msg(&encode(&v)), Err(CodecError::Missing("run"))));
     }
 
     #[test]
@@ -406,6 +475,7 @@ mod tests {
         // The per-task message must stay in the hundreds of bytes — it is
         // multiplied by 100k tasks in merge-100K.
         let bytes = encode_msg(&Msg::ComputeTask {
+            run: RunId(41),
             task: TaskId(99_999),
             key: "task-99999".into(),
             payload: Payload::BusyWait,

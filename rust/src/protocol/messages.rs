@@ -4,6 +4,22 @@
 
 use crate::taskgraph::{TaskGraph, TaskId};
 
+/// Server-assigned namespace for one submitted graph.
+///
+/// [`TaskId`]s are dense indices *within* one graph, so they recycle across
+/// submissions; any state that outlives a single graph — worker queues and
+/// data stores, steal bookkeeping, scheduler pools — must key by
+/// `(RunId, TaskId)`. Every protocol message that names a task therefore
+/// also names its run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RunId(pub u32);
+
+impl std::fmt::Display for RunId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "r{}", self.0)
+    }
+}
+
 /// Where to fetch a task input from: the producing worker's data-serving
 /// address (Dask's `who_has`).
 #[derive(Debug, Clone, PartialEq)]
@@ -17,6 +33,7 @@ pub struct TaskInputLoc {
 /// Completion report (worker → server).
 #[derive(Debug, Clone, PartialEq)]
 pub struct TaskFinishedInfo {
+    pub run: RunId,
     pub task: TaskId,
     pub nbytes: u64,
     /// Pure execution time measured by the worker, µs.
@@ -39,14 +56,22 @@ pub enum Msg {
     // ---- graph lifecycle ----
     /// client → server: run this graph.
     SubmitGraph { graph: TaskGraph },
-    /// server → client: all sink tasks finished.
-    GraphDone { makespan_us: u64, n_tasks: u64 },
-    /// server → client: execution failed.
-    GraphFailed { reason: String },
+    /// server → client: graph accepted; all later messages about it carry
+    /// `run`. Clients may pipeline further submissions immediately.
+    GraphSubmitted { run: RunId, n_tasks: u64 },
+    /// server → client: all tasks of `run` finished.
+    GraphDone { run: RunId, makespan_us: u64, n_tasks: u64 },
+    /// server → client: execution of `run` failed.
+    GraphFailed { run: RunId, reason: String },
+    /// server → worker: `run` retired (done or failed) — drop its queued
+    /// tasks and stored outputs. Without this, a long-lived worker's
+    /// `(run, task)`-keyed store would grow without bound across runs.
+    ReleaseRun { run: RunId },
 
     // ---- task execution ----
     /// server → worker: execute a task. Inputs carry `who_has` addresses.
     ComputeTask {
+        run: RunId,
         task: TaskId,
         key: String,
         /// Serialized payload spec (what to run).
@@ -59,25 +84,25 @@ pub enum Msg {
     /// worker → server: task done, output stored locally.
     TaskFinished(TaskFinishedInfo),
     /// worker → server: task raised.
-    TaskErred { task: TaskId, error: String },
+    TaskErred { run: RunId, task: TaskId, error: String },
 
     // ---- stealing (§IV-C retraction protocol) ----
     /// server → worker: try to give task back (not started yet?).
-    StealRequest { task: TaskId },
+    StealRequest { run: RunId, task: TaskId },
     /// worker → server: `ok` iff the task was still queued and is now
     /// retracted; false if it already runs / finished.
-    StealResponse { task: TaskId, ok: bool },
+    StealResponse { run: RunId, task: TaskId, ok: bool },
 
     // ---- data plane ----
     /// worker → worker: send me this task's output.
-    FetchData { task: TaskId },
+    FetchData { run: RunId, task: TaskId },
     /// worker → worker: the requested bytes.
-    DataReply { task: TaskId, data: Vec<u8> },
+    DataReply { run: RunId, task: TaskId, data: Vec<u8> },
     /// server → worker (zero-worker experiments): a client asks for data.
-    FetchFromServer { task: TaskId },
+    FetchFromServer { run: RunId, task: TaskId },
     /// worker → server: requested data (zero worker replies with a small
     /// mocked constant object, §IV-D).
-    DataToServer { task: TaskId, data: Vec<u8> },
+    DataToServer { run: RunId, task: TaskId, data: Vec<u8> },
 
     // ---- lifecycle ----
     /// server → all: shut down cleanly.
@@ -94,8 +119,10 @@ impl Msg {
             Msg::RegisterWorker { .. } => "register-worker",
             Msg::Welcome { .. } => "welcome",
             Msg::SubmitGraph { .. } => "submit-graph",
+            Msg::GraphSubmitted { .. } => "graph-submitted",
             Msg::GraphDone { .. } => "graph-done",
             Msg::GraphFailed { .. } => "graph-failed",
+            Msg::ReleaseRun { .. } => "release-run",
             Msg::ComputeTask { .. } => "compute-task",
             Msg::TaskFinished(..) => "task-finished",
             Msg::TaskErred { .. } => "task-erred",

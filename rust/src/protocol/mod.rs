@@ -18,4 +18,4 @@ mod messages;
 
 pub use codec::{decode_msg, encode_msg, graph_from_value, graph_to_value, CodecError};
 pub use frame::{read_frame, write_frame, FrameError, MAX_FRAME_LEN};
-pub use messages::{Msg, TaskFinishedInfo, TaskInputLoc};
+pub use messages::{Msg, RunId, TaskFinishedInfo, TaskInputLoc};

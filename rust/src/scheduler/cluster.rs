@@ -181,6 +181,20 @@ impl ClusterModel {
         out
     }
 
+    /// Sorted per-worker queue snapshot (diagnostics / invariant tests).
+    pub fn queued_snapshot(&self) -> Vec<(WorkerId, Vec<TaskId>)> {
+        self.workers
+            .iter()
+            .enumerate()
+            .filter(|(_, w)| w.info.is_some())
+            .map(|(idx, w)| {
+                let mut q: Vec<TaskId> = w.queued.iter().copied().collect();
+                q.sort_unstable();
+                (WorkerId(idx as u32), q)
+            })
+            .collect()
+    }
+
     /// Next worker in round-robin order (for input-less tasks).
     pub fn next_round_robin(&mut self) -> Option<WorkerId> {
         let ids: Vec<WorkerId> = self.worker_ids().collect();

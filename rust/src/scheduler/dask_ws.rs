@@ -235,6 +235,14 @@ impl Scheduler for DaskWsScheduler {
     fn take_cost(&mut self) -> SchedCost {
         std::mem::take(&mut self.cost)
     }
+
+    fn queued_tasks(&self) -> Option<Vec<(WorkerId, Vec<TaskId>)>> {
+        Some(self.model.queued_snapshot())
+    }
+
+    fn in_flight_steal_count(&self) -> usize {
+        self.in_flight_steals.len()
+    }
 }
 
 #[cfg(test)]

@@ -159,6 +159,20 @@ pub trait Scheduler: Send {
 
     /// Drain accumulated algorithmic cost counters.
     fn take_cost(&mut self) -> SchedCost;
+
+    /// The scheduler's internal view of per-worker queued (assigned, not
+    /// yet finished) tasks, for diagnostics and invariant tests. `None` for
+    /// schedulers that keep no cluster model (e.g. random).
+    fn queued_tasks(&self) -> Option<Vec<(WorkerId, Vec<TaskId>)>> {
+        None
+    }
+
+    /// Steals emitted but not yet resolved via [`Scheduler::steal_result`].
+    /// A value that never returns to 0 at quiescence indicates the
+    /// execution layer dropped a steal notification.
+    fn in_flight_steal_count(&self) -> usize {
+        0
+    }
 }
 
 /// Construct a scheduler by CLI name.
@@ -167,6 +181,7 @@ pub fn by_name(name: &str, seed: u64) -> Option<Box<dyn Scheduler>> {
         "random" => Some(Box::new(RandomScheduler::new(seed))),
         "ws" => Some(Box::new(WsScheduler::new())),
         "ws-nobalance" => Some(Box::new(WsScheduler::without_balancing())),
+        "ws-lifo" => Some(Box::new(WsScheduler::lifo())),
         "dask-ws" | "dask_ws" => Some(Box::new(DaskWsScheduler::new())),
         _ => None,
     }
@@ -196,6 +211,7 @@ mod tests {
         for (n, kind) in [
             ("random", SchedKind::Random),
             ("ws", SchedKind::WorkStealing),
+            ("ws-lifo", SchedKind::WorkStealing),
             ("dask-ws", SchedKind::WorkStealing),
         ] {
             let s = by_name(n, 1).unwrap();

@@ -27,6 +27,10 @@ pub struct WsScheduler {
     /// Ablation knob: disable the balance/steal pass entirely (pure
     /// locality placement). Exercised by `benches/ablations.rs`.
     balance_enabled: bool,
+    /// Ablation knob: invert priorities so workers pop the *most recently*
+    /// submitted ready task first. Also exercises every execution-layer
+    /// queue against priorities that differ from task ids.
+    lifo: bool,
 }
 
 impl WsScheduler {
@@ -36,12 +40,26 @@ impl WsScheduler {
             in_flight_steals: HashSet::new(),
             cost: SchedCost::default(),
             balance_enabled: true,
+            lifo: false,
         }
     }
 
     /// Locality-only variant without stealing (ablation baseline).
     pub fn without_balancing() -> Self {
         WsScheduler { balance_enabled: false, ..Self::new() }
+    }
+
+    /// LIFO-priority variant (newest ready task first).
+    pub fn lifo() -> Self {
+        WsScheduler { lifo: true, ..Self::new() }
+    }
+
+    fn priority(&self, task: TaskId) -> i64 {
+        if self.lifo {
+            -(task.0 as i64)
+        } else {
+            task.0 as i64
+        }
     }
 
     /// Pick the worker with minimal transfer cost (§IV-C), scanning only
@@ -134,7 +152,7 @@ impl Scheduler for WsScheduler {
         for &t in tasks {
             let w = self.place(t);
             self.model.assign(t, w);
-            out.push(Action::Assign(Assignment { task: t, worker: w, priority: t.0 as i64 }));
+            out.push(Action::Assign(Assignment { task: t, worker: w, priority: self.priority(t) }));
         }
         // "When a new task is scheduled ... the scheduler checks if there
         // are nodes that are under-loaded."
@@ -174,6 +192,14 @@ impl Scheduler for WsScheduler {
 
     fn take_cost(&mut self) -> SchedCost {
         std::mem::take(&mut self.cost)
+    }
+
+    fn queued_tasks(&self) -> Option<Vec<(WorkerId, Vec<TaskId>)>> {
+        Some(self.model.queued_snapshot())
+    }
+
+    fn in_flight_steal_count(&self) -> usize {
+        self.in_flight_steals.len()
     }
 }
 

@@ -14,9 +14,11 @@
 //! baseline on real sockets (DESIGN.md §5).
 
 mod net;
+mod pool;
 mod reactor;
 mod state;
 
 pub use net::{serve, ServerConfig, ServerHandle};
+pub use pool::{SchedulerFactory, SchedulerPool};
 pub use reactor::{Dest, Origin, Reactor, ReactorReport};
-pub use state::{GraphRun, TaskState};
+pub use state::{GraphRun, RunIdAlloc, TaskState};

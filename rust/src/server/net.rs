@@ -8,10 +8,11 @@
 //! messages to per-connection writer queues so a slow peer can never block
 //! the reactor.
 
+use super::pool::SchedulerPool;
 use super::reactor::{Dest, Origin, Reactor, ReactorReport};
 use crate::overhead::RuntimeProfile;
 use crate::protocol::{decode_msg, encode_msg, read_frame, write_frame, FrameError, Msg};
-use crate::scheduler::{self, WorkerId};
+use crate::scheduler::WorkerId;
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -82,9 +83,9 @@ impl ServerHandle {
 
 /// Start the server; returns once the listener is bound.
 pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
-    let scheduler = scheduler::by_name(&config.scheduler, config.seed)
+    let pool = SchedulerPool::new(&config.scheduler, config.seed)
         .ok_or_else(|| anyhow!("unknown scheduler {:?}", config.scheduler))?;
-    let reactor = Reactor::new(scheduler, config.profile.clone(), config.emulate);
+    let reactor = Reactor::new(pool, config.profile.clone(), config.emulate);
 
     let listener = TcpListener::bind(&config.addr)
         .with_context(|| format!("bind {}", config.addr))?;

@@ -1,0 +1,152 @@
+//! Per-run scheduler instances.
+//!
+//! The [`crate::scheduler::Scheduler`] trait is deliberately per-graph (the
+//! paper's model, §IV-A): implementations index their state by dense
+//! [`crate::taskgraph::TaskId`]s. Multi-graph serving therefore cannot share
+//! one scheduler across runs — recycled task ids would alias state. The
+//! pool keeps one isolated scheduler per live [`RunId`], replaying the
+//! cluster membership into each newcomer, which also keeps per-run
+//! scheduling state out of the reactor's dispatch loop.
+
+use crate::protocol::RunId;
+use crate::scheduler::{self, Scheduler, WorkerInfo};
+use std::collections::HashMap;
+
+/// Builds one scheduler instance from a (run-decorrelated) seed.
+pub type SchedulerFactory = Box<dyn Fn(u64) -> Box<dyn Scheduler> + Send>;
+
+/// One scheduler per live run, all built from the same factory.
+pub struct SchedulerPool {
+    factory: SchedulerFactory,
+    seed: u64,
+    workers: Vec<WorkerInfo>,
+    scheds: HashMap<RunId, Box<dyn Scheduler>>,
+}
+
+impl SchedulerPool {
+    /// Pool over a named algorithm. Validates `name` eagerly (so a bad CLI
+    /// flag fails at startup, not at first submission).
+    pub fn new(name: &str, seed: u64) -> Option<SchedulerPool> {
+        scheduler::by_name(name, seed)?;
+        let name = name.to_string();
+        Some(Self::with_factory(
+            Box::new(move |s| scheduler::by_name(&name, s).expect("validated above")),
+            seed,
+        ))
+    }
+
+    /// Pool over an arbitrary factory (tests inject probe schedulers here).
+    pub fn with_factory(factory: SchedulerFactory, seed: u64) -> SchedulerPool {
+        SchedulerPool { factory, seed, workers: Vec::new(), scheds: HashMap::new() }
+    }
+
+    /// Record a worker and propagate it to every live scheduler.
+    pub fn add_worker(&mut self, info: WorkerInfo) {
+        self.workers.push(info);
+        for s in self.scheds.values_mut() {
+            s.add_worker(info);
+        }
+    }
+
+    /// Stop replaying a (disconnected) worker into newly created
+    /// schedulers. Live schedulers are not told — the reactor fails fast on
+    /// assignments to dead workers — but every *future* run must not see
+    /// it, or one crash would doom most subsequent submissions.
+    pub fn remove_worker(&mut self, id: crate::scheduler::WorkerId) {
+        self.workers.retain(|w| w.id != id);
+    }
+
+    /// Instantiate the scheduler for a new run: fresh algorithm state,
+    /// current cluster membership, run-decorrelated seed.
+    pub fn create(&mut self, run: RunId, graph: &crate::taskgraph::TaskGraph) {
+        let mut s = (self.factory)(self.seed.wrapping_add(run.0 as u64));
+        for &w in &self.workers {
+            s.add_worker(w);
+        }
+        s.graph_submitted(graph);
+        let prev = self.scheds.insert(run, s);
+        debug_assert!(prev.is_none(), "run id {run} reused while still live");
+    }
+
+    pub fn get(&mut self, run: RunId) -> Option<&mut Box<dyn Scheduler>> {
+        self.scheds.get_mut(&run)
+    }
+
+    /// Immutable access (introspection / tests).
+    pub fn peek(&self, run: RunId) -> Option<&dyn Scheduler> {
+        self.scheds.get(&run).map(|s| s.as_ref())
+    }
+
+    /// Drop a completed/failed run's scheduler.
+    pub fn remove(&mut self, run: RunId) {
+        self.scheds.remove(&run);
+    }
+
+    pub fn live_runs(&self) -> usize {
+        self.scheds.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graphgen::merge;
+    use crate::scheduler::{Action, WorkerId};
+
+    fn info(i: u32) -> WorkerInfo {
+        WorkerInfo { id: WorkerId(i), ncores: 1, node: 0 }
+    }
+
+    #[test]
+    fn bad_name_rejected_eagerly() {
+        assert!(SchedulerPool::new("fifo", 1).is_none());
+        assert!(SchedulerPool::new("ws", 1).is_some());
+    }
+
+    #[test]
+    fn runs_get_isolated_schedulers() {
+        let mut pool = SchedulerPool::new("ws", 42).unwrap();
+        pool.add_worker(info(0));
+        pool.add_worker(info(1));
+        let (ra, rb) = (RunId(0), RunId(1));
+        let (ga, gb) = (merge(4), merge(8));
+        pool.create(ra, &ga);
+        pool.create(rb, &gb);
+        assert_eq!(pool.live_runs(), 2);
+        // Same TaskIds scheduled under both runs: each scheduler only sees
+        // its own queue state.
+        let mut out = Vec::new();
+        pool.get(ra).unwrap().tasks_ready(&ga.roots(), &mut out);
+        let a_assigns = out.iter().filter(|a| matches!(a, Action::Assign(_))).count();
+        assert_eq!(a_assigns, 4);
+        out.clear();
+        pool.get(rb).unwrap().tasks_ready(&gb.roots(), &mut out);
+        let b_assigns = out.iter().filter(|a| matches!(a, Action::Assign(_))).count();
+        assert_eq!(b_assigns, 8);
+        let qa: usize = pool.peek(ra).unwrap().queued_tasks().unwrap().iter().map(|(_, q)| q.len()).sum();
+        let qb: usize = pool.peek(rb).unwrap().queued_tasks().unwrap().iter().map(|(_, q)| q.len()).sum();
+        assert_eq!((qa, qb), (4, 8), "no cross-run aliasing of TaskIds");
+        pool.remove(ra);
+        assert!(pool.get(ra).is_none());
+        assert_eq!(pool.live_runs(), 1);
+    }
+
+    #[test]
+    fn late_workers_propagate_to_live_schedulers() {
+        let mut pool = SchedulerPool::new("ws", 7).unwrap();
+        pool.add_worker(info(0));
+        let g = merge(6);
+        pool.create(RunId(0), &g);
+        pool.add_worker(info(1));
+        let mut out = Vec::new();
+        pool.get(RunId(0)).unwrap().tasks_ready(&g.roots(), &mut out);
+        let used: std::collections::HashSet<WorkerId> = out
+            .iter()
+            .filter_map(|a| match a {
+                Action::Assign(a) => Some(a.worker),
+                _ => None,
+            })
+            .collect();
+        assert!(used.contains(&WorkerId(1)), "late worker must be schedulable: {used:?}");
+    }
+}

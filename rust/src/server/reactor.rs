@@ -7,13 +7,21 @@
 //! Pure state machine: [`Reactor::on_message`] consumes one inbound message
 //! and appends outbound `(Dest, Msg)` pairs; no I/O happens here. The TCP
 //! layer ([`super::net`]) and the integration tests drive it identically.
+//!
+//! Multi-graph serving: the reactor keeps one [`GraphRun`] per live
+//! [`RunId`] and one scheduler per run (via [`SchedulerPool`]), so any
+//! number of clients can submit graphs concurrently — recycled dense
+//! `TaskId`s can never alias state across runs because every task-bearing
+//! message on the wire names its run.
 
-use super::state::{GraphRun, TaskState};
+use super::pool::SchedulerPool;
+use super::state::{GraphRun, RunIdAlloc, TaskState};
 use crate::overhead::RuntimeProfile;
-use crate::protocol::{Msg, TaskInputLoc};
+use crate::protocol::{Msg, RunId, TaskInputLoc};
 use crate::scheduler::{Action, Scheduler, WorkerId, WorkerInfo};
 use crate::taskgraph::TaskId;
 use crate::util::timing::{busy_wait_us, Stopwatch};
+use std::collections::HashMap;
 
 /// Message destination, resolved to a socket by the transport layer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -32,9 +40,13 @@ pub enum Origin {
     Worker(WorkerId),
 }
 
-/// Post-run statistics for one graph.
+/// Post-run statistics for one graph. Message and steal counters are
+/// per-run (attributed to the run the message named), so concurrent graphs
+/// get independent reports.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ReactorReport {
+    pub run: RunId,
+    pub client: u32,
     pub graph_name: String,
     pub n_tasks: u64,
     pub makespan_us: u64,
@@ -55,7 +67,7 @@ struct WorkerMeta {
 
 /// The reactor state machine.
 pub struct Reactor {
-    scheduler: Box<dyn Scheduler>,
+    pool: SchedulerPool,
     profile: RuntimeProfile,
     /// Busy-wait the profile's costs on the hot path (Dask emulation).
     emulate: bool,
@@ -63,31 +75,66 @@ pub struct Reactor {
     workers: Vec<WorkerMeta>,
     worker_addrs: Vec<String>,
     n_clients: u32,
-    run: Option<GraphRun>,
+    runs: HashMap<RunId, GraphRun>,
+    run_ids: RunIdAlloc,
     reports: Vec<ReactorReport>,
-    steals_attempted: u64,
-    steals_failed: u64,
-    msgs_in: u64,
-    msgs_out: u64,
     actions_buf: Vec<Action>,
 }
 
+/// Build a compute-task message with `who_has` input locations. Free
+/// function so callers can hold a `&mut GraphRun` alongside the addr table.
+fn compute_task_msg(
+    run: &GraphRun,
+    worker_addrs: &[String],
+    run_id: RunId,
+    task: TaskId,
+    worker: WorkerId,
+    priority: i64,
+) -> Msg {
+    let spec = run.graph.task(task);
+    let inputs = spec
+        .inputs
+        .iter()
+        .map(|&input| {
+            let holders = &run.who_has[input.idx()];
+            let addr = holders
+                .first()
+                .map(|&h| {
+                    if h == worker {
+                        String::new() // local
+                    } else {
+                        worker_addrs.get(h.idx()).cloned().unwrap_or_default()
+                    }
+                })
+                .unwrap_or_default();
+            TaskInputLoc { task: input, addr, nbytes: run.graph.task(input).output_size }
+        })
+        .collect();
+    Msg::ComputeTask {
+        run: run_id,
+        task,
+        key: spec.key.clone(),
+        payload: spec.payload.clone(),
+        duration_us: spec.duration_us,
+        output_size: spec.output_size,
+        inputs,
+        priority,
+    }
+}
+
 impl Reactor {
-    pub fn new(scheduler: Box<dyn Scheduler>, profile: RuntimeProfile, emulate: bool) -> Reactor {
+    pub fn new(pool: SchedulerPool, profile: RuntimeProfile, emulate: bool) -> Reactor {
         Reactor {
-            scheduler,
+            pool,
             profile,
             emulate,
             clock: Stopwatch::start(),
             workers: Vec::new(),
             worker_addrs: Vec::new(),
             n_clients: 0,
-            run: None,
+            runs: HashMap::new(),
+            run_ids: RunIdAlloc::default(),
             reports: Vec::new(),
-            steals_attempted: 0,
-            steals_failed: 0,
-            msgs_in: 0,
-            msgs_out: 0,
             actions_buf: Vec::new(),
         }
     }
@@ -101,6 +148,21 @@ impl Reactor {
         &self.reports
     }
 
+    /// Number of graphs currently executing.
+    pub fn live_runs(&self) -> usize {
+        self.runs.len()
+    }
+
+    /// Bookkeeping state of a live run (tests / introspection).
+    pub fn run_state(&self, run: RunId) -> Option<&GraphRun> {
+        self.runs.get(&run)
+    }
+
+    /// The scheduler instance serving a live run (tests / introspection).
+    pub fn scheduler_view(&self, run: RunId) -> Option<&dyn Scheduler> {
+        self.pool.peek(run)
+    }
+
     /// Charge emulated runtime cost (no-op unless `emulate`).
     fn charge(&self, us: f64) {
         if self.emulate && us >= 1.0 {
@@ -112,71 +174,142 @@ impl Reactor {
         self.charge(self.profile.msg_cost_us(approx_bytes));
     }
 
-    /// Drain scheduler actions into protocol messages. Iterates because a
-    /// rejected steal feeds back into the scheduler which may emit more
-    /// actions; bounded since every round retires at least one action.
-    fn flush_actions(&mut self, out: &mut Vec<(Dest, Msg)>) {
+    /// Tell every connected worker to drop a retired run's queued tasks and
+    /// stored outputs; without this a long-lived worker leaks every run.
+    fn release_run(&self, run_id: RunId, out: &mut Vec<(Dest, Msg)>) {
+        for (i, meta) in self.workers.iter().enumerate() {
+            if meta.connected {
+                out.push((Dest::Worker(WorkerId(i as u32)), Msg::ReleaseRun { run: run_id }));
+            }
+        }
+    }
+
+    /// Abort a run: drop its state and scheduler, tell its client.
+    fn fail_run(&mut self, run_id: RunId, reason: String, out: &mut Vec<(Dest, Msg)>) {
+        self.pool.remove(run_id);
+        if let Some(run) = self.runs.remove(&run_id) {
+            out.push((Dest::Client(run.client), Msg::GraphFailed { run: run_id, reason }));
+            self.release_run(run_id, out);
+        }
+    }
+
+    /// Complete a run if all its tasks finished: emit report + GraphDone.
+    fn maybe_complete(&mut self, run_id: RunId, out: &mut Vec<(Dest, Msg)>) {
+        let done = self.runs.get(&run_id).map(|r| r.is_done()).unwrap_or(false);
+        if !done {
+            return;
+        }
+        let mut run = self.runs.remove(&run_id).expect("checked above");
+        self.pool.remove(run_id);
+        run.msgs_out += 1 + self.n_workers() as u64; // GraphDone + ReleaseRuns below
+        let makespan_us = self.clock.elapsed_us().saturating_sub(run.submitted_at_us);
+        let n_tasks = run.graph.len() as u64;
+        self.reports.push(ReactorReport {
+            run: run_id,
+            client: run.client,
+            graph_name: run.graph.name.clone(),
+            n_tasks,
+            makespan_us,
+            // max(1): an empty graph must not report NaN.
+            aot_us: makespan_us as f64 / n_tasks.max(1) as f64,
+            steals_attempted: run.steals_attempted,
+            steals_failed: run.steals_failed,
+            msgs_in: run.msgs_in,
+            msgs_out: run.msgs_out,
+        });
+        out.push((Dest::Client(run.client), Msg::GraphDone { run: run_id, makespan_us, n_tasks }));
+        self.release_run(run_id, out);
+    }
+
+    /// Drain scheduler actions for one run into protocol messages. Iterates
+    /// because a rejected steal feeds back into the scheduler which may
+    /// emit more actions; bounded since every round retires at least one
+    /// action.
+    fn flush_actions(&mut self, run_id: RunId, out: &mut Vec<(Dest, Msg)>) {
         let mut rounds = 0;
         while !self.actions_buf.is_empty() {
             rounds += 1;
             debug_assert!(rounds < 10_000, "steal feedback failed to converge");
             // Charge the scheduler's algorithmic work at the profile's
             // rates (GIL: burns reactor time inline, exactly like CPython).
-            let cost = self.scheduler.take_cost();
-            let kind = self.scheduler.kind();
+            let (cost, kind) = match self.pool.get(run_id) {
+                Some(s) => (s.take_cost(), s.kind()),
+                None => {
+                    self.actions_buf.clear();
+                    return;
+                }
+            };
             self.charge(cost.to_us(&self.profile, kind));
 
             let actions = std::mem::take(&mut self.actions_buf);
             for action in &actions {
                 match *action {
                     Action::Assign(a) => {
-                        // Assigning to a dead worker would strand the graph
+                        // Assigning to a dead worker would strand the run
                         // (the schedulers are not told about disconnects) —
-                        // fail fast instead of silently dropping.
+                        // fail that run fast instead of silently dropping.
                         let connected = self
                             .workers
                             .get(a.worker.idx())
                             .map(|w| w.connected)
                             .unwrap_or(false);
                         if !connected {
-                            if let Some(run) = self.run.take() {
-                                self.msgs_out += 1;
-                                out.push((
-                                    Dest::Client(run.client),
-                                    Msg::GraphFailed {
-                                        reason: format!(
-                                            "scheduler assigned {} to disconnected worker {}",
-                                            a.task, a.worker
-                                        ),
-                                    },
-                                ));
-                            }
+                            self.fail_run(
+                                run_id,
+                                format!(
+                                    "scheduler assigned {} to disconnected worker {}",
+                                    a.task, a.worker
+                                ),
+                                out,
+                            );
                             self.actions_buf.clear();
                             return;
                         }
-                        let msg = self.compute_task_msg(a.task, a.worker, a.priority);
-                        let run = self.run.as_mut().expect("assign without graph");
-                        run.states[a.task.idx()] = TaskState::Assigned(a.worker);
+                        let msg = {
+                            let run =
+                                self.runs.get_mut(&run_id).expect("assign for dead run");
+                            run.states[a.task.idx()] = TaskState::Assigned(a.worker);
+                            run.priorities[a.task.idx()] = a.priority;
+                            run.msgs_out += 1;
+                            compute_task_msg(
+                                run,
+                                &self.worker_addrs,
+                                run_id,
+                                a.task,
+                                a.worker,
+                                a.priority,
+                            )
+                        };
                         self.charge(self.profile.task_transition_us);
                         self.charge_msg(192);
-                        self.msgs_out += 1;
                         out.push((Dest::Worker(a.worker), msg));
                     }
                     Action::Steal { task, from, to } => {
-                        let run = self.run.as_mut().expect("steal without graph");
                         // Only steal tasks still assigned; scheduler models
                         // can lag one event behind.
-                        if run.states[task.idx()] == TaskState::Assigned(from) {
-                            run.states[task.idx()] = TaskState::Stealing { from, to };
-                            self.steals_attempted += 1;
+                        let stealable = {
+                            let run =
+                                self.runs.get_mut(&run_id).expect("steal for dead run");
+                            if run.states[task.idx()] == TaskState::Assigned(from) {
+                                run.states[task.idx()] = TaskState::Stealing { from, to };
+                                run.steals_attempted += 1;
+                                run.msgs_out += 1;
+                                true
+                            } else {
+                                false
+                            }
+                        };
+                        if stealable {
                             self.charge(self.profile.task_transition_us);
                             self.charge_msg(64);
-                            self.msgs_out += 1;
-                            out.push((Dest::Worker(from), Msg::StealRequest { task }));
+                            out.push((Dest::Worker(from), Msg::StealRequest { run: run_id, task }));
                         } else {
                             // Already finished/stolen — report as failed.
                             let mut buf = Vec::new();
-                            self.scheduler.steal_result(task, from, to, false, &mut buf);
+                            self.pool
+                                .get(run_id)
+                                .expect("scheduler for live run")
+                                .steal_result(task, from, to, false, &mut buf);
                             self.actions_buf.extend(buf);
                         }
                     }
@@ -185,48 +318,13 @@ impl Reactor {
         }
     }
 
-    /// Build a compute-task message with `who_has` input locations.
-    fn compute_task_msg(&self, task: TaskId, worker: WorkerId, priority: i64) -> Msg {
-        let run = self.run.as_ref().expect("no active graph");
-        let spec = run.graph.task(task);
-        let inputs = spec
-            .inputs
-            .iter()
-            .map(|&input| {
-                let holders = &run.who_has[input.idx()];
-                let addr = holders
-                    .first()
-                    .map(|&h| {
-                        if h == worker {
-                            String::new() // local
-                        } else {
-                            self.worker_addrs.get(h.idx()).cloned().unwrap_or_default()
-                        }
-                    })
-                    .unwrap_or_default();
-                TaskInputLoc { task: input, addr, nbytes: run.graph.task(input).output_size }
-            })
-            .collect();
-        Msg::ComputeTask {
-            task,
-            key: spec.key.clone(),
-            payload: spec.payload.clone(),
-            duration_us: spec.duration_us,
-            output_size: spec.output_size,
-            inputs,
-            priority,
-        }
-    }
-
     /// Feed one inbound message; outbound messages are appended to `out`.
     pub fn on_message(&mut self, from: Origin, msg: Msg, out: &mut Vec<(Dest, Msg)>) {
-        self.msgs_in += 1;
         self.charge_msg(128);
         match (from, msg) {
             (Origin::Unregistered { .. }, Msg::RegisterClient { .. }) => {
                 let id = self.n_clients;
                 self.n_clients += 1;
-                self.msgs_out += 1;
                 out.push((Dest::Client(id), Msg::Welcome { id }));
             }
             (Origin::Unregistered { .. }, Msg::RegisterWorker { ncores, node, data_addr, .. }) => {
@@ -234,93 +332,138 @@ impl Reactor {
                 let info = WorkerInfo { id, ncores, node };
                 self.workers.push(WorkerMeta { info, connected: true });
                 self.worker_addrs.push(data_addr);
-                self.scheduler.add_worker(info);
-                self.msgs_out += 1;
+                self.pool.add_worker(info);
                 out.push((Dest::Worker(id), Msg::Welcome { id: id.0 }));
             }
             (Origin::Client(client), Msg::SubmitGraph { graph }) => {
-                assert!(self.run.is_none(), "one graph at a time (paper's benchmark model)");
                 self.charge(self.profile.task_transition_us * graph.len() as f64 * 0.2);
-                let run = GraphRun::new(graph, client, self.clock.elapsed_us());
-                self.scheduler.graph_submitted(&run.graph);
+                let run_id = self.run_ids.allocate();
+                let mut run = GraphRun::new(graph, client, self.clock.elapsed_us());
+                run.msgs_in += 1; // the submission itself
+                run.msgs_out += 1; // the GraphSubmitted below
+                let n_tasks = run.graph.len() as u64;
+                self.pool.create(run_id, &run.graph);
                 let roots = run.ready_roots();
-                self.run = Some(run);
-                self.scheduler.tasks_ready(&roots, &mut self.actions_buf);
-                self.flush_actions(out);
+                self.runs.insert(run_id, run);
+                out.push((Dest::Client(client), Msg::GraphSubmitted { run: run_id, n_tasks }));
+                self.pool
+                    .get(run_id)
+                    .expect("just created")
+                    .tasks_ready(&roots, &mut self.actions_buf);
+                self.flush_actions(run_id, out);
+                // Degenerate empty graph: done before any task report.
+                self.maybe_complete(run_id, out);
             }
             (Origin::Worker(worker), Msg::TaskFinished(info)) => {
                 self.charge(self.profile.task_transition_us);
-                let Some(run) = self.run.as_mut() else { return };
-                let newly_ready = run.finish(info.task, worker);
-                self.scheduler.task_finished(
-                    info.task,
-                    worker,
-                    info.nbytes,
-                    info.duration_us,
-                    &mut self.actions_buf,
-                );
+                let newly_ready = {
+                    let Some(run) = self.runs.get_mut(&info.run) else { return };
+                    if info.task.idx() >= run.graph.len() {
+                        log::warn!("task-finished for out-of-range {} in {}", info.task, info.run);
+                        return;
+                    }
+                    run.msgs_in += 1;
+                    run.finish(info.task, worker)
+                };
                 if !newly_ready.is_empty() {
                     self.charge(self.profile.task_transition_us * newly_ready.len() as f64);
-                    self.scheduler.tasks_ready(&newly_ready, &mut self.actions_buf);
                 }
-                self.flush_actions(out);
-                let run = self.run.as_ref().unwrap();
-                if run.is_done() {
-                    let makespan_us = self.clock.elapsed_us() - run.submitted_at_us;
-                    let n_tasks = run.graph.len() as u64;
-                    let report = ReactorReport {
-                        graph_name: run.graph.name.clone(),
-                        n_tasks,
-                        makespan_us,
-                        aot_us: makespan_us as f64 / n_tasks as f64,
-                        steals_attempted: self.steals_attempted,
-                        steals_failed: self.steals_failed,
-                        msgs_in: self.msgs_in,
-                        msgs_out: self.msgs_out,
-                    };
-                    let client = run.client;
-                    self.reports.push(report);
-                    self.run = None;
-                    self.msgs_out += 1;
-                    out.push((Dest::Client(client), Msg::GraphDone { makespan_us, n_tasks }));
+                {
+                    let Some(sched) = self.pool.get(info.run) else { return };
+                    sched.task_finished(
+                        info.task,
+                        worker,
+                        info.nbytes,
+                        info.duration_us,
+                        &mut self.actions_buf,
+                    );
+                    if !newly_ready.is_empty() {
+                        sched.tasks_ready(&newly_ready, &mut self.actions_buf);
+                    }
                 }
+                self.flush_actions(info.run, out);
+                self.maybe_complete(info.run, out);
             }
-            (Origin::Worker(worker), Msg::StealResponse { task, ok }) => {
-                let Some(run) = self.run.as_mut() else { return };
-                let TaskState::Stealing { from, to } = run.states[task.idx()] else {
-                    // Finish raced ahead (possible only across connections);
-                    // treat as failed steal.
-                    self.scheduler.steal_result(task, worker, worker, false, &mut self.actions_buf);
-                    self.flush_actions(out);
+            (Origin::Worker(worker), Msg::StealResponse { run: run_id, task, ok }) => {
+                let Some(run) = self.runs.get_mut(&run_id) else { return };
+                if task.idx() >= run.graph.len() {
                     return;
-                };
-                debug_assert_eq!(from, worker);
-                if ok {
-                    // Retracted: reassign to the steal target.
-                    run.states[task.idx()] = TaskState::Assigned(to);
-                    self.scheduler.steal_result(task, from, to, true, &mut self.actions_buf);
-                    let msg = self.compute_task_msg(task, to, task.0 as i64);
-                    self.charge(self.profile.task_transition_us);
-                    self.charge_msg(192);
-                    self.msgs_out += 1;
-                    out.push((Dest::Worker(to), msg));
-                } else {
-                    self.steals_failed += 1;
-                    run.states[task.idx()] = TaskState::Assigned(from);
-                    self.scheduler.steal_result(task, from, to, false, &mut self.actions_buf);
                 }
-                self.flush_actions(out);
+                run.msgs_in += 1;
+                match run.states[task.idx()] {
+                    TaskState::Stealing { from, to } => {
+                        debug_assert_eq!(from, worker);
+                        if ok {
+                            // Retracted: the victim has given the task up.
+                            // Reassign to the steal target with the same
+                            // scheduler-chosen priority — unless the target
+                            // died while the retraction was in flight, in
+                            // which case re-land it on the (live) victim
+                            // rather than stranding the run on a dead
+                            // worker whose messages go nowhere.
+                            let to_alive = self
+                                .workers
+                                .get(to.idx())
+                                .map(|m| m.connected)
+                                .unwrap_or(false);
+                            let target = if to_alive { to } else { from };
+                            run.states[task.idx()] = TaskState::Assigned(target);
+                            run.msgs_out += 1;
+                            if !to_alive {
+                                run.steals_failed += 1;
+                            }
+                            let priority = run.priorities[task.idx()];
+                            let msg = compute_task_msg(
+                                run,
+                                &self.worker_addrs,
+                                run_id,
+                                task,
+                                target,
+                                priority,
+                            );
+                            self.pool
+                                .get(run_id)
+                                .expect("scheduler for live run")
+                                .steal_result(task, from, to, to_alive, &mut self.actions_buf);
+                            self.charge(self.profile.task_transition_us);
+                            self.charge_msg(192);
+                            out.push((Dest::Worker(target), msg));
+                        } else {
+                            run.steals_failed += 1;
+                            run.states[task.idx()] = TaskState::Assigned(from);
+                            self.pool
+                                .get(run_id)
+                                .expect("scheduler for live run")
+                                .steal_result(task, from, to, false, &mut self.actions_buf);
+                        }
+                    }
+                    _ => {
+                        // The finish beat the retraction across connections.
+                        // Report the steal's *real* endpoints (recorded by
+                        // `GraphRun::finish` before the state was
+                        // overwritten), not `(worker, worker)` — otherwise
+                        // the scheduler's optimistic-move undo is a no-op
+                        // and its load model drifts.
+                        let (from, to) =
+                            run.raced_steals.remove(&task).unwrap_or((worker, worker));
+                        run.steals_failed += 1;
+                        self.pool
+                            .get(run_id)
+                            .expect("scheduler for live run")
+                            .steal_result(task, from, to, false, &mut self.actions_buf);
+                    }
+                }
+                self.flush_actions(run_id, out);
             }
-            (Origin::Worker(_), Msg::TaskErred { task, error }) => {
-                let Some(run) = self.run.take() else { return };
-                let client = run.client;
-                self.msgs_out += 1;
-                out.push((
-                    Dest::Client(client),
-                    Msg::GraphFailed {
-                        reason: format!("task {} ({}) erred: {error}", task, run.graph.task(task).key),
-                    },
-                ));
+            (Origin::Worker(_), Msg::TaskErred { run: run_id, task, error }) => {
+                let reason = match self.runs.get(&run_id) {
+                    Some(run) if task.idx() < run.graph.len() => {
+                        format!("task {} ({}) erred: {error}", task, run.graph.task(task).key)
+                    }
+                    Some(_) => format!("task {task} erred: {error}"),
+                    None => return,
+                };
+                self.fail_run(run_id, reason, out);
             }
             (Origin::Worker(w), Msg::DataToServer { .. }) => {
                 // Zero-worker data fetches terminate here (mock payloads).
@@ -335,23 +478,50 @@ impl Reactor {
 
     /// A registered peer disconnected.
     pub fn on_disconnect(&mut self, origin: Origin, out: &mut Vec<(Dest, Msg)>) {
-        if let Origin::Worker(w) = origin {
-            if let Some(meta) = self.workers.get_mut(w.idx()) {
-                meta.connected = false;
-            }
-            if let Some(run) = self.run.take() {
-                let lost = run.tasks_on(w);
-                if !lost.is_empty() || run.who_has.iter().flatten().any(|&h| h == w) {
-                    self.msgs_out += 1;
-                    out.push((
-                        Dest::Client(run.client),
-                        Msg::GraphFailed { reason: format!("worker {w} disconnected with {} tasks", lost.len()) },
-                    ));
-                } else {
-                    // Worker held nothing for this run; keep going.
-                    self.run = Some(run);
+        match origin {
+            Origin::Worker(w) => {
+                if let Some(meta) = self.workers.get_mut(w.idx()) {
+                    meta.connected = false;
+                }
+                // New runs must not be scheduled onto the dead worker: the
+                // pool would otherwise replay it into every future
+                // scheduler, failing most submissions at first placement.
+                self.pool.remove_worker(w);
+                // Fail exactly the runs that depend on this worker
+                // (assigned tasks or stored outputs); others keep going.
+                let affected: Vec<(RunId, usize)> = self
+                    .runs
+                    .iter()
+                    .filter_map(|(&id, r)| {
+                        r.involves_worker(w).then(|| (id, r.tasks_on(w).len()))
+                    })
+                    .collect();
+                for (run_id, lost) in affected {
+                    self.fail_run(
+                        run_id,
+                        format!("worker {w} disconnected with {lost} tasks"),
+                        out,
+                    );
                 }
             }
+            Origin::Client(c) => {
+                // Nobody is waiting for these results any more; reclaim the
+                // per-run scheduler state AND the workers' per-run state —
+                // otherwise an abandoned run keeps executing and its
+                // outputs leak on the workers forever.
+                let orphaned: Vec<RunId> = self
+                    .runs
+                    .iter()
+                    .filter(|(_, r)| r.client == c)
+                    .map(|(&id, _)| id)
+                    .collect();
+                for run_id in orphaned {
+                    self.pool.remove(run_id);
+                    self.runs.remove(&run_id);
+                    self.release_run(run_id, out);
+                }
+            }
+            Origin::Unregistered { .. } => {}
         }
     }
 }
@@ -360,25 +530,33 @@ impl Reactor {
 mod tests {
     use super::*;
     use crate::graphgen::{merge, tree};
+    use crate::overhead::SchedKind;
     use crate::protocol::TaskFinishedInfo;
-    use crate::scheduler;
+    use crate::scheduler::{Assignment, SchedCost};
     use crate::taskgraph::TaskGraph;
     use std::collections::HashMap;
+    use std::sync::{Arc, Mutex};
 
     fn reactor(sched: &str) -> Reactor {
         Reactor::new(
-            scheduler::by_name(sched, 42).unwrap(),
+            SchedulerPool::new(sched, 42).unwrap(),
             RuntimeProfile::rust(),
             false,
         )
     }
 
-    fn register(r: &mut Reactor, n_workers: u32) -> Vec<(Dest, Msg)> {
+    fn register(r: &mut Reactor, n_clients: u32, n_workers: u32) -> Vec<(Dest, Msg)> {
         let mut out = Vec::new();
-        r.on_message(Origin::Unregistered { conn: 0 }, Msg::RegisterClient { name: "c".into() }, &mut out);
+        for c in 0..n_clients {
+            r.on_message(
+                Origin::Unregistered { conn: c as u64 },
+                Msg::RegisterClient { name: format!("c{c}") },
+                &mut out,
+            );
+        }
         for i in 0..n_workers {
             r.on_message(
-                Origin::Unregistered { conn: 1 + i as u64 },
+                Origin::Unregistered { conn: 100 + i as u64 },
                 Msg::RegisterWorker {
                     name: format!("w{i}"),
                     ncores: 1,
@@ -391,37 +569,62 @@ mod tests {
         out
     }
 
-    /// Drive a graph to completion with instantly-finishing fake workers.
-    /// Returns (makespan report, per-worker executed counts).
-    fn drive(r: &mut Reactor, graph: TaskGraph) -> (ReactorReport, HashMap<WorkerId, u64>) {
+    /// Drive one or more graphs to completion with instantly-finishing fake
+    /// workers, interleaving the per-worker FIFO streams round-robin so
+    /// concurrent runs' `TaskFinished` messages arrive interleaved.
+    /// Returns (completed runs, per-(run,worker) executed counts).
+    fn drive_many(
+        r: &mut Reactor,
+        submissions: Vec<(u32, TaskGraph)>,
+    ) -> (HashMap<RunId, (u32, u64)>, HashMap<(RunId, WorkerId), u64>) {
         let mut out = Vec::new();
-        r.on_message(Origin::Client(0), Msg::SubmitGraph { graph }, &mut out);
-        let mut executed: HashMap<WorkerId, u64> = HashMap::new();
-        let mut done = None;
+        let n_graphs = submissions.len();
+        for (client, graph) in submissions {
+            r.on_message(Origin::Client(client), Msg::SubmitGraph { graph }, &mut out);
+        }
+        let mut executed: HashMap<(RunId, WorkerId), u64> = HashMap::new();
+        let mut done: HashMap<RunId, (u32, u64)> = HashMap::new();
         // Worker inboxes: FIFO per worker, like a TCP stream.
         let mut inboxes: HashMap<WorkerId, Vec<Msg>> = HashMap::new();
+        let mut rr: Vec<WorkerId> = Vec::new();
+        let mut guard = 0u64;
         loop {
+            guard += 1;
+            assert!(guard < 10_000_000, "drive loop stuck");
             for (dest, msg) in std::mem::take(&mut out) {
                 match dest {
-                    Dest::Worker(w) => inboxes.entry(w).or_default().push(msg),
-                    Dest::Client(_) => {
-                        if let Msg::GraphDone { .. } = msg {
-                            done = Some(msg);
+                    Dest::Worker(w) => {
+                        if !rr.contains(&w) {
+                            rr.push(w);
+                        }
+                        inboxes.entry(w).or_default().push(msg);
+                    }
+                    Dest::Client(c) => {
+                        if let Msg::GraphDone { run, n_tasks, .. } = msg {
+                            done.insert(run, (c, n_tasks));
+                        } else if let Msg::GraphFailed { reason, .. } = msg {
+                            panic!("graph failed: {reason}");
                         }
                     }
                 }
             }
-            // Pick any worker with queued messages and process its first.
-            let Some((&w, _)) = inboxes.iter().find(|(_, q)| !q.is_empty()) else {
+            // Round-robin across workers, one message each, so messages of
+            // concurrent runs interleave at the reactor.
+            let Some(&w) = rr
+                .iter()
+                .find(|w| inboxes.get(w).map(|q| !q.is_empty()).unwrap_or(false))
+            else {
                 break;
             };
+            rr.rotate_left(1);
             let msg = inboxes.get_mut(&w).unwrap().remove(0);
             match msg {
-                Msg::ComputeTask { task, output_size, .. } => {
-                    *executed.entry(w).or_default() += 1;
+                Msg::ComputeTask { run, task, output_size, .. } => {
+                    *executed.entry((run, w)).or_default() += 1;
                     r.on_message(
                         Origin::Worker(w),
                         Msg::TaskFinished(TaskFinishedInfo {
+                            run,
                             task,
                             nbytes: output_size,
                             duration_us: 1,
@@ -429,29 +632,43 @@ mod tests {
                         &mut out,
                     );
                 }
-                Msg::StealRequest { task } => {
+                Msg::StealRequest { run, task } => {
                     // Fake worker: always retractable.
                     r.on_message(
                         Origin::Worker(w),
-                        Msg::StealResponse { task, ok: true },
+                        Msg::StealResponse { run, task, ok: true },
                         &mut out,
                     );
                 }
-                Msg::Welcome { .. } => {}
+                Msg::Welcome { .. } | Msg::ReleaseRun { .. } => {}
                 other => panic!("worker got {other:?}"),
             }
-            if done.is_some() && inboxes.values().all(|q| q.is_empty()) && out.is_empty() {
+            if done.len() == n_graphs
+                && inboxes.values().all(|q| q.is_empty())
+                && out.is_empty()
+            {
                 break;
             }
         }
-        assert!(done.is_some(), "graph must complete");
-        (r.reports().last().unwrap().clone(), executed)
+        assert_eq!(done.len(), n_graphs, "all graphs must complete");
+        (done, executed)
+    }
+
+    fn drive(r: &mut Reactor, graph: TaskGraph) -> (ReactorReport, HashMap<WorkerId, u64>) {
+        let (_, executed) = drive_many(r, vec![(0, graph)]);
+        let by_worker = executed
+            .into_iter()
+            .fold(HashMap::new(), |mut acc: HashMap<WorkerId, u64>, ((_, w), n)| {
+                *acc.entry(w).or_default() += n;
+                acc
+            });
+        (r.reports().last().unwrap().clone(), by_worker)
     }
 
     #[test]
     fn registration_assigns_ids() {
         let mut r = reactor("random");
-        let out = register(&mut r, 3);
+        let out = register(&mut r, 1, 3);
         let welcomes: Vec<_> = out
             .iter()
             .filter(|(d, _)| matches!(d, Dest::Worker(_)))
@@ -463,7 +680,7 @@ mod tests {
     #[test]
     fn merge_runs_to_completion_random() {
         let mut r = reactor("random");
-        register(&mut r, 4);
+        register(&mut r, 1, 4);
         let (report, executed) = drive(&mut r, merge(200));
         assert_eq!(report.n_tasks, 201);
         assert_eq!(executed.values().sum::<u64>(), 201);
@@ -474,7 +691,7 @@ mod tests {
     #[test]
     fn merge_runs_to_completion_ws() {
         let mut r = reactor("ws");
-        register(&mut r, 4);
+        register(&mut r, 1, 4);
         let (report, executed) = drive(&mut r, merge(200));
         assert_eq!(executed.values().sum::<u64>(), 201);
         assert_eq!(report.n_tasks, 201);
@@ -486,7 +703,7 @@ mod tests {
         // a dependency violation would deadlock or panic dep counting.
         for sched in ["random", "ws", "dask-ws"] {
             let mut r = reactor(sched);
-            register(&mut r, 6);
+            register(&mut r, 1, 6);
             let (report, executed) = drive(&mut r, tree(7));
             assert_eq!(report.n_tasks, 127, "{sched}");
             assert_eq!(executed.values().sum::<u64>(), 127, "{sched}");
@@ -496,18 +713,70 @@ mod tests {
     #[test]
     fn sequential_graphs_reuse_cluster() {
         let mut r = reactor("ws");
-        register(&mut r, 2);
+        register(&mut r, 1, 2);
         let (r1, _) = drive(&mut r, merge(50));
         let (r2, _) = drive(&mut r, tree(5));
         assert_eq!(r1.n_tasks, 51);
         assert_eq!(r2.n_tasks, 31);
         assert_eq!(r.reports().len(), 2);
+        // Distinct RunIds even for sequential submissions.
+        assert_ne!(r.reports()[0].run, r.reports()[1].run);
     }
 
     #[test]
-    fn worker_disconnect_fails_running_graph() {
+    fn two_clients_run_concurrently_interleaved() {
+        // The multi-graph acceptance scenario: two clients submit before
+        // any task finishes; their TaskFinished streams interleave; both
+        // complete with correct per-run reports.
+        for sched in ["random", "ws", "dask-ws"] {
+            let mut r = reactor(sched);
+            register(&mut r, 2, 4);
+            let (done, executed) = drive_many(&mut r, vec![(0, merge(120)), (1, tree(6))]);
+            assert_eq!(done.len(), 2, "{sched}");
+            assert_eq!(r.live_runs(), 0, "{sched}: all runs retired");
+            // Identify runs by task count (merge(120) = 121, tree(6) = 63).
+            let mut sizes: Vec<u64> = done.values().map(|&(_, n)| n).collect();
+            sizes.sort_unstable();
+            assert_eq!(sizes, vec![63, 121], "{sched}");
+            for (&run, &(client, n_tasks)) in &done {
+                let report = r
+                    .reports()
+                    .iter()
+                    .find(|rep| rep.run == run)
+                    .expect("report per run");
+                assert_eq!(report.client, client, "{sched}");
+                assert_eq!(report.n_tasks, n_tasks, "{sched}");
+                assert!(report.msgs_in >= n_tasks, "{sched}: per-run msg accounting");
+                let run_exec: u64 = executed
+                    .iter()
+                    .filter(|((rid, _), _)| *rid == run)
+                    .map(|(_, &n)| n)
+                    .sum();
+                assert_eq!(run_exec, n_tasks, "{sched}: every task of {run} ran once");
+            }
+            // The two clients got *different* runs reported back.
+            let clients: std::collections::HashSet<u32> =
+                done.values().map(|&(c, _)| c).collect();
+            assert_eq!(clients.len(), 2, "{sched}");
+        }
+    }
+
+    #[test]
+    fn eight_interleaved_graphs_complete() {
         let mut r = reactor("ws");
-        register(&mut r, 2);
+        register(&mut r, 4, 6);
+        let subs: Vec<(u32, TaskGraph)> =
+            (0..8u32).map(|i| (i % 4, merge(30 + i as usize))).collect();
+        let (done, _) = drive_many(&mut r, subs);
+        assert_eq!(done.len(), 8);
+        assert_eq!(r.reports().len(), 8);
+        assert_eq!(r.live_runs(), 0);
+    }
+
+    #[test]
+    fn worker_disconnect_fails_only_involved_runs() {
+        let mut r = reactor("ws");
+        register(&mut r, 2, 2);
         let mut out = Vec::new();
         r.on_message(Origin::Client(0), Msg::SubmitGraph { graph: merge(10) }, &mut out);
         // Don't let workers reply; kill one instead.
@@ -517,30 +786,247 @@ mod tests {
             out.iter().any(|(d, m)| *d == Dest::Client(0) && matches!(m, Msg::GraphFailed { .. })),
             "client must learn about the failure: {out:?}"
         );
+        assert_eq!(r.live_runs(), 0);
     }
 
     #[test]
-    fn task_error_fails_graph() {
+    fn task_error_fails_only_its_run() {
         let mut r = reactor("random");
-        register(&mut r, 1);
+        register(&mut r, 2, 1);
         let mut out = Vec::new();
         r.on_message(Origin::Client(0), Msg::SubmitGraph { graph: merge(5) }, &mut out);
+        r.on_message(Origin::Client(1), Msg::SubmitGraph { graph: merge(7) }, &mut out);
+        let runs: Vec<RunId> = out
+            .iter()
+            .filter_map(|(_, m)| match m {
+                Msg::GraphSubmitted { run, .. } => Some(*run),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(runs.len(), 2);
         out.clear();
         r.on_message(
             Origin::Worker(WorkerId(0)),
-            Msg::TaskErred { task: TaskId(0), error: "boom".into() },
+            Msg::TaskErred { run: runs[0], task: TaskId(0), error: "boom".into() },
             &mut out,
         );
-        assert!(matches!(out[0].1, Msg::GraphFailed { .. }));
+        assert!(
+            matches!(out[0], (Dest::Client(0), Msg::GraphFailed { run, .. }) if run == runs[0])
+        );
+        // The other client's run is untouched.
+        assert_eq!(r.live_runs(), 1);
+        assert!(r.run_state(runs[1]).is_some());
     }
 
     #[test]
     fn report_counts_messages_and_steals() {
         let mut r = reactor("ws");
-        register(&mut r, 4);
+        register(&mut r, 1, 4);
         let (report, _) = drive(&mut r, merge(100));
         assert!(report.msgs_in >= 101, "at least one status msg per task");
         assert!(report.msgs_out >= 101, "at least one assignment per task");
         assert!(report.aot_us > 0.0);
+    }
+
+    #[test]
+    fn completed_run_is_released_on_workers() {
+        // Workers key state by (run, task); the server must tell them when
+        // a run retires or a long-lived worker leaks every graph.
+        let mut r = reactor("ws");
+        register(&mut r, 1, 3);
+        let mut out = Vec::new();
+        r.on_message(Origin::Client(0), Msg::SubmitGraph { graph: merge(8) }, &mut out);
+        let mut release_seen: std::collections::HashSet<WorkerId> =
+            std::collections::HashSet::new();
+        let mut guard = 0;
+        let mut pending: Vec<(Dest, Msg)> = std::mem::take(&mut out);
+        while let Some((dest, msg)) = pending.pop() {
+            guard += 1;
+            assert!(guard < 100_000);
+            let Dest::Worker(w) = dest else { continue };
+            match msg {
+                Msg::ComputeTask { run, task, output_size, .. } => r.on_message(
+                    Origin::Worker(w),
+                    Msg::TaskFinished(TaskFinishedInfo {
+                        run,
+                        task,
+                        nbytes: output_size,
+                        duration_us: 1,
+                    }),
+                    &mut out,
+                ),
+                Msg::StealRequest { run, task } => r.on_message(
+                    Origin::Worker(w),
+                    Msg::StealResponse { run, task, ok: false },
+                    &mut out,
+                ),
+                Msg::ReleaseRun { .. } => {
+                    release_seen.insert(w);
+                }
+                _ => {}
+            }
+            pending.append(&mut out);
+        }
+        assert_eq!(r.reports().len(), 1);
+        assert_eq!(release_seen.len(), 3, "every connected worker told to release");
+    }
+
+    #[test]
+    fn stale_messages_for_finished_run_ignored() {
+        let mut r = reactor("ws");
+        register(&mut r, 1, 2);
+        let (report, _) = drive(&mut r, merge(20));
+        let mut out = Vec::new();
+        // Late duplicate finish + steal response for the retired run: both
+        // must be dropped without panicking or emitting anything.
+        r.on_message(
+            Origin::Worker(WorkerId(0)),
+            Msg::TaskFinished(TaskFinishedInfo {
+                run: report.run,
+                task: TaskId(3),
+                nbytes: 1,
+                duration_us: 1,
+            }),
+            &mut out,
+        );
+        r.on_message(
+            Origin::Worker(WorkerId(0)),
+            Msg::StealResponse { run: report.run, task: TaskId(3), ok: false },
+            &mut out,
+        );
+        assert!(out.is_empty());
+        assert_eq!(r.reports().len(), 1);
+    }
+
+    // ---- raced-steal regression (satellite bugfix #3) ----
+
+    /// Probe scheduler: assigns everything to w0, emits one steal of `victim`
+    /// (w0 → w1) on the first finish, and records every `steal_result`.
+    struct ProbeSched {
+        victim: TaskId,
+        stolen: bool,
+        results: Arc<Mutex<Vec<(TaskId, WorkerId, WorkerId, bool)>>>,
+    }
+
+    impl Scheduler for ProbeSched {
+        fn name(&self) -> &'static str {
+            "probe"
+        }
+        fn kind(&self) -> SchedKind {
+            SchedKind::WorkStealing
+        }
+        fn add_worker(&mut self, _info: WorkerInfo) {}
+        fn graph_submitted(&mut self, _graph: &TaskGraph) {}
+        fn tasks_ready(&mut self, tasks: &[TaskId], out: &mut Vec<Action>) {
+            for &t in tasks {
+                out.push(Action::Assign(Assignment {
+                    task: t,
+                    worker: WorkerId(0),
+                    priority: t.0 as i64,
+                }));
+            }
+        }
+        fn task_finished(
+            &mut self,
+            _task: TaskId,
+            _worker: WorkerId,
+            _nbytes: u64,
+            _duration_us: u64,
+            out: &mut Vec<Action>,
+        ) {
+            if !self.stolen {
+                self.stolen = true;
+                out.push(Action::Steal {
+                    task: self.victim,
+                    from: WorkerId(0),
+                    to: WorkerId(1),
+                });
+            }
+        }
+        fn steal_result(
+            &mut self,
+            task: TaskId,
+            from: WorkerId,
+            to: WorkerId,
+            success: bool,
+            _out: &mut Vec<Action>,
+        ) {
+            self.results.lock().unwrap().push((task, from, to, success));
+        }
+        fn take_cost(&mut self) -> SchedCost {
+            SchedCost::default()
+        }
+        fn in_flight_steal_count(&self) -> usize {
+            usize::from(self.stolen).saturating_sub(
+                self.results.lock().unwrap().iter().filter(|r| r.0 == self.victim).count(),
+            )
+        }
+    }
+
+    #[test]
+    fn raced_steal_reports_real_endpoints() {
+        // finish(t2 on w0) arrives while StealRequest(t2: w0→w1) is in
+        // flight; the late StealResponse must report the *original*
+        // (from=w0, to=w1) to the scheduler — the seed reported
+        // (worker, worker), silently corrupting the load model.
+        let results = Arc::new(Mutex::new(Vec::new()));
+        let shared = results.clone();
+        let pool = SchedulerPool::with_factory(
+            Box::new(move |_seed| {
+                Box::new(ProbeSched {
+                    victim: TaskId(2),
+                    stolen: false,
+                    results: shared.clone(),
+                })
+            }),
+            0,
+        );
+        let mut r = Reactor::new(pool, RuntimeProfile::rust(), false);
+        register(&mut r, 1, 2);
+        let mut out = Vec::new();
+        r.on_message(Origin::Client(0), Msg::SubmitGraph { graph: merge(4) }, &mut out);
+        let run = out
+            .iter()
+            .find_map(|(_, m)| match m {
+                Msg::GraphSubmitted { run, .. } => Some(*run),
+                _ => None,
+            })
+            .unwrap();
+        out.clear();
+        // t0 finishes → probe emits Steal(t2, w0→w1) → reactor sends the
+        // StealRequest and marks t2 Stealing.
+        r.on_message(
+            Origin::Worker(WorkerId(0)),
+            Msg::TaskFinished(TaskFinishedInfo { run, task: TaskId(0), nbytes: 1, duration_us: 1 }),
+            &mut out,
+        );
+        assert!(
+            out.iter().any(|(d, m)| *d == Dest::Worker(WorkerId(0))
+                && matches!(m, Msg::StealRequest { task, .. } if *task == TaskId(2))),
+            "steal must go out: {out:?}"
+        );
+        // The finish wins the race.
+        r.on_message(
+            Origin::Worker(WorkerId(0)),
+            Msg::TaskFinished(TaskFinishedInfo { run, task: TaskId(2), nbytes: 1, duration_us: 1 }),
+            &mut out,
+        );
+        // The worker's answer arrives late: it could not retract.
+        r.on_message(
+            Origin::Worker(WorkerId(0)),
+            Msg::StealResponse { run, task: TaskId(2), ok: false },
+            &mut out,
+        );
+        let got = results.lock().unwrap().clone();
+        assert_eq!(
+            got,
+            vec![(TaskId(2), WorkerId(0), WorkerId(1), false)],
+            "scheduler must learn the real (from, to) of the raced steal"
+        );
+        // The steal is resolved — nothing leaks in flight.
+        assert_eq!(r.scheduler_view(run).unwrap().in_flight_steal_count(), 0);
+        // The run still completes afterwards.
+        let report = r.run_state(run).expect("run still live");
+        assert_eq!(report.raced_steals.len(), 0, "raced record consumed");
     }
 }

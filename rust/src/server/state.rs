@@ -1,7 +1,9 @@
 //! Server-side bookkeeping: the task state machine and per-graph run state.
 
+use crate::protocol::RunId;
 use crate::scheduler::WorkerId;
 use crate::taskgraph::{TaskGraph, TaskId};
+use std::collections::HashMap;
 
 /// Server-side lifecycle of a task (reactor's view).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -21,7 +23,9 @@ pub enum TaskState {
     Erred,
 }
 
-/// Execution state of one submitted graph.
+/// Execution state of one submitted graph. The reactor keeps one `GraphRun`
+/// per live [`RunId`]; everything in here is private to that run, so
+/// concurrent graphs can never alias each other's `TaskId`s.
 #[derive(Debug)]
 pub struct GraphRun {
     pub graph: TaskGraph,
@@ -35,6 +39,19 @@ pub struct GraphRun {
     pub submitted_at_us: u64,
     /// Workers holding each task's output (first = producer).
     pub who_has: Vec<Vec<WorkerId>>,
+    /// Priority each task was last assigned with (scheduler-chosen; needed
+    /// to re-send the *same* priority after a successful retraction).
+    pub priorities: Vec<i64>,
+    /// Steals whose target state was overwritten by a racing finish before
+    /// the `StealResponse` arrived: task → the original `(from, to)`. The
+    /// response handler consumes this so the scheduler learns the true
+    /// endpoints of the failed steal.
+    pub raced_steals: HashMap<TaskId, (WorkerId, WorkerId)>,
+    // Per-run counters (reported in `ReactorReport`).
+    pub steals_attempted: u64,
+    pub steals_failed: u64,
+    pub msgs_in: u64,
+    pub msgs_out: u64,
 }
 
 impl GraphRun {
@@ -53,6 +70,12 @@ impl GraphRun {
             remaining: n,
             submitted_at_us: now_us,
             who_has: vec![Vec::new(); n],
+            priorities: (0..n as i64).collect(),
+            raced_steals: HashMap::new(),
+            steals_attempted: 0,
+            steals_failed: 0,
+            msgs_in: 0,
+            msgs_out: 0,
         }
     }
 
@@ -68,6 +91,11 @@ impl GraphRun {
         if matches!(self.states[task.idx()], TaskState::Finished(_)) {
             self.who_has[task.idx()].push(worker);
             return Vec::new();
+        }
+        // A finish that beats an in-flight retraction must keep the steal's
+        // endpoints around for the late `StealResponse` (see the reactor).
+        if let TaskState::Stealing { from, to } = self.states[task.idx()] {
+            self.raced_steals.insert(task, (from, to));
         }
         self.states[task.idx()] = TaskState::Finished(worker);
         self.who_has[task.idx()].push(worker);
@@ -110,6 +138,51 @@ impl GraphRun {
                 _ => None,
             })
             .collect()
+    }
+
+    /// Whether this run still depends on `worker`: tasks assigned to it,
+    /// steals *from or to* it in flight (a dead steal target would strand
+    /// the retraction's resend), or data stored on it.
+    pub fn involves_worker(&self, worker: WorkerId) -> bool {
+        self.states.iter().any(|s| {
+            matches!(s, TaskState::Assigned(w) if *w == worker)
+                || matches!(s, TaskState::Stealing { from, to }
+                    if *from == worker || *to == worker)
+        }) || self.who_has.iter().flatten().any(|&h| h == worker)
+    }
+
+    /// Per-worker tasks this run considers queued (assigned or mid-steal
+    /// from that worker) — the reactor-side view the scheduler invariant
+    /// tests compare against [`crate::scheduler::Scheduler::queued_tasks`].
+    pub fn queued_by_worker(&self) -> HashMap<WorkerId, Vec<TaskId>> {
+        let mut out: HashMap<WorkerId, Vec<TaskId>> = HashMap::new();
+        for (i, s) in self.states.iter().enumerate() {
+            let w = match s {
+                TaskState::Assigned(w) => *w,
+                TaskState::Stealing { from, .. } => *from,
+                _ => continue,
+            };
+            out.entry(w).or_default().push(TaskId(i as u32));
+        }
+        for q in out.values_mut() {
+            q.sort_unstable();
+        }
+        out
+    }
+}
+
+/// Allocator for fresh run ids (monotonic; never reused within a server's
+/// lifetime, so a stale message can never alias a newer graph).
+#[derive(Debug, Default)]
+pub struct RunIdAlloc {
+    next: u32,
+}
+
+impl RunIdAlloc {
+    pub fn allocate(&mut self) -> RunId {
+        let id = RunId(self.next);
+        self.next += 1;
+        id
     }
 }
 
@@ -173,5 +246,26 @@ mod tests {
         run.states[2] = TaskState::Assigned(WorkerId(2));
         let on1 = run.tasks_on(WorkerId(1));
         assert_eq!(on1, vec![TaskId(0), TaskId(1)]);
+    }
+
+    #[test]
+    fn finish_during_steal_records_raced_endpoints() {
+        let mut run = GraphRun::new(merge(4), 0, 0);
+        run.states[0] = TaskState::Stealing { from: WorkerId(1), to: WorkerId(2) };
+        run.finish(TaskId(0), WorkerId(1));
+        assert_eq!(run.raced_steals.get(&TaskId(0)), Some(&(WorkerId(1), WorkerId(2))));
+        // A plain finish leaves no record.
+        run.finish(TaskId(1), WorkerId(0));
+        assert!(!run.raced_steals.contains_key(&TaskId(1)));
+    }
+
+    #[test]
+    fn run_ids_are_never_reused() {
+        let mut alloc = RunIdAlloc::default();
+        let a = alloc.allocate();
+        let b = alloc.allocate();
+        assert_ne!(a, b);
+        assert_eq!(a, RunId(0));
+        assert_eq!(b, RunId(1));
     }
 }

@@ -1,4 +1,10 @@
 //! The discrete-event engine.
+//!
+//! Multi-graph: [`simulate_concurrent`] runs several task graphs against
+//! the *same* virtual cluster and server, one isolated scheduler per run
+//! (mirroring the real server's `SchedulerPool`), with every queue and data
+//! map keyed by `(run, task)` so recycled dense `TaskId`s never alias
+//! across graphs. [`simulate`] is the single-graph special case.
 
 use super::network::{NetworkModel, NicState};
 use crate::overhead::RuntimeProfile;
@@ -52,7 +58,7 @@ impl SimConfig {
     }
 }
 
-/// Simulation outcome.
+/// Simulation outcome (single graph).
 #[derive(Debug, Clone)]
 pub struct SimResult {
     pub makespan_us: f64,
@@ -65,6 +71,41 @@ pub struct SimResult {
     pub bytes_transferred: u64,
     pub sched_cost: SchedCost,
     pub timed_out: bool,
+    /// Task executions observed (> n_tasks would mean a steal race made a
+    /// worker run a retracted task twice).
+    pub tasks_executed: u64,
+    /// Steals the schedulers still considered unresolved at the end; any
+    /// nonzero value means the engine dropped a steal notification.
+    pub in_flight_steals_at_end: usize,
+}
+
+/// Per-run outcome of a concurrent simulation.
+#[derive(Debug, Clone)]
+pub struct RunSimResult {
+    pub name: String,
+    pub n_tasks: u64,
+    /// Submission (t = 0) → last finish of this run.
+    pub makespan_us: f64,
+    pub aot_us: f64,
+    pub tasks_executed: u64,
+    pub timed_out: bool,
+}
+
+/// Outcome of a multi-graph simulation: per-run results plus cluster-wide
+/// aggregates (messages and steals are server-global, like the paper's
+/// measurements).
+#[derive(Debug, Clone)]
+pub struct MultiSimResult {
+    pub runs: Vec<RunSimResult>,
+    /// Last finish across all runs.
+    pub makespan_us: f64,
+    pub msgs: u64,
+    pub steals_attempted: u64,
+    pub steals_failed: u64,
+    pub bytes_transferred: u64,
+    pub sched_cost: SchedCost,
+    pub timed_out: bool,
+    pub in_flight_steals_at_end: usize,
 }
 
 /// Time-ordered event key: (time, seq) with deterministic tie-breaking.
@@ -85,38 +126,53 @@ impl Ord for Key {
 #[derive(Debug)]
 enum Event {
     /// Assignment (or steal reassignment) reaches a worker.
-    TaskArrive { worker: WorkerId, task: TaskId, priority: i64 },
+    TaskArrive { run: u32, worker: WorkerId, task: TaskId, priority: i64 },
     /// Worker core may start its next task.
     WorkerWake { worker: WorkerId },
     /// A task finished executing on a worker (local event).
-    TaskDone { worker: WorkerId, task: TaskId },
+    TaskDone { run: u32, worker: WorkerId, task: TaskId },
     /// Steal request reaches a worker.
-    StealArrive { worker: WorkerId, task: TaskId },
+    StealArrive { run: u32, worker: WorkerId, task: TaskId },
     /// Status/steal-response arrives at the server.
     ServerRecv { msg: ServerMsg },
 }
 
 #[derive(Debug)]
 enum ServerMsg {
-    Finished { worker: WorkerId, task: TaskId, duration_us: u64 },
-    StealResponse { worker: WorkerId, task: TaskId, ok: bool },
+    Finished { run: u32, worker: WorkerId, task: TaskId, duration_us: u64 },
+    /// `priority` is the retracted entry's priority (meaningful iff `ok`) so
+    /// the reassignment keeps the scheduler-chosen order — the engine must
+    /// not reinvent it as `task.id`.
+    StealResponse { run: u32, worker: WorkerId, task: TaskId, ok: bool, priority: i64 },
 }
 
 struct SimWorker {
     node: usize,
-    /// Queued (not started) tasks, ordered by (priority, id).
-    pending: BTreeSet<(i64, TaskId)>,
-    pending_set: HashSet<TaskId>,
+    /// Queued (not started) tasks, ordered by (priority, run, id).
+    pending: BTreeSet<(i64, u32, TaskId)>,
+    /// Priority each queued task was enqueued with — the exact queue key,
+    /// required to retract entries whose priority differs from `task.id`.
+    pending_prio: HashMap<(u32, TaskId), i64>,
     core_free_at: f64,
     core_busy: bool,
-    /// Outputs present on this worker.
-    has: HashSet<TaskId>,
+    /// Outputs present on this worker (hot-path membership check only).
+    has: HashSet<(u32, TaskId)>,
+}
+
+/// One submitted graph's execution state (scheduler isolated per run).
+struct RunCtx<'g> {
+    graph: &'g TaskGraph,
+    scheduler: Box<dyn Scheduler>,
+    unfinished_deps: Vec<u32>,
+    finished: Vec<bool>,
+    remaining: usize,
+    last_finish_us: f64,
+    tasks_executed: u64,
 }
 
 struct Engine<'g> {
-    graph: &'g TaskGraph,
     cfg: SimConfig,
-    scheduler: Box<dyn Scheduler>,
+    runs: Vec<RunCtx<'g>>,
     events: BinaryHeap<Reverse<(Key, usize)>>,
     payloads: Vec<Event>,
     seq: u64,
@@ -128,49 +184,64 @@ struct Engine<'g> {
     /// Scheduler resource (only used when !profile.gil).
     sched_free_at: f64,
     /// Producer of each finished task.
-    produced_by: HashMap<TaskId, WorkerId>,
-    unfinished_deps: Vec<u32>,
-    finished: Vec<bool>,
-    remaining: usize,
-    /// Steal targets in flight: task -> (from, to).
-    steals: HashMap<TaskId, (WorkerId, WorkerId)>,
+    produced_by: HashMap<(u32, TaskId), WorkerId>,
+    remaining_total: usize,
+    /// Steal targets in flight: (run, task) -> (from, to).
+    steals: HashMap<(u32, TaskId), (WorkerId, WorkerId)>,
     // metrics
     msgs: u64,
     steals_attempted: u64,
     steals_failed: u64,
     bytes_transferred: u64,
     total_cost: SchedCost,
-    last_finish_us: f64,
     actions: Vec<Action>,
 }
 
 impl<'g> Engine<'g> {
-    fn new(graph: &'g TaskGraph, cfg: SimConfig) -> Engine<'g> {
-        let mut scheduler =
-            scheduler::by_name(&cfg.scheduler, cfg.seed).expect("unknown scheduler");
+    fn new(graphs: &'g [TaskGraph], cfg: SimConfig) -> Engine<'g> {
+        assert!(!graphs.is_empty(), "at least one graph to simulate");
         let workers: Vec<SimWorker> = (0..cfg.n_workers)
             .map(|i| SimWorker {
                 node: i / cfg.workers_per_node,
                 pending: BTreeSet::new(),
-                pending_set: HashSet::new(),
+                pending_prio: HashMap::new(),
                 core_free_at: 0.0,
                 core_busy: false,
                 has: HashSet::new(),
             })
             .collect();
         let n_nodes = cfg.n_workers.div_ceil(cfg.workers_per_node).max(1);
-        for (i, w) in workers.iter().enumerate() {
-            scheduler.add_worker(WorkerInfo {
-                id: WorkerId(i as u32),
-                ncores: 1,
-                node: w.node as u32,
-            });
-        }
-        scheduler.graph_submitted(graph);
+        let runs: Vec<RunCtx<'g>> = graphs
+            .iter()
+            .enumerate()
+            .map(|(i, graph)| {
+                // Run-decorrelated seed, like the server's SchedulerPool.
+                let mut scheduler =
+                    scheduler::by_name(&cfg.scheduler, cfg.seed.wrapping_add(i as u64))
+                        .expect("unknown scheduler");
+                for (w, worker) in workers.iter().enumerate() {
+                    scheduler.add_worker(WorkerInfo {
+                        id: WorkerId(w as u32),
+                        ncores: 1,
+                        node: worker.node as u32,
+                    });
+                }
+                scheduler.graph_submitted(graph);
+                RunCtx {
+                    graph,
+                    scheduler,
+                    unfinished_deps: graph.tasks().iter().map(|t| t.inputs.len() as u32).collect(),
+                    finished: vec![false; graph.len()],
+                    remaining: graph.len(),
+                    last_finish_us: 0.0,
+                    tasks_executed: 0,
+                }
+            })
+            .collect();
+        let remaining_total = runs.iter().map(|r| r.remaining).sum();
         Engine {
-            graph,
             cfg,
-            scheduler,
+            runs,
             events: BinaryHeap::new(),
             payloads: Vec::new(),
             seq: 0,
@@ -180,16 +251,13 @@ impl<'g> Engine<'g> {
             reactor_free_at: 0.0,
             sched_free_at: 0.0,
             produced_by: HashMap::new(),
-            unfinished_deps: graph.tasks().iter().map(|t| t.inputs.len() as u32).collect(),
-            finished: vec![false; graph.len()],
-            remaining: graph.len(),
+            remaining_total,
             steals: HashMap::new(),
             msgs: 0,
             steals_attempted: 0,
             steals_failed: 0,
             bytes_transferred: 0,
             total_cost: SchedCost::default(),
-            last_finish_us: 0.0,
             actions: Vec::new(),
         }
     }
@@ -208,12 +276,13 @@ impl<'g> Engine<'g> {
         self.reactor_free_at
     }
 
-    /// Charge scheduler CPU starting no earlier than `ready`; under GIL the
-    /// scheduler shares the reactor resource (§IV-A).
-    fn sched_work(&mut self, ready: f64) -> f64 {
-        let cost = self.scheduler.take_cost();
+    /// Charge one run's scheduler CPU starting no earlier than `ready`;
+    /// under GIL the scheduler shares the reactor resource (§IV-A).
+    fn sched_work(&mut self, run: u32, ready: f64) -> f64 {
+        let cost = self.runs[run as usize].scheduler.take_cost();
         self.total_cost.add(cost);
-        let us = cost.to_us(&self.cfg.profile, self.scheduler.kind());
+        let kind = self.runs[run as usize].scheduler.kind();
+        let us = cost.to_us(&self.cfg.profile, kind);
         if self.cfg.profile.gil {
             self.reactor_work(ready, us)
         } else {
@@ -223,8 +292,8 @@ impl<'g> Engine<'g> {
         }
     }
 
-    /// Emit the scheduler's pending actions; `ready` = when scheduling done.
-    fn dispatch_actions(&mut self, ready: f64) {
+    /// Emit one run's pending actions; `ready` = when scheduling done.
+    fn dispatch_actions(&mut self, run: u32, ready: f64) {
         let actions = std::mem::take(&mut self.actions);
         let mut t = ready;
         for action in actions {
@@ -236,29 +305,33 @@ impl<'g> Engine<'g> {
                     self.msgs += 1;
                     self.push(
                         t + self.cfg.network.control_msg_us(),
-                        Event::TaskArrive { worker: a.worker, task: a.task, priority: a.priority },
+                        Event::TaskArrive { run, worker: a.worker, task: a.task, priority: a.priority },
                     );
                 }
                 Action::Steal { task, from, to } => {
-                    if self.finished[task.idx()] || self.steals.contains_key(&task) {
+                    if self.runs[run as usize].finished[task.idx()]
+                        || self.steals.contains_key(&(run, task))
+                    {
                         // Stale; report failure so the model re-syncs.
-                        self.scheduler.steal_result(task, from, to, false, &mut self.actions);
+                        self.runs[run as usize]
+                            .scheduler
+                            .steal_result(task, from, to, false, &mut self.actions);
                         continue;
                     }
-                    self.steals.insert(task, (from, to));
+                    self.steals.insert((run, task), (from, to));
                     self.steals_attempted += 1;
                     t = self.reactor_work(t, self.cfg.profile.msg_cost_us(64));
                     self.msgs += 1;
                     self.push(
                         t + self.cfg.network.control_msg_us(),
-                        Event::StealArrive { worker: from, task },
+                        Event::StealArrive { run, worker: from, task },
                     );
                 }
             }
         }
         if !self.actions.is_empty() {
-            let done = self.sched_work(t);
-            self.dispatch_actions(done);
+            let done = self.sched_work(run, t);
+            self.dispatch_actions(run, done);
         }
     }
 
@@ -269,9 +342,9 @@ impl<'g> Engine<'g> {
         if w.core_busy || w.pending.is_empty() {
             return;
         }
-        let &(prio, task) = w.pending.iter().next().expect("nonempty");
-        w.pending.remove(&(prio, task));
-        w.pending_set.remove(&task);
+        let &(prio, run, task) = w.pending.iter().next().expect("nonempty");
+        w.pending.remove(&(prio, run, task));
+        w.pending_prio.remove(&(run, task));
         w.core_busy = true;
         let fetch_start = w.core_free_at.max(now);
 
@@ -281,15 +354,15 @@ impl<'g> Engine<'g> {
         // clone was the sim hot path's top allocation — EXPERIMENTS.md §Perf).
         let my_node = w.node;
         let mut fetch_done = fetch_start;
-        let graph = self.graph;
+        let graph = self.runs[run as usize].graph;
         let spec = graph.task(task);
         for &input in &spec.inputs {
-            let has = self.workers[wid.idx()].has.contains(&input);
+            let has = self.workers[wid.idx()].has.contains(&(run, input));
             if has {
                 continue;
             }
-            let holder = *self.produced_by.get(&input).expect("input must be finished");
-            let bytes = self.graph.task(input).output_size;
+            let holder = *self.produced_by.get(&(run, input)).expect("input must be finished");
+            let bytes = graph.task(input).output_size;
             self.bytes_transferred += bytes;
             let holder_node = self.workers[holder.idx()].node;
             let arrive = if holder_node == my_node {
@@ -299,7 +372,7 @@ impl<'g> Engine<'g> {
                     self.nics[holder_node].transmit(fetch_start, bytes, self.cfg.network.net_bw);
                 wire_done + self.cfg.network.latency_us
             };
-            self.workers[wid.idx()].has.insert(input);
+            self.workers[wid.idx()].has.insert((run, input));
             fetch_done = fetch_done.max(arrive);
         }
 
@@ -307,93 +380,114 @@ impl<'g> Engine<'g> {
             + self.cfg.profile.worker_task_overhead_us
             + spec.duration_us as f64;
         self.workers[wid.idx()].core_free_at = exec_done;
-        self.push(exec_done, Event::TaskDone { worker: wid, task });
+        self.push(exec_done, Event::TaskDone { run, worker: wid, task });
     }
 
     fn handle(&mut self, ev: Event) {
         match ev {
-            Event::TaskArrive { worker, task, priority } => {
+            Event::TaskArrive { run, worker, task, priority } => {
                 if self.cfg.zero_worker {
                     // §IV-D: instantly finished, no data plane.
+                    self.runs[run as usize].tasks_executed += 1;
                     self.push(
                         self.now + self.cfg.network.control_msg_us(),
                         Event::ServerRecv {
-                            msg: ServerMsg::Finished { worker, task, duration_us: 0 },
+                            msg: ServerMsg::Finished { run, worker, task, duration_us: 0 },
                         },
                     );
                     return;
                 }
                 let w = &mut self.workers[worker.idx()];
-                w.pending.insert((priority, task));
-                w.pending_set.insert(task);
+                w.pending.insert((priority, run, task));
+                w.pending_prio.insert((run, task), priority);
                 self.maybe_start(worker);
             }
             Event::WorkerWake { worker } => {
                 self.maybe_start(worker);
             }
-            Event::TaskDone { worker, task } => {
+            Event::TaskDone { run, worker, task } => {
                 let w = &mut self.workers[worker.idx()];
                 w.core_busy = false;
-                w.has.insert(task);
+                w.has.insert((run, task));
+                self.runs[run as usize].tasks_executed += 1;
                 self.push(self.now, Event::WorkerWake { worker });
-                let spec_dur = self.graph.task(task).duration_us;
+                let spec_dur = self.runs[run as usize].graph.task(task).duration_us;
                 self.push(
                     self.now + self.cfg.network.control_msg_us(),
                     Event::ServerRecv {
-                        msg: ServerMsg::Finished { worker, task, duration_us: spec_dur },
+                        msg: ServerMsg::Finished { run, worker, task, duration_us: spec_dur },
                     },
                 );
             }
-            Event::StealArrive { worker, task } => {
+            Event::StealArrive { run, worker, task } => {
                 // Retraction succeeds iff the task has not started (§IV-C).
+                // The queue entry's key is the *enqueued* priority, which a
+                // scheduler may choose freely — reconstructing it as
+                // `task.id` would leave a ghost entry that runs the task a
+                // second time.
                 let w = &mut self.workers[worker.idx()];
-                let ok = if w.pending_set.remove(&task) {
-                    let prio = self
-                        .graph
-                        .task(task)
-                        .id
-                        .0 as i64;
-                    // Find exact entry (priority == id in our schedulers).
-                    w.pending.remove(&(prio, task));
-                    true
-                } else {
-                    false
+                let (ok, priority) = match w.pending_prio.remove(&(run, task)) {
+                    Some(prio) => {
+                        let removed = w.pending.remove(&(prio, run, task));
+                        debug_assert!(
+                            removed,
+                            "pending queue/priority-map desync for {task} (prio {prio})"
+                        );
+                        (true, prio)
+                    }
+                    None => (false, 0),
                 };
                 self.push(
                     self.now + self.cfg.network.control_msg_us(),
-                    Event::ServerRecv { msg: ServerMsg::StealResponse { worker, task, ok } },
+                    Event::ServerRecv {
+                        msg: ServerMsg::StealResponse { run, worker, task, ok, priority },
+                    },
                 );
             }
             Event::ServerRecv { msg } => {
                 self.msgs += 1;
                 let arrived = self.now;
                 match msg {
-                    ServerMsg::Finished { worker, task, duration_us } => {
-                        if self.finished[task.idx()] {
+                    ServerMsg::Finished { run, worker, task, duration_us } => {
+                        let r = run as usize;
+                        if self.runs[r].finished[task.idx()] {
                             return;
                         }
-                        self.finished[task.idx()] = true;
-                        self.remaining -= 1;
-                        self.produced_by.insert(task, worker);
-                        self.steals.remove(&task);
+                        self.runs[r].finished[task.idx()] = true;
+                        self.runs[r].remaining -= 1;
+                        self.remaining_total -= 1;
+                        self.produced_by.insert((run, task), worker);
                         let decode_done = self.reactor_work(
                             arrived,
                             self.cfg.profile.msg_cost_us(128) + self.cfg.profile.task_transition_us,
                         );
-                        self.last_finish_us = decode_done;
-                        // Readiness bookkeeping.
+                        self.runs[r].last_finish_us = decode_done;
+                        // A finish that beats an in-flight retraction
+                        // resolves that steal as failed — the scheduler must
+                        // hear about it, or its in-flight set leaks for the
+                        // rest of the run.
+                        if let Some((from, to)) = self.steals.remove(&(run, task)) {
+                            self.steals_failed += 1;
+                            self.runs[r]
+                                .scheduler
+                                .steal_result(task, from, to, false, &mut self.actions);
+                        }
+                        // Readiness bookkeeping. (`graph` is an independent
+                        // `&'g` borrow, so the deps update can be mutable.)
+                        let graph = self.runs[r].graph;
                         let mut newly_ready = Vec::new();
-                        for &c in self.graph.consumers(task) {
-                            let d = &mut self.unfinished_deps[c.idx()];
+                        for &c in graph.consumers(task) {
+                            let d = &mut self.runs[r].unfinished_deps[c.idx()];
                             *d -= 1;
                             if *d == 0 {
                                 newly_ready.push(c);
                             }
                         }
-                        self.scheduler.task_finished(
+                        let nbytes = graph.task(task).output_size;
+                        self.runs[r].scheduler.task_finished(
                             task,
                             worker,
-                            self.graph.task(task).output_size,
+                            nbytes,
                             duration_us,
                             &mut self.actions,
                         );
@@ -402,25 +496,32 @@ impl<'g> Engine<'g> {
                                 decode_done,
                                 self.cfg.profile.task_transition_us * newly_ready.len() as f64,
                             );
-                            self.scheduler.tasks_ready(&newly_ready, &mut self.actions);
-                            let done = self.sched_work(t);
-                            self.dispatch_actions(done);
+                            self.runs[r].scheduler.tasks_ready(&newly_ready, &mut self.actions);
+                            let done = self.sched_work(run, t);
+                            self.dispatch_actions(run, done);
                         } else {
-                            let done = self.sched_work(decode_done);
-                            self.dispatch_actions(done);
+                            let done = self.sched_work(run, decode_done);
+                            self.dispatch_actions(run, done);
                         }
                     }
-                    ServerMsg::StealResponse { worker, task, ok } => {
+                    ServerMsg::StealResponse { run, worker, task, ok, priority } => {
                         let decode_done =
                             self.reactor_work(arrived, self.cfg.profile.msg_cost_us(64));
-                        let Some((from, to)) = self.steals.remove(&task) else {
-                            return; // finished first; already handled
+                        let Some((from, to)) = self.steals.remove(&(run, task)) else {
+                            // The finish won the race; the scheduler was
+                            // already notified of the failed steal when the
+                            // finish was processed.
+                            return;
                         };
                         debug_assert_eq!(from, worker);
+                        let r = run as usize;
                         if ok {
-                            self.scheduler.steal_result(task, from, to, true, &mut self.actions);
-                            let done = self.sched_work(decode_done);
-                            // Reassign to the steal target.
+                            self.runs[r]
+                                .scheduler
+                                .steal_result(task, from, to, true, &mut self.actions);
+                            let done = self.sched_work(run, decode_done);
+                            // Reassign to the steal target, keeping the
+                            // scheduler-chosen priority.
                             let t = self.reactor_work(
                                 done,
                                 self.cfg.profile.msg_cost_us(192)
@@ -429,14 +530,16 @@ impl<'g> Engine<'g> {
                             self.msgs += 1;
                             self.push(
                                 t + self.cfg.network.control_msg_us(),
-                                Event::TaskArrive { worker: to, task, priority: task.0 as i64 },
+                                Event::TaskArrive { run, worker: to, task, priority },
                             );
-                            self.dispatch_actions(t);
+                            self.dispatch_actions(run, t);
                         } else {
                             self.steals_failed += 1;
-                            self.scheduler.steal_result(task, from, to, false, &mut self.actions);
-                            let done = self.sched_work(decode_done);
-                            self.dispatch_actions(done);
+                            self.runs[r]
+                                .scheduler
+                                .steal_result(task, from, to, false, &mut self.actions);
+                            let done = self.sched_work(run, decode_done);
+                            self.dispatch_actions(run, done);
                         }
                     }
                 }
@@ -444,19 +547,24 @@ impl<'g> Engine<'g> {
         }
     }
 
-    fn run(mut self) -> SimResult {
-        // Submission: the server ingests the graph and schedules the roots.
-        let ingest = self.cfg.profile.task_transition_us * 0.2 * self.graph.len() as f64;
-        let t = self.reactor_work(0.0, ingest);
-        let roots = self.graph.roots();
-        self.scheduler.tasks_ready(&roots, &mut self.actions);
-        let done = self.sched_work(t);
-        self.dispatch_actions(done);
+    fn run(mut self) -> MultiSimResult {
+        // Submissions: the server ingests each graph and schedules its
+        // roots; ingest work serializes on the reactor resource, exactly
+        // like interleaved client submissions hitting one server thread.
+        for i in 0..self.runs.len() {
+            let ingest =
+                self.cfg.profile.task_transition_us * 0.2 * self.runs[i].graph.len() as f64;
+            let t = self.reactor_work(0.0, ingest);
+            let roots = self.runs[i].graph.roots();
+            self.runs[i].scheduler.tasks_ready(&roots, &mut self.actions);
+            let done = self.sched_work(i as u32, t);
+            self.dispatch_actions(i as u32, done);
+        }
 
         let mut timed_out = false;
         while let Some(Reverse((Key(at, _), idx))) = self.events.pop() {
             self.now = at;
-            if self.remaining == 0 {
+            if self.remaining_total == 0 {
                 break;
             }
             if at > self.cfg.timeout_us {
@@ -471,26 +579,64 @@ impl<'g> Engine<'g> {
             self.handle(ev);
         }
         assert!(
-            timed_out || self.remaining == 0,
+            timed_out || self.remaining_total == 0,
             "simulation drained events with {} tasks unfinished",
-            self.remaining
+            self.remaining_total
         );
-        let makespan = if timed_out { self.cfg.timeout_us } else { self.last_finish_us };
-        SimResult {
+        let in_flight_steals_at_end: usize =
+            self.runs.iter().map(|r| r.scheduler.in_flight_steal_count()).sum();
+        let runs: Vec<RunSimResult> = self
+            .runs
+            .iter()
+            .map(|r| {
+                let run_timed_out = r.remaining > 0;
+                let makespan =
+                    if run_timed_out { self.cfg.timeout_us } else { r.last_finish_us };
+                RunSimResult {
+                    name: r.graph.name.clone(),
+                    n_tasks: r.graph.len() as u64,
+                    makespan_us: makespan,
+                    aot_us: makespan / r.graph.len() as f64,
+                    tasks_executed: r.tasks_executed,
+                    timed_out: run_timed_out,
+                }
+            })
+            .collect();
+        let makespan = runs.iter().map(|r| r.makespan_us).fold(0.0, f64::max);
+        MultiSimResult {
+            runs,
             makespan_us: makespan,
-            aot_us: makespan / self.graph.len() as f64,
-            n_tasks: self.graph.len() as u64,
             msgs: self.msgs,
             steals_attempted: self.steals_attempted,
             steals_failed: self.steals_failed,
             bytes_transferred: self.bytes_transferred,
             sched_cost: self.total_cost,
             timed_out,
+            in_flight_steals_at_end,
         }
     }
 }
 
+/// Run several graphs concurrently against one shared virtual cluster.
+pub fn simulate_concurrent(graphs: &[TaskGraph], cfg: &SimConfig) -> MultiSimResult {
+    Engine::new(graphs, cfg.clone()).run()
+}
+
 /// Run one simulation.
 pub fn simulate(graph: &TaskGraph, cfg: &SimConfig) -> SimResult {
-    Engine::new(graph, cfg.clone()).run()
+    let multi = Engine::new(std::slice::from_ref(graph), cfg.clone()).run();
+    let run = &multi.runs[0];
+    SimResult {
+        makespan_us: run.makespan_us,
+        aot_us: run.aot_us,
+        n_tasks: run.n_tasks,
+        msgs: multi.msgs,
+        steals_attempted: multi.steals_attempted,
+        steals_failed: multi.steals_failed,
+        bytes_transferred: multi.bytes_transferred,
+        sched_cost: multi.sched_cost,
+        timed_out: multi.timed_out,
+        tasks_executed: run.tasks_executed,
+        in_flight_steals_at_end: multi.in_flight_steals_at_end,
+    }
 }

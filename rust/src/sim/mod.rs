@@ -24,7 +24,7 @@
 mod engine;
 mod network;
 
-pub use engine::{simulate, SimConfig, SimResult};
+pub use engine::{simulate, simulate_concurrent, MultiSimResult, RunSimResult, SimConfig, SimResult};
 pub use network::NetworkModel;
 
 #[cfg(test)]

@@ -11,11 +11,16 @@
 //!   plane; the server is not on the data path),
 //! - honours steal retraction: a queued task can be given back, a running
 //!   one cannot (§IV-C).
+//!
+//! The server is multi-graph: dense [`TaskId`]s recycle across runs, so the
+//! queue, the steal-pending set and the data store are all keyed by
+//! `(RunId, TaskId)` — two concurrent graphs can never alias each other's
+//! outputs on a worker.
 
 pub mod payload;
 pub mod zero;
 
-use crate::protocol::{decode_msg, encode_msg, read_frame, write_frame, FrameError, Msg, TaskFinishedInfo, TaskInputLoc};
+use crate::protocol::{decode_msg, encode_msg, read_frame, write_frame, FrameError, Msg, RunId, TaskFinishedInfo, TaskInputLoc};
 use crate::taskgraph::{Payload, TaskId};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::{BinaryHeap, HashMap, HashSet};
@@ -32,9 +37,13 @@ pub struct WorkerConfig {
     pub node: u32,
 }
 
+/// A task output's identity on this worker: which run, which task.
+type DataKey = (RunId, TaskId);
+
 #[derive(Debug)]
 struct QueuedTask {
     priority: i64,
+    run: RunId,
     task: TaskId,
     key: String,
     payload: Payload,
@@ -43,10 +52,11 @@ struct QueuedTask {
     inputs: Vec<TaskInputLoc>,
 }
 
-// Min-heap by priority (lower value runs first, like Dask priorities).
+// Min-heap by priority (lower value runs first, like Dask priorities);
+// (run, task) breaks ties deterministically across interleaved graphs.
 impl PartialEq for QueuedTask {
     fn eq(&self, other: &Self) -> bool {
-        self.priority == other.priority && self.task == other.task
+        self.priority == other.priority && self.run == other.run && self.task == other.task
     }
 }
 impl Eq for QueuedTask {}
@@ -58,16 +68,25 @@ impl PartialOrd for QueuedTask {
 impl Ord for QueuedTask {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
         // Reverse for BinaryHeap (max-heap) -> min-heap behavior.
-        other.priority.cmp(&self.priority).then(other.task.0.cmp(&self.task.0))
+        other
+            .priority
+            .cmp(&self.priority)
+            .then(other.run.0.cmp(&self.run.0))
+            .then(other.task.0.cmp(&self.task.0))
     }
 }
 
 struct Shared {
     queue: Mutex<BinaryHeap<QueuedTask>>,
     /// Tasks in `queue` (for O(1) steal checks).
-    pending: Mutex<HashSet<TaskId>>,
+    pending: Mutex<HashSet<DataKey>>,
     cv: Condvar,
-    store: Mutex<HashMap<TaskId, Arc<Vec<u8>>>>,
+    store: Mutex<HashMap<DataKey, Arc<Vec<u8>>>>,
+    /// Runs the server has released. A task already mid-execution when its
+    /// run's `ReleaseRun` arrives must not re-insert its output afterwards
+    /// — no second release will ever come for that run. (RunIds are tiny
+    /// and never reused, so this set costs 4 bytes per run served.)
+    released: Mutex<HashSet<RunId>>,
     stop: AtomicBool,
     server_tx: Mutex<TcpStream>,
 }
@@ -125,6 +144,7 @@ pub fn run_worker(cfg: WorkerConfig) -> Result<WorkerHandle> {
         pending: Mutex::new(HashSet::new()),
         cv: Condvar::new(),
         store: Mutex::new(HashMap::new()),
+        released: Mutex::new(HashSet::new()),
         stop: AtomicBool::new(false),
         server_tx: Mutex::new(stream.try_clone().context("clone server stream")?),
     });
@@ -177,10 +197,11 @@ pub fn run_worker(cfg: WorkerConfig) -> Result<WorkerHandle> {
                     }
                 };
                 match msg {
-                    Msg::ComputeTask { task, key, payload, duration_us, output_size, inputs, priority } => {
-                        shared.pending.lock().unwrap().insert(task);
+                    Msg::ComputeTask { run, task, key, payload, duration_us, output_size, inputs, priority } => {
+                        shared.pending.lock().unwrap().insert((run, task));
                         shared.queue.lock().unwrap().push(QueuedTask {
                             priority,
+                            run,
                             task,
                             key,
                             payload,
@@ -190,16 +211,16 @@ pub fn run_worker(cfg: WorkerConfig) -> Result<WorkerHandle> {
                         });
                         shared.cv.notify_one();
                     }
-                    Msg::StealRequest { task } => {
+                    Msg::StealRequest { run, task } => {
                         // Retract iff still queued (not started) — §IV-C.
                         let retracted = {
                             let mut pending = shared.pending.lock().unwrap();
-                            if pending.remove(&task) {
+                            if pending.remove(&(run, task)) {
                                 let mut q = shared.queue.lock().unwrap();
                                 let drained: Vec<QueuedTask> = q.drain().collect();
                                 let mut found = false;
                                 for qt in drained {
-                                    if qt.task == task {
+                                    if qt.run == run && qt.task == task {
                                         found = true;
                                     } else {
                                         q.push(qt);
@@ -210,17 +231,30 @@ pub fn run_worker(cfg: WorkerConfig) -> Result<WorkerHandle> {
                                 false
                             }
                         };
-                        let _ = shared.send(&Msg::StealResponse { task, ok: retracted });
+                        let _ = shared.send(&Msg::StealResponse { run, task, ok: retracted });
                     }
-                    Msg::FetchFromServer { task } => {
+                    Msg::FetchFromServer { run, task } => {
                         let data = shared
                             .store
                             .lock()
                             .unwrap()
-                            .get(&task)
+                            .get(&(run, task))
                             .map(|d| d.as_ref().clone())
                             .unwrap_or_default();
-                        let _ = shared.send(&Msg::DataToServer { task, data });
+                        let _ = shared.send(&Msg::DataToServer { run, task, data });
+                    }
+                    Msg::ReleaseRun { run } => {
+                        // Run retired: reclaim its queue entries and stored
+                        // outputs so a long-lived worker stays bounded.
+                        shared.released.lock().unwrap().insert(run);
+                        shared.pending.lock().unwrap().retain(|&(r, _)| r != run);
+                        {
+                            let mut q = shared.queue.lock().unwrap();
+                            let kept: Vec<QueuedTask> =
+                                q.drain().filter(|qt| qt.run != run).collect();
+                            q.extend(kept);
+                        }
+                        shared.store.lock().unwrap().retain(|&(r, _), _| r != run);
                     }
                     Msg::Shutdown => {
                         shared.stop.store(true, Ordering::SeqCst);
@@ -254,30 +288,50 @@ fn executor_loop(shared: &Shared) {
             }
         };
         // Running now — no longer stealable.
-        shared.pending.lock().unwrap().remove(&next.task);
+        shared.pending.lock().unwrap().remove(&(next.run, next.task));
+        // Popped after its run was released (queue purge raced the pop):
+        // drop it instead of doing dead work.
+        if shared.released.lock().unwrap().contains(&next.run) {
+            continue;
+        }
         match run_task(shared, &next) {
             Ok(info) => {
                 let _ = shared.send(&Msg::TaskFinished(info));
             }
             Err(e) => {
-                let _ = shared.send(&Msg::TaskErred { task: next.task, error: e.to_string() });
+                let _ = shared.send(&Msg::TaskErred {
+                    run: next.run,
+                    task: next.task,
+                    error: e.to_string(),
+                });
             }
         }
     }
 }
 
 fn run_task(shared: &Shared, t: &QueuedTask) -> Result<TaskFinishedInfo> {
-    // Gather inputs: local store or remote peer.
+    // Gather inputs: local store or remote peer. Input locations are
+    // relative to the task's own run.
     let mut inputs: Vec<Arc<Vec<u8>>> = Vec::with_capacity(t.inputs.len());
     for loc in &t.inputs {
-        let local = shared.store.lock().unwrap().get(&loc.task).cloned();
+        let key = (t.run, loc.task);
+        let local = shared.store.lock().unwrap().get(&key).cloned();
         let data = match local {
             Some(d) => d,
             None if !loc.addr.is_empty() => {
-                let data = fetch_remote(&loc.addr, loc.task)
-                    .with_context(|| format!("fetch {} from {}", loc.task, loc.addr))?;
+                let data = fetch_remote(&loc.addr, t.run, loc.task)
+                    .with_context(|| format!("fetch {}/{} from {}", t.run, loc.task, loc.addr))?;
                 let arc = Arc::new(data);
-                shared.store.lock().unwrap().insert(loc.task, arc.clone());
+                {
+                    // Check `released` while holding the store lock: the
+                    // release handler marks the run released *before*
+                    // purging, so either we see the mark and skip, or our
+                    // insert lands before the purge and is swept by it.
+                    let mut store = shared.store.lock().unwrap();
+                    if !shared.released.lock().unwrap().contains(&t.run) {
+                        store.insert(key, arc.clone());
+                    }
+                }
                 arc
             }
             None => {
@@ -285,7 +339,7 @@ fn run_task(shared: &Shared, t: &QueuedTask) -> Result<TaskFinishedInfo> {
                 let mut got = None;
                 for _ in 0..500 {
                     std::thread::sleep(std::time::Duration::from_millis(1));
-                    if let Some(d) = shared.store.lock().unwrap().get(&loc.task).cloned() {
+                    if let Some(d) = shared.store.lock().unwrap().get(&key).cloned() {
                         got = Some(d);
                         break;
                     }
@@ -299,17 +353,26 @@ fn run_task(shared: &Shared, t: &QueuedTask) -> Result<TaskFinishedInfo> {
     let output = payload::execute(&t.payload, t.duration_us, t.output_size, &inputs)?;
     let duration_us = t0.elapsed().as_micros() as u64;
     let nbytes = output.len() as u64;
-    shared.store.lock().unwrap().insert(t.task, Arc::new(output));
-    Ok(TaskFinishedInfo { task: t.task, nbytes, duration_us })
+    // A release that raced this execution already purged the store; don't
+    // repopulate it — the server drops our TaskFinished anyway. The check
+    // holds the store lock so a release can't slip between check and
+    // insert (the handler marks `released` before it purges).
+    {
+        let mut store = shared.store.lock().unwrap();
+        if !shared.released.lock().unwrap().contains(&t.run) {
+            store.insert((t.run, t.task), Arc::new(output));
+        }
+    }
+    Ok(TaskFinishedInfo { run: t.run, task: t.task, nbytes, duration_us })
 }
 
-fn fetch_remote(addr: &str, task: TaskId) -> Result<Vec<u8>> {
+fn fetch_remote(addr: &str, run: RunId, task: TaskId) -> Result<Vec<u8>> {
     let mut s = TcpStream::connect(addr)?;
     s.set_nodelay(true).ok();
-    write_frame(&mut s, &encode_msg(&Msg::FetchData { task }))?;
+    write_frame(&mut s, &encode_msg(&Msg::FetchData { run, task }))?;
     let reply = decode_msg(&read_frame(&mut s)?)?;
     match reply {
-        Msg::DataReply { task: t, data } if t == task => Ok(data),
+        Msg::DataReply { run: r, task: t, data } if r == run && t == task => Ok(data),
         other => bail!("unexpected data reply {:?}", other.op()),
     }
 }
@@ -325,19 +388,19 @@ fn serve_data_conn(mut conn: TcpStream, shared: &Shared) {
             Err(_) => break,
         };
         match msg {
-            Msg::FetchData { task } => {
+            Msg::FetchData { run, task } => {
                 // The producer finished before the server advertised the
                 // location, but the local insert may trail by a hair.
                 let mut data = None;
                 for _ in 0..500 {
-                    if let Some(d) = shared.store.lock().unwrap().get(&task).cloned() {
+                    if let Some(d) = shared.store.lock().unwrap().get(&(run, task)).cloned() {
                         data = Some(d);
                         break;
                     }
                     std::thread::sleep(std::time::Duration::from_millis(1));
                 }
                 let Some(data) = data else { break };
-                let reply = Msg::DataReply { task, data: data.as_ref().clone() };
+                let reply = Msg::DataReply { run, task, data: data.as_ref().clone() };
                 if write_frame(&mut conn, &encode_msg(&reply)).is_err() {
                     break;
                 }

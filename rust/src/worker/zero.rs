@@ -12,7 +12,7 @@
 //!   any potential attempts to steal a task from a worker will fail" (§VI-D).
 
 use super::WorkerConfig;
-use crate::protocol::{decode_msg, encode_msg, read_frame, write_frame, FrameError, Msg, TaskFinishedInfo};
+use crate::protocol::{decode_msg, encode_msg, read_frame, write_frame, FrameError, Msg, RunId, TaskFinishedInfo};
 use crate::taskgraph::TaskId;
 use anyhow::{bail, Context, Result};
 use std::collections::HashSet;
@@ -64,8 +64,9 @@ pub fn run_zero_worker(cfg: WorkerConfig) -> Result<ZeroWorkerHandle> {
         let stop = stop.clone();
         let wstream = wstream.clone();
         std::thread::spawn(move || {
-            // Data objects that would be placed on this worker.
-            let mut would_have: HashSet<TaskId> = HashSet::new();
+            // Data objects that would be placed on this worker (runs share
+            // the connection, so keys carry the run).
+            let mut would_have: HashSet<(RunId, TaskId)> = HashSet::new();
             let send = |msg: &Msg| -> Result<()> {
                 let mut s = wstream.lock().unwrap();
                 write_frame(&mut *s, &encode_msg(msg))?;
@@ -84,14 +85,15 @@ pub fn run_zero_worker(cfg: WorkerConfig) -> Result<ZeroWorkerHandle> {
                     Err(_) => break,
                 };
                 match msg {
-                    Msg::ComputeTask { task, inputs, output_size, .. } => {
+                    Msg::ComputeTask { run, task, inputs, output_size, .. } => {
                         // Infinitely fast download of any missing input.
                         for loc in &inputs {
-                            would_have.insert(loc.task);
+                            would_have.insert((run, loc.task));
                         }
-                        would_have.insert(task);
+                        would_have.insert((run, task));
                         // Immediate completion, zero duration.
                         if send(&Msg::TaskFinished(TaskFinishedInfo {
+                            run,
                             task,
                             nbytes: output_size,
                             duration_us: 0,
@@ -101,17 +103,22 @@ pub fn run_zero_worker(cfg: WorkerConfig) -> Result<ZeroWorkerHandle> {
                             break;
                         }
                     }
-                    Msg::StealRequest { task } => {
+                    Msg::StealRequest { run, task } => {
                         // Already "finished" — retraction always fails.
-                        if send(&Msg::StealResponse { task, ok: false }).is_err() {
+                        if send(&Msg::StealResponse { run, task, ok: false }).is_err() {
                             break;
                         }
                     }
-                    Msg::FetchFromServer { task } => {
-                        let _present = would_have.contains(&task);
-                        if send(&Msg::DataToServer { task, data: MOCK_DATA.to_vec() }).is_err() {
+                    Msg::FetchFromServer { run, task } => {
+                        let _present = would_have.contains(&(run, task));
+                        if send(&Msg::DataToServer { run, task, data: MOCK_DATA.to_vec() })
+                            .is_err()
+                        {
                             break;
                         }
+                    }
+                    Msg::ReleaseRun { run } => {
+                        would_have.retain(|&(r, _)| r != run);
                     }
                     Msg::Shutdown => break,
                     Msg::Heartbeat | Msg::Welcome { .. } => {}

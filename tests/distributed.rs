@@ -92,6 +92,62 @@ fn sequential_graphs_same_cluster() {
 }
 
 #[test]
+fn concurrent_clients_over_tcp() {
+    // Multiple clients submit different graphs at the same time; the
+    // multi-graph server interleaves them on one worker pool and reports
+    // each run to the right client.
+    let srv = server("ws");
+    let addr = srv.addr.to_string();
+    let ws = workers(&addr, 4);
+    let handles: Vec<_> = (0..4)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr, &format!("cc{i}")).unwrap();
+                let g = if i % 2 == 0 { graphgen::merge(150) } else { graphgen::tree(6) };
+                c.run_graph(&g).unwrap()
+            })
+        })
+        .collect();
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for (i, res) in results.iter().enumerate() {
+        let want = if i % 2 == 0 { 151 } else { 63 };
+        assert_eq!(res.n_tasks, want, "client {i}");
+    }
+    // Four distinct runs, four reports.
+    let runs: std::collections::HashSet<_> = results.iter().map(|r| r.run).collect();
+    assert_eq!(runs.len(), 4);
+    assert_eq!(srv.reports().len(), 4);
+    for w in &ws {
+        w.shutdown();
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn pipelined_submissions_single_client() {
+    // One client pipelines three graphs and collects them out of order.
+    let srv = server("ws");
+    let addr = srv.addr.to_string();
+    let ws = workers(&addr, 2);
+    let mut c = Client::connect(&addr, "pipeline").unwrap();
+    let r1 = c.submit(&graphgen::merge(40)).unwrap();
+    let r2 = c.submit(&graphgen::tree(5)).unwrap();
+    let r3 = c.submit(&graphgen::merge(60)).unwrap();
+    assert_eq!(c.in_flight(), 3);
+    let b = c.wait(r2).unwrap();
+    let a = c.wait(r1).unwrap();
+    let d = c.wait(r3).unwrap();
+    assert_eq!((a.n_tasks, b.n_tasks, d.n_tasks), (41, 31, 61));
+    assert_eq!(c.in_flight(), 0);
+    assert_eq!(srv.reports().len(), 3);
+    for w in &ws {
+        w.shutdown();
+    }
+    srv.shutdown();
+}
+
+#[test]
 fn zero_worker_runs_graphs_instantly() {
     let srv = server("ws");
     let addr = srv.addr.to_string();
@@ -251,6 +307,7 @@ fn unregistered_peer_messages_ignored() {
     write_frame(
         &mut s,
         &encode_msg(&Msg::TaskFinished(rsds::protocol::TaskFinishedInfo {
+            run: rsds::protocol::RunId(0),
             task: rsds::taskgraph::TaskId(0),
             nbytes: 0,
             duration_us: 0,

@@ -5,7 +5,9 @@
 
 use rsds::graphgen;
 use rsds::overhead::RuntimeProfile;
+use rsds::protocol::{Msg, RunId, TaskFinishedInfo};
 use rsds::scheduler::{self, Action, WorkerId, WorkerInfo};
+use rsds::server::{Dest, Origin, Reactor, SchedulerPool};
 use rsds::sim::{simulate, SimConfig};
 use rsds::taskgraph::{GraphBuilder, Payload, TaskGraph, TaskId};
 use rsds::testing::{check, PropConfig};
@@ -167,6 +169,223 @@ fn prop_ws_scheduler_invariants() {
 fn prop_dask_ws_scheduler_invariants() {
     check("dask-ws scheduler", PropConfig { cases: 40, seed: 303 }, |rng| {
         drive_scheduler("dask-ws", rng)
+    });
+}
+
+/// Drive the multi-run reactor with randomized finish/steal interleavings
+/// from model workers that defer execution arbitrarily. Checks, after every
+/// reactor interaction:
+/// - each live run's scheduler cluster-model queue *totals* match the
+///   reactor's `TaskState` view (always), and the per-worker queue *sets*
+///   match whenever that run has no steal in flight;
+/// - no task is ever executed twice, and at the end every task of every
+///   run executed exactly once and every run completed.
+fn drive_reactor_interleaved(sched_name: &str, rng: &mut Rng) -> Result<(), String> {
+    let n_graphs = rng.range_usize(1, 4);
+    let graphs: Vec<TaskGraph> = (0..n_graphs).map(|_| random_graph(rng)).collect();
+    let n_workers = rng.range_usize(1, 7) as u32;
+    let pool = SchedulerPool::new(sched_name, rng.next_u64()).expect("known scheduler");
+    let mut reactor = Reactor::new(pool, RuntimeProfile::rust(), false);
+
+    let mut out: Vec<(Dest, Msg)> = Vec::new();
+    for c in 0..n_graphs as u32 {
+        reactor.on_message(
+            Origin::Unregistered { conn: c as u64 },
+            Msg::RegisterClient { name: format!("c{c}") },
+            &mut out,
+        );
+    }
+    for i in 0..n_workers {
+        reactor.on_message(
+            Origin::Unregistered { conn: 100 + i as u64 },
+            Msg::RegisterWorker {
+                name: format!("w{i}"),
+                ncores: 1,
+                node: i / 4,
+                data_addr: String::new(),
+            },
+            &mut out,
+        );
+    }
+    out.clear();
+
+    let mut expected: HashMap<RunId, u64> = HashMap::new();
+    for (c, g) in graphs.iter().enumerate() {
+        reactor.on_message(
+            Origin::Client(c as u32),
+            Msg::SubmitGraph { graph: g.clone() },
+            &mut out,
+        );
+    }
+
+    // Model workers: FIFO inbox (like a TCP stream) + a local set of
+    // queued-but-not-started tasks whose execution the test delays
+    // arbitrarily — that delay is what generates every finish/steal race.
+    let mut inboxes: Vec<Vec<Msg>> = vec![Vec::new(); n_workers as usize];
+    let mut local_queue: Vec<HashSet<(RunId, TaskId)>> =
+        vec![HashSet::new(); n_workers as usize];
+    let mut executed: HashMap<(RunId, TaskId), u32> = HashMap::new();
+    let mut done: HashMap<RunId, u64> = HashMap::new();
+
+    let check_invariants = |reactor: &Reactor, runs: &HashMap<RunId, u64>| -> Result<(), String> {
+        for &run in runs.keys() {
+            let (Some(gr), Some(sched)) = (reactor.run_state(run), reactor.scheduler_view(run))
+            else {
+                continue; // completed (or failed) — retired state is checked at the end
+            };
+            let Some(model_q) = sched.queued_tasks() else { continue };
+            let reactor_q = gr.queued_by_worker();
+            let model_total: usize = model_q.iter().map(|(_, q)| q.len()).sum();
+            let reactor_total: usize = reactor_q.values().map(|q| q.len()).sum();
+            if model_total != reactor_total {
+                return Err(format!(
+                    "{run}: scheduler queues {model_total} tasks, reactor sees {reactor_total}"
+                ));
+            }
+            if sched.in_flight_steal_count() == 0 {
+                for (w, q) in &model_q {
+                    let empty = Vec::new();
+                    let rq = reactor_q.get(w).unwrap_or(&empty);
+                    if q != rq {
+                        return Err(format!(
+                            "{run}: at quiescence {w} queue mismatch: scheduler {q:?} vs reactor {rq:?}"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    };
+
+    let mut guard = 0u32;
+    loop {
+        guard += 1;
+        if guard > 200_000 {
+            return Err("interleaving failed to converge".into());
+        }
+        for (dest, msg) in std::mem::take(&mut out) {
+            match (dest, msg) {
+                (Dest::Worker(w), msg) => inboxes[w.idx()].push(msg),
+                (_, Msg::GraphSubmitted { run, n_tasks }) => {
+                    expected.insert(run, n_tasks);
+                }
+                (Dest::Client(_), Msg::GraphDone { run, n_tasks, .. }) => {
+                    done.insert(run, n_tasks);
+                }
+                (Dest::Client(_), Msg::GraphFailed { reason, .. }) => {
+                    return Err(format!("graph failed: {reason}"));
+                }
+                (d, m) => return Err(format!("unexpected {:?} to {d:?}", m.op())),
+            }
+        }
+        let deliverable: Vec<usize> =
+            (0..inboxes.len()).filter(|&w| !inboxes[w].is_empty()).collect();
+        let runnable: Vec<(usize, (RunId, TaskId))> = local_queue
+            .iter()
+            .enumerate()
+            .flat_map(|(w, q)| q.iter().map(move |&k| (w, k)))
+            .collect();
+        if deliverable.is_empty() && runnable.is_empty() {
+            break;
+        }
+        // Randomly either deliver a worker's next message or execute one of
+        // its queued tasks (execution can jump ahead of pending steals).
+        let deliver = !deliverable.is_empty() && (runnable.is_empty() || rng.chance(0.55));
+        if deliver {
+            let w = *rng.choose(&deliverable);
+            let msg = inboxes[w].remove(0);
+            match msg {
+                Msg::Welcome { .. } => {}
+                Msg::ComputeTask { run, task, .. } => {
+                    if !local_queue[w].insert((run, task)) {
+                        return Err(format!("{run}/{task} assigned to w{w} while queued"));
+                    }
+                }
+                Msg::StealRequest { run, task } => {
+                    let ok = local_queue[w].remove(&(run, task));
+                    reactor.on_message(
+                        Origin::Worker(WorkerId(w as u32)),
+                        Msg::StealResponse { run, task, ok },
+                        &mut out,
+                    );
+                    check_invariants(&reactor, &expected)?;
+                }
+                Msg::ReleaseRun { run } => {
+                    // A released run must have nothing left queued here.
+                    if let Some(k) = local_queue[w].iter().find(|(r, _)| *r == run) {
+                        return Err(format!("{run} released with {} still queued", k.1));
+                    }
+                }
+                other => return Err(format!("worker got {:?}", other.op())),
+            }
+        } else {
+            let &(w, (run, task)) = rng.choose(&runnable);
+            local_queue[w].remove(&(run, task));
+            let n = executed.entry((run, task)).or_insert(0);
+            *n += 1;
+            if *n > 1 {
+                return Err(format!("{run}/{task} executed {n} times"));
+            }
+            reactor.on_message(
+                Origin::Worker(WorkerId(w as u32)),
+                Msg::TaskFinished(TaskFinishedInfo {
+                    run,
+                    task,
+                    nbytes: 8,
+                    duration_us: 1,
+                }),
+                &mut out,
+            );
+            check_invariants(&reactor, &expected)?;
+        }
+    }
+
+    if expected.len() != n_graphs {
+        return Err(format!("{} of {n_graphs} submissions acknowledged", expected.len()));
+    }
+    for (run, n_tasks) in &expected {
+        if done.get(run) != Some(n_tasks) {
+            return Err(format!("{run} did not complete with {n_tasks} tasks: {done:?}"));
+        }
+        let run_executed =
+            executed.iter().filter(|((r, _), _)| r == run).map(|(_, &n)| n as u64).sum::<u64>();
+        if run_executed != *n_tasks {
+            return Err(format!("{run}: executed {run_executed} of {n_tasks} tasks"));
+        }
+    }
+    if reactor.live_runs() != 0 {
+        return Err(format!("{} runs left live after completion", reactor.live_runs()));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_reactor_ws_interleavings_keep_models_in_sync() {
+    check("reactor ws interleavings", PropConfig { cases: 30, seed: 707 }, |rng| {
+        drive_reactor_interleaved("ws", rng)
+    });
+}
+
+#[test]
+fn prop_reactor_ws_lifo_interleavings_keep_models_in_sync() {
+    check("reactor ws-lifo interleavings", PropConfig { cases: 20, seed: 808 }, |rng| {
+        drive_reactor_interleaved("ws-lifo", rng)
+    });
+}
+
+#[test]
+fn prop_reactor_dask_ws_interleavings_keep_models_in_sync() {
+    check("reactor dask-ws interleavings", PropConfig { cases: 20, seed: 909 }, |rng| {
+        drive_reactor_interleaved("dask-ws", rng)
+    });
+}
+
+#[test]
+fn prop_reactor_random_interleavings_complete() {
+    // The random scheduler keeps no cluster model; the property reduces to
+    // completion + exactly-once execution under the same interleavings.
+    check("reactor random interleavings", PropConfig { cases: 20, seed: 1010 }, |rng| {
+        drive_reactor_interleaved("random", rng)
     });
 }
 
