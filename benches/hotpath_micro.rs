@@ -5,50 +5,357 @@
 //! Targets (DESIGN.md §9): reactor ≥100K transitions/s (≤10 µs/task),
 //! codec ≥1 GB/s decode on task messages, ws decision ≤5 µs/task at 1512
 //! workers, sim ≥1M events/s.
+//!
+//! The codec section compares the streaming (zero-copy) codec against the
+//! `Value`-tree reference on the per-task hot-path messages, measures
+//! allocations per message with a counting global allocator, asserts the
+//! zero-allocation guarantees, and emits machine-readable `BENCH_pr2.json`
+//! so later PRs have a perf trajectory to compare against.
+//!
+//! Env knobs: `RSDS_BENCH_QUICK=1` shortens runs (CI smoke);
+//! `RSDS_BENCH_SECTION=codec` runs only the codec section.
 
 use rsds::bench::{bench, row, throughput, BenchConfig};
 use rsds::graphgen::merge;
 use rsds::msgpack::{decode, encode};
 use rsds::overhead::RuntimeProfile;
-use rsds::protocol::{decode_msg, encode_msg, Msg, RunId, TaskFinishedInfo};
+use rsds::protocol::{
+    decode_msg, decode_msg_value, encode_msg, encode_msg_into, encode_msg_value,
+    ComputeTaskView, Msg, RunId, TaskFinishedInfo, TaskInputLoc,
+};
 use rsds::scheduler::{self, Action, WorkerId, WorkerInfo};
 use rsds::server::{Dest, Origin, Reactor, SchedulerPool};
 use rsds::sim::{simulate, SimConfig};
 use rsds::taskgraph::TaskId;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 
-fn main() {
-    let cfg = BenchConfig::from_env();
+// ---------------------------------------------------------------------------
+// Counting allocator: every alloc/realloc bumps a counter so the bench can
+// report (and assert) allocations per message on the hot path.
+// ---------------------------------------------------------------------------
 
-    // --- msgpack codec on a compute-task-shaped message ---
-    let msg = Msg::ComputeTask {
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+// SAFETY: delegates directly to the system allocator; the counter is a
+// relaxed atomic with no other side effects.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Allocations performed while running `f`.
+fn count_allocs(f: impl FnOnce()) -> u64 {
+    let before = ALLOCS.load(Ordering::Relaxed);
+    f();
+    ALLOCS.load(Ordering::Relaxed) - before
+}
+
+// ---------------------------------------------------------------------------
+// Codec micro-bench: streaming vs Value tree, msgs/s and allocs/msg.
+// ---------------------------------------------------------------------------
+
+struct CodecRow {
+    name: &'static str,
+    old_msgs_per_sec: f64,
+    new_msgs_per_sec: f64,
+    old_allocs_per_msg: f64,
+    new_allocs_per_msg: f64,
+}
+
+impl CodecRow {
+    fn speedup(&self) -> f64 {
+        self.new_msgs_per_sec / self.old_msgs_per_sec
+    }
+}
+
+/// Measure one old/new pair: `old` and `new` each process exactly one
+/// message per call.
+fn codec_pair(
+    cfg: BenchConfig,
+    name: &'static str,
+    n: u64,
+    mut old: impl FnMut(),
+    mut new: impl FnMut(),
+) -> CodecRow {
+    let alloc_iters = 2_000u64;
+    // Warm both paths (grows reused buffers to their steady state).
+    for _ in 0..100 {
+        old();
+        new();
+    }
+    let old_allocs = count_allocs(|| {
+        for _ in 0..alloc_iters {
+            old();
+        }
+    }) as f64
+        / alloc_iters as f64;
+    let new_allocs = count_allocs(|| {
+        for _ in 0..alloc_iters {
+            new();
+        }
+    }) as f64
+        / alloc_iters as f64;
+    let r_old = bench(&format!("codec old: {name}"), cfg, || {
+        for _ in 0..n {
+            old();
+        }
+    });
+    let r_new = bench(&format!("codec new: {name}"), cfg, || {
+        for _ in 0..n {
+            new();
+        }
+    });
+    println!(
+        "{}   ({:.0} msgs/s, {:.2} allocs/msg)",
+        row(&r_old),
+        throughput(n, r_old.mean_us()),
+        old_allocs
+    );
+    println!(
+        "{}   ({:.0} msgs/s, {:.2} allocs/msg)",
+        row(&r_new),
+        throughput(n, r_new.mean_us()),
+        new_allocs
+    );
+    CodecRow {
+        name,
+        old_msgs_per_sec: throughput(n, r_old.mean_us()),
+        new_msgs_per_sec: throughput(n, r_new.mean_us()),
+        old_allocs_per_msg: old_allocs,
+        new_allocs_per_msg: new_allocs,
+    }
+}
+
+fn codec_section(cfg: BenchConfig) -> Vec<CodecRow> {
+    let n: u64 = if std::env::var_os("RSDS_BENCH_QUICK").is_some() { 20_000 } else { 200_000 };
+    let mut rows = Vec::new();
+
+    let compute = Msg::ComputeTask {
         run: RunId(7),
         task: TaskId(12345),
         key: "task-12345".into(),
         payload: rsds::taskgraph::Payload::BusyWait,
         duration_us: 6,
         output_size: 28,
-        inputs: vec![],
+        inputs: vec![
+            TaskInputLoc { task: TaskId(12_000), addr: "10.0.0.1:9000".into(), nbytes: 512 },
+            TaskInputLoc { task: TaskId(12_001), addr: String::new(), nbytes: 64 },
+        ],
         priority: 12345,
     };
-    let bytes = encode_msg(&msg);
-    let n = 10_000;
-    let r = bench("protocol: encode 10k compute-task msgs", cfg, || {
-        for _ in 0..n {
-            std::hint::black_box(encode_msg(std::hint::black_box(&msg)));
-        }
+    let compute_bytes = encode_msg(&compute);
+    assert_eq!(compute_bytes, encode_msg_value(&compute), "codecs must agree on bytes");
+
+    let finished = Msg::TaskFinished(TaskFinishedInfo {
+        run: RunId(7),
+        task: TaskId(12345),
+        nbytes: 28,
+        duration_us: 6,
     });
-    println!("{}   ({:.0} msgs/s)", row(&r), throughput(n, r.mean_us()));
-    let r = bench("protocol: decode 10k compute-task msgs", cfg, || {
-        for _ in 0..n {
-            std::hint::black_box(decode_msg(std::hint::black_box(&bytes)).unwrap());
+    let finished_bytes = encode_msg(&finished);
+    let steal = Msg::StealRequest { run: RunId(7), task: TaskId(12345) };
+    let steal_bytes = encode_msg(&steal);
+    let steal_resp = Msg::StealResponse { run: RunId(7), task: TaskId(12345), ok: true };
+    let steal_resp_bytes = encode_msg(&steal_resp);
+
+    // Reused output buffer: the per-connection pattern in the server.
+    let mut buf: Vec<u8> = Vec::new();
+
+    // --- encode: assignment / task-finished / steal-request ---
+    rows.push(codec_pair(
+        cfg,
+        "encode compute-task",
+        n,
+        || {
+            std::hint::black_box(encode_msg_value(std::hint::black_box(&compute)));
+        },
+        || {
+            buf.clear();
+            encode_msg_into(std::hint::black_box(&compute), &mut buf);
+            std::hint::black_box(buf.len());
+        },
+    ));
+    let mut buf: Vec<u8> = Vec::new();
+    rows.push(codec_pair(
+        cfg,
+        "encode task-finished",
+        n,
+        || {
+            std::hint::black_box(encode_msg_value(std::hint::black_box(&finished)));
+        },
+        || {
+            buf.clear();
+            encode_msg_into(std::hint::black_box(&finished), &mut buf);
+            std::hint::black_box(buf.len());
+        },
+    ));
+    let mut buf: Vec<u8> = Vec::new();
+    rows.push(codec_pair(
+        cfg,
+        "encode steal-request",
+        n,
+        || {
+            std::hint::black_box(encode_msg_value(std::hint::black_box(&steal)));
+        },
+        || {
+            buf.clear();
+            encode_msg_into(std::hint::black_box(&steal), &mut buf);
+            std::hint::black_box(buf.len());
+        },
+    ));
+
+    // --- decode: owned Msg on both sides ---
+    rows.push(codec_pair(
+        cfg,
+        "decode compute-task",
+        n,
+        || {
+            std::hint::black_box(decode_msg_value(std::hint::black_box(&compute_bytes)).unwrap());
+        },
+        || {
+            std::hint::black_box(decode_msg(std::hint::black_box(&compute_bytes)).unwrap());
+        },
+    ));
+    // Borrowed view: the fully zero-allocation decode of the assignment.
+    rows.push(codec_pair(
+        cfg,
+        "decode compute-task (borrowed view)",
+        n,
+        || {
+            std::hint::black_box(decode_msg_value(std::hint::black_box(&compute_bytes)).unwrap());
+        },
+        || {
+            let v = ComputeTaskView::decode(std::hint::black_box(&compute_bytes)).unwrap();
+            std::hint::black_box((v.run, v.task, v.duration_us, v.n_inputs()));
+        },
+    ));
+    rows.push(codec_pair(
+        cfg,
+        "decode task-finished",
+        n,
+        || {
+            std::hint::black_box(decode_msg_value(std::hint::black_box(&finished_bytes)).unwrap());
+        },
+        || {
+            std::hint::black_box(decode_msg(std::hint::black_box(&finished_bytes)).unwrap());
+        },
+    ));
+    rows.push(codec_pair(
+        cfg,
+        "decode steal-request",
+        n,
+        || {
+            std::hint::black_box(decode_msg_value(std::hint::black_box(&steal_bytes)).unwrap());
+        },
+        || {
+            std::hint::black_box(decode_msg(std::hint::black_box(&steal_bytes)).unwrap());
+        },
+    ));
+    rows.push(codec_pair(
+        cfg,
+        "decode steal-response",
+        n,
+        || {
+            let b = std::hint::black_box(&steal_resp_bytes);
+            std::hint::black_box(decode_msg_value(b).unwrap());
+        },
+        || {
+            std::hint::black_box(decode_msg(std::hint::black_box(&steal_resp_bytes)).unwrap());
+        },
+    ));
+
+    // --- the acceptance guarantees: zero allocs after warm-up ---
+    for r in &rows {
+        let zero_alloc_required = matches!(
+            r.name,
+            "encode compute-task"
+                | "encode task-finished"
+                | "encode steal-request"
+                | "decode compute-task (borrowed view)"
+                | "decode task-finished"
+                | "decode steal-request"
+                | "decode steal-response"
+        );
+        if zero_alloc_required {
+            assert_eq!(
+                r.new_allocs_per_msg, 0.0,
+                "{}: hot path must be allocation-free after warm-up",
+                r.name
+            );
         }
-    });
-    println!(
-        "{}   ({:.0} msgs/s, {:.2} MB/s)",
-        row(&r),
-        throughput(n, r.mean_us()),
-        (n as f64 * bytes.len() as f64) / r.mean_us()
-    );
+    }
+
+    rows
+}
+
+fn write_bench_json(rows: &[CodecRow], quick: bool) {
+    let geomean = (rows.iter().map(|r| r.speedup().ln()).sum::<f64>() / rows.len() as f64).exp();
+    let mut json = String::from("{\n");
+    json.push_str("  \"pr\": 2,\n");
+    json.push_str("  \"bench\": \"codec_micro\",\n");
+    json.push_str(&format!("  \"quick\": {quick},\n"));
+    json.push_str(&format!("  \"geomean_speedup\": {geomean:.3},\n"));
+    json.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"name\": \"{}\", \"old_msgs_per_sec\": {:.0}, \"new_msgs_per_sec\": {:.0}, \
+             \"speedup\": {:.3}, \"old_allocs_per_msg\": {:.2}, \"new_allocs_per_msg\": {:.2}}}{}\n",
+            r.name,
+            r.old_msgs_per_sec,
+            r.new_msgs_per_sec,
+            r.speedup(),
+            r.old_allocs_per_msg,
+            r.new_allocs_per_msg,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_pr2.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_pr2.json (geomean speedup {geomean:.2}x)"),
+        Err(e) => eprintln!("could not write BENCH_pr2.json: {e}"),
+    }
+}
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let quick = std::env::var_os("RSDS_BENCH_QUICK").is_some();
+    let section = std::env::var("RSDS_BENCH_SECTION").unwrap_or_default();
+
+    // --- streaming vs Value-tree codec on hot-path messages ---
+    println!("== codec: streaming vs Value tree (old vs new) ==");
+    let rows = codec_section(cfg);
+    for r in &rows {
+        println!(
+            "{:<40} {:>8.2}x msgs/s   allocs/msg {:.2} -> {:.2}",
+            r.name,
+            r.speedup(),
+            r.old_allocs_per_msg,
+            r.new_allocs_per_msg
+        );
+    }
+    write_bench_json(&rows, quick);
+    if section == "codec" {
+        return;
+    }
 
     // --- raw msgpack on a 1 MiB binary payload (data-plane shape) ---
     let big = rsds::msgpack::Value::map(vec![
@@ -88,7 +395,11 @@ fn main() {
             );
         }
         out.clear();
-        reactor.on_message(Origin::Client(0), Msg::SubmitGraph { graph: merge(10_000) }, &mut out);
+        reactor.on_message(
+            Origin::Client(0),
+            Msg::SubmitGraph { graph: merge(10_000), scheduler: None },
+            &mut out,
+        );
         // Answer every compute/steal message until done.
         let mut inbox: Vec<(Dest, Msg)> = std::mem::take(&mut out);
         while let Some((dest, msg)) = inbox.pop() {

@@ -7,9 +7,15 @@
 //! about that graph carry it. A client may therefore *pipeline* — submit
 //! several graphs back-to-back with [`Client::submit`] and collect each
 //! result with [`Client::wait`] in any order. [`Client::run_graph`] keeps
-//! the old one-shot submit-and-block behavior.
+//! the old one-shot submit-and-block behavior, and
+//! [`Client::submit_with`]/[`Client::run_graph_with`] let a submission name
+//! the scheduler that should serve it (per-run scheduler choice).
+//!
+//! I/O reuses one [`FrameWriter`] and one [`FrameReader`] per connection:
+//! a warm send/receive allocates nothing beyond the decoded message's own
+//! fields.
 
-use crate::protocol::{decode_msg, encode_msg, read_frame, write_frame, Msg, RunId};
+use crate::protocol::{decode_msg, FrameReader, FrameWriter, Msg, RunId};
 use crate::taskgraph::TaskGraph;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
@@ -38,6 +44,8 @@ struct PendingRun {
 /// A connected client.
 pub struct Client {
     stream: TcpStream,
+    frames_out: FrameWriter,
+    frames_in: FrameReader,
     pub id: u32,
     /// Submitted but not yet completed runs.
     in_flight: HashMap<RunId, PendingRun>,
@@ -50,30 +58,50 @@ impl Client {
     pub fn connect(addr: &str, name: &str) -> Result<Client> {
         let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
         stream.set_nodelay(true).ok();
-        write_frame(&mut stream, &encode_msg(&Msg::RegisterClient { name: name.into() }))?;
-        let reply = decode_msg(&read_frame(&mut stream)?)?;
+        let mut frames_out = FrameWriter::new();
+        let mut frames_in = FrameReader::new();
+        frames_out.send(&mut stream, &Msg::RegisterClient { name: name.into() })?;
+        let reply = decode_msg(frames_in.read(&mut stream)?)?;
         let Msg::Welcome { id } = reply else {
             bail!("expected welcome, got {:?}", reply.op());
         };
         Ok(Client {
             stream,
+            frames_out,
+            frames_in,
             id,
             in_flight: HashMap::new(),
             completed: HashMap::new(),
         })
     }
 
+    /// Read and decode the next server message.
+    fn read_msg(&mut self) -> Result<Msg> {
+        Ok(decode_msg(self.frames_in.read(&mut self.stream)?)?)
+    }
+
     /// Submit a graph without waiting for its completion; returns the
     /// server-assigned run id once the submission is acknowledged. Several
     /// submissions may be in flight at once.
     pub fn submit(&mut self, graph: &TaskGraph) -> Result<RunId> {
+        self.submit_with(graph, None)
+    }
+
+    /// Like [`Client::submit`], but names the scheduler that should serve
+    /// this run (`random` | `ws` | …). `None` uses the server default; an
+    /// unknown name fails the run (surfaced by [`Client::wait`]).
+    pub fn submit_with(&mut self, graph: &TaskGraph, scheduler: Option<&str>) -> Result<RunId> {
         let name = graph.name.clone();
         let submitted_at = Instant::now();
-        write_frame(&mut self.stream, &encode_msg(&Msg::SubmitGraph { graph: graph.clone() }))?;
+        let msg = Msg::SubmitGraph {
+            graph: graph.clone(),
+            scheduler: scheduler.map(str::to_string),
+        };
+        self.frames_out.send(&mut self.stream, &msg)?;
         // Read until the ack for *this* submission arrives. Completions of
         // earlier pipelined runs may interleave; buffer them for `wait`.
         loop {
-            let msg = decode_msg(&read_frame(&mut self.stream)?)?;
+            let msg = self.read_msg()?;
             match msg {
                 Msg::GraphSubmitted { run, .. } => {
                     self.in_flight
@@ -95,7 +123,7 @@ impl Client {
             if !self.in_flight.contains_key(&run) {
                 bail!("run {run} was never submitted on this client");
             }
-            let msg = decode_msg(&read_frame(&mut self.stream)?)?;
+            let msg = self.read_msg()?;
             self.handle_completion(msg)?;
         }
     }
@@ -107,7 +135,16 @@ impl Client {
 
     /// Submit a graph and block until it completes or fails.
     pub fn run_graph(&mut self, graph: &TaskGraph) -> Result<RunResult> {
-        let run = self.submit(graph)?;
+        self.run_graph_with(graph, None)
+    }
+
+    /// Submit a graph under a named scheduler and block for the result.
+    pub fn run_graph_with(
+        &mut self,
+        graph: &TaskGraph,
+        scheduler: Option<&str>,
+    ) -> Result<RunResult> {
+        let run = self.submit_with(graph, scheduler)?;
         self.wait(run)
     }
 

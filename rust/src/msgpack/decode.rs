@@ -24,6 +24,10 @@ pub enum DecodeError {
     Trailing(usize),
     #[error("nesting depth exceeds {0}")]
     TooDeep(usize),
+    /// A typed streaming read ([`super::Reader`]) met a value of a different
+    /// type: expected kind, offset.
+    #[error("expected {0} at offset {1}")]
+    Unexpected(&'static str, usize),
 }
 
 const MAX_DEPTH: usize = 64;

@@ -1,7 +1,12 @@
 //! MessagePack encoder. Always emits the smallest format that represents the
 //! value (canonical encoding), so `encode(decode(bytes))` is byte-identical
 //! for canonically-encoded input.
+//!
+//! Scalar/str/bin/container-header emission delegates to the primitives in
+//! [`super::stream`] — the same bytes the streaming [`super::Writer`]
+//! produces, so the `Value` tree and the zero-copy codec can never drift.
 
+use super::stream::{write_array_header, write_bin, write_map_header, write_str, write_uint};
 use super::Value;
 
 /// Encode a value into a fresh buffer.
@@ -28,42 +33,8 @@ pub fn encode_into(v: &Value, out: &mut Vec<u8>) {
             out.push(0xcb);
             out.extend_from_slice(&f.to_be_bytes());
         }
-        Value::Str(s) => {
-            let b = s.as_bytes();
-            match b.len() {
-                0..=31 => out.push(0xa0 | b.len() as u8),
-                32..=255 => {
-                    out.push(0xd9);
-                    out.push(b.len() as u8);
-                }
-                256..=65535 => {
-                    out.push(0xda);
-                    out.extend_from_slice(&(b.len() as u16).to_be_bytes());
-                }
-                _ => {
-                    out.push(0xdb);
-                    out.extend_from_slice(&(b.len() as u32).to_be_bytes());
-                }
-            }
-            out.extend_from_slice(b);
-        }
-        Value::Bin(b) => {
-            match b.len() {
-                0..=255 => {
-                    out.push(0xc4);
-                    out.push(b.len() as u8);
-                }
-                256..=65535 => {
-                    out.push(0xc5);
-                    out.extend_from_slice(&(b.len() as u16).to_be_bytes());
-                }
-                _ => {
-                    out.push(0xc6);
-                    out.extend_from_slice(&(b.len() as u32).to_be_bytes());
-                }
-            }
-            out.extend_from_slice(b);
-        }
+        Value::Str(s) => write_str(out, s),
+        Value::Bin(b) => write_bin(out, b),
         Value::Ext(tag, b) => {
             match b.len() {
                 1 => out.push(0xd4),
@@ -88,36 +59,15 @@ pub fn encode_into(v: &Value, out: &mut Vec<u8>) {
             out.extend_from_slice(b);
         }
         Value::Array(a) => {
-            match a.len() {
-                0..=15 => out.push(0x90 | a.len() as u8),
-                16..=65535 => {
-                    out.push(0xdc);
-                    out.extend_from_slice(&(a.len() as u16).to_be_bytes());
-                }
-                _ => {
-                    out.push(0xdd);
-                    out.extend_from_slice(&(a.len() as u32).to_be_bytes());
-                }
-            }
+            write_array_header(out, a.len());
             for v in a {
                 encode_into(v, out);
             }
         }
         Value::Map(m) => {
-            match m.len() {
-                0..=15 => out.push(0x80 | m.len() as u8),
-                16..=65535 => {
-                    out.push(0xde);
-                    out.extend_from_slice(&(m.len() as u16).to_be_bytes());
-                }
-                _ => {
-                    out.push(0xdf);
-                    out.extend_from_slice(&(m.len() as u32).to_be_bytes());
-                }
-            }
+            write_map_header(out, m.len());
             for (k, v) in m {
-                // Keys are strings; reuse the str path.
-                encode_into(&Value::Str(k.clone()), out);
+                write_str(out, k);
                 encode_into(v, out);
             }
         }
@@ -125,40 +75,9 @@ pub fn encode_into(v: &Value, out: &mut Vec<u8>) {
 }
 
 fn encode_int(i: i64, out: &mut Vec<u8>) {
-    if i >= 0 {
-        return encode_uint(i as u64, out);
-    }
-    if i >= -32 {
-        out.push(i as u8); // negative fixint 0xe0..0xff
-    } else if i >= i8::MIN as i64 {
-        out.push(0xd0);
-        out.push(i as i8 as u8);
-    } else if i >= i16::MIN as i64 {
-        out.push(0xd1);
-        out.extend_from_slice(&(i as i16).to_be_bytes());
-    } else if i >= i32::MIN as i64 {
-        out.push(0xd2);
-        out.extend_from_slice(&(i as i32).to_be_bytes());
-    } else {
-        out.push(0xd3);
-        out.extend_from_slice(&i.to_be_bytes());
-    }
+    super::stream::write_int(out, i);
 }
 
 fn encode_uint(u: u64, out: &mut Vec<u8>) {
-    if u <= 0x7f {
-        out.push(u as u8); // positive fixint
-    } else if u <= u8::MAX as u64 {
-        out.push(0xcc);
-        out.push(u as u8);
-    } else if u <= u16::MAX as u64 {
-        out.push(0xcd);
-        out.extend_from_slice(&(u as u16).to_be_bytes());
-    } else if u <= u32::MAX as u64 {
-        out.push(0xce);
-        out.extend_from_slice(&(u as u32).to_be_bytes());
-    } else {
-        out.push(0xcf);
-        out.extend_from_slice(&u.to_be_bytes());
-    }
+    write_uint(out, u);
 }

@@ -9,16 +9,23 @@
 //! [`Value`] tree.
 //!
 //! The codec is on the server's hot path (every task assignment and every
-//! status update crosses it), so the decoder is written against a flat byte
-//! slice with explicit bounds checks and no intermediate allocation beyond
-//! the output tree, and the encoder writes into a caller-owned `Vec<u8>`.
+//! status update crosses it), so two layers are exposed:
+//!
+//! - [`Value`] + [`decode`]/[`encode`]: the owned tree, used for the
+//!   structurally dynamic cold path (`submit-graph`, registration) and as
+//!   the byte-identical reference codec in tests;
+//! - [`Reader`]/[`Writer`] ([`stream`]): a zero-copy pull-parser and a
+//!   direct-to-buffer emitter for the per-task hot path — no `BTreeMap`, no
+//!   field-name `String`s, no allocation at all.
 
 mod decode;
 mod encode;
+mod stream;
 mod value;
 
 pub use decode::{decode, decode_prefix, DecodeError};
 pub use encode::{encode, encode_into};
+pub use stream::{Reader, Writer};
 pub use value::Value;
 
 #[cfg(test)]

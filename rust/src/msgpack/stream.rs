@@ -1,0 +1,630 @@
+//! Streaming MessagePack layer: a zero-copy pull-parser ([`Reader`]) over a
+//! flat `&[u8]` and a direct-to-buffer emitter ([`Writer`]).
+//!
+//! The owned [`super::Value`] tree costs one `BTreeMap` plus a `String` per
+//! field name on every decode — per-message overhead the paper's whole
+//! argument says the runtime cannot afford. The hot-path protocol messages
+//! (task assignment, `task-finished`, steal request/answer, data placement)
+//! instead decode straight from the frame bytes with borrowed `&str` /
+//! `&[u8]` views and encode straight into a caller-reused `Vec<u8>`, with
+//! zero heap allocations on either side.
+//!
+//! The emitters here are the *only* place format selection happens: the
+//! [`Writer`] always picks the smallest representation (canonical form), and
+//! [`super::encode`] delegates to the same primitives, so the streaming
+//! codec and the `Value`-tree codec are byte-identical by construction —
+//! property-tested in `protocol::codec`.
+
+use super::decode::DecodeError;
+
+// ---------------------------------------------------------------------------
+// Emit primitives (shared with the Value-tree encoder)
+// ---------------------------------------------------------------------------
+
+pub(crate) fn write_uint(out: &mut Vec<u8>, u: u64) {
+    if u <= 0x7f {
+        out.push(u as u8); // positive fixint
+    } else if u <= u8::MAX as u64 {
+        out.push(0xcc);
+        out.push(u as u8);
+    } else if u <= u16::MAX as u64 {
+        out.push(0xcd);
+        out.extend_from_slice(&(u as u16).to_be_bytes());
+    } else if u <= u32::MAX as u64 {
+        out.push(0xce);
+        out.extend_from_slice(&(u as u32).to_be_bytes());
+    } else {
+        out.push(0xcf);
+        out.extend_from_slice(&u.to_be_bytes());
+    }
+}
+
+pub(crate) fn write_int(out: &mut Vec<u8>, i: i64) {
+    if i >= 0 {
+        return write_uint(out, i as u64);
+    }
+    if i >= -32 {
+        out.push(i as u8); // negative fixint 0xe0..0xff
+    } else if i >= i8::MIN as i64 {
+        out.push(0xd0);
+        out.push(i as i8 as u8);
+    } else if i >= i16::MIN as i64 {
+        out.push(0xd1);
+        out.extend_from_slice(&(i as i16).to_be_bytes());
+    } else if i >= i32::MIN as i64 {
+        out.push(0xd2);
+        out.extend_from_slice(&(i as i32).to_be_bytes());
+    } else {
+        out.push(0xd3);
+        out.extend_from_slice(&i.to_be_bytes());
+    }
+}
+
+pub(crate) fn write_str(out: &mut Vec<u8>, s: &str) {
+    let b = s.as_bytes();
+    match b.len() {
+        0..=31 => out.push(0xa0 | b.len() as u8),
+        32..=255 => {
+            out.push(0xd9);
+            out.push(b.len() as u8);
+        }
+        256..=65535 => {
+            out.push(0xda);
+            out.extend_from_slice(&(b.len() as u16).to_be_bytes());
+        }
+        _ => {
+            out.push(0xdb);
+            out.extend_from_slice(&(b.len() as u32).to_be_bytes());
+        }
+    }
+    out.extend_from_slice(b);
+}
+
+pub(crate) fn write_bin(out: &mut Vec<u8>, b: &[u8]) {
+    match b.len() {
+        0..=255 => {
+            out.push(0xc4);
+            out.push(b.len() as u8);
+        }
+        256..=65535 => {
+            out.push(0xc5);
+            out.extend_from_slice(&(b.len() as u16).to_be_bytes());
+        }
+        _ => {
+            out.push(0xc6);
+            out.extend_from_slice(&(b.len() as u32).to_be_bytes());
+        }
+    }
+    out.extend_from_slice(b);
+}
+
+pub(crate) fn write_array_header(out: &mut Vec<u8>, n: usize) {
+    match n {
+        0..=15 => out.push(0x90 | n as u8),
+        16..=65535 => {
+            out.push(0xdc);
+            out.extend_from_slice(&(n as u16).to_be_bytes());
+        }
+        _ => {
+            out.push(0xdd);
+            out.extend_from_slice(&(n as u32).to_be_bytes());
+        }
+    }
+}
+
+pub(crate) fn write_map_header(out: &mut Vec<u8>, n: usize) {
+    match n {
+        0..=15 => out.push(0x80 | n as u8),
+        16..=65535 => {
+            out.push(0xde);
+            out.extend_from_slice(&(n as u16).to_be_bytes());
+        }
+        _ => {
+            out.push(0xdf);
+            out.extend_from_slice(&(n as u32).to_be_bytes());
+        }
+    }
+}
+
+/// Direct-to-buffer MessagePack emitter. Appends to a caller-owned `Vec` so
+/// a connection can reuse one output buffer for every message it sends.
+pub struct Writer<'b> {
+    out: &'b mut Vec<u8>,
+}
+
+impl<'b> Writer<'b> {
+    pub fn new(out: &'b mut Vec<u8>) -> Writer<'b> {
+        Writer { out }
+    }
+
+    pub fn nil(&mut self) {
+        self.out.push(0xc0);
+    }
+
+    pub fn boolean(&mut self, b: bool) {
+        self.out.push(if b { 0xc3 } else { 0xc2 });
+    }
+
+    pub fn uint(&mut self, u: u64) {
+        write_uint(self.out, u);
+    }
+
+    pub fn int(&mut self, i: i64) {
+        write_int(self.out, i);
+    }
+
+    pub fn f64(&mut self, f: f64) {
+        self.out.push(0xcb);
+        self.out.extend_from_slice(&f.to_be_bytes());
+    }
+
+    pub fn str(&mut self, s: &str) {
+        write_str(self.out, s);
+    }
+
+    pub fn bin(&mut self, b: &[u8]) {
+        write_bin(self.out, b);
+    }
+
+    /// Declare a map of `n` key/value pairs; the caller then emits `n`
+    /// alternating keys and values.
+    pub fn map_header(&mut self, n: usize) {
+        write_map_header(self.out, n);
+    }
+
+    /// Declare an array of `n` elements; the caller then emits them.
+    pub fn array_header(&mut self, n: usize) {
+        write_array_header(self.out, n);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pull-parser
+// ---------------------------------------------------------------------------
+
+/// Zero-copy pull-parser over a complete frame.
+///
+/// Typed accessors (`str`, `uint`, `map_header`, …) consume exactly one
+/// value and return borrowed views into the input; [`Reader::skip_value`]
+/// steps over a value of any shape without materializing it. Bounds are
+/// checked against the remaining input before any access, exactly like the
+/// tree decoder — a malicious length prefix cannot cause an over-read, and
+/// nothing here allocates.
+#[derive(Clone)]
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    /// Current offset from the start of the buffer.
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Bytes left to parse.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn u8(&mut self) -> Result<u8, DecodeError> {
+        let b = *self.buf.get(self.pos).ok_or(DecodeError::Eof(self.pos))?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], DecodeError> {
+        let remaining = self.buf.len() - self.pos;
+        if n > remaining {
+            return Err(DecodeError::LengthOverrun { offset: self.pos, len: n, remaining });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn be_u16(&mut self) -> Result<u16, DecodeError> {
+        Ok(u16::from_be_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn be_u32(&mut self) -> Result<u32, DecodeError> {
+        Ok(u32::from_be_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn be_u64(&mut self) -> Result<u64, DecodeError> {
+        Ok(u64::from_be_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Consume a map header, returning the number of key/value pairs.
+    pub fn map_header(&mut self) -> Result<usize, DecodeError> {
+        let off = self.pos;
+        match self.u8()? {
+            b @ 0x80..=0x8f => Ok((b & 0x0f) as usize),
+            0xde => Ok(self.be_u16()? as usize),
+            0xdf => Ok(self.be_u32()? as usize),
+            _ => {
+                self.pos = off;
+                Err(DecodeError::Unexpected("map", off))
+            }
+        }
+    }
+
+    /// Consume an array header, returning the element count.
+    pub fn array_header(&mut self) -> Result<usize, DecodeError> {
+        let off = self.pos;
+        match self.u8()? {
+            b @ 0x90..=0x9f => Ok((b & 0x0f) as usize),
+            0xdc => Ok(self.be_u16()? as usize),
+            0xdd => Ok(self.be_u32()? as usize),
+            _ => {
+                self.pos = off;
+                Err(DecodeError::Unexpected("array", off))
+            }
+        }
+    }
+
+    /// Consume a string, borrowing it from the input.
+    pub fn str(&mut self) -> Result<&'a str, DecodeError> {
+        let off = self.pos;
+        let n = match self.u8()? {
+            b @ 0xa0..=0xbf => (b & 0x1f) as usize,
+            0xd9 => self.u8()? as usize,
+            0xda => self.be_u16()? as usize,
+            0xdb => self.be_u32()? as usize,
+            _ => {
+                self.pos = off;
+                return Err(DecodeError::Unexpected("str", off));
+            }
+        };
+        let data_off = self.pos;
+        let bytes = self.take(n)?;
+        std::str::from_utf8(bytes).map_err(|_| DecodeError::Utf8(data_off))
+    }
+
+    /// Consume a binary blob, borrowing it from the input.
+    pub fn bin(&mut self) -> Result<&'a [u8], DecodeError> {
+        let off = self.pos;
+        let n = match self.u8()? {
+            0xc4 => self.u8()? as usize,
+            0xc5 => self.be_u16()? as usize,
+            0xc6 => self.be_u32()? as usize,
+            _ => {
+                self.pos = off;
+                return Err(DecodeError::Unexpected("bin", off));
+            }
+        };
+        self.take(n)
+    }
+
+    /// Consume a non-negative integer of any encoded width.
+    pub fn uint(&mut self) -> Result<u64, DecodeError> {
+        let off = self.pos;
+        let v = match self.u8()? {
+            b @ 0x00..=0x7f => b as u64,
+            0xcc => self.u8()? as u64,
+            0xcd => self.be_u16()? as u64,
+            0xce => self.be_u32()? as u64,
+            0xcf => self.be_u64()?,
+            // Signed encodings are accepted when the value is non-negative.
+            0xd0 => {
+                let i = self.u8()? as i8;
+                if i < 0 {
+                    self.pos = off;
+                    return Err(DecodeError::Unexpected("uint", off));
+                }
+                i as u64
+            }
+            0xd1 => {
+                let i = self.be_u16()? as i16;
+                if i < 0 {
+                    self.pos = off;
+                    return Err(DecodeError::Unexpected("uint", off));
+                }
+                i as u64
+            }
+            0xd2 => {
+                let i = self.be_u32()? as i32;
+                if i < 0 {
+                    self.pos = off;
+                    return Err(DecodeError::Unexpected("uint", off));
+                }
+                i as u64
+            }
+            0xd3 => {
+                let i = self.be_u64()? as i64;
+                if i < 0 {
+                    self.pos = off;
+                    return Err(DecodeError::Unexpected("uint", off));
+                }
+                i as u64
+            }
+            _ => {
+                self.pos = off;
+                return Err(DecodeError::Unexpected("uint", off));
+            }
+        };
+        Ok(v)
+    }
+
+    /// Consume a signed integer of any encoded width that fits in `i64`.
+    pub fn int(&mut self) -> Result<i64, DecodeError> {
+        let off = self.pos;
+        let v = match self.u8()? {
+            b @ 0x00..=0x7f => b as i64,
+            b @ 0xe0..=0xff => b as i8 as i64,
+            0xcc => self.u8()? as i64,
+            0xcd => self.be_u16()? as i64,
+            0xce => self.be_u32()? as i64,
+            0xcf => {
+                let u = self.be_u64()?;
+                if u > i64::MAX as u64 {
+                    self.pos = off;
+                    return Err(DecodeError::Unexpected("int", off));
+                }
+                u as i64
+            }
+            0xd0 => self.u8()? as i8 as i64,
+            0xd1 => self.be_u16()? as i16 as i64,
+            0xd2 => self.be_u32()? as i32 as i64,
+            0xd3 => self.be_u64()? as i64,
+            _ => {
+                self.pos = off;
+                return Err(DecodeError::Unexpected("int", off));
+            }
+        };
+        Ok(v)
+    }
+
+    /// Consume a boolean.
+    pub fn boolean(&mut self) -> Result<bool, DecodeError> {
+        let off = self.pos;
+        match self.u8()? {
+            0xc2 => Ok(false),
+            0xc3 => Ok(true),
+            _ => {
+                self.pos = off;
+                Err(DecodeError::Unexpected("bool", off))
+            }
+        }
+    }
+
+    /// Step over one complete value of any type without materializing it.
+    ///
+    /// Iterative (a pending-element counter instead of recursion) so hostile
+    /// nesting depth cannot overflow the stack; every loop iteration
+    /// consumes at least one input byte, so the walk is linear in the frame
+    /// size regardless of declared container counts.
+    pub fn skip_value(&mut self) -> Result<(), DecodeError> {
+        let mut pending: u64 = 1;
+        while pending > 0 {
+            pending -= 1;
+            let off = self.pos;
+            let b = self.u8()?;
+            match b {
+                0x00..=0x7f | 0xe0..=0xff | 0xc0 | 0xc2 | 0xc3 => {}
+                0x80..=0x8f => pending += 2 * (b & 0x0f) as u64,
+                0x90..=0x9f => pending += (b & 0x0f) as u64,
+                0xa0..=0xbf => {
+                    self.take((b & 0x1f) as usize)?;
+                }
+                0xc1 => return Err(DecodeError::BadFormat(b, off)),
+                0xc4 => {
+                    let n = self.u8()? as usize;
+                    self.take(n)?;
+                }
+                0xc5 => {
+                    let n = self.be_u16()? as usize;
+                    self.take(n)?;
+                }
+                0xc6 => {
+                    let n = self.be_u32()? as usize;
+                    self.take(n)?;
+                }
+                0xc7 => {
+                    let n = self.u8()? as usize;
+                    self.u8()?;
+                    self.take(n)?;
+                }
+                0xc8 => {
+                    let n = self.be_u16()? as usize;
+                    self.u8()?;
+                    self.take(n)?;
+                }
+                0xc9 => {
+                    let n = self.be_u32()? as usize;
+                    self.u8()?;
+                    self.take(n)?;
+                }
+                0xca | 0xce | 0xd2 | 0xd6 => {
+                    // f32 / u32 / i32 / fixext4 all carry 4 payload bytes
+                    // (fixext adds its tag byte below).
+                    let extra = if b == 0xd6 { 5 } else { 4 };
+                    self.take(extra)?;
+                }
+                0xcb | 0xcf | 0xd3 | 0xd7 => {
+                    let extra = if b == 0xd7 { 9 } else { 8 };
+                    self.take(extra)?;
+                }
+                0xcc | 0xd0 => {
+                    self.take(1)?;
+                }
+                0xcd | 0xd1 => {
+                    self.take(2)?;
+                }
+                0xd4 => {
+                    self.take(2)?;
+                }
+                0xd5 => {
+                    self.take(3)?;
+                }
+                0xd8 => {
+                    self.take(17)?;
+                }
+                0xd9 => {
+                    let n = self.u8()? as usize;
+                    self.take(n)?;
+                }
+                0xda => {
+                    let n = self.be_u16()? as usize;
+                    self.take(n)?;
+                }
+                0xdb => {
+                    let n = self.be_u32()? as usize;
+                    self.take(n)?;
+                }
+                0xdc => pending += self.be_u16()? as u64,
+                0xdd => pending += self.be_u32()? as u64,
+                0xde => pending += 2 * self.be_u16()? as u64,
+                0xdf => pending += 2 * self.be_u32()? as u64,
+            }
+        }
+        Ok(())
+    }
+
+    /// Skip one value and return the raw bytes it occupied.
+    pub fn value_span(&mut self) -> Result<&'a [u8], DecodeError> {
+        let start = self.pos;
+        self.skip_value()?;
+        Ok(&self.buf[start..self.pos])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{encode, Value};
+    use super::*;
+
+    fn enc(v: &Value) -> Vec<u8> {
+        encode(v)
+    }
+
+    #[test]
+    fn writer_matches_value_encoder_scalars() {
+        for u in [0u64, 1, 0x7f, 0x80, 0xff, 0x100, 0xffff, 0x1_0000, u32::MAX as u64, u64::MAX]
+        {
+            let mut buf = Vec::new();
+            Writer::new(&mut buf).uint(u);
+            assert_eq!(buf, enc(&Value::from(u)), "uint {u}");
+        }
+        for i in [-1i64, -32, -33, -128, -129, -32768, -32769, i32::MIN as i64, i64::MIN] {
+            let mut buf = Vec::new();
+            Writer::new(&mut buf).int(i);
+            assert_eq!(buf, enc(&Value::Int(i)), "int {i}");
+        }
+        for s in ["", "x", &"y".repeat(31), &"z".repeat(32), &"w".repeat(256)] {
+            let mut buf = Vec::new();
+            Writer::new(&mut buf).str(s);
+            assert_eq!(buf, enc(&Value::str(s)), "str len {}", s.len());
+        }
+        for n in [0usize, 1, 255, 256, 65536] {
+            let mut buf = Vec::new();
+            Writer::new(&mut buf).bin(&vec![0xAB; n]);
+            assert_eq!(buf, enc(&Value::Bin(vec![0xAB; n])), "bin len {n}");
+        }
+        let mut buf = Vec::new();
+        {
+            let mut w = Writer::new(&mut buf);
+            w.boolean(true);
+            w.boolean(false);
+            w.nil();
+            w.f64(1.0);
+        }
+        let mut want = enc(&Value::Bool(true));
+        want.extend(enc(&Value::Bool(false)));
+        want.extend(enc(&Value::Nil));
+        want.extend(enc(&Value::F64(1.0)));
+        assert_eq!(buf, want);
+    }
+
+    #[test]
+    fn reader_roundtrips_writer_output() {
+        let mut buf = Vec::new();
+        {
+            let mut w = Writer::new(&mut buf);
+            w.map_header(2);
+            w.str("a");
+            w.uint(300);
+            w.str("b");
+            w.array_header(3);
+            w.int(-5);
+            w.boolean(true);
+            w.bin(b"xyz");
+        }
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.map_header().unwrap(), 2);
+        assert_eq!(r.str().unwrap(), "a");
+        assert_eq!(r.uint().unwrap(), 300);
+        assert_eq!(r.str().unwrap(), "b");
+        assert_eq!(r.array_header().unwrap(), 3);
+        assert_eq!(r.int().unwrap(), -5);
+        assert!(r.boolean().unwrap());
+        assert_eq!(r.bin().unwrap(), b"xyz");
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn type_mismatch_reports_offset_and_rewinds() {
+        let mut buf = Vec::new();
+        Writer::new(&mut buf).uint(7);
+        let mut r = Reader::new(&buf);
+        assert!(matches!(r.str(), Err(DecodeError::Unexpected("str", 0))));
+        // Failed typed read leaves the cursor in place so the caller can
+        // recover (e.g. skip the value instead).
+        assert_eq!(r.pos(), 0);
+        assert_eq!(r.uint().unwrap(), 7);
+    }
+
+    #[test]
+    fn skip_value_steps_over_arbitrary_trees() {
+        let v = Value::map(vec![
+            ("a", Value::Array(vec![Value::Int(1), Value::str("two"), Value::Nil])),
+            ("b", Value::map(vec![("c", Value::Bin(vec![9; 300]))])),
+            ("d", Value::F32(2.5)),
+            ("e", Value::Ext(5, vec![1, 2, 3, 4])),
+        ]);
+        let mut bytes = enc(&v);
+        bytes.extend_from_slice(&[0x2a]); // trailing sentinel value (42)
+        let mut r = Reader::new(&bytes);
+        r.skip_value().unwrap();
+        assert_eq!(r.uint().unwrap(), 42, "skip must land exactly on the next value");
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn skip_value_truncated_input_errors_cleanly() {
+        let v = Value::Array(vec![Value::str("hello"); 10]);
+        let bytes = enc(&v);
+        for cut in 1..bytes.len() {
+            let mut r = Reader::new(&bytes[..cut]);
+            assert!(r.skip_value().is_err(), "cut at {cut} must error");
+        }
+    }
+
+    #[test]
+    fn skip_value_hostile_counts_bounded() {
+        // array32 declaring 1M elements over a 5-byte buffer: linear walk,
+        // clean error.
+        let mut r = Reader::new(&[0xdd, 0x00, 0x0f, 0x42, 0x40]);
+        assert!(r.skip_value().is_err());
+        // map32 with a huge count.
+        let mut r = Reader::new(&[0xdf, 0xff, 0xff, 0xff, 0xff]);
+        assert!(r.skip_value().is_err());
+    }
+
+    #[test]
+    fn value_span_returns_exact_slice() {
+        let v = Value::Array(vec![Value::Int(1), Value::Int(2)]);
+        let mut bytes = enc(&v);
+        let inner_len = bytes.len();
+        bytes.push(0x07);
+        let mut r = Reader::new(&bytes);
+        let span = r.value_span().unwrap();
+        assert_eq!(span, &enc(&v)[..]);
+        assert_eq!(span.len(), inner_len);
+        assert_eq!(r.uint().unwrap(), 7);
+    }
+}

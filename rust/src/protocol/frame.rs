@@ -36,6 +36,14 @@ pub fn write_frame(w: &mut impl Write, body: &[u8]) -> Result<(), FrameError> {
 /// Read one frame. Returns `FrameError::Closed` on clean EOF at a frame
 /// boundary.
 pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>, FrameError> {
+    let len = read_frame_len(r)?;
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(body)
+}
+
+/// Read and validate a frame's length prefix.
+fn read_frame_len(r: &mut impl Read) -> Result<usize, FrameError> {
     let mut len_buf = [0u8; 8];
     // Distinguish clean close (0 bytes) from mid-prefix truncation.
     let mut got = 0;
@@ -56,9 +64,84 @@ pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>, FrameError> {
     if len > MAX_FRAME_LEN {
         return Err(FrameError::TooLarge(len));
     }
-    let mut body = vec![0u8; len as usize];
-    r.read_exact(&mut body)?;
-    Ok(body)
+    Ok(len as usize)
+}
+
+/// Append `msg` to `batch` as one complete frame (no I/O).
+///
+/// This is the server's coalescing primitive: the reactor appends every
+/// frame bound for one connection into a single buffer and the writer
+/// thread flushes it with one `write_all` — one syscall per flush instead
+/// of two per message.
+pub fn append_frame(batch: &mut Vec<u8>, msg: &super::Msg) -> Result<(), FrameError> {
+    let start = batch.len();
+    batch.extend_from_slice(&[0u8; 8]);
+    super::codec::encode_msg_into(msg, batch);
+    let len = (batch.len() - start - 8) as u64;
+    if len > MAX_FRAME_LEN {
+        batch.truncate(start);
+        return Err(FrameError::TooLarge(len));
+    }
+    batch[start..start + 8].copy_from_slice(&len.to_le_bytes());
+    Ok(())
+}
+
+/// Reusable single-message frame writer: one internal buffer holds
+/// `[len][msgpack body]`, written with a single `write_all`. A warm
+/// [`FrameWriter::send`] performs zero heap allocations and one syscall —
+/// the per-connection send path of workers and clients.
+pub struct FrameWriter {
+    buf: Vec<u8>,
+}
+
+impl FrameWriter {
+    pub fn new() -> FrameWriter {
+        FrameWriter { buf: Vec::new() }
+    }
+
+    /// Encode `msg` and write it as one frame.
+    pub fn send(&mut self, w: &mut impl Write, msg: &super::Msg) -> Result<(), FrameError> {
+        self.buf.clear();
+        append_frame(&mut self.buf, msg)?;
+        w.write_all(&self.buf)?;
+        w.flush()?;
+        Ok(())
+    }
+}
+
+impl Default for FrameWriter {
+    fn default() -> Self {
+        FrameWriter::new()
+    }
+}
+
+/// Reusable frame reader: the body buffer is reused across frames, so a
+/// warm read allocates nothing (the buffer grows to the largest frame seen
+/// and stays there).
+pub struct FrameReader {
+    buf: Vec<u8>,
+}
+
+impl FrameReader {
+    pub fn new() -> FrameReader {
+        FrameReader { buf: Vec::new() }
+    }
+
+    /// Read one frame; the returned slice is valid until the next call.
+    /// Returns `FrameError::Closed` on clean EOF at a frame boundary.
+    pub fn read<'a>(&'a mut self, r: &mut impl Read) -> Result<&'a [u8], FrameError> {
+        let len = read_frame_len(r)?;
+        self.buf.clear();
+        self.buf.resize(len, 0);
+        r.read_exact(&mut self.buf)?;
+        Ok(&self.buf)
+    }
+}
+
+impl Default for FrameReader {
+    fn default() -> Self {
+        FrameReader::new()
+    }
 }
 
 #[cfg(test)]
@@ -101,5 +184,53 @@ mod tests {
         buf.extend_from_slice(b"only5");
         let mut r = Cursor::new(buf);
         assert!(matches!(read_frame(&mut r), Err(FrameError::Io(_))));
+    }
+
+    #[test]
+    fn frame_writer_reader_roundtrip_msgs() {
+        use crate::protocol::{decode_msg, Msg, RunId, TaskFinishedInfo};
+        use crate::taskgraph::TaskId;
+        let msgs = [
+            Msg::Heartbeat,
+            Msg::StealRequest { run: RunId(1), task: TaskId(5) },
+            Msg::TaskFinished(TaskFinishedInfo {
+                run: RunId(2),
+                task: TaskId(9),
+                nbytes: 27,
+                duration_us: 6,
+            }),
+        ];
+        let mut wire = Vec::new();
+        let mut fw = FrameWriter::new();
+        for m in &msgs {
+            fw.send(&mut wire, m).unwrap();
+        }
+        let mut r = Cursor::new(wire);
+        let mut fr = FrameReader::new();
+        for m in &msgs {
+            let bytes = fr.read(&mut r).unwrap();
+            assert_eq!(&decode_msg(bytes).unwrap(), m);
+        }
+        assert!(matches!(fr.read(&mut r), Err(FrameError::Closed)));
+    }
+
+    #[test]
+    fn append_frame_coalesces_batches() {
+        use crate::protocol::{decode_msg, Msg, RunId};
+        use crate::taskgraph::TaskId;
+        // Several frames appended to one buffer are readable one by one —
+        // the server's batched flush relies on this byte-compatibility.
+        let msgs: Vec<Msg> = (0..5)
+            .map(|i| Msg::StealRequest { run: RunId(1), task: TaskId(i) })
+            .collect();
+        let mut batch = Vec::new();
+        for m in &msgs {
+            append_frame(&mut batch, m).unwrap();
+        }
+        let mut r = Cursor::new(batch);
+        for m in &msgs {
+            assert_eq!(&decode_msg(&read_frame(&mut r).unwrap()).unwrap(), m);
+        }
+        assert!(matches!(read_frame(&mut r), Err(FrameError::Closed)));
     }
 }

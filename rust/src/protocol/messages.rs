@@ -54,8 +54,11 @@ pub enum Msg {
     Welcome { id: u32 },
 
     // ---- graph lifecycle ----
-    /// client → server: run this graph.
-    SubmitGraph { graph: TaskGraph },
+    /// client → server: run this graph. `scheduler` optionally names the
+    /// algorithm serving this run (`random` | `ws` | …); `None` uses the
+    /// server's default. Latency-sensitive and throughput-oriented clients
+    /// can thereby pick different schedulers on one shared server.
+    SubmitGraph { graph: TaskGraph, scheduler: Option<String> },
     /// server → client: graph accepted; all later messages about it carry
     /// `run`. Clients may pipeline further submissions immediately.
     GraphSubmitted { run: RunId, n_tasks: u64 },

@@ -11,11 +11,26 @@
 //! body ([`frame`]). [`Msg`] is the typed message set; [`codec`] converts
 //! between [`Msg`] and bytes and carries the task-graph encoding used by
 //! `SubmitGraph`.
+//!
+//! The per-task hot path (assignment, `task-finished`, steal traffic, data
+//! placement) is zero-copy end to end: [`encode_msg_into`] streams into a
+//! reused buffer, [`decode_msg`] pull-parses the frame without allocating
+//! field names, [`FrameWriter`]/[`FrameReader`] reuse one I/O buffer per
+//! connection, and [`append_frame`] lets the server coalesce many frames
+//! into one write. The owned-`Value` codec survives as the cold path
+//! (`submit-graph`, registration) and as the byte-identical reference
+//! ([`encode_msg_value`]/[`decode_msg_value`]) in tests. `docs/protocol.md`
+//! documents the full wire format.
 
 mod codec;
 mod frame;
 mod messages;
 
-pub use codec::{decode_msg, encode_msg, graph_from_value, graph_to_value, CodecError};
-pub use frame::{read_frame, write_frame, FrameError, MAX_FRAME_LEN};
+pub use codec::{
+    decode_msg, decode_msg_value, encode_msg, encode_msg_into, encode_msg_value,
+    graph_from_value, graph_to_value, CodecError, ComputeTaskView, InputsIter, TaskInputRef,
+};
+pub use frame::{
+    append_frame, read_frame, write_frame, FrameError, FrameReader, FrameWriter, MAX_FRAME_LEN,
+};
 pub use messages::{Msg, RunId, TaskFinishedInfo, TaskInputLoc};

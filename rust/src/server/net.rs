@@ -7,14 +7,27 @@
 //! bookkeeping state — processes them in arrival order and hands outbound
 //! messages to per-connection writer queues so a slow peer can never block
 //! the reactor.
+//!
+//! Hot-path discipline (this is the throughput ceiling every scaling item
+//! sits on):
+//!
+//! - readers reuse one frame buffer per connection ([`FrameReader`]) and
+//!   decode via the streaming codec — no allocation per inbound message
+//!   beyond the `Msg`'s own fields;
+//! - the reactor coalesces all frames bound for one connection during one
+//!   event into a single recycled buffer ([`append_frame`]) and locks the
+//!   writer registry once per event, not once per message;
+//! - writer threads flush a whole batch with one `write_all` (one syscall)
+//!   and return the buffer to a shared pool for reuse.
 
 use super::pool::SchedulerPool;
 use super::reactor::{Dest, Origin, Reactor, ReactorReport};
 use crate::overhead::RuntimeProfile;
-use crate::protocol::{decode_msg, encode_msg, read_frame, write_frame, FrameError, Msg};
+use crate::protocol::{append_frame, decode_msg, FrameError, FrameReader, Msg};
 use crate::scheduler::WorkerId;
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
+use std::io::Write;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -26,7 +39,8 @@ use std::thread::JoinHandle;
 pub struct ServerConfig {
     /// Listen address; use port 0 for ephemeral.
     pub addr: String,
-    /// Scheduler name: `random` | `ws` | `dask-ws`.
+    /// Default scheduler name: `random` | `ws` | `dask-ws`. A `submit-graph`
+    /// may override it per run.
     pub scheduler: String,
     /// Seed for the random scheduler.
     pub seed: u64,
@@ -54,28 +68,96 @@ enum NetEvent {
     Stop,
 }
 
+/// Recycled coalescing buffers: the reactor pops one per (event,
+/// destination), the writer thread pushes it back after flushing. Bounded
+/// so a burst cannot pin memory forever.
+type BufPool = Arc<Mutex<Vec<Vec<u8>>>>;
+
+const BUF_POOL_MAX: usize = 64;
+
+/// Buffers above this capacity are dropped instead of pooled: a data-plane
+/// burst (multi-MB `data-reply` batches) must not pin up to
+/// `BUF_POOL_MAX × burst-size` bytes on an idle server forever.
+const BUF_POOL_MAX_CAPACITY: usize = 256 * 1024;
+
+fn pool_get(pool: &BufPool) -> Vec<u8> {
+    pool.lock().unwrap().pop().unwrap_or_default()
+}
+
+fn pool_put(pool: &BufPool, mut buf: Vec<u8>) {
+    if buf.capacity() > BUF_POOL_MAX_CAPACITY {
+        return;
+    }
+    buf.clear();
+    let mut p = pool.lock().unwrap();
+    if p.len() < BUF_POOL_MAX {
+        p.push(buf);
+    }
+}
+
 /// Running server: address, per-graph reports, shutdown control.
 pub struct ServerHandle {
     pub addr: SocketAddr,
     reports: Arc<Mutex<Vec<ReactorReport>>>,
     stop: Arc<AtomicBool>,
     event_tx: Sender<NetEvent>,
+    writers: Arc<Mutex<HashMap<u64, Sender<Vec<u8>>>>>,
+    conns: Arc<Mutex<HashMap<u64, TcpStream>>>,
     threads: Vec<JoinHandle<()>>,
+    conn_threads: Arc<Mutex<Vec<JoinHandle<()>>>>,
 }
 
 impl ServerHandle {
     /// Reports of all graphs completed so far.
+    ///
+    /// Prefer [`ServerHandle::reports_since`] in polling loops — this
+    /// clones the full accumulated history every call.
     pub fn reports(&self) -> Vec<ReactorReport> {
-        self.reports.lock().unwrap().clone()
+        self.reports_since(0)
     }
 
-    /// Stop the server and join its threads.
+    /// Reports at index ≥ `watermark` (the number of reports the caller has
+    /// already seen). Pollers advance their watermark by the returned
+    /// count, so each report is cloned exactly once instead of the whole
+    /// history on every call.
+    pub fn reports_since(&self, watermark: usize) -> Vec<ReactorReport> {
+        let all = self.reports.lock().unwrap();
+        all.get(watermark..).map(<[ReactorReport]>::to_vec).unwrap_or_default()
+    }
+
+    /// Total completed-run reports so far (a cheap watermark probe).
+    pub fn report_count(&self) -> usize {
+        self.reports.lock().unwrap().len()
+    }
+
+    /// Stop the server and join every thread it spawned — the accept loop,
+    /// the reactor, and all per-connection reader/writer threads.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
         let _ = self.event_tx.send(NetEvent::Stop);
         // Unblock the accept loop.
         let _ = TcpStream::connect(self.addr);
+        // Close every live connection so blocked readers return.
+        for (_, s) in self.conns.lock().unwrap().drain() {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+        // Drop the writer senders so writer threads drain and exit.
+        self.writers.lock().unwrap().clear();
+        // Join accept + reactor first: a connection racing the drains above
+        // (accepted after the stop check, registered after the drain) would
+        // leave a reader blocked on a socket nobody closed. Once the accept
+        // loop has exited no new registrations can appear, so a second
+        // drain closes any such straggler before the per-connection joins.
         for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        for (_, s) in self.conns.lock().unwrap().drain() {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+        self.writers.lock().unwrap().clear();
+        let handles: Vec<JoinHandle<()>> =
+            self.conn_threads.lock().unwrap().drain(..).collect();
+        for t in handles {
             let _ = t.join();
         }
     }
@@ -94,8 +176,14 @@ pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
     let reports = Arc::new(Mutex::new(Vec::new()));
     let (event_tx, event_rx) = channel::<NetEvent>();
 
-    // Writer registry: conn id -> outbound byte queue.
+    // Writer registry: conn id -> outbound batch queue (each item is one or
+    // more coalesced frames).
     let writers: Arc<Mutex<HashMap<u64, Sender<Vec<u8>>>>> = Arc::new(Mutex::new(HashMap::new()));
+    // Live streams, kept so shutdown can unblock reader threads.
+    let conns: Arc<Mutex<HashMap<u64, TcpStream>>> = Arc::new(Mutex::new(HashMap::new()));
+    // Reader/writer thread handles, joined on shutdown instead of leaking.
+    let conn_threads: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+    let buf_pool: BufPool = Arc::new(Mutex::new(Vec::new()));
 
     let mut threads = Vec::new();
 
@@ -104,6 +192,9 @@ pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
         let stop = stop.clone();
         let event_tx = event_tx.clone();
         let writers = writers.clone();
+        let conns = conns.clone();
+        let conn_threads = conn_threads.clone();
+        let buf_pool = buf_pool.clone();
         threads.push(std::thread::spawn(move || {
             let mut next_conn: u64 = 0;
             for stream in listener.incoming() {
@@ -114,25 +205,34 @@ pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
                 let conn = next_conn;
                 next_conn += 1;
                 stream.set_nodelay(true).ok();
-                // Writer thread.
+                let Ok(registry_stream) = stream.try_clone() else { continue };
+                conns.lock().unwrap().insert(conn, registry_stream);
+                // Writer thread: flush whole batches, recycle the buffers.
                 let (wtx, wrx) = channel::<Vec<u8>>();
                 writers.lock().unwrap().insert(conn, wtx);
                 let mut wstream = stream.try_clone().expect("clone stream");
-                std::thread::spawn(move || {
-                    for bytes in wrx {
-                        if write_frame(&mut wstream, &bytes).is_err() {
+                let pool = buf_pool.clone();
+                let writer = std::thread::spawn(move || {
+                    for batch in wrx {
+                        let ok = wstream
+                            .write_all(&batch)
+                            .and_then(|_| wstream.flush())
+                            .is_ok();
+                        pool_put(&pool, batch);
+                        if !ok {
                             break;
                         }
                     }
                     let _ = wstream.shutdown(std::net::Shutdown::Both);
                 });
-                // Reader thread.
+                // Reader thread: reused frame buffer, streaming decode.
                 let event_tx = event_tx.clone();
                 let mut rstream = stream;
-                std::thread::spawn(move || {
+                let reader = std::thread::spawn(move || {
+                    let mut frames = FrameReader::new();
                     loop {
-                        match read_frame(&mut rstream) {
-                            Ok(bytes) => match decode_msg(&bytes) {
+                        match frames.read(&mut rstream) {
+                            Ok(bytes) => match decode_msg(bytes) {
                                 Ok(msg) => {
                                     if event_tx.send(NetEvent::Inbound { conn, msg }).is_err() {
                                         break;
@@ -152,6 +252,9 @@ pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
                     }
                     let _ = event_tx.send(NetEvent::Disconnected { conn });
                 });
+                let mut handles = conn_threads.lock().unwrap();
+                handles.push(writer);
+                handles.push(reader);
             }
         }));
     }
@@ -160,24 +263,39 @@ pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
     {
         let reports = reports.clone();
         let writers = writers.clone();
+        let conns = conns.clone();
         threads.push(std::thread::spawn(move || {
-            reactor_loop(reactor, event_rx, writers, reports);
+            reactor_loop(reactor, event_rx, writers, conns, buf_pool, reports);
         }));
     }
 
-    Ok(ServerHandle { addr, reports, stop, event_tx, threads })
+    Ok(ServerHandle {
+        addr,
+        reports,
+        stop,
+        event_tx,
+        writers,
+        conns,
+        threads,
+        conn_threads,
+    })
 }
 
 fn reactor_loop(
     mut reactor: Reactor,
     event_rx: Receiver<NetEvent>,
     writers: Arc<Mutex<HashMap<u64, Sender<Vec<u8>>>>>,
+    conns: Arc<Mutex<HashMap<u64, TcpStream>>>,
+    buf_pool: BufPool,
     reports: Arc<Mutex<Vec<ReactorReport>>>,
 ) {
     // conn <-> identity maps, maintained from registration replies.
     let mut origin_of: HashMap<u64, Origin> = HashMap::new();
     let mut conn_of: HashMap<Dest, u64> = HashMap::new();
     let mut out: Vec<(Dest, Msg)> = Vec::new();
+    // Per-event coalescing: frames grouped by destination connection. The
+    // map is drained (not dropped) each event so its capacity is reused.
+    let mut batches: HashMap<u64, Vec<u8>> = HashMap::new();
     let mut reported = 0usize;
 
     for event in event_rx {
@@ -185,6 +303,7 @@ fn reactor_loop(
             NetEvent::Stop => break,
             NetEvent::Disconnected { conn } => {
                 writers.lock().unwrap().remove(&conn);
+                conns.lock().unwrap().remove(&conn);
                 if let Some(origin) = origin_of.remove(&conn) {
                     if let Origin::Worker(w) = origin {
                         conn_of.remove(&Dest::Worker(w));
@@ -226,18 +345,36 @@ fn reactor_loop(
                 }
             }
         }
-        // Flush outbound.
+        // Flush outbound: coalesce per destination connection, then take
+        // the writer-registry lock once for the whole event.
         for (dest, msg) in out.drain(..) {
             let Some(&conn) = conn_of.get(&dest) else {
                 log::warn!("no connection for {dest:?}; dropping {op}", op = msg.op());
                 continue;
             };
-            let bytes = encode_msg(&msg);
-            if let Some(tx) = writers.lock().unwrap().get(&conn) {
-                let _ = tx.send(bytes);
+            let batch = batches
+                .entry(conn)
+                .or_insert_with(|| pool_get(&buf_pool));
+            if let Err(e) = append_frame(batch, &msg) {
+                log::warn!("conn {conn}: dropping oversized {op}: {e}", op = msg.op());
             }
         }
-        // Publish new reports.
+        if !batches.is_empty() {
+            let writer_map = writers.lock().unwrap();
+            for (conn, batch) in batches.drain() {
+                match writer_map.get(&conn) {
+                    // A closed writer hands the batch back inside the error;
+                    // recycle it (the disconnect event cleans the registry).
+                    Some(tx) => {
+                        if let Err(failed) = tx.send(batch) {
+                            pool_put(&buf_pool, failed.0);
+                        }
+                    }
+                    None => pool_put(&buf_pool, batch),
+                }
+            }
+        }
+        // Publish new reports (only the fresh tail is ever copied).
         let all = reactor.reports();
         if all.len() > reported {
             let mut shared = reports.lock().unwrap();

@@ -56,16 +56,36 @@ impl SchedulerPool {
         self.workers.retain(|w| w.id != id);
     }
 
-    /// Instantiate the scheduler for a new run: fresh algorithm state,
-    /// current cluster membership, run-decorrelated seed.
+    /// Instantiate the default scheduler for a new run: fresh algorithm
+    /// state, current cluster membership, run-decorrelated seed.
     pub fn create(&mut self, run: RunId, graph: &crate::taskgraph::TaskGraph) {
-        let mut s = (self.factory)(self.seed.wrapping_add(run.0 as u64));
+        self.create_with(run, graph, None).expect("default factory is always valid");
+    }
+
+    /// Like [`SchedulerPool::create`], but `scheduler` may override the
+    /// pool's algorithm for this run (the `submit-graph` per-run choice):
+    /// latency-sensitive clients can run `random` while throughput clients
+    /// run `ws` on the same server. An unknown name fails the submission
+    /// eagerly — no scheduler state is created.
+    pub fn create_with(
+        &mut self,
+        run: RunId,
+        graph: &crate::taskgraph::TaskGraph,
+        scheduler: Option<&str>,
+    ) -> Result<(), String> {
+        let seed = self.seed.wrapping_add(run.0 as u64);
+        let mut s = match scheduler {
+            None => (self.factory)(seed),
+            Some(name) => scheduler::by_name(name, seed)
+                .ok_or_else(|| format!("unknown scheduler {name:?}"))?,
+        };
         for &w in &self.workers {
             s.add_worker(w);
         }
         s.graph_submitted(graph);
         let prev = self.scheds.insert(run, s);
         debug_assert!(prev.is_none(), "run id {run} reused while still live");
+        Ok(())
     }
 
     pub fn get(&mut self, run: RunId) -> Option<&mut Box<dyn Scheduler>> {
@@ -129,6 +149,22 @@ mod tests {
         pool.remove(ra);
         assert!(pool.get(ra).is_none());
         assert_eq!(pool.live_runs(), 1);
+    }
+
+    #[test]
+    fn per_run_scheduler_override() {
+        let mut pool = SchedulerPool::new("ws", 42).unwrap();
+        pool.add_worker(info(0));
+        let g = merge(4);
+        pool.create_with(RunId(0), &g, None).unwrap();
+        pool.create_with(RunId(1), &g, Some("random")).unwrap();
+        assert_eq!(pool.peek(RunId(0)).unwrap().name(), "ws");
+        assert_eq!(pool.peek(RunId(1)).unwrap().name(), "random");
+        // Unknown name: eager error, no state created.
+        let err = pool.create_with(RunId(2), &g, Some("fifo")).unwrap_err();
+        assert!(err.contains("fifo"), "{err}");
+        assert!(pool.peek(RunId(2)).is_none());
+        assert_eq!(pool.live_runs(), 2);
     }
 
     #[test]

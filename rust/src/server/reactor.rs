@@ -335,17 +335,25 @@ impl Reactor {
                 self.pool.add_worker(info);
                 out.push((Dest::Worker(id), Msg::Welcome { id: id.0 }));
             }
-            (Origin::Client(client), Msg::SubmitGraph { graph }) => {
+            (Origin::Client(client), Msg::SubmitGraph { graph, scheduler }) => {
                 self.charge(self.profile.task_transition_us * graph.len() as f64 * 0.2);
                 let run_id = self.run_ids.allocate();
+                let n_tasks = graph.len() as u64;
+                out.push((Dest::Client(client), Msg::GraphSubmitted { run: run_id, n_tasks }));
+                // Per-run scheduler choice: an unknown name fails this run
+                // (ack + failure so the client can match it up); other runs
+                // and the server itself are unaffected.
+                if let Err(reason) =
+                    self.pool.create_with(run_id, &graph, scheduler.as_deref())
+                {
+                    out.push((Dest::Client(client), Msg::GraphFailed { run: run_id, reason }));
+                    return;
+                }
                 let mut run = GraphRun::new(graph, client, self.clock.elapsed_us());
                 run.msgs_in += 1; // the submission itself
-                run.msgs_out += 1; // the GraphSubmitted below
-                let n_tasks = run.graph.len() as u64;
-                self.pool.create(run_id, &run.graph);
+                run.msgs_out += 1; // the GraphSubmitted above
                 let roots = run.ready_roots();
                 self.runs.insert(run_id, run);
-                out.push((Dest::Client(client), Msg::GraphSubmitted { run: run_id, n_tasks }));
                 self.pool
                     .get(run_id)
                     .expect("just created")
@@ -580,7 +588,11 @@ mod tests {
         let mut out = Vec::new();
         let n_graphs = submissions.len();
         for (client, graph) in submissions {
-            r.on_message(Origin::Client(client), Msg::SubmitGraph { graph }, &mut out);
+            r.on_message(
+                Origin::Client(client),
+                Msg::SubmitGraph { graph, scheduler: None },
+                &mut out,
+            );
         }
         let mut executed: HashMap<(RunId, WorkerId), u64> = HashMap::new();
         let mut done: HashMap<RunId, (u32, u64)> = HashMap::new();
@@ -778,7 +790,11 @@ mod tests {
         let mut r = reactor("ws");
         register(&mut r, 2, 2);
         let mut out = Vec::new();
-        r.on_message(Origin::Client(0), Msg::SubmitGraph { graph: merge(10) }, &mut out);
+        r.on_message(
+            Origin::Client(0),
+            Msg::SubmitGraph { graph: merge(10), scheduler: None },
+            &mut out,
+        );
         // Don't let workers reply; kill one instead.
         out.clear();
         r.on_disconnect(Origin::Worker(WorkerId(0)), &mut out);
@@ -794,8 +810,16 @@ mod tests {
         let mut r = reactor("random");
         register(&mut r, 2, 1);
         let mut out = Vec::new();
-        r.on_message(Origin::Client(0), Msg::SubmitGraph { graph: merge(5) }, &mut out);
-        r.on_message(Origin::Client(1), Msg::SubmitGraph { graph: merge(7) }, &mut out);
+        r.on_message(
+            Origin::Client(0),
+            Msg::SubmitGraph { graph: merge(5), scheduler: None },
+            &mut out,
+        );
+        r.on_message(
+            Origin::Client(1),
+            Msg::SubmitGraph { graph: merge(7), scheduler: None },
+            &mut out,
+        );
         let runs: Vec<RunId> = out
             .iter()
             .filter_map(|(_, m)| match m {
@@ -819,6 +843,66 @@ mod tests {
     }
 
     #[test]
+    fn per_run_scheduler_choice() {
+        // One server, two concurrent runs on different algorithms: the
+        // submission names the scheduler, the pool isolates the instances.
+        let mut r = reactor("ws");
+        register(&mut r, 2, 3);
+        let mut out = Vec::new();
+        r.on_message(
+            Origin::Client(0),
+            Msg::SubmitGraph { graph: merge(12), scheduler: Some("random".into()) },
+            &mut out,
+        );
+        r.on_message(
+            Origin::Client(1),
+            Msg::SubmitGraph { graph: merge(9), scheduler: None },
+            &mut out,
+        );
+        let runs: Vec<RunId> = out
+            .iter()
+            .filter_map(|(_, m)| match m {
+                Msg::GraphSubmitted { run, .. } => Some(*run),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(runs.len(), 2);
+        assert_eq!(r.scheduler_view(runs[0]).unwrap().name(), "random");
+        assert_eq!(r.scheduler_view(runs[1]).unwrap().name(), "ws");
+    }
+
+    #[test]
+    fn unknown_scheduler_fails_submission_only() {
+        let mut r = reactor("ws");
+        register(&mut r, 1, 2);
+        let mut out = Vec::new();
+        r.on_message(
+            Origin::Client(0),
+            Msg::SubmitGraph { graph: merge(5), scheduler: Some("fifo".into()) },
+            &mut out,
+        );
+        // Ack then failure, both naming the same run; no state leaks.
+        let run = out
+            .iter()
+            .find_map(|(_, m)| match m {
+                Msg::GraphSubmitted { run, .. } => Some(*run),
+                _ => None,
+            })
+            .expect("submission is acked");
+        assert!(
+            out.iter().any(|(d, m)| *d == Dest::Client(0)
+                && matches!(m, Msg::GraphFailed { run: r2, reason }
+                    if *r2 == run && reason.contains("fifo"))),
+            "unknown scheduler must fail the run: {out:?}"
+        );
+        assert_eq!(r.live_runs(), 0);
+        // The server still serves the next (valid) submission.
+        out.clear();
+        let (done, _) = drive_many(&mut r, vec![(0, merge(6))]);
+        assert_eq!(done.len(), 1);
+    }
+
+    #[test]
     fn report_counts_messages_and_steals() {
         let mut r = reactor("ws");
         register(&mut r, 1, 4);
@@ -835,7 +919,11 @@ mod tests {
         let mut r = reactor("ws");
         register(&mut r, 1, 3);
         let mut out = Vec::new();
-        r.on_message(Origin::Client(0), Msg::SubmitGraph { graph: merge(8) }, &mut out);
+        r.on_message(
+            Origin::Client(0),
+            Msg::SubmitGraph { graph: merge(8), scheduler: None },
+            &mut out,
+        );
         let mut release_seen: std::collections::HashSet<WorkerId> =
             std::collections::HashSet::new();
         let mut guard = 0;
@@ -984,7 +1072,11 @@ mod tests {
         let mut r = Reactor::new(pool, RuntimeProfile::rust(), false);
         register(&mut r, 1, 2);
         let mut out = Vec::new();
-        r.on_message(Origin::Client(0), Msg::SubmitGraph { graph: merge(4) }, &mut out);
+        r.on_message(
+            Origin::Client(0),
+            Msg::SubmitGraph { graph: merge(4), scheduler: None },
+            &mut out,
+        );
         let run = out
             .iter()
             .find_map(|(_, m)| match m {

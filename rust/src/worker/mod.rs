@@ -20,7 +20,9 @@
 pub mod payload;
 pub mod zero;
 
-use crate::protocol::{decode_msg, encode_msg, read_frame, write_frame, FrameError, Msg, RunId, TaskFinishedInfo, TaskInputLoc};
+use crate::protocol::{
+    decode_msg, FrameError, FrameReader, FrameWriter, Msg, RunId, TaskFinishedInfo, TaskInputLoc,
+};
 use crate::taskgraph::{Payload, TaskId};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::{BinaryHeap, HashMap, HashSet};
@@ -76,6 +78,14 @@ impl Ord for QueuedTask {
     }
 }
 
+/// The worker→server send half: stream plus its reused frame buffer, under
+/// one lock so a warm send is one buffer fill and one syscall, no
+/// allocation.
+struct ServerLink {
+    stream: TcpStream,
+    frames: FrameWriter,
+}
+
 struct Shared {
     queue: Mutex<BinaryHeap<QueuedTask>>,
     /// Tasks in `queue` (for O(1) steal checks).
@@ -88,14 +98,14 @@ struct Shared {
     /// and never reused, so this set costs 4 bytes per run served.)
     released: Mutex<HashSet<RunId>>,
     stop: AtomicBool,
-    server_tx: Mutex<TcpStream>,
+    server_tx: Mutex<ServerLink>,
 }
 
 impl Shared {
     fn send(&self, msg: &Msg) -> Result<()> {
-        let bytes = encode_msg(msg);
-        let mut s = self.server_tx.lock().expect("server stream poisoned");
-        write_frame(&mut *s, &bytes)?;
+        let mut link = self.server_tx.lock().expect("server stream poisoned");
+        let ServerLink { stream, frames } = &mut *link;
+        frames.send(stream, msg)?;
         Ok(())
     }
 }
@@ -111,8 +121,8 @@ impl WorkerHandle {
     pub fn shutdown(&self) {
         self.shared.stop.store(true, Ordering::SeqCst);
         self.shared.cv.notify_all();
-        let s = self.shared.server_tx.lock().unwrap();
-        let _ = s.shutdown(std::net::Shutdown::Both);
+        let link = self.shared.server_tx.lock().unwrap();
+        let _ = link.stream.shutdown(std::net::Shutdown::Both);
     }
 }
 
@@ -125,16 +135,18 @@ pub fn run_worker(cfg: WorkerConfig) -> Result<WorkerHandle> {
     let mut stream =
         TcpStream::connect(&cfg.server_addr).with_context(|| format!("connect {}", cfg.server_addr))?;
     stream.set_nodelay(true).ok();
-    write_frame(
+    let mut register_frames = FrameWriter::new();
+    register_frames.send(
         &mut stream,
-        &encode_msg(&Msg::RegisterWorker {
+        &Msg::RegisterWorker {
             name: cfg.name.clone(),
             ncores: cfg.ncores,
             node: cfg.node,
             data_addr: data_addr.clone(),
-        }),
+        },
     )?;
-    let reply = decode_msg(&read_frame(&mut stream)?)?;
+    let mut frames_in = FrameReader::new();
+    let reply = decode_msg(frames_in.read(&mut stream)?)?;
     let Msg::Welcome { id } = reply else {
         bail!("expected welcome, got {:?}", reply.op());
     };
@@ -146,7 +158,10 @@ pub fn run_worker(cfg: WorkerConfig) -> Result<WorkerHandle> {
         store: Mutex::new(HashMap::new()),
         released: Mutex::new(HashSet::new()),
         stop: AtomicBool::new(false),
-        server_tx: Mutex::new(stream.try_clone().context("clone server stream")?),
+        server_tx: Mutex::new(ServerLink {
+            stream: stream.try_clone().context("clone server stream")?,
+            frames: register_frames,
+        }),
     });
 
     // Data server: serve peer fetch requests.
@@ -173,17 +188,18 @@ pub fn run_worker(cfg: WorkerConfig) -> Result<WorkerHandle> {
             .expect("spawn executor");
     }
 
-    // Server reader.
+    // Server reader (reuses one frame buffer for every inbound message).
     {
         let shared = shared.clone();
         std::thread::spawn(move || {
             let mut stream = stream;
+            let mut frames_in = frames_in;
             loop {
                 if shared.stop.load(Ordering::SeqCst) {
                     break;
                 }
-                let msg = match read_frame(&mut stream) {
-                    Ok(bytes) => match decode_msg(&bytes) {
+                let msg = match frames_in.read(&mut stream) {
+                    Ok(bytes) => match decode_msg(bytes) {
                         Ok(m) => m,
                         Err(e) => {
                             log::warn!("worker: bad message from server: {e}");
@@ -369,8 +385,9 @@ fn run_task(shared: &Shared, t: &QueuedTask) -> Result<TaskFinishedInfo> {
 fn fetch_remote(addr: &str, run: RunId, task: TaskId) -> Result<Vec<u8>> {
     let mut s = TcpStream::connect(addr)?;
     s.set_nodelay(true).ok();
-    write_frame(&mut s, &encode_msg(&Msg::FetchData { run, task }))?;
-    let reply = decode_msg(&read_frame(&mut s)?)?;
+    FrameWriter::new().send(&mut s, &Msg::FetchData { run, task })?;
+    let mut frames_in = FrameReader::new();
+    let reply = decode_msg(frames_in.read(&mut s)?)?;
     match reply {
         Msg::DataReply { run: r, task: t, data } if r == run && t == task => Ok(data),
         other => bail!("unexpected data reply {:?}", other.op()),
@@ -379,9 +396,13 @@ fn fetch_remote(addr: &str, run: RunId, task: TaskId) -> Result<Vec<u8>> {
 
 fn serve_data_conn(mut conn: TcpStream, shared: &Shared) {
     conn.set_nodelay(true).ok();
+    // Per-connection reused buffers: repeated fetches on one peer link
+    // allocate nothing beyond the payload clones themselves.
+    let mut frames_in = FrameReader::new();
+    let mut frames_out = FrameWriter::new();
     loop {
-        let msg = match read_frame(&mut conn) {
-            Ok(bytes) => match decode_msg(&bytes) {
+        let msg = match frames_in.read(&mut conn) {
+            Ok(bytes) => match decode_msg(bytes) {
                 Ok(m) => m,
                 Err(_) => break,
             },
@@ -401,7 +422,7 @@ fn serve_data_conn(mut conn: TcpStream, shared: &Shared) {
                 }
                 let Some(data) = data else { break };
                 let reply = Msg::DataReply { run, task, data: data.as_ref().clone() };
-                if write_frame(&mut conn, &encode_msg(&reply)).is_err() {
+                if frames_out.send(&mut conn, &reply).is_err() {
                     break;
                 }
             }

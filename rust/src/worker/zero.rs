@@ -12,7 +12,9 @@
 //!   any potential attempts to steal a task from a worker will fail" (§VI-D).
 
 use super::WorkerConfig;
-use crate::protocol::{decode_msg, encode_msg, read_frame, write_frame, FrameError, Msg, RunId, TaskFinishedInfo};
+use crate::protocol::{
+    decode_msg, FrameError, FrameReader, FrameWriter, Msg, RunId, TaskFinishedInfo,
+};
 use crate::taskgraph::TaskId;
 use anyhow::{bail, Context, Result};
 use std::collections::HashSet;
@@ -23,18 +25,25 @@ use std::sync::{Arc, Mutex};
 /// Mocked constant object returned for data fetches (§IV-D).
 pub const MOCK_DATA: &[u8] = b"zero-worker-mock";
 
+/// Send half: stream plus reused frame buffer (the zero worker answers
+/// every compute message, so its send path is as hot as the server's).
+struct ZeroLink {
+    stream: TcpStream,
+    frames: FrameWriter,
+}
+
 /// Handle to a running zero worker.
 pub struct ZeroWorkerHandle {
     pub id: u32,
     stop: Arc<AtomicBool>,
-    stream: Arc<Mutex<TcpStream>>,
+    link: Arc<Mutex<ZeroLink>>,
 }
 
 impl ZeroWorkerHandle {
     pub fn shutdown(&self) {
         self.stop.store(true, Ordering::SeqCst);
-        let s = self.stream.lock().unwrap();
-        let _ = s.shutdown(std::net::Shutdown::Both);
+        let link = self.link.lock().unwrap();
+        let _ = link.stream.shutdown(std::net::Shutdown::Both);
     }
 }
 
@@ -43,41 +52,48 @@ pub fn run_zero_worker(cfg: WorkerConfig) -> Result<ZeroWorkerHandle> {
     let mut stream = TcpStream::connect(&cfg.server_addr)
         .with_context(|| format!("connect {}", cfg.server_addr))?;
     stream.set_nodelay(true).ok();
-    write_frame(
+    let mut register_frames = FrameWriter::new();
+    register_frames.send(
         &mut stream,
-        &encode_msg(&Msg::RegisterWorker {
+        &Msg::RegisterWorker {
             name: cfg.name.clone(),
             ncores: cfg.ncores,
             node: cfg.node,
             // Zero workers never serve peer fetches (no w2w communication).
             data_addr: String::new(),
-        }),
+        },
     )?;
-    let reply = decode_msg(&read_frame(&mut stream)?)?;
+    let mut frames_in = FrameReader::new();
+    let reply = decode_msg(frames_in.read(&mut stream)?)?;
     let Msg::Welcome { id } = reply else {
         bail!("expected welcome, got {:?}", reply.op());
     };
 
     let stop = Arc::new(AtomicBool::new(false));
-    let wstream = Arc::new(Mutex::new(stream.try_clone().context("clone")?));
+    let link = Arc::new(Mutex::new(ZeroLink {
+        stream: stream.try_clone().context("clone")?,
+        frames: register_frames,
+    }));
     {
         let stop = stop.clone();
-        let wstream = wstream.clone();
+        let link = link.clone();
         std::thread::spawn(move || {
+            let mut frames_in = frames_in;
             // Data objects that would be placed on this worker (runs share
             // the connection, so keys carry the run).
             let mut would_have: HashSet<(RunId, TaskId)> = HashSet::new();
             let send = |msg: &Msg| -> Result<()> {
-                let mut s = wstream.lock().unwrap();
-                write_frame(&mut *s, &encode_msg(msg))?;
+                let mut l = link.lock().unwrap();
+                let ZeroLink { stream, frames } = &mut *l;
+                frames.send(stream, msg)?;
                 Ok(())
             };
             loop {
                 if stop.load(Ordering::SeqCst) {
                     break;
                 }
-                let msg = match read_frame(&mut stream) {
-                    Ok(bytes) => match decode_msg(&bytes) {
+                let msg = match frames_in.read(&mut stream) {
+                    Ok(bytes) => match decode_msg(bytes) {
                         Ok(m) => m,
                         Err(_) => break,
                     },
@@ -127,5 +143,5 @@ pub fn run_zero_worker(cfg: WorkerConfig) -> Result<ZeroWorkerHandle> {
             }
         });
     }
-    Ok(ZeroWorkerHandle { id, stop, stream: wstream })
+    Ok(ZeroWorkerHandle { id, stop, link })
 }

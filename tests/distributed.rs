@@ -148,6 +148,85 @@ fn pipelined_submissions_single_client() {
 }
 
 #[test]
+fn per_run_scheduler_choice_over_tcp() {
+    // One server (default ws); concurrent clients pick different
+    // schedulers per submission and both complete on the shared pool.
+    let srv = server("ws");
+    let addr = srv.addr.to_string();
+    let ws = workers(&addr, 3);
+    let handles: Vec<_> = ["random", "ws"]
+        .into_iter()
+        .map(|sched| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr, &format!("sched-{sched}")).unwrap();
+                c.run_graph_with(&graphgen::merge(120), Some(sched)).unwrap()
+            })
+        })
+        .collect();
+    for h in handles {
+        let res = h.join().unwrap();
+        assert_eq!(res.n_tasks, 121);
+    }
+    assert_eq!(srv.report_count(), 2);
+    // Unknown scheduler: the submission is acked, then fails — only that
+    // run, the connection and server stay usable.
+    let mut c = Client::connect(&addr, "sched-bogus").unwrap();
+    let err = c.run_graph_with(&graphgen::merge(10), Some("fifo")).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown scheduler"), "{err:#}");
+    let ok = c.run_graph(&graphgen::merge(10)).unwrap();
+    assert_eq!(ok.n_tasks, 11);
+    for w in &ws {
+        w.shutdown();
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn reports_since_watermark_returns_only_new_reports() {
+    let srv = server("ws");
+    let addr = srv.addr.to_string();
+    let ws = workers(&addr, 2);
+    let mut client = Client::connect(&addr, "wm").unwrap();
+    let mut watermark = 0;
+    for i in 0..3u64 {
+        client.run_graph(&graphgen::merge(20 + i as usize)).unwrap();
+        let fresh = srv.reports_since(watermark);
+        assert_eq!(fresh.len(), 1, "exactly the new report at step {i}");
+        assert_eq!(fresh[0].n_tasks, 21 + i);
+        watermark += fresh.len();
+    }
+    assert_eq!(srv.report_count(), 3);
+    assert_eq!(srv.reports_since(watermark).len(), 0);
+    assert_eq!(srv.reports_since(999).len(), 0, "past-the-end watermark is empty");
+    // Full history still available from zero.
+    assert_eq!(srv.reports().len(), 3);
+    for w in &ws {
+        w.shutdown();
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn shutdown_joins_connection_threads() {
+    // Regression for leaked per-connection reader/writer threads: shutdown
+    // must join them all, with live clients and workers still attached (a
+    // hang here fails the test by timeout).
+    let srv = server("ws");
+    let addr = srv.addr.to_string();
+    let ws = workers(&addr, 2);
+    let mut client = Client::connect(&addr, "joiner").unwrap();
+    assert_eq!(client.run_graph(&graphgen::merge(30)).unwrap().n_tasks, 31);
+    // Extra idle connections that never register.
+    let idle: Vec<TcpStream> = (0..3).map(|_| TcpStream::connect(&addr).unwrap()).collect();
+    srv.shutdown();
+    drop(idle);
+    for w in &ws {
+        w.shutdown();
+    }
+}
+
+#[test]
 fn zero_worker_runs_graphs_instantly() {
     let srv = server("ws");
     let addr = srv.addr.to_string();

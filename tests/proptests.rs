@@ -5,7 +5,7 @@
 
 use rsds::graphgen;
 use rsds::overhead::RuntimeProfile;
-use rsds::protocol::{Msg, RunId, TaskFinishedInfo};
+use rsds::protocol::{Msg, RunId, TaskFinishedInfo, TaskInputLoc};
 use rsds::scheduler::{self, Action, WorkerId, WorkerInfo};
 use rsds::server::{Dest, Origin, Reactor, SchedulerPool};
 use rsds::sim::{simulate, SimConfig};
@@ -213,7 +213,7 @@ fn drive_reactor_interleaved(sched_name: &str, rng: &mut Rng) -> Result<(), Stri
     for (c, g) in graphs.iter().enumerate() {
         reactor.on_message(
             Origin::Client(c as u32),
-            Msg::SubmitGraph { graph: g.clone() },
+            Msg::SubmitGraph { graph: g.clone(), scheduler: None },
             &mut out,
         );
     }
@@ -428,6 +428,150 @@ fn prop_graph_codec_roundtrips_random_graphs() {
             if a.inputs != b.inputs || a.duration_us != b.duration_us {
                 return Err(format!("task {} mismatch", a.id));
             }
+        }
+        Ok(())
+    });
+}
+
+// ---- codec equivalence: streaming vs Value tree (satellite: round-trip
+// property tests + pull-parser fuzz) ----
+
+fn rand_str(rng: &mut Rng, max: usize) -> String {
+    let n = rng.range_usize(0, max);
+    (0..n).map(|_| (b'a' + rng.gen_range(26) as u8) as char).collect()
+}
+
+fn random_payload(rng: &mut Rng) -> Payload {
+    match rng.gen_range(7) {
+        0 => Payload::NoOp,
+        1 => Payload::BusyWait,
+        2 => Payload::MergeInputs,
+        3 => Payload::HloReduce {
+            rows: rng.gen_range(1_000) as u32 + 1,
+            cols: rng.gen_range(1_000) as u32 + 1,
+            seed: rng.next_u64(),
+        },
+        4 => Payload::HloTranspose { n: rng.gen_range(512) as u32 + 1, seed: rng.next_u64() },
+        5 => Payload::HloHash {
+            n_tokens: rng.gen_range(10_000) as u32 + 1,
+            buckets: rng.gen_range(4_096) as u32 + 1,
+            seed: rng.next_u64(),
+        },
+        _ => Payload::WordBag { n_docs: rng.gen_range(1_000) as u32 + 1, seed: rng.next_u64() },
+    }
+}
+
+/// One random message of every variant; integer fields span the full width
+/// so every msgpack integer format boundary gets exercised.
+fn random_msg(rng: &mut Rng) -> Msg {
+    let run = RunId(rng.next_u64() as u32);
+    let task = TaskId(rng.next_u64() as u32);
+    // Bit-shifted magnitudes hit fixint / u8 / u16 / u32 / u64 encodings.
+    let wide = |rng: &mut Rng| rng.next_u64() >> (rng.gen_range(64) as u32);
+    match rng.gen_range(18) {
+        0 => Msg::RegisterClient { name: rand_str(rng, 40) },
+        1 => Msg::RegisterWorker {
+            name: rand_str(rng, 40),
+            ncores: rng.gen_range(128) as u32 + 1,
+            node: rng.gen_range(64) as u32,
+            data_addr: rand_str(rng, 24),
+        },
+        2 => Msg::Welcome { id: rng.next_u64() as u32 },
+        3 => Msg::SubmitGraph {
+            graph: random_graph(rng),
+            scheduler: if rng.chance(0.5) { Some(rand_str(rng, 12)) } else { None },
+        },
+        4 => Msg::GraphSubmitted { run, n_tasks: wide(rng) },
+        5 => Msg::GraphDone { run, makespan_us: wide(rng), n_tasks: wide(rng) },
+        6 => Msg::GraphFailed { run, reason: rand_str(rng, 80) },
+        7 => Msg::ReleaseRun { run },
+        8 => {
+            let n_inputs = rng.range_usize(0, 5);
+            Msg::ComputeTask {
+                run,
+                task,
+                key: rand_str(rng, 48),
+                payload: random_payload(rng),
+                duration_us: wide(rng),
+                output_size: wide(rng),
+                inputs: (0..n_inputs)
+                    .map(|_| TaskInputLoc {
+                        task: TaskId(rng.next_u64() as u32),
+                        addr: rand_str(rng, 24),
+                        nbytes: wide(rng),
+                    })
+                    .collect(),
+                priority: rng.next_u64() as i64,
+            }
+        }
+        9 => Msg::TaskFinished(TaskFinishedInfo {
+            run,
+            task,
+            nbytes: wide(rng),
+            duration_us: wide(rng),
+        }),
+        10 => Msg::TaskErred { run, task, error: rand_str(rng, 60) },
+        11 => Msg::StealRequest { run, task },
+        12 => Msg::StealResponse { run, task, ok: rng.chance(0.5) },
+        13 => Msg::FetchData { run, task },
+        14 => Msg::FetchFromServer { run, task },
+        15 => {
+            let n = rng.range_usize(0, 400);
+            Msg::DataReply { run, task, data: (0..n).map(|_| rng.next_u64() as u8).collect() }
+        }
+        16 => {
+            let n = rng.range_usize(0, 400);
+            Msg::DataToServer { run, task, data: (0..n).map(|_| rng.next_u64() as u8).collect() }
+        }
+        _ => {
+            if rng.chance(0.5) {
+                Msg::Shutdown
+            } else {
+                Msg::Heartbeat
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_streaming_codec_matches_value_tree_byte_for_byte() {
+    use rsds::protocol::{decode_msg, decode_msg_value, encode_msg, encode_msg_value};
+    check("codec byte identity", PropConfig { cases: 300, seed: 2020 }, |rng| {
+        let m = random_msg(rng);
+        let streamed = encode_msg(&m);
+        let treed = encode_msg_value(&m);
+        if streamed != treed {
+            return Err(format!("byte mismatch for {:?}", m.op()));
+        }
+        let back = decode_msg(&streamed).map_err(|e| format!("{}: {e}", m.op()))?;
+        if back != m {
+            return Err(format!("streaming decode mismatch for {:?}", m.op()));
+        }
+        let back_tree = decode_msg_value(&streamed).map_err(|e| format!("{}: {e}", m.op()))?;
+        if back_tree != m {
+            return Err(format!("value-tree decode mismatch for {:?}", m.op()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_codec_truncation_and_garbage_never_panic() {
+    use rsds::protocol::decode_msg;
+    check("codec fuzz", PropConfig { cases: 500, seed: 3030 }, |rng| {
+        if rng.chance(0.5) {
+            // Truncated valid message: a strict prefix must error cleanly.
+            let m = random_msg(rng);
+            let bytes = rsds::protocol::encode_msg(&m);
+            let cut = rng.range_usize(0, bytes.len());
+            if decode_msg(&bytes[..cut]).is_ok() {
+                return Err(format!("truncated {} at {cut} decoded Ok", m.op()));
+            }
+        } else {
+            // Random garbage: any result is fine, panicking is not.
+            let n = rng.range_usize(0, 96);
+            let bytes: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+            let _ = decode_msg(&bytes);
         }
         Ok(())
     });
