@@ -1,0 +1,136 @@
+//! Recovery overhead (PR 3 extension) — AOT cost of killing 1-of-N workers
+//! mid-run vs a clean run.
+//!
+//! The paper benchmarks a healthy cluster; this measures what lineage
+//! recovery costs when a worker dies at 30 % of the clean makespan: lost
+//! queue entries are re-placed, outputs whose only replica died are
+//! recomputed transitively, and the run completes on the survivors. Clean
+//! AOT, killed AOT, the overhead ratio and the number of re-executed tasks
+//! are reported per (scheduler, graph, cluster) combination and emitted
+//! machine-readably to `BENCH_pr3.json`.
+
+use rsds::graphgen;
+use rsds::overhead::RuntimeProfile;
+use rsds::sim::{simulate, SimConfig, WorkerKill};
+use rsds::taskgraph::TaskGraph;
+
+struct Row {
+    scheduler: &'static str,
+    graph: String,
+    n_workers: usize,
+    clean_aot_us: f64,
+    killed_aot_us: f64,
+    reexecuted: u64,
+    recoveries: u64,
+}
+
+impl Row {
+    fn overhead(&self) -> f64 {
+        self.killed_aot_us / self.clean_aot_us
+    }
+}
+
+fn measure(graph: &TaskGraph, sched: &'static str, n_workers: usize) -> Row {
+    let base = SimConfig {
+        n_workers,
+        profile: RuntimeProfile::rust(),
+        scheduler: sched.into(),
+        ..SimConfig::default()
+    };
+    let clean = simulate(graph, &base);
+    assert!(!clean.timed_out, "{sched}/{}: clean run timed out", graph.name);
+    let killed = simulate(
+        graph,
+        &SimConfig {
+            kill: Some(WorkerKill { worker: 0, at_us: clean.makespan_us * 0.3 }),
+            ..base
+        },
+    );
+    assert!(!killed.timed_out, "{sched}/{}: killed run timed out", graph.name);
+    assert_eq!(killed.n_tasks, graph.len() as u64);
+    Row {
+        scheduler: sched,
+        graph: graph.name.clone(),
+        n_workers,
+        clean_aot_us: clean.aot_us,
+        killed_aot_us: killed.aot_us,
+        reexecuted: killed.tasks_executed.saturating_sub(killed.n_tasks),
+        recoveries: killed.recoveries,
+    }
+}
+
+fn write_bench_json(rows: &[Row], quick: bool) {
+    let geomean =
+        (rows.iter().map(|r| r.overhead().ln()).sum::<f64>() / rows.len() as f64).exp();
+    let mut json = String::from("{\n");
+    json.push_str("  \"pr\": 3,\n");
+    json.push_str("  \"bench\": \"fig_recovery\",\n");
+    json.push_str(&format!("  \"quick\": {quick},\n"));
+    json.push_str(&format!("  \"geomean_kill_overhead\": {geomean:.3},\n"));
+    json.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"scheduler\": \"{}\", \"graph\": \"{}\", \"n_workers\": {}, \
+             \"clean_aot_us\": {:.2}, \"killed_aot_us\": {:.2}, \"overhead\": {:.3}, \
+             \"reexecuted_tasks\": {}, \"recoveries\": {}}}{}\n",
+            r.scheduler,
+            r.graph,
+            r.n_workers,
+            r.clean_aot_us,
+            r.killed_aot_us,
+            r.overhead(),
+            r.reexecuted,
+            r.recoveries,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_pr3.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_pr3.json (geomean kill overhead {geomean:.2}x)"),
+        Err(e) => eprintln!("could not write BENCH_pr3.json: {e}"),
+    }
+}
+
+fn main() {
+    let quick = std::env::var_os("RSDS_BENCH_QUICK").is_some();
+    let graphs: Vec<TaskGraph> = if quick {
+        vec![graphgen::merge_slow(200, 2_000), graphgen::tree(7)]
+    } else {
+        vec![
+            graphgen::merge_slow(2_000, 2_000),
+            graphgen::tree(10),
+            graphgen::xarray(25),
+        ]
+    };
+    let clusters: &[usize] = if quick { &[8] } else { &[8, 24] };
+
+    println!("== fig_recovery: AOT with 1-of-N workers killed at 30% of makespan ==");
+    println!(
+        "{:<10} {:<18} {:>8} {:>14} {:>14} {:>9} {:>8}",
+        "sched", "graph", "workers", "clean µs/task", "killed µs/task", "overhead", "re-exec"
+    );
+    let mut rows = Vec::new();
+    for graph in &graphs {
+        for sched in ["random", "ws", "dask-ws"] {
+            for &n in clusters {
+                let row = measure(graph, sched, n);
+                println!(
+                    "{:<10} {:<18} {:>8} {:>14.2} {:>14.2} {:>8.2}x {:>8}",
+                    row.scheduler,
+                    row.graph,
+                    row.n_workers,
+                    row.clean_aot_us,
+                    row.killed_aot_us,
+                    row.overhead(),
+                    row.reexecuted
+                );
+                rows.push(row);
+            }
+        }
+    }
+    write_bench_json(&rows, quick);
+    println!(
+        "\nAOT = makespan / #tasks; overhead = killed AOT / clean AOT; \
+         re-exec = task executions beyond one per task (lineage recompute)"
+    );
+}

@@ -7,16 +7,16 @@
 //! is what makes the reproduction faithful — see DESIGN.md §1.
 //!
 //! Families:
-//! - [`merge`]/[`merge_slow`] — n independent tasks merged at the end
-//! - [`tree`] — binary tree reduction of 2^n numbers
-//! - [`xarray`] — chunked 3-D grid aggregation (mean/sum of air temps)
-//! - [`bag`] — cartesian product + filter + fold
-//! - [`numpy`] — distributed transpose + add + reduce
-//! - [`groupby`]/[`join`] — partitioned table groupby / self-join
+//! - [`merge()`]/[`merge_slow`] — n independent tasks merged at the end
+//! - [`tree()`] — binary tree reduction of 2^n numbers
+//! - [`xarray()`] — chunked 3-D grid aggregation (mean/sum of air temps)
+//! - [`bag()`] — cartesian product + filter + fold
+//! - [`numpy()`] — distributed transpose + add + reduce
+//! - [`groupby()`]/[`join`] — partitioned table groupby / self-join
 //! - [`vectorizer`]/[`wordbag`] — text feature hashing / full text pipeline
 //!
 //! [`parse`] turns a spec string (`"merge-25000"`, `"groupby-90-1s-1h"`)
-//! into a graph; [`suite`] returns the paper's full benchmark set.
+//! into a graph; [`paper_suite`] returns the paper's full benchmark set.
 
 mod bag;
 mod groupby;

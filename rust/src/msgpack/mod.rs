@@ -14,7 +14,7 @@
 //! - [`Value`] + [`decode`]/[`encode`]: the owned tree, used for the
 //!   structurally dynamic cold path (`submit-graph`, registration) and as
 //!   the byte-identical reference codec in tests;
-//! - [`Reader`]/[`Writer`] ([`stream`]): a zero-copy pull-parser and a
+//! - [`Reader`]/[`Writer`] (`stream.rs`): a zero-copy pull-parser and a
 //!   direct-to-buffer emitter for the per-task hot path — no `BTreeMap`, no
 //!   field-name `String`s, no allocation at all.
 

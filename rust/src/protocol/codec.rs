@@ -461,6 +461,7 @@ pub fn encode_msg_into(msg: &Msg, out: &mut Vec<u8>) {
             w.str("task");
             w.uint(task.0 as u64);
         }
+        Msg::CancelCompute { run, task } => enc_run_task(out, "cancel-compute", *run, *task),
         Msg::FetchData { run, task } => enc_run_task(out, "fetch-data", *run, *task),
         Msg::FetchFromServer { run, task } => {
             enc_run_task(out, "fetch-from-server", *run, *task)
@@ -716,6 +717,10 @@ pub fn decode_msg(bytes: &[u8]) -> Result<Msg, CodecError> {
                 task: TaskId(req(task, "task")?),
                 ok: req(ok, "ok")?,
             })
+        }
+        "cancel-compute" => {
+            let (run, task) = dec_run_task(bytes)?;
+            Ok(Msg::CancelCompute { run, task })
         }
         "fetch-data" => {
             let (run, task) = dec_run_task(bytes)?;
@@ -1048,7 +1053,7 @@ pub fn encode_msg_value(msg: &Msg) -> Vec<u8> {
             fields.push(("task", Value::from(task.0)));
             fields.push(("error", Value::str(error)));
         }
-        Msg::StealRequest { run, task } => {
+        Msg::StealRequest { run, task } | Msg::CancelCompute { run, task } => {
             fields.push(("run", Value::from(run.0)));
             fields.push(("task", Value::from(task.0)));
         }
@@ -1144,6 +1149,9 @@ pub fn decode_msg_value(bytes: &[u8]) -> Result<Msg, CodecError> {
             error: get_str(&v, "error")?,
         },
         "steal-request" => Msg::StealRequest { run: get_run(&v)?, task: get_task(&v, "task")? },
+        "cancel-compute" => {
+            Msg::CancelCompute { run: get_run(&v)?, task: get_task(&v, "task")? }
+        }
         "steal-response" => Msg::StealResponse {
             run: get_run(&v)?,
             task: get_task(&v, "task")?,
@@ -1225,6 +1233,7 @@ mod tests {
             Msg::StealRequest { run: RunId(1), task: TaskId(5) },
             Msg::StealResponse { run: RunId(1), task: TaskId(5), ok: false },
             Msg::StealResponse { run: RunId(1), task: TaskId(6), ok: true },
+            Msg::CancelCompute { run: RunId(1), task: TaskId(7) },
             Msg::FetchData { run: RunId(4), task: TaskId(8) },
             Msg::DataReply { run: RunId(4), task: TaskId(8), data: vec![1, 2, 3] },
             Msg::FetchFromServer { run: RunId(4), task: TaskId(8) },

@@ -4,6 +4,14 @@
 
 use crate::taskgraph::{TaskGraph, TaskId};
 
+/// Error-string prefix a worker puts on a `task-erred` whose cause was a
+/// failed *input fetch* (dead peer, stale `who_has` address) rather than
+/// the task's own computation. The reactor treats such errors as
+/// recoverable — it re-runs the task instead of failing the run — because
+/// lineage recovery will re-send it with fresh input locations. A plain
+/// string convention (not a message field) keeps the wire format stable.
+pub const FETCH_FAILED_PREFIX: &str = "fetch-failed: ";
+
 /// Server-assigned namespace for one submitted graph.
 ///
 /// [`TaskId`]s are dense indices *within* one graph, so they recycle across
@@ -96,6 +104,18 @@ pub enum Msg {
     /// retracted; false if it already runs / finished.
     StealResponse { run: RunId, task: TaskId, ok: bool },
 
+    // ---- recovery (lineage-based worker-disconnect recovery) ----
+    /// server → worker: unconditionally drop the queued copy of this task
+    /// (no response expected — unlike `steal-request` there is nothing to
+    /// negotiate). Sent when an input of the task evaporated with a dead
+    /// worker: the assignment's `who_has` addresses are stale, so the task
+    /// will be re-sent after its inputs are recomputed. A task already
+    /// running is left alone; its eventual `task-finished` is accepted as a
+    /// (possibly duplicated) result, and its `task-erred` with a
+    /// `fetch-failed:` error is treated as recoverable. See
+    /// `docs/recovery.md`.
+    CancelCompute { run: RunId, task: TaskId },
+
     // ---- data plane ----
     /// worker → worker: send me this task's output.
     FetchData { run: RunId, task: TaskId },
@@ -131,6 +151,7 @@ impl Msg {
             Msg::TaskErred { .. } => "task-erred",
             Msg::StealRequest { .. } => "steal-request",
             Msg::StealResponse { .. } => "steal-response",
+            Msg::CancelCompute { .. } => "cancel-compute",
             Msg::FetchData { .. } => "fetch-data",
             Msg::DataReply { .. } => "data-reply",
             Msg::FetchFromServer { .. } => "fetch-from-server",

@@ -8,7 +8,7 @@
 //! discriminant and statically-known fields (no dynamic fragmenting).
 //!
 //! Framing is an 8-byte little-endian length prefix followed by the msgpack
-//! body ([`frame`]). [`Msg`] is the typed message set; [`codec`] converts
+//! body (`frame.rs`). [`Msg`] is the typed message set; `codec.rs` converts
 //! between [`Msg`] and bytes and carries the task-graph encoding used by
 //! `SubmitGraph`.
 //!
@@ -33,4 +33,4 @@ pub use codec::{
 pub use frame::{
     append_frame, read_frame, write_frame, FrameError, FrameReader, FrameWriter, MAX_FRAME_LEN,
 };
-pub use messages::{Msg, RunId, TaskFinishedInfo, TaskInputLoc};
+pub use messages::{Msg, RunId, TaskFinishedInfo, TaskInputLoc, FETCH_FAILED_PREFIX};

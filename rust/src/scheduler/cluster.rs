@@ -47,6 +47,35 @@ impl ClusterModel {
         self.workers[idx].info = Some(info);
     }
 
+    /// Forget a (dead) worker: wipe its per-worker state — so it stops
+    /// being a placement/steal candidate — and drop it from every
+    /// placement list. Tasks that were queued on it are the caller's
+    /// responsibility (the execution layer reports each one via
+    /// `Scheduler::task_lost` and re-submits it).
+    pub fn remove_worker(&mut self, id: WorkerId) {
+        if let Some(w) = self.workers.get_mut(id.idx()) {
+            *w = WorkerState::default();
+        }
+        for holders in self.placement.values_mut() {
+            holders.retain(|&h| h != id);
+        }
+        self.placement.retain(|_, holders| !holders.is_empty());
+    }
+
+    /// Drop a task from every queue without recording an output — its
+    /// assignment evaporated (worker death or an input-loss cancel). The
+    /// steal-race purge in [`ClusterModel::finish`] has the same shape:
+    /// an optimistic move may have parked the task on any worker.
+    pub fn forget_task(&mut self, task: TaskId) {
+        let dur = self.graph().task(task).duration_us;
+        for ws in &mut self.workers {
+            if ws.queued.remove(&task) {
+                ws.occupancy_us = ws.occupancy_us.saturating_sub(dur);
+            }
+            ws.incoming.remove(&task);
+        }
+    }
+
     pub fn n_workers(&self) -> usize {
         self.workers.iter().filter(|w| w.info.is_some()).count()
     }
@@ -305,6 +334,34 @@ mod tests {
         let c = m.next_round_robin().unwrap();
         assert_ne!(a, b);
         assert_eq!(a, c);
+    }
+
+    #[test]
+    fn remove_worker_clears_state_and_placement() {
+        let mut m = model(&[0, 1]);
+        m.assign(TaskId(0), WorkerId(0));
+        m.finish(TaskId(0), WorkerId(0));
+        m.finish(TaskId(1), WorkerId(1));
+        m.remove_worker(WorkerId(0));
+        assert_eq!(m.n_workers(), 1);
+        assert!(m.worker_ids().all(|w| w != WorkerId(0)));
+        assert!(!m.placement.contains_key(&TaskId(0)), "sole replica purged");
+        assert_eq!(m.placement[&TaskId(1)], vec![WorkerId(1)]);
+        // Candidates for d never include the corpse.
+        assert_eq!(m.candidate_workers(TaskId(2)), vec![WorkerId(1)]);
+    }
+
+    #[test]
+    fn forget_task_purges_every_queue() {
+        let mut m = model(&[0, 1]);
+        m.assign(TaskId(0), WorkerId(0));
+        m.move_task(TaskId(0), WorkerId(0), WorkerId(1)); // optimistic steal
+        m.forget_task(TaskId(0));
+        for w in &m.workers {
+            assert!(!w.queued.contains(&TaskId(0)));
+            assert!(!w.incoming.contains(&TaskId(0)));
+        }
+        assert_eq!(m.workers[1].occupancy_us, 0);
     }
 
     #[test]

@@ -174,6 +174,25 @@ impl Scheduler for DaskWsScheduler {
         self.ensure_occ(info.id.idx());
     }
 
+    fn remove_worker(&mut self, worker: WorkerId) {
+        self.model.remove_worker(worker);
+        if let Some(occ) = self.est_occupancy_us.get_mut(worker.idx()) {
+            *occ = 0.0;
+        }
+    }
+
+    fn task_lost(&mut self, task: TaskId, worker: WorkerId) {
+        let dur = self.durations.estimate(&self.model.graph().task(task).key);
+        self.model.forget_task(task);
+        self.in_flight_steals.remove(&task);
+        // Estimated occupancy is a heuristic; if an optimistic steal moved
+        // the estimate to another worker this drifts slightly — acceptable,
+        // it is reset on the next graph.
+        if let Some(occ) = self.est_occupancy_us.get_mut(worker.idx()) {
+            *occ = (*occ - dur).max(0.0);
+        }
+    }
+
     fn graph_submitted(&mut self, graph: &TaskGraph) {
         self.model.set_graph(graph);
         self.in_flight_steals.clear();

@@ -9,6 +9,14 @@
 //! ([`crate::sim`]) — which is what makes the paper's scheduler-vs-runtime
 //! comparison controlled.
 //!
+//! Ownership and threading: a scheduler instance is owned by exactly one
+//! driver — the reactor thread (one instance per run, via the server's
+//! `SchedulerPool`) or a sim engine — and is never shared or locked; the
+//! trait requires `Send` only so the owning thread can be spawned. All
+//! methods take `&mut self` and run to completion on the caller's thread
+//! (the paper's GIL-vs-thread distinction is priced by
+//! [`crate::overhead::RuntimeProfile`], not by real concurrency).
+//!
 //! Implementations:
 //! - [`RandomScheduler`] — uniform random assignment (§III-E),
 //! - [`WsScheduler`] — RSDS's simplified work-stealing (§IV-C): minimal
@@ -124,6 +132,23 @@ pub trait Scheduler: Send {
     /// A worker joined the cluster (all workers join before the graph in
     /// the paper's fixed-cluster experiments, but late joins are allowed).
     fn add_worker(&mut self, info: WorkerInfo);
+
+    /// A worker left the cluster (disconnect). The scheduler must stop
+    /// proposing it for placement and may forget any model state about it;
+    /// tasks it was responsible for are reported separately, one
+    /// [`Scheduler::task_lost`] each, and then re-offered through
+    /// [`Scheduler::tasks_ready`] by the execution layer's lineage
+    /// recovery. Default: no-op (for schedulers without a cluster model the
+    /// execution layer's re-submission is all that is needed).
+    fn remove_worker(&mut self, _worker: WorkerId) {}
+
+    /// A previously emitted assignment of `task` to `worker` evaporated —
+    /// the worker died, or the execution layer cancelled the queued copy
+    /// because an input was lost. The scheduler must drop the task from its
+    /// queue model (wherever an optimistic steal move may have put it); the
+    /// task will come back via [`Scheduler::tasks_ready`] once its inputs
+    /// are available again. Default: no-op.
+    fn task_lost(&mut self, _task: TaskId, _worker: WorkerId) {}
 
     /// A new task graph arrived. The scheduler builds its own copy of the
     /// state it needs (the paper notes reactor and scheduler each keep

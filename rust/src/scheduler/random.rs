@@ -34,6 +34,10 @@ impl Scheduler for RandomScheduler {
         self.workers.push(info.id);
     }
 
+    fn remove_worker(&mut self, worker: WorkerId) {
+        self.workers.retain(|&w| w != worker);
+    }
+
     fn graph_submitted(&mut self, _graph: &TaskGraph) {
         // Deliberately stateless (§IV-C: "does not maintain any task graph
         // state").
@@ -136,6 +140,22 @@ mod tests {
         assert_eq!(c.workers_scanned, 0);
         assert_eq!(c.steal_cycles, 0);
         assert_eq!(s.take_cost(), SchedCost::default());
+    }
+
+    #[test]
+    fn removed_worker_never_chosen_again() {
+        let mut s = RandomScheduler::new(9);
+        workers(&mut s, 4);
+        s.remove_worker(WorkerId(2));
+        let g = merge(200);
+        s.graph_submitted(&g);
+        let mut out = Vec::new();
+        s.tasks_ready(&g.roots(), &mut out);
+        for a in &out {
+            if let Action::Assign(a) = a {
+                assert_ne!(a.worker, WorkerId(2));
+            }
+        }
     }
 
     #[test]

@@ -143,6 +143,17 @@ impl Scheduler for WsScheduler {
         self.model.add_worker(info);
     }
 
+    fn remove_worker(&mut self, worker: WorkerId) {
+        self.model.remove_worker(worker);
+    }
+
+    fn task_lost(&mut self, task: TaskId, _worker: WorkerId) {
+        // The model purge is worker-agnostic: an optimistic steal move may
+        // have parked the task on a different worker than the reactor saw.
+        self.model.forget_task(task);
+        self.in_flight_steals.remove(&task);
+    }
+
     fn graph_submitted(&mut self, graph: &TaskGraph) {
         self.model.set_graph(graph);
         self.in_flight_steals.clear();
@@ -346,6 +357,58 @@ mod tests {
         let max = *loads.iter().max().unwrap();
         let min = *loads.iter().min().unwrap();
         assert!(min >= 2 || max - min < 2, "under-loaded worker left: {loads:?}");
+    }
+
+    #[test]
+    fn removed_worker_never_placed_and_lost_tasks_reassign() {
+        let g = merge(12);
+        let mut s = sched(3, 24);
+        s.graph_submitted(&g);
+        let mut out = Vec::new();
+        s.tasks_ready(&g.roots(), &mut out);
+        // Kill w1: model forgets it, its tasks are reported lost and
+        // re-offered — every re-placement must land on a survivor.
+        let dead = WorkerId(1);
+        let lost: Vec<TaskId> =
+            s.model.workers[dead.idx()].queued.iter().copied().collect();
+        s.remove_worker(dead);
+        for &t in &lost {
+            s.task_lost(t, dead);
+        }
+        out.clear();
+        s.tasks_ready(&lost, &mut out);
+        let asg = assignments(&out);
+        assert_eq!(asg.len(), lost.len());
+        assert!(asg.iter().all(|a| a.worker != dead), "{asg:?}");
+        // Steal targets avoid the corpse too.
+        for a in &out {
+            if let Action::Steal { from, to, .. } = a {
+                assert_ne!(*from, dead);
+                assert_ne!(*to, dead);
+            }
+        }
+    }
+
+    #[test]
+    fn task_lost_resolves_pending_steal_bookkeeping() {
+        // A task lost while a steal was in flight must leave no ghost in
+        // either the queue model or the in-flight set.
+        let g = merge(10);
+        let mut s = sched(2, 24);
+        s.graph_submitted(&g);
+        let mut out = Vec::new();
+        s.tasks_ready(&g.roots(), &mut out);
+        let steal = out.iter().find_map(|a| match a {
+            Action::Steal { task, from, .. } => Some((*task, *from)),
+            _ => None,
+        });
+        if let Some((task, from)) = steal {
+            s.task_lost(task, from);
+            assert!(!s.in_flight_steals.contains(&task));
+            for w in &s.model.workers {
+                assert!(!w.queued.contains(&task));
+            }
+        }
     }
 
     #[test]

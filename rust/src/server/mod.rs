@@ -5,13 +5,23 @@
 //! [`crate::scheduler::Scheduler`] that only maps ready tasks to workers.
 //! The reactor is a *pure state machine* (`on_message` in, `(Dest, Msg)`
 //! out) so the integration tests and the simulator can drive it without
-//! sockets; [`net::TcpServer`] wires it to real TCP for the distributed
-//! runtime.
+//! sockets; [`serve`] wires it to real TCP for the distributed runtime.
+//!
+//! Resilience: worker disconnects are absorbed per run by lineage recovery
+//! ([`GraphRun::recover`], orchestrated in the reactor) instead of failing
+//! every run that touched the dead worker; see `docs/recovery.md`.
 //!
 //! Overhead emulation: constructed with the `python` profile and
 //! `emulate = true`, the reactor busy-waits the calibrated CPython costs on
 //! its own hot path — turning this binary into the paper's Dask-server
 //! baseline on real sockets (DESIGN.md §5).
+//!
+//! Ownership and threading: all scheduling and bookkeeping state —
+//! [`GraphRun`]s, the [`SchedulerPool`], worker metadata — is owned by the
+//! single reactor thread and never locked. Per-connection reader threads
+//! decode frames and feed one mpsc channel; per-connection writer threads
+//! drain outbound batches; only the reactor thread touches `on_message` /
+//! `on_disconnect` (see `net.rs` for the transport discipline).
 
 mod net;
 mod pool;
@@ -21,4 +31,4 @@ mod state;
 pub use net::{serve, ServerConfig, ServerHandle};
 pub use pool::{SchedulerFactory, SchedulerPool};
 pub use reactor::{Dest, Origin, Reactor, ReactorReport};
-pub use state::{GraphRun, RunIdAlloc, TaskState};
+pub use state::{GraphRun, RecoveryPlan, RunIdAlloc, TaskState, DEFAULT_MAX_RECOVERIES};

@@ -48,12 +48,17 @@ impl SchedulerPool {
         }
     }
 
-    /// Stop replaying a (disconnected) worker into newly created
-    /// schedulers. Live schedulers are not told — the reactor fails fast on
-    /// assignments to dead workers — but every *future* run must not see
-    /// it, or one crash would doom most subsequent submissions.
+    /// A worker disconnected: stop replaying it into newly created
+    /// schedulers AND tell every live scheduler to drop it — lineage
+    /// recovery re-places the dead worker's tasks through the normal
+    /// `tasks_ready` path, so placement models must forget the corpse
+    /// before that happens (the reactor still fails fast if a scheduler
+    /// assigns to a dead worker anyway; see `flush_actions`).
     pub fn remove_worker(&mut self, id: crate::scheduler::WorkerId) {
         self.workers.retain(|w| w.id != id);
+        for s in self.scheds.values_mut() {
+            s.remove_worker(id);
+        }
     }
 
     /// Instantiate the default scheduler for a new run: fresh algorithm
@@ -165,6 +170,33 @@ mod tests {
         assert!(err.contains("fifo"), "{err}");
         assert!(pool.peek(RunId(2)).is_none());
         assert_eq!(pool.live_runs(), 2);
+    }
+
+    #[test]
+    fn removed_workers_propagate_to_live_schedulers() {
+        let mut pool = SchedulerPool::new("ws", 3).unwrap();
+        pool.add_worker(info(0));
+        pool.add_worker(info(1));
+        let g = merge(8);
+        pool.create(RunId(0), &g);
+        pool.remove_worker(WorkerId(0));
+        // The live run's scheduler must never place on the corpse…
+        let mut out = Vec::new();
+        pool.get(RunId(0)).unwrap().tasks_ready(&g.roots(), &mut out);
+        for a in &out {
+            if let Action::Assign(a) = a {
+                assert_ne!(a.worker, WorkerId(0));
+            }
+        }
+        // …and future runs never see it either.
+        pool.create(RunId(1), &g);
+        out.clear();
+        pool.get(RunId(1)).unwrap().tasks_ready(&g.roots(), &mut out);
+        for a in &out {
+            if let Action::Assign(a) = a {
+                assert_ne!(a.worker, WorkerId(0));
+            }
+        }
     }
 
     #[test]

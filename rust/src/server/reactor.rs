@@ -13,11 +13,20 @@
 //! number of clients can submit graphs concurrently — recycled dense
 //! `TaskId`s can never alias state across runs because every task-bearing
 //! message on the wire names its run.
+//!
+//! Worker-disconnect resilience: a disconnect no longer fails every run
+//! that touched the worker. Each affected run is repaired by *lineage
+//! recovery* ([`GraphRun::recover`]): lost assignments are re-placed, lost
+//! outputs are recomputed from their producers, queued tasks with
+//! evaporated inputs are cancelled on live workers (`cancel-compute`) and
+//! re-sent once their inputs exist again — all bounded by a per-run
+//! recovery budget, past which the old `graph-failed` behavior returns.
+//! See `docs/recovery.md` for the invariants.
 
 use super::pool::SchedulerPool;
 use super::state::{GraphRun, RunIdAlloc, TaskState};
 use crate::overhead::RuntimeProfile;
-use crate::protocol::{Msg, RunId, TaskInputLoc};
+use crate::protocol::{Msg, RunId, TaskInputLoc, FETCH_FAILED_PREFIX};
 use crate::scheduler::{Action, Scheduler, WorkerId, WorkerInfo};
 use crate::taskgraph::TaskId;
 use crate::util::timing::{busy_wait_us, Stopwatch};
@@ -56,7 +65,16 @@ pub struct ReactorReport {
     pub steals_failed: u64,
     pub msgs_in: u64,
     pub msgs_out: u64,
+    /// Worker-disconnect recoveries this run absorbed (0 on a clean run).
+    pub recoveries: u32,
 }
+
+/// Cap on recoverable `fetch-failed` re-runs *per task* — a stale
+/// `who_has` address can bounce a task a few times before the peer's
+/// disconnect event is processed; past this the error is treated as
+/// fatal. Per task (not per run) so one wide disconnect — many tasks
+/// fetching from the same corpse at once — cannot exhaust a shared budget.
+const MAX_FETCH_RETRIES: u32 = 5;
 
 #[derive(Debug, Clone, Copy)]
 struct WorkerMeta {
@@ -79,6 +97,10 @@ pub struct Reactor {
     run_ids: RunIdAlloc,
     reports: Vec<ReactorReport>,
     actions_buf: Vec<Action>,
+    /// Recovery budget stamped onto each new run (see
+    /// [`GraphRun::recover`]); defaults to
+    /// [`super::state::DEFAULT_MAX_RECOVERIES`].
+    default_max_recoveries: u32,
 }
 
 /// Build a compute-task message with `who_has` input locations. Free
@@ -136,7 +158,18 @@ impl Reactor {
             run_ids: RunIdAlloc::default(),
             reports: Vec::new(),
             actions_buf: Vec::new(),
+            default_max_recoveries: super::state::DEFAULT_MAX_RECOVERIES,
         }
+    }
+
+    /// Override the per-run worker-disconnect recovery budget. With 0,
+    /// any disconnect that loses work or data fails the run like before
+    /// recovery existed — except *trivial* losses (every output the dead
+    /// worker held has a surviving replica and nothing was queued on it),
+    /// which are absorbed for free at any budget.
+    pub fn with_max_recoveries(mut self, cap: u32) -> Reactor {
+        self.default_max_recoveries = cap;
+        self
     }
 
     pub fn n_workers(&self) -> usize {
@@ -216,6 +249,7 @@ impl Reactor {
             steals_failed: run.steals_failed,
             msgs_in: run.msgs_in,
             msgs_out: run.msgs_out,
+            recoveries: run.recoveries,
         });
         out.push((Dest::Client(run.client), Msg::GraphDone { run: run_id, makespan_us, n_tasks }));
         self.release_run(run_id, out);
@@ -245,9 +279,12 @@ impl Reactor {
             for action in &actions {
                 match *action {
                     Action::Assign(a) => {
-                        // Assigning to a dead worker would strand the run
-                        // (the schedulers are not told about disconnects) —
-                        // fail that run fast instead of silently dropping.
+                        // Schedulers ARE told about disconnects (the pool
+                        // propagates `remove_worker` to every live
+                        // scheduler before recovery re-seeds it), so an
+                        // assignment to a dead worker here is a scheduler
+                        // model bug — fail the run fast instead of
+                        // stranding it on a connection nobody holds.
                         let connected = self
                             .workers
                             .get(a.worker.idx())
@@ -350,6 +387,7 @@ impl Reactor {
                     return;
                 }
                 let mut run = GraphRun::new(graph, client, self.clock.elapsed_us());
+                run.max_recoveries = self.default_max_recoveries;
                 run.msgs_in += 1; // the submission itself
                 run.msgs_out += 1; // the GraphSubmitted above
                 let roots = run.ready_roots();
@@ -398,6 +436,21 @@ impl Reactor {
                     return;
                 }
                 run.msgs_in += 1;
+                // A recovery pass dissolved this steal while the response
+                // was in flight: the scheduler already heard `failed`, and
+                // the task has been reset (and possibly re-assigned) —
+                // resolving it again would corrupt the load model. Only
+                // the recorded victim's answer is swallowed: a genuine
+                // response for a *new* steal of the re-placed task comes
+                // from a different worker (or, per-connection FIFO, after
+                // this one) and must resolve normally.
+                if let Some(n) = run.cancelled_steals.get_mut(&(task, worker)) {
+                    *n -= 1;
+                    if *n == 0 {
+                        run.cancelled_steals.remove(&(task, worker));
+                    }
+                    return;
+                }
                 match run.states[task.idx()] {
                     TaskState::Stealing { from, to } => {
                         debug_assert_eq!(from, worker);
@@ -463,15 +516,76 @@ impl Reactor {
                 }
                 self.flush_actions(run_id, out);
             }
-            (Origin::Worker(_), Msg::TaskErred { run: run_id, task, error }) => {
-                let reason = match self.runs.get(&run_id) {
-                    Some(run) if task.idx() < run.graph.len() => {
-                        format!("task {} ({}) erred: {error}", task, run.graph.task(task).key)
+            (Origin::Worker(worker), Msg::TaskErred { run: run_id, task, error }) => {
+                enum ErrAction {
+                    Ignore,
+                    /// Re-run the task; `Some((from, to))` if an in-flight
+                    /// steal must be dissolved first.
+                    Retry(Option<(WorkerId, WorkerId)>),
+                    Fail(String),
+                }
+                let act = {
+                    let Some(run) = self.runs.get_mut(&run_id) else { return };
+                    if task.idx() >= run.graph.len() {
+                        ErrAction::Fail(format!("task {task} erred: {error}"))
+                    } else {
+                        run.msgs_in += 1;
+                        let state = run.states[task.idx()];
+                        let responsible = matches!(state, TaskState::Assigned(w) if w == worker)
+                            || matches!(state, TaskState::Stealing { from, .. } if from == worker);
+                        if !responsible {
+                            // A recovery pass already reset (or re-placed)
+                            // this task; the error comes from a cancelled
+                            // copy — the re-run supersedes it.
+                            log::debug!(
+                                "{run_id}: stale task-erred for {task} from {worker}; ignored"
+                            );
+                            ErrAction::Ignore
+                        } else if error.starts_with(FETCH_FAILED_PREFIX)
+                            && run.fetch_retries.get(&task).copied().unwrap_or(0)
+                                < MAX_FETCH_RETRIES
+                        {
+                            // An input fetch failed — a peer died or the
+                            // advertised address went stale mid-recovery.
+                            // Re-run the task instead of aborting: lineage
+                            // recovery (already done or about to happen
+                            // when the peer's disconnect lands) restores
+                            // the inputs. Bounded by the per-task retry cap.
+                            *run.fetch_retries.entry(task).or_insert(0) += 1;
+                            let steal = if let TaskState::Stealing { from, to } = state {
+                                *run.cancelled_steals.entry((task, from)).or_insert(0) += 1;
+                                run.steals_failed += 1;
+                                Some((from, to))
+                            } else {
+                                None
+                            };
+                            run.states[task.idx()] = TaskState::Ready;
+                            ErrAction::Retry(steal)
+                        } else {
+                            ErrAction::Fail(format!(
+                                "task {} ({}) erred: {error}",
+                                task,
+                                run.graph.task(task).key
+                            ))
+                        }
                     }
-                    Some(_) => format!("task {task} erred: {error}"),
-                    None => return,
                 };
-                self.fail_run(run_id, reason, out);
+                match act {
+                    ErrAction::Ignore => {}
+                    ErrAction::Fail(reason) => self.fail_run(run_id, reason, out),
+                    ErrAction::Retry(steal) => {
+                        {
+                            let sched =
+                                self.pool.get(run_id).expect("scheduler for live run");
+                            sched.task_lost(task, worker);
+                            if let Some((from, to)) = steal {
+                                sched.steal_result(task, from, to, false, &mut self.actions_buf);
+                            }
+                            sched.tasks_ready(&[task], &mut self.actions_buf);
+                        }
+                        self.flush_actions(run_id, out);
+                    }
+                }
             }
             (Origin::Worker(w), Msg::DataToServer { .. }) => {
                 // Zero-worker data fetches terminate here (mock payloads).
@@ -491,25 +605,89 @@ impl Reactor {
                 if let Some(meta) = self.workers.get_mut(w.idx()) {
                     meta.connected = false;
                 }
-                // New runs must not be scheduled onto the dead worker: the
-                // pool would otherwise replay it into every future
-                // scheduler, failing most submissions at first placement.
+                // Drop the worker from the pool's replay list AND from
+                // every live scheduler's model — recovery re-places the
+                // lost tasks through the normal `tasks_ready` path, so
+                // placement must already have forgotten the corpse.
                 self.pool.remove_worker(w);
-                // Fail exactly the runs that depend on this worker
-                // (assigned tasks or stored outputs); others keep going.
-                let affected: Vec<(RunId, usize)> = self
+                // Dead-letter steal markers: answers from this worker can
+                // no longer arrive, on ANY run — a run can hold a marker
+                // without otherwise involving the worker (its last steal
+                // was already dissolved), so purge everywhere, not just in
+                // the affected runs' `recover()` passes.
+                for run in self.runs.values_mut() {
+                    run.cancelled_steals.retain(|&(_, victim), _| victim != w);
+                }
+                // Repair exactly the runs that depend on this worker
+                // (assigned tasks, in-flight steals or stored outputs) by
+                // lineage recovery; unrelated runs are untouched. Past the
+                // per-run recovery budget — or with no workers left — the
+                // run fails as it did before recovery existed.
+                let affected: Vec<RunId> = self
                     .runs
                     .iter()
-                    .filter_map(|(&id, r)| {
-                        r.involves_worker(w).then(|| (id, r.tasks_on(w).len()))
-                    })
+                    .filter_map(|(&id, r)| r.involves_worker(w).then_some(id))
                     .collect();
-                for (run_id, lost) in affected {
-                    self.fail_run(
-                        run_id,
-                        format!("worker {w} disconnected with {lost} tasks"),
-                        out,
+                let no_capacity = self.n_workers() == 0;
+                for run_id in affected {
+                    let plan = if no_capacity {
+                        None
+                    } else {
+                        self.runs.get_mut(&run_id).expect("live run").recover(w)
+                    };
+                    let Some(plan) = plan else {
+                        let reason = if no_capacity {
+                            format!("worker {w} disconnected and no workers remain")
+                        } else {
+                            format!(
+                                "worker {w} disconnected; recovery budget exhausted"
+                            )
+                        };
+                        self.fail_run(run_id, reason, out);
+                        continue;
+                    };
+                    if plan.is_trivial() {
+                        continue; // survivors hold replicas of everything
+                    }
+                    self.charge(
+                        self.profile.task_transition_us
+                            * (plan.lost_assignments.len() + plan.resurrected.len()) as f64,
                     );
+                    {
+                        let sched = self.pool.get(run_id).expect("scheduler for live run");
+                        for &(task, worker) in &plan.lost_assignments {
+                            sched.task_lost(task, worker);
+                        }
+                        for &(task, from, to) in &plan.dissolved_steals {
+                            sched.steal_result(task, from, to, false, &mut self.actions_buf);
+                        }
+                    }
+                    {
+                        let run = self.runs.get_mut(&run_id).expect("live run");
+                        run.steals_failed += plan.dissolved_steals.len() as u64;
+                        run.msgs_out += plan.cancel.len() as u64;
+                    }
+                    for &(worker, task) in &plan.cancel {
+                        let connected = self
+                            .workers
+                            .get(worker.idx())
+                            .map(|m| m.connected)
+                            .unwrap_or(false);
+                        if connected {
+                            self.charge_msg(64);
+                            out.push((
+                                Dest::Worker(worker),
+                                Msg::CancelCompute { run: run_id, task },
+                            ));
+                        }
+                    }
+                    if !plan.ready.is_empty() {
+                        self.pool
+                            .get(run_id)
+                            .expect("scheduler for live run")
+                            .tasks_ready(&plan.ready, &mut self.actions_buf);
+                    }
+                    self.flush_actions(run_id, out);
                 }
             }
             Origin::Client(c) => {
@@ -785,22 +963,308 @@ mod tests {
         assert_eq!(r.live_runs(), 0);
     }
 
+    /// Drive to completion with instantly-finishing fake workers, dropping
+    /// messages destined to `dead` workers (their sockets are closed).
+    /// Returns completed runs; panics on any `GraphFailed`.
+    fn drive_until_done(
+        r: &mut Reactor,
+        mut out: Vec<(Dest, Msg)>,
+        dead: &std::collections::HashSet<WorkerId>,
+    ) -> HashMap<RunId, (u32, u64)> {
+        let mut done = HashMap::new();
+        let mut queued: HashMap<WorkerId, Vec<Msg>> = HashMap::new();
+        let mut guard = 0u64;
+        loop {
+            guard += 1;
+            assert!(guard < 1_000_000, "drive stuck");
+            for (dest, msg) in std::mem::take(&mut out) {
+                match dest {
+                    Dest::Worker(w) if dead.contains(&w) => {} // socket closed
+                    Dest::Worker(w) => queued.entry(w).or_default().push(msg),
+                    Dest::Client(c) => match msg {
+                        Msg::GraphDone { run, n_tasks, .. } => {
+                            done.insert(run, (c, n_tasks));
+                        }
+                        Msg::GraphFailed { reason, .. } => panic!("graph failed: {reason}"),
+                        _ => {}
+                    },
+                }
+            }
+            let Some((&w, _)) = queued
+                .iter()
+                .find(|(w, q)| !dead.contains(w) && !q.is_empty())
+            else {
+                break;
+            };
+            let msg = queued.get_mut(&w).unwrap().remove(0);
+            match msg {
+                Msg::ComputeTask { run, task, output_size, .. } => r.on_message(
+                    Origin::Worker(w),
+                    Msg::TaskFinished(TaskFinishedInfo {
+                        run,
+                        task,
+                        nbytes: output_size,
+                        duration_us: 1,
+                    }),
+                    &mut out,
+                ),
+                Msg::StealRequest { run, task } => r.on_message(
+                    Origin::Worker(w),
+                    Msg::StealResponse { run, task, ok: true },
+                    &mut out,
+                ),
+                Msg::CancelCompute { .. } => {
+                    // This fake executes every compute message the instant
+                    // it is delivered, so a cancel never finds a queued
+                    // copy — everything still in `queued` was sent *after*
+                    // the cancel (FIFO) and must not be dropped. The early
+                    // finish of the cancelled copy is accepted upstream and
+                    // the re-sent copy's finish is the idempotent duplicate.
+                }
+                Msg::Welcome { .. } | Msg::ReleaseRun { .. } => {}
+                other => panic!("worker got {other:?}"),
+            }
+        }
+        done
+    }
+
+    // ---- lineage recovery (PR 3 tentpole) ----
+
     #[test]
-    fn worker_disconnect_fails_only_involved_runs() {
+    fn worker_disconnect_recovers_and_completes() {
+        // Kill one of two workers before anything ran: the run must NOT
+        // fail — every lost assignment is re-placed on the survivor and
+        // the graph completes.
         let mut r = reactor("ws");
-        register(&mut r, 2, 2);
+        register(&mut r, 1, 2);
         let mut out = Vec::new();
         r.on_message(
             Origin::Client(0),
             Msg::SubmitGraph { graph: merge(10), scheduler: None },
             &mut out,
         );
-        // Don't let workers reply; kill one instead.
+        r.on_disconnect(Origin::Worker(WorkerId(0)), &mut out);
+        assert!(
+            !out.iter().any(|(_, m)| matches!(m, Msg::GraphFailed { .. })),
+            "recovery must not fail the run: {out:?}"
+        );
+        assert_eq!(r.live_runs(), 1);
+        let dead: std::collections::HashSet<WorkerId> = [WorkerId(0)].into();
+        let done = drive_until_done(&mut r, out, &dead);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done.values().next().unwrap().1, 11);
+        let report = r.reports().last().unwrap();
+        assert_eq!(report.n_tasks, 11);
+        assert!(report.recoveries >= 1, "report records the recovery");
+    }
+
+    #[test]
+    fn disconnect_after_partial_progress_recomputes_lost_outputs() {
+        // Let w0 finish some leaves (its outputs live only there), then
+        // kill it: the finished-but-lost outputs must be resurrected and
+        // the whole graph still completes on w1 with every task finished.
+        let mut r = reactor("ws");
+        register(&mut r, 1, 2);
+        let mut out = Vec::new();
+        r.on_message(
+            Origin::Client(0),
+            Msg::SubmitGraph { graph: merge(6), scheduler: None },
+            &mut out,
+        );
+        // Pre-kill phase: complete exactly the compute-tasks sent to w0 so
+        // far (replies from w0), stash w1's messages for later, and leave
+        // every steal retraction unanswered — those responses are "in
+        // flight" when the kill lands, exercising the dissolve paths.
+        let mut pending: Vec<(Dest, Msg)> = std::mem::take(&mut out);
+        let mut w1_inbox: Vec<Msg> = Vec::new();
+        let mut finished_on_w0 = 0u64;
+        while let Some((dest, msg)) = pending.pop() {
+            match (dest, msg) {
+                (Dest::Worker(w), Msg::ComputeTask { run, task, output_size, .. })
+                    if w == WorkerId(0) =>
+                {
+                    finished_on_w0 += 1;
+                    r.on_message(
+                        Origin::Worker(w),
+                        Msg::TaskFinished(TaskFinishedInfo {
+                            run,
+                            task,
+                            nbytes: output_size,
+                            duration_us: 1,
+                        }),
+                        &mut out,
+                    );
+                    pending.append(&mut out);
+                }
+                (Dest::Worker(w), m) if w == WorkerId(1) => w1_inbox.push(m),
+                _ => {} // w0-bound steals etc.: die with the socket below
+            }
+        }
+        assert!(finished_on_w0 > 0, "w0 must have produced something to lose");
+        // Kill w0: its outputs are gone; recovery resurrects them.
+        let mut out = Vec::new();
+        r.on_disconnect(Origin::Worker(WorkerId(0)), &mut out);
+        assert_eq!(r.live_runs(), 1, "no failure: {out:?}");
+        let run_id = *drive_until_done(
+            &mut r,
+            w1_inbox
+                .into_iter()
+                .map(|m| (Dest::Worker(WorkerId(1)), m))
+                .chain(out)
+                .collect(),
+            &[WorkerId(0)].into(),
+        )
+        .keys()
+        .next()
+        .expect("graph completes");
+        let report = r.reports().iter().find(|rep| rep.run == run_id).unwrap();
+        assert_eq!(report.n_tasks, 7);
+        assert!(report.recoveries >= 1);
+    }
+
+    #[test]
+    fn cascading_disconnects_still_complete() {
+        // Three workers; kill two at different points. The run absorbs
+        // both recoveries and completes on the last survivor.
+        let mut r = reactor("ws");
+        register(&mut r, 1, 3);
+        let mut out = Vec::new();
+        r.on_message(
+            Origin::Client(0),
+            Msg::SubmitGraph { graph: tree(5), scheduler: None },
+            &mut out,
+        );
+        r.on_disconnect(Origin::Worker(WorkerId(0)), &mut out);
+        assert_eq!(r.live_runs(), 1);
+        r.on_disconnect(Origin::Worker(WorkerId(1)), &mut out);
+        assert_eq!(r.live_runs(), 1);
+        let dead: std::collections::HashSet<WorkerId> =
+            [WorkerId(0), WorkerId(1)].into();
+        let done = drive_until_done(&mut r, out, &dead);
+        assert_eq!(done.values().next().unwrap().1, 31);
+        assert!(r.reports().last().unwrap().recoveries >= 1);
+    }
+
+    #[test]
+    fn recovery_cap_exhaustion_fails_run() {
+        // Budget 0 restores fail-on-disconnect for non-trivial losses.
+        let mut r = reactor("ws").with_max_recoveries(0);
+        register(&mut r, 1, 2);
+        let mut out = Vec::new();
+        r.on_message(
+            Origin::Client(0),
+            Msg::SubmitGraph { graph: merge(10), scheduler: None },
+            &mut out,
+        );
         out.clear();
         r.on_disconnect(Origin::Worker(WorkerId(0)), &mut out);
         assert!(
-            out.iter().any(|(d, m)| *d == Dest::Client(0) && matches!(m, Msg::GraphFailed { .. })),
-            "client must learn about the failure: {out:?}"
+            out.iter().any(|(d, m)| *d == Dest::Client(0)
+                && matches!(m, Msg::GraphFailed { reason, .. }
+                    if reason.contains("recovery budget"))),
+            "exhausted budget must fail the run: {out:?}"
+        );
+        assert_eq!(r.live_runs(), 0);
+    }
+
+    #[test]
+    fn last_worker_disconnect_fails_run() {
+        // No survivors ⇒ nothing to recover onto.
+        let mut r = reactor("ws");
+        register(&mut r, 1, 1);
+        let mut out = Vec::new();
+        r.on_message(
+            Origin::Client(0),
+            Msg::SubmitGraph { graph: merge(4), scheduler: None },
+            &mut out,
+        );
+        out.clear();
+        r.on_disconnect(Origin::Worker(WorkerId(0)), &mut out);
+        assert!(
+            out.iter().any(|(_, m)| matches!(m, Msg::GraphFailed { reason, .. }
+                if reason.contains("no workers remain"))),
+            "{out:?}"
+        );
+        assert_eq!(r.live_runs(), 0);
+    }
+
+    #[test]
+    fn uninvolved_runs_survive_disconnect_untouched() {
+        // Two runs; only one placed work on the dead worker (the other
+        // is finished already). Recovery must leave the unrelated run and
+        // its report alone.
+        let mut r = reactor("ws");
+        register(&mut r, 2, 2);
+        let (done, _) = drive_many(&mut r, vec![(0, merge(8))]);
+        assert_eq!(done.len(), 1);
+        let mut out = Vec::new();
+        r.on_message(
+            Origin::Client(1),
+            Msg::SubmitGraph { graph: merge(6), scheduler: None },
+            &mut out,
+        );
+        r.on_disconnect(Origin::Worker(WorkerId(0)), &mut out);
+        assert_eq!(r.live_runs(), 1);
+        let done2 = drive_until_done(&mut r, out, &[WorkerId(0)].into());
+        assert_eq!(done2.values().next().unwrap(), &(1, 7));
+        assert_eq!(r.reports().len(), 2);
+    }
+
+    #[test]
+    fn fetch_failed_error_requeues_instead_of_failing() {
+        use crate::protocol::FETCH_FAILED_PREFIX;
+        let mut r = reactor("ws");
+        register(&mut r, 1, 2);
+        let mut out = Vec::new();
+        r.on_message(
+            Origin::Client(0),
+            Msg::SubmitGraph { graph: merge(5), scheduler: None },
+            &mut out,
+        );
+        let (run, task, worker) = out
+            .iter()
+            .find_map(|(d, m)| match (d, m) {
+                (Dest::Worker(w), Msg::ComputeTask { run, task, .. }) => {
+                    Some((*run, *task, *w))
+                }
+                _ => None,
+            })
+            .expect("an assignment went out");
+        out.clear();
+        r.on_message(
+            Origin::Worker(worker),
+            Msg::TaskErred {
+                run,
+                task,
+                error: format!("{FETCH_FAILED_PREFIX}peer gone"),
+            },
+            &mut out,
+        );
+        assert_eq!(r.live_runs(), 1, "fetch failure is recoverable: {out:?}");
+        // The task went out again.
+        assert!(
+            out.iter().any(|(_, m)| matches!(m, Msg::ComputeTask { task: t, .. } if *t == task)),
+            "{out:?}"
+        );
+        // A non-fetch error still fails the run.
+        let mut out2 = Vec::new();
+        let (run2, task2, worker2) = out
+            .iter()
+            .find_map(|(d, m)| match (d, m) {
+                (Dest::Worker(w), Msg::ComputeTask { run, task, .. }) => {
+                    Some((*run, *task, *w))
+                }
+                _ => None,
+            })
+            .unwrap();
+        r.on_message(
+            Origin::Worker(worker2),
+            Msg::TaskErred { run: run2, task: task2, error: "oom".into() },
+            &mut out2,
+        );
+        assert!(
+            out2.iter().any(|(_, m)| matches!(m, Msg::GraphFailed { .. })),
+            "{out2:?}"
         );
         assert_eq!(r.live_runs(), 0);
     }

@@ -1,9 +1,22 @@
-//! Server-side bookkeeping: the task state machine and per-graph run state.
+//! Server-side bookkeeping: the task state machine, per-graph run state,
+//! and the lineage-recovery planner.
+//!
+//! Everything here is owned by the reactor thread — no locks, no I/O. The
+//! recovery planner ([`GraphRun::recover`]) is a pure state transformation
+//! so it can be unit-tested without a cluster: given a dead worker it
+//! resets in-flight work, resurrects outputs whose only replica died, and
+//! returns a [`RecoveryPlan`] telling the reactor which schedulers/workers
+//! to notify.
 
 use crate::protocol::RunId;
 use crate::scheduler::WorkerId;
 use crate::taskgraph::{TaskGraph, TaskId};
 use std::collections::HashMap;
+
+/// How many worker-disconnect recoveries a single run absorbs before the
+/// reactor falls back to failing it (`graph-failed`) — a cascading-failure
+/// brake, not a correctness bound.
+pub const DEFAULT_MAX_RECOVERIES: u32 = 8;
 
 /// Server-side lifecycle of a task (reactor's view).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -47,11 +60,70 @@ pub struct GraphRun {
     /// response handler consumes this so the scheduler learns the true
     /// endpoints of the failed steal.
     pub raced_steals: HashMap<TaskId, (WorkerId, WorkerId)>,
+    /// Steals dissolved by a recovery pass while their victim was still
+    /// alive: `(task, victim)` → number of that victim's `StealResponse`s
+    /// still in flight. The scheduler was already told each steal failed,
+    /// so the response handler consumes one marker and ignores the stale
+    /// answer instead of resolving the steal a second time. Keyed by the
+    /// responder so only *that worker's* answer is swallowed — a later,
+    /// genuine steal of the re-placed task (different victim) must still
+    /// resolve normally — counted so repeated dissolutions of the same
+    /// task don't lose markers, and purged when the recorded victim itself
+    /// dies (its answer can no longer arrive; per-connection FIFO makes a
+    /// same-victim re-steal unambiguous, stale answers always arrive
+    /// first).
+    pub cancelled_steals: HashMap<(TaskId, WorkerId), u32>,
+    /// Worker-disconnect recoveries absorbed so far (see
+    /// [`GraphRun::recover`]).
+    pub recoveries: u32,
+    /// Recovery budget; past it a disconnect fails the run as before.
+    pub max_recoveries: u32,
+    /// Recoverable `fetch-failed` re-runs, counted *per task* — bounds the
+    /// bounce loop of a single task with a persistently stale `who_has`
+    /// address without letting one wide disconnect (many tasks fetching
+    /// from the same corpse at once) exhaust a shared budget.
+    pub fetch_retries: HashMap<TaskId, u32>,
     // Per-run counters (reported in `ReactorReport`).
     pub steals_attempted: u64,
     pub steals_failed: u64,
     pub msgs_in: u64,
     pub msgs_out: u64,
+}
+
+/// What the reactor must do after [`GraphRun::recover`] absorbed a worker
+/// death (instead of failing the run). Field order mirrors the order the
+/// reactor applies them in.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RecoveryPlan {
+    /// `(task, worker)` assignments that evaporated; the reactor reports
+    /// each via `Scheduler::task_lost` so queue models stay in sync.
+    pub lost_assignments: Vec<(TaskId, WorkerId)>,
+    /// In-flight steals dissolved by the recovery (`(task, from, to)`);
+    /// each is reported to the scheduler as failed.
+    pub dissolved_steals: Vec<(TaskId, WorkerId, WorkerId)>,
+    /// `(worker, task)`: live workers that must drop their queued copy
+    /// (`cancel-compute`) because an input evaporated or the task was mid-
+    /// steal; the task is re-sent after its inputs exist again.
+    pub cancel: Vec<(WorkerId, TaskId)>,
+    /// Previously finished tasks whose only replica died; they are
+    /// unfinished again and will be recomputed.
+    pub resurrected: Vec<TaskId>,
+    /// Tasks that ended the recovery `Ready` (all inputs still available);
+    /// the reactor re-seeds the scheduler with exactly these.
+    pub ready: Vec<TaskId>,
+}
+
+impl RecoveryPlan {
+    /// A trivial plan is a pure replica purge: survivors hold every output
+    /// the dead worker had and nothing was queued on it. It costs no
+    /// recovery budget and requires no scheduler/worker notifications.
+    pub fn is_trivial(&self) -> bool {
+        self.lost_assignments.is_empty()
+            && self.dissolved_steals.is_empty()
+            && self.cancel.is_empty()
+            && self.resurrected.is_empty()
+            && self.ready.is_empty()
+    }
 }
 
 impl GraphRun {
@@ -72,6 +144,10 @@ impl GraphRun {
             who_has: vec![Vec::new(); n],
             priorities: (0..n as i64).collect(),
             raced_steals: HashMap::new(),
+            cancelled_steals: HashMap::new(),
+            recoveries: 0,
+            max_recoveries: DEFAULT_MAX_RECOVERIES,
+            fetch_retries: HashMap::new(),
             steals_attempted: 0,
             steals_failed: 0,
             msgs_in: 0,
@@ -100,8 +176,19 @@ impl GraphRun {
         self.states[task.idx()] = TaskState::Finished(worker);
         self.who_has[task.idx()].push(worker);
         self.remaining -= 1;
+        // The fetch-retry cap bounds *consecutive* bounces of one stuck
+        // task; a successful finish resets it, so independent recoverable
+        // incidents across a long run never accumulate into a fatal one.
+        self.fetch_retries.remove(&task);
         let mut newly_ready = Vec::new();
         for &c in self.graph.consumers(task) {
+            // A consumer can already be Finished here: a cancelled copy
+            // that was mid-execution during recovery may report early,
+            // before this (resurrected) input recomputed. Its result was
+            // accepted; don't re-ready it.
+            if matches!(self.states[c.idx()], TaskState::Finished(_)) {
+                continue;
+            }
             let d = &mut self.unfinished_deps[c.idx()];
             debug_assert!(*d > 0);
             *d -= 1;
@@ -127,7 +214,8 @@ impl GraphRun {
         }
     }
 
-    /// All tasks currently assigned to `worker` (used on disconnect).
+    /// All tasks currently assigned to `worker` (diagnostics/tests; the
+    /// disconnect path itself walks states inside [`GraphRun::recover`]).
     pub fn tasks_on(&self, worker: WorkerId) -> Vec<TaskId> {
         self.states
             .iter()
@@ -149,6 +237,140 @@ impl GraphRun {
                 || matches!(s, TaskState::Stealing { from, to }
                     if *from == worker || *to == worker)
         }) || self.who_has.iter().flatten().any(|&h| h == worker)
+    }
+
+    /// Absorb the death of `dead` by lineage recovery (the tentpole of the
+    /// recovery design — see `docs/recovery.md`):
+    ///
+    /// 1. purge the dead worker's replicas from `who_has`,
+    /// 2. reset every assignment/steal that touched it (and cancel queued
+    ///    copies on live workers whose input addresses may have named it),
+    /// 3. resurrect finished outputs whose only replica died, transitively
+    ///    (an unfinished task needs all its lineage inputs to exist
+    ///    somewhere),
+    /// 4. rebuild dependency counts and return the set of tasks that are
+    ///    `Ready` for re-placement.
+    ///
+    /// Returns `None` when the recovery budget is exhausted — the caller
+    /// falls back to failing the run. A *trivial* plan (pure replica purge)
+    /// consumes no budget.
+    pub fn recover(&mut self, dead: WorkerId) -> Option<RecoveryPlan> {
+        let mut plan = RecoveryPlan::default();
+        let n = self.graph.len();
+        // Outputs the dead worker held a replica of: any assignment sent
+        // while it held one may carry its (now dead) data address, so
+        // consumers of those outputs are conservatively cancelled.
+        let held: Vec<bool> = self.who_has.iter().map(|h| h.contains(&dead)).collect();
+        for h in &mut self.who_has {
+            h.retain(|&w| w != dead);
+        }
+        // Markers waiting on an answer from the dead worker are dead
+        // letters — drop them, or they would swallow a future genuine
+        // response for the same (re-placed, re-stolen) task.
+        self.cancelled_steals.retain(|&(_, victim), _| victim != dead);
+
+        for i in 0..n {
+            let t = TaskId(i as u32);
+            let tainted_inputs =
+                self.graph.task(t).inputs.iter().any(|&inp| held[inp.idx()]);
+            match self.states[i] {
+                TaskState::Assigned(w) if w == dead => {
+                    plan.lost_assignments.push((t, w));
+                    self.states[i] = TaskState::Ready; // deps fixed below
+                }
+                TaskState::Assigned(w) if tainted_inputs => {
+                    plan.cancel.push((w, t));
+                    plan.lost_assignments.push((t, w));
+                    self.states[i] = TaskState::Ready;
+                }
+                TaskState::Stealing { from, to } if from == dead => {
+                    // The retraction request went to the corpse; no answer
+                    // will ever come — dissolve the steal now.
+                    plan.dissolved_steals.push((t, from, to));
+                    plan.lost_assignments.push((t, from));
+                    self.states[i] = TaskState::Ready;
+                }
+                TaskState::Stealing { from, to } if to == dead || tainted_inputs => {
+                    // Victim is alive: cancel its queued copy, dissolve the
+                    // steal, and remember to swallow the late response
+                    // (from that victim only).
+                    plan.cancel.push((from, t));
+                    plan.dissolved_steals.push((t, from, to));
+                    plan.lost_assignments.push((t, from));
+                    *self.cancelled_steals.entry((t, from)).or_insert(0) += 1;
+                    self.states[i] = TaskState::Ready;
+                }
+                _ => {}
+            }
+        }
+
+        // Transitive resurrection: every unfinished task's (transitive)
+        // inputs must exist on some live worker.
+        let mut work: Vec<TaskId> = (0..n)
+            .filter(|&i| !matches!(self.states[i], TaskState::Finished(_)))
+            .map(|i| TaskId(i as u32))
+            .collect();
+        while let Some(t) = work.pop() {
+            for &inp in &self.graph.task(t).inputs {
+                if matches!(self.states[inp.idx()], TaskState::Finished(_))
+                    && self.who_has[inp.idx()].is_empty()
+                {
+                    self.states[inp.idx()] = TaskState::Ready; // deps fixed below
+                    self.remaining += 1;
+                    plan.resurrected.push(inp);
+                    work.push(inp);
+                }
+            }
+        }
+
+        if plan.is_trivial() {
+            return Some(plan); // replica purge only: free
+        }
+        self.recoveries += 1;
+        if self.recoveries > self.max_recoveries {
+            return None;
+        }
+
+        // Rebuild dependency counts for every unfinished task, then settle
+        // the reset tasks into Ready/Waiting. Tasks the recovery did not
+        // touch keep their in-flight state — resurrection can only *add*
+        // unfinished deps, and any task with a resurrected input was
+        // already reset above (its input was `held` by the dead worker).
+        for i in 0..n {
+            if matches!(self.states[i], TaskState::Finished(_)) {
+                continue;
+            }
+            let deps = self
+                .graph
+                .task(TaskId(i as u32))
+                .inputs
+                .iter()
+                .filter(|inp| !matches!(self.states[inp.idx()], TaskState::Finished(_)))
+                .count() as u32;
+            self.unfinished_deps[i] = deps;
+            match self.states[i] {
+                TaskState::Ready | TaskState::Waiting => {
+                    self.states[i] =
+                        if deps == 0 { TaskState::Ready } else { TaskState::Waiting };
+                }
+                _ => debug_assert_eq!(
+                    deps, 0,
+                    "in-flight task {i} kept an unfinished input through recovery"
+                ),
+            }
+        }
+        for &(t, _) in &plan.lost_assignments {
+            if self.states[t.idx()] == TaskState::Ready {
+                plan.ready.push(t);
+            }
+        }
+        for &t in &plan.resurrected {
+            if self.states[t.idx()] == TaskState::Ready {
+                plan.ready.push(t);
+            }
+        }
+        plan.ready.sort_unstable();
+        Some(plan)
     }
 
     /// Per-worker tasks this run considers queued (assigned or mid-steal
@@ -257,6 +479,123 @@ mod tests {
         // A plain finish leaves no record.
         run.finish(TaskId(1), WorkerId(0));
         assert!(!run.raced_steals.contains_key(&TaskId(1)));
+    }
+
+    // ---- lineage recovery (PR 3 tentpole) ----
+
+    /// Linear chain a → b → c (merge(1) is too small; build explicitly).
+    fn chain3() -> TaskGraph {
+        use crate::taskgraph::{GraphBuilder, Payload};
+        let mut b = GraphBuilder::new();
+        let a = b.add("a", vec![], 10, 8, Payload::NoOp);
+        let m = b.add("b", vec![a], 10, 8, Payload::MergeInputs);
+        b.add("c", vec![m], 10, 8, Payload::MergeInputs);
+        b.build("chain").unwrap()
+    }
+
+    #[test]
+    fn recover_with_surviving_replica_is_trivial() {
+        let mut run = GraphRun::new(merge(2), 0, 0);
+        // t0 finished on w0 AND w1 (duplicate finish ⇒ replica).
+        run.finish(TaskId(0), WorkerId(0));
+        run.finish(TaskId(0), WorkerId(1));
+        let plan = run.recover(WorkerId(0)).unwrap();
+        assert!(plan.is_trivial(), "{plan:?}");
+        assert_eq!(run.who_has[0], vec![WorkerId(1)], "survivor replica kept");
+        assert_eq!(run.recoveries, 0, "trivial purge costs no budget");
+    }
+
+    #[test]
+    fn recover_requeues_tasks_assigned_to_dead_worker() {
+        let mut run = GraphRun::new(merge(3), 0, 0);
+        run.states[0] = TaskState::Assigned(WorkerId(0));
+        run.states[1] = TaskState::Assigned(WorkerId(1));
+        let plan = run.recover(WorkerId(0)).unwrap();
+        assert_eq!(plan.lost_assignments, vec![(TaskId(0), WorkerId(0))]);
+        assert_eq!(plan.ready, vec![TaskId(0)]);
+        assert!(plan.cancel.is_empty() && plan.resurrected.is_empty());
+        assert_eq!(run.states[0], TaskState::Ready);
+        assert_eq!(run.states[1], TaskState::Assigned(WorkerId(1)), "survivor untouched");
+        assert_eq!(run.recoveries, 1);
+    }
+
+    #[test]
+    fn recover_sole_replica_triggers_transitive_recompute() {
+        // a, b finished on w0 only; c assigned to live w1. Killing w0 must
+        // resurrect both a and b (b needs a), and cancel c on w1 (its
+        // input address named the corpse).
+        let mut run = GraphRun::new(chain3(), 0, 0);
+        let (a, b, c) = (TaskId(0), TaskId(1), TaskId(2));
+        run.finish(a, WorkerId(0));
+        run.finish(b, WorkerId(0));
+        run.states[c.idx()] = TaskState::Assigned(WorkerId(1));
+        let before_remaining = run.remaining;
+        let plan = run.recover(WorkerId(0)).unwrap();
+        let mut res = plan.resurrected.clone();
+        res.sort_unstable();
+        assert_eq!(res, vec![a, b]);
+        assert_eq!(plan.cancel, vec![(WorkerId(1), c)]);
+        assert_eq!(plan.lost_assignments, vec![(c, WorkerId(1))]);
+        assert_eq!(plan.ready, vec![a], "only the root is ready again");
+        assert_eq!(run.states[a.idx()], TaskState::Ready);
+        assert_eq!(run.states[b.idx()], TaskState::Waiting);
+        assert_eq!(run.states[c.idx()], TaskState::Waiting);
+        assert_eq!(run.unfinished_deps[b.idx()], 1);
+        assert_eq!(run.unfinished_deps[c.idx()], 1);
+        assert_eq!(run.remaining, before_remaining + 2);
+    }
+
+    #[test]
+    fn recover_dissolves_steals_touching_the_corpse() {
+        let mut run = GraphRun::new(merge(4), 0, 0);
+        // t0 mid-steal FROM the dead worker, t1 mid-steal TO it.
+        run.states[0] = TaskState::Stealing { from: WorkerId(0), to: WorkerId(1) };
+        run.states[1] = TaskState::Stealing { from: WorkerId(1), to: WorkerId(0) };
+        let plan = run.recover(WorkerId(0)).unwrap();
+        let mut dissolved = plan.dissolved_steals.clone();
+        dissolved.sort_unstable_by_key(|d| d.0);
+        assert_eq!(
+            dissolved,
+            vec![
+                (TaskId(0), WorkerId(0), WorkerId(1)),
+                (TaskId(1), WorkerId(1), WorkerId(0)),
+            ]
+        );
+        // The live victim (w1) gets a cancel; its late StealResponse will
+        // be swallowed.
+        assert_eq!(plan.cancel, vec![(WorkerId(1), TaskId(1))]);
+        assert_eq!(run.cancelled_steals.get(&(TaskId(1), WorkerId(1))), Some(&1));
+        assert!(
+            !run.cancelled_steals.keys().any(|&(t, _)| t == TaskId(0)),
+            "corpse never answers"
+        );
+        assert_eq!(plan.ready, vec![TaskId(0), TaskId(1)]);
+    }
+
+    #[test]
+    fn cancelled_steal_marker_dies_with_its_victim() {
+        let mut run = GraphRun::new(merge(4), 0, 0);
+        // Steal of t0 targeting w0 dissolves when w0 dies; live victim w1
+        // still owes a response.
+        run.states[0] = TaskState::Stealing { from: WorkerId(1), to: WorkerId(0) };
+        run.recover(WorkerId(0)).unwrap();
+        assert_eq!(run.cancelled_steals.get(&(TaskId(0), WorkerId(1))), Some(&1));
+        // w1 dies before answering: the marker is a dead letter and must
+        // go, or it would swallow a future genuine response for the
+        // re-placed t0.
+        run.recover(WorkerId(1)).unwrap();
+        assert!(run.cancelled_steals.is_empty());
+    }
+
+    #[test]
+    fn recovery_budget_exhaustion_returns_none() {
+        let mut run = GraphRun::new(merge(2), 0, 0);
+        run.max_recoveries = 1;
+        run.states[0] = TaskState::Assigned(WorkerId(0));
+        assert!(run.recover(WorkerId(0)).is_some());
+        run.states[0] = TaskState::Assigned(WorkerId(1));
+        assert!(run.recover(WorkerId(1)).is_none(), "budget exhausted");
+        assert_eq!(run.recoveries, 2);
     }
 
     #[test]

@@ -5,6 +5,18 @@
 //! (mirroring the real server's `SchedulerPool`), with every queue and data
 //! map keyed by `(run, task)` so recycled dense `TaskId`s never alias
 //! across graphs. [`simulate`] is the single-graph special case.
+//!
+//! Failure injection: [`SimConfig::kill`] deterministically kills one
+//! worker at a virtual-time tick, exercising the same lineage recovery the
+//! real reactor performs (`server/reactor.rs`): lost queue entries and the
+//! running task are re-placed through `Scheduler::task_lost` +
+//! `tasks_ready`, outputs whose only copy died are resurrected
+//! transitively, assignments and retractions that cross the wire after the
+//! death bounce back into the scheduler, and consumers queued elsewhere
+//! with evaporated inputs are pulled back (the `cancel-compute`
+//! equivalent). Recovery can re-execute tasks whose result was in flight
+//! when the worker died, so `tasks_executed` may exceed `n_tasks` on a
+//! killed run — duplicate finishes are ignored, mirroring the reactor.
 
 use super::network::{NetworkModel, NicState};
 use crate::overhead::RuntimeProfile;
@@ -28,6 +40,17 @@ pub struct SimConfig {
     pub zero_worker: bool,
     /// Abort the run after this much virtual time (paper: 300 s).
     pub timeout_us: f64,
+    /// Deterministic failure injection: kill one worker at a virtual tick.
+    pub kill: Option<WorkerKill>,
+}
+
+/// Deterministic worker-death injection (recovery at scale, repeatably).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkerKill {
+    /// Index of the worker to kill.
+    pub worker: u32,
+    /// Virtual time (µs) of the death.
+    pub at_us: f64,
 }
 
 impl Default for SimConfig {
@@ -41,6 +64,7 @@ impl Default for SimConfig {
             network: NetworkModel::default(),
             zero_worker: false,
             timeout_us: 300e6,
+            kill: None,
         }
     }
 }
@@ -71,12 +95,15 @@ pub struct SimResult {
     pub bytes_transferred: u64,
     pub sched_cost: SchedCost,
     pub timed_out: bool,
-    /// Task executions observed (> n_tasks would mean a steal race made a
-    /// worker run a retracted task twice).
+    /// Task executions observed. On a clean run, > n_tasks would mean a
+    /// steal race made a worker run a retracted task twice; on a run with
+    /// an injected kill, recovery legitimately re-executes lost work.
     pub tasks_executed: u64,
     /// Steals the schedulers still considered unresolved at the end; any
     /// nonzero value means the engine dropped a steal notification.
     pub in_flight_steals_at_end: usize,
+    /// Per-run lineage-recovery passes performed after worker deaths.
+    pub recoveries: u64,
 }
 
 /// Per-run outcome of a concurrent simulation.
@@ -106,6 +133,8 @@ pub struct MultiSimResult {
     pub sched_cost: SchedCost,
     pub timed_out: bool,
     pub in_flight_steals_at_end: usize,
+    /// Per-run lineage-recovery passes performed after worker deaths.
+    pub recoveries: u64,
 }
 
 /// Time-ordered event key: (time, seq) with deterministic tie-breaking.
@@ -135,6 +164,9 @@ enum Event {
     StealArrive { run: u32, worker: WorkerId, task: TaskId },
     /// Status/steal-response arrives at the server.
     ServerRecv { msg: ServerMsg },
+    /// Injected failure: the worker dies (queue, running task and stored
+    /// outputs evaporate); the server reacts with lineage recovery.
+    WorkerDie { worker: WorkerId },
 }
 
 #[derive(Debug)]
@@ -155,6 +187,11 @@ struct SimWorker {
     pending_prio: HashMap<(u32, TaskId), i64>,
     core_free_at: f64,
     core_busy: bool,
+    /// Task currently executing (needed to requeue it if the worker dies).
+    running: Option<(u32, TaskId)>,
+    /// False once an injected kill fired; a dead worker receives nothing
+    /// and answers nothing.
+    alive: bool,
     /// Outputs present on this worker (hot-path membership check only).
     has: HashSet<(u32, TaskId)>,
 }
@@ -193,6 +230,8 @@ struct Engine<'g> {
     steals_attempted: u64,
     steals_failed: u64,
     bytes_transferred: u64,
+    /// Per-run lineage-recovery passes after injected worker deaths.
+    recoveries: u64,
     total_cost: SchedCost,
     actions: Vec<Action>,
 }
@@ -207,6 +246,8 @@ impl<'g> Engine<'g> {
                 pending_prio: HashMap::new(),
                 core_free_at: 0.0,
                 core_busy: false,
+                running: None,
+                alive: true,
                 has: HashSet::new(),
             })
             .collect();
@@ -239,7 +280,7 @@ impl<'g> Engine<'g> {
             })
             .collect();
         let remaining_total = runs.iter().map(|r| r.remaining).sum();
-        Engine {
+        let mut engine = Engine {
             cfg,
             runs,
             events: BinaryHeap::new(),
@@ -257,9 +298,20 @@ impl<'g> Engine<'g> {
             steals_attempted: 0,
             steals_failed: 0,
             bytes_transferred: 0,
+            recoveries: 0,
             total_cost: SchedCost::default(),
             actions: Vec::new(),
+        };
+        if let Some(kill) = engine.cfg.kill {
+            assert!(
+                (kill.worker as usize) < engine.cfg.n_workers,
+                "kill.worker {} out of range (n_workers {})",
+                kill.worker,
+                engine.cfg.n_workers
+            );
+            engine.push(kill.at_us, Event::WorkerDie { worker: WorkerId(kill.worker) });
         }
+        engine
     }
 
     fn push(&mut self, at: f64, ev: Event) {
@@ -339,13 +391,14 @@ impl<'g> Engine<'g> {
     fn maybe_start(&mut self, wid: WorkerId) {
         let now = self.now;
         let w = &mut self.workers[wid.idx()];
-        if w.core_busy || w.pending.is_empty() {
+        if !w.alive || w.core_busy || w.pending.is_empty() {
             return;
         }
         let &(prio, run, task) = w.pending.iter().next().expect("nonempty");
         w.pending.remove(&(prio, run, task));
         w.pending_prio.remove(&(run, task));
         w.core_busy = true;
+        w.running = Some((run, task));
         let fetch_start = w.core_free_at.max(now);
 
         // Fetch missing inputs (parallel fetches; NIC serialization on the
@@ -383,9 +436,195 @@ impl<'g> Engine<'g> {
         self.push(exec_done, Event::TaskDone { run, worker: wid, task });
     }
 
+    /// Injected worker death: mirror the reactor's lineage recovery
+    /// (`server/reactor.rs::on_disconnect`) against the virtual cluster.
+    fn handle_worker_death(&mut self, worker: WorkerId) {
+        let widx = worker.idx();
+        if !self.workers[widx].alive {
+            return;
+        }
+        self.workers[widx].alive = false;
+        assert!(
+            self.workers.iter().any(|w| w.alive),
+            "injected kill removed the last worker; nothing to recover onto"
+        );
+        // The corpse's queue, running task and stored outputs evaporate.
+        let pending: Vec<(i64, u32, TaskId)> =
+            std::mem::take(&mut self.workers[widx].pending).into_iter().collect();
+        self.workers[widx].pending_prio.clear();
+        let running = self.workers[widx].running.take();
+        self.workers[widx].core_busy = false;
+        self.workers[widx].has.clear();
+        // Every run's scheduler forgets the worker before any re-placement.
+        for r in &mut self.runs {
+            r.scheduler.remove_worker(worker);
+        }
+        // Lost in-flight work. Retractions headed TO the corpse never
+        // answer, so those steals dissolve here; steals whose *target*
+        // died resolve naturally — the live victim answers and the
+        // reassignment bounces off the dead target (`TaskArrive` on a dead
+        // worker) back into the scheduler.
+        let mut lost: BTreeSet<(u32, TaskId)> =
+            pending.into_iter().map(|(_, run, t)| (run, t)).collect();
+        lost.extend(running);
+        let dead_victim: Vec<((u32, TaskId), (WorkerId, WorkerId))> = self
+            .steals
+            .iter()
+            .filter(|(_, &(from, _))| from == worker)
+            .map(|(&k, &v)| (k, v))
+            .collect();
+        let mut dissolved: HashMap<u32, Vec<(TaskId, WorkerId, WorkerId)>> = HashMap::new();
+        for ((run, task), (from, to)) in dead_victim {
+            self.steals.remove(&(run, task));
+            lost.insert((run, task));
+            dissolved.entry(run).or_default().push((task, from, to));
+        }
+        // Outputs whose producer record names the corpse: rewire to a live
+        // replica (some consumer fetched a copy) or resurrect. A single
+        // pass suffices: any output whose data lived only on the corpse
+        // has `produced_by == worker`, and a resurrected task's inputs are
+        // either alive-produced or orphans in this same list.
+        let orphans: Vec<(u32, TaskId)> = self
+            .produced_by
+            .iter()
+            .filter(|(_, &w)| w == worker)
+            .map(|(&k, _)| k)
+            .collect();
+        let mut resurrect: Vec<(u32, TaskId)> = Vec::new();
+        for key in orphans {
+            let replica = self
+                .workers
+                .iter()
+                .enumerate()
+                .find(|(_, w)| w.alive && w.has.contains(&key))
+                .map(|(i, _)| WorkerId(i as u32));
+            match replica {
+                Some(v) => {
+                    self.produced_by.insert(key, v);
+                }
+                None => resurrect.push(key),
+            }
+        }
+        resurrect.sort_unstable();
+        // Phase 1: un-finish every resurrected output (all at once, so the
+        // consumer-dep bump below is order-independent).
+        for &(run, t) in &resurrect {
+            let r = run as usize;
+            debug_assert!(self.runs[r].finished[t.idx()]);
+            self.runs[r].finished[t.idx()] = false;
+            self.runs[r].remaining += 1;
+            self.remaining_total += 1;
+        }
+        // Phase 2: consumers of resurrected outputs regain an unfinished
+        // dep; queued copies on live workers are pulled back (the
+        // `cancel-compute` equivalent — they would fetch from the corpse)
+        // and re-enter via normal readiness once the input is recomputed.
+        for &(run, t) in &resurrect {
+            let r = run as usize;
+            let consumers: Vec<TaskId> = self.runs[r].graph.consumers(t).to_vec();
+            for c in consumers {
+                if self.runs[r].finished[c.idx()] {
+                    continue;
+                }
+                self.runs[r].unfinished_deps[c.idx()] += 1;
+                for (i, w) in self.workers.iter_mut().enumerate() {
+                    if !w.alive {
+                        continue;
+                    }
+                    if let Some(prio) = w.pending_prio.remove(&(run, c)) {
+                        w.pending.remove(&(prio, run, c));
+                        self.runs[r].scheduler.task_lost(c, WorkerId(i as u32));
+                    }
+                }
+            }
+        }
+        // Phase 3: per affected run — sync the scheduler and re-seed what
+        // is ready again. (Actions are per-run, so each run's batch is
+        // dispatched before the next run is touched.)
+        let mut by_run: HashMap<u32, Vec<TaskId>> = HashMap::new();
+        for &(run, t) in lost.iter().chain(resurrect.iter()) {
+            by_run.entry(run).or_default().push(t);
+        }
+        let mut touched: Vec<u32> = by_run
+            .keys()
+            .copied()
+            .chain(dissolved.keys().copied())
+            .collect();
+        touched.sort_unstable();
+        touched.dedup();
+        for run in touched {
+            self.recoveries += 1;
+            let r = run as usize;
+            for &(task, from, to) in dissolved.get(&run).into_iter().flatten() {
+                self.steals_failed += 1;
+                self.runs[r]
+                    .scheduler
+                    .steal_result(task, from, to, false, &mut self.actions);
+            }
+            let mut ready: Vec<TaskId> = Vec::new();
+            for &t in by_run.get(&run).into_iter().flatten() {
+                self.runs[r].scheduler.task_lost(t, worker);
+                if !self.runs[r].finished[t.idx()]
+                    && self.runs[r].unfinished_deps[t.idx()] == 0
+                {
+                    ready.push(t);
+                }
+            }
+            ready.sort_unstable();
+            ready.dedup();
+            let t = self.reactor_work(
+                self.now,
+                self.cfg.profile.task_transition_us * ready.len().max(1) as f64,
+            );
+            if !ready.is_empty() {
+                self.runs[r].scheduler.tasks_ready(&ready, &mut self.actions);
+            }
+            let done = self.sched_work(run, t);
+            self.dispatch_actions(run, done);
+        }
+    }
+
     fn handle(&mut self, ev: Event) {
         match ev {
             Event::TaskArrive { run, worker, task, priority } => {
+                if !self.workers[worker.idx()].alive {
+                    // The assignment crossed the wire after the worker
+                    // died: it never reached a queue — the server re-places
+                    // it (the reactor's cancel-and-resend equivalent).
+                    let r = run as usize;
+                    if self.runs[r].finished[task.idx()] {
+                        return; // a surviving copy already finished it
+                    }
+                    self.runs[r].scheduler.task_lost(task, worker);
+                    if self.runs[r].unfinished_deps[task.idx()] == 0 {
+                        let t = self
+                            .reactor_work(self.now, self.cfg.profile.task_transition_us);
+                        self.runs[r].scheduler.tasks_ready(&[task], &mut self.actions);
+                        let done = self.sched_work(run, t);
+                        self.dispatch_actions(run, done);
+                    }
+                    // Otherwise an input is being recomputed; normal
+                    // readiness re-offers the task when it lands.
+                    return;
+                }
+                {
+                    // Stale assignments on LIVE workers: an in-flight
+                    // message can race a recovery that resurrected one of
+                    // the task's inputs (unfinished deps again) or a
+                    // duplicate copy that already finished it. This is the
+                    // in-flight equivalent of `cancel-compute`: drop it
+                    // rather than execute against evaporated data. On a
+                    // clean run deps are always 0 at arrival, so this
+                    // never fires.
+                    let r = run as usize;
+                    if self.runs[r].finished[task.idx()] {
+                        return;
+                    }
+                    if self.runs[r].unfinished_deps[task.idx()] > 0 {
+                        self.runs[r].scheduler.task_lost(task, worker);
+                        return; // readiness re-offers it after recompute
+                    }
+                }
                 if self.cfg.zero_worker {
                     // §IV-D: instantly finished, no data plane.
                     self.runs[run as usize].tasks_executed += 1;
@@ -407,7 +646,11 @@ impl<'g> Engine<'g> {
             }
             Event::TaskDone { run, worker, task } => {
                 let w = &mut self.workers[worker.idx()];
+                if !w.alive {
+                    return; // died mid-execution; the death requeued it
+                }
                 w.core_busy = false;
+                w.running = None;
                 w.has.insert((run, task));
                 self.runs[run as usize].tasks_executed += 1;
                 self.push(self.now, Event::WorkerWake { worker });
@@ -426,6 +669,11 @@ impl<'g> Engine<'g> {
                 // `task.id` would leave a ghost entry that runs the task a
                 // second time.
                 let w = &mut self.workers[worker.idx()];
+                if !w.alive {
+                    // The corpse answers nothing; the steal was dissolved
+                    // when the death was processed.
+                    return;
+                }
                 let (ok, priority) = match w.pending_prio.remove(&(run, task)) {
                     Some(prio) => {
                         let removed = w.pending.remove(&(prio, run, task));
@@ -444,6 +692,7 @@ impl<'g> Engine<'g> {
                     },
                 );
             }
+            Event::WorkerDie { worker } => self.handle_worker_death(worker),
             Event::ServerRecv { msg } => {
                 self.msgs += 1;
                 let arrived = self.now;
@@ -451,6 +700,24 @@ impl<'g> Engine<'g> {
                     ServerMsg::Finished { run, worker, task, duration_us } => {
                         let r = run as usize;
                         if self.runs[r].finished[task.idx()] {
+                            return;
+                        }
+                        if !self.workers[worker.idx()].alive {
+                            // The result's bytes died with the worker before
+                            // the server could advertise them: re-run the
+                            // task (its data would be unfetchable).
+                            self.runs[r].scheduler.task_lost(task, worker);
+                            if self.runs[r].unfinished_deps[task.idx()] == 0 {
+                                let t = self.reactor_work(
+                                    arrived,
+                                    self.cfg.profile.task_transition_us,
+                                );
+                                self.runs[r]
+                                    .scheduler
+                                    .tasks_ready(&[task], &mut self.actions);
+                                let done = self.sched_work(run, t);
+                                self.dispatch_actions(run, done);
+                            }
                             return;
                         }
                         self.runs[r].finished[task.idx()] = true;
@@ -477,6 +744,12 @@ impl<'g> Engine<'g> {
                         let graph = self.runs[r].graph;
                         let mut newly_ready = Vec::new();
                         for &c in graph.consumers(task) {
+                            // A consumer can already be finished when a
+                            // resurrected input re-finishes (a cancelled
+                            // copy reported early); don't re-ready it.
+                            if self.runs[r].finished[c.idx()] {
+                                continue;
+                            }
                             let d = &mut self.runs[r].unfinished_deps[c.idx()];
                             *d -= 1;
                             if *d == 0 {
@@ -613,6 +886,7 @@ impl<'g> Engine<'g> {
             sched_cost: self.total_cost,
             timed_out,
             in_flight_steals_at_end,
+            recoveries: self.recoveries,
         }
     }
 }
@@ -638,5 +912,6 @@ pub fn simulate(graph: &TaskGraph, cfg: &SimConfig) -> SimResult {
         timed_out: multi.timed_out,
         tasks_executed: run.tasks_executed,
         in_flight_steals_at_end: multi.in_flight_steals_at_end,
+        recoveries: multi.recoveries,
     }
 }

@@ -9,7 +9,8 @@
 //! Model:
 //! - the **server** processes one message at a time (queueing!): each
 //!   inbound status and outbound assignment charges the
-//!   [`RuntimeProfile`]'s per-message and per-transition costs; the
+//!   [`crate::overhead::RuntimeProfile`]'s per-message and per-transition
+//!   costs; the
 //!   scheduler's algorithmic work is priced via
 //!   [`crate::scheduler::SchedCost`] and runs either on the reactor (GIL —
 //!   CPython Dask) or on its own thread (RSDS, §IV-A);
@@ -19,12 +20,22 @@
 //! - the **network** has per-transfer latency, bandwidth, per-node NIC
 //!   serialization, and a same-node fast path;
 //! - the **zero worker** mode answers every assignment instantly with no
-//!   data plane (§IV-D).
+//!   data plane (§IV-D);
+//! - **failure injection** ([`SimConfig`]'s `kill`) deterministically kills
+//!   one worker at a virtual tick and replays the reactor's lineage
+//!   recovery against the virtual cluster.
+//!
+//! Ownership and threading: the whole simulation is one single-threaded
+//! event loop — the engine owns every scheduler, worker model and queue;
+//! determinism comes from the (time, sequence) event ordering, so a given
+//! config + seed always reproduces the same run, kills included.
 
 mod engine;
 mod network;
 
-pub use engine::{simulate, simulate_concurrent, MultiSimResult, RunSimResult, SimConfig, SimResult};
+pub use engine::{
+    simulate, simulate_concurrent, MultiSimResult, RunSimResult, SimConfig, SimResult, WorkerKill,
+};
 pub use network::NetworkModel;
 
 #[cfg(test)]

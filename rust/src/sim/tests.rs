@@ -315,6 +315,123 @@ fn contention_grows_with_client_count() {
     );
 }
 
+// ---- injected worker death / lineage recovery (PR 3 tentpole) ----
+
+/// Kill one worker at ~30 % of the clean run's makespan — guaranteed
+/// mid-run, deterministic, graph-agnostic.
+fn kill_cfg(base: &SimConfig, clean_makespan_us: f64, worker: u32) -> SimConfig {
+    SimConfig {
+        kill: Some(WorkerKill { worker, at_us: clean_makespan_us * 0.3 }),
+        ..base.clone()
+    }
+}
+
+#[test]
+fn injected_kill_recovers_and_completes() {
+    let g = merge_slow(200, 5_000);
+    for sched in ["random", "ws", "dask-ws"] {
+        let base = cfg(4, RuntimeProfile::rust(), sched);
+        let clean = simulate(&g, &base);
+        assert!(!clean.timed_out);
+        assert_eq!(clean.recoveries, 0, "{sched}: clean run must not recover");
+        let killed = simulate(&g, &kill_cfg(&base, clean.makespan_us, 0));
+        assert!(!killed.timed_out, "{sched}: killed run timed out");
+        assert_eq!(killed.n_tasks, g.len() as u64, "{sched}");
+        assert!(killed.recoveries >= 1, "{sched}: kill mid-run must trigger recovery");
+        assert!(
+            killed.tasks_executed >= killed.n_tasks,
+            "{sched}: every task ran at least once"
+        );
+        assert_eq!(killed.in_flight_steals_at_end, 0, "{sched}: steals all resolved");
+        assert!(
+            killed.makespan_us >= clean.makespan_us * 0.8,
+            "{sched}: losing a quarter of the cluster can't speed things up \
+             ({} vs clean {})",
+            killed.makespan_us,
+            clean.makespan_us
+        );
+    }
+}
+
+#[test]
+fn injected_kill_recomputes_lost_interior_outputs() {
+    // A linear chain under ws locality runs entirely on one worker, so
+    // every finished output lives only there. Killing that worker mid-run
+    // forces a transitive recompute of the finished prefix (visible as
+    // re-executions), and the run still completes on the survivor.
+    let mut b = GraphBuilder::new();
+    let mut prev = None;
+    for i in 0..40 {
+        let inputs = prev.map(|p| vec![p]).unwrap_or_default();
+        prev = Some(b.add(format!("c{i}"), inputs, 2_000, 100, Payload::BusyWait));
+    }
+    let g = b.build("chain").unwrap();
+    let base = cfg(2, RuntimeProfile::rust(), "ws");
+    let clean = simulate(&g, &base);
+    assert!(!clean.timed_out);
+    let mut any_recomputed = false;
+    for w in 0..2 {
+        let killed = simulate(&g, &kill_cfg(&base, clean.makespan_us, w));
+        assert!(!killed.timed_out, "kill w{w}");
+        assert_eq!(killed.n_tasks, g.len() as u64, "kill w{w}");
+        any_recomputed |= killed.tasks_executed > killed.n_tasks;
+    }
+    assert!(
+        any_recomputed,
+        "killing the chain's worker must recompute the finished prefix"
+    );
+}
+
+#[test]
+fn injected_kill_is_deterministic() {
+    let g = merge_slow(100, 2_000);
+    let base = cfg(4, RuntimeProfile::rust(), "ws");
+    let clean = simulate(&g, &base);
+    let a = simulate(&g, &kill_cfg(&base, clean.makespan_us, 1));
+    let b = simulate(&g, &kill_cfg(&base, clean.makespan_us, 1));
+    assert_eq!(a.makespan_us, b.makespan_us);
+    assert_eq!(a.msgs, b.msgs);
+    assert_eq!(a.tasks_executed, b.tasks_executed);
+    assert_eq!(a.recoveries, b.recoveries);
+}
+
+#[test]
+fn injected_kill_with_concurrent_runs_completes_all() {
+    let graphs: Vec<_> = (0..3).map(|_| merge_slow(120, 2_000)).collect();
+    let base = cfg(6, RuntimeProfile::rust(), "ws");
+    let clean = simulate_concurrent(&graphs, &base);
+    assert!(!clean.timed_out);
+    let killed = simulate_concurrent(
+        &graphs,
+        &SimConfig {
+            kill: Some(WorkerKill { worker: 2, at_us: clean.makespan_us * 0.3 }),
+            ..base
+        },
+    );
+    assert!(!killed.timed_out);
+    for run in &killed.runs {
+        assert!(!run.timed_out, "{}", run.name);
+        assert!(run.tasks_executed >= run.n_tasks, "{}", run.name);
+    }
+    assert_eq!(killed.in_flight_steals_at_end, 0);
+}
+
+#[test]
+fn kill_after_completion_changes_nothing() {
+    let g = merge(300);
+    let base = cfg(4, RuntimeProfile::rust(), "ws");
+    let clean = simulate(&g, &base);
+    let late = simulate(
+        &g,
+        &SimConfig {
+            kill: Some(WorkerKill { worker: 0, at_us: clean.makespan_us * 10.0 }),
+            ..base
+        },
+    );
+    assert_eq!(late.makespan_us, clean.makespan_us);
+    assert_eq!(late.recoveries, 0);
+}
+
 #[test]
 fn ws_moves_less_data_than_random() {
     // The whole point of locality-aware placement (§IV-C).

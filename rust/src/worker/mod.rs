@@ -10,7 +10,11 @@
 //! - fetches missing inputs directly from peer workers (worker↔worker data
 //!   plane; the server is not on the data path),
 //! - honours steal retraction: a queued task can be given back, a running
-//!   one cannot (§IV-C).
+//!   one cannot (§IV-C),
+//! - participates in lineage recovery: `cancel-compute` drops a queued
+//!   task whose inputs evaporated with a dead peer, and a failed input
+//!   fetch is reported with the recoverable `fetch-failed:` error prefix
+//!   so the server re-runs the task instead of failing the run.
 //!
 //! The server is multi-graph: dense [`TaskId`]s recycle across runs, so the
 //! queue, the steal-pending set and the data store are all keyed by
@@ -22,6 +26,7 @@ pub mod zero;
 
 use crate::protocol::{
     decode_msg, FrameError, FrameReader, FrameWriter, Msg, RunId, TaskFinishedInfo, TaskInputLoc,
+    FETCH_FAILED_PREFIX,
 };
 use crate::taskgraph::{Payload, TaskId};
 use anyhow::{anyhow, bail, Context, Result};
@@ -229,25 +234,18 @@ pub fn run_worker(cfg: WorkerConfig) -> Result<WorkerHandle> {
                     }
                     Msg::StealRequest { run, task } => {
                         // Retract iff still queued (not started) — §IV-C.
-                        let retracted = {
-                            let mut pending = shared.pending.lock().unwrap();
-                            if pending.remove(&(run, task)) {
-                                let mut q = shared.queue.lock().unwrap();
-                                let drained: Vec<QueuedTask> = q.drain().collect();
-                                let mut found = false;
-                                for qt in drained {
-                                    if qt.run == run && qt.task == task {
-                                        found = true;
-                                    } else {
-                                        q.push(qt);
-                                    }
-                                }
-                                found
-                            } else {
-                                false
-                            }
-                        };
+                        let retracted = drop_queued(&shared, run, task);
                         let _ = shared.send(&Msg::StealResponse { run, task, ok: retracted });
+                    }
+                    Msg::CancelCompute { run, task } => {
+                        // Recovery: an input of this task evaporated with a
+                        // dead worker. Drop the queued copy — the server
+                        // re-sends the task with fresh input locations once
+                        // its inputs exist again. No response: unlike a
+                        // steal there is nothing to negotiate, and a copy
+                        // already running is handled by the server (its
+                        // result is accepted or its fetch error retried).
+                        drop_queued(&shared, run, task);
                     }
                     Msg::FetchFromServer { run, task } => {
                         let data = shared
@@ -287,6 +285,27 @@ pub fn run_worker(cfg: WorkerConfig) -> Result<WorkerHandle> {
     }
 
     Ok(WorkerHandle { id, data_addr, shared })
+}
+
+/// Remove a task from the pending set and priority queue if still queued;
+/// returns whether a queued copy was dropped (shared by steal retraction
+/// and `cancel-compute`).
+fn drop_queued(shared: &Shared, run: RunId, task: TaskId) -> bool {
+    let mut pending = shared.pending.lock().unwrap();
+    if !pending.remove(&(run, task)) {
+        return false;
+    }
+    let mut q = shared.queue.lock().unwrap();
+    let drained: Vec<QueuedTask> = q.drain().collect();
+    let mut found = false;
+    for qt in drained {
+        if qt.run == run && qt.task == task {
+            found = true;
+        } else {
+            q.push(qt);
+        }
+    }
+    found
 }
 
 fn executor_loop(shared: &Shared) {
@@ -335,8 +354,13 @@ fn run_task(shared: &Shared, t: &QueuedTask) -> Result<TaskFinishedInfo> {
         let data = match local {
             Some(d) => d,
             None if !loc.addr.is_empty() => {
-                let data = fetch_remote(&loc.addr, t.run, loc.task)
-                    .with_context(|| format!("fetch {}/{} from {}", t.run, loc.task, loc.addr))?;
+                // The `fetch-failed:` prefix marks this error recoverable:
+                // the peer died (or its address went stale mid-recovery),
+                // so the server re-runs this task rather than failing the
+                // whole run.
+                let data = fetch_remote(&loc.addr, t.run, loc.task).with_context(|| {
+                    format!("{FETCH_FAILED_PREFIX}{}/{} from {}", t.run, loc.task, loc.addr)
+                })?;
                 let arc = Arc::new(data);
                 {
                     // Check `released` while holding the store lock: the
@@ -360,7 +384,9 @@ fn run_task(shared: &Shared, t: &QueuedTask) -> Result<TaskFinishedInfo> {
                         break;
                     }
                 }
-                got.ok_or_else(|| anyhow!("input {} for {} never arrived", loc.task, t.key))?
+                got.ok_or_else(|| {
+                    anyhow!("{FETCH_FAILED_PREFIX}input {} for {} never arrived", loc.task, t.key)
+                })?
             }
         };
         inputs.push(data);

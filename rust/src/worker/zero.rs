@@ -133,6 +133,10 @@ pub fn run_zero_worker(cfg: WorkerConfig) -> Result<ZeroWorkerHandle> {
                             break;
                         }
                     }
+                    Msg::CancelCompute { .. } => {
+                        // Tasks finish instantly, so there is never a queued
+                        // copy to drop — mirror of "steals always fail".
+                    }
                     Msg::ReleaseRun { run } => {
                         would_have.retain(|&(r, _)| r != run);
                     }

@@ -173,17 +173,26 @@ fn prop_dask_ws_scheduler_invariants() {
 }
 
 /// Drive the multi-run reactor with randomized finish/steal interleavings
-/// from model workers that defer execution arbitrarily. Checks, after every
+/// from model workers that defer execution arbitrarily; with
+/// `max_kills > 0`, worker disconnects are additionally injected at random
+/// points (never killing the last worker), exercising lineage recovery
+/// against every race the interleaving can produce. Checks, after every
 /// reactor interaction:
 /// - each live run's scheduler cluster-model queue *totals* match the
 ///   reactor's `TaskState` view (always), and the per-worker queue *sets*
 ///   match whenever that run has no steal in flight;
-/// - no task is ever executed twice, and at the end every task of every
-///   run executed exactly once and every run completed.
-fn drive_reactor_interleaved(sched_name: &str, rng: &mut Rng) -> Result<(), String> {
+/// - without kills no task is ever executed twice, and at the end every
+///   task of every run executed (exactly once without kills, at least once
+///   with them) and every run completed — recovery never fails a run.
+fn drive_reactor_interleaved(
+    sched_name: &str,
+    rng: &mut Rng,
+    max_kills: usize,
+) -> Result<(), String> {
     let n_graphs = rng.range_usize(1, 4);
     let graphs: Vec<TaskGraph> = (0..n_graphs).map(|_| random_graph(rng)).collect();
-    let n_workers = rng.range_usize(1, 7) as u32;
+    let min_workers = (max_kills + 1) as u32; // always ≥1 survivor
+    let n_workers = rng.range_usize(min_workers as usize, min_workers as usize + 6) as u32;
     let pool = SchedulerPool::new(sched_name, rng.next_u64()).expect("known scheduler");
     let mut reactor = Reactor::new(pool, RuntimeProfile::rust(), false);
 
@@ -226,6 +235,8 @@ fn drive_reactor_interleaved(sched_name: &str, rng: &mut Rng) -> Result<(), Stri
         vec![HashSet::new(); n_workers as usize];
     let mut executed: HashMap<(RunId, TaskId), u32> = HashMap::new();
     let mut done: HashMap<RunId, u64> = HashMap::new();
+    let mut alive: Vec<bool> = vec![true; n_workers as usize];
+    let mut kills_left = max_kills;
 
     let check_invariants = |reactor: &Reactor, runs: &HashMap<RunId, u64>| -> Result<(), String> {
         for &run in runs.keys() {
@@ -265,7 +276,11 @@ fn drive_reactor_interleaved(sched_name: &str, rng: &mut Rng) -> Result<(), Stri
         }
         for (dest, msg) in std::mem::take(&mut out) {
             match (dest, msg) {
-                (Dest::Worker(w), msg) => inboxes[w.idx()].push(msg),
+                (Dest::Worker(w), msg) => {
+                    if alive[w.idx()] {
+                        inboxes[w.idx()].push(msg); // dead sockets eat messages
+                    }
+                }
                 (_, Msg::GraphSubmitted { run, n_tasks }) => {
                     expected.insert(run, n_tasks);
                 }
@@ -278,11 +293,29 @@ fn drive_reactor_interleaved(sched_name: &str, rng: &mut Rng) -> Result<(), Stri
                 (d, m) => return Err(format!("unexpected {:?} to {d:?}", m.op())),
             }
         }
-        let deliverable: Vec<usize> =
-            (0..inboxes.len()).filter(|&w| !inboxes[w].is_empty()).collect();
+        // Occasionally kill a live worker (its socket closes: undelivered
+        // messages vanish, queued work is lost, stored outputs evaporate).
+        if kills_left > 0
+            && alive.iter().filter(|a| **a).count() > 1
+            && rng.chance(0.03)
+        {
+            let live: Vec<usize> = (0..alive.len()).filter(|&i| alive[i]).collect();
+            let w = *rng.choose(&live);
+            alive[w] = false;
+            kills_left -= 1;
+            inboxes[w].clear();
+            local_queue[w].clear();
+            reactor.on_disconnect(Origin::Worker(WorkerId(w as u32)), &mut out);
+            check_invariants(&reactor, &expected)?;
+            continue;
+        }
+        let deliverable: Vec<usize> = (0..inboxes.len())
+            .filter(|&w| alive[w] && !inboxes[w].is_empty())
+            .collect();
         let runnable: Vec<(usize, (RunId, TaskId))> = local_queue
             .iter()
             .enumerate()
+            .filter(|&(w, _)| alive[w])
             .flat_map(|(w, q)| q.iter().map(move |&k| (w, k)))
             .collect();
         if deliverable.is_empty() && runnable.is_empty() {
@@ -297,7 +330,11 @@ fn drive_reactor_interleaved(sched_name: &str, rng: &mut Rng) -> Result<(), Stri
             match msg {
                 Msg::Welcome { .. } => {}
                 Msg::ComputeTask { run, task, .. } => {
-                    if !local_queue[w].insert((run, task)) {
+                    // With kills, a stale pre-recovery assignment can still
+                    // be parked in the inbox when a resurrection re-assigns
+                    // the task here; the real worker just queues the
+                    // duplicate and finishes it twice (idempotent).
+                    if !local_queue[w].insert((run, task)) && max_kills == 0 {
                         return Err(format!("{run}/{task} assigned to w{w} while queued"));
                     }
                 }
@@ -310,11 +347,23 @@ fn drive_reactor_interleaved(sched_name: &str, rng: &mut Rng) -> Result<(), Stri
                     );
                     check_invariants(&reactor, &expected)?;
                 }
+                Msg::CancelCompute { run, task } => {
+                    // Recovery pulled the task back; a copy may or may not
+                    // still be queued here.
+                    local_queue[w].remove(&(run, task));
+                }
                 Msg::ReleaseRun { run } => {
-                    // A released run must have nothing left queued here.
-                    if let Some(k) = local_queue[w].iter().find(|(r, _)| *r == run) {
-                        return Err(format!("{run} released with {} still queued", k.1));
+                    // Without failures, exactly-once execution implies a
+                    // released run has nothing queued anywhere. With kills,
+                    // a recovery duplicate can legitimately still sit here
+                    // (an early copy finished the task elsewhere); the real
+                    // worker purges it on release — mirror that.
+                    if max_kills == 0 {
+                        if let Some(k) = local_queue[w].iter().find(|(r, _)| *r == run) {
+                            return Err(format!("{run} released with {} still queued", k.1));
+                        }
                     }
+                    local_queue[w].retain(|&(r, _)| r != run);
                 }
                 other => return Err(format!("worker got {:?}", other.op())),
             }
@@ -323,7 +372,7 @@ fn drive_reactor_interleaved(sched_name: &str, rng: &mut Rng) -> Result<(), Stri
             local_queue[w].remove(&(run, task));
             let n = executed.entry((run, task)).or_insert(0);
             *n += 1;
-            if *n > 1 {
+            if *n > 1 && max_kills == 0 {
                 return Err(format!("{run}/{task} executed {n} times"));
             }
             reactor.on_message(
@@ -349,8 +398,13 @@ fn drive_reactor_interleaved(sched_name: &str, rng: &mut Rng) -> Result<(), Stri
         }
         let run_executed =
             executed.iter().filter(|((r, _), _)| r == run).map(|(_, &n)| n as u64).sum::<u64>();
-        if run_executed != *n_tasks {
+        if max_kills == 0 && run_executed != *n_tasks {
             return Err(format!("{run}: executed {run_executed} of {n_tasks} tasks"));
+        }
+        if run_executed < *n_tasks {
+            return Err(format!(
+                "{run}: only {run_executed} of {n_tasks} tasks ever executed"
+            ));
         }
     }
     if reactor.live_runs() != 0 {
@@ -362,21 +416,21 @@ fn drive_reactor_interleaved(sched_name: &str, rng: &mut Rng) -> Result<(), Stri
 #[test]
 fn prop_reactor_ws_interleavings_keep_models_in_sync() {
     check("reactor ws interleavings", PropConfig { cases: 30, seed: 707 }, |rng| {
-        drive_reactor_interleaved("ws", rng)
+        drive_reactor_interleaved("ws", rng, 0)
     });
 }
 
 #[test]
 fn prop_reactor_ws_lifo_interleavings_keep_models_in_sync() {
     check("reactor ws-lifo interleavings", PropConfig { cases: 20, seed: 808 }, |rng| {
-        drive_reactor_interleaved("ws-lifo", rng)
+        drive_reactor_interleaved("ws-lifo", rng, 0)
     });
 }
 
 #[test]
 fn prop_reactor_dask_ws_interleavings_keep_models_in_sync() {
     check("reactor dask-ws interleavings", PropConfig { cases: 20, seed: 909 }, |rng| {
-        drive_reactor_interleaved("dask-ws", rng)
+        drive_reactor_interleaved("dask-ws", rng, 0)
     });
 }
 
@@ -385,7 +439,33 @@ fn prop_reactor_random_interleavings_complete() {
     // The random scheduler keeps no cluster model; the property reduces to
     // completion + exactly-once execution under the same interleavings.
     check("reactor random interleavings", PropConfig { cases: 20, seed: 1010 }, |rng| {
-        drive_reactor_interleaved("random", rng)
+        drive_reactor_interleaved("random", rng, 0)
+    });
+}
+
+// ---- disconnect recovery interleavings (PR 3 tentpole) ----
+
+#[test]
+fn prop_reactor_ws_survives_interleaved_disconnects() {
+    // Worker kills injected at random points between finishes and steals:
+    // scheduler-vs-reactor queue parity must hold through every recovery,
+    // every run must complete, every task must execute at least once.
+    check("reactor ws disconnects", PropConfig { cases: 25, seed: 1111 }, |rng| {
+        drive_reactor_interleaved("ws", rng, 2)
+    });
+}
+
+#[test]
+fn prop_reactor_dask_ws_survives_interleaved_disconnects() {
+    check("reactor dask-ws disconnects", PropConfig { cases: 20, seed: 1212 }, |rng| {
+        drive_reactor_interleaved("dask-ws", rng, 2)
+    });
+}
+
+#[test]
+fn prop_reactor_random_survives_interleaved_disconnects() {
+    check("reactor random disconnects", PropConfig { cases: 20, seed: 1313 }, |rng| {
+        drive_reactor_interleaved("random", rng, 2)
     });
 }
 
@@ -468,7 +548,7 @@ fn random_msg(rng: &mut Rng) -> Msg {
     let task = TaskId(rng.next_u64() as u32);
     // Bit-shifted magnitudes hit fixint / u8 / u16 / u32 / u64 encodings.
     let wide = |rng: &mut Rng| rng.next_u64() >> (rng.gen_range(64) as u32);
-    match rng.gen_range(18) {
+    match rng.gen_range(19) {
         0 => Msg::RegisterClient { name: rand_str(rng, 40) },
         1 => Msg::RegisterWorker {
             name: rand_str(rng, 40),
@@ -515,6 +595,7 @@ fn random_msg(rng: &mut Rng) -> Msg {
         12 => Msg::StealResponse { run, task, ok: rng.chance(0.5) },
         13 => Msg::FetchData { run, task },
         14 => Msg::FetchFromServer { run, task },
+        17 => Msg::CancelCompute { run, task },
         15 => {
             let n = rng.range_usize(0, 400);
             Msg::DataReply { run, task, data: (0..n).map(|_| rng.next_u64() as u8).collect() }
