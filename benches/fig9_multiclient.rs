@@ -1,24 +1,96 @@
 //! Fig 9 (extension) — per-client AOT degradation under concurrent
-//! multi-graph load.
+//! multi-graph load, in the simulator AND over real TCP.
 //!
-//! The paper benchmarks one graph at a time; this measures what happens
-//! when 1, 4 and 16 clients submit interleaved graphs to one shared
-//! server: the reactor serializes message handling, so per-run AOT
-//! (run makespan / run tasks) grows with client count — much faster for
-//! the emulated CPython server than for the Rust one.
+//! The paper benchmarks one graph at a time; the first section measures
+//! what happens when 1, 4 and 16 clients submit interleaved graphs to one
+//! shared simulated server: the reactor serializes message handling, so
+//! per-run AOT (run makespan / run tasks) grows with client count — much
+//! faster for the emulated CPython server than for the Rust one.
+//!
+//! The second section closes the ROADMAP "sim/runtime parity" item: the
+//! same workload runs against a *real* TCP server with N client threads
+//! and zero workers (§IV-D — no execution or data plane, so both sides
+//! measure pure server overhead), and the per-client AOT *degradation
+//! curves* (mean AOT at N clients ÷ mean AOT at 1 client) are asserted to
+//! agree within a coarse tolerance. Absolute AOTs differ — the simulator
+//! charges a calibrated cost model, the TCP server pays real syscalls —
+//! but the dimensionless degradation shape is what Fig 9 claims, and a
+//! gross divergence here means the simulator no longer models the server.
 
+use rsds::client::Client;
 use rsds::graphgen::{concurrent, CONCURRENT_MIX_DEFAULT};
 use rsds::overhead::RuntimeProfile;
+use rsds::server::{serve, ServerConfig};
 use rsds::sim::{simulate_concurrent, SimConfig};
+use rsds::worker::zero::run_zero_worker;
+use rsds::worker::WorkerConfig;
 
-fn main() {
+/// Sim-vs-TCP degradation curves may differ by at most this factor per
+/// point (log-symmetric). Coarse by design: real sockets and thread
+/// scheduling are noisy; the assertion catches model breakage, not jitter.
+const PARITY_TOL: f64 = 3.0;
+
+fn sim_mean_aot(n_clients: usize, mix: &[&str], n_workers: usize) -> f64 {
+    let graphs = concurrent(n_clients, mix);
+    let cfg = SimConfig {
+        n_workers,
+        profile: RuntimeProfile::rust(),
+        scheduler: "ws".into(),
+        zero_worker: true,
+        ..SimConfig::default()
+    };
+    let r = simulate_concurrent(&graphs, &cfg);
+    assert!(!r.timed_out, "sim timed out at {n_clients} clients");
+    r.runs.iter().map(|x| x.aot_us).sum::<f64>() / r.runs.len() as f64
+}
+
+/// Real server + zero workers + `n_clients` client threads; returns the
+/// mean server-measured AOT across the runs.
+fn tcp_mean_aot(n_clients: usize, mix: &[&str], n_workers: usize) -> f64 {
+    let srv = serve(ServerConfig::default()).expect("server start");
+    let addr = srv.addr.to_string();
+    let zws: Vec<_> = (0..n_workers)
+        .map(|i| {
+            run_zero_worker(WorkerConfig {
+                server_addr: addr.clone(),
+                name: format!("z{i}"),
+                ncores: 1,
+                node: 0,
+            })
+            .expect("zero worker start")
+        })
+        .collect();
+    let graphs = concurrent(n_clients, mix);
+    let handles: Vec<_> = graphs
+        .into_iter()
+        .enumerate()
+        .map(|(i, g)| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr, &format!("fig9-{i}")).expect("connect");
+                let res = c.run_graph(&g).expect("run");
+                res.makespan_us as f64 / res.n_tasks as f64
+            })
+        })
+        .collect();
+    let aots: Vec<f64> = handles.into_iter().map(|h| h.join().expect("client thread")).collect();
+    for z in &zws {
+        z.shutdown();
+    }
+    srv.shutdown();
+    aots.iter().sum::<f64>() / aots.len() as f64
+}
+
+fn sim_tables(quick: bool) {
     let combos: [(&str, RuntimeProfile, &str); 4] = [
         ("dask/ws", RuntimeProfile::python(), "dask-ws"),
         ("dask/random", RuntimeProfile::python(), "random"),
         ("rsds/ws", RuntimeProfile::rust(), "ws"),
         ("rsds/random", RuntimeProfile::rust(), "random"),
     ];
-    for nodes in [1usize, 7] {
+    let node_counts: &[usize] = if quick { &[1] } else { &[1, 7] };
+    let client_counts: &[usize] = if quick { &[1, 4] } else { &[1, 4, 16] };
+    for &nodes in node_counts {
         println!(
             "\n== Fig 9: per-client AOT (µs/task) vs concurrent clients, {} workers ==",
             nodes * 24
@@ -29,7 +101,7 @@ fn main() {
         }
         println!("   (mix: {})", CONCURRENT_MIX_DEFAULT.join(", "));
         let mut baselines = [0.0f64; 4];
-        for n_clients in [1usize, 4, 16] {
+        for &n_clients in client_counts {
             let graphs = concurrent(n_clients, CONCURRENT_MIX_DEFAULT);
             print!("{:<14}", n_clients);
             for (i, (label, profile, sched)) in combos.iter().enumerate() {
@@ -49,6 +121,54 @@ fn main() {
             println!();
         }
     }
+}
+
+fn parity_section(quick: bool) {
+    let mix: &[&str] = if quick { &["merge-500", "tree-6"] } else { &["merge-2000", "tree-9"] };
+    let client_counts: &[usize] = if quick { &[1, 4] } else { &[1, 4, 16] };
+    let n_workers = 8;
+    println!(
+        "\n== Fig 9 parity: TCP (zero workers) vs sim degradation curves \
+         ({n_workers} workers, mix: {}) ==",
+        mix.join(", ")
+    );
+    println!(
+        "{:<10} {:>14} {:>14} {:>12} {:>12} {:>10}",
+        "clients", "sim AOT µs", "tcp AOT µs", "sim deg", "tcp deg", "ratio"
+    );
+    let sim: Vec<f64> =
+        client_counts.iter().map(|&n| sim_mean_aot(n, mix, n_workers)).collect();
+    // Two TCP reps per point, keep the min: real-socket timing is noisy and
+    // the curve shape is what parity is about.
+    let tcp: Vec<f64> = client_counts
+        .iter()
+        .map(|&n| {
+            let a = tcp_mean_aot(n, mix, n_workers);
+            let b = tcp_mean_aot(n, mix, n_workers);
+            a.min(b)
+        })
+        .collect();
+    for (i, &n) in client_counts.iter().enumerate() {
+        let sim_deg = sim[i] / sim[0];
+        let tcp_deg = tcp[i] / tcp[0];
+        let ratio = sim_deg / tcp_deg;
+        println!(
+            "{:<10} {:>14.1} {:>14.1} {:>11.2}x {:>11.2}x {:>10.2}",
+            n, sim[i], tcp[i], sim_deg, tcp_deg, ratio
+        );
+        assert!(
+            (ratio.ln()).abs() <= PARITY_TOL.ln(),
+            "sim/runtime parity broken at {n} clients: sim degrades {sim_deg:.2}x, \
+             tcp degrades {tcp_deg:.2}x (tolerance {PARITY_TOL}x)"
+        );
+    }
+    println!("parity OK: degradation curves agree within {PARITY_TOL}x at every point");
+}
+
+fn main() {
+    let quick = std::env::var_os("RSDS_BENCH_QUICK").is_some();
+    sim_tables(quick);
+    parity_section(quick);
     println!(
         "\nper-run AOT = run makespan / run tasks, averaged over clients; \
          ×: degradation vs a single client on the same server"

@@ -1,0 +1,165 @@
+//! Fairness (PR 4 extension) — P99 small-run latency under a large-run
+//! background load, per dispatch policy.
+//!
+//! PR 1's multi-graph server drained each run's outbound messages in
+//! arrival order, so one 100K-task submission starved a 10-task one. The
+//! reactor (and the simulator, which mirrors it) now parks messages on
+//! per-run outboxes and services them in bounded rounds under a pluggable
+//! fairness policy. This bench submits one large merge graph plus a batch
+//! of small ones to the simulator and reports the small runs' latency
+//! (P99/P50 of per-run makespan, which includes the dispatch wait) under
+//! `arrival` (the pre-fairness baseline), `rr` (round-robin, the default)
+//! and `weighted` (shortest-remaining-first). Machine-readable results go
+//! to `BENCH_pr4.json`; the run *asserts* that both fair policies strictly
+//! beat the baseline.
+
+use rsds::graphgen::merge;
+use rsds::overhead::RuntimeProfile;
+use rsds::sim::{simulate_concurrent, SimConfig};
+use rsds::taskgraph::TaskGraph;
+use rsds::util::stats::percentile_sorted;
+
+struct Row {
+    policy: &'static str,
+    profile: &'static str,
+    n_small: usize,
+    small_p99_us: f64,
+    small_p50_us: f64,
+    large_makespan_us: f64,
+}
+
+fn measure(
+    policy: &'static str,
+    profile_name: &'static str,
+    profile: RuntimeProfile,
+    scheduler: &str,
+    large: usize,
+    n_small: usize,
+) -> Row {
+    let graphs: Vec<TaskGraph> =
+        std::iter::once(merge(large)).chain((0..n_small).map(|_| merge(50))).collect();
+    let cfg = SimConfig {
+        n_workers: 24,
+        profile,
+        scheduler: scheduler.into(),
+        fairness: policy.into(),
+        ..SimConfig::default()
+    };
+    let r = simulate_concurrent(&graphs, &cfg);
+    assert!(!r.timed_out, "{policy}/{profile_name}: timed out");
+    assert_eq!(r.in_flight_steals_at_end, 0, "{policy}/{profile_name}: leaked steals");
+    let mut smalls: Vec<f64> = r.runs[1..].iter().map(|x| x.makespan_us).collect();
+    smalls.sort_by(|a, b| a.partial_cmp(b).expect("no NaN makespans"));
+    Row {
+        policy,
+        profile: profile_name,
+        n_small,
+        small_p99_us: percentile_sorted(&smalls, 0.99),
+        small_p50_us: percentile_sorted(&smalls, 0.50),
+        large_makespan_us: r.runs[0].makespan_us,
+    }
+}
+
+fn write_bench_json(rows: &[Row], quick: bool) {
+    let baseline = |profile: &str| {
+        rows.iter()
+            .find(|r| r.policy == "arrival" && r.profile == profile)
+            .expect("arrival baseline measured")
+            .small_p99_us
+    };
+    let mut json = String::from("{\n");
+    json.push_str("  \"pr\": 4,\n");
+    json.push_str("  \"bench\": \"fig_fairness\",\n");
+    json.push_str(&format!("  \"quick\": {quick},\n"));
+    json.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"policy\": \"{}\", \"profile\": \"{}\", \"n_small\": {}, \
+             \"small_p99_us\": {:.2}, \"small_p50_us\": {:.2}, \
+             \"large_makespan_us\": {:.2}, \"p99_speedup_vs_arrival\": {:.3}}}{}\n",
+            r.policy,
+            r.profile,
+            r.n_small,
+            r.small_p99_us,
+            r.small_p50_us,
+            r.large_makespan_us,
+            baseline(r.profile) / r.small_p99_us,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_pr4.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_pr4.json"),
+        Err(e) => eprintln!("could not write BENCH_pr4.json: {e}"),
+    }
+}
+
+fn main() {
+    let quick = std::env::var_os("RSDS_BENCH_QUICK").is_some();
+    let (large, n_small) = if quick { (3_000, 8) } else { (20_000, 16) };
+    let profiles: Vec<(&'static str, RuntimeProfile, &'static str)> = if quick {
+        vec![("rsds", RuntimeProfile::rust(), "ws")]
+    } else {
+        vec![
+            ("rsds", RuntimeProfile::rust(), "ws"),
+            ("dask", RuntimeProfile::python(), "dask-ws"),
+        ]
+    };
+
+    println!(
+        "== fig_fairness: small-run latency under a merge-{large} background load \
+         ({n_small} × merge-50, 24 workers) =="
+    );
+    println!(
+        "{:<10} {:<8} {:>16} {:>16} {:>16} {:>10}",
+        "policy", "profile", "small P99 µs", "small P50 µs", "large mksp µs", "vs arrival"
+    );
+    let mut rows = Vec::new();
+    for &(pname, ref profile, sched) in &profiles {
+        for policy in ["arrival", "rr", "weighted"] {
+            let row = measure(policy, pname, profile.clone(), sched, large, n_small);
+            rows.push(row);
+        }
+        let base = rows
+            .iter()
+            .find(|r| r.policy == "arrival" && r.profile == pname)
+            .expect("baseline first")
+            .small_p99_us;
+        for r in rows.iter().filter(|r| r.profile == pname) {
+            println!(
+                "{:<10} {:<8} {:>16.1} {:>16.1} {:>16.1} {:>9.1}x",
+                r.policy,
+                r.profile,
+                r.small_p99_us,
+                r.small_p50_us,
+                r.large_makespan_us,
+                base / r.small_p99_us
+            );
+        }
+    }
+
+    // Acceptance: fair policies strictly beat arrival order on small-run
+    // P99 for every profile.
+    for &(pname, _, _) in &profiles {
+        let get = |policy: &str| {
+            rows.iter()
+                .find(|r| r.policy == policy && r.profile == pname)
+                .expect("all policies measured")
+                .small_p99_us
+        };
+        let (arrival, rr, weighted) = (get("arrival"), get("rr"), get("weighted"));
+        assert!(
+            rr < arrival,
+            "{pname}: round-robin P99 {rr:.1} must beat arrival {arrival:.1}"
+        );
+        assert!(
+            weighted < arrival,
+            "{pname}: weighted P99 {weighted:.1} must beat arrival {arrival:.1}"
+        );
+    }
+    write_bench_json(&rows, quick);
+    println!(
+        "\nsmall-run latency = per-run makespan (submission→last finish, includes \
+         dispatch wait); arrival = pre-fairness drain order"
+    );
+}

@@ -400,7 +400,9 @@ fn main() {
             Msg::SubmitGraph { graph: merge(10_000), scheduler: None },
             &mut out,
         );
-        // Answer every compute/steal message until done.
+        // Answer every compute/steal message until done (drain emits the
+        // fairness-parked worker-bound messages).
+        reactor.drain(&mut out);
         let mut inbox: Vec<(Dest, Msg)> = std::mem::take(&mut out);
         while let Some((dest, msg)) = inbox.pop() {
             let Dest::Worker(w) = dest else { continue };
@@ -422,6 +424,7 @@ fn main() {
                 ),
                 _ => {}
             }
+            reactor.drain(&mut out);
             inbox.append(&mut out);
         }
         assert_eq!(reactor.reports().len(), 1);

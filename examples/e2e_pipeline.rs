@@ -39,6 +39,7 @@ fn run_cluster(graphs: &[TaskGraph], emulate_python: bool, n_workers: u32) -> an
         seed: 2020,
         profile: if emulate_python { RuntimeProfile::python() } else { RuntimeProfile::rust() },
         emulate: emulate_python,
+        ..ServerConfig::default()
     })?;
     let addr = srv.addr.to_string();
     let workers: Vec<_> = (0..n_workers)

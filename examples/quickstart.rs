@@ -19,6 +19,7 @@ fn main() -> anyhow::Result<()> {
         seed: 2020,
         profile: RuntimeProfile::rust(),
         emulate: false,
+        ..ServerConfig::default()
     })?;
     println!("server on {}", srv.addr);
 

@@ -21,6 +21,7 @@ fn aot(scheduler: &str, emulate: bool, n_workers: u32, n_tasks: u32) -> anyhow::
         seed: 7,
         profile: if emulate { RuntimeProfile::python() } else { RuntimeProfile::rust() },
         emulate,
+        ..ServerConfig::default()
     })?;
     let addr = srv.addr.to_string();
     let zws: Vec<_> = (0..n_workers)

@@ -11,6 +11,12 @@
 //! [`Client::submit_with`]/[`Client::run_graph_with`] let a submission name
 //! the scheduler that should serve it (per-run scheduler choice).
 //!
+//! Admission control: a server caps concurrently executing runs per
+//! client; a submission past the cap is acked with `run-queued` and parks
+//! until earlier runs retire. [`Client::submit`] still returns
+//! immediately with the run id, [`Client::wait`] spans the queued phase
+//! transparently, and [`Client::is_queued`] exposes the phase.
+//!
 //! I/O reuses one [`FrameWriter`] and one [`FrameReader`] per connection:
 //! a warm send/receive allocates nothing beyond the decoded message's own
 //! fields.
@@ -39,6 +45,9 @@ pub struct RunResult {
 struct PendingRun {
     graph_name: String,
     submitted_at: Instant,
+    /// Parked in the server's admission queue (acked with `run-queued`);
+    /// cleared when the activation `graph-submitted` arrives.
+    queued: bool,
 }
 
 /// A connected client.
@@ -90,6 +99,12 @@ impl Client {
     /// Like [`Client::submit`], but names the scheduler that should serve
     /// this run (`random` | `ws` | …). `None` uses the server default; an
     /// unknown name fails the run (surfaced by [`Client::wait`]).
+    ///
+    /// A server at this client's live-run cap acks with `run-queued`
+    /// instead of `graph-submitted`: the run is parked in the admission
+    /// queue and activates as earlier runs retire. `submit` returns its
+    /// run id either way, and [`Client::wait`] spans the queued phase
+    /// transparently; [`Client::is_queued`] tells the phases apart.
     pub fn submit_with(&mut self, graph: &TaskGraph, scheduler: Option<&str>) -> Result<RunId> {
         let name = graph.name.clone();
         let submitted_at = Instant::now();
@@ -99,13 +114,24 @@ impl Client {
         };
         self.frames_out.send(&mut self.stream, &msg)?;
         // Read until the ack for *this* submission arrives. Completions of
-        // earlier pipelined runs may interleave; buffer them for `wait`.
+        // earlier pipelined runs may interleave — as may activation
+        // notices (`graph-submitted` for a run already known as queued);
+        // both are filed by `handle_completion`.
         loop {
             let msg = self.read_msg()?;
             match msg {
-                Msg::GraphSubmitted { run, .. } => {
-                    self.in_flight
-                        .insert(run, PendingRun { graph_name: name, submitted_at });
+                Msg::GraphSubmitted { run, .. } if !self.in_flight.contains_key(&run) => {
+                    self.in_flight.insert(
+                        run,
+                        PendingRun { graph_name: name, submitted_at, queued: false },
+                    );
+                    return Ok(run);
+                }
+                Msg::RunQueued { run, .. } if !self.in_flight.contains_key(&run) => {
+                    self.in_flight.insert(
+                        run,
+                        PendingRun { graph_name: name, submitted_at, queued: true },
+                    );
                     return Ok(run);
                 }
                 other => self.handle_completion(other)?,
@@ -133,6 +159,15 @@ impl Client {
         self.in_flight.len()
     }
 
+    /// Whether `run` is (as far as this client has heard) still parked in
+    /// the server's admission queue rather than executing. False once the
+    /// activation notice arrived, or for unknown/completed runs. Reads
+    /// only buffered state — call [`Client::wait`] (or submit more work)
+    /// to make progress on the socket.
+    pub fn is_queued(&self, run: RunId) -> bool {
+        self.in_flight.get(&run).map(|p| p.queued).unwrap_or(false)
+    }
+
     /// Submit a graph and block until it completes or fails.
     pub fn run_graph(&mut self, graph: &TaskGraph) -> Result<RunResult> {
         self.run_graph_with(graph, None)
@@ -148,9 +183,21 @@ impl Client {
         self.wait(run)
     }
 
-    /// File a graph-done / graph-failed under its run; ignore heartbeats.
+    /// File a graph-done / graph-failed under its run; track admission
+    /// phase changes; ignore heartbeats.
     fn handle_completion(&mut self, msg: Msg) -> Result<()> {
         match msg {
+            Msg::GraphSubmitted { run, .. } => {
+                // Activation notice for a run previously acked as queued
+                // (a fresh submission's ack is consumed by `submit_with`).
+                let Some(pending) = self.in_flight.get_mut(&run) else {
+                    bail!("graph-submitted for unknown run {run}");
+                };
+                pending.queued = false;
+            }
+            Msg::RunQueued { run, .. } => {
+                bail!("run-queued for already-acked run {run}");
+            }
             Msg::GraphDone { run, makespan_us, n_tasks } => {
                 let Some(pending) = self.in_flight.remove(&run) else {
                     bail!("graph-done for unknown run {run}");

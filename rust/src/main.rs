@@ -24,11 +24,13 @@ rsds — reproduction of 'Runtime vs Scheduler: Analyzing Dask's Overheads'
 USAGE:
   rsds server  [--addr 127.0.0.1:8786] [--scheduler ws|random|dask-ws]
                [--profile rsds|dask] [--emulate-python] [--seed N]
+               [--fairness rr|arrival|weighted] [--max-runs-per-client N]
   rsds worker  --server ADDR [--ncores 1] [--node 0] [--name w0] [--count N]
   rsds zero-worker --server ADDR [--count N]
   rsds submit  --server ADDR --graph SPEC  (e.g. merge-10000, xarray-25)
   rsds sim     --graph SPEC [--workers 24] [--scheduler ws] [--profile rsds]
                [--zero-worker] [--seed N] [--timeout-s 300]
+               [--fairness rr|arrival|weighted]
   rsds suite   (prints generated-vs-paper Table I)
 ";
 
@@ -67,7 +69,8 @@ fn env_logger_lite() {
 fn run() -> Result<()> {
     let args = Args::from_env(&[
         "addr", "scheduler", "profile", "seed", "server", "ncores", "node", "name", "count",
-        "graph", "workers", "timeout-s", "workers-per-node",
+        "graph", "workers", "timeout-s", "workers-per-node", "fairness",
+        "max-runs-per-client",
     ])?;
     match args.subcommand() {
         Some("server") => cmd_server(&args),
@@ -95,12 +98,20 @@ fn cmd_server(args: &Args) -> Result<()> {
         seed: args.get_parsed_or("seed", 2020u64)?,
         profile: profile_arg(args)?,
         emulate: args.flag("emulate-python"),
+        fairness: args.get("fairness").unwrap_or("rr").to_string(),
+        max_live_runs_per_client: args.get_parsed_or(
+            "max-runs-per-client",
+            rsds::server::DEFAULT_MAX_LIVE_RUNS_PER_CLIENT,
+        )?,
+        ..ServerConfig::default()
     };
     let emulate = config.emulate;
     let scheduler = config.scheduler.clone();
+    let fairness = config.fairness.clone();
     let handle = serve(config)?;
     println!(
-        "rsds server listening on {} (scheduler={scheduler}, emulate-python={emulate})",
+        "rsds server listening on {} (scheduler={scheduler}, fairness={fairness}, \
+         emulate-python={emulate})",
         handle.addr
     );
     // Run until killed.
@@ -165,6 +176,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
         seed: args.get_parsed_or("seed", 2020u64)?,
         zero_worker: args.flag("zero-worker"),
         timeout_us: args.get_parsed_or("timeout-s", 300f64)? * 1e6,
+        fairness: args.get("fairness").unwrap_or("rr").to_string(),
         ..SimConfig::default()
     };
     if cfg.n_workers == 0 {

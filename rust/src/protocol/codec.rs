@@ -352,6 +352,16 @@ pub fn encode_msg_into(msg: &Msg, out: &mut Vec<u8>) {
             w.str("run");
             w.uint(run.0 as u64);
         }
+        Msg::RunQueued { run, position } => {
+            let mut w = Writer::new(out);
+            w.map_header(3);
+            w.str("op");
+            w.str("run-queued");
+            w.str("position");
+            w.uint(*position);
+            w.str("run");
+            w.uint(run.0 as u64);
+        }
         Msg::GraphDone { run, makespan_us, n_tasks } => {
             let mut w = Writer::new(out);
             w.map_header(4);
@@ -603,6 +613,23 @@ pub fn decode_msg(bytes: &[u8]) -> Result<Msg, CodecError> {
             Ok(Msg::GraphSubmitted {
                 run: RunId(req(run, "run")?),
                 n_tasks: req(n_tasks, "n_tasks")?,
+            })
+        }
+        "run-queued" => {
+            let mut r = Reader::new(bytes);
+            let n = r.map_header()?;
+            let (mut run, mut position) = (None, None);
+            for _ in 0..n {
+                match r.str()? {
+                    "run" => run = Some(r_uint(&mut r, "run")? as u32),
+                    "position" => position = Some(r_uint(&mut r, "position")?),
+                    _ => r.skip_value()?,
+                }
+            }
+            finish(&r, bytes)?;
+            Ok(Msg::RunQueued {
+                run: RunId(req(run, "run")?),
+                position: req(position, "position")?,
             })
         }
         "graph-done" => {
@@ -1008,6 +1035,10 @@ pub fn encode_msg_value(msg: &Msg) -> Vec<u8> {
             fields.push(("run", Value::from(run.0)));
             fields.push(("n_tasks", Value::from(*n_tasks)));
         }
+        Msg::RunQueued { run, position } => {
+            fields.push(("run", Value::from(run.0)));
+            fields.push(("position", Value::from(*position)));
+        }
         Msg::GraphDone { run, makespan_us, n_tasks } => {
             fields.push(("run", Value::from(run.0)));
             fields.push(("makespan_us", Value::from(*makespan_us)));
@@ -1103,6 +1134,9 @@ pub fn decode_msg_value(bytes: &[u8]) -> Result<Msg, CodecError> {
         }
         "graph-submitted" => {
             Msg::GraphSubmitted { run: get_run(&v)?, n_tasks: get_u64(&v, "n_tasks")? }
+        }
+        "run-queued" => {
+            Msg::RunQueued { run: get_run(&v)?, position: get_u64(&v, "position")? }
         }
         "graph-done" => Msg::GraphDone {
             run: get_run(&v)?,
@@ -1207,6 +1241,7 @@ mod tests {
             },
             Msg::Welcome { id: 17 },
             Msg::GraphSubmitted { run: RunId(3), n_tasks: 10_001 },
+            Msg::RunQueued { run: RunId(9), position: 2 },
             Msg::GraphDone { run: RunId(3), makespan_us: 123_456, n_tasks: 10_001 },
             Msg::GraphFailed { run: RunId(7), reason: "worker died".into() },
             Msg::ReleaseRun { run: RunId(7) },

@@ -68,8 +68,18 @@ pub enum Msg {
     /// can thereby pick different schedulers on one shared server.
     SubmitGraph { graph: TaskGraph, scheduler: Option<String> },
     /// server → client: graph accepted; all later messages about it carry
-    /// `run`. Clients may pipeline further submissions immediately.
+    /// `run`. Clients may pipeline further submissions immediately. Also
+    /// sent when a previously parked submission (see [`Msg::RunQueued`])
+    /// is activated from the admission queue.
     GraphSubmitted { run: RunId, n_tasks: u64 },
+    /// server → client: the submission was accepted but *parked* — the
+    /// client is at its live-run cap, so the graph waits in the server's
+    /// admission queue. `position` is the number of *this client's*
+    /// submissions queued ahead of it at park time (activation is FIFO
+    /// per client — other tenants' backlogs don't gate it). A
+    /// `graph-submitted` for the same run follows when it activates;
+    /// `wait()` spans the queued phase transparently.
+    RunQueued { run: RunId, position: u64 },
     /// server → client: all tasks of `run` finished.
     GraphDone { run: RunId, makespan_us: u64, n_tasks: u64 },
     /// server → client: execution of `run` failed.
@@ -143,6 +153,7 @@ impl Msg {
             Msg::Welcome { .. } => "welcome",
             Msg::SubmitGraph { .. } => "submit-graph",
             Msg::GraphSubmitted { .. } => "graph-submitted",
+            Msg::RunQueued { .. } => "run-queued",
             Msg::GraphDone { .. } => "graph-done",
             Msg::GraphFailed { .. } => "graph-failed",
             Msg::ReleaseRun { .. } => "release-run",

@@ -1,0 +1,189 @@
+//! Run-fairness policies for the reactor's outbound dispatch.
+//!
+//! The multi-graph reactor translates scheduler actions into worker-bound
+//! messages *per run* and parks them on that run's outbox
+//! ([`crate::server::GraphRun`]). Emission — the per-message encode/send
+//! work that used to be drained in arrival order, letting a 100K-task
+//! submission starve a 10-task one — happens in bounded *rounds*: each
+//! round a [`FairnessPolicy`] picks one run among those with pending
+//! messages and up to a quota of its messages go out
+//! ([`crate::server::Reactor::pump`]). The discrete-event simulator
+//! ([`crate::sim`]) services its virtual reactor with the same policies so
+//! sim and TCP server stay behavior-comparable.
+//!
+//! Policies must be **order-independent**: the caller assembles `stats`
+//! from a hash map, so two entries may arrive in any order. Every policy
+//! here breaks ties on the run id, which is allocation-ordered and unique.
+
+use crate::protocol::RunId;
+
+/// Messages emitted per policy round. Small enough that a run with one
+/// pending message waits at most `live_runs × quota` emissions; large
+/// enough that batching (one writer hand-off per round) stays effective.
+pub const DEFAULT_DISPATCH_QUOTA: usize = 32;
+
+/// One run's dispatch-queue state, as offered to a policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RunQueueStat {
+    pub run: RunId,
+    /// Parked worker-bound messages in this run's outbox (always > 0).
+    pub pending: usize,
+    /// Unfinished tasks of the run — the weighting input.
+    pub remaining: u64,
+    /// Monotonic tick stamped when the outbox last became non-empty;
+    /// the arrival order across queue activations.
+    pub since: u64,
+}
+
+/// Picks which run's outbox the reactor services next.
+pub trait FairnessPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Choose a run from `stats` (never empty; every entry has
+    /// `pending > 0`). Must return the `run` of one of the entries and
+    /// must not depend on the slice order.
+    fn pick(&mut self, stats: &[RunQueueStat]) -> RunId;
+}
+
+/// The pre-fairness baseline: service queues strictly in the order they
+/// became non-empty, each to exhaustion. A large run's backlog therefore
+/// starves later arrivals — kept as the control arm of `fig_fairness`.
+#[derive(Debug, Default)]
+pub struct ArrivalOrder;
+
+impl FairnessPolicy for ArrivalOrder {
+    fn name(&self) -> &'static str {
+        "arrival"
+    }
+
+    fn pick(&mut self, stats: &[RunQueueStat]) -> RunId {
+        stats
+            .iter()
+            .min_by_key(|s| (s.since, s.run))
+            .expect("stats is never empty")
+            .run
+    }
+}
+
+/// Round-robin over run ids (default): rotate through the pending runs in
+/// id order. Guarantees bounded progress — a run with pending messages is
+/// serviced within `live_runs` rounds, which the starvation proptest
+/// asserts over random interleavings.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    /// Last serviced run; the rotation resumes strictly after it.
+    cursor: Option<RunId>,
+}
+
+impl FairnessPolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "rr"
+    }
+
+    fn pick(&mut self, stats: &[RunQueueStat]) -> RunId {
+        let after = self.cursor;
+        let next = stats
+            .iter()
+            .filter(|s| after.map(|c| s.run > c).unwrap_or(true))
+            .map(|s| s.run)
+            .min()
+            .or_else(|| stats.iter().map(|s| s.run).min())
+            .expect("stats is never empty");
+        self.cursor = Some(next);
+        next
+    }
+}
+
+/// Weighted by remaining tasks: always service the run closest to
+/// completion (shortest-remaining-first, ties by run id). Minimizes
+/// small-run latency under a large background run even harder than
+/// round-robin; with a finite backlog nothing starves (the served run's
+/// queue drains, then the next-smallest is served), but a large run makes
+/// progress only when no smaller run has pending messages — the
+/// documented trade-off `fig_fairness` quantifies.
+#[derive(Debug, Default)]
+pub struct WeightedByRemaining;
+
+impl FairnessPolicy for WeightedByRemaining {
+    fn name(&self) -> &'static str {
+        "weighted"
+    }
+
+    fn pick(&mut self, stats: &[RunQueueStat]) -> RunId {
+        stats
+            .iter()
+            .min_by_key(|s| (s.remaining, s.run))
+            .expect("stats is never empty")
+            .run
+    }
+}
+
+/// Construct a policy by CLI/config name.
+pub fn by_name(name: &str) -> Option<Box<dyn FairnessPolicy>> {
+    match name {
+        "arrival" | "arrival-order" => Some(Box::<ArrivalOrder>::default()),
+        "rr" | "round-robin" => Some(Box::<RoundRobin>::default()),
+        "weighted" | "weighted-remaining" => Some(Box::<WeightedByRemaining>::default()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stat(run: u32, pending: usize, remaining: u64, since: u64) -> RunQueueStat {
+        RunQueueStat { run: RunId(run), pending, remaining, since }
+    }
+
+    #[test]
+    fn by_name_constructs_all_and_rejects_unknown() {
+        for n in ["arrival", "rr", "round-robin", "weighted"] {
+            assert!(by_name(n).is_some(), "{n}");
+        }
+        assert!(by_name("fifo").is_none());
+    }
+
+    #[test]
+    fn arrival_order_is_fifo_by_activation() {
+        let mut p = ArrivalOrder;
+        let stats = [stat(3, 1, 10, 7), stat(1, 100, 1, 2), stat(2, 5, 5, 4)];
+        assert_eq!(p.pick(&stats), RunId(1));
+        // Order-independence: a permutation picks the same run.
+        let rev = [stats[2], stats[0], stats[1]];
+        assert_eq!(p.pick(&rev), RunId(1));
+    }
+
+    #[test]
+    fn round_robin_rotates_and_wraps() {
+        let mut p = RoundRobin::default();
+        let stats = [stat(0, 1, 1, 0), stat(2, 1, 1, 1), stat(5, 1, 1, 2)];
+        assert_eq!(p.pick(&stats), RunId(0));
+        assert_eq!(p.pick(&stats), RunId(2));
+        assert_eq!(p.pick(&stats), RunId(5));
+        assert_eq!(p.pick(&stats), RunId(0), "wraps to the smallest id");
+        // A run draining out of the rotation is skipped transparently.
+        let fewer = [stat(0, 1, 1, 0), stat(5, 1, 1, 2)];
+        assert_eq!(p.pick(&fewer), RunId(5));
+    }
+
+    #[test]
+    fn round_robin_bounded_gap() {
+        // Every pending run is serviced within `stats.len()` rounds.
+        let mut p = RoundRobin::default();
+        let stats: Vec<RunQueueStat> =
+            (0..5).map(|i| stat(i * 3, 1, 1, i as u64)).collect();
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..stats.len() {
+            seen.insert(p.pick(&stats));
+        }
+        assert_eq!(seen.len(), stats.len(), "one full rotation covers every run");
+    }
+
+    #[test]
+    fn weighted_prefers_near_completion() {
+        let mut p = WeightedByRemaining;
+        let stats = [stat(0, 500, 10_000, 0), stat(1, 3, 11, 5), stat(2, 3, 11, 6)];
+        assert_eq!(p.pick(&stats), RunId(1), "fewest remaining, ties by id");
+    }
+}

@@ -11,6 +11,13 @@
 //! ([`GraphRun::recover`], orchestrated in the reactor) instead of failing
 //! every run that touched the dead worker; see `docs/recovery.md`.
 //!
+//! Fairness & admission: worker-bound messages park on per-run outboxes
+//! and [`Reactor::pump`] emits them in bounded rounds under a pluggable
+//! [`FairnessPolicy`] (round-robin default), so one huge submission cannot
+//! starve a small one; per-client live-run caps park excess submissions in
+//! an admission queue (`run-queued`) until capacity frees. See
+//! `docs/architecture.md` §"Fairness & admission".
+//!
 //! Overhead emulation: constructed with the `python` profile and
 //! `emulate = true`, the reactor busy-waits the calibrated CPython costs on
 //! its own hot path — turning this binary into the paper's Dask-server
@@ -23,12 +30,17 @@
 //! drain outbound batches; only the reactor thread touches `on_message` /
 //! `on_disconnect` (see `net.rs` for the transport discipline).
 
+pub mod fairness;
 mod net;
 mod pool;
 mod reactor;
 mod state;
 
+pub use fairness::{FairnessPolicy, RunQueueStat, DEFAULT_DISPATCH_QUOTA};
 pub use net::{serve, ServerConfig, ServerHandle};
 pub use pool::{SchedulerFactory, SchedulerPool};
-pub use reactor::{Dest, Origin, Reactor, ReactorReport};
+pub use reactor::{
+    Dest, Origin, Reactor, ReactorReport, DEFAULT_MAX_LIVE_RUNS_PER_CLIENT,
+    DEFAULT_MAX_QUEUED_RUNS_PER_CLIENT, DEFAULT_REPORT_RETENTION,
+};
 pub use state::{GraphRun, RecoveryPlan, RunIdAlloc, TaskState, DEFAULT_MAX_RECOVERIES};

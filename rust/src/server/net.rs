@@ -48,6 +48,18 @@ pub struct ServerConfig {
     pub profile: RuntimeProfile,
     /// Busy-wait the profile costs (Dask-emulation baseline).
     pub emulate: bool,
+    /// Dispatch fairness policy over concurrent runs: `rr` (default) |
+    /// `arrival` | `weighted`. See [`super::fairness`].
+    pub fairness: String,
+    /// Cap on concurrently executing runs per client; excess submissions
+    /// park in the admission queue (`run-queued`).
+    pub max_live_runs_per_client: usize,
+    /// Cap on *parked* submissions per client; past it a submission fails
+    /// instead of parking (bounds a runaway submitter's server memory).
+    pub max_queued_runs_per_client: usize,
+    /// Completed-run reports retained in memory (older ones are dropped;
+    /// `reports_since` watermarks stay consistent).
+    pub report_retention: usize,
 }
 
 impl Default for ServerConfig {
@@ -58,6 +70,10 @@ impl Default for ServerConfig {
             seed: 2020,
             profile: RuntimeProfile::rust(),
             emulate: false,
+            fairness: "rr".into(),
+            max_live_runs_per_client: super::reactor::DEFAULT_MAX_LIVE_RUNS_PER_CLIENT,
+            max_queued_runs_per_client: super::reactor::DEFAULT_MAX_QUEUED_RUNS_PER_CLIENT,
+            report_retention: super::reactor::DEFAULT_REPORT_RETENTION,
         }
     }
 }
@@ -95,10 +111,38 @@ fn pool_put(pool: &BufPool, mut buf: Vec<u8>) {
     }
 }
 
+/// Published completed-run reports, bounded by the configured retention.
+/// `dropped + reports.len()` is the monotonic completion count, so
+/// watermark-based polling stays consistent across evictions — a poller
+/// that lags by more than the retention window misses the evicted reports
+/// (by design: that is the bound on a long-lived server's memory).
+///
+/// NOTE: the reactor keeps its own window with the same `dropped`-counter
+/// scheme (`Reactor::maybe_complete`'s retention trim); the publishing
+/// code in `reactor_loop` reconciles the two by completion *count* — keep
+/// the invariant `dropped + len == completions` on BOTH sides when
+/// touching either.
+struct ReportStore {
+    dropped: usize,
+    reports: Vec<ReactorReport>,
+    retention: usize,
+}
+
+impl ReportStore {
+    fn push_all(&mut self, fresh: &[ReactorReport]) {
+        self.reports.extend_from_slice(fresh);
+        if self.reports.len() > self.retention {
+            let d = self.reports.len() - self.retention;
+            self.reports.drain(..d);
+            self.dropped += d;
+        }
+    }
+}
+
 /// Running server: address, per-graph reports, shutdown control.
 pub struct ServerHandle {
     pub addr: SocketAddr,
-    reports: Arc<Mutex<Vec<ReactorReport>>>,
+    reports: Arc<Mutex<ReportStore>>,
     stop: Arc<AtomicBool>,
     event_tx: Sender<NetEvent>,
     writers: Arc<Mutex<HashMap<u64, Sender<Vec<u8>>>>>,
@@ -108,26 +152,41 @@ pub struct ServerHandle {
 }
 
 impl ServerHandle {
-    /// Reports of all graphs completed so far.
+    /// Reports of all graphs completed so far (the retained window).
     ///
     /// Prefer [`ServerHandle::reports_since`] in polling loops — this
-    /// clones the full accumulated history every call.
+    /// clones the full retained history every call.
     pub fn reports(&self) -> Vec<ReactorReport> {
-        self.reports_since(0)
+        self.reports_since(0).0
     }
 
-    /// Reports at index ≥ `watermark` (the number of reports the caller has
-    /// already seen). Pollers advance their watermark by the returned
-    /// count, so each report is cloned exactly once instead of the whole
-    /// history on every call.
-    pub fn reports_since(&self, watermark: usize) -> Vec<ReactorReport> {
-        let all = self.reports.lock().unwrap();
-        all.get(watermark..).map(<[ReactorReport]>::to_vec).unwrap_or_default()
+    /// Reports with absolute completion index ≥ `watermark`, plus the
+    /// watermark to pass to the *next* call. Pollers must advance using
+    /// the returned watermark — not by counting returned reports — so
+    /// exactly-once delivery holds even when the retention window has
+    /// evicted part of the poller's gap (the evicted reports are
+    /// permanently missed; counting only the returned ones would make a
+    /// lagging poller re-receive the window's tail forever).
+    ///
+    /// History is bounded: the server retains only the newest
+    /// `report_retention` reports (`ServerConfig`); `report_count` keeps
+    /// counting evicted reports, so watermarks never go backwards.
+    pub fn reports_since(&self, watermark: usize) -> (Vec<ReactorReport>, usize) {
+        let store = self.reports.lock().unwrap();
+        // Absolute index → window index; a watermark older than the
+        // window clamps to its start (that prefix is gone).
+        let start = watermark.max(store.dropped) - store.dropped;
+        let fresh =
+            store.reports.get(start..).map(<[ReactorReport]>::to_vec).unwrap_or_default();
+        let next = (store.dropped + store.reports.len()).max(watermark);
+        (fresh, next)
     }
 
-    /// Total completed-run reports so far (a cheap watermark probe).
+    /// Total completed-run reports so far (a cheap watermark probe;
+    /// monotonic, includes reports evicted from the retained window).
     pub fn report_count(&self) -> usize {
-        self.reports.lock().unwrap().len()
+        let store = self.reports.lock().unwrap();
+        store.dropped + store.reports.len()
     }
 
     /// Stop the server and join every thread it spawned — the accept loop,
@@ -167,13 +226,34 @@ impl ServerHandle {
 pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
     let pool = SchedulerPool::new(&config.scheduler, config.seed)
         .ok_or_else(|| anyhow!("unknown scheduler {:?}", config.scheduler))?;
-    let reactor = Reactor::new(pool, config.profile.clone(), config.emulate);
+    let policy = super::fairness::by_name(&config.fairness)
+        .ok_or_else(|| anyhow!("unknown fairness policy {:?}", config.fairness))?;
+    // Validate here with clean errors — the reactor builders assert, which
+    // is right for programmatic misuse but not for a CLI flag.
+    if config.max_live_runs_per_client == 0 {
+        return Err(anyhow!("max_live_runs_per_client must be at least 1"));
+    }
+    if config.max_queued_runs_per_client == 0 {
+        return Err(anyhow!("max_queued_runs_per_client must be at least 1"));
+    }
+    if config.report_retention == 0 {
+        return Err(anyhow!("report_retention must be at least 1"));
+    }
+    let reactor = Reactor::new(pool, config.profile.clone(), config.emulate)
+        .with_fairness(policy)
+        .with_admission_cap(config.max_live_runs_per_client)
+        .with_admission_queue_cap(config.max_queued_runs_per_client)
+        .with_report_retention(config.report_retention);
 
     let listener = TcpListener::bind(&config.addr)
         .with_context(|| format!("bind {}", config.addr))?;
     let addr = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
-    let reports = Arc::new(Mutex::new(Vec::new()));
+    let reports = Arc::new(Mutex::new(ReportStore {
+        dropped: 0,
+        reports: Vec::new(),
+        retention: config.report_retention,
+    }));
     let (event_tx, event_rx) = channel::<NetEvent>();
 
     // Writer registry: conn id -> outbound batch queue (each item is one or
@@ -287,7 +367,7 @@ fn reactor_loop(
     writers: Arc<Mutex<HashMap<u64, Sender<Vec<u8>>>>>,
     conns: Arc<Mutex<HashMap<u64, TcpStream>>>,
     buf_pool: BufPool,
-    reports: Arc<Mutex<Vec<ReactorReport>>>,
+    reports: Arc<Mutex<ReportStore>>,
 ) {
     // conn <-> identity maps, maintained from registration replies.
     let mut origin_of: HashMap<u64, Origin> = HashMap::new();
@@ -298,10 +378,33 @@ fn reactor_loop(
     let mut batches: HashMap<u64, Vec<u8>> = HashMap::new();
     let mut reported = 0usize;
 
-    for event in event_rx {
+    // Whether the previous iteration's pump round emitted anything —
+    // cheaper than probing `pending_messages()` (an O(live runs) sum)
+    // before every event; an extra empty poll after the backlog drains is
+    // the only cost.
+    let mut pumping = false;
+    loop {
+        // Run-fair intake: while worker-bound messages are parked, poll for
+        // inbound events without blocking — a pump round runs after every
+        // iteration, so a huge backlog is emitted in bounded slices
+        // interleaved with fresh events instead of all at once. Block only
+        // when the reactor is fully drained.
+        let event = if pumping {
+            match event_rx.try_recv() {
+                Ok(ev) => Some(ev),
+                Err(std::sync::mpsc::TryRecvError::Empty) => None,
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => break,
+            }
+        } else {
+            match event_rx.recv() {
+                Ok(ev) => Some(ev),
+                Err(_) => break,
+            }
+        };
         match event {
-            NetEvent::Stop => break,
-            NetEvent::Disconnected { conn } => {
+            None => {}
+            Some(NetEvent::Stop) => break,
+            Some(NetEvent::Disconnected { conn }) => {
                 writers.lock().unwrap().remove(&conn);
                 conns.lock().unwrap().remove(&conn);
                 if let Some(origin) = origin_of.remove(&conn) {
@@ -314,7 +417,7 @@ fn reactor_loop(
                     reactor.on_disconnect(origin, &mut out);
                 }
             }
-            NetEvent::Inbound { conn, msg } => {
+            Some(NetEvent::Inbound { conn, msg }) => {
                 let origin = origin_of
                     .get(&conn)
                     .copied()
@@ -345,6 +448,9 @@ fn reactor_loop(
                 }
             }
         }
+        // One fairness round per iteration: up to a quota of parked
+        // messages from the policy-chosen run join this iteration's batch.
+        pumping = reactor.pump(&mut out).is_some();
         // Flush outbound: coalesce per destination connection, then take
         // the writer-registry lock once for the whole event.
         for (dest, msg) in out.drain(..) {
@@ -374,12 +480,23 @@ fn reactor_loop(
                 }
             }
         }
-        // Publish new reports (only the fresh tail is ever copied).
-        let all = reactor.reports();
-        if all.len() > reported {
+        // Publish new reports (only the fresh tail is ever copied; both
+        // sides count against the monotonic completion total, so the
+        // bounded windows stay consistent).
+        let total = reactor.report_count();
+        if total > reported {
+            let all = reactor.reports();
+            let fresh = total - reported;
             let mut shared = reports.lock().unwrap();
-            shared.extend_from_slice(&all[reported..]);
-            reported = all.len();
+            if fresh > all.len() {
+                // More completions this iteration than the reactor window
+                // holds (tiny retention + a burst): the overflow is gone
+                // on both sides.
+                shared.dropped += fresh - all.len();
+            }
+            let start = all.len().saturating_sub(fresh);
+            shared.push_all(&all[start..]);
+            reported = total;
         }
     }
 }

@@ -61,6 +61,15 @@ impl SchedulerPool {
         }
     }
 
+    /// Whether `name` names a known scheduler algorithm. Used by the
+    /// reactor's admission control to reject a bad per-run override
+    /// *before* the submission is parked in the admission queue — so a
+    /// deferred [`SchedulerPool::create_with`] at activation time can
+    /// never fail for a named override.
+    pub fn is_known(name: &str) -> bool {
+        scheduler::by_name(name, 0).is_some()
+    }
+
     /// Instantiate the default scheduler for a new run: fresh algorithm
     /// state, current cluster membership, run-decorrelated seed.
     pub fn create(&mut self, run: RunId, graph: &crate::taskgraph::TaskGraph) {

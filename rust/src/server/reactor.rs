@@ -22,15 +22,27 @@
 //! re-sent once their inputs exist again — all bounded by a per-run
 //! recovery budget, past which the old `graph-failed` behavior returns.
 //! See `docs/recovery.md` for the invariants.
+//!
+//! Run-fair dispatch: worker-bound messages are not emitted inside
+//! `on_message` in arrival order (which let one huge submission starve a
+//! small one). State transitions still happen synchronously, but the
+//! translated messages are *parked* on the owning run's outbox and emitted
+//! by [`Reactor::pump`] in bounded rounds, one run per round, chosen by a
+//! pluggable [`FairnessPolicy`] (round-robin by default). Admission
+//! control caps *live* runs per client: excess `submit-graph`s are acked
+//! with `run-queued` and parked in a FIFO admission queue, activating as
+//! that client's runs retire. See `docs/architecture.md` §"Fairness &
+//! admission".
 
+use super::fairness::{FairnessPolicy, RoundRobin, RunQueueStat, DEFAULT_DISPATCH_QUOTA};
 use super::pool::SchedulerPool;
 use super::state::{GraphRun, RunIdAlloc, TaskState};
 use crate::overhead::RuntimeProfile;
 use crate::protocol::{Msg, RunId, TaskInputLoc, FETCH_FAILED_PREFIX};
 use crate::scheduler::{Action, Scheduler, WorkerId, WorkerInfo};
-use crate::taskgraph::TaskId;
+use crate::taskgraph::{TaskGraph, TaskId};
 use crate::util::timing::{busy_wait_us, Stopwatch};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 /// Message destination, resolved to a socket by the transport layer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -83,6 +95,35 @@ struct WorkerMeta {
     connected: bool,
 }
 
+/// Default cap on concurrently *executing* runs per client; further
+/// submissions park in the admission queue. Generous enough that ordinary
+/// pipelining never queues, small enough that a runaway submitter cannot
+/// multiply scheduler instances without bound.
+pub const DEFAULT_MAX_LIVE_RUNS_PER_CLIENT: usize = 16;
+
+/// Default number of completed-run reports retained in memory; older
+/// reports are dropped (counted, so watermarks stay consistent) so a
+/// long-lived server does not grow its history without bound.
+pub const DEFAULT_REPORT_RETENTION: usize = 4096;
+
+/// Default cap on *parked* submissions per client. Without it the
+/// admission queue would undo the live-run cap's point: a runaway
+/// submitter could buffer unbounded graphs server-side. Past this the
+/// submission fails (`graph-failed`) instead of parking.
+pub const DEFAULT_MAX_QUEUED_RUNS_PER_CLIENT: usize = 64;
+
+/// A submission parked by admission control: acked (`run-queued`) but not
+/// yet executing — no `GraphRun`, no scheduler instance.
+struct ParkedRun {
+    run: RunId,
+    client: u32,
+    graph: TaskGraph,
+    scheduler: Option<String>,
+    /// Reactor-clock µs at the original submission; the run's makespan
+    /// spans the queued phase (the client-observed latency).
+    submitted_at_us: u64,
+}
+
 /// The reactor state machine.
 pub struct Reactor {
     pool: SchedulerPool,
@@ -95,12 +136,34 @@ pub struct Reactor {
     n_clients: u32,
     runs: HashMap<RunId, GraphRun>,
     run_ids: RunIdAlloc,
+    /// Retained window of completed-run reports (see `report_retention`).
     reports: Vec<ReactorReport>,
+    /// Reports evicted from the window; `reports_dropped + reports.len()`
+    /// is the monotonic completion count watermarks are measured against.
+    reports_dropped: usize,
+    report_retention: usize,
     actions_buf: Vec<Action>,
     /// Recovery budget stamped onto each new run (see
     /// [`GraphRun::recover`]); defaults to
     /// [`super::state::DEFAULT_MAX_RECOVERIES`].
     default_max_recoveries: u32,
+    /// Dispatch-order policy over the per-run outboxes.
+    policy: Box<dyn FairnessPolicy>,
+    /// Messages emitted per [`Reactor::pump`] round.
+    quota: usize,
+    /// Monotonic tick for outbox empty→non-empty transitions (the
+    /// arrival-order key the `arrival` policy sorts by).
+    outbox_seq: u64,
+    /// Parked submissions, FIFO; activated as their client's runs retire.
+    admission: VecDeque<ParkedRun>,
+    max_live_per_client: usize,
+    max_queued_per_client: usize,
+    /// Reused per-round buffers: `pump` runs once per inbound event, and
+    /// the per-message event path is kept allocation-free (PR 2's codec
+    /// work made that a measured property; staging buffers must not undo
+    /// it).
+    stats_buf: Vec<RunQueueStat>,
+    emitted_buf: Vec<(WorkerId, Msg)>,
 }
 
 /// Build a compute-task message with `who_has` input locations. Free
@@ -157,9 +220,55 @@ impl Reactor {
             runs: HashMap::new(),
             run_ids: RunIdAlloc::default(),
             reports: Vec::new(),
+            reports_dropped: 0,
+            report_retention: DEFAULT_REPORT_RETENTION,
             actions_buf: Vec::new(),
             default_max_recoveries: super::state::DEFAULT_MAX_RECOVERIES,
+            policy: Box::<RoundRobin>::default(),
+            quota: DEFAULT_DISPATCH_QUOTA,
+            outbox_seq: 0,
+            admission: VecDeque::new(),
+            max_live_per_client: DEFAULT_MAX_LIVE_RUNS_PER_CLIENT,
+            max_queued_per_client: DEFAULT_MAX_QUEUED_RUNS_PER_CLIENT,
+            stats_buf: Vec::new(),
+            emitted_buf: Vec::new(),
         }
+    }
+
+    /// Replace the dispatch fairness policy (default: round-robin).
+    pub fn with_fairness(mut self, policy: Box<dyn FairnessPolicy>) -> Reactor {
+        self.policy = policy;
+        self
+    }
+
+    /// Override the per-[`Reactor::pump`]-round message quota (≥ 1).
+    pub fn with_dispatch_quota(mut self, quota: usize) -> Reactor {
+        assert!(quota >= 1, "dispatch quota must be positive");
+        self.quota = quota;
+        self
+    }
+
+    /// Override the per-client live-run cap (≥ 1 — with 0 nothing could
+    /// ever activate).
+    pub fn with_admission_cap(mut self, cap: usize) -> Reactor {
+        assert!(cap >= 1, "admission cap must be positive");
+        self.max_live_per_client = cap;
+        self
+    }
+
+    /// Override the per-client *parked*-submission cap (≥ 1); past it a
+    /// submission fails instead of parking.
+    pub fn with_admission_queue_cap(mut self, cap: usize) -> Reactor {
+        assert!(cap >= 1, "admission queue cap must be positive");
+        self.max_queued_per_client = cap;
+        self
+    }
+
+    /// Override how many completed-run reports are retained (≥ 1).
+    pub fn with_report_retention(mut self, retention: usize) -> Reactor {
+        assert!(retention >= 1, "report retention must be positive");
+        self.report_retention = retention;
+        self
     }
 
     /// Override the per-run worker-disconnect recovery budget. With 0,
@@ -176,14 +285,38 @@ impl Reactor {
         self.workers.iter().filter(|w| w.connected).count()
     }
 
-    /// Completed-run reports (one per finished graph).
+    /// Retained completed-run reports, oldest first. The window is bounded
+    /// by the report retention (default
+    /// [`DEFAULT_REPORT_RETENTION`]); [`Reactor::report_count`] is the
+    /// monotonic total including evicted reports.
     pub fn reports(&self) -> &[ReactorReport] {
         &self.reports
+    }
+
+    /// Total runs completed so far (monotonic; includes reports already
+    /// evicted from the retained window).
+    pub fn report_count(&self) -> usize {
+        self.reports_dropped + self.reports.len()
+    }
+
+    /// Reports evicted from the retained window so far.
+    pub fn reports_dropped(&self) -> usize {
+        self.reports_dropped
     }
 
     /// Number of graphs currently executing.
     pub fn live_runs(&self) -> usize {
         self.runs.len()
+    }
+
+    /// Number of submissions parked in the admission queue.
+    pub fn queued_runs(&self) -> usize {
+        self.admission.len()
+    }
+
+    /// Total parked worker-bound messages across all runs' outboxes.
+    pub fn pending_messages(&self) -> usize {
+        self.runs.values().map(|r| r.outbox.len()).sum()
     }
 
     /// Bookkeeping state of a live run (tests / introspection).
@@ -205,6 +338,87 @@ impl Reactor {
 
     fn charge_msg(&self, approx_bytes: usize) {
         self.charge(self.profile.msg_cost_us(approx_bytes));
+    }
+
+    /// Park a worker-bound message on its run's outbox. State transitions
+    /// were already applied by the caller; the per-message emission cost is
+    /// charged when [`Reactor::pump`] emits it, so a large run's backlog
+    /// cannot monopolize the reactor.
+    fn park(&mut self, run_id: RunId, worker: WorkerId, msg: Msg) {
+        let run = self.runs.get_mut(&run_id).expect("park for dead run");
+        if run.outbox.is_empty() {
+            run.outbox_since = self.outbox_seq;
+            self.outbox_seq += 1;
+        }
+        run.outbox.push_back((worker, msg));
+    }
+
+    /// One fairness round: the policy picks a run among those with parked
+    /// messages and up to the dispatch quota of its messages are emitted
+    /// (per-run FIFO). Returns the serviced run, or `None` when nothing is
+    /// pending. The transport loop interleaves `pump` with inbound events;
+    /// tests use [`Reactor::drain`].
+    pub fn pump(&mut self, out: &mut Vec<(Dest, Msg)>) -> Option<RunId> {
+        // Reused buffers (taken, not borrowed, so `charge_msg`'s `&self`
+        // below doesn't conflict): a warm pump round allocates nothing.
+        let mut stats = std::mem::take(&mut self.stats_buf);
+        stats.clear();
+        stats.extend(self.runs.iter().filter(|(_, r)| !r.outbox.is_empty()).map(
+            |(&id, r)| RunQueueStat {
+                run: id,
+                pending: r.outbox.len(),
+                remaining: r.remaining as u64,
+                since: r.outbox_since,
+            },
+        ));
+        if stats.is_empty() {
+            self.stats_buf = stats;
+            return None;
+        }
+        let mut pick = self.policy.pick(&stats);
+        if !stats.iter().any(|s| s.run == pick) {
+            // Contract violation by a (user-supplied) policy. Loud in
+            // debug; in release fall back to the oldest pending queue
+            // rather than returning `Some` with zero emissions — that
+            // would hang `drain` and busy-spin the transport loop.
+            debug_assert!(false, "policy picked {pick}, which has no pending messages");
+            pick = stats
+                .iter()
+                .min_by_key(|s| (s.since, s.run))
+                .expect("stats is non-empty")
+                .run;
+        }
+        self.stats_buf = stats;
+        let mut emitted = std::mem::take(&mut self.emitted_buf);
+        {
+            let run = self.runs.get_mut(&pick).expect("picked run is live");
+            for _ in 0..self.quota {
+                match run.outbox.pop_front() {
+                    Some(m) => emitted.push(m),
+                    None => break,
+                }
+            }
+            // The remainder keeps its activation tick: the arrival policy
+            // must drain a queue to exhaustion before moving on, exactly
+            // like the pre-fairness reactor.
+        }
+        for (worker, msg) in emitted.drain(..) {
+            let approx = match &msg {
+                Msg::ComputeTask { .. } => 192,
+                _ => 64,
+            };
+            self.charge_msg(approx);
+            out.push((Dest::Worker(worker), msg));
+        }
+        self.emitted_buf = emitted;
+        Some(pick)
+    }
+
+    /// Emit every parked message (repeated [`Reactor::pump`] rounds, still
+    /// in policy order). Tests and single-shot drivers use this; the
+    /// transport loop pumps incrementally instead.
+    pub fn drain(&mut self, out: &mut Vec<(Dest, Msg)>) {
+        while self.pump(out).is_some() {}
     }
 
     /// Tell every connected worker to drop a retired run's queued tasks and
@@ -232,6 +446,9 @@ impl Reactor {
         if !done {
             return;
         }
+        // Dropping the run drops its outbox too: a message still parked at
+        // completion is a recovery duplicate (its task finished via an
+        // earlier copy) and the release-run broadcast purges its target.
         let mut run = self.runs.remove(&run_id).expect("checked above");
         self.pool.remove(run_id);
         run.msgs_out += 1 + self.n_workers() as u64; // GraphDone + ReleaseRuns below
@@ -251,14 +468,98 @@ impl Reactor {
             msgs_out: run.msgs_out,
             recoveries: run.recoveries,
         });
+        // Retention watermark: bound the in-memory history. Evictions are
+        // counted so `report_count` stays monotonic and pollers' watermarks
+        // keep meaning "reports seen so far". (The TCP layer's published
+        // `ReportStore` mirrors this dropped-counter scheme; `reactor_loop`
+        // reconciles the two by completion count — keep them in step.)
+        if self.reports.len() > self.report_retention {
+            let drop = self.reports.len() - self.report_retention;
+            self.reports.drain(..drop);
+            self.reports_dropped += drop;
+        }
         out.push((Dest::Client(run.client), Msg::GraphDone { run: run_id, makespan_us, n_tasks }));
         self.release_run(run_id, out);
     }
 
-    /// Drain scheduler actions for one run into protocol messages. Iterates
-    /// because a rejected steal feeds back into the scheduler which may
-    /// emit more actions; bounded since every round retires at least one
-    /// action.
+    /// Start executing a (fresh or parked) submission: create the run and
+    /// its scheduler, seed the roots. `sub.submitted_at_us` is the original
+    /// submission time, so a run's makespan spans its queued phase —
+    /// that's the latency its client observed. `prior_msgs_out` counts the
+    /// ack messages already sent for this run.
+    fn activate_run(&mut self, sub: ParkedRun, prior_msgs_out: u64, out: &mut Vec<(Dest, Msg)>) {
+        let ParkedRun { run: run_id, client, graph, scheduler, submitted_at_us } = sub;
+        self.charge(self.profile.task_transition_us * graph.len() as f64 * 0.2);
+        if let Err(reason) = self.pool.create_with(run_id, &graph, scheduler.as_deref()) {
+            // Unreachable for named overrides (validated at submission);
+            // kept as the safety net for factory pools.
+            out.push((Dest::Client(client), Msg::GraphFailed { run: run_id, reason }));
+            return;
+        }
+        let mut run = GraphRun::new(graph, client, submitted_at_us);
+        run.max_recoveries = self.default_max_recoveries;
+        run.msgs_in += 1; // the submission itself
+        run.msgs_out += prior_msgs_out;
+        let roots = run.ready_roots();
+        self.runs.insert(run_id, run);
+        self.pool
+            .get(run_id)
+            .expect("just created")
+            .tasks_ready(&roots, &mut self.actions_buf);
+        self.flush_actions(run_id, out);
+        // Degenerate empty graph: done before any task report.
+        self.maybe_complete(run_id, out);
+    }
+
+    /// Activate parked submissions whose client has fallen below its
+    /// live-run cap, in FIFO order (entries of still-capped clients are
+    /// skipped, not blocking others). Called once per inbound event /
+    /// disconnect, after all other processing — retirement is the only
+    /// thing that frees capacity, and it only happens inside those.
+    fn admit_from_queue(&mut self, out: &mut Vec<(Dest, Msg)>) {
+        // Hot-path guard: this runs after *every* inbound event; with no
+        // parked submissions (the overwhelmingly common case) it must cost
+        // one branch, not a scan over the live runs.
+        if self.admission.is_empty() {
+            return;
+        }
+        // Per-client live counts, built once and maintained across the
+        // activations below — not recomputed per parked entry.
+        let mut live: HashMap<u32, usize> = HashMap::new();
+        for r in self.runs.values() {
+            *live.entry(r.client).or_insert(0) += 1;
+        }
+        loop {
+            let picked = self.admission.iter().position(|p| {
+                live.get(&p.client).copied().unwrap_or(0) < self.max_live_per_client
+            });
+            let Some(i) = picked else { return };
+            let p = self.admission.remove(i).expect("index from position");
+            let client = p.client;
+            out.push((
+                Dest::Client(client),
+                Msg::GraphSubmitted { run: p.run, n_tasks: p.graph.len() as u64 },
+            ));
+            // run-queued + graph-submitted = 2 acks so far. An activated
+            // empty graph completes inside `activate_run`, freeing
+            // capacity again — re-sync this client's count from the truth
+            // (only its own runs can have changed), so a chain of parked
+            // trivial runs drains without recursion.
+            self.activate_run(p, 2, out);
+            live.insert(
+                client,
+                self.runs.values().filter(|r| r.client == client).count(),
+            );
+        }
+    }
+
+    /// Translate one run's scheduler actions into protocol messages:
+    /// state transitions apply here (synchronously, so the scheduler's
+    /// model and `GraphRun` never diverge), but the messages are *parked*
+    /// on the run's outbox for [`Reactor::pump`] to emit in fairness
+    /// order. Iterates because a rejected steal feeds back into the
+    /// scheduler which may emit more actions; bounded since every round
+    /// retires at least one action.
     fn flush_actions(&mut self, run_id: RunId, out: &mut Vec<(Dest, Msg)>) {
         let mut rounds = 0;
         while !self.actions_buf.is_empty() {
@@ -291,6 +592,11 @@ impl Reactor {
                             .map(|w| w.connected)
                             .unwrap_or(false);
                         if !connected {
+                            // Clear leftover feedback actions *before*
+                            // failing: `fail_run` may activate a parked
+                            // submission whose own actions land in the
+                            // same shared buffer.
+                            self.actions_buf.clear();
                             self.fail_run(
                                 run_id,
                                 format!(
@@ -299,7 +605,6 @@ impl Reactor {
                                 ),
                                 out,
                             );
-                            self.actions_buf.clear();
                             return;
                         }
                         let msg = {
@@ -318,8 +623,7 @@ impl Reactor {
                             )
                         };
                         self.charge(self.profile.task_transition_us);
-                        self.charge_msg(192);
-                        out.push((Dest::Worker(a.worker), msg));
+                        self.park(run_id, a.worker, msg);
                     }
                     Action::Steal { task, from, to } => {
                         // Only steal tasks still assigned; scheduler models
@@ -338,8 +642,7 @@ impl Reactor {
                         };
                         if stealable {
                             self.charge(self.profile.task_transition_us);
-                            self.charge_msg(64);
-                            out.push((Dest::Worker(from), Msg::StealRequest { run: run_id, task }));
+                            self.park(run_id, from, Msg::StealRequest { run: run_id, task });
                         } else {
                             // Already finished/stolen — report as failed.
                             let mut buf = Vec::new();
@@ -356,7 +659,20 @@ impl Reactor {
     }
 
     /// Feed one inbound message; outbound messages are appended to `out`.
+    ///
+    /// Client-facing notices (acks, completion, failure) are appended
+    /// directly; worker-bound messages are parked on their run's outbox —
+    /// call [`Reactor::pump`] (transport loop) or [`Reactor::drain`]
+    /// (tests, single-shot tools) to emit them in fairness order.
     pub fn on_message(&mut self, from: Origin, msg: Msg, out: &mut Vec<(Dest, Msg)>) {
+        self.handle_message(from, msg, out);
+        // A message can retire runs (completion, task error, unknown
+        // scheduler); retired runs free admission capacity. Top-level so
+        // activation never re-enters mid-iteration state.
+        self.admit_from_queue(out);
+    }
+
+    fn handle_message(&mut self, from: Origin, msg: Msg, out: &mut Vec<(Dest, Msg)>) {
         self.charge_msg(128);
         match (from, msg) {
             (Origin::Unregistered { .. }, Msg::RegisterClient { .. }) => {
@@ -373,32 +689,79 @@ impl Reactor {
                 out.push((Dest::Worker(id), Msg::Welcome { id: id.0 }));
             }
             (Origin::Client(client), Msg::SubmitGraph { graph, scheduler }) => {
-                self.charge(self.profile.task_transition_us * graph.len() as f64 * 0.2);
                 let run_id = self.run_ids.allocate();
                 let n_tasks = graph.len() as u64;
-                out.push((Dest::Client(client), Msg::GraphSubmitted { run: run_id, n_tasks }));
                 // Per-run scheduler choice: an unknown name fails this run
-                // (ack + failure so the client can match it up); other runs
-                // and the server itself are unaffected.
-                if let Err(reason) =
-                    self.pool.create_with(run_id, &graph, scheduler.as_deref())
-                {
-                    out.push((Dest::Client(client), Msg::GraphFailed { run: run_id, reason }));
+                // now — before it can be parked — so deferred activation
+                // can never fail (ack + failure so the client matches it
+                // up); other runs and the server itself are unaffected.
+                if let Some(name) = scheduler.as_deref() {
+                    if !SchedulerPool::is_known(name) {
+                        out.push((
+                            Dest::Client(client),
+                            Msg::GraphSubmitted { run: run_id, n_tasks },
+                        ));
+                        out.push((
+                            Dest::Client(client),
+                            Msg::GraphFailed {
+                                run: run_id,
+                                reason: format!("unknown scheduler {name:?}"),
+                            },
+                        ));
+                        return;
+                    }
+                }
+                // Admission control: cap live runs per client; excess
+                // submissions park FIFO and activate as runs retire. The
+                // parked ack is `run-queued` so the client can tell the
+                // phases apart; `graph-submitted` follows at activation.
+                let live = self.runs.values().filter(|r| r.client == client).count();
+                if live >= self.max_live_per_client {
+                    // The queue itself is bounded too, or a runaway
+                    // submitter would just move its unbounded state from
+                    // live runs into parked graphs.
+                    let queued =
+                        self.admission.iter().filter(|p| p.client == client).count();
+                    if queued >= self.max_queued_per_client {
+                        out.push((
+                            Dest::Client(client),
+                            Msg::GraphSubmitted { run: run_id, n_tasks },
+                        ));
+                        out.push((
+                            Dest::Client(client),
+                            Msg::GraphFailed {
+                                run: run_id,
+                                reason: format!(
+                                    "admission queue full ({queued} submissions parked)"
+                                ),
+                            },
+                        ));
+                        return;
+                    }
+                    // `position` counts THIS client's queued submissions
+                    // ahead (activation skips capped clients, so the
+                    // global queue length would mostly reflect other
+                    // tenants' backlogs).
+                    out.push((
+                        Dest::Client(client),
+                        Msg::RunQueued { run: run_id, position: queued as u64 },
+                    ));
+                    self.admission.push_back(ParkedRun {
+                        run: run_id,
+                        client,
+                        graph,
+                        scheduler,
+                        submitted_at_us: self.clock.elapsed_us(),
+                    });
                     return;
                 }
-                let mut run = GraphRun::new(graph, client, self.clock.elapsed_us());
-                run.max_recoveries = self.default_max_recoveries;
-                run.msgs_in += 1; // the submission itself
-                run.msgs_out += 1; // the GraphSubmitted above
-                let roots = run.ready_roots();
-                self.runs.insert(run_id, run);
-                self.pool
-                    .get(run_id)
-                    .expect("just created")
-                    .tasks_ready(&roots, &mut self.actions_buf);
-                self.flush_actions(run_id, out);
-                // Degenerate empty graph: done before any task report.
-                self.maybe_complete(run_id, out);
+                out.push((Dest::Client(client), Msg::GraphSubmitted { run: run_id, n_tasks }));
+                let now = self.clock.elapsed_us();
+                self.activate_run(
+                    ParkedRun { run: run_id, client, graph, scheduler, submitted_at_us: now },
+                    1,
+                    out,
+                );
             }
             (Origin::Worker(worker), Msg::TaskFinished(info)) => {
                 self.charge(self.profile.task_transition_us);
@@ -487,8 +850,7 @@ impl Reactor {
                                 .expect("scheduler for live run")
                                 .steal_result(task, from, to, to_alive, &mut self.actions_buf);
                             self.charge(self.profile.task_transition_us);
-                            self.charge_msg(192);
-                            out.push((Dest::Worker(target), msg));
+                            self.park(run_id, target, msg);
                         } else {
                             run.steals_failed += 1;
                             run.states[task.idx()] = TaskState::Assigned(from);
@@ -600,6 +962,13 @@ impl Reactor {
 
     /// A registered peer disconnected.
     pub fn on_disconnect(&mut self, origin: Origin, out: &mut Vec<(Dest, Msg)>) {
+        self.handle_disconnect(origin, out);
+        // A disconnect can retire runs (budget exhaustion, orphaning),
+        // freeing admission capacity.
+        self.admit_from_queue(out);
+    }
+
+    fn handle_disconnect(&mut self, origin: Origin, out: &mut Vec<(Dest, Msg)>) {
         match origin {
             Origin::Worker(w) => {
                 if let Some(meta) = self.workers.get_mut(w.idx()) {
@@ -617,6 +986,13 @@ impl Reactor {
                 // the affected runs' `recover()` passes.
                 for run in self.runs.values_mut() {
                     run.cancelled_steals.retain(|&(_, victim), _| victim != w);
+                    // Parked messages bound for the corpse would be dropped
+                    // by the transport anyway (no connection); purge them so
+                    // pump rounds aren't wasted emitting dead letters.
+                    // Live-bound parked messages stay: recovery's dissolve
+                    // bookkeeping assumes a parked steal-request WILL reach
+                    // its live victim and be answered.
+                    run.outbox.retain(|&(to, _)| to != w);
                 }
                 // Repair exactly the runs that depend on this worker
                 // (assigned tasks, in-flight steals or stored outputs) by
@@ -674,11 +1050,11 @@ impl Reactor {
                             .map(|m| m.connected)
                             .unwrap_or(false);
                         if connected {
-                            self.charge_msg(64);
-                            out.push((
-                                Dest::Worker(worker),
-                                Msg::CancelCompute { run: run_id, task },
-                            ));
+                            // Parked, not pushed: the cancel must stay
+                            // FIFO-ordered with this run's earlier compute
+                            // messages (a cancel overtaking the compute it
+                            // cancels would re-queue the task for good).
+                            self.park(run_id, worker, Msg::CancelCompute { run: run_id, task });
                         }
                     }
                     if !plan.ready.is_empty() {
@@ -694,7 +1070,9 @@ impl Reactor {
                 // Nobody is waiting for these results any more; reclaim the
                 // per-run scheduler state AND the workers' per-run state —
                 // otherwise an abandoned run keeps executing and its
-                // outputs leak on the workers forever.
+                // outputs leak on the workers forever. Parked submissions
+                // die too: they hold no scheduler/run state yet.
+                self.admission.retain(|p| p.client != c);
                 let orphaned: Vec<RunId> = self
                     .runs
                     .iter()
@@ -781,6 +1159,7 @@ mod tests {
         loop {
             guard += 1;
             assert!(guard < 10_000_000, "drive loop stuck");
+            r.drain(&mut out); // emit parked worker-bound messages
             for (dest, msg) in std::mem::take(&mut out) {
                 match dest {
                     Dest::Worker(w) => {
@@ -977,6 +1356,7 @@ mod tests {
         loop {
             guard += 1;
             assert!(guard < 1_000_000, "drive stuck");
+            r.drain(&mut out); // emit parked worker-bound messages
             for (dest, msg) in std::mem::take(&mut out) {
                 match dest {
                     Dest::Worker(w) if dead.contains(&w) => {} // socket closed
@@ -1071,6 +1451,7 @@ mod tests {
             Msg::SubmitGraph { graph: merge(6), scheduler: None },
             &mut out,
         );
+        r.drain(&mut out);
         // Pre-kill phase: complete exactly the compute-tasks sent to w0 so
         // far (replies from w0), stash w1's messages for later, and leave
         // every steal retraction unanswered — those responses are "in
@@ -1094,6 +1475,7 @@ mod tests {
                         }),
                         &mut out,
                     );
+                    r.drain(&mut out);
                     pending.append(&mut out);
                 }
                 (Dest::Worker(w), m) if w == WorkerId(1) => w1_inbox.push(m),
@@ -1221,6 +1603,7 @@ mod tests {
             Msg::SubmitGraph { graph: merge(5), scheduler: None },
             &mut out,
         );
+        r.drain(&mut out);
         let (run, task, worker) = out
             .iter()
             .find_map(|(d, m)| match (d, m) {
@@ -1240,6 +1623,7 @@ mod tests {
             },
             &mut out,
         );
+        r.drain(&mut out);
         assert_eq!(r.live_runs(), 1, "fetch failure is recoverable: {out:?}");
         // The task went out again.
         assert!(
@@ -1391,6 +1775,7 @@ mod tests {
         let mut release_seen: std::collections::HashSet<WorkerId> =
             std::collections::HashSet::new();
         let mut guard = 0;
+        r.drain(&mut out);
         let mut pending: Vec<(Dest, Msg)> = std::mem::take(&mut out);
         while let Some((dest, msg)) = pending.pop() {
             guard += 1;
@@ -1417,6 +1802,7 @@ mod tests {
                 }
                 _ => {}
             }
+            r.drain(&mut out);
             pending.append(&mut out);
         }
         assert_eq!(r.reports().len(), 1);
@@ -1556,6 +1942,7 @@ mod tests {
             Msg::TaskFinished(TaskFinishedInfo { run, task: TaskId(0), nbytes: 1, duration_us: 1 }),
             &mut out,
         );
+        r.drain(&mut out);
         assert!(
             out.iter().any(|(d, m)| *d == Dest::Worker(WorkerId(0))
                 && matches!(m, Msg::StealRequest { task, .. } if *task == TaskId(2))),
@@ -1584,5 +1971,238 @@ mod tests {
         // The run still completes afterwards.
         let report = r.run_state(run).expect("run still live");
         assert_eq!(report.raced_steals.len(), 0, "raced record consumed");
+    }
+
+    // ---- run-fair dispatch + admission control (PR 4 tentpole) ----
+
+    use crate::server::fairness;
+
+    fn submit(r: &mut Reactor, client: u32, graph: TaskGraph, out: &mut Vec<(Dest, Msg)>) -> RunId {
+        let before = out.len();
+        r.on_message(
+            Origin::Client(client),
+            Msg::SubmitGraph { graph, scheduler: None },
+            out,
+        );
+        out[before..]
+            .iter()
+            .find_map(|(_, m)| match m {
+                Msg::GraphSubmitted { run, .. } | Msg::RunQueued { run, .. } => Some(*run),
+                _ => None,
+            })
+            .expect("submission is acked")
+    }
+
+    #[test]
+    fn round_robin_pump_alternates_between_runs() {
+        let mut r = reactor("ws").with_dispatch_quota(2);
+        register(&mut r, 2, 2);
+        let mut out = Vec::new();
+        let a = submit(&mut r, 0, merge(8), &mut out);
+        let b = submit(&mut r, 1, merge(8), &mut out);
+        assert!(r.pending_messages() >= 16, "both runs parked their root assigns");
+        let mut serviced = Vec::new();
+        while let Some(run) = r.pump(&mut out) {
+            serviced.push(run);
+        }
+        assert_eq!(r.pending_messages(), 0);
+        // While both runs are pending, rounds must alternate a,b,a,b…
+        assert_eq!(&serviced[..4], &[a, b, a, b][..]);
+        // Everything eventually went out: 8 compute-tasks per run.
+        for run in [a, b] {
+            let n = out
+                .iter()
+                .filter(|(_, m)| matches!(m, Msg::ComputeTask { run: r2, .. } if *r2 == run))
+                .count();
+            assert_eq!(n, 8, "{run}");
+        }
+    }
+
+    #[test]
+    fn arrival_policy_drains_first_run_to_exhaustion() {
+        let mut r = reactor("ws")
+            .with_dispatch_quota(2)
+            .with_fairness(fairness::by_name("arrival").unwrap());
+        register(&mut r, 2, 2);
+        let mut out = Vec::new();
+        let a = submit(&mut r, 0, merge(8), &mut out);
+        let b = submit(&mut r, 1, merge(8), &mut out);
+        let mut serviced = Vec::new();
+        while let Some(run) = r.pump(&mut out) {
+            serviced.push(run);
+        }
+        // The pre-fairness baseline: run a's backlog drains fully before
+        // run b is serviced at all.
+        let first_b = serviced.iter().position(|&run| run == b).expect("b serviced");
+        assert!(first_b >= 4, "a had ≥8 messages at quota 2: {serviced:?}");
+        assert!(serviced[..first_b].iter().all(|&run| run == a), "{serviced:?}");
+        assert!(serviced[first_b..].iter().all(|&run| run == b), "{serviced:?}");
+    }
+
+    #[test]
+    fn weighted_policy_services_near_completion_run_first() {
+        let mut r = reactor("ws")
+            .with_dispatch_quota(4)
+            .with_fairness(fairness::by_name("weighted").unwrap());
+        register(&mut r, 2, 2);
+        let mut out = Vec::new();
+        let large = submit(&mut r, 0, merge(40), &mut out);
+        let small = submit(&mut r, 1, merge(4), &mut out);
+        let mut serviced = Vec::new();
+        while let Some(run) = r.pump(&mut out) {
+            serviced.push(run);
+        }
+        // Shortest-remaining-first: every round the small run has pending
+        // messages it wins, so its rounds all precede the large run's.
+        assert_eq!(serviced[0], small, "fewest remaining tasks goes first");
+        let first_large =
+            serviced.iter().position(|&run| run == large).expect("large serviced");
+        assert!(serviced[..first_large].iter().all(|&run| run == small), "{serviced:?}");
+        assert!(serviced[first_large..].iter().all(|&run| run == large), "{serviced:?}");
+    }
+
+    #[test]
+    fn admission_cap_parks_and_activates_fifo() {
+        let mut r = reactor("ws").with_admission_cap(1);
+        register(&mut r, 1, 2);
+        let mut out = Vec::new();
+        let r1 = submit(&mut r, 0, merge(4), &mut out);
+        let r2 = submit(&mut r, 0, merge(5), &mut out);
+        let r3 = submit(&mut r, 0, merge(6), &mut out);
+        assert_eq!(r.live_runs(), 1, "only the first run executes");
+        assert_eq!(r.queued_runs(), 2);
+        // Parked acks carry run-queued with the FIFO position at park time.
+        let queued: Vec<(RunId, u64)> = out
+            .iter()
+            .filter_map(|(_, m)| match m {
+                Msg::RunQueued { run, position } => Some((*run, *position)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(queued, vec![(r2, 0), (r3, 1)]);
+        let done = drive_until_done(&mut r, out, &std::collections::HashSet::new());
+        assert_eq!(done.len(), 3, "queued runs activate and complete");
+        assert_eq!(r.queued_runs(), 0);
+        // FIFO activation ⇒ completion (and report) order r1, r2, r3 under
+        // a cap of one.
+        let order: Vec<RunId> = r.reports().iter().map(|rep| rep.run).collect();
+        assert_eq!(order, vec![r1, r2, r3]);
+    }
+
+    #[test]
+    fn admission_cap_is_per_client() {
+        let mut r = reactor("ws").with_admission_cap(1);
+        register(&mut r, 2, 2);
+        let mut out = Vec::new();
+        submit(&mut r, 0, merge(4), &mut out);
+        submit(&mut r, 0, merge(4), &mut out); // parks: client 0 at cap
+        submit(&mut r, 1, merge(4), &mut out); // client 1 has its own cap
+        assert_eq!(r.live_runs(), 2, "second client unaffected by first's cap");
+        assert_eq!(r.queued_runs(), 1);
+    }
+
+    #[test]
+    fn unknown_scheduler_fails_before_parking() {
+        let mut r = reactor("ws").with_admission_cap(1);
+        register(&mut r, 1, 2);
+        let mut out = Vec::new();
+        submit(&mut r, 0, merge(4), &mut out);
+        out.clear();
+        r.on_message(
+            Origin::Client(0),
+            Msg::SubmitGraph { graph: merge(5), scheduler: Some("fifo".into()) },
+            &mut out,
+        );
+        assert!(
+            out.iter().any(|(_, m)| matches!(m, Msg::GraphFailed { reason, .. }
+                if reason.contains("fifo"))),
+            "bad scheduler must fail now, not at activation: {out:?}"
+        );
+        assert_eq!(r.queued_runs(), 0, "nothing parked");
+    }
+
+    #[test]
+    fn admission_queue_overflow_fails_submission() {
+        // The parked queue is bounded per client: past the cap a
+        // submission fails instead of buffering yet another graph.
+        let mut r = reactor("ws").with_admission_cap(1).with_admission_queue_cap(2);
+        register(&mut r, 1, 2);
+        let mut out = Vec::new();
+        submit(&mut r, 0, merge(4), &mut out); // live
+        submit(&mut r, 0, merge(4), &mut out); // parked 1
+        submit(&mut r, 0, merge(4), &mut out); // parked 2
+        out.clear();
+        let overflow = submit(&mut r, 0, merge(4), &mut out);
+        assert!(
+            out.iter().any(|(_, m)| matches!(m, Msg::GraphFailed { run, reason }
+                if *run == overflow && reason.contains("admission queue full"))),
+            "queue overflow must fail the submission: {out:?}"
+        );
+        assert_eq!(r.queued_runs(), 2, "nothing extra parked");
+        // Another client is unaffected by this client's full queue.
+        let mut r2out = Vec::new();
+        r.on_message(
+            Origin::Unregistered { conn: 55 },
+            Msg::RegisterClient { name: "c1".into() },
+            &mut r2out,
+        );
+        let ok = submit(&mut r, 1, merge(4), &mut r2out);
+        assert!(r.run_state(ok).is_some(), "other client's run executes");
+    }
+
+    #[test]
+    fn client_disconnect_drops_parked_submissions() {
+        let mut r = reactor("ws").with_admission_cap(1);
+        register(&mut r, 2, 2);
+        let mut out = Vec::new();
+        submit(&mut r, 0, merge(4), &mut out);
+        submit(&mut r, 0, merge(5), &mut out); // parked
+        submit(&mut r, 1, merge(4), &mut out); // other client, live
+        r.on_disconnect(Origin::Client(0), &mut out);
+        assert_eq!(r.queued_runs(), 0, "parked submission died with its client");
+        assert_eq!(r.live_runs(), 1, "only the other client's run survives");
+    }
+
+    #[test]
+    fn worker_death_with_parked_run_recovers_and_activates() {
+        // Fairness × recovery: a worker dies while a run sits in the
+        // admission queue. The live run recovers; the parked run activates
+        // on the shrunken cluster once the first retires, and completes.
+        let mut r = reactor("ws").with_admission_cap(1);
+        register(&mut r, 1, 2);
+        let mut out = Vec::new();
+        let a = submit(&mut r, 0, merge(6), &mut out);
+        let b = submit(&mut r, 0, merge(4), &mut out);
+        assert_eq!(r.queued_runs(), 1);
+        r.on_disconnect(Origin::Worker(WorkerId(0)), &mut out);
+        assert!(
+            !out.iter().any(|(_, m)| matches!(m, Msg::GraphFailed { .. })),
+            "recovery must absorb the death: {out:?}"
+        );
+        assert_eq!(r.live_runs(), 1, "run a recovers");
+        assert_eq!(r.queued_runs(), 1, "run b still parked");
+        let done = drive_until_done(&mut r, out, &[WorkerId(0)].into());
+        assert_eq!(done.len(), 2, "both runs complete: {done:?}");
+        let rep_a = r.reports().iter().find(|rep| rep.run == a).unwrap();
+        assert!(rep_a.recoveries >= 1, "run a recorded its recovery");
+        let rep_b = r.reports().iter().find(|rep| rep.run == b).unwrap();
+        assert_eq!(rep_b.n_tasks, 5);
+        assert_eq!(
+            rep_b.recoveries, 0,
+            "run b activated after the death; nothing to recover"
+        );
+    }
+
+    #[test]
+    fn report_retention_bounds_history() {
+        let mut r = reactor("ws").with_report_retention(2);
+        register(&mut r, 1, 2);
+        for i in 0..5usize {
+            drive(&mut r, merge(3 + i));
+        }
+        assert_eq!(r.report_count(), 5, "monotonic completion count");
+        assert_eq!(r.reports_dropped(), 3);
+        let window: Vec<u64> = r.reports().iter().map(|rep| rep.n_tasks).collect();
+        assert_eq!(window, vec![7, 8], "window holds the newest reports");
     }
 }

@@ -8,10 +8,10 @@
 //! returns a [`RecoveryPlan`] telling the reactor which schedulers/workers
 //! to notify.
 
-use crate::protocol::RunId;
+use crate::protocol::{Msg, RunId};
 use crate::scheduler::WorkerId;
 use crate::taskgraph::{TaskGraph, TaskId};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 /// How many worker-disconnect recoveries a single run absorbs before the
 /// reactor falls back to failing it (`graph-failed`) — a cascading-failure
@@ -78,6 +78,17 @@ pub struct GraphRun {
     pub recoveries: u32,
     /// Recovery budget; past it a disconnect fails the run as before.
     pub max_recoveries: u32,
+    /// Worker-bound messages translated from scheduler actions (state
+    /// transitions already applied) but not yet emitted — the fairness
+    /// unit. `Reactor::pump` drains outboxes in policy order, preserving
+    /// per-run FIFO (the steal/recovery protocols rely on in-run message
+    /// order, never on cross-run order). Dropped wholesale when the run
+    /// retires: anything still parked then is a recovery duplicate whose
+    /// target the `release-run` broadcast purges anyway.
+    pub outbox: VecDeque<(WorkerId, Msg)>,
+    /// Tick at which `outbox` last became non-empty (stamped by the
+    /// reactor); the arrival-order key across queue activations.
+    pub outbox_since: u64,
     /// Recoverable `fetch-failed` re-runs, counted *per task* — bounds the
     /// bounce loop of a single task with a persistently stale `who_has`
     /// address without letting one wide disconnect (many tasks fetching
@@ -147,6 +158,8 @@ impl GraphRun {
             cancelled_steals: HashMap::new(),
             recoveries: 0,
             max_recoveries: DEFAULT_MAX_RECOVERIES,
+            outbox: VecDeque::new(),
+            outbox_since: 0,
             fetch_retries: HashMap::new(),
             steals_attempted: 0,
             steals_failed: 0,

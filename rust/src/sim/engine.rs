@@ -6,6 +6,13 @@
 //! map keyed by `(run, task)` so recycled dense `TaskId`s never alias
 //! across graphs. [`simulate`] is the single-graph special case.
 //!
+//! Run-fair dispatch: outbound messages park on per-run outboxes and a
+//! `ReactorPump` event charges them to the serialized reactor resource in
+//! bounded rounds under the same [`crate::server::fairness`] policies the
+//! TCP server uses ([`SimConfig::fairness`], round-robin default) — so a
+//! huge submission's backlog interleaves with small runs' messages in
+//! virtual time exactly as it does on the wire.
+//!
 //! Failure injection: [`SimConfig::kill`] deterministically kills one
 //! worker at a virtual-time tick, exercising the same lineage recovery the
 //! real reactor performs (`server/reactor.rs`): lost queue entries and the
@@ -20,10 +27,12 @@
 
 use super::network::{NetworkModel, NicState};
 use crate::overhead::RuntimeProfile;
+use crate::protocol::RunId;
 use crate::scheduler::{self, Action, SchedCost, Scheduler, WorkerId, WorkerInfo};
+use crate::server::fairness::{self, FairnessPolicy, RunQueueStat, DEFAULT_DISPATCH_QUOTA};
 use crate::taskgraph::{TaskGraph, TaskId};
 use std::cmp::Reverse;
-use std::collections::{BTreeSet, BinaryHeap, HashMap, HashSet};
+use std::collections::{BTreeSet, BinaryHeap, HashMap, HashSet, VecDeque};
 
 /// Simulation configuration.
 #[derive(Debug, Clone)]
@@ -42,6 +51,11 @@ pub struct SimConfig {
     pub timeout_us: f64,
     /// Deterministic failure injection: kill one worker at a virtual tick.
     pub kill: Option<WorkerKill>,
+    /// Dispatch fairness policy over concurrent runs (`rr` | `arrival` |
+    /// `weighted`) — the same policies the TCP server's reactor uses
+    /// ([`crate::server::fairness`]), so sim and runtime stay
+    /// behavior-comparable.
+    pub fairness: String,
 }
 
 /// Deterministic worker-death injection (recovery at scale, repeatably).
@@ -65,6 +79,7 @@ impl Default for SimConfig {
             zero_worker: false,
             timeout_us: 300e6,
             kill: None,
+            fairness: "rr".into(),
         }
     }
 }
@@ -167,6 +182,20 @@ enum Event {
     /// Injected failure: the worker dies (queue, running task and stored
     /// outputs evaporate); the server reacts with lineage recovery.
     WorkerDie { worker: WorkerId },
+    /// One fairness round: the policy picks a run with parked outbound
+    /// messages and up to a quota of them are charged to the reactor
+    /// resource and put on the wire — the virtual-time mirror of
+    /// `Reactor::pump`.
+    ReactorPump,
+}
+
+/// An outbound message translated from a scheduler action (state already
+/// applied — e.g. the steal is registered in `steals`) but not yet charged
+/// to the reactor resource; the fairness unit, parked per run.
+#[derive(Debug, Clone, Copy)]
+enum ParkedOut {
+    Assign { worker: WorkerId, task: TaskId, priority: i64, ready: f64 },
+    Steal { victim: WorkerId, task: TaskId, ready: f64 },
 }
 
 #[derive(Debug)]
@@ -234,6 +263,16 @@ struct Engine<'g> {
     recoveries: u64,
     total_cost: SchedCost,
     actions: Vec<Action>,
+    /// Dispatch-order policy over the per-run outboxes (same trait as the
+    /// TCP server).
+    policy: Box<dyn FairnessPolicy>,
+    /// Parked outbound messages per run, FIFO.
+    outboxes: Vec<VecDeque<ParkedOut>>,
+    /// Tick at which each outbox last became non-empty.
+    outbox_since: Vec<u64>,
+    outbox_seq: u64,
+    /// One pump event outstanding at a time.
+    pump_scheduled: bool,
 }
 
 impl<'g> Engine<'g> {
@@ -280,6 +319,9 @@ impl<'g> Engine<'g> {
             })
             .collect();
         let remaining_total = runs.iter().map(|r| r.remaining).sum();
+        let policy = fairness::by_name(&cfg.fairness)
+            .unwrap_or_else(|| panic!("unknown fairness policy {:?}", cfg.fairness));
+        let n_runs = runs.len();
         let mut engine = Engine {
             cfg,
             runs,
@@ -301,6 +343,11 @@ impl<'g> Engine<'g> {
             recoveries: 0,
             total_cost: SchedCost::default(),
             actions: Vec::new(),
+            policy,
+            outboxes: vec![VecDeque::new(); n_runs],
+            outbox_since: vec![0; n_runs],
+            outbox_seq: 0,
+            pump_scheduled: false,
         };
         if let Some(kill) = engine.cfg.kill {
             assert!(
@@ -344,47 +391,125 @@ impl<'g> Engine<'g> {
         }
     }
 
-    /// Emit one run's pending actions; `ready` = when scheduling done.
+    /// Park an outbound message on a run's outbox (fairness unit; the
+    /// reactor-resource charge happens in the pump rounds).
+    fn park(&mut self, run: u32, msg: ParkedOut) {
+        let q = &mut self.outboxes[run as usize];
+        if q.is_empty() {
+            self.outbox_since[run as usize] = self.outbox_seq;
+            self.outbox_seq += 1;
+        }
+        q.push_back(msg);
+    }
+
+    /// Ensure a pump event is on the heap while any outbox is non-empty.
+    fn schedule_pump(&mut self, at: f64) {
+        if self.pump_scheduled || self.outboxes.iter().all(VecDeque::is_empty) {
+            return;
+        }
+        self.pump_scheduled = true;
+        self.push(at.max(self.reactor_free_at).max(self.now), Event::ReactorPump);
+    }
+
+    /// Translate one run's pending actions into parked messages; `ready` =
+    /// when scheduling finished. State (steal registration, counters)
+    /// applies here, mirroring the reactor's enqueue-time transitions; the
+    /// per-message reactor CPU is charged by the pump rounds, in fairness
+    /// order across runs — which is what keeps a 100K-task submission from
+    /// monopolizing the virtual reactor.
     fn dispatch_actions(&mut self, run: u32, ready: f64) {
-        let actions = std::mem::take(&mut self.actions);
-        let mut t = ready;
-        for action in actions {
-            match action {
-                Action::Assign(a) => {
-                    // Encode + send one assignment message.
-                    t = self.reactor_work(t, self.cfg.profile.msg_cost_us(192)
-                        + self.cfg.profile.task_transition_us);
+        let mut ready = ready;
+        loop {
+            let actions = std::mem::take(&mut self.actions);
+            if actions.is_empty() {
+                break;
+            }
+            for action in actions {
+                match action {
+                    Action::Assign(a) => {
+                        self.park(
+                            run,
+                            ParkedOut::Assign {
+                                worker: a.worker,
+                                task: a.task,
+                                priority: a.priority,
+                                ready,
+                            },
+                        );
+                    }
+                    Action::Steal { task, from, to } => {
+                        if self.runs[run as usize].finished[task.idx()]
+                            || self.steals.contains_key(&(run, task))
+                        {
+                            // Stale; report failure so the model re-syncs.
+                            self.runs[run as usize]
+                                .scheduler
+                                .steal_result(task, from, to, false, &mut self.actions);
+                            continue;
+                        }
+                        self.steals.insert((run, task), (from, to));
+                        self.steals_attempted += 1;
+                        self.park(run, ParkedOut::Steal { victim: from, task, ready });
+                    }
+                }
+            }
+            if self.actions.is_empty() {
+                break;
+            }
+            // Steal feedback emitted more actions: charge the scheduler
+            // and translate those too.
+            ready = self.sched_work(run, ready);
+        }
+        self.schedule_pump(ready);
+    }
+
+    /// One fairness round (the virtual `Reactor::pump`): policy-pick a run,
+    /// charge up to a quota of its parked messages to the reactor resource
+    /// serially, put them on the wire, then reschedule while work remains.
+    fn handle_pump(&mut self) {
+        self.pump_scheduled = false;
+        let stats: Vec<RunQueueStat> = self
+            .outboxes
+            .iter()
+            .enumerate()
+            .filter(|(_, q)| !q.is_empty())
+            .map(|(i, q)| RunQueueStat {
+                run: RunId(i as u32),
+                pending: q.len(),
+                remaining: self.runs[i].remaining as u64,
+                since: self.outbox_since[i],
+            })
+            .collect();
+        if stats.is_empty() {
+            return;
+        }
+        let pick = self.policy.pick(&stats).0 as usize;
+        for _ in 0..DEFAULT_DISPATCH_QUOTA {
+            let Some(msg) = self.outboxes[pick].pop_front() else { break };
+            match msg {
+                ParkedOut::Assign { worker, task, priority, ready } => {
+                    let t = self.reactor_work(
+                        ready.max(self.now),
+                        self.cfg.profile.msg_cost_us(192) + self.cfg.profile.task_transition_us,
+                    );
                     self.msgs += 1;
                     self.push(
                         t + self.cfg.network.control_msg_us(),
-                        Event::TaskArrive { run, worker: a.worker, task: a.task, priority: a.priority },
+                        Event::TaskArrive { run: pick as u32, worker, task, priority },
                     );
                 }
-                Action::Steal { task, from, to } => {
-                    if self.runs[run as usize].finished[task.idx()]
-                        || self.steals.contains_key(&(run, task))
-                    {
-                        // Stale; report failure so the model re-syncs.
-                        self.runs[run as usize]
-                            .scheduler
-                            .steal_result(task, from, to, false, &mut self.actions);
-                        continue;
-                    }
-                    self.steals.insert((run, task), (from, to));
-                    self.steals_attempted += 1;
-                    t = self.reactor_work(t, self.cfg.profile.msg_cost_us(64));
+                ParkedOut::Steal { victim, task, ready } => {
+                    let t = self
+                        .reactor_work(ready.max(self.now), self.cfg.profile.msg_cost_us(64));
                     self.msgs += 1;
                     self.push(
                         t + self.cfg.network.control_msg_us(),
-                        Event::StealArrive { run, worker: from, task },
+                        Event::StealArrive { run: pick as u32, worker: victim, task },
                     );
                 }
             }
         }
-        if !self.actions.is_empty() {
-            let done = self.sched_work(run, t);
-            self.dispatch_actions(run, done);
-        }
+        self.schedule_pump(self.now);
     }
 
     /// Start the next pending task on a worker if its core is free.
@@ -693,6 +818,7 @@ impl<'g> Engine<'g> {
                 );
             }
             Event::WorkerDie { worker } => self.handle_worker_death(worker),
+            Event::ReactorPump => self.handle_pump(),
             Event::ServerRecv { msg } => {
                 self.msgs += 1;
                 let arrived = self.now;
@@ -794,18 +920,14 @@ impl<'g> Engine<'g> {
                                 .steal_result(task, from, to, true, &mut self.actions);
                             let done = self.sched_work(run, decode_done);
                             // Reassign to the steal target, keeping the
-                            // scheduler-chosen priority.
-                            let t = self.reactor_work(
-                                done,
-                                self.cfg.profile.msg_cost_us(192)
-                                    + self.cfg.profile.task_transition_us,
+                            // scheduler-chosen priority. Parked like any
+                            // assignment so it stays FIFO with the run's
+                            // other pending messages.
+                            self.park(
+                                run,
+                                ParkedOut::Assign { worker: to, task, priority, ready: done },
                             );
-                            self.msgs += 1;
-                            self.push(
-                                t + self.cfg.network.control_msg_us(),
-                                Event::TaskArrive { run, worker: to, task, priority },
-                            );
-                            self.dispatch_actions(run, t);
+                            self.dispatch_actions(run, done);
                         } else {
                             self.steals_failed += 1;
                             self.runs[r]

@@ -432,6 +432,66 @@ fn kill_after_completion_changes_nothing() {
     assert_eq!(late.recoveries, 0);
 }
 
+// ---- run-fair dispatch (PR 4 tentpole) ----
+
+/// A large background run plus several latency-sensitive small runs — the
+/// `fig_fairness` workload shape.
+fn fairness_workload() -> Vec<crate::taskgraph::TaskGraph> {
+    std::iter::once(merge(3_000)).chain((0..4).map(|_| merge(40))).collect()
+}
+
+#[test]
+fn fairness_policies_all_complete_and_conserve() {
+    let graphs = fairness_workload();
+    for policy in ["arrival", "rr", "weighted"] {
+        let mut c = cfg(8, RuntimeProfile::rust(), "ws");
+        c.fairness = policy.into();
+        let r = simulate_concurrent(&graphs, &c);
+        assert!(!r.timed_out, "{policy}");
+        for run in &r.runs {
+            assert_eq!(run.tasks_executed, run.n_tasks, "{policy}/{}", run.name);
+        }
+        assert_eq!(r.in_flight_steals_at_end, 0, "{policy}: leaked steals");
+    }
+}
+
+#[test]
+fn fair_policies_cut_small_run_latency_under_large_load() {
+    // The fig_fairness acceptance property, asserted in-tree: under a
+    // large background run, round-robin and weighted dispatch must
+    // strictly beat the arrival-order baseline on small-run latency.
+    let graphs = fairness_workload();
+    let small_worst = |policy: &str| {
+        let mut c = cfg(8, RuntimeProfile::rust(), "ws");
+        c.fairness = policy.into();
+        let r = simulate_concurrent(&graphs, &c);
+        assert!(!r.timed_out, "{policy}");
+        r.runs[1..].iter().map(|x| x.makespan_us).fold(0.0, f64::max)
+    };
+    let arrival = small_worst("arrival");
+    let rr = small_worst("rr");
+    let weighted = small_worst("weighted");
+    assert!(
+        rr < arrival,
+        "round-robin must beat arrival order on small-run latency: {rr} vs {arrival}"
+    );
+    assert!(
+        weighted < arrival,
+        "weighted must beat arrival order on small-run latency: {weighted} vs {arrival}"
+    );
+}
+
+#[test]
+fn fairness_is_deterministic() {
+    let graphs = fairness_workload();
+    let mut c = cfg(8, RuntimeProfile::rust(), "ws");
+    c.fairness = "rr".into();
+    let a = simulate_concurrent(&graphs, &c);
+    let b = simulate_concurrent(&graphs, &c);
+    assert_eq!(a.makespan_us, b.makespan_us);
+    assert_eq!(a.msgs, b.msgs);
+}
+
 #[test]
 fn ws_moves_less_data_than_random() {
     // The whole point of locality-aware placement (§IV-C).

@@ -17,6 +17,18 @@ impl Default for PropConfig {
     }
 }
 
+/// Scale a base case count by the `RSDS_PROP_SCALE` environment variable
+/// (an integer multiplier ≥ 1). PR CI runs the base counts; the scheduled
+/// (nightly) workflow sets the multiplier to run the same suites much
+/// harder without a code change. Unset/invalid values mean no scaling.
+pub fn scaled_cases(base: usize) -> usize {
+    std::env::var("RSDS_PROP_SCALE")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .map(|m| base * m.max(1))
+        .unwrap_or(base)
+}
+
 /// Run `prop` over `cfg.cases` independently-seeded RNGs. The property
 /// returns `Err(description)` to fail. Panics with the case seed on failure
 /// (re-run with `PropConfig { cases: 1, seed }` to reproduce).

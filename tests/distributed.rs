@@ -19,6 +19,7 @@ fn server(scheduler: &str) -> rsds::server::ServerHandle {
         seed: 42,
         profile: RuntimeProfile::rust(),
         emulate: false,
+        ..ServerConfig::default()
     })
     .expect("server start")
 }
@@ -191,14 +192,17 @@ fn reports_since_watermark_returns_only_new_reports() {
     let mut watermark = 0;
     for i in 0..3u64 {
         client.run_graph(&graphgen::merge(20 + i as usize)).unwrap();
-        let fresh = srv.reports_since(watermark);
+        let (fresh, next) = srv.reports_since(watermark);
         assert_eq!(fresh.len(), 1, "exactly the new report at step {i}");
         assert_eq!(fresh[0].n_tasks, 21 + i);
-        watermark += fresh.len();
+        assert_eq!(next, watermark + 1);
+        watermark = next;
     }
     assert_eq!(srv.report_count(), 3);
-    assert_eq!(srv.reports_since(watermark).len(), 0);
-    assert_eq!(srv.reports_since(999).len(), 0, "past-the-end watermark is empty");
+    assert_eq!(srv.reports_since(watermark).0.len(), 0);
+    let (past_end, wm) = srv.reports_since(999);
+    assert_eq!(past_end.len(), 0, "past-the-end watermark is empty");
+    assert_eq!(wm, 999, "watermarks never go backwards");
     // Full history still available from zero.
     assert_eq!(srv.reports().len(), 3);
     for w in &ws {
@@ -267,6 +271,7 @@ fn dask_emulation_is_measurably_slower() {
             seed: 1,
             profile: if emulate { RuntimeProfile::python() } else { RuntimeProfile::rust() },
             emulate,
+            ..ServerConfig::default()
         })
         .unwrap();
         let addr = srv.addr.to_string();
@@ -355,6 +360,166 @@ fn worker_killed_mid_run_recovers_and_completes() {
     assert_eq!(reports.len(), 1);
     assert_eq!(reports[0].n_tasks, 61);
     assert!(reports[0].recoveries >= 1, "server recorded the recovery");
+    for w in &ws {
+        w.shutdown();
+    }
+    srv.shutdown();
+}
+
+// ---- run-fair dispatch + admission control (PR 4 tentpole) ----
+
+fn server_with_cap(cap: usize) -> rsds::server::ServerHandle {
+    serve(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        scheduler: "ws".into(),
+        seed: 42,
+        max_live_runs_per_client: cap,
+        ..ServerConfig::default()
+    })
+    .expect("server start")
+}
+
+#[test]
+fn admission_cap_queues_and_completes_over_tcp() {
+    // Cap 1: a pipelining client's second and third submissions park in
+    // the admission queue (acked with run-queued), then activate FIFO as
+    // runs retire; wait() spans the queued phase transparently.
+    let srv = server_with_cap(1);
+    let addr = srv.addr.to_string();
+    let ws = workers(&addr, 2);
+    let mut c = Client::connect(&addr, "queued").unwrap();
+    // ~3 s of work on 2 cores keeps run 1 busy while 2 and 3 are parked.
+    let r1 = c.submit(&graphgen::merge_slow(60, 100_000)).unwrap();
+    let r2 = c.submit(&graphgen::merge(30)).unwrap();
+    let r3 = c.submit(&graphgen::merge(40)).unwrap();
+    assert!(!c.is_queued(r1), "first run executes immediately");
+    assert!(c.is_queued(r2), "second run is parked (cap 1)");
+    assert!(c.is_queued(r3), "third run is parked (cap 1)");
+    assert_eq!(c.in_flight(), 3);
+    let b = c.wait(r2).unwrap();
+    assert!(!c.is_queued(r2), "completed run is not queued");
+    let a = c.wait(r1).unwrap();
+    let d = c.wait(r3).unwrap();
+    assert_eq!((a.n_tasks, b.n_tasks, d.n_tasks), (61, 31, 41));
+    // FIFO activation under cap 1 ⇒ completion order r1, r2, r3.
+    let reports = srv.reports();
+    let order: Vec<_> = reports.iter().map(|rep| rep.run).collect();
+    assert_eq!(order, vec![r1, r2, r3]);
+    // Queue wait is part of the parked runs' makespan (client latency).
+    assert!(
+        reports[1].makespan_us >= reports[0].makespan_us / 2,
+        "parked run's makespan includes its queued phase: {} vs {}",
+        reports[1].makespan_us,
+        reports[0].makespan_us
+    );
+    for w in &ws {
+        w.shutdown();
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn worker_killed_while_runs_parked_recovers_and_activates() {
+    // Fairness × recovery over real TCP: kill a worker while a run sits in
+    // the admission queue. The live run recovers; the parked run activates
+    // on the shrunken cluster and completes.
+    let srv = server_with_cap(1);
+    let addr = srv.addr.to_string();
+    let mut ws = workers(&addr, 3);
+    let victim = ws.remove(0);
+    let mut c = Client::connect(&addr, "park-kill").unwrap();
+    let r1 = c.submit(&graphgen::merge_slow(40, 100_000)).unwrap(); // ~2 s / 3 cores
+    let r2 = c.submit(&graphgen::merge(50)).unwrap();
+    assert!(c.is_queued(r2));
+    let killer = std::thread::spawn(move || {
+        std::thread::sleep(std::time::Duration::from_millis(300));
+        victim.shutdown();
+    });
+    let a = c.wait(r1).expect("live run survives the worker death");
+    let b = c.wait(r2).expect("parked run activates and completes");
+    killer.join().unwrap();
+    assert_eq!(a.n_tasks, 41);
+    assert_eq!(b.n_tasks, 51);
+    let reports = srv.reports();
+    assert_eq!(reports.len(), 2);
+    assert!(
+        reports.iter().any(|rep| rep.recoveries >= 1),
+        "the in-flight run recorded its recovery: {reports:?}"
+    );
+    for w in &ws {
+        w.shutdown();
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn report_retention_bounds_server_history() {
+    // Regression: long-lived servers must not grow report history without
+    // bound. With retention 2, five runs leave a 2-report window while
+    // report_count and reports_since watermarks stay monotonic.
+    let srv = serve(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        scheduler: "ws".into(),
+        seed: 42,
+        report_retention: 2,
+        ..ServerConfig::default()
+    })
+    .expect("server start");
+    let addr = srv.addr.to_string();
+    let ws = workers(&addr, 2);
+    let mut c = Client::connect(&addr, "retention").unwrap();
+    for i in 0..5usize {
+        c.run_graph(&graphgen::merge(10 + i)).unwrap();
+    }
+    assert_eq!(srv.report_count(), 5, "monotonic completion count");
+    let window = srv.reports();
+    assert_eq!(window.len(), 2, "history bounded by retention");
+    assert_eq!(window[0].n_tasks, 14, "window holds the newest reports");
+    assert_eq!(window[1].n_tasks, 15);
+    // Watermark semantics across eviction: a lagging poller gets the
+    // retained suffix and a watermark that absorbs the evicted gap, so
+    // the next poll yields nothing instead of re-delivering the tail.
+    let (lagged, next) = srv.reports_since(0);
+    assert_eq!(lagged.len(), 2, "only the retained window is deliverable");
+    assert_eq!(next, 5, "watermark jumps over the evicted gap");
+    assert_eq!(srv.reports_since(next).0.len(), 0, "no duplicate re-delivery");
+    assert_eq!(srv.reports_since(4).0.len(), 1);
+    assert_eq!(srv.reports_since(5).0.len(), 0);
+    assert_eq!(srv.reports_since(999).0.len(), 0);
+    for w in &ws {
+        w.shutdown();
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn fairness_policy_configurable_over_tcp() {
+    // A server on the weighted policy still serves concurrent clients
+    // correctly (the latency ordering itself is benched by fig_fairness).
+    let srv = serve(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        scheduler: "ws".into(),
+        seed: 42,
+        fairness: "weighted".into(),
+        ..ServerConfig::default()
+    })
+    .expect("server start");
+    let addr = srv.addr.to_string();
+    let ws = workers(&addr, 3);
+    let handles: Vec<_> = (0..3)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr, &format!("fair{i}")).unwrap();
+                c.run_graph(&graphgen::merge(100 + i * 40)).unwrap()
+            })
+        })
+        .collect();
+    for (i, h) in handles.into_iter().enumerate() {
+        let res = h.join().unwrap();
+        assert_eq!(res.n_tasks, 101 + i as u64 * 40);
+    }
+    assert_eq!(srv.report_count(), 3);
     for w in &ws {
         w.shutdown();
     }

@@ -7,10 +7,10 @@ use rsds::graphgen;
 use rsds::overhead::RuntimeProfile;
 use rsds::protocol::{Msg, RunId, TaskFinishedInfo, TaskInputLoc};
 use rsds::scheduler::{self, Action, WorkerId, WorkerInfo};
-use rsds::server::{Dest, Origin, Reactor, SchedulerPool};
+use rsds::server::{fairness, Dest, Origin, Reactor, SchedulerPool};
 use rsds::sim::{simulate, SimConfig};
 use rsds::taskgraph::{GraphBuilder, Payload, TaskGraph, TaskId};
-use rsds::testing::{check, PropConfig};
+use rsds::testing::{check, scaled_cases, PropConfig};
 use rsds::util::Rng;
 use std::collections::{HashMap, HashSet};
 
@@ -172,6 +172,40 @@ fn prop_dask_ws_scheduler_invariants() {
     });
 }
 
+/// Scheduler-model vs reactor-state queue parity for every live run in
+/// `runs`: totals must always match; per-worker queue *sets* must match
+/// whenever the run has no steal in flight. Shared by the interleaving and
+/// fairness suites.
+fn check_queue_parity(reactor: &Reactor, runs: &HashMap<RunId, u64>) -> Result<(), String> {
+    for &run in runs.keys() {
+        let (Some(gr), Some(sched)) = (reactor.run_state(run), reactor.scheduler_view(run))
+        else {
+            continue; // completed (or failed) — retired state is checked at the end
+        };
+        let Some(model_q) = sched.queued_tasks() else { continue };
+        let reactor_q = gr.queued_by_worker();
+        let model_total: usize = model_q.iter().map(|(_, q)| q.len()).sum();
+        let reactor_total: usize = reactor_q.values().map(|q| q.len()).sum();
+        if model_total != reactor_total {
+            return Err(format!(
+                "{run}: scheduler queues {model_total} tasks, reactor sees {reactor_total}"
+            ));
+        }
+        if sched.in_flight_steal_count() == 0 {
+            for (w, q) in &model_q {
+                let empty = Vec::new();
+                let rq = reactor_q.get(w).unwrap_or(&empty);
+                if q != rq {
+                    return Err(format!(
+                        "{run}: at quiescence {w} queue mismatch: scheduler {q:?} vs reactor {rq:?}"
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Drive the multi-run reactor with randomized finish/steal interleavings
 /// from model workers that defer execution arbitrarily; with
 /// `max_kills > 0`, worker disconnects are additionally injected at random
@@ -238,42 +272,16 @@ fn drive_reactor_interleaved(
     let mut alive: Vec<bool> = vec![true; n_workers as usize];
     let mut kills_left = max_kills;
 
-    let check_invariants = |reactor: &Reactor, runs: &HashMap<RunId, u64>| -> Result<(), String> {
-        for &run in runs.keys() {
-            let (Some(gr), Some(sched)) = (reactor.run_state(run), reactor.scheduler_view(run))
-            else {
-                continue; // completed (or failed) — retired state is checked at the end
-            };
-            let Some(model_q) = sched.queued_tasks() else { continue };
-            let reactor_q = gr.queued_by_worker();
-            let model_total: usize = model_q.iter().map(|(_, q)| q.len()).sum();
-            let reactor_total: usize = reactor_q.values().map(|q| q.len()).sum();
-            if model_total != reactor_total {
-                return Err(format!(
-                    "{run}: scheduler queues {model_total} tasks, reactor sees {reactor_total}"
-                ));
-            }
-            if sched.in_flight_steal_count() == 0 {
-                for (w, q) in &model_q {
-                    let empty = Vec::new();
-                    let rq = reactor_q.get(w).unwrap_or(&empty);
-                    if q != rq {
-                        return Err(format!(
-                            "{run}: at quiescence {w} queue mismatch: scheduler {q:?} vs reactor {rq:?}"
-                        ));
-                    }
-                }
-            }
-        }
-        Ok(())
-    };
-
     let mut guard = 0u32;
     loop {
         guard += 1;
         if guard > 200_000 {
             return Err("interleaving failed to converge".into());
         }
+        // Emit parked worker-bound messages (run-fair dispatch parks them;
+        // this harness drains eagerly — bounded pump rounds get their own
+        // dedicated property below).
+        reactor.drain(&mut out);
         for (dest, msg) in std::mem::take(&mut out) {
             match (dest, msg) {
                 (Dest::Worker(w), msg) => {
@@ -306,7 +314,7 @@ fn drive_reactor_interleaved(
             inboxes[w].clear();
             local_queue[w].clear();
             reactor.on_disconnect(Origin::Worker(WorkerId(w as u32)), &mut out);
-            check_invariants(&reactor, &expected)?;
+            check_queue_parity(&reactor, &expected)?;
             continue;
         }
         let deliverable: Vec<usize> = (0..inboxes.len())
@@ -345,7 +353,7 @@ fn drive_reactor_interleaved(
                         Msg::StealResponse { run, task, ok },
                         &mut out,
                     );
-                    check_invariants(&reactor, &expected)?;
+                    check_queue_parity(&reactor, &expected)?;
                 }
                 Msg::CancelCompute { run, task } => {
                     // Recovery pulled the task back; a copy may or may not
@@ -385,7 +393,7 @@ fn drive_reactor_interleaved(
                 }),
                 &mut out,
             );
-            check_invariants(&reactor, &expected)?;
+            check_queue_parity(&reactor, &expected)?;
         }
     }
 
@@ -469,6 +477,329 @@ fn prop_reactor_random_survives_interleaved_disconnects() {
     });
 }
 
+// ---- run-fair dispatch + admission control (PR 4 tentpole) ----
+
+/// Drive a round-robin reactor over one large run plus K small runs with
+/// random interleavings of pump rounds and worker events, asserting:
+/// (a) bounded progress — every run with parked messages is serviced
+/// within one full rotation (`live runs` pump rounds); (b) scheduler-model
+/// vs reactor queue parity after every reactor interaction; (c) every run
+/// completes.
+fn drive_fairness_bounded_progress(rng: &mut Rng) -> Result<(), String> {
+    let n_small = rng.range_usize(1, 4);
+    let n_graphs = n_small + 1;
+    let quota = rng.range_usize(1, 8);
+    let n_workers = rng.range_usize(1, 5) as u32;
+    let pool = SchedulerPool::new("ws", rng.next_u64()).expect("known scheduler");
+    let mut reactor = Reactor::new(pool, RuntimeProfile::rust(), false)
+        .with_fairness(fairness::by_name("rr").expect("rr is a policy"))
+        .with_dispatch_quota(quota);
+    let mut out: Vec<(Dest, Msg)> = Vec::new();
+    for c in 0..n_graphs as u32 {
+        reactor.on_message(
+            Origin::Unregistered { conn: c as u64 },
+            Msg::RegisterClient { name: format!("c{c}") },
+            &mut out,
+        );
+    }
+    for i in 0..n_workers {
+        reactor.on_message(
+            Origin::Unregistered { conn: 100 + i as u64 },
+            Msg::RegisterWorker {
+                name: format!("w{i}"),
+                ncores: 1,
+                node: 0,
+                data_addr: String::new(),
+            },
+            &mut out,
+        );
+    }
+    out.clear();
+    let mut expected: HashMap<RunId, u64> = HashMap::new();
+    // One large run first (the would-be starver), then the small ones.
+    reactor.on_message(
+        Origin::Client(0),
+        Msg::SubmitGraph {
+            graph: graphgen::merge(rng.range_usize(60, 200)),
+            scheduler: None,
+        },
+        &mut out,
+    );
+    for c in 1..n_graphs as u32 {
+        reactor.on_message(
+            Origin::Client(c),
+            Msg::SubmitGraph {
+                graph: graphgen::merge(rng.range_usize(2, 9)),
+                scheduler: None,
+            },
+            &mut out,
+        );
+    }
+    let mut inboxes: HashMap<WorkerId, Vec<Msg>> = HashMap::new();
+    let mut done: HashMap<RunId, u64> = HashMap::new();
+    // Pump rounds each continuously-pending run has waited unserviced.
+    let mut waited: HashMap<RunId, usize> = HashMap::new();
+    let mut guard = 0u32;
+    loop {
+        guard += 1;
+        if guard > 400_000 {
+            return Err("fairness drive failed to converge".into());
+        }
+        for (dest, msg) in std::mem::take(&mut out) {
+            match (dest, msg) {
+                (Dest::Worker(w), msg) => inboxes.entry(w).or_default().push(msg),
+                (_, Msg::GraphSubmitted { run, n_tasks }) => {
+                    expected.insert(run, n_tasks);
+                }
+                (Dest::Client(_), Msg::GraphDone { run, n_tasks, .. }) => {
+                    done.insert(run, n_tasks);
+                }
+                (Dest::Client(_), Msg::GraphFailed { reason, .. }) => {
+                    return Err(format!("graph failed: {reason}"));
+                }
+                (d, m) => return Err(format!("unexpected {:?} to {d:?}", m.op())),
+            }
+        }
+        let pending: Vec<RunId> = expected
+            .keys()
+            .filter(|&&run| {
+                reactor.run_state(run).map(|g| !g.outbox.is_empty()).unwrap_or(false)
+            })
+            .copied()
+            .collect();
+        let deliverable: Vec<WorkerId> =
+            inboxes.iter().filter(|(_, q)| !q.is_empty()).map(|(&w, _)| w).collect();
+        if pending.is_empty() && deliverable.is_empty() {
+            break;
+        }
+        let pump = !pending.is_empty() && (deliverable.is_empty() || rng.chance(0.5));
+        if pump {
+            let Some(serviced) = reactor.pump(&mut out) else {
+                return Err("pump emitted nothing despite pending outboxes".into());
+            };
+            // Bounded progress: round-robin services every continuously-
+            // pending run within one full rotation over the live runs.
+            for &run in &pending {
+                if run == serviced {
+                    waited.insert(run, 0);
+                } else {
+                    let w = waited.entry(run).or_insert(0);
+                    *w += 1;
+                    if *w > n_graphs {
+                        return Err(format!(
+                            "{run} starved: {w} pump rounds without service \
+                             ({n_graphs} live runs, quota {quota})"
+                        ));
+                    }
+                }
+            }
+            // A run whose outbox drained leaves the rotation; it restarts
+            // from zero if it re-fills later.
+            waited.retain(|run, _| pending.contains(run));
+        } else {
+            let w = *rng.choose(&deliverable);
+            let msg = inboxes.get_mut(&w).unwrap().remove(0);
+            match msg {
+                Msg::Welcome { .. } | Msg::ReleaseRun { .. } | Msg::CancelCompute { .. } => {}
+                Msg::ComputeTask { run, task, output_size, .. } => {
+                    reactor.on_message(
+                        Origin::Worker(w),
+                        Msg::TaskFinished(TaskFinishedInfo {
+                            run,
+                            task,
+                            nbytes: output_size,
+                            duration_us: 1,
+                        }),
+                        &mut out,
+                    );
+                    check_queue_parity(&reactor, &expected)?;
+                }
+                Msg::StealRequest { run, task } => {
+                    reactor.on_message(
+                        Origin::Worker(w),
+                        Msg::StealResponse { run, task, ok: true },
+                        &mut out,
+                    );
+                    check_queue_parity(&reactor, &expected)?;
+                }
+                other => return Err(format!("worker got {:?}", other.op())),
+            }
+        }
+    }
+    if done.len() != n_graphs {
+        return Err(format!("{} of {n_graphs} runs completed: {done:?}", done.len()));
+    }
+    if reactor.pending_messages() != 0 {
+        return Err(format!("{} messages still parked at quiescence", reactor.pending_messages()));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_round_robin_pump_never_starves_a_run() {
+    check(
+        "rr bounded progress",
+        PropConfig { cases: scaled_cases(25), seed: 1414 },
+        drive_fairness_bounded_progress,
+    );
+}
+
+/// One client pipelines more runs than its admission cap allows; random
+/// delivery interleavings must activate every parked run and complete all
+/// of them, with queue parity holding throughout.
+fn drive_admission_interleaved(rng: &mut Rng) -> Result<(), String> {
+    let n_graphs = rng.range_usize(2, 7);
+    let cap = rng.range_usize(1, 3);
+    let n_workers = rng.range_usize(1, 4) as u32;
+    let pool = SchedulerPool::new("ws", rng.next_u64()).expect("known scheduler");
+    let mut reactor =
+        Reactor::new(pool, RuntimeProfile::rust(), false).with_admission_cap(cap);
+    let mut out: Vec<(Dest, Msg)> = Vec::new();
+    reactor.on_message(
+        Origin::Unregistered { conn: 0 },
+        Msg::RegisterClient { name: "c0".into() },
+        &mut out,
+    );
+    for i in 0..n_workers {
+        reactor.on_message(
+            Origin::Unregistered { conn: 100 + i as u64 },
+            Msg::RegisterWorker {
+                name: format!("w{i}"),
+                ncores: 1,
+                node: 0,
+                data_addr: String::new(),
+            },
+            &mut out,
+        );
+    }
+    out.clear();
+    let mut expected: HashMap<RunId, u64> = HashMap::new();
+    let mut acked = 0usize;
+    for _ in 0..n_graphs {
+        reactor.on_message(
+            Origin::Client(0),
+            Msg::SubmitGraph {
+                graph: graphgen::merge(rng.range_usize(2, 20)),
+                scheduler: None,
+            },
+            &mut out,
+        );
+    }
+    for (_, msg) in &out {
+        match msg {
+            Msg::GraphSubmitted { run, n_tasks } => {
+                expected.insert(*run, *n_tasks);
+                acked += 1;
+            }
+            Msg::RunQueued { .. } => acked += 1,
+            _ => {}
+        }
+    }
+    if acked != n_graphs {
+        return Err(format!("{acked} of {n_graphs} submissions acked"));
+    }
+    if reactor.live_runs() != cap.min(n_graphs) {
+        return Err(format!(
+            "cap {cap}: {} live runs after {n_graphs} submissions",
+            reactor.live_runs()
+        ));
+    }
+    if reactor.queued_runs() != n_graphs.saturating_sub(cap) {
+        return Err(format!("{} parked, expected {}", reactor.queued_runs(), n_graphs - cap));
+    }
+    let mut inboxes: HashMap<WorkerId, Vec<Msg>> = HashMap::new();
+    let mut done: HashMap<RunId, u64> = HashMap::new();
+    let mut guard = 0u32;
+    loop {
+        guard += 1;
+        if guard > 400_000 {
+            return Err("admission drive failed to converge".into());
+        }
+        reactor.drain(&mut out);
+        for (dest, msg) in std::mem::take(&mut out) {
+            match (dest, msg) {
+                (Dest::Worker(w), msg) => inboxes.entry(w).or_default().push(msg),
+                (_, Msg::GraphSubmitted { run, n_tasks }) => {
+                    // Activation of a parked run.
+                    expected.insert(run, n_tasks);
+                }
+                (Dest::Client(_), Msg::RunQueued { .. }) => {}
+                (Dest::Client(_), Msg::GraphDone { run, n_tasks, .. }) => {
+                    done.insert(run, n_tasks);
+                }
+                (Dest::Client(_), Msg::GraphFailed { reason, .. }) => {
+                    return Err(format!("graph failed: {reason}"));
+                }
+                (d, m) => return Err(format!("unexpected {:?} to {d:?}", m.op())),
+            }
+        }
+        if reactor.live_runs() > cap {
+            return Err(format!(
+                "admission cap {cap} violated: {} live runs",
+                reactor.live_runs()
+            ));
+        }
+        let deliverable: Vec<WorkerId> =
+            inboxes.iter().filter(|(_, q)| !q.is_empty()).map(|(&w, _)| w).collect();
+        if deliverable.is_empty() {
+            if reactor.pending_messages() > 0 {
+                continue; // drain next round
+            }
+            break;
+        }
+        let w = *rng.choose(&deliverable);
+        let msg = inboxes.get_mut(&w).unwrap().remove(0);
+        match msg {
+            Msg::Welcome { .. } | Msg::ReleaseRun { .. } | Msg::CancelCompute { .. } => {}
+            Msg::ComputeTask { run, task, output_size, .. } => {
+                reactor.on_message(
+                    Origin::Worker(w),
+                    Msg::TaskFinished(TaskFinishedInfo {
+                        run,
+                        task,
+                        nbytes: output_size,
+                        duration_us: 1,
+                    }),
+                    &mut out,
+                );
+                check_queue_parity(&reactor, &expected)?;
+            }
+            Msg::StealRequest { run, task } => {
+                reactor.on_message(
+                    Origin::Worker(w),
+                    Msg::StealResponse { run, task, ok: rng.chance(0.7) },
+                    &mut out,
+                );
+                check_queue_parity(&reactor, &expected)?;
+            }
+            other => return Err(format!("worker got {:?}", other.op())),
+        }
+    }
+    if done.len() != n_graphs {
+        return Err(format!(
+            "{} of {n_graphs} runs completed (cap {cap}): {done:?}",
+            done.len()
+        ));
+    }
+    if reactor.queued_runs() != 0 || reactor.live_runs() != 0 {
+        return Err(format!(
+            "{} queued / {} live runs left after completion",
+            reactor.queued_runs(),
+            reactor.live_runs()
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_admission_queue_activates_everything() {
+    check(
+        "admission interleavings",
+        PropConfig { cases: scaled_cases(25), seed: 1515 },
+        drive_admission_interleaved,
+    );
+}
+
 #[test]
 fn prop_sim_conserves_tasks_and_respects_critical_path() {
     check("sim conservation", PropConfig { cases: 25, seed: 404 }, |rng| {
@@ -548,7 +879,7 @@ fn random_msg(rng: &mut Rng) -> Msg {
     let task = TaskId(rng.next_u64() as u32);
     // Bit-shifted magnitudes hit fixint / u8 / u16 / u32 / u64 encodings.
     let wide = |rng: &mut Rng| rng.next_u64() >> (rng.gen_range(64) as u32);
-    match rng.gen_range(19) {
+    match rng.gen_range(20) {
         0 => Msg::RegisterClient { name: rand_str(rng, 40) },
         1 => Msg::RegisterWorker {
             name: rand_str(rng, 40),
@@ -604,6 +935,7 @@ fn random_msg(rng: &mut Rng) -> Msg {
             let n = rng.range_usize(0, 400);
             Msg::DataToServer { run, task, data: (0..n).map(|_| rng.next_u64() as u8).collect() }
         }
+        18 => Msg::RunQueued { run, position: wide(rng) },
         _ => {
             if rng.chance(0.5) {
                 Msg::Shutdown
