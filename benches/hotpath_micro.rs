@@ -12,21 +12,28 @@
 //! zero-allocation guarantees, and emits machine-readable `BENCH_pr2.json`
 //! so later PRs have a perf trajectory to compare against.
 //!
+//! The dispatch section (PR 5) does the same for the *ends* of the
+//! per-task path the codec sits between: server assignment → outbound
+//! frame (owned `Msg` vs borrowed `ComputeDispatch`) and worker frame →
+//! priority queue → pop (owned decode vs interned `TaskQueue`). It asserts
+//! 0 allocs/task on both warm paths and emits `BENCH_pr5.json`.
+//!
 //! Env knobs: `RSDS_BENCH_QUICK=1` shortens runs (CI smoke);
-//! `RSDS_BENCH_SECTION=codec` runs only the codec section.
+//! `RSDS_BENCH_SECTION=codec|dispatch` runs one section only.
 
 use rsds::bench::{bench, row, throughput, BenchConfig};
 use rsds::graphgen::merge;
 use rsds::msgpack::{decode, encode};
 use rsds::overhead::RuntimeProfile;
 use rsds::protocol::{
-    decode_msg, decode_msg_value, encode_msg, encode_msg_into, encode_msg_value,
-    ComputeTaskView, Msg, RunId, TaskFinishedInfo, TaskInputLoc,
+    append_frame, append_frame_with, decode_msg, decode_msg_value, encode_msg, encode_msg_into,
+    encode_msg_value, ComputeTaskView, Msg, RunId, TaskFinishedInfo, TaskInputLoc,
 };
 use rsds::scheduler::{self, Action, WorkerId, WorkerInfo};
-use rsds::server::{Dest, Origin, Reactor, SchedulerPool};
+use rsds::server::{ComputeDispatch, Dest, GraphRun, Origin, Reactor, SchedulerPool};
 use rsds::sim::{simulate, SimConfig};
-use rsds::taskgraph::TaskId;
+use rsds::taskgraph::{GraphBuilder, Payload, TaskId};
+use rsds::worker::queue::{FetchPlan, TaskQueue};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -307,11 +314,113 @@ fn codec_section(cfg: BenchConfig) -> Vec<CodecRow> {
     rows
 }
 
-fn write_bench_json(rows: &[CodecRow], quick: bool) {
+// ---------------------------------------------------------------------------
+// Dispatch micro (PR 5): the interned per-task path, old-vs-new.
+//
+// Server side: parked assignment → outbound frame. Old = materialize the
+// owned Msg::ComputeTask (key clone + input Vec + addr Strings — the PR 2
+// dispatch) and encode it; new = encode the borrowed ComputeDispatch
+// straight into the batch buffer.
+//
+// Worker side: frame → priority queue → pop. Old = owned decode_msg and an
+// owned queue entry; new = borrowed ComputeTaskView interned into the
+// run-local arenas (TaskQueue::enqueue) and popped into reused scratch.
+//
+// Both new paths must be allocation-free after warm-up — the PR 5
+// acceptance gate, asserted below under the counting allocator.
+// ---------------------------------------------------------------------------
+
+fn dispatch_section(cfg: BenchConfig) -> Vec<CodecRow> {
+    let n: u64 = if std::env::var_os("RSDS_BENCH_QUICK").is_some() { 20_000 } else { 200_000 };
+    let mut rows = Vec::new();
+
+    // A dependency-bearing run, as the reactor holds it: two finished
+    // leaves (one remote, one local to the target) feeding a sink task.
+    let mut b = GraphBuilder::new();
+    let leaf_a = b.add("leaf-a", vec![], 5, 512, Payload::BusyWait);
+    let leaf_b = b.add("leaf-b", vec![], 5, 64, Payload::BusyWait);
+    let sink = b.add("sink-0", vec![leaf_a, leaf_b], 6, 28, Payload::BusyWait);
+    let graph = b.build("dispatch").unwrap();
+    let mut run = GraphRun::new(graph, 0, 0);
+    run.who_has[leaf_a.idx()].push(WorkerId(1));
+    run.who_has[leaf_b.idx()].push(WorkerId(0));
+    let addrs: Vec<String> = vec!["10.0.0.1:9000".into(), "10.0.0.2:9000".into()];
+    let run_id = RunId(7);
+
+    let mut batch_old: Vec<u8> = Vec::new();
+    let mut batch_new: Vec<u8> = Vec::new();
+    rows.push(codec_pair(
+        cfg,
+        "server dispatch: assignment -> frame",
+        n,
+        || {
+            batch_old.clear();
+            let d = ComputeDispatch::new(run_id, sink, WorkerId(0), 3, &run, &addrs);
+            let msg = d.to_msg(); // the pre-interning path: owned message first
+            append_frame(&mut batch_old, &msg).unwrap();
+            std::hint::black_box(batch_old.len());
+        },
+        || {
+            batch_new.clear();
+            let d = ComputeDispatch::new(run_id, sink, WorkerId(0), 3, &run, &addrs);
+            append_frame_with(&mut batch_new, |body| d.encode_into(body)).unwrap();
+            std::hint::black_box(batch_new.len());
+        },
+    ));
+    assert_eq!(batch_old, batch_new, "borrowed dispatch must stay byte-identical");
+
+    // The frame body the worker receives (length prefix stripped).
+    let frame_body: Vec<u8> = batch_new[8..].to_vec();
+
+    // Old worker enqueue: owned decode + owned queue entry (String key,
+    // Vec<TaskInputLoc>), mirroring the pre-PR5 QueuedTask.
+    struct OldQueued {
+        #[allow(dead_code)]
+        priority: i64,
+        #[allow(dead_code)]
+        key: String,
+        #[allow(dead_code)]
+        inputs: Vec<TaskInputLoc>,
+    }
+    let mut old_heap: Vec<OldQueued> = Vec::new();
+    let mut q = TaskQueue::new();
+    let mut plan = FetchPlan::new();
+    rows.push(codec_pair(
+        cfg,
+        "worker enqueue: frame -> queue -> pop",
+        n,
+        || {
+            let Msg::ComputeTask { key, inputs, priority, .. } =
+                decode_msg(std::hint::black_box(&frame_body)).unwrap()
+            else {
+                unreachable!()
+            };
+            old_heap.push(OldQueued { priority, key, inputs });
+            std::hint::black_box(old_heap.pop());
+        },
+        || {
+            let view = ComputeTaskView::decode(std::hint::black_box(&frame_body)).unwrap();
+            q.enqueue(&view).unwrap();
+            std::hint::black_box(q.pop_into(&mut plan).is_some());
+        },
+    ));
+
+    // --- the PR 5 acceptance gate: 0 allocs/task after warm-up ---
+    for r in &rows {
+        assert_eq!(
+            r.new_allocs_per_msg, 0.0,
+            "{}: the interned path must be allocation-free after warm-up",
+            r.name
+        );
+    }
+    rows
+}
+
+fn write_bench_json(path: &str, pr: u32, bench_name: &str, rows: &[CodecRow], quick: bool) {
     let geomean = (rows.iter().map(|r| r.speedup().ln()).sum::<f64>() / rows.len() as f64).exp();
     let mut json = String::from("{\n");
-    json.push_str("  \"pr\": 2,\n");
-    json.push_str("  \"bench\": \"codec_micro\",\n");
+    json.push_str(&format!("  \"pr\": {pr},\n"));
+    json.push_str(&format!("  \"bench\": \"{bench_name}\",\n"));
     json.push_str(&format!("  \"quick\": {quick},\n"));
     json.push_str(&format!("  \"geomean_speedup\": {geomean:.3},\n"));
     json.push_str("  \"rows\": [\n");
@@ -329,9 +438,21 @@ fn write_bench_json(rows: &[CodecRow], quick: bool) {
         ));
     }
     json.push_str("  ]\n}\n");
-    match std::fs::write("BENCH_pr2.json", &json) {
-        Ok(()) => println!("\nwrote BENCH_pr2.json (geomean speedup {geomean:.2}x)"),
-        Err(e) => eprintln!("could not write BENCH_pr2.json: {e}"),
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nwrote {path} (geomean speedup {geomean:.2}x)"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+fn print_rows(rows: &[CodecRow]) {
+    for r in rows {
+        println!(
+            "{:<40} {:>8.2}x msgs/s   allocs/msg {:.2} -> {:.2}",
+            r.name,
+            r.speedup(),
+            r.old_allocs_per_msg,
+            r.new_allocs_per_msg
+        );
     }
 }
 
@@ -341,19 +462,20 @@ fn main() {
     let section = std::env::var("RSDS_BENCH_SECTION").unwrap_or_default();
 
     // --- streaming vs Value-tree codec on hot-path messages ---
-    println!("== codec: streaming vs Value tree (old vs new) ==");
-    let rows = codec_section(cfg);
-    for r in &rows {
-        println!(
-            "{:<40} {:>8.2}x msgs/s   allocs/msg {:.2} -> {:.2}",
-            r.name,
-            r.speedup(),
-            r.old_allocs_per_msg,
-            r.new_allocs_per_msg
-        );
+    if section.is_empty() || section == "codec" {
+        println!("== codec: streaming vs Value tree (old vs new) ==");
+        let rows = codec_section(cfg);
+        print_rows(&rows);
+        write_bench_json("BENCH_pr2.json", 2, "codec_micro", &rows, quick);
     }
-    write_bench_json(&rows, quick);
-    if section == "codec" {
+    // --- interned dispatch + worker enqueue (PR 5 tentpole gate) ---
+    if section.is_empty() || section == "dispatch" {
+        println!("\n== dispatch: interned per-task path (old vs new) ==");
+        let rows = dispatch_section(cfg);
+        print_rows(&rows);
+        write_bench_json("BENCH_pr5.json", 5, "dispatch_micro", &rows, quick);
+    }
+    if !section.is_empty() {
         return;
     }
 

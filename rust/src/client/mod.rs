@@ -17,14 +17,22 @@
 //! immediately with the run id, [`Client::wait`] spans the queued phase
 //! transparently, and [`Client::is_queued`] exposes the phase.
 //!
+//! Exhausted-budget retry (opt-in): a run that fails because the server's
+//! worker-disconnect recovery budget ran out is a *capacity* failure, not
+//! a graph failure — [`Client::with_retry_exhausted`] resubmits it (up to
+//! a bounded number of attempts) and [`Client::wait`] follows the
+//! replacement under the original run id.
+//!
 //! I/O reuses one [`FrameWriter`] and one [`FrameReader`] per connection:
 //! a warm send/receive allocates nothing beyond the decoded message's own
 //! fields.
 
-use crate::protocol::{decode_msg, FrameReader, FrameWriter, Msg, RunId};
+use crate::protocol::{
+    decode_msg, FrameReader, FrameWriter, Msg, RunId, RECOVERY_EXHAUSTED_REASON,
+};
 use crate::taskgraph::TaskGraph;
 use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::net::TcpStream;
 use std::time::Instant;
 
@@ -48,6 +56,24 @@ struct PendingRun {
     /// Parked in the server's admission queue (acked with `run-queued`);
     /// cleared when the activation `graph-submitted` arrives.
     queued: bool,
+    /// The submitted graph, retained only when exhausted-budget retry is
+    /// enabled ([`Client::with_retry_exhausted`]) — a resubmission needs
+    /// it after the server already dropped the failed run's state.
+    graph: Option<TaskGraph>,
+    /// Scheduler override to replay on a resubmission.
+    scheduler: Option<String>,
+    /// Resubmissions this run may still consume.
+    retries_left: u32,
+}
+
+/// A resubmission sent after an exhausted-budget failure, awaiting its
+/// server ack. FIFO: one connection acks submissions in send order, so the
+/// next ack for an unknown run belongs to the front entry.
+struct RetryResub {
+    /// The run whose failure triggered this resubmission; `redirects`
+    /// points it at the replacement once the ack names the new run.
+    failed_run: RunId,
+    pending: PendingRun,
 }
 
 /// A connected client.
@@ -60,6 +86,20 @@ pub struct Client {
     in_flight: HashMap<RunId, PendingRun>,
     /// Completed (or failed) runs not yet claimed by `wait`.
     completed: HashMap<RunId, Result<RunResult>>,
+    /// Resubmission budget per run for exhausted-recovery failures
+    /// (0 = disabled, the default).
+    retry_exhausted: u32,
+    /// Resubmissions performed so far (tests / diagnostics).
+    retries_used: u64,
+    /// failed run → the run resubmitted in its place; `wait` follows the
+    /// chain so callers keep using the original id.
+    redirects: HashMap<RunId, RunId>,
+    /// Resubmissions decided on but not yet sent. Sending is deferred to
+    /// the safe points ([`Client::flush_resubs`]) so submission acks stay
+    /// strictly FIFO with `submit_with`'s own pending ack.
+    pending_resubs: VecDeque<RetryResub>,
+    /// Resubmissions sent to the server, awaiting their acks.
+    awaiting_retry_ack: VecDeque<RetryResub>,
 }
 
 impl Client {
@@ -81,7 +121,56 @@ impl Client {
             id,
             in_flight: HashMap::new(),
             completed: HashMap::new(),
+            retry_exhausted: 0,
+            retries_used: 0,
+            redirects: HashMap::new(),
+            pending_resubs: VecDeque::new(),
+            awaiting_retry_ack: VecDeque::new(),
         })
+    }
+
+    /// Send every decided-but-unsent resubmission. Called only at points
+    /// where no user submission awaits its ack (start of `submit_with`,
+    /// top of `wait`'s loop), so acks keep arriving in a known order:
+    /// already-sent resubmissions first, then the user's submission.
+    fn flush_resubs(&mut self) -> Result<()> {
+        while let Some(resub) = self.pending_resubs.pop_front() {
+            let graph = resub.pending.graph.clone().expect("retry retains the graph");
+            self.frames_out.send(
+                &mut self.stream,
+                &Msg::SubmitGraph { graph, scheduler: resub.pending.scheduler.clone() },
+            )?;
+            self.retries_used += 1;
+            self.awaiting_retry_ack.push_back(resub);
+        }
+        Ok(())
+    }
+
+    /// Opt in to resubmitting runs that fail with an exhausted
+    /// worker-disconnect recovery budget: up to `attempts` resubmissions
+    /// per run. The failure means the *cluster lost capacity mid-run*, not
+    /// that the graph is bad, so a resubmission onto the surviving workers
+    /// usually succeeds. [`Client::wait`] follows the replacement
+    /// transparently (same run id from the caller's point of view), and
+    /// `wall_us` keeps counting from the original submission. Costs one
+    /// retained graph clone per in-flight run while enabled.
+    pub fn with_retry_exhausted(mut self, attempts: u32) -> Client {
+        self.retry_exhausted = attempts;
+        self
+    }
+
+    /// Resubmissions performed so far under [`Client::with_retry_exhausted`].
+    pub fn retries_used(&self) -> u64 {
+        self.retries_used
+    }
+
+    /// Follow the resubmission chain from a (possibly failed-and-replaced)
+    /// run to the run currently carrying its work.
+    fn resolve(&self, mut run: RunId) -> RunId {
+        while let Some(&next) = self.redirects.get(&run) {
+            run = next;
+        }
+        run
     }
 
     /// Read and decode the next server message.
@@ -106,6 +195,9 @@ impl Client {
     /// run id either way, and [`Client::wait`] spans the queued phase
     /// transparently; [`Client::is_queued`] tells the phases apart.
     pub fn submit_with(&mut self, graph: &TaskGraph, scheduler: Option<&str>) -> Result<RunId> {
+        // Any retry resubmissions decided during an earlier read loop go
+        // out first, keeping submission acks strictly FIFO.
+        self.flush_resubs()?;
         let name = graph.name.clone();
         let submitted_at = Instant::now();
         let msg = Msg::SubmitGraph {
@@ -115,22 +207,44 @@ impl Client {
         self.frames_out.send(&mut self.stream, &msg)?;
         // Read until the ack for *this* submission arrives. Completions of
         // earlier pipelined runs may interleave — as may activation
-        // notices (`graph-submitted` for a run already known as queued);
-        // both are filed by `handle_completion`.
+        // notices (`graph-submitted` for a run already known as queued)
+        // and acks for retry resubmissions; those are filed by
+        // `handle_completion`. Acks arrive in send order, so while retry
+        // resubmissions await theirs, an unknown ack is *not* ours.
         loop {
             let msg = self.read_msg()?;
             match msg {
-                Msg::GraphSubmitted { run, .. } if !self.in_flight.contains_key(&run) => {
+                Msg::GraphSubmitted { run, .. }
+                    if self.awaiting_retry_ack.is_empty()
+                        && !self.in_flight.contains_key(&run) =>
+                {
                     self.in_flight.insert(
                         run,
-                        PendingRun { graph_name: name, submitted_at, queued: false },
+                        PendingRun {
+                            graph_name: name,
+                            submitted_at,
+                            queued: false,
+                            graph: (self.retry_exhausted > 0).then(|| graph.clone()),
+                            scheduler: scheduler.map(str::to_string),
+                            retries_left: self.retry_exhausted,
+                        },
                     );
                     return Ok(run);
                 }
-                Msg::RunQueued { run, .. } if !self.in_flight.contains_key(&run) => {
+                Msg::RunQueued { run, .. }
+                    if self.awaiting_retry_ack.is_empty()
+                        && !self.in_flight.contains_key(&run) =>
+                {
                     self.in_flight.insert(
                         run,
-                        PendingRun { graph_name: name, submitted_at, queued: true },
+                        PendingRun {
+                            graph_name: name,
+                            submitted_at,
+                            queued: true,
+                            graph: (self.retry_exhausted > 0).then(|| graph.clone()),
+                            scheduler: scheduler.map(str::to_string),
+                            retries_left: self.retry_exhausted,
+                        },
                     );
                     return Ok(run);
                 }
@@ -140,13 +254,20 @@ impl Client {
     }
 
     /// Block until `run` (a value returned by [`Client::submit`]) finishes;
-    /// returns its result or the server-reported failure.
+    /// returns its result or the server-reported failure. If the run was
+    /// replaced by a retry resubmission, this follows the chain and
+    /// returns the replacement's result under the original id.
     pub fn wait(&mut self, run: RunId) -> Result<RunResult> {
         loop {
-            if let Some(res) = self.completed.remove(&run) {
+            self.flush_resubs()?;
+            let cur = self.resolve(run);
+            if let Some(res) = self.completed.remove(&cur) {
                 return res;
             }
-            if !self.in_flight.contains_key(&run) {
+            if !self.in_flight.contains_key(&cur)
+                && !self.awaiting_retry_ack.iter().any(|r| r.failed_run == cur)
+                && !self.pending_resubs.iter().any(|r| r.failed_run == cur)
+            {
                 bail!("run {run} was never submitted on this client");
             }
             let msg = self.read_msg()?;
@@ -165,7 +286,7 @@ impl Client {
     /// only buffered state — call [`Client::wait`] (or submit more work)
     /// to make progress on the socket.
     pub fn is_queued(&self, run: RunId) -> bool {
-        self.in_flight.get(&run).map(|p| p.queued).unwrap_or(false)
+        self.in_flight.get(&self.resolve(run)).map(|p| p.queued).unwrap_or(false)
     }
 
     /// Submit a graph and block until it completes or fails.
@@ -184,19 +305,37 @@ impl Client {
     }
 
     /// File a graph-done / graph-failed under its run; track admission
-    /// phase changes; ignore heartbeats.
+    /// phase changes; file retry-resubmission acks; ignore heartbeats.
     fn handle_completion(&mut self, msg: Msg) -> Result<()> {
         match msg {
             Msg::GraphSubmitted { run, .. } => {
-                // Activation notice for a run previously acked as queued
-                // (a fresh submission's ack is consumed by `submit_with`).
-                let Some(pending) = self.in_flight.get_mut(&run) else {
+                if let Some(pending) = self.in_flight.get_mut(&run) {
+                    // Activation notice for a run previously acked as
+                    // queued (a fresh submission's ack is consumed by
+                    // `submit_with`).
+                    pending.queued = false;
+                } else if let Some(resub) = self.awaiting_retry_ack.pop_front() {
+                    // Ack for a retry resubmission: acks arrive in send
+                    // order, so the front entry owns it. The failed run
+                    // now redirects to its replacement.
+                    self.redirects.insert(resub.failed_run, run);
+                    self.in_flight.insert(run, resub.pending);
+                } else {
                     bail!("graph-submitted for unknown run {run}");
-                };
-                pending.queued = false;
+                }
             }
             Msg::RunQueued { run, .. } => {
-                bail!("run-queued for already-acked run {run}");
+                if self.in_flight.contains_key(&run) {
+                    bail!("run-queued for already-acked run {run}");
+                }
+                // A retry resubmission can itself be parked by admission
+                // control; `wait` spans that phase like any other.
+                let Some(mut resub) = self.awaiting_retry_ack.pop_front() else {
+                    bail!("run-queued for unknown run {run}");
+                };
+                resub.pending.queued = true;
+                self.redirects.insert(resub.failed_run, run);
+                self.in_flight.insert(run, resub.pending);
             }
             Msg::GraphDone { run, makespan_us, n_tasks } => {
                 let Some(pending) = self.in_flight.remove(&run) else {
@@ -209,6 +348,8 @@ impl Client {
                         graph_name: pending.graph_name,
                         n_tasks,
                         makespan_us,
+                        // Spans the full chain for a retried run: the
+                        // latency the caller actually observed.
                         wall_us: pending.submitted_at.elapsed().as_micros() as u64,
                     }),
                 );
@@ -217,10 +358,30 @@ impl Client {
                 // Symmetric with GraphDone: a failure for a run this client
                 // never submitted is a protocol violation, not something to
                 // file away unclaimably.
-                if self.in_flight.remove(&run).is_none() {
+                let Some(pending) = self.in_flight.remove(&run) else {
                     bail!("graph-failed for unknown run {run}: {reason}");
+                };
+                // Opt-in resubmission: the run died because the cluster
+                // lost capacity mid-run (recovery budget exhausted), not
+                // because of the graph. Resubmit onto the survivors.
+                if pending.retries_left > 0
+                    && pending.graph.is_some()
+                    && reason.contains(RECOVERY_EXHAUSTED_REASON)
+                {
+                    // Deferred: the actual send happens at the next safe
+                    // point (`flush_resubs`), never from inside a read
+                    // loop that may itself be awaiting a submission ack.
+                    self.pending_resubs.push_back(RetryResub {
+                        failed_run: run,
+                        pending: PendingRun {
+                            queued: false,
+                            retries_left: pending.retries_left - 1,
+                            ..pending
+                        },
+                    });
+                } else {
+                    self.completed.insert(run, Err(anyhow!("graph failed: {reason}")));
                 }
-                self.completed.insert(run, Err(anyhow!("graph failed: {reason}")));
             }
             Msg::Heartbeat => {}
             other => bail!("unexpected message {:?}", other.op()),

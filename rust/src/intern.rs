@@ -1,0 +1,176 @@
+//! Interned-string arena for the per-task hot path.
+//!
+//! Task keys and data addresses are the only strings that cross the
+//! per-task paths (assignment dispatch, worker enqueue). Owning them per
+//! message meant one `String` clone per key plus one per input address per
+//! transition — the dominant remaining allocation after the codec went
+//! zero-alloc (PR 2). A [`StrArena`] stores each distinct string once in a
+//! single append-only byte buffer and hands out compact [`KeyId`] handles;
+//! every later layer carries the 4-byte id and resolves to `&str` only at
+//! the protocol boundary.
+//!
+//! Ownership: arenas are *scoped*, not global. The worker keeps one arena
+//! set per live run (dropped wholesale on `release-run`, so a long-lived
+//! worker's interned state stays bounded); the server never needs one —
+//! its keys already live exactly once in the submitted
+//! [`crate::taskgraph::TaskGraph`] and its worker addresses exactly once in
+//! the registration table, both of which the borrowed dispatch path
+//! (`ComputeDispatch`) resolves without cloning.
+//!
+//! Warm-path guarantee: [`StrArena::intern`] on an already-present string
+//! performs no heap allocation (one hash lookup), and [`StrArena::get`] is
+//! an index into the shared buffer. Only the *first* occurrence of a
+//! string allocates — the property the `hotpath_micro` counting-allocator
+//! bench asserts for the worker enqueue path.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+
+/// Compact handle to a string interned in one [`StrArena`]. Only
+/// meaningful together with the arena that issued it (the worker scopes
+/// arenas per run, so the pair `(RunId, KeyId)` is globally unambiguous).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct KeyId(pub u32);
+
+impl KeyId {
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl std::fmt::Display for KeyId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "k{}", self.0)
+    }
+}
+
+/// Append-only string arena: all interned strings live contiguously in one
+/// byte buffer; ids are dense and never invalidated (spans are recorded at
+/// append time, and the buffer only grows).
+#[derive(Debug, Default)]
+pub struct StrArena {
+    /// Every interned string, concatenated.
+    bytes: String,
+    /// `(offset, len)` of each id, in issue order.
+    spans: Vec<(u32, u32)>,
+    /// Content hash → ids with that hash, for deduplicating
+    /// [`StrArena::intern`]. Candidates resolve through the arena bytes —
+    /// the arena stays the *only* copy of each string — and a lookup hit
+    /// (hash + compare) allocates nothing.
+    lookup: HashMap<u64, Vec<KeyId>>,
+}
+
+fn content_hash(s: &str) -> u64 {
+    let mut h = DefaultHasher::new();
+    s.hash(&mut h);
+    h.finish()
+}
+
+impl StrArena {
+    pub fn new() -> StrArena {
+        StrArena::default()
+    }
+
+    /// Number of distinct strings interned.
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// Total interned bytes (capacity diagnostics).
+    pub fn bytes_used(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// Intern with deduplication: a string seen before returns its
+    /// existing id without touching the heap; a new string is appended
+    /// once (the arena buffer is its only copy). Use for strings that
+    /// repeat (peer data addresses).
+    pub fn intern(&mut self, s: &str) -> KeyId {
+        let h = content_hash(s);
+        if let Some(ids) = self.lookup.get(&h) {
+            for &id in ids {
+                if self.get(id) == s {
+                    return id;
+                }
+            }
+        }
+        let id = self.append(s);
+        self.lookup.entry(h).or_default().push(id);
+        id
+    }
+
+    /// Append without deduplication. Use when the caller already knows the
+    /// string is new (task keys are unique within a run and indexed by
+    /// dense task id, so no content lookup is ever needed). Ids from
+    /// `append` are still resolvable, but invisible to [`StrArena::intern`].
+    pub fn append(&mut self, s: &str) -> KeyId {
+        let id = KeyId(self.spans.len() as u32);
+        let off = self.bytes.len() as u32;
+        self.bytes.push_str(s);
+        self.spans.push((off, s.len() as u32));
+        id
+    }
+
+    /// Resolve an id issued by this arena.
+    #[inline]
+    pub fn get(&self, id: KeyId) -> &str {
+        let (off, len) = self.spans[id.idx()];
+        &self.bytes[off as usize..(off + len) as usize]
+    }
+
+    /// Resolve, returning `None` for ids this arena never issued (stale id
+    /// from another arena — a caller bug, but diagnostics paths prefer
+    /// `None` over a panic).
+    pub fn try_get(&self, id: KeyId) -> Option<&str> {
+        let &(off, len) = self.spans.get(id.idx())?;
+        self.bytes.get(off as usize..(off + len) as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_dedups_append_does_not() {
+        let mut a = StrArena::new();
+        let x = a.intern("10.0.0.1:9000");
+        let y = a.intern("10.0.0.2:9000");
+        let x2 = a.intern("10.0.0.1:9000");
+        assert_eq!(x, x2, "repeat intern returns the same id");
+        assert_ne!(x, y);
+        assert_eq!(a.len(), 2);
+        let z = a.append("10.0.0.1:9000");
+        assert_ne!(x, z, "append always issues a fresh id");
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.get(x), "10.0.0.1:9000");
+        assert_eq!(a.get(y), "10.0.0.2:9000");
+        assert_eq!(a.get(z), "10.0.0.1:9000");
+    }
+
+    #[test]
+    fn ids_survive_growth() {
+        // Spans must stay valid across buffer reallocation.
+        let mut a = StrArena::new();
+        let ids: Vec<KeyId> = (0..500).map(|i| a.append(&format!("key-{i}"))).collect();
+        for (i, id) in ids.iter().enumerate() {
+            assert_eq!(a.get(*id), format!("key-{i}"));
+        }
+        assert_eq!(a.len(), 500);
+    }
+
+    #[test]
+    fn empty_string_and_try_get() {
+        let mut a = StrArena::new();
+        let e = a.intern("");
+        assert_eq!(a.get(e), "");
+        assert_eq!(a.try_get(e), Some(""));
+        assert_eq!(a.try_get(KeyId(7)), None, "foreign id resolves to None");
+    }
+}

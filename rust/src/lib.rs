@@ -24,6 +24,7 @@
 pub mod bench;
 pub mod client;
 pub mod graphgen;
+pub mod intern;
 pub mod metrics;
 pub mod msgpack;
 pub mod overhead;

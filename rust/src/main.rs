@@ -25,6 +25,7 @@ USAGE:
   rsds server  [--addr 127.0.0.1:8786] [--scheduler ws|random|dask-ws]
                [--profile rsds|dask] [--emulate-python] [--seed N]
                [--fairness rr|arrival|weighted] [--max-runs-per-client N]
+               [--max-recoveries N]
   rsds worker  --server ADDR [--ncores 1] [--node 0] [--name w0] [--count N]
   rsds zero-worker --server ADDR [--count N]
   rsds submit  --server ADDR --graph SPEC  (e.g. merge-10000, xarray-25)
@@ -70,7 +71,7 @@ fn run() -> Result<()> {
     let args = Args::from_env(&[
         "addr", "scheduler", "profile", "seed", "server", "ncores", "node", "name", "count",
         "graph", "workers", "timeout-s", "workers-per-node", "fairness",
-        "max-runs-per-client",
+        "max-runs-per-client", "max-recoveries",
     ])?;
     match args.subcommand() {
         Some("server") => cmd_server(&args),
@@ -102,6 +103,10 @@ fn cmd_server(args: &Args) -> Result<()> {
         max_live_runs_per_client: args.get_parsed_or(
             "max-runs-per-client",
             rsds::server::DEFAULT_MAX_LIVE_RUNS_PER_CLIENT,
+        )?,
+        max_recoveries: args.get_parsed_or(
+            "max-recoveries",
+            rsds::server::DEFAULT_MAX_RECOVERIES,
         )?,
         ..ServerConfig::default()
     };

@@ -402,35 +402,26 @@ pub fn encode_msg_into(msg: &Msg, out: &mut Vec<u8>) {
             inputs,
             priority,
         } => {
-            let mut w = Writer::new(out);
-            w.map_header(9);
-            w.str("duration_us");
-            w.uint(*duration_us);
-            w.str("inputs");
-            w.array_header(inputs.len());
-            for l in inputs {
-                w.map_header(3);
-                w.str("addr");
-                w.str(&l.addr);
-                w.str("nbytes");
-                w.uint(l.nbytes);
-                w.str("task");
-                w.uint(l.task.0 as u64);
-            }
-            w.str("key");
-            w.str(key);
-            w.str("op");
-            w.str("compute-task");
-            w.str("output_size");
-            w.uint(*output_size);
-            w.str("payload");
-            enc_payload(&mut w, payload);
-            w.str("priority");
-            w.int(*priority);
-            w.str("run");
-            w.uint(run.0 as u64);
-            w.str("task");
-            w.uint(task.0 as u64);
+            // Delegate to the borrowed encoder so the owned and borrowed
+            // dispatch paths are byte-identical by construction.
+            let parts = ComputeTaskParts {
+                run: *run,
+                task: *task,
+                key,
+                payload,
+                duration_us: *duration_us,
+                output_size: *output_size,
+                priority: *priority,
+            };
+            encode_compute_task_into(
+                &parts,
+                inputs.iter().map(|l| TaskInputRef {
+                    task: l.task,
+                    addr: &l.addr,
+                    nbytes: l.nbytes,
+                }),
+                out,
+            );
         }
         Msg::TaskFinished(info) => {
             let mut w = Writer::new(out);
@@ -489,6 +480,60 @@ pub fn encode_msg_into(msg: &Msg, out: &mut Vec<u8>) {
             w.str(msg.op());
         }
     }
+}
+
+/// The scalar fields of a `compute-task`, borrowed from wherever they
+/// already live (the submitted graph, the worker registration table). The
+/// allocation-free server dispatch path encodes straight from these plus a
+/// borrowed input iterator — no owned [`Msg::ComputeTask`] is ever built.
+#[derive(Debug, Clone, Copy)]
+pub struct ComputeTaskParts<'a> {
+    pub run: RunId,
+    pub task: TaskId,
+    pub key: &'a str,
+    pub payload: &'a Payload,
+    pub duration_us: u64,
+    pub output_size: u64,
+    pub priority: i64,
+}
+
+/// Encode a `compute-task` from borrowed parts, appending to `out`.
+/// Byte-identical to encoding the equivalent owned [`Msg::ComputeTask`]
+/// (the owned arm of [`encode_msg_into`] delegates here), so the wire
+/// format is unchanged and the byte-identity property tests cover both.
+pub fn encode_compute_task_into<'a, I>(parts: &ComputeTaskParts<'_>, inputs: I, out: &mut Vec<u8>)
+where
+    I: ExactSizeIterator<Item = TaskInputRef<'a>>,
+{
+    let mut w = Writer::new(out);
+    w.map_header(9);
+    w.str("duration_us");
+    w.uint(parts.duration_us);
+    w.str("inputs");
+    w.array_header(inputs.len());
+    for l in inputs {
+        w.map_header(3);
+        w.str("addr");
+        w.str(l.addr);
+        w.str("nbytes");
+        w.uint(l.nbytes);
+        w.str("task");
+        w.uint(l.task.0 as u64);
+    }
+    w.str("key");
+    w.str(parts.key);
+    w.str("op");
+    w.str("compute-task");
+    w.str("output_size");
+    w.uint(parts.output_size);
+    w.str("payload");
+    enc_payload(&mut w, parts.payload);
+    w.str("priority");
+    w.int(parts.priority);
+    w.str("run");
+    w.uint(parts.run.0 as u64);
+    w.str("task");
+    w.uint(parts.task.0 as u64);
 }
 
 fn enc_run_task(out: &mut Vec<u8>, op: &str, run: RunId, task: TaskId) {
@@ -577,6 +622,14 @@ fn find_op(bytes: &[u8]) -> Result<&str, CodecError> {
         r.skip_value()?;
     }
     Err(CodecError::Missing("op"))
+}
+
+/// Peek a frame's `"op"` discriminant without materializing anything.
+/// Receivers that special-case one op (the worker routes `compute-task`
+/// through the borrowed [`ComputeTaskView`] instead of the owned decode)
+/// branch on this before choosing a decoder.
+pub fn peek_op(bytes: &[u8]) -> Result<&str, CodecError> {
+    find_op(bytes)
 }
 
 /// Decode one message from bytes (streaming: field names are matched as
@@ -1523,6 +1576,58 @@ mod tests {
         // The view rejects other ops.
         let other = encode_msg(&Msg::Heartbeat);
         assert!(ComputeTaskView::decode(&other).is_err());
+    }
+
+    #[test]
+    fn borrowed_parts_encode_matches_owned() {
+        // The dispatch hot path encodes from ComputeTaskParts + borrowed
+        // inputs; the bytes must equal the owned encode (and therefore the
+        // Value-tree reference, by the existing identity tests).
+        let inputs = vec![
+            TaskInputLoc { task: TaskId(70), addr: "10.0.0.2:9000".into(), nbytes: 11 },
+            TaskInputLoc { task: TaskId(71), addr: String::new(), nbytes: 22 },
+        ];
+        let m = Msg::ComputeTask {
+            run: RunId(11),
+            task: TaskId(77),
+            key: "xarray-77".into(),
+            payload: Payload::HloHash { n_tokens: 9, buckets: 64, seed: 3 },
+            duration_us: 123,
+            output_size: 456,
+            inputs: inputs.clone(),
+            priority: -9,
+        };
+        let owned = encode_msg(&m);
+        let parts = ComputeTaskParts {
+            run: RunId(11),
+            task: TaskId(77),
+            key: "xarray-77",
+            payload: &Payload::HloHash { n_tokens: 9, buckets: 64, seed: 3 },
+            duration_us: 123,
+            output_size: 456,
+            priority: -9,
+        };
+        let mut borrowed = Vec::new();
+        encode_compute_task_into(
+            &parts,
+            inputs.iter().map(|l| TaskInputRef { task: l.task, addr: &l.addr, nbytes: l.nbytes }),
+            &mut borrowed,
+        );
+        assert_eq!(borrowed, owned);
+        // And it round-trips through both decoders.
+        assert_eq!(decode_msg(&borrowed).unwrap(), m);
+        let view = ComputeTaskView::decode(&borrowed).unwrap();
+        assert_eq!(view.key, "xarray-77");
+        assert_eq!(view.n_inputs(), 2);
+    }
+
+    #[test]
+    fn peek_op_names_every_message() {
+        for m in all_test_messages() {
+            let bytes = encode_msg(&m);
+            assert_eq!(peek_op(&bytes).unwrap(), m.op());
+        }
+        assert!(peek_op(&[0xff]).is_err());
     }
 
     #[test]

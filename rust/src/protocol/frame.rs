@@ -74,9 +74,20 @@ fn read_frame_len(r: &mut impl Read) -> Result<usize, FrameError> {
 /// thread flushes it with one `write_all` — one syscall per flush instead
 /// of two per message.
 pub fn append_frame(batch: &mut Vec<u8>, msg: &super::Msg) -> Result<(), FrameError> {
+    append_frame_with(batch, |body| super::codec::encode_msg_into(msg, body))
+}
+
+/// Append one frame whose body is produced by `encode` (length prefix
+/// back-patched after the fact, no I/O). This is [`append_frame`] with the
+/// encoder abstracted out so borrowed encoders — the server's
+/// allocation-free compute-task dispatch — share the framing logic.
+pub fn append_frame_with(
+    batch: &mut Vec<u8>,
+    encode: impl FnOnce(&mut Vec<u8>),
+) -> Result<(), FrameError> {
     let start = batch.len();
     batch.extend_from_slice(&[0u8; 8]);
-    super::codec::encode_msg_into(msg, batch);
+    encode(batch);
     let len = (batch.len() - start - 8) as u64;
     if len > MAX_FRAME_LEN {
         batch.truncate(start);

@@ -12,6 +12,15 @@ use crate::taskgraph::{TaskGraph, TaskId};
 /// string convention (not a message field) keeps the wire format stable.
 pub const FETCH_FAILED_PREFIX: &str = "fetch-failed: ";
 
+/// Substring the server puts in a `graph-failed` reason when a run died
+/// because its worker-disconnect recovery budget ran out (as opposed to a
+/// task error or an unknown scheduler). Clients opted into
+/// [`crate::client::Client::with_retry_exhausted`] match on it to decide
+/// that a resubmission is worthwhile: the cluster lost capacity, the graph
+/// itself is fine. A string convention (not a message field) keeps the
+/// wire format stable.
+pub const RECOVERY_EXHAUSTED_REASON: &str = "recovery budget exhausted";
+
 /// Server-assigned namespace for one submitted graph.
 ///
 /// [`TaskId`]s are dense indices *within* one graph, so they recycle across

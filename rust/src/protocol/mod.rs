@@ -27,10 +27,14 @@ mod frame;
 mod messages;
 
 pub use codec::{
-    decode_msg, decode_msg_value, encode_msg, encode_msg_into, encode_msg_value,
-    graph_from_value, graph_to_value, CodecError, ComputeTaskView, InputsIter, TaskInputRef,
+    decode_msg, decode_msg_value, encode_compute_task_into, encode_msg, encode_msg_into,
+    encode_msg_value, graph_from_value, graph_to_value, peek_op, CodecError, ComputeTaskParts,
+    ComputeTaskView, InputsIter, TaskInputRef,
 };
 pub use frame::{
-    append_frame, read_frame, write_frame, FrameError, FrameReader, FrameWriter, MAX_FRAME_LEN,
+    append_frame, append_frame_with, read_frame, write_frame, FrameError, FrameReader,
+    FrameWriter, MAX_FRAME_LEN,
 };
-pub use messages::{Msg, RunId, TaskFinishedInfo, TaskInputLoc, FETCH_FAILED_PREFIX};
+pub use messages::{
+    Msg, RunId, TaskFinishedInfo, TaskInputLoc, FETCH_FAILED_PREFIX, RECOVERY_EXHAUSTED_REASON,
+};

@@ -221,9 +221,12 @@ impl Scheduler for DaskWsScheduler {
         duration_us: u64,
         out: &mut Vec<Action>,
     ) {
-        let key = self.model.graph().task(task).key.clone();
-        let est = self.durations.estimate(&key);
-        self.durations.observe(&key, duration_us);
+        // Disjoint field borrows: the key stays borrowed from the graph
+        // (`model`) while the duration table (`durations`) mutates — no
+        // per-finish clone on this path.
+        let key = &self.model.graph().task(task).key;
+        let est = self.durations.estimate(key);
+        self.durations.observe(key, duration_us);
         self.model.finish(task, worker);
         self.ensure_occ(worker.idx());
         self.est_occupancy_us[worker.idx()] =

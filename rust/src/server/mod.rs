@@ -35,12 +35,15 @@ mod net;
 mod pool;
 mod reactor;
 mod state;
+mod window;
 
 pub use fairness::{FairnessPolicy, RunQueueStat, DEFAULT_DISPATCH_QUOTA};
 pub use net::{serve, ServerConfig, ServerHandle};
 pub use pool::{SchedulerFactory, SchedulerPool};
 pub use reactor::{
-    Dest, Origin, Reactor, ReactorReport, DEFAULT_MAX_LIVE_RUNS_PER_CLIENT,
-    DEFAULT_MAX_QUEUED_RUNS_PER_CLIENT, DEFAULT_REPORT_RETENTION,
+    ComputeDispatch, ComputeInputs, Dest, Origin, OutboundSink, Reactor, ReactorReport,
+    DEFAULT_MAX_LIVE_RUNS_PER_CLIENT, DEFAULT_MAX_QUEUED_RUNS_PER_CLIENT,
+    DEFAULT_REPORT_RETENTION,
 };
-pub use state::{GraphRun, RecoveryPlan, RunIdAlloc, TaskState, DEFAULT_MAX_RECOVERIES};
+pub use state::{GraphRun, Parked, RecoveryPlan, RunIdAlloc, TaskState, DEFAULT_MAX_RECOVERIES};
+pub use window::BoundedWindow;

@@ -14,16 +14,23 @@
 //! - readers reuse one frame buffer per connection ([`FrameReader`]) and
 //!   decode via the streaming codec — no allocation per inbound message
 //!   beyond the `Msg`'s own fields;
-//! - the reactor coalesces all frames bound for one connection during one
-//!   event into a single recycled buffer ([`append_frame`]) and locks the
-//!   writer registry once per event, not once per message;
+//! - the reactor pumps into a [`BatchSink`]: compute-task assignments are
+//!   encoded from the borrowed [`ComputeDispatch`] straight into recycled
+//!   per-connection batch buffers — no owned `Msg` is ever materialized on
+//!   the dispatch path (zero allocations per task, asserted by
+//!   `hotpath_micro`);
+//! - flushing is *adaptive across events*: a batch is handed to its writer
+//!   thread when it crosses [`FLUSH_BATCH_BYTES`] or when the inbox
+//!   drains (always before the loop blocks), so sustained load coalesces
+//!   many events into one syscall without idle latency;
 //! - writer threads flush a whole batch with one `write_all` (one syscall)
 //!   and return the buffer to a shared pool for reuse.
 
 use super::pool::SchedulerPool;
-use super::reactor::{Dest, Origin, Reactor, ReactorReport};
+use super::reactor::{ComputeDispatch, Dest, Origin, OutboundSink, Reactor, ReactorReport};
+use super::window::BoundedWindow;
 use crate::overhead::RuntimeProfile;
-use crate::protocol::{append_frame, decode_msg, FrameError, FrameReader, Msg};
+use crate::protocol::{append_frame, append_frame_with, decode_msg, FrameError, FrameReader, Msg};
 use crate::scheduler::WorkerId;
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
@@ -60,6 +67,11 @@ pub struct ServerConfig {
     /// Completed-run reports retained in memory (older ones are dropped;
     /// `reports_since` watermarks stay consistent).
     pub report_retention: usize,
+    /// Per-run worker-disconnect recovery budget (see
+    /// [`crate::server::DEFAULT_MAX_RECOVERIES`]). With 0, any non-trivial
+    /// loss fails the run — the setting the client-side resubmission knob
+    /// ([`crate::client::Client::with_retry_exhausted`]) pairs with.
+    pub max_recoveries: u32,
 }
 
 impl Default for ServerConfig {
@@ -74,6 +86,7 @@ impl Default for ServerConfig {
             max_live_runs_per_client: super::reactor::DEFAULT_MAX_LIVE_RUNS_PER_CLIENT,
             max_queued_runs_per_client: super::reactor::DEFAULT_MAX_QUEUED_RUNS_PER_CLIENT,
             report_retention: super::reactor::DEFAULT_REPORT_RETENTION,
+            max_recoveries: super::state::DEFAULT_MAX_RECOVERIES,
         }
     }
 }
@@ -111,33 +124,14 @@ fn pool_put(pool: &BufPool, mut buf: Vec<u8>) {
     }
 }
 
-/// Published completed-run reports, bounded by the configured retention.
-/// `dropped + reports.len()` is the monotonic completion count, so
-/// watermark-based polling stays consistent across evictions — a poller
+/// Published completed-run reports: a [`BoundedWindow`] — the same type
+/// the reactor keeps its own history in, so the invariant
+/// `dropped + len == completions` lives in exactly one place. A poller
 /// that lags by more than the retention window misses the evicted reports
-/// (by design: that is the bound on a long-lived server's memory).
-///
-/// NOTE: the reactor keeps its own window with the same `dropped`-counter
-/// scheme (`Reactor::maybe_complete`'s retention trim); the publishing
-/// code in `reactor_loop` reconciles the two by completion *count* — keep
-/// the invariant `dropped + len == completions` on BOTH sides when
-/// touching either.
-struct ReportStore {
-    dropped: usize,
-    reports: Vec<ReactorReport>,
-    retention: usize,
-}
-
-impl ReportStore {
-    fn push_all(&mut self, fresh: &[ReactorReport]) {
-        self.reports.extend_from_slice(fresh);
-        if self.reports.len() > self.retention {
-            let d = self.reports.len() - self.retention;
-            self.reports.drain(..d);
-            self.dropped += d;
-        }
-    }
-}
+/// (by design: that is the bound on a long-lived server's memory); the
+/// publishing code in `reactor_loop` reconciles the two windows by
+/// completion *count*.
+type ReportStore = BoundedWindow<ReactorReport>;
 
 /// Running server: address, per-graph reports, shutdown control.
 pub struct ServerHandle {
@@ -173,20 +167,14 @@ impl ServerHandle {
     /// counting evicted reports, so watermarks never go backwards.
     pub fn reports_since(&self, watermark: usize) -> (Vec<ReactorReport>, usize) {
         let store = self.reports.lock().unwrap();
-        // Absolute index → window index; a watermark older than the
-        // window clamps to its start (that prefix is gone).
-        let start = watermark.max(store.dropped) - store.dropped;
-        let fresh =
-            store.reports.get(start..).map(<[ReactorReport]>::to_vec).unwrap_or_default();
-        let next = (store.dropped + store.reports.len()).max(watermark);
-        (fresh, next)
+        let (fresh, next) = store.since(watermark);
+        (fresh.to_vec(), next)
     }
 
     /// Total completed-run reports so far (a cheap watermark probe;
     /// monotonic, includes reports evicted from the retained window).
     pub fn report_count(&self) -> usize {
-        let store = self.reports.lock().unwrap();
-        store.dropped + store.reports.len()
+        self.reports.lock().unwrap().total()
     }
 
     /// Stop the server and join every thread it spawned — the accept loop,
@@ -243,17 +231,14 @@ pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
         .with_fairness(policy)
         .with_admission_cap(config.max_live_runs_per_client)
         .with_admission_queue_cap(config.max_queued_runs_per_client)
-        .with_report_retention(config.report_retention);
+        .with_report_retention(config.report_retention)
+        .with_max_recoveries(config.max_recoveries);
 
     let listener = TcpListener::bind(&config.addr)
         .with_context(|| format!("bind {}", config.addr))?;
     let addr = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
-    let reports = Arc::new(Mutex::new(ReportStore {
-        dropped: 0,
-        reports: Vec::new(),
-        retention: config.report_retention,
-    }));
+    let reports = Arc::new(Mutex::new(ReportStore::new(config.report_retention)));
     let (event_tx, event_rx) = channel::<NetEvent>();
 
     // Writer registry: conn id -> outbound batch queue (each item is one or
@@ -361,6 +346,98 @@ pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
     })
 }
 
+/// Adaptive flush threshold: a connection's coalesced batch is handed to
+/// its writer thread once it crosses this size even while inbound events
+/// keep arriving; smaller batches ride across events and flush when the
+/// inbox drains. Cuts writer hand-offs (and syscalls) by batching *across*
+/// events under load without adding latency when idle — the inbox-drained
+/// flush runs before the loop ever blocks.
+const FLUSH_BATCH_BYTES: usize = 64 * 1024;
+
+/// Age bound on the adaptive flush: under sustained load the inbox may
+/// never drain (`try_recv` keeps yielding events), and a small batch — a
+/// `welcome` for a freshly connecting peer, a tiny run's `graph-done` —
+/// would otherwise ride below the byte threshold indefinitely. After this
+/// many loop iterations without a full flush, everything buffered goes out
+/// regardless of size (at one pump round per iteration this bounds the
+/// holdback to a couple thousand messages' worth of processing time).
+const FLUSH_MAX_ROUNDS: u32 = 64;
+
+/// Sink the reactor pumps into: frames append straight to the
+/// per-connection batch buffers. Compute-task assignments encode from the
+/// borrowed [`ComputeDispatch`] — no owned `Msg` is built, so a warm
+/// dispatch performs zero heap allocations (asserted by `hotpath_micro`).
+struct BatchSink<'a> {
+    batches: &'a mut HashMap<u64, Vec<u8>>,
+    conn_of: &'a HashMap<Dest, u64>,
+    buf_pool: &'a BufPool,
+}
+
+impl BatchSink<'_> {
+    fn batch_for(&mut self, dest: Dest, op: &str) -> Option<&mut Vec<u8>> {
+        let Some(&conn) = self.conn_of.get(&dest) else {
+            log::warn!("no connection for {dest:?}; dropping {op}");
+            return None;
+        };
+        Some(self.batches.entry(conn).or_insert_with(|| pool_get(self.buf_pool)))
+    }
+}
+
+impl OutboundSink for BatchSink<'_> {
+    fn emit_msg(&mut self, dest: Dest, msg: Msg) {
+        if let Some(batch) = self.batch_for(dest, msg.op()) {
+            if let Err(e) = append_frame(batch, &msg) {
+                log::warn!("dropping oversized {op}: {e}", op = msg.op());
+            }
+        }
+    }
+
+    fn emit_compute(&mut self, dispatch: &ComputeDispatch<'_>) {
+        if let Some(batch) = self.batch_for(Dest::Worker(dispatch.worker), "compute-task") {
+            if let Err(e) = append_frame_with(batch, |body| dispatch.encode_into(body)) {
+                log::warn!("dropping oversized compute-task: {e}");
+            }
+        }
+    }
+}
+
+/// Hand every batch of at least `min_len` bytes to its writer thread
+/// (`min_len == 0` flushes everything). `scratch` is a reused key buffer
+/// so a warm flush allocates nothing. The writer-registry lock is taken
+/// once per call, and only when something actually flushes.
+fn flush_batches(
+    batches: &mut HashMap<u64, Vec<u8>>,
+    scratch: &mut Vec<u64>,
+    writers: &Mutex<HashMap<u64, Sender<Vec<u8>>>>,
+    buf_pool: &BufPool,
+    min_len: usize,
+) {
+    scratch.clear();
+    scratch.extend(batches.iter().filter(|(_, b)| b.len() >= min_len).map(|(&c, _)| c));
+    if scratch.is_empty() {
+        return;
+    }
+    let writer_map = writers.lock().unwrap();
+    for conn in scratch.drain(..) {
+        let Some(batch) = batches.remove(&conn) else { continue };
+        if batch.is_empty() {
+            // Every append to it failed (oversized); nothing to write.
+            pool_put(buf_pool, batch);
+            continue;
+        }
+        match writer_map.get(&conn) {
+            // A closed writer hands the batch back inside the error;
+            // recycle it (the disconnect event cleans the registry).
+            Some(tx) => {
+                if let Err(failed) = tx.send(batch) {
+                    pool_put(buf_pool, failed.0);
+                }
+            }
+            None => pool_put(buf_pool, batch),
+        }
+    }
+}
+
 fn reactor_loop(
     mut reactor: Reactor,
     event_rx: Receiver<NetEvent>,
@@ -373,9 +450,12 @@ fn reactor_loop(
     let mut origin_of: HashMap<u64, Origin> = HashMap::new();
     let mut conn_of: HashMap<Dest, u64> = HashMap::new();
     let mut out: Vec<(Dest, Msg)> = Vec::new();
-    // Per-event coalescing: frames grouped by destination connection. The
-    // map is drained (not dropped) each event so its capacity is reused.
+    // Cross-event coalescing: frames grouped by destination connection.
+    // Batches persist across iterations until the adaptive flush hands
+    // them off; the map keeps its capacity either way.
     let mut batches: HashMap<u64, Vec<u8>> = HashMap::new();
+    let mut flush_scratch: Vec<u64> = Vec::new();
+    let mut rounds_since_flush: u32 = 0;
     let mut reported = 0usize;
 
     // Whether the previous iteration's pump round emitted anything —
@@ -396,11 +476,16 @@ fn reactor_loop(
                 Err(std::sync::mpsc::TryRecvError::Disconnected) => break,
             }
         } else {
+            // Reactor fully drained and about to block: nothing fresher
+            // can join the batches, so everything buffered goes out now.
+            flush_batches(&mut batches, &mut flush_scratch, &writers, &buf_pool, 0);
+            rounds_since_flush = 0;
             match event_rx.recv() {
                 Ok(ev) => Some(ev),
                 Err(_) => break,
             }
         };
+        let inbox_drained = event.is_none();
         match event {
             None => {}
             Some(NetEvent::Stop) => break,
@@ -449,10 +534,18 @@ fn reactor_loop(
             }
         }
         // One fairness round per iteration: up to a quota of parked
-        // messages from the policy-chosen run join this iteration's batch.
-        pumping = reactor.pump(&mut out).is_some();
-        // Flush outbound: coalesce per destination connection, then take
-        // the writer-registry lock once for the whole event.
+        // messages from the policy-chosen run join the per-connection
+        // batches — compute-tasks encoded borrowed, no owned Msg built.
+        pumping = {
+            let mut sink = BatchSink {
+                batches: &mut batches,
+                conn_of: &conn_of,
+                buf_pool: &buf_pool,
+            };
+            reactor.pump_into(&mut sink).is_some()
+        };
+        // Reactor replies outside the pump (acks, completions, release
+        // broadcasts) join the same batches.
         for (dest, msg) in out.drain(..) {
             let Some(&conn) = conn_of.get(&dest) else {
                 log::warn!("no connection for {dest:?}; dropping {op}", op = msg.op());
@@ -465,24 +558,18 @@ fn reactor_loop(
                 log::warn!("conn {conn}: dropping oversized {op}: {e}", op = msg.op());
             }
         }
-        if !batches.is_empty() {
-            let writer_map = writers.lock().unwrap();
-            for (conn, batch) in batches.drain() {
-                match writer_map.get(&conn) {
-                    // A closed writer hands the batch back inside the error;
-                    // recycle it (the disconnect event cleans the registry).
-                    Some(tx) => {
-                        if let Err(failed) = tx.send(batch) {
-                            pool_put(&buf_pool, failed.0);
-                        }
-                    }
-                    None => pool_put(&buf_pool, batch),
-                }
-            }
-        }
+        // Adaptive flush: a batch that crossed the size threshold goes out
+        // immediately; the rest ride across events and flush when the
+        // inbox drains (here, or above before the loop blocks) — or when
+        // the age bound expires, so sustained load can't starve a small
+        // batch (a welcome, a tiny run's completion) below the threshold.
+        let flush_all = inbox_drained || rounds_since_flush >= FLUSH_MAX_ROUNDS;
+        let min_len = if flush_all { 0 } else { FLUSH_BATCH_BYTES };
+        flush_batches(&mut batches, &mut flush_scratch, &writers, &buf_pool, min_len);
+        rounds_since_flush = if flush_all { 0 } else { rounds_since_flush + 1 };
         // Publish new reports (only the fresh tail is ever copied; both
-        // sides count against the monotonic completion total, so the
-        // bounded windows stay consistent).
+        // windows count against the monotonic completion total, so the
+        // `dropped + len == completions` invariant holds on both sides).
         let total = reactor.report_count();
         if total > reported {
             let all = reactor.reports();
@@ -492,10 +579,10 @@ fn reactor_loop(
                 // More completions this iteration than the reactor window
                 // holds (tiny retention + a burst): the overflow is gone
                 // on both sides.
-                shared.dropped += fresh - all.len();
+                shared.note_missed(fresh - all.len());
             }
             let start = all.len().saturating_sub(fresh);
-            shared.push_all(&all[start..]);
+            shared.extend_from_slice(&all[start..]);
             reported = total;
         }
     }

@@ -36,9 +36,13 @@
 
 use super::fairness::{FairnessPolicy, RoundRobin, RunQueueStat, DEFAULT_DISPATCH_QUOTA};
 use super::pool::SchedulerPool;
-use super::state::{GraphRun, RunIdAlloc, TaskState};
+use super::state::{GraphRun, Parked, RunIdAlloc, TaskState};
+use super::window::BoundedWindow;
 use crate::overhead::RuntimeProfile;
-use crate::protocol::{Msg, RunId, TaskInputLoc, FETCH_FAILED_PREFIX};
+use crate::protocol::{
+    encode_compute_task_into, ComputeTaskParts, Msg, RunId, TaskInputLoc, TaskInputRef,
+    FETCH_FAILED_PREFIX, RECOVERY_EXHAUSTED_REASON,
+};
 use crate::scheduler::{Action, Scheduler, WorkerId, WorkerInfo};
 use crate::taskgraph::{TaskGraph, TaskId};
 use crate::util::timing::{busy_wait_us, Stopwatch};
@@ -136,12 +140,10 @@ pub struct Reactor {
     n_clients: u32,
     runs: HashMap<RunId, GraphRun>,
     run_ids: RunIdAlloc,
-    /// Retained window of completed-run reports (see `report_retention`).
-    reports: Vec<ReactorReport>,
-    /// Reports evicted from the window; `reports_dropped + reports.len()`
-    /// is the monotonic completion count watermarks are measured against.
-    reports_dropped: usize,
-    report_retention: usize,
+    /// Retained window of completed-run reports. [`BoundedWindow`] owns
+    /// the `dropped + len == completions` invariant; the TCP layer's
+    /// published store is the same type, reconciled by completion count.
+    reports: BoundedWindow<ReactorReport>,
     actions_buf: Vec<Action>,
     /// Recovery budget stamped onto each new run (see
     /// [`GraphRun::recover`]); defaults to
@@ -163,47 +165,160 @@ pub struct Reactor {
     /// work made that a measured property; staging buffers must not undo
     /// it).
     stats_buf: Vec<RunQueueStat>,
-    emitted_buf: Vec<(WorkerId, Msg)>,
+    emitted_buf: Vec<(WorkerId, Parked)>,
 }
 
-/// Build a compute-task message with `who_has` input locations. Free
-/// function so callers can hold a `&mut GraphRun` alongside the addr table.
-fn compute_task_msg(
-    run: &GraphRun,
-    worker_addrs: &[String],
-    run_id: RunId,
-    task: TaskId,
-    worker: WorkerId,
-    priority: i64,
-) -> Msg {
-    let spec = run.graph.task(task);
-    let inputs = spec
-        .inputs
-        .iter()
-        .map(|&input| {
-            let holders = &run.who_has[input.idx()];
-            let addr = holders
-                .first()
-                .map(|&h| {
-                    if h == worker {
-                        String::new() // local
-                    } else {
-                        worker_addrs.get(h.idx()).cloned().unwrap_or_default()
-                    }
-                })
-                .unwrap_or_default();
-            TaskInputLoc { task: input, addr, nbytes: run.graph.task(input).output_size }
-        })
-        .collect();
-    Msg::ComputeTask {
-        run: run_id,
-        task,
-        key: spec.key.clone(),
-        payload: spec.payload.clone(),
-        duration_us: spec.duration_us,
-        output_size: spec.output_size,
-        inputs,
-        priority,
+/// A compute-task assignment about to be emitted, with every field
+/// *borrowed* from where it already lives: the key and payload from the
+/// run's submitted graph, the input addresses from the `who_has` tables
+/// and the worker registration table. Nothing here owns a string — the
+/// allocation-free dispatch path ([`Reactor::pump_into`] +
+/// [`OutboundSink::emit_compute`]) encodes straight from these borrows via
+/// [`encode_compute_task_into`]; [`ComputeDispatch::to_msg`] materializes
+/// the owned [`Msg`] only for sinks that need one (tests, in-process
+/// drivers).
+pub struct ComputeDispatch<'a> {
+    pub run: RunId,
+    pub task: TaskId,
+    pub worker: WorkerId,
+    pub priority: i64,
+    graph: &'a TaskGraph,
+    who_has: &'a [Vec<WorkerId>],
+    addrs: &'a [String],
+}
+
+/// Borrowed iterator over an assignment's `who_has` input locations
+/// (one [`TaskInputRef`] per dependency, no allocation).
+#[derive(Clone)]
+pub struct ComputeInputs<'a> {
+    graph: &'a TaskGraph,
+    who_has: &'a [Vec<WorkerId>],
+    addrs: &'a [String],
+    target: WorkerId,
+    inputs: std::slice::Iter<'a, TaskId>,
+}
+
+impl<'a> Iterator for ComputeInputs<'a> {
+    type Item = TaskInputRef<'a>;
+
+    fn next(&mut self) -> Option<TaskInputRef<'a>> {
+        let &input = self.inputs.next()?;
+        // First holder wins (the producer); the empty address means "local
+        // to the assignment's target worker".
+        let addr = match self.who_has[input.idx()].first() {
+            Some(&h) if h == self.target => "",
+            Some(&h) => self.addrs.get(h.idx()).map(String::as_str).unwrap_or(""),
+            None => "",
+        };
+        Some(TaskInputRef { task: input, addr, nbytes: self.graph.task(input).output_size })
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        self.inputs.size_hint()
+    }
+}
+
+impl ExactSizeIterator for ComputeInputs<'_> {}
+
+impl<'a> ComputeDispatch<'a> {
+    /// Resolve a parked assignment against its live run. Public so benches
+    /// and tests can drive the borrowed encode path directly.
+    pub fn new(
+        run_id: RunId,
+        task: TaskId,
+        worker: WorkerId,
+        priority: i64,
+        run: &'a GraphRun,
+        worker_addrs: &'a [String],
+    ) -> ComputeDispatch<'a> {
+        ComputeDispatch {
+            run: run_id,
+            task,
+            worker,
+            priority,
+            graph: &run.graph,
+            who_has: &run.who_has,
+            addrs: worker_addrs,
+        }
+    }
+
+    /// The task's Dask-style key, borrowed from the graph.
+    pub fn key(&self) -> &'a str {
+        &self.graph.task(self.task).key
+    }
+
+    /// Scalar wire fields, borrowed (see [`ComputeTaskParts`]).
+    pub fn parts(&self) -> ComputeTaskParts<'a> {
+        let spec = self.graph.task(self.task);
+        ComputeTaskParts {
+            run: self.run,
+            task: self.task,
+            key: &spec.key,
+            payload: &spec.payload,
+            duration_us: spec.duration_us,
+            output_size: spec.output_size,
+            priority: self.priority,
+        }
+    }
+
+    /// Borrowed input locations, resolved against `who_has` at call time.
+    pub fn inputs(&self) -> ComputeInputs<'a> {
+        ComputeInputs {
+            graph: self.graph,
+            who_has: self.who_has,
+            addrs: self.addrs,
+            target: self.worker,
+            inputs: self.graph.task(self.task).inputs.iter(),
+        }
+    }
+
+    /// Encode the `compute-task` frame body straight from the borrows —
+    /// the zero-allocation dispatch path (byte-identical to encoding
+    /// [`ComputeDispatch::to_msg`]).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        encode_compute_task_into(&self.parts(), self.inputs(), out);
+    }
+
+    /// Materialize the owned message (allocates: key clone + input vector).
+    /// Sinks that hand messages to in-process consumers use this; the TCP
+    /// sink never does.
+    pub fn to_msg(&self) -> Msg {
+        let spec = self.graph.task(self.task);
+        Msg::ComputeTask {
+            run: self.run,
+            task: self.task,
+            key: spec.key.clone(),
+            payload: spec.payload.clone(),
+            duration_us: spec.duration_us,
+            output_size: spec.output_size,
+            inputs: self
+                .inputs()
+                .map(|l| TaskInputLoc { task: l.task, addr: l.addr.to_string(), nbytes: l.nbytes })
+                .collect(),
+            priority: self.priority,
+        }
+    }
+}
+
+/// Where [`Reactor::pump_into`] delivers emitted messages. The TCP layer's
+/// sink encodes compute-tasks from the borrowed [`ComputeDispatch`]
+/// directly into per-connection batch buffers (no owned message, no
+/// allocation); the `Vec<(Dest, Msg)>` impl materializes owned messages
+/// for tests and in-process drivers.
+pub trait OutboundSink {
+    /// An already-owned worker- or client-bound message.
+    fn emit_msg(&mut self, dest: Dest, msg: Msg);
+    /// A compute-task assignment in borrowed form, valid for this call.
+    fn emit_compute(&mut self, dispatch: &ComputeDispatch<'_>);
+}
+
+impl OutboundSink for Vec<(Dest, Msg)> {
+    fn emit_msg(&mut self, dest: Dest, msg: Msg) {
+        self.push((dest, msg));
+    }
+
+    fn emit_compute(&mut self, dispatch: &ComputeDispatch<'_>) {
+        self.push((Dest::Worker(dispatch.worker), dispatch.to_msg()));
     }
 }
 
@@ -219,9 +334,7 @@ impl Reactor {
             n_clients: 0,
             runs: HashMap::new(),
             run_ids: RunIdAlloc::default(),
-            reports: Vec::new(),
-            reports_dropped: 0,
-            report_retention: DEFAULT_REPORT_RETENTION,
+            reports: BoundedWindow::new(DEFAULT_REPORT_RETENTION),
             actions_buf: Vec::new(),
             default_max_recoveries: super::state::DEFAULT_MAX_RECOVERIES,
             policy: Box::<RoundRobin>::default(),
@@ -265,9 +378,11 @@ impl Reactor {
     }
 
     /// Override how many completed-run reports are retained (≥ 1).
+    /// Builder-time only: replacing the window discards nothing because no
+    /// run has completed yet.
     pub fn with_report_retention(mut self, retention: usize) -> Reactor {
         assert!(retention >= 1, "report retention must be positive");
-        self.report_retention = retention;
+        self.reports = BoundedWindow::new(retention);
         self
     }
 
@@ -290,18 +405,18 @@ impl Reactor {
     /// [`DEFAULT_REPORT_RETENTION`]); [`Reactor::report_count`] is the
     /// monotonic total including evicted reports.
     pub fn reports(&self) -> &[ReactorReport] {
-        &self.reports
+        self.reports.as_slice()
     }
 
     /// Total runs completed so far (monotonic; includes reports already
     /// evicted from the retained window).
     pub fn report_count(&self) -> usize {
-        self.reports_dropped + self.reports.len()
+        self.reports.total()
     }
 
     /// Reports evicted from the retained window so far.
     pub fn reports_dropped(&self) -> usize {
-        self.reports_dropped
+        self.reports.dropped()
     }
 
     /// Number of graphs currently executing.
@@ -343,8 +458,10 @@ impl Reactor {
     /// Park a worker-bound message on its run's outbox. State transitions
     /// were already applied by the caller; the per-message emission cost is
     /// charged when [`Reactor::pump`] emits it, so a large run's backlog
-    /// cannot monopolize the reactor.
-    fn park(&mut self, run_id: RunId, worker: WorkerId, msg: Msg) {
+    /// cannot monopolize the reactor. Assignments park as id-only
+    /// [`Parked::Compute`] entries — no key/address strings are cloned at
+    /// park time (or, on the TCP sink, ever).
+    fn park(&mut self, run_id: RunId, worker: WorkerId, msg: Parked) {
         let run = self.runs.get_mut(&run_id).expect("park for dead run");
         if run.outbox.is_empty() {
             run.outbox_since = self.outbox_seq;
@@ -353,12 +470,19 @@ impl Reactor {
         run.outbox.push_back((worker, msg));
     }
 
+    /// [`Reactor::pump_into`] with a message-materializing `Vec` sink —
+    /// the test/driver convenience form.
+    pub fn pump(&mut self, out: &mut Vec<(Dest, Msg)>) -> Option<RunId> {
+        self.pump_into(out)
+    }
+
     /// One fairness round: the policy picks a run among those with parked
     /// messages and up to the dispatch quota of its messages are emitted
     /// (per-run FIFO). Returns the serviced run, or `None` when nothing is
-    /// pending. The transport loop interleaves `pump` with inbound events;
-    /// tests use [`Reactor::drain`].
-    pub fn pump(&mut self, out: &mut Vec<(Dest, Msg)>) -> Option<RunId> {
+    /// pending. The transport loop interleaves pump rounds with inbound
+    /// events, handing an encoding sink so a warm round performs zero heap
+    /// allocations end to end; tests use [`Reactor::drain`].
+    pub fn pump_into(&mut self, sink: &mut dyn OutboundSink) -> Option<RunId> {
         // Reused buffers (taken, not borrowed, so `charge_msg`'s `&self`
         // below doesn't conflict): a warm pump round allocates nothing.
         let mut stats = std::mem::take(&mut self.stats_buf);
@@ -402,13 +526,29 @@ impl Reactor {
             // must drain a queue to exhaustion before moving on, exactly
             // like the pre-fairness reactor.
         }
-        for (worker, msg) in emitted.drain(..) {
-            let approx = match &msg {
-                Msg::ComputeTask { .. } => 192,
-                _ => 64,
-            };
-            self.charge_msg(approx);
-            out.push((Dest::Worker(worker), msg));
+        for (worker, parked) in emitted.drain(..) {
+            match parked {
+                Parked::Wire(msg) => {
+                    self.charge_msg(64);
+                    sink.emit_msg(Dest::Worker(worker), msg);
+                }
+                Parked::Compute { task, priority } => {
+                    self.charge_msg(192);
+                    // Resolve against the run *now*: key/payload from the
+                    // graph, input addresses from the current `who_has`
+                    // (at least as fresh as a park-time snapshot).
+                    let run = self.runs.get(&pick).expect("picked run is live");
+                    let dispatch = ComputeDispatch::new(
+                        pick,
+                        task,
+                        worker,
+                        priority,
+                        run,
+                        &self.worker_addrs,
+                    );
+                    sink.emit_compute(&dispatch);
+                }
+            }
         }
         self.emitted_buf = emitted;
         Some(pick)
@@ -419,6 +559,11 @@ impl Reactor {
     /// transport loop pumps incrementally instead.
     pub fn drain(&mut self, out: &mut Vec<(Dest, Msg)>) {
         while self.pump(out).is_some() {}
+    }
+
+    /// [`Reactor::drain`] over an arbitrary sink.
+    pub fn drain_into(&mut self, sink: &mut dyn OutboundSink) {
+        while self.pump_into(sink).is_some() {}
     }
 
     /// Tell every connected worker to drop a retired run's queued tasks and
@@ -454,6 +599,11 @@ impl Reactor {
         run.msgs_out += 1 + self.n_workers() as u64; // GraphDone + ReleaseRuns below
         let makespan_us = self.clock.elapsed_us().saturating_sub(run.submitted_at_us);
         let n_tasks = run.graph.len() as u64;
+        // The window bounds the in-memory history; evictions are counted
+        // inside it so `report_count` stays monotonic and pollers'
+        // watermarks keep meaning "reports seen so far". The TCP layer
+        // publishes through the same `BoundedWindow` type, reconciled by
+        // completion count in `reactor_loop`.
         self.reports.push(ReactorReport {
             run: run_id,
             client: run.client,
@@ -468,16 +618,6 @@ impl Reactor {
             msgs_out: run.msgs_out,
             recoveries: run.recoveries,
         });
-        // Retention watermark: bound the in-memory history. Evictions are
-        // counted so `report_count` stays monotonic and pollers' watermarks
-        // keep meaning "reports seen so far". (The TCP layer's published
-        // `ReportStore` mirrors this dropped-counter scheme; `reactor_loop`
-        // reconciles the two by completion count — keep them in step.)
-        if self.reports.len() > self.report_retention {
-            let drop = self.reports.len() - self.report_retention;
-            self.reports.drain(..drop);
-            self.reports_dropped += drop;
-        }
         out.push((Dest::Client(run.client), Msg::GraphDone { run: run_id, makespan_us, n_tasks }));
         self.release_run(run_id, out);
     }
@@ -607,23 +747,21 @@ impl Reactor {
                             );
                             return;
                         }
-                        let msg = {
+                        {
                             let run =
                                 self.runs.get_mut(&run_id).expect("assign for dead run");
                             run.states[a.task.idx()] = TaskState::Assigned(a.worker);
                             run.priorities[a.task.idx()] = a.priority;
                             run.msgs_out += 1;
-                            compute_task_msg(
-                                run,
-                                &self.worker_addrs,
-                                run_id,
-                                a.task,
-                                a.worker,
-                                a.priority,
-                            )
-                        };
+                        }
                         self.charge(self.profile.task_transition_us);
-                        self.park(run_id, a.worker, msg);
+                        // Ids only; the message is resolved (and, over TCP,
+                        // encoded without allocating) at emission.
+                        self.park(
+                            run_id,
+                            a.worker,
+                            Parked::Compute { task: a.task, priority: a.priority },
+                        );
                     }
                     Action::Steal { task, from, to } => {
                         // Only steal tasks still assigned; scheduler models
@@ -642,7 +780,11 @@ impl Reactor {
                         };
                         if stealable {
                             self.charge(self.profile.task_transition_us);
-                            self.park(run_id, from, Msg::StealRequest { run: run_id, task });
+                            self.park(
+                                run_id,
+                                from,
+                                Parked::Wire(Msg::StealRequest { run: run_id, task }),
+                            );
                         } else {
                             // Already finished/stolen — report as failed.
                             let mut buf = Vec::new();
@@ -837,20 +979,12 @@ impl Reactor {
                                 run.steals_failed += 1;
                             }
                             let priority = run.priorities[task.idx()];
-                            let msg = compute_task_msg(
-                                run,
-                                &self.worker_addrs,
-                                run_id,
-                                task,
-                                target,
-                                priority,
-                            );
                             self.pool
                                 .get(run_id)
                                 .expect("scheduler for live run")
                                 .steal_result(task, from, to, to_alive, &mut self.actions_buf);
                             self.charge(self.profile.task_transition_us);
-                            self.park(run_id, target, msg);
+                            self.park(run_id, target, Parked::Compute { task, priority });
                         } else {
                             run.steals_failed += 1;
                             run.states[task.idx()] = TaskState::Assigned(from);
@@ -1015,9 +1149,9 @@ impl Reactor {
                         let reason = if no_capacity {
                             format!("worker {w} disconnected and no workers remain")
                         } else {
-                            format!(
-                                "worker {w} disconnected; recovery budget exhausted"
-                            )
+                            // The shared needle opt-in clients match on to
+                            // resubmit (`Client::with_retry_exhausted`).
+                            format!("worker {w} disconnected; {RECOVERY_EXHAUSTED_REASON}")
                         };
                         self.fail_run(run_id, reason, out);
                         continue;
@@ -1054,7 +1188,11 @@ impl Reactor {
                             // FIFO-ordered with this run's earlier compute
                             // messages (a cancel overtaking the compute it
                             // cancels would re-queue the task for good).
-                            self.park(run_id, worker, Msg::CancelCompute { run: run_id, task });
+                            self.park(
+                                run_id,
+                                worker,
+                                Parked::Wire(Msg::CancelCompute { run: run_id, task }),
+                            );
                         }
                     }
                     if !plan.ready.is_empty() {
@@ -2191,6 +2329,149 @@ mod tests {
             rep_b.recoveries, 0,
             "run b activated after the death; nothing to recover"
         );
+    }
+
+    // ---- interned dispatch path (PR 5 tentpole) ----
+
+    /// Sink that exercises BOTH dispatch forms per assignment and asserts
+    /// the borrowed encode is byte-identical to encoding the owned
+    /// message — the invariant that lets the TCP sink skip materializing
+    /// `Msg::ComputeTask` entirely.
+    struct DualSink {
+        msgs: Vec<(Dest, Msg)>,
+        computes_checked: usize,
+    }
+
+    impl OutboundSink for DualSink {
+        fn emit_msg(&mut self, dest: Dest, msg: Msg) {
+            self.msgs.push((dest, msg));
+        }
+
+        fn emit_compute(&mut self, d: &ComputeDispatch<'_>) {
+            let owned = d.to_msg();
+            let owned_bytes = crate::protocol::encode_msg(&owned);
+            let mut borrowed = Vec::new();
+            d.encode_into(&mut borrowed);
+            assert_eq!(
+                borrowed, owned_bytes,
+                "borrowed dispatch encode must be byte-identical to the owned path"
+            );
+            // The worker-side borrowed view agrees with the dispatch.
+            let view = crate::protocol::ComputeTaskView::decode(&borrowed).unwrap();
+            assert_eq!(view.run, d.run);
+            assert_eq!(view.task, d.task);
+            assert_eq!(view.key, d.key());
+            assert_eq!(view.priority, d.priority);
+            assert_eq!(view.n_inputs(), d.inputs().len());
+            self.computes_checked += 1;
+            self.msgs.push((Dest::Worker(d.worker), owned));
+        }
+    }
+
+    #[test]
+    fn dispatch_paths_stay_byte_identical_through_a_run() {
+        // Drive a dependency-bearing graph (w2w addresses in play) through
+        // the reactor with the dual sink: every emitted assignment is
+        // checked borrowed-vs-owned, including steal re-assignments.
+        let mut r = reactor("ws");
+        register(&mut r, 1, 3);
+        let mut out = Vec::new();
+        r.on_message(
+            Origin::Client(0),
+            Msg::SubmitGraph { graph: tree(5), scheduler: None },
+            &mut out,
+        );
+        let mut sink = DualSink { msgs: Vec::new(), computes_checked: 0 };
+        let mut inbox: Vec<(Dest, Msg)> = std::mem::take(&mut out);
+        let mut done = false;
+        let mut guard = 0;
+        loop {
+            guard += 1;
+            assert!(guard < 1_000_000, "drive stuck");
+            r.drain_into(&mut sink);
+            inbox.append(&mut sink.msgs);
+            inbox.append(&mut out);
+            let Some((dest, msg)) = inbox.pop() else { break };
+            match (dest, msg) {
+                (Dest::Worker(w), Msg::ComputeTask { run, task, output_size, .. }) => {
+                    r.on_message(
+                        Origin::Worker(w),
+                        Msg::TaskFinished(TaskFinishedInfo {
+                            run,
+                            task,
+                            nbytes: output_size,
+                            duration_us: 1,
+                        }),
+                        &mut out,
+                    );
+                }
+                (Dest::Worker(w), Msg::StealRequest { run, task }) => {
+                    // Always retractable: exercises the steal-ok re-assign
+                    // park (the second `Parked::Compute` producer).
+                    r.on_message(
+                        Origin::Worker(w),
+                        Msg::StealResponse { run, task, ok: true },
+                        &mut out,
+                    );
+                }
+                (_, Msg::GraphDone { .. }) => done = true,
+                (_, Msg::GraphFailed { reason, .. }) => panic!("graph failed: {reason}"),
+                _ => {}
+            }
+        }
+        assert!(done, "graph completes");
+        assert!(sink.computes_checked >= 31, "every task dispatched through the dual check");
+    }
+
+    #[test]
+    fn parked_assignments_resolve_registered_addresses() {
+        // Input locations are resolved from `who_has` + the registration
+        // table when the parked assignment is *emitted*: every non-local
+        // address on a dispatched message must be a registered data
+        // address (never stale garbage, never a dangling clone).
+        let mut r = reactor("ws");
+        register(&mut r, 1, 2);
+        let mut out = Vec::new();
+        r.on_message(
+            Origin::Client(0),
+            Msg::SubmitGraph { graph: tree(2), scheduler: None },
+            &mut out,
+        );
+        r.drain(&mut out);
+        // Finish each leaf on its assigned worker without pumping the
+        // consumers out yet — their assignments park while who_has fills.
+        let leaves: Vec<(WorkerId, RunId, TaskId)> = out
+            .iter()
+            .filter_map(|(d, m)| match (d, m) {
+                (Dest::Worker(w), Msg::ComputeTask { run, task, .. }) => Some((*w, *run, *task)),
+                _ => None,
+            })
+            .collect();
+        assert!(!leaves.is_empty());
+        for (w, run, task) in leaves {
+            r.on_message(
+                Origin::Worker(w),
+                Msg::TaskFinished(TaskFinishedInfo { run, task, nbytes: 8, duration_us: 1 }),
+                &mut out,
+            );
+        }
+        out.clear();
+        r.drain(&mut out);
+        let registered = ["127.0.0.1:9000", "127.0.0.1:9001"];
+        let mut saw_consumer = false;
+        for (_, m) in &out {
+            if let Msg::ComputeTask { inputs, .. } = m {
+                for l in inputs {
+                    saw_consumer = true;
+                    assert!(
+                        l.addr.is_empty() || registered.contains(&l.addr.as_str()),
+                        "input addressed from who_has + registration table: {:?}",
+                        l.addr
+                    );
+                }
+            }
+        }
+        assert!(saw_consumer, "a dependent task was dispatched: {out:?}");
     }
 
     #[test]

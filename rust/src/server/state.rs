@@ -18,6 +18,30 @@ use std::collections::{HashMap, VecDeque};
 /// brake, not a correctness bound.
 pub const DEFAULT_MAX_RECOVERIES: u32 = 8;
 
+/// One worker-bound message parked on a run's outbox, in its cheapest
+/// possible form.
+///
+/// An assignment is *not* materialized at park time: the key, payload and
+/// input addresses it needs already live in the run's graph and `who_has`
+/// tables, so the outbox carries only the dense ids and the
+/// scheduler-chosen priority (16 bytes) — `Reactor::pump` resolves them
+/// through the borrowed dispatch path when the message is actually
+/// emitted. Input locations therefore reflect `who_has` *at emission*: at
+/// least as fresh as a park-time snapshot would have been (a replica that
+/// appeared in between is usable; one that died is handled by the same
+/// `fetch-failed` retry / cancel-compute machinery either way, because the
+/// run's FIFO outbox keeps cancels ordered after the computes they cancel).
+///
+/// Everything else worker-bound (steal requests, cancels) is a few-word
+/// owned [`Msg`] with no heap payload.
+#[derive(Debug)]
+pub enum Parked {
+    /// A compute-task assignment: resolved against the run at emission.
+    Compute { task: TaskId, priority: i64 },
+    /// Any other worker-bound message, already materialized.
+    Wire(Msg),
+}
+
 /// Server-side lifecycle of a task (reactor's view).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum TaskState {
@@ -82,10 +106,12 @@ pub struct GraphRun {
     /// transitions already applied) but not yet emitted — the fairness
     /// unit. `Reactor::pump` drains outboxes in policy order, preserving
     /// per-run FIFO (the steal/recovery protocols rely on in-run message
-    /// order, never on cross-run order). Dropped wholesale when the run
+    /// order, never on cross-run order). Assignments park as id-only
+    /// [`Parked::Compute`] entries — no strings are cloned until (and
+    /// unless) the message is emitted. Dropped wholesale when the run
     /// retires: anything still parked then is a recovery duplicate whose
     /// target the `release-run` broadcast purges anyway.
-    pub outbox: VecDeque<(WorkerId, Msg)>,
+    pub outbox: VecDeque<(WorkerId, Parked)>,
     /// Tick at which `outbox` last became non-empty (stamped by the
     /// reactor); the arrival-order key across queue activations.
     pub outbox_since: u64,

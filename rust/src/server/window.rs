@@ -1,0 +1,167 @@
+//! One bounded retention window with a monotonic eviction counter.
+//!
+//! Two places keep "the newest N completed-run reports, plus a count of how
+//! many older ones were dropped": the reactor's own history and the TCP
+//! layer's published `ReportStore`. They were separate hand-rolled copies
+//! of the same scheme, reconciled by completion count in `reactor_loop`;
+//! this type is the single home of the invariant
+//!
+//! ```text
+//! dropped() + len() == total()      (monotonic; total never decreases)
+//! ```
+//!
+//! so watermark-based polling (`reports_since`) stays exactly-once across
+//! evictions on both sides.
+
+/// A bounded FIFO window over an ever-growing sequence: keeps the newest
+/// `retention` items, counts the evicted prefix.
+#[derive(Debug)]
+pub struct BoundedWindow<T> {
+    items: Vec<T>,
+    dropped: usize,
+    retention: usize,
+}
+
+impl<T> BoundedWindow<T> {
+    /// `retention` must be ≥ 1 (a zero-capacity window would make every
+    /// watermark probe meaningless).
+    pub fn new(retention: usize) -> BoundedWindow<T> {
+        assert!(retention >= 1, "retention must be positive");
+        BoundedWindow { items: Vec::new(), dropped: 0, retention }
+    }
+
+    /// Append one item, evicting from the front past the retention bound.
+    pub fn push(&mut self, item: T) {
+        self.items.push(item);
+        self.trim();
+    }
+
+    /// Append a batch (the publishing side copies the reactor's fresh tail
+    /// in one go).
+    pub fn extend_from_slice(&mut self, fresh: &[T])
+    where
+        T: Clone,
+    {
+        self.items.extend_from_slice(fresh);
+        self.trim();
+    }
+
+    /// Account for items that were evicted *upstream* before this window
+    /// ever saw them (a burst larger than the producer's own retention):
+    /// they count toward `total` but were never held here.
+    pub fn note_missed(&mut self, n: usize) {
+        self.dropped += n;
+    }
+
+    fn trim(&mut self) {
+        if self.items.len() > self.retention {
+            let d = self.items.len() - self.retention;
+            self.items.drain(..d);
+            self.dropped += d;
+        }
+    }
+
+    /// Items currently retained, oldest first.
+    pub fn as_slice(&self) -> &[T] {
+        &self.items
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Items evicted so far.
+    pub fn dropped(&self) -> usize {
+        self.dropped
+    }
+
+    /// Monotonic count of every item ever pushed (or noted as missed) —
+    /// the absolute index space watermarks live in.
+    pub fn total(&self) -> usize {
+        self.dropped + self.items.len()
+    }
+
+    /// Retained items with absolute index ≥ `watermark`, plus the
+    /// watermark for the *next* call. A watermark older than the window
+    /// clamps to its start — that prefix is permanently gone (by design:
+    /// the retention bound is the memory bound), and the returned
+    /// watermark jumps the gap so a lagging poller never re-receives the
+    /// window's tail forever.
+    pub fn since(&self, watermark: usize) -> (&[T], usize) {
+        let start = watermark.max(self.dropped) - self.dropped;
+        let fresh = self.items.get(start..).unwrap_or(&[]);
+        let next = self.total().max(watermark);
+        (fresh, next)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retains_newest_and_counts_dropped() {
+        let mut w = BoundedWindow::new(3);
+        for i in 0..7 {
+            w.push(i);
+            assert_eq!(w.dropped() + w.len(), w.total(), "invariant");
+            assert_eq!(w.total(), i + 1);
+        }
+        assert_eq!(w.as_slice(), &[4, 5, 6]);
+        assert_eq!(w.dropped(), 4);
+    }
+
+    #[test]
+    fn since_is_exactly_once_across_eviction() {
+        let mut w = BoundedWindow::new(2);
+        w.push("a");
+        let (fresh, mark) = w.since(0);
+        assert_eq!(fresh, &["a"]);
+        assert_eq!(mark, 1);
+        w.push("b");
+        w.push("c");
+        w.push("d"); // "a", "b" evicted
+        let (fresh, mark2) = w.since(mark);
+        assert_eq!(fresh, &["c", "d"], "evicted 'b' is permanently missed");
+        assert_eq!(mark2, 4);
+        let (fresh, mark3) = w.since(mark2);
+        assert!(fresh.is_empty());
+        assert_eq!(mark3, 4, "watermark is stable with no new items");
+    }
+
+    #[test]
+    fn stale_watermark_clamps_and_jumps_the_gap() {
+        let mut w = BoundedWindow::new(2);
+        for i in 0..10 {
+            w.push(i);
+        }
+        // Poller last saw index 3; indices 3..8 are gone.
+        let (fresh, mark) = w.since(3);
+        assert_eq!(fresh, &[8, 9]);
+        assert_eq!(mark, 10, "next watermark jumps past the evicted gap");
+    }
+
+    #[test]
+    fn missed_items_advance_total() {
+        let mut w = BoundedWindow::new(4);
+        w.note_missed(3);
+        w.push(10);
+        assert_eq!(w.total(), 4);
+        assert_eq!(w.dropped(), 3);
+        let (fresh, mark) = w.since(0);
+        assert_eq!(fresh, &[10]);
+        assert_eq!(mark, 4);
+    }
+
+    #[test]
+    fn batch_extend_trims_once() {
+        let mut w = BoundedWindow::new(3);
+        w.extend_from_slice(&[1, 2, 3, 4, 5]);
+        assert_eq!(w.as_slice(), &[3, 4, 5]);
+        assert_eq!(w.dropped(), 2);
+    }
+}

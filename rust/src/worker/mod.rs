@@ -20,17 +20,27 @@
 //! queue, the steal-pending set and the data store are all keyed by
 //! `(RunId, TaskId)` — two concurrent graphs can never alias each other's
 //! outputs on a worker.
+//!
+//! Enqueue hot path (the worker half of the interned-key design): the
+//! reader thread decodes `compute-task` through the borrowed
+//! [`ComputeTaskView`] — never an owned [`Msg`] — and
+//! [`queue::TaskQueue::enqueue`] interns the key and input addresses into
+//! run-local arenas, so a warm `compute-task` → queue → execute cycle
+//! performs zero heap allocations on the control path (asserted by the
+//! `hotpath_micro` counting-allocator bench).
 
 pub mod payload;
+pub mod queue;
 pub mod zero;
 
 use crate::protocol::{
-    decode_msg, FrameError, FrameReader, FrameWriter, Msg, RunId, TaskFinishedInfo, TaskInputLoc,
-    FETCH_FAILED_PREFIX,
+    decode_msg, peek_op, ComputeTaskView, FrameError, FrameReader, FrameWriter, Msg, RunId,
+    TaskFinishedInfo, FETCH_FAILED_PREFIX,
 };
-use crate::taskgraph::{Payload, TaskId};
+use crate::taskgraph::TaskId;
 use anyhow::{anyhow, bail, Context, Result};
-use std::collections::{BinaryHeap, HashMap, HashSet};
+use queue::{FetchPlan, PoppedTask, TaskQueue};
+use std::collections::{HashMap, HashSet};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -47,42 +57,6 @@ pub struct WorkerConfig {
 /// A task output's identity on this worker: which run, which task.
 type DataKey = (RunId, TaskId);
 
-#[derive(Debug)]
-struct QueuedTask {
-    priority: i64,
-    run: RunId,
-    task: TaskId,
-    key: String,
-    payload: Payload,
-    duration_us: u64,
-    output_size: u64,
-    inputs: Vec<TaskInputLoc>,
-}
-
-// Min-heap by priority (lower value runs first, like Dask priorities);
-// (run, task) breaks ties deterministically across interleaved graphs.
-impl PartialEq for QueuedTask {
-    fn eq(&self, other: &Self) -> bool {
-        self.priority == other.priority && self.run == other.run && self.task == other.task
-    }
-}
-impl Eq for QueuedTask {}
-impl PartialOrd for QueuedTask {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for QueuedTask {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        // Reverse for BinaryHeap (max-heap) -> min-heap behavior.
-        other
-            .priority
-            .cmp(&self.priority)
-            .then(other.run.0.cmp(&self.run.0))
-            .then(other.task.0.cmp(&self.task.0))
-    }
-}
-
 /// The worker→server send half: stream plus its reused frame buffer, under
 /// one lock so a warm send is one buffer fill and one syscall, no
 /// allocation.
@@ -92,9 +66,9 @@ struct ServerLink {
 }
 
 struct Shared {
-    queue: Mutex<BinaryHeap<QueuedTask>>,
-    /// Tasks in `queue` (for O(1) steal checks).
-    pending: Mutex<HashSet<DataKey>>,
+    /// Priority queue + steal-pending set + run-local interned arenas,
+    /// all behind one lock (they are always touched together).
+    queue: Mutex<TaskQueue>,
     cv: Condvar,
     store: Mutex<HashMap<DataKey, Arc<Vec<u8>>>>,
     /// Runs the server has released. A task already mid-execution when its
@@ -157,8 +131,7 @@ pub fn run_worker(cfg: WorkerConfig) -> Result<WorkerHandle> {
     };
 
     let shared = Arc::new(Shared {
-        queue: Mutex::new(BinaryHeap::new()),
-        pending: Mutex::new(HashSet::new()),
+        queue: Mutex::new(TaskQueue::new()),
         cv: Condvar::new(),
         store: Mutex::new(HashMap::new()),
         released: Mutex::new(HashSet::new()),
@@ -203,35 +176,49 @@ pub fn run_worker(cfg: WorkerConfig) -> Result<WorkerHandle> {
                 if shared.stop.load(Ordering::SeqCst) {
                     break;
                 }
-                let msg = match frames_in.read(&mut stream) {
-                    Ok(bytes) => match decode_msg(bytes) {
-                        Ok(m) => m,
-                        Err(e) => {
-                            log::warn!("worker: bad message from server: {e}");
-                            break;
-                        }
-                    },
+                let bytes = match frames_in.read(&mut stream) {
+                    Ok(bytes) => bytes,
                     Err(FrameError::Closed) => break,
                     Err(e) => {
                         log::warn!("worker: server stream error: {e}");
                         break;
                     }
                 };
-                match msg {
-                    Msg::ComputeTask { run, task, key, payload, duration_us, output_size, inputs, priority } => {
-                        shared.pending.lock().unwrap().insert((run, task));
-                        shared.queue.lock().unwrap().push(QueuedTask {
-                            priority,
-                            run,
-                            task,
-                            key,
-                            payload,
-                            duration_us,
-                            output_size,
-                            inputs,
-                        });
-                        shared.cv.notify_one();
+                // Hot branch: compute-task decodes through the borrowed
+                // view and interns straight into the run-local arenas —
+                // no owned Msg (key String, input Vec, addr Strings) is
+                // ever built on the enqueue path.
+                if matches!(peek_op(bytes), Ok("compute-task")) {
+                    let view = match ComputeTaskView::decode(bytes) {
+                        Ok(v) => v,
+                        Err(e) => {
+                            log::warn!("worker: bad compute-task from server: {e}");
+                            break;
+                        }
+                    };
+                    // A compute for an already-released run would recreate
+                    // the run's arenas for nothing; the server's FIFO makes
+                    // this effectively unreachable, but stay defensive.
+                    if !shared.released.lock().unwrap().contains(&view.run) {
+                        let enqueued = shared.queue.lock().unwrap().enqueue(&view);
+                        match enqueued {
+                            Ok(()) => shared.cv.notify_one(),
+                            Err(e) => {
+                                log::warn!("worker: bad compute-task inputs: {e}");
+                                break;
+                            }
+                        }
                     }
+                    continue;
+                }
+                let msg = match decode_msg(bytes) {
+                    Ok(m) => m,
+                    Err(e) => {
+                        log::warn!("worker: bad message from server: {e}");
+                        break;
+                    }
+                };
+                match msg {
                     Msg::StealRequest { run, task } => {
                         // Retract iff still queued (not started) — §IV-C.
                         let retracted = drop_queued(&shared, run, task);
@@ -258,16 +245,12 @@ pub fn run_worker(cfg: WorkerConfig) -> Result<WorkerHandle> {
                         let _ = shared.send(&Msg::DataToServer { run, task, data });
                     }
                     Msg::ReleaseRun { run } => {
-                        // Run retired: reclaim its queue entries and stored
-                        // outputs so a long-lived worker stays bounded.
+                        // Run retired: reclaim its queue entries, interned
+                        // arenas and stored outputs so a long-lived worker
+                        // stays bounded. The `released` mark lands first so
+                        // an execution racing the purge cannot re-insert.
                         shared.released.lock().unwrap().insert(run);
-                        shared.pending.lock().unwrap().retain(|&(r, _)| r != run);
-                        {
-                            let mut q = shared.queue.lock().unwrap();
-                            let kept: Vec<QueuedTask> =
-                                q.drain().filter(|qt| qt.run != run).collect();
-                            q.extend(kept);
-                        }
+                        shared.queue.lock().unwrap().release_run(run);
                         shared.store.lock().unwrap().retain(|&(r, _), _| r != run);
                     }
                     Msg::Shutdown => {
@@ -287,28 +270,17 @@ pub fn run_worker(cfg: WorkerConfig) -> Result<WorkerHandle> {
     Ok(WorkerHandle { id, data_addr, shared })
 }
 
-/// Remove a task from the pending set and priority queue if still queued;
-/// returns whether a queued copy was dropped (shared by steal retraction
-/// and `cancel-compute`).
+/// Retract a task if still queued; returns whether a queued copy was
+/// dropped (shared by steal retraction and `cancel-compute`).
 fn drop_queued(shared: &Shared, run: RunId, task: TaskId) -> bool {
-    let mut pending = shared.pending.lock().unwrap();
-    if !pending.remove(&(run, task)) {
-        return false;
-    }
-    let mut q = shared.queue.lock().unwrap();
-    let drained: Vec<QueuedTask> = q.drain().collect();
-    let mut found = false;
-    for qt in drained {
-        if qt.run == run && qt.task == task {
-            found = true;
-        } else {
-            q.push(qt);
-        }
-    }
-    found
+    shared.queue.lock().unwrap().drop_queued(run, task)
 }
 
 fn executor_loop(shared: &Shared) {
+    // Reused scratch: each pop copies the task's key and input addresses
+    // into these retained buffers under the queue lock, so nothing borrows
+    // the run-local arenas outside it (warm pops allocate nothing).
+    let mut plan = FetchPlan::new();
     loop {
         let next = {
             let mut q = shared.queue.lock().unwrap();
@@ -316,20 +288,20 @@ fn executor_loop(shared: &Shared) {
                 if shared.stop.load(Ordering::SeqCst) {
                     return;
                 }
-                if let Some(t) = q.pop() {
+                // pop_into also clears the pending mark — running tasks
+                // are no longer stealable.
+                if let Some(t) = q.pop_into(&mut plan) {
                     break t;
                 }
                 q = shared.cv.wait(q).unwrap();
             }
         };
-        // Running now — no longer stealable.
-        shared.pending.lock().unwrap().remove(&(next.run, next.task));
         // Popped after its run was released (queue purge raced the pop):
         // drop it instead of doing dead work.
         if shared.released.lock().unwrap().contains(&next.run) {
             continue;
         }
-        match run_task(shared, &next) {
+        match run_task(shared, &next, &plan) {
             Ok(info) => {
                 let _ = shared.send(&Msg::TaskFinished(info));
             }
@@ -344,22 +316,23 @@ fn executor_loop(shared: &Shared) {
     }
 }
 
-fn run_task(shared: &Shared, t: &QueuedTask) -> Result<TaskFinishedInfo> {
+fn run_task(shared: &Shared, t: &PoppedTask, plan: &FetchPlan) -> Result<TaskFinishedInfo> {
     // Gather inputs: local store or remote peer. Input locations are
     // relative to the task's own run.
-    let mut inputs: Vec<Arc<Vec<u8>>> = Vec::with_capacity(t.inputs.len());
-    for loc in &t.inputs {
-        let key = (t.run, loc.task);
+    let mut inputs: Vec<Arc<Vec<u8>>> = Vec::with_capacity(plan.n_inputs());
+    for i in 0..plan.n_inputs() {
+        let (input_task, _nbytes, addr) = plan.input(i);
+        let key = (t.run, input_task);
         let local = shared.store.lock().unwrap().get(&key).cloned();
         let data = match local {
             Some(d) => d,
-            None if !loc.addr.is_empty() => {
+            None if !addr.is_empty() => {
                 // The `fetch-failed:` prefix marks this error recoverable:
                 // the peer died (or its address went stale mid-recovery),
                 // so the server re-runs this task rather than failing the
                 // whole run.
-                let data = fetch_remote(&loc.addr, t.run, loc.task).with_context(|| {
-                    format!("{FETCH_FAILED_PREFIX}{}/{} from {}", t.run, loc.task, loc.addr)
+                let data = fetch_remote(addr, t.run, input_task).with_context(|| {
+                    format!("{FETCH_FAILED_PREFIX}{}/{} from {}", t.run, input_task, addr)
                 })?;
                 let arc = Arc::new(data);
                 {
@@ -385,7 +358,11 @@ fn run_task(shared: &Shared, t: &QueuedTask) -> Result<TaskFinishedInfo> {
                     }
                 }
                 got.ok_or_else(|| {
-                    anyhow!("{FETCH_FAILED_PREFIX}input {} for {} never arrived", loc.task, t.key)
+                    anyhow!(
+                        "{FETCH_FAILED_PREFIX}input {} for {} never arrived",
+                        input_task,
+                        plan.key()
+                    )
                 })?
             }
         };

@@ -1,0 +1,473 @@
+//! The worker's task queue, interned: the allocation-free enqueue path.
+//!
+//! Before this module, every `compute-task` the worker received was
+//! decoded into an owned [`crate::protocol::Msg`] — one `String` for the
+//! key, one `Vec` for the inputs, one `String` per input address — and
+//! those owned fields sat in the priority queue until execution. Per task,
+//! that was the last remaining allocation churn after the codec went
+//! zero-alloc (PR 2).
+//!
+//! Now the reader thread decodes through the borrowed
+//! [`ComputeTaskView`] and [`TaskQueue::enqueue`] interns directly into
+//! run-local arenas ([`crate::intern::StrArena`]):
+//!
+//! - the task **key** is appended once per `(run, task)` — a re-delivered
+//!   task (steal re-assignment, recovery re-send) hits the existing
+//!   [`KeyId`];
+//! - input **addresses** are content-interned — a cluster of `w` workers
+//!   contributes at most `w` strings per run, no matter how many tasks
+//!   name them;
+//! - input location triples go into an append-only per-run pool; the
+//!   queued entry carries a `(start, len)` span. The pool is reset (with
+//!   retained capacity) whenever the queue drains, so steady state — the
+//!   worker keeping up — re-enqueues without touching the heap allocator
+//!   at all. `hotpath_micro` asserts 0 allocs/task on this warm path.
+//!
+//! Everything lives behind the worker's single queue mutex; arenas are
+//! dropped wholesale on `release-run`, so a long-lived worker's interned
+//! state stays bounded by its *live* runs.
+
+use crate::intern::{KeyId, StrArena};
+use crate::protocol::{CodecError, ComputeTaskView, RunId};
+use crate::taskgraph::{Payload, TaskId};
+use std::collections::{BinaryHeap, HashMap, HashSet};
+
+/// Sanity cap on the task ids a worker accepts (16M tasks per run — an
+/// order of magnitude past the largest benchmark graph). `key_of` is
+/// sized from the wire task id, so without this a single corrupt frame
+/// could demand a multi-gigabyte table and abort the process; past the
+/// cap the frame is rejected through the normal bad-message path (log +
+/// drop connection) like every other malformed input.
+pub const MAX_TASK_ID: u32 = 1 << 24;
+
+/// One input location, fully id-encoded: 16 bytes instead of an owned
+/// `String` per input.
+#[derive(Debug, Clone, Copy)]
+struct InputLoc {
+    task: TaskId,
+    /// Into the run's address arena; the empty string means "local".
+    addr: KeyId,
+    nbytes: u64,
+}
+
+/// A queued assignment: dense ids and arena handles only — no owned
+/// strings, no owned vectors.
+#[derive(Debug)]
+struct QueuedTask {
+    priority: i64,
+    run: RunId,
+    task: TaskId,
+    payload: Payload,
+    duration_us: u64,
+    output_size: u64,
+    /// Into the run's key arena.
+    key: KeyId,
+    /// `(start, len)` span into the run's input-location pool.
+    inputs: (u32, u32),
+}
+
+// Min-heap by priority (lower value runs first, like Dask priorities);
+// (run, task) breaks ties deterministically across interleaved graphs.
+impl PartialEq for QueuedTask {
+    fn eq(&self, other: &Self) -> bool {
+        self.priority == other.priority && self.run == other.run && self.task == other.task
+    }
+}
+impl Eq for QueuedTask {}
+impl PartialOrd for QueuedTask {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for QueuedTask {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reverse for BinaryHeap (max-heap) -> min-heap behavior.
+        other
+            .priority
+            .cmp(&self.priority)
+            .then(other.run.0.cmp(&self.run.0))
+            .then(other.task.0.cmp(&self.task.0))
+    }
+}
+
+/// Per-run interned state: arenas plus the input-location pool.
+#[derive(Debug, Default)]
+struct RunStrings {
+    /// Task keys, appended once per task (unique within a run by graph
+    /// validation, so no content lookup is needed — indexed by task id).
+    keys: StrArena,
+    key_of: Vec<Option<KeyId>>,
+    /// Peer data addresses, content-deduplicated.
+    addrs: StrArena,
+    /// Append-only input-location pool; reset when the queue drains.
+    inputs: Vec<InputLoc>,
+}
+
+/// What [`TaskQueue::pop_into`] returns by value: the scalar task fields.
+/// The strings (key, input addresses) land in the caller's reused
+/// [`FetchPlan`], copied out under the queue lock so the executor never
+/// borrows the arenas across it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PoppedTask {
+    pub run: RunId,
+    pub task: TaskId,
+    pub payload: Payload,
+    pub duration_us: u64,
+    pub output_size: u64,
+    pub priority: i64,
+}
+
+/// Executor-side scratch, reused across tasks: after warm-up a pop copies
+/// spans and bytes into retained capacity and allocates nothing.
+#[derive(Debug, Default)]
+pub struct FetchPlan {
+    /// `(input task, nbytes, addr span into addr_bytes)`.
+    inputs: Vec<(TaskId, u64, (u32, u32))>,
+    addr_bytes: String,
+    key: String,
+}
+
+impl FetchPlan {
+    pub fn new() -> FetchPlan {
+        FetchPlan::default()
+    }
+
+    pub fn n_inputs(&self) -> usize {
+        self.inputs.len()
+    }
+
+    /// The i-th input: `(producing task, nbytes, fetch address)` — an
+    /// empty address means the input is (or will be) local.
+    pub fn input(&self, i: usize) -> (TaskId, u64, &str) {
+        let (task, nbytes, (start, len)) = self.inputs[i];
+        (task, nbytes, &self.addr_bytes[start as usize..(start + len) as usize])
+    }
+
+    /// The popped task's Dask-style key (diagnostics).
+    pub fn key(&self) -> &str {
+        &self.key
+    }
+}
+
+/// The worker's `(run, task)`-keyed priority queue with run-local interned
+/// strings. One instance lives behind the worker's queue mutex; benches
+/// and tests drive it directly.
+#[derive(Debug, Default)]
+pub struct TaskQueue {
+    heap: BinaryHeap<QueuedTask>,
+    /// Tasks currently queued (O(1) steal checks).
+    pending: HashSet<(RunId, TaskId)>,
+    runs: HashMap<RunId, RunStrings>,
+}
+
+impl TaskQueue {
+    pub fn new() -> TaskQueue {
+        TaskQueue::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Whether `(run, task)` is queued and not yet started (the steal
+    /// retraction predicate).
+    pub fn is_pending(&self, run: RunId, task: TaskId) -> bool {
+        self.pending.contains(&(run, task))
+    }
+
+    /// Total input-pool entries across runs (bounded-growth diagnostics).
+    pub fn input_pool_len(&self) -> usize {
+        self.runs.values().map(|s| s.inputs.len()).sum()
+    }
+
+    /// Enqueue straight from the borrowed frame view, interning key and
+    /// addresses into the run's arenas. Warm path (run known, key seen,
+    /// addresses seen, capacities grown): zero heap allocations.
+    ///
+    /// Errors on a malformed `inputs` section or an absurd task id
+    /// (≥ [`MAX_TASK_ID`] — the view's other scalar fields were already
+    /// validated by its decode); a failed enqueue may leave orphaned pool
+    /// entries behind, which the next drain-reset or `release-run`
+    /// reclaims — the caller drops the connection anyway.
+    pub fn enqueue(&mut self, view: &ComputeTaskView<'_>) -> Result<(), CodecError> {
+        // Steady-state reclamation: once nothing is queued, no span
+        // references the pools — restart them with retained capacity so a
+        // worker that keeps up never grows them.
+        if self.heap.is_empty() {
+            for s in self.runs.values_mut() {
+                s.inputs.clear();
+            }
+        }
+        if view.task.0 >= MAX_TASK_ID {
+            // Structurally valid msgpack but an absurd id: reject before
+            // it sizes `key_of` (decode must never be able to crash us).
+            return Err(CodecError::WrongType("task"));
+        }
+        let s = self.runs.entry(view.run).or_default();
+        let idx = view.task.idx();
+        if s.key_of.len() <= idx {
+            s.key_of.resize(idx + 1, None);
+        }
+        let key = match s.key_of[idx] {
+            Some(k) => k,
+            None => {
+                // First delivery of this task: intern its key once. Keys
+                // are unique per run, so append without a content lookup.
+                let k = s.keys.append(view.key);
+                s.key_of[idx] = Some(k);
+                k
+            }
+        };
+        let start = s.inputs.len() as u32;
+        for input in view.inputs() {
+            let input = input?;
+            let addr = s.addrs.intern(input.addr);
+            s.inputs.push(InputLoc { task: input.task, addr, nbytes: input.nbytes });
+        }
+        let len = s.inputs.len() as u32 - start;
+        self.pending.insert((view.run, view.task));
+        self.heap.push(QueuedTask {
+            priority: view.priority,
+            run: view.run,
+            task: view.task,
+            payload: view.payload.clone(),
+            duration_us: view.duration_us,
+            output_size: view.output_size,
+            key,
+            inputs: (start, len),
+        });
+        Ok(())
+    }
+
+    /// Pop the highest-priority task, resolving its key and input
+    /// addresses into the caller's reused scratch (so nothing borrows the
+    /// arenas after the queue lock drops). Warm: zero allocations.
+    pub fn pop_into(&mut self, plan: &mut FetchPlan) -> Option<PoppedTask> {
+        let qt = self.heap.pop()?;
+        self.pending.remove(&(qt.run, qt.task));
+        plan.inputs.clear();
+        plan.addr_bytes.clear();
+        plan.key.clear();
+        // The run's arenas exist whenever one of its tasks is queued
+        // (release-run purges heap and arenas atomically under this lock);
+        // the defensive miss leaves an empty plan for a task the caller's
+        // released-run check will skip anyway.
+        if let Some(s) = self.runs.get(&qt.run) {
+            plan.key.push_str(s.keys.get(qt.key));
+            let (start, len) = qt.inputs;
+            for loc in &s.inputs[start as usize..(start + len) as usize] {
+                let addr = s.addrs.get(loc.addr);
+                let a0 = plan.addr_bytes.len() as u32;
+                plan.addr_bytes.push_str(addr);
+                plan.inputs.push((loc.task, loc.nbytes, (a0, addr.len() as u32)));
+            }
+        }
+        Some(PoppedTask {
+            run: qt.run,
+            task: qt.task,
+            payload: qt.payload,
+            duration_us: qt.duration_us,
+            output_size: qt.output_size,
+            priority: qt.priority,
+        })
+    }
+
+    /// Remove a task if still queued; returns whether a queued copy was
+    /// dropped (shared by steal retraction and `cancel-compute`). Cold
+    /// path: rebuilds the heap.
+    pub fn drop_queued(&mut self, run: RunId, task: TaskId) -> bool {
+        if !self.pending.remove(&(run, task)) {
+            return false;
+        }
+        let drained: Vec<QueuedTask> = self.heap.drain().collect();
+        let mut found = false;
+        for qt in drained {
+            if qt.run == run && qt.task == task {
+                found = true;
+            } else {
+                self.heap.push(qt);
+            }
+        }
+        found
+    }
+
+    /// Run retired: drop its queued tasks AND its arenas — the interned
+    /// state of a run dies with the run, bounding a long-lived worker.
+    pub fn release_run(&mut self, run: RunId) {
+        self.pending.retain(|&(r, _)| r != run);
+        let kept: Vec<QueuedTask> = self.heap.drain().filter(|qt| qt.run != run).collect();
+        self.heap.extend(kept);
+        self.runs.remove(&run);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::{encode_msg, Msg, TaskInputLoc};
+
+    fn compute(run: u32, task: u32, priority: i64, inputs: Vec<(u32, &str, u64)>) -> Vec<u8> {
+        encode_msg(&Msg::ComputeTask {
+            run: RunId(run),
+            task: TaskId(task),
+            key: format!("k-{run}-{task}"),
+            payload: Payload::BusyWait,
+            duration_us: 7,
+            output_size: 64,
+            inputs: inputs
+                .into_iter()
+                .map(|(t, a, n)| TaskInputLoc { task: TaskId(t), addr: a.into(), nbytes: n })
+                .collect(),
+            priority,
+        })
+    }
+
+    fn enqueue(q: &mut TaskQueue, bytes: &[u8]) {
+        let view = ComputeTaskView::decode(bytes).unwrap();
+        q.enqueue(&view).unwrap();
+    }
+
+    #[test]
+    fn pops_in_priority_order_with_resolved_strings() {
+        let mut q = TaskQueue::new();
+        enqueue(&mut q, &compute(0, 2, 20, vec![(0, "10.0.0.1:9000", 5)]));
+        enqueue(&mut q, &compute(0, 1, 10, vec![(0, "", 3), (2, "10.0.0.2:9000", 4)]));
+        assert_eq!(q.len(), 2);
+        assert!(q.is_pending(RunId(0), TaskId(1)));
+        let mut plan = FetchPlan::new();
+        let first = q.pop_into(&mut plan).unwrap();
+        assert_eq!(first.task, TaskId(1), "lower priority value first");
+        assert_eq!(plan.key(), "k-0-1");
+        assert_eq!(plan.n_inputs(), 2);
+        assert_eq!(plan.input(0), (TaskId(0), 3, ""));
+        assert_eq!(plan.input(1), (TaskId(2), 4, "10.0.0.2:9000"));
+        assert!(!q.is_pending(RunId(0), TaskId(1)));
+        let second = q.pop_into(&mut plan).unwrap();
+        assert_eq!(second.task, TaskId(2));
+        assert_eq!(plan.input(0), (TaskId(0), 5, "10.0.0.1:9000"));
+        assert!(q.pop_into(&mut plan).is_none());
+    }
+
+    #[test]
+    fn ties_break_by_run_then_task() {
+        let mut q = TaskQueue::new();
+        enqueue(&mut q, &compute(1, 0, 5, vec![]));
+        enqueue(&mut q, &compute(0, 3, 5, vec![]));
+        enqueue(&mut q, &compute(0, 1, 5, vec![]));
+        let mut plan = FetchPlan::new();
+        let order: Vec<(RunId, TaskId)> = std::iter::from_fn(|| {
+            q.pop_into(&mut plan).map(|p| (p.run, p.task))
+        })
+        .collect();
+        assert_eq!(
+            order,
+            vec![
+                (RunId(0), TaskId(1)),
+                (RunId(0), TaskId(3)),
+                (RunId(1), TaskId(0)),
+            ]
+        );
+    }
+
+    #[test]
+    fn drop_queued_retracts_only_queued_tasks() {
+        let mut q = TaskQueue::new();
+        enqueue(&mut q, &compute(0, 1, 1, vec![]));
+        enqueue(&mut q, &compute(0, 2, 2, vec![]));
+        assert!(q.drop_queued(RunId(0), TaskId(1)), "queued → retractable");
+        assert!(!q.drop_queued(RunId(0), TaskId(1)), "second retraction fails");
+        let mut plan = FetchPlan::new();
+        let p = q.pop_into(&mut plan).unwrap();
+        assert_eq!(p.task, TaskId(2), "survivor still pops");
+        assert!(!q.drop_queued(RunId(0), TaskId(2)), "started → not retractable");
+    }
+
+    #[test]
+    fn release_run_purges_queue_and_arenas() {
+        let mut q = TaskQueue::new();
+        enqueue(&mut q, &compute(0, 1, 1, vec![(0, "10.0.0.1:9000", 5)]));
+        enqueue(&mut q, &compute(1, 1, 2, vec![(0, "10.0.0.1:9000", 5)]));
+        q.release_run(RunId(0));
+        assert_eq!(q.len(), 1);
+        assert!(!q.is_pending(RunId(0), TaskId(1)));
+        assert!(q.is_pending(RunId(1), TaskId(1)));
+        let mut plan = FetchPlan::new();
+        let p = q.pop_into(&mut plan).unwrap();
+        assert_eq!((p.run, p.task), (RunId(1), TaskId(1)));
+        assert_eq!(plan.input(0).2, "10.0.0.1:9000", "other run's arena intact");
+    }
+
+    #[test]
+    fn redelivery_reuses_the_interned_key() {
+        // A steal re-assignment re-delivers the same (run, task): the key
+        // arena must not grow a second copy.
+        let mut q = TaskQueue::new();
+        let bytes = compute(0, 4, 9, vec![(1, "10.0.0.9:9000", 2)]);
+        enqueue(&mut q, &bytes);
+        let mut plan = FetchPlan::new();
+        q.pop_into(&mut plan).unwrap();
+        enqueue(&mut q, &bytes);
+        q.pop_into(&mut plan).unwrap();
+        assert_eq!(plan.key(), "k-0-4");
+        let s = q.runs.get(&RunId(0)).unwrap();
+        assert_eq!(s.keys.len(), 1, "one interned key despite re-delivery");
+        assert_eq!(s.addrs.len(), 1, "address content-deduplicated");
+    }
+
+    #[test]
+    fn input_pool_resets_when_queue_drains() {
+        let mut q = TaskQueue::new();
+        let mut plan = FetchPlan::new();
+        for wave in 0..50 {
+            enqueue(&mut q, &compute(0, 1, 1, vec![(0, "10.0.0.1:9000", 5)]));
+            enqueue(&mut q, &compute(0, 2, 2, vec![(0, "10.0.0.1:9000", 5), (1, "", 1)]));
+            q.pop_into(&mut plan).unwrap();
+            q.pop_into(&mut plan).unwrap();
+            assert!(
+                q.input_pool_len() <= 3,
+                "wave {wave}: pool must reset on drain, got {}",
+                q.input_pool_len()
+            );
+        }
+    }
+
+    #[test]
+    fn absurd_task_id_is_rejected_not_allocated() {
+        // A corrupt frame with a huge task id must error through the
+        // bad-message path, never size key_of from it.
+        let mut q = TaskQueue::new();
+        let bytes = compute(0, MAX_TASK_ID, 1, vec![]);
+        let view = ComputeTaskView::decode(&bytes).unwrap();
+        assert!(q.enqueue(&view).is_err());
+        assert_eq!(q.len(), 0);
+        assert!(!q.is_pending(RunId(0), TaskId(MAX_TASK_ID)));
+    }
+
+    #[test]
+    fn interned_enqueue_matches_owned_decode() {
+        // Behavior parity: the fields the executor sees through the
+        // interned path equal the owned decode of the same frame.
+        let bytes = compute(3, 7, -5, vec![(5, "10.1.1.1:9999", 11), (6, "", 0)]);
+        let Msg::ComputeTask { run, task, key, payload, duration_us, output_size, inputs, priority } =
+            crate::protocol::decode_msg(&bytes).unwrap()
+        else {
+            panic!("wrong op")
+        };
+        let mut q = TaskQueue::new();
+        enqueue(&mut q, &bytes);
+        let mut plan = FetchPlan::new();
+        let p = q.pop_into(&mut plan).unwrap();
+        assert_eq!((p.run, p.task, p.priority), (run, task, priority));
+        assert_eq!(p.payload, payload);
+        assert_eq!((p.duration_us, p.output_size), (duration_us, output_size));
+        assert_eq!(plan.key(), key);
+        assert_eq!(plan.n_inputs(), inputs.len());
+        for (i, l) in inputs.iter().enumerate() {
+            assert_eq!(plan.input(i), (l.task, l.nbytes, l.addr.as_str()));
+        }
+    }
+}

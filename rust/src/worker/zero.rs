@@ -13,7 +13,8 @@
 
 use super::WorkerConfig;
 use crate::protocol::{
-    decode_msg, FrameError, FrameReader, FrameWriter, Msg, RunId, TaskFinishedInfo,
+    decode_msg, peek_op, ComputeTaskView, FrameError, FrameReader, FrameWriter, Msg, RunId,
+    TaskFinishedInfo,
 };
 use crate::taskgraph::TaskId;
 use anyhow::{bail, Context, Result};
@@ -92,33 +93,51 @@ pub fn run_zero_worker(cfg: WorkerConfig) -> Result<ZeroWorkerHandle> {
                 if stop.load(Ordering::SeqCst) {
                     break;
                 }
-                let msg = match frames_in.read(&mut stream) {
-                    Ok(bytes) => match decode_msg(bytes) {
-                        Ok(m) => m,
-                        Err(_) => break,
-                    },
+                let bytes = match frames_in.read(&mut stream) {
+                    Ok(bytes) => bytes,
                     Err(FrameError::Closed) => break,
                     Err(_) => break,
                 };
-                match msg {
-                    Msg::ComputeTask { run, task, inputs, output_size, .. } => {
-                        // Infinitely fast download of any missing input.
-                        for loc in &inputs {
-                            would_have.insert((run, loc.task));
-                        }
-                        would_have.insert((run, task));
-                        // Immediate completion, zero duration.
-                        if send(&Msg::TaskFinished(TaskFinishedInfo {
-                            run,
-                            task,
-                            nbytes: output_size,
-                            duration_us: 0,
-                        }))
-                        .is_err()
-                        {
-                            break;
+                // The zero worker is the §VI-D message-throughput probe:
+                // decode assignments through the borrowed view so its
+                // per-task path is as allocation-free as the server's.
+                if matches!(peek_op(bytes), Ok("compute-task")) {
+                    let Ok(view) = ComputeTaskView::decode(bytes) else { break };
+                    // Infinitely fast download of any missing input.
+                    let mut bad_inputs = false;
+                    for loc in view.inputs() {
+                        match loc {
+                            Ok(l) => {
+                                would_have.insert((view.run, l.task));
+                            }
+                            Err(_) => {
+                                bad_inputs = true;
+                                break;
+                            }
                         }
                     }
+                    if bad_inputs {
+                        break;
+                    }
+                    would_have.insert((view.run, view.task));
+                    // Immediate completion, zero duration.
+                    if send(&Msg::TaskFinished(TaskFinishedInfo {
+                        run: view.run,
+                        task: view.task,
+                        nbytes: view.output_size,
+                        duration_us: 0,
+                    }))
+                    .is_err()
+                    {
+                        break;
+                    }
+                    continue;
+                }
+                let msg = match decode_msg(bytes) {
+                    Ok(m) => m,
+                    Err(_) => break,
+                };
+                match msg {
                     Msg::StealRequest { run, task } => {
                         // Already "finished" — retraction always fails.
                         if send(&Msg::StealResponse { run, task, ok: false }).is_err() {

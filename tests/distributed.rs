@@ -453,6 +453,81 @@ fn worker_killed_while_runs_parked_recovers_and_activates() {
 }
 
 #[test]
+fn client_retries_budget_exhausted_run_over_tcp() {
+    // PR 5 satellite: with the server's recovery budget at 0, a worker
+    // death mid-run fails the run ("recovery budget exhausted"). A client
+    // opted into with_retry_exhausted resubmits transparently and the
+    // retry completes on the survivors — run_graph returns success under
+    // the original call.
+    let srv = serve(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        scheduler: "ws".into(),
+        seed: 42,
+        max_recoveries: 0,
+        ..ServerConfig::default()
+    })
+    .expect("server start");
+    let addr = srv.addr.to_string();
+    let mut ws = workers(&addr, 3);
+    let victim = ws.remove(0);
+    let mut client = Client::connect(&addr, "retrier").unwrap().with_retry_exhausted(2);
+    // ~6 s of work on 3 cores; the kill at 400 ms lands well inside the
+    // run with assignments (and likely outputs) on the victim, so the
+    // zero-budget recovery fails the first attempt.
+    let g = graphgen::merge_slow(60, 100_000);
+    let killer = std::thread::spawn(move || {
+        std::thread::sleep(std::time::Duration::from_millis(400));
+        victim.shutdown();
+    });
+    let res = client.run_graph(&g).expect("retry must rescue the run");
+    killer.join().unwrap();
+    assert_eq!(res.n_tasks, 61);
+    assert_eq!(client.retries_used(), 1, "exactly one resubmission");
+    // Only the successful attempt produces a report (failed runs never
+    // complete), and it ran entirely on the two survivors.
+    let reports = srv.reports();
+    assert_eq!(reports.len(), 1, "{reports:?}");
+    assert_eq!(reports[0].n_tasks, 61);
+    for w in &ws {
+        w.shutdown();
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn retry_disabled_surfaces_exhausted_failure() {
+    // Without the opt-in, the same scenario surfaces the failure to the
+    // caller (the pre-PR5 behavior, now under budget 0).
+    let srv = serve(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        scheduler: "ws".into(),
+        seed: 42,
+        max_recoveries: 0,
+        ..ServerConfig::default()
+    })
+    .expect("server start");
+    let addr = srv.addr.to_string();
+    let mut ws = workers(&addr, 3);
+    let victim = ws.remove(0);
+    let mut client = Client::connect(&addr, "no-retry").unwrap();
+    let g = graphgen::merge_slow(60, 100_000);
+    let killer = std::thread::spawn(move || {
+        std::thread::sleep(std::time::Duration::from_millis(400));
+        victim.shutdown();
+    });
+    let err = client.run_graph(&g).expect_err("budget 0 must fail the run");
+    killer.join().unwrap();
+    assert!(
+        err.to_string().contains("recovery budget exhausted"),
+        "unexpected failure: {err}"
+    );
+    for w in &ws {
+        w.shutdown();
+    }
+    srv.shutdown();
+}
+
+#[test]
 fn report_retention_bounds_server_history() {
     // Regression: long-lived servers must not grow report history without
     // bound. With retention 2, five runs leave a 2-report window while

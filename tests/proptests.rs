@@ -1018,3 +1018,245 @@ fn prop_generated_benchmarks_are_valid_dags() {
         Ok(())
     });
 }
+
+// ---- interned per-task path (PR 5 tentpole) ----
+
+/// Sink that checks, for every dispatched assignment, that the borrowed
+/// encode is byte-identical to encoding the owned message — then forwards
+/// the owned form so the drive loop can keep executing.
+struct ByteCheckSink {
+    msgs: Vec<(Dest, Msg)>,
+    mismatches: usize,
+    computes: usize,
+}
+
+impl rsds::server::OutboundSink for ByteCheckSink {
+    fn emit_msg(&mut self, dest: Dest, msg: Msg) {
+        self.msgs.push((dest, msg));
+    }
+
+    fn emit_compute(&mut self, d: &rsds::server::ComputeDispatch<'_>) {
+        let owned = d.to_msg();
+        let owned_bytes = rsds::protocol::encode_msg(&owned);
+        let mut borrowed = Vec::new();
+        d.encode_into(&mut borrowed);
+        if borrowed != owned_bytes {
+            self.mismatches += 1;
+        }
+        self.computes += 1;
+        self.msgs.push((Dest::Worker(d.worker), owned));
+    }
+}
+
+#[test]
+fn prop_dispatch_byte_identity_over_random_graphs() {
+    // Random graphs, random steal outcomes: every assignment the reactor
+    // ever emits (first placement AND steal re-assignment) must encode
+    // identically through the borrowed and owned paths.
+    check(
+        "dispatch byte identity",
+        PropConfig { cases: scaled_cases(40), seed: 4242 },
+        |rng| {
+            let graph = random_graph(rng);
+            let n_tasks = graph.len() as u64;
+            let n_workers = rng.range_usize(1, 5) as u32;
+            let mut r = Reactor::new(
+                SchedulerPool::new("ws", rng.next_u64()).unwrap(),
+                RuntimeProfile::rust(),
+                false,
+            );
+            let mut out: Vec<(Dest, Msg)> = Vec::new();
+            r.on_message(
+                Origin::Unregistered { conn: 99 },
+                Msg::RegisterClient { name: "c".into() },
+                &mut out,
+            );
+            for i in 0..n_workers {
+                r.on_message(
+                    Origin::Unregistered { conn: i as u64 },
+                    Msg::RegisterWorker {
+                        name: format!("w{i}"),
+                        ncores: 1,
+                        node: 0,
+                        data_addr: format!("10.0.0.{i}:9000"),
+                    },
+                    &mut out,
+                );
+            }
+            out.clear();
+            r.on_message(
+                Origin::Client(0),
+                Msg::SubmitGraph { graph, scheduler: None },
+                &mut out,
+            );
+            let mut sink =
+                ByteCheckSink { msgs: std::mem::take(&mut out), mismatches: 0, computes: 0 };
+            let mut done = 0u64;
+            let mut guard = 0u64;
+            loop {
+                guard += 1;
+                if guard > 1_000_000 {
+                    return Err("drive stuck".into());
+                }
+                r.drain_into(&mut sink);
+                sink.msgs.append(&mut out);
+                let Some((dest, msg)) = sink.msgs.pop() else { break };
+                match (dest, msg) {
+                    (Dest::Worker(w), Msg::ComputeTask { run, task, output_size, .. }) => {
+                        r.on_message(
+                            Origin::Worker(w),
+                            Msg::TaskFinished(TaskFinishedInfo {
+                                run,
+                                task,
+                                nbytes: output_size,
+                                duration_us: 1,
+                            }),
+                            &mut out,
+                        );
+                    }
+                    (Dest::Worker(w), Msg::StealRequest { run, task }) => {
+                        r.on_message(
+                            Origin::Worker(w),
+                            Msg::StealResponse { run, task, ok: rng.chance(0.5) },
+                            &mut out,
+                        );
+                    }
+                    (_, Msg::GraphDone { n_tasks: n, .. }) => done = n,
+                    (_, Msg::GraphFailed { reason, .. }) => {
+                        return Err(format!("graph failed: {reason}"));
+                    }
+                    _ => {}
+                }
+            }
+            if sink.mismatches != 0 {
+                return Err(format!("{} byte mismatches", sink.mismatches));
+            }
+            if done != n_tasks {
+                return Err(format!("completed {done}/{n_tasks} tasks"));
+            }
+            if sink.computes < graph_len_floor(n_tasks) {
+                return Err(format!("only {} assignments dispatched", sink.computes));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Every task is assigned at least once, so the dispatched count can never
+/// be below the task count.
+fn graph_len_floor(n_tasks: u64) -> usize {
+    n_tasks as usize
+}
+
+#[test]
+fn prop_interned_queue_parity_with_owned_decode() {
+    // The worker-side half: for random batches of compute-task frames,
+    // the interned queue (borrowed view -> arenas -> pop) must observe
+    // exactly the fields and ordering the owned decode implies.
+    use rsds::protocol::ComputeTaskView;
+    use rsds::worker::queue::{FetchPlan, TaskQueue};
+    check(
+        "interned queue parity",
+        PropConfig { cases: scaled_cases(120), seed: 5151 },
+        |rng| {
+            let n = rng.range_usize(1, 40);
+            let mut used: HashSet<(u32, u32)> = HashSet::new();
+            let mut msgs: Vec<Msg> = Vec::new();
+            for _ in 0..n {
+                let run = rng.gen_range(3) as u32;
+                let task = rng.gen_range(64) as u32;
+                if !used.insert((run, task)) {
+                    continue; // unique (run, task) per batch
+                }
+                let inputs: Vec<TaskInputLoc> = (0..rng.range_usize(0, 4))
+                    .map(|j| TaskInputLoc {
+                        task: TaskId(j as u32),
+                        addr: if rng.chance(0.5) {
+                            format!("10.0.{}.{}:9000", rng.gen_range(4), rng.gen_range(8))
+                        } else {
+                            String::new()
+                        },
+                        nbytes: rng.next_u64() >> 40,
+                    })
+                    .collect();
+                msgs.push(Msg::ComputeTask {
+                    run: RunId(run),
+                    task: TaskId(task),
+                    key: format!("key-{run}-{task}"),
+                    payload: Payload::BusyWait,
+                    duration_us: rng.gen_range(100_000),
+                    output_size: rng.gen_range(100_000),
+                    inputs,
+                    priority: (rng.gen_range(32) as i64) - 16, // dense: forces ties
+                });
+            }
+            // Truncation totality on the hot frame (any prefix errors).
+            let first_bytes = rsds::protocol::encode_msg(&msgs[0]);
+            for cut in 0..first_bytes.len() {
+                if ComputeTaskView::decode(&first_bytes[..cut]).is_ok() {
+                    return Err(format!("truncated view decode Ok at {cut}"));
+                }
+            }
+            let mut q = TaskQueue::new();
+            for m in &msgs {
+                let bytes = rsds::protocol::encode_msg(m);
+                let view = ComputeTaskView::decode(&bytes).map_err(|e| e.to_string())?;
+                q.enqueue(&view).map_err(|e| e.to_string())?;
+            }
+            // Documented pop order: (priority, run, task) ascending.
+            let mut expected: Vec<&Msg> = msgs.iter().collect();
+            expected.sort_by_key(|m| match m {
+                Msg::ComputeTask { priority, run, task, .. } => (*priority, run.0, task.0),
+                _ => unreachable!(),
+            });
+            let mut plan = FetchPlan::new();
+            for m in expected {
+                let Msg::ComputeTask {
+                    run,
+                    task,
+                    key,
+                    payload,
+                    duration_us,
+                    output_size,
+                    inputs,
+                    priority,
+                } = m
+                else {
+                    unreachable!()
+                };
+                let p = q.pop_into(&mut plan).ok_or("queue drained early")?;
+                if (p.run, p.task, p.priority) != (*run, *task, *priority) {
+                    return Err(format!(
+                        "pop order: got ({}, {}, {}), want ({run}, {task}, {priority})",
+                        p.run, p.task, p.priority
+                    ));
+                }
+                if plan.key() != key {
+                    return Err(format!("key: got {:?}, want {key:?}", plan.key()));
+                }
+                if p.payload != *payload
+                    || p.duration_us != *duration_us
+                    || p.output_size != *output_size
+                {
+                    return Err(format!("scalar fields diverged for {run}/{task}"));
+                }
+                if plan.n_inputs() != inputs.len() {
+                    return Err(format!(
+                        "inputs: got {}, want {}",
+                        plan.n_inputs(),
+                        inputs.len()
+                    ));
+                }
+                for (i, l) in inputs.iter().enumerate() {
+                    if plan.input(i) != (l.task, l.nbytes, l.addr.as_str()) {
+                        return Err(format!("input {i} diverged for {run}/{task}"));
+                    }
+                }
+            }
+            if q.pop_into(&mut plan).is_some() {
+                return Err("queue had leftover tasks".into());
+            }
+            Ok(())
+        },
+    );
+}
