@@ -26,6 +26,7 @@ pub mod client;
 pub mod graphgen;
 pub mod intern;
 pub mod metrics;
+pub mod modelcheck;
 pub mod msgpack;
 pub mod overhead;
 pub mod protocol;
@@ -33,6 +34,7 @@ pub mod runtime;
 pub mod scheduler;
 pub mod server;
 pub mod sim;
+pub mod sync;
 pub mod taskgraph;
 pub mod testing;
 pub mod util;

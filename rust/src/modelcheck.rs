@@ -1,0 +1,967 @@
+//! Offline stand-in for the `loom` exhaustive model checker.
+//!
+//! The verification layer (see `docs/verification.md`) wants loom-style
+//! exhaustive interleaving exploration for the repo's small concurrency
+//! cores: the worker's one-mutex [`TaskQueue`](crate::worker::TaskQueue),
+//! the reactor's report window behind the [`ServerHandle`] mutex, the
+//! writer-registry/`flush_batches` shutdown protocol, and the runtime's
+//! global-init pattern. The build environment is offline and the crate is
+//! dependency-free, so — exactly like [`crate::testing`] stands in for
+//! `proptest` — this module is a small, self-contained model checker with
+//! loom's API shape:
+//!
+//! - [`Mutex`], [`Condvar`], [`thread::spawn`]/[`thread::JoinHandle`] and
+//!   the [`atomic`] types mirror their `std::sync` counterparts. Outside a
+//!   model run they *are* thin wrappers over std (passthrough mode), so
+//!   the library still works normally when compiled with `--cfg loom`.
+//! - [`model`] runs a closure repeatedly, exploring every distinguishable
+//!   thread interleaving by DFS over the scheduler's decision points. Each
+//!   primitive operation (lock, unlock, condvar wait/notify, atomic
+//!   access, spawn, join) is a *schedule point*: the single cooperative
+//!   scheduler picks which thread runs next, and on later iterations picks
+//!   differently, backtracking like loom's `branch` vector.
+//! - A model failure (assertion panic inside any model thread, or a
+//!   detected deadlock) aborts the iteration and re-panics on the caller's
+//!   thread with the failing schedule, so the exact interleaving can be
+//!   replayed by eye.
+//!
+//! # Soundness and limits
+//!
+//! The explorer is *sequentially consistent*: atomics are executed with
+//! their real `Ordering` but interleavings are only explored at operation
+//! granularity, so weak-memory reorderings (store buffering etc.) are not
+//! modelled — fine for this codebase, which guards everything with mutexes
+//! and uses atomics only for stop flags. `notify_one` is modelled as
+//! `notify_all` (a legal over-approximation: spurious wakeups are allowed
+//! by std, so every `Condvar` consumer must already re-check its predicate
+//! in a loop, and the model verifies exactly that). Models must be
+//! *deterministic* given a schedule: don't branch on `HashMap` iteration
+//! order or wall-clock time, and use only the primitives in this module —
+//! a model thread that blocks in a raw `std::sync` primitive is invisible
+//! to the scheduler and will be reported as a deadlock.
+//!
+//! This module is compiled unconditionally (not just under `--cfg loom`)
+//! so its own unit tests run in the tier-1 suite; the production library
+//! only *routes* through it when built with `--cfg loom` (see
+//! [`crate::sync`]).
+//!
+//! [`ServerHandle`]: crate::server::net::ServerHandle
+//! [`TaskQueue`]: crate::worker::queue::TaskQueue
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::ops::{Deref, DerefMut};
+use std::panic::{catch_unwind, panic_any, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::{
+    Arc as StdArc, Condvar as StdCondvar, LockResult, Mutex as StdMutex,
+    MutexGuard as StdMutexGuard, PoisonError,
+};
+
+/// Hard cap on model threads per iteration (models are meant to be tiny).
+pub const MAX_THREADS: usize = 16;
+
+/// Default cap on explored schedules before the checker gives up.
+pub const DEFAULT_MAX_ITERATIONS: usize = 1 << 20;
+
+/// Summary of a completed (exhaustive) exploration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Report {
+    /// Number of distinct schedules executed.
+    pub iterations: usize,
+}
+
+/// Sentinel panic payload used to unwind model threads when the iteration
+/// has already failed elsewhere; never reported as the failure itself.
+struct Abort;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum ThreadState {
+    /// May be chosen by the scheduler.
+    Runnable,
+    /// Waiting for the mutex at this address to be released.
+    BlockedLock(usize),
+    /// Waiting for a notify on the condvar at this address.
+    BlockedCv(usize),
+    /// Waiting for thread `n` to finish.
+    BlockedJoin(usize),
+    Finished,
+}
+
+/// `active` value meaning "no thread scheduled" (iteration complete).
+const NOBODY: usize = usize::MAX;
+
+struct SchedState {
+    threads: Vec<ThreadState>,
+    /// Index of the one thread allowed to execute user code right now.
+    active: usize,
+    /// DFS decision vector: choice taken at each branching schedule point.
+    schedule: Vec<usize>,
+    /// Number of enabled threads observed at each branching point.
+    branch_counts: Vec<usize>,
+    /// Next decision index.
+    pos: usize,
+    /// Mutex address → owning thread.
+    locks: HashMap<usize, usize>,
+    /// First failure (assertion message or deadlock report) this iteration.
+    panic: Option<String>,
+}
+
+/// The per-iteration cooperative scheduler. All model threads block on
+/// `cv` until `state.active` names them; every state change that could
+/// unblock anyone calls `notify_all`, and every waiter re-checks its
+/// predicate, so wakeups cannot be lost.
+struct Sched {
+    state: StdMutex<SchedState>,
+    cv: StdCondvar,
+    /// OS handles of spawned model threads, joined by the monitor after
+    /// the iteration completes (kept outside `state` so joining never
+    /// holds the scheduler lock).
+    os_handles: StdMutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+thread_local! {
+    /// The scheduler context of the current OS thread, when it is a model
+    /// thread. `None` means passthrough: primitives behave like std.
+    static CTX: RefCell<Option<(StdArc<Sched>, usize)>> = const { RefCell::new(None) };
+}
+
+fn ctx() -> Option<(StdArc<Sched>, usize)> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+fn lock_ignore_poison<T>(m: &StdMutex<T>) -> StdMutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+impl Sched {
+    fn new(schedule: Vec<usize>, branch_counts: Vec<usize>) -> Sched {
+        Sched {
+            state: StdMutex::new(SchedState {
+                threads: vec![ThreadState::Runnable],
+                active: 0,
+                schedule,
+                branch_counts,
+                pos: 0,
+                locks: HashMap::new(),
+                panic: None,
+            }),
+            cv: StdCondvar::new(),
+            os_handles: StdMutex::new(Vec::new()),
+        }
+    }
+
+    /// Pick the next thread to run. Consumes one DFS decision when more
+    /// than one thread is enabled; detects deadlock when none is and the
+    /// iteration is not complete. Always notifies, so whoever was picked
+    /// (or the monitor) wakes up.
+    fn pick_locked(&self, st: &mut SchedState) {
+        if st.panic.is_some() {
+            self.cv.notify_all();
+            return;
+        }
+        let enabled: Vec<usize> = st
+            .threads
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| **t == ThreadState::Runnable)
+            .map(|(i, _)| i)
+            .collect();
+        if enabled.is_empty() {
+            if st.threads.iter().all(|t| *t == ThreadState::Finished) {
+                st.active = NOBODY;
+            } else {
+                st.panic = Some(format!(
+                    "deadlock: every unfinished thread is blocked ({:?})",
+                    st.threads
+                ));
+            }
+            self.cv.notify_all();
+            return;
+        }
+        let choice = if enabled.len() == 1 {
+            0
+        } else {
+            let c = if st.pos < st.schedule.len() {
+                // Replaying a prefix; clamp defensively in case the model
+                // was not schedule-deterministic.
+                st.schedule[st.pos].min(enabled.len() - 1)
+            } else {
+                st.schedule.push(0);
+                st.branch_counts.push(enabled.len());
+                0
+            };
+            st.pos += 1;
+            c
+        };
+        st.active = enabled[choice];
+        self.cv.notify_all();
+    }
+
+    /// Block until this thread is the active one (or the iteration has
+    /// failed, in which case unwind with [`Abort`]).
+    fn wait_active(&self, mut st: StdMutexGuard<'_, SchedState>, me: usize) {
+        loop {
+            if st.panic.is_some() {
+                drop(st);
+                panic_any(Abort);
+            }
+            if st.active == me {
+                return;
+            }
+            st = self.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// A plain preemption point: let the scheduler (possibly) hand control
+    /// to another thread before the caller's next primitive operation.
+    fn schedule_point(&self, me: usize) {
+        let mut st = lock_ignore_poison(&self.state);
+        self.pick_locked(&mut st);
+        self.wait_active(st, me);
+    }
+
+    /// Block `me` in `blocked`, schedule someone else, and return once
+    /// `me` is runnable *and* scheduled again.
+    fn block_and_wait(&self, mut st: StdMutexGuard<'_, SchedState>, me: usize, blocked: ThreadState) {
+        st.threads[me] = blocked;
+        self.pick_locked(&mut st);
+        self.wait_active(st, me);
+    }
+
+    fn wake(st: &mut SchedState, pred: impl Fn(&ThreadState) -> bool) {
+        for t in st.threads.iter_mut() {
+            if pred(t) {
+                *t = ThreadState::Runnable;
+            }
+        }
+    }
+
+    fn lock_acquire(&self, me: usize, addr: usize) {
+        self.schedule_point(me);
+        loop {
+            let mut st = lock_ignore_poison(&self.state);
+            if st.panic.is_some() {
+                drop(st);
+                panic_any(Abort);
+            }
+            if let std::collections::hash_map::Entry::Vacant(e) = st.locks.entry(addr) {
+                e.insert(me);
+                return;
+            }
+            self.block_and_wait(st, me, ThreadState::BlockedLock(addr));
+        }
+    }
+
+    /// Release a lock. `during_unwind` skips the handoff wait (a second
+    /// panic while unwinding would abort the process).
+    fn lock_release(&self, me: usize, addr: usize, during_unwind: bool) {
+        let mut st = lock_ignore_poison(&self.state);
+        st.locks.remove(&addr);
+        Self::wake(&mut st, |t| *t == ThreadState::BlockedLock(addr));
+        if during_unwind {
+            self.cv.notify_all();
+            return;
+        }
+        self.pick_locked(&mut st);
+        self.wait_active(st, me);
+    }
+
+    /// Atomically release `lock_addr`, block on `cv_addr`, and re-acquire
+    /// the lock once notified and scheduled.
+    fn cv_wait(&self, me: usize, cv_addr: usize, lock_addr: usize) {
+        {
+            let mut st = lock_ignore_poison(&self.state);
+            st.locks.remove(&lock_addr);
+            Self::wake(&mut st, |t| *t == ThreadState::BlockedLock(lock_addr));
+            self.block_and_wait(st, me, ThreadState::BlockedCv(cv_addr));
+        }
+        loop {
+            let mut st = lock_ignore_poison(&self.state);
+            if st.panic.is_some() {
+                drop(st);
+                panic_any(Abort);
+            }
+            if let std::collections::hash_map::Entry::Vacant(e) = st.locks.entry(lock_addr) {
+                e.insert(me);
+                return;
+            }
+            self.block_and_wait(st, me, ThreadState::BlockedLock(lock_addr));
+        }
+    }
+
+    fn cv_notify(&self, me: usize, cv_addr: usize) {
+        self.schedule_point(me);
+        let mut st = lock_ignore_poison(&self.state);
+        Self::wake(&mut st, |t| *t == ThreadState::BlockedCv(cv_addr));
+        self.cv.notify_all();
+    }
+
+    fn join_wait(&self, me: usize, target: usize) {
+        self.schedule_point(me);
+        loop {
+            let mut st = lock_ignore_poison(&self.state);
+            if st.panic.is_some() {
+                drop(st);
+                panic_any(Abort);
+            }
+            if st.threads[target] == ThreadState::Finished {
+                return;
+            }
+            self.block_and_wait(st, me, ThreadState::BlockedJoin(target));
+        }
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "model thread panicked with a non-string payload".to_string()
+    }
+}
+
+/// Body of every model OS thread: wait to be scheduled, run the user
+/// closure, then record the outcome and hand control onward.
+fn thread_main(sched: StdArc<Sched>, me: usize, body: impl FnOnce()) {
+    CTX.with(|c| *c.borrow_mut() = Some((sched.clone(), me)));
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        let st = lock_ignore_poison(&sched.state);
+        sched.wait_active(st, me);
+        body();
+    }));
+    CTX.with(|c| *c.borrow_mut() = None);
+    let mut st = lock_ignore_poison(&sched.state);
+    if let Err(payload) = result {
+        if payload.downcast_ref::<Abort>().is_none() && st.panic.is_none() {
+            st.panic = Some(panic_message(payload.as_ref()));
+        }
+    }
+    st.threads[me] = ThreadState::Finished;
+    Sched::wake(&mut st, |t| *t == ThreadState::BlockedJoin(me));
+    sched.pick_locked(&mut st);
+}
+
+// ---------------------------------------------------------------------------
+// Public primitives (std-shaped; passthrough outside a model run)
+// ---------------------------------------------------------------------------
+
+/// A mutex whose lock/unlock are schedule points under [`model`]; a plain
+/// `std::sync::Mutex` otherwise.
+#[derive(Debug, Default)]
+pub struct Mutex<T: ?Sized> {
+    inner: StdMutex<T>,
+}
+
+/// Guard for [`Mutex`]; releases the model lock (a schedule point) on drop.
+#[derive(Debug)]
+pub struct MutexGuard<'a, T: ?Sized> {
+    std: Option<StdMutexGuard<'a, T>>,
+    lock: &'a Mutex<T>,
+    model: bool,
+}
+
+impl<T> Mutex<T> {
+    pub fn new(t: T) -> Mutex<T> {
+        Mutex { inner: StdMutex::new(t) }
+    }
+
+    pub fn into_inner(self) -> LockResult<T> {
+        self.inner.into_inner()
+    }
+}
+
+impl<T: ?Sized> Mutex<T> {
+    fn addr(&self) -> usize {
+        self as *const Mutex<T> as *const () as usize
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        if let Some((sched, me)) = ctx() {
+            sched.lock_acquire(me, self.addr());
+            // Exclusivity is enforced by the model scheduler, so the real
+            // mutex is uncontended here.
+            let std = lock_ignore_poison(&self.inner);
+            Ok(MutexGuard { std: Some(std), lock: self, model: true })
+        } else {
+            match self.inner.lock() {
+                Ok(std) => Ok(MutexGuard { std: Some(std), lock: self, model: false }),
+                Err(p) => Err(PoisonError::new(MutexGuard {
+                    std: Some(p.into_inner()),
+                    lock: self,
+                    model: false,
+                })),
+            }
+        }
+    }
+
+    pub fn get_mut(&mut self) -> LockResult<&mut T> {
+        self.inner.get_mut()
+    }
+}
+
+impl<T: ?Sized> Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.std.as_deref().unwrap_or_else(|| unreachable!("guard taken"))
+    }
+}
+
+impl<T: ?Sized> DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.std.as_deref_mut().unwrap_or_else(|| unreachable!("guard taken"))
+    }
+}
+
+impl<T: ?Sized> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        // Drop the std guard first so the data is unlocked before any
+        // other model thread is scheduled.
+        self.std = None;
+        if self.model {
+            if let Some((sched, me)) = ctx() {
+                sched.lock_release(me, self.lock.addr(), std::thread::panicking());
+            }
+        }
+    }
+}
+
+/// A condvar whose wait/notify are schedule points under [`model`].
+/// `notify_one` is modelled as `notify_all` (legal: spurious wakeups).
+#[derive(Debug, Default)]
+pub struct Condvar {
+    inner: StdCondvar,
+}
+
+impl Condvar {
+    pub fn new() -> Condvar {
+        Condvar { inner: StdCondvar::new() }
+    }
+
+    fn addr(&self) -> usize {
+        self as *const Condvar as usize
+    }
+
+    pub fn wait<'a, T: ?Sized>(&self, mut guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        if guard.model {
+            let (sched, me) = ctx().unwrap_or_else(|| {
+                unreachable!("model guard outside model context")
+            });
+            let lock = guard.lock;
+            // Neutralize the guard: we release through the scheduler, not
+            // through Drop.
+            guard.std = None;
+            guard.model = false;
+            drop(guard);
+            sched.cv_wait(me, self.addr(), lock.addr());
+            let std = lock_ignore_poison(&lock.inner);
+            Ok(MutexGuard { std: Some(std), lock, model: true })
+        } else {
+            let std = guard.std.take().unwrap_or_else(|| unreachable!("guard taken"));
+            let lock = guard.lock;
+            drop(guard);
+            match self.inner.wait(std) {
+                Ok(std) => Ok(MutexGuard { std: Some(std), lock, model: false }),
+                Err(p) => Err(PoisonError::new(MutexGuard {
+                    std: Some(p.into_inner()),
+                    lock,
+                    model: false,
+                })),
+            }
+        }
+    }
+
+    pub fn wait_while<'a, T: ?Sized, F>(
+        &self,
+        mut guard: MutexGuard<'a, T>,
+        mut condition: F,
+    ) -> LockResult<MutexGuard<'a, T>>
+    where
+        F: FnMut(&mut T) -> bool,
+    {
+        while condition(&mut guard) {
+            guard = self.wait(guard)?;
+        }
+        Ok(guard)
+    }
+
+    pub fn notify_one(&self) {
+        self.notify_all();
+    }
+
+    pub fn notify_all(&self) {
+        if let Some((sched, me)) = ctx() {
+            sched.cv_notify(me, self.addr());
+        } else {
+            self.inner.notify_all();
+        }
+    }
+}
+
+/// Atomic types whose every access is a schedule point under [`model`].
+/// Operations execute with their real `Ordering`; the explorer itself is
+/// sequentially consistent (see the module docs).
+pub mod atomic {
+    pub use std::sync::atomic::Ordering;
+
+    fn sync_point() {
+        if let Some((sched, me)) = super::ctx() {
+            sched.schedule_point(me);
+        }
+    }
+
+    macro_rules! model_atomic {
+        ($name:ident, $std:ty, $val:ty) => {
+            #[derive(Debug, Default)]
+            pub struct $name {
+                inner: $std,
+            }
+
+            impl $name {
+                pub const fn new(v: $val) -> $name {
+                    $name { inner: <$std>::new(v) }
+                }
+
+                pub fn load(&self, order: Ordering) -> $val {
+                    sync_point();
+                    self.inner.load(order)
+                }
+
+                pub fn store(&self, v: $val, order: Ordering) {
+                    sync_point();
+                    self.inner.store(v, order);
+                }
+
+                pub fn swap(&self, v: $val, order: Ordering) -> $val {
+                    sync_point();
+                    self.inner.swap(v, order)
+                }
+
+                pub fn compare_exchange(
+                    &self,
+                    current: $val,
+                    new: $val,
+                    success: Ordering,
+                    failure: Ordering,
+                ) -> Result<$val, $val> {
+                    sync_point();
+                    self.inner.compare_exchange(current, new, success, failure)
+                }
+            }
+        };
+    }
+
+    model_atomic!(AtomicBool, std::sync::atomic::AtomicBool, bool);
+    model_atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+    model_atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+    model_atomic!(AtomicU32, std::sync::atomic::AtomicU32, u32);
+
+    impl AtomicUsize {
+        pub fn fetch_add(&self, v: usize, order: Ordering) -> usize {
+            sync_point();
+            self.inner.fetch_add(v, order)
+        }
+    }
+
+    impl AtomicU64 {
+        pub fn fetch_add(&self, v: u64, order: Ordering) -> u64 {
+            sync_point();
+            self.inner.fetch_add(v, order)
+        }
+    }
+}
+
+/// Model-aware `thread::spawn`/`JoinHandle`; plain std outside a model.
+pub mod thread {
+    use super::*;
+
+    enum HandleInner<T> {
+        Std(std::thread::JoinHandle<T>),
+        Model {
+            sched: StdArc<Sched>,
+            idx: usize,
+            slot: StdArc<StdMutex<Option<T>>>,
+        },
+    }
+
+    /// Join handle mirroring `std::thread::JoinHandle`.
+    pub struct JoinHandle<T>(HandleInner<T>);
+
+    impl<T> JoinHandle<T> {
+        pub fn join(self) -> std::thread::Result<T> {
+            match self.0 {
+                HandleInner::Std(h) => h.join(),
+                HandleInner::Model { sched, idx, slot } => {
+                    let me = ctx()
+                        .map(|(_, me)| me)
+                        .unwrap_or_else(|| unreachable!("model join outside model"));
+                    sched.join_wait(me, idx);
+                    match lock_ignore_poison(&slot).take() {
+                        Some(t) => Ok(t),
+                        // The child panicked; the explorer already
+                        // recorded it and is tearing the iteration down.
+                        None => panic_any(Abort),
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn spawn<T, F>(f: F) -> JoinHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        if let Some((sched, me)) = ctx() {
+            let idx = {
+                let mut st = lock_ignore_poison(&sched.state);
+                let idx = st.threads.len();
+                assert!(idx < MAX_THREADS, "model spawned more than {MAX_THREADS} threads");
+                st.threads.push(ThreadState::Runnable);
+                idx
+            };
+            let slot = StdArc::new(StdMutex::new(None));
+            let slot2 = StdArc::clone(&slot);
+            let sched2 = StdArc::clone(&sched);
+            let os = std::thread::spawn(move || {
+                thread_main(StdArc::clone(&sched2), idx, move || {
+                    let t = f();
+                    *lock_ignore_poison(&slot2) = Some(t);
+                });
+            });
+            lock_ignore_poison(&sched.os_handles).push(os);
+            // The child is runnable from here on — let the scheduler
+            // decide whether it preempts the parent immediately.
+            sched.schedule_point(me);
+            JoinHandle(HandleInner::Model { sched, idx, slot })
+        } else {
+            JoinHandle(HandleInner::Std(std::thread::spawn(f)))
+        }
+    }
+
+    /// An explicit extra schedule point (loom's `thread::yield_now`).
+    pub fn yield_now() {
+        if let Some((sched, me)) = ctx() {
+            sched.schedule_point(me);
+        } else {
+            std::thread::yield_now();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The explorer
+// ---------------------------------------------------------------------------
+
+/// Configuration for [`model`]; the defaults suit the repo's models.
+#[derive(Debug, Clone, Copy)]
+pub struct Builder {
+    pub max_iterations: usize,
+}
+
+impl Default for Builder {
+    fn default() -> Builder {
+        Builder { max_iterations: DEFAULT_MAX_ITERATIONS }
+    }
+}
+
+impl Builder {
+    pub fn new() -> Builder {
+        Builder::default()
+    }
+
+    pub fn max_iterations(mut self, n: usize) -> Builder {
+        self.max_iterations = n;
+        self
+    }
+
+    /// Exhaustively explore `f`. Panics (on the caller's thread, with the
+    /// failing schedule) if any explored interleaving panics or deadlocks.
+    pub fn check<F>(self, f: F) -> Report
+    where
+        F: Fn() + Send + Sync + 'static,
+    {
+        let f = StdArc::new(f);
+        let mut schedule: Vec<usize> = Vec::new();
+        let mut counts: Vec<usize> = Vec::new();
+        let mut iterations = 0usize;
+        loop {
+            iterations += 1;
+            assert!(
+                iterations <= self.max_iterations,
+                "model state space exceeded {} schedules; shrink the model",
+                self.max_iterations
+            );
+            let sched = StdArc::new(Sched::new(schedule, counts));
+            {
+                let body = StdArc::clone(&f);
+                let sched_root = StdArc::clone(&sched);
+                let os = std::thread::spawn(move || {
+                    thread_main(StdArc::clone(&sched_root), 0, move || body());
+                });
+                lock_ignore_poison(&sched.os_handles).push(os);
+            }
+            // Wait for every model thread to finish (on failure they tear
+            // themselves down via the panic flag).
+            let (out_schedule, out_counts, failure) = {
+                let mut st = lock_ignore_poison(&sched.state);
+                while !st.threads.iter().all(|t| *t == ThreadState::Finished) {
+                    st = sched.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+                }
+                (st.schedule.clone(), st.branch_counts.clone(), st.panic.clone())
+            };
+            for h in lock_ignore_poison(&sched.os_handles).drain(..) {
+                // The wrapper caught every panic; join cannot fail.
+                let _ = h.join();
+            }
+            if let Some(msg) = failure {
+                panic!(
+                    "model failed after {iterations} schedule(s): {msg}\n  failing schedule: {out_schedule:?}"
+                );
+            }
+            // DFS backtrack: bump the deepest decision that still has an
+            // unexplored branch, drop everything after it.
+            let mut next = None;
+            for i in (0..out_schedule.len()).rev() {
+                if out_schedule[i] + 1 < out_counts[i] {
+                    next = Some(i);
+                    break;
+                }
+            }
+            match next {
+                None => return Report { iterations },
+                Some(i) => {
+                    schedule = out_schedule[..=i].to_vec();
+                    schedule[i] += 1;
+                    counts = out_counts[..=i].to_vec();
+                }
+            }
+        }
+    }
+}
+
+/// Exhaustively explore `f` with default limits. See [`Builder::check`].
+pub fn model<F>(f: F) -> Report
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    Builder::new().check(f)
+}
+
+/// Run a model that is *expected to fail* (a seeded-bug regression model),
+/// returning the failure message. Panics if the model unexpectedly passes.
+pub fn model_fails<F>(f: F) -> String
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let outcome = catch_unwind(AssertUnwindSafe(|| model(f)));
+    match outcome {
+        Ok(report) => panic!(
+            "seeded-bug model unexpectedly passed all {} schedules",
+            report.iterations
+        ),
+        Err(payload) => panic_message(payload.as_ref()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::atomic::{AtomicUsize, Ordering};
+    use super::*;
+    use std::collections::HashSet;
+
+    /// Unsynchronized read-modify-write: the explorer must find both the
+    /// clean outcome (2) and the lost update (1).
+    #[test]
+    fn explorer_finds_lost_update() {
+        let outcomes: StdArc<StdMutex<HashSet<usize>>> = StdArc::default();
+        let sink = StdArc::clone(&outcomes);
+        model(move || {
+            let x = StdArc::new(AtomicUsize::new(0));
+            let handles: Vec<_> = (0..2)
+                .map(|_| {
+                    let x = StdArc::clone(&x);
+                    thread::spawn(move || {
+                        let v = x.load(Ordering::SeqCst);
+                        x.store(v + 1, Ordering::SeqCst);
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            sink.lock().unwrap().insert(x.load(Ordering::SeqCst));
+        });
+        let seen = outcomes.lock().unwrap();
+        assert!(seen.contains(&1), "lost update never explored: {seen:?}");
+        assert!(seen.contains(&2), "serial outcome never explored: {seen:?}");
+    }
+
+    /// The same increment under a model mutex can never lose an update.
+    #[test]
+    fn mutex_serializes_increments() {
+        let outcomes: StdArc<StdMutex<HashSet<usize>>> = StdArc::default();
+        let sink = StdArc::clone(&outcomes);
+        let report = model(move || {
+            let x = StdArc::new(Mutex::new(0usize));
+            let handles: Vec<_> = (0..2)
+                .map(|_| {
+                    let x = StdArc::clone(&x);
+                    thread::spawn(move || {
+                        *x.lock().unwrap() += 1;
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            sink.lock().unwrap().insert(*x.lock().unwrap());
+        });
+        assert!(report.iterations >= 2, "no interleavings explored");
+        assert_eq!(*outcomes.lock().unwrap(), HashSet::from([2]));
+    }
+
+    /// A model assertion that only fires under one interleaving is found,
+    /// and the report names the schedule.
+    #[test]
+    fn explorer_finds_rare_assertion_failure() {
+        let msg = model_fails(|| {
+            let x = StdArc::new(AtomicUsize::new(0));
+            let y = StdArc::clone(&x);
+            let h = thread::spawn(move || {
+                y.store(1, Ordering::SeqCst);
+            });
+            let seen = x.load(Ordering::SeqCst);
+            h.join().unwrap();
+            assert_ne!(seen, 1, "reader observed the writer (expected in SOME schedule)");
+        });
+        assert!(msg.contains("failing schedule"), "no schedule in: {msg}");
+    }
+
+    /// Classic AB/BA lock-order inversion is reported as a deadlock
+    /// rather than hanging the test suite.
+    #[test]
+    fn explorer_detects_deadlock() {
+        let msg = model_fails(|| {
+            let a = StdArc::new(Mutex::new(()));
+            let b = StdArc::new(Mutex::new(()));
+            let (a2, b2) = (StdArc::clone(&a), StdArc::clone(&b));
+            let h = thread::spawn(move || {
+                let _ga = a2.lock().unwrap();
+                let _gb = b2.lock().unwrap();
+            });
+            let _gb = b.lock().unwrap();
+            let _ga = a.lock().unwrap();
+            drop((_ga, _gb));
+            h.join().unwrap();
+        });
+        assert!(msg.contains("deadlock"), "expected deadlock report, got: {msg}");
+    }
+
+    /// Condvar handshake: consumer waits for the producer's flag. The
+    /// model must complete in every schedule (notify cannot be lost).
+    #[test]
+    fn condvar_handshake_never_hangs() {
+        let report = model(|| {
+            let pair = StdArc::new((Mutex::new(false), Condvar::new()));
+            let pair2 = StdArc::clone(&pair);
+            let h = thread::spawn(move || {
+                let (m, cv) = &*pair2;
+                *m.lock().unwrap() = true;
+                cv.notify_all();
+            });
+            let (m, cv) = &*pair;
+            let mut ready = m.lock().unwrap();
+            while !*ready {
+                ready = cv.wait(ready).unwrap();
+            }
+            drop(ready);
+            h.join().unwrap();
+        });
+        assert!(report.iterations >= 2);
+    }
+
+    /// The canonical check-then-wait race: testing the flag *outside* the
+    /// lock lets the notify land between the check and the wait, after
+    /// which nobody ever notifies again. The explorer must find that
+    /// schedule and report it as a deadlock instead of hanging.
+    #[test]
+    fn condvar_check_then_wait_race_is_caught() {
+        use super::atomic::AtomicBool;
+        let msg = model_fails(|| {
+            let flag = StdArc::new(AtomicBool::new(false));
+            let pair = StdArc::new((Mutex::new(()), Condvar::new()));
+            let (flag2, pair2) = (StdArc::clone(&flag), StdArc::clone(&pair));
+            let h = thread::spawn(move || {
+                let (_, cv) = &*pair2;
+                flag2.store(true, Ordering::SeqCst);
+                cv.notify_all();
+            });
+            // BUG under test: unlocked check, then an unconditional wait.
+            if !flag.load(Ordering::SeqCst) {
+                let (m, cv) = &*pair;
+                drop(cv.wait(m.lock().unwrap()).unwrap());
+            }
+            h.join().unwrap();
+        });
+        assert!(msg.contains("deadlock"), "expected deadlock report, got: {msg}");
+    }
+
+    #[test]
+    fn join_returns_value() {
+        model(|| {
+            let h = thread::spawn(|| 41 + 1);
+            assert_eq!(h.join().unwrap(), 42);
+        });
+    }
+
+    /// Outside `model`, the primitives are plain std wrappers.
+    #[test]
+    fn passthrough_outside_model() {
+        let m = Mutex::new(5usize);
+        *m.lock().unwrap() += 1;
+        assert_eq!(*m.lock().unwrap(), 6);
+        let cv = Condvar::new();
+        cv.notify_all();
+        let a = atomic::AtomicU64::new(7);
+        assert_eq!(a.fetch_add(1, Ordering::SeqCst), 7);
+        let h = thread::spawn(|| "ok");
+        assert_eq!(h.join().unwrap(), "ok");
+    }
+
+    /// The DFS terminates and the iteration count is sane for a tiny
+    /// model (two threads, one op each: a handful of schedules).
+    #[test]
+    fn exploration_is_bounded() {
+        let report = model(|| {
+            let x = StdArc::new(AtomicUsize::new(0));
+            let y = StdArc::clone(&x);
+            let h = thread::spawn(move || y.store(1, Ordering::SeqCst));
+            x.store(2, Ordering::SeqCst);
+            h.join().unwrap();
+        });
+        assert!(report.iterations >= 2, "must explore both orders");
+        assert!(report.iterations <= 64, "tiny model exploded: {report:?}");
+    }
+
+    /// `wait_while` is the predicate-loop wait (used by worker models).
+    #[test]
+    fn wait_while_loops_predicate() {
+        model(|| {
+            let pair = StdArc::new((Mutex::new(0usize), Condvar::new()));
+            let pair2 = StdArc::clone(&pair);
+            let h = thread::spawn(move || {
+                let (m, cv) = &*pair2;
+                *m.lock().unwrap() = 3;
+                cv.notify_one();
+            });
+            let (m, cv) = &*pair;
+            let g = cv.wait_while(m.lock().unwrap(), |v| *v == 0).unwrap();
+            assert_eq!(*g, 3);
+            drop(g);
+            h.join().unwrap();
+        });
+    }
+}

@@ -11,9 +11,10 @@
 //! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §7).
 
 use anyhow::{anyhow, Context, Result};
+use crate::sync::Mutex;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::{Mutex, OnceLock};
+use std::sync::OnceLock;
 
 /// Fixed artifact shapes (must match python/compile/aot.py).
 pub const REDUCE_ROWS: usize = 256;
@@ -22,23 +23,57 @@ pub const TRANSPOSE_N: usize = 128;
 pub const HASH_TOKENS: usize = 4096;
 pub const HASH_BUCKETS: usize = 1024;
 
-/// A compiled-artifact cache around one PJRT CPU client.
-pub struct Runtime {
+/// The thread-affine xla handles, and *only* those. Private, so the
+/// `unsafe impl Send` below is structural: nothing outside this module can
+/// obtain a `PjRtClient`/`PjRtLoadedExecutable`, every instance lives
+/// inside the one [`Runtime`] stored in [`GLOBAL`], and every method that
+/// touches the handles takes `&mut self` — reachable only through that
+/// mutex. Keeping the claim on this wrapper (rather than on `Runtime`
+/// itself) means adding an innocently-`!Send` field to `Runtime` later
+/// cannot silently widen what the unsafe impl vouches for.
+struct AffineHandles {
     client: xla::PjRtClient,
-    dir: PathBuf,
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
-// The xla crate's handles are thread-affine in places; all access goes
-// through the global mutex below.
-unsafe impl Send for Runtime {}
+// SAFETY: `PjRtClient` and `PjRtLoadedExecutable` wrap raw pointers into
+// xla_extension's C++ runtime, which is not documented thread-safe and is
+// thread-affine in places (its CPU client pins callback state to the
+// constructing thread's context). Sending the handles to another thread is
+// sound iff no two threads ever use them concurrently and no thread keeps
+// a borrow across the send. Both are guaranteed structurally: the only
+// instance is owned by the `Runtime` inside `GLOBAL: Mutex<Runtime>`,
+// this type is private to the module, and no method hands out references
+// that outlive the mutex guard. `Runtime` is NOT `Sync`; `&Runtime` never
+// crosses threads — cross-thread access exists only via the mutex.
+unsafe impl Send for AffineHandles {}
+
+/// A compiled-artifact cache around one PJRT CPU client.
+pub struct Runtime {
+    handles: AffineHandles,
+    dir: PathBuf,
+}
 
 static GLOBAL: OnceLock<Mutex<Runtime>> = OnceLock::new();
+
+/// Serializes first-time construction in [`Runtime::global`]. `OnceLock`
+/// alone cannot: `set` deduplicates the *store*, but two racing callers
+/// would both run `Runtime::new`, constructing two PJRT clients whose
+/// process-global state is exactly what the Send invariant above scopes
+/// to "one instance". A plain std mutex (never the model-checked shim —
+/// it guards init ordering, not modelled state) held only during
+/// construction. The loom model `global_init_races_single_construction`
+/// in `tests/loom_models.rs` checks this pattern, and its seeded twin
+/// demonstrates the double-construction the naive check-then-set allows.
+static INIT: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
 impl Runtime {
     pub fn new(artifact_dir: impl Into<PathBuf>) -> Result<Runtime> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        Ok(Runtime { client, dir: artifact_dir.into(), cache: HashMap::new() })
+        Ok(Runtime {
+            handles: AffineHandles { client, cache: HashMap::new() },
+            dir: artifact_dir.into(),
+        })
     }
 
     /// Artifact directory: `$RSDS_ARTIFACTS` or `./artifacts`.
@@ -50,11 +85,15 @@ impl Runtime {
 
     /// Global shared runtime (one PJRT client per process; workers share).
     pub fn global() -> Result<&'static Mutex<Runtime>> {
+        if let Some(rt) = GLOBAL.get() {
+            return Ok(rt);
+        }
+        let _init = INIT.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         if GLOBAL.get().is_none() {
             let rt = Runtime::new(Self::default_dir())?;
             let _ = GLOBAL.set(Mutex::new(rt));
         }
-        Ok(GLOBAL.get().expect("set above"))
+        Ok(GLOBAL.get().expect("initialized under the init lock"))
     }
 
     /// Whether the artifacts needed by HLO payloads exist on disk.
@@ -65,7 +104,7 @@ impl Runtime {
     }
 
     fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.cache.contains_key(name) {
+        if !self.handles.cache.contains_key(name) {
             let path = self.dir.join(format!("{name}.hlo.txt"));
             let proto = xla::HloModuleProto::from_text_file(
                 path.to_str().context("artifact path not utf-8")?,
@@ -73,12 +112,13 @@ impl Runtime {
             .map_err(|e| anyhow!("load {path:?}: {e:?}"))?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = self
+                .handles
                 .client
                 .compile(&comp)
                 .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-            self.cache.insert(name.to_string(), exe);
+            self.handles.cache.insert(name.to_string(), exe);
         }
-        Ok(self.cache.get(name).expect("inserted above"))
+        Ok(self.handles.cache.get(name).expect("inserted above"))
     }
 
     fn run_f32(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<f32>> {

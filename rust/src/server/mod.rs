@@ -39,6 +39,10 @@ mod window;
 
 pub use fairness::{FairnessPolicy, RunQueueStat, DEFAULT_DISPATCH_QUOTA};
 pub use net::{serve, ServerConfig, ServerHandle};
+// Verification surface: the coalescing-buffer machinery, exposed so the
+// model-checking suite (`tests/loom_models.rs`) can drive it under the
+// exhaustive scheduler. Not part of the stable server API.
+pub use net::{flush_batches, pool_get, pool_put, BufPool, BUF_POOL_MAX};
 pub use pool::{SchedulerFactory, SchedulerPool};
 pub use reactor::{
     ComputeDispatch, ComputeInputs, Dest, Origin, OutboundSink, Reactor, ReactorReport,

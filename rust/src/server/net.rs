@@ -36,9 +36,11 @@ use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
 use std::io::Write;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+// Model-checkable primitives (std unless built with `--cfg loom`); the
+// mpsc channels stay std — the modelled paths only use non-blocking sends.
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::{Arc, Mutex};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 /// Server configuration.
@@ -100,20 +102,29 @@ enum NetEvent {
 /// Recycled coalescing buffers: the reactor pops one per (event,
 /// destination), the writer thread pushes it back after flushing. Bounded
 /// so a burst cannot pin memory forever.
-type BufPool = Arc<Mutex<Vec<Vec<u8>>>>;
+///
+/// Public (with [`pool_get`]/[`pool_put`]/[`flush_batches`]) for the
+/// model-checking suite in `tests/loom_models.rs`, which verifies the
+/// buffer-conservation invariant — every batch is delivered to a writer
+/// XOR returned to the pool — under concurrent shutdown.
+pub type BufPool = Arc<Mutex<Vec<Vec<u8>>>>;
 
-const BUF_POOL_MAX: usize = 64;
+/// Pool capacity bound (see [`BufPool`]).
+pub const BUF_POOL_MAX: usize = 64;
 
 /// Buffers above this capacity are dropped instead of pooled: a data-plane
 /// burst (multi-MB `data-reply` batches) must not pin up to
 /// `BUF_POOL_MAX × burst-size` bytes on an idle server forever.
 const BUF_POOL_MAX_CAPACITY: usize = 256 * 1024;
 
-fn pool_get(pool: &BufPool) -> Vec<u8> {
+/// Pop a recycled buffer (or a fresh one). See [`BufPool`].
+pub fn pool_get(pool: &BufPool) -> Vec<u8> {
     pool.lock().unwrap().pop().unwrap_or_default()
 }
 
-fn pool_put(pool: &BufPool, mut buf: Vec<u8>) {
+/// Return a buffer to the pool (dropped if oversized or the pool is
+/// full). See [`BufPool`].
+pub fn pool_put(pool: &BufPool, mut buf: Vec<u8>) {
     if buf.capacity() > BUF_POOL_MAX_CAPACITY {
         return;
     }
@@ -275,7 +286,13 @@ pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
                 // Writer thread: flush whole batches, recycle the buffers.
                 let (wtx, wrx) = channel::<Vec<u8>>();
                 writers.lock().unwrap().insert(conn, wtx);
-                let mut wstream = stream.try_clone().expect("clone stream");
+                let Ok(mut wstream) = stream.try_clone() else {
+                    // No writer thread will exist: drop the registry
+                    // entries made above so the dead conn doesn't linger.
+                    writers.lock().unwrap().remove(&conn);
+                    conns.lock().unwrap().remove(&conn);
+                    continue;
+                };
                 let pool = buf_pool.clone();
                 let writer = std::thread::spawn(move || {
                     for batch in wrx {
@@ -405,7 +422,12 @@ impl OutboundSink for BatchSink<'_> {
 /// (`min_len == 0` flushes everything). `scratch` is a reused key buffer
 /// so a warm flush allocates nothing. The writer-registry lock is taken
 /// once per call, and only when something actually flushes.
-fn flush_batches(
+/// Hand every batch of at least `min_len` bytes to its connection's
+/// writer thread, recycling batches whose writer is gone. Public for the
+/// model-checking suite (`tests/loom_models.rs`), which runs it against a
+/// concurrently draining writer registry to check buffer conservation:
+/// each batch is delivered XOR pooled, never both, never neither.
+pub fn flush_batches(
     batches: &mut HashMap<u64, Vec<u8>>,
     scratch: &mut Vec<u64>,
     writers: &Mutex<HashMap<u64, Sender<Vec<u8>>>>,

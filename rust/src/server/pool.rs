@@ -98,7 +98,13 @@ impl SchedulerPool {
         }
         s.graph_submitted(graph);
         let prev = self.scheds.insert(run, s);
-        debug_assert!(prev.is_none(), "run id {run} reused while still live");
+        if prev.is_some() {
+            // RunIdAlloc never reuses ids, so a collision means a live
+            // run's scheduler was just replaced — surface it in release
+            // builds too instead of silently dropping the old scheduler.
+            debug_assert!(prev.is_none(), "run id {run} reused while still live");
+            log::error!("run id {run} reused while still live; its scheduler was replaced");
+        }
         Ok(())
     }
 

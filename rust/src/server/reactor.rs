@@ -704,7 +704,20 @@ impl Reactor {
         let mut rounds = 0;
         while !self.actions_buf.is_empty() {
             rounds += 1;
-            debug_assert!(rounds < 10_000, "steal feedback failed to converge");
+            if rounds >= 10_000 {
+                // Convergence is an invariant (every round retires an
+                // action); if it breaks, dropping the remainder desyncs
+                // this run's scheduler but keeps the server alive, which
+                // beats the silent infinite loop a compiled-out assert
+                // would leave behind.
+                debug_assert!(rounds < 10_000, "steal feedback failed to converge");
+                log::error!(
+                    "steal feedback for {run_id} failed to converge; dropping {} scheduler action(s)",
+                    self.actions_buf.len()
+                );
+                self.actions_buf.clear();
+                return;
+            }
             // Charge the scheduler's algorithmic work at the profile's
             // rates (GIL: burns reactor time inline, exactly like CPython).
             let (cost, kind) = match self.pool.get(run_id) {
@@ -958,7 +971,18 @@ impl Reactor {
                 }
                 match run.states[task.idx()] {
                     TaskState::Stealing { from, to } => {
-                        debug_assert_eq!(from, worker);
+                        if from != worker {
+                            // Only the recorded victim may resolve the
+                            // steal; accepting a foreign answer would
+                            // corrupt the load model (see above). The
+                            // swallow table already consumed every known
+                            // stale answer, so this is an invariant break.
+                            debug_assert_eq!(from, worker, "steal response from non-victim");
+                            log::error!(
+                                "ignoring steal response for {run_id}/{task:?} from {worker:?} (victim is {from:?})"
+                            );
+                            return;
+                        }
                         if ok {
                             // Retracted: the victim has given the task up.
                             // Reassign to the steal target with the same

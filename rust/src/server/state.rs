@@ -229,10 +229,24 @@ impl GraphRun {
                 continue;
             }
             let d = &mut self.unfinished_deps[c.idx()];
-            debug_assert!(*d > 0);
+            if *d == 0 {
+                // Counter underflow would wrap and re-ready the consumer
+                // u32::MAX finishes later; skip it and log instead (the
+                // debug build still fails loudly).
+                debug_assert!(*d > 0, "dependency underflow for consumer {c:?}");
+                log::error!("dependency counter underflow for consumer {c:?} of {task:?}");
+                continue;
+            }
             *d -= 1;
             if *d == 0 {
-                debug_assert_eq!(self.states[c.idx()], TaskState::Waiting);
+                if self.states[c.idx()] != TaskState::Waiting {
+                    debug_assert_eq!(self.states[c.idx()], TaskState::Waiting);
+                    log::error!(
+                        "consumer {c:?} became ready while {:?} (expected Waiting)",
+                        self.states[c.idx()]
+                    );
+                    continue;
+                }
                 self.states[c.idx()] = TaskState::Ready;
                 newly_ready.push(c);
             }
@@ -392,10 +406,17 @@ impl GraphRun {
                     self.states[i] =
                         if deps == 0 { TaskState::Ready } else { TaskState::Waiting };
                 }
-                _ => debug_assert_eq!(
-                    deps, 0,
-                    "in-flight task {i} kept an unfinished input through recovery"
-                ),
+                _ => {
+                    if deps != 0 {
+                        debug_assert_eq!(
+                            deps, 0,
+                            "in-flight task {i} kept an unfinished input through recovery"
+                        );
+                        log::error!(
+                            "recovery left in-flight task {i} with {deps} unfinished input(s)"
+                        );
+                    }
+                }
             }
         }
         for &(t, _) in &plan.lost_assignments {

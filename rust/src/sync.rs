@@ -1,0 +1,34 @@
+//! Synchronization primitives for the lock-protected cores, swappable
+//! between `std::sync` and the [`crate::modelcheck`] explorer.
+//!
+//! Production builds (`cfg(not(loom))`) re-export std directly — zero
+//! overhead, identical types. Under `RUSTFLAGS="--cfg loom"` the same
+//! paths resolve to the model-checked versions, whose every lock,
+//! unlock, wait, notify and atomic access is a schedule point for the
+//! exhaustive interleaving explorer (see `docs/verification.md` and
+//! `tests/loom_models.rs`). Outside an active [`crate::modelcheck::model`]
+//! run the instrumented types behave exactly like std (passthrough), so a
+//! `--cfg loom` build of the full library still works.
+//!
+//! Code under model checking must route *all* of its blocking through
+//! this module: a thread blocked in a raw `std::sync` primitive is
+//! invisible to the explorer's scheduler and will be reported as a
+//! deadlock. Channels (`std::sync::mpsc`) are deliberately not shimmed —
+//! the modelled cores only ever use their non-blocking sends, which the
+//! explorer tolerates (no interleaving is explored at a send, which only
+//! narrows, never widens, the behaviours we test).
+
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+#[cfg(not(loom))]
+pub use std::sync::atomic;
+
+#[cfg(not(loom))]
+pub use std::thread;
+
+#[cfg(loom)]
+pub use std::sync::Arc;
+
+#[cfg(loom)]
+pub use crate::modelcheck::{atomic, thread, Condvar, Mutex, MutexGuard};

@@ -42,8 +42,10 @@ use anyhow::{anyhow, bail, Context, Result};
 use queue::{FetchPlan, PoppedTask, TaskQueue};
 use std::collections::{HashMap, HashSet};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+// Model-checkable primitives: std in normal builds, the exhaustive
+// explorer under `--cfg loom` (see `docs/verification.md`).
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::{Arc, Condvar, Mutex};
 
 /// Worker configuration.
 #[derive(Debug, Clone)]

@@ -234,7 +234,7 @@ impl TaskQueue {
             priority: view.priority,
             run: view.run,
             task: view.task,
-            payload: view.payload.clone(),
+            payload: view.payload.clone(), // lint: clone-ok — Payload is all-scalar, clone is a memcpy
             duration_us: view.duration_us,
             output_size: view.output_size,
             key,

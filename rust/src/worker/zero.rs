@@ -20,8 +20,8 @@ use crate::taskgraph::TaskId;
 use anyhow::{bail, Context, Result};
 use std::collections::HashSet;
 use std::net::TcpStream;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::{Arc, Mutex};
 
 /// Mocked constant object returned for data fetches (§IV-D).
 pub const MOCK_DATA: &[u8] = b"zero-worker-mock";

@@ -3,6 +3,10 @@
 //! assignment, w2w data fetches, steal retraction, completion), the zero
 //! worker, the Dask-emulation mode, and failure injection.
 
+// Real-TCP timing suites are meaningless under the model-checking build;
+// `tests/loom_models.rs` is the `--cfg loom` counterpart.
+#![cfg(not(loom))]
+
 use rsds::client::Client;
 use rsds::graphgen;
 use rsds::overhead::RuntimeProfile;

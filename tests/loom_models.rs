@@ -1,0 +1,426 @@
+//! Exhaustive interleaving models for the lock-protected cores, run under
+//! `RUSTFLAGS="--cfg loom" cargo test --test loom_models`.
+//!
+//! Each model rebuilds one of the repo's real concurrency cores — the
+//! worker's one-mutex [`TaskQueue`], the report window behind the
+//! [`ServerHandle`] mutex, the writer-registry/`flush_batches` shutdown
+//! protocol, and the runtime's global-init pattern — from the *production
+//! types* behind the [`rsds::sync`] shim, and explores every
+//! distinguishable schedule with [`rsds::modelcheck`] (the offline loom
+//! stand-in). The `seeded_*` models lock known bugs in as regressions:
+//! each reconstructs a protocol violation (the PR 4 count-based-watermark
+//! bug, naive once-init) and asserts the explorer *catches* it — proving
+//! the checker checks, per `docs/verification.md`.
+//!
+//! [`ServerHandle`]: rsds::server::ServerHandle
+//! [`TaskQueue`]: rsds::worker::queue::TaskQueue
+
+#![cfg(loom)]
+
+use rsds::modelcheck::{model, model_fails};
+use rsds::protocol::{encode_msg, ComputeTaskView, Msg, RunId, TaskInputLoc};
+use rsds::server::{flush_batches, pool_put, BoundedWindow, BufPool};
+use rsds::sync::atomic::{AtomicUsize, Ordering};
+use rsds::sync::{thread, Arc, Condvar, Mutex};
+use rsds::taskgraph::{Payload, TaskId};
+use rsds::worker::queue::{FetchPlan, TaskQueue};
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex as StdMutex;
+
+/// An encoded `compute-task` frame (decoded to a borrowed view per use,
+/// exactly like the worker's reader thread).
+fn compute_frame(run: u32, task: u32, priority: i64, addr: &str) -> Vec<u8> {
+    encode_msg(&Msg::ComputeTask {
+        run: RunId(run),
+        task: TaskId(task),
+        key: format!("k-{run}-{task}"),
+        payload: Payload::BusyWait,
+        duration_us: 7,
+        output_size: 64,
+        inputs: vec![TaskInputLoc { task: TaskId(0), addr: addr.into(), nbytes: 5 }],
+        priority,
+    })
+}
+
+fn enqueue_frame(q: &Mutex<TaskQueue>, bytes: &[u8]) {
+    let view = ComputeTaskView::decode(bytes).expect("frame decodes");
+    q.lock().unwrap().enqueue(&view).expect("enqueue");
+}
+
+// ---------------------------------------------------------------------------
+// TaskQueue: enqueue / pop_into / arena reset
+// ---------------------------------------------------------------------------
+
+/// A concurrent enqueuer (the reader thread) and popper (the executor)
+/// must hand every task across exactly once, with its interned strings
+/// resolved correctly even when a pop drains the queue and the next
+/// enqueue resets the input-location pools mid-race.
+#[test]
+fn queue_enqueue_pop_delivers_each_task_once() {
+    let f1 = compute_frame(0, 1, 10, "10.0.0.1:9000");
+    let f2 = compute_frame(0, 2, 20, "10.0.0.2:9000");
+    model(move || {
+        let q = Arc::new(Mutex::new(TaskQueue::new()));
+        let producer = {
+            let q = Arc::clone(&q);
+            let (f1, f2) = (f1.clone(), f2.clone());
+            thread::spawn(move || {
+                enqueue_frame(&q, &f1);
+                enqueue_frame(&q, &f2);
+            })
+        };
+        // The executor side: two bounded pop attempts racing the enqueues,
+        // then a post-join drain — every task must surface exactly once.
+        let mut plan = FetchPlan::new();
+        let mut seen: Vec<(TaskId, String, String)> = Vec::new();
+        for _ in 0..2 {
+            if let Some(p) = q.lock().unwrap().pop_into(&mut plan) {
+                seen.push((p.task, plan.key().to_string(), plan.input(0).2.to_string()));
+            }
+        }
+        producer.join().unwrap();
+        while let Some(p) = q.lock().unwrap().pop_into(&mut plan) {
+            seen.push((p.task, plan.key().to_string(), plan.input(0).2.to_string()));
+        }
+        seen.sort();
+        assert_eq!(
+            seen,
+            vec![
+                (TaskId(1), "k-0-1".to_string(), "10.0.0.1:9000".to_string()),
+                (TaskId(2), "k-0-2".to_string(), "10.0.0.2:9000".to_string()),
+            ],
+            "every task exactly once, arenas resolved under every schedule"
+        );
+        let q = q.lock().unwrap();
+        assert!(q.is_empty());
+        assert!(q.input_pool_len() <= 2, "pool reset invariant broke");
+    });
+}
+
+/// `cancel-compute` (`drop_queued`) racing the executor's `pop_into` on
+/// the same task: exactly one side may win — the task is either retracted
+/// or executed, never both, never neither.
+#[test]
+fn queue_drop_queued_vs_pop_is_exactly_once() {
+    let frame = compute_frame(0, 1, 10, "10.0.0.1:9000");
+    model(move || {
+        let q = Arc::new(Mutex::new(TaskQueue::new()));
+        enqueue_frame(&q, &frame);
+        let canceller = {
+            let q = Arc::clone(&q);
+            thread::spawn(move || q.lock().unwrap().drop_queued(RunId(0), TaskId(1)))
+        };
+        let mut plan = FetchPlan::new();
+        let popped = q.lock().unwrap().pop_into(&mut plan).is_some();
+        let dropped = canceller.join().unwrap();
+        assert!(
+            popped ^ dropped,
+            "task must be executed XOR cancelled (popped={popped}, dropped={dropped})"
+        );
+        let q = q.lock().unwrap();
+        assert!(q.is_empty());
+        assert!(!q.is_pending(RunId(0), TaskId(1)));
+    });
+}
+
+/// `release-run` racing a late enqueue for the same run: because heap and
+/// arenas live behind one mutex, the pop must observe either the complete
+/// task (correct key and address) or nothing — never a queued entry whose
+/// arena was purged out from under it.
+#[test]
+fn queue_release_run_vs_enqueue_is_atomic() {
+    let frame = compute_frame(0, 1, 10, "10.0.0.1:9000");
+    model(move || {
+        let q = Arc::new(Mutex::new(TaskQueue::new()));
+        let releaser = {
+            let q = Arc::clone(&q);
+            thread::spawn(move || q.lock().unwrap().release_run(RunId(0)))
+        };
+        enqueue_frame(&q, &frame);
+        releaser.join().unwrap();
+        let mut plan = FetchPlan::new();
+        if let Some(p) = q.lock().unwrap().pop_into(&mut plan) {
+            // Enqueue happened after (or before-and-survived) the release:
+            // the entry must be whole.
+            assert_eq!(p.task, TaskId(1));
+            assert_eq!(plan.key(), "k-0-1", "arena purged under a live heap entry");
+            assert_eq!(plan.input(0).2, "10.0.0.1:9000");
+        }
+    });
+}
+
+/// The worker's executor parks on the queue condvar
+/// (`worker/mod.rs::executor_loop`); the reader enqueues then notifies.
+/// Under the repo's lock discipline (predicate checked under the same
+/// mutex, waits in a re-checking loop) no schedule may lose the wakeup.
+#[test]
+fn executor_wakeup_is_never_lost() {
+    let frame = compute_frame(0, 1, 10, "");
+    model(move || {
+        let shared = Arc::new((Mutex::new(TaskQueue::new()), Condvar::new()));
+        let reader = {
+            let shared = Arc::clone(&shared);
+            let frame = frame.clone();
+            thread::spawn(move || {
+                let (q, cv) = &*shared;
+                let view = ComputeTaskView::decode(&frame).expect("frame decodes");
+                q.lock().unwrap().enqueue(&view).expect("enqueue");
+                cv.notify_all();
+            })
+        };
+        let (q, cv) = &*shared;
+        let mut guard = cv
+            .wait_while(q.lock().unwrap(), |q| q.is_empty())
+            .unwrap();
+        let mut plan = FetchPlan::new();
+        assert!(guard.pop_into(&mut plan).is_some());
+        drop(guard);
+        reader.join().unwrap();
+    });
+}
+
+// ---------------------------------------------------------------------------
+// BoundedWindow / ReportStore: watermark exactly-once across eviction gaps
+// ---------------------------------------------------------------------------
+
+/// One poll against the shared window: returns the fresh items, the next
+/// watermark, and how many items the retention window evicted unseen.
+fn poll(w: &Mutex<BoundedWindow<u64>>, watermark: usize) -> (Vec<u64>, usize, usize) {
+    let g = w.lock().unwrap();
+    assert_eq!(g.dropped() + g.len(), g.total(), "window accounting broke");
+    let (fresh, next) = g.since(watermark);
+    let missed = (next - watermark) - fresh.len();
+    (fresh.to_vec(), next, missed)
+}
+
+/// The PR 4 protocol, model-checked: a poller that advances by the
+/// *returned watermark* receives every report exactly once, no matter how
+/// the publisher's pushes and the retention window's evictions interleave
+/// with its polls — evicted reports are each counted missed exactly once.
+#[test]
+fn reports_since_is_exactly_once_across_eviction_gaps() {
+    model(|| {
+        let w = Arc::new(Mutex::new(BoundedWindow::<u64>::new(1)));
+        let publisher = {
+            let w = Arc::clone(&w);
+            thread::spawn(move || {
+                for v in 0..3 {
+                    w.lock().unwrap().push(v);
+                }
+            })
+        };
+        let mut watermark = 0;
+        let mut delivered: Vec<u64> = Vec::new();
+        let mut missed = 0;
+        for _ in 0..2 {
+            let (fresh, next, gap) = poll(&w, watermark);
+            delivered.extend(fresh);
+            missed += gap;
+            watermark = next;
+        }
+        publisher.join().unwrap();
+        let (fresh, next, gap) = poll(&w, watermark);
+        delivered.extend(fresh);
+        missed += gap;
+        watermark = next;
+        assert_eq!(watermark, 3);
+        assert_eq!(
+            delivered.len() + missed,
+            3,
+            "every report delivered or counted missed: {delivered:?} + {missed}"
+        );
+        let mut unique = delivered.clone();
+        unique.dedup();
+        assert_eq!(unique, delivered, "duplicate delivery: {delivered:?}");
+        let mut sorted = delivered.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, delivered, "reports delivered out of order");
+    });
+}
+
+/// Seeded regression: the pre-PR-4 client protocol — advancing the
+/// watermark by counting returned reports instead of using the returned
+/// watermark — re-receives the window's tail after an eviction gap. The
+/// explorer must find that schedule and fail the model; this proves the
+/// checker would have caught the original bug.
+#[test]
+fn seeded_count_based_watermark_bug_is_caught() {
+    let msg = model_fails(|| {
+        let w = Arc::new(Mutex::new(BoundedWindow::<u64>::new(1)));
+        let publisher = {
+            let w = Arc::clone(&w);
+            thread::spawn(move || {
+                for v in 0..3 {
+                    w.lock().unwrap().push(v);
+                }
+            })
+        };
+        let mut watermark = 0;
+        let mut delivered: Vec<u64> = Vec::new();
+        for _ in 0..2 {
+            let (fresh, _next, _gap) = poll(&w, watermark);
+            delivered.extend(fresh);
+            // BUG under test (pre-PR-4): count only what was returned.
+            watermark = delivered.len();
+        }
+        publisher.join().unwrap();
+        let (fresh, _next, _gap) = poll(&w, watermark);
+        delivered.extend(fresh);
+        let mut unique = delivered.clone();
+        unique.sort_unstable();
+        unique.dedup();
+        assert_eq!(unique.len(), delivered.len(), "duplicate delivery: {delivered:?}");
+    });
+    assert!(msg.contains("duplicate delivery"), "wrong failure: {msg}");
+}
+
+// ---------------------------------------------------------------------------
+// Writer registry: flush_batches vs shutdown
+// ---------------------------------------------------------------------------
+
+/// `flush_batches` racing `ServerHandle::shutdown`'s writer-registry
+/// drain: the coalesced batch must be delivered to the writer XOR
+/// recycled into the buffer pool — dropped-on-the-floor would leak the
+/// buffer, double-accounted would alias it.
+#[test]
+fn flush_batches_vs_shutdown_conserves_buffers() {
+    model(|| {
+        let writers: Arc<Mutex<HashMap<u64, Sender<Vec<u8>>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let pool: BufPool = Arc::new(Mutex::new(Vec::new()));
+        let (tx, rx) = channel::<Vec<u8>>();
+        writers.lock().unwrap().insert(1, tx);
+        let shutdown = {
+            let writers = Arc::clone(&writers);
+            // The shutdown drain: writer senders dropped wholesale.
+            thread::spawn(move || writers.lock().unwrap().clear())
+        };
+        let mut batches: HashMap<u64, Vec<u8>> = HashMap::new();
+        batches.insert(1, b"frame-bytes".to_vec());
+        let mut scratch = Vec::new();
+        flush_batches(&mut batches, &mut scratch, &writers, &pool, 0);
+        shutdown.join().unwrap();
+        let delivered = rx.try_iter().count();
+        let pooled = pool.lock().unwrap().len();
+        assert!(batches.is_empty(), "batch neither flushed nor recycled");
+        assert_eq!(
+            delivered + pooled,
+            1,
+            "buffer conservation broke (delivered={delivered}, pooled={pooled})"
+        );
+    });
+}
+
+/// Same race, but the writer *thread* is already gone (receiver dropped,
+/// as after a peer disconnect): the send fails and the error path must
+/// recycle the batch it hands back.
+#[test]
+fn flush_batches_send_failure_recycles_the_batch() {
+    model(|| {
+        let writers: Arc<Mutex<HashMap<u64, Sender<Vec<u8>>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let pool: BufPool = Arc::new(Mutex::new(Vec::new()));
+        let (tx, rx) = channel::<Vec<u8>>();
+        writers.lock().unwrap().insert(1, tx);
+        let rx_slot: Arc<StdMutex<Option<Receiver<Vec<u8>>>>> =
+            Arc::new(StdMutex::new(Some(rx)));
+        let killer = {
+            let rx_slot = Arc::clone(&rx_slot);
+            thread::spawn(move || drop(rx_slot.lock().unwrap().take()))
+        };
+        let mut batches: HashMap<u64, Vec<u8>> = HashMap::new();
+        batches.insert(1, b"frame-bytes".to_vec());
+        let mut scratch = Vec::new();
+        flush_batches(&mut batches, &mut scratch, &writers, &pool, 0);
+        killer.join().unwrap();
+        let delivered = rx_slot
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map_or(0, |rx| rx.try_iter().count());
+        let pooled = pool.lock().unwrap().len();
+        assert!(batches.is_empty());
+        assert_eq!(delivered + pooled, 1, "send-failure path leaked the batch");
+    });
+}
+
+/// The conservation helper itself must round-trip: what `pool_put`
+/// accepts, `pool_get` hands back (a sanity anchor for the two models
+/// above — if pooling silently dropped small buffers, `pooled` would
+/// undercount and the models would pass vacuously).
+#[test]
+fn pool_round_trips_small_buffers() {
+    model(|| {
+        let pool: BufPool = Arc::new(Mutex::new(Vec::new()));
+        pool_put(&pool, Vec::with_capacity(64));
+        assert_eq!(pool.lock().unwrap().len(), 1);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Runtime global init (runtime/mod.rs::global)
+// ---------------------------------------------------------------------------
+
+/// The `Runtime::global` pattern with the init lock (PJRT client stubbed
+/// by a construction counter): two racing first callers must construct
+/// exactly once. Mirrors `runtime/mod.rs` — `GLOBAL` is the slot mutex,
+/// `INIT` serializes construction.
+#[test]
+fn global_init_races_single_construction() {
+    model(|| {
+        let slot: Arc<Mutex<Option<u32>>> = Arc::new(Mutex::new(None));
+        let init: Arc<Mutex<()>> = Arc::new(Mutex::new(()));
+        let ctors = Arc::new(AtomicUsize::new(0));
+        let get = |slot: &Mutex<Option<u32>>, init: &Mutex<()>, ctors: &AtomicUsize| {
+            if slot.lock().unwrap().is_some() {
+                return;
+            }
+            let _init = init.lock().unwrap();
+            let mut g = slot.lock().unwrap();
+            if g.is_none() {
+                ctors.fetch_add(1, Ordering::SeqCst);
+                *g = Some(42);
+            }
+        };
+        let racer = {
+            let (slot, init, ctors) =
+                (Arc::clone(&slot), Arc::clone(&init), Arc::clone(&ctors));
+            thread::spawn(move || get(&slot, &init, &ctors))
+        };
+        get(&slot, &init, &ctors);
+        racer.join().unwrap();
+        assert_eq!(ctors.load(Ordering::SeqCst), 1, "PJRT client constructed twice");
+        assert_eq!(*slot.lock().unwrap(), Some(42));
+    });
+}
+
+/// Seeded regression: the pre-PR-6 `Runtime::global` — a bare
+/// check-then-construct with no init lock — lets two first callers both
+/// run `Runtime::new`. The explorer must find the double construction.
+#[test]
+fn seeded_naive_global_init_double_constructs() {
+    let msg = model_fails(|| {
+        let slot: Arc<Mutex<Option<u32>>> = Arc::new(Mutex::new(None));
+        let ctors = Arc::new(AtomicUsize::new(0));
+        // BUG under test: `if GLOBAL.get().is_none() { GLOBAL.set(new()?) }`.
+        let get = |slot: &Mutex<Option<u32>>, ctors: &AtomicUsize| {
+            let vacant = slot.lock().unwrap().is_none();
+            if vacant {
+                ctors.fetch_add(1, Ordering::SeqCst);
+                let mut g = slot.lock().unwrap();
+                if g.is_none() {
+                    *g = Some(42);
+                }
+            }
+        };
+        let racer = {
+            let (slot, ctors) = (Arc::clone(&slot), Arc::clone(&ctors));
+            thread::spawn(move || get(&slot, &ctors))
+        };
+        get(&slot, &ctors);
+        racer.join().unwrap();
+        assert_eq!(ctors.load(Ordering::SeqCst), 1, "PJRT client constructed twice");
+    });
+    assert!(msg.contains("constructed twice"), "wrong failure: {msg}");
+}

@@ -3,6 +3,8 @@
 //! dependencies respected, nothing lost across steal races), simulator
 //! conservation, and codec totality.
 
+#![cfg(not(loom))]
+
 use rsds::graphgen;
 use rsds::overhead::RuntimeProfile;
 use rsds::protocol::{Msg, RunId, TaskFinishedInfo, TaskInputLoc};

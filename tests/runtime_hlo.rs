@@ -4,6 +4,8 @@
 //! Requires `make artifacts` (skipped with a message otherwise — the
 //! Makefile's `test` target builds them first).
 
+#![cfg(not(loom))]
+
 use rsds::runtime::{synth_f32, synth_tokens, Runtime, HASH_BUCKETS, HASH_TOKENS, REDUCE_COLS, REDUCE_ROWS, TRANSPOSE_N};
 
 fn runtime() -> Option<std::sync::MutexGuard<'static, Runtime>> {

@@ -1,0 +1,59 @@
+//! Deliberately broken code that proves the UB/race CI jobs can go red.
+//!
+//! A checker that has only ever been observed green is indistinguishable
+//! from a checker that is not running. Each job in the verification matrix
+//! therefore has an inverted step: it compiles this file with the matching
+//! `--cfg` and *fails the build if the tool does not report the planted
+//! defect* (see .github/workflows/ci.yml and docs/verification.md).
+//!
+//!   - `--cfg rsds_seed_ub`:   a one-past-the-end raw read; Miri must
+//!     refuse it with an out-of-bounds error.
+//!   - `--cfg rsds_seed_race`: an unsynchronized cross-thread counter;
+//!     ThreadSanitizer must report a data race.
+//!
+//! Under a normal `cargo test` neither cfg is set and this file compiles
+//! to an empty test target, so tier-1 runs are unaffected.
+
+#[cfg(rsds_seed_ub)]
+#[test]
+fn seeded_out_of_bounds_read() {
+    let v = vec![1u8, 2, 3];
+    let p = v.as_ptr();
+    // SAFETY: none — this read is one past the end of the allocation. It
+    // exists so the Miri job can demonstrate a red result; the CI step
+    // inverts this test's exit status.
+    let x = unsafe { *p.add(3) };
+    assert!(x < u8::MAX, "never reached under Miri");
+}
+
+#[cfg(rsds_seed_race)]
+#[test]
+fn seeded_data_race() {
+    use std::cell::UnsafeCell;
+
+    struct Racy(UnsafeCell<u64>);
+    // SAFETY: none — `UnsafeCell` is deliberately shared across threads
+    // without synchronization so ThreadSanitizer has a race to report; the
+    // CI step inverts this test's exit status.
+    unsafe impl Sync for Racy {}
+
+    static CELL: Racy = Racy(UnsafeCell::new(0));
+    let threads: Vec<_> = (0..2)
+        .map(|_| {
+            std::thread::spawn(|| {
+                for _ in 0..100_000 {
+                    // SAFETY: none — this is the planted unsynchronized
+                    // read-modify-write the sanitizer must flag.
+                    unsafe { *CELL.0.get() += 1 };
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    // SAFETY: all writers joined above; this read is quiescent (the race
+    // the job must catch already happened inside the loop).
+    let total = unsafe { *CELL.0.get() };
+    assert!(total <= 200_000);
+}

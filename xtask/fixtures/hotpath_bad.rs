@@ -1,0 +1,9 @@
+// Seeded violation for `cargo xtask lint --self-check` (hotpath rule).
+// Never compiled; every allocation below must be reported when this file
+// is registered through `xtask/fixtures/hotpath.txt`.
+
+pub fn seeded_hot_alloc(key: &str) -> String {
+    let copy = key.to_owned();
+    let boxed = Box::new(copy.clone());
+    format!("hot path allocated: {boxed}")
+}

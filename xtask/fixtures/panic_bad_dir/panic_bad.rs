@@ -1,0 +1,21 @@
+// Seeded violation (no-panic rule): one bare unwrap and one panic! in
+// production position. The mutex-poisoning line and the test module are
+// exemptions and must not be flagged — the self-check asserts exactly two
+// findings.
+
+pub fn seeded(v: Option<u32>, m: &std::sync::Mutex<u32>) -> u32 {
+    let n = v.unwrap();
+    let held = *m.lock().unwrap();
+    if n > held {
+        panic!("seeded panic");
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        assert_eq!(Some(1u32).unwrap(), 1);
+    }
+}

@@ -1,0 +1,14 @@
+// Codec side of the protocol-ops fixture: decodes `real-op` only —
+// `ghost-op` is the seeded missing decode arm — and compares peek_op
+// against `typo-op`, an op nobody defines.
+
+pub fn decode_msg(bytes: &[u8]) -> Result<Msg, CodecError> {
+    match find_op(bytes)? {
+        "real-op" => decode_real(bytes),
+        _ => Err(CodecError::UnknownOp),
+    }
+}
+
+pub fn route(bytes: &[u8]) -> bool {
+    matches!(peek_op(bytes), Ok("typo-op"))
+}

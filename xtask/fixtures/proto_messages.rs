@@ -1,0 +1,11 @@
+// Seeded violation (protocol-ops rule): `ghost-op` has no codec literal
+// and no doc-table row; see proto_codec.rs / proto_protocol.md.
+
+impl Msg {
+    pub fn op(&self) -> &'static str {
+        match self {
+            Msg::Real { .. } => "real-op",
+            Msg::Ghost { .. } => "ghost-op",
+        }
+    }
+}

@@ -1,0 +1,14 @@
+// Seeded violation (safety-comment rule): two undocumented `unsafe`s.
+// The documented impl at the bottom must NOT be reported — the self-check
+// asserts exactly two findings, so a false positive fails it too.
+
+pub struct Handle(*mut u8);
+
+unsafe impl Send for Handle {}
+
+pub fn peek(h: &Handle) -> u8 {
+    unsafe { *h.0 }
+}
+
+// SAFETY: fixture stand-in for a real invariant argument.
+unsafe impl Sync for Handle {}

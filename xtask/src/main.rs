@@ -1,0 +1,204 @@
+//! `cargo xtask lint` — repo-local invariant checks.
+//!
+//! Rules (details in `rules.rs` and docs/verification.md):
+//!   1. hotpath        — no allocating calls in `xtask/hotpath.txt` functions
+//!   2. protocol-ops   — op strings consistent across Msg::op(), the codec,
+//!                       peek_op call sites, and docs/protocol.md
+//!   3. safety-comment — every `unsafe` carries a `// SAFETY:` comment
+//!   4. no-panic       — no unwrap/expect/panic! in non-test server/worker/
+//!                       protocol code (mutex-poisoning idiom + reviewed
+//!                       allowlist excepted)
+//!
+//! `cargo xtask lint --self-check` runs every rule against the seeded
+//! violations in `xtask/fixtures/` and fails unless each rule reports each
+//! planted defect: the checkers themselves are tested red, not just
+//! observed green.
+
+mod rules;
+mod scan;
+
+use rules::Violation;
+use std::path::{Path, PathBuf};
+
+fn repo_root() -> PathBuf {
+    // xtask lives at <repo>/xtask; CARGO_MANIFEST_DIR is compile-time, so
+    // the tool works from any invocation directory.
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("xtask has a parent dir").to_path_buf()
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => {
+            let repo = repo_root();
+            let code = if args.iter().any(|a| a == "--self-check") {
+                self_check(&repo)
+            } else {
+                lint(&repo)
+            };
+            std::process::exit(code);
+        }
+        _ => {
+            eprintln!("usage: cargo xtask lint [--self-check]");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn run_rule(name: &str, result: rules::RuleResult, all: &mut Vec<Violation>) -> bool {
+    match result {
+        Ok(v) => {
+            println!("lint: {name}: {} finding(s)", v.len());
+            all.extend(v);
+            true
+        }
+        Err(e) => {
+            eprintln!("lint: {name}: error: {e}");
+            false
+        }
+    }
+}
+
+fn lint(repo: &Path) -> i32 {
+    let rust = repo.join("rust/src");
+    let mut all = Vec::new();
+    let mut ok = true;
+    ok &= run_rule("hotpath", rules::check_hotpath(repo, &repo.join("xtask/hotpath.txt")), &mut all);
+    ok &= run_rule(
+        "protocol-ops",
+        rules::check_protocol_ops(
+            &rust.join("protocol/messages.rs"),
+            &rust.join("protocol/codec.rs"),
+            &repo.join("docs/protocol.md"),
+            &rust,
+        ),
+        &mut all,
+    );
+    ok &= run_rule("safety-comment", rules::check_safety(&rust), &mut all);
+    ok &= run_rule(
+        "no-panic",
+        rules::check_no_panic(
+            &[rust.join("server"), rust.join("worker"), rust.join("protocol")],
+            Some(&repo.join("xtask/lint_allow.txt")),
+        ),
+        &mut all,
+    );
+    if !ok {
+        return 2;
+    }
+    if all.is_empty() {
+        println!("lint: clean");
+        return 0;
+    }
+    for v in &all {
+        println!("{v}");
+    }
+    println!("lint: {} violation(s)", all.len());
+    1
+}
+
+/// Assert that `result` contains a violation whose message contains each
+/// needle — i.e. the rule goes red on its seeded fixture.
+fn expect_caught(name: &str, result: rules::RuleResult, needles: &[&str], failures: &mut u32) {
+    match result {
+        Err(e) => {
+            eprintln!("self-check: {name}: rule errored instead of reporting: {e}");
+            *failures += 1;
+        }
+        Ok(found) => {
+            for needle in needles {
+                if found.iter().any(|v| v.msg.contains(needle)) {
+                    println!("self-check: {name}: caught seeded `{needle}`");
+                } else {
+                    eprintln!(
+                        "self-check: {name}: MISSED seeded `{needle}`; rule reported: {:?}",
+                        found.iter().map(|v| v.msg.as_str()).collect::<Vec<_>>()
+                    );
+                    *failures += 1;
+                }
+            }
+        }
+    }
+}
+
+fn self_check(repo: &Path) -> i32 {
+    let fx = repo.join("xtask/fixtures");
+    let mut failures = 0u32;
+
+    expect_caught(
+        "hotpath",
+        rules::check_hotpath(repo, &fx.join("hotpath.txt")),
+        &["`format!`", "`.to_owned()`", "`Box::new(`", "`.clone()`"],
+        &mut failures,
+    );
+    expect_caught(
+        "protocol-ops",
+        rules::check_protocol_ops(
+            &fx.join("proto_messages.rs"),
+            &fx.join("proto_codec.rs"),
+            &fx.join("proto_protocol.md"),
+            &fx, // peek_op sweep over the fixtures themselves
+        ),
+        &[
+            "op `ghost-op` never appears",
+            "op `ghost-op` missing from the op tables",
+            "documented op `phantom-op`",
+            "peek_op compared against unknown op `typo-op`",
+        ],
+        &mut failures,
+    );
+    expect_caught(
+        "safety-comment",
+        rules::check_safety(&fx.join("unsafe_bad_dir")),
+        &["`unsafe` without a `// SAFETY:` comment"],
+        &mut failures,
+    );
+    expect_caught(
+        "no-panic",
+        rules::check_no_panic(&[fx.join("panic_bad_dir")], None),
+        &["`.unwrap()`", "`panic!(`"],
+        &mut failures,
+    );
+
+    // The fixtures also prove the rules are not over-broad: the documented
+    // `unsafe` in the safety fixture, and the test module and lock-idiom
+    // lines in the no-panic fixture, must NOT be flagged.
+    match rules::check_safety(&fx.join("unsafe_bad_dir")) {
+        Ok(found) if found.len() == 2 => {
+            println!("self-check: safety-comment: documented site not flagged (2 findings, 2 expected)");
+        }
+        Ok(found) => {
+            eprintln!("self-check: safety-comment: expected exactly 2 findings, got {}", found.len());
+            failures += 1;
+        }
+        Err(e) => {
+            eprintln!("self-check: safety-comment: {e}");
+            failures += 1;
+        }
+    }
+    match rules::check_no_panic(&[fx.join("panic_bad_dir")], None) {
+        Ok(found) if found.len() == 2 => {
+            println!("self-check: no-panic: exemptions held ({} findings, 2 expected)", found.len());
+        }
+        Ok(found) => {
+            eprintln!(
+                "self-check: no-panic: expected exactly 2 findings, got {}: {:?}",
+                found.len(),
+                found.iter().map(|v| format!("{v}")).collect::<Vec<_>>()
+            );
+            failures += 1;
+        }
+        Err(e) => {
+            eprintln!("self-check: no-panic: {e}");
+            failures += 1;
+        }
+    }
+
+    if failures == 0 {
+        println!("self-check: all rules fire on their seeded violations");
+        0
+    } else {
+        eprintln!("self-check: {failures} expectation(s) failed");
+        1
+    }
+}

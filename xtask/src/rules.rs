@@ -1,0 +1,509 @@
+//! The four invariant checks behind `cargo xtask lint`.
+//!
+//! Each rule is a function over explicit paths so that `--self-check` can
+//! re-point it at the seeded-violation fixtures in `xtask/fixtures/` and
+//! prove the rule actually fires (a checker that has never been seen red
+//! is not evidence of anything — see docs/verification.md).
+//!
+//! 1. [`check_hotpath`] — no allocating calls inside the functions
+//!    registered in `xtask/hotpath.txt` (the zero-alloc control plane the
+//!    counting-allocator bench measures end-to-end; the lint covers every
+//!    build, not just the bench graph shapes).
+//! 2. [`check_protocol_ops`] — protocol op strings stay consistent across
+//!    `Msg::op()`, the codec, `peek_op` call sites, and the op tables in
+//!    `docs/protocol.md`.
+//! 3. [`check_safety`] — every `unsafe` carries a `SAFETY:` comment.
+//! 4. [`check_no_panic`] — no `unwrap`/`expect`/`panic!` family calls in
+//!    non-test `server/`, `worker/`, `protocol/` code, modulo the mutex
+//!    poisoning idiom and a reviewed allowlist.
+
+use crate::scan::{self, Source};
+use std::collections::BTreeSet;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+pub struct Violation {
+    pub path: PathBuf,
+    /// 1-based; 0 for whole-file findings.
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path.display(), self.line, self.rule, self.msg)
+    }
+}
+
+pub type RuleResult = Result<Vec<Violation>, String>;
+
+fn read(path: &Path) -> Result<String, String> {
+    std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+fn scan_file(path: &Path) -> Result<Source, String> {
+    scan::scan(path).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+// ---------------------------------------------------------------- rule 1
+
+/// Allocating calls that must not appear in a registered hot function.
+/// Matched against the code channel, so comments and string literals never
+/// trigger.
+const BANNED_ALLOC: &[&str] = &[
+    "format!",
+    ".to_owned()",
+    ".to_string()",
+    ".to_vec()",
+    "String::from(",
+    "String::new(",
+    "Vec::new(",
+    "Vec::with_capacity(",
+    "vec![",
+    "Box::new(",
+    ".collect(",
+];
+
+/// A `.clone()` in a hot function is allowed only with an explicit
+/// same-line or previous-line `lint: clone-ok` marker (used for clones of
+/// plain scalar enums, which are memcpys).
+const CLONE_OK: &str = "lint: clone-ok";
+
+pub fn check_hotpath(repo: &Path, registry: &Path) -> RuleResult {
+    let mut out = Vec::new();
+    let reg = read(registry)?;
+    for entry in reg.lines().map(str::trim).filter(|l| !l.is_empty() && !l.starts_with('#')) {
+        let Some((rel, fn_name)) = entry.rsplit_once("::") else {
+            out.push(Violation {
+                path: registry.to_path_buf(),
+                line: 0,
+                rule: "hotpath",
+                msg: format!("malformed registry entry `{entry}` (want path.rs::fn_name)"),
+            });
+            continue;
+        };
+        let src = scan_file(&repo.join(rel))?;
+        let Some((start, end)) = scan::fn_def(&src, fn_name) else {
+            out.push(Violation {
+                path: src.path.clone(),
+                line: 0,
+                rule: "hotpath",
+                msg: format!("registered hot function `{fn_name}` not found"),
+            });
+            continue;
+        };
+        for (li, line) in src.lines.iter().enumerate().take(end + 1).skip(start) {
+            let code = &line.code;
+            for tok in BANNED_ALLOC {
+                if code.contains(tok) {
+                    out.push(Violation {
+                        path: src.path.clone(),
+                        line: li + 1,
+                        rule: "hotpath",
+                        msg: format!("`{tok}` allocates inside hot function `{fn_name}`"),
+                    });
+                }
+            }
+            if code.contains(".clone()") {
+                let marked = src.raw[li].contains(CLONE_OK)
+                    || (li > 0 && src.raw[li - 1].contains(CLONE_OK));
+                if !marked {
+                    out.push(Violation {
+                        path: src.path.clone(),
+                        line: li + 1,
+                        rule: "hotpath",
+                        msg: format!(
+                            "`.clone()` inside hot function `{fn_name}` \
+                             (mark scalar clones with `// {CLONE_OK}`)"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------- rule 2
+
+fn looks_like_op(s: &str) -> bool {
+    s.contains('-') && !s.is_empty() && s.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-')
+}
+
+fn first_backticked(cell: &str) -> Option<String> {
+    let open = cell.find('`')?;
+    let rest = &cell[open + 1..];
+    let close = rest.find('`')?;
+    Some(rest[..close].to_string())
+}
+
+/// `(line, op)` pairs from markdown tables whose header's first column is
+/// `op`. Handles decorated cells like `` `submit-graph` (cold) ``.
+fn doc_table_ops(text: &str) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    let mut in_op_table = false;
+    for (i, line) in text.lines().enumerate() {
+        let t = line.trim();
+        if !t.starts_with('|') {
+            in_op_table = false;
+            continue;
+        }
+        let first = t.trim_matches('|').split('|').next().unwrap_or("").trim();
+        if first == "op" {
+            in_op_table = true;
+            continue;
+        }
+        if first.chars().all(|c| c == '-' || c == ' ' || c == ':') {
+            continue; // separator row
+        }
+        if in_op_table {
+            if let Some(op) = first_backticked(first) {
+                out.push((i + 1, op));
+            }
+        }
+    }
+    out
+}
+
+pub fn check_protocol_ops(
+    messages: &Path,
+    codec: &Path,
+    doc: &Path,
+    rust_root: &Path,
+) -> RuleResult {
+    let mut out = Vec::new();
+
+    // Source of truth: the string literals in `Msg::op()`.
+    let msrc = scan_file(messages)?;
+    let (start, end) = scan::fn_def(&msrc, "op")
+        .ok_or_else(|| format!("{}: fn op not found", messages.display()))?;
+    let mut ops: Vec<(usize, String)> = Vec::new();
+    for (li, line) in msrc.lines.iter().enumerate().take(end + 1).skip(start) {
+        for s in &line.strings {
+            ops.push((li + 1, s.clone()));
+        }
+    }
+    let op_set: BTreeSet<&str> = ops.iter().map(|(_, s)| s.as_str()).collect();
+    for (li, op) in &ops {
+        if ops.iter().filter(|(_, o)| o == op).count() > 1 {
+            out.push(Violation {
+                path: msrc.path.clone(),
+                line: *li,
+                rule: "protocol-ops",
+                msg: format!("op string `{op}` returned for more than one message variant"),
+            });
+        }
+    }
+
+    // Every op must appear as a literal in the codec (a variant whose op
+    // never shows up there has no decode arm).
+    let csrc = scan_file(codec)?;
+    let codec_strings: BTreeSet<&str> = csrc
+        .lines
+        .iter()
+        .flat_map(|l| l.strings.iter().map(String::as_str))
+        .collect();
+    for (li, op) in &ops {
+        if !codec_strings.contains(op.as_str()) {
+            out.push(Violation {
+                path: msrc.path.clone(),
+                line: *li,
+                rule: "protocol-ops",
+                msg: format!(
+                    "op `{op}` never appears in {} (missing decode arm?)",
+                    codec.display()
+                ),
+            });
+        }
+    }
+
+    // Doc tables: both directions.
+    let doc_text = read(doc)?;
+    let doc_ops = doc_table_ops(&doc_text);
+    let doc_set: BTreeSet<&str> = doc_ops.iter().map(|(_, s)| s.as_str()).collect();
+    for (li, op) in &ops {
+        if !doc_set.contains(op.as_str()) {
+            out.push(Violation {
+                path: msrc.path.clone(),
+                line: *li,
+                rule: "protocol-ops",
+                msg: format!("op `{op}` missing from the op tables in {}", doc.display()),
+            });
+        }
+    }
+    for (li, op) in &doc_ops {
+        if !op_set.contains(op.as_str()) {
+            out.push(Violation {
+                path: doc.to_path_buf(),
+                line: *li,
+                rule: "protocol-ops",
+                msg: format!("documented op `{op}` is not returned by Msg::op()"),
+            });
+        }
+    }
+
+    // peek_op call sites: a literal compared against the peeked op must be
+    // a real op (catches silently-dead hot-path dispatch branches).
+    for file in scan::rust_files(rust_root).map_err(|e| e.to_string())? {
+        let src = scan_file(&file)?;
+        for (li, line) in src.lines.iter().enumerate() {
+            if !line.code.contains("peek_op(") {
+                continue;
+            }
+            for s in &line.strings {
+                if looks_like_op(s) && !op_set.contains(s.as_str()) {
+                    out.push(Violation {
+                        path: src.path.clone(),
+                        line: li + 1,
+                        rule: "protocol-ops",
+                        msg: format!("peek_op compared against unknown op `{s}`"),
+                    });
+                }
+            }
+        }
+    }
+
+    Ok(out)
+}
+
+// ---------------------------------------------------------------- rule 3
+
+fn check_safety_source(src: &Source, out: &mut Vec<Violation>) {
+    for (li, line) in src.lines.iter().enumerate() {
+        if scan::find_word(&line.code, "unsafe").is_none() {
+            continue;
+        }
+        let mut ok = line.comment.contains("SAFETY:");
+        let mut j = li;
+        while !ok && j > 0 {
+            j -= 1;
+            let prev = &src.lines[j];
+            if !prev.code.trim().is_empty() {
+                break; // hit real code: the comment block ended
+            }
+            if prev.comment.contains("SAFETY:") {
+                ok = true;
+            }
+            if prev.comment.is_empty() && prev.code.trim().is_empty() && src.raw[j].trim().is_empty()
+            {
+                break; // blank line ends the contiguous comment block
+            }
+        }
+        if !ok {
+            out.push(Violation {
+                path: src.path.clone(),
+                line: li + 1,
+                rule: "safety-comment",
+                msg: "`unsafe` without a `// SAFETY:` comment immediately above".to_string(),
+            });
+        }
+    }
+}
+
+pub fn check_safety(rust_root: &Path) -> RuleResult {
+    let mut out = Vec::new();
+    for file in scan::rust_files(rust_root).map_err(|e| e.to_string())? {
+        let src = scan_file(&file)?;
+        check_safety_source(&src, &mut out);
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------- rule 4
+
+const BANNED_PANIC: &[&str] =
+    &[".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!(", "unimplemented!("];
+
+struct AllowEntry {
+    path_suffix: String,
+    needle: String,
+    used: bool,
+}
+
+fn load_allowlist(path: Option<&Path>) -> Result<Vec<AllowEntry>, String> {
+    let Some(path) = path else { return Ok(Vec::new()) };
+    let text = read(path)?;
+    let mut out = Vec::new();
+    for line in text.lines().map(str::trim).filter(|l| !l.is_empty() && !l.starts_with('#')) {
+        let Some((p, n)) = line.split_once(" :: ") else {
+            return Err(format!(
+                "{}: malformed allowlist line `{line}` (want `path :: needle`)",
+                path.display()
+            ));
+        };
+        out.push(AllowEntry { path_suffix: p.trim().to_string(), needle: n.trim().to_string(), used: false });
+    }
+    Ok(out)
+}
+
+/// The mutex-poisoning idiom: `.unwrap()`/`.expect(` directly on
+/// `.lock()`. Poisoning only happens after another thread already
+/// panicked, so propagating it is the correct double-fault behavior and
+/// allocates nothing on the success path.
+fn lock_idiom(src: &Source, li: usize, code: &str, tok_at: usize) -> bool {
+    let prefix = &code[..tok_at];
+    if prefix.trim_end().ends_with(".lock()") {
+        return true;
+    }
+    if prefix.trim().is_empty() {
+        // The call starts the line (rustfmt chain style); look back to the
+        // previous non-blank code line.
+        let mut j = li;
+        while j > 0 {
+            j -= 1;
+            let prev = src.lines[j].code.trim_end();
+            if prev.trim().is_empty() {
+                continue;
+            }
+            return prev.ends_with(".lock()");
+        }
+    }
+    false
+}
+
+fn check_no_panic_source(src: &Source, allow: &mut [AllowEntry], out: &mut Vec<Violation>) {
+    let skip = scan::test_mod_ranges(src);
+    let path_str = src.path.to_string_lossy().replace('\\', "/");
+    'line: for (li, line) in src.lines.iter().enumerate() {
+        if skip.iter().any(|&(s, e)| li >= s && li <= e) {
+            continue;
+        }
+        for tok in BANNED_PANIC {
+            let mut from = 0;
+            while let Some(pos) = line.code[from..].find(tok) {
+                let at = from + pos;
+                from = at + 1;
+                if (*tok == ".unwrap()" || *tok == ".expect(") && lock_idiom(src, li, &line.code, at)
+                {
+                    continue;
+                }
+                let mut allowed = false;
+                for entry in allow.iter_mut() {
+                    if path_str.ends_with(&entry.path_suffix) && src.raw[li].contains(&entry.needle)
+                    {
+                        entry.used = true;
+                        allowed = true;
+                    }
+                }
+                if allowed {
+                    continue 'line;
+                }
+                out.push(Violation {
+                    path: src.path.clone(),
+                    line: li + 1,
+                    rule: "no-panic",
+                    msg: format!("`{tok}` in non-test control-plane code"),
+                });
+            }
+        }
+    }
+}
+
+pub fn check_no_panic(dirs: &[PathBuf], allowlist: Option<&Path>) -> RuleResult {
+    let mut allow = load_allowlist(allowlist)?;
+    let mut out = Vec::new();
+    for dir in dirs {
+        for file in scan::rust_files(dir).map_err(|e| format!("{}: {e}", dir.display()))? {
+            let src = scan_file(&file)?;
+            check_no_panic_source(&src, &mut allow, &mut out);
+        }
+    }
+    for entry in &allow {
+        if !entry.used {
+            if let Some(path) = allowlist {
+                out.push(Violation {
+                    path: path.to_path_buf(),
+                    line: 0,
+                    rule: "no-panic",
+                    msg: format!(
+                        "stale allowlist entry `{} :: {}` matched nothing",
+                        entry.path_suffix, entry.needle
+                    ),
+                });
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::scan_str;
+
+    #[test]
+    fn clone_marker_exempts_scalar_clones() {
+        let text = "fn hot() {\n    let a = x.clone(); // lint: clone-ok — scalar enum\n    let b = y.clone();\n}\n";
+        let src = scan_str(PathBuf::from("h.rs"), text);
+        let (s, e) = scan::fn_def(&src, "hot").unwrap();
+        let mut hits = 0;
+        for li in s..=e {
+            if src.lines[li].code.contains(".clone()")
+                && !src.raw[li].contains(CLONE_OK)
+                && !(li > 0 && src.raw[li - 1].contains(CLONE_OK))
+            {
+                hits += 1;
+            }
+        }
+        assert_eq!(hits, 1, "only the unmarked clone is flagged");
+    }
+
+    #[test]
+    fn banned_tokens_in_strings_do_not_fire() {
+        let src = scan_str(PathBuf::from("s.rs"), "fn hot() { log(\"Vec::new()\"); }\n");
+        let (s, e) = scan::fn_def(&src, "hot").unwrap();
+        for li in s..=e {
+            for tok in BANNED_ALLOC {
+                assert!(!src.lines[li].code.contains(tok), "{tok} leaked into code channel");
+            }
+        }
+    }
+
+    #[test]
+    fn lock_idiom_same_line_and_chain_style() {
+        let text = "fn f() {\n    a.lock().unwrap().push(1);\n    b\n        .lock()\n        .unwrap()\n        .push(2);\n    c.unwrap();\n}\n";
+        let src = scan_str(PathBuf::from("l.rs"), text);
+        let mut out = Vec::new();
+        check_no_panic_source(&src, &mut [], &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].line, 7);
+    }
+
+    #[test]
+    fn test_modules_are_exempt() {
+        let text = "fn live() { x.unwrap(); }\n#[cfg(test)]\nmod tests {\n    fn t() { y.unwrap(); panic!(\"boom\"); }\n}\n";
+        let src = scan_str(PathBuf::from("t.rs"), text);
+        let mut out = Vec::new();
+        check_no_panic_source(&src, &mut [], &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].line, 1);
+    }
+
+    #[test]
+    fn unwrap_or_family_is_not_flagged() {
+        let text = "fn f() { a.unwrap_or(0); b.unwrap_or_else(|| 1); c.unwrap_or_default(); }\n";
+        let src = scan_str(PathBuf::from("u.rs"), text);
+        let mut out = Vec::new();
+        check_no_panic_source(&src, &mut [], &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn doc_table_parser_handles_decorated_cells() {
+        let doc = "| op | fields |\n|----|--------|\n| `submit-graph` (cold) | `graph: map` |\n| `fetch-data` (w2w) | `run: uint` |\n\n| Path | Ops |\n|---|---|\n| hot | `not-an-op-table` |\n";
+        let ops = doc_table_ops(doc);
+        let names: Vec<&str> = ops.iter().map(|(_, s)| s.as_str()).collect();
+        assert_eq!(names, vec!["submit-graph", "fetch-data"]);
+    }
+
+    #[test]
+    fn safety_comment_block_is_recognized() {
+        let text = "// SAFETY: sole instance lives behind the global mutex;\n// no method leaks a reference past the guard.\nunsafe impl Send for H {}\n\nunsafe impl Sync for H {}\n";
+        let src = scan_str(PathBuf::from("u.rs"), text);
+        let mut out = Vec::new();
+        check_safety_source(&src, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].line, 5);
+    }
+}

@@ -1,0 +1,404 @@
+//! Lexical layer for the repo lint: splits Rust source into per-line
+//! code / comment / string-literal channels, and provides brace-matched
+//! region lookup (function bodies, `#[cfg(test)]` modules) on the code
+//! channel.
+//!
+//! This is deliberately *not* a parser. Every check in [`crate::rules`] is
+//! a token-presence invariant (no allocating call inside a registered hot
+//! function, every `unsafe` carries a `SAFETY:` comment, ...), and a
+//! hand-rolled scanner keeps the tool dependency-free — the build
+//! environment cannot fetch `syn`. What the scanner does understand is
+//! exactly the lexical structure that would otherwise produce false
+//! positives: line comments, nested block comments, string / byte-string /
+//! char literals with escapes, raw strings with `#` fences, and lifetimes
+//! (`'a`) versus char literals (`'a'`).
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One source line, split into channels.
+#[derive(Debug, Default)]
+pub struct Line {
+    /// Code with comments removed and string-literal *contents* blanked
+    /// to spaces (the delimiting quotes remain, so `"x".len()` still
+    /// reads as a method call on a string).
+    pub code: String,
+    /// Comment text appearing on this line (line or block).
+    pub comment: String,
+    /// Contents of string literals that *end* on this line.
+    pub strings: Vec<String>,
+}
+
+/// A scanned source file.
+pub struct Source {
+    pub path: PathBuf,
+    pub raw: Vec<String>,
+    pub lines: Vec<Line>,
+}
+
+#[derive(Clone, Copy)]
+enum State {
+    Code,
+    /// Inside a (possibly nested) block comment.
+    Block(usize),
+    /// Inside a string literal; `Some(n)` = raw string closed by `"` + n `#`s.
+    Str(Option<usize>),
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Scan source text already in memory (tests, fixtures).
+pub fn scan_str(path: PathBuf, text: &str) -> Source {
+    let raw: Vec<String> = text.split('\n').map(str::to_string).collect();
+    let mut lines = Vec::with_capacity(raw.len());
+    let mut state = State::Code;
+    let mut cur_string = String::new();
+
+    for rawline in &raw {
+        let chars: Vec<char> = rawline.chars().collect();
+        let mut line = Line::default();
+        let mut i = 0;
+        while i < chars.len() {
+            let c = chars[i];
+            match state {
+                State::Block(depth) => {
+                    if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        state = State::Block(depth + 1);
+                        line.comment.push_str("/*");
+                        i += 2;
+                    } else if c == '*' && chars.get(i + 1) == Some(&'/') {
+                        state = if depth == 1 { State::Code } else { State::Block(depth - 1) };
+                        line.comment.push_str("*/");
+                        i += 2;
+                    } else {
+                        line.comment.push(c);
+                        i += 1;
+                    }
+                }
+                State::Str(raw_hashes) => match raw_hashes {
+                    None => {
+                        if c == '\\' && i + 1 < chars.len() {
+                            cur_string.push(chars[i + 1]);
+                            line.code.push_str("  ");
+                            i += 2;
+                        } else if c == '"' {
+                            line.code.push('"');
+                            line.strings.push(std::mem::take(&mut cur_string));
+                            state = State::Code;
+                            i += 1;
+                        } else {
+                            cur_string.push(c);
+                            line.code.push(' ');
+                            i += 1;
+                        }
+                    }
+                    Some(n) => {
+                        let closes = c == '"'
+                            && i + n < chars.len()
+                            && chars[i + 1..i + 1 + n].iter().all(|&h| h == '#');
+                        if closes {
+                            line.code.push('"');
+                            for _ in 0..n {
+                                line.code.push('#');
+                            }
+                            line.strings.push(std::mem::take(&mut cur_string));
+                            state = State::Code;
+                            i += 1 + n;
+                        } else {
+                            cur_string.push(c);
+                            line.code.push(' ');
+                            i += 1;
+                        }
+                    }
+                },
+                State::Code => {
+                    if c == '/' && chars.get(i + 1) == Some(&'/') {
+                        let rest: String = chars[i..].iter().collect();
+                        line.comment.push_str(&rest);
+                        break;
+                    } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        state = State::Block(1);
+                        line.comment.push_str("/*");
+                        i += 2;
+                    } else if (c == 'r' || c == 'b') && (i == 0 || !is_ident(chars[i - 1])) {
+                        // Raw-string prefix? (`r"`, `r#"`, `br"`, ...)
+                        let mut j = i;
+                        if chars[j] == 'b' {
+                            j += 1;
+                        }
+                        if chars.get(j) == Some(&'r') {
+                            j += 1;
+                            let mut n = 0;
+                            while chars.get(j) == Some(&'#') {
+                                n += 1;
+                                j += 1;
+                            }
+                            if chars.get(j) == Some(&'"') {
+                                for &p in &chars[i..=j] {
+                                    line.code.push(p);
+                                }
+                                cur_string.clear();
+                                state = State::Str(Some(n));
+                                i = j + 1;
+                                continue;
+                            }
+                        }
+                        line.code.push(c);
+                        i += 1;
+                    } else if c == '"' {
+                        line.code.push('"');
+                        cur_string.clear();
+                        state = State::Str(None);
+                        i += 1;
+                    } else if c == '\'' {
+                        // Char literal vs lifetime.
+                        if chars.get(i + 1) == Some(&'\\') {
+                            // Escaped char literal: find the closing quote.
+                            let mut j = i + 3;
+                            while j < chars.len() && chars[j] != '\'' {
+                                j += 1;
+                            }
+                            line.code.push_str("''");
+                            i = (j + 1).min(chars.len());
+                        } else if chars.get(i + 2) == Some(&'\'') {
+                            line.code.push_str("' '");
+                            i += 3;
+                        } else {
+                            // Lifetime (`'a`): keep the tick, continue.
+                            line.code.push('\'');
+                            i += 1;
+                        }
+                    } else {
+                        line.code.push(c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        if let State::Str(_) = state {
+            cur_string.push('\n');
+        }
+        lines.push(line);
+    }
+    Source { path, raw, lines }
+}
+
+/// Scan a file from disk.
+pub fn scan(path: &Path) -> io::Result<Source> {
+    let text = std::fs::read_to_string(path)?;
+    Ok(scan_str(path.to_path_buf(), &text))
+}
+
+/// First whole-word occurrence of `word` in `chars` at or after `from`
+/// (char index).
+fn find_word_in(chars: &[char], word: &str, from: usize) -> Option<usize> {
+    let w: Vec<char> = word.chars().collect();
+    if w.is_empty() || chars.len() < w.len() {
+        return None;
+    }
+    for at in from..=chars.len() - w.len() {
+        if chars[at..at + w.len()] == w[..]
+            && (at == 0 || !is_ident(chars[at - 1]))
+            && (at + w.len() == chars.len() || !is_ident(chars[at + w.len()]))
+        {
+            return Some(at);
+        }
+    }
+    None
+}
+
+/// Whole-word search on one code line; returns a char index.
+pub fn find_word(code: &str, word: &str) -> Option<usize> {
+    let chars: Vec<char> = code.chars().collect();
+    find_word_in(&chars, word, 0)
+}
+
+/// From `(from_line, from_col)` (char col), find the first `{` in code and
+/// return the line index of its matching `}`.
+pub fn match_brace(src: &Source, from_line: usize, from_col: usize) -> Option<usize> {
+    let mut depth: i64 = 0;
+    let mut started = false;
+    for (li, line) in src.lines.iter().enumerate().skip(from_line) {
+        let start = if li == from_line { from_col } else { 0 };
+        for (ci, c) in line.code.chars().enumerate() {
+            if ci < start {
+                continue;
+            }
+            match c {
+                '{' => {
+                    depth += 1;
+                    started = true;
+                }
+                '}' => {
+                    depth -= 1;
+                    if started && depth == 0 {
+                        return Some(li);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    None
+}
+
+/// Locate `fn <name>` and return the inclusive line range of the item
+/// (definition line through the body's closing brace). Call sites are
+/// rejected: the token before `name` must be `fn` and the token after it
+/// must open a parameter or generics list.
+pub fn fn_def(src: &Source, name: &str) -> Option<(usize, usize)> {
+    for (li, line) in src.lines.iter().enumerate() {
+        let chars: Vec<char> = line.code.chars().collect();
+        let mut from = 0;
+        while let Some(at) = find_word_in(&chars, name, from) {
+            from = at + 1;
+            let before: String = chars[..at].iter().collect();
+            let bt = before.trim_end();
+            if !bt.ends_with("fn") {
+                continue;
+            }
+            let bchars: Vec<char> = bt.chars().collect();
+            if bchars.len() > 2 && is_ident(bchars[bchars.len() - 3]) {
+                continue; // e.g. `xfn name`
+            }
+            let mut k = at + name.chars().count();
+            while k < chars.len() && chars[k].is_whitespace() {
+                k += 1;
+            }
+            if k < chars.len() && (chars[k] == '(' || chars[k] == '<') {
+                let end = match_brace(src, li, at)?;
+                return Some((li, end));
+            }
+        }
+    }
+    None
+}
+
+/// Inclusive line ranges of items annotated `#[cfg(test)]` (in this repo:
+/// the per-file `mod tests` blocks).
+pub fn test_mod_ranges(src: &Source) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut li = 0;
+    while li < src.lines.len() {
+        if src.lines[li].code.contains("#[cfg(test)]") {
+            if let Some(end) = match_brace(src, li, 0) {
+                out.push((li, end));
+                li = end + 1;
+                continue;
+            }
+        }
+        li += 1;
+    }
+    out
+}
+
+/// Every `.rs` file under `root`, recursively, sorted for determinism.
+pub fn rust_files(root: &Path) -> io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn src(text: &str) -> Source {
+        scan_str(PathBuf::from("test.rs"), text)
+    }
+
+    #[test]
+    fn strings_are_blanked_and_captured() {
+        let s = src(r#"let x = "Vec::new()"; x.len();"#);
+        assert!(!s.lines[0].code.contains("Vec::new"));
+        assert!(s.lines[0].code.contains("x.len()"));
+        assert_eq!(s.lines[0].strings, vec!["Vec::new()".to_string()]);
+    }
+
+    #[test]
+    fn escapes_do_not_end_strings() {
+        let s = src(r#"let x = "a\"b; Vec::new()"; done();"#);
+        assert!(!s.lines[0].code.contains("Vec::new"));
+        assert!(s.lines[0].code.contains("done()"));
+        assert_eq!(s.lines[0].strings, vec![r#"a"b; Vec::new()"#.to_string()]);
+    }
+
+    #[test]
+    fn comments_are_split_out() {
+        let s = src("foo(); // Vec::new() in a comment\nbar();");
+        assert!(!s.lines[0].code.contains("Vec::new"));
+        assert!(s.lines[0].comment.contains("Vec::new"));
+        assert!(s.lines[1].code.contains("bar()"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let s = src("a(); /* outer /* inner */ still */ b();");
+        assert!(s.lines[0].code.contains("a()"));
+        assert!(s.lines[0].code.contains("b()"));
+        assert!(!s.lines[0].code.contains("inner"));
+        assert!(!s.lines[0].code.contains("still"));
+    }
+
+    #[test]
+    fn raw_strings_with_fences() {
+        let s = src(r##"let x = r#"Vec::new() "quoted" inside"#; tail();"##);
+        assert!(!s.lines[0].code.contains("Vec::new"));
+        assert!(s.lines[0].code.contains("tail()"));
+        assert_eq!(s.lines[0].strings.len(), 1);
+        assert!(s.lines[0].strings[0].contains("quoted"));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        // The '"' char literal must not open a string; 'a must stay a
+        // lifetime so the rest of the line is still code.
+        let s = src("fn f<'a>(x: &'a str) -> char { let q = '\"'; q }");
+        assert!(s.lines[0].code.contains("let q ="));
+        assert!(s.lines[0].code.contains("&'a str"));
+        assert!(s.lines[0].strings.is_empty());
+    }
+
+    #[test]
+    fn multiline_strings_span_lines() {
+        let s = src("let x = \"first\nVec::new()\nlast\"; end();");
+        assert!(!s.lines[1].code.contains("Vec::new"));
+        assert!(s.lines[2].code.contains("end()"));
+        assert_eq!(s.lines[2].strings, vec!["first\nVec::new()\nlast".to_string()]);
+    }
+
+    #[test]
+    fn fn_def_skips_call_sites() {
+        let text = "fn caller() {\n    target();\n}\nfn target() {\n    body();\n}\n";
+        let s = src(text);
+        let (start, end) = fn_def(&s, "target").unwrap();
+        assert_eq!((start, end), (3, 5));
+    }
+
+    #[test]
+    fn fn_def_ignores_comment_mentions() {
+        let text = "// fn ghost() is documented here\nfn ghost() { real(); }\n";
+        let s = src(text);
+        assert_eq!(fn_def(&s, "ghost").unwrap().0, 1);
+    }
+
+    #[test]
+    fn test_mod_range_is_brace_matched() {
+        let text = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\nfn after() {}\n";
+        let s = src(text);
+        assert_eq!(test_mod_ranges(&s), vec![(1, 4)]);
+    }
+}
