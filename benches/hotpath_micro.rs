@@ -30,7 +30,7 @@ use rsds::protocol::{
     encode_msg_value, ComputeTaskView, Msg, RunId, TaskFinishedInfo, TaskInputLoc,
 };
 use rsds::scheduler::{self, Action, WorkerId, WorkerInfo};
-use rsds::server::{ComputeDispatch, Dest, GraphRun, Origin, Reactor, SchedulerPool};
+use rsds::server::{ComputeDispatch, Dest, GraphRun, Origin, Reactor, ReplicaSet, SchedulerPool};
 use rsds::sim::{simulate, SimConfig};
 use rsds::taskgraph::{GraphBuilder, Payload, TaskId};
 use rsds::worker::queue::{FetchPlan, TaskQueue};
@@ -405,7 +405,33 @@ fn dispatch_section(cfg: BenchConfig) -> Vec<CodecRow> {
         },
     ));
 
-    // --- the PR 5 acceptance gate: 0 allocs/task after warm-up ---
+    // Replica bookkeeping (PR 7): the reactor's per-task `who_has` entry.
+    // Old = a fresh heap Vec<WorkerId> per finish (1 alloc); new = the
+    // inline ReplicaSet — push on finish, first() on dispatch, retain() on
+    // a worker death — allocation-free at the common replication factor.
+    rows.push(codec_pair(
+        cfg,
+        "who_has: finish -> dispatch -> death",
+        n,
+        || {
+            let mut h: Vec<WorkerId> = Vec::with_capacity(2);
+            h.push(WorkerId(0));
+            h.push(WorkerId(1));
+            std::hint::black_box(h.first().copied());
+            h.retain(|&w| w != WorkerId(0));
+            std::hint::black_box(h.len());
+        },
+        || {
+            let mut h = ReplicaSet::new();
+            h.push(WorkerId(0));
+            h.push(WorkerId(1));
+            std::hint::black_box(h.first());
+            h.retain(|w| w != WorkerId(0));
+            std::hint::black_box(h.len());
+        },
+    ));
+
+    // --- the PR 5/7 acceptance gate: 0 allocs/task after warm-up ---
     for r in &rows {
         assert_eq!(
             r.new_allocs_per_msg, 0.0,

@@ -105,7 +105,10 @@ pub struct Client {
 impl Client {
     /// Connect and register.
     pub fn connect(addr: &str, name: &str) -> Result<Client> {
-        let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        // Retrying connect: a client fleet larger than the listen backlog
+        // (fig. 9 runs 1024 at once) sees transient refusals on loopback.
+        let mut stream =
+            crate::util::connect_with_retry(addr).with_context(|| format!("connect {addr}"))?;
         stream.set_nodelay(true).ok();
         let mut frames_out = FrameWriter::new();
         let mut frames_in = FrameReader::new();

@@ -25,7 +25,7 @@ USAGE:
   rsds server  [--addr 127.0.0.1:8786] [--scheduler ws|random|dask-ws]
                [--profile rsds|dask] [--emulate-python] [--seed N]
                [--fairness rr|arrival|weighted] [--max-runs-per-client N]
-               [--max-recoveries N]
+               [--max-recoveries N] [--shards N]
   rsds worker  --server ADDR [--ncores 1] [--node 0] [--name w0] [--count N]
   rsds zero-worker --server ADDR [--count N]
   rsds submit  --server ADDR --graph SPEC  (e.g. merge-10000, xarray-25)
@@ -71,7 +71,7 @@ fn run() -> Result<()> {
     let args = Args::from_env(&[
         "addr", "scheduler", "profile", "seed", "server", "ncores", "node", "name", "count",
         "graph", "workers", "timeout-s", "workers-per-node", "fairness",
-        "max-runs-per-client", "max-recoveries",
+        "max-runs-per-client", "max-recoveries", "shards",
     ])?;
     match args.subcommand() {
         Some("server") => cmd_server(&args),
@@ -108,15 +108,17 @@ fn cmd_server(args: &Args) -> Result<()> {
             "max-recoveries",
             rsds::server::DEFAULT_MAX_RECOVERIES,
         )?,
+        shards: args.get_parsed_or("shards", ServerConfig::default().shards)?,
         ..ServerConfig::default()
     };
     let emulate = config.emulate;
     let scheduler = config.scheduler.clone();
     let fairness = config.fairness.clone();
+    let shards = config.shards;
     let handle = serve(config)?;
     println!(
         "rsds server listening on {} (scheduler={scheduler}, fairness={fairness}, \
-         emulate-python={emulate})",
+         shards={shards}, emulate-python={emulate})",
         handle.addr
     );
     // Run until killed.

@@ -4,7 +4,7 @@
 //! exhaustive interleaving exploration for the repo's small concurrency
 //! cores: the worker's one-mutex [`TaskQueue`](crate::worker::TaskQueue),
 //! the reactor's report window behind the [`ServerHandle`] mutex, the
-//! writer-registry/`flush_batches` shutdown protocol, and the runtime's
+//! cross-shard `deliver_forward` forward/death protocol, and the runtime's
 //! global-init pattern. The build environment is offline and the crate is
 //! dependency-free, so — exactly like [`crate::testing`] stands in for
 //! `proptest` — this module is a small, self-contained model checker with

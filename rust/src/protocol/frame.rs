@@ -155,6 +155,108 @@ impl Default for FrameReader {
     }
 }
 
+/// Outcome of one [`FrameAccumulator::poll_frame`] call against a
+/// nonblocking stream.
+#[derive(Debug)]
+pub enum NbRead<'a> {
+    /// One complete frame body; valid until the next call.
+    Frame(&'a [u8]),
+    /// The stream has no more bytes right now; re-poll on readiness.
+    WouldBlock,
+    /// Clean EOF at a frame boundary.
+    Closed,
+}
+
+/// Incremental frame reader for nonblocking streams: accumulates the
+/// 8-byte length prefix and then the body across however many partial
+/// reads the kernel delivers, yielding one frame at a time. The body
+/// buffer is reused across frames (grows to the largest frame seen), so a
+/// warm accumulator allocates nothing — the event-loop counterpart of
+/// [`FrameReader`].
+pub struct FrameAccumulator {
+    head: [u8; 8],
+    head_len: usize,
+    body: Vec<u8>,
+    /// Bytes of `body` filled so far; `body.len()` is the target once the
+    /// header is complete.
+    filled: usize,
+    /// Header fully parsed and validated for the in-progress frame.
+    have_len: bool,
+}
+
+impl FrameAccumulator {
+    pub fn new() -> FrameAccumulator {
+        FrameAccumulator { head: [0u8; 8], head_len: 0, body: Vec::new(), filled: 0, have_len: false }
+    }
+
+    /// Advance by at most one frame. EOF in the middle of a frame is an
+    /// `UnexpectedEof` error; EOF between frames is `Closed`. After
+    /// `Frame` is returned the caller must process the body before the
+    /// next call (the buffer is reused).
+    pub fn poll_frame<'a>(&'a mut self, r: &mut impl Read) -> Result<NbRead<'a>, FrameError> {
+        // Phase 1: accumulate the length prefix.
+        while !self.have_len {
+            match r.read(&mut self.head[self.head_len..]) {
+                Ok(0) => {
+                    if self.head_len == 0 {
+                        return Ok(NbRead::Closed);
+                    }
+                    return Err(FrameError::Io(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "truncated frame length",
+                    )));
+                }
+                Ok(n) => {
+                    self.head_len += n;
+                    if self.head_len == 8 {
+                        let len = u64::from_le_bytes(self.head);
+                        if len > MAX_FRAME_LEN {
+                            return Err(FrameError::TooLarge(len));
+                        }
+                        self.body.clear();
+                        self.body.resize(len as usize, 0);
+                        self.filled = 0;
+                        self.have_len = true;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    return Ok(NbRead::WouldBlock)
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(FrameError::Io(e)),
+            }
+        }
+        // Phase 2: accumulate the body.
+        while self.filled < self.body.len() {
+            match r.read(&mut self.body[self.filled..]) {
+                Ok(0) => {
+                    return Err(FrameError::Io(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "truncated frame body",
+                    )))
+                }
+                Ok(n) => self.filled += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    return Ok(NbRead::WouldBlock)
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(FrameError::Io(e)),
+            }
+        }
+        // Frame complete: reset header state for the next one, hand the
+        // body out borrowed.
+        self.head_len = 0;
+        self.have_len = false;
+        Ok(NbRead::Frame(&self.body))
+    }
+}
+
+impl Default for FrameAccumulator {
+    fn default() -> Self {
+        FrameAccumulator::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -223,6 +325,77 @@ mod tests {
             assert_eq!(&decode_msg(bytes).unwrap(), m);
         }
         assert!(matches!(fr.read(&mut r), Err(FrameError::Closed)));
+    }
+
+    /// Yields one byte per read, interleaving `WouldBlock` between every
+    /// byte — the worst-case partial-read schedule a nonblocking socket
+    /// can produce.
+    struct Dribble {
+        data: Vec<u8>,
+        pos: usize,
+        ready: bool,
+    }
+
+    impl Read for Dribble {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if !self.ready {
+                self.ready = true;
+                return Err(std::io::Error::from(std::io::ErrorKind::WouldBlock));
+            }
+            self.ready = false;
+            if self.pos == self.data.len() || buf.is_empty() {
+                return Ok(0);
+            }
+            buf[0] = self.data[self.pos];
+            self.pos += 1;
+            Ok(1)
+        }
+    }
+
+    #[test]
+    fn accumulator_reassembles_across_partial_reads() {
+        use crate::protocol::{decode_msg, Msg, RunId};
+        use crate::taskgraph::TaskId;
+        let msgs: Vec<Msg> =
+            (0..3).map(|i| Msg::StealRequest { run: RunId(2), task: TaskId(i) }).collect();
+        let mut wire = Vec::new();
+        for m in &msgs {
+            append_frame(&mut wire, m).unwrap();
+        }
+        let mut r = Dribble { data: wire, pos: 0, ready: false };
+        let mut acc = FrameAccumulator::new();
+        let mut got = Vec::new();
+        loop {
+            match acc.poll_frame(&mut r).unwrap() {
+                NbRead::Frame(bytes) => got.push(decode_msg(bytes).unwrap()),
+                NbRead::WouldBlock => continue, // dribble: re-poll
+                NbRead::Closed => break,
+            }
+        }
+        assert_eq!(got, msgs);
+    }
+
+    #[test]
+    fn accumulator_eof_mid_frame_is_io_error() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&10u64.to_le_bytes());
+        buf.extend_from_slice(b"only5");
+        let mut acc = FrameAccumulator::new();
+        let mut r = Cursor::new(buf);
+        assert!(matches!(acc.poll_frame(&mut r), Err(FrameError::Io(_))));
+        // Mid-prefix truncation too.
+        let mut acc = FrameAccumulator::new();
+        let mut r = Cursor::new(vec![1u8, 2, 3]);
+        assert!(matches!(acc.poll_frame(&mut r), Err(FrameError::Io(_))));
+    }
+
+    #[test]
+    fn accumulator_rejects_oversized_before_allocating() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME_LEN + 1).to_le_bytes());
+        let mut acc = FrameAccumulator::new();
+        let mut r = Cursor::new(buf);
+        assert!(matches!(acc.poll_frame(&mut r), Err(FrameError::TooLarge(_))));
     }
 
     #[test]

@@ -32,8 +32,8 @@ pub use codec::{
     ComputeTaskView, InputsIter, TaskInputRef,
 };
 pub use frame::{
-    append_frame, append_frame_with, read_frame, write_frame, FrameError, FrameReader,
-    FrameWriter, MAX_FRAME_LEN,
+    append_frame, append_frame_with, read_frame, write_frame, FrameAccumulator, FrameError,
+    FrameReader, FrameWriter, NbRead, MAX_FRAME_LEN,
 };
 pub use messages::{
     Msg, RunId, TaskFinishedInfo, TaskInputLoc, FETCH_FAILED_PREFIX, RECOVERY_EXHAUSTED_REASON,

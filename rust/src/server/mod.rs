@@ -24,14 +24,19 @@
 //! baseline on real sockets (DESIGN.md §5).
 //!
 //! Ownership and threading: all scheduling and bookkeeping state —
-//! [`GraphRun`]s, the [`SchedulerPool`], worker metadata — is owned by the
-//! single reactor thread and never locked. Per-connection reader threads
-//! decode frames and feed one mpsc channel; per-connection writer threads
-//! drain outbound batches; only the reactor thread touches `on_message` /
-//! `on_disconnect` (see `net.rs` for the transport discipline).
+//! [`GraphRun`]s, the [`SchedulerPool`], worker metadata — is owned by
+//! exactly one *shard* thread and never locked. Each shard runs a
+//! readiness-driven epoll event loop ([`poll`]) over nonblocking sockets:
+//! it reads frames, feeds its own reactor's `on_message`/`on_disconnect`,
+//! and resumes partial writes on writability. Client connections are
+//! hash-partitioned over the shards and their runs never leave the shard;
+//! cross-shard traffic is confined to worker registration/death
+//! broadcasts and pre-encoded frame forwarding over intra-server channels
+//! (see `net.rs` for the transport discipline).
 
 pub mod fairness;
 mod net;
+pub mod poll;
 mod pool;
 mod reactor;
 mod state;
@@ -39,15 +44,17 @@ mod window;
 
 pub use fairness::{FairnessPolicy, RunQueueStat, DEFAULT_DISPATCH_QUOTA};
 pub use net::{serve, ServerConfig, ServerHandle};
-// Verification surface: the coalescing-buffer machinery, exposed so the
+// Verification surface: the forward-buffer machinery, exposed so the
 // model-checking suite (`tests/loom_models.rs`) can drive it under the
 // exhaustive scheduler. Not part of the stable server API.
-pub use net::{flush_batches, pool_get, pool_put, BufPool, BUF_POOL_MAX};
+pub use net::{deliver_forward, pool_get, pool_put, BufPool, BUF_POOL_MAX};
 pub use pool::{SchedulerFactory, SchedulerPool};
 pub use reactor::{
     ComputeDispatch, ComputeInputs, Dest, Origin, OutboundSink, Reactor, ReactorReport,
-    DEFAULT_MAX_LIVE_RUNS_PER_CLIENT, DEFAULT_MAX_QUEUED_RUNS_PER_CLIENT,
+    SharedIds, DEFAULT_MAX_LIVE_RUNS_PER_CLIENT, DEFAULT_MAX_QUEUED_RUNS_PER_CLIENT,
     DEFAULT_REPORT_RETENTION,
 };
-pub use state::{GraphRun, Parked, RecoveryPlan, RunIdAlloc, TaskState, DEFAULT_MAX_RECOVERIES};
+pub use state::{
+    GraphRun, Parked, RecoveryPlan, ReplicaSet, RunIdAlloc, TaskState, DEFAULT_MAX_RECOVERIES,
+};
 pub use window::BoundedWindow;

@@ -1,47 +1,74 @@
-//! TCP transport for the reactor: listener, per-connection reader threads,
-//! per-connection writer threads, and the single reactor thread they feed.
+//! TCP transport for the reactor: a sharded, readiness-driven control
+//! plane. One accept thread hash-assigns each connection to one of N
+//! *reactor shards*; each shard is a single thread running an epoll event
+//! loop ([`super::poll`]) over the connections it owns, its own
+//! [`Reactor`], and its own scheduler pool.
 //!
-//! Threading model (the offline-environment stand-in for the paper's tokio
-//! event loop): readers decode frames into [`Msg`] and push them over one
-//! mpsc channel; the reactor thread — the only place touching scheduler and
-//! bookkeeping state — processes them in arrival order and hands outbound
-//! messages to per-connection writer queues so a slow peer can never block
-//! the reactor.
+//! Threading model (replaces the old thread-per-connection design, whose
+//! 2 threads/connection collapsed past a few hundred clients):
+//!
+//! - **accept thread**: assigns global connection ids, routes each new
+//!   socket to shard `conn % n_shards` over that shard's command channel.
+//! - **shard threads** (`ServerConfig::shards`, default `min(cores, 4)`):
+//!   nonblocking sockets, level-triggered epoll, per-connection read/write
+//!   interest. A client's runs live wholly on its shard (`RunId % n_shards
+//!   == shard` by strided allocation), so the per-task hot path never
+//!   crosses a thread boundary. Total threads are `O(shards)`, not
+//!   `O(clients)`.
+//!
+//! Workers are cluster-global: every shard's scheduler may place tasks on
+//! any worker, but each worker's *socket* lives on one shard (its home).
+//! Cross-shard traffic is confined to the intra-server command channels
+//! ([`Cmd`]): worker registration/death broadcasts, worker messages about
+//! a run owned elsewhere (`Cmd::Route`), and pre-encoded worker-bound
+//! frames from other shards (`Cmd::Forward`), which the home shard splices
+//! into the worker's output buffer. Ordering holds because the channels
+//! are per-producer FIFO and every frame for a worker funnels through its
+//! home shard's buffer.
 //!
 //! Hot-path discipline (this is the throughput ceiling every scaling item
 //! sits on):
 //!
-//! - readers reuse one frame buffer per connection ([`FrameReader`]) and
-//!   decode via the streaming codec — no allocation per inbound message
-//!   beyond the `Msg`'s own fields;
-//! - the reactor pumps into a [`BatchSink`]: compute-task assignments are
-//!   encoded from the borrowed [`ComputeDispatch`] straight into recycled
-//!   per-connection batch buffers — no owned `Msg` is ever materialized on
-//!   the dispatch path (zero allocations per task, asserted by
+//! - inbound frames accumulate across partial reads in a reused
+//!   per-connection [`FrameAccumulator`] and decode via the streaming
+//!   codec — no allocation per inbound message beyond the `Msg`'s own
+//!   fields;
+//! - the reactor pumps into a [`ShardSink`]: compute-task assignments are
+//!   encoded from the borrowed [`ComputeDispatch`] straight into
+//!   per-connection output buffers — no owned `Msg` is ever materialized
+//!   on the dispatch path (zero allocations per task, asserted by
 //!   `hotpath_micro`);
-//! - flushing is *adaptive across events*: a batch is handed to its writer
-//!   thread when it crosses [`FLUSH_BATCH_BYTES`] or when the inbox
-//!   drains (always before the loop blocks), so sustained load coalesces
-//!   many events into one syscall without idle latency;
-//! - writer threads flush a whole batch with one `write_all` (one syscall)
-//!   and return the buffer to a shared pool for reuse.
+//! - flushing is *adaptive*: [`FlushTuner`] measures the per-`write(2)`
+//!   syscall cost and sizes the coalescing threshold from it (an
+//!   expensive syscall earns a bigger batch), instead of a fixed 64 KiB;
+//!   everything flushes before the loop blocks, so idle latency is nil;
+//! - a connection that can't take more bytes gets `EPOLLOUT` interest and
+//!   the partial write resumes on writability ([`OutBuf::write_to`]) —
+//!   a slow peer back-pressures its own buffer, never a thread.
 
 use super::pool::SchedulerPool;
-use super::reactor::{ComputeDispatch, Dest, Origin, OutboundSink, Reactor, ReactorReport};
+use super::poll::{Events, Interest, Poller, Waker};
+use super::reactor::{
+    ComputeDispatch, Dest, Origin, OutboundSink, Reactor, ReactorReport, SharedIds,
+};
 use super::window::BoundedWindow;
 use crate::overhead::RuntimeProfile;
-use crate::protocol::{append_frame, append_frame_with, decode_msg, FrameError, FrameReader, Msg};
-use crate::scheduler::WorkerId;
+use crate::protocol::{
+    append_frame, append_frame_with, decode_msg, FrameAccumulator, FrameError, Msg, NbRead, RunId,
+};
+use crate::scheduler::{WorkerId, WorkerInfo};
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
-use std::io::Write;
+use std::io::{self, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
 // Model-checkable primitives (std unless built with `--cfg loom`); the
 // mpsc channels stay std — the modelled paths only use non-blocking sends.
 use crate::sync::atomic::{AtomicBool, Ordering};
 use crate::sync::{Arc, Mutex};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -74,6 +101,21 @@ pub struct ServerConfig {
     /// loss fails the run — the setting the client-side resubmission knob
     /// ([`crate::client::Client::with_retry_exhausted`]) pairs with.
     pub max_recoveries: u32,
+    /// Reactor shards. Each client connection is assigned to one shard
+    /// (`conn % shards`) which owns its runs end to end; workers register
+    /// on their own shard and are broadcast to the rest. Default:
+    /// `min(available cores, 4)`. The wire protocol is unaffected.
+    pub shards: usize,
+}
+
+/// `min(available cores, 4)` — past a handful of shards the scheduler
+/// itself is rarely the bottleneck and cross-shard worker chatter starts
+/// to cost more than the parallelism buys (paper §V scales to 4).
+fn default_shards() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(4)
 }
 
 impl Default for ServerConfig {
@@ -89,24 +131,21 @@ impl Default for ServerConfig {
             max_queued_runs_per_client: super::reactor::DEFAULT_MAX_QUEUED_RUNS_PER_CLIENT,
             report_retention: super::reactor::DEFAULT_REPORT_RETENTION,
             max_recoveries: super::state::DEFAULT_MAX_RECOVERIES,
+            shards: default_shards(),
         }
     }
 }
 
-enum NetEvent {
-    Inbound { conn: u64, msg: Msg },
-    Disconnected { conn: u64 },
-    Stop,
-}
-
-/// Recycled coalescing buffers: the reactor pops one per (event,
-/// destination), the writer thread pushes it back after flushing. Bounded
+/// Recycled cross-shard forward buffers: a shard pops one per (remote
+/// shard, connection) it emits to, the receiving shard pushes it back
+/// after splicing the frames into the connection's output buffer. Bounded
 /// so a burst cannot pin memory forever.
 ///
-/// Public (with [`pool_get`]/[`pool_put`]/[`flush_batches`]) for the
+/// Public (with [`pool_get`]/[`pool_put`]/[`deliver_forward`]) for the
 /// model-checking suite in `tests/loom_models.rs`, which verifies the
-/// buffer-conservation invariant — every batch is delivered to a writer
-/// XOR returned to the pool — under concurrent shutdown.
+/// buffer-conservation invariant — every forwarded batch is spliced into
+/// a live connection XOR returned to the pool — under a concurrent
+/// worker death.
 pub type BufPool = Arc<Mutex<Vec<Vec<u8>>>>;
 
 /// Pool capacity bound (see [`BufPool`]).
@@ -135,25 +174,781 @@ pub fn pool_put(pool: &BufPool, mut buf: Vec<u8>) {
     }
 }
 
+/// Splice a forwarded frame batch into a connection's output buffer
+/// (`out` is `None` when the connection is already gone — a forward
+/// racing a close/death) and recycle the batch either way. Returns
+/// whether the bytes were delivered.
+///
+/// This is the receiving half of the cross-shard [`Cmd::Forward`] path,
+/// public so the model-checking suite (`tests/loom_models.rs`) can drive
+/// a forward racing a worker death and check the conservation invariant:
+/// the batch is delivered XOR dropped, and its buffer returns to the pool
+/// exactly once in both cases — no frame is ever written to a corpse.
+pub fn deliver_forward(out: Option<&mut Vec<u8>>, bytes: Vec<u8>, buf_pool: &BufPool) -> bool {
+    match out {
+        Some(dst) => {
+            dst.extend_from_slice(&bytes);
+            pool_put(buf_pool, bytes);
+            true
+        }
+        None => {
+            pool_put(buf_pool, bytes);
+            false
+        }
+    }
+}
+
 /// Published completed-run reports: a [`BoundedWindow`] — the same type
 /// the reactor keeps its own history in, so the invariant
-/// `dropped + len == completions` lives in exactly one place. A poller
-/// that lags by more than the retention window misses the evicted reports
-/// (by design: that is the bound on a long-lived server's memory); the
-/// publishing code in `reactor_loop` reconciles the two windows by
-/// completion *count*.
+/// `dropped + len == completions` lives in exactly one place. All shards
+/// publish into this one window (each appends its fresh tail under the
+/// lock); a poller that lags by more than the retention window misses the
+/// evicted reports (by design: that is the bound on a long-lived server's
+/// memory).
 type ReportStore = BoundedWindow<ReactorReport>;
+
+/// epoll token reserved for a shard's [`Waker`] eventfd. Connection ids
+/// are assigned from 0 upward, so `u64::MAX` can never collide.
+const WAKER_TOKEN: u64 = u64::MAX;
+
+/// Frames decoded from one connection per readiness event before the loop
+/// moves on. Level-triggered epoll re-reports the remaining buffered
+/// input next iteration, so one chatty peer cannot monopolize a shard;
+/// the cap just bounds the time between pump rounds.
+const FRAMES_PER_EVENT: u32 = 128;
+
+/// Age bound on the adaptive flush: under sustained load the event loop
+/// may never go idle, and a small buffer — a `welcome` for a freshly
+/// connecting peer, a tiny run's `graph-done` — would otherwise ride
+/// below the byte threshold indefinitely. After this many loop iterations
+/// without a full flush, everything buffered goes out regardless of size.
+const FLUSH_MAX_ROUNDS: u32 = 64;
+
+/// Floor of the adaptive flush threshold — below this, coalescing gains
+/// nothing over the syscall we are about to pay anyway.
+const FLUSH_MIN_BYTES: usize = 4 * 1024;
+
+/// Ceiling of the adaptive flush threshold — past this, holdback latency
+/// and buffer growth cost more than the saved syscalls.
+const FLUSH_MAX_BYTES: usize = 256 * 1024;
+
+/// Target amortized syscall overhead, in nanoseconds per buffered byte.
+/// `threshold = syscall_ns / this`: a 2 µs `write(2)` earns a 40 KiB
+/// batch; a cheap loopback write flushes eagerly at the floor.
+const FLUSH_TARGET_NS_PER_BYTE: f64 = 0.05;
+
+/// Adaptive flush threshold from measured per-syscall cost, replacing the
+/// old fixed 64 KiB batch size: an EWMA over the wall time of each
+/// `write(2)` sets how many bytes a flush must amortize. Slow transports
+/// (loaded NIC, cross-node) coalesce harder; a fast loopback stays near
+/// the floor and keeps latency down.
+struct FlushTuner {
+    /// EWMA of per-`write(2)` wall time, nanoseconds.
+    call_ns: f64,
+    /// Derived byte threshold, kept cached so the hot-path query is one
+    /// integer compare.
+    threshold: usize,
+}
+
+/// EWMA smoothing factor: light enough to ride out scheduler noise,
+/// heavy enough to adapt within ~50 writes.
+const FLUSH_EWMA_ALPHA: f64 = 0.05;
+
+impl FlushTuner {
+    fn new() -> FlushTuner {
+        // Prior of 2 µs per call (a typical loopback write incl. kernel
+        // copy) → initial threshold 40 KiB, near the old fixed constant.
+        let mut t = FlushTuner { call_ns: 2_000.0, threshold: 0 };
+        t.retune();
+        t
+    }
+
+    fn retune(&mut self) {
+        let raw = self.call_ns / FLUSH_TARGET_NS_PER_BYTE;
+        self.threshold = (raw as usize).clamp(FLUSH_MIN_BYTES, FLUSH_MAX_BYTES);
+    }
+
+    /// Fold one measured `write(2)` into the EWMA.
+    fn record(&mut self, elapsed_ns: u64) {
+        self.call_ns += FLUSH_EWMA_ALPHA * (elapsed_ns as f64 - self.call_ns);
+        self.retune();
+    }
+
+    /// Should a buffer of `pending` bytes flush now? One integer compare —
+    /// runs once per connection per loop iteration (hot, zero-alloc).
+    fn should_flush(&self, pending: usize) -> bool {
+        pending >= self.threshold
+    }
+}
+
+/// Compact the output buffer's consumed prefix once it exceeds this —
+/// below it, the eventual full drain resets the buffer for free.
+const OUT_COMPACT_BYTES: usize = 32 * 1024;
+
+/// A connection's pending output: appended frames plus a cursor over what
+/// `write(2)` has already taken. Partial writes park here and resume on
+/// `EPOLLOUT` instead of blocking a thread.
+struct OutBuf {
+    buf: Vec<u8>,
+    /// Bytes of `buf` already written to the socket.
+    pos: usize,
+}
+
+impl OutBuf {
+    fn new() -> OutBuf {
+        OutBuf { buf: Vec::new(), pos: 0 }
+    }
+
+    /// Unwritten bytes.
+    fn pending(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// The append position for new frames, first reclaiming consumed
+    /// space: fully drained resets for free; a large consumed prefix
+    /// under a partial write compacts so the buffer can't creep.
+    fn tail(&mut self) -> &mut Vec<u8> {
+        if self.pos > 0 && self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        } else if self.pos > OUT_COMPACT_BYTES {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        &mut self.buf
+    }
+
+    /// Write as much pending output as the socket takes. `Ok(true)` —
+    /// drained; `Ok(false)` — the socket is full (caller arms `EPOLLOUT`
+    /// and resumes on writability); `Err` — the connection is dead.
+    /// Each successful `write(2)`'s wall time feeds the [`FlushTuner`].
+    /// Hot (one call per flushing connection per loop): zero-alloc.
+    fn write_to(&mut self, stream: &mut TcpStream, tuner: &mut FlushTuner) -> io::Result<bool> {
+        while self.pos < self.buf.len() {
+            let t0 = Instant::now();
+            match stream.write(&self.buf[self.pos..]) {
+                Ok(0) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::WriteZero,
+                        "peer stopped accepting bytes",
+                    ))
+                }
+                Ok(n) => {
+                    tuner.record(t0.elapsed().as_nanos() as u64);
+                    self.pos += n;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(false),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        self.buf.clear();
+        self.pos = 0;
+        Ok(true)
+    }
+}
+
+/// One nonblocking connection owned by a shard.
+struct Conn {
+    stream: TcpStream,
+    /// Inbound reassembly across partial reads.
+    acc: FrameAccumulator,
+    /// Outbound frames not yet accepted by the socket.
+    out: OutBuf,
+    /// Whether `EPOLLOUT` interest is currently armed.
+    want_write: bool,
+    origin: Origin,
+}
+
+/// Intra-server commands between the accept thread and the shards, and
+/// between shards. Each shard's channel is per-producer FIFO
+/// (`std::sync::mpsc`), which the cross-shard ordering arguments below
+/// rely on: a worker's home shard emits its `WorkerJoined` before any
+/// `Forward` carrying frames for it, so receivers always learn the route
+/// first.
+enum Cmd {
+    /// Accept thread → owning shard: adopt this fresh socket.
+    Accept { conn: u64, stream: TcpStream },
+    /// Worker's home shard → every other shard: a worker registered;
+    /// `home`/`conn` locate its socket for [`Route::Remote`].
+    WorkerJoined { info: WorkerInfo, data_addr: String, conn: u64, home: usize },
+    /// Worker's home shard → every other shard: its connection died.
+    /// Receivers drop the route *then* run recovery, so nothing emitted
+    /// during recovery can target the corpse. Idempotent.
+    WorkerDead { id: WorkerId },
+    /// Non-owning shard → run-owning shard: a worker message about one of
+    /// your runs (`task-finished`, `task-erred`, `steal-response`,
+    /// `data-to-server`).
+    Route { from: WorkerId, msg: Msg },
+    /// Any shard → worker's home shard: pre-encoded frames to splice into
+    /// the worker's output buffer ([`deliver_forward`]).
+    Forward { conn: u64, bytes: Vec<u8> },
+    /// Stop the shard's event loop.
+    Stop,
+}
+
+/// A shard's command inbox plus the eventfd that pops its event loop out
+/// of `epoll_wait`. Senders enqueue, then wake — the eventfd is
+/// level-triggered, so a wake can never be lost between the queue check
+/// and the block.
+#[derive(Clone)]
+struct ShardLink {
+    tx: Sender<Cmd>,
+    waker: Arc<Waker>,
+}
+
+impl ShardLink {
+    fn send(&self, cmd: Cmd) {
+        if self.tx.send(cmd).is_ok() {
+            self.waker.wake();
+        }
+    }
+}
+
+/// Where a destination's socket lives: on this shard, or on another
+/// shard (worker registered elsewhere — frames go out via
+/// [`Cmd::Forward`]). Clients are always `Local` to their shard.
+#[derive(Clone, Copy)]
+enum Route {
+    Local(u64),
+    Remote { shard: usize, conn: u64 },
+}
+
+/// The run a worker-originated message concerns — `None` for traffic
+/// that is connection-local (registration, liveness). Used to route a
+/// worker message to the shard owning the run: strided [`RunId`]
+/// allocation makes ownership a modulo.
+fn run_of(msg: &Msg) -> Option<RunId> {
+    match msg {
+        Msg::TaskFinished(info) => Some(info.run),
+        Msg::TaskErred { run, .. } => Some(*run),
+        Msg::StealResponse { run, .. } => Some(*run),
+        Msg::DataToServer { run, .. } => Some(*run),
+        _ => None,
+    }
+}
+
+/// Sink the reactor pumps into: frames append straight to per-connection
+/// output buffers (local destinations) or per-(shard, conn) forward
+/// buffers (workers homed elsewhere). Compute-task assignments encode
+/// from the borrowed [`ComputeDispatch`] — no owned `Msg` is built, so a
+/// warm dispatch performs zero heap allocations (asserted by
+/// `hotpath_micro`).
+struct ShardSink<'a> {
+    conns: &'a mut HashMap<u64, Conn>,
+    routes: &'a HashMap<Dest, Route>,
+    fwd: &'a mut HashMap<(usize, u64), Vec<u8>>,
+    buf_pool: &'a BufPool,
+}
+
+impl ShardSink<'_> {
+    fn buf_for(&mut self, dest: Dest, op: &str) -> Option<&mut Vec<u8>> {
+        match self.routes.get(&dest).copied() {
+            Some(Route::Local(conn)) => match self.conns.get_mut(&conn) {
+                Some(c) => Some(c.out.tail()),
+                None => {
+                    log::warn!("connection gone for {dest:?}; dropping {op}");
+                    None
+                }
+            },
+            Some(Route::Remote { shard, conn }) => Some(
+                self.fwd.entry((shard, conn)).or_insert_with(|| pool_get(self.buf_pool)),
+            ),
+            None => {
+                log::warn!("no route for {dest:?}; dropping {op}");
+                None
+            }
+        }
+    }
+}
+
+impl OutboundSink for ShardSink<'_> {
+    fn emit_msg(&mut self, dest: Dest, msg: Msg) {
+        if let Some(buf) = self.buf_for(dest, msg.op()) {
+            if let Err(e) = append_frame(buf, &msg) {
+                log::warn!("dropping oversized {op}: {e}", op = msg.op());
+            }
+        }
+    }
+
+    fn emit_compute(&mut self, dispatch: &ComputeDispatch<'_>) {
+        if let Some(buf) = self.buf_for(Dest::Worker(dispatch.worker), "compute-task") {
+            if let Err(e) = append_frame_with(buf, |body| dispatch.encode_into(body)) {
+                log::warn!("dropping oversized compute-task: {e}");
+            }
+        }
+    }
+}
+
+/// One reactor shard: an epoll event loop over the connections it owns,
+/// its reactor + scheduler pool, and links to its peers.
+struct Shard {
+    index: usize,
+    n_shards: usize,
+    reactor: Reactor,
+    poller: Poller,
+    waker: Arc<Waker>,
+    rx: Receiver<Cmd>,
+    /// Links to every shard (self included; broadcast skips it).
+    links: Vec<ShardLink>,
+    conns: HashMap<u64, Conn>,
+    routes: HashMap<Dest, Route>,
+    /// Reactor reply scratch; empty between uses ([`Shard::route_out`]).
+    out: Vec<(Dest, Msg)>,
+    /// Pending cross-shard frame batches by (home shard, conn).
+    fwd: HashMap<(usize, u64), Vec<u8>>,
+    fwd_keys: Vec<(usize, u64)>,
+    wake_buf: Vec<bool>,
+    flush_keys: Vec<u64>,
+    buf_pool: BufPool,
+    tuner: FlushTuner,
+    reports: Arc<Mutex<ReportStore>>,
+    reported: usize,
+    stop: bool,
+}
+
+impl Shard {
+    fn run(mut self) {
+        let mut events = Events::with_capacity(256);
+        // Copied out of `events` so handlers can borrow `self` mutably.
+        let mut ready: Vec<(u64, bool, bool, bool)> = Vec::new();
+        let mut pumping = false;
+        let mut rounds: u32 = 0;
+        while !self.stop {
+            // Run-fair intake: while worker-bound messages are parked,
+            // poll without blocking — a pump round runs every iteration,
+            // so a huge backlog is emitted in bounded slices interleaved
+            // with fresh events. Block only when fully drained, and flush
+            // everything first: nothing fresher can join the buffers.
+            let timeout = if pumping {
+                Some(0)
+            } else {
+                self.flush_conns(true);
+                rounds = 0;
+                None
+            };
+            let n_ready = match self.poller.wait(&mut events, timeout) {
+                Ok(n) => n,
+                Err(e) => {
+                    log::warn!("shard {}: epoll_wait: {e}", self.index);
+                    0
+                }
+            };
+            ready.clear();
+            for ev in events.iter().take(n_ready) {
+                ready.push((ev.token, ev.readable, ev.writable, ev.hangup));
+            }
+            for &(token, readable, writable, hangup) in &ready {
+                if token == WAKER_TOKEN {
+                    self.waker.drain();
+                    continue;
+                }
+                if readable || hangup {
+                    if !self.read_conn(token) {
+                        self.close_conn(token);
+                        continue;
+                    }
+                }
+                if writable {
+                    self.flush_conn(token, true);
+                }
+            }
+            self.drain_cmds();
+            pumping = self.pump_once();
+            self.dispatch_fwd();
+            rounds += 1;
+            let flush_all = rounds >= FLUSH_MAX_ROUNDS;
+            if flush_all {
+                rounds = 0;
+            }
+            self.flush_conns(flush_all);
+            self.publish_reports();
+        }
+        self.shutdown_conns();
+    }
+
+    /// Adopt a freshly accepted socket.
+    fn add_conn(&mut self, id: u64, stream: TcpStream) {
+        if stream.set_nonblocking(true).is_err() {
+            return;
+        }
+        stream.set_nodelay(true).ok();
+        if let Err(e) = self.poller.register(stream.as_raw_fd(), id, Interest::READ) {
+            log::warn!("conn {id}: epoll register failed: {e}");
+            return;
+        }
+        self.conns.insert(
+            id,
+            Conn {
+                stream,
+                acc: FrameAccumulator::new(),
+                out: OutBuf::new(),
+                want_write: false,
+                origin: Origin::Unregistered { conn: id },
+            },
+        );
+    }
+
+    /// Drain decodable frames from one readable connection; `false` means
+    /// close it. Caps at [`FRAMES_PER_EVENT`] frames — level-triggered
+    /// epoll re-reports the remaining buffered input next iteration.
+    fn read_conn(&mut self, id: u64) -> bool {
+        for _ in 0..FRAMES_PER_EVENT {
+            let msg = {
+                let Some(conn) = self.conns.get_mut(&id) else { return true };
+                match conn.acc.poll_frame(&mut conn.stream) {
+                    Ok(NbRead::Frame(bytes)) => match decode_msg(bytes) {
+                        Ok(msg) => msg,
+                        Err(e) => {
+                            log::warn!("conn {id}: bad message: {e}; closing");
+                            return false;
+                        }
+                    },
+                    Ok(NbRead::WouldBlock) => return true,
+                    Ok(NbRead::Closed) => return false,
+                    Err(FrameError::Closed) => return false,
+                    Err(e) => {
+                        log::warn!("conn {id}: frame error: {e}");
+                        return false;
+                    }
+                }
+            };
+            self.on_frame(id, msg);
+        }
+        true
+    }
+
+    /// One decoded inbound message: route it cross-shard if a worker is
+    /// talking about a run owned elsewhere, else feed the local reactor
+    /// and bind registrations to the connection.
+    fn on_frame(&mut self, id: u64, msg: Msg) {
+        let origin = self
+            .conns
+            .get(&id)
+            .map(|c| c.origin)
+            .unwrap_or(Origin::Unregistered { conn: id });
+        if let Origin::Worker(w) = origin {
+            if let Some(run) = run_of(&msg) {
+                let owner = run.0 as usize % self.n_shards;
+                if owner != self.index {
+                    self.links[owner].send(Cmd::Route { from: w, msg });
+                    return;
+                }
+            }
+        }
+        let registering_client = matches!(
+            (&origin, &msg),
+            (Origin::Unregistered { .. }, Msg::RegisterClient { .. })
+        );
+        let registering_worker = matches!(
+            (&origin, &msg),
+            (Origin::Unregistered { .. }, Msg::RegisterWorker { .. })
+        );
+        // Captured before the reactor consumes the message: the join
+        // broadcast below needs them (cold path — registration only).
+        let worker_detail = match (registering_worker, &msg) {
+            (true, Msg::RegisterWorker { ncores, node, data_addr, .. }) => {
+                Some((*ncores, *node, data_addr.clone()))
+            }
+            _ => None,
+        };
+        self.reactor.on_message(origin, msg, &mut self.out);
+        // Bind a freshly assigned id to this connection: the Welcome the
+        // reactor just emitted names the id. The route is inserted before
+        // `route_out`, so the Welcome itself resolves Local — and for a
+        // worker it is appended to the output buffer *before* the join
+        // broadcast goes out, so remote shards' forwarded frames always
+        // land after it.
+        if registering_client || registering_worker {
+            if let Some((dest, Msg::Welcome { id: assigned })) = self
+                .out
+                .iter()
+                .rev()
+                .find(|(_, m)| matches!(m, Msg::Welcome { .. }))
+            {
+                let origin = if registering_client {
+                    Origin::Client(*assigned)
+                } else {
+                    Origin::Worker(WorkerId(*assigned))
+                };
+                let dest = *dest;
+                if let Some(conn) = self.conns.get_mut(&id) {
+                    conn.origin = origin;
+                }
+                self.routes.insert(dest, Route::Local(id));
+                if let (Origin::Worker(w), Some((ncores, node, data_addr))) =
+                    (origin, worker_detail)
+                {
+                    let info = WorkerInfo { id: w, ncores, node };
+                    let home = self.index;
+                    self.broadcast(|| Cmd::WorkerJoined {
+                        info,
+                        data_addr: data_addr.clone(),
+                        conn: id,
+                        home,
+                    });
+                }
+            }
+        }
+        self.route_out();
+    }
+
+    /// Deliver every queued reactor reply ([`Shard::out`]) to its route.
+    fn route_out(&mut self) {
+        let mut out = std::mem::take(&mut self.out);
+        for (dest, msg) in out.drain(..) {
+            self.send_msg(dest, &msg);
+        }
+        // Hand the (now empty) vector back so its capacity is reused.
+        self.out = out;
+    }
+
+    fn send_msg(&mut self, dest: Dest, msg: &Msg) {
+        let Shard { conns, routes, fwd, buf_pool, .. } = self;
+        match routes.get(&dest).copied() {
+            Some(Route::Local(conn)) => match conns.get_mut(&conn) {
+                Some(c) => {
+                    if let Err(e) = append_frame(c.out.tail(), msg) {
+                        log::warn!("dropping oversized {op}: {e}", op = msg.op());
+                    }
+                }
+                None => log::warn!("connection gone for {dest:?}; dropping {op}", op = msg.op()),
+            },
+            Some(Route::Remote { shard, conn }) => {
+                let buf = fwd.entry((shard, conn)).or_insert_with(|| pool_get(buf_pool));
+                if let Err(e) = append_frame(buf, msg) {
+                    log::warn!("dropping oversized {op}: {e}", op = msg.op());
+                }
+            }
+            None => log::warn!("no route for {dest:?}; dropping {op}", op = msg.op()),
+        }
+    }
+
+    /// One fairness round: up to a quota of parked messages from the
+    /// policy-chosen run go straight into output/forward buffers —
+    /// compute-tasks encoded borrowed, no owned `Msg` built.
+    fn pump_once(&mut self) -> bool {
+        let Shard { reactor, conns, routes, fwd, buf_pool, .. } = self;
+        let mut sink = ShardSink { conns, routes, fwd, buf_pool };
+        reactor.pump_into(&mut sink).is_some()
+    }
+
+    /// Hand accumulated cross-shard frame batches to their home shards.
+    /// Wakes are coalesced: one eventfd write per destination shard per
+    /// call, however many batches went its way.
+    fn dispatch_fwd(&mut self) {
+        if self.fwd.is_empty() {
+            return;
+        }
+        self.fwd_keys.clear();
+        self.fwd_keys.extend(self.fwd.keys().copied());
+        self.wake_buf.clear();
+        self.wake_buf.resize(self.n_shards, false);
+        for &(shard, conn) in &self.fwd_keys {
+            let Some(bytes) = self.fwd.remove(&(shard, conn)) else { continue };
+            if bytes.is_empty() {
+                // Every append failed (oversized); nothing to forward.
+                pool_put(&self.buf_pool, bytes);
+                continue;
+            }
+            match self.links[shard].tx.send(Cmd::Forward { conn, bytes }) {
+                Ok(()) => self.wake_buf[shard] = true,
+                // A dead shard hands the command back inside the error;
+                // recycle the buffer (conservation invariant).
+                Err(e) => {
+                    if let Cmd::Forward { bytes, .. } = e.0 {
+                        pool_put(&self.buf_pool, bytes);
+                    }
+                }
+            }
+        }
+        for shard in 0..self.n_shards {
+            if self.wake_buf[shard] {
+                self.links[shard].waker.wake();
+            }
+        }
+    }
+
+    fn drain_cmds(&mut self) {
+        loop {
+            match self.rx.try_recv() {
+                Ok(cmd) => self.on_cmd(cmd),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    self.stop = true;
+                    break;
+                }
+            }
+        }
+    }
+
+    fn on_cmd(&mut self, cmd: Cmd) {
+        match cmd {
+            Cmd::Accept { conn, stream } => self.add_conn(conn, stream),
+            Cmd::WorkerJoined { info, data_addr, conn, home } => {
+                self.routes
+                    .insert(Dest::Worker(info.id), Route::Remote { shard: home, conn });
+                self.reactor.register_remote_worker(info, data_addr);
+            }
+            Cmd::WorkerDead { id } => {
+                // Route removed first: recovery below re-emits the dead
+                // worker's assignments, and none of them may resolve to
+                // the corpse. `remove` returning None means we already
+                // processed this death — broadcasts are idempotent.
+                if self.routes.remove(&Dest::Worker(id)).is_some() {
+                    self.reactor.on_disconnect(Origin::Worker(id), &mut self.out);
+                    self.route_out();
+                }
+            }
+            Cmd::Route { from, msg } => {
+                self.reactor.on_message(Origin::Worker(from), msg, &mut self.out);
+                self.route_out();
+            }
+            Cmd::Forward { conn, bytes } => {
+                let delivered = deliver_forward(
+                    self.conns.get_mut(&conn).map(|c| c.out.tail()),
+                    bytes,
+                    &self.buf_pool,
+                );
+                if !delivered {
+                    // Forward raced the connection's close; the sender's
+                    // route is (or is about to be) torn down by the death
+                    // broadcast. Dropping is correct — recovery re-emits.
+                    log::debug!("conn {conn}: dropped forward for closed connection");
+                }
+            }
+            Cmd::Stop => self.stop = true,
+        }
+    }
+
+    /// Flush one connection (`force` bypasses the adaptive threshold:
+    /// writability resumption and pre-block flushes must always write).
+    fn flush_conn(&mut self, id: u64, force: bool) {
+        let failed = {
+            let Shard { conns, poller, tuner, .. } = self;
+            let Some(conn) = conns.get_mut(&id) else { return };
+            if conn.out.pending() == 0 {
+                if conn.want_write {
+                    conn.want_write = false;
+                    let _ = poller.rearm(conn.stream.as_raw_fd(), id, Interest::READ);
+                }
+                return;
+            }
+            if !force && !conn.want_write && !tuner.should_flush(conn.out.pending()) {
+                return;
+            }
+            match conn.out.write_to(&mut conn.stream, tuner) {
+                Ok(true) => {
+                    if conn.want_write {
+                        conn.want_write = false;
+                        let _ = poller.rearm(conn.stream.as_raw_fd(), id, Interest::READ);
+                    }
+                    false
+                }
+                Ok(false) => {
+                    // Socket full: resume on writability.
+                    if !conn.want_write {
+                        conn.want_write = true;
+                        let _ = poller.rearm(conn.stream.as_raw_fd(), id, Interest::READ_WRITE);
+                    }
+                    false
+                }
+                Err(e) => {
+                    log::warn!("conn {id}: write error: {e}");
+                    true
+                }
+            }
+        };
+        if failed {
+            self.close_conn(id);
+        }
+    }
+
+    /// Flush every connection with pending output (or an armed write
+    /// interest, so drained buffers drop `EPOLLOUT` promptly).
+    fn flush_conns(&mut self, force: bool) {
+        let mut keys = std::mem::take(&mut self.flush_keys);
+        keys.clear();
+        keys.extend(
+            self.conns
+                .iter()
+                .filter(|(_, c)| c.out.pending() > 0 || c.want_write)
+                .map(|(&id, _)| id),
+        );
+        for &id in keys.iter() {
+            self.flush_conn(id, force);
+        }
+        self.flush_keys = keys;
+    }
+
+    fn close_conn(&mut self, id: u64) {
+        let Some(conn) = self.conns.remove(&id) else { return };
+        let _ = self.poller.deregister(conn.stream.as_raw_fd());
+        let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+        match conn.origin {
+            Origin::Worker(w) => {
+                // Same discipline as the remote side (`Cmd::WorkerDead`):
+                // route gone before recovery runs, broadcast before the
+                // local reactor re-emits the corpse's assignments.
+                self.routes.remove(&Dest::Worker(w));
+                self.broadcast(|| Cmd::WorkerDead { id: w });
+                self.reactor.on_disconnect(Origin::Worker(w), &mut self.out);
+                self.route_out();
+            }
+            Origin::Client(c) => {
+                self.routes.remove(&Dest::Client(c));
+                self.reactor.on_disconnect(Origin::Client(c), &mut self.out);
+                self.route_out();
+            }
+            Origin::Unregistered { .. } => {}
+        }
+    }
+
+    /// Send a command to every *other* shard.
+    fn broadcast(&self, make: impl Fn() -> Cmd) {
+        for (i, link) in self.links.iter().enumerate() {
+            if i == self.index {
+                continue;
+            }
+            link.send(make());
+        }
+    }
+
+    /// Publish new reports into the shared window (only the fresh tail is
+    /// ever copied; both windows count against the monotonic completion
+    /// total, so `dropped + len == completions` holds on both sides).
+    fn publish_reports(&mut self) {
+        let total = self.reactor.report_count();
+        if total > self.reported {
+            let all = self.reactor.reports();
+            let fresh = total - self.reported;
+            let mut shared = self.reports.lock().unwrap();
+            if fresh > all.len() {
+                // More completions this iteration than the reactor window
+                // holds (tiny retention + a burst): the overflow is gone
+                // on both sides.
+                shared.note_missed(fresh - all.len());
+            }
+            let start = all.len().saturating_sub(fresh);
+            shared.extend_from_slice(&all[start..]);
+            self.reported = total;
+        }
+    }
+
+    fn shutdown_conns(&mut self) {
+        for (_, conn) in self.conns.drain() {
+            let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
 
 /// Running server: address, per-graph reports, shutdown control.
 pub struct ServerHandle {
     pub addr: SocketAddr,
     reports: Arc<Mutex<ReportStore>>,
     stop: Arc<AtomicBool>,
-    event_tx: Sender<NetEvent>,
-    writers: Arc<Mutex<HashMap<u64, Sender<Vec<u8>>>>>,
-    conns: Arc<Mutex<HashMap<u64, TcpStream>>>,
+    links: Vec<ShardLink>,
     threads: Vec<JoinHandle<()>>,
-    conn_threads: Arc<Mutex<Vec<JoinHandle<()>>>>,
 }
 
 impl ServerHandle {
@@ -188,34 +983,17 @@ impl ServerHandle {
         self.reports.lock().unwrap().total()
     }
 
-    /// Stop the server and join every thread it spawned — the accept loop,
-    /// the reactor, and all per-connection reader/writer threads.
+    /// Stop the server and join every thread it spawned — the accept
+    /// thread and all shard event loops (shards close their own
+    /// connections on the way out).
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        let _ = self.event_tx.send(NetEvent::Stop);
+        for link in &self.links {
+            link.send(Cmd::Stop);
+        }
         // Unblock the accept loop.
         let _ = TcpStream::connect(self.addr);
-        // Close every live connection so blocked readers return.
-        for (_, s) in self.conns.lock().unwrap().drain() {
-            let _ = s.shutdown(std::net::Shutdown::Both);
-        }
-        // Drop the writer senders so writer threads drain and exit.
-        self.writers.lock().unwrap().clear();
-        // Join accept + reactor first: a connection racing the drains above
-        // (accepted after the stop check, registered after the drain) would
-        // leave a reader blocked on a socket nobody closed. Once the accept
-        // loop has exited no new registrations can appear, so a second
-        // drain closes any such straggler before the per-connection joins.
         for t in self.threads.drain(..) {
-            let _ = t.join();
-        }
-        for (_, s) in self.conns.lock().unwrap().drain() {
-            let _ = s.shutdown(std::net::Shutdown::Both);
-        }
-        self.writers.lock().unwrap().clear();
-        let handles: Vec<JoinHandle<()>> =
-            self.conn_threads.lock().unwrap().drain(..).collect();
-        for t in handles {
             let _ = t.join();
         }
     }
@@ -223,10 +1001,6 @@ impl ServerHandle {
 
 /// Start the server; returns once the listener is bound.
 pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
-    let pool = SchedulerPool::new(&config.scheduler, config.seed)
-        .ok_or_else(|| anyhow!("unknown scheduler {:?}", config.scheduler))?;
-    let policy = super::fairness::by_name(&config.fairness)
-        .ok_or_else(|| anyhow!("unknown fairness policy {:?}", config.fairness))?;
     // Validate here with clean errors — the reactor builders assert, which
     // is right for programmatic misuse but not for a CLI flag.
     if config.max_live_runs_per_client == 0 {
@@ -238,39 +1012,78 @@ pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
     if config.report_retention == 0 {
         return Err(anyhow!("report_retention must be at least 1"));
     }
-    let reactor = Reactor::new(pool, config.profile.clone(), config.emulate)
-        .with_fairness(policy)
-        .with_admission_cap(config.max_live_runs_per_client)
-        .with_admission_queue_cap(config.max_queued_runs_per_client)
-        .with_report_retention(config.report_retention)
-        .with_max_recoveries(config.max_recoveries);
+    if config.shards == 0 {
+        return Err(anyhow!("shards must be at least 1"));
+    }
+    let n_shards = config.shards;
 
     let listener = TcpListener::bind(&config.addr)
         .with_context(|| format!("bind {}", config.addr))?;
     let addr = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
     let reports = Arc::new(Mutex::new(ReportStore::new(config.report_retention)));
-    let (event_tx, event_rx) = channel::<NetEvent>();
-
-    // Writer registry: conn id -> outbound batch queue (each item is one or
-    // more coalesced frames).
-    let writers: Arc<Mutex<HashMap<u64, Sender<Vec<u8>>>>> = Arc::new(Mutex::new(HashMap::new()));
-    // Live streams, kept so shutdown can unblock reader threads.
-    let conns: Arc<Mutex<HashMap<u64, TcpStream>>> = Arc::new(Mutex::new(HashMap::new()));
-    // Reader/writer thread handles, joined on shutdown instead of leaking.
-    let conn_threads: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
     let buf_pool: BufPool = Arc::new(Mutex::new(Vec::new()));
+    // Worker/client ids are cluster-global; every shard's reactor draws
+    // from this one pair of counters.
+    let ids = std::sync::Arc::new(SharedIds::default());
+
+    let mut links: Vec<ShardLink> = Vec::with_capacity(n_shards);
+    let mut rxs: Vec<Receiver<Cmd>> = Vec::with_capacity(n_shards);
+    for _ in 0..n_shards {
+        let (tx, rx) = channel::<Cmd>();
+        let waker = Arc::new(Waker::new().context("create shard waker")?);
+        links.push(ShardLink { tx, waker });
+        rxs.push(rx);
+    }
 
     let mut threads = Vec::new();
+    for (s, rx) in rxs.into_iter().enumerate() {
+        let pool = SchedulerPool::new(&config.scheduler, config.seed)
+            .ok_or_else(|| anyhow!("unknown scheduler {:?}", config.scheduler))?;
+        let policy = super::fairness::by_name(&config.fairness)
+            .ok_or_else(|| anyhow!("unknown fairness policy {:?}", config.fairness))?;
+        let reactor = Reactor::new(pool, config.profile.clone(), config.emulate)
+            .with_fairness(policy)
+            .with_admission_cap(config.max_live_runs_per_client)
+            .with_admission_queue_cap(config.max_queued_runs_per_client)
+            .with_report_retention(config.report_retention)
+            .with_max_recoveries(config.max_recoveries)
+            .with_shared_ids(ids.clone())
+            .with_run_stride(s as u32, n_shards as u32);
+        let poller = Poller::new().context("create shard poller")?;
+        let waker = links[s].waker.clone();
+        poller
+            .register(waker.fd(), WAKER_TOKEN, Interest::READ)
+            .context("register shard waker")?;
+        let shard = Shard {
+            index: s,
+            n_shards,
+            reactor,
+            poller,
+            waker,
+            rx,
+            links: links.clone(),
+            conns: HashMap::new(),
+            routes: HashMap::new(),
+            out: Vec::new(),
+            fwd: HashMap::new(),
+            fwd_keys: Vec::new(),
+            wake_buf: vec![false; n_shards],
+            flush_keys: Vec::new(),
+            buf_pool: buf_pool.clone(),
+            tuner: FlushTuner::new(),
+            reports: reports.clone(),
+            reported: 0,
+            stop: false,
+        };
+        threads.push(std::thread::spawn(move || shard.run()));
+    }
 
-    // Accept loop.
+    // Accept thread: assign global connection ids, hand each socket to
+    // its owning shard. The only O(clients) cost here is the hash send.
     {
         let stop = stop.clone();
-        let event_tx = event_tx.clone();
-        let writers = writers.clone();
-        let conns = conns.clone();
-        let conn_threads = conn_threads.clone();
-        let buf_pool = buf_pool.clone();
+        let links = links.clone();
         threads.push(std::thread::spawn(move || {
             let mut next_conn: u64 = 0;
             for stream in listener.incoming() {
@@ -280,332 +1093,86 @@ pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
                 let Ok(stream) = stream else { continue };
                 let conn = next_conn;
                 next_conn += 1;
-                stream.set_nodelay(true).ok();
-                let Ok(registry_stream) = stream.try_clone() else { continue };
-                conns.lock().unwrap().insert(conn, registry_stream);
-                // Writer thread: flush whole batches, recycle the buffers.
-                let (wtx, wrx) = channel::<Vec<u8>>();
-                writers.lock().unwrap().insert(conn, wtx);
-                let Ok(mut wstream) = stream.try_clone() else {
-                    // No writer thread will exist: drop the registry
-                    // entries made above so the dead conn doesn't linger.
-                    writers.lock().unwrap().remove(&conn);
-                    conns.lock().unwrap().remove(&conn);
-                    continue;
-                };
-                let pool = buf_pool.clone();
-                let writer = std::thread::spawn(move || {
-                    for batch in wrx {
-                        let ok = wstream
-                            .write_all(&batch)
-                            .and_then(|_| wstream.flush())
-                            .is_ok();
-                        pool_put(&pool, batch);
-                        if !ok {
-                            break;
-                        }
-                    }
-                    let _ = wstream.shutdown(std::net::Shutdown::Both);
-                });
-                // Reader thread: reused frame buffer, streaming decode.
-                let event_tx = event_tx.clone();
-                let mut rstream = stream;
-                let reader = std::thread::spawn(move || {
-                    let mut frames = FrameReader::new();
-                    loop {
-                        match frames.read(&mut rstream) {
-                            Ok(bytes) => match decode_msg(bytes) {
-                                Ok(msg) => {
-                                    if event_tx.send(NetEvent::Inbound { conn, msg }).is_err() {
-                                        break;
-                                    }
-                                }
-                                Err(e) => {
-                                    log::warn!("conn {conn}: bad message: {e}; closing");
-                                    break;
-                                }
-                            },
-                            Err(FrameError::Closed) => break,
-                            Err(e) => {
-                                log::warn!("conn {conn}: frame error: {e}");
-                                break;
-                            }
-                        }
-                    }
-                    let _ = event_tx.send(NetEvent::Disconnected { conn });
-                });
-                let mut handles = conn_threads.lock().unwrap();
-                handles.push(writer);
-                handles.push(reader);
+                let shard = (conn % links.len() as u64) as usize;
+                links[shard].send(Cmd::Accept { conn, stream });
             }
         }));
     }
 
-    // Reactor thread.
-    {
-        let reports = reports.clone();
-        let writers = writers.clone();
-        let conns = conns.clone();
-        threads.push(std::thread::spawn(move || {
-            reactor_loop(reactor, event_rx, writers, conns, buf_pool, reports);
-        }));
-    }
-
-    Ok(ServerHandle {
-        addr,
-        reports,
-        stop,
-        event_tx,
-        writers,
-        conns,
-        threads,
-        conn_threads,
-    })
+    Ok(ServerHandle { addr, reports, stop, links, threads })
 }
 
-/// Adaptive flush threshold: a connection's coalesced batch is handed to
-/// its writer thread once it crosses this size even while inbound events
-/// keep arriving; smaller batches ride across events and flush when the
-/// inbox drains. Cuts writer hand-offs (and syscalls) by batching *across*
-/// events under load without adding latency when idle — the inbox-drained
-/// flush runs before the loop ever blocks.
-const FLUSH_BATCH_BYTES: usize = 64 * 1024;
+#[cfg(test)]
+mod tests {
+    use super::*;
 
-/// Age bound on the adaptive flush: under sustained load the inbox may
-/// never drain (`try_recv` keeps yielding events), and a small batch — a
-/// `welcome` for a freshly connecting peer, a tiny run's `graph-done` —
-/// would otherwise ride below the byte threshold indefinitely. After this
-/// many loop iterations without a full flush, everything buffered goes out
-/// regardless of size (at one pump round per iteration this bounds the
-/// holdback to a couple thousand messages' worth of processing time).
-const FLUSH_MAX_ROUNDS: u32 = 64;
-
-/// Sink the reactor pumps into: frames append straight to the
-/// per-connection batch buffers. Compute-task assignments encode from the
-/// borrowed [`ComputeDispatch`] — no owned `Msg` is built, so a warm
-/// dispatch performs zero heap allocations (asserted by `hotpath_micro`).
-struct BatchSink<'a> {
-    batches: &'a mut HashMap<u64, Vec<u8>>,
-    conn_of: &'a HashMap<Dest, u64>,
-    buf_pool: &'a BufPool,
-}
-
-impl BatchSink<'_> {
-    fn batch_for(&mut self, dest: Dest, op: &str) -> Option<&mut Vec<u8>> {
-        let Some(&conn) = self.conn_of.get(&dest) else {
-            log::warn!("no connection for {dest:?}; dropping {op}");
-            return None;
-        };
-        Some(self.batches.entry(conn).or_insert_with(|| pool_get(self.buf_pool)))
-    }
-}
-
-impl OutboundSink for BatchSink<'_> {
-    fn emit_msg(&mut self, dest: Dest, msg: Msg) {
-        if let Some(batch) = self.batch_for(dest, msg.op()) {
-            if let Err(e) = append_frame(batch, &msg) {
-                log::warn!("dropping oversized {op}: {e}", op = msg.op());
-            }
-        }
+    #[test]
+    fn default_shards_is_at_least_one_and_at_most_four() {
+        let n = default_shards();
+        assert!((1..=4).contains(&n));
+        assert!((1..=4).contains(&ServerConfig::default().shards));
     }
 
-    fn emit_compute(&mut self, dispatch: &ComputeDispatch<'_>) {
-        if let Some(batch) = self.batch_for(Dest::Worker(dispatch.worker), "compute-task") {
-            if let Err(e) = append_frame_with(batch, |body| dispatch.encode_into(body)) {
-                log::warn!("dropping oversized compute-task: {e}");
-            }
-        }
+    #[test]
+    fn zero_shards_is_rejected() {
+        let err = serve(ServerConfig { shards: 0, ..ServerConfig::default() })
+            .err()
+            .expect("shards: 0 must be rejected");
+        assert!(err.to_string().contains("shards"));
     }
-}
 
-/// Hand every batch of at least `min_len` bytes to its writer thread
-/// (`min_len == 0` flushes everything). `scratch` is a reused key buffer
-/// so a warm flush allocates nothing. The writer-registry lock is taken
-/// once per call, and only when something actually flushes.
-/// Hand every batch of at least `min_len` bytes to its connection's
-/// writer thread, recycling batches whose writer is gone. Public for the
-/// model-checking suite (`tests/loom_models.rs`), which runs it against a
-/// concurrently draining writer registry to check buffer conservation:
-/// each batch is delivered XOR pooled, never both, never neither.
-pub fn flush_batches(
-    batches: &mut HashMap<u64, Vec<u8>>,
-    scratch: &mut Vec<u64>,
-    writers: &Mutex<HashMap<u64, Sender<Vec<u8>>>>,
-    buf_pool: &BufPool,
-    min_len: usize,
-) {
-    scratch.clear();
-    scratch.extend(batches.iter().filter(|(_, b)| b.len() >= min_len).map(|(&c, _)| c));
-    if scratch.is_empty() {
-        return;
+    #[test]
+    fn flush_tuner_tracks_syscall_cost() {
+        let mut t = FlushTuner::new();
+        let initial = t.threshold;
+        assert!((FLUSH_MIN_BYTES..=FLUSH_MAX_BYTES).contains(&initial));
+        // Expensive syscalls push the threshold up…
+        for _ in 0..200 {
+            t.record(50_000);
+        }
+        assert!(t.threshold > initial);
+        assert!(t.threshold <= FLUSH_MAX_BYTES);
+        assert!(t.should_flush(FLUSH_MAX_BYTES));
+        // …and cheap ones pull it down to the floor.
+        for _ in 0..400 {
+            t.record(10);
+        }
+        assert_eq!(t.threshold, FLUSH_MIN_BYTES);
+        assert!(!t.should_flush(FLUSH_MIN_BYTES - 1));
+        assert!(t.should_flush(FLUSH_MIN_BYTES));
     }
-    let writer_map = writers.lock().unwrap();
-    for conn in scratch.drain(..) {
-        let Some(batch) = batches.remove(&conn) else { continue };
-        if batch.is_empty() {
-            // Every append to it failed (oversized); nothing to write.
-            pool_put(buf_pool, batch);
-            continue;
-        }
-        match writer_map.get(&conn) {
-            // A closed writer hands the batch back inside the error;
-            // recycle it (the disconnect event cleans the registry).
-            Some(tx) => {
-                if let Err(failed) = tx.send(batch) {
-                    pool_put(buf_pool, failed.0);
-                }
-            }
-            None => pool_put(buf_pool, batch),
-        }
+
+    #[test]
+    fn outbuf_tail_reclaims_consumed_prefix() {
+        let mut out = OutBuf::new();
+        out.tail().extend_from_slice(&[1, 2, 3, 4]);
+        out.pos = 4; // fully consumed
+        assert_eq!(out.pending(), 0);
+        out.tail().extend_from_slice(&[5, 6]);
+        assert_eq!(out.buf, vec![5, 6]);
+        assert_eq!(out.pos, 0);
+        // Large consumed prefix under a partial write compacts.
+        let big = vec![0u8; OUT_COMPACT_BYTES + 16];
+        out.tail().clear();
+        out.pos = 0;
+        out.tail().extend_from_slice(&big);
+        out.pos = OUT_COMPACT_BYTES + 8;
+        out.tail().extend_from_slice(&[9]);
+        assert_eq!(out.pos, 0);
+        assert_eq!(out.pending(), 9);
     }
-}
 
-fn reactor_loop(
-    mut reactor: Reactor,
-    event_rx: Receiver<NetEvent>,
-    writers: Arc<Mutex<HashMap<u64, Sender<Vec<u8>>>>>,
-    conns: Arc<Mutex<HashMap<u64, TcpStream>>>,
-    buf_pool: BufPool,
-    reports: Arc<Mutex<ReportStore>>,
-) {
-    // conn <-> identity maps, maintained from registration replies.
-    let mut origin_of: HashMap<u64, Origin> = HashMap::new();
-    let mut conn_of: HashMap<Dest, u64> = HashMap::new();
-    let mut out: Vec<(Dest, Msg)> = Vec::new();
-    // Cross-event coalescing: frames grouped by destination connection.
-    // Batches persist across iterations until the adaptive flush hands
-    // them off; the map keeps its capacity either way.
-    let mut batches: HashMap<u64, Vec<u8>> = HashMap::new();
-    let mut flush_scratch: Vec<u64> = Vec::new();
-    let mut rounds_since_flush: u32 = 0;
-    let mut reported = 0usize;
-
-    // Whether the previous iteration's pump round emitted anything —
-    // cheaper than probing `pending_messages()` (an O(live runs) sum)
-    // before every event; an extra empty poll after the backlog drains is
-    // the only cost.
-    let mut pumping = false;
-    loop {
-        // Run-fair intake: while worker-bound messages are parked, poll for
-        // inbound events without blocking — a pump round runs after every
-        // iteration, so a huge backlog is emitted in bounded slices
-        // interleaved with fresh events instead of all at once. Block only
-        // when the reactor is fully drained.
-        let event = if pumping {
-            match event_rx.try_recv() {
-                Ok(ev) => Some(ev),
-                Err(std::sync::mpsc::TryRecvError::Empty) => None,
-                Err(std::sync::mpsc::TryRecvError::Disconnected) => break,
-            }
-        } else {
-            // Reactor fully drained and about to block: nothing fresher
-            // can join the batches, so everything buffered goes out now.
-            flush_batches(&mut batches, &mut flush_scratch, &writers, &buf_pool, 0);
-            rounds_since_flush = 0;
-            match event_rx.recv() {
-                Ok(ev) => Some(ev),
-                Err(_) => break,
-            }
-        };
-        let inbox_drained = event.is_none();
-        match event {
-            None => {}
-            Some(NetEvent::Stop) => break,
-            Some(NetEvent::Disconnected { conn }) => {
-                writers.lock().unwrap().remove(&conn);
-                conns.lock().unwrap().remove(&conn);
-                if let Some(origin) = origin_of.remove(&conn) {
-                    if let Origin::Worker(w) = origin {
-                        conn_of.remove(&Dest::Worker(w));
-                    }
-                    if let Origin::Client(c) = origin {
-                        conn_of.remove(&Dest::Client(c));
-                    }
-                    reactor.on_disconnect(origin, &mut out);
-                }
-            }
-            Some(NetEvent::Inbound { conn, msg }) => {
-                let origin = origin_of
-                    .get(&conn)
-                    .copied()
-                    .unwrap_or(Origin::Unregistered { conn });
-                let registering_client = matches!(
-                    (&origin, &msg),
-                    (Origin::Unregistered { .. }, Msg::RegisterClient { .. })
-                );
-                let registering_worker = matches!(
-                    (&origin, &msg),
-                    (Origin::Unregistered { .. }, Msg::RegisterWorker { .. })
-                );
-                reactor.on_message(origin, msg, &mut out);
-                // Bind freshly assigned ids to this connection: the Welcome
-                // the reactor just emitted names the id.
-                if registering_client || registering_worker {
-                    if let Some((dest, Msg::Welcome { id })) =
-                        out.iter().rev().find(|(_, m)| matches!(m, Msg::Welcome { .. }))
-                    {
-                        let origin = if registering_client {
-                            Origin::Client(*id)
-                        } else {
-                            Origin::Worker(WorkerId(*id))
-                        };
-                        origin_of.insert(conn, origin);
-                        conn_of.insert(*dest, conn);
-                    }
-                }
-            }
-        }
-        // One fairness round per iteration: up to a quota of parked
-        // messages from the policy-chosen run join the per-connection
-        // batches — compute-tasks encoded borrowed, no owned Msg built.
-        pumping = {
-            let mut sink = BatchSink {
-                batches: &mut batches,
-                conn_of: &conn_of,
-                buf_pool: &buf_pool,
-            };
-            reactor.pump_into(&mut sink).is_some()
-        };
-        // Reactor replies outside the pump (acks, completions, release
-        // broadcasts) join the same batches.
-        for (dest, msg) in out.drain(..) {
-            let Some(&conn) = conn_of.get(&dest) else {
-                log::warn!("no connection for {dest:?}; dropping {op}", op = msg.op());
-                continue;
-            };
-            let batch = batches
-                .entry(conn)
-                .or_insert_with(|| pool_get(&buf_pool));
-            if let Err(e) = append_frame(batch, &msg) {
-                log::warn!("conn {conn}: dropping oversized {op}: {e}", op = msg.op());
-            }
-        }
-        // Adaptive flush: a batch that crossed the size threshold goes out
-        // immediately; the rest ride across events and flush when the
-        // inbox drains (here, or above before the loop blocks) — or when
-        // the age bound expires, so sustained load can't starve a small
-        // batch (a welcome, a tiny run's completion) below the threshold.
-        let flush_all = inbox_drained || rounds_since_flush >= FLUSH_MAX_ROUNDS;
-        let min_len = if flush_all { 0 } else { FLUSH_BATCH_BYTES };
-        flush_batches(&mut batches, &mut flush_scratch, &writers, &buf_pool, min_len);
-        rounds_since_flush = if flush_all { 0 } else { rounds_since_flush + 1 };
-        // Publish new reports (only the fresh tail is ever copied; both
-        // windows count against the monotonic completion total, so the
-        // `dropped + len == completions` invariant holds on both sides).
-        let total = reactor.report_count();
-        if total > reported {
-            let all = reactor.reports();
-            let fresh = total - reported;
-            let mut shared = reports.lock().unwrap();
-            if fresh > all.len() {
-                // More completions this iteration than the reactor window
-                // holds (tiny retention + a burst): the overflow is gone
-                // on both sides.
-                shared.note_missed(fresh - all.len());
-            }
-            let start = all.len().saturating_sub(fresh);
-            shared.extend_from_slice(&all[start..]);
-            reported = total;
-        }
+    #[test]
+    fn deliver_forward_delivers_xor_recycles() {
+        let pool: BufPool = Arc::new(Mutex::new(Vec::new()));
+        let bytes = vec![1u8, 2, 3];
+        let mut dst = Vec::new();
+        assert!(deliver_forward(Some(&mut dst), bytes, &pool));
+        assert_eq!(dst, vec![1, 2, 3]);
+        assert_eq!(pool.lock().unwrap().len(), 1);
+        let bytes = vec![4u8, 5];
+        assert!(!deliver_forward(None, bytes, &pool));
+        // Recycled either way; never delivered to a gone connection.
+        assert_eq!(pool.lock().unwrap().len(), 2);
     }
 }

@@ -1,0 +1,335 @@
+//! Minimal readiness-polling core: a hand-rolled epoll + eventfd wrapper.
+//!
+//! The control plane needs exactly four OS facilities — create an epoll
+//! instance, (de)register file descriptors with read/write interest, block
+//! until something is ready, and wake the blocked thread from another
+//! thread. Pulling in `mio`/`tokio` for that would add a dependency tree
+//! larger than this whole repo, so — mirroring how `modelcheck.rs` stands
+//! in for loom — this module declares the handful of `extern "C"` glibc
+//! entry points itself and wraps them in a safe, intent-revealing API.
+//!
+//! Design notes:
+//! - **Level-triggered.** Readiness is re-reported until the condition
+//!   clears, so a shard that stops reading mid-burst (e.g. to bound a
+//!   dispatch round) is re-notified on the next `wait`. Write interest is
+//!   toggled on only while a connection has pending output (the classic
+//!   LT pattern), so an idle connection costs nothing per iteration.
+//! - **Tokens, not pointers.** Each registration carries a caller-chosen
+//!   `u64` token (connection id / waker sentinel); `wait` hands tokens
+//!   back. No lifetimes, no slab, no unsafe outside the syscall layer.
+//! - **Waker = eventfd.** Cross-shard commands are delivered over an
+//!   in-process channel; the sender then writes one `u64` to the shard's
+//!   eventfd, which is registered in the same epoll set as the sockets.
+//!   The shard thread therefore has a single blocking point.
+
+use std::fs::File;
+use std::io::{self, Read, Write};
+use std::os::fd::{AsRawFd, FromRawFd, RawFd};
+
+// Linux ABI constants (asm-generic). Stable since epoll's introduction;
+// values are part of the kernel ABI and cannot change.
+const EPOLL_CLOEXEC: i32 = 0o2000000; // == O_CLOEXEC
+const EFD_CLOEXEC: i32 = 0o2000000;
+const EFD_NONBLOCK: i32 = 0o4000; // == O_NONBLOCK
+
+const EPOLL_CTL_ADD: i32 = 1;
+const EPOLL_CTL_DEL: i32 = 2;
+const EPOLL_CTL_MOD: i32 = 3;
+
+const EPOLLIN: u32 = 0x001;
+const EPOLLOUT: u32 = 0x004;
+const EPOLLERR: u32 = 0x008;
+const EPOLLHUP: u32 = 0x010;
+const EPOLLRDHUP: u32 = 0x2000;
+
+/// Mirror of the kernel's `struct epoll_event`. On x86-64 the kernel reads
+/// the struct packed (no padding between `events` and `data`); other
+/// architectures use natural alignment.
+#[repr(C)]
+#[cfg_attr(target_arch = "x86_64", repr(packed))]
+#[derive(Clone, Copy, Default)]
+struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+// SAFETY: these signatures match the glibc prototypes for the epoll and
+// eventfd syscall wrappers (see epoll_ctl(2), eventfd(2)); glibc is already
+// linked by std. No types involve Rust-side ownership.
+extern "C" {
+    fn epoll_create1(flags: i32) -> i32;
+    fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+    fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+    fn eventfd(initval: u32, flags: i32) -> i32;
+    fn close(fd: i32) -> i32;
+}
+
+fn cvt(ret: i32) -> io::Result<i32> {
+    if ret < 0 {
+        Err(io::Error::last_os_error())
+    } else {
+        Ok(ret)
+    }
+}
+
+/// Readiness interest for a registered descriptor.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct Interest {
+    pub readable: bool,
+    pub writable: bool,
+}
+
+impl Interest {
+    pub const READ: Interest = Interest { readable: true, writable: false };
+    pub const READ_WRITE: Interest = Interest { readable: true, writable: true };
+
+    fn bits(self) -> u32 {
+        // RDHUP lets a half-closed peer surface as an event even when we
+        // have drained the read buffer (level-triggered EPOLLIN would also
+        // fire on EOF, but only while data/EOF is unread).
+        let mut bits = EPOLLRDHUP;
+        if self.readable {
+            bits |= EPOLLIN;
+        }
+        if self.writable {
+            bits |= EPOLLOUT;
+        }
+        bits
+    }
+}
+
+/// One readiness notification, translated out of the raw event mask.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    /// Error or hangup: the owner should read until `Closed`/error and drop
+    /// the connection. (Level-triggered `readable` accompanies most hangups,
+    /// but a pure RST can arrive with only ERR set.)
+    pub hangup: bool,
+}
+
+/// Reusable output buffer for [`Poller::wait`].
+pub struct Events {
+    buf: Vec<EpollEvent>,
+    len: usize,
+}
+
+impl Events {
+    pub fn with_capacity(cap: usize) -> Events {
+        Events { buf: vec![EpollEvent::default(); cap.max(1)], len: 0 }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = Event> + '_ {
+        self.buf[..self.len].iter().map(|ev| {
+            // Copy the (potentially packed) fields out by value before use.
+            let bits = ev.events;
+            let token = ev.data;
+            Event {
+                token,
+                readable: bits & (EPOLLIN | EPOLLRDHUP) != 0,
+                writable: bits & EPOLLOUT != 0,
+                hangup: bits & (EPOLLERR | EPOLLHUP | EPOLLRDHUP) != 0,
+            }
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// An epoll instance. Registered descriptors are identified by caller
+/// tokens; the poller never owns the descriptors themselves (the `Conn`
+/// table does), except for the fd of the epoll set itself.
+pub struct Poller {
+    epfd: RawFd,
+}
+
+impl Poller {
+    pub fn new() -> io::Result<Poller> {
+        // SAFETY: epoll_create1 takes no pointers; a negative return is
+        // mapped to errno by cvt.
+        let epfd = cvt(unsafe { epoll_create1(EPOLL_CLOEXEC) })?;
+        Ok(Poller { epfd })
+    }
+
+    fn ctl(&self, op: i32, fd: RawFd, ev: Option<&mut EpollEvent>) -> io::Result<()> {
+        let ptr = match ev {
+            Some(ev) => ev as *mut EpollEvent,
+            None => std::ptr::null_mut(),
+        };
+        // SAFETY: `ptr` is either null (DEL ignores it on post-2.6.9
+        // kernels) or points at a live EpollEvent for the duration of the
+        // call; the kernel only reads it.
+        cvt(unsafe { epoll_ctl(self.epfd, op, fd, ptr) })?;
+        Ok(())
+    }
+
+    /// Register `fd` with the given interest under `token`.
+    pub fn register(&self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        let mut ev = EpollEvent { events: interest.bits(), data: token };
+        self.ctl(EPOLL_CTL_ADD, fd, Some(&mut ev))
+    }
+
+    /// Change the interest set of an already-registered `fd`.
+    pub fn rearm(&self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        let mut ev = EpollEvent { events: interest.bits(), data: token };
+        self.ctl(EPOLL_CTL_MOD, fd, Some(&mut ev))
+    }
+
+    /// Remove `fd` from the set. Dropping/closing the fd also removes it;
+    /// explicit deregistration keeps the sequencing obvious at call sites.
+    pub fn deregister(&self, fd: RawFd) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_DEL, fd, None)
+    }
+
+    /// Block until at least one registered descriptor is ready, a timeout
+    /// elapses, or the waker fires. `timeout_ms` of `None` blocks
+    /// indefinitely; `Some(0)` polls. EINTR is retried internally.
+    pub fn wait(&self, events: &mut Events, timeout_ms: Option<i32>) -> io::Result<usize> {
+        let timeout = timeout_ms.unwrap_or(-1);
+        let cap = events.buf.len() as i32;
+        loop {
+            // SAFETY: the events buffer outlives the call and `cap` is its
+            // exact element count; the kernel writes at most `cap` entries.
+            let n = unsafe { epoll_wait(self.epfd, events.buf.as_mut_ptr(), cap, timeout) };
+            match cvt(n) {
+                Ok(n) => {
+                    events.len = n as usize;
+                    return Ok(events.len);
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+impl Drop for Poller {
+    fn drop(&mut self) {
+        // SAFETY: epfd was returned by epoll_create1 and is closed exactly
+        // once, here.
+        let _ = unsafe { close(self.epfd) };
+    }
+}
+
+/// Cross-thread wakeup for a [`Poller`]: an eventfd registered in the same
+/// epoll set as the sockets. `wake` is called by *other* threads after
+/// enqueuing a command; `drain` is called by the owning shard when the
+/// waker's token surfaces from `wait`.
+pub struct Waker {
+    file: File,
+}
+
+impl Waker {
+    pub fn new() -> io::Result<Waker> {
+        // SAFETY: eventfd takes no pointers; negative return maps to errno
+        // via cvt.
+        let fd = cvt(unsafe { eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK) })?;
+        // SAFETY: `fd` is a freshly created, owned eventfd; File takes
+        // sole ownership and will close it exactly once on drop.
+        let file = unsafe { File::from_raw_fd(fd) };
+        Ok(Waker { file })
+    }
+
+    pub fn fd(&self) -> RawFd {
+        self.file.as_raw_fd()
+    }
+
+    /// Nudge the polling thread. Nonblocking: if the counter is already
+    /// saturated the poller is guaranteed to be awake, so a short write is
+    /// ignorable.
+    pub fn wake(&self) {
+        let one = 1u64.to_ne_bytes();
+        let _ = (&self.file).write(&one);
+    }
+
+    /// Reset the eventfd counter so the next `wake` re-triggers readiness.
+    pub fn drain(&self) {
+        let mut buf = [0u8; 8];
+        // Nonblocking read: WouldBlock means another drain already won.
+        let _ = (&self.file).read(&mut buf);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::{TcpListener, TcpStream};
+
+    #[test]
+    fn waker_wakes_and_drains() {
+        let poller = Poller::new().unwrap();
+        let waker = Waker::new().unwrap();
+        poller.register(waker.fd(), u64::MAX, Interest::READ).unwrap();
+        let mut events = Events::with_capacity(4);
+
+        // Nothing pending: a zero-timeout wait reports no events.
+        assert_eq!(poller.wait(&mut events, Some(0)).unwrap(), 0);
+
+        waker.wake();
+        waker.wake(); // coalesces into one readiness event
+        assert_eq!(poller.wait(&mut events, Some(1000)).unwrap(), 1);
+        let ev = events.iter().next().unwrap();
+        assert_eq!(ev.token, u64::MAX);
+        assert!(ev.readable);
+
+        // Level-triggered: still ready until drained.
+        assert_eq!(poller.wait(&mut events, Some(0)).unwrap(), 1);
+        waker.drain();
+        assert_eq!(poller.wait(&mut events, Some(0)).unwrap(), 0);
+
+        // Wakes after a drain re-trigger readiness.
+        waker.wake();
+        assert_eq!(poller.wait(&mut events, Some(1000)).unwrap(), 1);
+    }
+
+    #[test]
+    fn socket_readiness_and_write_interest_toggle() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+
+        let poller = Poller::new().unwrap();
+        poller.register(server.as_raw_fd(), 7, Interest::READ).unwrap();
+        let mut events = Events::with_capacity(4);
+
+        // Idle socket: no events.
+        assert_eq!(poller.wait(&mut events, Some(0)).unwrap(), 0);
+
+        client.write_all(b"ping").unwrap();
+        assert_eq!(poller.wait(&mut events, Some(1000)).unwrap(), 1);
+        let ev = events.iter().next().unwrap();
+        assert_eq!(ev.token, 7);
+        assert!(ev.readable && !ev.writable);
+
+        // Rearm for write interest: an idle outgoing buffer is writable.
+        poller.rearm(server.as_raw_fd(), 7, Interest::READ_WRITE).unwrap();
+        assert_eq!(poller.wait(&mut events, Some(1000)).unwrap(), 1);
+        assert!(events.iter().next().unwrap().writable);
+
+        // Peer close surfaces as readable + hangup.
+        poller.rearm(server.as_raw_fd(), 7, Interest::READ).unwrap();
+        drop(client);
+        // Drain the pending "ping" first so EOF readiness is unambiguous.
+        let mut sink = [0u8; 16];
+        use std::io::Read as _;
+        let mut s = &server;
+        while matches!(s.read(&mut sink), Ok(n) if n > 0) {}
+        assert_eq!(poller.wait(&mut events, Some(1000)).unwrap(), 1);
+        let ev = events.iter().next().unwrap();
+        assert!(ev.hangup || ev.readable);
+
+        poller.deregister(server.as_raw_fd()).unwrap();
+        assert_eq!(poller.wait(&mut events, Some(0)).unwrap(), 0);
+    }
+}

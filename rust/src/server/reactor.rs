@@ -36,7 +36,7 @@
 
 use super::fairness::{FairnessPolicy, RoundRobin, RunQueueStat, DEFAULT_DISPATCH_QUOTA};
 use super::pool::SchedulerPool;
-use super::state::{GraphRun, Parked, RunIdAlloc, TaskState};
+use super::state::{GraphRun, Parked, ReplicaSet, RunIdAlloc, TaskState};
 use super::window::BoundedWindow;
 use crate::overhead::RuntimeProfile;
 use crate::protocol::{
@@ -97,6 +97,18 @@ struct WorkerMeta {
     #[allow(dead_code)] // kept for introspection/debug dumps
     info: WorkerInfo,
     connected: bool,
+}
+
+/// Cross-shard id allocators. Worker ids index cluster-global tables
+/// (every shard's runs may be placed on any worker) and client ids key
+/// completed-run reports, so under the sharded server every shard's
+/// reactor draws both from one shared pair of counters instead of its
+/// local lengths. Deliberately plain `std` atomics, not the loom shim:
+/// id allocation is a fetch-add, not a model-checked core.
+#[derive(Debug, Default)]
+pub struct SharedIds {
+    next_client: std::sync::atomic::AtomicU32,
+    next_worker: std::sync::atomic::AtomicU32,
 }
 
 /// Default cap on concurrently *executing* runs per client; further
@@ -166,6 +178,9 @@ pub struct Reactor {
     /// it).
     stats_buf: Vec<RunQueueStat>,
     emitted_buf: Vec<(WorkerId, Parked)>,
+    /// Shared client/worker id counters under the sharded server; `None`
+    /// (the default) keeps the single-reactor local sequences.
+    shared_ids: Option<std::sync::Arc<SharedIds>>,
 }
 
 /// A compute-task assignment about to be emitted, with every field
@@ -183,7 +198,7 @@ pub struct ComputeDispatch<'a> {
     pub worker: WorkerId,
     pub priority: i64,
     graph: &'a TaskGraph,
-    who_has: &'a [Vec<WorkerId>],
+    who_has: &'a [ReplicaSet],
     addrs: &'a [String],
 }
 
@@ -192,7 +207,7 @@ pub struct ComputeDispatch<'a> {
 #[derive(Clone)]
 pub struct ComputeInputs<'a> {
     graph: &'a TaskGraph,
-    who_has: &'a [Vec<WorkerId>],
+    who_has: &'a [ReplicaSet],
     addrs: &'a [String],
     target: WorkerId,
     inputs: std::slice::Iter<'a, TaskId>,
@@ -206,8 +221,8 @@ impl<'a> Iterator for ComputeInputs<'a> {
         // First holder wins (the producer); the empty address means "local
         // to the assignment's target worker".
         let addr = match self.who_has[input.idx()].first() {
-            Some(&h) if h == self.target => "",
-            Some(&h) => self.addrs.get(h.idx()).map(String::as_str).unwrap_or(""),
+            Some(h) if h == self.target => "",
+            Some(h) => self.addrs.get(h.idx()).map(String::as_str).unwrap_or(""),
             None => "",
         };
         Some(TaskInputRef { task: input, addr, nbytes: self.graph.task(input).output_size })
@@ -345,7 +360,25 @@ impl Reactor {
             max_queued_per_client: DEFAULT_MAX_QUEUED_RUNS_PER_CLIENT,
             stats_buf: Vec::new(),
             emitted_buf: Vec::new(),
+            shared_ids: None,
         }
+    }
+
+    /// Share client/worker id allocation with the other reactor shards
+    /// (ids stay globally unique without the shards coordinating).
+    pub fn with_shared_ids(mut self, ids: std::sync::Arc<SharedIds>) -> Reactor {
+        self.shared_ids = Some(ids);
+        self
+    }
+
+    /// Allocate run ids in the strided sequence `start, start+stride, …`
+    /// so concurrent shards never collide and `run.0 % stride` recovers
+    /// the owning shard (how worker messages are routed home).
+    pub fn with_run_stride(mut self, start: u32, stride: u32) -> Reactor {
+        assert!(stride >= 1, "stride must be positive");
+        assert!(start < stride, "start must index into the stride");
+        self.run_ids = RunIdAlloc::strided(start, stride);
+        self
     }
 
     /// Replace the dispatch fairness policy (default: round-robin).
@@ -398,6 +431,37 @@ impl Reactor {
 
     pub fn n_workers(&self) -> usize {
         self.workers.iter().filter(|w| w.connected).count()
+    }
+
+    /// Grow the worker tables so `idx` is addressable. Pad slots are
+    /// disconnected placeholders: with shared id allocation another shard
+    /// may have handed out lower ids whose broadcasts haven't arrived yet
+    /// (per-sender FIFO orders each worker's own join before any message
+    /// that names it, but *different* workers' joins race freely).
+    fn ensure_worker_slot(&mut self, idx: usize) {
+        while self.workers.len() <= idx {
+            let id = WorkerId(self.workers.len() as u32);
+            self.workers.push(WorkerMeta {
+                info: WorkerInfo { id, ncores: 0, node: 0 },
+                connected: false,
+            });
+            self.worker_addrs.push(String::new());
+        }
+    }
+
+    /// Absorb a worker that registered on another shard (the cross-shard
+    /// join broadcast): record its metadata and make it schedulable for
+    /// this shard's runs. No `Welcome` is emitted — the home shard already
+    /// answered over the worker's own connection. Idempotent against a
+    /// duplicate broadcast.
+    pub fn register_remote_worker(&mut self, info: WorkerInfo, data_addr: String) {
+        self.ensure_worker_slot(info.id.idx());
+        if self.workers[info.id.idx()].connected {
+            return;
+        }
+        self.workers[info.id.idx()] = WorkerMeta { info, connected: true };
+        self.worker_addrs[info.id.idx()] = data_addr;
+        self.pool.add_worker(info);
     }
 
     /// Retained completed-run reports, oldest first. The window is bounded
@@ -831,15 +895,29 @@ impl Reactor {
         self.charge_msg(128);
         match (from, msg) {
             (Origin::Unregistered { .. }, Msg::RegisterClient { .. }) => {
-                let id = self.n_clients;
-                self.n_clients += 1;
+                let id = match &self.shared_ids {
+                    Some(ids) => {
+                        ids.next_client.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+                    }
+                    None => self.n_clients,
+                };
+                // Local count tracks the high-water mark either way
+                // (introspection only; never used for allocation when ids
+                // are shared).
+                self.n_clients = self.n_clients.max(id.saturating_add(1));
                 out.push((Dest::Client(id), Msg::Welcome { id }));
             }
             (Origin::Unregistered { .. }, Msg::RegisterWorker { ncores, node, data_addr, .. }) => {
-                let id = WorkerId(self.workers.len() as u32);
+                let id = match &self.shared_ids {
+                    Some(ids) => WorkerId(
+                        ids.next_worker.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+                    ),
+                    None => WorkerId(self.workers.len() as u32),
+                };
                 let info = WorkerInfo { id, ncores, node };
-                self.workers.push(WorkerMeta { info, connected: true });
-                self.worker_addrs.push(data_addr);
+                self.ensure_worker_slot(id.idx());
+                self.workers[id.idx()] = WorkerMeta { info, connected: true };
+                self.worker_addrs[id.idx()] = data_addr;
                 self.pool.add_worker(info);
                 out.push((Dest::Worker(id), Msg::Welcome { id: id.0 }));
             }

@@ -60,6 +60,116 @@ pub enum TaskState {
     Erred,
 }
 
+/// Replica list for one task's output: the workers holding it, in
+/// placement order (first = producer).
+///
+/// Up to [`ReplicaSet::INLINE`] ids live inline; only a fourth replica
+/// spills to the heap (and an empty `Vec` costs nothing), so the common
+/// cases — exactly one producer, occasionally a duplicate-finish replica —
+/// never allocate. This removes the last per-task heap object on the
+/// server: `who_has` used to be one `Vec` per task, allocated on first
+/// finish. The `hotpath_micro` dispatch section pins the push/first/retain
+/// cycle at zero allocations under the counting allocator.
+#[derive(Debug, Clone)]
+pub struct ReplicaSet {
+    inline: [WorkerId; ReplicaSet::INLINE],
+    len: u8,
+    spill: Vec<WorkerId>,
+}
+
+impl ReplicaSet {
+    /// Replicas held without heap spill. Three covers the planned
+    /// k-replication follow-up (k ≤ 3 in the ROADMAP's object-store item).
+    pub const INLINE: usize = 3;
+
+    pub fn new() -> ReplicaSet {
+        ReplicaSet { inline: [WorkerId(0); Self::INLINE], len: 0, spill: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len as usize + self.spill.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Append a replica (dedup is the caller's concern, as it was with the
+    /// plain `Vec`). Allocation-free until the inline slots are full.
+    pub fn push(&mut self, w: WorkerId) {
+        if (self.len as usize) < Self::INLINE {
+            self.inline[self.len as usize] = w;
+            self.len += 1;
+        } else {
+            self.spill.push(w);
+        }
+    }
+
+    /// First replica (the producer), if any.
+    pub fn first(&self) -> Option<WorkerId> {
+        if self.len > 0 {
+            Some(self.inline[0])
+        } else {
+            None
+        }
+    }
+
+    pub fn contains(&self, needle: WorkerId) -> bool {
+        self.iter().any(|w| w == needle)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = WorkerId> + '_ {
+        self.inline[..self.len as usize].iter().copied().chain(self.spill.iter().copied())
+    }
+
+    /// Keep only replicas satisfying `keep`, preserving order. Spilled ids
+    /// are pulled back inline so the invariant (spill non-empty only while
+    /// inline is full) — and therefore allocation-free pushes — survive
+    /// purges.
+    pub fn retain(&mut self, mut keep: impl FnMut(WorkerId) -> bool) {
+        let mut kept = 0usize;
+        for i in 0..self.len as usize {
+            let w = self.inline[i];
+            if keep(w) {
+                self.inline[kept] = w;
+                kept += 1;
+            }
+        }
+        self.len = kept as u8;
+        self.spill.retain(|&w| keep(w));
+        while (self.len as usize) < Self::INLINE && !self.spill.is_empty() {
+            self.inline[self.len as usize] = self.spill.remove(0);
+            self.len += 1;
+        }
+    }
+}
+
+impl Default for ReplicaSet {
+    fn default() -> Self {
+        ReplicaSet::new()
+    }
+}
+
+impl PartialEq for ReplicaSet {
+    fn eq(&self, other: &ReplicaSet) -> bool {
+        self.len() == other.len() && self.iter().zip(other.iter()).all(|(a, b)| a == b)
+    }
+}
+
+/// Comparability with the pre-interning representation (tests and
+/// diagnostics state expected replica lists as plain vectors).
+impl PartialEq<Vec<WorkerId>> for ReplicaSet {
+    fn eq(&self, other: &Vec<WorkerId>) -> bool {
+        self.len() == other.len() && self.iter().zip(other.iter().copied()).all(|(a, b)| a == b)
+    }
+}
+
+impl PartialEq<&[WorkerId]> for ReplicaSet {
+    fn eq(&self, other: &&[WorkerId]) -> bool {
+        self.len() == other.len() && self.iter().zip(other.iter().copied()).all(|(a, b)| a == b)
+    }
+}
+
 /// Execution state of one submitted graph. The reactor keeps one `GraphRun`
 /// per live [`RunId`]; everything in here is private to that run, so
 /// concurrent graphs can never alias each other's `TaskId`s.
@@ -74,8 +184,9 @@ pub struct GraphRun {
     pub remaining: usize,
     /// Wall-clock µs timestamp (from the reactor's stopwatch) at submit.
     pub submitted_at_us: u64,
-    /// Workers holding each task's output (first = producer).
-    pub who_has: Vec<Vec<WorkerId>>,
+    /// Workers holding each task's output (first = producer). Inline
+    /// small-vec: see [`ReplicaSet`].
+    pub who_has: Vec<ReplicaSet>,
     /// Priority each task was last assigned with (scheduler-chosen; needed
     /// to re-send the *same* priority after a successful retraction).
     pub priorities: Vec<i64>,
@@ -178,7 +289,7 @@ impl GraphRun {
             unfinished_deps,
             remaining: n,
             submitted_at_us: now_us,
-            who_has: vec![Vec::new(); n],
+            who_has: vec![ReplicaSet::new(); n],
             priorities: (0..n as i64).collect(),
             raced_steals: HashMap::new(),
             cancelled_steals: HashMap::new(),
@@ -289,7 +400,7 @@ impl GraphRun {
             matches!(s, TaskState::Assigned(w) if *w == worker)
                 || matches!(s, TaskState::Stealing { from, to }
                     if *from == worker || *to == worker)
-        }) || self.who_has.iter().flatten().any(|&h| h == worker)
+        }) || self.who_has.iter().any(|h| h.contains(worker))
     }
 
     /// Absorb the death of `dead` by lineage recovery (the tentpole of the
@@ -313,9 +424,9 @@ impl GraphRun {
         // Outputs the dead worker held a replica of: any assignment sent
         // while it held one may carry its (now dead) data address, so
         // consumers of those outputs are conservatively cancelled.
-        let held: Vec<bool> = self.who_has.iter().map(|h| h.contains(&dead)).collect();
+        let held: Vec<bool> = self.who_has.iter().map(|h| h.contains(dead)).collect();
         for h in &mut self.who_has {
-            h.retain(|&w| w != dead);
+            h.retain(|w| w != dead);
         }
         // Markers waiting on an answer from the dead worker are dead
         // letters — drop them, or they would swallow a future genuine
@@ -455,15 +566,33 @@ impl GraphRun {
 
 /// Allocator for fresh run ids (monotonic; never reused within a server's
 /// lifetime, so a stale message can never alias a newer graph).
-#[derive(Debug, Default)]
+///
+/// With the sharded control plane each shard allocates independently:
+/// shard `s` of `n` uses [`RunIdAlloc::strided`]`(s, n)` and hands out
+/// `s, s+n, s+2n, …` — globally unique without coordination, and
+/// `run.0 % n` recovers the owning shard (how cross-shard worker messages
+/// are routed home). The default is the unsharded `(0, 1)` sequence.
+#[derive(Debug)]
 pub struct RunIdAlloc {
     next: u32,
+    stride: u32,
+}
+
+impl Default for RunIdAlloc {
+    fn default() -> Self {
+        RunIdAlloc { next: 0, stride: 1 }
+    }
 }
 
 impl RunIdAlloc {
+    /// Allocator for shard `start` of `stride` total shards.
+    pub fn strided(start: u32, stride: u32) -> RunIdAlloc {
+        RunIdAlloc { next: start, stride: stride.max(1) }
+    }
+
     pub fn allocate(&mut self) -> RunId {
         let id = RunId(self.next);
-        self.next += 1;
+        self.next += self.stride;
         id
     }
 }
@@ -666,5 +795,63 @@ mod tests {
         assert_ne!(a, b);
         assert_eq!(a, RunId(0));
         assert_eq!(b, RunId(1));
+    }
+
+    #[test]
+    fn strided_run_ids_are_disjoint_across_shards() {
+        let mut shard0 = RunIdAlloc::strided(0, 4);
+        let mut shard3 = RunIdAlloc::strided(3, 4);
+        let a: Vec<RunId> = (0..3).map(|_| shard0.allocate()).collect();
+        let b: Vec<RunId> = (0..3).map(|_| shard3.allocate()).collect();
+        assert_eq!(a, vec![RunId(0), RunId(4), RunId(8)]);
+        assert_eq!(b, vec![RunId(3), RunId(7), RunId(11)]);
+        for r in a.iter().chain(b.iter()) {
+            let owner = r.0 % 4;
+            assert!(owner == 0 || owner == 3, "owner recoverable from the id");
+        }
+    }
+
+    // ---- ReplicaSet (interned who_has small-vec) ----
+
+    #[test]
+    fn replica_set_inline_then_spill() {
+        let mut r = ReplicaSet::new();
+        assert!(r.is_empty());
+        assert_eq!(r.first(), None);
+        for i in 0..5 {
+            r.push(WorkerId(i));
+        }
+        assert_eq!(r.len(), 5);
+        assert_eq!(r.first(), Some(WorkerId(0)));
+        assert!(r.contains(WorkerId(4)));
+        assert!(!r.contains(WorkerId(9)));
+        let order: Vec<WorkerId> = r.iter().collect();
+        assert_eq!(r, order, "iteration preserves insertion order");
+    }
+
+    #[test]
+    fn replica_set_retain_refills_inline_from_spill() {
+        let mut r = ReplicaSet::new();
+        for i in 0..5 {
+            r.push(WorkerId(i));
+        }
+        // Drop the three inline entries: spilled 3 and 4 must move inline,
+        // in order, so first() stays O(1) and pushes stay allocation-free.
+        r.retain(|w| w.0 >= 3);
+        assert_eq!(r, vec![WorkerId(3), WorkerId(4)]);
+        assert_eq!(r.first(), Some(WorkerId(3)));
+        r.retain(|_| false);
+        assert!(r.is_empty());
+        assert_eq!(r.first(), None);
+    }
+
+    #[test]
+    fn replica_set_compares_with_vec() {
+        let mut r = ReplicaSet::new();
+        r.push(WorkerId(2));
+        r.push(WorkerId(7));
+        assert_eq!(r, vec![WorkerId(2), WorkerId(7)]);
+        assert_ne!(r, vec![WorkerId(7), WorkerId(2)]);
+        assert_ne!(r, vec![WorkerId(2)]);
     }
 }

@@ -5,9 +5,11 @@
 //! project needs. Each submodule is fully unit-tested.
 
 pub mod cli;
+pub mod net;
 pub mod rng;
 pub mod stats;
 pub mod timing;
 
+pub use net::connect_with_retry;
 pub use rng::Rng;
 pub use stats::Summary;

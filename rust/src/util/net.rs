@@ -1,0 +1,75 @@
+//! Client-side connect hardening.
+//!
+//! With a thousand clients connecting at once (the fig. 9 shard-scaling
+//! bench), the kernel's listen backlog (~128 by default) overflows and
+//! late SYNs are refused or reset even though the server is healthy and
+//! draining accepts as fast as it can. A bounded retry with backoff turns
+//! that transient into a short stall instead of a hard failure; genuine
+//! errors (unroutable address, permission) still fail on the first try.
+
+use std::io;
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Connection attempts before giving up (first try included).
+const CONNECT_ATTEMPTS: u32 = 20;
+
+/// First retry delay; doubles per retry up to [`BACKOFF_MAX`].
+const BACKOFF_START: Duration = Duration::from_millis(10);
+
+/// Backoff ceiling — total worst-case wait stays under ~1 s.
+const BACKOFF_MAX: Duration = Duration::from_millis(50);
+
+fn is_transient(kind: io::ErrorKind) -> bool {
+    matches!(
+        kind,
+        io::ErrorKind::ConnectionRefused
+            | io::ErrorKind::ConnectionReset
+            | io::ErrorKind::TimedOut
+    )
+}
+
+/// `TcpStream::connect` with bounded retry on backlog-overflow transients
+/// (refused / reset / timed out). Non-transient errors and exhaustion
+/// return the last error.
+pub fn connect_with_retry<A: std::net::ToSocketAddrs + Copy>(addr: A) -> io::Result<TcpStream> {
+    let mut delay = BACKOFF_START;
+    let mut last: Option<io::Error> = None;
+    for attempt in 0..CONNECT_ATTEMPTS {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) if is_transient(e.kind()) && attempt + 1 < CONNECT_ATTEMPTS => {
+                std::thread::sleep(delay);
+                delay = (delay * 2).min(BACKOFF_MAX);
+                last = Some(e);
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Err(last.unwrap_or_else(|| io::Error::new(io::ErrorKind::Other, "connect retries exhausted")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    #[test]
+    fn connects_to_live_listener_first_try() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let s = connect_with_retry(addr).unwrap();
+        assert_eq!(s.peer_addr().unwrap(), addr);
+    }
+
+    #[test]
+    fn refused_port_eventually_errors() {
+        // Bind then drop to get a port that refuses connections.
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let err = connect_with_retry(addr).expect_err("nothing is listening");
+        assert!(is_transient(err.kind()), "unexpected kind {:?}", err.kind());
+    }
+}

@@ -113,8 +113,10 @@ pub fn run_worker(cfg: WorkerConfig) -> Result<WorkerHandle> {
     let data_listener = TcpListener::bind("127.0.0.1:0").context("bind data listener")?;
     let data_addr = data_listener.local_addr()?.to_string();
 
-    let mut stream =
-        TcpStream::connect(&cfg.server_addr).with_context(|| format!("connect {}", cfg.server_addr))?;
+    // Retrying connect: workers joining alongside a large client fleet can
+    // hit transient backlog-overflow refusals (see `util::net`).
+    let mut stream = crate::util::connect_with_retry(cfg.server_addr.as_str())
+        .with_context(|| format!("connect {}", cfg.server_addr))?;
     stream.set_nodelay(true).ok();
     let mut register_frames = FrameWriter::new();
     register_frames.send(

@@ -50,7 +50,7 @@ impl ZeroWorkerHandle {
 
 /// Start a zero worker; returns after registration.
 pub fn run_zero_worker(cfg: WorkerConfig) -> Result<ZeroWorkerHandle> {
-    let mut stream = TcpStream::connect(&cfg.server_addr)
+    let mut stream = crate::util::connect_with_retry(cfg.server_addr.as_str())
         .with_context(|| format!("connect {}", cfg.server_addr))?;
     stream.set_nodelay(true).ok();
     let mut register_frames = FrameWriter::new();

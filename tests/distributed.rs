@@ -639,6 +639,100 @@ fn oversized_frame_rejected() {
     srv.shutdown();
 }
 
+// ---- sharded control plane (PR 7 tentpole) ----
+
+fn server_sharded(shards: usize) -> rsds::server::ServerHandle {
+    serve(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        scheduler: "ws".into(),
+        seed: 42,
+        shards,
+        ..ServerConfig::default()
+    })
+    .expect("server start")
+}
+
+#[test]
+fn concurrent_clients_on_four_shards() {
+    // Eight clients hash across four reactor shards; the workers each home
+    // on one shard and serve runs owned by all of them, so every graph
+    // exercises the cross-shard Forward path both ways (compute out,
+    // task-finished back). Nightly TSan runs this test to race-check the
+    // shard channels and the shared report store.
+    let srv = server_sharded(4);
+    let addr = srv.addr.to_string();
+    let ws = workers(&addr, 4);
+    let handles: Vec<_> = (0..8)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr, &format!("sh{i}")).unwrap();
+                let g = if i % 2 == 0 { graphgen::merge(120) } else { graphgen::tree(6) };
+                c.run_graph(&g).unwrap()
+            })
+        })
+        .collect();
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for (i, res) in results.iter().enumerate() {
+        let want = if i % 2 == 0 { 121 } else { 63 };
+        assert_eq!(res.n_tasks, want, "client {i}");
+    }
+    // Eight distinct runs: the strided per-shard RunId allocation must not
+    // collide across shards; all land in the one shared report store.
+    let runs: std::collections::HashSet<_> = results.iter().map(|r| r.run).collect();
+    assert_eq!(runs.len(), 8);
+    assert_eq!(srv.report_count(), 8);
+    for w in &ws {
+        w.shutdown();
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn worker_killed_mid_run_recovers_on_sharded_server() {
+    // Cross-shard death broadcast: the victim homes on exactly one shard
+    // while clients hashed to *other* shards hold live runs with
+    // assignments on it. The home shard must broadcast WorkerDead, every
+    // owning shard must recover its own runs exactly once, and any Forward
+    // racing the death must be dropped, not delivered to the corpse —
+    // observable as: all four runs complete with clean results.
+    let srv = server_sharded(4);
+    let addr = srv.addr.to_string();
+    let mut ws = workers(&addr, 3);
+    let victim = ws.remove(0);
+    let killer = std::thread::spawn(move || {
+        std::thread::sleep(std::time::Duration::from_millis(400));
+        victim.shutdown();
+    });
+    let handles: Vec<_> = (0..4)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr, &format!("shk{i}")).unwrap();
+                // ~2 s of task time per run keeps assignments in flight on
+                // the victim when the kill lands at 400 ms.
+                c.run_graph(&graphgen::merge_slow(20, 100_000))
+                    .expect("run must survive the cross-shard worker death")
+            })
+        })
+        .collect();
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    killer.join().unwrap();
+    for res in &results {
+        assert_eq!(res.n_tasks, 21);
+    }
+    let reports = srv.reports();
+    assert_eq!(reports.len(), 4);
+    assert!(
+        reports.iter().any(|rep| rep.recoveries >= 1),
+        "at least one run recorded the recovery: {reports:?}"
+    );
+    for w in &ws {
+        w.shutdown();
+    }
+    srv.shutdown();
+}
+
 #[test]
 fn unregistered_peer_messages_ignored() {
     let srv = server("ws");

@@ -3,9 +3,9 @@
 //!
 //! Each model rebuilds one of the repo's real concurrency cores — the
 //! worker's one-mutex [`TaskQueue`], the report window behind the
-//! [`ServerHandle`] mutex, the writer-registry/`flush_batches` shutdown
-//! protocol, and the runtime's global-init pattern — from the *production
-//! types* behind the [`rsds::sync`] shim, and explores every
+//! [`ServerHandle`] mutex, the cross-shard forward/worker-death protocol
+//! (`deliver_forward`), and the runtime's global-init pattern — from the
+//! *production types* behind the [`rsds::sync`] shim, and explores every
 //! distinguishable schedule with [`rsds::modelcheck`] (the offline loom
 //! stand-in). The `seeded_*` models lock known bugs in as regressions:
 //! each reconstructs a protocol violation (the PR 4 count-based-watermark
@@ -19,14 +19,13 @@
 
 use rsds::modelcheck::{model, model_fails};
 use rsds::protocol::{encode_msg, ComputeTaskView, Msg, RunId, TaskInputLoc};
-use rsds::server::{flush_batches, pool_put, BoundedWindow, BufPool};
+use rsds::server::{deliver_forward, pool_get, pool_put, BoundedWindow, BufPool};
 use rsds::sync::atomic::{AtomicUsize, Ordering};
 use rsds::sync::{thread, Arc, Condvar, Mutex};
 use rsds::taskgraph::{Payload, TaskId};
 use rsds::worker::queue::{FetchPlan, TaskQueue};
 use std::collections::HashMap;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Mutex as StdMutex;
+use std::sync::mpsc::channel;
 
 /// An encoded `compute-task` frame (decoded to a borrowed view per use,
 /// exactly like the worker's reader thread).
@@ -276,79 +275,85 @@ fn seeded_count_based_watermark_bug_is_caught() {
 }
 
 // ---------------------------------------------------------------------------
-// Writer registry: flush_batches vs shutdown
+// Cross-shard forward vs worker death (net.rs::deliver_forward)
 // ---------------------------------------------------------------------------
 
-/// `flush_batches` racing `ServerHandle::shutdown`'s writer-registry
-/// drain: the coalesced batch must be delivered to the writer XOR
-/// recycled into the buffer pool — dropped-on-the-floor would leak the
-/// buffer, double-accounted would alias it.
+/// A worker homed on shard A dies while shard B still holds work for it:
+/// shard B's pre-encoded `Forward` batch races shard A's close of the
+/// connection. [`deliver_forward`] must splice the batch into the worker's
+/// output buffer XOR recycle it into the pool — never both (aliasing) and
+/// never neither (leak) — and once the death is processed no bytes may sit
+/// in any *live* buffer (the corpse's buffer dies with the connection, so
+/// no frame is ever emitted to it). Shard B's own handling of the death
+/// broadcast is guarded by route removal, keeping recovery exactly-once
+/// even if the notification is observed twice.
 #[test]
-fn flush_batches_vs_shutdown_conserves_buffers() {
+fn cross_shard_forward_vs_worker_death_conserves_buffers() {
     model(|| {
-        let writers: Arc<Mutex<HashMap<u64, Sender<Vec<u8>>>>> =
-            Arc::new(Mutex::new(HashMap::new()));
+        // Shard A's connection table: conn 1 is the worker's output buffer.
+        let conns: Arc<Mutex<HashMap<u64, Vec<u8>>>> = Arc::new(Mutex::new(HashMap::new()));
         let pool: BufPool = Arc::new(Mutex::new(Vec::new()));
-        let (tx, rx) = channel::<Vec<u8>>();
-        writers.lock().unwrap().insert(1, tx);
-        let shutdown = {
-            let writers = Arc::clone(&writers);
-            // The shutdown drain: writer senders dropped wholesale.
-            thread::spawn(move || writers.lock().unwrap().clear())
+        conns.lock().unwrap().insert(1, Vec::new());
+        let (fwd_tx, fwd_rx) = channel::<(u64, Vec<u8>)>();
+        let recoveries = Arc::new(AtomicUsize::new(0));
+        // Shard B: forward a coalesced batch toward the worker, then handle
+        // the (possibly duplicated) WorkerDead broadcast — the route-removal
+        // guard is what keeps the parked-assignment recovery exactly-once.
+        let shard_b = {
+            let pool = Arc::clone(&pool);
+            let recoveries = Arc::clone(&recoveries);
+            thread::spawn(move || {
+                let mut batch = pool_get(&pool);
+                batch.extend_from_slice(b"frame-bytes");
+                let _ = fwd_tx.send((1, batch));
+                let mut routes: HashMap<u32, ()> = HashMap::new();
+                routes.insert(7, ());
+                for _ in 0..2 {
+                    if routes.remove(&7).is_some() {
+                        recoveries.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+            })
         };
-        let mut batches: HashMap<u64, Vec<u8>> = HashMap::new();
-        batches.insert(1, b"frame-bytes".to_vec());
-        let mut scratch = Vec::new();
-        flush_batches(&mut batches, &mut scratch, &writers, &pool, 0);
-        shutdown.join().unwrap();
-        let delivered = rx.try_iter().count();
-        let pooled = pool.lock().unwrap().len();
-        assert!(batches.is_empty(), "batch neither flushed nor recycled");
+        // Shard A's loop: a forward drain, the worker's death (buffer
+        // discarded with the connection), a final drain. B's send lands in
+        // any of the gaps between them.
+        let mut delivered = 0usize;
+        while let Ok((conn, bytes)) = fwd_rx.try_recv() {
+            let mut g = conns.lock().unwrap();
+            if deliver_forward(g.get_mut(&conn), bytes, &pool) {
+                delivered += 1;
+            }
+        }
+        let died = conns.lock().unwrap().remove(&1).is_some();
+        shard_b.join().unwrap();
+        while let Ok((conn, bytes)) = fwd_rx.try_recv() {
+            let mut g = conns.lock().unwrap();
+            if deliver_forward(g.get_mut(&conn), bytes, &pool) {
+                delivered += 1;
+            }
+        }
+        assert!(died);
+        assert_eq!(recoveries.load(Ordering::SeqCst), 1, "recovery must run exactly once");
+        assert!(delivered <= 1, "batch aliased: spliced {delivered} times");
+        // Conservation: spliced or recycled, the batch's buffer is back in
+        // the pool, and the corpse left no live buffer holding its bytes.
         assert_eq!(
-            delivered + pooled,
+            pool.lock().unwrap().len(),
             1,
-            "buffer conservation broke (delivered={delivered}, pooled={pooled})"
+            "batch buffer leaked (delivered={delivered})"
+        );
+        assert!(
+            conns.lock().unwrap().is_empty(),
+            "frame would be emitted to the dead worker's connection"
         );
     });
 }
 
-/// Same race, but the writer *thread* is already gone (receiver dropped,
-/// as after a peer disconnect): the send fails and the error path must
-/// recycle the batch it hands back.
-#[test]
-fn flush_batches_send_failure_recycles_the_batch() {
-    model(|| {
-        let writers: Arc<Mutex<HashMap<u64, Sender<Vec<u8>>>>> =
-            Arc::new(Mutex::new(HashMap::new()));
-        let pool: BufPool = Arc::new(Mutex::new(Vec::new()));
-        let (tx, rx) = channel::<Vec<u8>>();
-        writers.lock().unwrap().insert(1, tx);
-        let rx_slot: Arc<StdMutex<Option<Receiver<Vec<u8>>>>> =
-            Arc::new(StdMutex::new(Some(rx)));
-        let killer = {
-            let rx_slot = Arc::clone(&rx_slot);
-            thread::spawn(move || drop(rx_slot.lock().unwrap().take()))
-        };
-        let mut batches: HashMap<u64, Vec<u8>> = HashMap::new();
-        batches.insert(1, b"frame-bytes".to_vec());
-        let mut scratch = Vec::new();
-        flush_batches(&mut batches, &mut scratch, &writers, &pool, 0);
-        killer.join().unwrap();
-        let delivered = rx_slot
-            .lock()
-            .unwrap()
-            .as_ref()
-            .map_or(0, |rx| rx.try_iter().count());
-        let pooled = pool.lock().unwrap().len();
-        assert!(batches.is_empty());
-        assert_eq!(delivered + pooled, 1, "send-failure path leaked the batch");
-    });
-}
-
 /// The conservation helper itself must round-trip: what `pool_put`
-/// accepts, `pool_get` hands back (a sanity anchor for the two models
-/// above — if pooling silently dropped small buffers, `pooled` would
-/// undercount and the models would pass vacuously).
+/// accepts, `pool_get` hands back (a sanity anchor for the model
+/// above — if pooling silently dropped small buffers, the pool-length
+/// assertion would undercount and the model would pass vacuously).
 #[test]
 fn pool_round_trips_small_buffers() {
     model(|| {
