@@ -69,6 +69,7 @@ fn tcp_mean_aot(n_clients: usize, mix: &[&str], n_workers: usize) -> f64 {
                 name: format!("z{i}"),
                 ncores: 1,
                 node: 0,
+                memory_limit: None,
             })
             .expect("zero worker start")
         })
@@ -214,6 +215,7 @@ fn shard_throughput(shards: usize, n_clients: usize, spec: &str, n_workers: usiz
                 name: format!("zs{i}"),
                 ncores: 1,
                 node: 0,
+                memory_limit: None,
             })
             .expect("zero worker start")
         })

@@ -8,11 +8,24 @@
 //! AOT, killed AOT, the overhead ratio and the number of re-executed tasks
 //! are reported per (scheduler, graph, cluster) combination and emitted
 //! machine-readably to `BENCH_pr3.json`.
+//!
+//! The replication section (PR 8) re-runs the kill experiment at k = 2:
+//! proactive replication should turn most of the lost-output recomputes
+//! into trivial `who_has` purges (≥ 50 % fewer re-executed tasks on the
+//! same graph and seed — the PR 8 acceptance gate), and a real TCP run
+//! under `--memory-limit` must spill, restore, and still complete a graph
+//! whose live outputs exceed the budget. Emitted to `BENCH_pr8.json`.
+//!
+//! Env knobs: `RSDS_BENCH_QUICK=1` shortens runs (CI smoke);
+//! `RSDS_BENCH_SECTION=recovery|replication` runs one section only.
 
+use rsds::client::Client;
 use rsds::graphgen;
 use rsds::overhead::RuntimeProfile;
+use rsds::server::{serve, ServerConfig};
 use rsds::sim::{simulate, SimConfig, WorkerKill};
-use rsds::taskgraph::TaskGraph;
+use rsds::taskgraph::{GraphBuilder, Payload, TaskGraph};
+use rsds::worker::{run_worker, WorkerConfig};
 
 struct Row {
     scheduler: &'static str,
@@ -91,8 +104,204 @@ fn write_bench_json(rows: &[Row], quick: bool) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// PR 8: k-replication vs recompute, and spill-to-disk completion.
+// ---------------------------------------------------------------------------
+
+struct ReplRow {
+    graph: String,
+    replication: usize,
+    killed_aot_us: f64,
+    reexecuted: u64,
+    recoveries: u64,
+}
+
+/// One killed run at replication factor `k` (fan-out threshold 1 so every
+/// consumed output is a replication candidate — the contrast experiment
+/// wants the policy on, not a policy study).
+fn measure_replicated(graph: &TaskGraph, n_workers: usize, k: usize) -> ReplRow {
+    let base = SimConfig {
+        n_workers,
+        profile: RuntimeProfile::rust(),
+        scheduler: "ws".into(),
+        replication: k,
+        replication_fanout: 1,
+        ..SimConfig::default()
+    };
+    let clean = simulate(graph, &base);
+    assert!(!clean.timed_out, "k={k}/{}: clean run timed out", graph.name);
+    let killed = simulate(
+        graph,
+        &SimConfig {
+            kill: Some(WorkerKill { worker: 0, at_us: clean.makespan_us * 0.3 }),
+            ..base
+        },
+    );
+    assert!(!killed.timed_out, "k={k}/{}: killed run timed out", graph.name);
+    assert_eq!(killed.n_tasks, graph.len() as u64);
+    ReplRow {
+        graph: graph.name.clone(),
+        replication: k,
+        killed_aot_us: killed.aot_us,
+        reexecuted: killed.tasks_executed.saturating_sub(killed.n_tasks),
+        recoveries: killed.recoveries,
+    }
+}
+
+/// A graph whose live outputs exceed the spill run's memory budget: every
+/// chunk stays live (its sole consumer is the final sink), so the worker
+/// must spill mid-run and restore at the gather.
+fn spill_graph(chunks: u32, chunk_bytes: u64) -> TaskGraph {
+    let mut b = GraphBuilder::new();
+    let ids: Vec<_> = (0..chunks)
+        .map(|i| b.add(&format!("chunk-{i}"), vec![], 200, chunk_bytes, Payload::NoOp))
+        .collect();
+    b.add("spill-sink", ids, 500, 64, Payload::MergeInputs);
+    b.build("spill-pressure").expect("valid graph")
+}
+
+struct SpillOutcome {
+    memory_limit: u64,
+    live_bytes: u64,
+    spills: u64,
+    restores: u64,
+}
+
+/// Real TCP run: one worker under `--memory-limit`, a graph holding 6×
+/// the budget live. Completion plus non-zero spill/restore counters is
+/// the PR 8 spill acceptance gate.
+fn spill_run(quick: bool) -> SpillOutcome {
+    let limit: u64 = 64 * 1024;
+    let chunks: u32 = if quick { 24 } else { 48 };
+    let chunk_bytes: u64 = 16 * 1024;
+    let srv = serve(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        scheduler: "ws".into(),
+        seed: 2020,
+        profile: RuntimeProfile::rust(),
+        emulate: false,
+        ..ServerConfig::default()
+    })
+    .expect("server start");
+    let addr = srv.addr.to_string();
+    let w = run_worker(WorkerConfig {
+        server_addr: addr.clone(),
+        name: "spill-w0".into(),
+        ncores: 1,
+        node: 0,
+        memory_limit: Some(limit),
+    })
+    .expect("worker start");
+    let graph = spill_graph(chunks, chunk_bytes);
+    let mut client = Client::connect(&addr, "fig-recovery").expect("client connect");
+    let res = client.run_graph(&graph).expect("spill run completes");
+    assert_eq!(res.n_tasks, chunks as u64 + 1, "graph exceeding the budget must complete");
+    let (spills, restores) = w.spill_stats();
+    w.shutdown();
+    srv.shutdown();
+    assert!(spills > 0, "live set 6x the budget never spilled");
+    assert!(restores > 0, "sink gather never restored a spilled chunk");
+    SpillOutcome { memory_limit: limit, live_bytes: chunks as u64 * chunk_bytes, spills, restores }
+}
+
+fn write_pr8_json(rows: &[ReplRow], spill: &SpillOutcome, quick: bool) {
+    let mut json = String::from("{\n");
+    json.push_str("  \"pr\": 8,\n");
+    json.push_str("  \"bench\": \"fig_recovery_replication\",\n");
+    json.push_str(&format!("  \"quick\": {quick},\n"));
+    json.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"graph\": \"{}\", \"replication\": {}, \"killed_aot_us\": {:.2}, \
+             \"reexecuted_tasks\": {}, \"recoveries\": {}}}{}\n",
+            r.graph,
+            r.replication,
+            r.killed_aot_us,
+            r.reexecuted,
+            r.recoveries,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str(&format!(
+        "  \"spill\": {{\"memory_limit\": {}, \"live_bytes\": {}, \"spills\": {}, \
+         \"restores\": {}, \"completed\": true}}\n",
+        spill.memory_limit, spill.live_bytes, spill.spills, spill.restores
+    ));
+    json.push_str("}\n");
+    match std::fs::write("BENCH_pr8.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_pr8.json"),
+        Err(e) => eprintln!("could not write BENCH_pr8.json: {e}"),
+    }
+}
+
+fn replication_section(quick: bool) {
+    println!("\n== fig_recovery: replication (k=1 vs k=2, worker 0 killed at 30%) ==");
+    let graphs: Vec<TaskGraph> = if quick {
+        vec![graphgen::merge_slow(200, 2_000), graphgen::tree(7)]
+    } else {
+        vec![graphgen::merge_slow(2_000, 2_000), graphgen::tree(10)]
+    };
+    println!(
+        "{:<18} {:>3} {:>14} {:>9} {:>10}",
+        "graph", "k", "killed µs/task", "re-exec", "recoveries"
+    );
+    let mut rows = Vec::new();
+    for graph in &graphs {
+        for k in [1usize, 2] {
+            let row = measure_replicated(graph, 8, k);
+            println!(
+                "{:<18} {:>3} {:>14.2} {:>9} {:>10}",
+                row.graph, row.replication, row.killed_aot_us, row.reexecuted, row.recoveries
+            );
+            rows.push(row);
+        }
+    }
+    // The acceptance gate, on the first (merge) graph: same graph, same
+    // seed, same kill point — k=2 must recompute at most half of what
+    // k=1 recomputes.
+    let k1 = rows.iter().find(|r| r.replication == 1).expect("k=1 row");
+    let k2 = rows.iter().find(|r| r.replication == 2).expect("k=2 row");
+    assert!(
+        k1.reexecuted > 0,
+        "{}: the k=1 kill must lose sole-copy outputs for the contrast to mean anything",
+        k1.graph
+    );
+    assert!(
+        k2.reexecuted * 2 <= k1.reexecuted,
+        "{}: k=2 must recompute at least 50% fewer tasks (k=1: {}, k=2: {})",
+        k1.graph,
+        k1.reexecuted,
+        k2.reexecuted
+    );
+    println!(
+        "\n{}: re-exec {} (k=1) -> {} (k=2), a {:.0}% reduction",
+        k1.graph,
+        k1.reexecuted,
+        k2.reexecuted,
+        100.0 * (1.0 - k2.reexecuted as f64 / k1.reexecuted as f64)
+    );
+
+    let spill = spill_run(quick);
+    println!(
+        "spill: {} live bytes under a {} budget -> {} spills, {} restores, completed",
+        spill.live_bytes, spill.memory_limit, spill.spills, spill.restores
+    );
+    write_pr8_json(&rows, &spill, quick);
+}
+
 fn main() {
     let quick = std::env::var_os("RSDS_BENCH_QUICK").is_some();
+    let section = std::env::var("RSDS_BENCH_SECTION").unwrap_or_default();
+    if section.is_empty() || section == "recovery" {
+        recovery_section(quick);
+    }
+    if section.is_empty() || section == "replication" {
+        replication_section(quick);
+    }
+}
+
+fn recovery_section(quick: bool) {
     let graphs: Vec<TaskGraph> = if quick {
         vec![graphgen::merge_slow(200, 2_000), graphgen::tree(7)]
     } else {

@@ -164,10 +164,21 @@ fn codec_section(cfg: BenchConfig) -> Vec<CodecRow> {
         duration_us: 6,
         output_size: 28,
         inputs: vec![
-            TaskInputLoc { task: TaskId(12_000), addr: "10.0.0.1:9000".into(), nbytes: 512 },
-            TaskInputLoc { task: TaskId(12_001), addr: String::new(), nbytes: 64 },
+            TaskInputLoc {
+                task: TaskId(12_000),
+                addr: "10.0.0.1:9000".into(),
+                alts: vec!["10.0.0.2:9000".into()],
+                nbytes: 512,
+            },
+            TaskInputLoc {
+                task: TaskId(12_001),
+                addr: String::new(),
+                alts: vec![],
+                nbytes: 64,
+            },
         ],
         priority: 12345,
+        consumers: 2,
     };
     let compute_bytes = encode_msg(&compute);
     assert_eq!(compute_bytes, encode_msg_value(&compute), "codecs must agree on bytes");

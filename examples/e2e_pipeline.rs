@@ -49,6 +49,7 @@ fn run_cluster(graphs: &[TaskGraph], emulate_python: bool, n_workers: u32) -> an
                 name: format!("w{i}"),
                 ncores: 1,
                 node: i / 4,
+                memory_limit: None,
             })
         })
         .collect::<Result<_, _>>()?;

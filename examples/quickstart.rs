@@ -32,6 +32,7 @@ fn main() -> anyhow::Result<()> {
                 name: format!("w{i}"),
                 ncores: 1,
                 node: 0,
+                memory_limit: None,
             })
         })
         .collect::<Result<_, _>>()?;

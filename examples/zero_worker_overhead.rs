@@ -31,6 +31,7 @@ fn aot(scheduler: &str, emulate: bool, n_workers: u32, n_tasks: u32) -> anyhow::
                 name: format!("z{i}"),
                 ncores: 1,
                 node: i / 4,
+                memory_limit: None,
             })
         })
         .collect::<Result<_, _>>()?;

@@ -8,7 +8,7 @@
 //! - `sim`      — run a benchmark in the discrete-event simulator
 //! - `suite`    — print Table I for the generated benchmark suite
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use rsds::graphgen;
 use rsds::metrics::Measurement;
 use rsds::overhead::RuntimeProfile;
@@ -25,13 +25,15 @@ USAGE:
   rsds server  [--addr 127.0.0.1:8786] [--scheduler ws|random|dask-ws]
                [--profile rsds|dask] [--emulate-python] [--seed N]
                [--fairness rr|arrival|weighted] [--max-runs-per-client N]
-               [--max-recoveries N] [--shards N]
+               [--max-recoveries N] [--shards N] [--replication K]
+               [--replication-fanout N]
   rsds worker  --server ADDR [--ncores 1] [--node 0] [--name w0] [--count N]
+               [--memory-limit BYTES]
   rsds zero-worker --server ADDR [--count N]
   rsds submit  --server ADDR --graph SPEC  (e.g. merge-10000, xarray-25)
   rsds sim     --graph SPEC [--workers 24] [--scheduler ws] [--profile rsds]
                [--zero-worker] [--seed N] [--timeout-s 300]
-               [--fairness rr|arrival|weighted]
+               [--fairness rr|arrival|weighted] [--replication K]
   rsds suite   (prints generated-vs-paper Table I)
 ";
 
@@ -71,7 +73,8 @@ fn run() -> Result<()> {
     let args = Args::from_env(&[
         "addr", "scheduler", "profile", "seed", "server", "ncores", "node", "name", "count",
         "graph", "workers", "timeout-s", "workers-per-node", "fairness",
-        "max-runs-per-client", "max-recoveries", "shards",
+        "max-runs-per-client", "max-recoveries", "shards", "replication",
+        "replication-fanout", "memory-limit",
     ])?;
     match args.subcommand() {
         Some("server") => cmd_server(&args),
@@ -109,8 +112,16 @@ fn cmd_server(args: &Args) -> Result<()> {
             rsds::server::DEFAULT_MAX_RECOVERIES,
         )?,
         shards: args.get_parsed_or("shards", ServerConfig::default().shards)?,
+        replication: args.get_parsed_or("replication", 1usize)?,
+        replication_fanout: args.get_parsed_or(
+            "replication-fanout",
+            rsds::server::DEFAULT_REPLICATION_FANOUT,
+        )?,
         ..ServerConfig::default()
     };
+    if config.replication == 0 {
+        bail!("--replication counts the primary copy; minimum is 1");
+    }
     let emulate = config.emulate;
     let scheduler = config.scheduler.clone();
     let fairness = config.fairness.clone();
@@ -138,6 +149,10 @@ fn cmd_worker(args: &Args, zero: bool) -> Result<()> {
             name: format!("{base}-{i}"),
             ncores: args.get_parsed_or("ncores", 1u32)?,
             node: args.get_parsed_or("node", 0u32)?,
+            memory_limit: match args.get("memory-limit") {
+                Some(s) => Some(s.parse().context("parse --memory-limit (bytes)")?),
+                None => None,
+            },
         };
         if zero {
             let h = run_zero_worker(cfg)?;
@@ -184,6 +199,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
         zero_worker: args.flag("zero-worker"),
         timeout_us: args.get_parsed_or("timeout-s", 300f64)? * 1e6,
         fairness: args.get("fairness").unwrap_or("rr").to_string(),
+        replication: args.get_parsed_or("replication", 1usize)?,
         ..SimConfig::default()
     };
     if cfg.n_workers == 0 {

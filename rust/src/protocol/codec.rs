@@ -22,7 +22,7 @@
 //! `BTreeMap`-backed `Value` tree produces — so the two codecs are
 //! byte-identical for every message.
 
-use super::messages::{Msg, RunId, TaskFinishedInfo, TaskInputLoc};
+use super::messages::{Msg, RunId, TaskFinishedInfo, TaskInputLoc, MAX_ALT_ADDRS};
 use crate::msgpack::{decode, encode, encode_into, DecodeError, Reader, Value, Writer};
 use crate::taskgraph::{GraphError, Payload, TaskGraph, TaskId, TaskSpec};
 
@@ -401,6 +401,7 @@ pub fn encode_msg_into(msg: &Msg, out: &mut Vec<u8>) {
             output_size,
             inputs,
             priority,
+            consumers,
         } => {
             // Delegate to the borrowed encoder so the owned and borrowed
             // dispatch paths are byte-identical by construction.
@@ -412,13 +413,16 @@ pub fn encode_msg_into(msg: &Msg, out: &mut Vec<u8>) {
                 duration_us: *duration_us,
                 output_size: *output_size,
                 priority: *priority,
+                consumers: *consumers,
             };
             encode_compute_task_into(
                 &parts,
-                inputs.iter().map(|l| TaskInputRef {
-                    task: l.task,
-                    addr: &l.addr,
-                    nbytes: l.nbytes,
+                inputs.iter().map(|l| {
+                    let mut r = TaskInputRef::new(l.task, &l.addr, l.nbytes);
+                    for a in &l.alts {
+                        r.push_alt(a);
+                    }
+                    r
                 }),
                 out,
             );
@@ -463,6 +467,28 @@ pub fn encode_msg_into(msg: &Msg, out: &mut Vec<u8>) {
             w.uint(task.0 as u64);
         }
         Msg::CancelCompute { run, task } => enc_run_task(out, "cancel-compute", *run, *task),
+        Msg::ReplicateData { run, task, addrs } => {
+            let mut w = Writer::new(out);
+            w.map_header(4);
+            w.str("addrs");
+            w.array_header(addrs.len());
+            for a in addrs {
+                w.str(a);
+            }
+            w.str("op");
+            w.str("replicate-data");
+            w.str("run");
+            w.uint(run.0 as u64);
+            w.str("task");
+            w.uint(task.0 as u64);
+        }
+        Msg::PutData { run, task, data } => {
+            enc_run_task_data(out, "put-data", *run, *task, data)
+        }
+        Msg::ReplicaAdded { run, task } => enc_run_task(out, "replica-added", *run, *task),
+        Msg::ReplicaDropped { run, task } => {
+            enc_run_task(out, "replica-dropped", *run, *task)
+        }
         Msg::FetchData { run, task } => enc_run_task(out, "fetch-data", *run, *task),
         Msg::FetchFromServer { run, task } => {
             enc_run_task(out, "fetch-from-server", *run, *task)
@@ -495,6 +521,9 @@ pub struct ComputeTaskParts<'a> {
     pub duration_us: u64,
     pub output_size: u64,
     pub priority: i64,
+    /// Consumer count of the output (`0` = pinned; omitted on the wire so
+    /// pre-replication frames stay byte-identical).
+    pub consumers: u32,
 }
 
 /// Encode a `compute-task` from borrowed parts, appending to `out`.
@@ -506,15 +535,31 @@ where
     I: ExactSizeIterator<Item = TaskInputRef<'a>>,
 {
     let mut w = Writer::new(out);
-    w.map_header(9);
+    // `consumers` and per-input `alts` are optional fields (precedent: the
+    // `scheduler` key on submit-graph): omitted when zero/empty, so every
+    // pre-replication frame is byte-unchanged. Key order stays sorted —
+    // "consumers" < "duration_us", "addr" < "alts" < "nbytes".
+    w.map_header(if parts.consumers > 0 { 10 } else { 9 });
+    if parts.consumers > 0 {
+        w.str("consumers");
+        w.uint(parts.consumers as u64);
+    }
     w.str("duration_us");
     w.uint(parts.duration_us);
     w.str("inputs");
     w.array_header(inputs.len());
     for l in inputs {
-        w.map_header(3);
+        let alts = l.alts();
+        w.map_header(if alts.is_empty() { 3 } else { 4 });
         w.str("addr");
         w.str(l.addr);
+        if !alts.is_empty() {
+            w.str("alts");
+            w.array_header(alts.len());
+            for a in alts {
+                w.str(a);
+            }
+        }
         w.str("nbytes");
         w.uint(l.nbytes);
         w.str("task");
@@ -802,6 +847,44 @@ pub fn decode_msg(bytes: &[u8]) -> Result<Msg, CodecError> {
             let (run, task) = dec_run_task(bytes)?;
             Ok(Msg::CancelCompute { run, task })
         }
+        "replicate-data" => {
+            let mut r = Reader::new(bytes);
+            let n = r.map_header()?;
+            let (mut run, mut task, mut addrs) = (None, None, None);
+            for _ in 0..n {
+                match r.str()? {
+                    "run" => run = Some(r_uint(&mut r, "run")? as u32),
+                    "task" => task = Some(r_uint(&mut r, "task")? as u32),
+                    "addrs" => {
+                        let k = r.array_header().map_err(|e| wrong(e, "addrs"))?;
+                        let mut v = Vec::with_capacity(k.min(64));
+                        for _ in 0..k {
+                            v.push(r_str(&mut r, "addrs")?.to_string());
+                        }
+                        addrs = Some(v);
+                    }
+                    _ => r.skip_value()?,
+                }
+            }
+            finish(&r, bytes)?;
+            Ok(Msg::ReplicateData {
+                run: RunId(req(run, "run")?),
+                task: TaskId(req(task, "task")?),
+                addrs: req(addrs, "addrs")?,
+            })
+        }
+        "put-data" => {
+            let (run, task, data) = dec_run_task_data(bytes)?;
+            Ok(Msg::PutData { run, task, data })
+        }
+        "replica-added" => {
+            let (run, task) = dec_run_task(bytes)?;
+            Ok(Msg::ReplicaAdded { run, task })
+        }
+        "replica-dropped" => {
+            let (run, task) = dec_run_task(bytes)?;
+            Ok(Msg::ReplicaDropped { run, task })
+        }
         "fetch-data" => {
             let (run, task) = dec_run_task(bytes)?;
             Ok(Msg::FetchData { run, task })
@@ -880,6 +963,7 @@ fn dec_compute_task(bytes: &[u8]) -> Result<Msg, CodecError> {
     let n = r.map_header()?;
     let (mut run, mut task, mut key, mut payload) = (None, None, None, None);
     let (mut duration_us, mut output_size, mut inputs, mut priority) = (None, None, None, None);
+    let mut consumers = 0u32;
     for _ in 0..n {
         match r.str()? {
             "run" => run = Some(r_uint(&mut r, "run")? as u32),
@@ -889,6 +973,7 @@ fn dec_compute_task(bytes: &[u8]) -> Result<Msg, CodecError> {
             "duration_us" => duration_us = Some(r_uint(&mut r, "duration_us")?),
             "output_size" => output_size = Some(r_uint(&mut r, "output_size")?),
             "priority" => priority = Some(r_int(&mut r, "priority")?),
+            "consumers" => consumers = r_uint(&mut r, "consumers")? as u32,
             "inputs" => inputs = Some(dec_inputs(&mut r)?),
             _ => r.skip_value()?,
         }
@@ -903,6 +988,7 @@ fn dec_compute_task(bytes: &[u8]) -> Result<Msg, CodecError> {
         output_size: req(output_size, "output_size")?,
         inputs: req(inputs, "inputs")?,
         priority: req(priority, "priority")?,
+        consumers,
     })
 }
 
@@ -914,17 +1000,31 @@ fn dec_inputs(r: &mut Reader) -> Result<Vec<TaskInputLoc>, CodecError> {
     for _ in 0..n {
         let m = r.map_header().map_err(|e| wrong(e, "inputs"))?;
         let (mut task, mut addr, mut nbytes) = (None, None, None);
+        let mut alts = Vec::new();
         for _ in 0..m {
             match r.str()? {
                 "task" => task = Some(r_uint(r, "task")? as u32),
                 "addr" => addr = Some(r_str(r, "addr")?.to_string()),
                 "nbytes" => nbytes = Some(r_uint(r, "nbytes")?),
+                "alts" => {
+                    let k = r.array_header().map_err(|e| wrong(e, "alts"))?;
+                    for i in 0..k {
+                        let a = r_str(r, "alts")?;
+                        // Truncate (don't reject) past the protocol cap so
+                        // the owned and borrowed decodes agree on the same
+                        // first MAX_ALT_ADDRS entries.
+                        if i < MAX_ALT_ADDRS {
+                            alts.push(a.to_string());
+                        }
+                    }
+                }
                 _ => r.skip_value()?,
             }
         }
         v.push(TaskInputLoc {
             task: TaskId(req(task, "task")?),
             addr: req(addr, "addr")?,
+            alts,
             nbytes: req(nbytes, "nbytes")?,
         });
     }
@@ -946,16 +1046,44 @@ pub struct ComputeTaskView<'a> {
     pub duration_us: u64,
     pub output_size: u64,
     pub priority: i64,
+    /// Output consumer count (`0` when absent: pin in the store).
+    pub consumers: u32,
     n_inputs: usize,
     inputs_raw: &'a [u8],
 }
 
-/// One input location borrowed from a `compute-task` frame.
-#[derive(Debug, PartialEq)]
+/// One input location borrowed from a `compute-task` frame (or from the
+/// server's `who_has` tables on the dispatch path). Alternate replica
+/// addresses live in a fixed inline array — [`MAX_ALT_ADDRS`] caps the
+/// wire field — so the borrowed form never allocates.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TaskInputRef<'a> {
     pub task: TaskId,
     pub addr: &'a str,
     pub nbytes: u64,
+    alts: [&'a str; MAX_ALT_ADDRS],
+    n_alts: u8,
+}
+
+impl<'a> TaskInputRef<'a> {
+    pub fn new(task: TaskId, addr: &'a str, nbytes: u64) -> TaskInputRef<'a> {
+        TaskInputRef { task, addr, nbytes, alts: [""; MAX_ALT_ADDRS], n_alts: 0 }
+    }
+
+    /// Append an alternate replica address; silently drops past the
+    /// protocol cap (producers never exceed it — the server emits at most
+    /// `ReplicaSet::INLINE` = [`MAX_ALT_ADDRS`] alternates).
+    pub fn push_alt(&mut self, addr: &'a str) {
+        if (self.n_alts as usize) < MAX_ALT_ADDRS {
+            self.alts[self.n_alts as usize] = addr;
+            self.n_alts += 1;
+        }
+    }
+
+    /// The alternate replica addresses (possibly empty).
+    pub fn alts(&self) -> &[&'a str] {
+        &self.alts[..self.n_alts as usize]
+    }
 }
 
 impl<'a> ComputeTaskView<'a> {
@@ -964,6 +1092,7 @@ impl<'a> ComputeTaskView<'a> {
         let n = r.map_header()?;
         let (mut run, mut task, mut key, mut payload) = (None, None, None, None);
         let (mut duration_us, mut output_size, mut priority) = (None, None, None);
+        let mut consumers = 0u32;
         let mut inputs: Option<(usize, &'a [u8])> = None;
         let mut op: Option<&'a str> = None;
         for _ in 0..n {
@@ -976,6 +1105,7 @@ impl<'a> ComputeTaskView<'a> {
                 "duration_us" => duration_us = Some(r_uint(&mut r, "duration_us")?),
                 "output_size" => output_size = Some(r_uint(&mut r, "output_size")?),
                 "priority" => priority = Some(r_int(&mut r, "priority")?),
+                "consumers" => consumers = r_uint(&mut r, "consumers")? as u32,
                 "inputs" => {
                     let cnt = r.array_header().map_err(|e| wrong(e, "inputs"))?;
                     let start = r.pos();
@@ -1001,6 +1131,7 @@ impl<'a> ComputeTaskView<'a> {
             duration_us: req(duration_us, "duration_us")?,
             output_size: req(output_size, "output_size")?,
             priority: req(priority, "priority")?,
+            consumers,
             n_inputs,
             inputs_raw,
         })
@@ -1047,19 +1178,36 @@ impl ExactSizeIterator for InputsIter<'_> {
 fn dec_input_ref<'a>(r: &mut Reader<'a>) -> Result<TaskInputRef<'a>, CodecError> {
     let m = r.map_header().map_err(|e| wrong(e, "inputs"))?;
     let (mut task, mut addr, mut nbytes) = (None, None, None);
+    let mut alts: [&'a str; MAX_ALT_ADDRS] = [""; MAX_ALT_ADDRS];
+    let mut n_alts = 0u8;
     for _ in 0..m {
         match r.str()? {
             "task" => task = Some(r_uint(r, "task")? as u32),
             "addr" => addr = Some(r_str(r, "addr")?),
             "nbytes" => nbytes = Some(r_uint(r, "nbytes")?),
+            "alts" => {
+                let k = r.array_header().map_err(|e| wrong(e, "alts"))?;
+                for i in 0..k {
+                    let a = r_str(r, "alts")?;
+                    // Same truncation rule as the owned decode.
+                    if i < MAX_ALT_ADDRS {
+                        alts[i] = a;
+                        n_alts = (i + 1) as u8;
+                    }
+                }
+            }
             _ => r.skip_value()?,
         }
     }
-    Ok(TaskInputRef {
-        task: TaskId(req(task, "task")?),
-        addr: req(addr, "addr")?,
-        nbytes: req(nbytes, "nbytes")?,
-    })
+    let mut out = TaskInputRef::new(
+        TaskId(req(task, "task")?),
+        req(addr, "addr")?,
+        req(nbytes, "nbytes")?,
+    );
+    for a in alts[..n_alts as usize].iter().copied() {
+        out.push_alt(a);
+    }
+    Ok(out)
 }
 
 // ---------- Value-tree reference codec ----------
@@ -1102,24 +1250,46 @@ pub fn encode_msg_value(msg: &Msg) -> Vec<u8> {
             fields.push(("reason", Value::str(reason)));
         }
         Msg::ReleaseRun { run } => fields.push(("run", Value::from(run.0))),
-        Msg::ComputeTask { run, task, key, payload, duration_us, output_size, inputs, priority } => {
+        Msg::ComputeTask {
+            run,
+            task,
+            key,
+            payload,
+            duration_us,
+            output_size,
+            inputs,
+            priority,
+            consumers,
+        } => {
             fields.push(("run", Value::from(run.0)));
             fields.push(("task", Value::from(task.0)));
             fields.push(("key", Value::str(key)));
             fields.push(("payload", payload_to_value(payload)));
             fields.push(("duration_us", Value::from(*duration_us)));
             fields.push(("output_size", Value::from(*output_size)));
+            if *consumers > 0 {
+                fields.push(("consumers", Value::from(*consumers)));
+            }
             fields.push((
                 "inputs",
                 Value::Array(
                     inputs
                         .iter()
                         .map(|l| {
-                            Value::map(vec![
+                            let mut f = vec![
                                 ("task", Value::from(l.task.0)),
                                 ("addr", Value::str(&l.addr)),
                                 ("nbytes", Value::from(l.nbytes)),
-                            ])
+                            ];
+                            if !l.alts.is_empty() {
+                                f.push((
+                                    "alts",
+                                    Value::Array(
+                                        l.alts.iter().map(|a| Value::str(a)).collect(),
+                                    ),
+                                ));
+                            }
+                            Value::map(f)
                         })
                         .collect(),
                 ),
@@ -1137,9 +1307,25 @@ pub fn encode_msg_value(msg: &Msg) -> Vec<u8> {
             fields.push(("task", Value::from(task.0)));
             fields.push(("error", Value::str(error)));
         }
-        Msg::StealRequest { run, task } | Msg::CancelCompute { run, task } => {
+        Msg::StealRequest { run, task }
+        | Msg::CancelCompute { run, task }
+        | Msg::ReplicaAdded { run, task }
+        | Msg::ReplicaDropped { run, task } => {
             fields.push(("run", Value::from(run.0)));
             fields.push(("task", Value::from(task.0)));
+        }
+        Msg::ReplicateData { run, task, addrs } => {
+            fields.push(("run", Value::from(run.0)));
+            fields.push(("task", Value::from(task.0)));
+            fields.push((
+                "addrs",
+                Value::Array(addrs.iter().map(|a| Value::str(a)).collect()),
+            ));
+        }
+        Msg::PutData { run, task, data } => {
+            fields.push(("run", Value::from(run.0)));
+            fields.push(("task", Value::from(task.0)));
+            fields.push(("data", Value::Bin(data.clone())));
         }
         Msg::StealResponse { run, task, ok } => {
             fields.push(("run", Value::from(run.0)));
@@ -1206,13 +1392,32 @@ pub fn decode_msg_value(bytes: &[u8]) -> Result<Msg, CodecError> {
             let inputs = inputs_v
                 .iter()
                 .map(|l| {
+                    let alts = match l.get("alts") {
+                        None => Vec::new(),
+                        Some(a) => a
+                            .as_array()
+                            .ok_or(CodecError::WrongType("alts"))?
+                            .iter()
+                            .take(MAX_ALT_ADDRS)
+                            .map(|s| {
+                                s.as_str()
+                                    .map(str::to_string)
+                                    .ok_or(CodecError::WrongType("alts"))
+                            })
+                            .collect::<Result<Vec<_>, _>>()?,
+                    };
                     Ok(TaskInputLoc {
                         task: get_task(l, "task")?,
                         addr: get_str(l, "addr")?,
+                        alts,
                         nbytes: get_u64(l, "nbytes")?,
                     })
                 })
                 .collect::<Result<Vec<_>, CodecError>>()?;
+            let consumers = match v.get("consumers") {
+                None => 0,
+                Some(c) => c.as_u64().ok_or(CodecError::WrongType("consumers"))? as u32,
+            };
             Msg::ComputeTask {
                 run: get_run(&v)?,
                 task: get_task(&v, "task")?,
@@ -1222,6 +1427,7 @@ pub fn decode_msg_value(bytes: &[u8]) -> Result<Msg, CodecError> {
                 output_size: get_u64(&v, "output_size")?,
                 inputs,
                 priority: get_i64(&v, "priority")?,
+                consumers,
             }
         }
         "task-finished" => Msg::TaskFinished(TaskFinishedInfo {
@@ -1238,6 +1444,28 @@ pub fn decode_msg_value(bytes: &[u8]) -> Result<Msg, CodecError> {
         "steal-request" => Msg::StealRequest { run: get_run(&v)?, task: get_task(&v, "task")? },
         "cancel-compute" => {
             Msg::CancelCompute { run: get_run(&v)?, task: get_task(&v, "task")? }
+        }
+        "replicate-data" => {
+            let addrs = get(&v, "addrs")?
+                .as_array()
+                .ok_or(CodecError::WrongType("addrs"))?
+                .iter()
+                .map(|a| {
+                    a.as_str().map(str::to_string).ok_or(CodecError::WrongType("addrs"))
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            Msg::ReplicateData { run: get_run(&v)?, task: get_task(&v, "task")?, addrs }
+        }
+        "put-data" => Msg::PutData {
+            run: get_run(&v)?,
+            task: get_task(&v, "task")?,
+            data: get_bin(&v, "data")?,
+        },
+        "replica-added" => {
+            Msg::ReplicaAdded { run: get_run(&v)?, task: get_task(&v, "task")? }
+        }
+        "replica-dropped" => {
+            Msg::ReplicaDropped { run: get_run(&v)?, task: get_task(&v, "task")? }
         }
         "steal-response" => Msg::StealResponse {
             run: get_run(&v)?,
@@ -1306,10 +1534,48 @@ mod tests {
                 duration_us: 1000,
                 output_size: 2048,
                 inputs: vec![
-                    TaskInputLoc { task: TaskId(1), addr: "10.0.0.1:9000".into(), nbytes: 500 },
-                    TaskInputLoc { task: TaskId(2), addr: String::new(), nbytes: 10 },
+                    TaskInputLoc {
+                        task: TaskId(1),
+                        addr: "10.0.0.1:9000".into(),
+                        alts: vec![],
+                        nbytes: 500,
+                    },
+                    TaskInputLoc {
+                        task: TaskId(2),
+                        addr: String::new(),
+                        alts: vec![],
+                        nbytes: 10,
+                    },
                 ],
                 priority: -5,
+                consumers: 0,
+            },
+            // Replication-era compute-task: consumer refcount plus replica
+            // alternates on one input (and none on the other — the
+            // optional field must be per-input).
+            Msg::ComputeTask {
+                run: RunId(2),
+                task: TaskId(43),
+                key: "merge-43".into(),
+                payload: Payload::MergeInputs,
+                duration_us: 50,
+                output_size: 64,
+                inputs: vec![
+                    TaskInputLoc {
+                        task: TaskId(1),
+                        addr: "10.0.0.1:9000".into(),
+                        alts: vec!["10.0.0.2:9000".into(), "10.0.0.3:9000".into()],
+                        nbytes: 500,
+                    },
+                    TaskInputLoc {
+                        task: TaskId(2),
+                        addr: String::new(),
+                        alts: vec![],
+                        nbytes: 10,
+                    },
+                ],
+                priority: 3,
+                consumers: 7,
             },
             Msg::TaskFinished(TaskFinishedInfo {
                 run: RunId(2),
@@ -1322,6 +1588,15 @@ mod tests {
             Msg::StealResponse { run: RunId(1), task: TaskId(5), ok: false },
             Msg::StealResponse { run: RunId(1), task: TaskId(6), ok: true },
             Msg::CancelCompute { run: RunId(1), task: TaskId(7) },
+            Msg::ReplicateData {
+                run: RunId(5),
+                task: TaskId(12),
+                addrs: vec!["10.0.0.2:9000".into(), "10.0.0.3:9000".into()],
+            },
+            Msg::ReplicateData { run: RunId(5), task: TaskId(13), addrs: vec![] },
+            Msg::PutData { run: RunId(5), task: TaskId(12), data: vec![4, 5, 6] },
+            Msg::ReplicaAdded { run: RunId(5), task: TaskId(12) },
+            Msg::ReplicaDropped { run: RunId(5), task: TaskId(12) },
             Msg::FetchData { run: RunId(4), task: TaskId(8) },
             Msg::DataReply { run: RunId(4), task: TaskId(8), data: vec![1, 2, 3] },
             Msg::FetchFromServer { run: RunId(4), task: TaskId(8) },
@@ -1360,6 +1635,21 @@ mod tests {
                 output_size: 1,
                 inputs: vec![],
                 priority: p,
+                consumers: 0,
+            });
+        }
+        // Consumer counts across the uint format boundaries.
+        for c in [1u32, 127, 128, 255, 256, 65_535, 65_536, u32::MAX] {
+            rt(Msg::ComputeTask {
+                run: RunId(0),
+                task: TaskId(0),
+                key: "k".into(),
+                payload: Payload::NoOp,
+                duration_us: 1,
+                output_size: 1,
+                inputs: vec![],
+                priority: 0,
+                consumers: c,
             });
         }
     }
@@ -1407,6 +1697,7 @@ mod tests {
                 output_size: 4,
                 inputs: vec![],
                 priority: 5,
+                consumers: 0,
             });
         }
     }
@@ -1545,16 +1836,27 @@ mod tests {
             duration_us: 123,
             output_size: 456,
             inputs: vec![
-                TaskInputLoc { task: TaskId(70), addr: "10.0.0.2:9000".into(), nbytes: 11 },
-                TaskInputLoc { task: TaskId(71), addr: String::new(), nbytes: 22 },
+                TaskInputLoc {
+                    task: TaskId(70),
+                    addr: "10.0.0.2:9000".into(),
+                    alts: vec!["10.0.0.3:9000".into()],
+                    nbytes: 11,
+                },
+                TaskInputLoc {
+                    task: TaskId(71),
+                    addr: String::new(),
+                    alts: vec![],
+                    nbytes: 22,
+                },
             ],
             priority: -9,
+            consumers: 4,
         };
         let bytes = encode_msg(&m);
         let view = ComputeTaskView::decode(&bytes).unwrap();
         let decoded = decode_msg(&bytes).unwrap();
         let Msg::ComputeTask {
-            run, task, key, payload, duration_us, output_size, inputs, priority,
+            run, task, key, payload, duration_us, output_size, inputs, priority, consumers,
         } = decoded
         else {
             panic!("wrong op");
@@ -1566,16 +1868,59 @@ mod tests {
         assert_eq!(view.duration_us, duration_us);
         assert_eq!(view.output_size, output_size);
         assert_eq!(view.priority, priority);
+        assert_eq!(view.consumers, consumers);
         assert_eq!(view.n_inputs(), inputs.len());
         let got: Vec<TaskInputRef> = view.inputs().collect::<Result<_, _>>().unwrap();
         for (g, w) in got.iter().zip(&inputs) {
             assert_eq!(g.task, w.task);
             assert_eq!(g.addr, w.addr);
             assert_eq!(g.nbytes, w.nbytes);
+            let galts: Vec<&str> = g.alts().to_vec();
+            let walts: Vec<&str> = w.alts.iter().map(String::as_str).collect();
+            assert_eq!(galts, walts);
         }
         // The view rejects other ops.
         let other = encode_msg(&Msg::Heartbeat);
         assert!(ComputeTaskView::decode(&other).is_err());
+    }
+
+    #[test]
+    fn alt_addrs_truncate_at_protocol_cap() {
+        // A frame carrying more than MAX_ALT_ADDRS alternates (hand-built;
+        // our encoders never produce one) must decode identically through
+        // the owned, borrowed, and Value-tree decoders: the first
+        // MAX_ALT_ADDRS entries, the rest dropped.
+        let long: Vec<Value> =
+            (0..MAX_ALT_ADDRS + 2).map(|i| Value::str(&format!("10.0.0.{i}:9"))).collect();
+        let v = Value::map(vec![
+            ("op", Value::str("compute-task")),
+            ("run", Value::from(1u32)),
+            ("task", Value::from(2u32)),
+            ("key", Value::str("k")),
+            ("payload", Value::map(vec![("kind", Value::str("noop"))])),
+            ("duration_us", Value::from(1u64)),
+            ("output_size", Value::from(1u64)),
+            ("priority", Value::Int(0)),
+            (
+                "inputs",
+                Value::Array(vec![Value::map(vec![
+                    ("task", Value::from(0u32)),
+                    ("addr", Value::str("10.0.0.9:9")),
+                    ("alts", Value::Array(long)),
+                    ("nbytes", Value::from(5u64)),
+                ])]),
+            ),
+        ]);
+        let bytes = encode(&v);
+        let want: Vec<String> =
+            (0..MAX_ALT_ADDRS).map(|i| format!("10.0.0.{i}:9")).collect();
+        for decoded in [decode_msg(&bytes).unwrap(), decode_msg_value(&bytes).unwrap()] {
+            let Msg::ComputeTask { inputs, .. } = decoded else { panic!("wrong op") };
+            assert_eq!(inputs[0].alts, want);
+        }
+        let view = ComputeTaskView::decode(&bytes).unwrap();
+        let got: Vec<TaskInputRef> = view.inputs().collect::<Result<_, _>>().unwrap();
+        assert_eq!(got[0].alts().to_vec(), want.iter().map(String::as_str).collect::<Vec<_>>());
     }
 
     #[test]
@@ -1584,8 +1929,13 @@ mod tests {
         // inputs; the bytes must equal the owned encode (and therefore the
         // Value-tree reference, by the existing identity tests).
         let inputs = vec![
-            TaskInputLoc { task: TaskId(70), addr: "10.0.0.2:9000".into(), nbytes: 11 },
-            TaskInputLoc { task: TaskId(71), addr: String::new(), nbytes: 22 },
+            TaskInputLoc {
+                task: TaskId(70),
+                addr: "10.0.0.2:9000".into(),
+                alts: vec!["10.0.0.4:9000".into(), "10.0.0.5:9000".into()],
+                nbytes: 11,
+            },
+            TaskInputLoc { task: TaskId(71), addr: String::new(), alts: vec![], nbytes: 22 },
         ];
         let m = Msg::ComputeTask {
             run: RunId(11),
@@ -1596,6 +1946,7 @@ mod tests {
             output_size: 456,
             inputs: inputs.clone(),
             priority: -9,
+            consumers: 2,
         };
         let owned = encode_msg(&m);
         let parts = ComputeTaskParts {
@@ -1606,11 +1957,18 @@ mod tests {
             duration_us: 123,
             output_size: 456,
             priority: -9,
+            consumers: 2,
         };
         let mut borrowed = Vec::new();
         encode_compute_task_into(
             &parts,
-            inputs.iter().map(|l| TaskInputRef { task: l.task, addr: &l.addr, nbytes: l.nbytes }),
+            inputs.iter().map(|l| {
+                let mut r = TaskInputRef::new(l.task, &l.addr, l.nbytes);
+                for a in &l.alts {
+                    r.push_alt(a);
+                }
+                r
+            }),
             &mut borrowed,
         );
         assert_eq!(borrowed, owned);
@@ -1643,6 +2001,7 @@ mod tests {
             output_size: 28,
             inputs: vec![],
             priority: 99_999,
+            consumers: 1,
         });
         assert!(bytes.len() < 256, "compute-task message is {} bytes", bytes.len());
     }

@@ -37,13 +37,26 @@ impl std::fmt::Display for RunId {
     }
 }
 
+/// Protocol cap on alternate replica addresses per input. Matches
+/// `ReplicaSet::INLINE` on the server: the primary address plus up to
+/// three alternates covers k ≤ 3 replication without ever pushing the
+/// borrowed decode ([`super::codec::TaskInputRef`]) onto the heap. Both
+/// codecs truncate longer lists on decode.
+pub const MAX_ALT_ADDRS: usize = 3;
+
 /// Where to fetch a task input from: the producing worker's data-serving
-/// address (Dask's `who_has`).
+/// address (Dask's `who_has`), plus any alternate replica addresses the
+/// server knew of at emission — fetch failover walks these before falling
+/// back to the `fetch-failed` retry path.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TaskInputLoc {
     pub task: TaskId,
     /// Peer address `host:port`; empty when the input is local.
     pub addr: String,
+    /// Alternate replica addresses (never contains `addr`; at most
+    /// [`MAX_ALT_ADDRS`]). Empty on the wire means "no replicas known" —
+    /// pre-replication frames decode unchanged.
+    pub alts: Vec<String>,
     pub nbytes: u64,
 }
 
@@ -110,6 +123,11 @@ pub enum Msg {
         output_size: u64,
         inputs: Vec<TaskInputLoc>,
         priority: i64,
+        /// Graph-wide consumer count of this task's output — the worker
+        /// store's initial reference count. `0` (absent on the wire) means
+        /// "pin until `release-run`": sink outputs must survive for the
+        /// client, and pre-replication frames decode to the safe default.
+        consumers: u32,
     },
     /// worker → server: task done, output stored locally.
     TaskFinished(TaskFinishedInfo),
@@ -134,6 +152,25 @@ pub enum Msg {
     /// `fetch-failed:` error is treated as recoverable. See
     /// `docs/recovery.md`.
     CancelCompute { run: RunId, task: TaskId },
+
+    // ---- replication (proactive k-replication of hot outputs) ----
+    /// server → worker (the producer): push a copy of this output to each
+    /// of `addrs` — peer *data* addresses, the k−1 replication targets the
+    /// reactor chose. Fire-and-forget from the server's side; each
+    /// receiving peer confirms with [`Msg::ReplicaAdded`].
+    ReplicateData { run: RunId, task: TaskId, addrs: Vec<String> },
+    /// worker → worker (data plane): unsolicited replica push — store
+    /// these bytes pinned (replicas never self-evict; `release-run` and
+    /// the spill tier manage them).
+    PutData { run: RunId, task: TaskId, data: Vec<u8> },
+    /// worker → server: I now hold a replica of this output (sent by the
+    /// *receiving* peer of a [`Msg::PutData`]); the server appends the
+    /// sender to `who_has` so fetches and recovery see the copy.
+    ReplicaAdded { run: RunId, task: TaskId },
+    /// worker → server: I dropped my copy (reference count hit zero — all
+    /// consumers fetched it). The server prunes `who_has` so recovery
+    /// never counts on evicted bytes.
+    ReplicaDropped { run: RunId, task: TaskId },
 
     // ---- data plane ----
     /// worker → worker: send me this task's output.
@@ -172,6 +209,10 @@ impl Msg {
             Msg::StealRequest { .. } => "steal-request",
             Msg::StealResponse { .. } => "steal-response",
             Msg::CancelCompute { .. } => "cancel-compute",
+            Msg::ReplicateData { .. } => "replicate-data",
+            Msg::PutData { .. } => "put-data",
+            Msg::ReplicaAdded { .. } => "replica-added",
+            Msg::ReplicaDropped { .. } => "replica-dropped",
             Msg::FetchData { .. } => "fetch-data",
             Msg::DataReply { .. } => "data-reply",
             Msg::FetchFromServer { .. } => "fetch-from-server",

@@ -52,7 +52,7 @@ pub use pool::{SchedulerFactory, SchedulerPool};
 pub use reactor::{
     ComputeDispatch, ComputeInputs, Dest, Origin, OutboundSink, Reactor, ReactorReport,
     SharedIds, DEFAULT_MAX_LIVE_RUNS_PER_CLIENT, DEFAULT_MAX_QUEUED_RUNS_PER_CLIENT,
-    DEFAULT_REPORT_RETENTION,
+    DEFAULT_REPLICATION_FANOUT, DEFAULT_REPORT_RETENTION,
 };
 pub use state::{
     GraphRun, Parked, RecoveryPlan, ReplicaSet, RunIdAlloc, TaskState, DEFAULT_MAX_RECOVERIES,

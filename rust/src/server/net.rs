@@ -106,6 +106,14 @@ pub struct ServerConfig {
     /// on their own shard and are broadcast to the rest. Default:
     /// `min(available cores, 4)`. The wire protocol is unaffected.
     pub shards: usize,
+    /// Copies kept per hot/critical output, primary included (1 = off):
+    /// producers are told to push k-1 replicas so most worker deaths
+    /// purge addresses instead of recomputing lineage. See
+    /// `docs/recovery.md`.
+    pub replication: usize,
+    /// Consumer-count threshold above which an output counts as hot
+    /// ([`crate::taskgraph::replication_hints`]).
+    pub replication_fanout: u32,
 }
 
 /// `min(available cores, 4)` — past a handful of shards the scheduler
@@ -132,6 +140,8 @@ impl Default for ServerConfig {
             report_retention: super::reactor::DEFAULT_REPORT_RETENTION,
             max_recoveries: super::state::DEFAULT_MAX_RECOVERIES,
             shards: default_shards(),
+            replication: 1,
+            replication_fanout: super::reactor::DEFAULT_REPLICATION_FANOUT,
         }
     }
 }
@@ -424,6 +434,8 @@ fn run_of(msg: &Msg) -> Option<RunId> {
         Msg::TaskErred { run, .. } => Some(*run),
         Msg::StealResponse { run, .. } => Some(*run),
         Msg::DataToServer { run, .. } => Some(*run),
+        Msg::ReplicaAdded { run, .. } => Some(*run),
+        Msg::ReplicaDropped { run, .. } => Some(*run),
         _ => None,
     }
 }
@@ -1048,6 +1060,7 @@ pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
             .with_admission_queue_cap(config.max_queued_runs_per_client)
             .with_report_retention(config.report_retention)
             .with_max_recoveries(config.max_recoveries)
+            .with_replication(config.replication, config.replication_fanout)
             .with_shared_ids(ids.clone())
             .with_run_stride(s as u32, n_shards as u32);
         let poller = Poller::new().context("create shard poller")?;

@@ -83,6 +83,11 @@ pub struct ReactorReport {
     pub msgs_out: u64,
     /// Worker-disconnect recoveries this run absorbed (0 on a clean run).
     pub recoveries: u32,
+    /// Previously finished tasks forced back to execution (lost-output
+    /// resurrections across all recovery passes plus fetch-retry safety
+    /// nets). The `fig_recovery` bench's headline: replication exists to
+    /// drive this toward 0.
+    pub tasks_recomputed: u64,
 }
 
 /// Cap on recoverable `fetch-failed` re-runs *per task* — a stale
@@ -127,6 +132,11 @@ pub const DEFAULT_REPORT_RETENTION: usize = 4096;
 /// submitter could buffer unbounded graphs server-side. Past this the
 /// submission fails (`graph-failed`) instead of parking.
 pub const DEFAULT_MAX_QUEUED_RUNS_PER_CLIENT: usize = 64;
+
+/// Default fan-out threshold for marking an output replication-worthy: two
+/// consumers is the smallest fan-out where one lost copy stalls more than
+/// one task.
+pub const DEFAULT_REPLICATION_FANOUT: u32 = 2;
 
 /// A submission parked by admission control: acked (`run-queued`) but not
 /// yet executing — no `GraphRun`, no scheduler instance.
@@ -181,6 +191,14 @@ pub struct Reactor {
     /// Shared client/worker id counters under the sharded server; `None`
     /// (the default) keeps the single-reactor local sequences.
     shared_ids: Option<std::sync::Arc<SharedIds>>,
+    /// Object-store replication factor `k` (1 = off): outputs flagged in a
+    /// run's `replicate_hint` are pushed to `k-1` extra workers when they
+    /// first finish, so most worker deaths purge `who_has` instead of
+    /// recomputing lineage.
+    replication: usize,
+    /// Consumer-count threshold past which an output counts as hot (see
+    /// [`crate::taskgraph::replication_hints`]).
+    replication_fanout: u32,
 }
 
 /// A compute-task assignment about to be emitted, with every field
@@ -218,14 +236,29 @@ impl<'a> Iterator for ComputeInputs<'a> {
 
     fn next(&mut self) -> Option<TaskInputRef<'a>> {
         let &input = self.inputs.next()?;
+        let holders = &self.who_has[input.idx()];
         // First holder wins (the producer); the empty address means "local
         // to the assignment's target worker".
-        let addr = match self.who_has[input.idx()].first() {
+        let addr = match holders.first() {
             Some(h) if h == self.target => "",
             Some(h) => self.addrs.get(h.idx()).map(String::as_str).unwrap_or(""),
             None => "",
         };
-        Some(TaskInputRef { task: input, addr, nbytes: self.graph.task(input).output_size })
+        let mut loc = TaskInputRef::new(input, addr, self.graph.task(input).output_size);
+        // Every further replica rides along as an alternate source (capped
+        // at the protocol's MAX_ALT_ADDRS by `push_alt`): the worker fails
+        // over to them before escalating to a `fetch-failed` re-run.
+        for h in holders.iter().skip(1) {
+            if h == self.target {
+                continue; // local copy: the worker's own store covers it
+            }
+            if let Some(a) = self.addrs.get(h.idx()) {
+                if !a.is_empty() {
+                    loc.push_alt(a);
+                }
+            }
+        }
+        Some(loc)
     }
 
     fn size_hint(&self) -> (usize, Option<usize>) {
@@ -273,6 +306,7 @@ impl<'a> ComputeDispatch<'a> {
             duration_us: spec.duration_us,
             output_size: spec.output_size,
             priority: self.priority,
+            consumers: self.graph.consumers(self.task).len() as u32,
         }
     }
 
@@ -308,11 +342,47 @@ impl<'a> ComputeDispatch<'a> {
             output_size: spec.output_size,
             inputs: self
                 .inputs()
-                .map(|l| TaskInputLoc { task: l.task, addr: l.addr.to_string(), nbytes: l.nbytes })
+                .map(|l| TaskInputLoc {
+                    task: l.task,
+                    addr: l.addr.to_string(),
+                    alts: l.alts().iter().map(|a| a.to_string()).collect(),
+                    nbytes: l.nbytes,
+                })
                 .collect(),
             priority: self.priority,
+            consumers: self.graph.consumers(self.task).len() as u32,
         }
     }
+}
+
+/// Deterministic replica placement: connected workers in id order,
+/// cyclically from the producer's successor, skipping current holders and
+/// unknown data addresses; up to `want` taken. Deterministic so the
+/// simulator (`sim/engine.rs`) mirrors the policy exactly — the
+/// scheduler-vs-reactor parity suite depends on it.
+fn replica_targets(
+    workers: &[WorkerMeta],
+    addrs: &[String],
+    holders: &ReplicaSet,
+    producer: WorkerId,
+    want: usize,
+) -> Vec<String> {
+    let n = workers.len();
+    let mut out = Vec::new();
+    for off in 1..n {
+        if out.len() >= want {
+            break;
+        }
+        let idx = (producer.idx() + off) % n;
+        if !workers[idx].connected || holders.contains(WorkerId(idx as u32)) {
+            continue;
+        }
+        match addrs.get(idx) {
+            Some(a) if !a.is_empty() => out.push(a.clone()),
+            _ => {}
+        }
+    }
+    out
 }
 
 /// Where [`Reactor::pump_into`] delivers emitted messages. The TCP layer's
@@ -361,6 +431,8 @@ impl Reactor {
             stats_buf: Vec::new(),
             emitted_buf: Vec::new(),
             shared_ids: None,
+            replication: 1,
+            replication_fanout: DEFAULT_REPLICATION_FANOUT,
         }
     }
 
@@ -416,6 +488,18 @@ impl Reactor {
     pub fn with_report_retention(mut self, retention: usize) -> Reactor {
         assert!(retention >= 1, "report retention must be positive");
         self.reports = BoundedWindow::new(retention);
+        self
+    }
+
+    /// Enable proactive k-replication of hot/critical outputs: each output
+    /// flagged by [`crate::taskgraph::replication_hints`] (fan-out ≥
+    /// `fanout` consumers, or on the critical path) is pushed to `k-1`
+    /// extra workers when it first finishes. `k` counts the primary copy;
+    /// `k = 1` disables (the default).
+    pub fn with_replication(mut self, k: usize, fanout: u32) -> Reactor {
+        assert!(k >= 1, "replication factor counts the primary copy");
+        self.replication = k;
+        self.replication_fanout = fanout;
         self
     }
 
@@ -681,6 +765,7 @@ impl Reactor {
             msgs_in: run.msgs_in,
             msgs_out: run.msgs_out,
             recoveries: run.recoveries,
+            tasks_recomputed: run.tasks_recomputed,
         });
         out.push((Dest::Client(run.client), Msg::GraphDone { run: run_id, makespan_us, n_tasks }));
         self.release_run(run_id, out);
@@ -702,6 +787,10 @@ impl Reactor {
         }
         let mut run = GraphRun::new(graph, client, submitted_at_us);
         run.max_recoveries = self.default_max_recoveries;
+        if self.replication > 1 {
+            run.replicate_hint =
+                crate::taskgraph::replication_hints(&run.graph, self.replication_fanout);
+        }
         run.msgs_in += 1; // the submission itself
         run.msgs_out += prior_msgs_out;
         let roots = run.ready_roots();
@@ -998,15 +1087,50 @@ impl Reactor {
             }
             (Origin::Worker(worker), Msg::TaskFinished(info)) => {
                 self.charge(self.profile.task_transition_us);
-                let newly_ready = {
+                let (newly_ready, replicate) = {
                     let Some(run) = self.runs.get_mut(&info.run) else { return };
                     if info.task.idx() >= run.graph.len() {
                         log::warn!("task-finished for out-of-range {} in {}", info.task, info.run);
                         return;
                     }
                     run.msgs_in += 1;
-                    run.finish(info.task, worker)
+                    let first_copy =
+                        !matches!(run.states[info.task.idx()], TaskState::Finished(_));
+                    let newly_ready = run.finish(info.task, worker);
+                    // Proactive k-replication: on the FIRST finish of a
+                    // hint-flagged output, tell the producer to push copies
+                    // to k-1 deterministic peers (duplicate finishes from
+                    // recovery races must not re-trigger the push).
+                    let replicate = if first_copy
+                        && self.replication > 1
+                        && run.replicate_hint.get(info.task.idx()).copied().unwrap_or(false)
+                    {
+                        replica_targets(
+                            &self.workers,
+                            &self.worker_addrs,
+                            &run.who_has[info.task.idx()],
+                            worker,
+                            self.replication - 1,
+                        )
+                    } else {
+                        Vec::new()
+                    };
+                    if !replicate.is_empty() {
+                        run.msgs_out += 1;
+                    }
+                    (newly_ready, replicate)
                 };
+                if !replicate.is_empty() {
+                    self.park(
+                        info.run,
+                        worker,
+                        Parked::Wire(Msg::ReplicateData {
+                            run: info.run,
+                            task: info.task,
+                            addrs: replicate,
+                        }),
+                    );
+                }
                 if !newly_ready.is_empty() {
                     self.charge(self.profile.task_transition_us * newly_ready.len() as f64);
                 }
@@ -1172,6 +1296,17 @@ impl Reactor {
                     ErrAction::Ignore => {}
                     ErrAction::Fail(reason) => self.fail_run(run_id, reason, out),
                     ErrAction::Retry(steal) => {
+                        // The retry may be doomed: if every replica of an
+                        // input evaporated (self-evicted after the address
+                        // was resolved), re-running would hit the same
+                        // fetch failure. Resurrect lost lineage first; if
+                        // that pushed the task back to Waiting, readiness
+                        // re-offers it once the inputs exist again.
+                        let (resurrected, task_ready) = {
+                            let run = self.runs.get_mut(&run_id).expect("live run");
+                            let res = run.resurrect_missing_inputs(task);
+                            (res, run.states[task.idx()] == TaskState::Ready)
+                        };
                         {
                             let sched =
                                 self.pool.get(run_id).expect("scheduler for live run");
@@ -1179,11 +1314,43 @@ impl Reactor {
                             if let Some((from, to)) = steal {
                                 sched.steal_result(task, from, to, false, &mut self.actions_buf);
                             }
-                            sched.tasks_ready(&[task], &mut self.actions_buf);
+                            if !resurrected.is_empty() {
+                                sched.tasks_ready(&resurrected, &mut self.actions_buf);
+                            }
+                            if task_ready {
+                                sched.tasks_ready(&[task], &mut self.actions_buf);
+                            }
                         }
                         self.flush_actions(run_id, out);
                     }
                 }
+            }
+            (Origin::Worker(worker), Msg::ReplicaAdded { run: run_id, task }) => {
+                let Some(run) = self.runs.get_mut(&run_id) else { return };
+                if task.idx() >= run.graph.len() {
+                    return;
+                }
+                run.msgs_in += 1;
+                // Only while the output is still finished: a recovery pass
+                // may have resurrected the task mid-push, making this copy
+                // stale (the run's release broadcast reclaims it).
+                if matches!(run.states[task.idx()], TaskState::Finished(_))
+                    && !run.who_has[task.idx()].contains(worker)
+                {
+                    run.who_has[task.idx()].push(worker);
+                }
+            }
+            (Origin::Worker(worker), Msg::ReplicaDropped { run: run_id, task }) => {
+                // A store self-evicted its copy (all local consumers done)
+                // or spilled state died with a release; the address must
+                // leave `who_has` or later assignments would fetch from a
+                // worker that will answer `fetch-failed`.
+                let Some(run) = self.runs.get_mut(&run_id) else { return };
+                if task.idx() >= run.graph.len() {
+                    return;
+                }
+                run.msgs_in += 1;
+                run.who_has[task.idx()].retain(|w| w != worker);
             }
             (Origin::Worker(w), Msg::DataToServer { .. }) => {
                 // Zero-worker data fetches terminate here (mock payloads).
@@ -1373,6 +1540,13 @@ mod tests {
         out
     }
 
+    /// Recover the worker id behind a registered data address (the
+    /// `register` helper assigns `127.0.0.1:{9000+i}` to worker `i`).
+    fn worker_of_addr(addr: &str) -> WorkerId {
+        let port: u32 = addr.rsplit(':').next().unwrap().parse().unwrap();
+        WorkerId(port - 9000)
+    }
+
     /// Drive one or more graphs to completion with instantly-finishing fake
     /// workers, interleaving the per-worker FIFO streams round-robin so
     /// concurrent runs' `TaskFinished` messages arrive interleaved.
@@ -1448,6 +1622,16 @@ mod tests {
                         Msg::StealResponse { run, task, ok: true },
                         &mut out,
                     );
+                }
+                Msg::ReplicateData { run, task, addrs } => {
+                    // Fake replica push: each target acks straight away.
+                    for a in &addrs {
+                        r.on_message(
+                            Origin::Worker(worker_of_addr(a)),
+                            Msg::ReplicaAdded { run, task },
+                            &mut out,
+                        );
+                    }
                 }
                 Msg::Welcome { .. } | Msg::ReleaseRun { .. } => {}
                 other => panic!("worker got {other:?}"),
@@ -1640,6 +1824,20 @@ mod tests {
                     // the cancel (FIFO) and must not be dropped. The early
                     // finish of the cancelled copy is accepted upstream and
                     // the re-sent copy's finish is the idempotent duplicate.
+                }
+                Msg::ReplicateData { run, task, addrs } => {
+                    // Replica pushes to dead targets vanish with the socket;
+                    // live targets ack straight away.
+                    for a in &addrs {
+                        let target = worker_of_addr(a);
+                        if !dead.contains(&target) {
+                            r.on_message(
+                                Origin::Worker(target),
+                                Msg::ReplicaAdded { run, task },
+                                &mut out,
+                            );
+                        }
+                    }
                 }
                 Msg::Welcome { .. } | Msg::ReleaseRun { .. } => {}
                 other => panic!("worker got {other:?}"),
@@ -2475,7 +2673,9 @@ mod tests {
         // Drive a dependency-bearing graph (w2w addresses in play) through
         // the reactor with the dual sink: every emitted assignment is
         // checked borrowed-vs-owned, including steal re-assignments.
-        let mut r = reactor("ws");
+        // Replication is on so alt-bearing input locations go through the
+        // byte-identity check too.
+        let mut r = reactor("ws").with_replication(2, 1);
         register(&mut r, 1, 3);
         let mut out = Vec::new();
         r.on_message(
@@ -2515,6 +2715,15 @@ mod tests {
                         Msg::StealResponse { run, task, ok: true },
                         &mut out,
                     );
+                }
+                (Dest::Worker(_), Msg::ReplicateData { run, task, addrs }) => {
+                    for a in &addrs {
+                        r.on_message(
+                            Origin::Worker(worker_of_addr(a)),
+                            Msg::ReplicaAdded { run, task },
+                            &mut out,
+                        );
+                    }
                 }
                 (_, Msg::GraphDone { .. }) => done = true,
                 (_, Msg::GraphFailed { reason, .. }) => panic!("graph failed: {reason}"),
@@ -2587,5 +2796,286 @@ mod tests {
         assert_eq!(r.reports_dropped(), 3);
         let window: Vec<u64> = r.reports().iter().map(|rep| rep.n_tasks).collect();
         assert_eq!(window, vec![7, 8], "window holds the newest reports");
+    }
+
+    // ---- replicated object store (PR 8 tentpole) ----
+
+    #[test]
+    fn first_finish_of_hot_output_triggers_one_replicate_directive() {
+        let mut r = reactor("ws").with_replication(2, 1);
+        register(&mut r, 1, 3);
+        let mut out = Vec::new();
+        let run = submit(&mut r, 0, merge(2), &mut out);
+        out.clear();
+        r.drain(&mut out);
+        let (task, producer) = out
+            .iter()
+            .find_map(|(d, m)| match (d, m) {
+                (Dest::Worker(w), Msg::ComputeTask { task, .. }) => Some((*task, *w)),
+                _ => None,
+            })
+            .expect("a leaf assignment went out");
+        out.clear();
+        r.on_message(
+            Origin::Worker(producer),
+            Msg::TaskFinished(TaskFinishedInfo { run, task, nbytes: 64, duration_us: 1 }),
+            &mut out,
+        );
+        r.drain(&mut out);
+        let (dest, addrs) = out
+            .iter()
+            .find_map(|(d, m)| match (d, m) {
+                (Dest::Worker(w), Msg::ReplicateData { task: t, addrs, .. }) if *t == task => {
+                    Some((*w, addrs.clone()))
+                }
+                _ => None,
+            })
+            .expect("hot output must be pushed to a peer");
+        assert_eq!(dest, producer, "the producer pushes the copies");
+        assert_eq!(addrs.len(), 1, "k = 2 means one extra copy");
+        // Deterministic placement: the next connected worker after the
+        // producer that does not already hold the output.
+        let target = worker_of_addr(&addrs[0]);
+        assert_eq!(target, WorkerId((producer.0 + 1) % 3));
+        // The ack lands in who_has; a duplicate ack does not double-count.
+        r.on_message(Origin::Worker(target), Msg::ReplicaAdded { run, task }, &mut out);
+        r.on_message(Origin::Worker(target), Msg::ReplicaAdded { run, task }, &mut out);
+        let who = &r.run_state(run).unwrap().who_has[task.idx()];
+        assert_eq!(who.len(), 2);
+        assert!(who.contains(producer) && who.contains(target));
+        // A duplicate finish (recovery race) must not push again.
+        out.clear();
+        r.on_message(
+            Origin::Worker(producer),
+            Msg::TaskFinished(TaskFinishedInfo { run, task, nbytes: 64, duration_us: 1 }),
+            &mut out,
+        );
+        r.drain(&mut out);
+        assert!(
+            !out.iter().any(|(_, m)| matches!(m, Msg::ReplicateData { .. })),
+            "duplicate finish re-replicated: {out:?}"
+        );
+        // A worker-side self-eviction purges the address again.
+        r.on_message(Origin::Worker(target), Msg::ReplicaDropped { run, task }, &mut out);
+        let who = &r.run_state(run).unwrap().who_has[task.idx()];
+        assert_eq!(who.len(), 1);
+        assert!(!who.contains(target));
+    }
+
+    #[test]
+    fn assignments_carry_replica_alternates() {
+        // Once an output has several holders, dependent dispatches must
+        // carry the extra addresses so the fetch path can fail over
+        // without a server round-trip.
+        let mut r = reactor("ws").with_replication(2, 1);
+        register(&mut r, 1, 3);
+        let mut out = Vec::new();
+        let run = submit(&mut r, 0, merge(2), &mut out);
+        out.clear();
+        r.drain(&mut out);
+        let leaves: Vec<(WorkerId, TaskId)> = out
+            .iter()
+            .filter_map(|(d, m)| match (d, m) {
+                (Dest::Worker(w), Msg::ComputeTask { task, .. }) => Some((*w, *task)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(leaves.len(), 2);
+        // Finish the leaves WITHOUT draining (the merge assignment parks),
+        // then register replicas on every other worker so who_has is full
+        // before the parked assignment resolves its addresses.
+        for &(w, task) in &leaves {
+            r.on_message(
+                Origin::Worker(w),
+                Msg::TaskFinished(TaskFinishedInfo { run, task, nbytes: 8, duration_us: 1 }),
+                &mut out,
+            );
+        }
+        for &(producer, task) in &leaves {
+            for w in 0..3u32 {
+                if WorkerId(w) != producer {
+                    r.on_message(
+                        Origin::Worker(WorkerId(w)),
+                        Msg::ReplicaAdded { run, task },
+                        &mut out,
+                    );
+                }
+            }
+        }
+        out.clear();
+        r.drain(&mut out);
+        let mut saw_input = false;
+        for (_, m) in &out {
+            if let Msg::ComputeTask { inputs, .. } = m {
+                for l in inputs {
+                    saw_input = true;
+                    assert!(
+                        !l.alts.is_empty(),
+                        "3 holders on 3 workers leave at least one remote alternate"
+                    );
+                    for a in &l.alts {
+                        assert!(a.starts_with("127.0.0.1:"), "registered address: {a}");
+                        assert_ne!(*a, l.addr, "alternates differ from the primary");
+                    }
+                }
+            }
+        }
+        assert!(saw_input, "the merge task was dispatched: {out:?}");
+    }
+
+    #[test]
+    fn replicated_outputs_make_a_death_trivial() {
+        // Kill a worker that holds replicated data but runs nothing: with
+        // a surviving copy of everything it held, recovery must be the
+        // trivial who_has purge — nothing resurrected, nothing recomputed.
+        let mut r = reactor("random").with_replication(2, 1);
+        register(&mut r, 1, 3);
+        let mut out = Vec::new();
+        let run = submit(&mut r, 0, merge(2), &mut out);
+        out.clear();
+        let mut pending = Vec::new();
+        r.drain(&mut pending);
+        let mut sink = None;
+        let mut guard = 0;
+        while let Some((dest, msg)) = pending.pop() {
+            guard += 1;
+            assert!(guard < 10_000, "drive stuck");
+            let Dest::Worker(w) = dest else { continue };
+            match msg {
+                Msg::ComputeTask { task, inputs, .. } => {
+                    if inputs.is_empty() {
+                        r.on_message(
+                            Origin::Worker(w),
+                            Msg::TaskFinished(TaskFinishedInfo {
+                                run,
+                                task,
+                                nbytes: 64,
+                                duration_us: 1,
+                            }),
+                            &mut out,
+                        );
+                    } else {
+                        sink = Some((w, task)); // hold the merge task open
+                    }
+                }
+                Msg::ReplicateData { task, addrs, .. } => {
+                    for a in &addrs {
+                        r.on_message(
+                            Origin::Worker(worker_of_addr(a)),
+                            Msg::ReplicaAdded { run, task },
+                            &mut out,
+                        );
+                    }
+                }
+                _ => {}
+            }
+            r.drain(&mut out);
+            pending.append(&mut out);
+        }
+        let (sink_worker, sink_task) = sink.expect("merge task dispatched");
+        for t in [TaskId(0), TaskId(1)] {
+            assert_eq!(
+                r.run_state(run).unwrap().who_has[t.idx()].len(),
+                2,
+                "both leaf outputs replicated"
+            );
+        }
+        // Victim: holds a copy of leaf 0 but is not running the sink.
+        let victim = r
+            .run_state(run)
+            .unwrap()
+            .who_has[0]
+            .iter()
+            .find(|&w| w != sink_worker)
+            .expect("two holders, at most one runs the sink");
+        out.clear();
+        r.on_disconnect(Origin::Worker(victim), &mut out);
+        assert!(
+            !out.iter().any(|(_, m)| matches!(m, Msg::GraphFailed { .. })),
+            "replicated loss must not fail the run: {out:?}"
+        );
+        let state = r.run_state(run).unwrap();
+        assert_eq!(state.recoveries, 0, "trivial purge is not charged as a recovery");
+        assert_eq!(state.tasks_recomputed, 0);
+        assert!(!state.who_has[0].contains(victim), "corpse purged from who_has");
+        assert!(state.who_has[0].len() >= 1, "a live replica survives");
+        // The sink finishes off the surviving replicas; no reassignment
+        // was ever needed.
+        r.on_message(
+            Origin::Worker(sink_worker),
+            Msg::TaskFinished(TaskFinishedInfo {
+                run,
+                task: sink_task,
+                nbytes: 64,
+                duration_us: 1,
+            }),
+            &mut out,
+        );
+        let done = drive_until_done(&mut r, out, &[victim].into_iter().collect());
+        assert_eq!(done.len(), 1, "run completes off the surviving replicas");
+        let rep = r.reports().last().unwrap();
+        assert_eq!(rep.recoveries, 0);
+        assert_eq!(rep.tasks_recomputed, 0);
+    }
+
+    #[test]
+    fn fetch_retry_resurrects_inputs_lost_to_self_eviction() {
+        // A worker's store can drop an output (self-eviction after its
+        // consumers were served) and report `replica-dropped`; if a fetch
+        // then fails, the retry path must recompute the missing input
+        // rather than bounce the consumer forever at an empty who_has.
+        let mut r = reactor("ws");
+        register(&mut r, 1, 2);
+        let mut out = Vec::new();
+        let run = submit(&mut r, 0, merge(1), &mut out);
+        out.clear();
+        r.drain(&mut out);
+        let (leaf, producer) = out
+            .iter()
+            .find_map(|(d, m)| match (d, m) {
+                (Dest::Worker(w), Msg::ComputeTask { task, .. }) => Some((*task, *w)),
+                _ => None,
+            })
+            .expect("leaf assignment");
+        out.clear();
+        r.on_message(
+            Origin::Worker(producer),
+            Msg::TaskFinished(TaskFinishedInfo { run, task: leaf, nbytes: 8, duration_us: 1 }),
+            &mut out,
+        );
+        r.drain(&mut out);
+        let (sink_task, sink_worker) = out
+            .iter()
+            .find_map(|(d, m)| match (d, m) {
+                (Dest::Worker(w), Msg::ComputeTask { task, .. }) => Some((*task, *w)),
+                _ => None,
+            })
+            .expect("merge assignment");
+        // The producer evicts the leaf output while the fetch is in flight.
+        r.on_message(Origin::Worker(producer), Msg::ReplicaDropped { run, task: leaf }, &mut out);
+        assert!(r.run_state(run).unwrap().who_has[leaf.idx()].is_empty());
+        out.clear();
+        r.on_message(
+            Origin::Worker(sink_worker),
+            Msg::TaskErred {
+                run,
+                task: sink_task,
+                error: format!("{FETCH_FAILED_PREFIX}all sources gone"),
+            },
+            &mut out,
+        );
+        r.drain(&mut out);
+        assert!(
+            out.iter().any(
+                |(_, m)| matches!(m, Msg::ComputeTask { task, .. } if *task == leaf)
+            ),
+            "evicted input goes out for recompute: {out:?}"
+        );
+        assert_eq!(r.run_state(run).unwrap().tasks_recomputed, 1);
+        let done = drive_until_done(&mut r, out, &Default::default());
+        assert_eq!(done.len(), 1);
+        let rep = r.reports().last().unwrap();
+        assert_eq!(rep.tasks_recomputed, 1, "report surfaces the recompute");
+        assert_eq!(rep.recoveries, 0, "no worker died; not a recovery pass");
     }
 }

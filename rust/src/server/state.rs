@@ -231,11 +231,21 @@ pub struct GraphRun {
     /// address without letting one wide disconnect (many tasks fetching
     /// from the same corpse at once) exhaust a shared budget.
     pub fetch_retries: HashMap<TaskId, u32>,
+    /// Per-task replication flag, computed at activation when the server
+    /// runs with k > 1: `true` marks outputs worth proactive copies
+    /// (fan-out ≥ the configured threshold, or on the critical path).
+    /// Empty when replication is off — the common case costs nothing.
+    pub replicate_hint: Vec<bool>,
     // Per-run counters (reported in `ReactorReport`).
     pub steals_attempted: u64,
     pub steals_failed: u64,
     pub msgs_in: u64,
     pub msgs_out: u64,
+    /// Previously finished tasks forced back to execution — by worker-death
+    /// resurrection or by the fetch-failed missing-input safety net. The
+    /// recovery benchmark's headline number: replication earns its bytes by
+    /// driving this toward zero.
+    pub tasks_recomputed: u64,
 }
 
 /// What the reactor must do after [`GraphRun::recover`] absorbed a worker
@@ -298,10 +308,12 @@ impl GraphRun {
             outbox: VecDeque::new(),
             outbox_since: 0,
             fetch_retries: HashMap::new(),
+            replicate_hint: Vec::new(),
             steals_attempted: 0,
             steals_failed: 0,
             msgs_in: 0,
             msgs_out: 0,
+            tasks_recomputed: 0,
         }
     }
 
@@ -435,8 +447,20 @@ impl GraphRun {
 
         for i in 0..n {
             let t = TaskId(i as u32);
-            let tainted_inputs =
-                self.graph.task(t).inputs.iter().any(|&inp| held[inp.idx()]);
+            // An input is tainted only when the corpse held it AND no live
+            // replica survives. Pre-replication this predicate degenerated
+            // to plain `held` (one copy each) and every consumer of the
+            // dead worker's outputs was cancelled; with replica tracking a
+            // surviving copy keeps the assignment valid — the worker's
+            // fetch failover walks the alternates, and the `fetch-failed`
+            // retry path backstops an assignment that named only the
+            // corpse.
+            let tainted_inputs = self
+                .graph
+                .task(t)
+                .inputs
+                .iter()
+                .any(|&inp| held[inp.idx()] && self.who_has[inp.idx()].is_empty());
             match self.states[i] {
                 TaskState::Assigned(w) if w == dead => {
                     plan.lost_assignments.push((t, w));
@@ -490,6 +514,7 @@ impl GraphRun {
         if plan.is_trivial() {
             return Some(plan); // replica purge only: free
         }
+        self.tasks_recomputed += plan.resurrected.len() as u64;
         self.recoveries += 1;
         if self.recoveries > self.max_recoveries {
             return None;
@@ -542,6 +567,66 @@ impl GraphRun {
         }
         plan.ready.sort_unstable();
         Some(plan)
+    }
+
+    /// Safety net for the `fetch-failed` retry path: by the time a task's
+    /// fetch failed on every replica, an input may exist nowhere — it
+    /// self-evicted (`replica-dropped`) or died with its holders after the
+    /// assignment was emitted. Resurrect, transitively, every input of
+    /// `task` that is `Finished` yet has an empty replica list, so the
+    /// retry recomputes the data instead of bouncing off the same hole
+    /// until the retry budget fails the run.
+    ///
+    /// Returns the resurrected tasks that ended `Ready` (the caller
+    /// re-seeds the scheduler with exactly these); empty when every input
+    /// still has a replica — the common retry case costs one inputs scan.
+    pub fn resurrect_missing_inputs(&mut self, task: TaskId) -> Vec<TaskId> {
+        let mut resurrected: Vec<TaskId> = Vec::new();
+        let mut work = vec![task];
+        while let Some(t) = work.pop() {
+            for &inp in &self.graph.task(t).inputs {
+                if matches!(self.states[inp.idx()], TaskState::Finished(_))
+                    && self.who_has[inp.idx()].is_empty()
+                {
+                    self.states[inp.idx()] = TaskState::Ready; // deps fixed below
+                    self.remaining += 1;
+                    resurrected.push(inp);
+                    work.push(inp);
+                }
+            }
+        }
+        if resurrected.is_empty() {
+            return Vec::new();
+        }
+        self.tasks_recomputed += resurrected.len() as u64;
+        // Rebuild dependency counts exactly like `recover`: resettled
+        // Ready/Waiting for idle tasks, in-flight tasks keep their state
+        // (another live consumer of a resurrected input will hit its own
+        // fetch failure and come through this same path).
+        let n = self.graph.len();
+        for i in 0..n {
+            if matches!(self.states[i], TaskState::Finished(_)) {
+                continue;
+            }
+            let deps = self
+                .graph
+                .task(TaskId(i as u32))
+                .inputs
+                .iter()
+                .filter(|inp| !matches!(self.states[inp.idx()], TaskState::Finished(_)))
+                .count() as u32;
+            self.unfinished_deps[i] = deps;
+            if matches!(self.states[i], TaskState::Ready | TaskState::Waiting) {
+                self.states[i] = if deps == 0 { TaskState::Ready } else { TaskState::Waiting };
+            }
+        }
+        let mut ready: Vec<TaskId> = resurrected
+            .iter()
+            .copied()
+            .filter(|t| self.states[t.idx()] == TaskState::Ready)
+            .collect();
+        ready.sort_unstable();
+        ready
     }
 
     /// Per-worker tasks this run considers queued (assigned or mid-steal
@@ -759,6 +844,74 @@ mod tests {
             "corpse never answers"
         );
         assert_eq!(plan.ready, vec![TaskId(0), TaskId(1)]);
+    }
+
+    #[test]
+    fn recover_keeps_assignment_when_live_replica_remains() {
+        // Regression for the PR 3 conservatism this PR obsoletes: before
+        // replica tracking fed the taint predicate, killing w0 cancelled
+        // every assignment whose input w0 had held — even with a live
+        // replica on w1. Now the surviving copy keeps the assignment
+        // servable (the worker's fetch failover reaches it), and the whole
+        // recovery is a trivial purge costing no budget.
+        let mut run = GraphRun::new(chain3(), 0, 0);
+        let (a, b, c) = (TaskId(0), TaskId(1), TaskId(2));
+        run.finish(a, WorkerId(0));
+        run.finish(b, WorkerId(0));
+        // Replicas of both outputs on w1 (replica-added bookkeeping).
+        run.who_has[a.idx()].push(WorkerId(1));
+        run.who_has[b.idx()].push(WorkerId(1));
+        run.states[c.idx()] = TaskState::Assigned(WorkerId(2));
+        let plan = run.recover(WorkerId(0)).unwrap();
+        assert!(plan.is_trivial(), "replica purge only: {plan:?}");
+        assert_eq!(run.states[c.idx()], TaskState::Assigned(WorkerId(2)), "not cancelled");
+        assert_eq!(run.who_has[a.idx()], vec![WorkerId(1)]);
+        assert_eq!(run.who_has[b.idx()], vec![WorkerId(1)]);
+        assert_eq!(run.recoveries, 0, "no budget spent");
+        assert_eq!(run.tasks_recomputed, 0, "nothing recomputed");
+    }
+
+    #[test]
+    fn recover_counts_recomputed_tasks() {
+        let mut run = GraphRun::new(chain3(), 0, 0);
+        run.finish(TaskId(0), WorkerId(0));
+        run.finish(TaskId(1), WorkerId(0));
+        run.recover(WorkerId(0)).unwrap();
+        assert_eq!(run.tasks_recomputed, 2, "a and b resurrected");
+    }
+
+    #[test]
+    fn resurrect_missing_inputs_recomputes_lost_lineage() {
+        // c's retry found every replica of its input gone (self-evicted
+        // via replica-dropped): the safety net must resurrect b, and
+        // transitively a if a is also unavailable.
+        let mut run = GraphRun::new(chain3(), 0, 0);
+        let (a, b, c) = (TaskId(0), TaskId(1), TaskId(2));
+        run.finish(a, WorkerId(0));
+        run.finish(b, WorkerId(0));
+        let before_remaining = run.remaining;
+        run.who_has[a.idx()].retain(|_| false);
+        run.who_has[b.idx()].retain(|_| false);
+        let ready = run.resurrect_missing_inputs(c);
+        assert_eq!(ready, vec![a], "only the root is immediately ready");
+        assert_eq!(run.states[a.idx()], TaskState::Ready);
+        assert_eq!(run.states[b.idx()], TaskState::Waiting);
+        assert_eq!(run.unfinished_deps[b.idx()], 1);
+        assert_eq!(run.remaining, before_remaining + 2);
+        assert_eq!(run.tasks_recomputed, 2);
+    }
+
+    #[test]
+    fn resurrect_missing_inputs_is_a_noop_with_live_replicas() {
+        let mut run = GraphRun::new(chain3(), 0, 0);
+        let (a, b, c) = (TaskId(0), TaskId(1), TaskId(2));
+        run.finish(a, WorkerId(0));
+        run.finish(b, WorkerId(0));
+        let before_remaining = run.remaining;
+        assert!(run.resurrect_missing_inputs(c).is_empty());
+        assert_eq!(run.remaining, before_remaining);
+        assert_eq!(run.tasks_recomputed, 0);
+        assert!(matches!(run.states[b.idx()], TaskState::Finished(_)));
     }
 
     #[test]

@@ -56,6 +56,13 @@ pub struct SimConfig {
     /// ([`crate::server::fairness`]), so sim and runtime stay
     /// behavior-comparable.
     pub fairness: String,
+    /// Proactive replica count per hot/critical output, primary included
+    /// (1 = off) — the same k the reactor's `with_replication` takes, with
+    /// placement mirrored from `replica_targets`, so killed-worker runs
+    /// are comparable between sim and TCP runtime.
+    pub replication: usize,
+    /// Fan-out threshold feeding [`crate::taskgraph::replication_hints`].
+    pub replication_fanout: u32,
 }
 
 /// Deterministic worker-death injection (recovery at scale, repeatably).
@@ -80,6 +87,8 @@ impl Default for SimConfig {
             timeout_us: 300e6,
             kill: None,
             fairness: "rr".into(),
+            replication: 1,
+            replication_fanout: crate::server::DEFAULT_REPLICATION_FANOUT,
         }
     }
 }
@@ -234,6 +243,9 @@ struct RunCtx<'g> {
     remaining: usize,
     last_finish_us: f64,
     tasks_executed: u64,
+    /// Per-task replication flags ([`crate::taskgraph::replication_hints`]);
+    /// empty when `SimConfig::replication` is 1.
+    hints: Vec<bool>,
 }
 
 struct Engine<'g> {
@@ -315,6 +327,11 @@ impl<'g> Engine<'g> {
                     remaining: graph.len(),
                     last_finish_us: 0.0,
                     tasks_executed: 0,
+                    hints: if cfg.replication > 1 {
+                        crate::taskgraph::replication_hints(graph, cfg.replication_fanout)
+                    } else {
+                        Vec::new()
+                    },
                 }
             })
             .collect();
@@ -850,6 +867,33 @@ impl<'g> Engine<'g> {
                         self.runs[r].remaining -= 1;
                         self.remaining_total -= 1;
                         self.produced_by.insert((run, task), worker);
+                        // Proactive k-replication, placement mirrored from
+                        // the reactor's `replica_targets`: walk the ring
+                        // from the producer, skip dead workers and existing
+                        // holders, push k-1 copies. A later death of any
+                        // single holder then finds a live replica in
+                        // `handle_worker_death` instead of resurrecting.
+                        if self.cfg.replication > 1
+                            && self.runs[r].hints.get(task.idx()).copied().unwrap_or(false)
+                        {
+                            let n = self.workers.len();
+                            let nbytes = self.runs[r].graph.task(task).output_size;
+                            let mut want = self.cfg.replication - 1;
+                            for off in 1..n {
+                                if want == 0 {
+                                    break;
+                                }
+                                let idx = (worker.idx() + off) % n;
+                                let w = &mut self.workers[idx];
+                                if !w.alive || w.has.contains(&(run, task)) {
+                                    continue;
+                                }
+                                w.has.insert((run, task));
+                                self.bytes_transferred += nbytes;
+                                self.msgs += 1; // the replica-added ack
+                                want -= 1;
+                            }
+                        }
                         let decode_done = self.reactor_work(
                             arrived,
                             self.cfg.profile.msg_cost_us(128) + self.cfg.profile.task_transition_us,

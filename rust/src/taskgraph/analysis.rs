@@ -95,6 +95,40 @@ pub fn max_width(g: &TaskGraph) -> usize {
     counts.into_iter().max().unwrap_or(0)
 }
 
+/// Which outputs are worth proactive k-replication (the PR 8 object-store
+/// policy): *hot* outputs — fan-out of at least `fanout` consumers, whose
+/// loss would stall many tasks at once — and every task on one
+/// duration-weighted critical path, whose loss would stall the whole run.
+/// Both the reactor (`server/reactor.rs`) and the simulator
+/// (`sim/engine.rs`) call this, so the two stay policy-identical and the
+/// parity suite can compare their recovery behavior.
+pub fn replication_hints(g: &TaskGraph, fanout: u32) -> Vec<bool> {
+    let mut hint = vec![false; g.len()];
+    for id in g.topo_order() {
+        if g.consumers(id).len() >= fanout as usize {
+            hint[id.idx()] = true;
+        }
+    }
+    // Forward finish-time pass (as in `critical_path_us`), then walk one
+    // critical chain backwards from the latest-finishing task.
+    let mut finish = vec![0u64; g.len()];
+    let mut tail = None;
+    for id in g.topo_order() {
+        let t = g.task(id);
+        let start = t.inputs.iter().map(|i| finish[i.idx()]).max().unwrap_or(0);
+        finish[id.idx()] = start + t.duration_us;
+        if tail.map_or(true, |b: super::TaskId| finish[id.idx()] > finish[b.idx()]) {
+            tail = Some(id);
+        }
+    }
+    let mut cur = tail;
+    while let Some(id) = cur {
+        hint[id.idx()] = true;
+        cur = g.task(id).inputs.iter().copied().max_by_key(|i| finish[i.idx()]);
+    }
+    hint
+}
+
 /// Sum of all output sizes along dependency arcs — total bytes that would
 /// move if every dependency crossed the network (upper bound on traffic).
 pub fn total_transfer_bytes(g: &TaskGraph) -> u64 {
@@ -132,6 +166,29 @@ mod tests {
         assert!((s.avg_output_kib - 2.0).abs() < 1e-9);
         assert!((s.avg_duration_ms - 1.0).abs() < 1e-9);
         assert_eq!(max_width(&g), 1);
+    }
+
+    #[test]
+    fn replication_hints_flag_fanout_and_critical_chain() {
+        // Diamond with a slow left leg: a → {b slow, c fast} → d.
+        let mut b = GraphBuilder::new();
+        let a = b.add("a", vec![], 100, 8, Payload::BusyWait);
+        let slow = b.add("b", vec![a], 10_000, 8, Payload::BusyWait);
+        let fast = b.add("c", vec![a], 10, 8, Payload::BusyWait);
+        let d = b.add("d", vec![slow, fast], 100, 8, Payload::BusyWait);
+        let g = b.build("diamond").unwrap();
+        // Fan-out threshold 2: only `a` (two consumers) is hot; the
+        // critical chain a → slow → d is flagged too; `fast` is not.
+        let hints = replication_hints(&g, 2);
+        assert_eq!(
+            hints,
+            vec![true, true, false, true],
+            "hot root + critical chain, fast leg excluded"
+        );
+        // Threshold 1 marks everything with at least one consumer, plus
+        // the chain (which covers the sink).
+        assert_eq!(replication_hints(&g, 1), vec![true; 4]);
+        let _ = d;
     }
 
     #[test]

@@ -10,6 +10,8 @@ mod analysis;
 mod graph;
 mod payload;
 
-pub use analysis::{critical_path_us, longest_path, max_width, total_transfer_bytes, GraphStats};
+pub use analysis::{
+    critical_path_us, longest_path, max_width, replication_hints, total_transfer_bytes, GraphStats,
+};
 pub use graph::{GraphBuilder, GraphError, TaskGraph, TaskId, TaskSpec};
 pub use payload::Payload;

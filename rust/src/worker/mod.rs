@@ -8,7 +8,16 @@
 //!   than one task per available core at once" — the paper's setting is
 //!   one core per worker),
 //! - fetches missing inputs directly from peer workers (worker↔worker data
-//!   plane; the server is not on the data path),
+//!   plane; the server is not on the data path), failing over across the
+//!   input's replica addresses before reporting `fetch-failed:`,
+//! - keeps outputs in the reference-counted [`store::ObjectStore`] —
+//!   fully-consumed outputs self-evict (the server is told via
+//!   `replica-dropped`), and an optional `--memory-limit` budget spills
+//!   least-recently-used entries to disk ([`spill::FsSpill`]) so graphs
+//!   larger than cluster RAM complete,
+//! - serves the replication data plane: a `replicate-data` order from the
+//!   server pushes copies of a hot output to peer workers (`put-data`),
+//!   and each receiving peer confirms with `replica-added`,
 //! - honours steal retraction: a queued task can be given back, a running
 //!   one cannot (§IV-C),
 //! - participates in lineage recovery: `cancel-compute` drops a queued
@@ -31,6 +40,8 @@
 
 pub mod payload;
 pub mod queue;
+pub mod spill;
+pub mod store;
 pub mod zero;
 
 use crate::protocol::{
@@ -40,11 +51,12 @@ use crate::protocol::{
 use crate::taskgraph::TaskId;
 use anyhow::{anyhow, bail, Context, Result};
 use queue::{FetchPlan, PoppedTask, TaskQueue};
-use std::collections::{HashMap, HashSet};
+use spill::{FsSpill, MemSpill, SpillBackend};
 use std::net::{TcpListener, TcpStream};
+use store::{DataKey, Lookup, ObjectStore};
 // Model-checkable primitives: std in normal builds, the exhaustive
 // explorer under `--cfg loom` (see `docs/verification.md`).
-use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 use crate::sync::{Arc, Condvar, Mutex};
 
 /// Worker configuration.
@@ -54,10 +66,10 @@ pub struct WorkerConfig {
     pub name: String,
     pub ncores: u32,
     pub node: u32,
+    /// Resident-byte budget for the object store (`--memory-limit`);
+    /// `None` keeps everything in memory (no spill tier).
+    pub memory_limit: Option<u64>,
 }
-
-/// A task output's identity on this worker: which run, which task.
-type DataKey = (RunId, TaskId);
 
 /// The worker→server send half: stream plus its reused frame buffer, under
 /// one lock so a warm send is one buffer fill and one syscall, no
@@ -72,13 +84,15 @@ struct Shared {
     /// all behind one lock (they are always touched together).
     queue: Mutex<TaskQueue>,
     cv: Condvar,
-    store: Mutex<HashMap<DataKey, Arc<Vec<u8>>>>,
-    /// Runs the server has released. A task already mid-execution when its
-    /// run's `ReleaseRun` arrives must not re-insert its output afterwards
-    /// — no second release will ever come for that run. (RunIds are tiny
-    /// and never reused, so this set costs 4 bytes per run served.)
-    released: Mutex<HashSet<RunId>>,
+    /// Task outputs: reference-counted, LRU-spilled, release-aware (the
+    /// released-run mark lives inside the store's lock, so an execution
+    /// racing a `release-run` can never re-insert after the purge).
+    store: ObjectStore,
     stop: AtomicBool,
+    /// Executor threads currently inside a task (fault-injection tests use
+    /// this to find an *idle* worker — one whose death should be a trivial
+    /// who-has purge when its outputs are replicated).
+    running: AtomicU32,
     server_tx: Mutex<ServerLink>,
 }
 
@@ -104,6 +118,17 @@ impl WorkerHandle {
         self.shared.cv.notify_all();
         let link = self.shared.server_tx.lock().unwrap();
         let _ = link.stream.shutdown(std::net::Shutdown::Both);
+    }
+
+    /// (spill events, restore events) of this worker's store — lets tests
+    /// and benches assert a budgeted run actually exercised the spill tier.
+    pub fn spill_stats(&self) -> (u64, u64) {
+        self.shared.store.spill_stats()
+    }
+
+    /// Whether any executor thread is currently inside a task.
+    pub fn busy(&self) -> bool {
+        self.shared.running.load(Ordering::SeqCst) > 0
     }
 }
 
@@ -134,12 +159,20 @@ pub fn run_worker(cfg: WorkerConfig) -> Result<WorkerHandle> {
         bail!("expected welcome, got {:?}", reply.op());
     };
 
+    // The spill tier only exists under a budget; without one the backend
+    // is never written, so a cheap in-memory stub avoids creating a spill
+    // directory per worker.
+    let backend: Arc<dyn SpillBackend> = match cfg.memory_limit {
+        Some(_) => Arc::new(FsSpill::new().context("create spill dir")?),
+        None => Arc::new(MemSpill::new()),
+    };
+
     let shared = Arc::new(Shared {
         queue: Mutex::new(TaskQueue::new()),
         cv: Condvar::new(),
-        store: Mutex::new(HashMap::new()),
-        released: Mutex::new(HashSet::new()),
+        store: ObjectStore::new(cfg.memory_limit, backend),
         stop: AtomicBool::new(false),
+        running: AtomicU32::new(0),
         server_tx: Mutex::new(ServerLink {
             stream: stream.try_clone().context("clone server stream")?,
             frames: register_frames,
@@ -203,7 +236,7 @@ pub fn run_worker(cfg: WorkerConfig) -> Result<WorkerHandle> {
                     // A compute for an already-released run would recreate
                     // the run's arenas for nothing; the server's FIFO makes
                     // this effectively unreachable, but stay defensive.
-                    if !shared.released.lock().unwrap().contains(&view.run) {
+                    if !shared.store.is_released(view.run) {
                         let enqueued = shared.queue.lock().unwrap().enqueue(&view);
                         match enqueued {
                             Ok(()) => shared.cv.notify_one(),
@@ -238,24 +271,27 @@ pub fn run_worker(cfg: WorkerConfig) -> Result<WorkerHandle> {
                         // result is accepted or its fetch error retried).
                         drop_queued(&shared, run, task);
                     }
+                    Msg::ReplicateData { run, task, addrs } => {
+                        // Replication order for one of our outputs. Pushing
+                        // is blocking I/O to k−1 peers — keep it off the
+                        // reader thread so control traffic keeps flowing.
+                        let shared = shared.clone();
+                        std::thread::spawn(move || push_replicas(&shared, run, task, &addrs));
+                    }
                     Msg::FetchFromServer { run, task } => {
-                        let data = shared
-                            .store
-                            .lock()
-                            .unwrap()
-                            .get(&(run, task))
+                        let data = lookup(&shared, &(run, task))
                             .map(|d| d.as_ref().clone())
                             .unwrap_or_default();
                         let _ = shared.send(&Msg::DataToServer { run, task, data });
                     }
                     Msg::ReleaseRun { run } => {
                         // Run retired: reclaim its queue entries, interned
-                        // arenas and stored outputs so a long-lived worker
-                        // stays bounded. The `released` mark lands first so
-                        // an execution racing the purge cannot re-insert.
-                        shared.released.lock().unwrap().insert(run);
+                        // arenas and stored outputs (including spill slots)
+                        // so a long-lived worker stays bounded. The store's
+                        // internal released-mark lands atomically with its
+                        // purge, so a racing execution cannot re-insert.
+                        shared.store.release_run(run);
                         shared.queue.lock().unwrap().release_run(run);
-                        shared.store.lock().unwrap().retain(|&(r, _), _| r != run);
                     }
                     Msg::Shutdown => {
                         shared.stop.store(true, Ordering::SeqCst);
@@ -280,6 +316,20 @@ fn drop_queued(shared: &Shared, run: RunId, task: TaskId) -> bool {
     shared.queue.lock().unwrap().drop_queued(run, task)
 }
 
+/// Store lookup that transparently restores a spilled entry (and rebalances
+/// the budget afterwards). `None` = genuinely absent.
+fn lookup(shared: &Shared, key: &DataKey) -> Option<Arc<Vec<u8>>> {
+    match shared.store.get(key) {
+        Lookup::Hit(d) => Some(d),
+        Lookup::Spilled => {
+            let restored = shared.store.restore(key);
+            shared.store.maybe_spill();
+            restored
+        }
+        Lookup::Miss => None,
+    }
+}
+
 fn executor_loop(shared: &Shared) {
     // Reused scratch: each pop copies the task's key and input addresses
     // into these retained buffers under the queue lock, so nothing borrows
@@ -302,10 +352,13 @@ fn executor_loop(shared: &Shared) {
         };
         // Popped after its run was released (queue purge raced the pop):
         // drop it instead of doing dead work.
-        if shared.released.lock().unwrap().contains(&next.run) {
+        if shared.store.is_released(next.run) {
             continue;
         }
-        match run_task(shared, &next, &plan) {
+        shared.running.fetch_add(1, Ordering::SeqCst);
+        let outcome = run_task(shared, &next, &plan);
+        shared.running.fetch_sub(1, Ordering::SeqCst);
+        match outcome {
             Ok(info) => {
                 let _ = shared.send(&Msg::TaskFinished(info));
             }
@@ -327,28 +380,17 @@ fn run_task(shared: &Shared, t: &PoppedTask, plan: &FetchPlan) -> Result<TaskFin
     for i in 0..plan.n_inputs() {
         let (input_task, _nbytes, addr) = plan.input(i);
         let key = (t.run, input_task);
-        let local = shared.store.lock().unwrap().get(&key).cloned();
-        let data = match local {
+        let data = match lookup(shared, &key) {
             Some(d) => d,
-            None if !addr.is_empty() => {
-                // The `fetch-failed:` prefix marks this error recoverable:
-                // the peer died (or its address went stale mid-recovery),
-                // so the server re-runs this task rather than failing the
-                // whole run.
-                let data = fetch_remote(addr, t.run, input_task).with_context(|| {
-                    format!("{FETCH_FAILED_PREFIX}{}/{} from {}", t.run, input_task, addr)
-                })?;
+            None if !addr.is_empty() || plan.n_alts(i) > 0 => {
+                let data = fetch_with_failover(plan, i, t)?;
                 let arc = Arc::new(data);
-                {
-                    // Check `released` while holding the store lock: the
-                    // release handler marks the run released *before*
-                    // purging, so either we see the mark and skip, or our
-                    // insert lands before the purge and is swept by it.
-                    let mut store = shared.store.lock().unwrap();
-                    if !shared.released.lock().unwrap().contains(&t.run) {
-                        store.insert(key, arc.clone());
-                    }
-                }
+                // Passive fetch cache: pinned (release-run reclaims it) and
+                // deliberately *not* advertised to the server — who_has
+                // only lists copies the server ordered or was told about,
+                // so recovery never counts on this one.
+                shared.store.insert(key, arc.clone(), 0);
+                shared.store.maybe_spill();
                 arc
             }
             None => {
@@ -356,7 +398,7 @@ fn run_task(shared: &Shared, t: &PoppedTask, plan: &FetchPlan) -> Result<TaskFin
                 let mut got = None;
                 for _ in 0..500 {
                     std::thread::sleep(std::time::Duration::from_millis(1));
-                    if let Some(d) = shared.store.lock().unwrap().get(&key).cloned() {
+                    if let Some(d) = lookup(shared, &key) {
                         got = Some(d);
                         break;
                     }
@@ -370,23 +412,54 @@ fn run_task(shared: &Shared, t: &PoppedTask, plan: &FetchPlan) -> Result<TaskFin
                 })?
             }
         };
+        // One consumption of the input. A refcounted local copy that hits
+        // zero self-evicts; tell the server so recovery and future
+        // `who_has` answers never count on the freed bytes.
+        if shared.store.consume(&key) {
+            let _ = shared.send(&Msg::ReplicaDropped { run: t.run, task: input_task });
+        }
         inputs.push(data);
     }
     let t0 = std::time::Instant::now();
     let output = payload::execute(&t.payload, t.duration_us, t.output_size, &inputs)?;
     let duration_us = t0.elapsed().as_micros() as u64;
     let nbytes = output.len() as u64;
-    // A release that raced this execution already purged the store; don't
-    // repopulate it — the server drops our TaskFinished anyway. The check
-    // holds the store lock so a release can't slip between check and
-    // insert (the handler marks `released` before it purges).
-    {
-        let mut store = shared.store.lock().unwrap();
-        if !shared.released.lock().unwrap().contains(&t.run) {
-            store.insert((t.run, t.task), Arc::new(output));
+    // The store refuses the insert if a release raced this execution (the
+    // server drops our TaskFinished anyway). The wire consumer count seeds
+    // the reference count: 0 pins (sink outputs survive for the client).
+    shared.store.insert((t.run, t.task), Arc::new(output), t.consumers);
+    shared.store.maybe_spill();
+    Ok(TaskFinishedInfo { run: t.run, task: t.task, nbytes, duration_us })
+}
+
+/// Fetch one input, walking the primary plus every known replica address
+/// before giving up with the recoverable `fetch-failed:` error. The
+/// starting replica rotates with the consuming task id, so the many
+/// consumers of one hot output spread their load across its copies.
+fn fetch_with_failover(plan: &FetchPlan, i: usize, t: &PoppedTask) -> Result<Vec<u8>> {
+    let (input_task, _nbytes, primary) = plan.input(i);
+    let n = 1 + plan.n_alts(i);
+    let start = t.task.0 as usize % n;
+    let mut last_err: Option<anyhow::Error> = None;
+    for j in 0..n {
+        let idx = (start + j) % n;
+        let addr = if idx == 0 { primary } else { plan.input_alt(i, idx - 1) };
+        if addr.is_empty() {
+            continue;
+        }
+        match fetch_remote(addr, t.run, input_task) {
+            Ok(d) => return Ok(d),
+            Err(e) => last_err = Some(e),
         }
     }
-    Ok(TaskFinishedInfo { run: t.run, task: t.task, nbytes, duration_us })
+    // The `fetch-failed:` prefix marks this recoverable: every replica was
+    // unreachable (or none was named), so the server re-runs this task —
+    // resurrecting lost inputs if need be — rather than failing the run.
+    let cause = last_err.unwrap_or_else(|| anyhow!("no usable source address"));
+    Err(cause.context(format!(
+        "{FETCH_FAILED_PREFIX}{}/{} unreachable via {} source(s)",
+        t.run, input_task, n
+    )))
 }
 
 fn fetch_remote(addr: &str, run: RunId, task: TaskId) -> Result<Vec<u8>> {
@@ -399,6 +472,29 @@ fn fetch_remote(addr: &str, run: RunId, task: TaskId) -> Result<Vec<u8>> {
         Msg::DataReply { run: r, task: t, data } if r == run && t == task => Ok(data),
         other => bail!("unexpected data reply {:?}", other.op()),
     }
+}
+
+/// Execute a `replicate-data` order: push our copy of `(run, task)` to each
+/// peer data address. Best-effort — a dead or unreachable target is simply
+/// skipped, because the server only counts copies whose `replica-added`
+/// confirmation arrives from the receiving peer.
+fn push_replicas(shared: &Shared, run: RunId, task: TaskId, addrs: &[String]) {
+    let Some(bytes) = lookup(shared, &(run, task)) else {
+        // Already consumed away or the run was released: nothing to push.
+        return;
+    };
+    for addr in addrs {
+        if let Err(e) = push_one(addr, run, task, &bytes) {
+            log::debug!("worker: replica push {run}/{task} to {addr} failed: {e}");
+        }
+    }
+}
+
+fn push_one(addr: &str, run: RunId, task: TaskId, bytes: &Arc<Vec<u8>>) -> Result<()> {
+    let mut s = TcpStream::connect(addr)?;
+    s.set_nodelay(true).ok();
+    FrameWriter::new().send(&mut s, &Msg::PutData { run, task, data: bytes.as_ref().clone() })?;
+    Ok(())
 }
 
 fn serve_data_conn(mut conn: TcpStream, shared: &Shared) {
@@ -419,9 +515,10 @@ fn serve_data_conn(mut conn: TcpStream, shared: &Shared) {
             Msg::FetchData { run, task } => {
                 // The producer finished before the server advertised the
                 // location, but the local insert may trail by a hair.
+                let key = (run, task);
                 let mut data = None;
                 for _ in 0..500 {
-                    if let Some(d) = shared.store.lock().unwrap().get(&(run, task)).cloned() {
+                    if let Some(d) = lookup(shared, &key) {
                         data = Some(d);
                         break;
                     }
@@ -431,6 +528,23 @@ fn serve_data_conn(mut conn: TcpStream, shared: &Shared) {
                 let reply = Msg::DataReply { run, task, data: data.as_ref().clone() };
                 if frames_out.send(&mut conn, &reply).is_err() {
                     break;
+                }
+                // Serving a peer is one consumption of the graph-wide
+                // count; at zero the copy self-evicts and the server is
+                // told (same contract as the local-gather decrement).
+                if shared.store.consume(&key) {
+                    let _ = shared.send(&Msg::ReplicaDropped { run, task });
+                }
+            }
+            Msg::PutData { run, task, data } => {
+                // Unsolicited replica push. Stored pinned — replicas never
+                // self-evict; `release-run` or the spill tier manage them —
+                // and confirmed to the server, which appends us to
+                // `who_has`. A duplicate push or one for a released run is
+                // dropped without confirmation.
+                if shared.store.insert((run, task), Arc::new(data), 0) {
+                    shared.store.maybe_spill();
+                    let _ = shared.send(&Msg::ReplicaAdded { run, task });
                 }
             }
             _ => break,

@@ -40,14 +40,17 @@ use std::collections::{BinaryHeap, HashMap, HashSet};
 /// drop connection) like every other malformed input.
 pub const MAX_TASK_ID: u32 = 1 << 24;
 
-/// One input location, fully id-encoded: 16 bytes instead of an owned
-/// `String` per input.
+/// One input location, fully id-encoded: a fixed-size record instead of
+/// an owned `String` (plus alternate-address `Vec`) per input.
 #[derive(Debug, Clone, Copy)]
 struct InputLoc {
     task: TaskId,
     /// Into the run's address arena; the empty string means "local".
     addr: KeyId,
     nbytes: u64,
+    /// `(start, len)` span into the run's alternate-address pool —
+    /// replica addresses fetch failover walks after `addr`.
+    alts: (u32, u32),
 }
 
 /// A queued assignment: dense ids and arena handles only — no owned
@@ -64,6 +67,8 @@ struct QueuedTask {
     key: KeyId,
     /// `(start, len)` span into the run's input-location pool.
     inputs: (u32, u32),
+    /// Graph-wide consumer count of the output (0 = pin in the store).
+    consumers: u32,
 }
 
 // Min-heap by priority (lower value runs first, like Dask priorities);
@@ -97,10 +102,15 @@ struct RunStrings {
     /// validation, so no content lookup is needed — indexed by task id).
     keys: StrArena,
     key_of: Vec<Option<KeyId>>,
-    /// Peer data addresses, content-deduplicated.
+    /// Peer data addresses, content-deduplicated (primaries and replica
+    /// alternates share this arena — a worker's address is one string no
+    /// matter which role it plays).
     addrs: StrArena,
     /// Append-only input-location pool; reset when the queue drains.
     inputs: Vec<InputLoc>,
+    /// Append-only alternate-address pool ([`InputLoc::alts`] spans);
+    /// reset alongside `inputs`.
+    alt_pool: Vec<KeyId>,
 }
 
 /// What [`TaskQueue::pop_into`] returns by value: the scalar task fields.
@@ -115,14 +125,19 @@ pub struct PoppedTask {
     pub duration_us: u64,
     pub output_size: u64,
     pub priority: i64,
+    /// Initial store reference count for the output (0 = pinned).
+    pub consumers: u32,
 }
 
 /// Executor-side scratch, reused across tasks: after warm-up a pop copies
 /// spans and bytes into retained capacity and allocates nothing.
 #[derive(Debug, Default)]
 pub struct FetchPlan {
-    /// `(input task, nbytes, addr span into addr_bytes)`.
-    inputs: Vec<(TaskId, u64, (u32, u32))>,
+    /// `(input task, nbytes, addr span into addr_bytes, alt span into
+    /// alt_spans)`.
+    inputs: Vec<(TaskId, u64, (u32, u32), (u32, u32))>,
+    /// Alternate-address spans into `addr_bytes`, pooled across inputs.
+    alt_spans: Vec<(u32, u32)>,
     addr_bytes: String,
     key: String,
 }
@@ -139,8 +154,22 @@ impl FetchPlan {
     /// The i-th input: `(producing task, nbytes, fetch address)` — an
     /// empty address means the input is (or will be) local.
     pub fn input(&self, i: usize) -> (TaskId, u64, &str) {
-        let (task, nbytes, (start, len)) = self.inputs[i];
+        let (task, nbytes, (start, len), _) = self.inputs[i];
         (task, nbytes, &self.addr_bytes[start as usize..(start + len) as usize])
+    }
+
+    /// Number of alternate replica addresses known for input `i`.
+    pub fn n_alts(&self, i: usize) -> usize {
+        self.inputs[i].3 .1 as usize
+    }
+
+    /// The j-th alternate replica address of input `i` (fetch failover
+    /// walks these after the primary).
+    pub fn input_alt(&self, i: usize, j: usize) -> &str {
+        let (alt_start, alt_len) = self.inputs[i].3;
+        debug_assert!(j < alt_len as usize);
+        let (start, len) = self.alt_spans[alt_start as usize + j];
+        &self.addr_bytes[start as usize..(start + len) as usize]
     }
 
     /// The popped task's Dask-style key (diagnostics).
@@ -200,6 +229,7 @@ impl TaskQueue {
         if self.heap.is_empty() {
             for s in self.runs.values_mut() {
                 s.inputs.clear();
+                s.alt_pool.clear();
             }
         }
         if view.task.0 >= MAX_TASK_ID {
@@ -226,7 +256,18 @@ impl TaskQueue {
         for input in view.inputs() {
             let input = input?;
             let addr = s.addrs.intern(input.addr);
-            s.inputs.push(InputLoc { task: input.task, addr, nbytes: input.nbytes });
+            let alt_start = s.alt_pool.len() as u32;
+            for alt in input.alts() {
+                let id = s.addrs.intern(alt);
+                s.alt_pool.push(id);
+            }
+            let alt_len = s.alt_pool.len() as u32 - alt_start;
+            s.inputs.push(InputLoc {
+                task: input.task,
+                addr,
+                nbytes: input.nbytes,
+                alts: (alt_start, alt_len),
+            });
         }
         let len = s.inputs.len() as u32 - start;
         self.pending.insert((view.run, view.task));
@@ -239,6 +280,7 @@ impl TaskQueue {
             output_size: view.output_size,
             key,
             inputs: (start, len),
+            consumers: view.consumers,
         });
         Ok(())
     }
@@ -250,6 +292,7 @@ impl TaskQueue {
         let qt = self.heap.pop()?;
         self.pending.remove(&(qt.run, qt.task));
         plan.inputs.clear();
+        plan.alt_spans.clear();
         plan.addr_bytes.clear();
         plan.key.clear();
         // The run's arenas exist whenever one of its tasks is queued
@@ -263,7 +306,22 @@ impl TaskQueue {
                 let addr = s.addrs.get(loc.addr);
                 let a0 = plan.addr_bytes.len() as u32;
                 plan.addr_bytes.push_str(addr);
-                plan.inputs.push((loc.task, loc.nbytes, (a0, addr.len() as u32)));
+                let (alt_start, alt_len) = loc.alts;
+                let sp0 = plan.alt_spans.len() as u32;
+                for &alt_id in
+                    &s.alt_pool[alt_start as usize..(alt_start + alt_len) as usize]
+                {
+                    let alt = s.addrs.get(alt_id);
+                    let b0 = plan.addr_bytes.len() as u32;
+                    plan.addr_bytes.push_str(alt);
+                    plan.alt_spans.push((b0, alt.len() as u32));
+                }
+                plan.inputs.push((
+                    loc.task,
+                    loc.nbytes,
+                    (a0, addr.len() as u32),
+                    (sp0, alt_len),
+                ));
             }
         }
         Some(PoppedTask {
@@ -273,6 +331,7 @@ impl TaskQueue {
             duration_us: qt.duration_us,
             output_size: qt.output_size,
             priority: qt.priority,
+            consumers: qt.consumers,
         })
     }
 
@@ -311,6 +370,22 @@ mod tests {
     use crate::protocol::{encode_msg, Msg, TaskInputLoc};
 
     fn compute(run: u32, task: u32, priority: i64, inputs: Vec<(u32, &str, u64)>) -> Vec<u8> {
+        compute_with_alts(
+            run,
+            task,
+            priority,
+            inputs.into_iter().map(|(t, a, n)| (t, a, n, vec![])).collect(),
+            0,
+        )
+    }
+
+    fn compute_with_alts(
+        run: u32,
+        task: u32,
+        priority: i64,
+        inputs: Vec<(u32, &str, u64, Vec<&str>)>,
+        consumers: u32,
+    ) -> Vec<u8> {
         encode_msg(&Msg::ComputeTask {
             run: RunId(run),
             task: TaskId(task),
@@ -320,9 +395,15 @@ mod tests {
             output_size: 64,
             inputs: inputs
                 .into_iter()
-                .map(|(t, a, n)| TaskInputLoc { task: TaskId(t), addr: a.into(), nbytes: n })
+                .map(|(t, a, n, alts)| TaskInputLoc {
+                    task: TaskId(t),
+                    addr: a.into(),
+                    alts: alts.into_iter().map(String::from).collect(),
+                    nbytes: n,
+                })
                 .collect(),
             priority,
+            consumers,
         })
     }
 
@@ -451,9 +532,27 @@ mod tests {
     fn interned_enqueue_matches_owned_decode() {
         // Behavior parity: the fields the executor sees through the
         // interned path equal the owned decode of the same frame.
-        let bytes = compute(3, 7, -5, vec![(5, "10.1.1.1:9999", 11), (6, "", 0)]);
-        let Msg::ComputeTask { run, task, key, payload, duration_us, output_size, inputs, priority } =
-            crate::protocol::decode_msg(&bytes).unwrap()
+        let bytes = compute_with_alts(
+            3,
+            7,
+            -5,
+            vec![
+                (5, "10.1.1.1:9999", 11, vec!["10.1.1.2:9999", "10.1.1.3:9999"]),
+                (6, "", 0, vec![]),
+            ],
+            4,
+        );
+        let Msg::ComputeTask {
+            run,
+            task,
+            key,
+            payload,
+            duration_us,
+            output_size,
+            inputs,
+            priority,
+            consumers,
+        } = crate::protocol::decode_msg(&bytes).unwrap()
         else {
             panic!("wrong op")
         };
@@ -464,10 +563,44 @@ mod tests {
         assert_eq!((p.run, p.task, p.priority), (run, task, priority));
         assert_eq!(p.payload, payload);
         assert_eq!((p.duration_us, p.output_size), (duration_us, output_size));
+        assert_eq!(p.consumers, consumers);
         assert_eq!(plan.key(), key);
         assert_eq!(plan.n_inputs(), inputs.len());
         for (i, l) in inputs.iter().enumerate() {
             assert_eq!(plan.input(i), (l.task, l.nbytes, l.addr.as_str()));
+            assert_eq!(plan.n_alts(i), l.alts.len());
+            for (j, alt) in l.alts.iter().enumerate() {
+                assert_eq!(plan.input_alt(i, j), alt);
+            }
         }
+    }
+
+    #[test]
+    fn alt_addresses_share_the_address_arena() {
+        // A replica alternate that equals another input's primary must not
+        // grow the arena: both roles content-intern to one string.
+        let mut q = TaskQueue::new();
+        enqueue(
+            &mut q,
+            &compute_with_alts(
+                0,
+                1,
+                1,
+                vec![
+                    (8, "10.0.0.1:9000", 5, vec!["10.0.0.2:9000"]),
+                    (9, "10.0.0.2:9000", 5, vec!["10.0.0.1:9000"]),
+                ],
+                2,
+            ),
+        );
+        let s = q.runs.get(&RunId(0)).unwrap();
+        assert_eq!(s.addrs.len(), 2, "two distinct addresses total");
+        assert_eq!(s.alt_pool.len(), 2);
+        let mut plan = FetchPlan::new();
+        q.pop_into(&mut plan).unwrap();
+        assert_eq!(plan.input(0).2, "10.0.0.1:9000");
+        assert_eq!(plan.input_alt(0, 0), "10.0.0.2:9000");
+        assert_eq!(plan.input(1).2, "10.0.0.2:9000");
+        assert_eq!(plan.input_alt(1, 0), "10.0.0.1:9000");
     }
 }

@@ -1,0 +1,281 @@
+//! Spill backends: where the object store parks bytes evicted from the
+//! memory tier (see [`super::store`]).
+//!
+//! The store's LRU keeps *resident* bytes under `--memory-limit`; a victim
+//! entry's payload is written to a backend **slot** and the entry keeps
+//! only the slot id. Restores read the slot back and free it. The backend
+//! owns nothing else — which entry holds which slot, and when a slot may
+//! be freed, is entirely the store's bookkeeping (the loom model in
+//! `tests/loom_models.rs` checks exactly that discipline: a slot is
+//! written once, read-or-freed exactly once, never both).
+//!
+//! Two implementations:
+//!
+//! - [`FsSpill`] — production tier: one file per slot in a per-process
+//!   temp directory, freed slot ids recycled through a free list so a
+//!   long-lived worker's directory stays bounded by its *peak* spilled
+//!   set, not its history.
+//! - [`MemSpill`] — test tier: slots are in-memory buffers behind the
+//!   model-checkable [`crate::sync::Mutex`], and misuse (double free,
+//!   read-after-free) is *observable* (`Err` / `false` + a counter)
+//!   instead of silently tolerated, so property tests and the loom model
+//!   can assert the store never mismanages a slot.
+
+use crate::sync::Mutex;
+use std::io;
+use std::path::PathBuf;
+
+/// A tier that can hold evicted payloads. `&self` methods — backends
+/// synchronize internally — so the store can write a spill victim *outside*
+/// its own lock (a disk write under the store mutex would stall every
+/// concurrent `get`).
+pub trait SpillBackend: Send + Sync {
+    /// Park `bytes`; returns the slot id that names them.
+    fn write(&self, bytes: &[u8]) -> io::Result<u64>;
+    /// Read a slot's bytes back (the slot stays live).
+    fn read(&self, slot: u64) -> io::Result<Vec<u8>>;
+    /// Release a slot for reuse. Returns whether the slot was live —
+    /// `false` flags a double free (a store bug; tests assert on it).
+    fn free(&self, slot: u64) -> bool;
+    /// Bytes currently parked in the backend (diagnostics/tests).
+    fn spilled_bytes(&self) -> u64;
+}
+
+// ---------------------------------------------------------------------
+// Filesystem tier (production)
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Default)]
+struct FsState {
+    next_slot: u64,
+    free_list: Vec<u64>,
+    /// Size of each live slot (slot id → bytes); also the liveness set.
+    live: std::collections::HashMap<u64, u64>,
+    total_bytes: u64,
+}
+
+/// One file per slot under a per-process temp directory
+/// (`<tmp>/rsds-spill-<pid>-<seq>/slot-<id>`). The directory is removed on
+/// drop; a crashed worker leaves it for the OS temp cleaner.
+pub struct FsSpill {
+    dir: PathBuf,
+    state: Mutex<FsState>,
+}
+
+/// Distinguishes spill dirs of multiple workers in one process (tests run
+/// whole clusters in-process).
+static SPILL_DIR_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+impl FsSpill {
+    /// Create the backing directory now so later writes can't fail on a
+    /// missing parent.
+    pub fn new() -> io::Result<FsSpill> {
+        let seq = SPILL_DIR_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let dir = std::env::temp_dir()
+            .join(format!("rsds-spill-{}-{}", std::process::id(), seq));
+        std::fs::create_dir_all(&dir)?;
+        Ok(FsSpill { dir, state: Mutex::new(FsState::default()) })
+    }
+
+    fn slot_path(&self, slot: u64) -> PathBuf {
+        self.dir.join(format!("slot-{slot}"))
+    }
+}
+
+impl SpillBackend for FsSpill {
+    fn write(&self, bytes: &[u8]) -> io::Result<u64> {
+        let slot = {
+            let mut s = self.state.lock().unwrap();
+            s.free_list.pop().unwrap_or_else(|| {
+                let id = s.next_slot;
+                s.next_slot += 1;
+                id
+            })
+        };
+        if let Err(e) = std::fs::write(self.slot_path(slot), bytes) {
+            self.state.lock().unwrap().free_list.push(slot);
+            return Err(e);
+        }
+        let mut s = self.state.lock().unwrap();
+        s.live.insert(slot, bytes.len() as u64);
+        s.total_bytes += bytes.len() as u64;
+        Ok(slot)
+    }
+
+    fn read(&self, slot: u64) -> io::Result<Vec<u8>> {
+        if !self.state.lock().unwrap().live.contains_key(&slot) {
+            return Err(io::Error::new(
+                io::ErrorKind::NotFound,
+                format!("spill slot {slot} is not live"),
+            ));
+        }
+        std::fs::read(self.slot_path(slot))
+    }
+
+    fn free(&self, slot: u64) -> bool {
+        let was_live = {
+            let mut s = self.state.lock().unwrap();
+            match s.live.remove(&slot) {
+                Some(n) => {
+                    s.total_bytes -= n;
+                    s.free_list.push(slot);
+                    true
+                }
+                None => false,
+            }
+        };
+        if was_live {
+            let _ = std::fs::remove_file(self.slot_path(slot));
+        }
+        was_live
+    }
+
+    fn spilled_bytes(&self) -> u64 {
+        self.state.lock().unwrap().total_bytes
+    }
+}
+
+impl Drop for FsSpill {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+// ---------------------------------------------------------------------
+// In-memory tier (tests, property tests, loom models)
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Default)]
+struct MemState {
+    slots: Vec<Option<Vec<u8>>>,
+    free_list: Vec<u64>,
+    total_bytes: u64,
+    misuse: u32,
+}
+
+/// In-memory backend with observable misuse: a double `free` or a read of
+/// a freed slot returns failure *and* bumps [`MemSpill::misuse_count`],
+/// which the fault-injection and loom suites assert stays zero.
+#[derive(Debug, Default)]
+pub struct MemSpill {
+    state: Mutex<MemState>,
+}
+
+impl MemSpill {
+    pub fn new() -> MemSpill {
+        MemSpill::default()
+    }
+
+    /// How many slot-discipline violations (double free, read-after-free)
+    /// the backend has observed. Zero iff the store's slot bookkeeping is
+    /// correct.
+    pub fn misuse_count(&self) -> u32 {
+        self.state.lock().unwrap().misuse
+    }
+
+    /// Number of live (written, not yet freed) slots.
+    pub fn live_slots(&self) -> usize {
+        self.state.lock().unwrap().slots.iter().flatten().count()
+    }
+}
+
+impl SpillBackend for MemSpill {
+    fn write(&self, bytes: &[u8]) -> io::Result<u64> {
+        let mut s = self.state.lock().unwrap();
+        s.total_bytes += bytes.len() as u64;
+        match s.free_list.pop() {
+            Some(slot) => {
+                s.slots[slot as usize] = Some(bytes.to_vec());
+                Ok(slot)
+            }
+            None => {
+                s.slots.push(Some(bytes.to_vec()));
+                Ok(s.slots.len() as u64 - 1)
+            }
+        }
+    }
+
+    fn read(&self, slot: u64) -> io::Result<Vec<u8>> {
+        let mut s = self.state.lock().unwrap();
+        match s.slots.get(slot as usize).and_then(|o| o.as_ref()) {
+            Some(b) => Ok(b.clone()), // lint: clone-ok — handing bytes back out of the tier
+            None => {
+                s.misuse += 1;
+                Err(io::Error::new(
+                    io::ErrorKind::NotFound,
+                    format!("read of dead spill slot {slot}"),
+                ))
+            }
+        }
+    }
+
+    fn free(&self, slot: u64) -> bool {
+        let mut s = self.state.lock().unwrap();
+        match s.slots.get_mut(slot as usize).and_then(Option::take) {
+            Some(b) => {
+                s.total_bytes -= b.len() as u64;
+                s.free_list.push(slot);
+                true
+            }
+            None => {
+                s.misuse += 1;
+                false
+            }
+        }
+    }
+
+    fn spilled_bytes(&self) -> u64 {
+        self.state.lock().unwrap().total_bytes
+    }
+}
+
+#[cfg(test)]
+#[cfg(not(loom))]
+mod tests {
+    use super::*;
+
+    fn exercise(backend: &dyn SpillBackend) {
+        let a = backend.write(b"alpha").unwrap();
+        let b = backend.write(b"bravo-bravo").unwrap();
+        assert_ne!(a, b);
+        assert_eq!(backend.spilled_bytes(), 16);
+        assert_eq!(backend.read(a).unwrap(), b"alpha");
+        assert_eq!(backend.read(a).unwrap(), b"alpha", "read does not consume");
+        assert!(backend.free(a));
+        assert_eq!(backend.spilled_bytes(), 11);
+        assert!(backend.read(a).is_err(), "freed slot is dead");
+        assert!(!backend.free(a), "double free reported");
+        // Freed ids recycle.
+        let c = backend.write(b"charlie").unwrap();
+        assert_eq!(c, a, "slot id reused from the free list");
+        assert_eq!(backend.read(b).unwrap(), b"bravo-bravo");
+        assert!(backend.free(b));
+        assert!(backend.free(c));
+        assert_eq!(backend.spilled_bytes(), 0);
+    }
+
+    #[test]
+    fn mem_spill_discipline() {
+        let m = MemSpill::new();
+        exercise(&m);
+        assert_eq!(m.misuse_count(), 2, "the two deliberate misuses above");
+        assert_eq!(m.live_slots(), 0);
+    }
+
+    #[test]
+    fn fs_spill_discipline() {
+        let f = FsSpill::new().unwrap();
+        let dir = f.dir.clone();
+        exercise(&f);
+        assert!(dir.exists());
+        drop(f);
+        assert!(!dir.exists(), "spill dir removed on drop");
+    }
+
+    #[test]
+    fn fs_spill_dirs_are_distinct() {
+        let a = FsSpill::new().unwrap();
+        let b = FsSpill::new().unwrap();
+        assert_ne!(a.dir, b.dir);
+    }
+}

@@ -1,0 +1,551 @@
+//! The worker-side object store: reference-counted task outputs with an
+//! LRU memory budget and spill-to-disk.
+//!
+//! Replaces the raw `Mutex<HashMap<DataKey, Arc<Vec<u8>>>>` the worker
+//! used through PR 7. Three behaviors the raw map couldn't express:
+//!
+//! 1. **Self-eviction.** Each entry starts with the graph-wide consumer
+//!    count of its task (shipped on `compute-task`); every gather — local
+//!    or served to a peer — decrements it, and at zero the bytes drop
+//!    immediately instead of lingering until `release-run`. Entries with
+//!    consumer count 0 on the wire (sinks, replicas, passive fetch
+//!    caches) are *pinned*: only `release-run` removes them.
+//! 2. **Spill.** When resident bytes exceed the budget (`--memory-limit`),
+//!    least-recently-used entries are written to a [`SpillBackend`] slot
+//!    and their memory freed; a later `get` reports [`Lookup::Spilled`]
+//!    and the (cold) [`ObjectStore::restore`] reads them back. Graphs
+//!    whose live outputs exceed worker RAM complete instead of dying.
+//! 3. **Safe concurrent eviction.** The evictor never writes to disk while
+//!    holding the store lock: a victim moves `Resident → Spilling` (bytes
+//!    still readable), is written *outside* the lock, then commits
+//!    `Spilling → Spilled` — or frees the slot if the entry was consumed
+//!    or released meanwhile. `tests/loom_models.rs` model-checks the
+//!    get/restore-vs-spill race on this state machine.
+//!
+//! Lock order: store lock, then (optionally) backend-internal lock —
+//! never the reverse. The backend `write` in the evictor runs with the
+//! store unlocked; `restore` reads the backend under the store lock,
+//! which keeps slot free exactly-once without a `Restoring` state.
+
+use super::spill::SpillBackend;
+use crate::protocol::RunId;
+use crate::sync::{Arc, Mutex};
+use crate::taskgraph::TaskId;
+use std::collections::{HashMap, HashSet};
+
+/// Store key: task outputs are namespaced by run because [`TaskId`]s
+/// recycle across graph submissions.
+pub type DataKey = (RunId, TaskId);
+
+/// Where an entry's bytes currently live.
+enum Slot {
+    /// In memory, counted against the budget.
+    Resident(Arc<Vec<u8>>),
+    /// In memory *and* being written to the backend by the evictor, which
+    /// holds the pending slot id. Readers still hit; the evictor decides
+    /// at commit time whether the write sticks.
+    Spilling(Arc<Vec<u8>>),
+    /// On the backend only; `restore` brings it back.
+    Spilled(u64),
+}
+
+struct Entry {
+    slot: Slot,
+    nbytes: u64,
+    /// Remaining consumers; `None` = pinned (never self-evicts).
+    consumers: Option<u32>,
+    /// LRU stamp from the store's monotonic clock.
+    last_used: u64,
+}
+
+struct Inner {
+    entries: HashMap<DataKey, Entry>,
+    /// Runs already released — late inserts from in-flight tasks of a
+    /// retired run are dropped here, under the same lock as the map, so
+    /// there is no release/insert race window.
+    released: HashSet<RunId>,
+    resident_bytes: u64,
+    clock: u64,
+    spills: u64,
+    restores: u64,
+}
+
+/// Result of the hot-path [`ObjectStore::get`].
+pub enum Lookup {
+    /// Bytes are in memory.
+    Hit(Arc<Vec<u8>>),
+    /// Key is live but its bytes are on the spill tier — call
+    /// [`ObjectStore::restore`] (cold path).
+    Spilled,
+    /// Key is not in the store (never inserted, consumed away, or its run
+    /// was released).
+    Miss,
+}
+
+pub struct ObjectStore {
+    inner: Mutex<Inner>,
+    backend: Arc<dyn SpillBackend>,
+    /// Resident-byte budget; `None` disables eviction entirely.
+    limit: Option<u64>,
+}
+
+impl ObjectStore {
+    pub fn new(limit: Option<u64>, backend: Arc<dyn SpillBackend>) -> ObjectStore {
+        ObjectStore {
+            inner: Mutex::new(Inner {
+                entries: HashMap::new(),
+                released: HashSet::new(),
+                resident_bytes: 0,
+                clock: 0,
+                spills: 0,
+                restores: 0,
+            }),
+            backend,
+            limit,
+        }
+    }
+
+    /// Budget-less store (no eviction; the backend is never written).
+    /// What the worker runs without `--memory-limit`.
+    pub fn unbounded(backend: Arc<dyn SpillBackend>) -> ObjectStore {
+        ObjectStore::new(None, backend)
+    }
+
+    /// Look a key up and touch its LRU stamp. Hot path (registered in
+    /// `xtask/hotpath.txt`): no allocation, no I/O — a spilled entry is
+    /// reported, not restored.
+    pub fn get(&self, key: &DataKey) -> Lookup {
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let clock = inner.clock;
+        match inner.entries.get_mut(key) {
+            Some(e) => {
+                e.last_used = clock;
+                match &e.slot {
+                    Slot::Resident(b) | Slot::Spilling(b) => {
+                        Lookup::Hit(b.clone()) // lint: clone-ok — Arc refcount bump
+                    }
+                    Slot::Spilled(_) => Lookup::Spilled,
+                }
+            }
+            None => Lookup::Miss,
+        }
+    }
+
+    /// Insert a task output. `consumers` is the graph-wide consumer count
+    /// (0 = pinned until `release-run`). Returns `false` — without
+    /// storing — when the key is already present (duplicate results are
+    /// legal after recovery) or its run was released. Hot path: no
+    /// allocation beyond map growth.
+    pub fn insert(&self, key: DataKey, bytes: Arc<Vec<u8>>, consumers: u32) -> bool {
+        let nbytes = bytes.len() as u64;
+        let mut inner = self.inner.lock().unwrap();
+        if inner.released.contains(&key.0) || inner.entries.contains_key(&key) {
+            return false;
+        }
+        inner.clock += 1;
+        let clock = inner.clock;
+        inner.entries.insert(
+            key,
+            Entry {
+                slot: Slot::Resident(bytes),
+                nbytes,
+                consumers: if consumers == 0 { None } else { Some(consumers) },
+                last_used: clock,
+            },
+        );
+        inner.resident_bytes += nbytes;
+        true
+    }
+
+    /// Record one consumption of `key` (a local gather or a serve to a
+    /// peer). At zero remaining consumers the entry self-evicts; the
+    /// return value is `true` exactly then, and the caller owes the
+    /// server a `replica-dropped` so recovery never counts on the freed
+    /// copy. Pinned entries and unknown keys are no-ops. The decrement
+    /// saturates: a duplicate result re-fetched after recovery can serve
+    /// more consumptions than the graph predicted.
+    pub fn consume(&self, key: &DataKey) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let evict = match inner.entries.get_mut(key) {
+            Some(e) => match e.consumers {
+                Some(ref mut n) => {
+                    *n = n.saturating_sub(1);
+                    *n == 0
+                }
+                None => false,
+            },
+            None => false,
+        };
+        if evict {
+            if let Some(e) = inner.entries.remove(key) {
+                Inner::drop_entry(&mut inner, e, &*self.backend);
+            }
+        }
+        evict
+    }
+
+    /// Bring a spilled entry's bytes back to memory (cold path). Reads the
+    /// backend under the store lock — that serializes concurrent restores
+    /// of one key, so the slot is freed exactly once. Returns `None` when
+    /// the key is gone or the backend read fails (caller treats it as a
+    /// miss and falls back to the fetch/recompute path).
+    pub fn restore(&self, key: &DataKey) -> Option<Arc<Vec<u8>>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let clock = inner.clock;
+        let slot_id = match inner.entries.get_mut(key) {
+            Some(e) => {
+                e.last_used = clock;
+                match e.slot {
+                    Slot::Resident(ref b) | Slot::Spilling(ref b) => {
+                        return Some(b.clone()); // lint: clone-ok — Arc refcount bump
+                    }
+                    Slot::Spilled(id) => id,
+                }
+            }
+            None => return None,
+        };
+        let bytes = match self.backend.read(slot_id) {
+            Ok(b) => Arc::new(b),
+            Err(_) => return None,
+        };
+        self.backend.free(slot_id);
+        inner.restores += 1;
+        let nbytes = match inner.entries.get_mut(key) {
+            Some(e) => {
+                e.slot = Slot::Resident(bytes.clone()); // lint: clone-ok — Arc refcount bump
+                e.nbytes
+            }
+            // The lock is held across the read, so the entry cannot
+            // vanish; defensive arm for completeness.
+            None => return Some(bytes),
+        };
+        inner.resident_bytes += nbytes;
+        Some(bytes)
+    }
+
+    /// Evict least-recently-used resident entries until resident bytes fit
+    /// the budget (no-op without one). Cold path, called after inserts and
+    /// restores. Backend writes happen with the store unlocked; the
+    /// `Spilling` marker keeps the victim readable meanwhile and the
+    /// commit step frees the slot if the entry vanished mid-write.
+    pub fn maybe_spill(&self) {
+        let limit = match self.limit {
+            Some(l) => l,
+            None => return,
+        };
+        loop {
+            // Pick the LRU resident victim under the lock.
+            let (key, bytes) = {
+                let mut inner = self.inner.lock().unwrap();
+                if inner.resident_bytes <= limit {
+                    return;
+                }
+                let victim = inner
+                    .entries
+                    .iter()
+                    .filter(|(_, e)| matches!(e.slot, Slot::Resident(_)))
+                    .min_by_key(|(_, e)| e.last_used)
+                    .map(|(k, _)| *k);
+                let key = match victim {
+                    Some(k) => k,
+                    // Everything is already spilling/spilled: another
+                    // evictor owns the in-flight writes.
+                    None => return,
+                };
+                let bytes = match inner.entries.get_mut(&key) {
+                    Some(e) => match e.slot {
+                        Slot::Resident(ref b) => {
+                            let b = b.clone(); // lint: clone-ok — Arc refcount bump
+                            e.slot = Slot::Spilling(b.clone()); // lint: clone-ok — Arc refcount bump
+                            b
+                        }
+                        _ => continue,
+                    },
+                    None => continue,
+                };
+                (key, bytes)
+            };
+
+            // Write outside the lock; readers still hit the Spilling arc.
+            let slot_id = match self.backend.write(&bytes) {
+                Ok(id) => id,
+                Err(_) => {
+                    // Backend failure: revert to Resident and give up —
+                    // better over-budget than losing the bytes.
+                    let mut inner = self.inner.lock().unwrap();
+                    if let Some(e) = inner.entries.get_mut(&key) {
+                        if matches!(e.slot, Slot::Spilling(_)) {
+                            e.slot = Slot::Resident(bytes);
+                        }
+                    }
+                    return;
+                }
+            };
+
+            // Commit: entry may have been consumed or released mid-write.
+            let mut inner = self.inner.lock().unwrap();
+            let committed = match inner.entries.get_mut(&key) {
+                Some(e) if matches!(e.slot, Slot::Spilling(_)) => {
+                    e.slot = Slot::Spilled(slot_id);
+                    Some(e.nbytes)
+                }
+                _ => None,
+            };
+            match committed {
+                Some(nbytes) => {
+                    inner.resident_bytes -= nbytes;
+                    inner.spills += 1;
+                }
+                None => {
+                    self.backend.free(slot_id);
+                }
+            }
+        }
+    }
+
+    /// Retire a run: drop all its entries (freeing spill slots) and
+    /// remember the run id so in-flight inserts land on the floor.
+    pub fn release_run(&self, run: RunId) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.released.insert(run);
+        let keys: Vec<DataKey> =
+            inner.entries.keys().filter(|k| k.0 == run).copied().collect();
+        for k in keys {
+            if let Some(e) = inner.entries.remove(&k) {
+                Inner::drop_entry(&mut inner, e, &*self.backend);
+            }
+        }
+    }
+
+    /// Whether `run` was released (checked by executor threads before
+    /// running a task popped just as the release landed).
+    pub fn is_released(&self, run: RunId) -> bool {
+        self.inner.lock().unwrap().released.contains(&run)
+    }
+
+    // ---- diagnostics (tests, stats line) ----
+
+    pub fn resident_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().resident_bytes
+    }
+
+    pub fn spilled_bytes(&self) -> u64 {
+        self.backend.spilled_bytes()
+    }
+
+    pub fn num_entries(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    /// (spill events, restore events).
+    pub fn spill_stats(&self) -> (u64, u64) {
+        let inner = self.inner.lock().unwrap();
+        (inner.spills, inner.restores)
+    }
+
+    pub fn memory_limit(&self) -> Option<u64> {
+        self.limit
+    }
+
+    /// Remaining consumer count of a live key (`Some(None)` = pinned).
+    /// Test/oracle hook.
+    pub fn refcount(&self, key: &DataKey) -> Option<Option<u32>> {
+        self.inner.lock().unwrap().entries.get(key).map(|e| e.consumers)
+    }
+}
+
+impl Inner {
+    /// Free whatever a removed entry held. `Spilling` bytes stay counted
+    /// out here (they are removed from resident accounting) while the
+    /// in-flight evictor's commit step sees the entry gone and frees the
+    /// freshly written slot itself.
+    fn drop_entry(inner: &mut Inner, e: Entry, backend: &dyn SpillBackend) {
+        match e.slot {
+            Slot::Resident(_) | Slot::Spilling(_) => {
+                inner.resident_bytes -= e.nbytes;
+            }
+            Slot::Spilled(slot) => {
+                backend.free(slot);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+#[cfg(not(loom))]
+mod tests {
+    use super::*;
+    use crate::worker::spill::MemSpill;
+
+    fn key(run: u32, task: u32) -> DataKey {
+        (RunId(run), TaskId(task))
+    }
+
+    fn store_with(limit: Option<u64>) -> (ObjectStore, Arc<MemSpill>) {
+        let backend = Arc::new(MemSpill::new());
+        (ObjectStore::new(limit, backend.clone()), backend)
+    }
+
+    fn bytes(n: usize) -> Arc<Vec<u8>> {
+        Arc::new(vec![0xAB; n])
+    }
+
+    fn assert_hit(s: &ObjectStore, k: &DataKey, len: usize) {
+        match s.get(k) {
+            Lookup::Hit(b) => assert_eq!(b.len(), len),
+            Lookup::Spilled => panic!("expected hit, got spilled"),
+            Lookup::Miss => panic!("expected hit, got miss"),
+        }
+    }
+
+    #[test]
+    fn refcounted_entry_self_evicts_at_zero() {
+        let (s, _) = store_with(None);
+        let k = key(1, 7);
+        assert!(s.insert(k, bytes(10), 2));
+        assert_hit(&s, &k, 10);
+        assert!(!s.consume(&k), "one consumer left");
+        assert_hit(&s, &k, 10);
+        assert!(s.consume(&k), "last consumer drops the entry");
+        assert!(matches!(s.get(&k), Lookup::Miss));
+        assert_eq!(s.resident_bytes(), 0);
+        assert!(!s.consume(&k), "consume of a gone key is a no-op");
+    }
+
+    #[test]
+    fn pinned_entry_survives_consumption() {
+        let (s, _) = store_with(None);
+        let k = key(1, 7);
+        assert!(s.insert(k, bytes(10), 0));
+        for _ in 0..5 {
+            assert!(!s.consume(&k));
+        }
+        assert_hit(&s, &k, 10);
+        s.release_run(RunId(1));
+        assert!(matches!(s.get(&k), Lookup::Miss));
+    }
+
+    #[test]
+    fn duplicate_insert_is_rejected_and_harmless() {
+        let (s, _) = store_with(None);
+        let k = key(1, 7);
+        assert!(s.insert(k, bytes(10), 1));
+        assert!(!s.insert(k, bytes(99), 1), "duplicate (post-recovery rerun)");
+        assert_hit(&s, &k, 10);
+        assert_eq!(s.resident_bytes(), 10);
+    }
+
+    #[test]
+    fn insert_after_release_lands_on_the_floor() {
+        let (s, _) = store_with(None);
+        s.release_run(RunId(3));
+        assert!(!s.insert(key(3, 1), bytes(10), 1));
+        assert!(matches!(s.get(&key(3, 1)), Lookup::Miss));
+        assert!(s.is_released(RunId(3)));
+        assert!(!s.is_released(RunId(4)));
+        assert!(s.insert(key(4, 1), bytes(10), 1), "other runs unaffected");
+    }
+
+    #[test]
+    fn lru_victim_spills_first_and_restores() {
+        let (s, backend) = store_with(Some(25));
+        let (ka, kb, kc) = (key(1, 1), key(1, 2), key(1, 3));
+        s.insert(ka, bytes(10), 1);
+        s.insert(kb, bytes(10), 1);
+        // Touch `ka` so `kb` is LRU.
+        assert_hit(&s, &ka, 10);
+        s.insert(kc, bytes(10), 1);
+        s.maybe_spill();
+        assert!(s.resident_bytes() <= 25);
+        assert!(matches!(s.get(&kb), Lookup::Spilled), "LRU entry spilled");
+        assert_hit(&s, &ka, 10);
+        assert_hit(&s, &kc, 10);
+        assert_eq!(backend.spilled_bytes(), 10);
+
+        let b = s.restore(&kb).expect("restore");
+        assert_eq!(b.len(), 10);
+        assert_eq!(backend.spilled_bytes(), 0, "slot freed on restore");
+        assert_hit(&s, &kb, 10);
+        let (spills, restores) = s.spill_stats();
+        assert_eq!((spills, restores), (1, 1));
+        assert_eq!(backend.misuse_count(), 0);
+    }
+
+    #[test]
+    fn restore_of_resident_key_is_a_touch() {
+        let (s, _) = store_with(None);
+        let k = key(1, 1);
+        s.insert(k, bytes(4), 1);
+        assert_eq!(s.restore(&k).expect("resident restore").len(), 4);
+        assert_eq!(s.spill_stats(), (0, 0));
+    }
+
+    #[test]
+    fn consume_of_spilled_entry_frees_the_slot() {
+        let (s, backend) = store_with(Some(5));
+        let k = key(1, 1);
+        s.insert(k, bytes(10), 1);
+        s.maybe_spill();
+        assert!(matches!(s.get(&k), Lookup::Spilled));
+        assert_eq!(backend.spilled_bytes(), 10);
+        assert!(s.consume(&k));
+        assert_eq!(backend.spilled_bytes(), 0);
+        assert_eq!(backend.misuse_count(), 0);
+        assert!(matches!(s.get(&k), Lookup::Miss));
+    }
+
+    #[test]
+    fn release_run_frees_spill_slots_of_that_run_only() {
+        let (s, backend) = store_with(Some(0));
+        s.insert(key(1, 1), bytes(8), 1);
+        s.insert(key(2, 1), bytes(8), 1);
+        s.maybe_spill();
+        assert_eq!(backend.spilled_bytes(), 16);
+        assert_eq!(s.resident_bytes(), 0);
+        s.release_run(RunId(1));
+        assert_eq!(backend.spilled_bytes(), 8);
+        assert!(matches!(s.get(&key(1, 1)), Lookup::Miss));
+        assert!(matches!(s.get(&key(2, 1)), Lookup::Spilled));
+        assert_eq!(backend.misuse_count(), 0);
+    }
+
+    #[test]
+    fn graph_larger_than_budget_stays_fully_readable() {
+        // The spill-completion property in miniature: 10 live outputs,
+        // budget fits only 3; every key must remain readable.
+        let (s, backend) = store_with(Some(30));
+        for t in 0..10u32 {
+            s.insert(key(1, t), bytes(10), 0);
+            s.maybe_spill();
+            assert!(s.resident_bytes() <= 30);
+        }
+        for t in 0..10u32 {
+            let k = key(1, t);
+            let b = match s.get(&k) {
+                Lookup::Hit(b) => b,
+                Lookup::Spilled => s.restore(&k).expect("restore"),
+                Lookup::Miss => panic!("live key {t} lost"),
+            };
+            assert_eq!(b.len(), 10);
+            s.maybe_spill();
+            assert!(s.resident_bytes() <= 30);
+        }
+        assert_eq!(backend.misuse_count(), 0);
+        s.release_run(RunId(1));
+        assert_eq!(backend.spilled_bytes(), 0);
+        assert_eq!(s.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn unbounded_store_never_touches_the_backend() {
+        let (s, backend) = store_with(None);
+        for t in 0..50u32 {
+            s.insert(key(1, t), bytes(100), 1);
+            s.maybe_spill();
+        }
+        assert_eq!(s.resident_bytes(), 5000);
+        assert_eq!(backend.spilled_bytes(), 0);
+    }
+}

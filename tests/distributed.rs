@@ -36,6 +36,7 @@ fn workers(addr: &str, n: u32) -> Vec<WorkerHandle> {
                 name: format!("it-w{i}"),
                 ncores: 1,
                 node: i / 4,
+                memory_limit: None,
             })
             .expect("worker start")
         })
@@ -245,6 +246,7 @@ fn zero_worker_runs_graphs_instantly() {
                 name: format!("zero-{i}"),
                 ncores: 1,
                 node: 0,
+                memory_limit: None,
             })
             .unwrap()
         })
@@ -286,6 +288,7 @@ fn dask_emulation_is_measurably_slower() {
                     name: format!("z{i}"),
                     ncores: 1,
                     node: 0,
+                    memory_limit: None,
                 })
                 .unwrap()
             })
@@ -730,6 +733,295 @@ fn worker_killed_mid_run_recovers_on_sharded_server() {
     for w in &ws {
         w.shutdown();
     }
+    srv.shutdown();
+}
+
+// ---- replicated object store (PR 8 tentpole) ----
+
+fn server_replicated(k: usize) -> rsds::server::ServerHandle {
+    serve(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        scheduler: "ws".into(),
+        seed: 42,
+        replication: k,
+        // Every output with at least one consumer is "hot": the whole
+        // graph replicates, so the kill tests don't depend on which tasks
+        // the hint heuristic happens to pick.
+        replication_fanout: 1,
+        ..ServerConfig::default()
+    })
+    .expect("server start")
+}
+
+/// One long busy root + `n_leaves` fast leaves + a sink over all of them.
+/// The leaves finish (and replicate) within the first few hundred ms while
+/// the root pins exactly one worker for `root_us`, so the cluster reaches a
+/// quiescent "one busy, the rest idle holding data" phase — the window the
+/// kill tests aim at: an idle worker's death is pure data loss, with zero
+/// assignments in flight on it.
+fn stem_graph(n_leaves: usize, root_us: u64) -> rsds::taskgraph::TaskGraph {
+    use rsds::taskgraph::{GraphBuilder, Payload};
+    let mut b = GraphBuilder::new();
+    let root = b.add("root", vec![], root_us, 1_000, Payload::BusyWait);
+    let mut inputs = vec![root];
+    for i in 0..n_leaves {
+        inputs.push(b.add(format!("leaf-{i}"), vec![], 1_000, 10_000, Payload::NoOp));
+    }
+    b.add("sink", inputs, 1_000, 100, Payload::MergeInputs);
+    b.build("stem").expect("valid graph")
+}
+
+/// Wait for the stem graph's quiescent phase (leaves done, root mid-burn)
+/// and return an idle worker to kill. Panics if the cluster never settles.
+fn pick_idle_victim(ws: &[WorkerHandle]) -> usize {
+    // By 1.2 s every leaf (≤ 100 ms of total work) has finished and its
+    // replica pushes have been confirmed; the 3 s root is still burning.
+    std::thread::sleep(std::time::Duration::from_millis(1_200));
+    let deadline = std::time::Instant::now() + std::time::Duration::from_millis(1_200);
+    loop {
+        let busy: Vec<bool> = ws.iter().map(|w| w.busy()).collect();
+        if busy.iter().filter(|b| **b).count() == 1 {
+            return busy.iter().position(|b| !**b).expect("an idle worker exists");
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "cluster never quiesced to exactly one busy worker: {busy:?}"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn replicated_outputs_make_idle_worker_death_trivial() {
+    // k = 2: every leaf output lives on two workers by the time the kill
+    // lands, and the victim is idle — so its death must be absorbed as a
+    // pure who-has purge: no recovery pass, no recomputed task, and the
+    // sink completes by fetching each leaf from its surviving replica.
+    let srv = server_replicated(2);
+    let addr = srv.addr.to_string();
+    let ws = workers(&addr, 3);
+    let g = stem_graph(40, 3_000_000);
+    let caddr = addr.clone();
+    let client_thread = std::thread::spawn(move || {
+        let mut c = Client::connect(&caddr, "repl-kill").unwrap();
+        c.run_graph(&g).expect("run must survive the idle worker's death")
+    });
+    let victim = pick_idle_victim(&ws);
+    ws[victim].shutdown();
+    let res = client_thread.join().unwrap();
+    assert_eq!(res.n_tasks, 42);
+    let reports = srv.reports();
+    assert_eq!(reports.len(), 1);
+    assert_eq!(
+        reports[0].recoveries, 0,
+        "replicated data death is a trivial purge, not a recovery: {reports:?}"
+    );
+    assert_eq!(reports[0].tasks_recomputed, 0, "nothing re-executed: {reports:?}");
+    for w in &ws {
+        w.shutdown();
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn sole_replica_death_forces_recompute() {
+    // The k = 1 contrast: identical graph, identical kill point, but the
+    // idle victim now holds the *only* copy of every leaf it produced —
+    // the server must resurrect those leaves (recoveries ≥ 1, recomputed
+    // tasks ≥ 1) before the sink can run.
+    let srv = server("ws");
+    let addr = srv.addr.to_string();
+    let ws = workers(&addr, 3);
+    let g = stem_graph(40, 3_000_000);
+    let caddr = addr.clone();
+    let client_thread = std::thread::spawn(move || {
+        let mut c = Client::connect(&caddr, "sole-kill").unwrap();
+        c.run_graph(&g).expect("recovery must still complete the run")
+    });
+    let victim = pick_idle_victim(&ws);
+    ws[victim].shutdown();
+    let res = client_thread.join().unwrap();
+    assert_eq!(res.n_tasks, 42);
+    let reports = srv.reports();
+    assert_eq!(reports.len(), 1);
+    assert!(reports[0].recoveries >= 1, "sole copies were lost: {reports:?}");
+    assert!(reports[0].tasks_recomputed >= 1, "lost leaves re-ran: {reports:?}");
+    for w in &ws {
+        w.shutdown();
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn worker_killed_during_replica_push_completes() {
+    // ~1 MiB outputs keep put-data pushes and their replica-added
+    // confirmations in flight for much of the run; a kill in the middle
+    // races the death against pushes to, from and through the victim. The
+    // run must complete whatever the interleaving hits — half-received
+    // replicas are never counted (the server only trusts confirmations
+    // from the *receiving* peer), so recovery sees a consistent who-has.
+    let srv = server_replicated(2);
+    let addr = srv.addr.to_string();
+    let mut ws = workers(&addr, 3);
+    let victim = ws.remove(0);
+    let g = {
+        use rsds::taskgraph::{GraphBuilder, Payload};
+        let mut b = GraphBuilder::new();
+        let mut leaves = Vec::new();
+        for i in 0..60 {
+            leaves.push(b.add(format!("big-{i}"), vec![], 20_000, 1 << 20, Payload::BusyWait));
+        }
+        b.add("sink", leaves, 1_000, 100, Payload::MergeInputs);
+        b.build("push-kill").expect("valid graph")
+    };
+    let mut client = Client::connect(&addr, "push-kill").unwrap();
+    let killer = std::thread::spawn(move || {
+        std::thread::sleep(std::time::Duration::from_millis(150));
+        victim.shutdown();
+    });
+    let res = client.run_graph(&g).expect("run must survive a death mid-push");
+    killer.join().unwrap();
+    assert_eq!(res.n_tasks, 61);
+    assert_eq!(srv.reports().len(), 1);
+    for w in &ws {
+        w.shutdown();
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn fetch_failover_uses_surviving_replica() {
+    // Replica-aware fetch in isolation, on a hand-rolled control plane: a
+    // fake server registers two real workers, seeds worker 2 with a
+    // replica via put-data, then hands worker 1 a compute whose input
+    // names a *dead* primary address first and worker 2 only as the
+    // alternate. The worker must fail over to the surviving replica and
+    // finish — no `fetch-failed` retry round-trip through the server.
+    use rsds::protocol::{decode_msg, RunId, TaskInputLoc};
+    use rsds::taskgraph::TaskId;
+    use std::net::TcpListener;
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    // Welcome both workers from a side thread (run_worker blocks on it).
+    let acceptor = std::thread::spawn(move || {
+        (0..2u32)
+            .map(|i| {
+                let (mut s, _) = listener.accept().unwrap();
+                s.set_read_timeout(Some(std::time::Duration::from_secs(20))).unwrap();
+                let frame = read_frame(&mut s).unwrap();
+                let msg = decode_msg(&frame).unwrap();
+                assert!(matches!(msg, Msg::RegisterWorker { .. }), "{:?}", msg.op());
+                write_frame(&mut s, &encode_msg(&Msg::Welcome { id: i })).unwrap();
+                s
+            })
+            .collect::<Vec<_>>()
+    });
+    let w1 = run_worker(WorkerConfig {
+        server_addr: addr.clone(),
+        name: "fo-w1".into(),
+        ncores: 1,
+        node: 0,
+        memory_limit: None,
+    })
+    .unwrap();
+    let w2 = run_worker(WorkerConfig {
+        server_addr: addr.clone(),
+        name: "fo-w2".into(),
+        ncores: 1,
+        node: 0,
+        memory_limit: None,
+    })
+    .unwrap();
+    let mut conns = acceptor.join().unwrap();
+
+    // Seed the replica on worker 2 through its data plane, and wait for
+    // its replica-added confirmation so the copy is known readable.
+    let run = RunId(7);
+    let input = TaskId(0);
+    let payload: Vec<u8> = (0..10_000u32).map(|i| i as u8).collect();
+    {
+        let mut s = TcpStream::connect(&w2.data_addr).unwrap();
+        write_frame(&mut s, &encode_msg(&Msg::PutData { run, task: input, data: payload }))
+            .unwrap();
+        let confirm = decode_msg(&read_frame(&mut conns[1]).unwrap()).unwrap();
+        assert!(
+            matches!(confirm, Msg::ReplicaAdded { run: r, task: t } if r == run && t == input),
+            "{:?}",
+            confirm.op()
+        );
+    }
+
+    // A primary address that refuses connections: bind, record, drop.
+    let dead_addr = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+
+    // Even task id ⇒ the rotating fetch starts at the primary, so the
+    // worker really does try the dead source before failing over.
+    let compute = Msg::ComputeTask {
+        run,
+        task: TaskId(2),
+        key: "failover-sink".into(),
+        payload: rsds::taskgraph::Payload::MergeInputs,
+        duration_us: 0,
+        output_size: 64,
+        inputs: vec![TaskInputLoc {
+            task: input,
+            addr: dead_addr,
+            alts: vec![w2.data_addr.clone()],
+            nbytes: 10_000,
+        }],
+        priority: 0,
+        consumers: 0,
+    };
+    write_frame(&mut conns[0], &encode_msg(&compute)).unwrap();
+    let reply = decode_msg(&read_frame(&mut conns[0]).unwrap()).unwrap();
+    match reply {
+        Msg::TaskFinished(info) => {
+            assert_eq!((info.run, info.task), (run, TaskId(2)));
+            assert_eq!(info.nbytes, 64);
+        }
+        other => panic!("expected task-finished via the replica, got {:?}", other.op()),
+    }
+    w1.shutdown();
+    w2.shutdown();
+}
+
+#[test]
+fn memory_budget_spills_and_completes() {
+    // A 64 KiB store budget on the only worker, 32 × 16 KiB live leaf
+    // outputs: the graph cannot fit in memory, so completion proves the
+    // LRU spill tier wrote entries out and the sink's gather transparently
+    // restored them.
+    let srv = server("ws");
+    let addr = srv.addr.to_string();
+    let w = run_worker(WorkerConfig {
+        server_addr: addr.clone(),
+        name: "budget-w0".into(),
+        ncores: 1,
+        node: 0,
+        memory_limit: Some(64 * 1024),
+    })
+    .expect("worker start");
+    let g = {
+        use rsds::taskgraph::{GraphBuilder, Payload};
+        let mut b = GraphBuilder::new();
+        let mut leaves = Vec::new();
+        for i in 0..32 {
+            leaves.push(b.add(format!("chunk-{i}"), vec![], 1_000, 16 * 1024, Payload::NoOp));
+        }
+        b.add("sink", leaves, 1_000, 1_024, Payload::MergeInputs);
+        b.build("oversized").expect("valid graph")
+    };
+    let mut client = Client::connect(&addr, "spiller").unwrap();
+    let res = client.run_graph(&g).expect("budgeted run must complete via spill");
+    assert_eq!(res.n_tasks, 33);
+    let (spills, restores) = w.spill_stats();
+    assert!(spills > 0, "live outputs exceeded the budget, something must spill");
+    assert!(restores > 0, "the sink's gather restored spilled inputs");
+    w.shutdown();
     srv.shutdown();
 }
 

@@ -2,15 +2,17 @@
 //! `RUSTFLAGS="--cfg loom" cargo test --test loom_models`.
 //!
 //! Each model rebuilds one of the repo's real concurrency cores — the
-//! worker's one-mutex [`TaskQueue`], the report window behind the
+//! worker's one-mutex [`TaskQueue`], the object store's spill/restore
+//! slot discipline ([`ObjectStore`]), the report window behind the
 //! [`ServerHandle`] mutex, the cross-shard forward/worker-death protocol
 //! (`deliver_forward`), and the runtime's global-init pattern — from the
 //! *production types* behind the [`rsds::sync`] shim, and explores every
 //! distinguishable schedule with [`rsds::modelcheck`] (the offline loom
 //! stand-in). The `seeded_*` models lock known bugs in as regressions:
 //! each reconstructs a protocol violation (the PR 4 count-based-watermark
-//! bug, naive once-init) and asserts the explorer *catches* it — proving
-//! the checker checks, per `docs/verification.md`.
+//! bug, naive once-init, an unlocked spill-slot restore) and asserts the
+//! explorer *catches* it — proving the checker checks, per
+//! `docs/verification.md`.
 //!
 //! [`ServerHandle`]: rsds::server::ServerHandle
 //! [`TaskQueue`]: rsds::worker::queue::TaskQueue
@@ -24,6 +26,8 @@ use rsds::sync::atomic::{AtomicUsize, Ordering};
 use rsds::sync::{thread, Arc, Condvar, Mutex};
 use rsds::taskgraph::{Payload, TaskId};
 use rsds::worker::queue::{FetchPlan, TaskQueue};
+use rsds::worker::spill::{MemSpill, SpillBackend};
+use rsds::worker::store::{DataKey, Lookup, ObjectStore};
 use std::collections::HashMap;
 use std::sync::mpsc::channel;
 
@@ -37,8 +41,16 @@ fn compute_frame(run: u32, task: u32, priority: i64, addr: &str) -> Vec<u8> {
         payload: Payload::BusyWait,
         duration_us: 7,
         output_size: 64,
-        inputs: vec![TaskInputLoc { task: TaskId(0), addr: addr.into(), nbytes: 5 }],
+        inputs: vec![TaskInputLoc {
+            task: TaskId(0),
+            addr: addr.into(),
+            // A replica alternate rides along so the alt pool's
+            // reset-on-drain is part of every queue model.
+            alts: if addr.is_empty() { vec![] } else { vec![format!("alt.{addr}")] },
+            nbytes: 5,
+        }],
         priority,
+        consumers: 1,
     })
 }
 
@@ -72,22 +84,42 @@ fn queue_enqueue_pop_delivers_each_task_once() {
         // The executor side: two bounded pop attempts racing the enqueues,
         // then a post-join drain — every task must surface exactly once.
         let mut plan = FetchPlan::new();
-        let mut seen: Vec<(TaskId, String, String)> = Vec::new();
+        let mut seen: Vec<(TaskId, String, String, String)> = Vec::new();
         for _ in 0..2 {
             if let Some(p) = q.lock().unwrap().pop_into(&mut plan) {
-                seen.push((p.task, plan.key().to_string(), plan.input(0).2.to_string()));
+                seen.push((
+                    p.task,
+                    plan.key().to_string(),
+                    plan.input(0).2.to_string(),
+                    plan.input_alt(0, 0).to_string(),
+                ));
             }
         }
         producer.join().unwrap();
         while let Some(p) = q.lock().unwrap().pop_into(&mut plan) {
-            seen.push((p.task, plan.key().to_string(), plan.input(0).2.to_string()));
+            seen.push((
+                p.task,
+                plan.key().to_string(),
+                plan.input(0).2.to_string(),
+                plan.input_alt(0, 0).to_string(),
+            ));
         }
         seen.sort();
         assert_eq!(
             seen,
             vec![
-                (TaskId(1), "k-0-1".to_string(), "10.0.0.1:9000".to_string()),
-                (TaskId(2), "k-0-2".to_string(), "10.0.0.2:9000".to_string()),
+                (
+                    TaskId(1),
+                    "k-0-1".to_string(),
+                    "10.0.0.1:9000".to_string(),
+                    "alt.10.0.0.1:9000".to_string(),
+                ),
+                (
+                    TaskId(2),
+                    "k-0-2".to_string(),
+                    "10.0.0.2:9000".to_string(),
+                    "alt.10.0.0.2:9000".to_string(),
+                ),
             ],
             "every task exactly once, arenas resolved under every schedule"
         );
@@ -177,6 +209,109 @@ fn executor_wakeup_is_never_lost() {
         drop(guard);
         reader.join().unwrap();
     });
+}
+
+// ---------------------------------------------------------------------------
+// ObjectStore: spill/restore slot discipline (worker/store.rs, PR 8)
+// ---------------------------------------------------------------------------
+
+/// The evictor's three-step spill (`Resident → Spilling` under the lock,
+/// backend write *outside* it, commit or abandon under the lock again)
+/// racing the gather path's get-then-restore: under every schedule the
+/// reader obtains the payload exactly once and intact — a hit on the
+/// still-readable `Spilling` arc XOR a restore from the backend — and at
+/// quiescence the bytes sit in exactly one tier with the slot never
+/// double-freed nor read after free.
+#[test]
+fn store_spill_vs_fetch_never_tears_or_loses_bytes() {
+    model(|| {
+        let backend = Arc::new(MemSpill::new());
+        let store = Arc::new(ObjectStore::new(Some(4), backend.clone()));
+        let k: DataKey = (RunId(0), TaskId(1));
+        let payload: Vec<u8> = (0..8u8).collect();
+        assert!(store.insert(k, Arc::new(payload.clone()), 0));
+        let evictor = {
+            let store = Arc::clone(&store);
+            thread::spawn(move || store.maybe_spill())
+        };
+        // The worker's gather path: hot get, cold restore on Spilled.
+        let got = match store.get(&k) {
+            Lookup::Hit(b) => b,
+            Lookup::Spilled => store.restore(&k).expect("live key restores"),
+            Lookup::Miss => panic!("pinned key vanished under eviction"),
+        };
+        assert_eq!(*got, payload, "torn read under the spill race");
+        evictor.join().unwrap();
+        assert_eq!(store.num_entries(), 1, "pinned entry must survive");
+        assert_eq!(
+            store.resident_bytes() + backend.spilled_bytes(),
+            8,
+            "bytes must live in exactly one tier at quiescence"
+        );
+        assert_eq!(backend.misuse_count(), 0, "slot double-freed or read after free");
+    });
+}
+
+/// The last consumer lands while the evictor is mid-spill: whichever of
+/// `Resident`/`Spilling`/`Spilled` the race leaves the entry in, the
+/// self-evict must drop the bytes and exactly one side must free the
+/// backend slot (`drop_entry` skips a `Spilling` slot so the in-flight
+/// evictor's abandon step frees its own write).
+#[test]
+fn store_consume_vs_spill_frees_the_slot_exactly_once() {
+    model(|| {
+        let backend = Arc::new(MemSpill::new());
+        let store = Arc::new(ObjectStore::new(Some(0), backend.clone()));
+        let k: DataKey = (RunId(0), TaskId(1));
+        assert!(store.insert(k, Arc::new(vec![0x5A; 6]), 1));
+        let evictor = {
+            let store = Arc::clone(&store);
+            thread::spawn(move || store.maybe_spill())
+        };
+        let evicted = store.consume(&k);
+        evictor.join().unwrap();
+        assert!(evicted, "sole consumer must observe the self-evict");
+        assert!(matches!(store.get(&k), Lookup::Miss));
+        assert_eq!(store.num_entries(), 0);
+        assert_eq!(store.resident_bytes(), 0);
+        assert_eq!(backend.spilled_bytes(), 0, "slot leaked after consume");
+        assert_eq!(backend.live_slots(), 0);
+        assert_eq!(backend.misuse_count(), 0, "double free under the consume/spill race");
+    });
+}
+
+/// Seeded regression: a restore that lets the slot id escape the critical
+/// section — observe `Spilled(slot)`, drop the lock, then read and free —
+/// is the naive shape [`ObjectStore::restore`] avoids by reading the
+/// backend *under* the store lock. Two racing restorers then free the
+/// slot twice; the explorer must find that schedule, and the backend's
+/// misuse counter is what catches it.
+#[test]
+fn seeded_unlocked_restore_double_frees_the_slot() {
+    let msg = model_fails(|| {
+        let backend = Arc::new(MemSpill::new());
+        let slot = backend.write(&[7u8; 4]).unwrap();
+        // Naive entry state: Some(slot) = spilled, None = resident again.
+        let entry: Arc<Mutex<Option<u64>>> = Arc::new(Mutex::new(Some(slot)));
+        let restore = |entry: &Mutex<Option<u64>>, backend: &MemSpill| {
+            // BUG under test: the slot id outlives the lock.
+            let slot = match *entry.lock().unwrap() {
+                Some(s) => s,
+                None => return,
+            };
+            let _ = backend.read(slot);
+            backend.free(slot);
+            *entry.lock().unwrap() = None;
+        };
+        let racer = {
+            let (entry, backend) = (Arc::clone(&entry), Arc::clone(&backend));
+            thread::spawn(move || restore(&entry, &backend))
+        };
+        restore(&entry, &backend);
+        racer.join().unwrap();
+        assert_eq!(backend.misuse_count(), 0, "slot freed twice");
+    });
+    assert!(msg.contains("freed twice"), "wrong failure: {msg}");
 }
 
 // ---------------------------------------------------------------------------

@@ -224,13 +224,15 @@ fn drive_reactor_interleaved(
     sched_name: &str,
     rng: &mut Rng,
     max_kills: usize,
+    replication: usize,
 ) -> Result<(), String> {
     let n_graphs = rng.range_usize(1, 4);
     let graphs: Vec<TaskGraph> = (0..n_graphs).map(|_| random_graph(rng)).collect();
     let min_workers = (max_kills + 1) as u32; // always ≥1 survivor
     let n_workers = rng.range_usize(min_workers as usize, min_workers as usize + 6) as u32;
     let pool = SchedulerPool::new(sched_name, rng.next_u64()).expect("known scheduler");
-    let mut reactor = Reactor::new(pool, RuntimeProfile::rust(), false);
+    let mut reactor = Reactor::new(pool, RuntimeProfile::rust(), false)
+        .with_replication(replication, 1);
 
     let mut out: Vec<(Dest, Msg)> = Vec::new();
     for c in 0..n_graphs as u32 {
@@ -247,12 +249,25 @@ fn drive_reactor_interleaved(
                 name: format!("w{i}"),
                 ncores: 1,
                 node: i / 4,
-                data_addr: String::new(),
+                // Replica placement skips workers with no data address, so
+                // the replication variants need real-looking ones.
+                data_addr: if replication > 1 {
+                    format!("10.9.0.{i}:9000")
+                } else {
+                    String::new()
+                },
             },
             &mut out,
         );
     }
     out.clear();
+    // Recover the worker index behind a replica-push target address.
+    let addr_worker = |a: &str| -> usize {
+        a.strip_prefix("10.9.0.")
+            .and_then(|rest| rest.strip_suffix(":9000"))
+            .and_then(|i| i.parse().ok())
+            .expect("registered data address")
+    };
 
     let mut expected: HashMap<RunId, u64> = HashMap::new();
     for (c, g) in graphs.iter().enumerate() {
@@ -273,6 +288,10 @@ fn drive_reactor_interleaved(
     let mut done: HashMap<RunId, u64> = HashMap::new();
     let mut alive: Vec<bool> = vec![true; n_workers as usize];
     let mut kills_left = max_kills;
+    // Replica-added confirmations park here and land at random points —
+    // racing kills, steals, finishes and run completion (a late ack for a
+    // completed or failed run must be ignored, not crash the reactor).
+    let mut pending_acks: Vec<(usize, Msg)> = Vec::new();
 
     let mut guard = 0u32;
     loop {
@@ -315,6 +334,7 @@ fn drive_reactor_interleaved(
             kills_left -= 1;
             inboxes[w].clear();
             local_queue[w].clear();
+            pending_acks.retain(|&(t, _)| t != w); // dead peers confirm nothing
             reactor.on_disconnect(Origin::Worker(WorkerId(w as u32)), &mut out);
             check_queue_parity(&reactor, &expected)?;
             continue;
@@ -328,8 +348,18 @@ fn drive_reactor_interleaved(
             .filter(|&(w, _)| alive[w])
             .flat_map(|(w, q)| q.iter().map(move |&k| (w, k)))
             .collect();
-        if deliverable.is_empty() && runnable.is_empty() {
+        if deliverable.is_empty() && runnable.is_empty() && pending_acks.is_empty() {
             break;
+        }
+        // Randomly deliver a parked replica confirmation first.
+        if !pending_acks.is_empty()
+            && (rng.chance(0.3) || (deliverable.is_empty() && runnable.is_empty()))
+        {
+            let i = rng.gen_range(pending_acks.len() as u64) as usize;
+            let (w, ack) = pending_acks.swap_remove(i);
+            reactor.on_message(Origin::Worker(WorkerId(w as u32)), ack, &mut out);
+            check_queue_parity(&reactor, &expected)?;
+            continue;
         }
         // Randomly either deliver a worker's next message or execute one of
         // its queued tasks (execution can jump ahead of pending steals).
@@ -361,6 +391,16 @@ fn drive_reactor_interleaved(
                     // Recovery pulled the task back; a copy may or may not
                     // still be queued here.
                     local_queue[w].remove(&(run, task));
+                }
+                Msg::ReplicateData { run, task, addrs } => {
+                    // Push our copy to each target; the *receiving* peer
+                    // confirms, later, at a random point in the schedule.
+                    for a in &addrs {
+                        let t = addr_worker(a);
+                        if alive[t] {
+                            pending_acks.push((t, Msg::ReplicaAdded { run, task }));
+                        }
+                    }
                 }
                 Msg::ReleaseRun { run } => {
                     // Without failures, exactly-once execution implies a
@@ -426,21 +466,21 @@ fn drive_reactor_interleaved(
 #[test]
 fn prop_reactor_ws_interleavings_keep_models_in_sync() {
     check("reactor ws interleavings", PropConfig { cases: 30, seed: 707 }, |rng| {
-        drive_reactor_interleaved("ws", rng, 0)
+        drive_reactor_interleaved("ws", rng, 0, 1)
     });
 }
 
 #[test]
 fn prop_reactor_ws_lifo_interleavings_keep_models_in_sync() {
     check("reactor ws-lifo interleavings", PropConfig { cases: 20, seed: 808 }, |rng| {
-        drive_reactor_interleaved("ws-lifo", rng, 0)
+        drive_reactor_interleaved("ws-lifo", rng, 0, 1)
     });
 }
 
 #[test]
 fn prop_reactor_dask_ws_interleavings_keep_models_in_sync() {
     check("reactor dask-ws interleavings", PropConfig { cases: 20, seed: 909 }, |rng| {
-        drive_reactor_interleaved("dask-ws", rng, 0)
+        drive_reactor_interleaved("dask-ws", rng, 0, 1)
     });
 }
 
@@ -449,7 +489,7 @@ fn prop_reactor_random_interleavings_complete() {
     // The random scheduler keeps no cluster model; the property reduces to
     // completion + exactly-once execution under the same interleavings.
     check("reactor random interleavings", PropConfig { cases: 20, seed: 1010 }, |rng| {
-        drive_reactor_interleaved("random", rng, 0)
+        drive_reactor_interleaved("random", rng, 0, 1)
     });
 }
 
@@ -461,21 +501,234 @@ fn prop_reactor_ws_survives_interleaved_disconnects() {
     // scheduler-vs-reactor queue parity must hold through every recovery,
     // every run must complete, every task must execute at least once.
     check("reactor ws disconnects", PropConfig { cases: 25, seed: 1111 }, |rng| {
-        drive_reactor_interleaved("ws", rng, 2)
+        drive_reactor_interleaved("ws", rng, 2, 1)
     });
 }
 
 #[test]
 fn prop_reactor_dask_ws_survives_interleaved_disconnects() {
     check("reactor dask-ws disconnects", PropConfig { cases: 20, seed: 1212 }, |rng| {
-        drive_reactor_interleaved("dask-ws", rng, 2)
+        drive_reactor_interleaved("dask-ws", rng, 2, 1)
     });
 }
 
 #[test]
 fn prop_reactor_random_survives_interleaved_disconnects() {
     check("reactor random disconnects", PropConfig { cases: 20, seed: 1313 }, |rng| {
-        drive_reactor_interleaved("random", rng, 2)
+        drive_reactor_interleaved("random", rng, 2, 1)
+    });
+}
+
+// ---- replicated object store (PR 8 tentpole) ----
+
+#[test]
+fn prop_replication_preserves_exactly_once_execution() {
+    // Replication on, no kills: replicate-data directives and their
+    // randomly-timed replica-added confirmations must not perturb the
+    // scheduling machinery — queue parity holds and every task still
+    // executes exactly once.
+    check("reactor ws replication", PropConfig { cases: 25, seed: 1414 }, |rng| {
+        drive_reactor_interleaved("ws", rng, 0, 2)
+    });
+}
+
+#[test]
+fn prop_replicated_kills_keep_models_in_sync() {
+    // The full PR 8 surface under random schedules: kills race replica
+    // pushes, confirmations, steals and finishes. Parity and completion
+    // must survive every interleaving — including acks from workers that
+    // die before delivery and acks landing after their run completed.
+    check("reactor ws replicated kills", PropConfig { cases: 25, seed: 1515 }, |rng| {
+        drive_reactor_interleaved("ws", rng, 2, 2)
+    });
+}
+
+#[test]
+fn prop_replicated_kills_complete_under_random_scheduler() {
+    check("reactor random replicated kills", PropConfig { cases: 20, seed: 1616 }, |rng| {
+        let k = rng.range_usize(2, 4); // k ∈ {2, 3}
+        drive_reactor_interleaved("random", rng, 2, k)
+    });
+}
+
+#[test]
+fn prop_store_matches_refcount_oracle() {
+    // Random insert/consume/lookup/restore/release/spill sequences against
+    // an in-memory oracle. After every step: entry count and per-key
+    // refcounts match the model, refcounts never go below zero (the store
+    // saturates and self-evicts at exactly zero), resident bytes respect
+    // the budget after each rebalance, resident + spilled bytes conserve
+    // the total live bytes, and every live key stays readable with the
+    // exact bytes that were inserted.
+    use rsds::worker::spill::{MemSpill, SpillBackend};
+    use rsds::worker::store::{DataKey, Lookup, ObjectStore};
+    use std::sync::Arc;
+
+    struct ModelEntry {
+        len: usize,
+        fill: u8,
+        consumers: Option<u32>,
+    }
+
+    check("store oracle", PropConfig { cases: scaled_cases(150), seed: 1717 }, |rng| {
+        let limit = if rng.chance(0.7) { Some(rng.gen_range(200)) } else { None };
+        let backend = Arc::new(MemSpill::new());
+        let store = ObjectStore::new(limit, backend.clone());
+        let mut model: HashMap<DataKey, ModelEntry> = HashMap::new();
+        let mut released: HashSet<RunId> = HashSet::new();
+        let rand_key = |rng: &mut Rng| -> DataKey {
+            (RunId(rng.gen_range(3) as u32), TaskId(rng.gen_range(16) as u32))
+        };
+        let fill_of = |k: &DataKey| (k.0 .0 as u8) ^ ((k.1 .0 as u8) << 2) ^ 0x5A;
+
+        let n_ops = rng.range_usize(20, 120);
+        for step in 0..n_ops {
+            match rng.gen_range(8) {
+                0 | 1 | 2 => {
+                    let k = rand_key(rng);
+                    let len = rng.range_usize(0, 40);
+                    let consumers = rng.gen_range(4) as u32;
+                    let ok = store.insert(k, Arc::new(vec![fill_of(&k); len]), consumers);
+                    let want = !released.contains(&k.0) && !model.contains_key(&k);
+                    if ok != want {
+                        return Err(format!("step {step}: insert {k:?} got {ok}, want {want}"));
+                    }
+                    if ok {
+                        model.insert(
+                            k,
+                            ModelEntry {
+                                len,
+                                fill: fill_of(&k),
+                                consumers: if consumers == 0 { None } else { Some(consumers) },
+                            },
+                        );
+                    }
+                    store.maybe_spill();
+                }
+                3 | 4 => {
+                    let k = rand_key(rng);
+                    let evicted = store.consume(&k);
+                    let want = match model.get_mut(&k) {
+                        Some(ModelEntry { consumers: Some(n), .. }) => {
+                            *n = n.saturating_sub(1);
+                            *n == 0
+                        }
+                        _ => false, // pinned or absent: no-op
+                    };
+                    if evicted != want {
+                        return Err(format!(
+                            "step {step}: consume {k:?} got {evicted}, want {want}"
+                        ));
+                    }
+                    if want {
+                        model.remove(&k);
+                    }
+                }
+                5 | 6 => {
+                    let k = rand_key(rng);
+                    match (store.get(&k), model.get(&k)) {
+                        (Lookup::Miss, None) => {}
+                        (Lookup::Miss, Some(_)) => {
+                            return Err(format!("step {step}: live key {k:?} lost"));
+                        }
+                        (Lookup::Hit(_) | Lookup::Spilled, None) => {
+                            return Err(format!("step {step}: ghost entry {k:?}"));
+                        }
+                        (Lookup::Hit(b), Some(m)) => {
+                            if b.as_ref() != &vec![m.fill; m.len] {
+                                return Err(format!("step {step}: {k:?} bytes corrupted"));
+                            }
+                        }
+                        (Lookup::Spilled, Some(m)) => {
+                            let b = store
+                                .restore(&k)
+                                .ok_or_else(|| format!("step {step}: restore {k:?} failed"))?;
+                            if b.as_ref() != &vec![m.fill; m.len] {
+                                return Err(format!("step {step}: {k:?} torn on restore"));
+                            }
+                            store.maybe_spill();
+                        }
+                    }
+                }
+                _ => {
+                    let run = RunId(rng.gen_range(3) as u32);
+                    store.release_run(run);
+                    released.insert(run);
+                    model.retain(|k, _| k.0 != run);
+                }
+            }
+            // Invariants after every operation.
+            if store.num_entries() != model.len() {
+                return Err(format!(
+                    "step {step}: {} entries, model has {}",
+                    store.num_entries(),
+                    model.len()
+                ));
+            }
+            if let Some(l) = limit {
+                // Sequential driver: after the rebalance calls above, at
+                // most one oversized entry can keep us above budget — and
+                // only if *everything* else is already spilled. maybe_spill
+                // always converges to ≤ limit unless a single entry alone
+                // exceeds it and is the last resident one; even then it
+                // spills. So the bound is exact here.
+                if store.resident_bytes() > l {
+                    return Err(format!(
+                        "step {step}: resident {} exceeds budget {l}",
+                        store.resident_bytes()
+                    ));
+                }
+            }
+            let live: u64 = model.values().map(|m| m.len as u64).sum();
+            if store.resident_bytes() + backend.spilled_bytes() != live {
+                return Err(format!(
+                    "step {step}: resident {} + spilled {} != live {live}",
+                    store.resident_bytes(),
+                    backend.spilled_bytes()
+                ));
+            }
+            if backend.misuse_count() != 0 {
+                return Err(format!("step {step}: backend misuse (double free / bad slot)"));
+            }
+            for (k, m) in &model {
+                if store.refcount(k) != Some(m.consumers) {
+                    return Err(format!(
+                        "step {step}: refcount of {k:?} diverged: {:?} vs {:?}",
+                        store.refcount(k),
+                        m.consumers
+                    ));
+                }
+            }
+        }
+        // Final sweep: every live key readable with the right bytes, then a
+        // total release leaves nothing behind — in memory or on the tier.
+        let keys: Vec<DataKey> = model.keys().copied().collect();
+        for k in keys {
+            let m = &model[&k];
+            let b = match store.get(&k) {
+                Lookup::Hit(b) => b,
+                Lookup::Spilled => {
+                    store.restore(&k).ok_or_else(|| format!("final restore {k:?} failed"))?
+                }
+                Lookup::Miss => return Err(format!("final: live key {k:?} lost")),
+            };
+            if b.as_ref() != &vec![m.fill; m.len] {
+                return Err(format!("final: {k:?} bytes corrupted"));
+            }
+        }
+        for r in 0..3u32 {
+            store.release_run(RunId(r));
+        }
+        if store.num_entries() != 0 || store.resident_bytes() != 0 {
+            return Err("release left entries behind".into());
+        }
+        if backend.spilled_bytes() != 0 {
+            return Err("release leaked spill slots".into());
+        }
+        if backend.misuse_count() != 0 {
+            return Err("backend misuse during teardown".into());
+        }
+        Ok(())
     });
 }
 
@@ -881,7 +1134,7 @@ fn random_msg(rng: &mut Rng) -> Msg {
     let task = TaskId(rng.next_u64() as u32);
     // Bit-shifted magnitudes hit fixint / u8 / u16 / u32 / u64 encodings.
     let wide = |rng: &mut Rng| rng.next_u64() >> (rng.gen_range(64) as u32);
-    match rng.gen_range(20) {
+    match rng.gen_range(24) {
         0 => Msg::RegisterClient { name: rand_str(rng, 40) },
         1 => Msg::RegisterWorker {
             name: rand_str(rng, 40),
@@ -911,10 +1164,15 @@ fn random_msg(rng: &mut Rng) -> Msg {
                     .map(|_| TaskInputLoc {
                         task: TaskId(rng.next_u64() as u32),
                         addr: rand_str(rng, 24),
+                        // Empty ~half the time: the alts field is optional
+                        // on the wire, so both shapes must round-trip.
+                        alts: (0..rng.range_usize(0, 3)).map(|_| rand_str(rng, 24)).collect(),
                         nbytes: wide(rng),
                     })
                     .collect(),
                 priority: rng.next_u64() as i64,
+                // 0 (absent on the wire) ~quarter of the time.
+                consumers: rng.gen_range(4) as u32,
             }
         }
         9 => Msg::TaskFinished(TaskFinishedInfo {
@@ -938,6 +1196,17 @@ fn random_msg(rng: &mut Rng) -> Msg {
             Msg::DataToServer { run, task, data: (0..n).map(|_| rng.next_u64() as u8).collect() }
         }
         18 => Msg::RunQueued { run, position: wide(rng) },
+        19 => Msg::ReplicateData {
+            run,
+            task,
+            addrs: (0..rng.range_usize(0, 4)).map(|_| rand_str(rng, 24)).collect(),
+        },
+        20 => {
+            let n = rng.range_usize(0, 400);
+            Msg::PutData { run, task, data: (0..n).map(|_| rng.next_u64() as u8).collect() }
+        }
+        21 => Msg::ReplicaAdded { run, task },
+        22 => Msg::ReplicaDropped { run, task },
         _ => {
             if rng.chance(0.5) {
                 Msg::Shutdown
@@ -1178,6 +1447,9 @@ fn prop_interned_queue_parity_with_owned_decode() {
                         } else {
                             String::new()
                         },
+                        alts: (0..rng.range_usize(0, 3))
+                            .map(|a| format!("10.1.{}.{a}:9000", rng.gen_range(8)))
+                            .collect(),
                         nbytes: rng.next_u64() >> 40,
                     })
                     .collect();
@@ -1190,6 +1462,7 @@ fn prop_interned_queue_parity_with_owned_decode() {
                     output_size: rng.gen_range(100_000),
                     inputs,
                     priority: (rng.gen_range(32) as i64) - 16, // dense: forces ties
+                    consumers: rng.gen_range(4) as u32,
                 });
             }
             // Truncation totality on the hot frame (any prefix errors).
@@ -1222,6 +1495,7 @@ fn prop_interned_queue_parity_with_owned_decode() {
                     output_size,
                     inputs,
                     priority,
+                    consumers,
                 } = m
                 else {
                     unreachable!()
@@ -1239,6 +1513,7 @@ fn prop_interned_queue_parity_with_owned_decode() {
                 if p.payload != *payload
                     || p.duration_us != *duration_us
                     || p.output_size != *output_size
+                    || p.consumers != *consumers
                 {
                     return Err(format!("scalar fields diverged for {run}/{task}"));
                 }
@@ -1252,6 +1527,18 @@ fn prop_interned_queue_parity_with_owned_decode() {
                 for (i, l) in inputs.iter().enumerate() {
                     if plan.input(i) != (l.task, l.nbytes, l.addr.as_str()) {
                         return Err(format!("input {i} diverged for {run}/{task}"));
+                    }
+                    if plan.n_alts(i) != l.alts.len() {
+                        return Err(format!(
+                            "input {i} alts: got {}, want {} for {run}/{task}",
+                            plan.n_alts(i),
+                            l.alts.len()
+                        ));
+                    }
+                    for (a, alt) in l.alts.iter().enumerate() {
+                        if plan.input_alt(i, a) != alt.as_str() {
+                            return Err(format!("input {i} alt {a} diverged for {run}/{task}"));
+                        }
                     }
                 }
             }
