@@ -1,0 +1,186 @@
+//! Incremental graph submission (PR 9) — AOT of graphs grown via
+//! `submit-extend` vs submitted one-shot, over a heterogeneous cluster.
+//!
+//! The paper submits every graph whole; interactive sessions grow them as
+//! results come back. This bench replays each `dynamic_suite()` workload
+//! twice per scheduler over a mixed 1/2/4-core cluster: once one-shot, once
+//! as a base graph plus extension batches spread across the one-shot
+//! makespan (so batches land mid-run, exercising the ready-delta and
+//! consumer-delta paths, not just a trailing append). Both runs must
+//! execute exactly the same task set — the incremental run completing with
+//! `n_tasks` equal to the full graph and no re-executions is asserted, the
+//! sim's oversubscription assert covers the multi-core entries — and the
+//! per-scheduler AOT plus the incremental/one-shot overhead ratio are
+//! reported and emitted machine-readably to `BENCH_pr9.json`.
+//!
+//! Env knobs: `RSDS_BENCH_QUICK=1` shortens runs (CI smoke).
+
+use rsds::graphgen::{dynamic_suite, DynamicEntry};
+use rsds::overhead::RuntimeProfile;
+use rsds::sim::{simulate, ExtBatch, SimConfig, SimResult};
+use rsds::taskgraph::TaskGraph;
+
+/// The worker heterogeneity axis: cycled core counts per worker.
+const CORE_MIX: [u32; 3] = [1, 2, 4];
+
+struct Row {
+    scheduler: &'static str,
+    graph: String,
+    n_workers: usize,
+    batches: usize,
+    oneshot_aot_us: f64,
+    incremental_aot_us: f64,
+    msgs_oneshot: u64,
+    msgs_incremental: u64,
+}
+
+impl Row {
+    fn overhead(&self) -> f64 {
+        self.incremental_aot_us / self.oneshot_aot_us
+    }
+}
+
+fn base_cfg(sched: &'static str, n_workers: usize) -> SimConfig {
+    SimConfig {
+        n_workers,
+        profile: RuntimeProfile::rust(),
+        scheduler: sched.into(),
+        core_mix: CORE_MIX.to_vec(),
+        ..SimConfig::default()
+    }
+}
+
+fn check_clean(r: &SimResult, graph: &TaskGraph, sched: &str, what: &str) {
+    assert!(!r.timed_out, "{sched}/{}: {what} run timed out", graph.name);
+    assert_eq!(r.n_tasks, graph.len() as u64, "{sched}/{}: {what} lost tasks", graph.name);
+    assert_eq!(
+        r.tasks_executed, r.n_tasks,
+        "{sched}/{}: {what} run re-executed tasks on a clean cluster",
+        graph.name
+    );
+}
+
+/// One (scheduler, entry) measurement: one-shot, then the same graph grown
+/// incrementally with batches spread across the one-shot makespan.
+fn measure(entry: &DynamicEntry, sched: &'static str, n_workers: usize) -> Row {
+    let graph = entry.graph();
+    let cfg = base_cfg(sched, n_workers);
+    let oneshot = simulate(&graph, &cfg);
+    check_clean(&oneshot, &graph, sched, "one-shot");
+
+    let (base, exts) = entry.incremental();
+    let n_exts = exts.len();
+    let step = oneshot.makespan_us / (n_exts + 1) as f64;
+    let extensions: Vec<ExtBatch> = exts
+        .into_iter()
+        .enumerate()
+        .map(|(i, tasks)| ExtBatch {
+            run: 0,
+            at_us: step * (i + 1) as f64,
+            tasks,
+            last: i + 1 == n_exts,
+        })
+        .collect();
+    let incremental = simulate(&base, &SimConfig { extensions, ..cfg });
+    check_clean(&incremental, &graph, sched, "incremental");
+
+    Row {
+        scheduler: sched,
+        graph: entry.name.into(),
+        n_workers,
+        batches: entry.batches,
+        oneshot_aot_us: oneshot.aot_us,
+        incremental_aot_us: incremental.aot_us,
+        msgs_oneshot: oneshot.msgs,
+        msgs_incremental: incremental.msgs,
+    }
+}
+
+fn write_bench_json(rows: &[Row], quick: bool) {
+    let mut json = String::from("{\n");
+    json.push_str("  \"pr\": 9,\n");
+    json.push_str("  \"bench\": \"fig_dynamic\",\n");
+    json.push_str(&format!("  \"quick\": {quick},\n"));
+    json.push_str(&format!(
+        "  \"core_mix\": [{}],\n",
+        CORE_MIX.map(|c| c.to_string()).join(", ")
+    ));
+    for sched in ["random", "ws", "dask-ws"] {
+        let of: Vec<&Row> = rows.iter().filter(|r| r.scheduler == sched).collect();
+        if of.is_empty() {
+            continue;
+        }
+        let geomean =
+            (of.iter().map(|r| r.overhead().ln()).sum::<f64>() / of.len() as f64).exp();
+        json.push_str(&format!(
+            "  \"geomean_incremental_overhead_{}\": {geomean:.3},\n",
+            sched.replace('-', "_")
+        ));
+    }
+    json.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"scheduler\": \"{}\", \"graph\": \"{}\", \"n_workers\": {}, \
+             \"batches\": {}, \"oneshot_aot_us\": {:.2}, \"incremental_aot_us\": {:.2}, \
+             \"overhead\": {:.3}, \"msgs_oneshot\": {}, \"msgs_incremental\": {}}}{}\n",
+            r.scheduler,
+            r.graph,
+            r.n_workers,
+            r.batches,
+            r.oneshot_aot_us,
+            r.incremental_aot_us,
+            r.overhead(),
+            r.msgs_oneshot,
+            r.msgs_incremental,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_pr9.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_pr9.json"),
+        Err(e) => eprintln!("could not write BENCH_pr9.json: {e}"),
+    }
+}
+
+fn main() {
+    let quick = std::env::var_os("RSDS_BENCH_QUICK").is_some();
+    let entries: Vec<DynamicEntry> = if quick {
+        // One homogeneous + one multi-core entry keeps the smoke run fast
+        // while still covering both the extension and the slot-gate paths.
+        dynamic_suite().into_iter().take(2).collect()
+    } else {
+        dynamic_suite()
+    };
+    let clusters: &[usize] = if quick { &[6] } else { &[6, 24] };
+
+    println!("== fig_dynamic: AOT, one-shot vs incremental submission, 1/2/4-core workers ==");
+    println!(
+        "{:<10} {:<22} {:>8} {:>8} {:>14} {:>14} {:>9}",
+        "sched", "graph", "workers", "batches", "oneshot µs/t", "incr µs/t", "overhead"
+    );
+    let mut rows = Vec::new();
+    for entry in &entries {
+        for sched in ["random", "ws", "dask-ws"] {
+            for &n in clusters {
+                let row = measure(entry, sched, n);
+                println!(
+                    "{:<10} {:<22} {:>8} {:>8} {:>14.2} {:>14.2} {:>8.2}x",
+                    row.scheduler,
+                    row.graph,
+                    row.n_workers,
+                    row.batches,
+                    row.oneshot_aot_us,
+                    row.incremental_aot_us,
+                    row.overhead()
+                );
+                rows.push(row);
+            }
+        }
+    }
+    write_bench_json(&rows, quick);
+    println!(
+        "\nAOT = makespan / #tasks; overhead = incremental AOT / one-shot AOT \
+         (batches arrive spread across the one-shot makespan, so > 1x mostly \
+         reflects late work arrival, not scheduler cost)"
+    );
+}

@@ -179,6 +179,7 @@ fn codec_section(cfg: BenchConfig) -> Vec<CodecRow> {
         ],
         priority: 12345,
         consumers: 2,
+        cores: 1,
     };
     let compute_bytes = encode_msg(&compute);
     assert_eq!(compute_bytes, encode_msg_value(&compute), "codecs must agree on bytes");
@@ -556,7 +557,7 @@ fn main() {
         out.clear();
         reactor.on_message(
             Origin::Client(0),
-            Msg::SubmitGraph { graph: merge(10_000), scheduler: None },
+            Msg::SubmitGraph { graph: merge(10_000), scheduler: None, open: false },
             &mut out,
         );
         // Answer every compute/steal message until done (drain emits the

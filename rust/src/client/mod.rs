@@ -30,7 +30,7 @@
 use crate::protocol::{
     decode_msg, FrameReader, FrameWriter, Msg, RunId, RECOVERY_EXHAUSTED_REASON,
 };
-use crate::taskgraph::TaskGraph;
+use crate::taskgraph::{TaskGraph, TaskSpec};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::{HashMap, VecDeque};
 use std::net::TcpStream;
@@ -64,6 +64,9 @@ struct PendingRun {
     scheduler: Option<String>,
     /// Resubmissions this run may still consume.
     retries_left: u32,
+    /// Submitted with `open: true` and not yet closed by a `last: true`
+    /// extension — [`Client::extend`] may still graft task batches on.
+    open: bool,
 }
 
 /// A resubmission sent after an exhausted-budget failure, awaiting its
@@ -141,7 +144,14 @@ impl Client {
             let graph = resub.pending.graph.clone().expect("retry retains the graph");
             self.frames_out.send(
                 &mut self.stream,
-                &Msg::SubmitGraph { graph, scheduler: resub.pending.scheduler.clone() },
+                // A retried run resubmits closed: open runs are excluded
+                // from retry until their last extension landed, so the
+                // retained graph is always the complete one.
+                &Msg::SubmitGraph {
+                    graph,
+                    scheduler: resub.pending.scheduler.clone(),
+                    open: false,
+                },
             )?;
             self.retries_used += 1;
             self.awaiting_retry_ack.push_back(resub);
@@ -198,6 +208,24 @@ impl Client {
     /// run id either way, and [`Client::wait`] spans the queued phase
     /// transparently; [`Client::is_queued`] tells the phases apart.
     pub fn submit_with(&mut self, graph: &TaskGraph, scheduler: Option<&str>) -> Result<RunId> {
+        self.submit_inner(graph, scheduler, false)
+    }
+
+    /// Submit an *open* graph: the base batch starts executing immediately,
+    /// and the caller streams further task batches in with
+    /// [`Client::extend`] — the run only completes once a `last: true`
+    /// extension closed it and every task finished. New tasks may depend on
+    /// any earlier task, including ones that already ran.
+    pub fn submit_open(&mut self, graph: &TaskGraph, scheduler: Option<&str>) -> Result<RunId> {
+        self.submit_inner(graph, scheduler, true)
+    }
+
+    fn submit_inner(
+        &mut self,
+        graph: &TaskGraph,
+        scheduler: Option<&str>,
+        open: bool,
+    ) -> Result<RunId> {
         // Any retry resubmissions decided during an earlier read loop go
         // out first, keeping submission acks strictly FIFO.
         self.flush_resubs()?;
@@ -206,6 +234,7 @@ impl Client {
         let msg = Msg::SubmitGraph {
             graph: graph.clone(),
             scheduler: scheduler.map(str::to_string),
+            open,
         };
         self.frames_out.send(&mut self.stream, &msg)?;
         // Read until the ack for *this* submission arrives. Completions of
@@ -230,6 +259,7 @@ impl Client {
                             graph: (self.retry_exhausted > 0).then(|| graph.clone()),
                             scheduler: scheduler.map(str::to_string),
                             retries_left: self.retry_exhausted,
+                            open,
                         },
                     );
                     return Ok(run);
@@ -247,9 +277,62 @@ impl Client {
                             graph: (self.retry_exhausted > 0).then(|| graph.clone()),
                             scheduler: scheduler.map(str::to_string),
                             retries_left: self.retry_exhausted,
+                            open,
                         },
                     );
                     return Ok(run);
+                }
+                other => self.handle_completion(other)?,
+            }
+        }
+    }
+
+    /// Stream a task batch into an open run (see [`Client::submit_open`]).
+    /// New tasks may depend on any task already in the run — even finished
+    /// ones whose outputs self-evicted; the server re-pins or resurrects
+    /// those. `last: true` closes the run (an empty `tasks` with
+    /// `last: true` is a pure close). Blocks until the server acknowledges
+    /// the extension; completions of other pipelined runs arriving in the
+    /// meantime are filed as usual.
+    pub fn extend(&mut self, run: RunId, tasks: Vec<TaskSpec>, last: bool) -> Result<()> {
+        self.flush_resubs()?;
+        let cur = self.resolve(run);
+        {
+            let Some(pending) = self.in_flight.get_mut(&cur) else {
+                bail!("run {run} is not in flight on this client");
+            };
+            if !pending.open {
+                bail!("run {run} was not submitted open (or is already closed)");
+            }
+            // Keep the retry-retained graph in step so a post-close
+            // resubmission replays the *extended* graph.
+            if let Some(g) = pending.graph.as_mut() {
+                if !tasks.is_empty() {
+                    g.extend(tasks.clone()).map_err(|e| anyhow!("bad extension: {e}"))?;
+                }
+            }
+            if last {
+                pending.open = false;
+            }
+        }
+        self.frames_out
+            .send(&mut self.stream, &Msg::SubmitExtend { run: cur, tasks, last })?;
+        // Read until the ack (`graph-submitted` re-quoting this run with
+        // its new task total). A queued-run activation notice is
+        // indistinguishable and may be consumed instead — harmless, the
+        // real ack then lands in `handle_completion` as a phase note.
+        loop {
+            let msg = self.read_msg()?;
+            match msg {
+                Msg::GraphSubmitted { run: r, .. } if r == cur => {
+                    if let Some(p) = self.in_flight.get_mut(&cur) {
+                        p.queued = false;
+                    }
+                    return Ok(());
+                }
+                Msg::GraphFailed { run: r, reason } if r == cur => {
+                    self.in_flight.remove(&cur);
+                    bail!("extension rejected: {reason}");
                 }
                 other => self.handle_completion(other)?,
             }
@@ -369,6 +452,9 @@ impl Client {
                 // because of the graph. Resubmit onto the survivors.
                 if pending.retries_left > 0
                     && pending.graph.is_some()
+                    // A still-open run can't be replayed faithfully — the
+                    // retained graph only matches once the close landed.
+                    && !pending.open
                     && reason.contains(RECOVERY_EXHAUSTED_REASON)
                 {
                     // Deferred: the actual send happens at the next safe

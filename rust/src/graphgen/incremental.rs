@@ -1,0 +1,169 @@
+//! Incremental-submission and heterogeneous-resource variants of the
+//! benchmark graphs (PR 9).
+//!
+//! The paper's workloads are one-shot: the whole task graph is known at
+//! submission. Real interactive sessions grow graphs as results come back
+//! — the `submit-extend` protocol op streams task batches into a live run.
+//! [`split_incremental`] turns any benchmark graph into that shape: a base
+//! graph plus extension batches, split in id order (which the
+//! [`crate::taskgraph::TaskGraph`] invariant guarantees is topological, so
+//! every batch only depends on earlier batches). Replaying base + batches
+//! must produce byte-identical outputs to the one-shot submission — the
+//! `fig_dynamic` bench and the sim/TCP parity tests assert exactly that.
+//!
+//! [`with_cores`] stamps a cyclic multi-core requirement pattern onto a
+//! graph (dslab-dag-style resource demands), producing the heterogeneous
+//! workloads `fig_dynamic` measures random placement under.
+
+use crate::taskgraph::{TaskGraph, TaskSpec};
+
+/// Split `g` into a base graph plus extension batches, in id (topological)
+/// order. `n_batches` counts the base, so `split_incremental(g, 4)` yields
+/// the base plus up to 3 extension batches (fewer if the graph is tiny).
+/// Submitting the base open and extending with each batch in order —
+/// closing on the final one — computes exactly the tasks of `g`.
+pub fn split_incremental(g: &TaskGraph, n_batches: usize) -> (TaskGraph, Vec<Vec<TaskSpec>>) {
+    assert!(n_batches >= 1, "need at least one batch");
+    let n = g.len();
+    assert!(n_batches <= n, "more batches ({n_batches}) than tasks ({n})");
+    let chunk = n.div_ceil(n_batches);
+    let tasks = g.tasks();
+    let base = TaskGraph::new(g.name.clone(), tasks[..chunk].to_vec())
+        .expect("an id-order prefix of a valid graph is a valid graph");
+    let exts: Vec<Vec<TaskSpec>> = tasks[chunk..].chunks(chunk).map(<[TaskSpec]>::to_vec).collect();
+    (base, exts)
+}
+
+/// Rebuild `g` with core requirements cycled from `pattern` over the task
+/// id (`pattern[id % len]`, clamped to ≥ 1). Structure, durations and
+/// output sizes are untouched, so results stay byte-identical to the
+/// 1-core graph — only placement constraints change.
+pub fn with_cores(g: &TaskGraph, pattern: &[u32]) -> TaskGraph {
+    assert!(!pattern.is_empty(), "empty core pattern");
+    let tasks: Vec<TaskSpec> = g
+        .tasks()
+        .iter()
+        .cloned()
+        .map(|mut t| {
+            t.cores = pattern[t.id.idx() % pattern.len()].max(1);
+            t
+        })
+        .collect();
+    TaskGraph::new(g.name.clone(), tasks).expect("core widths do not affect validity")
+}
+
+/// One `fig_dynamic` workload: a benchmark graph grown incrementally over
+/// a heterogeneous cluster.
+#[derive(Debug, Clone, Copy)]
+pub struct DynamicEntry {
+    pub name: &'static str,
+    /// Spec accepted by [`crate::graphgen::parse`].
+    pub spec: &'static str,
+    /// Batches the graph is submitted in (base + extensions).
+    pub batches: usize,
+    /// Task core-requirement pattern fed to [`with_cores`] (`[1]` keeps
+    /// the workload homogeneous).
+    pub task_cores: &'static [u32],
+}
+
+/// The `fig_dynamic` suite: incrementally-grown graphs, with and without
+/// multi-core tasks, sized to finish quickly under the sim. The worker
+/// side of the heterogeneity (the 1/2/4-core mix) is the bench's axis,
+/// not the suite's.
+pub fn dynamic_suite() -> Vec<DynamicEntry> {
+    vec![
+        DynamicEntry { name: "merge-2K-inc4", spec: "merge-2000", batches: 4, task_cores: &[1] },
+        DynamicEntry { name: "tree-9-inc3", spec: "tree-9", batches: 3, task_cores: &[1] },
+        DynamicEntry {
+            name: "xarray-5-inc3-hetero",
+            spec: "xarray-5",
+            batches: 3,
+            task_cores: &[1, 1, 2, 1, 4],
+        },
+        DynamicEntry {
+            name: "merge-2K-inc4-hetero",
+            spec: "merge-2000",
+            batches: 4,
+            task_cores: &[1, 2],
+        },
+    ]
+}
+
+impl DynamicEntry {
+    /// Build the full (one-shot) graph, core pattern applied.
+    pub fn graph(&self) -> TaskGraph {
+        with_cores(&super::parse(self.spec).expect("dynamic suite specs are valid"), self.task_cores)
+    }
+
+    /// Build the incremental form: base graph + extension batches.
+    pub fn incremental(&self) -> (TaskGraph, Vec<Vec<TaskSpec>>) {
+        split_incremental(&self.graph(), self.batches)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graphgen::{merge, tree};
+
+    #[test]
+    fn split_covers_every_task_in_order() {
+        let g = tree(6);
+        let (base, exts) = split_incremental(&g, 4);
+        let mut rebuilt = base.tasks().to_vec();
+        for b in &exts {
+            rebuilt.extend(b.iter().cloned());
+        }
+        assert_eq!(rebuilt, g.tasks().to_vec(), "split must partition the graph in id order");
+        assert!(exts.len() >= 3, "tree-6 is large enough for 4 batches");
+    }
+
+    #[test]
+    fn split_base_revalidates_and_extends_back_to_original() {
+        let g = merge(100);
+        let (mut base, exts) = split_incremental(&g, 3);
+        for b in exts {
+            base.extend(b).expect("batches extend in order");
+        }
+        assert_eq!(base.len(), g.len());
+        assert_eq!(base.n_deps(), g.n_deps());
+        for t in g.tasks() {
+            assert_eq!(base.consumers(t.id), g.consumers(t.id));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "more batches")]
+    fn split_rejects_more_batches_than_tasks() {
+        let g = merge(2); // 3 tasks
+        let _ = split_incremental(&g, 10);
+    }
+
+    #[test]
+    fn with_cores_cycles_pattern_and_keeps_structure() {
+        let g = merge(50);
+        let h = with_cores(&g, &[1, 2, 4]);
+        assert_eq!(h.len(), g.len());
+        for t in h.tasks() {
+            assert_eq!(t.cores, [1u32, 2, 4][t.id.idx() % 3]);
+            assert_eq!(t.inputs, g.task(t.id).inputs);
+        }
+        assert_eq!(h.max_cores(), 4);
+    }
+
+    #[test]
+    fn dynamic_suite_entries_build_and_split() {
+        for e in dynamic_suite() {
+            let g = e.graph();
+            assert!(!g.is_empty(), "{}", e.name);
+            let (base, exts) = e.incremental();
+            assert_eq!(
+                base.len() + exts.iter().map(Vec::len).sum::<usize>(),
+                g.len(),
+                "{}",
+                e.name
+            );
+            assert!(!exts.is_empty(), "{}: no extensions", e.name);
+        }
+    }
+}

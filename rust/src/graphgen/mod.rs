@@ -17,9 +17,12 @@
 //!
 //! [`parse`] turns a spec string (`"merge-25000"`, `"groupby-90-1s-1h"`)
 //! into a graph; [`paper_suite`] returns the paper's full benchmark set.
+//! [`split_incremental`]/[`with_cores`]/[`dynamic_suite`] derive
+//! incremental-submission and multi-core variants of any graph (PR 9).
 
 mod bag;
 mod groupby;
+mod incremental;
 mod merge;
 mod numpy;
 mod suite;
@@ -29,6 +32,7 @@ mod xarray;
 
 pub use bag::bag;
 pub use groupby::{groupby, join};
+pub use incremental::{dynamic_suite, split_incremental, with_cores, DynamicEntry};
 pub use merge::{merge, merge_slow};
 pub use numpy::numpy;
 pub use suite::{concurrent, paper_suite, suite_subset_zero_worker, SuiteEntry, CONCURRENT_MIX_DEFAULT};

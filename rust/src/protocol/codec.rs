@@ -242,24 +242,51 @@ fn dec_payload<'a>(r: &mut Reader<'a>) -> Result<Payload, CodecError> {
 
 // ---------- graph ----------
 
+/// One task spec as a wire map (shared by `submit-graph` and
+/// `submit-extend`). `cores` is optional — omitted when 1, so
+/// pre-resource frames stay byte-identical.
+fn taskspec_to_value(t: &TaskSpec) -> Value {
+    let mut fields = vec![
+        ("key", Value::str(&t.key)),
+        (
+            "inputs",
+            Value::Array(t.inputs.iter().map(|i| Value::from(i.0)).collect()),
+        ),
+        ("duration_us", Value::from(t.duration_us)),
+        ("output_size", Value::from(t.output_size)),
+        ("payload", payload_to_value(&t.payload)),
+    ];
+    if t.cores > 1 {
+        fields.push(("cores", Value::from(t.cores)));
+    }
+    Value::map(fields)
+}
+
+/// Decode one wire task map; the dense id is assigned by the caller.
+fn taskspec_from_value(tv: &Value, id: TaskId) -> Result<TaskSpec, CodecError> {
+    let inputs_v = get(tv, "inputs")?.as_array().ok_or(CodecError::WrongType("inputs"))?;
+    let inputs = inputs_v
+        .iter()
+        .map(|x| x.as_u64().map(|u| TaskId(u as u32)).ok_or(CodecError::WrongType("inputs")))
+        .collect::<Result<Vec<_>, _>>()?;
+    let cores = match tv.get("cores") {
+        None => 1,
+        Some(c) => c.as_u64().ok_or(CodecError::WrongType("cores"))? as u32,
+    };
+    Ok(TaskSpec {
+        id,
+        key: get_str(tv, "key")?,
+        inputs,
+        duration_us: get_u64(tv, "duration_us")?,
+        output_size: get_u64(tv, "output_size")?,
+        payload: payload_from_value(get(tv, "payload")?)?,
+        cores,
+    })
+}
+
 /// Encode a task graph as a msgpack value (used in `submit-graph`).
 pub fn graph_to_value(g: &TaskGraph) -> Value {
-    let tasks: Vec<Value> = g
-        .tasks()
-        .iter()
-        .map(|t| {
-            Value::map(vec![
-                ("key", Value::str(&t.key)),
-                (
-                    "inputs",
-                    Value::Array(t.inputs.iter().map(|i| Value::from(i.0)).collect()),
-                ),
-                ("duration_us", Value::from(t.duration_us)),
-                ("output_size", Value::from(t.output_size)),
-                ("payload", payload_to_value(&t.payload)),
-            ])
-        })
-        .collect();
+    let tasks: Vec<Value> = g.tasks().iter().map(taskspec_to_value).collect();
     Value::map(vec![("name", Value::str(&g.name)), ("tasks", Value::Array(tasks))])
 }
 
@@ -270,19 +297,7 @@ pub fn graph_from_value(v: &Value) -> Result<TaskGraph, CodecError> {
     let tasks_v = get(v, "tasks")?.as_array().ok_or(CodecError::WrongType("tasks"))?;
     let mut tasks = Vec::with_capacity(tasks_v.len());
     for (i, tv) in tasks_v.iter().enumerate() {
-        let inputs_v = get(tv, "inputs")?.as_array().ok_or(CodecError::WrongType("inputs"))?;
-        let inputs = inputs_v
-            .iter()
-            .map(|x| x.as_u64().map(|u| TaskId(u as u32)).ok_or(CodecError::WrongType("inputs")))
-            .collect::<Result<Vec<_>, _>>()?;
-        tasks.push(TaskSpec {
-            id: TaskId(i as u32),
-            key: get_str(tv, "key")?,
-            inputs,
-            duration_us: get_u64(tv, "duration_us")?,
-            output_size: get_u64(tv, "output_size")?,
-            payload: payload_from_value(get(tv, "payload")?)?,
-        });
+        tasks.push(taskspec_from_value(tv, TaskId(i as u32))?);
     }
     Ok(TaskGraph::new(name, tasks)?)
 }
@@ -302,14 +317,31 @@ pub fn encode_msg_into(msg: &Msg, out: &mut Vec<u8>) {
     match msg {
         // Cold path: the graph payload is a dynamic tree; build it as a
         // Value (the BTreeMap also takes care of key ordering).
-        Msg::SubmitGraph { graph, scheduler } => {
+        Msg::SubmitGraph { graph, scheduler, open } => {
             let mut fields: Vec<(&str, Value)> = vec![
                 ("graph", graph_to_value(graph)),
                 ("op", Value::str("submit-graph")),
             ];
+            if *open {
+                fields.push(("open", Value::Bool(true)));
+            }
             if let Some(s) = scheduler {
                 fields.push(("scheduler", Value::str(s)));
             }
+            encode_into(&Value::map(fields), out);
+        }
+        // Cold path like submit-graph: a dynamic batch of task specs.
+        // `base` (the dense id of the first new task) lets the decoder
+        // reconstruct ids without carrying one per task.
+        Msg::SubmitExtend { run, tasks, last } => {
+            let base = tasks.first().map_or(0, |t| t.id.0);
+            let fields: Vec<(&str, Value)> = vec![
+                ("base", Value::from(base)),
+                ("last", Value::Bool(*last)),
+                ("op", Value::str("submit-extend")),
+                ("run", Value::from(run.0)),
+                ("tasks", Value::Array(tasks.iter().map(taskspec_to_value).collect())),
+            ];
             encode_into(&Value::map(fields), out);
         }
         Msg::RegisterClient { name } => {
@@ -402,6 +434,7 @@ pub fn encode_msg_into(msg: &Msg, out: &mut Vec<u8>) {
             inputs,
             priority,
             consumers,
+            cores,
         } => {
             // Delegate to the borrowed encoder so the owned and borrowed
             // dispatch paths are byte-identical by construction.
@@ -414,6 +447,7 @@ pub fn encode_msg_into(msg: &Msg, out: &mut Vec<u8>) {
                 output_size: *output_size,
                 priority: *priority,
                 consumers: *consumers,
+                cores: *cores,
             };
             encode_compute_task_into(
                 &parts,
@@ -426,6 +460,18 @@ pub fn encode_msg_into(msg: &Msg, out: &mut Vec<u8>) {
                 }),
                 out,
             );
+        }
+        Msg::PinData { run, task, consumers } => {
+            let mut w = Writer::new(out);
+            w.map_header(4);
+            w.str("consumers");
+            w.uint(*consumers as u64);
+            w.str("op");
+            w.str("pin-data");
+            w.str("run");
+            w.uint(run.0 as u64);
+            w.str("task");
+            w.uint(task.0 as u64);
         }
         Msg::TaskFinished(info) => {
             let mut w = Writer::new(out);
@@ -524,6 +570,9 @@ pub struct ComputeTaskParts<'a> {
     /// Consumer count of the output (`0` = pinned; omitted on the wire so
     /// pre-replication frames stay byte-identical).
     pub consumers: u32,
+    /// Core slots the task occupies (`1` = ordinary single-slot task;
+    /// omitted on the wire so pre-resource frames stay byte-identical).
+    pub cores: u32,
 }
 
 /// Encode a `compute-task` from borrowed parts, appending to `out`.
@@ -535,14 +584,20 @@ where
     I: ExactSizeIterator<Item = TaskInputRef<'a>>,
 {
     let mut w = Writer::new(out);
-    // `consumers` and per-input `alts` are optional fields (precedent: the
-    // `scheduler` key on submit-graph): omitted when zero/empty, so every
-    // pre-replication frame is byte-unchanged. Key order stays sorted —
-    // "consumers" < "duration_us", "addr" < "alts" < "nbytes".
-    w.map_header(if parts.consumers > 0 { 10 } else { 9 });
+    // `consumers`, `cores` and per-input `alts` are optional fields
+    // (precedent: the `scheduler` key on submit-graph): omitted when at
+    // their defaults, so every pre-replication/pre-resource frame is
+    // byte-unchanged. Key order stays sorted — "consumers" < "cores" <
+    // "duration_us", "addr" < "alts" < "nbytes".
+    let n_fields = 9 + (parts.consumers > 0) as usize + (parts.cores > 1) as usize;
+    w.map_header(n_fields);
     if parts.consumers > 0 {
         w.str("consumers");
         w.uint(parts.consumers as u64);
+    }
+    if parts.cores > 1 {
+        w.str("cores");
+        w.uint(parts.cores as u64);
     }
     w.str("duration_us");
     w.uint(parts.duration_us);
@@ -682,7 +737,9 @@ pub fn peek_op(bytes: &[u8]) -> Result<&str, CodecError> {
 pub fn decode_msg(bytes: &[u8]) -> Result<Msg, CodecError> {
     match find_op(bytes)? {
         // Cold path: dynamic payloads go through the Value tree.
-        "submit-graph" | "register-client" | "register-worker" => decode_msg_value(bytes),
+        "submit-graph" | "submit-extend" | "register-client" | "register-worker" => {
+            decode_msg_value(bytes)
+        }
         "welcome" => {
             let mut r = Reader::new(bytes);
             let n = r.map_header()?;
@@ -780,6 +837,25 @@ pub fn decode_msg(bytes: &[u8]) -> Result<Msg, CodecError> {
             Ok(Msg::ReleaseRun { run: RunId(req(run, "run")?) })
         }
         "compute-task" => dec_compute_task(bytes),
+        "pin-data" => {
+            let mut r = Reader::new(bytes);
+            let n = r.map_header()?;
+            let (mut run, mut task, mut consumers) = (None, None, None);
+            for _ in 0..n {
+                match r.str()? {
+                    "run" => run = Some(r_uint(&mut r, "run")? as u32),
+                    "task" => task = Some(r_uint(&mut r, "task")? as u32),
+                    "consumers" => consumers = Some(r_uint(&mut r, "consumers")? as u32),
+                    _ => r.skip_value()?,
+                }
+            }
+            finish(&r, bytes)?;
+            Ok(Msg::PinData {
+                run: RunId(req(run, "run")?),
+                task: TaskId(req(task, "task")?),
+                consumers: req(consumers, "consumers")?,
+            })
+        }
         "task-finished" => {
             let mut r = Reader::new(bytes);
             let n = r.map_header()?;
@@ -964,6 +1040,7 @@ fn dec_compute_task(bytes: &[u8]) -> Result<Msg, CodecError> {
     let (mut run, mut task, mut key, mut payload) = (None, None, None, None);
     let (mut duration_us, mut output_size, mut inputs, mut priority) = (None, None, None, None);
     let mut consumers = 0u32;
+    let mut cores = 1u32;
     for _ in 0..n {
         match r.str()? {
             "run" => run = Some(r_uint(&mut r, "run")? as u32),
@@ -974,6 +1051,7 @@ fn dec_compute_task(bytes: &[u8]) -> Result<Msg, CodecError> {
             "output_size" => output_size = Some(r_uint(&mut r, "output_size")?),
             "priority" => priority = Some(r_int(&mut r, "priority")?),
             "consumers" => consumers = r_uint(&mut r, "consumers")? as u32,
+            "cores" => cores = r_uint(&mut r, "cores")? as u32,
             "inputs" => inputs = Some(dec_inputs(&mut r)?),
             _ => r.skip_value()?,
         }
@@ -989,6 +1067,7 @@ fn dec_compute_task(bytes: &[u8]) -> Result<Msg, CodecError> {
         inputs: req(inputs, "inputs")?,
         priority: req(priority, "priority")?,
         consumers,
+        cores,
     })
 }
 
@@ -1048,6 +1127,8 @@ pub struct ComputeTaskView<'a> {
     pub priority: i64,
     /// Output consumer count (`0` when absent: pin in the store).
     pub consumers: u32,
+    /// Core slots the task occupies (`1` when absent).
+    pub cores: u32,
     n_inputs: usize,
     inputs_raw: &'a [u8],
 }
@@ -1093,6 +1174,7 @@ impl<'a> ComputeTaskView<'a> {
         let (mut run, mut task, mut key, mut payload) = (None, None, None, None);
         let (mut duration_us, mut output_size, mut priority) = (None, None, None);
         let mut consumers = 0u32;
+        let mut cores = 1u32;
         let mut inputs: Option<(usize, &'a [u8])> = None;
         let mut op: Option<&'a str> = None;
         for _ in 0..n {
@@ -1106,6 +1188,7 @@ impl<'a> ComputeTaskView<'a> {
                 "output_size" => output_size = Some(r_uint(&mut r, "output_size")?),
                 "priority" => priority = Some(r_int(&mut r, "priority")?),
                 "consumers" => consumers = r_uint(&mut r, "consumers")? as u32,
+                "cores" => cores = r_uint(&mut r, "cores")? as u32,
                 "inputs" => {
                     let cnt = r.array_header().map_err(|e| wrong(e, "inputs"))?;
                     let start = r.pos();
@@ -1132,6 +1215,7 @@ impl<'a> ComputeTaskView<'a> {
             output_size: req(output_size, "output_size")?,
             priority: req(priority, "priority")?,
             consumers,
+            cores,
             n_inputs,
             inputs_raw,
         })
@@ -1226,11 +1310,23 @@ pub fn encode_msg_value(msg: &Msg) -> Vec<u8> {
             fields.push(("data_addr", Value::str(data_addr)));
         }
         Msg::Welcome { id } => fields.push(("id", Value::from(*id))),
-        Msg::SubmitGraph { graph, scheduler } => {
+        Msg::SubmitGraph { graph, scheduler, open } => {
             fields.push(("graph", graph_to_value(graph)));
+            if *open {
+                fields.push(("open", Value::Bool(true)));
+            }
             if let Some(s) = scheduler {
                 fields.push(("scheduler", Value::str(s)));
             }
+        }
+        Msg::SubmitExtend { run, tasks, last } => {
+            fields.push(("base", Value::from(tasks.first().map_or(0, |t| t.id.0))));
+            fields.push(("last", Value::Bool(*last)));
+            fields.push(("run", Value::from(run.0)));
+            fields.push((
+                "tasks",
+                Value::Array(tasks.iter().map(taskspec_to_value).collect()),
+            ));
         }
         Msg::GraphSubmitted { run, n_tasks } => {
             fields.push(("run", Value::from(run.0)));
@@ -1260,6 +1356,7 @@ pub fn encode_msg_value(msg: &Msg) -> Vec<u8> {
             inputs,
             priority,
             consumers,
+            cores,
         } => {
             fields.push(("run", Value::from(run.0)));
             fields.push(("task", Value::from(task.0)));
@@ -1269,6 +1366,9 @@ pub fn encode_msg_value(msg: &Msg) -> Vec<u8> {
             fields.push(("output_size", Value::from(*output_size)));
             if *consumers > 0 {
                 fields.push(("consumers", Value::from(*consumers)));
+            }
+            if *cores > 1 {
+                fields.push(("cores", Value::from(*cores)));
             }
             fields.push((
                 "inputs",
@@ -1295,6 +1395,11 @@ pub fn encode_msg_value(msg: &Msg) -> Vec<u8> {
                 ),
             ));
             fields.push(("priority", Value::Int(*priority)));
+        }
+        Msg::PinData { run, task, consumers } => {
+            fields.push(("run", Value::from(run.0)));
+            fields.push(("task", Value::from(task.0)));
+            fields.push(("consumers", Value::from(*consumers)));
         }
         Msg::TaskFinished(info) => {
             fields.push(("run", Value::from(info.run.0)));
@@ -1369,7 +1474,20 @@ pub fn decode_msg_value(bytes: &[u8]) -> Result<Msg, CodecError> {
                         .to_string(),
                 ),
             };
-            Msg::SubmitGraph { graph: graph_from_value(get(&v, "graph")?)?, scheduler }
+            let open = match v.get("open") {
+                None => false,
+                Some(o) => o.as_bool().ok_or(CodecError::WrongType("open"))?,
+            };
+            Msg::SubmitGraph { graph: graph_from_value(get(&v, "graph")?)?, scheduler, open }
+        }
+        "submit-extend" => {
+            let base = get_u64(&v, "base")? as u32;
+            let tasks_v = get(&v, "tasks")?.as_array().ok_or(CodecError::WrongType("tasks"))?;
+            let mut tasks = Vec::with_capacity(tasks_v.len());
+            for (i, tv) in tasks_v.iter().enumerate() {
+                tasks.push(taskspec_from_value(tv, TaskId(base + i as u32))?);
+            }
+            Msg::SubmitExtend { run: get_run(&v)?, tasks, last: get_bool(&v, "last")? }
         }
         "graph-submitted" => {
             Msg::GraphSubmitted { run: get_run(&v)?, n_tasks: get_u64(&v, "n_tasks")? }
@@ -1418,6 +1536,10 @@ pub fn decode_msg_value(bytes: &[u8]) -> Result<Msg, CodecError> {
                 None => 0,
                 Some(c) => c.as_u64().ok_or(CodecError::WrongType("consumers"))? as u32,
             };
+            let cores = match v.get("cores") {
+                None => 1,
+                Some(c) => c.as_u64().ok_or(CodecError::WrongType("cores"))? as u32,
+            };
             Msg::ComputeTask {
                 run: get_run(&v)?,
                 task: get_task(&v, "task")?,
@@ -1428,8 +1550,14 @@ pub fn decode_msg_value(bytes: &[u8]) -> Result<Msg, CodecError> {
                 inputs,
                 priority: get_i64(&v, "priority")?,
                 consumers,
+                cores,
             }
         }
+        "pin-data" => Msg::PinData {
+            run: get_run(&v)?,
+            task: get_task(&v, "task")?,
+            consumers: get_u64(&v, "consumers")? as u32,
+        },
         "task-finished" => Msg::TaskFinished(TaskFinishedInfo {
             run: get_run(&v)?,
             task: get_task(&v, "task")?,
@@ -1549,6 +1677,7 @@ mod tests {
                 ],
                 priority: -5,
                 consumers: 0,
+                cores: 1,
             },
             // Replication-era compute-task: consumer refcount plus replica
             // alternates on one input (and none on the other — the
@@ -1576,7 +1705,49 @@ mod tests {
                 ],
                 priority: 3,
                 consumers: 7,
+                cores: 1,
             },
+            // Resource-era compute-task: a multi-core slot reservation.
+            Msg::ComputeTask {
+                run: RunId(2),
+                task: TaskId(44),
+                key: "wide-44".into(),
+                payload: Payload::BusyWait,
+                duration_us: 9000,
+                output_size: 16,
+                inputs: vec![],
+                priority: 1,
+                consumers: 2,
+                cores: 4,
+            },
+            // Incremental graph extension: a batch continuing the dense id
+            // space at base 3, plus a pure close (empty batch, last=true).
+            Msg::SubmitExtend {
+                run: RunId(6),
+                tasks: vec![
+                    TaskSpec {
+                        id: TaskId(3),
+                        key: "ext-3".into(),
+                        inputs: vec![TaskId(0), TaskId(2)],
+                        duration_us: 10,
+                        output_size: 20,
+                        payload: Payload::MergeInputs,
+                        cores: 1,
+                    },
+                    TaskSpec {
+                        id: TaskId(4),
+                        key: "ext-4".into(),
+                        inputs: vec![TaskId(3)],
+                        duration_us: 11,
+                        output_size: 21,
+                        payload: Payload::NoOp,
+                        cores: 2,
+                    },
+                ],
+                last: false,
+            },
+            Msg::SubmitExtend { run: RunId(6), tasks: vec![], last: true },
+            Msg::PinData { run: RunId(6), task: TaskId(2), consumers: 3 },
             Msg::TaskFinished(TaskFinishedInfo {
                 run: RunId(2),
                 task: TaskId(9),
@@ -1636,6 +1807,7 @@ mod tests {
                 inputs: vec![],
                 priority: p,
                 consumers: 0,
+                cores: 1,
             });
         }
         // Consumer counts across the uint format boundaries.
@@ -1650,6 +1822,23 @@ mod tests {
                 inputs: vec![],
                 priority: 0,
                 consumers: c,
+                cores: 1,
+            });
+        }
+        // Core counts across the uint format boundaries (1 is the omitted
+        // default; wider values must still agree between the codecs).
+        for c in [2u32, 127, 128, 255, 256, 65_536] {
+            rt(Msg::ComputeTask {
+                run: RunId(0),
+                task: TaskId(0),
+                key: "k".into(),
+                payload: Payload::NoOp,
+                duration_us: 1,
+                output_size: 1,
+                inputs: vec![],
+                priority: 0,
+                consumers: 0,
+                cores: c,
             });
         }
     }
@@ -1698,6 +1887,7 @@ mod tests {
                 inputs: vec![],
                 priority: 5,
                 consumers: 0,
+                cores: 1,
             });
         }
     }
@@ -1716,17 +1906,22 @@ mod tests {
                 assert_eq!(a.duration_us, b.duration_us);
                 assert_eq!(a.output_size, b.output_size);
                 assert_eq!(a.payload, b.payload);
+                assert_eq!(a.cores, b.cores);
             }
-            rt(Msg::SubmitGraph { graph: g, scheduler: None });
+            rt(Msg::SubmitGraph { graph: g, scheduler: None, open: false });
         }
     }
 
     #[test]
     fn submit_graph_scheduler_roundtrip() {
-        rt(Msg::SubmitGraph { graph: graphgen::merge(5), scheduler: Some("random".into()) });
+        rt(Msg::SubmitGraph {
+            graph: graphgen::merge(5),
+            scheduler: Some("random".into()),
+            open: false,
+        });
         // Absent scheduler decodes as None (wire compat with pre-field
         // frames).
-        let m = Msg::SubmitGraph { graph: graphgen::merge(3), scheduler: None };
+        let m = Msg::SubmitGraph { graph: graphgen::merge(3), scheduler: None, open: false };
         let back = decode_msg(&encode_msg(&m)).unwrap();
         assert!(matches!(back, Msg::SubmitGraph { scheduler: None, .. }));
         // Wrong type is rejected, not ignored.
@@ -1739,6 +1934,68 @@ mod tests {
             decode_msg(&encode(&Value::Map(v))),
             Err(CodecError::WrongType("scheduler"))
         ));
+    }
+
+    #[test]
+    fn submit_graph_open_roundtrip_and_wire_compat() {
+        rt(Msg::SubmitGraph { graph: graphgen::merge(4), scheduler: None, open: true });
+        // `open: false` is omitted on the wire: the frame must be
+        // byte-identical to a pre-extension encoder's output, and absent
+        // `open` decodes as false.
+        let closed = Msg::SubmitGraph { graph: graphgen::merge(4), scheduler: None, open: false };
+        let bytes = encode_msg(&closed);
+        let Value::Map(m) = decode(&bytes).unwrap() else { panic!("not a map") };
+        assert!(!m.contains_key("open"));
+        assert!(matches!(decode_msg(&bytes).unwrap(), Msg::SubmitGraph { open: false, .. }));
+        // Wrong type is rejected, not ignored.
+        let mut m = m;
+        m.insert("open".into(), Value::Int(1));
+        assert!(matches!(
+            decode_msg(&encode(&Value::Map(m))),
+            Err(CodecError::WrongType("open"))
+        ));
+    }
+
+    #[test]
+    fn submit_extend_reconstructs_dense_ids() {
+        // The wire carries `base` + per-task maps; the decoder must hand
+        // back the same dense TaskIds the encoder started from.
+        let m = Msg::SubmitExtend {
+            run: RunId(9),
+            tasks: vec![
+                TaskSpec {
+                    id: TaskId(100),
+                    key: "a".into(),
+                    inputs: vec![TaskId(7)],
+                    duration_us: 1,
+                    output_size: 2,
+                    payload: Payload::NoOp,
+                    cores: 1,
+                },
+                TaskSpec {
+                    id: TaskId(101),
+                    key: "b".into(),
+                    inputs: vec![TaskId(100)],
+                    duration_us: 3,
+                    output_size: 4,
+                    payload: Payload::BusyWait,
+                    cores: 4,
+                },
+            ],
+            last: true,
+        };
+        rt(m.clone());
+        let back = decode_msg(&encode_msg(&m)).unwrap();
+        let Msg::SubmitExtend { tasks, .. } = back else { panic!("wrong op") };
+        assert_eq!(tasks[0].id, TaskId(100));
+        assert_eq!(tasks[1].id, TaskId(101));
+        assert_eq!(tasks[1].cores, 4);
+        // `cores: 1` is omitted from the task map (wire compat with the
+        // submit-graph task encoding).
+        let bytes = encode_msg(&m);
+        let v = decode(&bytes).unwrap();
+        let t0 = &v.get("tasks").unwrap().as_array().unwrap()[0];
+        assert!(t0.get("cores").is_none());
     }
 
     #[test]
@@ -1851,12 +2108,22 @@ mod tests {
             ],
             priority: -9,
             consumers: 4,
+            cores: 2,
         };
         let bytes = encode_msg(&m);
         let view = ComputeTaskView::decode(&bytes).unwrap();
         let decoded = decode_msg(&bytes).unwrap();
         let Msg::ComputeTask {
-            run, task, key, payload, duration_us, output_size, inputs, priority, consumers,
+            run,
+            task,
+            key,
+            payload,
+            duration_us,
+            output_size,
+            inputs,
+            priority,
+            consumers,
+            cores,
         } = decoded
         else {
             panic!("wrong op");
@@ -1869,6 +2136,7 @@ mod tests {
         assert_eq!(view.output_size, output_size);
         assert_eq!(view.priority, priority);
         assert_eq!(view.consumers, consumers);
+        assert_eq!(view.cores, cores);
         assert_eq!(view.n_inputs(), inputs.len());
         let got: Vec<TaskInputRef> = view.inputs().collect::<Result<_, _>>().unwrap();
         for (g, w) in got.iter().zip(&inputs) {
@@ -1947,6 +2215,7 @@ mod tests {
             inputs: inputs.clone(),
             priority: -9,
             consumers: 2,
+            cores: 3,
         };
         let owned = encode_msg(&m);
         let parts = ComputeTaskParts {
@@ -1958,6 +2227,7 @@ mod tests {
             output_size: 456,
             priority: -9,
             consumers: 2,
+            cores: 3,
         };
         let mut borrowed = Vec::new();
         encode_compute_task_into(
@@ -2002,6 +2272,7 @@ mod tests {
             inputs: vec![],
             priority: 99_999,
             consumers: 1,
+            cores: 1,
         });
         assert!(bytes.len() < 256, "compute-task message is {} bytes", bytes.len());
     }

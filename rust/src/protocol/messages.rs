@@ -2,7 +2,7 @@
 //! supports a minimum set of DASK message types which are necessary to run
 //! the most common DASK workflows").
 
-use crate::taskgraph::{TaskGraph, TaskId};
+use crate::taskgraph::{TaskGraph, TaskId, TaskSpec};
 
 /// Error-string prefix a worker puts on a `task-erred` whose cause was a
 /// failed *input fetch* (dead peer, stale `who_has` address) rather than
@@ -88,7 +88,20 @@ pub enum Msg {
     /// algorithm serving this run (`random` | `ws` | …); `None` uses the
     /// server's default. Latency-sensitive and throughput-oriented clients
     /// can thereby pick different schedulers on one shared server.
-    SubmitGraph { graph: TaskGraph, scheduler: Option<String> },
+    /// `open: true` declares the run *extensible*: the client may stream
+    /// further tasks with [`Msg::SubmitExtend`], and the run stays live
+    /// (even fully quiescent) until a closing extension arrives. `false`
+    /// (absent on the wire) is the classic one-shot submission.
+    SubmitGraph { graph: TaskGraph, scheduler: Option<String>, open: bool },
+    /// client → server: append a batch of tasks to an *open* live run
+    /// (incremental graph construction). Task ids continue the run's dense
+    /// id space; inputs may reference any earlier task, including already
+    /// finished ones. `last: true` closes the run — once the close lands
+    /// the run retires as soon as every task has finished. An empty batch
+    /// with `last: true` is a pure close. Acked with `graph-submitted`
+    /// carrying the new task total; an extension of an unknown/retired run
+    /// answers `graph-failed`.
+    SubmitExtend { run: RunId, tasks: Vec<TaskSpec>, last: bool },
     /// server → client: graph accepted; all later messages about it carry
     /// `run`. Clients may pipeline further submissions immediately. Also
     /// sent when a previously parked submission (see [`Msg::RunQueued`])
@@ -128,7 +141,19 @@ pub enum Msg {
         /// "pin until `release-run`": sink outputs must survive for the
         /// client, and pre-replication frames decode to the safe default.
         consumers: u32,
+        /// Core slots the task occupies on the worker. `1` (absent on the
+        /// wire) is the ordinary single-slot task; pre-resource frames
+        /// decode unchanged.
+        cores: u32,
     },
+    /// server → worker: raise a stored output's reference count by
+    /// `consumers` — a graph extension added consumers of an output whose
+    /// `compute-task` baked in a smaller count (or whose count already
+    /// drained to its pinned/evicted end state). A worker that no longer
+    /// holds the key ignores the message: the server only pins outputs it
+    /// believes resident, and the `fetch-failed` resurrection path
+    /// backstops a copy that evaporated in flight.
+    PinData { run: RunId, task: TaskId, consumers: u32 },
     /// worker → server: task done, output stored locally.
     TaskFinished(TaskFinishedInfo),
     /// worker → server: task raised.
@@ -198,12 +223,14 @@ impl Msg {
             Msg::RegisterWorker { .. } => "register-worker",
             Msg::Welcome { .. } => "welcome",
             Msg::SubmitGraph { .. } => "submit-graph",
+            Msg::SubmitExtend { .. } => "submit-extend",
             Msg::GraphSubmitted { .. } => "graph-submitted",
             Msg::RunQueued { .. } => "run-queued",
             Msg::GraphDone { .. } => "graph-done",
             Msg::GraphFailed { .. } => "graph-failed",
             Msg::ReleaseRun { .. } => "release-run",
             Msg::ComputeTask { .. } => "compute-task",
+            Msg::PinData { .. } => "pin-data",
             Msg::TaskFinished(..) => "task-finished",
             Msg::TaskErred { .. } => "task-erred",
             Msg::StealRequest { .. } => "steal-request",

@@ -14,6 +14,10 @@ pub struct WorkerState {
     pub info: Option<WorkerInfo>,
     /// Tasks assigned but not yet reported finished.
     pub queued: HashSet<TaskId>,
+    /// Core slots those queued tasks occupy — a `cores`-wide task counts
+    /// its full width, so the balance passes see a 4-core task as four
+    /// slots of load, not one queue entry.
+    pub queued_slots: u64,
     /// Sum of expected durations of queued tasks (µs) — Dask-style occupancy.
     pub occupancy_us: u64,
     /// Task outputs present on this worker.
@@ -67,10 +71,14 @@ impl ClusterModel {
     /// steal-race purge in [`ClusterModel::finish`] has the same shape:
     /// an optimistic move may have parked the task on any worker.
     pub fn forget_task(&mut self, task: TaskId) {
-        let dur = self.graph().task(task).duration_us;
+        let (dur, cores) = {
+            let s = self.graph().task(task);
+            (s.duration_us, s.cores as u64)
+        };
         for ws in &mut self.workers {
             if ws.queued.remove(&task) {
                 ws.occupancy_us = ws.occupancy_us.saturating_sub(dur);
+                ws.queued_slots = ws.queued_slots.saturating_sub(cores);
             }
             ws.incoming.remove(&task);
         }
@@ -91,10 +99,30 @@ impl ClusterModel {
         self.placement.clear();
         for w in &mut self.workers {
             w.queued.clear();
+            w.queued_slots = 0;
             w.occupancy_us = 0;
             w.has_data.clear();
             w.incoming.clear();
         }
+    }
+
+    /// Swap in a grown version of the *same* graph (a `submit-extend`
+    /// epoch). Task ids are stable across extensions — every existing
+    /// queue entry and placement record stays valid — so, unlike
+    /// [`ClusterModel::set_graph`], nothing is cleared.
+    pub fn extend_graph(&mut self, graph: &TaskGraph) {
+        self.graph = Some(graph.clone());
+    }
+
+    /// Whether `worker` has enough core slots to ever run a `cores`-wide
+    /// task. This is *capacity*, not current load: workers queue beyond
+    /// their core count, but a task wider than the worker can never start.
+    pub fn can_fit(&self, worker: WorkerId, cores: u32) -> bool {
+        self.workers
+            .get(worker.idx())
+            .and_then(|w| w.info)
+            .map(|i| i.ncores >= cores)
+            .unwrap_or(false)
     }
 
     pub fn graph(&self) -> &TaskGraph {
@@ -103,9 +131,13 @@ impl ClusterModel {
 
     /// Record an assignment in the model.
     pub fn assign(&mut self, task: TaskId, worker: WorkerId) {
-        let dur = self.graph().task(task).duration_us;
+        let (dur, cores) = {
+            let s = self.graph().task(task);
+            (s.duration_us, s.cores as u64)
+        };
         let w = &mut self.workers[worker.idx()];
         w.queued.insert(task);
+        w.queued_slots += cores;
         w.occupancy_us += dur;
         w.incoming.insert(task);
     }
@@ -117,15 +149,20 @@ impl ClusterModel {
     /// finished task is therefore purged from every queue, so the model can
     /// never propose stealing a completed task.
     pub fn finish(&mut self, task: TaskId, worker: WorkerId) {
-        let dur = self.graph().task(task).duration_us;
+        let (dur, cores) = {
+            let s = self.graph().task(task);
+            (s.duration_us, s.cores as u64)
+        };
         let w = &mut self.workers[worker.idx()];
         if w.queued.remove(&task) {
             w.occupancy_us = w.occupancy_us.saturating_sub(dur);
+            w.queued_slots = w.queued_slots.saturating_sub(cores);
         } else {
             // Rare steal-race path: find and purge wherever it sits.
             for ws in &mut self.workers {
                 if ws.queued.remove(&task) {
                     ws.occupancy_us = ws.occupancy_us.saturating_sub(dur);
+                    ws.queued_slots = ws.queued_slots.saturating_sub(cores);
                     ws.incoming.remove(&task);
                     break;
                 }
@@ -141,15 +178,20 @@ impl ClusterModel {
     /// `false` (and does nothing) if the task is no longer queued at `from`
     /// — e.g. it finished while the retraction was in flight.
     pub fn move_task(&mut self, task: TaskId, from: WorkerId, to: WorkerId) -> bool {
-        let dur = self.graph().task(task).duration_us;
+        let (dur, cores) = {
+            let s = self.graph().task(task);
+            (s.duration_us, s.cores as u64)
+        };
         let f = &mut self.workers[from.idx()];
         if !f.queued.remove(&task) {
             return false;
         }
         f.occupancy_us = f.occupancy_us.saturating_sub(dur);
+        f.queued_slots = f.queued_slots.saturating_sub(cores);
         f.incoming.remove(&task);
         let t = &mut self.workers[to.idx()];
         t.queued.insert(task);
+        t.queued_slots += cores;
         t.occupancy_us += dur;
         t.incoming.insert(task);
         true
@@ -226,7 +268,15 @@ impl ClusterModel {
 
     /// Next worker in round-robin order (for input-less tasks).
     pub fn next_round_robin(&mut self) -> Option<WorkerId> {
-        let ids: Vec<WorkerId> = self.worker_ids().collect();
+        self.next_round_robin_fitting(1)
+    }
+
+    /// Round-robin restricted to workers with at least `cores` core slots
+    /// — placement for input-less multi-core tasks under heterogeneity.
+    /// `None` when no registered worker is wide enough.
+    pub fn next_round_robin_fitting(&mut self, cores: u32) -> Option<WorkerId> {
+        let ids: Vec<WorkerId> =
+            self.worker_ids().filter(|&w| self.can_fit(w, cores)).collect();
         if ids.is_empty() {
             return None;
         }
@@ -235,8 +285,8 @@ impl ClusterModel {
         Some(id)
     }
 
-    /// (most-loaded worker by queue length, least-loaded) — used by balance
-    /// passes. Returns `None` with fewer than 2 workers.
+    /// (most-loaded worker by queued core slots, least-loaded) — used by
+    /// balance passes. Returns `None` with fewer than 2 workers.
     pub fn load_extremes(&self) -> Option<(WorkerId, WorkerId)> {
         let mut max_w = None;
         let mut min_w = None;
@@ -245,7 +295,7 @@ impl ClusterModel {
                 continue;
             }
             let id = WorkerId(idx as u32);
-            let q = w.queued.len();
+            let q = w.queued_slots as usize;
             if max_w.map(|(_, mq)| q > mq).unwrap_or(true) {
                 max_w = Some((id, q));
             }
@@ -372,5 +422,72 @@ mod tests {
         let (hi, lo) = m.load_extremes().unwrap();
         assert_eq!(hi, WorkerId(0));
         assert_eq!(lo, WorkerId(1));
+    }
+
+    #[test]
+    fn multicore_tasks_occupy_multiple_slots() {
+        let mut b = GraphBuilder::new();
+        let wide = b.add_with_cores("wide", vec![], 100, 10, Payload::NoOp, 4);
+        let narrow = b.add("narrow", vec![], 100, 10, Payload::NoOp);
+        let g = b.build("g").unwrap();
+        let mut m = ClusterModel::new();
+        m.add_worker(WorkerInfo { id: WorkerId(0), ncores: 4, node: 0 });
+        m.add_worker(WorkerInfo { id: WorkerId(1), ncores: 1, node: 0 });
+        m.set_graph(&g);
+        assert!(m.can_fit(WorkerId(0), 4));
+        assert!(!m.can_fit(WorkerId(1), 2));
+        assert!(!m.can_fit(WorkerId(9), 1), "unknown worker never fits");
+        m.assign(wide, WorkerId(0));
+        m.assign(narrow, WorkerId(1));
+        assert_eq!(m.workers[0].queued_slots, 4);
+        assert_eq!(m.workers[1].queued_slots, 1);
+        // One queued task each, but the 4-core task makes w0 the loaded one.
+        let (hi, lo) = m.load_extremes().unwrap();
+        assert_eq!(hi, WorkerId(0));
+        assert_eq!(lo, WorkerId(1));
+        m.move_task(wide, WorkerId(0), WorkerId(0));
+        m.finish(wide, WorkerId(0));
+        assert_eq!(m.workers[0].queued_slots, 0);
+        m.forget_task(narrow);
+        assert_eq!(m.workers[1].queued_slots, 0);
+    }
+
+    #[test]
+    fn round_robin_fitting_skips_narrow_workers() {
+        let mut m = ClusterModel::new();
+        m.add_worker(WorkerInfo { id: WorkerId(0), ncores: 1, node: 0 });
+        m.add_worker(WorkerInfo { id: WorkerId(1), ncores: 4, node: 0 });
+        m.set_graph(&graph());
+        for _ in 0..4 {
+            assert_eq!(m.next_round_robin_fitting(2), Some(WorkerId(1)));
+        }
+        assert_eq!(m.next_round_robin_fitting(8), None);
+    }
+
+    #[test]
+    fn extend_graph_keeps_placement_and_queues() {
+        use crate::taskgraph::TaskSpec;
+        let mut m = model(&[0, 1]);
+        m.assign(TaskId(0), WorkerId(0));
+        m.finish(TaskId(0), WorkerId(0));
+        m.assign(TaskId(1), WorkerId(1));
+        let mut grown = m.graph().clone();
+        grown
+            .extend(vec![TaskSpec {
+                id: TaskId(3),
+                key: "e".into(),
+                inputs: vec![TaskId(2)],
+                duration_us: 100,
+                output_size: 1,
+                payload: Payload::MergeInputs,
+                cores: 1,
+            }])
+            .unwrap();
+        m.extend_graph(&grown);
+        assert_eq!(m.graph().len(), 4, "model sees the extension");
+        assert_eq!(m.placement[&TaskId(0)], vec![WorkerId(0)], "placement survives");
+        assert!(m.workers[0].has_data.contains(&TaskId(0)));
+        assert!(m.workers[1].queued.contains(&TaskId(1)), "queue survives");
+        assert_eq!(m.workers[1].queued_slots, 1);
     }
 }

@@ -80,10 +80,14 @@ impl DaskWsScheduler {
         }
     }
 
-    /// Earliest-estimated-start-time placement: scans ALL workers.
+    /// Earliest-estimated-start-time placement: scans ALL workers (with
+    /// enough core slots for the task — a narrower worker can never start
+    /// it, whatever its occupancy says).
     fn place(&mut self, task: TaskId) -> WorkerId {
-        let ids: Vec<WorkerId> = self.model.worker_ids().collect();
-        assert!(!ids.is_empty(), "no workers registered");
+        let cores = self.model.graph().task(task).cores;
+        let ids: Vec<WorkerId> =
+            self.model.worker_ids().filter(|&w| self.model.can_fit(w, cores)).collect();
+        assert!(!ids.is_empty(), "no registered worker has enough cores");
         self.cost.decisions += 1;
         self.cost.workers_scanned += ids.len() as u64;
         let mut best = ids[0];
@@ -138,6 +142,7 @@ impl DaskWsScheduler {
                 .queued
                 .iter()
                 .filter(|t| !self.in_flight_steals.contains(t))
+                .filter(|&&t| self.model.can_fit(idle, self.model.graph().task(t).cores))
                 .max_by_key(|t| t.0)
                 .copied();
             let Some(task) = victim else { return };
@@ -199,6 +204,12 @@ impl Scheduler for DaskWsScheduler {
         for occ in &mut self.est_occupancy_us {
             *occ = 0.0;
         }
+    }
+
+    fn graph_extended(&mut self, graph: &TaskGraph) {
+        // Ids are stable across extensions: queues, placement, learned
+        // duration averages and estimated occupancy all stay valid.
+        self.model.extend_graph(graph);
     }
 
     fn tasks_ready(&mut self, tasks: &[TaskId], out: &mut Vec<Action>) {
@@ -380,6 +391,63 @@ mod tests {
         s.tasks_ready(&mids, &mut out);
         let steals = out.iter().filter(|a| matches!(a, Action::Steal { .. })).count();
         assert!(steals > 0, "expected steals towards idle workers");
+    }
+
+    #[test]
+    fn multicore_task_skips_narrow_workers() {
+        // EST would pick the data holder; capacity excludes it from the
+        // scan entirely.
+        let mut b = GraphBuilder::new();
+        let a = b.add("a", vec![], 10, 50_000_000, Payload::NoOp);
+        let wide = b.add_with_cores("wide", vec![a], 10, 1, Payload::MergeInputs, 2);
+        let g = b.build("g").unwrap();
+        let mut s = DaskWsScheduler::new();
+        s.add_worker(WorkerInfo { id: WorkerId(0), ncores: 1, node: 0 });
+        s.add_worker(WorkerInfo { id: WorkerId(1), ncores: 2, node: 1 });
+        s.graph_submitted(&g);
+        let mut out = Vec::new();
+        s.tasks_ready(&[a], &mut out);
+        let wa = assignments(&out)[0].worker;
+        out.clear();
+        s.task_finished(a, wa, 50_000_000, 10, &mut out);
+        out.clear();
+        s.tasks_ready(&[wide], &mut out);
+        assert_eq!(assignments(&out)[0].worker, WorkerId(1), "only the wide worker fits");
+    }
+
+    #[test]
+    fn extension_preserves_estimates_and_placement() {
+        use crate::taskgraph::TaskSpec;
+        let mut s = sched(2);
+        let mut b = GraphBuilder::new();
+        let a = b.add("x-1", vec![], 10, 50_000_000, Payload::NoOp);
+        let g = b.build("g").unwrap();
+        s.graph_submitted(&g);
+        let mut out = Vec::new();
+        s.tasks_ready(&[a], &mut out);
+        let w = assignments(&out)[0].worker;
+        out.clear();
+        s.task_finished(a, w, 50_000_000, 1234, &mut out);
+        let mut grown = g.clone();
+        grown
+            .extend(vec![TaskSpec {
+                id: TaskId(1),
+                key: "x-2".into(),
+                inputs: vec![a],
+                duration_us: 10,
+                output_size: 1,
+                payload: Payload::MergeInputs,
+                cores: 1,
+            }])
+            .unwrap();
+        s.graph_extended(&grown);
+        out.clear();
+        s.tasks_ready(&[TaskId(1)], &mut out);
+        assert_eq!(assignments(&out)[0].worker, w, "big input pins the extension task");
+        assert!(
+            (s.durations.estimate("x-9") - 1234.0).abs() < 1e-9,
+            "learned durations survive the extension"
+        );
     }
 
     #[test]

@@ -155,6 +155,14 @@ pub trait Scheduler: Send {
     /// their own task graph).
     fn graph_submitted(&mut self, graph: &TaskGraph);
 
+    /// The current run's graph grew in place (`submit-extend`): `graph` is
+    /// the same graph with a batch of new tasks appended. Task ids are
+    /// stable across the extension, so schedulers with a cluster model
+    /// refresh their graph copy *without* clearing placement or queue
+    /// state; newly ready tasks follow via [`Scheduler::tasks_ready`].
+    /// Default: no-op (stateless schedulers and test probes need nothing).
+    fn graph_extended(&mut self, _graph: &TaskGraph) {}
+
     /// Tasks whose dependencies are all finished; the scheduler must
     /// eventually assign each exactly once.
     fn tasks_ready(&mut self, tasks: &[TaskId], out: &mut Vec<Action>);

@@ -11,13 +11,26 @@ use crate::util::Rng;
 
 pub struct RandomScheduler {
     rng: Rng,
-    workers: Vec<WorkerId>,
+    workers: Vec<WorkerInfo>,
+    /// Per-task core widths copied from the graph — the one sliver of
+    /// graph state random keeps, needed so a uniform draw never lands a
+    /// multi-core task on a worker too narrow to ever start it.
+    task_cores: Vec<u32>,
     cost: SchedCost,
 }
 
 impl RandomScheduler {
     pub fn new(seed: u64) -> Self {
-        RandomScheduler { rng: Rng::new(seed), workers: Vec::new(), cost: SchedCost::default() }
+        RandomScheduler {
+            rng: Rng::new(seed),
+            workers: Vec::new(),
+            task_cores: Vec::new(),
+            cost: SchedCost::default(),
+        }
+    }
+
+    fn copy_cores(&mut self, graph: &TaskGraph) {
+        self.task_cores = graph.tasks().iter().map(|t| t.cores).collect();
     }
 }
 
@@ -31,22 +44,32 @@ impl Scheduler for RandomScheduler {
     }
 
     fn add_worker(&mut self, info: WorkerInfo) {
-        self.workers.push(info.id);
+        self.workers.push(info);
     }
 
     fn remove_worker(&mut self, worker: WorkerId) {
-        self.workers.retain(|&w| w != worker);
+        self.workers.retain(|w| w.id != worker);
     }
 
-    fn graph_submitted(&mut self, _graph: &TaskGraph) {
-        // Deliberately stateless (§IV-C: "does not maintain any task graph
-        // state").
+    fn graph_submitted(&mut self, graph: &TaskGraph) {
+        // Deliberately (nearly) stateless (§IV-C: "does not maintain any
+        // task graph state") — only the core widths are copied, because a
+        // draw must be uniform over workers that *can* run the task.
+        self.copy_cores(graph);
+    }
+
+    fn graph_extended(&mut self, graph: &TaskGraph) {
+        self.copy_cores(graph);
     }
 
     fn tasks_ready(&mut self, tasks: &[TaskId], out: &mut Vec<Action>) {
         assert!(!self.workers.is_empty(), "no workers registered");
         for &t in tasks {
-            let w = *self.rng.choose(&self.workers);
+            let cores = self.task_cores.get(t.idx()).copied().unwrap_or(1);
+            let eligible: Vec<WorkerId> =
+                self.workers.iter().filter(|i| i.ncores >= cores).map(|i| i.id).collect();
+            assert!(!eligible.is_empty(), "no registered worker has enough cores");
+            let w = *self.rng.choose(&eligible);
             self.cost.decisions += 1;
             out.push(Action::Assign(Assignment { task: t, worker: w, priority: t.0 as i64 }));
         }
@@ -156,6 +179,32 @@ mod tests {
                 assert_ne!(a.worker, WorkerId(2));
             }
         }
+    }
+
+    #[test]
+    fn multicore_tasks_only_land_on_wide_workers() {
+        use crate::taskgraph::{GraphBuilder, Payload};
+        let mut s = RandomScheduler::new(3);
+        s.add_worker(WorkerInfo { id: WorkerId(0), ncores: 1, node: 0 });
+        s.add_worker(WorkerInfo { id: WorkerId(1), ncores: 4, node: 0 });
+        s.add_worker(WorkerInfo { id: WorkerId(2), ncores: 2, node: 0 });
+        let mut b = GraphBuilder::new();
+        for i in 0..50 {
+            b.add_with_cores(format!("t{i}"), vec![], 10, 1, Payload::NoOp, 2);
+        }
+        let g = b.build("g").unwrap();
+        s.graph_submitted(&g);
+        let mut out = Vec::new();
+        s.tasks_ready(&g.roots(), &mut out);
+        assert_eq!(out.len(), 50);
+        let mut hit_wide = [false; 3];
+        for a in &out {
+            if let Action::Assign(a) = a {
+                assert_ne!(a.worker, WorkerId(0), "1-core worker can't run 2-core tasks");
+                hit_wide[a.worker.idx()] = true;
+            }
+        }
+        assert!(hit_wide[1] && hit_wide[2], "uniform over the eligible pair");
     }
 
     #[test]

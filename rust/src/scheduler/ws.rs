@@ -64,12 +64,19 @@ impl WsScheduler {
 
     /// Pick the worker with minimal transfer cost (§IV-C), scanning only
     /// candidate holders of inputs; falls back to round-robin for
-    /// input-less tasks. Load is deliberately ignored.
+    /// input-less tasks. Load is deliberately ignored, worker *capacity*
+    /// is not: a worker with fewer cores than the task needs can never
+    /// start it, so it is excluded before the cost scan.
     fn place(&mut self, task: TaskId) -> WorkerId {
-        let candidates = self.model.candidate_workers(task);
+        let cores = self.model.graph().task(task).cores;
+        let mut candidates = self.model.candidate_workers(task);
+        candidates.retain(|&w| self.model.can_fit(w, cores));
         self.cost.decisions += 1;
         if candidates.is_empty() {
-            return self.model.next_round_robin().expect("no workers registered");
+            return self
+                .model
+                .next_round_robin_fitting(cores)
+                .expect("no registered worker has enough cores");
         }
         self.cost.workers_scanned += candidates.len() as u64;
         let mut best = candidates[0];
@@ -99,17 +106,19 @@ impl WsScheduler {
         self.cost.workers_scanned += self.model.n_workers() as u64;
         loop {
             let Some((hi, lo)) = self.model.load_extremes() else { return };
-            let hi_q = self.model.workers[hi.idx()].queued.len();
-            let lo_q = self.model.workers[lo.idx()].queued.len();
+            let hi_q = self.model.workers[hi.idx()].queued_slots as usize;
+            let lo_q = self.model.workers[lo.idx()].queued_slots as usize;
             if lo_q > UNDERLOAD_THRESHOLD || hi_q < STEAL_MIN_QUEUE || hi_q - lo_q < 2 {
                 return;
             }
             // Steal the most recently queued (lowest-priority) task that is
-            // not already being stolen.
+            // not already being stolen and that the under-loaded worker has
+            // the core capacity to run.
             let victim = self.model.workers[hi.idx()]
                 .queued
                 .iter()
                 .filter(|t| !self.in_flight_steals.contains(t))
+                .filter(|&&t| self.model.can_fit(lo, self.model.graph().task(t).cores))
                 .max_by_key(|t| t.0)
                 .copied();
             let Some(task) = victim else { return };
@@ -157,6 +166,12 @@ impl Scheduler for WsScheduler {
     fn graph_submitted(&mut self, graph: &TaskGraph) {
         self.model.set_graph(graph);
         self.in_flight_steals.clear();
+    }
+
+    fn graph_extended(&mut self, graph: &TaskGraph) {
+        // Ids are stable across extensions: keep queues, placement and
+        // in-flight steal bookkeeping, just learn the new tasks.
+        self.model.extend_graph(graph);
     }
 
     fn tasks_ready(&mut self, tasks: &[TaskId], out: &mut Vec<Action>) {
@@ -409,6 +424,65 @@ mod tests {
                 assert!(!w.queued.contains(&task));
             }
         }
+    }
+
+    #[test]
+    fn multicore_task_skips_narrow_workers() {
+        // Locality points at the 1-core data holder, capacity forbids it:
+        // the 4-core task must land on the wide worker.
+        let mut b = GraphBuilder::new();
+        let a = b.add("a", vec![], 10, 1_000_000, Payload::NoOp);
+        let wide = b.add_with_cores("wide", vec![a], 10, 1, Payload::MergeInputs, 4);
+        let g = b.build("g").unwrap();
+        let mut s = WsScheduler::new();
+        s.add_worker(WorkerInfo { id: WorkerId(0), ncores: 1, node: 0 });
+        s.add_worker(WorkerInfo { id: WorkerId(1), ncores: 4, node: 1 });
+        s.graph_submitted(&g);
+        let mut out = Vec::new();
+        s.tasks_ready(&[a], &mut out);
+        let wa = assignments(&out)[0].worker;
+        out.clear();
+        s.task_finished(a, wa, 1_000_000, 10, &mut out);
+        out.clear();
+        s.tasks_ready(&[wide], &mut out);
+        assert_eq!(assignments(&out)[0].worker, WorkerId(1), "capacity beats locality");
+        // And a balance pass must never steal it back to the narrow worker.
+        for act in &out {
+            if let Action::Steal { task, to, .. } = act {
+                assert!(!(*task == wide && *to == WorkerId(0)));
+            }
+        }
+    }
+
+    #[test]
+    fn extension_keeps_locality_against_resident_placement() {
+        use crate::taskgraph::TaskSpec;
+        let mut b = GraphBuilder::new();
+        let a = b.add("a", vec![], 10, 1_000_000, Payload::NoOp);
+        let g = b.build("g").unwrap();
+        let mut s = sched(3, 24);
+        s.graph_submitted(&g);
+        let mut out = Vec::new();
+        s.tasks_ready(&[a], &mut out);
+        let w = assignments(&out)[0].worker;
+        out.clear();
+        s.task_finished(a, w, 1_000_000, 10, &mut out);
+        let mut grown = g.clone();
+        grown
+            .extend(vec![TaskSpec {
+                id: TaskId(1),
+                key: "b".into(),
+                inputs: vec![a],
+                duration_us: 10,
+                output_size: 1,
+                payload: Payload::MergeInputs,
+                cores: 1,
+            }])
+            .unwrap();
+        s.graph_extended(&grown);
+        out.clear();
+        s.tasks_ready(&[TaskId(1)], &mut out);
+        assert_eq!(assignments(&out)[0].worker, w, "locality survives the extension");
     }
 
     #[test]

@@ -36,7 +36,7 @@
 
 use super::fairness::{FairnessPolicy, RoundRobin, RunQueueStat, DEFAULT_DISPATCH_QUOTA};
 use super::pool::SchedulerPool;
-use super::state::{GraphRun, Parked, ReplicaSet, RunIdAlloc, TaskState};
+use super::state::{ExtendPlan, GraphRun, Parked, ReplicaSet, RunIdAlloc, TaskState};
 use super::window::BoundedWindow;
 use crate::overhead::RuntimeProfile;
 use crate::protocol::{
@@ -44,7 +44,7 @@ use crate::protocol::{
     FETCH_FAILED_PREFIX, RECOVERY_EXHAUSTED_REASON,
 };
 use crate::scheduler::{Action, Scheduler, WorkerId, WorkerInfo};
-use crate::taskgraph::{TaskGraph, TaskId};
+use crate::taskgraph::{TaskGraph, TaskId, TaskSpec};
 use crate::util::timing::{busy_wait_us, Stopwatch};
 use std::collections::{HashMap, VecDeque};
 
@@ -148,6 +148,11 @@ struct ParkedRun {
     /// Reactor-clock µs at the original submission; the run's makespan
     /// spans the queued phase (the client-observed latency).
     submitted_at_us: u64,
+    /// Extensible submission: still accepting `submit-extend` batches.
+    /// Extensions arriving while parked fold into `graph` directly (no
+    /// `GraphRun` exists yet); a closing extension clears this so the
+    /// eventual activation starts the run already closed.
+    open: bool,
 }
 
 /// The reactor state machine.
@@ -307,6 +312,7 @@ impl<'a> ComputeDispatch<'a> {
             output_size: spec.output_size,
             priority: self.priority,
             consumers: self.graph.consumers(self.task).len() as u32,
+            cores: spec.cores,
         }
     }
 
@@ -351,6 +357,7 @@ impl<'a> ComputeDispatch<'a> {
                 .collect(),
             priority: self.priority,
             consumers: self.graph.consumers(self.task).len() as u32,
+            cores: spec.cores,
         }
     }
 }
@@ -685,7 +692,13 @@ impl Reactor {
                     // Resolve against the run *now*: key/payload from the
                     // graph, input addresses from the current `who_has`
                     // (at least as fresh as a park-time snapshot).
-                    let run = self.runs.get(&pick).expect("picked run is live");
+                    let run = self.runs.get_mut(&pick).expect("picked run is live");
+                    // Stamp the consumer count baked into this frame: a
+                    // later graph extension that raises it delivers only
+                    // the gap as a `pin-data` delta (see `TaskFinished`).
+                    run.emitted_consumers[task.idx()] =
+                        run.graph.consumers(task).len() as u32;
+                    let run = &*run;
                     let dispatch = ComputeDispatch::new(
                         pick,
                         task,
@@ -777,7 +790,7 @@ impl Reactor {
     /// that's the latency its client observed. `prior_msgs_out` counts the
     /// ack messages already sent for this run.
     fn activate_run(&mut self, sub: ParkedRun, prior_msgs_out: u64, out: &mut Vec<(Dest, Msg)>) {
-        let ParkedRun { run: run_id, client, graph, scheduler, submitted_at_us } = sub;
+        let ParkedRun { run: run_id, client, graph, scheduler, submitted_at_us, open } = sub;
         self.charge(self.profile.task_transition_us * graph.len() as f64 * 0.2);
         if let Err(reason) = self.pool.create_with(run_id, &graph, scheduler.as_deref()) {
             // Unreachable for named overrides (validated at submission);
@@ -786,6 +799,9 @@ impl Reactor {
             return;
         }
         let mut run = GraphRun::new(graph, client, submitted_at_us);
+        if open {
+            run.set_open();
+        }
         run.max_recoveries = self.default_max_recoveries;
         if self.replication > 1 {
             run.replicate_hint =
@@ -802,6 +818,163 @@ impl Reactor {
         self.flush_actions(run_id, out);
         // Degenerate empty graph: done before any task report.
         self.maybe_complete(run_id, out);
+    }
+
+    /// Handle a `submit-extend`: graft a task batch onto an *open* run —
+    /// live or still parked in the admission queue — ack with the new task
+    /// total, then apply the [`ExtendPlan`]: seed the scheduler with the
+    /// newly ready tasks, push `pin-data` refcount deltas to every holder
+    /// of a resident finished input, and let transitively resurrected
+    /// lineage recompute through the normal ready path. `last: true`
+    /// closes the run (an empty batch with `last` is a pure close — a
+    /// quiescent run retires immediately).
+    fn handle_extend(
+        &mut self,
+        client: u32,
+        run_id: RunId,
+        tasks: Vec<TaskSpec>,
+        last: bool,
+        out: &mut Vec<(Dest, Msg)>,
+    ) {
+        // A parked submission has no GraphRun or scheduler yet: fold the
+        // batch into the stored graph so the eventual activation sees the
+        // whole prefix at once.
+        if let Some(i) = self.admission.iter().position(|p| p.run == run_id) {
+            if self.admission[i].client != client {
+                log::warn!("client {client} tried to extend foreign {run_id}; ignored");
+                return;
+            }
+            let p = &mut self.admission[i];
+            if !p.open {
+                out.push((
+                    Dest::Client(client),
+                    Msg::GraphFailed {
+                        run: run_id,
+                        reason: format!("{run_id} is not open for extension"),
+                    },
+                ));
+                let _ = self.admission.remove(i);
+                return;
+            }
+            if !tasks.is_empty() {
+                if let Err(e) = p.graph.extend(tasks) {
+                    out.push((
+                        Dest::Client(client),
+                        Msg::GraphFailed {
+                            run: run_id,
+                            reason: format!("invalid extension: {e}"),
+                        },
+                    ));
+                    let _ = self.admission.remove(i);
+                    return;
+                }
+            }
+            if last {
+                p.open = false;
+            }
+            let n_tasks = p.graph.len() as u64;
+            out.push((Dest::Client(client), Msg::GraphSubmitted { run: run_id, n_tasks }));
+            return;
+        }
+        enum Outcome {
+            Unknown,
+            Foreign,
+            NotOpen,
+            Invalid(String),
+            Extended { plan: Option<ExtendPlan>, n_total: u64, n_new: usize },
+        }
+        let outcome = match self.runs.get_mut(&run_id) {
+            None => Outcome::Unknown,
+            Some(run) if run.client != client => Outcome::Foreign,
+            Some(run) if !run.open => Outcome::NotOpen,
+            Some(run) => {
+                run.msgs_in += 1;
+                let n_new = tasks.len();
+                let res = if tasks.is_empty() {
+                    Ok(None) // pure close / keep-alive
+                } else {
+                    run.extend(tasks).map(Some)
+                };
+                match res {
+                    Err(e) => Outcome::Invalid(e.to_string()),
+                    Ok(plan) => {
+                        if last {
+                            run.open = false;
+                            run.closed = true;
+                        }
+                        run.msgs_out += 1; // the graph-submitted ack below
+                        Outcome::Extended { plan, n_total: run.graph.len() as u64, n_new }
+                    }
+                }
+            }
+        };
+        match outcome {
+            Outcome::Unknown => {
+                // Retired, failed or never-existed: the client's view of
+                // the run is stale — tell it so instead of silently eating
+                // tasks it believes queued.
+                out.push((
+                    Dest::Client(client),
+                    Msg::GraphFailed {
+                        run: run_id,
+                        reason: format!("cannot extend unknown or retired run {run_id}"),
+                    },
+                ));
+            }
+            Outcome::Foreign => {
+                log::warn!("client {client} tried to extend foreign {run_id}; ignored");
+            }
+            Outcome::NotOpen => {
+                // Extending a closed run is fatal protocol misuse: the
+                // client has committed ids past the close.
+                self.fail_run(run_id, format!("{run_id} is not open for extension"), out);
+            }
+            Outcome::Invalid(e) => {
+                // The rejected graft left nothing mutated server-side, but
+                // the two ends now permanently disagree on the id space —
+                // the run dies rather than limping on misaligned.
+                self.fail_run(run_id, format!("invalid extension: {e}"), out);
+            }
+            Outcome::Extended { plan, n_total, n_new } => {
+                out.push((
+                    Dest::Client(client),
+                    Msg::GraphSubmitted { run: run_id, n_tasks: n_total },
+                ));
+                if let Some(plan) = plan {
+                    self.charge(self.profile.task_transition_us * n_new as f64 * 0.2);
+                    // Raise store refcounts on every holder of a resident
+                    // finished input *before* any new assignment can race
+                    // its self-eviction.
+                    let mut pins: Vec<(WorkerId, TaskId, u32)> = Vec::new();
+                    {
+                        let run = self.runs.get_mut(&run_id).expect("live run");
+                        for &(task, delta) in &plan.pin {
+                            for w in run.who_has[task.idx()].iter() {
+                                pins.push((w, task, delta));
+                            }
+                        }
+                        run.msgs_out += pins.len() as u64;
+                    }
+                    for (w, task, consumers) in pins {
+                        self.park(
+                            run_id,
+                            w,
+                            Parked::Wire(Msg::PinData { run: run_id, task, consumers }),
+                        );
+                    }
+                    {
+                        let run = self.runs.get(&run_id).expect("live run");
+                        let sched = self.pool.get(run_id).expect("scheduler for live run");
+                        sched.graph_extended(&run.graph);
+                        if !plan.ready.is_empty() {
+                            sched.tasks_ready(&plan.ready, &mut self.actions_buf);
+                        }
+                    }
+                    self.flush_actions(run_id, out);
+                }
+                self.maybe_complete(run_id, out);
+            }
+        }
     }
 
     /// Activate parked submissions whose client has fallen below its
@@ -1010,7 +1183,7 @@ impl Reactor {
                 self.pool.add_worker(info);
                 out.push((Dest::Worker(id), Msg::Welcome { id: id.0 }));
             }
-            (Origin::Client(client), Msg::SubmitGraph { graph, scheduler }) => {
+            (Origin::Client(client), Msg::SubmitGraph { graph, scheduler, open }) => {
                 let run_id = self.run_ids.allocate();
                 let n_tasks = graph.len() as u64;
                 // Per-run scheduler choice: an unknown name fails this run
@@ -1074,20 +1247,24 @@ impl Reactor {
                         graph,
                         scheduler,
                         submitted_at_us: self.clock.elapsed_us(),
+                        open,
                     });
                     return;
                 }
                 out.push((Dest::Client(client), Msg::GraphSubmitted { run: run_id, n_tasks }));
                 let now = self.clock.elapsed_us();
                 self.activate_run(
-                    ParkedRun { run: run_id, client, graph, scheduler, submitted_at_us: now },
+                    ParkedRun { run: run_id, client, graph, scheduler, submitted_at_us: now, open },
                     1,
                     out,
                 );
             }
+            (Origin::Client(client), Msg::SubmitExtend { run: run_id, tasks, last }) => {
+                self.handle_extend(client, run_id, tasks, last, out);
+            }
             (Origin::Worker(worker), Msg::TaskFinished(info)) => {
                 self.charge(self.profile.task_transition_us);
-                let (newly_ready, replicate) = {
+                let (newly_ready, replicate, pin_delta) = {
                     let Some(run) = self.runs.get_mut(&info.run) else { return };
                     if info.task.idx() >= run.graph.len() {
                         log::warn!("task-finished for out-of-range {} in {}", info.task, info.run);
@@ -1118,8 +1295,30 @@ impl Reactor {
                     if !replicate.is_empty() {
                         run.msgs_out += 1;
                     }
-                    (newly_ready, replicate)
+                    // A graph extension raised this output's consumer count
+                    // after its compute-task was emitted with the smaller
+                    // one: deliver the gap as a `pin-data` refcount delta
+                    // now that the producer's store holds the bytes.
+                    let pin_delta = {
+                        let told = run.emitted_consumers[info.task.idx()];
+                        let now = run.graph.consumers(info.task).len() as u32;
+                        if first_copy && told != GraphRun::NEVER_EMITTED && now > told {
+                            run.emitted_consumers[info.task.idx()] = now;
+                            run.msgs_out += 1;
+                            Some(now - told)
+                        } else {
+                            None
+                        }
+                    };
+                    (newly_ready, replicate, pin_delta)
                 };
+                if let Some(consumers) = pin_delta {
+                    self.park(
+                        info.run,
+                        worker,
+                        Parked::Wire(Msg::PinData { run: info.run, task: info.task, consumers }),
+                    );
+                }
                 if !replicate.is_empty() {
                     self.park(
                         info.run,
@@ -1560,7 +1759,7 @@ mod tests {
         for (client, graph) in submissions {
             r.on_message(
                 Origin::Client(client),
-                Msg::SubmitGraph { graph, scheduler: None },
+                Msg::SubmitGraph { graph, scheduler: None, open: false },
                 &mut out,
             );
         }
@@ -1633,7 +1832,7 @@ mod tests {
                         );
                     }
                 }
-                Msg::Welcome { .. } | Msg::ReleaseRun { .. } => {}
+                Msg::Welcome { .. } | Msg::ReleaseRun { .. } | Msg::PinData { .. } => {}
                 other => panic!("worker got {other:?}"),
             }
             if done.len() == n_graphs
@@ -1839,7 +2038,7 @@ mod tests {
                         }
                     }
                 }
-                Msg::Welcome { .. } | Msg::ReleaseRun { .. } => {}
+                Msg::Welcome { .. } | Msg::ReleaseRun { .. } | Msg::PinData { .. } => {}
                 other => panic!("worker got {other:?}"),
             }
         }
@@ -1858,7 +2057,7 @@ mod tests {
         let mut out = Vec::new();
         r.on_message(
             Origin::Client(0),
-            Msg::SubmitGraph { graph: merge(10), scheduler: None },
+            Msg::SubmitGraph { graph: merge(10), scheduler: None, open: false },
             &mut out,
         );
         r.on_disconnect(Origin::Worker(WorkerId(0)), &mut out);
@@ -1886,7 +2085,7 @@ mod tests {
         let mut out = Vec::new();
         r.on_message(
             Origin::Client(0),
-            Msg::SubmitGraph { graph: merge(6), scheduler: None },
+            Msg::SubmitGraph { graph: merge(6), scheduler: None, open: false },
             &mut out,
         );
         r.drain(&mut out);
@@ -1951,7 +2150,7 @@ mod tests {
         let mut out = Vec::new();
         r.on_message(
             Origin::Client(0),
-            Msg::SubmitGraph { graph: tree(5), scheduler: None },
+            Msg::SubmitGraph { graph: tree(5), scheduler: None, open: false },
             &mut out,
         );
         r.on_disconnect(Origin::Worker(WorkerId(0)), &mut out);
@@ -1973,7 +2172,7 @@ mod tests {
         let mut out = Vec::new();
         r.on_message(
             Origin::Client(0),
-            Msg::SubmitGraph { graph: merge(10), scheduler: None },
+            Msg::SubmitGraph { graph: merge(10), scheduler: None, open: false },
             &mut out,
         );
         out.clear();
@@ -1995,7 +2194,7 @@ mod tests {
         let mut out = Vec::new();
         r.on_message(
             Origin::Client(0),
-            Msg::SubmitGraph { graph: merge(4), scheduler: None },
+            Msg::SubmitGraph { graph: merge(4), scheduler: None, open: false },
             &mut out,
         );
         out.clear();
@@ -2020,7 +2219,7 @@ mod tests {
         let mut out = Vec::new();
         r.on_message(
             Origin::Client(1),
-            Msg::SubmitGraph { graph: merge(6), scheduler: None },
+            Msg::SubmitGraph { graph: merge(6), scheduler: None, open: false },
             &mut out,
         );
         r.on_disconnect(Origin::Worker(WorkerId(0)), &mut out);
@@ -2038,7 +2237,7 @@ mod tests {
         let mut out = Vec::new();
         r.on_message(
             Origin::Client(0),
-            Msg::SubmitGraph { graph: merge(5), scheduler: None },
+            Msg::SubmitGraph { graph: merge(5), scheduler: None, open: false },
             &mut out,
         );
         r.drain(&mut out);
@@ -2098,12 +2297,12 @@ mod tests {
         let mut out = Vec::new();
         r.on_message(
             Origin::Client(0),
-            Msg::SubmitGraph { graph: merge(5), scheduler: None },
+            Msg::SubmitGraph { graph: merge(5), scheduler: None, open: false },
             &mut out,
         );
         r.on_message(
             Origin::Client(1),
-            Msg::SubmitGraph { graph: merge(7), scheduler: None },
+            Msg::SubmitGraph { graph: merge(7), scheduler: None, open: false },
             &mut out,
         );
         let runs: Vec<RunId> = out
@@ -2137,12 +2336,12 @@ mod tests {
         let mut out = Vec::new();
         r.on_message(
             Origin::Client(0),
-            Msg::SubmitGraph { graph: merge(12), scheduler: Some("random".into()) },
+            Msg::SubmitGraph { graph: merge(12), scheduler: Some("random".into()), open: false },
             &mut out,
         );
         r.on_message(
             Origin::Client(1),
-            Msg::SubmitGraph { graph: merge(9), scheduler: None },
+            Msg::SubmitGraph { graph: merge(9), scheduler: None, open: false },
             &mut out,
         );
         let runs: Vec<RunId> = out
@@ -2164,7 +2363,7 @@ mod tests {
         let mut out = Vec::new();
         r.on_message(
             Origin::Client(0),
-            Msg::SubmitGraph { graph: merge(5), scheduler: Some("fifo".into()) },
+            Msg::SubmitGraph { graph: merge(5), scheduler: Some("fifo".into()), open: false },
             &mut out,
         );
         // Ack then failure, both naming the same run; no state leaks.
@@ -2207,7 +2406,7 @@ mod tests {
         let mut out = Vec::new();
         r.on_message(
             Origin::Client(0),
-            Msg::SubmitGraph { graph: merge(8), scheduler: None },
+            Msg::SubmitGraph { graph: merge(8), scheduler: None, open: false },
             &mut out,
         );
         let mut release_seen: std::collections::HashSet<WorkerId> =
@@ -2362,7 +2561,7 @@ mod tests {
         let mut out = Vec::new();
         r.on_message(
             Origin::Client(0),
-            Msg::SubmitGraph { graph: merge(4), scheduler: None },
+            Msg::SubmitGraph { graph: merge(4), scheduler: None, open: false },
             &mut out,
         );
         let run = out
@@ -2419,7 +2618,7 @@ mod tests {
         let before = out.len();
         r.on_message(
             Origin::Client(client),
-            Msg::SubmitGraph { graph, scheduler: None },
+            Msg::SubmitGraph { graph, scheduler: None, open: false },
             out,
         );
         out[before..]
@@ -2548,7 +2747,7 @@ mod tests {
         out.clear();
         r.on_message(
             Origin::Client(0),
-            Msg::SubmitGraph { graph: merge(5), scheduler: Some("fifo".into()) },
+            Msg::SubmitGraph { graph: merge(5), scheduler: Some("fifo".into()), open: false },
             &mut out,
         );
         assert!(
@@ -2662,6 +2861,7 @@ mod tests {
             assert_eq!(view.task, d.task);
             assert_eq!(view.key, d.key());
             assert_eq!(view.priority, d.priority);
+            assert_eq!(view.cores, d.parts().cores);
             assert_eq!(view.n_inputs(), d.inputs().len());
             self.computes_checked += 1;
             self.msgs.push((Dest::Worker(d.worker), owned));
@@ -2680,7 +2880,7 @@ mod tests {
         let mut out = Vec::new();
         r.on_message(
             Origin::Client(0),
-            Msg::SubmitGraph { graph: tree(5), scheduler: None },
+            Msg::SubmitGraph { graph: tree(5), scheduler: None, open: false },
             &mut out,
         );
         let mut sink = DualSink { msgs: Vec::new(), computes_checked: 0 };
@@ -2745,7 +2945,7 @@ mod tests {
         let mut out = Vec::new();
         r.on_message(
             Origin::Client(0),
-            Msg::SubmitGraph { graph: tree(2), scheduler: None },
+            Msg::SubmitGraph { graph: tree(2), scheduler: None, open: false },
             &mut out,
         );
         r.drain(&mut out);
@@ -3077,5 +3277,436 @@ mod tests {
         let rep = r.reports().last().unwrap();
         assert_eq!(rep.tasks_recomputed, 1, "report surfaces the recompute");
         assert_eq!(rep.recoveries, 0, "no worker died; not a recovery pass");
+    }
+
+    // ---- incremental graphs / submit-extend (PR 9 tentpole) ----
+
+    fn spec(id: u32, inputs: Vec<u32>) -> crate::taskgraph::TaskSpec {
+        crate::taskgraph::TaskSpec {
+            id: TaskId(id),
+            key: format!("x-{id}"),
+            inputs: inputs.into_iter().map(TaskId).collect(),
+            duration_us: 5,
+            output_size: 8,
+            payload: crate::taskgraph::Payload::MergeInputs,
+            cores: 1,
+        }
+    }
+
+    fn submit_open(
+        r: &mut Reactor,
+        client: u32,
+        graph: TaskGraph,
+        out: &mut Vec<(Dest, Msg)>,
+    ) -> RunId {
+        let before = out.len();
+        r.on_message(
+            Origin::Client(client),
+            Msg::SubmitGraph { graph, scheduler: None, open: true },
+            out,
+        );
+        out[before..]
+            .iter()
+            .find_map(|(_, m)| match m {
+                Msg::GraphSubmitted { run, .. } | Msg::RunQueued { run, .. } => Some(*run),
+                _ => None,
+            })
+            .expect("submission is acked")
+    }
+
+    /// Compute-task assignments in `out` as (worker, task) pairs.
+    fn assignments(out: &[(Dest, Msg)]) -> Vec<(WorkerId, TaskId)> {
+        out.iter()
+            .filter_map(|(d, m)| match (d, m) {
+                (Dest::Worker(w), Msg::ComputeTask { task, .. }) => Some((*w, *task)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn incremental_submission_matches_one_shot() {
+        // The same graph delivered in three extension epochs completes with
+        // the same task set as the one-shot submission, on every scheduler.
+        for sched in ["random", "ws", "dask-ws"] {
+            let full = tree(6); // 63 tasks
+            let mut r = reactor(sched);
+            register(&mut r, 1, 4);
+            let specs = full.tasks().to_vec();
+            let (a, rest) = specs.split_at(20);
+            let (b, c) = rest.split_at(20);
+            let base = TaskGraph::new("tree-inc", a.to_vec()).unwrap();
+            let mut out = Vec::new();
+            let run = submit_open(&mut r, 0, base, &mut out);
+            r.on_message(
+                Origin::Client(0),
+                Msg::SubmitExtend { run, tasks: b.to_vec(), last: false },
+                &mut out,
+            );
+            r.on_message(
+                Origin::Client(0),
+                Msg::SubmitExtend { run, tasks: c.to_vec(), last: true },
+                &mut out,
+            );
+            // Both extensions acked with the running totals.
+            let acks: Vec<u64> = out
+                .iter()
+                .filter_map(|(_, m)| match m {
+                    Msg::GraphSubmitted { n_tasks, .. } => Some(*n_tasks),
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(acks, vec![20, 40, 63], "{sched}");
+            let done = drive_until_done(&mut r, out, &Default::default());
+            assert_eq!(done.len(), 1, "{sched}");
+            assert_eq!(done[&run].1, 63, "{sched}: full task count reported");
+            let rep = r.reports().last().unwrap();
+            assert_eq!(rep.n_tasks, 63, "{sched}");
+            assert_eq!(rep.tasks_recomputed, 0, "{sched}: nothing resurrected");
+        }
+    }
+
+    #[test]
+    fn open_run_survives_quiescence_and_pure_close_retires_it() {
+        let mut r = reactor("ws");
+        register(&mut r, 1, 2);
+        let mut out = Vec::new();
+        let base = TaskGraph::new("inc", vec![spec(0, vec![])]).unwrap();
+        let run = submit_open(&mut r, 0, base, &mut out);
+        r.drain(&mut out);
+        let (w, t) = assignments(&out)[0];
+        r.on_message(
+            Origin::Worker(w),
+            Msg::TaskFinished(TaskFinishedInfo { run, task: t, nbytes: 8, duration_us: 1 }),
+            &mut out,
+        );
+        // Every task finished, but the run is open: it must NOT retire.
+        assert_eq!(r.live_runs(), 1, "open run survives quiescence");
+        assert_eq!(r.run_state(run).unwrap().remaining, 0);
+        out.clear();
+        // An empty closing extension is a pure close: the quiescent run
+        // retires immediately, reporting the real task count.
+        r.on_message(
+            Origin::Client(0),
+            Msg::SubmitExtend { run, tasks: vec![], last: true },
+            &mut out,
+        );
+        assert!(
+            out.iter().any(|(d, m)| *d == Dest::Client(0)
+                && matches!(m, Msg::GraphDone { n_tasks: 1, .. })),
+            "pure close retires the quiescent run: {out:?}"
+        );
+        assert_eq!(r.live_runs(), 0);
+    }
+
+    #[test]
+    fn extension_after_base_finished_repins_resident_outputs() {
+        // New tasks consume outputs that already finished: the reactor must
+        // raise the holders' store refcounts (`pin-data`) by exactly the
+        // emission gap, then complete the grafted tasks normally.
+        let mut r = reactor("ws");
+        register(&mut r, 1, 2);
+        let mut out = Vec::new();
+        let base =
+            TaskGraph::new("inc", vec![spec(0, vec![]), spec(1, vec![])]).unwrap();
+        let run = submit_open(&mut r, 0, base, &mut out);
+        r.drain(&mut out);
+        let leaves = assignments(&out);
+        assert_eq!(leaves.len(), 2);
+        for &(w, t) in &leaves {
+            r.on_message(
+                Origin::Worker(w),
+                Msg::TaskFinished(TaskFinishedInfo { run, task: t, nbytes: 8, duration_us: 1 }),
+                &mut out,
+            );
+        }
+        assert_eq!(r.run_state(run).unwrap().remaining, 0);
+        out.clear();
+        r.on_message(
+            Origin::Client(0),
+            Msg::SubmitExtend { run, tasks: vec![spec(2, vec![0, 1])], last: true },
+            &mut out,
+        );
+        assert!(
+            out.iter().any(|(d, m)| *d == Dest::Client(0)
+                && matches!(m, Msg::GraphSubmitted { run: r2, n_tasks: 3 } if *r2 == run)),
+            "extension acked with the new total: {out:?}"
+        );
+        r.drain(&mut out);
+        // Each finished leaf was emitted with consumers = 0 (sink); the
+        // extension made each count 1 → pin delta 1 to the holder.
+        let pins: Vec<(WorkerId, TaskId, u32)> = out
+            .iter()
+            .filter_map(|(d, m)| match (d, m) {
+                (Dest::Worker(w), Msg::PinData { task, consumers, .. }) => {
+                    Some((*w, *task, *consumers))
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(pins.len(), 2, "one pin per re-consumed output: {out:?}");
+        for (w, t, c) in &pins {
+            assert_eq!(*c, 1, "delta = new consumers − emitted consumers");
+            let holder = leaves.iter().find(|(_, t2)| t2 == t).unwrap().0;
+            assert_eq!(*w, holder, "pin goes to the output's holder");
+        }
+        assert_eq!(r.run_state(run).unwrap().tasks_recomputed, 0, "nothing resurrected");
+        let done = drive_until_done(&mut r, out, &Default::default());
+        assert_eq!(done[&run].1, 3);
+    }
+
+    #[test]
+    fn extension_resurrects_evicted_inputs() {
+        // The extension's inputs finished but every replica self-evicted:
+        // the producer must be transitively resurrected (PR 3 lineage
+        // machinery) and recomputed before the grafted consumer runs.
+        let mut r = reactor("ws");
+        register(&mut r, 1, 2);
+        let mut out = Vec::new();
+        let base =
+            TaskGraph::new("inc", vec![spec(0, vec![]), spec(1, vec![])]).unwrap();
+        let run = submit_open(&mut r, 0, base, &mut out);
+        r.drain(&mut out);
+        let leaves = assignments(&out);
+        for &(w, t) in &leaves {
+            r.on_message(
+                Origin::Worker(w),
+                Msg::TaskFinished(TaskFinishedInfo { run, task: t, nbytes: 8, duration_us: 1 }),
+                &mut out,
+            );
+        }
+        // Leaf 0's only copy evaporates (store self-eviction).
+        let holder0 = leaves.iter().find(|(_, t)| *t == TaskId(0)).unwrap().0;
+        r.on_message(
+            Origin::Worker(holder0),
+            Msg::ReplicaDropped { run, task: TaskId(0) },
+            &mut out,
+        );
+        assert!(r.run_state(run).unwrap().who_has[0].is_empty());
+        out.clear();
+        r.on_message(
+            Origin::Client(0),
+            Msg::SubmitExtend { run, tasks: vec![spec(2, vec![0, 1])], last: true },
+            &mut out,
+        );
+        assert_eq!(
+            r.run_state(run).unwrap().tasks_recomputed,
+            1,
+            "evicted producer resurrected"
+        );
+        r.drain(&mut out);
+        assert!(
+            out.iter()
+                .any(|(_, m)| matches!(m, Msg::ComputeTask { task, .. } if *task == TaskId(0))),
+            "resurrected producer re-dispatched: {out:?}"
+        );
+        // The resident leaf 1 still gets its pin; the evicted leaf 0 must
+        // NOT (its refcount is baked into the re-sent compute-task).
+        let pinned: Vec<TaskId> = out
+            .iter()
+            .filter_map(|(_, m)| match m {
+                Msg::PinData { task, .. } => Some(*task),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(pinned, vec![TaskId(1)], "{out:?}");
+        let done = drive_until_done(&mut r, out, &Default::default());
+        assert_eq!(done[&run].1, 3);
+        assert_eq!(r.reports().last().unwrap().tasks_recomputed, 1);
+    }
+
+    #[test]
+    fn extension_during_recovery_completes() {
+        // A worker dies (recovery in flight), then an extension lands
+        // before the re-sent work finishes: epochs and recovery compose.
+        let mut r = reactor("ws");
+        register(&mut r, 1, 2);
+        let mut out = Vec::new();
+        let base =
+            TaskGraph::new("inc", vec![spec(0, vec![]), spec(1, vec![0])]).unwrap();
+        let run = submit_open(&mut r, 0, base, &mut out);
+        r.drain(&mut out);
+        let (w0, t0) = *assignments(&out)
+            .iter()
+            .find(|(_, t)| *t == TaskId(0))
+            .expect("root assigned");
+        r.on_message(
+            Origin::Worker(w0),
+            Msg::TaskFinished(TaskFinishedInfo { run, task: t0, nbytes: 8, duration_us: 1 }),
+            &mut out,
+        );
+        out.clear();
+        r.on_disconnect(Origin::Worker(w0), &mut out);
+        assert_eq!(r.live_runs(), 1, "recovery absorbs the death: {out:?}");
+        // Extend mid-recovery: new sink over both epochs' outputs.
+        r.on_message(
+            Origin::Client(0),
+            Msg::SubmitExtend { run, tasks: vec![spec(2, vec![0, 1])], last: true },
+            &mut out,
+        );
+        let done = drive_until_done(&mut r, out, &[w0].into());
+        assert_eq!(done[&run].1, 3);
+        let rep = r.reports().last().unwrap();
+        assert!(rep.recoveries >= 1, "the death was a real recovery");
+    }
+
+    #[test]
+    fn extension_of_parked_run_folds_into_activation() {
+        let mut r = reactor("ws").with_admission_cap(1);
+        register(&mut r, 1, 2);
+        let mut out = Vec::new();
+        let a = submit(&mut r, 0, merge(4), &mut out); // live
+        let base = TaskGraph::new("inc", vec![spec(0, vec![])]).unwrap();
+        let b = submit_open(&mut r, 0, base, &mut out); // parked
+        assert_eq!(r.queued_runs(), 1);
+        out.clear();
+        r.on_message(
+            Origin::Client(0),
+            Msg::SubmitExtend { run: b, tasks: vec![spec(1, vec![0])], last: true },
+            &mut out,
+        );
+        assert!(
+            out.iter().any(|(_, m)| matches!(m, Msg::GraphSubmitted { run, n_tasks: 2 }
+                if *run == b)),
+            "parked extension acked with the folded total: {out:?}"
+        );
+        let done = drive_until_done(&mut r, out, &Default::default());
+        assert_eq!(done.len(), 2, "both runs complete: {done:?}");
+        assert_eq!(done[&a].1, 5);
+        assert_eq!(done[&b].1, 2, "activation saw the folded graph, already closed");
+    }
+
+    #[test]
+    fn client_disconnect_purges_extended_run() {
+        // The client dies with its open run mid-extension (the closing
+        // extension never arrives): the run must be purged and released on
+        // the workers like any orphan, and a late extension for it answers
+        // graph-failed instead of resurrecting state.
+        let mut r = reactor("ws");
+        register(&mut r, 1, 2);
+        let mut out = Vec::new();
+        let base = TaskGraph::new("inc", vec![spec(0, vec![])]).unwrap();
+        let run = submit_open(&mut r, 0, base, &mut out);
+        r.on_message(
+            Origin::Client(0),
+            Msg::SubmitExtend { run, tasks: vec![spec(1, vec![0])], last: false },
+            &mut out,
+        );
+        out.clear();
+        r.on_disconnect(Origin::Client(0), &mut out);
+        assert_eq!(r.live_runs(), 0, "orphaned open run purged");
+        assert!(
+            out.iter().any(|(_, m)| matches!(m, Msg::ReleaseRun { .. })),
+            "workers told to release: {out:?}"
+        );
+        out.clear();
+        r.on_message(
+            Origin::Client(0),
+            Msg::SubmitExtend { run, tasks: vec![spec(2, vec![])], last: true },
+            &mut out,
+        );
+        assert!(
+            out.iter().any(|(d, m)| *d == Dest::Client(0)
+                && matches!(m, Msg::GraphFailed { run: r2, .. } if *r2 == run)),
+            "late extension for a retired run fails cleanly: {out:?}"
+        );
+    }
+
+    #[test]
+    fn extension_of_closed_or_unknown_run_fails() {
+        let mut r = reactor("ws");
+        register(&mut r, 1, 2);
+        let mut out = Vec::new();
+        // One-shot (closed) run: an extension is fatal protocol misuse.
+        let run = submit(&mut r, 0, merge(4), &mut out);
+        out.clear();
+        r.on_message(
+            Origin::Client(0),
+            Msg::SubmitExtend { run, tasks: vec![spec(5, vec![])], last: false },
+            &mut out,
+        );
+        assert!(
+            out.iter().any(|(d, m)| *d == Dest::Client(0)
+                && matches!(m, Msg::GraphFailed { run: r2, reason }
+                    if *r2 == run && reason.contains("not open"))),
+            "{out:?}"
+        );
+        assert_eq!(r.live_runs(), 0);
+        // Unknown run: failure names the run so the client can match it.
+        out.clear();
+        r.on_message(
+            Origin::Client(0),
+            Msg::SubmitExtend { run: RunId(4242), tasks: vec![], last: true },
+            &mut out,
+        );
+        assert!(
+            out.iter().any(|(_, m)| matches!(m, Msg::GraphFailed { run, .. }
+                if *run == RunId(4242))),
+            "{out:?}"
+        );
+    }
+
+    #[test]
+    fn invalid_extension_batch_fails_the_run() {
+        let mut r = reactor("ws");
+        register(&mut r, 1, 2);
+        let mut out = Vec::new();
+        let base = TaskGraph::new("inc", vec![spec(0, vec![])]).unwrap();
+        let run = submit_open(&mut r, 0, base, &mut out);
+        out.clear();
+        // Batch ids must continue the dense id space; id 5 ≠ len() = 1.
+        r.on_message(
+            Origin::Client(0),
+            Msg::SubmitExtend { run, tasks: vec![spec(5, vec![])], last: false },
+            &mut out,
+        );
+        assert!(
+            out.iter().any(|(_, m)| matches!(m, Msg::GraphFailed { run: r2, reason }
+                if *r2 == run && reason.contains("invalid extension"))),
+            "{out:?}"
+        );
+        assert_eq!(r.live_runs(), 0, "misaligned id spaces kill the run");
+    }
+
+    // ---- replica-ack vs run-retirement race (satellite bugfix) ----
+
+    #[test]
+    fn replica_ack_after_run_retirement_is_dropped_silently() {
+        let mut r = reactor("ws").with_replication(2, 1);
+        register(&mut r, 1, 3);
+        // Retire a run cleanly, then deliver a replica-added whose push
+        // raced the retirement: the missing-run path must swallow it.
+        let (report, _) = drive(&mut r, merge(2));
+        let mut out = Vec::new();
+        r.on_message(
+            Origin::Worker(WorkerId(2)),
+            Msg::ReplicaAdded { run: report.run, task: TaskId(0) },
+            &mut out,
+        );
+        assert!(out.is_empty(), "late ack for a retired run must be silent: {out:?}");
+        assert_eq!(r.live_runs(), 0);
+        // Same for a run that *failed* (run state dropped by fail_run)…
+        let run = submit(&mut r, 0, merge(3), &mut out);
+        out.clear();
+        r.on_message(
+            Origin::Worker(WorkerId(0)),
+            Msg::TaskErred { run, task: TaskId(0), error: "boom".into() },
+            &mut out,
+        );
+        assert!(out.iter().any(|(_, m)| matches!(m, Msg::GraphFailed { .. })));
+        out.clear();
+        r.on_message(
+            Origin::Worker(WorkerId(1)),
+            Msg::ReplicaAdded { run, task: TaskId(1) },
+            &mut out,
+        );
+        assert!(out.is_empty(), "{out:?}");
+        // …and for a run id never allocated at all.
+        r.on_message(
+            Origin::Worker(WorkerId(1)),
+            Msg::ReplicaAdded { run: RunId(31337), task: TaskId(0) },
+            &mut out,
+        );
+        assert!(out.is_empty(), "{out:?}");
     }
 }

@@ -10,7 +10,7 @@
 
 use crate::protocol::{Msg, RunId};
 use crate::scheduler::WorkerId;
-use crate::taskgraph::{TaskGraph, TaskId};
+use crate::taskgraph::{GraphError, TaskGraph, TaskId, TaskSpec};
 use std::collections::{HashMap, VecDeque};
 
 /// How many worker-disconnect recoveries a single run absorbs before the
@@ -246,6 +246,40 @@ pub struct GraphRun {
     /// recovery benchmark's headline number: replication earns its bytes by
     /// driving this toward zero.
     pub tasks_recomputed: u64,
+    /// `true` for an extensible run (`submit-graph` with `open`): the
+    /// client may stream further tasks via `submit-extend`, and quiescence
+    /// (`remaining == 0`) does not retire the run until a closing
+    /// extension arrives.
+    pub open: bool,
+    /// `true` once no further extensions can arrive — from creation for a
+    /// one-shot run, or when a `submit-extend` with `last` lands. Gates
+    /// [`GraphRun::is_done`].
+    pub closed: bool,
+    /// Consumer count last told to the worker holding each task's output:
+    /// stamped at assignment emission (the count baked into the
+    /// `compute-task`), updated when a `pin-data` delta is pushed.
+    /// [`GraphRun::NEVER_EMITTED`] until the task is first dispatched.
+    /// The gap `consumers(t).len() - emitted_consumers[t]` is exactly the
+    /// refcount the worker's store is missing after graph extensions.
+    pub emitted_consumers: Vec<u32>,
+}
+
+/// What the reactor must do after [`GraphRun::extend`] grafted a task batch
+/// onto a live run. Field order mirrors the order the reactor applies them.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ExtendPlan {
+    /// Tasks that ended the extension `Ready` — new roots whose inputs are
+    /// all finished (or absent), plus resurrected lineage that can start
+    /// immediately. The reactor seeds the scheduler with exactly these.
+    pub ready: Vec<TaskId>,
+    /// `(task, delta)`: finished outputs still resident somewhere whose
+    /// store refcount must rise by `delta` — the reactor sends `pin-data`
+    /// to every `who_has` holder.
+    pub pin: Vec<(TaskId, u32)>,
+    /// Finished outputs the extension needs whose every replica
+    /// self-evicted; they are unfinished again (transitively, via the PR 3
+    /// lineage machinery) and will be recomputed.
+    pub resurrected: Vec<TaskId>,
 }
 
 /// What the reactor must do after [`GraphRun::recover`] absorbed a worker
@@ -314,7 +348,134 @@ impl GraphRun {
             msgs_in: 0,
             msgs_out: 0,
             tasks_recomputed: 0,
+            open: false,
+            closed: true,
+            emitted_consumers: vec![Self::NEVER_EMITTED; n],
         }
+    }
+
+    /// Sentinel in [`GraphRun::emitted_consumers`]: the task has never been
+    /// dispatched, so no worker store holds a count to correct.
+    pub const NEVER_EMITTED: u32 = u32::MAX;
+
+    /// Mark the run extensible (a `submit-graph` with `open`).
+    pub fn set_open(&mut self) {
+        self.open = true;
+        self.closed = false;
+    }
+
+    /// Graft a validated task batch onto the live run (the `submit-extend`
+    /// tentpole). On success the new tasks are installed `Ready`/`Waiting`,
+    /// `remaining` grows, and the returned [`ExtendPlan`] tells the reactor
+    /// which tasks to seed, which resident outputs to re-pin (`pin-data`
+    /// deltas), and which evaporated outputs were transitively resurrected.
+    /// On error nothing is mutated (graph validation happens before any
+    /// table grows).
+    pub fn extend(&mut self, new_tasks: Vec<TaskSpec>) -> Result<ExtendPlan, GraphError> {
+        let old_n = self.graph.len();
+        self.graph.extend(new_tasks)?;
+        let total = self.graph.len();
+
+        // Grow every per-task table to the new dense id space.
+        self.states.resize(total, TaskState::Waiting);
+        self.unfinished_deps.resize(total, 0);
+        self.who_has.resize(total, ReplicaSet::new());
+        self.priorities.extend((old_n as i64)..(total as i64));
+        self.emitted_consumers.resize(total, Self::NEVER_EMITTED);
+        if !self.replicate_hint.is_empty() {
+            // Conservative default for grafted tasks: no proactive copies
+            // (the activation-time hint pass only saw the base graph).
+            self.replicate_hint.resize(total, false);
+        }
+        self.remaining += total - old_n;
+
+        // Consumer arcs the extension added to pre-existing producers.
+        let mut delta: HashMap<TaskId, u32> = HashMap::new();
+        for i in old_n..total {
+            for &inp in &self.graph.task(TaskId(i as u32)).inputs {
+                if inp.idx() < old_n {
+                    *delta.entry(inp).or_insert(0) += 1;
+                }
+            }
+        }
+
+        let mut plan = ExtendPlan::default();
+        // Finished producers split two ways: still resident somewhere →
+        // re-pin (raise the store refcount by the emission gap); every
+        // replica self-evicted → resurrect, transitively.
+        let mut seeds: Vec<TaskId> = Vec::new();
+        let mut producers: Vec<TaskId> = delta.keys().copied().collect();
+        producers.sort_unstable();
+        for p in producers {
+            if !matches!(self.states[p.idx()], TaskState::Finished(_)) {
+                // Unfinished: the new count is baked into the eventual
+                // compute-task, or delivered as a finish-time pin delta.
+                continue;
+            }
+            if self.who_has[p.idx()].is_empty() {
+                seeds.push(p);
+            } else {
+                let told = self.emitted_consumers[p.idx()];
+                let now = self.graph.consumers(p).len() as u32;
+                if told != Self::NEVER_EMITTED && now > told {
+                    plan.pin.push((p, now - told));
+                }
+                self.emitted_consumers[p.idx()] = now;
+            }
+        }
+        // Same transitive walk as `resurrect_missing_inputs`, seeded with
+        // the evaporated producers themselves.
+        let mut work = seeds;
+        while let Some(p) = work.pop() {
+            if !matches!(self.states[p.idx()], TaskState::Finished(_)) {
+                continue; // already resurrected via another consumer path
+            }
+            self.states[p.idx()] = TaskState::Ready; // deps fixed below
+            self.remaining += 1;
+            plan.resurrected.push(p);
+            for &inp in &self.graph.task(p).inputs {
+                if matches!(self.states[inp.idx()], TaskState::Finished(_))
+                    && self.who_has[inp.idx()].is_empty()
+                {
+                    work.push(inp);
+                }
+            }
+        }
+        self.tasks_recomputed += plan.resurrected.len() as u64;
+
+        // Rebuild dependency counts for every unfinished task and settle
+        // idle tasks into Ready/Waiting (in-flight tasks keep their state —
+        // the fetch-failed safety net backstops one that raced a
+        // resurrection, exactly as in recovery).
+        for i in 0..total {
+            if matches!(self.states[i], TaskState::Finished(_)) {
+                continue;
+            }
+            let deps = self
+                .graph
+                .task(TaskId(i as u32))
+                .inputs
+                .iter()
+                .filter(|inp| !matches!(self.states[inp.idx()], TaskState::Finished(_)))
+                .count() as u32;
+            self.unfinished_deps[i] = deps;
+            if matches!(self.states[i], TaskState::Ready | TaskState::Waiting) {
+                self.states[i] = if deps == 0 { TaskState::Ready } else { TaskState::Waiting };
+            }
+        }
+        for i in old_n..total {
+            if self.states[i] == TaskState::Ready {
+                plan.ready.push(TaskId(i as u32));
+            }
+        }
+        for &t in &plan.resurrected {
+            if self.states[t.idx()] == TaskState::Ready {
+                plan.ready.push(t);
+            }
+        }
+        plan.ready.sort_unstable();
+        plan.resurrected.sort_unstable();
+        Ok(plan)
     }
 
     /// Initially ready tasks (the graph roots).
@@ -377,8 +538,11 @@ impl GraphRun {
         newly_ready
     }
 
+    /// A run retires only when every task finished AND no further
+    /// extensions can arrive (one-shot runs are born closed; open runs
+    /// close when a `last` extension lands).
     pub fn is_done(&self) -> bool {
-        self.remaining == 0
+        self.remaining == 0 && self.closed
     }
 
     /// Worker currently responsible for a task, if any.
@@ -912,6 +1076,117 @@ mod tests {
         assert_eq!(run.remaining, before_remaining);
         assert_eq!(run.tasks_recomputed, 0);
         assert!(matches!(run.states[b.idx()], TaskState::Finished(_)));
+    }
+
+    // ---- incremental extension (PR 9 tentpole) ----
+
+    fn spec(id: u32, key: &str, inputs: Vec<TaskId>) -> crate::taskgraph::TaskSpec {
+        use crate::taskgraph::Payload;
+        crate::taskgraph::TaskSpec {
+            id: TaskId(id),
+            key: key.to_string(),
+            inputs,
+            duration_us: 10,
+            output_size: 8,
+            payload: Payload::MergeInputs,
+            cores: 1,
+        }
+    }
+
+    #[test]
+    fn extend_installs_new_tasks_and_readies_roots() {
+        let mut run = GraphRun::new(merge(2), 0, 0);
+        run.set_open();
+        let n0 = run.graph.len(); // 3
+        let plan = run
+            .extend(vec![
+                spec(n0 as u32, "x", vec![]),
+                spec(n0 as u32 + 1, "y", vec![TaskId(n0 as u32)]),
+            ])
+            .unwrap();
+        assert_eq!(plan.ready, vec![TaskId(n0 as u32)], "only the new root starts");
+        assert!(plan.pin.is_empty() && plan.resurrected.is_empty());
+        assert_eq!(run.remaining, n0 + 2);
+        assert_eq!(run.states[n0], TaskState::Ready);
+        assert_eq!(run.states[n0 + 1], TaskState::Waiting);
+        assert_eq!(run.unfinished_deps[n0 + 1], 1);
+        assert_eq!(run.who_has.len(), n0 + 2);
+        assert_eq!(run.priorities.len(), n0 + 2);
+        assert_eq!(run.emitted_consumers[n0], GraphRun::NEVER_EMITTED);
+    }
+
+    #[test]
+    fn extend_repins_resident_finished_inputs() {
+        // a finished and resident on w0 with its emitted count stamped at
+        // 1 (its lone base consumer b): grafting a second consumer must
+        // produce a pin-data delta of exactly the gap, and re-stamp.
+        let mut run = GraphRun::new(chain3(), 0, 0);
+        let (a, b) = (TaskId(0), TaskId(1));
+        run.finish(a, WorkerId(0));
+        run.emitted_consumers[a.idx()] = 1;
+        run.finish(b, WorkerId(0));
+        run.emitted_consumers[b.idx()] = 1;
+        let plan = run.extend(vec![spec(3, "d", vec![a])]).unwrap();
+        assert_eq!(plan.pin, vec![(a, 1)]);
+        assert_eq!(run.emitted_consumers[a.idx()], 2, "stamp catches up");
+        assert!(plan.resurrected.is_empty());
+        assert_eq!(plan.ready, vec![TaskId(3)], "input finished: new task starts");
+        // A second extension with no new arcs to a produces no new pin.
+        let plan2 = run.extend(vec![spec(4, "e", vec![TaskId(3)])]).unwrap();
+        assert!(plan2.pin.is_empty());
+    }
+
+    #[test]
+    fn extend_resurrects_evaporated_inputs_transitively() {
+        // Both a and b finished on w0 then self-evicted (who_has empty):
+        // extending with a consumer of b must resurrect b AND its input a
+        // (the PR 3 lineage walk), and only a is immediately ready.
+        let mut run = GraphRun::new(chain3(), 0, 0);
+        let (a, b) = (TaskId(0), TaskId(1));
+        run.finish(a, WorkerId(0));
+        run.finish(b, WorkerId(0));
+        run.who_has[a.idx()].retain(|_| false);
+        run.who_has[b.idx()].retain(|_| false);
+        let before = run.remaining;
+        let plan = run.extend(vec![spec(3, "d", vec![b])]).unwrap();
+        assert_eq!(plan.resurrected, vec![a, b]);
+        assert!(plan.pin.is_empty());
+        assert_eq!(plan.ready, vec![a]);
+        assert_eq!(run.states[b.idx()], TaskState::Waiting);
+        assert_eq!(run.states[3], TaskState::Waiting, "new task waits on b");
+        assert_eq!(run.remaining, before + 3, "two resurrected + one new");
+        assert_eq!(run.tasks_recomputed, 2);
+    }
+
+    #[test]
+    fn extend_rejects_invalid_batch_without_mutation() {
+        let mut run = GraphRun::new(merge(2), 0, 0);
+        run.set_open();
+        let before_tasks = run.graph.len();
+        let before_remaining = run.remaining;
+        // Wrong base id: ids must continue the dense space.
+        assert!(run.extend(vec![spec(99, "x", vec![])]).is_err());
+        assert_eq!(run.graph.len(), before_tasks);
+        assert_eq!(run.remaining, before_remaining);
+        assert_eq!(run.states.len(), before_tasks);
+        assert_eq!(run.who_has.len(), before_tasks);
+    }
+
+    #[test]
+    fn open_run_retires_only_after_close() {
+        let mut run = GraphRun::new(merge(2), 0, 0);
+        run.set_open();
+        let w = WorkerId(0);
+        for t in 0..3 {
+            run.finish(TaskId(t), w);
+        }
+        assert_eq!(run.remaining, 0);
+        assert!(!run.is_done(), "open + quiescent is not done");
+        run.closed = true;
+        assert!(run.is_done());
+        // One-shot runs are born closed.
+        let run2 = GraphRun::new(merge(2), 0, 0);
+        assert!(run2.closed && !run2.open);
     }
 
     #[test]

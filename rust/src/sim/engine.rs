@@ -30,9 +30,10 @@ use crate::overhead::RuntimeProfile;
 use crate::protocol::RunId;
 use crate::scheduler::{self, Action, SchedCost, Scheduler, WorkerId, WorkerInfo};
 use crate::server::fairness::{self, FairnessPolicy, RunQueueStat, DEFAULT_DISPATCH_QUOTA};
-use crate::taskgraph::{TaskGraph, TaskId};
+use crate::taskgraph::{TaskGraph, TaskId, TaskSpec};
 use std::cmp::Reverse;
 use std::collections::{BTreeSet, BinaryHeap, HashMap, HashSet, VecDeque};
+use std::rc::Rc;
 
 /// Simulation configuration.
 #[derive(Debug, Clone)]
@@ -63,6 +64,32 @@ pub struct SimConfig {
     pub replication: usize,
     /// Fan-out threshold feeding [`crate::taskgraph::replication_hints`].
     pub replication_fanout: u32,
+    /// Per-worker core counts, cycled over the worker index (empty = all
+    /// 1-core, the homogeneous default). `[1, 2, 4]` gives worker 0 one
+    /// core, worker 1 two, worker 2 four, worker 3 one again, … — the
+    /// heterogeneity `fig_dynamic` measures random placement under.
+    pub core_mix: Vec<u32>,
+    /// Incremental-submission schedule: task batches grafted onto open
+    /// runs at virtual times (the sim mirror of `submit-extend`). A run
+    /// named by any batch starts *open* and only completes once its
+    /// `last: true` batch has been applied and every task finished. The
+    /// sim's data plane never self-evicts, so the server's re-pin /
+    /// resurrect machinery has no virtual counterpart here — extension
+    /// inputs are always fetchable from their producer.
+    pub extensions: Vec<ExtBatch>,
+}
+
+/// One `submit-extend` batch in virtual time (see [`SimConfig::extensions`]).
+#[derive(Debug, Clone)]
+pub struct ExtBatch {
+    /// Index of the run (graph) this batch extends.
+    pub run: u32,
+    /// Virtual time (µs) at which the batch arrives at the server.
+    pub at_us: f64,
+    /// Appended task specs; ids must continue the run's id sequence.
+    pub tasks: Vec<TaskSpec>,
+    /// Closes the run — no further batches.
+    pub last: bool,
 }
 
 /// Deterministic worker-death injection (recovery at scale, repeatably).
@@ -89,6 +116,8 @@ impl Default for SimConfig {
             fairness: "rr".into(),
             replication: 1,
             replication_fanout: crate::server::DEFAULT_REPLICATION_FANOUT,
+            core_mix: Vec::new(),
+            extensions: Vec::new(),
         }
     }
 }
@@ -102,6 +131,15 @@ impl SimConfig {
             profile,
             scheduler: scheduler.into(),
             ..SimConfig::default()
+        }
+    }
+
+    /// Core count of worker `i` under [`SimConfig::core_mix`].
+    pub fn worker_cores(&self, i: usize) -> u32 {
+        if self.core_mix.is_empty() {
+            1
+        } else {
+            self.core_mix[i % self.core_mix.len()].max(1)
         }
     }
 }
@@ -196,6 +234,9 @@ enum Event {
     /// resource and put on the wire — the virtual-time mirror of
     /// `Reactor::pump`.
     ReactorPump,
+    /// A `submit-extend` batch arrives for an open run
+    /// ([`SimConfig::extensions`]).
+    Extend { run: u32, tasks: Vec<TaskSpec>, last: bool },
 }
 
 /// An outbound message translated from a scheduler action (state already
@@ -223,10 +264,15 @@ struct SimWorker {
     /// Priority each queued task was enqueued with — the exact queue key,
     /// required to retract entries whose priority differs from `task.id`.
     pending_prio: HashMap<(u32, TaskId), i64>,
-    core_free_at: f64,
-    core_busy: bool,
-    /// Task currently executing (needed to requeue it if the worker dies).
-    running: Option<(u32, TaskId)>,
+    /// Core-slot capacity ([`SimConfig::core_mix`]).
+    ncores: u32,
+    /// Slots held by currently executing tasks; [`Engine::maybe_start`]
+    /// gates the queue head on `ncores - used_cores`, mirroring the real
+    /// worker's `TaskQueue::with_cores` slot gate.
+    used_cores: u32,
+    /// Tasks currently executing (needed to requeue them if the worker
+    /// dies) — up to `ncores` single-core tasks at once.
+    running: HashSet<(u32, TaskId)>,
     /// False once an injected kill fired; a dead worker receives nothing
     /// and answers nothing.
     alive: bool,
@@ -235,22 +281,30 @@ struct SimWorker {
 }
 
 /// One submitted graph's execution state (scheduler isolated per run).
-struct RunCtx<'g> {
-    graph: &'g TaskGraph,
+///
+/// The graph is held by `Rc` so hot-path handlers can take an independent
+/// handle (a pointer copy, no allocation) while mutating the rest of the
+/// engine — and so `submit-extend` batches can grow it in place through
+/// `Rc::make_mut` on the cold extension path.
+struct RunCtx {
+    graph: Rc<TaskGraph>,
     scheduler: Box<dyn Scheduler>,
     unfinished_deps: Vec<u32>,
     finished: Vec<bool>,
     remaining: usize,
     last_finish_us: f64,
     tasks_executed: u64,
+    /// Still accepting `submit-extend` batches; an open run is not done
+    /// even at `remaining == 0`.
+    open: bool,
     /// Per-task replication flags ([`crate::taskgraph::replication_hints`]);
     /// empty when `SimConfig::replication` is 1.
     hints: Vec<bool>,
 }
 
-struct Engine<'g> {
+struct Engine {
     cfg: SimConfig,
-    runs: Vec<RunCtx<'g>>,
+    runs: Vec<RunCtx>,
     events: BinaryHeap<Reverse<(Key, usize)>>,
     payloads: Vec<Event>,
     seq: u64,
@@ -264,6 +318,9 @@ struct Engine<'g> {
     /// Producer of each finished task.
     produced_by: HashMap<(u32, TaskId), WorkerId>,
     remaining_total: usize,
+    /// Runs still open to `submit-extend` batches; the drain condition is
+    /// `remaining_total == 0 && open_runs == 0`.
+    open_runs: usize,
     /// Steal targets in flight: (run, task) -> (from, to).
     steals: HashMap<(u32, TaskId), (WorkerId, WorkerId)>,
     // metrics
@@ -287,23 +344,23 @@ struct Engine<'g> {
     pump_scheduled: bool,
 }
 
-impl<'g> Engine<'g> {
-    fn new(graphs: &'g [TaskGraph], cfg: SimConfig) -> Engine<'g> {
+impl Engine {
+    fn new(graphs: &[TaskGraph], cfg: SimConfig) -> Engine {
         assert!(!graphs.is_empty(), "at least one graph to simulate");
         let workers: Vec<SimWorker> = (0..cfg.n_workers)
             .map(|i| SimWorker {
                 node: i / cfg.workers_per_node,
                 pending: BTreeSet::new(),
                 pending_prio: HashMap::new(),
-                core_free_at: 0.0,
-                core_busy: false,
-                running: None,
+                ncores: cfg.worker_cores(i),
+                used_cores: 0,
+                running: HashSet::new(),
                 alive: true,
                 has: HashSet::new(),
             })
             .collect();
         let n_nodes = cfg.n_workers.div_ceil(cfg.workers_per_node).max(1);
-        let runs: Vec<RunCtx<'g>> = graphs
+        let runs: Vec<RunCtx> = graphs
             .iter()
             .enumerate()
             .map(|(i, graph)| {
@@ -314,19 +371,20 @@ impl<'g> Engine<'g> {
                 for (w, worker) in workers.iter().enumerate() {
                     scheduler.add_worker(WorkerInfo {
                         id: WorkerId(w as u32),
-                        ncores: 1,
+                        ncores: worker.ncores,
                         node: worker.node as u32,
                     });
                 }
                 scheduler.graph_submitted(graph);
                 RunCtx {
-                    graph,
+                    graph: Rc::new(graph.clone()),
                     scheduler,
                     unfinished_deps: graph.tasks().iter().map(|t| t.inputs.len() as u32).collect(),
                     finished: vec![false; graph.len()],
                     remaining: graph.len(),
                     last_finish_us: 0.0,
                     tasks_executed: 0,
+                    open: cfg.extensions.iter().any(|b| b.run as usize == i),
                     hints: if cfg.replication > 1 {
                         crate::taskgraph::replication_hints(graph, cfg.replication_fanout)
                     } else {
@@ -336,6 +394,7 @@ impl<'g> Engine<'g> {
             })
             .collect();
         let remaining_total = runs.iter().map(|r| r.remaining).sum();
+        let open_runs = runs.iter().filter(|r| r.open).count();
         let policy = fairness::by_name(&cfg.fairness)
             .unwrap_or_else(|| panic!("unknown fairness policy {:?}", cfg.fairness));
         let n_runs = runs.len();
@@ -352,6 +411,7 @@ impl<'g> Engine<'g> {
             sched_free_at: 0.0,
             produced_by: HashMap::new(),
             remaining_total,
+            open_runs,
             steals: HashMap::new(),
             msgs: 0,
             steals_attempted: 0,
@@ -374,6 +434,16 @@ impl<'g> Engine<'g> {
                 engine.cfg.n_workers
             );
             engine.push(kill.at_us, Event::WorkerDie { worker: WorkerId(kill.worker) });
+        }
+        let batches = std::mem::take(&mut engine.cfg.extensions);
+        for b in batches {
+            assert!(
+                (b.run as usize) < engine.runs.len(),
+                "extension names run {} of {}",
+                b.run,
+                engine.runs.len()
+            );
+            engine.push(b.at_us, Event::Extend { run: b.run, tasks: b.tasks, last: b.last });
         }
         engine
     }
@@ -529,53 +599,82 @@ impl<'g> Engine<'g> {
         self.schedule_pump(self.now);
     }
 
-    /// Start the next pending task on a worker if its core is free.
+    /// Start pending tasks on a worker while core slots are free. Strict
+    /// priority order with a slot gate, mirroring the real worker's
+    /// `TaskQueue::with_cores`: the queue head waits for enough free slots
+    /// rather than being jumped by a narrower task behind it, and a task
+    /// wider than the whole machine runs alone when the worker is idle.
     fn maybe_start(&mut self, wid: WorkerId) {
         let now = self.now;
-        let w = &mut self.workers[wid.idx()];
-        if !w.alive || w.core_busy || w.pending.is_empty() {
-            return;
-        }
-        let &(prio, run, task) = w.pending.iter().next().expect("nonempty");
-        w.pending.remove(&(prio, run, task));
-        w.pending_prio.remove(&(run, task));
-        w.core_busy = true;
-        w.running = Some((run, task));
-        let fetch_start = w.core_free_at.max(now);
-
-        // Fetch missing inputs (parallel fetches; NIC serialization on the
-        // sender side; same-node fast path). `graph` is an independent
-        // shared borrow, so no clone of the input list is needed (this
-        // clone was the sim hot path's top allocation — EXPERIMENTS.md §Perf).
-        let my_node = w.node;
-        let mut fetch_done = fetch_start;
-        let graph = self.runs[run as usize].graph;
-        let spec = graph.task(task);
-        for &input in &spec.inputs {
-            let has = self.workers[wid.idx()].has.contains(&(run, input));
-            if has {
-                continue;
-            }
-            let holder = *self.produced_by.get(&(run, input)).expect("input must be finished");
-            let bytes = graph.task(input).output_size;
-            self.bytes_transferred += bytes;
-            let holder_node = self.workers[holder.idx()].node;
-            let arrive = if holder_node == my_node {
-                fetch_start + self.cfg.network.same_node_us(bytes)
-            } else {
-                let wire_done =
-                    self.nics[holder_node].transmit(fetch_start, bytes, self.cfg.network.net_bw);
-                wire_done + self.cfg.network.latency_us
+        loop {
+            let (run, task) = {
+                let w = &self.workers[wid.idx()];
+                if !w.alive || w.pending.is_empty() {
+                    return;
+                }
+                let &(prio, run, task) = w.pending.iter().next().expect("nonempty");
+                let cores = self.runs[run as usize].graph.task(task).cores.max(1);
+                let w = &mut self.workers[wid.idx()];
+                if w.used_cores > 0 && cores > w.ncores.saturating_sub(w.used_cores) {
+                    return;
+                }
+                w.pending.remove(&(prio, run, task));
+                w.pending_prio.remove(&(run, task));
+                w.used_cores += cores;
+                w.running.insert((run, task));
+                // The acceptance invariant: multi-core tasks never
+                // oversubscribe a worker's capacity. The only allowed
+                // excursion is a single task wider than the machine
+                // (possible after the cluster shrinks), which runs alone.
+                assert!(
+                    w.used_cores <= w.ncores || w.running.len() == 1,
+                    "worker {} oversubscribed: {} of {} core slots in use",
+                    wid.idx(),
+                    w.used_cores,
+                    w.ncores
+                );
+                (run, task)
             };
-            self.workers[wid.idx()].has.insert((run, input));
-            fetch_done = fetch_done.max(arrive);
-        }
+            let fetch_start = now;
 
-        let exec_done = fetch_done
-            + self.cfg.profile.worker_task_overhead_us
-            + spec.duration_us as f64;
-        self.workers[wid.idx()].core_free_at = exec_done;
-        self.push(exec_done, Event::TaskDone { run, worker: wid, task });
+            // Fetch missing inputs (parallel fetches; NIC serialization on
+            // the sender side; same-node fast path). `graph` is an
+            // independent `Rc` handle — a pointer copy, so the input list
+            // is still not cloned (that clone was the sim hot path's top
+            // allocation — EXPERIMENTS.md §Perf).
+            let my_node = self.workers[wid.idx()].node;
+            let mut fetch_done = fetch_start;
+            let graph = Rc::clone(&self.runs[run as usize].graph);
+            let spec = graph.task(task);
+            for &input in &spec.inputs {
+                let has = self.workers[wid.idx()].has.contains(&(run, input));
+                if has {
+                    continue;
+                }
+                let holder =
+                    *self.produced_by.get(&(run, input)).expect("input must be finished");
+                let bytes = graph.task(input).output_size;
+                self.bytes_transferred += bytes;
+                let holder_node = self.workers[holder.idx()].node;
+                let arrive = if holder_node == my_node {
+                    fetch_start + self.cfg.network.same_node_us(bytes)
+                } else {
+                    let wire_done = self.nics[holder_node].transmit(
+                        fetch_start,
+                        bytes,
+                        self.cfg.network.net_bw,
+                    );
+                    wire_done + self.cfg.network.latency_us
+                };
+                self.workers[wid.idx()].has.insert((run, input));
+                fetch_done = fetch_done.max(arrive);
+            }
+
+            let exec_done = fetch_done
+                + self.cfg.profile.worker_task_overhead_us
+                + spec.duration_us as f64;
+            self.push(exec_done, Event::TaskDone { run, worker: wid, task });
+        }
     }
 
     /// Injected worker death: mirror the reactor's lineage recovery
@@ -590,12 +689,13 @@ impl<'g> Engine<'g> {
             self.workers.iter().any(|w| w.alive),
             "injected kill removed the last worker; nothing to recover onto"
         );
-        // The corpse's queue, running task and stored outputs evaporate.
+        // The corpse's queue, running tasks and stored outputs evaporate.
         let pending: Vec<(i64, u32, TaskId)> =
             std::mem::take(&mut self.workers[widx].pending).into_iter().collect();
         self.workers[widx].pending_prio.clear();
-        let running = self.workers[widx].running.take();
-        self.workers[widx].core_busy = false;
+        let running: Vec<(u32, TaskId)> =
+            std::mem::take(&mut self.workers[widx].running).into_iter().collect();
+        self.workers[widx].used_cores = 0;
         self.workers[widx].has.clear();
         // Every run's scheduler forgets the worker before any re-placement.
         for r in &mut self.runs {
@@ -726,6 +826,62 @@ impl<'g> Engine<'g> {
         }
     }
 
+    /// A `submit-extend` batch lands: grow the run's graph in place, seed
+    /// readiness for the new tasks (dependencies on already-finished
+    /// outputs count as satisfied immediately — the sim's data plane never
+    /// evicts, so there is nothing to re-pin), and close the run on
+    /// `last`. The virtual mirror of `Reactor::handle_extend`.
+    fn handle_extend(&mut self, run: u32, tasks: Vec<TaskSpec>, last: bool) {
+        let r = run as usize;
+        assert!(self.runs[r].open, "extension for a closed run {run}");
+        let base = self.runs[r].graph.len();
+        let n_new = tasks.len();
+        if n_new > 0 {
+            Rc::make_mut(&mut self.runs[r].graph)
+                .extend(tasks)
+                .expect("invalid extension batch");
+        }
+        let graph = Rc::clone(&self.runs[r].graph);
+        {
+            let ctx = &mut self.runs[r];
+            ctx.finished.resize(base + n_new, false);
+            for t in &graph.tasks()[base..] {
+                // Intra-batch deps (ids ≥ base) read `false` from the
+                // freshly grown `finished`, so they count as unfinished.
+                let d = t.inputs.iter().filter(|dep| !ctx.finished[dep.idx()]).count();
+                ctx.unfinished_deps.push(d as u32);
+            }
+            ctx.remaining += n_new;
+            if self.cfg.replication > 1 {
+                ctx.hints =
+                    crate::taskgraph::replication_hints(&graph, self.cfg.replication_fanout);
+            }
+            ctx.scheduler.graph_extended(&graph);
+            if last {
+                ctx.open = false;
+            }
+        }
+        self.remaining_total += n_new;
+        if last {
+            self.open_runs -= 1;
+        }
+        let ready: Vec<TaskId> = graph.tasks()[base..]
+            .iter()
+            .filter(|t| self.runs[r].unfinished_deps[t.id.idx()] == 0)
+            .map(|t| t.id)
+            .collect();
+        // Ingest cost scales with the batch, like the initial submission.
+        let t = self.reactor_work(
+            self.now,
+            self.cfg.profile.task_transition_us * 0.2 * n_new.max(1) as f64,
+        );
+        if !ready.is_empty() {
+            self.runs[r].scheduler.tasks_ready(&ready, &mut self.actions);
+        }
+        let done = self.sched_work(run, t);
+        self.dispatch_actions(run, done);
+    }
+
     fn handle(&mut self, ev: Event) {
         match ev {
             Event::TaskArrive { run, worker, task, priority } => {
@@ -787,16 +943,19 @@ impl<'g> Engine<'g> {
                 self.maybe_start(worker);
             }
             Event::TaskDone { run, worker, task } => {
-                let w = &mut self.workers[worker.idx()];
-                if !w.alive {
+                if !self.workers[worker.idx()].alive {
                     return; // died mid-execution; the death requeued it
                 }
-                w.core_busy = false;
-                w.running = None;
+                let (spec_dur, cores) = {
+                    let s = self.runs[run as usize].graph.task(task);
+                    (s.duration_us, s.cores.max(1))
+                };
+                let w = &mut self.workers[worker.idx()];
+                w.used_cores = w.used_cores.saturating_sub(cores);
+                w.running.remove(&(run, task));
                 w.has.insert((run, task));
                 self.runs[run as usize].tasks_executed += 1;
                 self.push(self.now, Event::WorkerWake { worker });
-                let spec_dur = self.runs[run as usize].graph.task(task).duration_us;
                 self.push(
                     self.now + self.cfg.network.control_msg_us(),
                     Event::ServerRecv {
@@ -836,6 +995,7 @@ impl<'g> Engine<'g> {
             }
             Event::WorkerDie { worker } => self.handle_worker_death(worker),
             Event::ReactorPump => self.handle_pump(),
+            Event::Extend { run, tasks, last } => self.handle_extend(run, tasks, last),
             Event::ServerRecv { msg } => {
                 self.msgs += 1;
                 let arrived = self.now;
@@ -910,8 +1070,8 @@ impl<'g> Engine<'g> {
                                 .steal_result(task, from, to, false, &mut self.actions);
                         }
                         // Readiness bookkeeping. (`graph` is an independent
-                        // `&'g` borrow, so the deps update can be mutable.)
-                        let graph = self.runs[r].graph;
+                        // `Rc` handle, so the deps update can be mutable.)
+                        let graph = Rc::clone(&self.runs[r].graph);
                         let mut newly_ready = Vec::new();
                         for &c in graph.consumers(task) {
                             // A consumer can already be finished when a
@@ -1003,7 +1163,7 @@ impl<'g> Engine<'g> {
         let mut timed_out = false;
         while let Some(Reverse((Key(at, _), idx))) = self.events.pop() {
             self.now = at;
-            if self.remaining_total == 0 {
+            if self.remaining_total == 0 && self.open_runs == 0 {
                 break;
             }
             if at > self.cfg.timeout_us {
@@ -1018,9 +1178,10 @@ impl<'g> Engine<'g> {
             self.handle(ev);
         }
         assert!(
-            timed_out || self.remaining_total == 0,
-            "simulation drained events with {} tasks unfinished",
-            self.remaining_total
+            timed_out || (self.remaining_total == 0 && self.open_runs == 0),
+            "simulation drained events with {} tasks unfinished and {} runs open",
+            self.remaining_total,
+            self.open_runs
         );
         let in_flight_steals_at_end: usize =
             self.runs.iter().map(|r| r.scheduler.in_flight_steal_count()).sum();
@@ -1028,7 +1189,7 @@ impl<'g> Engine<'g> {
             .runs
             .iter()
             .map(|r| {
-                let run_timed_out = r.remaining > 0;
+                let run_timed_out = r.remaining > 0 || r.open;
                 let makespan =
                     if run_timed_out { self.cfg.timeout_us } else { r.last_finish_us };
                 RunSimResult {

@@ -14,9 +14,16 @@
 //!   scheduler's algorithmic work is priced via
 //!   [`crate::scheduler::SchedCost`] and runs either on the reactor (GIL —
 //!   CPython Dask) or on its own thread (RSDS, §IV-A);
-//! - **workers** have one core each (the paper's setting): pop highest
-//!   priority task, fetch missing inputs from peer workers over the
-//!   network, burn the task duration plus per-task worker overhead;
+//! - **workers** have a configurable number of core slots (one each in
+//!   the paper's setting; [`SimConfig`]'s `core_mix` cycles a
+//!   heterogeneous mix): pop highest-priority tasks while their `cores`
+//!   requirement fits the free slots, fetch missing inputs from peer
+//!   workers over the network, burn the task duration plus per-task
+//!   worker overhead — multi-core tasks hold several slots and the
+//!   engine asserts capacity is never oversubscribed;
+//! - **incremental graphs** ([`SimConfig`]'s `extensions`) graft
+//!   `submit-extend` batches onto open runs at virtual times, replaying
+//!   the reactor's extension path against the same schedulers;
 //! - the **network** has per-transfer latency, bandwidth, per-node NIC
 //!   serialization, and a same-node fast path;
 //! - the **zero worker** mode answers every assignment instantly with no
@@ -34,7 +41,8 @@ mod engine;
 mod network;
 
 pub use engine::{
-    simulate, simulate_concurrent, MultiSimResult, RunSimResult, SimConfig, SimResult, WorkerKill,
+    simulate, simulate_concurrent, ExtBatch, MultiSimResult, RunSimResult, SimConfig, SimResult,
+    WorkerKill,
 };
 pub use network::NetworkModel;
 

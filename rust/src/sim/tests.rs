@@ -492,6 +492,118 @@ fn fairness_is_deterministic() {
     assert_eq!(a.msgs, b.msgs);
 }
 
+// ---- incremental graphs / heterogeneous core slots (PR 9 tentpole) ----
+
+use crate::graphgen::split_incremental;
+use crate::taskgraph::TaskSpec;
+
+/// Turn extension batches into a run-0 schedule, one batch every
+/// `step_us`, the final one closing the run.
+fn ext_schedule(exts: Vec<Vec<TaskSpec>>, step_us: f64) -> Vec<ExtBatch> {
+    let n = exts.len();
+    exts.into_iter()
+        .enumerate()
+        .map(|(i, tasks)| ExtBatch {
+            run: 0,
+            at_us: step_us * (i + 1) as f64,
+            tasks,
+            last: i + 1 == n,
+        })
+        .collect()
+}
+
+#[test]
+fn incremental_submission_completes_for_all_schedulers_on_mixed_cores() {
+    // The acceptance shape: a graph submitted in ≥3 extensions over a
+    // mixed 1/2/4-core cluster completes (with exactly-once execution)
+    // under all three schedulers. Byte-identity of outputs is asserted at
+    // the reactor/TCP level; the sim asserts the counting invariants.
+    let g = merge(600);
+    for sched in ["random", "ws", "dask-ws"] {
+        let mut c = cfg(6, RuntimeProfile::rust(), sched);
+        c.core_mix = vec![1, 2, 4];
+        let one_shot = simulate(&g, &c);
+        assert!(!one_shot.timed_out, "{sched}");
+        let (base, exts) = split_incremental(&g, 4);
+        assert!(exts.len() >= 3, "base plus ≥3 extensions");
+        let mut inc_cfg = c.clone();
+        inc_cfg.extensions = ext_schedule(exts, 1_000.0);
+        let inc = simulate(&base, &inc_cfg);
+        assert!(!inc.timed_out, "{sched}");
+        assert_eq!(inc.n_tasks, g.len() as u64, "{sched}: run grew to the full graph");
+        assert_eq!(inc.tasks_executed, inc.n_tasks, "{sched}: exactly-once under extension");
+        assert_eq!(inc.in_flight_steals_at_end, 0, "{sched}");
+    }
+}
+
+#[test]
+fn extension_after_base_finished_still_completes() {
+    // merge's sink arrives in the last batch and consumes outputs that
+    // finished long before — the run idles open, then the late batch
+    // lands and completes. Makespan must cover the idle gap.
+    let g = merge(50);
+    let (base, exts) = split_incremental(&g, 2);
+    let mut c = cfg(4, RuntimeProfile::rust(), "ws");
+    c.extensions = ext_schedule(exts, 5e6); // 5 s in: base is long done
+    let r = simulate(&base, &c);
+    assert!(!r.timed_out);
+    assert_eq!(r.n_tasks, g.len() as u64);
+    assert_eq!(r.tasks_executed, r.n_tasks);
+    assert!(r.makespan_us >= 5e6, "completion waits for the late extension");
+}
+
+#[test]
+fn multicore_tasks_complete_without_oversubscription() {
+    // Wide tasks across a 1/2/4-core mix; the engine itself asserts the
+    // capacity invariant on every start, so completing is the proof.
+    let mut b = GraphBuilder::new();
+    for i in 0..120u32 {
+        b.add_with_cores(format!("w{i}"), vec![], 2_000, 64, Payload::BusyWait, 1 + (i % 3));
+    }
+    let g = b.build("hetero").unwrap();
+    for sched in ["random", "ws", "dask-ws"] {
+        let mut c = cfg(6, RuntimeProfile::rust(), sched);
+        c.core_mix = vec![1, 2, 4];
+        let r = simulate(&g, &c);
+        assert!(!r.timed_out, "{sched}");
+        assert_eq!(r.tasks_executed, g.len() as u64, "{sched}");
+    }
+}
+
+#[test]
+fn multi_slot_worker_runs_tasks_concurrently() {
+    // One 4-slot worker must beat one 1-slot worker by ~4× on
+    // embarrassingly parallel work — the slots genuinely overlap.
+    let g = merge_slow(40, 10_000);
+    let narrow = simulate(&g, &cfg(1, RuntimeProfile::rust(), "ws"));
+    let mut c = cfg(1, RuntimeProfile::rust(), "ws");
+    c.core_mix = vec![4];
+    let wide = simulate(&g, &c);
+    assert!(!narrow.timed_out && !wide.timed_out);
+    assert!(
+        wide.makespan_us < narrow.makespan_us * 0.5,
+        "4 slots only {:.2}× faster",
+        narrow.makespan_us / wide.makespan_us
+    );
+}
+
+#[test]
+fn incremental_simulation_is_deterministic() {
+    let g = merge(400);
+    let run = || {
+        let (base, exts) = split_incremental(&g, 4);
+        let mut c = cfg(6, RuntimeProfile::rust(), "ws");
+        c.core_mix = vec![1, 2, 4];
+        c.extensions = ext_schedule(exts, 500.0);
+        simulate(&base, &c)
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.makespan_us, b.makespan_us);
+    assert_eq!(a.msgs, b.msgs);
+    assert_eq!(a.tasks_executed, b.tasks_executed);
+}
+
 #[test]
 fn ws_moves_less_data_than_random() {
     // The whole point of locality-aware placement (§IV-C).

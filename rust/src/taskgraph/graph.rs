@@ -34,6 +34,10 @@ pub struct TaskSpec {
     /// Output size in bytes placed in the producing worker's data store.
     pub output_size: u64,
     pub payload: Payload,
+    /// Core slots the task occupies while executing (dslab-dag-style
+    /// resource requirement); `1` for ordinary tasks. A task can only be
+    /// placed on a worker with `ncores >= cores`.
+    pub cores: u32,
 }
 
 #[derive(Debug, thiserror::Error, PartialEq)]
@@ -173,6 +177,67 @@ impl TaskGraph {
     pub fn needs_runtime(&self) -> bool {
         self.tasks.iter().any(|t| t.payload.needs_runtime())
     }
+
+    /// Largest per-task `cores` requirement (1 for a homogeneous graph).
+    pub fn max_cores(&self) -> u32 {
+        self.tasks.iter().map(|t| t.cores).max().unwrap_or(1).max(1)
+    }
+
+    /// Append a validated batch of tasks to an existing graph (the
+    /// `submit-extend` op): ids continue densely from `len()`, dependencies
+    /// may reference any lower id (including tasks of earlier epochs), keys
+    /// must be unique against the whole graph. `consumers` and `n_deps`
+    /// grow accordingly; existing tasks are never mutated, so ids, keys and
+    /// the topological id-order invariant all survive extension.
+    pub fn extend(&mut self, new_tasks: Vec<TaskSpec>) -> Result<(), GraphError> {
+        if new_tasks.is_empty() {
+            return Err(GraphError::Empty);
+        }
+        let base = self.tasks.len();
+        let total = base + new_tasks.len();
+        // Validate the batch fully before mutating anything: a rejected
+        // extension must leave the graph exactly as it was.
+        {
+            let mut keys: HashMap<&str, TaskId> = HashMap::with_capacity(total);
+            for t in &self.tasks {
+                keys.insert(&t.key, t.id);
+            }
+            for (off, t) in new_tasks.iter().enumerate() {
+                let pos = base + off;
+                if t.id.idx() != pos {
+                    return Err(GraphError::IdMismatch(t.id, pos));
+                }
+                if keys.insert(&t.key, t.id).is_some() {
+                    return Err(GraphError::DupKey(t.key.clone()));
+                }
+                let mut seen = Vec::with_capacity(t.inputs.len());
+                for &d in &t.inputs {
+                    if d == t.id {
+                        return Err(GraphError::SelfDep { task: t.id });
+                    }
+                    if d.idx() >= total {
+                        return Err(GraphError::UnknownDep { task: t.id, dep: d });
+                    }
+                    if d.idx() > pos {
+                        return Err(GraphError::Cycle(t.id));
+                    }
+                    if seen.contains(&d) {
+                        return Err(GraphError::DupDep { task: t.id, dep: d });
+                    }
+                    seen.push(d);
+                }
+            }
+        }
+        self.consumers.resize(total, Vec::new());
+        for t in &new_tasks {
+            for &d in &t.inputs {
+                self.consumers[d.idx()].push(t.id);
+                self.n_deps += 1;
+            }
+        }
+        self.tasks.extend(new_tasks);
+        Ok(())
+    }
 }
 
 /// Convenience builder used by generators and tests.
@@ -196,6 +261,19 @@ impl GraphBuilder {
         output_size: u64,
         payload: Payload,
     ) -> TaskId {
+        self.add_with_cores(key, inputs, duration_us, output_size, payload, 1)
+    }
+
+    /// [`GraphBuilder::add`] with an explicit `cores` requirement.
+    pub fn add_with_cores(
+        &mut self,
+        key: impl Into<String>,
+        inputs: Vec<TaskId>,
+        duration_us: u64,
+        output_size: u64,
+        payload: Payload,
+        cores: u32,
+    ) -> TaskId {
         let id = TaskId(self.tasks.len() as u32);
         self.tasks.push(TaskSpec {
             id,
@@ -204,6 +282,7 @@ impl GraphBuilder {
             duration_us,
             output_size,
             payload,
+            cores: cores.max(1),
         });
         id
     }
@@ -233,6 +312,7 @@ mod tests {
             duration_us: 10,
             output_size: 100,
             payload: Payload::NoOp,
+            cores: 1,
         }
     }
 
@@ -291,6 +371,50 @@ mod tests {
     fn rejects_id_position_mismatch() {
         let e = TaskGraph::new("m", vec![t(5, vec![])]).unwrap_err();
         assert_eq!(e, GraphError::IdMismatch(TaskId(5), 0));
+    }
+
+    #[test]
+    fn extend_appends_and_grows_consumers() {
+        let mut g = TaskGraph::new("x", vec![t(0, vec![]), t(1, vec![0])]).unwrap();
+        g.extend(vec![t(2, vec![0]), t(3, vec![1, 2])]).unwrap();
+        assert_eq!(g.len(), 4);
+        assert_eq!(g.n_deps(), 4);
+        assert_eq!(g.consumers(TaskId(0)), &[TaskId(1), TaskId(2)]);
+        assert_eq!(g.consumers(TaskId(1)), &[TaskId(3)]);
+        assert_eq!(g.sinks(), vec![TaskId(3)]);
+    }
+
+    #[test]
+    fn extend_rejects_bad_batches_without_mutation() {
+        let mut g = TaskGraph::new("x", vec![t(0, vec![])]).unwrap();
+        let snapshot = g.clone();
+        // Wrong id (must continue densely from len()).
+        assert_eq!(g.extend(vec![t(5, vec![])]).unwrap_err(), GraphError::IdMismatch(TaskId(5), 1));
+        // Duplicate key against the base graph.
+        let mut dup = t(1, vec![]);
+        dup.key = "t-0".into();
+        assert_eq!(g.extend(vec![dup]).unwrap_err(), GraphError::DupKey("t-0".into()));
+        // Forward reference within the batch.
+        assert_eq!(g.extend(vec![t(1, vec![2]), t(2, vec![])]).unwrap_err(), GraphError::Cycle(TaskId(1)));
+        // Unknown dep beyond the extended range.
+        assert_eq!(
+            g.extend(vec![t(1, vec![9])]).unwrap_err(),
+            GraphError::UnknownDep { task: TaskId(1), dep: TaskId(9) }
+        );
+        // Empty batch.
+        assert_eq!(g.extend(vec![]).unwrap_err(), GraphError::Empty);
+        assert_eq!(g, snapshot, "failed extension must not mutate the graph");
+    }
+
+    #[test]
+    fn builder_cores_default_and_override() {
+        let mut b = GraphBuilder::new();
+        let a = b.add("a", vec![], 5, 10, Payload::NoOp);
+        let c = b.add_with_cores("c", vec![a], 5, 10, Payload::NoOp, 4);
+        let g = b.build("g").unwrap();
+        assert_eq!(g.task(a).cores, 1);
+        assert_eq!(g.task(c).cores, 4);
+        assert_eq!(g.max_cores(), 4);
     }
 
     #[test]

@@ -168,7 +168,7 @@ pub fn run_worker(cfg: WorkerConfig) -> Result<WorkerHandle> {
     };
 
     let shared = Arc::new(Shared {
-        queue: Mutex::new(TaskQueue::new()),
+        queue: Mutex::new(TaskQueue::with_cores(cfg.ncores.max(1))),
         cv: Condvar::new(),
         store: ObjectStore::new(cfg.memory_limit, backend),
         stop: AtomicBool::new(false),
@@ -261,6 +261,15 @@ pub fn run_worker(cfg: WorkerConfig) -> Result<WorkerHandle> {
                         let retracted = drop_queued(&shared, run, task);
                         let _ = shared.send(&Msg::StealResponse { run, task, ok: retracted });
                     }
+                    Msg::PinData { run, task, consumers } => {
+                        // A graph extension added consumers of this stored
+                        // output: raise its remaining reference count so it
+                        // survives for the new gathers. A key we no longer
+                        // hold is ignored — the server pins what it believes
+                        // resident, and the resurrection path backstops a
+                        // copy that evaporated in flight.
+                        shared.store.add_consumers(&(run, task), consumers);
+                    }
                     Msg::CancelCompute { run, task } => {
                         // Recovery: an input of this task evaporated with a
                         // dead worker. Drop the queued copy — the server
@@ -351,8 +360,11 @@ fn executor_loop(shared: &Shared) {
             }
         };
         // Popped after its run was released (queue purge raced the pop):
-        // drop it instead of doing dead work.
+        // drop it instead of doing dead work — returning its core slots,
+        // or a wide task's ghost would gate the queue forever.
         if shared.store.is_released(next.run) {
+            shared.queue.lock().unwrap().task_done(next.cores);
+            shared.cv.notify_all();
             continue;
         }
         shared.running.fetch_add(1, Ordering::SeqCst);
@@ -370,6 +382,10 @@ fn executor_loop(shared: &Shared) {
                 });
             }
         }
+        // Slots free only after the outcome is decided: the gate models
+        // occupancy for the task's whole stay on the machine.
+        shared.queue.lock().unwrap().task_done(next.cores);
+        shared.cv.notify_all();
     }
 }
 
@@ -412,10 +428,14 @@ fn run_task(shared: &Shared, t: &PoppedTask, plan: &FetchPlan) -> Result<TaskFin
                 })?
             }
         };
-        // One consumption of the input. A refcounted local copy that hits
-        // zero self-evicts; tell the server so recovery and future
-        // `who_has` answers never count on the freed bytes.
-        if shared.store.consume(&key) {
+        // One consumption of the input — exactly once per (run, consumer,
+        // input): a re-delivered assignment (recovery re-send, steal
+        // re-assignment) gathers again but must not double-decrement, or
+        // it would prematurely evict an output a sibling consumer still
+        // needs. A refcounted local copy that hits zero self-evicts; tell
+        // the server so recovery and future `who_has` answers never count
+        // on the freed bytes.
+        if shared.store.consume_once(&key, t.task) {
             let _ = shared.send(&Msg::ReplicaDropped { run: t.run, task: input_task });
         }
         inputs.push(data);

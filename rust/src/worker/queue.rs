@@ -69,6 +69,8 @@ struct QueuedTask {
     inputs: (u32, u32),
     /// Graph-wide consumer count of the output (0 = pin in the store).
     consumers: u32,
+    /// Core slots the task occupies while it runs (≥ 1).
+    cores: u32,
 }
 
 // Min-heap by priority (lower value runs first, like Dask priorities);
@@ -127,6 +129,9 @@ pub struct PoppedTask {
     pub priority: i64,
     /// Initial store reference count for the output (0 = pinned).
     pub consumers: u32,
+    /// Core slots the task occupies; the executor returns them via
+    /// [`TaskQueue::task_done`] when the task leaves the machine.
+    pub cores: u32,
 }
 
 /// Executor-side scratch, reused across tasks: after warm-up a pop copies
@@ -187,11 +192,35 @@ pub struct TaskQueue {
     /// Tasks currently queued (O(1) steal checks).
     pending: HashSet<(RunId, TaskId)>,
     runs: HashMap<RunId, RunStrings>,
+    /// Core-slot capacity of the worker; `None` disables the slot gate
+    /// (benches and queue-only tests drive pops without completions).
+    capacity: Option<u32>,
+    /// Slots currently held by popped-but-unfinished tasks.
+    used_cores: u32,
 }
 
 impl TaskQueue {
     pub fn new() -> TaskQueue {
         TaskQueue::default()
+    }
+
+    /// A queue whose [`TaskQueue::pop_into`] gates on core slots: a
+    /// multi-core task only pops once enough of the worker's `ncores`
+    /// slots are free, so executors never oversubscribe the machine.
+    pub fn with_cores(ncores: u32) -> TaskQueue {
+        TaskQueue { capacity: Some(ncores.max(1)), ..TaskQueue::default() }
+    }
+
+    /// Slots currently held by running tasks (diagnostics/tests).
+    pub fn used_cores(&self) -> u32 {
+        self.used_cores
+    }
+
+    /// A task popped earlier left the machine (finished, failed, or was
+    /// skipped as released): return its core slots. Callers must follow
+    /// with a condvar wake so gated executors re-check the queue.
+    pub fn task_done(&mut self, cores: u32) {
+        self.used_cores = self.used_cores.saturating_sub(cores);
     }
 
     pub fn len(&self) -> usize {
@@ -281,6 +310,7 @@ impl TaskQueue {
             key,
             inputs: (start, len),
             consumers: view.consumers,
+            cores: view.cores.max(1),
         });
         Ok(())
     }
@@ -289,7 +319,20 @@ impl TaskQueue {
     /// addresses into the caller's reused scratch (so nothing borrows the
     /// arenas after the queue lock drops). Warm: zero allocations.
     pub fn pop_into(&mut self, plan: &mut FetchPlan) -> Option<PoppedTask> {
+        if let Some(cap) = self.capacity {
+            let top = self.heap.peek()?;
+            // Gate on free slots — except when the worker is idle: a task
+            // wider than the whole machine then runs alone (degraded, but
+            // never wedged). The scheduler's can_fit filter makes this the
+            // recovery path, not the steady state.
+            if self.used_cores > 0 && top.cores > cap.saturating_sub(self.used_cores) {
+                return None;
+            }
+        }
         let qt = self.heap.pop()?;
+        if self.capacity.is_some() {
+            self.used_cores += qt.cores;
+        }
         self.pending.remove(&(qt.run, qt.task));
         plan.inputs.clear();
         plan.alt_spans.clear();
@@ -332,6 +375,7 @@ impl TaskQueue {
             output_size: qt.output_size,
             priority: qt.priority,
             consumers: qt.consumers,
+            cores: qt.cores,
         })
     }
 
@@ -404,6 +448,22 @@ mod tests {
                 .collect(),
             priority,
             consumers,
+            cores: 1,
+        })
+    }
+
+    fn compute_wide(run: u32, task: u32, priority: i64, cores: u32) -> Vec<u8> {
+        encode_msg(&Msg::ComputeTask {
+            run: RunId(run),
+            task: TaskId(task),
+            key: format!("k-{run}-{task}"),
+            payload: Payload::BusyWait,
+            duration_us: 7,
+            output_size: 64,
+            inputs: vec![],
+            priority,
+            consumers: 1,
+            cores,
         })
     }
 
@@ -552,6 +612,7 @@ mod tests {
             inputs,
             priority,
             consumers,
+            cores,
         } = crate::protocol::decode_msg(&bytes).unwrap()
         else {
             panic!("wrong op")
@@ -564,6 +625,7 @@ mod tests {
         assert_eq!(p.payload, payload);
         assert_eq!((p.duration_us, p.output_size), (duration_us, output_size));
         assert_eq!(p.consumers, consumers);
+        assert_eq!(p.cores, cores.max(1));
         assert_eq!(plan.key(), key);
         assert_eq!(plan.n_inputs(), inputs.len());
         for (i, l) in inputs.iter().enumerate() {
@@ -573,6 +635,56 @@ mod tests {
                 assert_eq!(plan.input_alt(i, j), alt);
             }
         }
+    }
+
+    #[test]
+    fn slot_gate_admits_tasks_only_within_capacity() {
+        let mut q = TaskQueue::with_cores(2);
+        enqueue(&mut q, &compute_wide(0, 1, 1, 2));
+        enqueue(&mut q, &compute_wide(0, 2, 2, 1));
+        let mut plan = FetchPlan::new();
+        let p = q.pop_into(&mut plan).unwrap();
+        assert_eq!((p.task, p.cores), (TaskId(1), 2));
+        assert_eq!(q.used_cores(), 2);
+        assert!(
+            q.pop_into(&mut plan).is_none(),
+            "1-core task gated while the 2-core task holds both slots"
+        );
+        assert!(q.is_pending(RunId(0), TaskId(2)), "gated task stays queued");
+        q.task_done(2);
+        assert_eq!(q.used_cores(), 0);
+        let p = q.pop_into(&mut plan).unwrap();
+        assert_eq!((p.task, p.cores), (TaskId(2), 1));
+        q.task_done(1);
+    }
+
+    #[test]
+    fn oversize_task_runs_alone_instead_of_wedging() {
+        // A 4-core task on a 1-core worker (possible after the cluster
+        // shrinks under it) pops when the worker is idle — degraded, not
+        // deadlocked — and still blocks everything else while it runs.
+        let mut q = TaskQueue::with_cores(1);
+        enqueue(&mut q, &compute_wide(0, 1, 1, 4));
+        enqueue(&mut q, &compute_wide(0, 2, 2, 1));
+        let mut plan = FetchPlan::new();
+        let p = q.pop_into(&mut plan).unwrap();
+        assert_eq!((p.task, p.cores), (TaskId(1), 4));
+        assert!(q.pop_into(&mut plan).is_none());
+        q.task_done(4);
+        assert_eq!(q.pop_into(&mut plan).unwrap().task, TaskId(2));
+    }
+
+    #[test]
+    fn ungated_queue_pops_regardless_of_width() {
+        // TaskQueue::new() keeps the historical behavior: benches and
+        // queue-only tests pop freely without reporting completions.
+        let mut q = TaskQueue::new();
+        enqueue(&mut q, &compute_wide(0, 1, 1, 8));
+        enqueue(&mut q, &compute_wide(0, 2, 2, 8));
+        let mut plan = FetchPlan::new();
+        assert!(q.pop_into(&mut plan).is_some());
+        assert!(q.pop_into(&mut plan).is_some());
+        assert_eq!(q.used_cores(), 0);
     }
 
     #[test]

@@ -64,6 +64,12 @@ struct Inner {
     /// retired run are dropped here, under the same lock as the map, so
     /// there is no release/insert race window.
     released: HashSet<RunId>,
+    /// `(run, consuming task, input task)` gathers already counted — the
+    /// exactly-once guard behind [`ObjectStore::consume_once`]. A task
+    /// re-executed after recovery gathers the same inputs again; without
+    /// the mark the double-decrement prematurely self-evicts an output a
+    /// sibling consumer still needs. Purged with the run.
+    consumed: HashSet<(RunId, TaskId, TaskId)>,
     resident_bytes: u64,
     clock: u64,
     spills: u64,
@@ -95,6 +101,7 @@ impl ObjectStore {
             inner: Mutex::new(Inner {
                 entries: HashMap::new(),
                 released: HashSet::new(),
+                consumed: HashSet::new(),
                 resident_bytes: 0,
                 clock: 0,
                 spills: 0,
@@ -167,6 +174,25 @@ impl ObjectStore {
     /// more consumptions than the graph predicted.
     pub fn consume(&self, key: &DataKey) -> bool {
         let mut inner = self.inner.lock().unwrap();
+        Self::consume_locked(&mut inner, key, &*self.backend)
+    }
+
+    /// [`ObjectStore::consume`] with an exactly-once guard per
+    /// `(run, consumer, input)`: a task re-executed after recovery (its
+    /// first result was lost with a dead worker, or its `task-finished`
+    /// raced a disconnect) gathers the same inputs again, but only the
+    /// first gather may decrement — the duplicate returns `false` without
+    /// touching the count, so a sibling consumer's share of the input
+    /// survives the re-run.
+    pub fn consume_once(&self, key: &DataKey, consumer: TaskId) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.consumed.insert((key.0, consumer, key.1)) {
+            return false;
+        }
+        Self::consume_locked(&mut inner, key, &*self.backend)
+    }
+
+    fn consume_locked(inner: &mut Inner, key: &DataKey, backend: &dyn SpillBackend) -> bool {
         let evict = match inner.entries.get_mut(key) {
             Some(e) => match e.consumers {
                 Some(ref mut n) => {
@@ -179,10 +205,30 @@ impl ObjectStore {
         };
         if evict {
             if let Some(e) = inner.entries.remove(key) {
-                Inner::drop_entry(&mut inner, e, &*self.backend);
+                Inner::drop_entry(inner, e, backend);
             }
         }
         evict
+    }
+
+    /// Raise a live entry's remaining-consumer count by `delta` — the
+    /// `pin-data` op: a graph extension added consumers of an output whose
+    /// `compute-task` baked in a smaller count. Pinned entries stay pinned
+    /// (they already outlive any consumer set), and an absent key returns
+    /// `false` and is otherwise ignored: the server only pins outputs it
+    /// believes resident, and the `fetch-failed` resurrection path
+    /// backstops a copy that evaporated in flight.
+    pub fn add_consumers(&self, key: &DataKey, delta: u32) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.entries.get_mut(key) {
+            Some(e) => {
+                if let Some(ref mut n) = e.consumers {
+                    *n += delta;
+                }
+                true
+            }
+            None => false,
+        }
     }
 
     /// Bring a spilled entry's bytes back to memory (cold path). Reads the
@@ -235,9 +281,16 @@ impl ObjectStore {
             Some(l) => l,
             None => return,
         };
+        // Victims already abandoned once this pass: a second pick commits
+        // unconditionally, so a key that is touched on every write (hot
+        // entry, or a test backend doing exactly that) cannot livelock
+        // the evictor.
+        let mut abandoned: std::collections::HashSet<DataKey> = std::collections::HashSet::new();
         loop {
-            // Pick the LRU resident victim under the lock.
-            let (key, bytes) = {
+            // Pick the LRU resident victim under the lock, remembering its
+            // LRU stamp so the commit step can tell whether it was touched
+            // while the bytes were being written outside the lock.
+            let (key, bytes, stamp) = {
                 let mut inner = self.inner.lock().unwrap();
                 if inner.resident_bytes <= limit {
                     return;
@@ -254,18 +307,18 @@ impl ObjectStore {
                     // evictor owns the in-flight writes.
                     None => return,
                 };
-                let bytes = match inner.entries.get_mut(&key) {
+                let (bytes, stamp) = match inner.entries.get_mut(&key) {
                     Some(e) => match e.slot {
                         Slot::Resident(ref b) => {
                             let b = b.clone(); // lint: clone-ok — Arc refcount bump
                             e.slot = Slot::Spilling(b.clone()); // lint: clone-ok — Arc refcount bump
-                            b
+                            (b, e.last_used)
                         }
                         _ => continue,
                     },
                     None => continue,
                 };
-                (key, bytes)
+                (key, bytes, stamp)
             };
 
             // Write outside the lock; readers still hit the Spilling arc.
@@ -284,12 +337,22 @@ impl ObjectStore {
                 }
             };
 
-            // Commit: entry may have been consumed or released mid-write.
+            // Commit: the entry may have been consumed or released
+            // mid-write, or *touched* (its LRU stamp moved) — a touched
+            // victim is hot again, so the spill is abandoned and the entry
+            // stays resident. Either way the freshly written slot goes
+            // straight back to the backend's free list: the entry never
+            // learned the slot id, so nothing else can ever free it.
             let mut inner = self.inner.lock().unwrap();
             let committed = match inner.entries.get_mut(&key) {
                 Some(e) if matches!(e.slot, Slot::Spilling(_)) => {
-                    e.slot = Slot::Spilled(slot_id);
-                    Some(e.nbytes)
+                    if e.last_used != stamp && abandoned.insert(key) {
+                        e.slot = Slot::Resident(bytes);
+                        None
+                    } else {
+                        e.slot = Slot::Spilled(slot_id);
+                        Some(e.nbytes)
+                    }
                 }
                 _ => None,
             };
@@ -310,6 +373,7 @@ impl ObjectStore {
     pub fn release_run(&self, run: RunId) {
         let mut inner = self.inner.lock().unwrap();
         inner.released.insert(run);
+        inner.consumed.retain(|m| m.0 != run);
         let keys: Vec<DataKey> =
             inner.entries.keys().filter(|k| k.0 == run).copied().collect();
         for k in keys {
@@ -353,6 +417,12 @@ impl ObjectStore {
     /// Test/oracle hook.
     pub fn refcount(&self, key: &DataKey) -> Option<Option<u32>> {
         self.inner.lock().unwrap().entries.get(key).map(|e| e.consumers)
+    }
+
+    /// Live exactly-once consumption marks (boundedness diagnostics —
+    /// `release-run` must purge a run's marks with its entries).
+    pub fn consumed_marks(&self) -> usize {
+        self.inner.lock().unwrap().consumed.len()
     }
 }
 
@@ -536,6 +606,125 @@ mod tests {
         s.release_run(RunId(1));
         assert_eq!(backend.spilled_bytes(), 0);
         assert_eq!(s.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn post_recovery_rerun_consumes_inputs_exactly_once() {
+        // PR 9 bugfix regression: a task re-executed after recovery (the
+        // server re-sends work whose first result was lost) gathers the
+        // same input twice. Pre-fix, both gathers called `consume`,
+        // double-decrementing and evicting the output while a sibling
+        // consumer still needed it.
+        let (s, _) = store_with(None);
+        let input = key(1, 0);
+        assert!(s.insert(input, bytes(10), 2), "two consumers: tasks 5 and 6");
+        assert!(!s.consume_once(&input, TaskId(5)), "first gather decrements");
+        assert!(!s.consume_once(&input, TaskId(5)), "re-run gather must not");
+        assert_eq!(s.refcount(&input), Some(Some(1)), "sibling's share survives");
+        assert_hit(&s, &input, 10);
+        assert!(s.consume_once(&input, TaskId(6)), "sibling's gather is the true last");
+        assert!(matches!(s.get(&input), Lookup::Miss));
+    }
+
+    #[test]
+    fn release_run_purges_consumption_marks() {
+        let (s, _) = store_with(None);
+        let input = key(1, 0);
+        s.insert(input, bytes(4), 1);
+        assert!(s.consume_once(&input, TaskId(5)));
+        assert_eq!(s.consumed_marks(), 1);
+        s.release_run(RunId(1));
+        assert_eq!(s.consumed_marks(), 0, "marks die with the run (boundedness)");
+    }
+
+    #[test]
+    fn pin_data_raises_refcount_and_pinned_stays_pinned() {
+        let (s, _) = store_with(None);
+        let k = key(1, 7);
+        s.insert(k, bytes(10), 1);
+        assert!(s.add_consumers(&k, 2), "extension added two consumers");
+        assert!(!s.consume(&k));
+        assert!(!s.consume(&k));
+        assert!(s.consume(&k), "1 + 2 consumptions total");
+        assert!(!s.add_consumers(&k, 1), "absent key ignored");
+        let p = key(1, 8);
+        s.insert(p, bytes(10), 0);
+        assert!(s.add_consumers(&p, 3));
+        for _ in 0..10 {
+            assert!(!s.consume(&p), "pinned stays pinned");
+        }
+        assert_hit(&s, &p, 10);
+    }
+
+    /// Backend wrapper that touches a store key from inside `write` —
+    /// deterministically reproducing "victim touched while its bytes were
+    /// being written outside the lock".
+    struct TouchOnWrite {
+        inner: MemSpill,
+        store: Mutex<Option<Arc<ObjectStore>>>,
+        touch_key: DataKey,
+    }
+
+    impl SpillBackend for TouchOnWrite {
+        fn write(&self, bytes: &[u8]) -> std::io::Result<u64> {
+            if let Some(s) = self.store.lock().unwrap().clone() {
+                let _ = s.get(&self.touch_key);
+            }
+            self.inner.write(bytes)
+        }
+        fn read(&self, slot: u64) -> std::io::Result<Vec<u8>> {
+            self.inner.read(slot)
+        }
+        fn free(&self, slot: u64) -> bool {
+            self.inner.free(slot)
+        }
+        fn spilled_bytes(&self) -> u64 {
+            self.inner.spilled_bytes()
+        }
+    }
+
+    #[test]
+    fn touched_victim_abandons_spill_without_leaking_the_slot() {
+        // PR 9 bugfix regression: a victim touched mid-write abandons the
+        // spill (it is hot again) — and the freshly written slot must go
+        // back to the backend free list, not leak.
+        let backend = Arc::new(TouchOnWrite {
+            inner: MemSpill::new(),
+            store: Mutex::new(None),
+            touch_key: key(1, 1),
+        });
+        let s = Arc::new(ObjectStore::new(Some(15), backend.clone()));
+        *backend.store.lock().unwrap() = Some(s.clone());
+        s.insert(key(1, 1), bytes(10), 1);
+        s.insert(key(1, 2), bytes(10), 1);
+        // Over budget: the LRU victim is (1,1), which the backend touches
+        // during the write → abandoned; the evictor then spills (1,2).
+        s.maybe_spill();
+        assert_hit(&s, &key(1, 1), 10);
+        assert!(matches!(s.get(&key(1, 2)), Lookup::Spilled));
+        assert_eq!(backend.inner.live_slots(), 1, "abandoned slot freed, not leaked");
+        assert_eq!(backend.inner.misuse_count(), 0);
+        assert!(s.resident_bytes() <= 15);
+        // The abandoned entry restores nothing — it never left memory.
+        assert_eq!(s.spill_stats().0, 1, "exactly one committed spill");
+    }
+
+    #[test]
+    fn always_touched_victim_eventually_spills_instead_of_livelocking() {
+        // Single over-budget entry whose every write is accompanied by a
+        // touch: the second pick this pass commits unconditionally.
+        let backend = Arc::new(TouchOnWrite {
+            inner: MemSpill::new(),
+            store: Mutex::new(None),
+            touch_key: key(1, 1),
+        });
+        let s = Arc::new(ObjectStore::new(Some(5), backend.clone()));
+        *backend.store.lock().unwrap() = Some(s.clone());
+        s.insert(key(1, 1), bytes(10), 1);
+        s.maybe_spill();
+        assert!(matches!(s.get(&key(1, 1)), Lookup::Spilled));
+        assert_eq!(backend.inner.live_slots(), 1, "one live slot, none leaked");
+        assert_eq!(backend.inner.misuse_count(), 0);
     }
 
     #[test]

@@ -975,6 +975,7 @@ fn fetch_failover_uses_surviving_replica() {
         }],
         priority: 0,
         consumers: 0,
+        cores: 1,
     };
     write_frame(&mut conns[0], &encode_msg(&compute)).unwrap();
     let reply = decode_msg(&read_frame(&mut conns[0]).unwrap()).unwrap();
@@ -1023,6 +1024,207 @@ fn memory_budget_spills_and_completes() {
     assert!(restores > 0, "the sink's gather restored spilled inputs");
     w.shutdown();
     srv.shutdown();
+}
+
+// ---- incremental graphs + resource slots (PR 9 tentpole) ----
+
+/// A heterogeneous pool: workers with 1, 2 and 4 core slots.
+fn mixed_workers(addr: &str) -> Vec<WorkerHandle> {
+    [1u32, 2, 4]
+        .iter()
+        .enumerate()
+        .map(|(i, &ncores)| {
+            run_worker(WorkerConfig {
+                server_addr: addr.to_string(),
+                name: format!("mix-w{i}"),
+                ncores,
+                node: 0,
+                memory_limit: None,
+            })
+            .expect("worker start")
+        })
+        .collect()
+}
+
+#[test]
+fn incremental_submission_matches_one_shot_over_tcp() {
+    // PR 9 acceptance: a graph submitted in ≥ 3 incremental extensions over
+    // a mixed 1/2/4-core cluster completes identically to the one-shot
+    // submission for all three schedulers. The tree's merge payloads
+    // consume real input bytes across extension boundaries, so completion
+    // proves the data plane handed every extension task the same bytes the
+    // one-shot run produced.
+    let srv = server("ws");
+    let addr = srv.addr.to_string();
+    let ws = mixed_workers(&addr);
+    let graph = graphgen::with_cores(&graphgen::tree(6), &[1, 2]);
+    let mut c = Client::connect(&addr, "inc-parity").unwrap();
+    for sched in ["random", "ws", "dask-ws"] {
+        let oneshot = c.run_graph_with(&graph, Some(sched)).unwrap();
+        assert_eq!(oneshot.n_tasks, graph.len() as u64, "{sched}: one-shot");
+
+        let (base, exts) = graphgen::split_incremental(&graph, 4);
+        assert!(exts.len() >= 3, "graph large enough for 3+ extensions");
+        let run = c.submit_open(&base, Some(sched)).unwrap();
+        let n_exts = exts.len();
+        for (i, batch) in exts.into_iter().enumerate() {
+            c.extend(run, batch, i + 1 == n_exts).unwrap();
+        }
+        let inc = c.wait(run).unwrap();
+        assert_eq!(inc.n_tasks, oneshot.n_tasks, "{sched}: incremental parity");
+    }
+    assert_eq!(srv.report_count(), 6);
+    for w in &ws {
+        w.shutdown();
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn extend_after_base_finished_over_tcp() {
+    // The re-pin path end to end: the base (leaves only) finishes and its
+    // outputs sit pinned on the workers; the extension then adds the sink
+    // consuming all of them. The server must pin-data the new consumer
+    // counts onto the live outputs and the sink must fetch every one.
+    let srv = server("ws");
+    let addr = srv.addr.to_string();
+    let ws = workers(&addr, 2);
+    let mut c = Client::connect(&addr, "late-extend").unwrap();
+    let g = graphgen::merge(30);
+    let (base, exts) = graphgen::split_incremental(&g, 2);
+    let run = c.submit_open(&base, None).unwrap();
+    // The base is a few ms of work; by now it has long finished and the
+    // run is idling open.
+    std::thread::sleep(std::time::Duration::from_millis(700));
+    let n_exts = exts.len();
+    for (i, batch) in exts.into_iter().enumerate() {
+        c.extend(run, batch, i + 1 == n_exts).unwrap();
+    }
+    let res = c.wait(run).unwrap();
+    assert_eq!(res.n_tasks, 31);
+    assert_eq!(srv.reports().len(), 1);
+    for w in &ws {
+        w.shutdown();
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn extend_during_recovery_over_tcp() {
+    // Extension racing an in-flight lineage recovery: a worker dies with
+    // base assignments (and likely outputs) on it, and the extension lands
+    // while the server is resurrecting. The run must absorb both — every
+    // task of the extended graph completes.
+    let srv = server("ws");
+    let addr = srv.addr.to_string();
+    let mut ws = workers(&addr, 3);
+    let victim = ws.remove(0);
+    let mut c = Client::connect(&addr, "extend-recover").unwrap();
+    let g = graphgen::merge_slow(60, 100_000); // ~6 s of task work
+    let (base, exts) = graphgen::split_incremental(&g, 2);
+    let run = c.submit_open(&base, None).unwrap();
+    let killer = std::thread::spawn(move || {
+        std::thread::sleep(std::time::Duration::from_millis(300));
+        victim.shutdown();
+    });
+    // Lands right around the kill + recovery window.
+    std::thread::sleep(std::time::Duration::from_millis(400));
+    let n_exts = exts.len();
+    for (i, batch) in exts.into_iter().enumerate() {
+        c.extend(run, batch, i + 1 == n_exts).unwrap();
+    }
+    let res = c.wait(run).expect("open run must survive the worker death");
+    killer.join().unwrap();
+    assert_eq!(res.n_tasks, 61);
+    let reports = srv.reports();
+    assert_eq!(reports.len(), 1);
+    assert!(reports[0].recoveries >= 1, "the death was absorbed by recovery: {reports:?}");
+    for w in &ws {
+        w.shutdown();
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn replica_ack_after_run_retirement_is_ignored_over_tcp() {
+    // Satellite: a replica-added confirmation landing after its run retired
+    // (or for a run that never existed) must be dropped silently — the
+    // server stays fully operational. A raw registered worker delivers the
+    // stale acks deterministically, then keeps answering assignments like
+    // a zero worker so later runs can still complete on the shared pool.
+    use rsds::protocol::{decode_msg, RunId, TaskFinishedInfo};
+    use rsds::taskgraph::TaskId;
+
+    let srv = server_replicated(2);
+    let addr = srv.addr.to_string();
+    let ws = workers(&addr, 2);
+    let mut client = Client::connect(&addr, "retire-race").unwrap();
+    let done = client.run_graph(&graphgen::merge(20)).unwrap();
+
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(std::time::Duration::from_secs(20))).unwrap();
+    write_frame(
+        &mut s,
+        &encode_msg(&Msg::RegisterWorker {
+            name: "late-acker".into(),
+            ncores: 1,
+            node: 0,
+            // No data address: replica placement skips this worker, so the
+            // real pool never pushes toward it.
+            data_addr: String::new(),
+        }),
+    )
+    .unwrap();
+    let welcome = decode_msg(&read_frame(&mut s).unwrap()).unwrap();
+    assert!(matches!(welcome, Msg::Welcome { .. }), "{:?}", welcome.op());
+    // Ack for the retired run, then for a run that never existed.
+    write_frame(&mut s, &encode_msg(&Msg::ReplicaAdded { run: done.run, task: TaskId(0) }))
+        .unwrap();
+    write_frame(
+        &mut s,
+        &encode_msg(&Msg::ReplicaAdded { run: RunId(u32::MAX), task: TaskId(0) }),
+    )
+    .unwrap();
+    let acker = std::thread::spawn(move || {
+        // Finish any assignment instantly; refuse steals (the task already
+        // "ran" here). Exits when the server closes the socket.
+        while let Ok(frame) = read_frame(&mut s) {
+            let Ok(msg) = decode_msg(&frame) else { break };
+            let reply = match msg {
+                Msg::ComputeTask { run, task, output_size, .. } => {
+                    Msg::TaskFinished(TaskFinishedInfo {
+                        run,
+                        task,
+                        nbytes: output_size,
+                        duration_us: 1,
+                    })
+                }
+                Msg::StealRequest { run, task } => Msg::StealResponse { run, task, ok: false },
+                _ => continue,
+            };
+            if write_frame(&mut s, &encode_msg(&reply)).is_err() {
+                break;
+            }
+        }
+    });
+    // Independent tasks only: an output "stored" on the ack-only worker is
+    // never fetched, so the run's completion doesn't depend on its
+    // (nonexistent) data plane.
+    let g = {
+        use rsds::taskgraph::{GraphBuilder, Payload};
+        let mut b = GraphBuilder::new();
+        for i in 0..20 {
+            b.add(format!("ind-{i}"), vec![], 1_000, 64, Payload::NoOp);
+        }
+        b.build("independent").expect("valid graph")
+    };
+    let res = client.run_graph(&g).expect("server must shrug off the stale acks");
+    assert_eq!(res.n_tasks, 20);
+    for w in &ws {
+        w.shutdown();
+    }
+    srv.shutdown();
+    acker.join().unwrap();
 }
 
 #[test]

@@ -51,6 +51,7 @@ fn compute_frame(run: u32, task: u32, priority: i64, addr: &str) -> Vec<u8> {
         }],
         priority,
         consumers: 1,
+        cores: 1,
     })
 }
 

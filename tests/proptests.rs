@@ -11,7 +11,7 @@ use rsds::protocol::{Msg, RunId, TaskFinishedInfo, TaskInputLoc};
 use rsds::scheduler::{self, Action, WorkerId, WorkerInfo};
 use rsds::server::{fairness, Dest, Origin, Reactor, SchedulerPool};
 use rsds::sim::{simulate, SimConfig};
-use rsds::taskgraph::{GraphBuilder, Payload, TaskGraph, TaskId};
+use rsds::taskgraph::{GraphBuilder, Payload, TaskGraph, TaskId, TaskSpec};
 use rsds::testing::{check, scaled_cases, PropConfig};
 use rsds::util::Rng;
 use std::collections::{HashMap, HashSet};
@@ -273,7 +273,7 @@ fn drive_reactor_interleaved(
     for (c, g) in graphs.iter().enumerate() {
         reactor.on_message(
             Origin::Client(c as u32),
-            Msg::SubmitGraph { graph: g.clone(), scheduler: None },
+            Msg::SubmitGraph { graph: g.clone(), scheduler: None, open: false },
             &mut out,
         );
     }
@@ -551,6 +551,195 @@ fn prop_replicated_kills_complete_under_random_scheduler() {
     });
 }
 
+// ---- incremental graph extensions (PR 9 tentpole) ----
+
+/// Submit a random graph's base *open*, then graft the remaining batches
+/// in at random points of the finish/steal schedule — including after the
+/// base has fully finished (an open run must idle, not retire). Queue
+/// parity holds after every reactor interaction, every task of the full
+/// graph executes exactly once, and the run completes only after the
+/// close.
+fn drive_reactor_extensions(sched_name: &str, rng: &mut Rng) -> Result<(), String> {
+    let graph = loop {
+        let g = random_graph(rng);
+        if g.len() >= 2 {
+            break g;
+        }
+    };
+    let n_batches = rng.range_usize(2, graph.len().min(6) + 1);
+    let (base, exts) = rsds::graphgen::split_incremental(&graph, n_batches);
+    let mut pending_exts: std::collections::VecDeque<Vec<TaskSpec>> = exts.into();
+    let n_workers = rng.range_usize(1, 5) as u32;
+    let pool = SchedulerPool::new(sched_name, rng.next_u64()).expect("known scheduler");
+    let mut reactor = Reactor::new(pool, RuntimeProfile::rust(), false);
+    let mut out: Vec<(Dest, Msg)> = Vec::new();
+    reactor.on_message(
+        Origin::Unregistered { conn: 0 },
+        Msg::RegisterClient { name: "c0".into() },
+        &mut out,
+    );
+    for i in 0..n_workers {
+        reactor.on_message(
+            Origin::Unregistered { conn: 100 + i as u64 },
+            Msg::RegisterWorker {
+                name: format!("w{i}"),
+                ncores: 1,
+                node: i / 4,
+                data_addr: String::new(),
+            },
+            &mut out,
+        );
+    }
+    out.clear();
+    reactor.on_message(
+        Origin::Client(0),
+        Msg::SubmitGraph { graph: base, scheduler: None, open: true },
+        &mut out,
+    );
+    let mut expected: HashMap<RunId, u64> = HashMap::new();
+    let mut inboxes: Vec<Vec<Msg>> = vec![Vec::new(); n_workers as usize];
+    let mut local_queue: Vec<HashSet<(RunId, TaskId)>> =
+        vec![HashSet::new(); n_workers as usize];
+    let mut executed: HashMap<(RunId, TaskId), u32> = HashMap::new();
+    let mut done: HashMap<RunId, u64> = HashMap::new();
+    let mut run_id: Option<RunId> = None;
+    let mut guard = 0u32;
+    loop {
+        guard += 1;
+        if guard > 200_000 {
+            return Err("extension interleaving failed to converge".into());
+        }
+        reactor.drain(&mut out);
+        for (dest, msg) in std::mem::take(&mut out) {
+            match (dest, msg) {
+                (Dest::Worker(w), msg) => inboxes[w.idx()].push(msg),
+                (_, Msg::GraphSubmitted { run, n_tasks }) => {
+                    // Base ack and every extension ack: the total grows.
+                    run_id = Some(run);
+                    expected.insert(run, n_tasks);
+                }
+                (Dest::Client(_), Msg::GraphDone { run, n_tasks, .. }) => {
+                    done.insert(run, n_tasks);
+                }
+                (Dest::Client(_), Msg::GraphFailed { reason, .. }) => {
+                    return Err(format!("graph failed: {reason}"));
+                }
+                (d, m) => return Err(format!("unexpected {:?} to {d:?}", m.op())),
+            }
+        }
+        let deliverable: Vec<usize> =
+            (0..inboxes.len()).filter(|&w| !inboxes[w].is_empty()).collect();
+        let runnable: Vec<(usize, (RunId, TaskId))> = local_queue
+            .iter()
+            .enumerate()
+            .flat_map(|(w, q)| q.iter().map(move |&k| (w, k)))
+            .collect();
+        let idle = deliverable.is_empty() && runnable.is_empty();
+        // Graft the next batch at a random point; forced once nothing else
+        // can make progress (that's the extend-after-base-finished case).
+        if !pending_exts.is_empty() && (idle || rng.chance(0.1)) {
+            let run = run_id.expect("base submission was acked");
+            let tasks = pending_exts.pop_front().expect("nonempty");
+            let last = pending_exts.is_empty();
+            reactor.on_message(
+                Origin::Client(0),
+                Msg::SubmitExtend { run, tasks, last },
+                &mut out,
+            );
+            check_queue_parity(&reactor, &expected)?;
+            continue;
+        }
+        if idle {
+            break;
+        }
+        let deliver = !deliverable.is_empty() && (runnable.is_empty() || rng.chance(0.55));
+        if deliver {
+            let w = *rng.choose(&deliverable);
+            let msg = inboxes[w].remove(0);
+            match msg {
+                // Consumer-delta re-pins target stored outputs; these model
+                // workers store nothing, so a pin is a no-op (exactly the
+                // real worker's behavior for an already-evicted key).
+                Msg::Welcome { .. } | Msg::PinData { .. } => {}
+                Msg::ComputeTask { run, task, .. } => {
+                    if !local_queue[w].insert((run, task)) {
+                        return Err(format!("{run}/{task} assigned to w{w} while queued"));
+                    }
+                }
+                Msg::StealRequest { run, task } => {
+                    let ok = local_queue[w].remove(&(run, task));
+                    reactor.on_message(
+                        Origin::Worker(WorkerId(w as u32)),
+                        Msg::StealResponse { run, task, ok },
+                        &mut out,
+                    );
+                    check_queue_parity(&reactor, &expected)?;
+                }
+                Msg::ReleaseRun { run } => {
+                    if let Some(k) = local_queue[w].iter().find(|(r, _)| *r == run) {
+                        return Err(format!("{run} released with {} still queued", k.1));
+                    }
+                }
+                other => return Err(format!("worker got {:?}", other.op())),
+            }
+        } else {
+            let &(w, (run, task)) = rng.choose(&runnable);
+            local_queue[w].remove(&(run, task));
+            let n = executed.entry((run, task)).or_insert(0);
+            *n += 1;
+            if *n > 1 {
+                return Err(format!("{run}/{task} executed {n} times"));
+            }
+            reactor.on_message(
+                Origin::Worker(WorkerId(w as u32)),
+                Msg::TaskFinished(TaskFinishedInfo { run, task, nbytes: 8, duration_us: 1 }),
+                &mut out,
+            );
+            check_queue_parity(&reactor, &expected)?;
+        }
+    }
+    let run = run_id.ok_or("base submission never acked")?;
+    let want = graph.len() as u64;
+    if expected.get(&run) != Some(&want) {
+        return Err(format!("final acked total {:?}, want {want}", expected.get(&run)));
+    }
+    if done.get(&run) != Some(&want) {
+        return Err(format!("run completed with {:?}, want {want} tasks", done.get(&run)));
+    }
+    if executed.len() as u64 != want || executed.values().any(|&n| n != 1) {
+        return Err(format!("{} distinct tasks executed, want {want}", executed.len()));
+    }
+    if reactor.live_runs() != 0 {
+        return Err(format!("{} runs left live after close + completion", reactor.live_runs()));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_reactor_ws_extension_interleavings_keep_models_in_sync() {
+    check("reactor ws extensions", PropConfig { cases: scaled_cases(25), seed: 1818 }, |rng| {
+        drive_reactor_extensions("ws", rng)
+    });
+}
+
+#[test]
+fn prop_reactor_dask_ws_extension_interleavings_keep_models_in_sync() {
+    check(
+        "reactor dask-ws extensions",
+        PropConfig { cases: scaled_cases(20), seed: 1919 },
+        |rng| drive_reactor_extensions("dask-ws", rng),
+    );
+}
+
+#[test]
+fn prop_reactor_random_extension_interleavings_complete() {
+    check(
+        "reactor random extensions",
+        PropConfig { cases: scaled_cases(20), seed: 2121 },
+        |rng| drive_reactor_extensions("random", rng),
+    );
+}
+
 #[test]
 fn prop_store_matches_refcount_oracle() {
     // Random insert/consume/lookup/restore/release/spill sequences against
@@ -690,6 +879,19 @@ fn prop_store_matches_refcount_oracle() {
             if backend.misuse_count() != 0 {
                 return Err(format!("step {step}: backend misuse (double free / bad slot)"));
             }
+            // Slot leak check (PR 9): every live backend slot must belong
+            // to a currently-spilled live key. Byte conservation alone
+            // can't catch a leaked zero-length slot — e.g. the abandoned-
+            // spill path forgetting to free the slot it wrote.
+            let spilled_keys =
+                model.keys().filter(|k| matches!(store.get(k), Lookup::Spilled)).count();
+            if backend.live_slots() != spilled_keys {
+                return Err(format!(
+                    "step {step}: backend holds {} slots but {spilled_keys} live keys \
+                     are spilled (slot leak)",
+                    backend.live_slots()
+                ));
+            }
             for (k, m) in &model {
                 if store.refcount(k) != Some(m.consumers) {
                     return Err(format!(
@@ -724,6 +926,9 @@ fn prop_store_matches_refcount_oracle() {
         }
         if backend.spilled_bytes() != 0 {
             return Err("release leaked spill slots".into());
+        }
+        if backend.live_slots() != 0 {
+            return Err(format!("release leaked {} backend slots", backend.live_slots()));
         }
         if backend.misuse_count() != 0 {
             return Err("backend misuse during teardown".into());
@@ -777,6 +982,7 @@ fn drive_fairness_bounded_progress(rng: &mut Rng) -> Result<(), String> {
         Msg::SubmitGraph {
             graph: graphgen::merge(rng.range_usize(60, 200)),
             scheduler: None,
+            open: false,
         },
         &mut out,
     );
@@ -786,6 +992,7 @@ fn drive_fairness_bounded_progress(rng: &mut Rng) -> Result<(), String> {
             Msg::SubmitGraph {
                 graph: graphgen::merge(rng.range_usize(2, 9)),
                 scheduler: None,
+                open: false,
             },
             &mut out,
         );
@@ -936,6 +1143,7 @@ fn drive_admission_interleaved(rng: &mut Rng) -> Result<(), String> {
             Msg::SubmitGraph {
                 graph: graphgen::merge(rng.range_usize(2, 20)),
                 scheduler: None,
+                open: false,
             },
             &mut out,
         );
@@ -1134,7 +1342,7 @@ fn random_msg(rng: &mut Rng) -> Msg {
     let task = TaskId(rng.next_u64() as u32);
     // Bit-shifted magnitudes hit fixint / u8 / u16 / u32 / u64 encodings.
     let wide = |rng: &mut Rng| rng.next_u64() >> (rng.gen_range(64) as u32);
-    match rng.gen_range(24) {
+    match rng.gen_range(26) {
         0 => Msg::RegisterClient { name: rand_str(rng, 40) },
         1 => Msg::RegisterWorker {
             name: rand_str(rng, 40),
@@ -1146,6 +1354,9 @@ fn random_msg(rng: &mut Rng) -> Msg {
         3 => Msg::SubmitGraph {
             graph: random_graph(rng),
             scheduler: if rng.chance(0.5) { Some(rand_str(rng, 12)) } else { None },
+            // False ~half the time: `open` is omitted on the wire when
+            // false, so both shapes must round-trip.
+            open: rng.chance(0.5),
         },
         4 => Msg::GraphSubmitted { run, n_tasks: wide(rng) },
         5 => Msg::GraphDone { run, makespan_us: wide(rng), n_tasks: wide(rng) },
@@ -1173,6 +1384,8 @@ fn random_msg(rng: &mut Rng) -> Msg {
                 priority: rng.next_u64() as i64,
                 // 0 (absent on the wire) ~quarter of the time.
                 consumers: rng.gen_range(4) as u32,
+                // 1 (absent on the wire) ~quarter of the time.
+                cores: rng.gen_range(4) as u32 + 1,
             }
         }
         9 => Msg::TaskFinished(TaskFinishedInfo {
@@ -1207,6 +1420,28 @@ fn random_msg(rng: &mut Rng) -> Msg {
         }
         21 => Msg::ReplicaAdded { run, task },
         22 => Msg::ReplicaDropped { run, task },
+        23 => {
+            // Ids must be dense from `base`: the wire format carries only
+            // the first id and the decoder re-derives the rest.
+            let base = rng.gen_range(100_000) as u32 + 1;
+            let n = rng.range_usize(0, 5);
+            let tasks: Vec<TaskSpec> = (0..n as u32)
+                .map(|i| TaskSpec {
+                    id: TaskId(base + i),
+                    key: rand_str(rng, 24),
+                    inputs: (0..rng.range_usize(0, 4))
+                        .map(|_| TaskId(rng.gen_range((base + i) as u64) as u32))
+                        .collect(),
+                    duration_us: wide(rng),
+                    output_size: wide(rng),
+                    payload: random_payload(rng),
+                    // 1 (absent on the wire) ~half the time.
+                    cores: rng.gen_range(2) as u32 * rng.gen_range(7) as u32 + 1,
+                })
+                .collect();
+            Msg::SubmitExtend { run, tasks, last: rng.chance(0.5) }
+        }
+        24 => Msg::PinData { run, task, consumers: rng.gen_range(4) as u32 + 1 },
         _ => {
             if rng.chance(0.5) {
                 Msg::Shutdown
@@ -1357,7 +1592,7 @@ fn prop_dispatch_byte_identity_over_random_graphs() {
             out.clear();
             r.on_message(
                 Origin::Client(0),
-                Msg::SubmitGraph { graph, scheduler: None },
+                Msg::SubmitGraph { graph, scheduler: None, open: false },
                 &mut out,
             );
             let mut sink =
@@ -1463,6 +1698,7 @@ fn prop_interned_queue_parity_with_owned_decode() {
                     inputs,
                     priority: (rng.gen_range(32) as i64) - 16, // dense: forces ties
                     consumers: rng.gen_range(4) as u32,
+                    cores: rng.gen_range(4) as u32 + 1,
                 });
             }
             // Truncation totality on the hot frame (any prefix errors).
@@ -1496,6 +1732,7 @@ fn prop_interned_queue_parity_with_owned_decode() {
                     inputs,
                     priority,
                     consumers,
+                    cores,
                 } = m
                 else {
                     unreachable!()
@@ -1514,6 +1751,7 @@ fn prop_interned_queue_parity_with_owned_decode() {
                     || p.duration_us != *duration_us
                     || p.output_size != *output_size
                     || p.consumers != *consumers
+                    || p.cores != *cores
                 {
                     return Err(format!("scalar fields diverged for {run}/{task}"));
                 }
