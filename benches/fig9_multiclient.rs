@@ -70,6 +70,7 @@ fn tcp_mean_aot(n_clients: usize, mix: &[&str], n_workers: usize) -> f64 {
                 ncores: 1,
                 node: 0,
                 memory_limit: None,
+                data_plane: Default::default(),
             })
             .expect("zero worker start")
         })
@@ -216,6 +217,7 @@ fn shard_throughput(shards: usize, n_clients: usize, spec: &str, n_workers: usiz
                 ncores: 1,
                 node: 0,
                 memory_limit: None,
+                data_plane: Default::default(),
             })
             .expect("zero worker start")
         })

@@ -1,0 +1,170 @@
+//! Worker↔worker data-plane throughput (PR 10) — pooled persistent peer
+//! links + batched pipelined gather vs the pre-PR-10 baseline
+//! (one TCP connect per fetched object, fetched sequentially).
+//!
+//! The workload is a wide fan-in: waves of cheap producers feeding one
+//! `MergeInputs` sink each, on two single-node workers under the
+//! work-stealing scheduler, so roughly half of every sink's inputs live
+//! on the peer worker. Per-object transfer setup is what the pooled data
+//! plane removes (one link + one `fetch-data-many` round trip per peer
+//! per gather instead of connect+request+reply per object), so tasks/s
+//! on this shape is the acceptance metric: pooled must be ≥ 2× baseline
+//! (full run; the quick CI smoke asserts ≥ 1.3× to absorb loopback
+//! noise on shared runners).
+//!
+//! Results are printed and emitted machine-readably to `BENCH_pr10.json`.
+//!
+//! Env knobs: `RSDS_BENCH_QUICK=1` shortens runs (CI smoke);
+//! `RSDS_BENCH_SECTION=dataplane` runs the (only) section explicitly.
+
+use std::time::Instant;
+
+use rsds::client::Client;
+use rsds::overhead::RuntimeProfile;
+use rsds::server::{serve, ServerConfig};
+use rsds::taskgraph::{GraphBuilder, Payload, TaskGraph};
+use rsds::worker::dataplane::DataPlaneConfig;
+use rsds::worker::{run_worker, WorkerConfig};
+
+struct Row {
+    mode: &'static str,
+    waves: u32,
+    width: u32,
+    object_bytes: u64,
+    n_tasks: u64,
+    wall_us: f64,
+}
+
+impl Row {
+    fn tasks_per_s(&self) -> f64 {
+        self.n_tasks as f64 / (self.wall_us / 1e6)
+    }
+}
+
+/// `waves` independent fan-ins: `width` cheap producers each emitting
+/// `bytes`, merged by one sink. Independent waves overlap across the two
+/// workers, so the run measures sustained gather throughput rather than
+/// a single cold fetch.
+fn fanin_graph(waves: u32, width: u32, bytes: u64) -> TaskGraph {
+    let mut b = GraphBuilder::new();
+    for w in 0..waves {
+        let ids: Vec<_> = (0..width)
+            .map(|i| b.add(format!("p{w}-{i}"), vec![], 100, bytes, Payload::NoOp))
+            .collect();
+        b.add(format!("sink{w}"), ids, 100, 64, Payload::MergeInputs);
+    }
+    b.build("dataplane-fanin").expect("valid graph")
+}
+
+/// One real-TCP run: server + two workers on distinct nodes, the fan-in
+/// graph, wall-clock from submit to result. `pooled = false` restores the
+/// connect-per-fetch, one-object-per-request baseline inside the same
+/// binary, so the two rows differ only in the data plane under test.
+fn measure(mode: &'static str, pooled: bool, waves: u32, width: u32, bytes: u64) -> Row {
+    let srv = serve(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        scheduler: "ws".into(),
+        seed: 2020,
+        profile: RuntimeProfile::rust(),
+        emulate: false,
+        ..ServerConfig::default()
+    })
+    .expect("server start");
+    let addr = srv.addr.to_string();
+    let dp = DataPlaneConfig { pooled, ..DataPlaneConfig::default() };
+    let workers: Vec<_> = (0..2u32)
+        .map(|i| {
+            run_worker(WorkerConfig {
+                server_addr: addr.clone(),
+                name: format!("dp-{mode}-w{i}"),
+                ncores: 2,
+                node: i,
+                memory_limit: None,
+                data_plane: dp.clone(),
+            })
+            .expect("worker start")
+        })
+        .collect();
+    let graph = fanin_graph(waves, width, bytes);
+    let mut client = Client::connect(&addr, "fig-dataplane").expect("client connect");
+    let t0 = Instant::now();
+    let res = client.run_graph(&graph).expect("fan-in run completes");
+    let wall_us = t0.elapsed().as_secs_f64() * 1e6;
+    assert_eq!(res.n_tasks, graph.len() as u64, "{mode}: all tasks must complete");
+    drop(client);
+    for w in workers {
+        w.shutdown();
+    }
+    srv.shutdown();
+    Row { mode, waves, width, object_bytes: bytes, n_tasks: res.n_tasks, wall_us }
+}
+
+fn write_bench_json(rows: &[Row], speedup: f64, quick: bool) {
+    let mut json = String::from("{\n");
+    json.push_str("  \"pr\": 10,\n");
+    json.push_str("  \"bench\": \"fig_dataplane\",\n");
+    json.push_str(&format!("  \"quick\": {quick},\n"));
+    json.push_str(&format!("  \"pooled_speedup\": {speedup:.3},\n"));
+    json.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"mode\": \"{}\", \"waves\": {}, \"width\": {}, \"object_bytes\": {}, \
+             \"n_tasks\": {}, \"wall_us\": {:.0}, \"tasks_per_s\": {:.1}}}{}\n",
+            r.mode,
+            r.waves,
+            r.width,
+            r.object_bytes,
+            r.n_tasks,
+            r.wall_us,
+            r.tasks_per_s(),
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_pr10.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_pr10.json (pooled speedup {speedup:.2}x)"),
+        Err(e) => eprintln!("could not write BENCH_pr10.json: {e}"),
+    }
+}
+
+fn dataplane_section(quick: bool) {
+    let (waves, width, bytes): (u32, u32, u64) =
+        if quick { (6, 32, 4 * 1024) } else { (16, 48, 8 * 1024) };
+    println!(
+        "== fig_dataplane: {waves} waves of {width}-wide fan-in, {bytes} B objects, \
+         2 workers / 2 nodes =="
+    );
+    println!("{:<10} {:>8} {:>12} {:>12}", "mode", "tasks", "wall ms", "tasks/s");
+    let mut rows = Vec::new();
+    for (mode, pooled) in [("baseline", false), ("pooled", true)] {
+        let row = measure(mode, pooled, waves, width, bytes);
+        println!(
+            "{:<10} {:>8} {:>12.1} {:>12.1}",
+            row.mode,
+            row.n_tasks,
+            row.wall_us / 1e3,
+            row.tasks_per_s()
+        );
+        rows.push(row);
+    }
+    let speedup = rows[1].tasks_per_s() / rows[0].tasks_per_s();
+    let floor = if quick { 1.3 } else { 2.0 };
+    println!(
+        "\npooled/baseline tasks/s: {:.2}x (gate: >= {floor}x{})",
+        speedup,
+        if quick { ", quick" } else { "" }
+    );
+    assert!(
+        speedup >= floor,
+        "pooled data plane must be >= {floor}x baseline tasks/s on wide fan-in, got {speedup:.2}x"
+    );
+    write_bench_json(&rows, speedup, quick);
+}
+
+fn main() {
+    let quick = std::env::var_os("RSDS_BENCH_QUICK").is_some();
+    let section = std::env::var("RSDS_BENCH_SECTION").unwrap_or_default();
+    if section.is_empty() || section == "dataplane" {
+        dataplane_section(quick);
+    }
+}

@@ -190,6 +190,7 @@ fn spill_run(quick: bool) -> SpillOutcome {
         ncores: 1,
         node: 0,
         memory_limit: Some(limit),
+        data_plane: Default::default(),
     })
     .expect("worker start");
     let graph = spill_graph(chunks, chunk_bytes);

@@ -18,16 +18,26 @@
 //! priority queue → pop (owned decode vs interned `TaskQueue`). It asserts
 //! 0 allocs/task on both warm paths and emits `BENCH_pr5.json`.
 //!
+//! The dataplane section (PR 10) covers the worker↔worker serve path:
+//! the old owned reply (clone the stored payload into `Msg::DataReply`,
+//! encode the whole message) vs the borrowed split encode the data
+//! server streams (head + `Arc` payload segment + tail into reused
+//! buffers), and the old connect-per-object fetch request loop vs one
+//! batched `fetch-data-many`. Both new paths must be allocation-free
+//! per object after warm-up — the PR 10 zero-copy gate. Emits
+//! `BENCH_pr10_micro.json`.
+//!
 //! Env knobs: `RSDS_BENCH_QUICK=1` shortens runs (CI smoke);
-//! `RSDS_BENCH_SECTION=codec|dispatch` runs one section only.
+//! `RSDS_BENCH_SECTION=codec|dispatch|dataplane` runs one section only.
 
 use rsds::bench::{bench, row, throughput, BenchConfig};
 use rsds::graphgen::merge;
 use rsds::msgpack::{decode, encode};
 use rsds::overhead::RuntimeProfile;
 use rsds::protocol::{
-    append_frame, append_frame_with, decode_msg, decode_msg_value, encode_msg, encode_msg_into,
-    encode_msg_value, ComputeTaskView, Msg, RunId, TaskFinishedInfo, TaskInputLoc,
+    append_frame, append_frame_with, decode_msg, decode_msg_value, encode_data_frame_head,
+    encode_data_frame_tail, encode_fetch_many_into, encode_msg, encode_msg_into, encode_msg_value,
+    ComputeTaskView, DataFrameParts, Msg, RunId, TaskFinishedInfo, TaskInputLoc,
 };
 use rsds::scheduler::{self, Action, WorkerId, WorkerInfo};
 use rsds::server::{ComputeDispatch, Dest, GraphRun, Origin, Reactor, ReplicaSet, SchedulerPool};
@@ -454,6 +464,112 @@ fn dispatch_section(cfg: BenchConfig) -> Vec<CodecRow> {
     rows
 }
 
+// ---------------------------------------------------------------------------
+// Dataplane micro (PR 10): the zero-copy serve-encode path, old-vs-new.
+//
+// Serve side: store hit → wire frame. Old = clone the stored payload out
+// of its Arc into an owned Msg::DataReply and encode the whole message
+// (the pre-PR10 `serve_data_conn`/`push_one` shape: one full payload copy
+// plus an output buffer per object). New = the split borrowed encode the
+// poll-driven data server streams: 8-byte length prefix + frame head into
+// a reused buffer, the payload segment as an Arc refcount bump, the tail
+// into a second reused buffer.
+//
+// Fetch side: gather request encode. Old = one owned Msg::FetchData per
+// object; new = a single batched fetch-data-many into a reused buffer.
+//
+// Both new paths must be allocation-free per object after warm-up — the
+// PR 10 acceptance gate, asserted below under the counting allocator.
+// ---------------------------------------------------------------------------
+
+fn dataplane_section(cfg: BenchConfig) -> Vec<CodecRow> {
+    let n: u64 = if std::env::var_os("RSDS_BENCH_QUICK").is_some() { 20_000 } else { 200_000 };
+    let mut rows = Vec::new();
+
+    let run = RunId(7);
+    let task = TaskId(12345);
+    let payload: std::sync::Arc<Vec<u8>> = std::sync::Arc::new(vec![0xAB; 64 * 1024]);
+
+    // Byte-identity of the split encode against the owned message, with
+    // the frame prefix stripped (checked once, outside the timed loops).
+    let owned_bytes = encode_msg(&Msg::DataReply {
+        run,
+        task,
+        data: payload.as_ref().clone(),
+    });
+    let parts = DataFrameParts { op: "data-reply", run, task, data_len: payload.len() };
+    let mut split = Vec::new();
+    encode_data_frame_head(&parts, &mut split);
+    split.extend_from_slice(&payload);
+    encode_data_frame_tail(&parts, &mut split);
+    assert_eq!(owned_bytes, split, "split serve encode must stay byte-identical");
+
+    // Reused per-connection buffers: the OutQueue steady state.
+    let mut head: Vec<u8> = Vec::new();
+    let mut tail: Vec<u8> = Vec::new();
+    rows.push(codec_pair(
+        cfg,
+        "serve: store hit -> reply frame",
+        n,
+        || {
+            let msg = Msg::DataReply {
+                run,
+                task,
+                data: std::hint::black_box(&payload).as_ref().clone(),
+            };
+            std::hint::black_box(encode_msg(&msg).len());
+        },
+        || {
+            let p = DataFrameParts {
+                op: "data-reply",
+                run,
+                task,
+                data_len: std::hint::black_box(&payload).len(),
+            };
+            head.clear();
+            head.extend_from_slice(&[0u8; 8]);
+            encode_data_frame_head(&p, &mut head);
+            tail.clear();
+            encode_data_frame_tail(&p, &mut tail);
+            let frame_len = (head.len() - 8 + payload.len() + tail.len()) as u64;
+            head[..8].copy_from_slice(&frame_len.to_le_bytes());
+            // The payload segment goes to the socket straight from the
+            // store's Arc — a refcount bump, never a copy.
+            let seg = payload.clone();
+            std::hint::black_box((head.len(), seg.len(), tail.len()));
+        },
+    ));
+
+    // A 16-object gather request to one peer.
+    let tasks: Vec<TaskId> = (0..16u32).map(TaskId).collect();
+    let mut req: Vec<u8> = Vec::new();
+    rows.push(codec_pair(
+        cfg,
+        "gather request: 16 objects -> wire",
+        n,
+        || {
+            for &t in std::hint::black_box(&tasks) {
+                std::hint::black_box(encode_msg(&Msg::FetchData { run, task: t }).len());
+            }
+        },
+        || {
+            req.clear();
+            encode_fetch_many_into(run, std::hint::black_box(&tasks), &mut req);
+            std::hint::black_box(req.len());
+        },
+    ));
+
+    // --- the PR 10 acceptance gate: 0 allocs/object after warm-up ---
+    for r in &rows {
+        assert_eq!(
+            r.new_allocs_per_msg, 0.0,
+            "{}: the zero-copy path must be allocation-free after warm-up",
+            r.name
+        );
+    }
+    rows
+}
+
 fn write_bench_json(path: &str, pr: u32, bench_name: &str, rows: &[CodecRow], quick: bool) {
     let geomean = (rows.iter().map(|r| r.speedup().ln()).sum::<f64>() / rows.len() as f64).exp();
     let mut json = String::from("{\n");
@@ -512,6 +628,13 @@ fn main() {
         let rows = dispatch_section(cfg);
         print_rows(&rows);
         write_bench_json("BENCH_pr5.json", 5, "dispatch_micro", &rows, quick);
+    }
+    // --- zero-copy serve encode + batched fetch (PR 10 tentpole gate) ---
+    if section.is_empty() || section == "dataplane" {
+        println!("\n== dataplane: zero-copy serve path (old vs new) ==");
+        let rows = dataplane_section(cfg);
+        print_rows(&rows);
+        write_bench_json("BENCH_pr10_micro.json", 10, "dataplane_micro", &rows, quick);
     }
     if !section.is_empty() {
         return;

@@ -50,6 +50,7 @@ fn run_cluster(graphs: &[TaskGraph], emulate_python: bool, n_workers: u32) -> an
                 ncores: 1,
                 node: i / 4,
                 memory_limit: None,
+                data_plane: Default::default(),
             })
         })
         .collect::<Result<_, _>>()?;

@@ -33,6 +33,7 @@ fn main() -> anyhow::Result<()> {
                 ncores: 1,
                 node: 0,
                 memory_limit: None,
+                data_plane: Default::default(),
             })
         })
         .collect::<Result<_, _>>()?;

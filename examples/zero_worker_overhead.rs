@@ -32,6 +32,7 @@ fn aot(scheduler: &str, emulate: bool, n_workers: u32, n_tasks: u32) -> anyhow::
                 ncores: 1,
                 node: i / 4,
                 memory_limit: None,
+                data_plane: Default::default(),
             })
         })
         .collect::<Result<_, _>>()?;

@@ -153,6 +153,7 @@ fn cmd_worker(args: &Args, zero: bool) -> Result<()> {
                 Some(s) => Some(s.parse().context("parse --memory-limit (bytes)")?),
                 None => None,
             },
+            data_plane: Default::default(),
         };
         if zero {
             let h = run_zero_worker(cfg)?;

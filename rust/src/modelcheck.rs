@@ -487,6 +487,43 @@ impl Condvar {
         Ok(guard)
     }
 
+    /// Timed wait, API-compatible with `std::sync::Condvar::wait_timeout`
+    /// (callers go through [`crate::sync`], which resolves to std outside
+    /// `--cfg loom`). Timeouts are not modelled: under an active [`model`]
+    /// run this behaves as an ordinary [`Condvar::wait`] — the explorer
+    /// covers the notify interleavings, and timeout-only liveness is out
+    /// of its scope, so modelled code must not rely on the timeout firing.
+    /// Outside a model run it is a std passthrough.
+    pub fn wait_timeout<'a, T: ?Sized>(
+        &self,
+        mut guard: MutexGuard<'a, T>,
+        dur: std::time::Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        if guard.model {
+            let never = WaitTimeoutResult { timed_out: false };
+            return match self.wait(guard) {
+                Ok(g) => Ok((g, never)),
+                Err(p) => Err(PoisonError::new((p.into_inner(), never))),
+            };
+        }
+        let std = guard.std.take().unwrap_or_else(|| unreachable!("guard taken"));
+        let lock = guard.lock;
+        drop(guard);
+        match self.inner.wait_timeout(std, dur) {
+            Ok((std, res)) => Ok((
+                MutexGuard { std: Some(std), lock, model: false },
+                WaitTimeoutResult { timed_out: res.timed_out() },
+            )),
+            Err(p) => {
+                let (std, res) = p.into_inner();
+                Err(PoisonError::new((
+                    MutexGuard { std: Some(std), lock, model: false },
+                    WaitTimeoutResult { timed_out: res.timed_out() },
+                )))
+            }
+        }
+    }
+
     pub fn notify_one(&self) {
         self.notify_all();
     }
@@ -497,6 +534,21 @@ impl Condvar {
         } else {
             self.inner.notify_all();
         }
+    }
+}
+
+/// Result of [`Condvar::wait_timeout`] — mirrors
+/// `std::sync::WaitTimeoutResult` (which has no public constructor, so
+/// the instrumented condvar needs its own). Under an active [`model`]
+/// run `timed_out` is always `false`; see [`Condvar::wait_timeout`].
+#[derive(Debug, Clone, Copy)]
+pub struct WaitTimeoutResult {
+    timed_out: bool,
+}
+
+impl WaitTimeoutResult {
+    pub fn timed_out(&self) -> bool {
+        self.timed_out
     }
 }
 

@@ -80,21 +80,32 @@ pub(crate) fn write_str(out: &mut Vec<u8>, s: &str) {
     out.extend_from_slice(b);
 }
 
-pub(crate) fn write_bin(out: &mut Vec<u8>, b: &[u8]) {
-    match b.len() {
+/// Emit only the bin *header* (format byte + length) for a payload of
+/// `len` bytes — the payload itself is supplied by the caller, possibly
+/// from a different buffer entirely. This is what lets the data plane
+/// stream a stored `Arc<Vec<u8>>` onto the wire without copying it into
+/// the encode buffer: header and trailing fields are encoded normally,
+/// the payload bytes travel as their own write. Byte-compatible with
+/// [`write_bin`] by construction (that function delegates here).
+pub(crate) fn write_bin_header(out: &mut Vec<u8>, len: usize) {
+    match len {
         0..=255 => {
             out.push(0xc4);
-            out.push(b.len() as u8);
+            out.push(len as u8);
         }
         256..=65535 => {
             out.push(0xc5);
-            out.extend_from_slice(&(b.len() as u16).to_be_bytes());
+            out.extend_from_slice(&(len as u16).to_be_bytes());
         }
         _ => {
             out.push(0xc6);
-            out.extend_from_slice(&(b.len() as u32).to_be_bytes());
+            out.extend_from_slice(&(len as u32).to_be_bytes());
         }
     }
+}
+
+pub(crate) fn write_bin(out: &mut Vec<u8>, b: &[u8]) {
+    write_bin_header(out, b.len());
     out.extend_from_slice(b);
 }
 
@@ -164,6 +175,13 @@ impl<'b> Writer<'b> {
 
     pub fn bin(&mut self, b: &[u8]) {
         write_bin(self.out, b);
+    }
+
+    /// Emit a bin header for `len` payload bytes without the payload.
+    /// The caller is responsible for supplying exactly `len` bytes next
+    /// (typically via a separate zero-copy write of a stored buffer).
+    pub fn bin_header(&mut self, len: usize) {
+        write_bin_header(self.out, len);
     }
 
     /// Declare a map of `n` key/value pairs; the caller then emits `n`
@@ -500,6 +518,24 @@ mod tests {
 
     fn enc(v: &Value) -> Vec<u8> {
         encode(v)
+    }
+
+    #[test]
+    fn bin_header_plus_payload_matches_bin() {
+        // The split header/payload emit must be byte-identical to the
+        // one-shot bin encoder at every length-format boundary.
+        for len in [0usize, 1, 255, 256, 65535, 65536, 100_000] {
+            let payload = vec![0xabu8; len];
+            let mut split = Vec::new();
+            {
+                let mut w = Writer::new(&mut split);
+                w.bin_header(len);
+            }
+            split.extend_from_slice(&payload);
+            let mut whole = Vec::new();
+            Writer::new(&mut whole).bin(&payload);
+            assert_eq!(split, whole, "len {len}");
+        }
     }
 
     #[test]

@@ -536,6 +536,7 @@ pub fn encode_msg_into(msg: &Msg, out: &mut Vec<u8>) {
             enc_run_task(out, "replica-dropped", *run, *task)
         }
         Msg::FetchData { run, task } => enc_run_task(out, "fetch-data", *run, *task),
+        Msg::FetchDataMany { run, tasks } => encode_fetch_many_into(*run, tasks, out),
         Msg::FetchFromServer { run, task } => {
             enc_run_task(out, "fetch-from-server", *run, *task)
         }
@@ -647,17 +648,74 @@ fn enc_run_task(out: &mut Vec<u8>, op: &str, run: RunId, task: TaskId) {
     w.uint(task.0 as u64);
 }
 
-fn enc_run_task_data(out: &mut Vec<u8>, op: &str, run: RunId, task: TaskId, data: &[u8]) {
+fn enc_run_task_data(out: &mut Vec<u8>, op: &'static str, run: RunId, task: TaskId, data: &[u8]) {
+    // Delegates to the split head/tail encoders so the zero-copy serve
+    // path is byte-identical to the owned encoding by construction.
+    let parts = DataFrameParts { op, run, task, data_len: data.len() };
+    encode_data_frame_head(&parts, out);
+    out.extend_from_slice(data);
+    encode_data_frame_tail(&parts, out);
+}
+
+/// The scalar fields of a data-bearing frame (`data-reply` / `put-data` /
+/// `data-to-server`), with the payload represented only by its length.
+/// The data plane uses the split [`encode_data_frame_head`] /
+/// [`encode_data_frame_tail`] encoders to frame a stored `Arc<Vec<u8>>`
+/// without ever copying the payload into an encode buffer: the head ends
+/// exactly at the bin payload boundary, the payload bytes are written (or
+/// queued) straight from the store's buffer, and the tail carries the
+/// remaining fields. Head + payload + tail is byte-identical to encoding
+/// the equivalent owned [`Msg`] — the owned arms delegate here, so the
+/// byte-identity suites cover both.
+#[derive(Debug, Clone, Copy)]
+pub struct DataFrameParts {
+    /// Wire op — one of `"data-reply"`, `"put-data"`, `"data-to-server"`.
+    pub op: &'static str,
+    pub run: RunId,
+    pub task: TaskId,
+    /// Payload length in bytes; the bin header is emitted for exactly
+    /// this many bytes, which the caller must supply between head and
+    /// tail.
+    pub data_len: usize,
+}
+
+/// Encode everything up to and including the bin header of the `data`
+/// field (keys stay sorted: `data` sorts first). Appends to `out`.
+pub fn encode_data_frame_head(parts: &DataFrameParts, out: &mut Vec<u8>) {
     let mut w = Writer::new(out);
     w.map_header(4);
     w.str("data");
-    w.bin(data);
+    w.bin_header(parts.data_len);
+}
+
+/// Encode the fields after the `data` payload (`op`, `run`, `task`).
+/// Appends to `out`.
+pub fn encode_data_frame_tail(parts: &DataFrameParts, out: &mut Vec<u8>) {
+    let mut w = Writer::new(out);
     w.str("op");
-    w.str(op);
+    w.str(parts.op);
+    w.str("run");
+    w.uint(parts.run.0 as u64);
+    w.str("task");
+    w.uint(parts.task.0 as u64);
+}
+
+/// Encode a `fetch-data-many` request from a borrowed task-id slice,
+/// appending to `out`. Byte-identical to encoding the equivalent owned
+/// [`Msg::FetchDataMany`] (the owned arm delegates here), so the gather
+/// issue path never builds an owned message per peer batch.
+pub fn encode_fetch_many_into(run: RunId, tasks: &[TaskId], out: &mut Vec<u8>) {
+    let mut w = Writer::new(out);
+    w.map_header(3);
+    w.str("op");
+    w.str("fetch-data-many");
     w.str("run");
     w.uint(run.0 as u64);
-    w.str("task");
-    w.uint(task.0 as u64);
+    w.str("tasks");
+    w.array_header(tasks.len());
+    for t in tasks {
+        w.uint(t.0 as u64);
+    }
 }
 
 // ---------- streaming decode (production path) ----------
@@ -964,6 +1022,30 @@ pub fn decode_msg(bytes: &[u8]) -> Result<Msg, CodecError> {
         "fetch-data" => {
             let (run, task) = dec_run_task(bytes)?;
             Ok(Msg::FetchData { run, task })
+        }
+        "fetch-data-many" => {
+            let mut r = Reader::new(bytes);
+            let n = r.map_header()?;
+            let (mut run, mut tasks) = (None, None);
+            for _ in 0..n {
+                match r.str()? {
+                    "run" => run = Some(r_uint(&mut r, "run")? as u32),
+                    "tasks" => {
+                        let k = r.array_header().map_err(|e| wrong(e, "tasks"))?;
+                        let mut v = Vec::with_capacity(k.min(1024));
+                        for _ in 0..k {
+                            v.push(TaskId(r_uint(&mut r, "tasks")? as u32));
+                        }
+                        tasks = Some(v);
+                    }
+                    _ => r.skip_value()?,
+                }
+            }
+            finish(&r, bytes)?;
+            Ok(Msg::FetchDataMany {
+                run: RunId(req(run, "run")?),
+                tasks: req(tasks, "tasks")?,
+            })
         }
         "fetch-from-server" => {
             let (run, task) = dec_run_task(bytes)?;
@@ -1441,6 +1523,13 @@ pub fn encode_msg_value(msg: &Msg) -> Vec<u8> {
             fields.push(("run", Value::from(run.0)));
             fields.push(("task", Value::from(task.0)));
         }
+        Msg::FetchDataMany { run, tasks } => {
+            fields.push(("run", Value::from(run.0)));
+            fields.push((
+                "tasks",
+                Value::Array(tasks.iter().map(|t| Value::from(t.0)).collect()),
+            ));
+        }
         Msg::DataReply { run, task, data } | Msg::DataToServer { run, task, data } => {
             fields.push(("run", Value::from(run.0)));
             fields.push(("task", Value::from(task.0)));
@@ -1601,6 +1690,17 @@ pub fn decode_msg_value(bytes: &[u8]) -> Result<Msg, CodecError> {
             ok: get_bool(&v, "ok")?,
         },
         "fetch-data" => Msg::FetchData { run: get_run(&v)?, task: get_task(&v, "task")? },
+        "fetch-data-many" => {
+            let tasks = get(&v, "tasks")?
+                .as_array()
+                .ok_or(CodecError::WrongType("tasks"))?
+                .iter()
+                .map(|t| {
+                    t.as_u64().map(|u| TaskId(u as u32)).ok_or(CodecError::WrongType("tasks"))
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            Msg::FetchDataMany { run: get_run(&v)?, tasks }
+        }
         "data-reply" => Msg::DataReply {
             run: get_run(&v)?,
             task: get_task(&v, "task")?,
@@ -1769,6 +1869,10 @@ mod tests {
             Msg::ReplicaAdded { run: RunId(5), task: TaskId(12) },
             Msg::ReplicaDropped { run: RunId(5), task: TaskId(12) },
             Msg::FetchData { run: RunId(4), task: TaskId(8) },
+            Msg::FetchDataMany { run: RunId(4), tasks: vec![] },
+            Msg::FetchDataMany { run: RunId(4), tasks: vec![TaskId(8), TaskId(2), TaskId(8)] },
+            // 16+ entries crosses the fixarray boundary (0xdc array16).
+            Msg::FetchDataMany { run: RunId(4), tasks: (0..20).map(TaskId).collect() },
             Msg::DataReply { run: RunId(4), task: TaskId(8), data: vec![1, 2, 3] },
             Msg::FetchFromServer { run: RunId(4), task: TaskId(8) },
             Msg::DataToServer { run: RunId(4), task: TaskId(8), data: vec![9; 100] },
@@ -1781,6 +1885,45 @@ mod tests {
     fn all_messages_roundtrip() {
         for m in all_test_messages() {
             rt(m);
+        }
+    }
+
+    #[test]
+    fn data_frame_head_payload_tail_matches_owned_encoding() {
+        // The zero-copy serve path emits head, payload, and tail as three
+        // separate writes; their concatenation must equal the owned
+        // encoding at every bin length-format boundary, for every
+        // data-bearing op.
+        for len in [0usize, 1, 255, 256, 65_535, 65_536] {
+            let data = vec![0x5au8; len];
+            for op in ["data-reply", "put-data", "data-to-server"] {
+                let (run, task) = (RunId(7), TaskId(90_000));
+                let owned = match op {
+                    "data-reply" => Msg::DataReply { run, task, data: data.clone() },
+                    "put-data" => Msg::PutData { run, task, data: data.clone() },
+                    _ => Msg::DataToServer { run, task, data: data.clone() },
+                };
+                let parts = DataFrameParts { op, run, task, data_len: len };
+                let mut split = Vec::new();
+                encode_data_frame_head(&parts, &mut split);
+                split.extend_from_slice(&data);
+                encode_data_frame_tail(&parts, &mut split);
+                assert_eq!(split, encode_msg(&owned), "{op} len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn fetch_many_borrowed_encoder_matches_owned() {
+        for n in [0usize, 1, 15, 16, 200] {
+            let tasks: Vec<TaskId> = (0..n as u32).map(|i| TaskId(i * 3)).collect();
+            let mut borrowed = Vec::new();
+            encode_fetch_many_into(RunId(2), &tasks, &mut borrowed);
+            assert_eq!(
+                borrowed,
+                encode_msg(&Msg::FetchDataMany { run: RunId(2), tasks }),
+                "n {n}"
+            );
         }
     }
 

@@ -200,6 +200,17 @@ pub enum Msg {
     // ---- data plane ----
     /// worker → worker: send me this task's output.
     FetchData { run: RunId, task: TaskId },
+    /// worker → worker: send me these tasks' outputs, coalesced. The
+    /// serving peer answers with one ordinary [`Msg::DataReply`] frame
+    /// per requested task, **in request order**, streamed back-to-back
+    /// on the same connection. There is no batched reply frame: keeping
+    /// replies as individual `data-reply` frames lets the server encode
+    /// each one zero-copy straight from its store and lets the client
+    /// start consuming the first object while later ones are still in
+    /// flight. A peer that cannot produce one of the requested objects
+    /// (even after its local grace period) closes the connection, which
+    /// the requester treats as a recoverable fetch failure.
+    FetchDataMany { run: RunId, tasks: Vec<TaskId> },
     /// worker → worker: the requested bytes.
     DataReply { run: RunId, task: TaskId, data: Vec<u8> },
     /// server → worker (zero-worker experiments): a client asks for data.
@@ -241,6 +252,7 @@ impl Msg {
             Msg::ReplicaAdded { .. } => "replica-added",
             Msg::ReplicaDropped { .. } => "replica-dropped",
             Msg::FetchData { .. } => "fetch-data",
+            Msg::FetchDataMany { .. } => "fetch-data-many",
             Msg::DataReply { .. } => "data-reply",
             Msg::FetchFromServer { .. } => "fetch-from-server",
             Msg::DataToServer { .. } => "data-to-server",

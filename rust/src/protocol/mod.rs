@@ -27,9 +27,10 @@ mod frame;
 mod messages;
 
 pub use codec::{
-    decode_msg, decode_msg_value, encode_compute_task_into, encode_msg, encode_msg_into,
+    decode_msg, decode_msg_value, encode_compute_task_into, encode_data_frame_head,
+    encode_data_frame_tail, encode_fetch_many_into, encode_msg, encode_msg_into,
     encode_msg_value, graph_from_value, graph_to_value, peek_op, CodecError, ComputeTaskParts,
-    ComputeTaskView, InputsIter, TaskInputRef,
+    ComputeTaskView, DataFrameParts, InputsIter, TaskInputRef,
 };
 pub use frame::{
     append_frame, append_frame_with, read_frame, write_frame, FrameAccumulator, FrameError,

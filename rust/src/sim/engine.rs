@@ -646,6 +646,13 @@ impl Engine {
             let mut fetch_done = fetch_start;
             let graph = Rc::clone(&self.runs[run as usize].graph);
             let spec = graph.task(task);
+            // Pooled-link parity (worker/dataplane.rs): one persistent
+            // link per peer and one coalesced fetch-data-many batch per
+            // gather means the per-fetch setup latency is charged once
+            // per distinct remote holder, not once per object. The Vec
+            // only allocates when a gather actually crosses nodes.
+            let pooled = self.cfg.network.pooled_links;
+            let mut latency_paid: Vec<WorkerId> = Vec::new();
             for &input in &spec.inputs {
                 let has = self.workers[wid.idx()].has.contains(&(run, input));
                 if has {
@@ -664,7 +671,15 @@ impl Engine {
                         bytes,
                         self.cfg.network.net_bw,
                     );
-                    wire_done + self.cfg.network.latency_us
+                    let latency = if pooled && latency_paid.contains(&holder) {
+                        0.0
+                    } else {
+                        if pooled {
+                            latency_paid.push(holder);
+                        }
+                        self.cfg.network.latency_us
+                    };
+                    wire_done + latency
                 };
                 self.workers[wid.idx()].has.insert((run, input));
                 fetch_done = fetch_done.max(arrive);

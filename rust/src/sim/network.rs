@@ -18,11 +18,18 @@ pub struct NetworkModel {
     pub net_bw: f64,
     /// Same-node effective bandwidth, bytes/µs (loopback, still pickled).
     pub local_bw: f64,
+    /// Model the PR 10 data plane: workers keep pooled persistent peer
+    /// links and coalesce a gather's fetches into one batched request per
+    /// source, so the per-fetch setup latency is paid once per *peer* per
+    /// gather, not once per object. `false` restores the connect-per-fetch
+    /// model (per-object latency) — the baseline `benches/fig_dataplane.rs`
+    /// measures against.
+    pub pooled_links: bool,
 }
 
 impl Default for NetworkModel {
     fn default() -> Self {
-        NetworkModel { latency_us: 100.0, net_bw: 1_000.0, local_bw: 800.0 }
+        NetworkModel { latency_us: 100.0, net_bw: 1_000.0, local_bw: 800.0, pooled_links: true }
     }
 }
 

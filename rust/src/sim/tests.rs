@@ -45,6 +45,38 @@ fn parallel_speedup_on_embarrassing_graph() {
 }
 
 #[test]
+fn pooled_links_charge_peer_latency_once_per_gather() {
+    // Wide fan-in across two nodes: the sink gathers many inputs held by
+    // the other node's worker. With pooled links (the PR 10 data plane)
+    // the per-fetch setup latency is paid once per holder per gather;
+    // the connect-per-fetch baseline pays it per object. Bytes moved are
+    // identical — only the setup cost differs.
+    let mut b = GraphBuilder::new();
+    let ids: Vec<_> = (0..32)
+        .map(|i| b.add(format!("p{i}"), vec![], 1_000, 10_000, Payload::BusyWait))
+        .collect();
+    b.add("sink", ids, 1_000, 64, Payload::MergeInputs);
+    let g = b.build("fanin").unwrap();
+
+    let mut base = cfg(2, RuntimeProfile::rust(), "ws");
+    base.workers_per_node = 1;
+    assert!(base.network.pooled_links, "pooled data plane is the default");
+    let pooled = simulate(&g, &base);
+    let mut unpooled_cfg = base.clone();
+    unpooled_cfg.network.pooled_links = false;
+    let unpooled = simulate(&g, &unpooled_cfg);
+
+    assert!(!pooled.timed_out && !unpooled.timed_out);
+    assert_eq!(pooled.bytes_transferred, unpooled.bytes_transferred);
+    assert!(
+        pooled.makespan_us + base.network.latency_us <= unpooled.makespan_us,
+        "batched gather must save at least one setup latency: {} vs {}",
+        pooled.makespan_us,
+        unpooled.makespan_us
+    );
+}
+
+#[test]
 fn dependencies_respected_chain() {
     // A chain cannot go faster than its critical path on any cluster.
     let mut b = GraphBuilder::new();

@@ -19,7 +19,7 @@
 //! narrows, never widens, the behaviours we test).
 
 #[cfg(not(loom))]
-pub use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard, WaitTimeoutResult};
 
 #[cfg(not(loom))]
 pub use std::sync::atomic;
@@ -31,4 +31,4 @@ pub use std::thread;
 pub use std::sync::Arc;
 
 #[cfg(loom)]
-pub use crate::modelcheck::{atomic, thread, Condvar, Mutex, MutexGuard};
+pub use crate::modelcheck::{atomic, thread, Condvar, Mutex, MutexGuard, WaitTimeoutResult};

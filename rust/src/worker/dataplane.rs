@@ -1,0 +1,1153 @@
+//! The worker↔worker data plane, client side: pooled peer links and the
+//! pipelined input gather (PR 10).
+//!
+//! Through PR 9 the data plane was the most naive path left in the
+//! worker: every input fetch opened a fresh TCP connection, the gather
+//! loop fetched inputs strictly sequentially while an executor slot sat
+//! idle, and a replica push cloned its whole payload to build an owned
+//! message. This module replaces all of that:
+//!
+//! - **[`LinkPool`]** keeps one long-lived connection per peer data
+//!   address (bounded, LRU-closed). Links are generation-tagged per
+//!   address: a dead-link eviction bumps the address's generation, so a
+//!   connection checked out before the eviction can never re-enter the
+//!   pool afterwards (`tests/loom_models.rs` model-checks this race).
+//!   Dead links feed the existing failover path — eviction plus a
+//!   per-input replica walk — so a stale pooled connection degrades to
+//!   exactly the recovery story a fresh connect failure has.
+//! - **[`DataPlane::gather`]** resolves a popped task's inputs in
+//!   phases: one pass classifies each input (local hit / remote / wait
+//!   for a local producer), remote inputs are coalesced into one
+//!   `fetch-data-many` request per peer and issued *up front* (bounded
+//!   in-flight window per peer), the local-producer waits then park on
+//!   the store condvar while the replies are already in flight, and
+//!   only then are the replies drained in order. Any per-peer failure
+//!   downgrades that peer's unreceived inputs to the per-input failover
+//!   walk, so batching never weakens recovery.
+//! - **Deadlines everywhere.** Connects, reads and writes all carry
+//!   timeouts ([`DataPlaneConfig`]); a hung-but-not-dead peer surfaces
+//!   as a recoverable `fetch-failed:` error instead of wedging an
+//!   executor thread forever.
+//! - **Zero-copy push.** [`DataPlane::push`] streams a `put-data` frame
+//!   directly from the store's `Arc<Vec<u8>>` via the split
+//!   [`encode_data_frame_head`]/[`encode_data_frame_tail`] encoders —
+//!   the payload is never copied into an encode buffer.
+//!
+//! `pooled: false` preserves the pre-PR-10 behavior — sequential
+//! connect-per-fetch — as the measured baseline of
+//! `benches/fig_dataplane.rs`.
+
+use super::queue::FetchPlan;
+use super::store::{DataKey, Lookup, ObjectStore};
+use crate::protocol::{
+    decode_msg, encode_data_frame_head, encode_data_frame_tail, encode_fetch_many_into,
+    encode_msg_into, DataFrameParts, FrameReader, Msg, RunId, FETCH_FAILED_PREFIX,
+    MAX_FRAME_LEN,
+};
+use crate::sync::{Arc, Mutex};
+use crate::taskgraph::TaskId;
+use std::collections::HashMap;
+use std::io::{self, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// Tunables for the data plane. The defaults are what `run_worker` uses;
+/// benches flip `pooled` off to measure the connect-per-fetch baseline.
+#[derive(Debug, Clone)]
+pub struct DataPlaneConfig {
+    /// Use the persistent link pool and batched gather. `false` restores
+    /// the pre-PR-10 behavior (fresh connection per fetch, sequential
+    /// gather) as a measurable baseline.
+    pub pooled: bool,
+    /// Maximum idle links kept across all peers; the least-recently-used
+    /// idle link is closed to admit a new one.
+    pub pool_capacity: usize,
+    /// Deadline for establishing a peer connection.
+    pub connect_timeout_ms: u64,
+    /// Deadline for each read/write on a peer link. A peer that accepts
+    /// but never answers (hung, not dead) trips this and flows into the
+    /// failover path.
+    pub io_timeout_ms: u64,
+    /// Objects per `fetch-data-many` request; the in-flight window per
+    /// peer is two requests (double-buffered), bounding how far requests
+    /// run ahead of reply draining.
+    pub max_batch: usize,
+    /// How long a gather waits for a *local* producer to land its insert
+    /// (steal race) before declaring the input lost. Event-driven — the
+    /// store condvar wakes the waiter on insert.
+    pub local_wait_ms: u64,
+    /// Server side: how long the data server parks a fetch for a key it
+    /// does not hold yet before dropping the connection (the producer's
+    /// local insert may trail the server's `who_has` advertisement).
+    pub serve_park_ms: u64,
+}
+
+impl Default for DataPlaneConfig {
+    fn default() -> DataPlaneConfig {
+        DataPlaneConfig {
+            pooled: true,
+            pool_capacity: 32,
+            connect_timeout_ms: 1_000,
+            io_timeout_ms: 5_000,
+            max_batch: 64,
+            local_wait_ms: 500,
+            serve_park_ms: 500,
+        }
+    }
+}
+
+// ---------- link pool ----------
+
+struct Idle<T> {
+    gen: u64,
+    last_used: u64,
+    link: T,
+}
+
+struct PoolInner<T> {
+    idle: Vec<Idle<T>>,
+    /// Per-address eviction generation. Bumped by [`LinkPool::evict`];
+    /// a check-in whose generation snapshot predates the bump is
+    /// rejected, so a link that was in flight across an eviction can
+    /// never re-enter the pool.
+    gens: HashMap<String, u64>,
+    clock: u64,
+}
+
+/// Bounded pool of idle peer links, shared by every executor thread.
+/// Generic over the link type so the checkout-vs-eviction race can be
+/// model-checked without sockets; `addr_of` projects a link to the peer
+/// address it is connected to.
+pub struct LinkPool<T> {
+    inner: Mutex<PoolInner<T>>,
+    capacity: usize,
+    addr_of: fn(&T) -> &str,
+}
+
+impl<T> LinkPool<T> {
+    pub fn new(capacity: usize, addr_of: fn(&T) -> &str) -> LinkPool<T> {
+        LinkPool {
+            inner: Mutex::new(PoolInner { idle: Vec::new(), gens: HashMap::new(), clock: 0 }),
+            capacity: capacity.max(1),
+            addr_of,
+        }
+    }
+
+    /// Take an idle link to `addr`, with its generation snapshot. Hot
+    /// path (registered in `xtask/hotpath.txt`): a warm checkout is a
+    /// linear scan under the pool lock, no allocation.
+    pub fn checkout(&self, addr: &str) -> Option<(T, u64)> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let mut found = None;
+        for i in 0..inner.idle.len() {
+            if (self.addr_of)(&inner.idle[i].link) == addr {
+                found = Some(i);
+                break;
+            }
+        }
+        let i = found?;
+        let idle = inner.idle.swap_remove(i);
+        Some((idle.link, idle.gen))
+    }
+
+    /// Current eviction generation of `addr` — the snapshot a freshly
+    /// connected link must carry so a concurrent eviction invalidates it.
+    pub fn generation(&self, addr: &str) -> u64 {
+        let inner = self.inner.lock().unwrap();
+        inner.gens.get(addr).copied().unwrap_or(0)
+    }
+
+    /// Return a link to the pool. Rejected (link dropped, returns
+    /// `false`) when `gen` is stale — an eviction of this address
+    /// happened while the link was out. Admitting over capacity closes
+    /// the least-recently-used idle link.
+    pub fn checkin(&self, gen: u64, link: T) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let current = {
+            let addr = (self.addr_of)(&link);
+            inner.gens.get(addr).copied().unwrap_or(0)
+        };
+        if gen != current {
+            return false;
+        }
+        if inner.idle.len() >= self.capacity {
+            let mut lru = 0;
+            for i in 1..inner.idle.len() {
+                if inner.idle[i].last_used < inner.idle[lru].last_used {
+                    lru = i;
+                }
+            }
+            inner.idle.swap_remove(lru);
+        }
+        inner.clock += 1;
+        let stamp = inner.clock;
+        inner.idle.push(Idle { gen, last_used: stamp, link });
+        true
+    }
+
+    /// Declare every link to `addr` dead: drop the idle ones and bump the
+    /// generation so in-flight ones cannot come back.
+    pub fn evict(&self, addr: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        let addr_of = self.addr_of;
+        inner.idle.retain(|l| addr_of(&l.link) != addr);
+        *inner.gens.entry(addr.to_string()).or_insert(0) += 1;
+    }
+
+    /// Number of idle links currently pooled (tests/metrics).
+    pub fn idle_len(&self) -> usize {
+        self.inner.lock().unwrap().idle.len()
+    }
+}
+
+// ---------- peer link ----------
+
+/// One established connection to a peer's data server, with its reused
+/// encode buffer and frame reader.
+struct PeerLink {
+    addr: String,
+    stream: TcpStream,
+    frames_in: FrameReader,
+    wbuf: Vec<u8>,
+}
+
+fn link_addr(l: &PeerLink) -> &str {
+    &l.addr
+}
+
+/// Back-patch the 8-byte length prefix at `buf[..8]`.
+fn finish_frame(buf: &mut Vec<u8>, payload_extra: usize) -> io::Result<()> {
+    let len = (buf.len() - 8 + payload_extra) as u64;
+    if len > MAX_FRAME_LEN {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "frame exceeds MAX_FRAME_LEN"));
+    }
+    buf[..8].copy_from_slice(&len.to_le_bytes());
+    Ok(())
+}
+
+impl PeerLink {
+    fn connect(addr: &str, cfg: &DataPlaneConfig) -> io::Result<PeerLink> {
+        let sockaddr = addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidInput, "unresolvable peer address"))?;
+        let stream =
+            TcpStream::connect_timeout(&sockaddr, Duration::from_millis(cfg.connect_timeout_ms))?;
+        stream.set_nodelay(true).ok();
+        let io_deadline = Some(Duration::from_millis(cfg.io_timeout_ms.max(1)));
+        stream.set_read_timeout(io_deadline).ok();
+        stream.set_write_timeout(io_deadline).ok();
+        Ok(PeerLink {
+            addr: addr.to_string(),
+            stream,
+            frames_in: FrameReader::new(),
+            wbuf: Vec::new(),
+        })
+    }
+
+    fn send_msg(&mut self, msg: &Msg) -> io::Result<()> {
+        self.wbuf.clear();
+        self.wbuf.extend_from_slice(&[0u8; 8]);
+        encode_msg_into(msg, &mut self.wbuf);
+        finish_frame(&mut self.wbuf, 0)?;
+        self.stream.write_all(&self.wbuf)
+    }
+
+    /// One coalesced `fetch-data-many` request from a borrowed id slice —
+    /// no owned message is built on the gather issue path.
+    fn send_fetch_many(&mut self, run: RunId, tasks: &[TaskId]) -> io::Result<()> {
+        self.wbuf.clear();
+        self.wbuf.extend_from_slice(&[0u8; 8]);
+        encode_fetch_many_into(run, tasks, &mut self.wbuf);
+        finish_frame(&mut self.wbuf, 0)?;
+        self.stream.write_all(&self.wbuf)
+    }
+
+    /// Stream a data-bearing frame whose payload is written straight from
+    /// the caller's buffer (the store's `Arc<Vec<u8>>` on the push path):
+    /// head and tail are encoded into the reused link buffer, the payload
+    /// bytes never are.
+    fn send_data_frame(
+        &mut self,
+        op: &'static str,
+        run: RunId,
+        task: TaskId,
+        payload: &[u8],
+    ) -> io::Result<()> {
+        let parts = DataFrameParts { op, run, task, data_len: payload.len() };
+        self.wbuf.clear();
+        self.wbuf.extend_from_slice(&[0u8; 8]);
+        encode_data_frame_head(&parts, &mut self.wbuf);
+        let head_end = self.wbuf.len();
+        encode_data_frame_tail(&parts, &mut self.wbuf);
+        finish_frame(&mut self.wbuf, payload.len())?;
+        self.stream.write_all(&self.wbuf[..head_end])?;
+        self.stream.write_all(payload)?;
+        self.stream.write_all(&self.wbuf[head_end..])
+    }
+}
+
+// ---------- gather scratch ----------
+
+/// Per-peer batch built during classification. `rep` is the
+/// `(input index, replica index)` whose address names the peer; `idxs`
+/// and `tasks` are the member inputs in plan order.
+#[derive(Default)]
+struct PeerGroup {
+    rep: (usize, usize),
+    idxs: Vec<usize>,
+    tasks: Vec<TaskId>,
+    link: Option<(PeerLink, u64)>,
+    /// Objects requested so far (window bookkeeping).
+    sent: usize,
+    /// Objects received so far.
+    received: usize,
+}
+
+/// Reusable per-executor gather state: retained buffers, so a warm
+/// gather allocates only the payload `Arc`s themselves.
+#[derive(Default)]
+pub struct GatherScratch {
+    /// Gathered inputs in plan order — valid after a successful
+    /// [`DataPlane::gather`], consumed by the executor.
+    pub inputs: Vec<Arc<Vec<u8>>>,
+    /// Input tasks whose local copy self-evicted during this gather's
+    /// `consume_once`; the caller owes the server one `replica-dropped`
+    /// per entry.
+    pub dropped: Vec<TaskId>,
+    slots: Vec<Option<Arc<Vec<u8>>>>,
+    groups: Vec<PeerGroup>,
+    n_groups: usize,
+    /// Inputs with no remote source: wait for the local producer.
+    waits: Vec<usize>,
+    /// Inputs downgraded to the per-input failover walk.
+    retries: Vec<usize>,
+}
+
+fn resolve_addr<'p>(plan: &'p FetchPlan, rep: (usize, usize)) -> &'p str {
+    if rep.1 == 0 {
+        plan.input(rep.0).2
+    } else {
+        plan.input_alt(rep.0, rep.1 - 1)
+    }
+}
+
+/// First usable replica of input `i`, in rotation order. The start index
+/// rotates with the consuming task id so the many consumers of one hot
+/// output spread across its copies (same discipline as the failover
+/// walk). Empty addresses (local placement) are skipped.
+fn first_candidate<'p>(
+    plan: &'p FetchPlan,
+    i: usize,
+    consumer: TaskId,
+) -> Option<(usize, &'p str)> {
+    let n = 1 + plan.n_alts(i);
+    let start = consumer.0 as usize % n;
+    for j in 0..n {
+        let idx = (start + j) % n;
+        let addr = if idx == 0 { plan.input(i).2 } else { plan.input_alt(i, idx - 1) };
+        if !addr.is_empty() {
+            return Some((idx, addr));
+        }
+    }
+    None
+}
+
+impl GatherScratch {
+    pub fn new() -> GatherScratch {
+        GatherScratch::default()
+    }
+
+    fn reset(&mut self, n_inputs: usize) {
+        self.inputs.clear();
+        self.dropped.clear();
+        self.slots.clear();
+        self.slots.resize(n_inputs, None);
+        self.waits.clear();
+        self.retries.clear();
+        for g in &mut self.groups {
+            // A link surviving here means the previous gather errored out
+            // mid-flight; dropping it closes the socket.
+            g.link = None;
+        }
+        self.n_groups = 0;
+    }
+
+    /// Index of the group whose peer address is `addr`, creating (or
+    /// reusing a retained) group if none matches yet.
+    fn group_for(&mut self, plan: &FetchPlan, rep: (usize, usize), addr: &str) -> usize {
+        for k in 0..self.n_groups {
+            if resolve_addr(plan, self.groups[k].rep) == addr {
+                return k;
+            }
+        }
+        if self.n_groups == self.groups.len() {
+            self.groups.push(PeerGroup::default());
+        }
+        let k = self.n_groups;
+        self.n_groups += 1;
+        let g = &mut self.groups[k];
+        g.rep = rep;
+        g.idxs.clear();
+        g.tasks.clear();
+        g.link = None;
+        g.sent = 0;
+        g.received = 0;
+        k
+    }
+
+    /// Downgrade a group's unreceived inputs to the failover walk and
+    /// surrender its link (the caller evicts the address and drops it).
+    fn fail_group(&mut self, k: usize) -> Option<PeerLink> {
+        let g = &mut self.groups[k];
+        for j in g.received..g.idxs.len() {
+            self.retries.push(g.idxs[j]);
+        }
+        g.link.take().map(|(l, _)| l)
+    }
+
+    fn drop_links(&mut self) {
+        for k in 0..self.n_groups {
+            self.groups[k].link = None;
+        }
+    }
+}
+
+// ---------- data plane ----------
+
+/// Store lookup that transparently restores a spilled entry (and
+/// rebalances the budget afterwards). `None` = genuinely absent.
+pub(crate) fn lookup_restoring(store: &ObjectStore, key: &DataKey) -> Option<Arc<Vec<u8>>> {
+    match store.get(key) {
+        Lookup::Hit(d) => Some(d),
+        Lookup::Spilled => {
+            let restored = store.restore(key);
+            store.maybe_spill();
+            restored
+        }
+        Lookup::Miss => None,
+    }
+}
+
+/// The worker's data-plane client: the link pool plus the gather and
+/// push entry points. One per worker, shared by all executor threads and
+/// the replica pusher.
+pub struct DataPlane {
+    cfg: DataPlaneConfig,
+    pool: LinkPool<PeerLink>,
+}
+
+impl DataPlane {
+    pub fn new(cfg: DataPlaneConfig) -> DataPlane {
+        let capacity = cfg.pool_capacity;
+        DataPlane { pool: LinkPool::new(capacity, link_addr), cfg }
+    }
+
+    pub fn config(&self) -> &DataPlaneConfig {
+        &self.cfg
+    }
+
+    fn acquire(&self, addr: &str) -> io::Result<(PeerLink, u64)> {
+        if let Some(out) = self.pool.checkout(addr) {
+            return Ok(out);
+        }
+        // Generation snapshot *before* the connect: an eviction racing
+        // the connect invalidates this link conservatively.
+        let gen = self.pool.generation(addr);
+        let link = PeerLink::connect(addr, &self.cfg)?;
+        Ok((link, gen))
+    }
+
+    /// Gather every input of `plan` into `scratch.inputs` (plan order),
+    /// recording each input's exactly-once consumption against
+    /// `consumer`. On success `scratch.dropped` lists the inputs whose
+    /// local copy self-evicted (the caller owes `replica-dropped`s).
+    /// Errors carry the recoverable `fetch-failed:` prefix where every
+    /// source of some input was unreachable.
+    pub fn gather(
+        &self,
+        store: &ObjectStore,
+        run: RunId,
+        consumer: TaskId,
+        plan: &FetchPlan,
+        scratch: &mut GatherScratch,
+    ) -> Result<(), String> {
+        scratch.reset(plan.n_inputs());
+        self.classify(store, run, consumer, plan, scratch);
+        if self.cfg.pooled {
+            self.issue(run, plan, scratch);
+        } else {
+            // Baseline: every remote input walks the sequential
+            // connect-per-fetch failover path.
+            for k in 0..scratch.n_groups {
+                let _ = scratch.fail_group(k);
+            }
+        }
+        let result = self.gather_finish(store, run, consumer, plan, scratch);
+        if result.is_err() {
+            scratch.drop_links();
+        }
+        result
+    }
+
+    fn gather_finish(
+        &self,
+        store: &ObjectStore,
+        run: RunId,
+        consumer: TaskId,
+        plan: &FetchPlan,
+        scratch: &mut GatherScratch,
+    ) -> Result<(), String> {
+        // Local-producer waits overlap the in-flight remote replies: the
+        // requests are already on the wire, so parking here costs the
+        // remote path nothing.
+        self.resolve_local_waits(store, run, plan, scratch)?;
+        if self.cfg.pooled {
+            self.read_replies(store, run, scratch);
+        }
+        self.retry_failover(store, run, consumer, plan, scratch)?;
+        // Every input resolved: record the consumptions and hand the
+        // payloads over in plan order.
+        for i in 0..plan.n_inputs() {
+            let (task, _nbytes, _addr) = plan.input(i);
+            if store.consume_once(&(run, task), consumer) {
+                scratch.dropped.push(task);
+            }
+            match scratch.slots[i].take() {
+                Some(d) => scratch.inputs.push(d),
+                None => {
+                    return Err(format!(
+                        "{FETCH_FAILED_PREFIX}input {} for {} missing after gather",
+                        task,
+                        plan.key()
+                    ))
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// One pass over the plan: local hits fill their slot, remote inputs
+    /// join their peer's batch, sourceless misses queue for the local
+    /// producer wait. Hot path (registered in `xtask/hotpath.txt`): a
+    /// warm all-local classify allocates nothing.
+    fn classify(
+        &self,
+        store: &ObjectStore,
+        run: RunId,
+        consumer: TaskId,
+        plan: &FetchPlan,
+        scratch: &mut GatherScratch,
+    ) {
+        for i in 0..plan.n_inputs() {
+            let (task, _nbytes, _addr) = plan.input(i);
+            if let Some(d) = lookup_restoring(store, &(run, task)) {
+                scratch.slots[i] = Some(d);
+                continue;
+            }
+            match first_candidate(plan, i, consumer) {
+                Some((rep_idx, addr)) => {
+                    let k = scratch.group_for(plan, (i, rep_idx), addr);
+                    let g = &mut scratch.groups[k];
+                    g.idxs.push(i);
+                    g.tasks.push(task);
+                }
+                None => scratch.waits.push(i),
+            }
+        }
+    }
+
+    /// Acquire one link per peer group and put the initial request
+    /// window on the wire for *all* groups before any reply is read —
+    /// every peer starts serving concurrently. Failures downgrade the
+    /// group to the failover walk.
+    fn issue(&self, run: RunId, plan: &FetchPlan, scratch: &mut GatherScratch) {
+        for k in 0..scratch.n_groups {
+            let rep = scratch.groups[k].rep;
+            let addr = resolve_addr(plan, rep);
+            match self.acquire(addr) {
+                Ok((link, gen)) => {
+                    let g = &mut scratch.groups[k];
+                    g.link = Some((link, gen));
+                    if Self::top_up(g, run, self.cfg.max_batch).is_err() {
+                        if let Some(link) = scratch.fail_group(k) {
+                            self.pool.evict(&link.addr);
+                        }
+                    }
+                }
+                Err(e) => {
+                    log::debug!("worker: connect {addr} for batched fetch failed: {e}");
+                    let _ = scratch.fail_group(k);
+                }
+            }
+        }
+    }
+
+    /// Keep the peer's request window full: at most two
+    /// `fetch-data-many` requests (2 × `max_batch` objects) ahead of the
+    /// replies drained so far.
+    fn top_up(g: &mut PeerGroup, run: RunId, max_batch: usize) -> io::Result<()> {
+        let total = g.tasks.len();
+        let batch = max_batch.max(1);
+        let window = batch * 2;
+        while g.sent < total && g.sent - g.received < window {
+            let end = (g.sent + batch).min(total);
+            match g.link.as_mut() {
+                Some((link, _)) => link.send_fetch_many(run, &g.tasks[g.sent..end])?,
+                None => return Ok(()),
+            }
+            g.sent = end;
+        }
+        Ok(())
+    }
+
+    /// Drain each group's replies in request order, topping up the
+    /// window as objects land. A failure mid-group downgrades the
+    /// *unreceived* remainder to the failover walk — objects already
+    /// received stay gathered.
+    fn read_replies(&self, store: &ObjectStore, run: RunId, scratch: &mut GatherScratch) {
+        for k in 0..scratch.n_groups {
+            if scratch.groups[k].link.is_none() {
+                continue;
+            }
+            let mut failed = false;
+            while scratch.groups[k].received < scratch.groups[k].idxs.len() {
+                let step = {
+                    let g = &mut scratch.groups[k];
+                    if Self::top_up(g, run, self.cfg.max_batch).is_err() {
+                        None
+                    } else {
+                        let expect = g.tasks[g.received];
+                        let slot_idx = g.idxs[g.received];
+                        match g.link.as_mut() {
+                            Some((link, _)) => match Self::read_reply(link, run, expect) {
+                                Ok(data) => {
+                                    g.received += 1;
+                                    Some((slot_idx, expect, data))
+                                }
+                                Err(e) => {
+                                    log::debug!(
+                                        "worker: batched fetch from {} failed: {e}",
+                                        link.addr
+                                    );
+                                    None
+                                }
+                            },
+                            None => None,
+                        }
+                    }
+                };
+                match step {
+                    Some((slot_idx, task, data)) => {
+                        let arc = Arc::new(data);
+                        // Passive fetch cache: pinned (release-run
+                        // reclaims it) and deliberately *not* advertised
+                        // to the server — who_has only lists copies the
+                        // server ordered or was told about, so recovery
+                        // never counts on this one.
+                        store.insert((run, task), arc.clone(), 0);
+                        store.maybe_spill();
+                        scratch.slots[slot_idx] = Some(arc);
+                    }
+                    None => {
+                        failed = true;
+                        break;
+                    }
+                }
+            }
+            if failed {
+                if let Some(link) = scratch.fail_group(k) {
+                    self.pool.evict(&link.addr);
+                }
+            } else if let Some((link, gen)) = scratch.groups[k].link.take() {
+                let _ = self.pool.checkin(gen, link);
+            }
+        }
+    }
+
+    fn read_reply(link: &mut PeerLink, run: RunId, expect: TaskId) -> Result<Vec<u8>, String> {
+        let bytes = link
+            .frames_in
+            .read(&mut link.stream)
+            .map_err(|e| e.to_string())?;
+        match decode_msg(bytes) {
+            Ok(Msg::DataReply { run: r, task: t, data }) if r == run && t == expect => Ok(data),
+            Ok(other) => Err(format!("unexpected data reply {:?}", other.op())),
+            Err(e) => Err(e.to_string()),
+        }
+    }
+
+    fn resolve_local_waits(
+        &self,
+        store: &ObjectStore,
+        run: RunId,
+        plan: &FetchPlan,
+        scratch: &mut GatherScratch,
+    ) -> Result<(), String> {
+        for wi in 0..scratch.waits.len() {
+            let i = scratch.waits[wi];
+            let (task, _nbytes, _addr) = plan.input(i);
+            let key = (run, task);
+            let found =
+                match store.wait_resident(&key, Duration::from_millis(self.cfg.local_wait_ms)) {
+                    Lookup::Hit(d) => Some(d),
+                    Lookup::Spilled => {
+                        let restored = store.restore(&key);
+                        store.maybe_spill();
+                        restored
+                    }
+                    Lookup::Miss => None,
+                };
+            match found {
+                Some(d) => scratch.slots[i] = Some(d),
+                None => {
+                    return Err(format!(
+                        "{FETCH_FAILED_PREFIX}input {} for {} never arrived",
+                        task,
+                        plan.key()
+                    ))
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn retry_failover(
+        &self,
+        store: &ObjectStore,
+        run: RunId,
+        consumer: TaskId,
+        plan: &FetchPlan,
+        scratch: &mut GatherScratch,
+    ) -> Result<(), String> {
+        for ri in 0..scratch.retries.len() {
+            let i = scratch.retries[ri];
+            if scratch.slots[i].is_some() {
+                continue;
+            }
+            let (task, _nbytes, _addr) = plan.input(i);
+            let data = self.fetch_with_failover(run, consumer, plan, i)?;
+            let arc = Arc::new(data);
+            store.insert((run, task), arc.clone(), 0);
+            store.maybe_spill();
+            scratch.slots[i] = Some(arc);
+        }
+        Ok(())
+    }
+
+    /// Fetch one input, walking the primary plus every known replica
+    /// address before giving up with the recoverable `fetch-failed:`
+    /// error. The starting replica rotates with the consuming task id.
+    fn fetch_with_failover(
+        &self,
+        run: RunId,
+        consumer: TaskId,
+        plan: &FetchPlan,
+        i: usize,
+    ) -> Result<Vec<u8>, String> {
+        let (task, _nbytes, primary) = plan.input(i);
+        let n = 1 + plan.n_alts(i);
+        let start = consumer.0 as usize % n;
+        let mut last_err: Option<String> = None;
+        for j in 0..n {
+            let idx = (start + j) % n;
+            let addr = if idx == 0 { primary } else { plan.input_alt(i, idx - 1) };
+            if addr.is_empty() {
+                continue;
+            }
+            match self.fetch_one(addr, run, task) {
+                Ok(d) => return Ok(d),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        let cause = last_err.unwrap_or_else(|| "no usable source address".to_string());
+        Err(format!(
+            "{FETCH_FAILED_PREFIX}{}/{} unreachable via {} source(s): {}",
+            run, task, n, cause
+        ))
+    }
+
+    /// Fetch one object from one peer. Pooled mode checks a link out of
+    /// the pool (connecting if none is idle) and returns it on success;
+    /// any failure evicts the address so the pool never resells a dead
+    /// link.
+    pub fn fetch_one(&self, addr: &str, run: RunId, task: TaskId) -> Result<Vec<u8>, String> {
+        if !self.cfg.pooled {
+            let mut link = PeerLink::connect(addr, &self.cfg).map_err(|e| e.to_string())?;
+            return Self::fetch_on_link(&mut link, run, task);
+        }
+        let (mut link, gen) = self.acquire(addr).map_err(|e| e.to_string())?;
+        match Self::fetch_on_link(&mut link, run, task) {
+            Ok(d) => {
+                let _ = self.pool.checkin(gen, link);
+                Ok(d)
+            }
+            Err(e) => {
+                self.pool.evict(addr);
+                Err(e)
+            }
+        }
+    }
+
+    fn fetch_on_link(link: &mut PeerLink, run: RunId, task: TaskId) -> Result<Vec<u8>, String> {
+        link.send_msg(&Msg::FetchData { run, task }).map_err(|e| e.to_string())?;
+        Self::read_reply(link, run, task)
+    }
+
+    /// Push one stored object to a peer (`put-data`), streaming the
+    /// payload zero-copy from its `Arc`. Best-effort like the rest of
+    /// replication: the caller logs and skips unreachable targets.
+    pub fn push(&self, addr: &str, run: RunId, task: TaskId, bytes: &Arc<Vec<u8>>) -> Result<(), String> {
+        if !self.cfg.pooled {
+            let mut link = PeerLink::connect(addr, &self.cfg).map_err(|e| e.to_string())?;
+            return link
+                .send_data_frame("put-data", run, task, bytes.as_slice())
+                .map_err(|e| e.to_string());
+        }
+        let (mut link, gen) = self.acquire(addr).map_err(|e| e.to_string())?;
+        match link.send_data_frame("put-data", run, task, bytes.as_slice()) {
+            Ok(()) => {
+                let _ = self.pool.checkin(gen, link);
+                Ok(())
+            }
+            Err(e) => {
+                self.pool.evict(addr);
+                Err(e.to_string())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::{encode_msg, ComputeTaskView, FrameWriter, TaskInputLoc};
+    use crate::taskgraph::Payload;
+    use crate::worker::queue::{PoppedTask, TaskQueue};
+    use crate::worker::spill::MemSpill;
+    use std::net::TcpListener;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::thread;
+    use std::time::Instant;
+
+    fn store() -> ObjectStore {
+        ObjectStore::new(None, Arc::new(MemSpill::new()))
+    }
+
+    fn key(run: u32, task: u32) -> DataKey {
+        (RunId(run), TaskId(task))
+    }
+
+    fn reply_one(
+        out: &mut FrameWriter,
+        stream: &mut TcpStream,
+        objects: &HashMap<DataKey, Vec<u8>>,
+        run: RunId,
+        task: TaskId,
+    ) -> bool {
+        match objects.get(&(run, task)) {
+            Some(d) => out
+                .send(stream, &Msg::DataReply { run, task, data: d.clone() })
+                .is_ok(),
+            None => false,
+        }
+    }
+
+    fn serve_fake(mut stream: TcpStream, objects: HashMap<DataKey, Vec<u8>>) {
+        let mut frames = FrameReader::new();
+        let mut out = FrameWriter::new();
+        loop {
+            let msg = match frames.read(&mut stream) {
+                Ok(bytes) => match decode_msg(bytes) {
+                    Ok(m) => m,
+                    Err(_) => return,
+                },
+                Err(_) => return,
+            };
+            match msg {
+                Msg::FetchData { run, task } => {
+                    if !reply_one(&mut out, &mut stream, &objects, run, task) {
+                        return;
+                    }
+                }
+                Msg::FetchDataMany { run, tasks } => {
+                    for task in tasks {
+                        if !reply_one(&mut out, &mut stream, &objects, run, task) {
+                            return;
+                        }
+                    }
+                }
+                _ => return,
+            }
+        }
+    }
+
+    /// A minimal in-test data server: serves `fetch-data` and
+    /// `fetch-data-many` from a fixed map, counts accepted connections.
+    fn fake_peer(objects: HashMap<DataKey, Vec<u8>>) -> (String, Arc<AtomicUsize>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let accepts = Arc::new(AtomicUsize::new(0));
+        let counter = accepts.clone();
+        thread::spawn(move || {
+            for conn in listener.incoming() {
+                let Ok(stream) = conn else { break };
+                counter.fetch_add(1, Ordering::SeqCst);
+                let objects = objects.clone();
+                thread::spawn(move || serve_fake(stream, objects));
+            }
+        });
+        (addr, accepts)
+    }
+
+    /// Build a real `FetchPlan` through the production enqueue/pop path.
+    /// `inputs` = (input task id, primary addr, alt addrs); all run ids
+    /// equal `run`, all sizes 4 bytes.
+    fn pop_plan(
+        run: u32,
+        task: u32,
+        inputs: Vec<(u32, &str, Vec<&str>)>,
+    ) -> (PoppedTask, FetchPlan) {
+        let bytes = encode_msg(&Msg::ComputeTask {
+            run: RunId(run),
+            task: TaskId(task),
+            key: format!("k-{run}-{task}"),
+            payload: Payload::BusyWait,
+            duration_us: 1,
+            output_size: 8,
+            inputs: inputs
+                .into_iter()
+                .map(|(t, a, alts)| TaskInputLoc {
+                    task: TaskId(t),
+                    addr: a.into(),
+                    alts: alts.into_iter().map(String::from).collect(),
+                    nbytes: 4,
+                })
+                .collect(),
+            priority: 0,
+            consumers: 1,
+            cores: 1,
+        });
+        let view = ComputeTaskView::decode(&bytes).unwrap();
+        let mut q = TaskQueue::new();
+        q.enqueue(&view).unwrap();
+        let mut plan = FetchPlan::new();
+        let t = q.pop_into(&mut plan).unwrap();
+        (t, plan)
+    }
+
+    // ----- link pool (no sockets) -----
+
+    fn static_addr(l: &&'static str) -> &str {
+        l
+    }
+
+    #[test]
+    fn pool_checkin_rejected_after_evict() {
+        let pool: LinkPool<&'static str> = LinkPool::new(4, static_addr);
+        let gen = pool.generation("p");
+        assert!(pool.checkin(gen, "p"));
+        assert_eq!(pool.idle_len(), 1);
+
+        pool.evict("p");
+        assert_eq!(pool.idle_len(), 0, "idle links to the address are dropped");
+        assert!(pool.checkout("p").is_none());
+        assert!(
+            !pool.checkin(gen, "p"),
+            "a generation snapshot taken before the eviction must be rejected"
+        );
+        assert_eq!(pool.generation("p"), gen + 1);
+        // A link acquired after the eviction pools normally again.
+        let fresh = pool.generation("p");
+        assert!(pool.checkin(fresh, "p"));
+        assert_eq!(pool.checkout("p").map(|(l, _)| l), Some("p"));
+    }
+
+    #[test]
+    fn pool_closes_least_recently_used_idle_link_at_capacity() {
+        let pool: LinkPool<&'static str> = LinkPool::new(2, static_addr);
+        assert!(pool.checkin(0, "a"));
+        assert!(pool.checkin(0, "b"));
+        assert!(pool.checkin(0, "c"));
+        assert_eq!(pool.idle_len(), 2);
+        assert!(pool.checkout("a").is_none(), "oldest idle link was closed");
+        assert!(pool.checkout("b").is_some());
+        assert!(pool.checkout("c").is_some());
+    }
+
+    // ----- live-socket paths -----
+
+    #[test]
+    fn pooled_fetches_reuse_one_connection() {
+        let mut objects = HashMap::new();
+        for t in 0..5u32 {
+            objects.insert(key(1, t), vec![t as u8; 16]);
+        }
+        let (addr, accepts) = fake_peer(objects);
+        let dp = DataPlane::new(DataPlaneConfig::default());
+        for t in 0..5u32 {
+            let data = dp.fetch_one(&addr, RunId(1), TaskId(t)).unwrap();
+            assert_eq!(data, vec![t as u8; 16]);
+        }
+        assert_eq!(accepts.load(Ordering::SeqCst), 1, "one pooled link served all fetches");
+        assert_eq!(dp.pool.idle_len(), 1);
+    }
+
+    #[test]
+    fn baseline_mode_connects_per_fetch() {
+        let mut objects = HashMap::new();
+        for t in 0..3u32 {
+            objects.insert(key(1, t), vec![9u8; 4]);
+        }
+        let (addr, accepts) = fake_peer(objects);
+        let dp = DataPlane::new(DataPlaneConfig { pooled: false, ..DataPlaneConfig::default() });
+        for t in 0..3u32 {
+            dp.fetch_one(&addr, RunId(1), TaskId(t)).unwrap();
+        }
+        assert_eq!(accepts.load(Ordering::SeqCst), 3);
+        assert_eq!(dp.pool.idle_len(), 0);
+    }
+
+    #[test]
+    fn gather_batches_per_peer_and_caches_passively() {
+        let mut objects = HashMap::new();
+        for t in 0..8u32 {
+            objects.insert(key(3, t), vec![t as u8; 32]);
+        }
+        let (addr, accepts) = fake_peer(objects);
+        // Small batches force several fetch-data-many requests through the
+        // double-buffered window on one connection.
+        let dp = DataPlane::new(DataPlaneConfig { max_batch: 2, ..DataPlaneConfig::default() });
+        let inputs: Vec<(u32, &str, Vec<&str>)> =
+            (0..8u32).map(|t| (t, addr.as_str(), vec![])).collect();
+        let (t, plan) = pop_plan(3, 100, inputs);
+        let st = store();
+        let mut scratch = GatherScratch::new();
+        dp.gather(&st, t.run, t.task, &plan, &mut scratch).unwrap();
+
+        assert_eq!(scratch.inputs.len(), 8);
+        for (i, got) in scratch.inputs.iter().enumerate() {
+            assert_eq!(got.as_slice(), &vec![i as u8; 32][..], "plan order preserved");
+        }
+        assert_eq!(accepts.load(Ordering::SeqCst), 1, "all eight inputs over one link");
+        assert!(scratch.dropped.is_empty());
+        for t in 0..8u32 {
+            match st.get(&key(3, t)) {
+                Lookup::Hit(_) => {}
+                _ => panic!("fetched input {t} not passively cached"),
+            }
+        }
+    }
+
+    #[test]
+    fn hung_peer_trips_read_deadline_and_fails_over() {
+        // Bound but never accepted: connects succeed via the kernel
+        // backlog, reads hang forever — only the read deadline saves us.
+        let hung = TcpListener::bind("127.0.0.1:0").unwrap();
+        let hung_addr = hung.local_addr().unwrap().to_string();
+        let mut objects = HashMap::new();
+        objects.insert(key(2, 9), b"live".to_vec());
+        let (live_addr, _) = fake_peer(objects);
+
+        let dp = DataPlane::new(DataPlaneConfig {
+            io_timeout_ms: 200,
+            connect_timeout_ms: 500,
+            ..DataPlaneConfig::default()
+        });
+        let t0 = Instant::now();
+        let err = dp.fetch_one(&hung_addr, RunId(2), TaskId(9)).unwrap_err();
+        let elapsed = t0.elapsed();
+        assert!(!err.is_empty());
+        assert!(
+            elapsed >= Duration::from_millis(100) && elapsed < Duration::from_secs(3),
+            "read deadline should fire at ~200ms, took {elapsed:?}"
+        );
+
+        // The same hung peer as an input's primary: gather downgrades the
+        // batch to the failover walk and lands on the live replica.
+        let (t, plan) = pop_plan(2, 40, vec![(9, hung_addr.as_str(), vec![live_addr.as_str()])]);
+        let st = store();
+        let mut scratch = GatherScratch::new();
+        dp.gather(&st, t.run, t.task, &plan, &mut scratch).unwrap();
+        assert_eq!(scratch.inputs.len(), 1);
+        assert_eq!(scratch.inputs[0].as_slice(), b"live");
+    }
+
+    #[test]
+    fn gather_fails_recoverably_when_every_source_is_dead() {
+        // A closed port: connect is refused immediately.
+        let dead_addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let dp = DataPlane::new(DataPlaneConfig {
+            connect_timeout_ms: 300,
+            io_timeout_ms: 300,
+            ..DataPlaneConfig::default()
+        });
+        let (t, plan) = pop_plan(4, 7, vec![(1, dead_addr.as_str(), vec![])]);
+        let st = store();
+        let mut scratch = GatherScratch::new();
+        let err = dp.gather(&st, t.run, t.task, &plan, &mut scratch).unwrap_err();
+        assert!(
+            err.starts_with(FETCH_FAILED_PREFIX),
+            "error must be recoverable (fetch-failed:): {err}"
+        );
+    }
+
+    #[test]
+    fn gather_overlaps_local_producer_wait_with_remote_fetch() {
+        let mut objects = HashMap::new();
+        objects.insert(key(6, 2), b"remote".to_vec());
+        let (addr, _) = fake_peer(objects);
+        let st = Arc::new(store());
+
+        // Input 1 has no source address: a local producer (the steal-race
+        // case) inserts it shortly after the gather starts waiting.
+        let producer = {
+            let st = st.clone();
+            thread::spawn(move || {
+                thread::sleep(Duration::from_millis(50));
+                assert!(st.insert(key(6, 1), Arc::new(b"local".to_vec()), 1));
+            })
+        };
+
+        let dp = DataPlane::new(DataPlaneConfig::default());
+        let (t, plan) = pop_plan(6, 11, vec![(1, "", vec![]), (2, addr.as_str(), vec![])]);
+        let mut scratch = GatherScratch::new();
+        dp.gather(&st, t.run, t.task, &plan, &mut scratch).unwrap();
+        producer.join().unwrap();
+
+        assert_eq!(scratch.inputs.len(), 2);
+        assert_eq!(scratch.inputs[0].as_slice(), b"local");
+        assert_eq!(scratch.inputs[1].as_slice(), b"remote");
+        // The local input had one registered consumer: gathering it
+        // consumed the last reference, so the caller owes a
+        // replica-dropped for it.
+        assert_eq!(scratch.dropped, vec![TaskId(1)]);
+    }
+
+    #[test]
+    fn push_streams_put_data_byte_identically() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let reader = thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut fr = FrameReader::new();
+            let bytes = fr.read(&mut s).unwrap();
+            match decode_msg(bytes).unwrap() {
+                Msg::PutData { run, task, data } => (run, task, data),
+                other => panic!("unexpected message {:?}", other.op()),
+            }
+        });
+
+        let dp = DataPlane::new(DataPlaneConfig::default());
+        let payload = Arc::new(vec![0xA7u8; 100_000]);
+        dp.push(&addr, RunId(5), TaskId(6), &payload).unwrap();
+        let (run, task, data) = reader.join().unwrap();
+        assert_eq!(run, RunId(5));
+        assert_eq!(task, TaskId(6));
+        assert_eq!(data, *payload, "split-frame encoding decodes to the same payload");
+    }
+}

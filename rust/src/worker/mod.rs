@@ -7,17 +7,25 @@
 //!   ("workers process their tasks in parallel, but they never execute more
 //!   than one task per available core at once" — the paper's setting is
 //!   one core per worker),
-//! - fetches missing inputs directly from peer workers (worker↔worker data
-//!   plane; the server is not on the data path), failing over across the
-//!   input's replica addresses before reporting `fetch-failed:`,
+//! - fetches missing inputs directly from peer workers over the pooled
+//!   data plane ([`dataplane`]; the server is not on the data path): one
+//!   persistent connection per peer, a task's missing inputs coalesced
+//!   into `fetch-data-many` batches issued to every source peer before
+//!   any reply is drained, failing over across the input's replica
+//!   addresses before reporting `fetch-failed:`,
 //! - keeps outputs in the reference-counted [`store::ObjectStore`] —
 //!   fully-consumed outputs self-evict (the server is told via
 //!   `replica-dropped`), and an optional `--memory-limit` budget spills
 //!   least-recently-used entries to disk ([`spill::FsSpill`]) so graphs
 //!   larger than cluster RAM complete,
+//! - serves peer fetches and replica pushes from one poll-driven thread
+//!   ([`serve`]): replies stream zero-copy from the store's `Arc`s, and a
+//!   fetch arriving before its producer's local insert parks on the store's
+//!   insert hook instead of sleep-polling,
 //! - serves the replication data plane: a `replicate-data` order from the
-//!   server pushes copies of a hot output to peer workers (`put-data`),
-//!   and each receiving peer confirms with `replica-added`,
+//!   server pushes copies of a hot output to peer workers (`put-data`,
+//!   streamed zero-copy over the same pooled links), and each receiving
+//!   peer confirms with `replica-added`,
 //! - honours steal retraction: a queued task can be given back, a running
 //!   one cannot (§IV-C),
 //! - participates in lineage recovery: `cancel-compute` drops a queued
@@ -38,22 +46,25 @@
 //! performs zero heap allocations on the control path (asserted by the
 //! `hotpath_micro` counting-allocator bench).
 
+pub mod dataplane;
 pub mod payload;
 pub mod queue;
+mod serve;
 pub mod spill;
 pub mod store;
 pub mod zero;
 
 use crate::protocol::{
     decode_msg, peek_op, ComputeTaskView, FrameError, FrameReader, FrameWriter, Msg, RunId,
-    TaskFinishedInfo, FETCH_FAILED_PREFIX,
+    TaskFinishedInfo,
 };
+use crate::server::poll::Waker;
 use crate::taskgraph::TaskId;
 use anyhow::{anyhow, bail, Context, Result};
 use queue::{FetchPlan, PoppedTask, TaskQueue};
 use spill::{FsSpill, MemSpill, SpillBackend};
 use std::net::{TcpListener, TcpStream};
-use store::{DataKey, Lookup, ObjectStore};
+use store::{DataKey, ObjectStore};
 // Model-checkable primitives: std in normal builds, the exhaustive
 // explorer under `--cfg loom` (see `docs/verification.md`).
 use crate::sync::atomic::{AtomicBool, AtomicU32, Ordering};
@@ -69,6 +80,10 @@ pub struct WorkerConfig {
     /// Resident-byte budget for the object store (`--memory-limit`);
     /// `None` keeps everything in memory (no spill tier).
     pub memory_limit: Option<u64>,
+    /// Worker↔worker data-plane tunables (link pooling, batch sizes,
+    /// connect/IO deadlines). Benches flip `pooled` off to measure the
+    /// connect-per-fetch baseline.
+    pub data_plane: dataplane::DataPlaneConfig,
 }
 
 /// The worker→server send half: stream plus its reused frame buffer, under
@@ -94,6 +109,13 @@ struct Shared {
     /// who-has purge when its outputs are replicated).
     running: AtomicU32,
     server_tx: Mutex<ServerLink>,
+    /// Client half of the worker↔worker data plane: pooled peer links,
+    /// batched gather, zero-copy push.
+    dataplane: dataplane::DataPlane,
+    /// Wakes the poll-driven data server ([`serve`]): store inserts poke it
+    /// so parked fetches are served event-driven, and shutdown pokes it so
+    /// the serve loop observes the stop flag.
+    data_waker: Arc<Waker>,
 }
 
 impl Shared {
@@ -116,6 +138,7 @@ impl WorkerHandle {
     pub fn shutdown(&self) {
         self.shared.stop.store(true, Ordering::SeqCst);
         self.shared.cv.notify_all();
+        self.shared.data_waker.wake();
         let link = self.shared.server_tx.lock().unwrap();
         let _ = link.stream.shutdown(std::net::Shutdown::Both);
     }
@@ -167,6 +190,7 @@ pub fn run_worker(cfg: WorkerConfig) -> Result<WorkerHandle> {
         None => Arc::new(MemSpill::new()),
     };
 
+    let data_waker = Arc::new(Waker::new().context("create data-plane waker")?);
     let shared = Arc::new(Shared {
         queue: Mutex::new(TaskQueue::with_cores(cfg.ncores.max(1))),
         cv: Condvar::new(),
@@ -177,21 +201,20 @@ pub fn run_worker(cfg: WorkerConfig) -> Result<WorkerHandle> {
             stream: stream.try_clone().context("clone server stream")?,
             frames: register_frames,
         }),
+        dataplane: dataplane::DataPlane::new(cfg.data_plane.clone()),
+        data_waker: data_waker.clone(),
     });
 
-    // Data server: serve peer fetch requests.
+    // Every store insert pokes the data server's waker, so a peer fetch
+    // parked on a not-yet-resident key is served the moment the producer's
+    // insert lands (event-driven; no sleep-polling). Capturing only the
+    // waker keeps the hook free of an Arc cycle through Shared.
+    shared.store.set_insert_hook(Box::new(move || data_waker.wake()));
+
+    // Data server: one poll-driven thread serves every peer link.
     {
         let shared = shared.clone();
-        std::thread::spawn(move || {
-            for conn in data_listener.incoming() {
-                if shared.stop.load(Ordering::SeqCst) {
-                    break;
-                }
-                let Ok(conn) = conn else { continue };
-                let shared = shared.clone();
-                std::thread::spawn(move || serve_data_conn(conn, &shared));
-            }
-        });
+        std::thread::spawn(move || serve::run_data_server(data_listener, shared));
     }
 
     // Executor threads.
@@ -313,6 +336,7 @@ pub fn run_worker(cfg: WorkerConfig) -> Result<WorkerHandle> {
             }
             shared.stop.store(true, Ordering::SeqCst);
             shared.cv.notify_all();
+            shared.data_waker.wake();
         });
     }
 
@@ -328,22 +352,16 @@ fn drop_queued(shared: &Shared, run: RunId, task: TaskId) -> bool {
 /// Store lookup that transparently restores a spilled entry (and rebalances
 /// the budget afterwards). `None` = genuinely absent.
 fn lookup(shared: &Shared, key: &DataKey) -> Option<Arc<Vec<u8>>> {
-    match shared.store.get(key) {
-        Lookup::Hit(d) => Some(d),
-        Lookup::Spilled => {
-            let restored = shared.store.restore(key);
-            shared.store.maybe_spill();
-            restored
-        }
-        Lookup::Miss => None,
-    }
+    dataplane::lookup_restoring(&shared.store, key)
 }
 
 fn executor_loop(shared: &Shared) {
     // Reused scratch: each pop copies the task's key and input addresses
     // into these retained buffers under the queue lock, so nothing borrows
-    // the run-local arenas outside it (warm pops allocate nothing).
+    // the run-local arenas outside it (warm pops allocate nothing). The
+    // gather scratch likewise retains its slot/group buffers across tasks.
     let mut plan = FetchPlan::new();
+    let mut scratch = dataplane::GatherScratch::new();
     loop {
         let next = {
             let mut q = shared.queue.lock().unwrap();
@@ -368,7 +386,7 @@ fn executor_loop(shared: &Shared) {
             continue;
         }
         shared.running.fetch_add(1, Ordering::SeqCst);
-        let outcome = run_task(shared, &next, &plan);
+        let outcome = run_task(shared, &next, &plan, &mut scratch);
         shared.running.fetch_sub(1, Ordering::SeqCst);
         match outcome {
             Ok(info) => {
@@ -389,59 +407,31 @@ fn executor_loop(shared: &Shared) {
     }
 }
 
-fn run_task(shared: &Shared, t: &PoppedTask, plan: &FetchPlan) -> Result<TaskFinishedInfo> {
-    // Gather inputs: local store or remote peer. Input locations are
-    // relative to the task's own run.
-    let mut inputs: Vec<Arc<Vec<u8>>> = Vec::with_capacity(plan.n_inputs());
-    for i in 0..plan.n_inputs() {
-        let (input_task, _nbytes, addr) = plan.input(i);
-        let key = (t.run, input_task);
-        let data = match lookup(shared, &key) {
-            Some(d) => d,
-            None if !addr.is_empty() || plan.n_alts(i) > 0 => {
-                let data = fetch_with_failover(plan, i, t)?;
-                let arc = Arc::new(data);
-                // Passive fetch cache: pinned (release-run reclaims it) and
-                // deliberately *not* advertised to the server — who_has
-                // only lists copies the server ordered or was told about,
-                // so recovery never counts on this one.
-                shared.store.insert(key, arc.clone(), 0);
-                shared.store.maybe_spill();
-                arc
-            }
-            None => {
-                // Local producer raced with us (steal); short bounded wait.
-                let mut got = None;
-                for _ in 0..500 {
-                    std::thread::sleep(std::time::Duration::from_millis(1));
-                    if let Some(d) = lookup(shared, &key) {
-                        got = Some(d);
-                        break;
-                    }
-                }
-                got.ok_or_else(|| {
-                    anyhow!(
-                        "{FETCH_FAILED_PREFIX}input {} for {} never arrived",
-                        input_task,
-                        plan.key()
-                    )
-                })?
-            }
-        };
-        // One consumption of the input — exactly once per (run, consumer,
-        // input): a re-delivered assignment (recovery re-send, steal
-        // re-assignment) gathers again but must not double-decrement, or
-        // it would prematurely evict an output a sibling consumer still
-        // needs. A refcounted local copy that hits zero self-evicts; tell
-        // the server so recovery and future `who_has` answers never count
-        // on the freed bytes.
-        if shared.store.consume_once(&key, t.task) {
-            let _ = shared.send(&Msg::ReplicaDropped { run: t.run, task: input_task });
-        }
-        inputs.push(data);
+fn run_task(
+    shared: &Shared,
+    t: &PoppedTask,
+    plan: &FetchPlan,
+    scratch: &mut dataplane::GatherScratch,
+) -> Result<TaskFinishedInfo> {
+    // Gather inputs — local store, local-producer wait, or batched fetch
+    // over the pooled peer links (see `dataplane`). Input locations are
+    // relative to the task's own run. The gather records one consumption
+    // per input, exactly once per (run, consumer, input): a re-delivered
+    // assignment (recovery re-send, steal re-assignment) gathers again but
+    // never double-decrements, or it would prematurely evict an output a
+    // sibling consumer still needs.
+    shared
+        .dataplane
+        .gather(&shared.store, t.run, t.task, plan, scratch)
+        .map_err(|e| anyhow!(e))?;
+    // A refcounted local copy that hit zero during the gather self-evicted;
+    // tell the server so recovery and future `who_has` answers never count
+    // on the freed bytes.
+    for task in scratch.dropped.drain(..) {
+        let _ = shared.send(&Msg::ReplicaDropped { run: t.run, task });
     }
     let t0 = std::time::Instant::now();
-    let output = payload::execute(&t.payload, t.duration_us, t.output_size, &inputs)?;
+    let output = payload::execute(&t.payload, t.duration_us, t.output_size, &scratch.inputs)?;
     let duration_us = t0.elapsed().as_micros() as u64;
     let nbytes = output.len() as u64;
     // The store refuses the insert if a release raced this execution (the
@@ -452,50 +442,9 @@ fn run_task(shared: &Shared, t: &PoppedTask, plan: &FetchPlan) -> Result<TaskFin
     Ok(TaskFinishedInfo { run: t.run, task: t.task, nbytes, duration_us })
 }
 
-/// Fetch one input, walking the primary plus every known replica address
-/// before giving up with the recoverable `fetch-failed:` error. The
-/// starting replica rotates with the consuming task id, so the many
-/// consumers of one hot output spread their load across its copies.
-fn fetch_with_failover(plan: &FetchPlan, i: usize, t: &PoppedTask) -> Result<Vec<u8>> {
-    let (input_task, _nbytes, primary) = plan.input(i);
-    let n = 1 + plan.n_alts(i);
-    let start = t.task.0 as usize % n;
-    let mut last_err: Option<anyhow::Error> = None;
-    for j in 0..n {
-        let idx = (start + j) % n;
-        let addr = if idx == 0 { primary } else { plan.input_alt(i, idx - 1) };
-        if addr.is_empty() {
-            continue;
-        }
-        match fetch_remote(addr, t.run, input_task) {
-            Ok(d) => return Ok(d),
-            Err(e) => last_err = Some(e),
-        }
-    }
-    // The `fetch-failed:` prefix marks this recoverable: every replica was
-    // unreachable (or none was named), so the server re-runs this task —
-    // resurrecting lost inputs if need be — rather than failing the run.
-    let cause = last_err.unwrap_or_else(|| anyhow!("no usable source address"));
-    Err(cause.context(format!(
-        "{FETCH_FAILED_PREFIX}{}/{} unreachable via {} source(s)",
-        t.run, input_task, n
-    )))
-}
-
-fn fetch_remote(addr: &str, run: RunId, task: TaskId) -> Result<Vec<u8>> {
-    let mut s = TcpStream::connect(addr)?;
-    s.set_nodelay(true).ok();
-    FrameWriter::new().send(&mut s, &Msg::FetchData { run, task })?;
-    let mut frames_in = FrameReader::new();
-    let reply = decode_msg(frames_in.read(&mut s)?)?;
-    match reply {
-        Msg::DataReply { run: r, task: t, data } if r == run && t == task => Ok(data),
-        other => bail!("unexpected data reply {:?}", other.op()),
-    }
-}
-
 /// Execute a `replicate-data` order: push our copy of `(run, task)` to each
-/// peer data address. Best-effort — a dead or unreachable target is simply
+/// peer data address, streamed zero-copy from the store's `Arc` over the
+/// pooled links. Best-effort — a dead or unreachable target is simply
 /// skipped, because the server only counts copies whose `replica-added`
 /// confirmation arrives from the receiving peer.
 fn push_replicas(shared: &Shared, run: RunId, task: TaskId, addrs: &[String]) {
@@ -504,70 +453,8 @@ fn push_replicas(shared: &Shared, run: RunId, task: TaskId, addrs: &[String]) {
         return;
     };
     for addr in addrs {
-        if let Err(e) = push_one(addr, run, task, &bytes) {
+        if let Err(e) = shared.dataplane.push(addr, run, task, &bytes) {
             log::debug!("worker: replica push {run}/{task} to {addr} failed: {e}");
-        }
-    }
-}
-
-fn push_one(addr: &str, run: RunId, task: TaskId, bytes: &Arc<Vec<u8>>) -> Result<()> {
-    let mut s = TcpStream::connect(addr)?;
-    s.set_nodelay(true).ok();
-    FrameWriter::new().send(&mut s, &Msg::PutData { run, task, data: bytes.as_ref().clone() })?;
-    Ok(())
-}
-
-fn serve_data_conn(mut conn: TcpStream, shared: &Shared) {
-    conn.set_nodelay(true).ok();
-    // Per-connection reused buffers: repeated fetches on one peer link
-    // allocate nothing beyond the payload clones themselves.
-    let mut frames_in = FrameReader::new();
-    let mut frames_out = FrameWriter::new();
-    loop {
-        let msg = match frames_in.read(&mut conn) {
-            Ok(bytes) => match decode_msg(bytes) {
-                Ok(m) => m,
-                Err(_) => break,
-            },
-            Err(_) => break,
-        };
-        match msg {
-            Msg::FetchData { run, task } => {
-                // The producer finished before the server advertised the
-                // location, but the local insert may trail by a hair.
-                let key = (run, task);
-                let mut data = None;
-                for _ in 0..500 {
-                    if let Some(d) = lookup(shared, &key) {
-                        data = Some(d);
-                        break;
-                    }
-                    std::thread::sleep(std::time::Duration::from_millis(1));
-                }
-                let Some(data) = data else { break };
-                let reply = Msg::DataReply { run, task, data: data.as_ref().clone() };
-                if frames_out.send(&mut conn, &reply).is_err() {
-                    break;
-                }
-                // Serving a peer is one consumption of the graph-wide
-                // count; at zero the copy self-evicts and the server is
-                // told (same contract as the local-gather decrement).
-                if shared.store.consume(&key) {
-                    let _ = shared.send(&Msg::ReplicaDropped { run, task });
-                }
-            }
-            Msg::PutData { run, task, data } => {
-                // Unsolicited replica push. Stored pinned — replicas never
-                // self-evict; `release-run` or the spill tier manage them —
-                // and confirmed to the server, which appends us to
-                // `who_has`. A duplicate push or one for a released run is
-                // dropped without confirmation.
-                if shared.store.insert((run, task), Arc::new(data), 0) {
-                    shared.store.maybe_spill();
-                    let _ = shared.send(&Msg::ReplicaAdded { run, task });
-                }
-            }
-            _ => break,
         }
     }
 }

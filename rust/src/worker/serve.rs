@@ -1,0 +1,365 @@
+//! The worker↔worker data plane, serve side: one poll-driven thread
+//! replaces the thread-per-connection data server (PR 10).
+//!
+//! Peers now hold long-lived pooled links ([`super::dataplane`]), so the
+//! old model — one OS thread parked per inbound connection — would pin a
+//! thread per peer for the life of the worker. This loop serves every
+//! peer link from a single thread on the PR 7 readiness core
+//! ([`crate::server::poll`]): a level-triggered `Poller` over the
+//! listener, an eventfd [`Waker`], and all accepted connections.
+//!
+//! Replies are **zero-copy by construction**: a `data-reply` frame is
+//! queued as three segments — an owned head (length prefix + msgpack map
+//! header + bin header), the store's payload `Arc` itself, and an owned
+//! tail — encoded with the split [`encode_data_frame_head`] /
+//! [`encode_data_frame_tail`] encoders whose concatenation is
+//! byte-identical to the owned `Msg::DataReply` encoding (asserted in
+//! `protocol::codec` tests). The payload bytes are never copied out of
+//! the store; head/tail buffers are recycled per connection, so the warm
+//! serve path allocates nothing (`benches/hotpath_micro.rs` asserts
+//! this).
+//!
+//! A fetch for a key that is not resident yet parks in the connection's
+//! FIFO — the producer's local insert may trail the server's `who_has`
+//! advertisement. The store's insert hook pokes the [`Waker`], so parked
+//! fetches are served event-driven rather than by sleep-polling. Replies
+//! stay in request order per connection (that ordering *is* the
+//! `fetch-data-many` reply protocol); a key still missing after the
+//! grace window closes the connection, which the fetching side treats as
+//! a recoverable failure and fails over to another replica.
+
+use super::dataplane::lookup_restoring;
+use super::Shared;
+use crate::protocol::{
+    decode_msg, encode_data_frame_head, encode_data_frame_tail, DataFrameParts,
+    FrameAccumulator, Msg, NbRead, RunId, MAX_FRAME_LEN,
+};
+use crate::server::poll::{Events, Interest, Poller};
+use crate::sync::atomic::Ordering;
+use crate::sync::Arc;
+use crate::taskgraph::TaskId;
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
+use std::time::{Duration, Instant};
+
+const LISTENER_TOKEN: u64 = 0;
+const WAKER_TOKEN: u64 = 1;
+const FIRST_CONN_TOKEN: u64 = 2;
+/// Recycled head/tail buffers kept per connection.
+const SPARE_CAP: usize = 8;
+/// Poll tick while any fetch is parked (bounds deadline detection).
+const PARKED_TICK_MS: i32 = 25;
+
+/// A fetch whose key was not resident when it arrived, parked until the
+/// local producer's insert or the grace deadline.
+struct Pending {
+    run: RunId,
+    task: TaskId,
+    deadline: Instant,
+}
+
+/// Outbound reply queue: a FIFO of segments, where payloads are shared
+/// store `Arc`s and only the small head/tail framing is owned (and
+/// recycled).
+enum Seg {
+    Owned(Vec<u8>),
+    Shared(Arc<Vec<u8>>),
+}
+
+#[derive(Default)]
+struct OutQueue {
+    segs: VecDeque<Seg>,
+    /// Bytes of the front segment already written.
+    head_off: usize,
+    spare: Vec<Vec<u8>>,
+}
+
+impl OutQueue {
+    /// Queue one `data-reply` frame: owned head, shared payload, owned
+    /// tail. Hot path (registered in `xtask/hotpath.txt`): warm calls
+    /// reuse recycled buffers and allocate nothing beyond queue slots.
+    /// `false` = frame would exceed `MAX_FRAME_LEN` (caller closes).
+    fn enqueue_reply(&mut self, run: RunId, task: TaskId, data: &Arc<Vec<u8>>) -> bool {
+        let parts = DataFrameParts { op: "data-reply", run, task, data_len: data.len() };
+        let mut head = self.spare.pop().unwrap_or_default();
+        head.clear();
+        head.extend_from_slice(&[0u8; 8]);
+        encode_data_frame_head(&parts, &mut head);
+        let mut tail = self.spare.pop().unwrap_or_default();
+        tail.clear();
+        encode_data_frame_tail(&parts, &mut tail);
+        let body = (head.len() - 8 + data.len() + tail.len()) as u64;
+        if body > MAX_FRAME_LEN {
+            self.recycle(head);
+            self.recycle(tail);
+            return false;
+        }
+        head[..8].copy_from_slice(&body.to_le_bytes());
+        self.segs.push_back(Seg::Owned(head));
+        self.segs.push_back(Seg::Shared(data.clone())); // lint: clone-ok — Arc refcount bump, not a payload copy
+        self.segs.push_back(Seg::Owned(tail));
+        true
+    }
+
+    fn recycle(&mut self, mut buf: Vec<u8>) {
+        if self.spare.len() < SPARE_CAP {
+            buf.clear();
+            self.spare.push(buf);
+        }
+    }
+
+    /// Write as much queued data as the socket accepts.
+    /// `Ok(true)` = queue drained, `Ok(false)` = socket is full (caller
+    /// arms write interest), `Err` = connection is broken.
+    fn flush(&mut self, stream: &mut TcpStream) -> io::Result<bool> {
+        loop {
+            let seg_len = match self.segs.front() {
+                None => return Ok(true),
+                Some(Seg::Owned(v)) => v.len(),
+                Some(Seg::Shared(a)) => a.len(),
+            };
+            if self.head_off >= seg_len {
+                if let Some(seg) = self.segs.pop_front() {
+                    if let Seg::Owned(buf) = seg {
+                        self.recycle(buf);
+                    }
+                }
+                self.head_off = 0;
+                continue;
+            }
+            let n = {
+                let rest: &[u8] = match self.segs.front() {
+                    Some(Seg::Owned(v)) => &v[self.head_off..],
+                    Some(Seg::Shared(a)) => &a[self.head_off..],
+                    None => return Ok(true),
+                };
+                match stream.write(rest) {
+                    Ok(0) => {
+                        return Err(io::Error::new(io::ErrorKind::WriteZero, "peer stopped reading"))
+                    }
+                    Ok(n) => n,
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(false),
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(e),
+                }
+            };
+            self.head_off += n;
+        }
+    }
+}
+
+struct Conn {
+    stream: TcpStream,
+    acc: FrameAccumulator,
+    waiting: VecDeque<Pending>,
+    out: OutQueue,
+    /// Whether the poller currently watches this fd for writability.
+    write_interest: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            acc: FrameAccumulator::new(),
+            waiting: VecDeque::new(),
+            out: OutQueue::default(),
+            write_interest: false,
+        }
+    }
+}
+
+/// Data-server thread entry point: run the poll loop until shutdown,
+/// logging (not panicking on) a fatal loop error.
+pub(super) fn run_data_server(listener: TcpListener, shared: Arc<Shared>) {
+    if let Err(e) = serve_loop(listener, &shared) {
+        if !shared.stop.load(Ordering::SeqCst) {
+            log::error!("worker data server failed: {e}");
+        }
+    }
+}
+
+fn serve_loop(listener: TcpListener, shared: &Shared) -> io::Result<()> {
+    listener.set_nonblocking(true)?;
+    let poller = Poller::new()?;
+    let mut events = Events::with_capacity(64);
+    poller.register(listener.as_raw_fd(), LISTENER_TOKEN, Interest::READ)?;
+    poller.register(shared.data_waker.fd(), WAKER_TOKEN, Interest::READ)?;
+    let park = Duration::from_millis(shared.dataplane.config().serve_park_ms.max(1));
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_token = FIRST_CONN_TOKEN;
+    let mut closed: Vec<u64> = Vec::new();
+
+    loop {
+        // Serve every connection's parked fetches before sleeping: the
+        // insert hook wakes us on new residents, and this pass also
+        // drains anything that landed while we were handling events.
+        let mut any_parked = false;
+        for (tok, conn) in conns.iter_mut() {
+            match touch(shared, &poller, *tok, conn) {
+                Ok(()) => any_parked |= !conn.waiting.is_empty(),
+                Err(_) => closed.push(*tok),
+            }
+        }
+        drop_closed(&poller, &mut conns, &mut closed);
+
+        if shared.stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+
+        let timeout = if any_parked { Some(PARKED_TICK_MS) } else { None };
+        poller.wait(&mut events, timeout)?;
+
+        for ev in events.iter() {
+            match ev.token {
+                LISTENER_TOKEN => accept_all(&poller, &listener, &mut conns, &mut next_token),
+                WAKER_TOKEN => shared.data_waker.drain(),
+                tok => {
+                    let Some(conn) = conns.get_mut(&tok) else { continue };
+                    if ev.hangup && !ev.readable {
+                        closed.push(tok);
+                        continue;
+                    }
+                    let mut ok = true;
+                    if ev.readable {
+                        ok = read_frames(shared, conn, park).is_ok();
+                    }
+                    if ok {
+                        ok = touch(shared, &poller, tok, conn).is_ok();
+                    }
+                    if !ok {
+                        closed.push(tok);
+                    }
+                }
+            }
+        }
+        drop_closed(&poller, &mut conns, &mut closed);
+    }
+}
+
+fn accept_all(
+    poller: &Poller,
+    listener: &TcpListener,
+    conns: &mut HashMap<u64, Conn>,
+    next_token: &mut u64,
+) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                stream.set_nodelay(true).ok();
+                let tok = *next_token;
+                *next_token += 1;
+                if poller.register(stream.as_raw_fd(), tok, Interest::READ).is_err() {
+                    continue;
+                }
+                conns.insert(tok, Conn::new(stream));
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => {
+                log::warn!("worker data server: accept failed: {e}");
+                return;
+            }
+        }
+    }
+}
+
+fn drop_closed(poller: &Poller, conns: &mut HashMap<u64, Conn>, closed: &mut Vec<u64>) {
+    for tok in closed.drain(..) {
+        if let Some(conn) = conns.remove(&tok) {
+            let _ = poller.deregister(conn.stream.as_raw_fd());
+        }
+    }
+}
+
+/// Drain every complete inbound frame. `Err` = close this connection
+/// (peer gone, undecodable bytes, or an op that does not belong on the
+/// data plane).
+fn read_frames(shared: &Shared, conn: &mut Conn, park: Duration) -> io::Result<()> {
+    loop {
+        let msg = match conn.acc.poll_frame(&mut conn.stream) {
+            Ok(NbRead::Frame(bytes)) => match decode_msg(bytes) {
+                Ok(m) => m,
+                Err(_) => return Err(io::Error::new(io::ErrorKind::InvalidData, "bad data frame")),
+            },
+            Ok(NbRead::WouldBlock) => return Ok(()),
+            Ok(NbRead::Closed) => {
+                return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "peer closed"))
+            }
+            Err(e) => return Err(io::Error::new(io::ErrorKind::InvalidData, e.to_string())),
+        };
+        match msg {
+            Msg::FetchData { run, task } => {
+                conn.waiting.push_back(Pending { run, task, deadline: Instant::now() + park });
+            }
+            Msg::FetchDataMany { run, tasks } => {
+                let deadline = Instant::now() + park;
+                for task in tasks {
+                    conn.waiting.push_back(Pending { run, task, deadline });
+                }
+            }
+            Msg::PutData { run, task, data } => {
+                // Replica inserts are pinned (no consumer count): the
+                // server tracks this copy and releases it with the run.
+                if shared.store.insert((run, task), Arc::new(data), 0) {
+                    shared.store.maybe_spill();
+                    let _ = shared.send(&Msg::ReplicaAdded { run, task });
+                }
+            }
+            _ => {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    "unexpected op on data plane",
+                ))
+            }
+        }
+    }
+}
+
+/// Serve the connection's parked fetches in order, flush the outbound
+/// queue, and keep the poller's write interest in sync with whether
+/// anything is left to write.
+fn touch(shared: &Shared, poller: &Poller, tok: u64, conn: &mut Conn) -> io::Result<()> {
+    let now = Instant::now();
+    loop {
+        let (run, task, deadline) = match conn.waiting.front() {
+            None => break,
+            Some(p) => (p.run, p.task, p.deadline),
+        };
+        let key = (run, task);
+        match lookup_restoring(&shared.store, &key) {
+            Some(data) => {
+                conn.waiting.pop_front();
+                if !conn.out.enqueue_reply(run, task, &data) {
+                    return Err(io::Error::new(io::ErrorKind::InvalidData, "oversized object"));
+                }
+                if shared.store.consume(&key) {
+                    let _ = shared.send(&Msg::ReplicaDropped { run, task });
+                }
+            }
+            None => {
+                if now >= deadline {
+                    // Still absent after the grace window: drop the
+                    // connection; the fetching side fails over.
+                    return Err(io::Error::new(io::ErrorKind::NotFound, "object never arrived"));
+                }
+                // Head-of-line wait is deliberate: per-connection reply
+                // order is the fetch-data-many contract.
+                break;
+            }
+        }
+    }
+    let drained = conn.out.flush(&mut conn.stream)?;
+    let want_write = !drained;
+    if want_write != conn.write_interest {
+        let interest = if want_write { Interest::READ_WRITE } else { Interest::READ };
+        poller.rearm(conn.stream.as_raw_fd(), tok, interest)?;
+        conn.write_interest = want_write;
+    }
+    Ok(())
+}

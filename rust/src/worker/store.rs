@@ -29,9 +29,17 @@
 
 use super::spill::SpillBackend;
 use crate::protocol::RunId;
-use crate::sync::{Arc, Mutex};
+use crate::sync::{Arc, Condvar, Mutex};
 use crate::taskgraph::TaskId;
 use std::collections::{HashMap, HashSet};
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+/// Callback invoked (outside the store lock) after every successful
+/// [`ObjectStore::insert`] — the data server's poll loop registers its
+/// waker here so parked peer fetches re-check the store the moment a
+/// producer lands, instead of sleep-polling.
+type InsertHook = Box<dyn Fn() + Send + Sync>;
 
 /// Store key: task outputs are namespaced by run because [`TaskId`]s
 /// recycle across graph submissions.
@@ -90,6 +98,14 @@ pub enum Lookup {
 
 pub struct ObjectStore {
     inner: Mutex<Inner>,
+    /// Signalled (broadcast) by every successful insert; paired with
+    /// `inner`. [`ObjectStore::wait_resident`] blocks here so the gather
+    /// path's wait for a local producer is event-driven instead of a
+    /// sleep poll.
+    cv: Condvar,
+    /// See [`InsertHook`]; set at most once, called with the lock
+    /// released.
+    insert_hook: OnceLock<InsertHook>,
     backend: Arc<dyn SpillBackend>,
     /// Resident-byte budget; `None` disables eviction entirely.
     limit: Option<u64>,
@@ -107,6 +123,8 @@ impl ObjectStore {
                 spills: 0,
                 restores: 0,
             }),
+            cv: Condvar::new(),
+            insert_hook: OnceLock::new(),
             backend,
             limit,
         }
@@ -162,7 +180,52 @@ impl ObjectStore {
             },
         );
         inner.resident_bytes += nbytes;
+        drop(inner);
+        self.cv.notify_all();
+        if let Some(hook) = self.insert_hook.get() {
+            hook();
+        }
         true
+    }
+
+    /// Register the insert notification callback (see [`InsertHook`]).
+    /// At most one hook can be set; later calls are ignored.
+    pub fn set_insert_hook(&self, hook: InsertHook) {
+        let _ = self.insert_hook.set(hook);
+    }
+
+    /// [`ObjectStore::get`], but block up to `timeout` for the key to be
+    /// inserted. Replaces the gather path's 500×1ms sleep poll for the
+    /// local-producer race (our own executor finished the input but its
+    /// insert hasn't landed yet — e.g. a stolen task raced the steal):
+    /// the wait parks on the store condvar and wakes on the producer's
+    /// insert, bounded by the same deadline discipline as remote fetches.
+    /// Returns [`Lookup::Miss`] if the deadline expires first.
+    pub fn wait_resident(&self, key: &DataKey, timeout: Duration) -> Lookup {
+        let deadline = Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            inner.clock += 1;
+            let clock = inner.clock;
+            if let Some(e) = inner.entries.get_mut(key) {
+                e.last_used = clock;
+                return match &e.slot {
+                    Slot::Resident(b) | Slot::Spilling(b) => Lookup::Hit(b.clone()),
+                    Slot::Spilled(_) => Lookup::Spilled,
+                };
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Lookup::Miss;
+            }
+            // Poison carries the same meaning as the `.lock().unwrap()`
+            // idiom elsewhere; recover the guard and keep waiting so a
+            // panicked unrelated thread doesn't turn into a spurious miss.
+            inner = match self.cv.wait_timeout(inner, deadline - now) {
+                Ok((g, _)) => g,
+                Err(p) => p.into_inner().0,
+            };
+        }
     }
 
     /// Record one consumption of `key` (a local gather or a serve to a
@@ -736,5 +799,56 @@ mod tests {
         }
         assert_eq!(s.resident_bytes(), 5000);
         assert_eq!(backend.spilled_bytes(), 0);
+    }
+
+    #[test]
+    fn wait_resident_wakes_on_insert() {
+        let (s, _) = store_with(None);
+        let s = Arc::new(s);
+        let k = key(1, 3);
+        let waiter = {
+            let s = s.clone();
+            std::thread::spawn(move || s.wait_resident(&k, Duration::from_secs(10)))
+        };
+        // Give the waiter a moment to park, then insert: the wait must
+        // return well before its 10s deadline.
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(s.insert(k, bytes(4), 1));
+        match waiter.join().unwrap() {
+            Lookup::Hit(b) => assert_eq!(b.len(), 4),
+            _ => panic!("expected hit after insert"),
+        }
+    }
+
+    #[test]
+    fn wait_resident_times_out_as_miss() {
+        let (s, _) = store_with(None);
+        let start = Instant::now();
+        assert!(matches!(
+            s.wait_resident(&key(9, 9), Duration::from_millis(30)),
+            Lookup::Miss
+        ));
+        assert!(start.elapsed() >= Duration::from_millis(30));
+    }
+
+    #[test]
+    fn insert_hook_fires_outside_the_lock() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        let (s, _) = store_with(None);
+        let s = Arc::new(s);
+        let fired = Arc::new(AtomicU32::new(0));
+        {
+            let fired = fired.clone();
+            let probe = s.clone();
+            s.set_insert_hook(Box::new(move || {
+                // Re-entering the store from the hook must not deadlock —
+                // proof the hook runs with the store lock released.
+                let _ = probe.get(&key(1, 1));
+                fired.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        assert!(s.insert(key(1, 1), bytes(1), 1));
+        assert!(!s.insert(key(1, 1), bytes(1), 1), "duplicate must not refire");
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
     }
 }

@@ -37,6 +37,7 @@ fn workers(addr: &str, n: u32) -> Vec<WorkerHandle> {
                 ncores: 1,
                 node: i / 4,
                 memory_limit: None,
+                data_plane: Default::default(),
             })
             .expect("worker start")
         })
@@ -247,6 +248,7 @@ fn zero_worker_runs_graphs_instantly() {
                 ncores: 1,
                 node: 0,
                 memory_limit: None,
+                data_plane: Default::default(),
             })
             .unwrap()
         })
@@ -289,6 +291,7 @@ fn dask_emulation_is_measurably_slower() {
                     ncores: 1,
                     node: 0,
                     memory_limit: None,
+                    data_plane: Default::default(),
                 })
                 .unwrap()
             })
@@ -923,6 +926,7 @@ fn fetch_failover_uses_surviving_replica() {
         ncores: 1,
         node: 0,
         memory_limit: None,
+        data_plane: Default::default(),
     })
     .unwrap();
     let w2 = run_worker(WorkerConfig {
@@ -931,6 +935,7 @@ fn fetch_failover_uses_surviving_replica() {
         ncores: 1,
         node: 0,
         memory_limit: None,
+        data_plane: Default::default(),
     })
     .unwrap();
     let mut conns = acceptor.join().unwrap();
@@ -1004,6 +1009,7 @@ fn memory_budget_spills_and_completes() {
         ncores: 1,
         node: 0,
         memory_limit: Some(64 * 1024),
+        data_plane: Default::default(),
     })
     .expect("worker start");
     let g = {
@@ -1040,6 +1046,7 @@ fn mixed_workers(addr: &str) -> Vec<WorkerHandle> {
                 ncores,
                 node: 0,
                 memory_limit: None,
+                data_plane: Default::default(),
             })
             .expect("worker start")
         })

@@ -3,9 +3,11 @@
 //!
 //! Each model rebuilds one of the repo's real concurrency cores — the
 //! worker's one-mutex [`TaskQueue`], the object store's spill/restore
-//! slot discipline ([`ObjectStore`]), the report window behind the
-//! [`ServerHandle`] mutex, the cross-shard forward/worker-death protocol
-//! (`deliver_forward`), and the runtime's global-init pattern — from the
+//! slot discipline ([`ObjectStore`]), the data plane's peer-link pool
+//! (checkout vs dead-link eviction, [`LinkPool`]), the report window
+//! behind the [`ServerHandle`] mutex, the cross-shard
+//! forward/worker-death protocol (`deliver_forward`), and the runtime's
+//! global-init pattern — from the
 //! *production types* behind the [`rsds::sync`] shim, and explores every
 //! distinguishable schedule with [`rsds::modelcheck`] (the offline loom
 //! stand-in). The `seeded_*` models lock known bugs in as regressions:
@@ -25,6 +27,7 @@ use rsds::server::{deliver_forward, pool_get, pool_put, BoundedWindow, BufPool};
 use rsds::sync::atomic::{AtomicUsize, Ordering};
 use rsds::sync::{thread, Arc, Condvar, Mutex};
 use rsds::taskgraph::{Payload, TaskId};
+use rsds::worker::dataplane::LinkPool;
 use rsds::worker::queue::{FetchPlan, TaskQueue};
 use rsds::worker::spill::{MemSpill, SpillBackend};
 use rsds::worker::store::{DataKey, Lookup, ObjectStore};
@@ -564,4 +567,82 @@ fn seeded_naive_global_init_double_constructs() {
         assert_eq!(ctors.load(Ordering::SeqCst), 1, "PJRT client constructed twice");
     });
     assert!(msg.contains("constructed twice"), "wrong failure: {msg}");
+}
+
+// ---------------------------------------------------------------------------
+// Data-plane link pool (worker/dataplane.rs, PR 10)
+// ---------------------------------------------------------------------------
+
+/// Socket-free stand-in for a pooled peer link: `epoch` records the pool
+/// generation observed when the "connection" was established.
+struct L {
+    addr: &'static str,
+    epoch: u64,
+}
+
+fn l_addr(l: &L) -> &str {
+    l.addr
+}
+
+/// Dead-link eviction racing the gather path's checkout → use → checkin
+/// (`dataplane.rs::acquire` + the per-group checkin): under every schedule
+/// a link whose generation snapshot predates the evict must be rejected at
+/// checkin — a connection established before a peer was declared dead may
+/// never be observable in the pool after the eviction completes.
+#[test]
+fn link_pool_checkin_vs_evict_never_resurrects_a_stale_link() {
+    model(|| {
+        let pool = Arc::new(LinkPool::new(4, l_addr));
+        // Seed one idle link established at the current generation.
+        let g0 = pool.generation("p");
+        assert!(pool.checkin(g0, L { addr: "p", epoch: g0 }));
+        let evictor = {
+            let pool = Arc::clone(&pool);
+            thread::spawn(move || pool.evict("p"))
+        };
+        // The fetch path: pooled checkout, else a fresh connect under a
+        // generation snapshot taken *before* the connect.
+        match pool.checkout("p") {
+            Some((l, gen)) => {
+                let _ = pool.checkin(gen, l);
+            }
+            None => {
+                let gen = pool.generation("p");
+                let _ = pool.checkin(gen, L { addr: "p", epoch: gen });
+            }
+        }
+        evictor.join().unwrap();
+        // Quiescent invariant: anything still pooled for this address was
+        // established at the post-evict generation.
+        let current = pool.generation("p");
+        assert_eq!(current, 1, "exactly one evict must have bumped the generation");
+        while let Some((l, _gen)) = pool.checkout("p") {
+            assert_eq!(
+                l.epoch, current,
+                "a link from before the eviction survived in the pool"
+            );
+        }
+        assert_eq!(pool.idle_len(), 0);
+    });
+}
+
+/// Two peers' links racing into a capacity-1 pool: both checkins are
+/// accepted (each observed a fresh generation) and the LRU admission
+/// closes one, so the idle bound holds under every schedule.
+#[test]
+fn link_pool_capacity_bound_holds_under_racing_checkins() {
+    model(|| {
+        let pool = Arc::new(LinkPool::new(1, l_addr));
+        let racer = {
+            let pool = Arc::clone(&pool);
+            thread::spawn(move || {
+                let g = pool.generation("a");
+                assert!(pool.checkin(g, L { addr: "a", epoch: g }));
+            })
+        };
+        let g = pool.generation("b");
+        assert!(pool.checkin(g, L { addr: "b", epoch: g }));
+        racer.join().unwrap();
+        assert_eq!(pool.idle_len(), 1, "LRU admission broke the pool bound");
+    });
 }

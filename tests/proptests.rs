@@ -1787,3 +1787,364 @@ fn prop_interned_queue_parity_with_owned_decode() {
         },
     );
 }
+
+// ---- pooled worker↔worker gather (PR 10 tentpole) ----
+
+/// Fake peer data server: serves `fetch-data` / `fetch-data-many` from a
+/// fixed object map over real TCP, one thread per connection, mirroring
+/// the real server's reply contract (in-order replies, connection close
+/// on an unknown key).
+fn spawn_data_peer(
+    objects: HashMap<(RunId, TaskId), Vec<u8>>,
+) -> String {
+    use rsds::protocol::{decode_msg, FrameReader, FrameWriter};
+    use std::net::TcpStream;
+
+    fn reply(
+        out: &mut FrameWriter,
+        stream: &mut TcpStream,
+        objects: &HashMap<(RunId, TaskId), Vec<u8>>,
+        run: RunId,
+        task: TaskId,
+    ) -> bool {
+        match objects.get(&(run, task)) {
+            Some(d) => {
+                out.send(stream, &Msg::DataReply { run, task, data: d.clone() }).is_ok()
+            }
+            None => false,
+        }
+    }
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind peer");
+    let addr = listener.local_addr().expect("peer addr").to_string();
+    let objects = std::sync::Arc::new(objects);
+    std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            let Ok(mut stream) = conn else { break };
+            let objects = objects.clone();
+            std::thread::spawn(move || {
+                let mut frames = FrameReader::new();
+                let mut out = FrameWriter::new();
+                loop {
+                    let Ok(bytes) = frames.read(&mut stream) else { return };
+                    let Ok(msg) = decode_msg(bytes) else { return };
+                    match msg {
+                        Msg::FetchData { run, task } => {
+                            if !reply(&mut out, &mut stream, &objects, run, task) {
+                                return;
+                            }
+                        }
+                        Msg::FetchDataMany { run, tasks } => {
+                            for task in tasks {
+                                if !reply(&mut out, &mut stream, &objects, run, task) {
+                                    return;
+                                }
+                            }
+                        }
+                        _ => return,
+                    }
+                }
+            });
+        }
+    });
+    addr
+}
+
+/// An address that refuses connections: bind an ephemeral port, then drop
+/// the listener before anyone connects.
+fn dead_addr() -> String {
+    let l = std::net::TcpListener::bind("127.0.0.1:0").expect("bind dead");
+    let a = l.local_addr().expect("dead addr").to_string();
+    drop(l);
+    a
+}
+
+#[test]
+fn prop_gather_matches_sequential_baseline_and_consumes_exactly_once() {
+    // Random gather scenarios over real TCP peers: inputs split between
+    // pre-inserted locals, one not-yet-produced local (inserted by a racing
+    // producer thread mid-gather), and remote objects spread over 1-3 fake
+    // peers with randomly dead primaries/alts (connection-refused). With a
+    // 25% chance one remote input has *only* dead sources.
+    //
+    // Properties, for both the pooled data plane and the sequential
+    // connect-per-fetch baseline:
+    // - every fully-reachable scenario completes with the exact expected
+    //   bytes in plan order, and both modes agree on success and on the
+    //   replica-dropped set (locals whose refcount hit zero; remote
+    //   fetches are cached pinned and never dropped);
+    // - every sabotaged scenario fails with a recoverable
+    //   `fetch-failed:` error in both modes;
+    // - a duplicate gather by the same consumer is exactly-once: it
+    //   succeeds from cache, drops nothing, and leaves the refcounts of
+    //   re-inserted and surviving entries untouched.
+    use rsds::protocol::FETCH_FAILED_PREFIX;
+    use rsds::worker::dataplane::{DataPlane, DataPlaneConfig, GatherScratch};
+    use rsds::worker::queue::{FetchPlan, TaskQueue};
+    use rsds::worker::spill::MemSpill;
+    use rsds::worker::store::{Lookup, ObjectStore};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[derive(Clone, PartialEq)]
+    enum Kind {
+        LocalPre { consumers: u32 },
+        LocalDelayed,
+        Remote { holder: usize, sabotaged: bool },
+    }
+
+    struct InputSpec {
+        task: TaskId,
+        bytes: Vec<u8>,
+        kind: Kind,
+    }
+
+    check("dataplane gather", PropConfig { cases: scaled_cases(12), seed: 6262 }, |rng| {
+        let run = RunId(1);
+        let consumer = TaskId(1000);
+        let n_peers = rng.range_usize(1, 4);
+        let n_inputs = rng.range_usize(1, 9);
+
+        // Generate input specs and the per-peer object maps.
+        let mut specs: Vec<InputSpec> = Vec::new();
+        let mut peer_objects: Vec<HashMap<(RunId, TaskId), Vec<u8>>> =
+            vec![HashMap::new(); n_peers];
+        let mut have_delayed = false;
+        for i in 0..n_inputs as u32 {
+            let task = TaskId(i);
+            let len = rng.range_usize(1, 64);
+            let bytes = vec![(7 + i) as u8; len];
+            let kind = match rng.gen_range(4) {
+                0 => Kind::LocalPre { consumers: rng.gen_range(2) as u32 + 1 },
+                1 if !have_delayed => {
+                    have_delayed = true;
+                    Kind::LocalDelayed
+                }
+                _ => {
+                    let holder = rng.range_usize(0, n_peers);
+                    peer_objects[holder].insert((run, task), bytes.clone());
+                    Kind::Remote { holder, sabotaged: false }
+                }
+            };
+            specs.push(InputSpec { task, bytes, kind });
+        }
+        let sabotage = rng.chance(0.25)
+            && specs.iter().any(|s| matches!(s.kind, Kind::Remote { .. }));
+        if sabotage {
+            // Sever every source of one remote input; delayed locals are
+            // dropped from the scenario so the failure is deterministic.
+            let victim = specs
+                .iter()
+                .position(|s| matches!(s.kind, Kind::Remote { .. }))
+                .expect("a remote input exists");
+            if let Kind::Remote { sabotaged, .. } = &mut specs[victim].kind {
+                *sabotaged = true;
+            }
+            for s in &mut specs {
+                if s.kind == Kind::LocalDelayed {
+                    s.kind = Kind::LocalPre { consumers: 1 };
+                }
+            }
+        }
+        let peer_addrs: Vec<String> =
+            peer_objects.into_iter().map(spawn_data_peer).collect();
+
+        // Build the FetchPlan through the production enqueue/pop path.
+        let msg = Msg::ComputeTask {
+            run,
+            task: consumer,
+            key: "gather-prop".into(),
+            payload: Payload::BusyWait,
+            duration_us: 1,
+            output_size: 8,
+            inputs: specs
+                .iter()
+                .map(|s| {
+                    let (addr, alts) = match s.kind {
+                        Kind::LocalPre { .. } | Kind::LocalDelayed => (String::new(), vec![]),
+                        Kind::Remote { sabotaged: true, .. } => {
+                            (dead_addr(), vec![dead_addr()])
+                        }
+                        Kind::Remote { holder, sabotaged: false } => {
+                            let live = peer_addrs[holder].clone();
+                            if rng.chance(0.4) {
+                                let mut alts = vec![live];
+                                if rng.chance(0.3) {
+                                    alts.push(dead_addr());
+                                }
+                                (dead_addr(), alts)
+                            } else {
+                                let alts =
+                                    if rng.chance(0.3) { vec![dead_addr()] } else { vec![] };
+                                (live, alts)
+                            }
+                        }
+                    };
+                    TaskInputLoc { task: s.task, addr, alts, nbytes: s.bytes.len() as u64 }
+                })
+                .collect(),
+            priority: 0,
+            consumers: 1,
+            cores: 1,
+        };
+        let bytes = rsds::protocol::encode_msg(&msg);
+        let view =
+            rsds::protocol::ComputeTaskView::decode(&bytes).map_err(|e| e.to_string())?;
+        let mut q = TaskQueue::new();
+        q.enqueue(&view).map_err(|e| e.to_string())?;
+        let mut plan = FetchPlan::new();
+        let popped = q.pop_into(&mut plan).ok_or("queue drained early")?;
+
+        let expected_dropped: Vec<TaskId> = {
+            let mut d: Vec<TaskId> = specs
+                .iter()
+                .filter(|s| {
+                    matches!(s.kind, Kind::LocalPre { consumers: 1 } | Kind::LocalDelayed)
+                })
+                .map(|s| s.task)
+                .collect();
+            d.sort();
+            d
+        };
+
+        let mut outcomes: Vec<(bool, Vec<TaskId>)> = Vec::new();
+        for pooled in [true, false] {
+            let mode = if pooled { "pooled" } else { "baseline" };
+            let plane = DataPlane::new(DataPlaneConfig {
+                pooled,
+                local_wait_ms: 2_000,
+                ..DataPlaneConfig::default()
+            });
+            let store = Arc::new(ObjectStore::new(None, Arc::new(MemSpill::new())));
+            let mut producer = None;
+            for s in &specs {
+                match s.kind {
+                    Kind::LocalPre { consumers } => {
+                        store.insert((run, s.task), Arc::new(s.bytes.clone()), consumers);
+                    }
+                    Kind::LocalDelayed => {
+                        let st = store.clone();
+                        let key = (run, s.task);
+                        let data = s.bytes.clone();
+                        producer = Some(std::thread::spawn(move || {
+                            std::thread::sleep(Duration::from_millis(15));
+                            st.insert(key, Arc::new(data), 1);
+                        }));
+                    }
+                    Kind::Remote { .. } => {}
+                }
+            }
+            let mut scratch = GatherScratch::new();
+            let res = plane.gather(&store, popped.run, popped.task, &plan, &mut scratch);
+            if let Some(p) = producer {
+                p.join().map_err(|_| "producer thread panicked")?;
+            }
+            match &res {
+                Ok(()) => {
+                    if sabotage {
+                        return Err(format!("{mode}: sabotaged gather succeeded"));
+                    }
+                    if scratch.inputs.len() != specs.len() {
+                        return Err(format!(
+                            "{mode}: {} inputs gathered, want {}",
+                            scratch.inputs.len(),
+                            specs.len()
+                        ));
+                    }
+                    for (i, s) in specs.iter().enumerate() {
+                        if scratch.inputs[i].as_ref() != &s.bytes {
+                            return Err(format!("{mode}: input {i} bytes diverged"));
+                        }
+                    }
+                    // Remote fetches must be cached passively (pinned).
+                    for s in &specs {
+                        if matches!(s.kind, Kind::Remote { sabotaged: false, .. }) {
+                            if !matches!(store.get(&(run, s.task)), Lookup::Hit(_)) {
+                                return Err(format!(
+                                    "{mode}: fetched {} not cached",
+                                    s.task
+                                ));
+                            }
+                            if store.refcount(&(run, s.task)) != Some(None) {
+                                return Err(format!(
+                                    "{mode}: fetched {} cached unpinned",
+                                    s.task
+                                ));
+                            }
+                        }
+                    }
+                }
+                Err(e) => {
+                    if !e.starts_with(FETCH_FAILED_PREFIX) {
+                        return Err(format!("{mode}: unrecoverable error: {e}"));
+                    }
+                    if !sabotage {
+                        return Err(format!("{mode}: reachable gather failed: {e}"));
+                    }
+                }
+            }
+            let mut dropped = scratch.dropped.clone();
+            dropped.sort();
+            if res.is_ok() {
+                if dropped != expected_dropped {
+                    return Err(format!(
+                        "{mode}: dropped {dropped:?}, want {expected_dropped:?}"
+                    ));
+                }
+                // Exactly-once: re-insert what was dropped, gather again as
+                // the same consumer. The duplicate must complete from cache
+                // without decrementing anything.
+                for t in &dropped {
+                    let s = specs.iter().find(|s| s.task == *t).expect("dropped spec");
+                    store.insert((run, *t), Arc::new(s.bytes.clone()), 1);
+                }
+                let mut scratch2 = GatherScratch::new();
+                plane
+                    .gather(&store, popped.run, popped.task, &plan, &mut scratch2)
+                    .map_err(|e| format!("{mode}: duplicate gather failed: {e}"))?;
+                if !scratch2.dropped.is_empty() {
+                    return Err(format!(
+                        "{mode}: duplicate gather dropped {:?}",
+                        scratch2.dropped
+                    ));
+                }
+                for (i, s) in specs.iter().enumerate() {
+                    if scratch2.inputs[i].as_ref() != &s.bytes {
+                        return Err(format!("{mode}: duplicate input {i} diverged"));
+                    }
+                }
+                for t in &dropped {
+                    if store.refcount(&(run, *t)) != Some(Some(1)) {
+                        return Err(format!(
+                            "{mode}: duplicate gather consumed re-inserted {t} again"
+                        ));
+                    }
+                }
+                for s in &specs {
+                    if let Kind::LocalPre { consumers: 2 } = s.kind {
+                        if store.refcount(&(run, s.task)) != Some(Some(1)) {
+                            return Err(format!(
+                                "{mode}: duplicate gather consumed surviving {} again",
+                                s.task
+                            ));
+                        }
+                    }
+                }
+            }
+            outcomes.push((res.is_ok(), dropped));
+        }
+        if outcomes[0].0 != outcomes[1].0 {
+            return Err(format!(
+                "pooled ok={} but baseline ok={}",
+                outcomes[0].0, outcomes[1].0
+            ));
+        }
+        if outcomes[0].1 != outcomes[1].1 {
+            return Err(format!(
+                "dropped sets diverge: pooled {:?} vs baseline {:?}",
+                outcomes[0].1, outcomes[1].1
+            ));
+        }
+        Ok(())
+    });
+}
